@@ -1,0 +1,54 @@
+//! Scalability scenario (paper §V-B.3 / Fig. 5): grow the fleet from 3 to
+//! 50 edge servers at two heterogeneity levels and watch OL4EL-async's
+//! accuracy improve with N while OL4EL-sync pays the straggler.
+//!
+//!     cargo run --release --example fleet_scale
+
+use ol4el::config::{Algo, RunConfig};
+use ol4el::coordinator;
+use ol4el::harness::{build_engine, EngineKind};
+use ol4el::model::Task;
+use ol4el::util::table::{f, Table};
+
+fn main() -> anyhow::Result<()> {
+    let engine = build_engine(EngineKind::Native, "artifacts")?;
+    let t0 = std::time::Instant::now();
+
+    let mut table = Table::new(
+        "fleet scaling (SVM accuracy, budget 3000 ms/edge)",
+        &["N", "async H=1", "async H=10", "sync H=1", "sync H=10", "async updates H=10"],
+    );
+    for n in [3usize, 10, 25, 50] {
+        let mut row = vec![n.to_string()];
+        let mut async_updates = 0u64;
+        for algo in [Algo::Ol4elAsync, Algo::Ol4elSync] {
+            for h in [1.0f64, 10.0] {
+                let cfg = RunConfig {
+                    task: Task::Svm,
+                    algo,
+                    n_edges: n,
+                    hetero: h,
+                    budget: 3000.0,
+                    data_n: 12_000.max(n * 100),
+                    seed: 5,
+                    ..Default::default()
+                }
+                .with_paper_utility();
+                let r = coordinator::run(&cfg, engine.as_ref())?;
+                row.push(f(r.final_metric, 4));
+                if algo == Algo::Ol4elAsync && h == 10.0 {
+                    async_updates = r.total_updates;
+                }
+            }
+        }
+        row.push(async_updates.to_string());
+        table.row(row);
+    }
+    print!("{}", table.render());
+    println!(
+        "\nMore edges aggregate more information per unit time; the async pattern\n\
+         converts that into accuracy even at H=10 (paper Fig. 5). [{:.1}s]",
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Quickstart: the full three-layer path end to end.
+//!
+//! Loads the AOT HLO artifacts (JAX L2 + Pallas L1, built by
+//! `make artifacts`) into the PJRT CPU client, assembles a 3-edge
+//! heterogeneous fleet, and trains the paper's SVM task with OL4EL-async —
+//! printing the metric trace and the bandit's learned interval preferences.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use ol4el::config::{Algo, RunConfig};
+use ol4el::coordinator;
+use ol4el::harness::{build_engine, EngineKind};
+use ol4el::model::Task;
+
+fn main() -> anyhow::Result<()> {
+    // The production engine: HLO artifacts on PJRT. Falls back to the
+    // native oracle with a warning if artifacts are missing, so the example
+    // always runs.
+    let (engine, engine_name) = match build_engine(EngineKind::Pjrt, "artifacts") {
+        Ok(e) => (e, "pjrt (AOT HLO artifacts)"),
+        Err(err) => {
+            eprintln!("! artifacts not found ({err}); falling back to the native engine");
+            eprintln!("  run `make artifacts` to exercise the full three-layer path\n");
+            (build_engine(EngineKind::Native, "artifacts")?, "native")
+        }
+    };
+
+    let cfg = RunConfig {
+        task: Task::Svm,
+        algo: Algo::Ol4elAsync,
+        n_edges: 3,
+        hetero: 6.0,   // fastest edge 6x the slowest — the Fig. 4 regime
+        budget: 2500.0,
+        data_n: 8_000,
+        seed: 42,
+        ..Default::default()
+    };
+
+    println!("OL4EL quickstart");
+    println!("  engine : {engine_name}");
+    println!(
+        "  task   : {} ({} classes x {} features, wafer-like)",
+        cfg.task.name(),
+        engine.shapes().svm_c,
+        engine.shapes().svm_d
+    );
+    println!(
+        "  fleet  : {} edges, heterogeneity H={}, budget {} ms each",
+        cfg.n_edges, cfg.hetero, cfg.budget
+    );
+    println!("  algo   : {} (per-edge budget-limited bandits)\n", cfg.algo.name());
+
+    let t0 = std::time::Instant::now();
+    let result = coordinator::run(&cfg, engine.as_ref())?;
+
+    println!("trace (virtual ms -> test accuracy):");
+    let stride = (result.trace.len() / 12).max(1);
+    for p in result.trace.iter().step_by(stride) {
+        println!(
+            "  t={:>7.0}ms  spent={:>6.0}ms  updates={:>4}  acc={:.4}",
+            p.wall_ms, p.mean_spent, p.updates, p.metric
+        );
+    }
+    println!(
+        "\nfinal accuracy {:.4} after {} global updates ({} edges retired, host {:.1}s)",
+        result.final_metric,
+        result.total_updates,
+        result.retired_edges,
+        t0.elapsed().as_secs_f64()
+    );
+    println!(
+        "interval pulls (τ=1..{}): {:?}",
+        result.tau_histogram.len(),
+        result.tau_histogram
+    );
+    println!("\nNext: examples/svm_wafer.rs, examples/kmeans_traffic.rs, `cargo bench`");
+    Ok(())
+}

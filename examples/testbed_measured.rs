@@ -1,0 +1,65 @@
+//! Testbed-mode scenario (paper §V-A "testbed experiments"): resource
+//! costs are the MEASURED wall-clock of real PJRT executions of the AOT
+//! HLO artifacts, scaled by each edge's heterogeneity multiplier — the
+//! in-process analogue of the paper's three-mini-PC docker testbed.
+//! Requires `make artifacts`.
+//!
+//!     cargo run --release --example testbed_measured
+
+use ol4el::config::{Algo, RunConfig};
+use ol4el::coordinator;
+use ol4el::harness::{build_engine, EngineKind};
+use ol4el::model::Task;
+use ol4el::sim::cost::{CostMode, CostModel};
+use ol4el::util::table::{f, Table};
+
+fn main() -> anyhow::Result<()> {
+    let engine = match build_engine(EngineKind::Pjrt, "artifacts") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("testbed_measured needs the AOT artifacts: {e}");
+            eprintln!("run `make artifacts` first");
+            std::process::exit(2);
+        }
+    };
+
+    // Measured costs: budgets are real milliseconds of (scaled) compute.
+    // PJRT CPU steps run ~fractions of a ms, so a small budget suffices.
+    let base = RunConfig {
+        task: Task::Svm,
+        n_edges: 3,
+        hetero: 6.0,
+        budget: 150.0,
+        cost: CostModel {
+            mode: CostMode::Measured,
+            base_comp: 1.0, // nominal floor used for feasibility pricing
+            base_comm: 2.0,
+        },
+        data_n: 8_000,
+        seed: 13,
+        ..Default::default()
+    }
+    .with_paper_utility();
+
+    println!("Testbed mode: measured PJRT wall-clock as the resource meter\n");
+    let mut table = Table::new(
+        "measured-cost testbed (SVM, 3 edges, H=6, 150 ms budget)",
+        &["algorithm", "final acc", "updates", "mean spent (ms)", "host s"],
+    );
+    for algo in [Algo::Ol4elSync, Algo::Ol4elAsync] {
+        let cfg = RunConfig { algo, ..base.clone() };
+        let t0 = std::time::Instant::now();
+        let r = coordinator::run(&cfg, engine.as_ref())?;
+        table.row(vec![
+            algo.name().to_string(),
+            f(r.final_metric, 4),
+            r.total_updates.to_string(),
+            f(r.mean_spent, 1),
+            f(t0.elapsed().as_secs_f64(), 2),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("\nEvery local iteration above executed the Pallas-lowered HLO via PJRT;");
+    println!("costs charged to each edge are its measured step times x its slowdown.");
+    Ok(())
+}

@@ -1,0 +1,92 @@
+"""AOT lowering: JAX (L2+L1) -> HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. Lowered with return_tuple=True; the
+Rust side decomposes the output tuple. (See /opt/xla-example/README.md.)
+
+Usage:  python -m compile.aot --out ../artifacts
+Python runs exactly once, at build time; the Rust binary is self-contained
+once artifacts/ exists.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_json(spec) -> dict:
+    return {"shape": list(spec.shape), "dtype": str(spec.dtype)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default=None, help="comma-separated entrypoint subset")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {
+        "format": "hlo-text/return-tuple",
+        "jax": jax.__version__,
+        "shapes": {
+            "svm": {
+                "d": model.SVM_D,
+                "c": model.SVM_C,
+                "batch": model.SVM_B,
+                "eval_batch": model.SVM_BEVAL,
+            },
+            "kmeans": {
+                "d": model.KM_D,
+                "k": model.KM_K,
+                "batch": model.KM_B,
+                "eval_batch": model.KM_BEVAL,
+            },
+        },
+        "entrypoints": {},
+    }
+
+    for name, (fn, specs) in model.entrypoints().items():
+        if only is not None and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_specs = jax.tree_util.tree_leaves(lowered.out_info)
+        manifest["entrypoints"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [spec_json(s) for s in specs],
+            "outputs": [spec_json(s) for s in out_specs],
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "bytes": len(text),
+        }
+        print(f"wrote {path}  ({len(text)} chars)")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

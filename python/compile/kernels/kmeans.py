@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: fused K-means assign+accumulate (Lloyd E-step stats).
+
+For each batch tile: squared distances via the ||x||^2 - 2 x.c^T + ||c||^2
+expansion (the cross term is the MXU matmul), argmin assignment, and
+accumulation of the per-cluster statistics the Cloud needs for the M-step:
+sums [K, D], counts [K], and the batch inertia.
+
+    VMEM working set per tile (defaults B_blk=128, D=16, K=3, f32):
+      X tile 128x16 ~8 KiB + C 3x16 + d2 128x3 ~1.5 KiB + sums 3x16
+      => ~10 KiB per tile.
+
+interpret=True: lowered to plain HLO so the CPU PJRT client can run it
+(Mosaic custom-calls are TPU-only). See svm.py for the schedule rationale.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 128
+
+
+def _assign_acc_kernel(x_ref, c_ref, sums_ref, counts_ref, inertia_ref):
+    """Grid step: one batch tile; outputs accumulated across the grid."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        inertia_ref[...] = jnp.zeros_like(inertia_ref)
+
+    x = x_ref[...]  # [blk, D]
+    c = c_ref[...]  # [K, D]
+    blk = x.shape[0]
+    k_ = c.shape[0]
+
+    xx = jnp.sum(x * x, axis=1, keepdims=True)  # [blk, 1]
+    cc = jnp.sum(c * c, axis=1).reshape(1, -1)  # [1, K]
+    cross = jnp.dot(x, c.T, preferred_element_type=jnp.float32)  # [blk, K]
+    d2 = xx - 2.0 * cross + cc
+
+    assign = jnp.argmin(d2, axis=1).astype(jnp.int32)  # [blk]
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (blk, k_), 1)
+    aoh = (lanes == assign.reshape(-1, 1)).astype(jnp.float32)  # [blk, K]
+
+    sums_ref[...] += jnp.dot(aoh.T, x, preferred_element_type=jnp.float32)
+    counts_ref[...] += jnp.sum(aoh, axis=0, keepdims=True)
+    inertia_ref[...] += jnp.sum(jnp.min(d2, axis=1)).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def kmeans_stats(centers, x, block_b=DEFAULT_BLOCK_B):
+    """(sums [K,D], counts [1,K], inertia [1,1]) via the Pallas kernel.
+
+    Shapes: centers [K, D] f32, x [B, D] f32. Requires B % block_b == 0.
+    """
+    bsz, d_ = x.shape
+    k_ = centers.shape[0]
+    block_b = min(block_b, bsz)
+    if bsz % block_b != 0:
+        raise ValueError(f"batch {bsz} not divisible by block {block_b}")
+    grid = (bsz // block_b,)
+    return pl.pallas_call(
+        _assign_acc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d_), lambda i: (i, 0)),
+            pl.BlockSpec((k_, d_), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k_, d_), lambda i: (0, 0)),
+            pl.BlockSpec((1, k_), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k_, d_), jnp.float32),
+            jax.ShapeDtypeStruct((1, k_), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(x, centers)

@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground-truth semantics of the two L1 compute hot-spots:
+
+* multiclass (Weston–Watkins one-vs-rest) hinge forward+backward for the
+  linear SVM, and
+* the K-means assign+accumulate statistics pass (Lloyd's E-step + partial
+  M-step sums).
+
+pytest compares the Pallas kernels against these under hypothesis sweeps of
+shapes and values; the Rust native engine mirrors the same math and the
+integration tests close the loop Rust-native == HLO(PJRT) == these oracles.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def svm_scores(x, w, b):
+    """scores[i, c] = x[i] . w[:, c] + b[c]."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32) + b.reshape(1, -1)
+
+
+def svm_grad_ref(x, y, w, b):
+    """Weston–Watkins multiclass hinge: raw (unnormalized) batch statistics.
+
+    For sample i with label y_i and scores s:
+        margin_c  = 1 + s_c - s_{y_i}              (c != y_i)
+        viol_c    = 1[margin_c > 0]                (c != y_i)
+        loss_i    = sum_{c != y_i} max(0, margin_c)
+        g_{i,c}   = viol_c                for c != y_i
+        g_{i,y_i} = -sum_c viol_c
+
+    Returns (dw, db, loss) as *sums* over the batch (no /B, no
+    regularization) — normalization lives in the L2 wrapper so the kernel
+    is a pure accumulation.
+    """
+    c_ = w.shape[1]
+    scores = svm_scores(x, w, b)
+    yoh = (jnp.arange(c_, dtype=jnp.int32).reshape(1, -1) == y.reshape(-1, 1)).astype(
+        jnp.float32
+    )
+    s_y = jnp.sum(scores * yoh, axis=1, keepdims=True)
+    margin = 1.0 + scores - s_y
+    viol = jnp.where((margin > 0.0) & (yoh == 0.0), 1.0, 0.0)
+    g = viol - yoh * jnp.sum(viol, axis=1, keepdims=True)
+    dw = jnp.dot(x.T, g, preferred_element_type=jnp.float32)
+    db = jnp.sum(g, axis=0, keepdims=True)
+    loss = jnp.sum(viol * margin)
+    return dw, db, loss
+
+
+def svm_step_ref(w, b, x, y, lr, reg):
+    """One SGD step on the regularized multiclass hinge loss."""
+    n = x.shape[0]
+    dw_raw, db_raw, loss_raw = svm_grad_ref(x, y, w, b)
+    dw = dw_raw / n + reg * w
+    db = db_raw.reshape(-1) / n
+    w2 = w - lr * dw
+    b2 = b - lr * db
+    loss = loss_raw / n + 0.5 * reg * jnp.sum(w * w)
+    return w2, b2, loss
+
+
+def svm_eval_ref(w, b, x, y):
+    """(correct_count, mean hinge loss) on an eval batch."""
+    n = x.shape[0]
+    scores = svm_scores(x, w, b)
+    pred = jnp.argmax(scores, axis=1).astype(jnp.int32)
+    correct = jnp.sum((pred == y).astype(jnp.float32))
+    _, _, loss_raw = svm_grad_ref(x, y, w, b)
+    return correct, loss_raw / n
+
+
+def kmeans_stats_ref(centers, x):
+    """Lloyd E-step statistics: (sums[K,D], counts[K], inertia).
+
+    d2[i,k] = ||x_i - c_k||^2 ; a_i = argmin_k d2 ;
+    sums[k] = sum_{a_i = k} x_i ; counts[k] = |{i : a_i = k}| ;
+    inertia = sum_i min_k d2[i,k].
+    """
+    k_ = centers.shape[0]
+    d2 = (
+        jnp.sum(x * x, axis=1, keepdims=True)
+        - 2.0 * jnp.dot(x, centers.T, preferred_element_type=jnp.float32)
+        + jnp.sum(centers * centers, axis=1).reshape(1, -1)
+    )
+    assign = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    aoh = (jnp.arange(k_, dtype=jnp.int32).reshape(1, -1) == assign.reshape(-1, 1)).astype(
+        jnp.float32
+    )
+    sums = jnp.dot(aoh.T, x, preferred_element_type=jnp.float32)
+    counts = jnp.sum(aoh, axis=0)
+    inertia = jnp.sum(jnp.min(d2, axis=1))
+    return sums, counts, inertia
+
+
+def kmeans_assign_ref(centers, x):
+    """(assignments[B] i32, inertia) — the eval pass."""
+    d2 = (
+        jnp.sum(x * x, axis=1, keepdims=True)
+        - 2.0 * jnp.dot(x, centers.T, preferred_element_type=jnp.float32)
+        + jnp.sum(centers * centers, axis=1).reshape(1, -1)
+    )
+    assign = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    inertia = jnp.sum(jnp.min(d2, axis=1))
+    return assign, inertia

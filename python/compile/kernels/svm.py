@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: fused multiclass-hinge forward+backward for linear SVM.
+
+One pass over the batch computes scores = X.W + b on the MXU-shaped matmul,
+the Weston–Watkins violation mask, and accumulates the raw gradient
+statistics (dW = X^T.G, db = sum G, loss = sum hinge) in the output refs
+across a 1-D grid of batch tiles. The batch tile is the unit the paper's
+"local iteration" streams through VMEM:
+
+    VMEM working set per tile (defaults B_blk=128, D=59, C=8, f32):
+      X tile 128x59 ~30 KiB + W 59x8 ~2 KiB + dW 59x8 ~2 KiB
+      + scores/G 2x(128x8) ~8 KiB  =>  ~42 KiB  (well under 16 MiB VMEM)
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO (see
+/opt/xla-example/README.md). On a real TPU the same BlockSpec schedule
+drives HBM->VMEM double-buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 128
+
+
+def _hinge_grad_kernel(x_ref, y_ref, w_ref, b_ref, dw_ref, db_ref, loss_ref):
+    """Grid step: one batch tile. Outputs are accumulated across the grid."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        dw_ref[...] = jnp.zeros_like(dw_ref)
+        db_ref[...] = jnp.zeros_like(db_ref)
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    x = x_ref[...]  # [blk, D]
+    y = y_ref[...]  # [blk] i32
+    w = w_ref[...]  # [D, C]
+    b = b_ref[...]  # [1, C]
+
+    blk = x.shape[0]
+    c_ = w.shape[1]
+
+    scores = jnp.dot(x, w, preferred_element_type=jnp.float32) + b  # [blk, C]
+    cls = jax.lax.broadcasted_iota(jnp.int32, (blk, c_), 1)
+    yoh = (cls == y.reshape(-1, 1)).astype(jnp.float32)
+    s_y = jnp.sum(scores * yoh, axis=1, keepdims=True)
+    margin = 1.0 + scores - s_y
+    viol = jnp.where((margin > 0.0) & (yoh == 0.0), 1.0, 0.0)
+    g = viol - yoh * jnp.sum(viol, axis=1, keepdims=True)  # [blk, C]
+
+    dw_ref[...] += jnp.dot(x.T, g, preferred_element_type=jnp.float32)
+    db_ref[...] += jnp.sum(g, axis=0, keepdims=True)
+    loss_ref[...] += jnp.sum(viol * margin).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def svm_hinge_grad(x, y, w, b, block_b=DEFAULT_BLOCK_B):
+    """Raw batch statistics (dw, db[1,C], loss[1,1]) via the Pallas kernel.
+
+    Shapes: x [B, D] f32, y [B] i32, w [D, C] f32, b [C] f32.
+    Requires B % block_b == 0 (callers pad the tail batch).
+    """
+    bsz, d_ = x.shape
+    c_ = w.shape[1]
+    block_b = min(block_b, bsz)
+    if bsz % block_b != 0:
+        raise ValueError(f"batch {bsz} not divisible by block {block_b}")
+    grid = (bsz // block_b,)
+    b2d = b.reshape(1, c_)
+    return pl.pallas_call(
+        _hinge_grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d_), lambda i: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((d_, c_), lambda i: (0, 0)),
+            pl.BlockSpec((1, c_), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d_, c_), lambda i: (0, 0)),
+            pl.BlockSpec((1, c_), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d_, c_), jnp.float32),
+            jax.ShapeDtypeStruct((1, c_), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(x, y, w, b2d)

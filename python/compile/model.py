@@ -1,0 +1,110 @@
+"""L2: the JAX compute graphs the Rust coordinator executes via PJRT.
+
+Each public function here becomes one AOT artifact (see aot.py). Shapes are
+static — these are the canonical deployment shapes from the paper's two use
+cases (59-dim / 8-class wafer-like SVM; 16-dim / K=3 traffic-like K-means).
+The number of edge servers, the update-interval bandit, batching and
+aggregation all live in Rust (L3) and are shape-independent, so N in [3,100]
+needs no recompilation.
+
+The step functions call the L1 Pallas kernels so kernel and wrapper lower
+into a single fused HLO module.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import kmeans as kmeans_kernel
+from .kernels import ref
+from .kernels import svm as svm_kernel
+
+# Canonical deployment shapes (mirrored in rust/src/engine/shapes.rs and in
+# artifacts/manifest.json; the Rust runtime cross-checks at load time).
+SVM_D = 59       # feature dimension (wafer-like dataset, paper Sec. V-A)
+SVM_C = 8        # classes
+SVM_B = 64       # local-iteration batch (small: per-iteration SGD noise is what
+                 # makes aggregation frequency matter — see DESIGN.md)
+SVM_BEVAL = 512  # eval batch
+KM_D = 16        # feature dimension (traffic-like dataset)
+KM_K = 3         # clusters (paper: K=3)
+KM_B = 64
+KM_BEVAL = 512
+
+
+def svm_step(w, b, x, y, lr, reg):
+    """One local SVM iteration: SGD on regularized multiclass hinge.
+
+    w [D,C], b [C], x [B,D], y [B] i32, lr/reg f32 scalars
+    -> (w', b', mean loss).
+    """
+    n = x.shape[0]
+    dw_raw, db_raw, loss_raw = svm_kernel.svm_hinge_grad(x, y, w, b)
+    dw = dw_raw / n + reg * w
+    db = db_raw.reshape(-1) / n
+    w2 = w - lr * dw
+    b2 = b - lr * db
+    loss = loss_raw.reshape(()) / n + 0.5 * reg * jnp.sum(w * w)
+    return w2, b2, loss
+
+
+def svm_eval(w, b, x, y):
+    """Eval pass: (correct count, mean hinge loss) on a held-out batch."""
+    return ref.svm_eval_ref(w, b, x, y)
+
+
+def kmeans_step(centers, x):
+    """One local K-means iteration's statistics: (sums, counts, inertia).
+
+    The M-step division sums/counts (and the cross-edge aggregation) is done
+    by the Rust coordinator so that partial statistics from many edges and
+    many batches combine exactly.
+    """
+    sums, counts, inertia = kmeans_kernel.kmeans_stats(centers, x)
+    return sums, counts.reshape(-1), inertia.reshape(())
+
+
+def kmeans_eval(centers, x):
+    """Eval pass: (assignments [B] i32, inertia) for F1 scoring in Rust."""
+    return ref.kmeans_assign_ref(centers, x)
+
+
+def entrypoints():
+    """name -> (fn, example arg specs). The AOT contract with rust/runtime."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+
+    def s(shape, dtype=f32):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    return {
+        "svm_step": (
+            svm_step,
+            (
+                s((SVM_D, SVM_C)),
+                s((SVM_C,)),
+                s((SVM_B, SVM_D)),
+                s((SVM_B,), i32),
+                s(()),
+                s(()),
+            ),
+        ),
+        "svm_eval": (
+            svm_eval,
+            (
+                s((SVM_D, SVM_C)),
+                s((SVM_C,)),
+                s((SVM_BEVAL, SVM_D)),
+                s((SVM_BEVAL,), i32),
+            ),
+        ),
+        "kmeans_step": (
+            kmeans_step,
+            (s((KM_K, KM_D)), s((KM_B, KM_D))),
+        ),
+        "kmeans_eval": (
+            kmeans_eval,
+            (s((KM_K, KM_D)), s((KM_BEVAL, KM_D))),
+        ),
+    }

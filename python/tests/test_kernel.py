@@ -1,0 +1,141 @@
+"""Pallas kernels vs pure-jnp oracle — the CORE L1 correctness signal.
+
+hypothesis sweeps shapes (batch blocks x block size x feature dims x
+classes/clusters) and values; assert_allclose against kernels/ref.py.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import kmeans as kmeans_kernel
+from compile.kernels import ref
+from compile.kernels import svm as svm_kernel
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def mk_svm(rng, b, d, c, scale=1.0):
+    x = rng.normal(0.0, scale, size=(b, d)).astype(np.float32)
+    y = rng.integers(0, c, size=(b,)).astype(np.int32)
+    w = rng.normal(0.0, 0.5, size=(d, c)).astype(np.float32)
+    bias = rng.normal(0.0, 0.5, size=(c,)).astype(np.float32)
+    return x, y, w, bias
+
+
+class TestSvmKernel:
+    def test_single_block_matches_ref(self):
+        rng = np.random.default_rng(0)
+        x, y, w, b = mk_svm(rng, 128, 59, 8)
+        dw_k, db_k, loss_k = svm_kernel.svm_hinge_grad(x, y, w, b, block_b=128)
+        dw_r, db_r, loss_r = ref.svm_grad_ref(x, y, w, b)
+        np.testing.assert_allclose(dw_k, dw_r, rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(db_k, db_r, rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(float(loss_k[0, 0]), float(loss_r), rtol=RTOL)
+
+    def test_multi_block_accumulates(self):
+        rng = np.random.default_rng(1)
+        x, y, w, b = mk_svm(rng, 256, 59, 8)
+        dw_k, db_k, loss_k = svm_kernel.svm_hinge_grad(x, y, w, b, block_b=64)
+        dw_r, db_r, loss_r = ref.svm_grad_ref(x, y, w, b)
+        np.testing.assert_allclose(dw_k, dw_r, rtol=RTOL, atol=1e-4)
+        np.testing.assert_allclose(db_k, db_r, rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(float(loss_k[0, 0]), float(loss_r), rtol=1e-4)
+
+    def test_zero_weights_all_violate(self):
+        # w = 0, b = 0: every margin is exactly 1 > 0 for c != y;
+        # loss = B * (C - 1) and db rows sum to zero.
+        b_, c_ = 128, 8
+        x = np.ones((b_, 4), dtype=np.float32)
+        y = np.zeros((b_,), dtype=np.int32)
+        w = np.zeros((4, c_), dtype=np.float32)
+        bias = np.zeros((c_,), dtype=np.float32)
+        _, db_k, loss_k = svm_kernel.svm_hinge_grad(x, y, w, bias, block_b=64)
+        assert float(loss_k[0, 0]) == pytest.approx(b_ * (c_ - 1))
+        assert float(np.sum(np.asarray(db_k))) == pytest.approx(0.0, abs=1e-4)
+
+    def test_block_not_dividing_batch_raises(self):
+        rng = np.random.default_rng(2)
+        x, y, w, b = mk_svm(rng, 100, 8, 3)
+        with pytest.raises(ValueError):
+            svm_kernel.svm_hinge_grad(x, y, w, b, block_b=64)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        blocks=st.integers(1, 4),
+        blk=st.sampled_from([8, 16, 32]),
+        d=st.integers(2, 64),
+        c=st.integers(2, 16),
+        seed=st.integers(0, 2**31 - 1),
+        scale=st.sampled_from([0.1, 1.0, 10.0]),
+    )
+    def test_hypothesis_sweep(self, blocks, blk, d, c, seed, scale):
+        rng = np.random.default_rng(seed)
+        x, y, w, b = mk_svm(rng, blocks * blk, d, c, scale)
+        dw_k, db_k, loss_k = svm_kernel.svm_hinge_grad(x, y, w, b, block_b=blk)
+        dw_r, db_r, loss_r = ref.svm_grad_ref(x, y, w, b)
+        tol = dict(rtol=1e-4, atol=1e-3 * scale)
+        np.testing.assert_allclose(dw_k, dw_r, **tol)
+        np.testing.assert_allclose(db_k, db_r, **tol)
+        np.testing.assert_allclose(float(loss_k[0, 0]), float(loss_r), rtol=1e-4, atol=1e-3)
+
+
+def mk_km(rng, b, d, k, scale=1.0):
+    x = rng.normal(0.0, scale, size=(b, d)).astype(np.float32)
+    c = rng.normal(0.0, scale, size=(k, d)).astype(np.float32)
+    return x, c
+
+
+class TestKmeansKernel:
+    def test_single_block_matches_ref(self):
+        rng = np.random.default_rng(0)
+        x, c = mk_km(rng, 128, 16, 3)
+        sums_k, counts_k, inertia_k = kmeans_kernel.kmeans_stats(c, x, block_b=128)
+        sums_r, counts_r, inertia_r = ref.kmeans_stats_ref(c, x)
+        np.testing.assert_allclose(sums_k, sums_r, rtol=RTOL, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(counts_k).ravel(), counts_r, rtol=0, atol=0)
+        np.testing.assert_allclose(float(inertia_k[0, 0]), float(inertia_r), rtol=1e-4)
+
+    def test_multi_block_accumulates(self):
+        rng = np.random.default_rng(3)
+        x, c = mk_km(rng, 256, 16, 3)
+        sums_k, counts_k, inertia_k = kmeans_kernel.kmeans_stats(c, x, block_b=32)
+        sums_r, counts_r, inertia_r = ref.kmeans_stats_ref(c, x)
+        np.testing.assert_allclose(sums_k, sums_r, rtol=RTOL, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(counts_k).ravel(), counts_r)
+        np.testing.assert_allclose(float(inertia_k[0, 0]), float(inertia_r), rtol=1e-4)
+
+    def test_counts_sum_to_batch(self):
+        rng = np.random.default_rng(4)
+        x, c = mk_km(rng, 128, 8, 5)
+        _, counts_k, _ = kmeans_kernel.kmeans_stats(c, x, block_b=64)
+        assert float(np.sum(np.asarray(counts_k))) == 128.0
+
+    def test_coincident_point_zero_inertia(self):
+        # All points sit exactly on center 0 -> inertia 0, all assigned to 0.
+        x = np.zeros((64, 4), dtype=np.float32)
+        c = np.stack([np.zeros(4), np.full(4, 9.0), np.full(4, -9.0)]).astype(np.float32)
+        sums_k, counts_k, inertia_k = kmeans_kernel.kmeans_stats(c, x, block_b=64)
+        assert float(inertia_k[0, 0]) == pytest.approx(0.0, abs=1e-5)
+        assert float(np.asarray(counts_k)[0, 0]) == 64.0
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        blocks=st.integers(1, 4),
+        blk=st.sampled_from([8, 16, 32]),
+        d=st.integers(2, 32),
+        k=st.integers(2, 8),
+        seed=st.integers(0, 2**31 - 1),
+        scale=st.sampled_from([0.1, 1.0, 10.0]),
+    )
+    def test_hypothesis_sweep(self, blocks, blk, d, k, seed, scale):
+        rng = np.random.default_rng(seed)
+        x, c = mk_km(rng, blocks * blk, d, k, scale)
+        sums_k, counts_k, inertia_k = kmeans_kernel.kmeans_stats(c, x, block_b=blk)
+        sums_r, counts_r, inertia_r = ref.kmeans_stats_ref(c, x)
+        np.testing.assert_allclose(sums_k, sums_r, rtol=1e-4, atol=1e-3 * scale)
+        np.testing.assert_allclose(np.asarray(counts_k).ravel(), counts_r)
+        np.testing.assert_allclose(
+            float(inertia_k[0, 0]), float(inertia_r), rtol=1e-3, atol=1e-3
+        )

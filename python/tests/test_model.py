@@ -1,0 +1,117 @@
+"""L2 model step/eval semantics + descent sanity on the canonical shapes."""
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def mk_batch(rng, b=model.SVM_B, d=model.SVM_D, c=model.SVM_C):
+    x = rng.normal(size=(b, d)).astype(np.float32)
+    y = rng.integers(0, c, size=(b,)).astype(np.int32)
+    return x, y
+
+
+class TestSvmModel:
+    def test_step_matches_ref(self):
+        rng = np.random.default_rng(0)
+        x, y = mk_batch(rng)
+        w = rng.normal(0, 0.1, size=(model.SVM_D, model.SVM_C)).astype(np.float32)
+        b = np.zeros((model.SVM_C,), dtype=np.float32)
+        w1, b1, l1 = model.svm_step(w, b, x, y, np.float32(0.05), np.float32(1e-4))
+        w2, b2, l2 = ref.svm_step_ref(w, b, x, y, np.float32(0.05), np.float32(1e-4))
+        np.testing.assert_allclose(w1, w2, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(b1, b2, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+    def test_loss_decreases_on_separable_data(self):
+        rng = np.random.default_rng(1)
+        # Linearly separable: class = argmax of first C features.
+        x = rng.normal(size=(model.SVM_B, model.SVM_D)).astype(np.float32)
+        y = np.argmax(x[:, : model.SVM_C], axis=1).astype(np.int32)
+        w = np.zeros((model.SVM_D, model.SVM_C), dtype=np.float32)
+        b = np.zeros((model.SVM_C,), dtype=np.float32)
+        losses = []
+        for _ in range(30):
+            w, b, loss = model.svm_step(w, b, x, y, np.float32(0.1), np.float32(0.0))
+            losses.append(float(loss))
+        assert losses[-1] < 0.25 * losses[0]
+
+    def test_eval_counts_correct(self):
+        rng = np.random.default_rng(2)
+        x = rng.normal(size=(model.SVM_BEVAL, model.SVM_D)).astype(np.float32)
+        y = np.argmax(x[:, : model.SVM_C], axis=1).astype(np.int32)
+        # Identity-ish weights solve this task exactly.
+        w = np.zeros((model.SVM_D, model.SVM_C), dtype=np.float32)
+        for c in range(model.SVM_C):
+            w[c, c] = 1.0
+        b = np.zeros((model.SVM_C,), dtype=np.float32)
+        correct, _ = model.svm_eval(w, b, x, y)
+        assert float(correct) == model.SVM_BEVAL
+
+    def test_step_is_deterministic(self):
+        rng = np.random.default_rng(3)
+        x, y = mk_batch(rng)
+        w = rng.normal(0, 0.1, size=(model.SVM_D, model.SVM_C)).astype(np.float32)
+        b = np.zeros((model.SVM_C,), dtype=np.float32)
+        out1 = model.svm_step(w, b, x, y, np.float32(0.05), np.float32(1e-4))
+        out2 = model.svm_step(w, b, x, y, np.float32(0.05), np.float32(1e-4))
+        for a, bb in zip(out1, out2):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
+
+
+class TestKmeansModel:
+    def test_step_matches_ref(self):
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(model.KM_B, model.KM_D)).astype(np.float32)
+        c = rng.normal(size=(model.KM_K, model.KM_D)).astype(np.float32)
+        sums, counts, inertia = model.kmeans_step(c, x)
+        sums_r, counts_r, inertia_r = ref.kmeans_stats_ref(c, x)
+        np.testing.assert_allclose(sums, sums_r, rtol=1e-5, atol=1e-4)
+        np.testing.assert_allclose(counts, counts_r)
+        np.testing.assert_allclose(float(inertia), float(inertia_r), rtol=1e-4)
+
+    def test_lloyd_iterations_reduce_inertia(self):
+        rng = np.random.default_rng(1)
+        means = np.array(
+            [np.full(model.KM_D, -4.0), np.zeros(model.KM_D), np.full(model.KM_D, 4.0)]
+        )
+        idx = rng.integers(0, 3, size=(model.KM_B,))
+        x = (means[idx] + rng.normal(0, 0.5, size=(model.KM_B, model.KM_D))).astype(
+            np.float32
+        )
+        c = rng.normal(size=(model.KM_K, model.KM_D)).astype(np.float32)
+        inertias = []
+        for _ in range(10):
+            sums, counts, inertia = model.kmeans_step(c, x)
+            inertias.append(float(inertia))
+            counts = np.maximum(np.asarray(counts), 1e-9)
+            c = (np.asarray(sums) / counts[:, None]).astype(np.float32)
+        assert inertias[-1] <= inertias[0]
+        # Lloyd's algorithm is monotone non-increasing in inertia.
+        assert all(b <= a + 1e-3 for a, b in zip(inertias, inertias[1:]))
+
+    def test_eval_assignment_shape_and_range(self):
+        rng = np.random.default_rng(2)
+        x = rng.normal(size=(model.KM_BEVAL, model.KM_D)).astype(np.float32)
+        c = rng.normal(size=(model.KM_K, model.KM_D)).astype(np.float32)
+        assign, inertia = model.kmeans_eval(c, x)
+        assign = np.asarray(assign)
+        assert assign.shape == (model.KM_BEVAL,)
+        assert assign.min() >= 0 and assign.max() < model.KM_K
+        assert float(inertia) > 0.0
+
+
+class TestEntrypoints:
+    def test_entrypoint_specs_lower(self):
+        # Every AOT entrypoint must trace/lower without error.
+        import jax
+
+        for name, (fn, specs) in model.entrypoints().items():
+            lowered = jax.jit(fn).lower(*specs)
+            assert lowered is not None, name
+
+    def test_entrypoint_table_is_complete(self):
+        names = set(model.entrypoints())
+        assert names == {"svm_step", "svm_eval", "kmeans_step", "kmeans_eval"}

@@ -1,0 +1,150 @@
+//! Ablation benches for the design choices DESIGN.md §6 calls out:
+//!   A1. bandit policy (kube / ucb-bv / ucb1 / eps-greedy) under fixed costs
+//!   A2. fixed-vs-variable cost algorithm mismatch (kube under variable
+//!       costs vs ucb-bv under variable costs — §IV-B.2's motivation)
+//!   A3. utility definition (eval-gain vs param-delta)
+//!   A4. async staleness decay exponent
+//!   A5. IID vs label-skew sharding
+
+mod common;
+
+use ol4el::config::{Algo, BanditKind, PartitionKind, RunConfig};
+use ol4el::coordinator::utility::UtilityKind;
+use ol4el::harness::run_seeds;
+use ol4el::model::Task;
+use ol4el::sim::cost::CostMode;
+use ol4el::util::table::{f, Table};
+
+fn base(opts: &ol4el::harness::SweepOpts) -> RunConfig {
+    // Paper regime (label-skew for SVM) at a budget inside the rising part
+    // of the learning curve, so ablated knobs actually move the metric.
+    RunConfig {
+        task: Task::Svm,
+        algo: Algo::Ol4elAsync,
+        n_edges: 3,
+        hetero: 6.0,
+        budget: 3500.0,
+        data_n: opts.data_n(),
+        ..Default::default()
+    }
+    .with_paper_utility()
+}
+
+fn main() {
+    let opts = common::opts_from_env();
+    let engine = ol4el::harness::build_engine(opts.engine, &common::artifacts_dir())
+        .expect("engine");
+    let engine = engine.as_ref();
+    let seeds = opts.seed_list();
+    let t0 = std::time::Instant::now();
+    let mut tables = Vec::new();
+
+    // A1: bandit policy under fixed costs.
+    {
+        let mut t = Table::new(
+            "A1: bandit policy (fixed costs, H=6, async)",
+            &["bandit", "accuracy", "updates"],
+        );
+        for kind in [
+            BanditKind::Kube { epsilon: 0.1 },
+            BanditKind::UcbBv,
+            BanditKind::Ucb1,
+            BanditKind::EpsGreedy { epsilon: 0.1 },
+            BanditKind::Thompson,
+        ] {
+            let mut cfg = base(&opts);
+            cfg.bandit = kind;
+            let agg = run_seeds(&cfg, engine, &seeds).expect("run");
+            t.row(vec![
+                kind.name().into(),
+                f(agg.metric.mean(), 4),
+                f(agg.updates.mean(), 0),
+            ]);
+        }
+        tables.push(t);
+    }
+
+    // A2: cost-model mismatch — KUBE (assumes fixed) vs UCB-BV (learns
+    // costs) when costs are actually variable.
+    {
+        let mut t = Table::new(
+            "A2: variable-cost robustness (cv=0.4)",
+            &["bandit", "accuracy", "updates"],
+        );
+        for kind in [BanditKind::Kube { epsilon: 0.1 }, BanditKind::UcbBv] {
+            let mut cfg = base(&opts);
+            cfg.cost.mode = CostMode::Variable { cv: 0.4 };
+            cfg.bandit = kind;
+            let agg = run_seeds(&cfg, engine, &seeds).expect("run");
+            t.row(vec![
+                kind.name().into(),
+                f(agg.metric.mean(), 4),
+                f(agg.updates.mean(), 0),
+            ]);
+        }
+        tables.push(t);
+    }
+
+    // A3: utility definition, both tasks.
+    {
+        let mut t = Table::new(
+            "A3: learning-utility definition",
+            &["task", "utility", "metric"],
+        );
+        for task in [Task::Svm, Task::Kmeans] {
+            for util in [UtilityKind::EvalGain, UtilityKind::ParamDelta] {
+                let mut cfg = base(&opts);
+                cfg.task = task;
+                cfg.utility = util;
+                let agg = run_seeds(&cfg, engine, &seeds).expect("run");
+                t.row(vec![
+                    task.name().into(),
+                    util.name().into(),
+                    f(agg.metric.mean(), 4),
+                ]);
+            }
+        }
+        tables.push(t);
+    }
+
+    // A4: staleness decay exponent (async merge discounting).
+    {
+        let mut t = Table::new(
+            "A4: async staleness decay (H=10)",
+            &["decay", "accuracy"],
+        );
+        for decay in [0.0, 0.25, 0.5, 1.0, 2.0] {
+            let mut cfg = base(&opts);
+            cfg.hetero = 10.0;
+            cfg.staleness_decay = decay;
+            let agg = run_seeds(&cfg, engine, &seeds).expect("run");
+            t.row(vec![f(decay, 2), f(agg.metric.mean(), 4)]);
+        }
+        tables.push(t);
+    }
+
+    // A5: sharding regime.
+    {
+        let mut t = Table::new(
+            "A5: data partitioning across edges",
+            &["partition", "accuracy"],
+        );
+        for part in [
+            PartitionKind::Iid,
+            PartitionKind::LabelSkew { alpha: 1.0 },
+            PartitionKind::LabelSkew { alpha: 0.1 },
+        ] {
+            let mut cfg = base(&opts);
+            cfg.partition = part;
+            let agg = run_seeds(&cfg, engine, &seeds).expect("run");
+            t.row(vec![part.name(), f(agg.metric.mean(), 4)]);
+        }
+        tables.push(t);
+    }
+
+    common::emit("ablation", &tables);
+    eprintln!(
+        "[bench ablation] elapsed={:.1}s",
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,46 @@
+//! Shared plumbing for the bench harnesses (criterion is unavailable
+//! offline; these are self-timed `harness = false` benches driven by the
+//! library's harness module).
+//!
+//! Env knobs: OL4EL_BENCH_FULL=1 for the paper-sized sweep,
+//! OL4EL_BENCH_SEEDS=n, OL4EL_BENCH_ENGINE=native|pjrt.
+
+use ol4el::harness::{EngineKind, SweepOpts};
+
+#[allow(dead_code)]
+pub fn opts_from_env() -> SweepOpts {
+    let full = std::env::var("OL4EL_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
+    let seeds = std::env::var("OL4EL_BENCH_SEEDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+    let engine = std::env::var("OL4EL_BENCH_ENGINE")
+        .ok()
+        .and_then(|v| EngineKind::parse(&v))
+        .unwrap_or(EngineKind::Native);
+    SweepOpts {
+        quick: !full,
+        seeds,
+        engine,
+    }
+}
+
+#[allow(dead_code)]
+pub fn artifacts_dir() -> String {
+    std::env::var("OL4EL_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+/// Print tables and mirror them to results/.
+#[allow(dead_code)]
+pub fn emit(name: &str, tables: &[ol4el::util::table::Table]) {
+    for (i, t) in tables.iter().enumerate() {
+        print!("{}", t.render());
+        println!();
+        let path = format!("results/{name}_{i}.csv");
+        if let Err(e) = t.write_csv(&path) {
+            eprintln!("[bench] csv write failed ({path}): {e}");
+        } else {
+            eprintln!("[bench] wrote {path}");
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate paper Figure 3 (accuracy vs heterogeneity, 3 edges,
+//! 5000 ms budget; K-means F1 + SVM accuracy; 4 algorithms).
+//! Run `OL4EL_BENCH_FULL=1 cargo bench --bench fig3` for the paper-sized grid.
+
+mod common;
+
+fn main() {
+    let opts = common::opts_from_env();
+    let engine = ol4el::harness::build_engine(opts.engine, &common::artifacts_dir())
+        .expect("engine (run `make artifacts` for pjrt)");
+    let t0 = std::time::Instant::now();
+    let tables = ol4el::harness::fig3::run(engine.as_ref(), &opts).expect("fig3 sweep");
+    common::emit("fig3", &tables);
+    eprintln!(
+        "[bench fig3] engine={} quick={} seeds={} elapsed={:.1}s",
+        opts.engine.name(),
+        opts.quick,
+        opts.seeds,
+        t0.elapsed().as_secs_f64()
+    );
+}

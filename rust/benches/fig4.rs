@@ -1,0 +1,20 @@
+//! Bench: regenerate paper Figure 4 (accuracy vs consumed edge resource at
+//! heterogeneity H=6; trade-off curves for all four algorithms).
+
+mod common;
+
+fn main() {
+    let opts = common::opts_from_env();
+    let engine = ol4el::harness::build_engine(opts.engine, &common::artifacts_dir())
+        .expect("engine (run `make artifacts` for pjrt)");
+    let t0 = std::time::Instant::now();
+    let tables = ol4el::harness::fig4::run(engine.as_ref(), &opts).expect("fig4 sweep");
+    common::emit("fig4", &tables);
+    eprintln!(
+        "[bench fig4] engine={} quick={} seeds={} elapsed={:.1}s",
+        opts.engine.name(),
+        opts.quick,
+        opts.seeds,
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,20 @@
+//! Bench: regenerate paper Figure 5 (accuracy vs number of edges, 3..100,
+//! under H in {1,5,10,15}; OL4EL-async + OL4EL-sync; both tasks).
+
+mod common;
+
+fn main() {
+    let opts = common::opts_from_env();
+    let engine = ol4el::harness::build_engine(opts.engine, &common::artifacts_dir())
+        .expect("engine (run `make artifacts` for pjrt)");
+    let t0 = std::time::Instant::now();
+    let tables = ol4el::harness::fig5::run(engine.as_ref(), &opts).expect("fig5 sweep");
+    common::emit("fig5", &tables);
+    eprintln!(
+        "[bench fig5] engine={} quick={} seeds={} elapsed={:.1}s",
+        opts.engine.name(),
+        opts.quick,
+        opts.seeds,
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,194 @@
+//! Micro-benchmarks of the L3 hot paths (self-timed; criterion is not
+//! available offline): bandit decision latency, aggregation throughput,
+//! native vs PJRT step latency, async event-loop rate. These are the
+//! numbers behind EXPERIMENTS.md §Perf.
+
+mod common;
+
+use ol4el::bandit::{kube::Kube, ucb_bv::UcbBv, BudgetedBandit};
+use ol4el::coordinator::aggregate;
+use ol4el::engine::native::NativeEngine;
+use ol4el::engine::ComputeEngine;
+use ol4el::model::{ModelState, Task};
+use ol4el::sim::clock::EventQueue;
+use ol4el::util::rng::Rng;
+use ol4el::util::table::{f, Table};
+
+fn time_it<R>(iters: usize, mut body: impl FnMut() -> R) -> (f64, f64) {
+    // Warmup.
+    for _ in 0..iters.min(32) {
+        std::hint::black_box(body());
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(body());
+    }
+    let total = t0.elapsed().as_secs_f64();
+    (total / iters as f64, total)
+}
+
+fn main() {
+    let mut t = Table::new(
+        "micro: L3 hot paths",
+        &["benchmark", "iters", "per-op", "ops/s"],
+    );
+    let fmt_time = |s: f64| {
+        if s >= 1e-3 {
+            format!("{:.3} ms", s * 1e3)
+        } else if s >= 1e-6 {
+            format!("{:.3} µs", s * 1e6)
+        } else {
+            format!("{:.1} ns", s * 1e9)
+        }
+    };
+    let mut rng = Rng::new(0);
+
+    // Bandit decision latency (10 arms, warm stats).
+    {
+        let mut b = Kube::new((1..=10).map(|t| 10.0 * t as f64 + 30.0).collect(), 0.1);
+        for k in 0..10 {
+            b.update(k, 0.5, b.expected_cost(k));
+        }
+        let iters = 200_000;
+        let (per, _) = time_it(iters, || {
+            let k = b.select(1e9, &mut rng).unwrap();
+            b.update(k, 0.5, 40.0);
+            k
+        });
+        t.row(vec![
+            "kube select+update".into(),
+            iters.to_string(),
+            fmt_time(per),
+            f(1.0 / per, 0),
+        ]);
+    }
+    {
+        let mut b = UcbBv::new(vec![40.0; 10]);
+        for k in 0..10 {
+            b.update(k, 0.5, 40.0);
+        }
+        let iters = 200_000;
+        let (per, _) = time_it(iters, || {
+            let k = b.select(1e9, &mut rng).unwrap();
+            b.update(k, 0.5, 40.0);
+            k
+        });
+        t.row(vec![
+            "ucb-bv select+update".into(),
+            iters.to_string(),
+            fmt_time(per),
+            f(1.0 / per, 0),
+        ]);
+    }
+
+    // Aggregation throughput: weighted average of 100 SVM models (480 f32).
+    {
+        let models: Vec<ModelState> = (0..100)
+            .map(|i| ModelState {
+                task: Task::Svm,
+                params: vec![i as f32; 480],
+            })
+            .collect();
+        let iters = 20_000;
+        let (per, _) = time_it(iters, || {
+            let pairs: Vec<(&ModelState, f64)> = models.iter().map(|m| (m, 1.0)).collect();
+            aggregate::weighted_average(&pairs)
+        });
+        let bytes = 100.0 * 480.0 * 4.0;
+        t.row(vec![
+            "aggregate 100x480 f32".into(),
+            iters.to_string(),
+            fmt_time(per),
+            format!("{:.2} GB/s", bytes / per / 1e9),
+        ]);
+    }
+
+    // Async event queue throughput.
+    {
+        let iters = 50_000usize;
+        let (per, _) = time_it(100, || {
+            let mut q = EventQueue::new();
+            for i in 0..iters {
+                q.push(i as f64, i % 64);
+            }
+            let mut n = 0;
+            while q.pop().is_some() {
+                n += 1;
+            }
+            n
+        });
+        let per_event = per / iters as f64;
+        t.row(vec![
+            "event queue push+pop".into(),
+            (100 * iters).to_string(),
+            fmt_time(per_event),
+            format!("{:.1} M events/s", 1.0 / per_event / 1e6),
+        ]);
+    }
+
+    // Native engine step latencies (the simulator's inner loop).
+    {
+        let eng = NativeEngine::default();
+        let s = *eng.shapes();
+        let x: Vec<f32> = (0..s.svm_batch * s.svm_d).map(|i| (i % 17) as f32 * 0.1).collect();
+        let y: Vec<i32> = (0..s.svm_batch).map(|i| (i % s.svm_c) as i32).collect();
+        let mut params = vec![0.01f32; s.svm_param_len()];
+        let iters = 2_000;
+        let (per, _) = time_it(iters, || {
+            eng.svm_step(&mut params, &x, &y, 0.05, 1e-4).unwrap().loss
+        });
+        t.row(vec![
+            "native svm_step".into(),
+            iters.to_string(),
+            fmt_time(per),
+            f(1.0 / per, 0),
+        ]);
+
+        let xk: Vec<f32> = (0..s.km_batch * s.km_d).map(|i| (i % 13) as f32 * 0.3).collect();
+        let centers = vec![0.5f32; s.km_param_len()];
+        let iters = 20_000;
+        let (per, _) = time_it(iters, || eng.kmeans_step(&centers, &xk).unwrap().inertia);
+        t.row(vec![
+            "native kmeans_step".into(),
+            iters.to_string(),
+            fmt_time(per),
+            f(1.0 / per, 0),
+        ]);
+    }
+
+    // PJRT step latency, if artifacts are present (the full L1+L2 path).
+    match ol4el::engine::pjrt::PjrtEngine::open(common::artifacts_dir()) {
+        Ok(eng) => {
+            eng.warmup().expect("warmup");
+            let s = *eng.shapes();
+            let x: Vec<f32> = (0..s.svm_batch * s.svm_d).map(|i| (i % 17) as f32 * 0.1).collect();
+            let y: Vec<i32> = (0..s.svm_batch).map(|i| (i % s.svm_c) as i32).collect();
+            let mut params = vec![0.01f32; s.svm_param_len()];
+            let iters = 200;
+            let (per, _) = time_it(iters, || {
+                eng.svm_step(&mut params, &x, &y, 0.05, 1e-4).unwrap().loss
+            });
+            t.row(vec![
+                "pjrt svm_step".into(),
+                iters.to_string(),
+                fmt_time(per),
+                f(1.0 / per, 0),
+            ]);
+
+            let xk: Vec<f32> = (0..s.km_batch * s.km_d).map(|i| (i % 13) as f32 * 0.3).collect();
+            let centers = vec![0.5f32; s.km_param_len()];
+            let (per, _) = time_it(iters, || eng.kmeans_step(&centers, &xk).unwrap().inertia);
+            t.row(vec![
+                "pjrt kmeans_step".into(),
+                iters.to_string(),
+                fmt_time(per),
+                f(1.0 / per, 0),
+            ]);
+        }
+        Err(e) => {
+            eprintln!("[bench micro] pjrt rows skipped: {e}");
+        }
+    }
+
+    common::emit("micro", &[t]);
+}

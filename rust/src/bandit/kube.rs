@@ -1,0 +1,211 @@
+//! Fixed-cost budget-limited MAB (paper §IV-B.1), after Tran-Thanh et al.,
+//! "Knapsack based optimal policies for budget-limited multi-armed
+//! bandits" (AAAI'12).
+//!
+//! The paper describes OL4EL's per-slot decision as three steps:
+//!   1. *Utility-cost ordering* — rank arms by UCB(utility)/cost density;
+//!   2. *Frequency calculation* — for each arm, the max pull count if it
+//!      were the only arm, within the residual budget (⌊B_rem/c_k⌋);
+//!   3. *Probabilistic selection* — pick an arm with probability
+//!      proportional to its frequency.
+//! Step 3 taken alone would be density-blind, and KUBE proper is the greedy
+//! argmax of the fractional-knapsack relaxation (= best density arm). We
+//! implement the faithful hybrid: with probability 1-ε exploit the best
+//! density arm (KUBE/fractional-knapsack greedy); with probability ε sample
+//! proportionally to density-weighted frequency (the paper's probabilistic
+//! step). ε is configurable and ablated in benches/ablation.rs; the
+//! interpretation is documented in DESIGN.md §6.
+
+use crate::bandit::{ucb_bonus, ArmStats, BudgetedBandit};
+use crate::util::rng::Rng;
+
+/// KUBE-style bandit with constant, known arm costs.
+#[derive(Clone, Debug)]
+pub struct Kube {
+    costs: Vec<f64>,
+    stats: Vec<ArmStats>,
+    /// Probability of the paper's probabilistic-selection branch.
+    pub epsilon: f64,
+    /// Arms not yet tried (initialization phase: "the Cloud server tries
+    /// each feasible arm" — §IV-B.1).
+    init_queue: Vec<usize>,
+}
+
+impl Kube {
+    /// `costs[k]` = fixed resource cost of arm k (must be > 0).
+    pub fn new(costs: Vec<f64>, epsilon: f64) -> Self {
+        assert!(!costs.is_empty(), "need at least one arm");
+        assert!(costs.iter().all(|&c| c > 0.0), "arm costs must be positive");
+        assert!((0.0..=1.0).contains(&epsilon));
+        let n = costs.len();
+        Kube {
+            costs,
+            stats: vec![ArmStats::default(); n],
+            epsilon,
+            // Try cheap arms first so a small budget still completes init.
+            init_queue: {
+                let mut order: Vec<usize> = (0..n).collect();
+                order.reverse(); // pop() pulls from the back => ascending arm index
+                order
+            },
+        }
+    }
+
+    /// UCB density of arm k: (mean reward + bonus) / cost.
+    fn density(&self, k: usize) -> f64 {
+        let t = self.total_pulls();
+        let s = &self.stats[k];
+        if s.pulls == 0 {
+            return f64::INFINITY;
+        }
+        (s.mean_reward + ucb_bonus(t, s.pulls)) / self.costs[k]
+    }
+}
+
+impl BudgetedBandit for Kube {
+    fn name(&self) -> &'static str {
+        "kube"
+    }
+
+    fn n_arms(&self) -> usize {
+        self.costs.len()
+    }
+
+    fn select(&mut self, remaining_budget: f64, rng: &mut Rng) -> Option<usize> {
+        let feasible: Vec<usize> = (0..self.costs.len())
+            .filter(|&k| self.costs[k] <= remaining_budget)
+            .collect();
+        if feasible.is_empty() {
+            return None;
+        }
+        // Initialization phase: try every feasible arm once.
+        while let Some(k) = self.init_queue.pop() {
+            if self.costs[k] <= remaining_budget && self.stats[k].pulls == 0 {
+                return Some(k);
+            }
+            // unaffordable or already pulled: drop it and keep looking
+        }
+        if rng.f64() < self.epsilon {
+            // Paper steps 2-3: frequency-weighted probabilistic selection,
+            // weighted by density so ordering (step 1) still matters.
+            let weights: Vec<f64> = feasible
+                .iter()
+                .map(|&k| {
+                    let freq = (remaining_budget / self.costs[k]).floor();
+                    let d = self.density(k);
+                    if d.is_infinite() {
+                        f64::MAX / 8.0
+                    } else {
+                        d * freq
+                    }
+                })
+                .collect();
+            if let Some(i) = rng.weighted_choice(&weights) {
+                return Some(feasible[i]);
+            }
+        }
+        // KUBE greedy: best UCB density among feasible arms.
+        feasible
+            .into_iter()
+            .max_by(|&a, &b| {
+                self.density(a)
+                    .partial_cmp(&self.density(b))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+    }
+
+    fn update(&mut self, arm: usize, reward: f64, cost: f64) {
+        self.stats[arm].update(reward, cost);
+    }
+
+    fn expected_cost(&self, arm: usize) -> f64 {
+        self.costs[arm]
+    }
+
+    fn stats(&self, arm: usize) -> &ArmStats {
+        &self.stats[arm]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn costs() -> Vec<f64> {
+        vec![10.0, 15.0, 20.0, 25.0]
+    }
+
+    #[test]
+    fn init_phase_tries_each_arm_once() {
+        let mut b = Kube::new(costs(), 0.1);
+        let mut rng = Rng::new(0);
+        let mut seen = vec![];
+        for _ in 0..4 {
+            let k = b.select(1e9, &mut rng).unwrap();
+            seen.push(k);
+            b.update(k, 0.5, b.expected_cost(k));
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn infeasible_arms_never_selected() {
+        let mut b = Kube::new(costs(), 0.3);
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            if let Some(k) = b.select(12.0, &mut rng) {
+                assert_eq!(k, 0, "only arm 0 (cost 10) is affordable");
+                b.update(k, 0.5, 10.0);
+            }
+        }
+    }
+
+    #[test]
+    fn exhausted_budget_returns_none() {
+        let mut b = Kube::new(costs(), 0.1);
+        let mut rng = Rng::new(2);
+        assert_eq!(b.select(5.0, &mut rng), None);
+        assert!(!b.any_affordable(5.0));
+        assert!(b.any_affordable(10.0));
+    }
+
+    #[test]
+    fn converges_to_best_density_arm() {
+        // Arm 1 has the best reward/cost ratio by far.
+        let mut b = Kube::new(vec![10.0, 10.0, 10.0], 0.05);
+        let mut rng = Rng::new(3);
+        let true_reward = [0.2, 0.9, 0.3];
+        let mut picks = [0usize; 3];
+        for _ in 0..500 {
+            let k = b.select(1e9, &mut rng).unwrap();
+            picks[k] += 1;
+            let r = true_reward[k] + rng.normal_ms(0.0, 0.05);
+            b.update(k, r.clamp(0.0, 1.0), 10.0);
+        }
+        assert!(
+            picks[1] > 350,
+            "best arm under-pulled: {picks:?} (should dominate)"
+        );
+    }
+
+    #[test]
+    fn cheap_arm_wins_when_rewards_equal() {
+        // Equal rewards: density favors the cheap arm.
+        let mut b = Kube::new(vec![5.0, 50.0], 0.0);
+        let mut rng = Rng::new(4);
+        let mut picks = [0usize; 2];
+        for _ in 0..300 {
+            let k = b.select(1e9, &mut rng).unwrap();
+            picks[k] += 1;
+            b.update(k, 0.5, b.expected_cost(k));
+        }
+        assert!(picks[0] > picks[1] * 5, "{picks:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_cost_arm_rejected() {
+        Kube::new(vec![1.0, 0.0], 0.1);
+    }
+}

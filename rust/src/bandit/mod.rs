@@ -1,0 +1,103 @@
+//! Budget-limited multi-armed bandits — the paper's core machinery (§IV).
+//!
+//! An *arm* is a global update interval τ ∈ {1..τ_max}. Pulling arm τ means
+//! "run τ local iterations, then one global update"; its reward is the
+//! resulting learning utility (bounded to [0,1] by coordinator/utility.rs)
+//! and its cost is the resource consumed (τ·comp + comm). Each edge has a
+//! resource budget; the bandit must maximize average reward before the
+//! budget runs out.
+//!
+//! Implementations:
+//! * `kube`       — fixed, known arm costs (§IV-B.1; Tran-Thanh et al. 2012)
+//! * `ucb_bv`     — variable, unknown i.i.d. costs (§IV-B.2; Ding et al. 2013)
+//! * `ucb1`       — budget-blind UCB1 (ablation)
+//! * `eps_greedy` — budget-blind ε-greedy (ablation)
+
+pub mod eps_greedy;
+pub mod kube;
+pub mod thompson;
+pub mod ucb1;
+pub mod ucb_bv;
+
+use crate::util::rng::Rng;
+
+/// Per-arm running statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ArmStats {
+    pub pulls: u64,
+    pub mean_reward: f64,
+    pub mean_cost: f64,
+}
+
+impl ArmStats {
+    pub fn update(&mut self, reward: f64, cost: f64) {
+        self.pulls += 1;
+        let n = self.pulls as f64;
+        self.mean_reward += (reward - self.mean_reward) / n;
+        self.mean_cost += (cost - self.mean_cost) / n;
+    }
+}
+
+/// A budget-limited bandit over `n_arms` arms (arm index i = interval τ=i+1
+/// by convention of the coordinator, but the bandit itself is agnostic).
+pub trait BudgetedBandit {
+    fn name(&self) -> &'static str;
+
+    fn n_arms(&self) -> usize;
+
+    /// Choose an arm given the remaining budget, or None if no arm is
+    /// affordable (the edge must retire).
+    fn select(&mut self, remaining_budget: f64, rng: &mut Rng) -> Option<usize>;
+
+    /// Feed back the observed reward and cost of a pulled arm.
+    fn update(&mut self, arm: usize, reward: f64, cost: f64);
+
+    /// Expected cost of an arm under the bandit's current knowledge (used
+    /// for feasibility/retirement decisions).
+    fn expected_cost(&self, arm: usize) -> f64;
+
+    /// Read-only stats (diagnostics, tests).
+    fn stats(&self, arm: usize) -> &ArmStats;
+
+    /// Total pulls across arms.
+    fn total_pulls(&self) -> u64 {
+        (0..self.n_arms()).map(|a| self.stats(a).pulls).sum()
+    }
+
+    /// Cheapest affordable arm test: can the edge still pull anything?
+    fn any_affordable(&self, remaining_budget: f64) -> bool {
+        (0..self.n_arms()).any(|a| self.expected_cost(a) <= remaining_budget)
+    }
+}
+
+/// The exploration bonus used by all UCB-style policies here.
+#[inline]
+pub fn ucb_bonus(total_pulls: u64, arm_pulls: u64) -> f64 {
+    if arm_pulls == 0 {
+        return f64::INFINITY;
+    }
+    ((total_pulls.max(2) as f64).ln() * 2.0 / arm_pulls as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arm_stats_running_means() {
+        let mut s = ArmStats::default();
+        s.update(1.0, 10.0);
+        s.update(0.0, 20.0);
+        assert_eq!(s.pulls, 2);
+        assert!((s.mean_reward - 0.5).abs() < 1e-12);
+        assert!((s.mean_cost - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bonus_infinite_for_unpulled() {
+        assert!(ucb_bonus(10, 0).is_infinite());
+        assert!(ucb_bonus(10, 5) > 0.0);
+        // Bonus shrinks with more pulls of the arm.
+        assert!(ucb_bonus(100, 50) < ucb_bonus(100, 5));
+    }
+}

@@ -1,0 +1,163 @@
+//! Budgeted Thompson sampling — an extension beyond the paper (its §VI
+//! future-work direction of richer OL machinery): Beta posterior over each
+//! arm's [0,1] utility, sampled density `θ_k / c_k` as the selection
+//! score, with the same feasibility/retirement semantics as KUBE.
+//!
+//! Included as a first-class `BanditKind` so the ablation bench can ask
+//! whether posterior sampling beats UCB-style optimism in this setting.
+
+use crate::bandit::{ArmStats, BudgetedBandit};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Thompson {
+    costs: Vec<f64>,
+    stats: Vec<ArmStats>,
+    /// Beta posterior pseudo-counts per arm (successes, failures). The
+    /// [0,1] utility is treated as a soft Bernoulli outcome: an update with
+    /// utility u adds u to alpha and (1-u) to beta.
+    posts: Vec<(f64, f64)>,
+}
+
+impl Thompson {
+    pub fn new(costs: Vec<f64>) -> Self {
+        assert!(!costs.is_empty());
+        assert!(costs.iter().all(|&c| c > 0.0));
+        let n = costs.len();
+        Thompson {
+            costs,
+            stats: vec![ArmStats::default(); n],
+            posts: vec![(1.0, 1.0); n], // uniform prior
+        }
+    }
+
+    /// Sample from Beta(a, b) = X/(X+Y) with X~Gamma(a), Y~Gamma(b).
+    fn sample_beta(a: f64, b: f64, rng: &mut Rng) -> f64 {
+        let x = gamma_draw(a, rng);
+        let y = gamma_draw(b, rng);
+        if x + y <= 0.0 {
+            0.5
+        } else {
+            x / (x + y)
+        }
+    }
+}
+
+/// Marsaglia–Tsang gamma draw (shape only; unit scale).
+fn gamma_draw(shape: f64, rng: &mut Rng) -> f64 {
+    if shape < 1.0 {
+        let u: f64 = rng.f64().max(f64::EPSILON);
+        return gamma_draw(shape + 1.0, rng) * u.powf(1.0 / shape);
+    }
+    let d = shape - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = rng.normal();
+        let v = (1.0 + c * x).powi(3);
+        if v <= 0.0 {
+            continue;
+        }
+        let u = rng.f64();
+        if u < 1.0 - 0.0331 * x.powi(4) {
+            return d * v;
+        }
+        if u > 0.0 && u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+            return d * v;
+        }
+    }
+}
+
+impl BudgetedBandit for Thompson {
+    fn name(&self) -> &'static str {
+        "thompson"
+    }
+
+    fn n_arms(&self) -> usize {
+        self.costs.len()
+    }
+
+    fn select(&mut self, remaining_budget: f64, rng: &mut Rng) -> Option<usize> {
+        let feasible: Vec<usize> = (0..self.n_arms())
+            .filter(|&k| self.costs[k] <= remaining_budget)
+            .collect();
+        if feasible.is_empty() {
+            return None;
+        }
+        feasible.into_iter().max_by(|&a, &b| {
+            let sa = Self::sample_beta(self.posts[a].0, self.posts[a].1, rng) / self.costs[a];
+            let sb = Self::sample_beta(self.posts[b].0, self.posts[b].1, rng) / self.costs[b];
+            sa.partial_cmp(&sb).unwrap_or(std::cmp::Ordering::Equal)
+        })
+    }
+
+    fn update(&mut self, arm: usize, reward: f64, cost: f64) {
+        let r = reward.clamp(0.0, 1.0);
+        self.posts[arm].0 += r;
+        self.posts[arm].1 += 1.0 - r;
+        self.stats[arm].update(reward, cost);
+    }
+
+    fn expected_cost(&self, arm: usize) -> f64 {
+        self.costs[arm]
+    }
+
+    fn stats(&self, arm: usize) -> &ArmStats {
+        &self.stats[arm]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_to_best_density_arm() {
+        let mut b = Thompson::new(vec![10.0, 10.0, 10.0]);
+        let mut rng = Rng::new(0);
+        let true_reward = [0.2, 0.85, 0.3];
+        let mut picks = [0usize; 3];
+        for _ in 0..600 {
+            let k = b.select(1e9, &mut rng).unwrap();
+            picks[k] += 1;
+            let r = (true_reward[k] + rng.normal_ms(0.0, 0.05)).clamp(0.0, 1.0);
+            b.update(k, r, 10.0);
+        }
+        assert!(picks[1] > 400, "{picks:?}");
+    }
+
+    #[test]
+    fn respects_budget_feasibility() {
+        let mut b = Thompson::new(vec![10.0, 100.0]);
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let k = b.select(50.0, &mut rng).unwrap();
+            assert_eq!(k, 0);
+            b.update(k, 0.5, 10.0);
+        }
+        assert_eq!(b.select(5.0, &mut rng), None);
+    }
+
+    #[test]
+    fn prefers_cheap_arm_at_equal_reward() {
+        let mut b = Thompson::new(vec![5.0, 50.0]);
+        let mut rng = Rng::new(2);
+        let mut picks = [0usize; 2];
+        for _ in 0..400 {
+            let k = b.select(1e9, &mut rng).unwrap();
+            picks[k] += 1;
+            b.update(k, 0.5, b.expected_cost(k));
+        }
+        assert!(picks[0] > picks[1] * 3, "{picks:?}");
+    }
+
+    #[test]
+    fn beta_samples_in_unit_interval() {
+        let mut rng = Rng::new(3);
+        for &(a, b) in &[(1.0, 1.0), (0.5, 2.0), (30.0, 5.0)] {
+            for _ in 0..200 {
+                let s = Thompson::sample_beta(a, b, &mut rng);
+                assert!((0.0..=1.0).contains(&s), "beta({a},{b}) gave {s}");
+            }
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Budget-blind UCB1 (Auer et al. 2002) — ablation baseline: what happens
+//! when the bandit maximizes reward but ignores arm costs entirely (it
+//! still refuses unaffordable pulls, but never prefers cheaper arms).
+
+use crate::bandit::{ucb_bonus, ArmStats, BudgetedBandit};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Ucb1 {
+    costs: Vec<f64>,
+    stats: Vec<ArmStats>,
+    init_queue: Vec<usize>,
+}
+
+impl Ucb1 {
+    pub fn new(costs: Vec<f64>) -> Self {
+        assert!(!costs.is_empty());
+        assert!(costs.iter().all(|&c| c > 0.0));
+        let n = costs.len();
+        Ucb1 {
+            costs,
+            stats: vec![ArmStats::default(); n],
+            init_queue: {
+                let mut order: Vec<usize> = (0..n).collect();
+                order.reverse();
+                order
+            },
+        }
+    }
+}
+
+impl BudgetedBandit for Ucb1 {
+    fn name(&self) -> &'static str {
+        "ucb1"
+    }
+
+    fn n_arms(&self) -> usize {
+        self.costs.len()
+    }
+
+    fn select(&mut self, remaining_budget: f64, _rng: &mut Rng) -> Option<usize> {
+        let feasible: Vec<usize> = (0..self.n_arms())
+            .filter(|&k| self.costs[k] <= remaining_budget)
+            .collect();
+        if feasible.is_empty() {
+            return None;
+        }
+        while let Some(k) = self.init_queue.pop() {
+            if self.costs[k] <= remaining_budget && self.stats[k].pulls == 0 {
+                return Some(k);
+            }
+        }
+        let t = self.total_pulls();
+        feasible.into_iter().max_by(|&a, &b| {
+            let ia = self.stats[a].mean_reward + ucb_bonus(t, self.stats[a].pulls);
+            let ib = self.stats[b].mean_reward + ucb_bonus(t, self.stats[b].pulls);
+            ia.partial_cmp(&ib).unwrap_or(std::cmp::Ordering::Equal)
+        })
+    }
+
+    fn update(&mut self, arm: usize, reward: f64, cost: f64) {
+        self.stats[arm].update(reward, cost);
+    }
+
+    fn expected_cost(&self, arm: usize) -> f64 {
+        self.costs[arm]
+    }
+
+    fn stats(&self, arm: usize) -> &ArmStats {
+        &self.stats[arm]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ignores_cost_when_rewards_equal() {
+        // Unlike KUBE, UCB1 has no preference for the cheap arm.
+        let mut b = Ucb1::new(vec![1.0, 100.0]);
+        let mut rng = Rng::new(0);
+        let mut picks = [0usize; 2];
+        for _ in 0..400 {
+            let k = b.select(1e9, &mut rng).unwrap();
+            picks[k] += 1;
+            b.update(k, 0.5, b.expected_cost(k));
+        }
+        let ratio = picks[0] as f64 / picks[1] as f64;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "UCB1 should be near-indifferent: {picks:?}"
+        );
+    }
+
+    #[test]
+    fn finds_best_reward_arm() {
+        let mut b = Ucb1::new(vec![1.0; 3]);
+        let mut rng = Rng::new(1);
+        let rewards = [0.1, 0.8, 0.3];
+        let mut picks = [0usize; 3];
+        for _ in 0..500 {
+            let k = b.select(1e9, &mut rng).unwrap();
+            picks[k] += 1;
+            b.update(k, rewards[k], 1.0);
+        }
+        assert!(picks[1] > 300, "{picks:?}");
+    }
+}

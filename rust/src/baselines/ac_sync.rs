@@ -1,0 +1,213 @@
+//! "AC-sync": the state-of-the-art synchronous comparison algorithm
+//! (paper §V-A) — Wang et al., "When edge meets learning: Adaptive control
+//! for resource-constrained distributed machine learning", INFOCOM 2018.
+//!
+//! Wang's controller adapts the aggregation interval τ by re-estimating,
+//! from observed training state, the gradient-divergence δ and smoothness β
+//! of the loss, then choosing the τ* that maximizes learning progress per
+//! unit of resource under their convergence bound. The bound's divergence
+//! penalty is
+//!
+//! ```text
+//! h(τ) = δ/β · ((ηβ + 1)^τ − 1) − η δ τ        (h(1) = 0)
+//! ```
+//!
+//! and the per-resource progress proxy we maximize is
+//!
+//! ```text
+//! G(τ) = τ / ( (c·τ + b) · (1 + ρ̂·h(τ)/τ) )
+//! ```
+//!
+//! i.e. iterations completed per resource, discounted by the divergence
+//! penalty growing with τ. This is the simplification documented in
+//! DESIGN.md §2 (we estimate β̂ and δ̂ online from the same observable
+//! quantities Wang's edges compute locally — which is also why AC-sync
+//! carries a per-iteration edge compute overhead that OL4EL avoids by
+//! keeping all decision computation on the Cloud, §V-B.1).
+
+use crate::coordinator::{IntervalStrategy, RoundObservation};
+use crate::util::rng::Rng;
+use crate::util::stats::Ewma;
+
+pub struct AcSyncStrategy {
+    tau_max: usize,
+    /// Nominal per-iteration compute cost at the barrier (straggler) rate.
+    comp: f64,
+    /// Nominal per-update communication cost.
+    comm: f64,
+    /// Extra per-iteration edge compute fraction for local estimations.
+    overhead: f64,
+    /// Learning rate η (from the run config).
+    eta: f64,
+    /// Online estimates.
+    delta_hat: Ewma,
+    beta_hat: Ewma,
+    last_cost: f64,
+    current_tau: usize,
+    pulls: Vec<u64>,
+}
+
+impl AcSyncStrategy {
+    pub fn new(tau_max: usize, comp: f64, comm: f64, overhead: f64, eta: f64) -> Self {
+        assert!(tau_max >= 1);
+        assert!(comp > 0.0 && comm >= 0.0);
+        AcSyncStrategy {
+            tau_max,
+            comp,
+            comm,
+            overhead,
+            eta: eta.max(1e-6),
+            delta_hat: Ewma::new(0.3),
+            beta_hat: Ewma::new(0.3),
+            last_cost: 0.0,
+            current_tau: 1,
+            pulls: vec![0; tau_max],
+        }
+    }
+
+    /// Divergence penalty h(τ) from Wang et al.'s Lemma 2 shape.
+    fn h(&self, tau: usize, delta: f64, beta: f64) -> f64 {
+        let eta_beta = self.eta * beta;
+        let growth = (eta_beta + 1.0).powi(tau as i32) - 1.0;
+        (delta / beta.max(1e-9)) * growth - self.eta * delta * tau as f64
+    }
+
+    /// Choose τ* = argmax G(τ).
+    fn optimize_tau(&self) -> usize {
+        let delta = self.delta_hat.get().unwrap_or(0.0).max(0.0);
+        let beta = self.beta_hat.get().unwrap_or(1.0).max(1e-6);
+        let mut best = (1usize, f64::MIN);
+        for tau in 1..=self.tau_max {
+            let resource = self.comp * (1.0 + self.overhead) * tau as f64 + self.comm;
+            let penalty = 1.0 + (self.h(tau, delta, beta) / tau as f64).max(0.0);
+            let g = tau as f64 / (resource * penalty);
+            if g > best.1 {
+                best = (tau, g);
+            }
+        }
+        best.0
+    }
+}
+
+impl IntervalStrategy for AcSyncStrategy {
+    fn name(&self) -> String {
+        "ac-sync".to_string()
+    }
+
+    fn select(&mut self, _edge: usize, remaining_budget: f64, _rng: &mut Rng) -> Option<usize> {
+        // Feasibility against the nominal (or last observed) round cost.
+        let tau = self.optimize_tau();
+        let nominal = self.comp * (1.0 + self.overhead) * tau as f64 + self.comm;
+        let need = if self.last_cost > 0.0 {
+            self.last_cost.min(nominal)
+        } else {
+            nominal
+        };
+        if need > remaining_budget {
+            // Try the cheapest possible round before giving up.
+            let cheapest = self.comp * (1.0 + self.overhead) + self.comm;
+            if cheapest > remaining_budget {
+                return None;
+            }
+            self.current_tau = 1;
+            self.pulls[0] += 1;
+            return Some(1);
+        }
+        self.current_tau = tau;
+        self.pulls[tau - 1] += 1;
+        Some(tau)
+    }
+
+    fn feedback(&mut self, _edge: usize, _tau: usize, _utility: f64, cost: f64) {
+        self.last_cost = cost;
+    }
+
+    fn edge_overhead(&self) -> f64 {
+        self.overhead
+    }
+
+    fn observe_round(&mut self, obs: &RoundObservation) {
+        // δ̂: local-global divergence per iteration of drift.
+        let tau = self.current_tau.max(1) as f64;
+        self.delta_hat.push(obs.divergence / tau);
+        // β̂: smoothness proxy — how fast the global model is still moving
+        // relative to the step size (β ≈ ||Δg|| / (η·τ)); this shrinks as
+        // training converges, pushing τ* upward (Wang's observed behaviour).
+        if obs.global_delta.is_finite() {
+            self.beta_hat
+                .push((obs.global_delta / (self.eta * tau)).max(1e-6));
+        }
+    }
+
+    fn tau_histogram(&self) -> Vec<u64> {
+        self.pulls.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(divergence: f64, global_delta: f64) -> RoundObservation {
+        RoundObservation {
+            divergence,
+            global_delta,
+            mean_comp: 10.0,
+            comm: 30.0,
+            lr: 0.05,
+        }
+    }
+
+    #[test]
+    fn high_divergence_shrinks_tau() {
+        let mut hi = AcSyncStrategy::new(10, 10.0, 30.0, 0.15, 0.05);
+        let mut lo = AcSyncStrategy::new(10, 10.0, 30.0, 0.15, 0.05);
+        for _ in 0..5 {
+            hi.observe_round(&obs(50.0, 0.5));
+            lo.observe_round(&obs(0.01, 0.5));
+        }
+        let tau_hi = hi.optimize_tau();
+        let tau_lo = lo.optimize_tau();
+        assert!(
+            tau_hi <= tau_lo,
+            "divergent training should aggregate more often: {tau_hi} vs {tau_lo}"
+        );
+        assert!(tau_lo > 1, "calm training should amortize comm");
+    }
+
+    #[test]
+    fn expensive_comm_pushes_tau_up() {
+        let cheap = AcSyncStrategy::new(10, 10.0, 1.0, 0.0, 0.05);
+        let dear = AcSyncStrategy::new(10, 10.0, 500.0, 0.0, 0.05);
+        assert!(dear.optimize_tau() >= cheap.optimize_tau());
+    }
+
+    #[test]
+    fn retires_on_exhausted_budget() {
+        let mut s = AcSyncStrategy::new(10, 10.0, 30.0, 0.15, 0.05);
+        let mut rng = Rng::new(0);
+        assert_eq!(s.select(0, 5.0, &mut rng), None);
+        assert!(s.select(0, 500.0, &mut rng).is_some());
+    }
+
+    #[test]
+    fn falls_back_to_tau_one_when_tight() {
+        let mut s = AcSyncStrategy::new(10, 10.0, 30.0, 0.0, 0.05);
+        // Make the controller want a large tau.
+        for _ in 0..5 {
+            s.observe_round(&obs(0.0001, 0.5));
+        }
+        let want = s.optimize_tau();
+        assert!(want > 1);
+        let mut rng = Rng::new(0);
+        // Budget fits only one iteration + comm.
+        let got = s.select(0, 45.0, &mut rng);
+        assert_eq!(got, Some(1));
+    }
+
+    #[test]
+    fn reports_overhead() {
+        let s = AcSyncStrategy::new(10, 10.0, 30.0, 0.15, 0.05);
+        assert!((s.edge_overhead() - 0.15).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,82 @@
+//! "Fixed I": distributed training with a constant global update interval
+//! (paper §V-A) — the FedAvg-style static policy OL4EL is compared against.
+
+use crate::coordinator::IntervalStrategy;
+use crate::util::rng::Rng;
+
+pub struct FixedIStrategy {
+    interval: usize,
+    pulls: Vec<u64>,
+    /// Nominal cost of the fixed arm, learned from feedback so retirement
+    /// is budget-aware even for this static policy.
+    last_cost: f64,
+}
+
+impl FixedIStrategy {
+    pub fn new(interval: usize, tau_max: usize) -> Self {
+        assert!(interval >= 1 && interval <= tau_max);
+        FixedIStrategy {
+            interval,
+            pulls: vec![0; tau_max],
+            last_cost: 0.0,
+        }
+    }
+}
+
+impl IntervalStrategy for FixedIStrategy {
+    fn name(&self) -> String {
+        format!("fixed-i({})", self.interval)
+    }
+
+    fn select(&mut self, _edge: usize, remaining_budget: f64, _rng: &mut Rng) -> Option<usize> {
+        // Retire once the observed cost of a round exceeds the remainder.
+        if self.last_cost > 0.0 && self.last_cost > remaining_budget {
+            return None;
+        }
+        if remaining_budget <= 0.0 {
+            return None;
+        }
+        self.pulls[self.interval - 1] += 1;
+        Some(self.interval)
+    }
+
+    fn feedback(&mut self, _edge: usize, _tau: usize, _utility: f64, cost: f64) {
+        self.last_cost = cost;
+    }
+
+    fn tau_histogram(&self) -> Vec<u64> {
+        self.pulls.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn always_returns_configured_interval() {
+        let mut s = FixedIStrategy::new(4, 10);
+        let mut rng = Rng::new(0);
+        for _ in 0..10 {
+            assert_eq!(s.select(0, 1000.0, &mut rng), Some(4));
+            s.feedback(0, 4, 0.5, 70.0);
+        }
+        assert_eq!(s.tau_histogram()[3], 10);
+    }
+
+    #[test]
+    fn retires_when_cost_exceeds_remaining() {
+        let mut s = FixedIStrategy::new(2, 10);
+        let mut rng = Rng::new(0);
+        assert!(s.select(0, 100.0, &mut rng).is_some());
+        s.feedback(0, 2, 0.5, 120.0);
+        assert_eq!(s.select(0, 100.0, &mut rng), None);
+        assert!(s.select(0, 200.0, &mut rng).is_some());
+    }
+
+    #[test]
+    #[should_panic]
+    fn interval_must_fit_tau_max() {
+        FixedIStrategy::new(11, 10);
+    }
+}

@@ -1,0 +1,6 @@
+//! Comparison algorithms from the paper's evaluation (§V-A): the fixed
+//! update interval baseline ("Fixed I") and Wang et al.'s adaptive-control
+//! synchronous EL ("AC-sync").
+
+pub mod ac_sync;
+pub mod fixed_i;

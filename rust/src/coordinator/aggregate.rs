@@ -1,0 +1,115 @@
+//! Global model aggregation (paper §III: "weighted average of all local
+//! models" in the synchronous manner; single-edge merge with staleness
+//! discounting in the asynchronous manner).
+
+use crate::model::ModelState;
+
+/// Synchronous barrier aggregation: global = Σ w_i · local_i with weights
+/// normalized internally (weights are shard sizes in the coordinator).
+pub fn weighted_average(locals: &[(&ModelState, f64)]) -> ModelState {
+    assert!(!locals.is_empty(), "aggregating zero models");
+    let total_w: f64 = locals.iter().map(|(_, w)| *w).sum();
+    assert!(total_w > 0.0, "zero total aggregation weight");
+    let len = locals[0].0.params.len();
+    let task = locals[0].0.task;
+    let mut out = vec![0f64; len];
+    for (m, w) in locals {
+        assert_eq!(m.params.len(), len, "parameter length mismatch");
+        assert_eq!(m.task, task, "task mismatch in aggregation");
+        let wn = *w / total_w;
+        for (o, p) in out.iter_mut().zip(&m.params) {
+            *o += wn * (*p as f64);
+        }
+    }
+    ModelState {
+        task,
+        params: out.into_iter().map(|v| v as f32).collect(),
+    }
+}
+
+/// Asynchronous merge weight for an edge contribution:
+/// `base_alpha / (1 + staleness)^decay`, floored so no edge is silenced
+/// entirely. `base_alpha` is the async mixing rate (how much of a fresh,
+/// zero-staleness contribution the global model absorbs — NOT the edge's
+/// data share: one async merge folds in one edge's whole local round, so
+/// the rate must not shrink with fleet size; staleness discounting is what
+/// scales the effective weight down when many other merges intervene).
+/// `staleness` counts global updates since the edge last synchronized.
+pub fn async_merge_weight(base_alpha: f64, staleness: u64, decay: f64) -> f64 {
+    assert!(base_alpha > 0.0 && base_alpha <= 1.0);
+    assert!(decay >= 0.0);
+    let discounted = base_alpha / (1.0 + staleness as f64).powf(decay);
+    discounted.max(1e-4)
+}
+
+/// In-place asynchronous merge: global ← (1−α)·global + α·local.
+pub fn async_merge(global: &mut ModelState, local: &ModelState, alpha: f64) {
+    assert!((0.0..=1.0).contains(&alpha), "alpha out of range: {alpha}");
+    global.lerp_from(local, alpha);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Task;
+
+    fn state(p: Vec<f32>) -> ModelState {
+        ModelState {
+            task: Task::Kmeans,
+            params: p,
+        }
+    }
+
+    #[test]
+    fn equal_weights_give_mean() {
+        let a = state(vec![0.0, 2.0]);
+        let b = state(vec![2.0, 0.0]);
+        let g = weighted_average(&[(&a, 1.0), (&b, 1.0)]);
+        assert_eq!(g.params, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn weights_need_not_be_normalized() {
+        let a = state(vec![0.0]);
+        let b = state(vec![10.0]);
+        let g = weighted_average(&[(&a, 3.0), (&b, 1.0)]);
+        assert!((g.params[0] - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn single_model_identity() {
+        let a = state(vec![1.5, -2.5]);
+        let g = weighted_average(&[(&a, 0.7)]);
+        assert_eq!(g.params, a.params);
+    }
+
+    #[test]
+    fn staleness_discounts_monotonically() {
+        let w0 = async_merge_weight(0.3, 0, 0.5);
+        let w1 = async_merge_weight(0.3, 1, 0.5);
+        let w9 = async_merge_weight(0.3, 9, 0.5);
+        assert_eq!(w0, 0.3);
+        assert!(w1 < w0);
+        assert!(w9 < w1);
+        assert!(w9 >= 1e-4, "floor applies");
+    }
+
+    #[test]
+    fn zero_decay_ignores_staleness() {
+        assert_eq!(async_merge_weight(0.2, 50, 0.0), 0.2);
+    }
+
+    #[test]
+    fn async_merge_lerps() {
+        let mut g = state(vec![0.0, 0.0]);
+        let l = state(vec![4.0, -4.0]);
+        async_merge(&mut g, &l, 0.25);
+        assert_eq!(g.params, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero models")]
+    fn empty_aggregation_panics() {
+        weighted_average(&[]);
+    }
+}

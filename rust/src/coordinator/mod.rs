@@ -1,0 +1,495 @@
+//! The Cloud coordinator — the paper's L3 system contribution.
+//!
+//! The Cloud owns the global model, the learning-utility meter, and an
+//! *interval strategy* that decides each edge's global update interval τ
+//! (OL4EL's budget-limited bandits, or a baseline policy). Two collaboration
+//! manners (paper Fig. 1): synchronous barrier rounds (`sync`) and
+//! event-driven asynchronous merging (`asynchronous`).
+
+pub mod aggregate;
+pub mod asynchronous;
+pub mod sync;
+pub mod utility;
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::bandit::{
+    eps_greedy::EpsGreedy, kube::Kube, thompson::Thompson, ucb1::Ucb1, ucb_bv::UcbBv,
+    BudgetedBandit,
+};
+use crate::config::{Algo, BanditKind, PartitionKind, RunConfig};
+use crate::data::synth::{TrafficLike, WaferLike};
+use crate::data::{eval_buffer, partition, Dataset};
+use crate::edge::EdgeServer;
+use crate::engine::ComputeEngine;
+use crate::metrics;
+use crate::model::kmeans::KmeansSpec;
+use crate::model::svm::SvmSpec;
+use crate::model::{ModelState, Task};
+use crate::util::rng::Rng;
+
+/// One observed point of a run (recorded at global updates).
+#[derive(Clone, Debug)]
+pub struct TracePoint {
+    /// Virtual wall-clock ms (sync: sum of barrier rounds; async: event time).
+    pub wall_ms: f64,
+    /// Mean per-edge resource consumed so far.
+    pub mean_spent: f64,
+    /// Global updates so far.
+    pub updates: u64,
+    /// Test metric of the global model (accuracy or clustering F1).
+    pub metric: f64,
+}
+
+/// Result of a complete run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub trace: Vec<TracePoint>,
+    pub final_metric: f64,
+    pub total_updates: u64,
+    pub wall_ms: f64,
+    pub mean_spent: f64,
+    /// Pull counts per arm (τ = index+1), summed over edges.
+    pub tau_histogram: Vec<u64>,
+    pub retired_edges: usize,
+    pub n_edges: usize,
+}
+
+impl RunResult {
+    /// Area-under-curve of metric vs mean-spent — the trade-off summary
+    /// used by the Fig. 4 bench ("better trade-off" = higher area).
+    pub fn tradeoff_auc(&self) -> f64 {
+        if self.trace.len() < 2 {
+            return 0.0;
+        }
+        let mut auc = 0.0;
+        for w in self.trace.windows(2) {
+            let dx = w[1].mean_spent - w[0].mean_spent;
+            auc += dx * 0.5 * (w[0].metric + w[1].metric);
+        }
+        let span = self.trace.last().unwrap().mean_spent - self.trace[0].mean_spent;
+        if span > 0.0 {
+            auc / span
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Per-round observation handed to strategies that estimate system state
+/// (AC-sync's adaptive control uses divergence + loss movement).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundObservation {
+    /// Mean L2 distance of local models from the fresh global model.
+    pub divergence: f64,
+    /// L2 distance between consecutive global models.
+    pub global_delta: f64,
+    /// Mean per-iteration compute cost observed this round.
+    pub mean_comp: f64,
+    /// Communication cost observed this round.
+    pub comm: f64,
+    /// Learning rate in force.
+    pub lr: f64,
+}
+
+/// A policy choosing each edge's global update interval τ ∈ 1..=tau_max.
+pub trait IntervalStrategy {
+    fn name(&self) -> String;
+
+    /// Choose τ for `edge` given its remaining budget; None retires it.
+    fn select(&mut self, edge: usize, remaining_budget: f64, rng: &mut Rng) -> Option<usize>;
+
+    /// Reward/cost feedback after the corresponding global update.
+    fn feedback(&mut self, edge: usize, tau: usize, utility: f64, cost: f64);
+
+    /// Extra per-iteration compute fraction this strategy imposes on edges
+    /// (AC-sync's local estimations; 0 for everything else).
+    fn edge_overhead(&self) -> f64 {
+        0.0
+    }
+
+    /// System-state observation hook (AC-sync uses it; bandits ignore it).
+    fn observe_round(&mut self, _obs: &RoundObservation) {}
+
+    /// Pull histogram over τ (diagnostics; arms indexed τ-1).
+    fn tau_histogram(&self) -> Vec<u64>;
+}
+
+/// OL4EL's strategy: budget-limited bandit(s) over τ. Synchronous mode uses
+/// one shared bandit (paper §IV-B: "only one bandit model for all edge
+/// servers in synchronous EL"); asynchronous uses one per edge.
+pub struct Ol4elStrategy {
+    bandits: Vec<Box<dyn BudgetedBandit>>,
+    shared: bool,
+}
+
+impl Ol4elStrategy {
+    /// `arm_costs_per_edge[e][k]` = nominal cost of arm k for edge e (for
+    /// the shared/sync case pass a single entry with barrier costs).
+    pub fn new(kind: BanditKind, arm_costs_per_edge: Vec<Vec<f64>>, shared: bool) -> Self {
+        assert!(!arm_costs_per_edge.is_empty());
+        let build = |costs: Vec<f64>| -> Box<dyn BudgetedBandit> {
+            match kind {
+                BanditKind::Kube { epsilon } => Box::new(Kube::new(costs, epsilon)),
+                BanditKind::UcbBv => Box::new(UcbBv::new(costs)),
+                BanditKind::Ucb1 => Box::new(Ucb1::new(costs)),
+                BanditKind::EpsGreedy { epsilon } => Box::new(EpsGreedy::new(costs, epsilon)),
+                BanditKind::Thompson => Box::new(Thompson::new(costs)),
+                BanditKind::Auto => unreachable!("resolve Auto before constructing"),
+            }
+        };
+        let bandits: Vec<_> = arm_costs_per_edge.into_iter().map(build).collect();
+        Ol4elStrategy { bandits, shared }
+    }
+
+    fn bandit_for(&mut self, edge: usize) -> &mut Box<dyn BudgetedBandit> {
+        let idx = if self.shared { 0 } else { edge };
+        &mut self.bandits[idx]
+    }
+}
+
+impl IntervalStrategy for Ol4elStrategy {
+    fn name(&self) -> String {
+        format!(
+            "ol4el({}, {})",
+            self.bandits[0].name(),
+            if self.shared { "shared" } else { "per-edge" }
+        )
+    }
+
+    fn select(&mut self, edge: usize, remaining_budget: f64, rng: &mut Rng) -> Option<usize> {
+        self.bandit_for(edge)
+            .select(remaining_budget, rng)
+            .map(|arm| arm + 1)
+    }
+
+    fn feedback(&mut self, edge: usize, tau: usize, utility: f64, cost: f64) {
+        self.bandit_for(edge).update(tau - 1, utility, cost);
+    }
+
+    fn tau_histogram(&self) -> Vec<u64> {
+        let n_arms = self.bandits[0].n_arms();
+        let mut h = vec![0u64; n_arms];
+        for b in &self.bandits {
+            for (k, slot) in h.iter_mut().enumerate() {
+                *slot += b.stats(k).pulls;
+            }
+        }
+        h
+    }
+}
+
+/// The assembled run state: edges, global model, eval buffers, meter.
+pub struct World {
+    pub edges: Vec<EdgeServer>,
+    pub global: ModelState,
+    pub version: u64,
+    pub eval_x: Vec<f32>,
+    pub eval_y: Vec<i32>,
+    pub weights: Vec<f64>,
+    pub rng: Rng,
+    pub slowdowns: Vec<f64>,
+}
+
+impl World {
+    /// Build the fleet from a config: generate data, split eval, shard,
+    /// create edges with heterogeneity slowdowns and budget ledgers.
+    pub fn build(cfg: &RunConfig, engine: &dyn ComputeEngine) -> Result<World> {
+        cfg.validate().map_err(|e| anyhow!("invalid config: {e}"))?;
+        let shapes = *engine.shapes();
+        let mut rng = Rng::new(cfg.seed);
+
+        // Data + eval split sized to the HLO eval batch.
+        let (train, eval, eval_n): (Arc<Dataset>, Arc<Dataset>, usize) = match cfg.task {
+            Task::Svm => {
+                let ds = WaferLike {
+                    n: cfg.data_n,
+                    d: shapes.svm_d,
+                    classes: shapes.svm_c,
+                    separation: cfg.separation,
+                    ..Default::default()
+                }
+                .generate(&mut rng);
+                let (t, e) = ds.split_eval(shapes.svm_eval_batch);
+                (t, e, shapes.svm_eval_batch)
+            }
+            Task::Kmeans => {
+                let ds = TrafficLike {
+                    n: cfg.data_n,
+                    d: shapes.km_d,
+                    k: shapes.km_k,
+                    separation: cfg.separation,
+                    ..Default::default()
+                }
+                .generate(&mut rng);
+                let (t, e) = ds.split_eval(shapes.km_eval_batch);
+                (t, e, shapes.km_eval_batch)
+            }
+        };
+        let (eval_x, eval_y) = eval_buffer(&eval, eval_n);
+
+        let shards = match cfg.partition {
+            PartitionKind::Iid => partition::iid(&train, cfg.n_edges, &mut rng),
+            PartitionKind::LabelSkew { alpha } => {
+                partition::label_skew(&train, cfg.n_edges, alpha, &mut rng)
+            }
+        };
+        let total_rows: usize = shards.iter().map(|s| s.len()).sum();
+        let weights: Vec<f64> = shards
+            .iter()
+            .map(|s| s.len() as f64 / total_rows as f64)
+            .collect();
+
+        let slowdowns = cfg
+            .hetero_profile
+            .slowdowns(cfg.n_edges, cfg.hetero, &mut rng);
+
+        // Global model init (paper: "when t=0, we set the global model
+        // randomly"). K-means centers start at random *training points* so
+        // no cluster begins empty.
+        let global = match cfg.task {
+            Task::Svm => SvmSpec {
+                d: shapes.svm_d,
+                c: shapes.svm_c,
+                lr: cfg.hyper.lr,
+                reg: cfg.hyper.reg,
+            }
+            .init_state(),
+            Task::Kmeans => {
+                let spec = KmeansSpec {
+                    k: shapes.km_k,
+                    d: shapes.km_d,
+                };
+                // k-means++ seeding over a subsample: spreads the initial
+                // centers across blobs so no policy starts with collapsed
+                // centers (helps every algorithm equally).
+                let sample_n = train.n.min(1024);
+                let mut params = Vec::with_capacity(spec.param_len());
+                let first = train.row(rng.below(train.n));
+                params.extend_from_slice(first);
+                let mut d2 = vec![0f64; sample_n];
+                for _ in 1..spec.k {
+                    for (i, slot) in d2.iter_mut().enumerate() {
+                        let row = train.row(i * train.n / sample_n);
+                        let mut best = f64::INFINITY;
+                        for c in 0..params.len() / spec.d {
+                            let center = &params[c * spec.d..(c + 1) * spec.d];
+                            let dist: f64 = row
+                                .iter()
+                                .zip(center)
+                                .map(|(a, b)| ((a - b) as f64).powi(2))
+                                .sum();
+                            best = best.min(dist);
+                        }
+                        *slot = best;
+                    }
+                    let pick = rng.weighted_choice(&d2).unwrap_or(0);
+                    params.extend_from_slice(train.row(pick * train.n / sample_n));
+                }
+                ModelState {
+                    task: Task::Kmeans,
+                    params,
+                }
+            }
+        };
+
+        let edges: Vec<EdgeServer> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                EdgeServer::new(i, shard, global.clone(), slowdowns[i], cfg.budget, rng.split())
+            })
+            .collect();
+
+        Ok(World {
+            edges,
+            global,
+            version: 0,
+            eval_x,
+            eval_y,
+            weights,
+            rng,
+            slowdowns,
+        })
+    }
+
+    /// Evaluate the global model's test metric (accuracy / clustering F1).
+    pub fn evaluate(&self, cfg: &RunConfig, engine: &dyn ComputeEngine) -> Result<f64> {
+        evaluate_model(&self.global, cfg.task, engine, &self.eval_x, &self.eval_y)
+    }
+
+    /// Mean per-edge resource consumed.
+    pub fn mean_spent(&self) -> f64 {
+        self.edges.iter().map(|e| e.spent).sum::<f64>() / self.edges.len() as f64
+    }
+
+    /// Mean L2 divergence of local models from the global.
+    pub fn divergence(&self) -> f64 {
+        self.edges
+            .iter()
+            .map(|e| e.model.l2_distance(&self.global))
+            .sum::<f64>()
+            / self.edges.len() as f64
+    }
+}
+
+/// Metric of an arbitrary model on a fixed eval buffer.
+pub fn evaluate_model(
+    model: &ModelState,
+    task: Task,
+    engine: &dyn ComputeEngine,
+    eval_x: &[f32],
+    eval_y: &[i32],
+) -> Result<f64> {
+    match task {
+        Task::Svm => {
+            let (correct, _loss) = engine.svm_eval(&model.params, eval_x, eval_y)?;
+            Ok(metrics::accuracy(correct, eval_y.len()))
+        }
+        Task::Kmeans => {
+            let (assign, _inertia) = engine.kmeans_eval(&model.params, eval_x)?;
+            Ok(metrics::clustering_f1(
+                &assign,
+                eval_y,
+                engine.shapes().km_k,
+            ))
+        }
+    }
+}
+
+/// Build the configured interval strategy for a fleet with the given
+/// per-edge slowdowns.
+pub fn build_strategy(cfg: &RunConfig, slowdowns: &[f64]) -> Box<dyn IntervalStrategy> {
+    let kind = cfg.resolved_bandit();
+    match cfg.algo {
+        Algo::Ol4elSync => {
+            // Shared bandit prices arms at the BARRIER cost: the straggler
+            // defines the round, and every edge is charged the wait.
+            let max_slow = slowdowns.iter().cloned().fold(1.0f64, f64::max);
+            let costs = cfg.cost.arm_costs(cfg.tau_max, max_slow);
+            Box::new(Ol4elStrategy::new(kind, vec![costs], true))
+        }
+        Algo::Ol4elAsync => {
+            let per_edge: Vec<Vec<f64>> = slowdowns
+                .iter()
+                .map(|&s| cfg.cost.arm_costs(cfg.tau_max, s))
+                .collect();
+            Box::new(Ol4elStrategy::new(kind, per_edge, false))
+        }
+        Algo::FixedI => Box::new(crate::baselines::fixed_i::FixedIStrategy::new(
+            cfg.fixed_interval,
+            cfg.tau_max,
+        )),
+        Algo::AcSync => {
+            let max_slow = slowdowns.iter().cloned().fold(1.0f64, f64::max);
+            Box::new(crate::baselines::ac_sync::AcSyncStrategy::new(
+                cfg.tau_max,
+                cfg.cost.nominal_comp(max_slow),
+                cfg.cost.nominal_comm(),
+                cfg.ac_overhead,
+                cfg.hyper.lr as f64,
+            ))
+        }
+    }
+}
+
+/// Run a config end-to-end on an engine (dispatches sync/async manner).
+pub fn run(cfg: &RunConfig, engine: &dyn ComputeEngine) -> Result<RunResult> {
+    match cfg.algo {
+        Algo::Ol4elAsync => asynchronous::run_async(cfg, engine),
+        _ => sync::run_sync(cfg, engine),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::native::NativeEngine;
+
+    fn small_cfg() -> RunConfig {
+        RunConfig {
+            data_n: 3000,
+            budget: 800.0,
+            n_edges: 3,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn world_builds_with_correct_fleet() {
+        let cfg = small_cfg();
+        let engine = NativeEngine::default();
+        let w = World::build(&cfg, &engine).unwrap();
+        assert_eq!(w.edges.len(), 3);
+        assert_eq!(w.eval_y.len(), 512);
+        assert!((w.weights.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(w.edges.iter().all(|e| e.remaining() == 800.0));
+        // Fresh world: all local models equal the global.
+        assert!(w.divergence() < 1e-12);
+    }
+
+    #[test]
+    fn world_build_is_deterministic() {
+        let cfg = small_cfg();
+        let engine = NativeEngine::default();
+        let a = World::build(&cfg, &engine).unwrap();
+        let b = World::build(&cfg, &engine).unwrap();
+        assert_eq!(a.global.params, b.global.params);
+        assert_eq!(a.slowdowns, b.slowdowns);
+        assert_eq!(a.eval_y, b.eval_y);
+    }
+
+    #[test]
+    fn evaluate_untrained_svm_is_near_chance() {
+        let cfg = small_cfg();
+        let engine = NativeEngine::default();
+        let w = World::build(&cfg, &engine).unwrap();
+        let m = w.evaluate(&cfg, &engine).unwrap();
+        // Zero-weight SVM predicts class 0 for everything: ~1/8 accuracy.
+        assert!(m < 0.3, "untrained accuracy {m}");
+    }
+
+    #[test]
+    fn strategy_factory_matches_algo() {
+        let cfg = small_cfg();
+        let s = build_strategy(&cfg, &[1.0, 2.0, 3.0]);
+        assert!(s.name().contains("per-edge"));
+        let mut cfg2 = small_cfg();
+        cfg2.algo = Algo::Ol4elSync;
+        let s2 = build_strategy(&cfg2, &[1.0, 2.0, 3.0]);
+        assert!(s2.name().contains("shared"));
+        let mut cfg3 = small_cfg();
+        cfg3.algo = Algo::FixedI;
+        assert_eq!(build_strategy(&cfg3, &[1.0]).name(), "fixed-i(5)");
+    }
+
+    #[test]
+    fn tradeoff_auc_monotone_in_metric() {
+        let mk = |m1: f64, m2: f64| RunResult {
+            trace: vec![
+                TracePoint {
+                    wall_ms: 0.0,
+                    mean_spent: 0.0,
+                    updates: 0,
+                    metric: m1,
+                },
+                TracePoint {
+                    wall_ms: 1.0,
+                    mean_spent: 100.0,
+                    updates: 1,
+                    metric: m2,
+                },
+            ],
+            final_metric: m2,
+            total_updates: 1,
+            wall_ms: 1.0,
+            mean_spent: 100.0,
+            tau_histogram: vec![],
+            retired_edges: 0,
+            n_edges: 1,
+        };
+        assert!(mk(0.2, 0.9).tradeoff_auc() > mk(0.2, 0.5).tradeoff_auc());
+    }
+}

@@ -1,0 +1,227 @@
+//! Synchronous collaboration manner (paper Fig. 1 left, §III):
+//! every round the Cloud picks ONE interval τ (shared decision), all edges
+//! run τ local iterations, the Cloud barrier-aggregates the weighted
+//! average, evaluates utility, and feeds the bandit.
+//!
+//! Straggler semantics: the round's wall time is the *slowest* edge's
+//! compute plus communication, and — because the resource metric is time —
+//! every edge's ledger is charged that same barrier time (waiting burns an
+//! edge's time budget; this is exactly why the paper's sync algorithms
+//! degrade as heterogeneity grows, Fig. 3).
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::{
+    aggregate, build_strategy, utility::UtilityMeter, RoundObservation, RunResult, TracePoint,
+    World,
+};
+use crate::engine::ComputeEngine;
+
+pub fn run_sync(cfg: &RunConfig, engine: &dyn ComputeEngine) -> Result<RunResult> {
+    let mut world = World::build(cfg, engine)?;
+    let mut strategy = build_strategy(cfg, &world.slowdowns);
+    let mut meter = UtilityMeter::new(cfg.utility);
+    let overhead = 1.0 + strategy.edge_overhead();
+
+    let mut trace = Vec::new();
+    let mut wall_ms = 0.0f64;
+    let mut updates = 0u64;
+
+    let metric0 = world.evaluate(cfg, engine)?;
+    trace.push(TracePoint {
+        wall_ms: 0.0,
+        mean_spent: 0.0,
+        updates: 0,
+        metric: metric0,
+    });
+
+    loop {
+        // The shared decision must be affordable for the *tightest* ledger
+        // (every edge pays the barrier cost).
+        let min_remaining = world
+            .edges
+            .iter()
+            .map(|e| e.remaining())
+            .fold(f64::INFINITY, f64::min);
+        let Some(tau) = strategy.select(0, min_remaining, &mut world.rng) else {
+            break; // no affordable arm -> the fleet retires together
+        };
+
+        // Local rounds on every edge; the straggler defines the barrier.
+        let hyper = cfg.hyper.at_version(world.version);
+        let mut barrier_comp = 0.0f64;
+        let mut comp_sum = 0.0f64;
+        for edge in world.edges.iter_mut() {
+            let r = edge.local_round(tau, engine, &cfg.cost, &hyper)?;
+            let charged = r.comp_cost * overhead;
+            barrier_comp = barrier_comp.max(charged);
+            comp_sum += charged;
+        }
+        let comm = cfg.cost.sample_comm(&mut world.rng);
+        let barrier_cost = barrier_comp + comm;
+
+        // Everyone waits for the straggler; everyone is charged the round.
+        for edge in world.edges.iter_mut() {
+            edge.charge(barrier_cost);
+        }
+        wall_ms += barrier_cost;
+
+        // Weighted-average aggregation.
+        let prev_global = world.global.clone();
+        let locals: Vec<(&crate::model::ModelState, f64)> = world
+            .edges
+            .iter()
+            .map(|e| (&e.model, world.weights[e.id]))
+            .collect();
+        let new_global = aggregate::weighted_average(&locals);
+
+        // Observation for adaptive strategies (divergence BEFORE download).
+        let divergence = world
+            .edges
+            .iter()
+            .map(|e| e.model.l2_distance(&new_global))
+            .sum::<f64>()
+            / world.edges.len() as f64;
+        let obs = RoundObservation {
+            divergence,
+            global_delta: prev_global.l2_distance(&new_global),
+            mean_comp: comp_sum / (world.edges.len() as f64 * tau as f64),
+            comm,
+            lr: cfg.hyper.lr as f64,
+        };
+
+        world.global = new_global;
+        world.version += 1;
+        updates += 1;
+
+        let metric = world.evaluate(cfg, engine)?;
+        let u = meter.measure(&prev_global, &world.global, metric);
+        strategy.feedback(0, tau, u, barrier_cost);
+        strategy.observe_round(&obs);
+
+        // Download the fresh global model everywhere.
+        let (global, version) = (world.global.clone(), world.version);
+        for edge in world.edges.iter_mut() {
+            edge.sync_with_global(&global, version);
+        }
+
+        if updates % cfg.eval_every as u64 == 0 {
+            trace.push(TracePoint {
+                wall_ms,
+                mean_spent: world.mean_spent(),
+                updates,
+                metric,
+            });
+        }
+
+        if world.edges.iter().any(|e| e.retired) {
+            break; // any exhausted ledger ends synchronous training
+        }
+    }
+
+    let final_metric = world.evaluate(cfg, engine)?;
+    let mean_spent = world.mean_spent();
+    trace.push(TracePoint {
+        wall_ms,
+        mean_spent,
+        updates,
+        metric: final_metric,
+    });
+    Ok(RunResult {
+        trace,
+        final_metric,
+        total_updates: updates,
+        wall_ms,
+        mean_spent,
+        tau_histogram: strategy.tau_histogram(),
+        retired_edges: world.edges.iter().filter(|e| e.retired).count(),
+        n_edges: cfg.n_edges,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Algo;
+    use crate::engine::native::NativeEngine;
+    use crate::model::Task;
+
+    fn cfg(algo: Algo, task: Task) -> RunConfig {
+        RunConfig {
+            algo,
+            task,
+            data_n: 4000,
+            budget: 1500.0,
+            n_edges: 3,
+            seed: 7,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sync_run_consumes_budget_and_updates() {
+        let engine = NativeEngine::default();
+        let r = run_sync(&cfg(Algo::Ol4elSync, Task::Svm), &engine).unwrap();
+        assert!(r.total_updates > 0, "no global updates happened");
+        assert!(r.mean_spent > 0.0);
+        assert!(r.mean_spent <= 1500.0 + 400.0, "overdraft too large");
+        assert!(r.trace.len() >= 2);
+        assert!(r.final_metric > 0.0);
+    }
+
+    #[test]
+    fn sync_budgets_never_overdraw_beyond_one_round() {
+        let engine = NativeEngine::default();
+        let c = cfg(Algo::Ol4elSync, Task::Kmeans);
+        let r = run_sync(&c, &engine).unwrap();
+        // Ledger can exceed budget by at most one barrier round (the last).
+        let max_round = c.cost.nominal_arm_cost(c.tau_max, c.hetero.max(1.0));
+        assert!(r.mean_spent <= c.budget + max_round);
+    }
+
+    #[test]
+    fn sync_improves_over_untrained() {
+        let engine = NativeEngine::default();
+        let r = run_sync(&cfg(Algo::Ol4elSync, Task::Svm), &engine).unwrap();
+        let first = r.trace.first().unwrap().metric;
+        assert!(
+            r.final_metric > first + 0.1,
+            "no learning: {first} -> {}",
+            r.final_metric
+        );
+    }
+
+    #[test]
+    fn fixed_i_baseline_runs() {
+        let engine = NativeEngine::default();
+        let r = run_sync(&cfg(Algo::FixedI, Task::Svm), &engine).unwrap();
+        assert!(r.total_updates > 0);
+        // Fixed-I only ever pulls one arm.
+        let nonzero: Vec<usize> = r
+            .tau_histogram
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(nonzero.len(), 1);
+    }
+
+    #[test]
+    fn heterogeneity_reduces_sync_updates() {
+        let engine = NativeEngine::default();
+        let mut lo = cfg(Algo::Ol4elSync, Task::Svm);
+        lo.hetero = 1.0;
+        let mut hi = lo.clone();
+        hi.hetero = 10.0;
+        let r_lo = run_sync(&lo, &engine).unwrap();
+        let r_hi = run_sync(&hi, &engine).unwrap();
+        assert!(
+            r_hi.total_updates < r_lo.total_updates,
+            "straggler effect missing: {} vs {}",
+            r_hi.total_updates,
+            r_lo.total_updates
+        );
+    }
+}

@@ -1,0 +1,150 @@
+//! Learning-utility definitions (paper §III-A).
+//!
+//! The utility of a global update is the bandit's reward and must live in
+//! [0, 1]. The paper offers two measurements:
+//!
+//! * evaluate the global model on a small testing set uploaded to the Cloud
+//!   (`EvalGain` — we reward the *change* in the test metric, adaptively
+//!   normalized so the bandit sees a well-spread [0,1] signal);
+//! * "the difference between the global parameters at current slot t and
+//!   slot t-1 ... smaller difference means higher utility" (`ParamDelta` —
+//!   u = 1/(1 + ||θ_t − θ_{t−1}||), the paper's K-means suggestion).
+
+use crate::model::ModelState;
+use crate::util::stats::Ewma;
+
+/// Which utility definition a run uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UtilityKind {
+    EvalGain,
+    ParamDelta,
+}
+
+impl UtilityKind {
+    pub fn parse(s: &str) -> Option<UtilityKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "evalgain" | "eval-gain" | "eval" => Some(UtilityKind::EvalGain),
+            "paramdelta" | "param-delta" | "delta" => Some(UtilityKind::ParamDelta),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            UtilityKind::EvalGain => "eval-gain",
+            UtilityKind::ParamDelta => "param-delta",
+        }
+    }
+}
+
+/// Stateful utility meter: one per run (the Cloud owns it).
+#[derive(Clone, Debug)]
+pub struct UtilityMeter {
+    kind: UtilityKind,
+    last_metric: Option<f64>,
+    /// Adaptive scale for EvalGain: EWMA of |Δmetric| so u spreads over
+    /// [0,1] regardless of the task's raw metric dynamics.
+    gain_scale: Ewma,
+}
+
+impl UtilityMeter {
+    pub fn new(kind: UtilityKind) -> Self {
+        UtilityMeter {
+            kind,
+            last_metric: None,
+            gain_scale: Ewma::new(0.2),
+        }
+    }
+
+    pub fn kind(&self) -> UtilityKind {
+        self.kind
+    }
+
+    /// Utility of a global update that moved the model `prev` -> `next`,
+    /// with the post-update test metric `metric` (accuracy or F1; always
+    /// available because the Cloud evaluates at each update, §III-A).
+    pub fn measure(&mut self, prev: &ModelState, next: &ModelState, metric: f64) -> f64 {
+        let u = match self.kind {
+            UtilityKind::ParamDelta => {
+                let delta = prev.l2_distance(next);
+                1.0 / (1.0 + delta)
+            }
+            UtilityKind::EvalGain => {
+                let gain = match self.last_metric {
+                    None => 0.0,
+                    Some(m0) => metric - m0,
+                };
+                self.gain_scale.push(gain.abs().max(1e-6));
+                let scale = self.gain_scale.get().unwrap_or(1e-3).max(1e-6);
+                // Map gain/scale through a smooth squash centered at 0.5.
+                0.5 + 0.5 * (gain / (2.0 * scale)).tanh()
+            }
+        };
+        self.last_metric = Some(metric);
+        u.clamp(0.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Task;
+
+    fn state(p: Vec<f32>) -> ModelState {
+        ModelState {
+            task: Task::Svm,
+            params: p,
+        }
+    }
+
+    #[test]
+    fn param_delta_rewards_stability() {
+        let mut m = UtilityMeter::new(UtilityKind::ParamDelta);
+        let a = state(vec![0.0, 0.0]);
+        let near = state(vec![0.01, 0.0]);
+        let far = state(vec![10.0, 0.0]);
+        let u_near = m.measure(&a, &near, 0.5);
+        let u_far = m.measure(&a, &far, 0.5);
+        assert!(u_near > 0.9);
+        assert!(u_far < 0.2);
+        assert!(u_near > u_far);
+    }
+
+    #[test]
+    fn eval_gain_rewards_improvement() {
+        let mut m = UtilityMeter::new(UtilityKind::EvalGain);
+        let s = state(vec![0.0]);
+        let _ = m.measure(&s, &s, 0.50); // baseline
+        let up = m.measure(&s, &s, 0.60);
+        let mut m2 = UtilityMeter::new(UtilityKind::EvalGain);
+        let _ = m2.measure(&s, &s, 0.50);
+        let down = m2.measure(&s, &s, 0.40);
+        assert!(up > 0.5, "improvement should score > 0.5, got {up}");
+        assert!(down < 0.5, "regression should score < 0.5, got {down}");
+    }
+
+    #[test]
+    fn utilities_always_in_unit_interval() {
+        for kind in [UtilityKind::EvalGain, UtilityKind::ParamDelta] {
+            let mut m = UtilityMeter::new(kind);
+            let a = state(vec![0.0; 4]);
+            let mut metric = 0.1f64;
+            for i in 0..50 {
+                let b = state(vec![i as f32; 4]);
+                metric = (metric + 0.37).fract();
+                let u = m.measure(&a, &b, metric);
+                assert!((0.0..=1.0).contains(&u), "{kind:?} produced {u}");
+            }
+        }
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(UtilityKind::parse("eval"), Some(UtilityKind::EvalGain));
+        assert_eq!(
+            UtilityKind::parse("param-delta"),
+            Some(UtilityKind::ParamDelta)
+        );
+        assert_eq!(UtilityKind::parse("x"), None);
+    }
+}

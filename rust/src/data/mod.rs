@@ -1,0 +1,184 @@
+//! Datasets, shards and fixed-size batch iteration.
+//!
+//! The AOT-compiled HLO executables have static batch shapes, so every
+//! batch handed to the engine is exactly `batch` rows; shards pad the tail
+//! by wrapping around (standard practice — equivalent to sampling with
+//! slight oversampling of early rows on the last partial batch).
+
+pub mod partition;
+pub mod synth;
+
+use std::sync::Arc;
+
+/// A dense row-major dataset. `y` is the class label for SVM, and the
+/// ground-truth cluster id for K-means (used only for F1 scoring, never
+/// shown to the learner).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub n: usize,
+    pub d: usize,
+}
+
+impl Dataset {
+    pub fn new(x: Vec<f32>, y: Vec<i32>, d: usize) -> Self {
+        assert_eq!(x.len() % d, 0, "x length not a multiple of d");
+        let n = x.len() / d;
+        assert_eq!(y.len(), n, "label count != row count");
+        Dataset { x, y, n, d }
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Split off the first `n_eval` rows as a held-out eval set (callers
+    /// generate data pre-shuffled so this is a random split).
+    pub fn split_eval(self, n_eval: usize) -> (Arc<Dataset>, Arc<Dataset>) {
+        assert!(n_eval < self.n, "eval split larger than dataset");
+        let d = self.d;
+        let eval = Dataset::new(
+            self.x[..n_eval * d].to_vec(),
+            self.y[..n_eval].to_vec(),
+            d,
+        );
+        let train = Dataset::new(
+            self.x[n_eval * d..].to_vec(),
+            self.y[n_eval..].to_vec(),
+            d,
+        );
+        (Arc::new(train), Arc::new(eval))
+    }
+}
+
+/// A shard: an edge server's view of the training set (indices into the
+/// shared dataset plus a cursor for sequential batch delivery).
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub data: Arc<Dataset>,
+    pub indices: Vec<usize>,
+    cursor: usize,
+}
+
+impl Shard {
+    pub fn new(data: Arc<Dataset>, indices: Vec<usize>) -> Self {
+        assert!(!indices.is_empty(), "empty shard");
+        for &i in &indices {
+            assert!(i < data.n, "shard index {i} out of bounds (n={})", data.n);
+        }
+        Shard {
+            data,
+            indices,
+            cursor: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Fill `x`/`y` with the next `batch` rows, wrapping at the end of the
+    /// shard (so batches are always full — the HLO shape contract).
+    pub fn next_batch(&mut self, batch: usize, x: &mut Vec<f32>, y: &mut Vec<i32>) {
+        let d = self.data.d;
+        x.clear();
+        y.clear();
+        x.reserve(batch * d);
+        y.reserve(batch);
+        for _ in 0..batch {
+            let idx = self.indices[self.cursor];
+            x.extend_from_slice(self.data.row(idx));
+            y.push(self.data.y[idx]);
+            self.cursor = (self.cursor + 1) % self.indices.len();
+        }
+    }
+
+    /// Position of the cursor (for tests / determinism checks).
+    pub fn cursor(&self) -> usize {
+        self.cursor
+    }
+}
+
+/// Materialize a full eval set as contiguous buffers of exactly `n` rows
+/// (wrapping if the eval dataset is smaller; truncating if larger).
+pub fn eval_buffer(data: &Dataset, n: usize) -> (Vec<f32>, Vec<i32>) {
+    let mut x = Vec::with_capacity(n * data.d);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let idx = i % data.n;
+        x.extend_from_slice(data.row(idx));
+        y.push(data.y[idx]);
+    }
+    (x, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        // 4 rows, d = 2
+        Dataset::new(
+            vec![0.0, 0.1, 1.0, 1.1, 2.0, 2.1, 3.0, 3.1],
+            vec![0, 1, 2, 3],
+            2,
+        )
+    }
+
+    #[test]
+    fn row_access() {
+        let ds = tiny();
+        assert_eq!(ds.n, 4);
+        assert_eq!(ds.row(2), &[2.0, 2.1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "label count")]
+    fn mismatched_labels_panic() {
+        Dataset::new(vec![0.0; 6], vec![0, 1], 2);
+    }
+
+    #[test]
+    fn split_eval_partitions_rows() {
+        let (train, eval) = tiny().split_eval(1);
+        assert_eq!(eval.n, 1);
+        assert_eq!(train.n, 3);
+        assert_eq!(eval.row(0), &[0.0, 0.1]);
+        assert_eq!(train.row(0), &[1.0, 1.1]);
+    }
+
+    #[test]
+    fn batch_wraps_around() {
+        let ds = Arc::new(tiny());
+        let mut shard = Shard::new(ds, vec![1, 3]);
+        let (mut x, mut y) = (Vec::new(), Vec::new());
+        shard.next_batch(5, &mut x, &mut y);
+        assert_eq!(y, vec![1, 3, 1, 3, 1]);
+        assert_eq!(x.len(), 10);
+        assert_eq!(&x[0..2], &[1.0, 1.1]);
+        // Cursor advanced 5 mod 2 = 1.
+        assert_eq!(shard.cursor(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn shard_oob_panics() {
+        let ds = Arc::new(tiny());
+        Shard::new(ds, vec![9]);
+    }
+
+    #[test]
+    fn eval_buffer_wraps_and_truncates() {
+        let ds = tiny();
+        let (x, y) = eval_buffer(&ds, 6);
+        assert_eq!(y, vec![0, 1, 2, 3, 0, 1]);
+        assert_eq!(x.len(), 12);
+        let (_, y2) = eval_buffer(&ds, 2);
+        assert_eq!(y2, vec![0, 1]);
+    }
+}

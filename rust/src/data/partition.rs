@@ -1,0 +1,159 @@
+//! Sharding the training set across edge servers.
+//!
+//! Two partitioners:
+//! * `iid` — shuffle rows, deal round-robin (the paper's default: every edge
+//!   sees the same distribution, "different local datasets").
+//! * `label_skew` — Dirichlet(alpha) non-IID split per class (the standard
+//!   FL heterogeneity protocol); exercised by the ablation bench.
+
+use std::sync::Arc;
+
+use crate::data::{Dataset, Shard};
+use crate::util::rng::Rng;
+
+/// IID round-robin shards (sizes differ by at most 1).
+pub fn iid(data: &Arc<Dataset>, n_edges: usize, rng: &mut Rng) -> Vec<Shard> {
+    assert!(n_edges >= 1);
+    assert!(
+        data.n >= n_edges,
+        "fewer rows ({}) than edges ({n_edges})",
+        data.n
+    );
+    let mut order: Vec<usize> = (0..data.n).collect();
+    rng.shuffle(&mut order);
+    let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); n_edges];
+    for (i, idx) in order.into_iter().enumerate() {
+        buckets[i % n_edges].push(idx);
+    }
+    buckets
+        .into_iter()
+        .map(|idxs| Shard::new(Arc::clone(data), idxs))
+        .collect()
+}
+
+/// Dirichlet label-skew shards: for each class, split its rows across edges
+/// with proportions ~ Dir(alpha). Small alpha = strong skew. Ensures every
+/// edge ends up non-empty by round-robin stealing from the largest shard.
+pub fn label_skew(
+    data: &Arc<Dataset>,
+    n_edges: usize,
+    alpha: f64,
+    rng: &mut Rng,
+) -> Vec<Shard> {
+    assert!(n_edges >= 1);
+    assert!(alpha > 0.0);
+    let n_classes = data.y.iter().copied().max().unwrap_or(0) as usize + 1;
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); n_classes];
+    for i in 0..data.n {
+        by_class[data.y[i] as usize].push(i);
+    }
+    let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); n_edges];
+    for rows in by_class.iter_mut() {
+        rng.shuffle(rows);
+        let props = rng.dirichlet(alpha, n_edges);
+        // Cumulative allocation keeps totals exact.
+        let mut start = 0usize;
+        let mut acc = 0.0f64;
+        for (e, p) in props.iter().enumerate() {
+            acc += p;
+            let end = if e + 1 == n_edges {
+                rows.len()
+            } else {
+                ((rows.len() as f64) * acc).round() as usize
+            }
+            .min(rows.len());
+            buckets[e].extend_from_slice(&rows[start..end]);
+            start = end;
+        }
+    }
+    // Guarantee non-empty shards (required by Shard::new).
+    loop {
+        let empty = buckets.iter().position(|b| b.is_empty());
+        match empty {
+            None => break,
+            Some(e) => {
+                let donor = (0..n_edges)
+                    .max_by_key(|&i| buckets[i].len())
+                    .expect("nonempty bucket set");
+                assert!(buckets[donor].len() > 1, "not enough rows to cover edges");
+                let moved = buckets[donor].pop().unwrap();
+                buckets[e].push(moved);
+            }
+        }
+    }
+    buckets
+        .into_iter()
+        .map(|idxs| Shard::new(Arc::clone(data), idxs))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::TrafficLike;
+
+    fn dataset(n: usize) -> Arc<Dataset> {
+        Arc::new(
+            TrafficLike {
+                n,
+                ..Default::default()
+            }
+            .generate(&mut Rng::new(0)),
+        )
+    }
+
+    #[test]
+    fn iid_covers_all_rows_once() {
+        let ds = dataset(103);
+        let shards = iid(&ds, 5, &mut Rng::new(1));
+        assert_eq!(shards.len(), 5);
+        let mut seen: Vec<usize> = shards.iter().flat_map(|s| s.indices.clone()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..103).collect::<Vec<_>>());
+        for s in &shards {
+            assert!((20..=21).contains(&s.len()));
+        }
+    }
+
+    #[test]
+    fn label_skew_covers_all_rows_once() {
+        let ds = dataset(300);
+        let shards = label_skew(&ds, 7, 0.3, &mut Rng::new(2));
+        let mut seen: Vec<usize> = shards.iter().flat_map(|s| s.indices.clone()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..300).collect::<Vec<_>>());
+        assert!(shards.iter().all(|s| !s.is_empty()));
+    }
+
+    #[test]
+    fn small_alpha_skews_more_than_large() {
+        let ds = dataset(3000);
+        let skew_of = |alpha: f64| -> f64 {
+            let shards = label_skew(&ds, 6, alpha, &mut Rng::new(3));
+            // Mean across shards of the max class share in each shard.
+            let mut total = 0.0;
+            for s in &shards {
+                let mut counts = [0f64; 3];
+                for &i in &s.indices {
+                    counts[ds.y[i] as usize] += 1.0;
+                }
+                let sum: f64 = counts.iter().sum();
+                total += counts.iter().cloned().fold(0.0, f64::max) / sum.max(1.0);
+            }
+            total / shards.len() as f64
+        };
+        let heavy = skew_of(0.05);
+        let light = skew_of(100.0);
+        assert!(
+            heavy > light + 0.1,
+            "expected stronger skew: heavy={heavy:.3} light={light:.3}"
+        );
+    }
+
+    #[test]
+    fn one_edge_gets_everything() {
+        let ds = dataset(50);
+        let shards = iid(&ds, 1, &mut Rng::new(4));
+        assert_eq!(shards[0].len(), 50);
+    }
+}

@@ -1,0 +1,293 @@
+//! Edge server state: local model, data shard, resource-budget ledger, and
+//! the execution of one "local round" (τ local iterations on the compute
+//! engine, then a global update — the unit the bandit prices as an arm).
+
+use anyhow::Result;
+
+use crate::data::Shard;
+use crate::engine::ComputeEngine;
+use crate::model::kmeans::KmeansSpec;
+use crate::model::{kmeans, ModelState, Task};
+use crate::sim::cost::CostModel;
+use crate::util::rng::Rng;
+
+/// Training hyperparameters carried by every edge.
+#[derive(Clone, Copy, Debug)]
+pub struct Hyper {
+    pub lr: f32,
+    pub reg: f32,
+    /// Per-global-update learning-rate decay: the effective rate at global
+    /// version v is `lr / (1 + lr_decay * v)`. SGD's noise floor scales
+    /// with the rate, so runs that achieve more global updates within the
+    /// budget converge to better models — the resource/accuracy coupling
+    /// the paper's bandit exploits.
+    pub lr_decay: f32,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Hyper {
+            lr: 0.05,
+            reg: 1e-4,
+            lr_decay: 0.02,
+        }
+    }
+}
+
+impl Hyper {
+    /// Hyperparameters with the decayed rate for global version `v`.
+    pub fn at_version(&self, v: u64) -> Hyper {
+        Hyper {
+            lr: self.lr / (1.0 + self.lr_decay * v as f32),
+            ..*self
+        }
+    }
+}
+
+/// Result of one local round of τ iterations.
+#[derive(Clone, Debug)]
+pub struct LocalRound {
+    /// Total compute cost charged for the τ iterations (resource ms).
+    pub comp_cost: f64,
+    /// Mean training signal across iterations (hinge loss for SVM, batch
+    /// inertia for K-means) — diagnostics only, not the bandit reward.
+    pub train_signal: f64,
+    pub iterations: usize,
+}
+
+/// An edge server (paper Fig. 1: local model + local data + resource
+/// constraint).
+pub struct EdgeServer {
+    pub id: usize,
+    pub shard: Shard,
+    pub model: ModelState,
+    /// Heterogeneity slowdown multiplier (1.0 = fastest class of edge).
+    pub slowdown: f64,
+    /// Total resource budget (ms of resource-time).
+    pub budget: f64,
+    /// Resource spent so far.
+    pub spent: f64,
+    /// Version of the global model this edge last synchronized with
+    /// (async staleness bookkeeping).
+    pub base_version: u64,
+    pub retired: bool,
+    /// Per-edge RNG stream (variable-cost sampling).
+    pub rng: Rng,
+    // Scratch batch buffers (reused across iterations — no allocation in
+    // the hot loop).
+    xbuf: Vec<f32>,
+    ybuf: Vec<i32>,
+}
+
+impl EdgeServer {
+    pub fn new(
+        id: usize,
+        shard: Shard,
+        model: ModelState,
+        slowdown: f64,
+        budget: f64,
+        rng: Rng,
+    ) -> Self {
+        assert!(slowdown >= 1.0, "slowdown must be >= 1");
+        assert!(budget > 0.0, "budget must be positive");
+        EdgeServer {
+            id,
+            shard,
+            model,
+            slowdown,
+            budget,
+            spent: 0.0,
+            base_version: 0,
+            retired: false,
+            rng,
+            xbuf: Vec::new(),
+            ybuf: Vec::new(),
+        }
+    }
+
+    /// Remaining resource budget.
+    pub fn remaining(&self) -> f64 {
+        (self.budget - self.spent).max(0.0)
+    }
+
+    /// Charge resource; marks the edge retired if the ledger is exhausted.
+    pub fn charge(&mut self, cost: f64) {
+        assert!(cost >= 0.0, "negative charge");
+        self.spent += cost;
+        if self.spent >= self.budget {
+            self.retired = true;
+        }
+    }
+
+    /// Fraction of the budget consumed.
+    pub fn utilization(&self) -> f64 {
+        (self.spent / self.budget).min(1.0)
+    }
+
+    /// Run τ local iterations on `engine`, charging compute resource per
+    /// the cost model. Does NOT charge communication (the coordinator does
+    /// that at the global update, where it also decides sync-barrier
+    /// semantics).
+    pub fn local_round(
+        &mut self,
+        tau: usize,
+        engine: &dyn ComputeEngine,
+        cost: &CostModel,
+        hyper: &Hyper,
+    ) -> Result<LocalRound> {
+        assert!(tau >= 1, "tau must be >= 1");
+        let shapes = *engine.shapes();
+        let mut total_cost = 0.0;
+        let mut signal = 0.0;
+        for _ in 0..tau {
+            let t0 = std::time::Instant::now();
+            match self.model.task {
+                Task::Svm => {
+                    self.shard
+                        .next_batch(shapes.svm_batch, &mut self.xbuf, &mut self.ybuf);
+                    let out = engine.svm_step(
+                        &mut self.model.params,
+                        &self.xbuf,
+                        &self.ybuf,
+                        hyper.lr,
+                        hyper.reg,
+                    )?;
+                    signal += out.loss as f64;
+                }
+                Task::Kmeans => {
+                    self.shard
+                        .next_batch(shapes.km_batch, &mut self.xbuf, &mut self.ybuf);
+                    let out = engine.kmeans_step(&self.model.params, &self.xbuf)?;
+                    let spec = KmeansSpec {
+                        k: shapes.km_k,
+                        d: shapes.km_d,
+                    };
+                    // Damped mini-batch M-step (Sculley-style online
+                    // K-means): centers move a decaying step toward the
+                    // batch means. Like the SVM's lr decay, this couples
+                    // clustering quality to the number of achievable
+                    // updates — a full M-step per tiny batch would both
+                    // thrash and converge instantly.
+                    let eta = (hyper.lr as f64 * 0.75).clamp(0.0, 1.0) as f32;
+                    let mut target = self.model.params.clone();
+                    kmeans::mstep(&mut target, &out.sums, &out.counts, &spec);
+                    for (c, t) in self.model.params.iter_mut().zip(&target) {
+                        *c += eta * (*t - *c);
+                    }
+                    signal += out.inertia as f64;
+                }
+            }
+            let measured_ms = t0.elapsed().as_secs_f64() * 1e3;
+            total_cost += cost.sample_comp(self.slowdown, measured_ms, &mut self.rng);
+        }
+        Ok(LocalRound {
+            comp_cost: total_cost,
+            train_signal: signal / tau as f64,
+            iterations: tau,
+        })
+    }
+
+    /// Adopt the global model (download at a global update).
+    pub fn sync_with_global(&mut self, global: &ModelState, version: u64) {
+        self.model.params.copy_from_slice(&global.params);
+        self.base_version = version;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::TrafficLike;
+    use crate::data::{partition, Dataset};
+    use crate::engine::native::NativeEngine;
+    use crate::engine::Shapes;
+    use crate::model::svm::SvmSpec;
+    use std::sync::Arc;
+
+    fn mk_edge(task: Task) -> (EdgeServer, NativeEngine) {
+        let mut rng = Rng::new(0);
+        let shapes = Shapes::default();
+        let engine = NativeEngine::new(shapes);
+        let (ds, model): (Arc<Dataset>, ModelState) = match task {
+            Task::Kmeans => {
+                let ds = Arc::new(
+                    TrafficLike {
+                        n: 2000,
+                        ..Default::default()
+                    }
+                    .generate(&mut rng),
+                );
+                let spec = KmeansSpec {
+                    k: shapes.km_k,
+                    d: shapes.km_d,
+                };
+                (ds, spec.init_state(&mut rng))
+            }
+            Task::Svm => {
+                let ds = Arc::new(
+                    crate::data::synth::WaferLike {
+                        n: 2000,
+                        ..Default::default()
+                    }
+                    .generate(&mut rng),
+                );
+                let spec = SvmSpec {
+                    d: shapes.svm_d,
+                    c: shapes.svm_c,
+                    lr: 0.05,
+                    reg: 1e-4,
+                };
+                (ds, spec.init_state())
+            }
+        };
+        let shard = partition::iid(&ds, 1, &mut rng).remove(0);
+        let edge = EdgeServer::new(0, shard, model, 2.0, 1000.0, rng.split());
+        (edge, engine)
+    }
+
+    #[test]
+    fn budget_ledger_and_retirement() {
+        let (mut e, _) = mk_edge(Task::Svm);
+        assert_eq!(e.remaining(), 1000.0);
+        e.charge(400.0);
+        assert_eq!(e.remaining(), 600.0);
+        assert!(!e.retired);
+        e.charge(600.0);
+        assert!(e.retired);
+        assert_eq!(e.remaining(), 0.0);
+        assert_eq!(e.utilization(), 1.0);
+    }
+
+    #[test]
+    fn local_round_charges_tau_times_comp() {
+        let (mut e, eng) = mk_edge(Task::Svm);
+        let cost = CostModel::default(); // Fixed
+        let hyper = Hyper::default();
+        let r = e.local_round(3, &eng, &cost, &hyper).unwrap();
+        assert_eq!(r.iterations, 3);
+        // Fixed mode: exactly tau * base_comp * slowdown.
+        assert!((r.comp_cost - 3.0 * cost.base_comp * 2.0).abs() < 1e-9);
+        assert!(r.train_signal > 0.0);
+    }
+
+    #[test]
+    fn kmeans_round_updates_centers() {
+        let (mut e, eng) = mk_edge(Task::Kmeans);
+        let before = e.model.params.clone();
+        let cost = CostModel::default();
+        e.local_round(2, &eng, &cost, &Hyper::default()).unwrap();
+        assert_ne!(before, e.model.params);
+    }
+
+    #[test]
+    fn sync_with_global_copies_params() {
+        let (mut e, _) = mk_edge(Task::Svm);
+        let mut g = e.model.clone();
+        for p in g.params.iter_mut() {
+            *p += 1.0;
+        }
+        e.sync_with_global(&g, 7);
+        assert_eq!(e.model.params, g.params);
+        assert_eq!(e.base_version, 7);
+    }
+}

@@ -1,0 +1,119 @@
+//! The compute engine abstraction: what an edge server's "local iteration"
+//! and the Cloud's "utility evaluation" run on.
+//!
+//! Two implementations:
+//! * `native` — pure Rust, shape-flexible; used for large simulator sweeps
+//!   and as the numeric oracle.
+//! * `pjrt`   — the production path: AOT-compiled HLO artifacts (JAX+Pallas
+//!   lowered at build time) executed via the PJRT CPU client. Shapes are
+//!   static per the artifact manifest.
+//!
+//! The two are asserted numerically equivalent in rust/tests/pjrt_parity.rs.
+
+pub mod native;
+pub mod pjrt;
+
+use anyhow::Result;
+
+/// Static deployment shapes (must match python/compile/model.py and
+/// artifacts/manifest.json; the pjrt engine cross-checks at load time).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shapes {
+    pub svm_d: usize,
+    pub svm_c: usize,
+    pub svm_batch: usize,
+    pub svm_eval_batch: usize,
+    pub km_d: usize,
+    pub km_k: usize,
+    pub km_batch: usize,
+    pub km_eval_batch: usize,
+}
+
+impl Default for Shapes {
+    fn default() -> Self {
+        Shapes {
+            svm_d: 59,
+            svm_c: 8,
+            // Local-iteration batches are deliberately small: the per-
+            // iteration SGD noise is what makes the aggregation schedule
+            // matter (full-batch gradients on linearly-separable data
+            // converge in a handful of steps and flatten every curve).
+            svm_batch: 64,
+            svm_eval_batch: 512,
+            km_d: 16,
+            km_k: 3,
+            km_batch: 64,
+            km_eval_batch: 512,
+        }
+    }
+}
+
+impl Shapes {
+    pub fn svm_param_len(&self) -> usize {
+        self.svm_d * self.svm_c + self.svm_c
+    }
+
+    pub fn km_param_len(&self) -> usize {
+        self.km_k * self.km_d
+    }
+}
+
+/// Output of one SVM local iteration.
+#[derive(Clone, Debug)]
+pub struct SvmStepOut {
+    pub loss: f32,
+}
+
+/// Output of one K-means statistics pass.
+#[derive(Clone, Debug)]
+pub struct KmeansStepOut {
+    pub sums: Vec<f32>,
+    pub counts: Vec<f32>,
+    pub inertia: f32,
+}
+
+/// A compute backend. Parameter layouts follow model/mod.rs.
+///
+/// Deliberately NOT `Send`: the pjrt engine holds an `Rc`-based PJRT client.
+/// Parallel sweeps construct one (native) engine per worker thread instead.
+pub trait ComputeEngine {
+    fn name(&self) -> &'static str;
+
+    fn shapes(&self) -> &Shapes;
+
+    /// One SGD step on the regularized multiclass hinge; `params` updated
+    /// in place. x is [batch, d] row-major, y [batch].
+    fn svm_step(
+        &self,
+        params: &mut [f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        reg: f32,
+    ) -> Result<SvmStepOut>;
+
+    /// Eval on [eval_batch] rows: (correct count, mean hinge loss).
+    fn svm_eval(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)>;
+
+    /// Lloyd E-step statistics for one batch (the local iteration's M-step
+    /// division is done by the caller via `model::kmeans::mstep`).
+    fn kmeans_step(&self, centers: &[f32], x: &[f32]) -> Result<KmeansStepOut>;
+
+    /// Assignment pass on [eval_batch] rows: (assignments, inertia).
+    fn kmeans_eval(&self, centers: &[f32], x: &[f32]) -> Result<(Vec<i32>, f32)>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_shapes_match_python_contract() {
+        let s = Shapes::default();
+        assert_eq!(s.svm_param_len(), 59 * 8 + 8);
+        assert_eq!(s.km_param_len(), 48);
+        assert_eq!(s.svm_batch, 64);
+        assert_eq!(s.km_batch, 64);
+        assert_eq!(s.km_eval_batch, 512);
+    }
+}

@@ -1,0 +1,144 @@
+//! The production compute engine: AOT-compiled HLO artifacts (JAX L2 +
+//! Pallas L1, lowered at build time) executed through the PJRT CPU client.
+//!
+//! Numerics are asserted equal to the native engine in
+//! rust/tests/pjrt_parity.rs; structure (batch/tile schedule) is owned by
+//! the Pallas kernels.
+
+use std::cell::RefCell;
+
+use anyhow::{anyhow, Result};
+
+use crate::engine::{ComputeEngine, KmeansStepOut, Shapes, SvmStepOut};
+use crate::model::svm::split_params;
+use crate::runtime::literal::{
+    f32_literal, i32_literal, scalar_f32, to_f32_scalar, to_f32_vec, to_i32_vec,
+};
+use crate::runtime::Runtime;
+
+/// ComputeEngine over the artifact runtime. Interior mutability because the
+/// executable cache fills lazily while the trait takes `&self`.
+pub struct PjrtEngine {
+    rt: RefCell<Runtime>,
+    shapes: Shapes,
+}
+
+impl PjrtEngine {
+    /// Open the artifact directory and cross-check its manifest against the
+    /// Rust-side shape contract.
+    pub fn open(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let rt = Runtime::open(dir)?;
+        let shapes = rt.manifest_shapes()?;
+        let expect = Shapes::default();
+        if shapes != expect {
+            return Err(anyhow!(
+                "artifact shapes {shapes:?} do not match the built-in contract {expect:?}; \
+                 re-run `make artifacts` after changing python/compile/model.py"
+            ));
+        }
+        Ok(PjrtEngine {
+            rt: RefCell::new(rt),
+            shapes,
+        })
+    }
+
+    /// Eagerly compile every entrypoint (so the first training step isn't
+    /// billed for compilation in measured-cost mode).
+    pub fn warmup(&self) -> Result<()> {
+        let mut rt = self.rt.borrow_mut();
+        for name in rt.entrypoints() {
+            rt.executable(&name)?;
+        }
+        Ok(())
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.rt.borrow().platform_name()
+    }
+}
+
+impl ComputeEngine for PjrtEngine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn shapes(&self) -> &Shapes {
+        &self.shapes
+    }
+
+    fn svm_step(
+        &self,
+        params: &mut [f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        reg: f32,
+    ) -> Result<SvmStepOut> {
+        let s = &self.shapes;
+        let (w, b) = split_params(params, s.svm_d, s.svm_c);
+        let args = [
+            f32_literal(w, &[s.svm_d, s.svm_c])?,
+            f32_literal(b, &[s.svm_c])?,
+            f32_literal(x, &[s.svm_batch, s.svm_d])?,
+            i32_literal(y, &[s.svm_batch])?,
+            scalar_f32(lr),
+            scalar_f32(reg),
+        ];
+        let out = self.rt.borrow_mut().run("svm_step", &args)?;
+        if out.len() != 3 {
+            return Err(anyhow!("svm_step: expected 3 outputs, got {}", out.len()));
+        }
+        let w2 = to_f32_vec(&out[0])?;
+        let b2 = to_f32_vec(&out[1])?;
+        let loss = to_f32_scalar(&out[2])?;
+        params[..s.svm_d * s.svm_c].copy_from_slice(&w2);
+        params[s.svm_d * s.svm_c..].copy_from_slice(&b2);
+        Ok(SvmStepOut { loss })
+    }
+
+    fn svm_eval(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        let s = &self.shapes;
+        let (w, b) = split_params(params, s.svm_d, s.svm_c);
+        let args = [
+            f32_literal(w, &[s.svm_d, s.svm_c])?,
+            f32_literal(b, &[s.svm_c])?,
+            f32_literal(x, &[s.svm_eval_batch, s.svm_d])?,
+            i32_literal(y, &[s.svm_eval_batch])?,
+        ];
+        let out = self.rt.borrow_mut().run("svm_eval", &args)?;
+        if out.len() != 2 {
+            return Err(anyhow!("svm_eval: expected 2 outputs, got {}", out.len()));
+        }
+        Ok((to_f32_scalar(&out[0])?, to_f32_scalar(&out[1])?))
+    }
+
+    fn kmeans_step(&self, centers: &[f32], x: &[f32]) -> Result<KmeansStepOut> {
+        let s = &self.shapes;
+        let args = [
+            f32_literal(centers, &[s.km_k, s.km_d])?,
+            f32_literal(x, &[s.km_batch, s.km_d])?,
+        ];
+        let out = self.rt.borrow_mut().run("kmeans_step", &args)?;
+        if out.len() != 3 {
+            return Err(anyhow!("kmeans_step: expected 3 outputs, got {}", out.len()));
+        }
+        Ok(KmeansStepOut {
+            sums: to_f32_vec(&out[0])?,
+            counts: to_f32_vec(&out[1])?,
+            inertia: to_f32_scalar(&out[2])?,
+        })
+    }
+
+    fn kmeans_eval(&self, centers: &[f32], x: &[f32]) -> Result<(Vec<i32>, f32)> {
+        let s = &self.shapes;
+        let args = [
+            f32_literal(centers, &[s.km_k, s.km_d])?,
+            f32_literal(x, &[s.km_eval_batch, s.km_d])?,
+        ];
+        let out = self.rt.borrow_mut().run("kmeans_eval", &args)?;
+        if out.len() != 2 {
+            return Err(anyhow!("kmeans_eval: expected 2 outputs, got {}", out.len()));
+        }
+        Ok((to_i32_vec(&out[0])?, to_f32_scalar(&out[1])?))
+    }
+}

@@ -1,0 +1,134 @@
+//! Figure 4 — "Model Accuracy vs. Edge Resource Consumption" (paper
+//! §V-B.2): the long-run trade-off at heterogeneity H = 6.
+//!
+//! For each algorithm, record the (mean consumed resource, metric) trace of
+//! a run and resample it onto a common consumption grid so the curves are
+//! directly comparable (multi-seed averaged per grid point). Claims this
+//! regenerates:
+//!   * all curves rise with consumption (the intrinsic trade-off);
+//!   * OL4EL curves dominate AC-sync everywhere;
+//!   * OL4EL-async ends highest once enough resource is consumed.
+
+use anyhow::Result;
+
+use crate::config::{Algo, RunConfig};
+use crate::coordinator::{self};
+use crate::engine::ComputeEngine;
+use crate::harness::SweepOpts;
+use crate::model::Task;
+use crate::util::stats::Welford;
+use crate::util::table::{f, Table};
+
+pub const ALGOS: [Algo; 4] = [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::AcSync, Algo::FixedI];
+pub const HETERO: f64 = 6.0;
+
+pub fn cell_config(task: Task, algo: Algo, opts: &SweepOpts) -> RunConfig {
+    RunConfig {
+        task,
+        algo,
+        n_edges: 3,
+        hetero: HETERO,
+        budget: 5000.0,
+        data_n: opts.data_n(),
+        ..Default::default()
+    }
+    .with_paper_utility()
+}
+
+/// Metric of a trace at consumption level `x` (step interpolation — the
+/// metric last observed at or below x).
+fn metric_at(trace: &[coordinator::TracePoint], x: f64) -> f64 {
+    let mut m = trace.first().map(|p| p.metric).unwrap_or(0.0);
+    for p in trace {
+        if p.mean_spent <= x {
+            m = p.metric;
+        } else {
+            break;
+        }
+    }
+    m
+}
+
+pub fn consumption_grid(budget: f64, points: usize) -> Vec<f64> {
+    (1..=points)
+        .map(|i| budget * i as f64 / points as f64)
+        .collect()
+}
+
+pub fn run(engine: &dyn ComputeEngine, opts: &SweepOpts) -> Result<Vec<Table>> {
+    let seeds = opts.seed_list();
+    let grid = consumption_grid(5000.0, if opts.quick { 8 } else { 16 });
+    let mut tables = Vec::new();
+
+    for task in [Task::Kmeans, Task::Svm] {
+        let metric_name = match task {
+            Task::Kmeans => "F1",
+            Task::Svm => "accuracy",
+        };
+        let mut header: Vec<String> = vec!["consumed_ms".into()];
+        header.extend(ALGOS.iter().map(|a| a.name().to_string()));
+        let mut t = Table::new(
+            format!(
+                "Fig 4 ({}): {} vs mean edge resource consumption (H=6)",
+                task.name(),
+                metric_name
+            ),
+            &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        );
+
+        // curves[algo][grid_idx] = Welford over seeds
+        let mut curves: Vec<Vec<Welford>> =
+            vec![vec![Welford::new(); grid.len()]; ALGOS.len()];
+        for (ai, algo) in ALGOS.iter().enumerate() {
+            for &seed in &seeds {
+                let mut cfg = cell_config(task, *algo, opts);
+                cfg.seed = seed;
+                let r = coordinator::run(&cfg, engine)?;
+                for (gi, &x) in grid.iter().enumerate() {
+                    curves[ai][gi].push(metric_at(&r.trace, x));
+                }
+            }
+        }
+        for (gi, &x) in grid.iter().enumerate() {
+            let mut row = vec![f(x, 0)];
+            for ai in 0..ALGOS.len() {
+                row.push(f(curves[ai][gi].mean(), 4));
+            }
+            t.row(row);
+        }
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::TracePoint;
+
+    fn tp(spent: f64, metric: f64) -> TracePoint {
+        TracePoint {
+            wall_ms: spent,
+            mean_spent: spent,
+            updates: 0,
+            metric,
+        }
+    }
+
+    #[test]
+    fn metric_at_is_step_interpolation() {
+        let trace = vec![tp(0.0, 0.1), tp(100.0, 0.5), tp(200.0, 0.8)];
+        assert_eq!(metric_at(&trace, 50.0), 0.1);
+        assert_eq!(metric_at(&trace, 100.0), 0.5);
+        assert_eq!(metric_at(&trace, 150.0), 0.5);
+        assert_eq!(metric_at(&trace, 1000.0), 0.8);
+    }
+
+    #[test]
+    fn grid_spans_budget() {
+        let g = consumption_grid(5000.0, 10);
+        assert_eq!(g.len(), 10);
+        assert_eq!(*g.last().unwrap(), 5000.0);
+        assert!(g[0] > 0.0);
+    }
+}

@@ -1,0 +1,116 @@
+//! Figure 5 — "Model Accuracy vs. Number of Edge Servers" (paper §V-B.3):
+//! the scalability simulation, N from 3 to 100 edges under heterogeneity
+//! H ∈ {1, 5, 10, 15}; (a) K-means F1, (b) SVM accuracy; OL4EL-async at
+//! every (N, H) plus the OL4EL-sync comparison. Claims this regenerates:
+//!   * OL4EL-async improves with N (more aggregated information);
+//!   * accuracy degrades as H rises (stale slow-edge updates);
+//!   * OL4EL-sync wins at H=1 but collapses by H=15, where it is beaten by
+//!     OL4EL-async.
+
+use anyhow::Result;
+
+use crate::config::{Algo, RunConfig};
+use crate::engine::ComputeEngine;
+use crate::harness::{run_seeds, SweepOpts};
+use crate::model::Task;
+use crate::util::table::{f, Table};
+
+pub fn n_grid(quick: bool) -> Vec<usize> {
+    if quick {
+        vec![3, 10, 25]
+    } else {
+        vec![3, 10, 25, 50, 100]
+    }
+}
+
+pub fn h_grid(quick: bool) -> Vec<f64> {
+    if quick {
+        vec![1.0, 15.0]
+    } else {
+        vec![1.0, 5.0, 10.0, 15.0]
+    }
+}
+
+pub fn cell_config(task: Task, algo: Algo, n: usize, h: f64, opts: &SweepOpts) -> RunConfig {
+    RunConfig {
+        task,
+        algo,
+        n_edges: n,
+        hetero: h,
+        // Simulation regime: unit-cost clock; same budget for every cell.
+        budget: if opts.quick { 3000.0 } else { 5000.0 },
+        data_n: opts.data_n().max(n * 40),
+        ..Default::default()
+    }
+    .with_paper_utility()
+}
+
+pub fn run(engine: &dyn ComputeEngine, opts: &SweepOpts) -> Result<Vec<Table>> {
+    let seeds = opts.seed_list();
+    let ns = n_grid(opts.quick);
+    let hs = h_grid(opts.quick);
+    let mut tables = Vec::new();
+
+    for task in [Task::Kmeans, Task::Svm] {
+        let metric_name = match task {
+            Task::Kmeans => "F1",
+            Task::Svm => "accuracy",
+        };
+        let mut header: Vec<String> = vec!["N".into()];
+        for &h in &hs {
+            header.push(format!("async H={h:.0}"));
+        }
+        for &h in &hs {
+            header.push(format!("sync H={h:.0}"));
+        }
+        let mut t = Table::new(
+            format!(
+                "Fig 5{}: {} {} vs number of edge servers",
+                if task == Task::Kmeans { "a" } else { "b" },
+                task.name(),
+                metric_name
+            ),
+            &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        );
+        for &n in &ns {
+            let mut row = vec![n.to_string()];
+            for algo in [Algo::Ol4elAsync, Algo::Ol4elSync] {
+                for &h in &hs {
+                    let cfg = cell_config(task, algo, n, h, opts);
+                    let agg = run_seeds(&cfg, engine, &seeds)?;
+                    row.push(f(agg.metric.mean(), 4));
+                }
+            }
+            t.row(row);
+        }
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids_match_paper_ranges() {
+        let ns = n_grid(false);
+        assert_eq!(*ns.first().unwrap(), 3);
+        assert_eq!(*ns.last().unwrap(), 100);
+        let hs = h_grid(false);
+        assert_eq!(hs, vec![1.0, 5.0, 10.0, 15.0]);
+    }
+
+    #[test]
+    fn cell_config_scales_data_with_fleet() {
+        let cfg = cell_config(
+            Task::Svm,
+            Algo::Ol4elAsync,
+            100,
+            15.0,
+            &SweepOpts::default(),
+        );
+        assert!(cfg.data_n >= 100 * 40);
+        assert_eq!(cfg.n_edges, 100);
+    }
+}

@@ -1,0 +1,173 @@
+//! Experiment harness: turns `RunConfig`s into the tables/series the paper
+//! reports. One submodule per paper figure (Fig. 3, 4, 5); each is driven
+//! both by `cargo bench --bench figN` and by the `ol4el figN` CLI.
+
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::{self, RunResult};
+use crate::engine::native::NativeEngine;
+use crate::engine::pjrt::PjrtEngine;
+use crate::engine::ComputeEngine;
+use crate::util::stats::Welford;
+
+/// Which compute backend the harness runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Pure Rust (fast, shape-flexible) — the simulator default.
+    Native,
+    /// AOT HLO on PJRT — the full three-layer path (testbed default).
+    Pjrt,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Some(EngineKind::Native),
+            "pjrt" => Some(EngineKind::Pjrt),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Native => "native",
+            EngineKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Instantiate an engine. For `Pjrt` the artifact dir must exist
+/// (`make artifacts`).
+pub fn build_engine(kind: EngineKind, artifacts_dir: &str) -> Result<Box<dyn ComputeEngine>> {
+    match kind {
+        EngineKind::Native => Ok(Box::new(NativeEngine::default())),
+        EngineKind::Pjrt => {
+            let eng = PjrtEngine::open(artifacts_dir)
+                .map_err(|e| anyhow!("opening artifacts at '{artifacts_dir}': {e}"))?;
+            eng.warmup()?;
+            Ok(Box::new(eng))
+        }
+    }
+}
+
+/// Multi-seed aggregate of a config.
+#[derive(Clone, Debug)]
+pub struct Aggregate {
+    pub metric: Welford,
+    pub updates: Welford,
+    pub auc: Welford,
+    pub sample: Option<RunResult>,
+}
+
+impl Aggregate {
+    pub fn empty() -> Self {
+        Aggregate {
+            metric: Welford::new(),
+            updates: Welford::new(),
+            auc: Welford::new(),
+            sample: None,
+        }
+    }
+}
+
+/// Run `cfg` across `seeds` and aggregate the headline numbers.
+pub fn run_seeds(
+    cfg: &RunConfig,
+    engine: &dyn ComputeEngine,
+    seeds: &[u64],
+) -> Result<Aggregate> {
+    assert!(!seeds.is_empty());
+    let mut agg = Aggregate::empty();
+    for &seed in seeds {
+        let mut c = cfg.clone();
+        c.seed = seed;
+        let r = coordinator::run(&c, engine)?;
+        agg.metric.push(r.final_metric);
+        agg.updates.push(r.total_updates as f64);
+        agg.auc.push(r.tradeoff_auc());
+        if agg.sample.is_none() {
+            agg.sample = Some(r);
+        }
+    }
+    Ok(agg)
+}
+
+/// Shared sizing knobs for the figure benches: `quick` keeps `cargo bench`
+/// wall-time reasonable on one core; `full` mirrors the paper's sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepOpts {
+    pub quick: bool,
+    pub seeds: u64,
+    pub engine: EngineKind,
+}
+
+impl Default for SweepOpts {
+    fn default() -> Self {
+        SweepOpts {
+            quick: true,
+            seeds: 2,
+            engine: EngineKind::Native,
+        }
+    }
+}
+
+impl SweepOpts {
+    pub fn seed_list(&self) -> Vec<u64> {
+        (0..self.seeds.max(1)).map(|i| 42 + i).collect()
+    }
+
+    /// Training-set size scaled for bench speed (batch shape is fixed, so
+    /// a smaller corpus only changes shard diversity, not step cost).
+    pub fn data_n(&self) -> usize {
+        if self.quick {
+            6_000
+        } else {
+            20_000
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_kind_parse() {
+        assert_eq!(EngineKind::parse("native"), Some(EngineKind::Native));
+        assert_eq!(EngineKind::parse("PJRT"), Some(EngineKind::Pjrt));
+        assert_eq!(EngineKind::parse("tpu"), None);
+    }
+
+    #[test]
+    fn run_seeds_aggregates() {
+        let engine = NativeEngine::default();
+        let cfg = RunConfig {
+            data_n: 3000,
+            budget: 600.0,
+            ..Default::default()
+        };
+        let agg = run_seeds(&cfg, &engine, &[1, 2]).unwrap();
+        assert_eq!(agg.metric.count(), 2);
+        assert!(agg.sample.is_some());
+        assert!(agg.metric.mean() > 0.0);
+    }
+
+    #[test]
+    fn sweep_opts_sizes() {
+        let q = SweepOpts::default();
+        assert_eq!(q.data_n(), 6000);
+        assert_eq!(q.seed_list(), vec![42, 43]);
+        let f = SweepOpts {
+            quick: false,
+            seeds: 3,
+            engine: EngineKind::Native,
+        };
+        assert_eq!(f.data_n(), 20000);
+        assert_eq!(f.seed_list().len(), 3);
+    }
+}

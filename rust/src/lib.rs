@@ -1,0 +1,37 @@
+//! # OL4EL — Online Learning for Edge-cloud Collaborative Learning
+//!
+//! Production-quality reproduction of Han et al. (2020), *"OL4EL: Online
+//! Learning for Edge-cloud Collaborative Learning on Heterogeneous Edges
+//! with Resource Constraints"*, as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the Cloud coordinator: budget-limited
+//!   multi-armed bandits over global-update intervals, synchronous and
+//!   asynchronous collaboration, heterogeneous edge fleet simulation and
+//!   testbed-style measured execution.
+//! * **L2 (python/compile/model.py)** — the SVM and K-means compute graphs
+//!   in JAX, AOT-lowered to HLO text once at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the hinge
+//!   forward+backward and the K-means assign+accumulate hot-spots.
+//!
+//! The request path is pure Rust: `runtime/` loads the HLO artifacts via
+//! the PJRT C API (`xla` crate) and `engine::pjrt` exposes them behind the
+//! same `ComputeEngine` trait as the pure-Rust `engine::native` oracle.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured reproduction of every figure.
+
+pub mod bandit;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod deploy;
+pub mod edge;
+pub mod engine;
+pub mod harness;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;
+pub mod util;

@@ -1,0 +1,303 @@
+//! `ol4el` — the leader binary: train runs, figure regeneration, artifact
+//! inspection. Python never runs here; the PJRT engine loads AOT HLO from
+//! artifacts/ (see `make artifacts`).
+
+use anyhow::{anyhow, Result};
+
+use ol4el::config::{Algo, BanditKind, PartitionKind, RunConfig};
+use ol4el::coordinator::{self};
+use ol4el::harness::{self, EngineKind, SweepOpts};
+use ol4el::model::Task;
+use ol4el::sim::cost::CostMode;
+use ol4el::sim::hetero::HeteroProfile;
+use ol4el::coordinator::utility::UtilityKind;
+use ol4el::util::cli::{Args, Cli};
+use ol4el::util::json::Json;
+use ol4el::util::table::{f, Table};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run_cli(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    "ol4el — OL4EL edge-cloud collaborative learning (Han et al. 2020)\n\
+     \n\
+     Subcommands:\n\
+       train               run one training configuration and print its trace\n\
+       deploy              threaded testbed: one OS thread per edge, measured costs\n\
+       fig3 | fig4 | fig5  regenerate a paper figure (tables + results/*.csv)\n\
+       inspect-artifacts   show the AOT artifact manifest and PJRT platform\n\
+       config              print the default config as JSON (edit + pass via --config)\n\
+     \n\
+     Run `ol4el <subcommand> --help` for flags.\n"
+        .to_string()
+}
+
+fn run_cli(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print!("{}", usage());
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "deploy" => cmd_deploy(rest),
+        "fig3" | "fig4" | "fig5" => cmd_fig(cmd, rest),
+        "inspect-artifacts" => cmd_inspect(rest),
+        "config" => {
+            println!("{}", RunConfig::default().to_json().pretty());
+            Ok(())
+        }
+        "--help" | "-h" | "help" => {
+            print!("{}", usage());
+            Ok(())
+        }
+        other => Err(anyhow!("unknown subcommand '{other}'\n\n{}", usage())),
+    }
+}
+
+fn train_cli() -> Cli {
+    Cli::new("ol4el train", "run one training configuration")
+        .opt("task", "svm", "svm | kmeans")
+        .opt("algo", "ol4el-async", "ol4el-sync | ol4el-async | ac-sync | fixed-i")
+        .opt("edges", "3", "number of edge servers")
+        .opt("hetero", "1.0", "heterogeneity ratio H (>= 1)")
+        .opt("hetero-profile", "linear", "linear | random")
+        .opt("budget", "5000", "per-edge resource budget (ms)")
+        .opt("cost-mode", "fixed", "fixed | variable | measured")
+        .opt("base-comp", "40", "nominal compute ms per local iteration")
+        .opt("base-comm", "60", "nominal communication ms per global update")
+        .opt("tau-max", "10", "longest global update interval (arm count)")
+        .opt("lr", "0.05", "initial learning rate")
+        .opt("reg", "0.0001", "L2 regularization")
+        .opt("lr-decay", "0.02", "per-global-update learning-rate decay")
+        .opt("utility", "eval", "eval | delta (learning utility definition)")
+        .opt("bandit", "auto", "auto | kube | ucb-bv | ucb1 | eps-greedy | thompson")
+        .opt("fixed-interval", "5", "interval for the fixed-i baseline")
+        .opt("partition", "iid", "iid | skew:<alpha>")
+        .opt("data-n", "20000", "training set size")
+        .opt("separation", "2.5", "dataset difficulty: class/cluster separation")
+        .opt("staleness-decay", "0.5", "async merge staleness decay exponent")
+        .opt("async-alpha", "0.6", "async base mixing rate at a merge")
+        .opt("eval-every", "1", "record a trace point every k global updates")
+        .opt("failure-rate", "0", "per-round probability an edge fail-stops (async)")
+        .opt("seed", "42", "PRNG seed")
+        .opt("engine", "native", "native | pjrt (the full 3-layer path)")
+        .opt("artifacts", "artifacts", "artifact directory for --engine pjrt")
+        .opt_no_default("config", "load a JSON config file (flags override it)")
+        .switch("trace", "print every trace point")
+        .switch("json", "emit the result as JSON")
+}
+
+fn config_from_args(a: &Args) -> Result<RunConfig> {
+    let mut cfg = if let Some(path) = a.get("config") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading config '{path}': {e}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing config '{path}': {e}"))?;
+        RunConfig::from_json(&j)?
+    } else {
+        RunConfig::default()
+    };
+    cfg.task = Task::parse(&a.str("task")).ok_or_else(|| anyhow!("bad --task"))?;
+    cfg.algo = Algo::parse(&a.str("algo")).ok_or_else(|| anyhow!("bad --algo"))?;
+    cfg.n_edges = a.usize("edges").map_err(|e| anyhow!(e))?;
+    cfg.hetero = a.f64("hetero").map_err(|e| anyhow!(e))?;
+    cfg.hetero_profile = HeteroProfile::parse(&a.str("hetero-profile"))
+        .ok_or_else(|| anyhow!("bad --hetero-profile"))?;
+    cfg.budget = a.f64("budget").map_err(|e| anyhow!(e))?;
+    cfg.cost.mode =
+        CostMode::parse(&a.str("cost-mode")).ok_or_else(|| anyhow!("bad --cost-mode"))?;
+    cfg.cost.base_comp = a.f64("base-comp").map_err(|e| anyhow!(e))?;
+    cfg.cost.base_comm = a.f64("base-comm").map_err(|e| anyhow!(e))?;
+    cfg.tau_max = a.usize("tau-max").map_err(|e| anyhow!(e))?;
+    cfg.hyper.lr = a.f64("lr").map_err(|e| anyhow!(e))? as f32;
+    cfg.hyper.reg = a.f64("reg").map_err(|e| anyhow!(e))? as f32;
+    cfg.hyper.lr_decay = a.f64("lr-decay").map_err(|e| anyhow!(e))? as f32;
+    cfg.utility =
+        UtilityKind::parse(&a.str("utility")).ok_or_else(|| anyhow!("bad --utility"))?;
+    cfg.bandit = BanditKind::parse(&a.str("bandit")).ok_or_else(|| anyhow!("bad --bandit"))?;
+    cfg.fixed_interval = a.usize("fixed-interval").map_err(|e| anyhow!(e))?;
+    cfg.partition =
+        PartitionKind::parse(&a.str("partition")).ok_or_else(|| anyhow!("bad --partition"))?;
+    cfg.data_n = a.usize("data-n").map_err(|e| anyhow!(e))?;
+    cfg.separation = a.f64("separation").map_err(|e| anyhow!(e))?;
+    cfg.staleness_decay = a.f64("staleness-decay").map_err(|e| anyhow!(e))?;
+    cfg.async_alpha = a.f64("async-alpha").map_err(|e| anyhow!(e))?;
+    cfg.eval_every = a.usize("eval-every").map_err(|e| anyhow!(e))?.max(1);
+    cfg.failure_rate = a.f64("failure-rate").map_err(|e| anyhow!(e))?;
+    cfg.seed = a.u64("seed").map_err(|e| anyhow!(e))?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let Some(a) = train_cli().parse(argv).map_err(|e| anyhow!(e))? else {
+        return Ok(());
+    };
+    let cfg = config_from_args(&a)?;
+    let engine_kind =
+        EngineKind::parse(&a.str("engine")).ok_or_else(|| anyhow!("bad --engine"))?;
+    let engine = harness::build_engine(engine_kind, &a.str("artifacts"))?;
+
+    eprintln!(
+        "[ol4el] task={} algo={} edges={} H={} budget={}ms engine={}",
+        cfg.task.name(),
+        cfg.algo.name(),
+        cfg.n_edges,
+        cfg.hetero,
+        cfg.budget,
+        engine_kind.name()
+    );
+    let t0 = std::time::Instant::now();
+    let r = coordinator::run(&cfg, engine.as_ref())?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    if a.flag("json") {
+        let trace = Json::arr(r.trace.iter().map(|p| {
+            Json::obj(vec![
+                ("wall_ms", Json::num(p.wall_ms)),
+                ("mean_spent", Json::num(p.mean_spent)),
+                ("updates", Json::num(p.updates as f64)),
+                ("metric", Json::num(p.metric)),
+            ])
+        }));
+        let out = Json::obj(vec![
+            ("config", cfg.to_json()),
+            ("final_metric", Json::num(r.final_metric)),
+            ("updates", Json::num(r.total_updates as f64)),
+            ("wall_ms", Json::num(r.wall_ms)),
+            ("mean_spent", Json::num(r.mean_spent)),
+            ("retired_edges", Json::num(r.retired_edges as f64)),
+            ("trace", trace),
+            ("host_seconds", Json::num(dt)),
+        ]);
+        println!("{}", out.pretty());
+        return Ok(());
+    }
+
+    if a.flag("trace") {
+        let mut t = Table::new("trace", &["wall_ms", "mean_spent", "updates", "metric"]);
+        for p in &r.trace {
+            t.row(vec![
+                f(p.wall_ms, 1),
+                f(p.mean_spent, 1),
+                p.updates.to_string(),
+                f(p.metric, 4),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+    let metric_name = match cfg.task {
+        Task::Svm => "accuracy",
+        Task::Kmeans => "F1",
+    };
+    println!(
+        "final {metric_name}={:.4}  global_updates={}  virtual_wall={:.0}ms  mean_spent={:.0}ms  retired={}/{}  host={:.2}s",
+        r.final_metric, r.total_updates, r.wall_ms, r.mean_spent, r.retired_edges, r.n_edges, dt
+    );
+    println!(
+        "tau histogram (τ=1..{}): {:?}",
+        r.tau_histogram.len(),
+        r.tau_histogram
+    );
+    Ok(())
+}
+
+fn cmd_deploy(argv: &[String]) -> Result<()> {
+    // The threaded testbed reuses the train flag set; budgets are measured
+    // milliseconds of real (slowdown-scaled) wall-clock.
+    let Some(a) = train_cli().parse(argv).map_err(|e| anyhow!(e))? else {
+        return Ok(());
+    };
+    let mut cfg = config_from_args(&a)?;
+    cfg.cost.mode = CostMode::Measured;
+    let engine = harness::build_engine(
+        EngineKind::parse(&a.str("engine")).ok_or_else(|| anyhow!("bad --engine"))?,
+        &a.str("artifacts"),
+    )?;
+    eprintln!(
+        "[ol4el] threaded deploy: {} edges, H={}, budget {} ms (measured)",
+        cfg.n_edges, cfg.hetero, cfg.budget
+    );
+    let r = ol4el::deploy::run_threaded(&cfg, engine.as_ref())?;
+    println!(
+        "final metric {:.4}  updates={}  host={:.2}s",
+        r.final_metric, r.total_updates, r.host_seconds
+    );
+    for (i, (spent, rounds)) in r.per_edge_spent.iter().zip(&r.per_edge_rounds).enumerate() {
+        println!("  edge {i}: {rounds} rounds, {spent:.1} ms spent");
+    }
+    Ok(())
+}
+
+fn fig_cli(name: &'static str) -> Cli {
+    Cli::new(name, "regenerate a paper figure")
+        .opt("engine", "native", "native | pjrt")
+        .opt("artifacts", "artifacts", "artifact dir for pjrt")
+        .opt("seeds", "2", "seeds per cell")
+        .opt("out", "results", "CSV output directory")
+        .switch("full", "full paper-sized sweep (slower)")
+}
+
+fn cmd_fig(which: &str, argv: &[String]) -> Result<()> {
+    let Some(a) = fig_cli("ol4el figN").parse(argv).map_err(|e| anyhow!(e))? else {
+        return Ok(());
+    };
+    let opts = SweepOpts {
+        quick: !a.flag("full"),
+        seeds: a.u64("seeds").map_err(|e| anyhow!(e))?,
+        engine: EngineKind::parse(&a.str("engine")).ok_or_else(|| anyhow!("bad --engine"))?,
+    };
+    let engine = harness::build_engine(opts.engine, &a.str("artifacts"))?;
+    let t0 = std::time::Instant::now();
+    let tables = match which {
+        "fig3" => harness::fig3::run(engine.as_ref(), &opts)?,
+        "fig4" => harness::fig4::run(engine.as_ref(), &opts)?,
+        "fig5" => harness::fig5::run(engine.as_ref(), &opts)?,
+        _ => unreachable!(),
+    };
+    let outdir = a.str("out");
+    for (i, t) in tables.iter().enumerate() {
+        print!("{}", t.render());
+        println!();
+        let path = format!("{outdir}/{which}_{i}.csv");
+        t.write_csv(&path)?;
+        eprintln!("[ol4el] wrote {path}");
+    }
+    eprintln!("[ol4el] {which} done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_inspect(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("ol4el inspect-artifacts", "artifact + PJRT diagnostics")
+        .opt("artifacts", "artifacts", "artifact directory");
+    let Some(a) = cli.parse(argv).map_err(|e| anyhow!(e))? else {
+        return Ok(());
+    };
+    let mut rt = ol4el::runtime::Runtime::open(a.str("artifacts"))?;
+    println!("platform: {}", rt.platform_name());
+    println!("devices:  {}", rt.device_count());
+    println!("shapes:   {:?}", rt.manifest_shapes()?);
+    for name in rt.entrypoints() {
+        let bytes = rt
+            .manifest
+            .path(&["entrypoints", &name, "bytes"])
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0);
+        let t0 = std::time::Instant::now();
+        rt.executable(&name)?;
+        println!(
+            "  {name:<14} {bytes:>8.0} bytes HLO   compile {:.0} ms",
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,186 @@
+//! Evaluation metrics (paper §V-A): prediction accuracy for SVM, F1 score
+//! for K-means.
+//!
+//! Clustering F1 requires matching cluster ids to ground-truth labels; we
+//! search all permutations for k ≤ 8 (exact; the paper's K=3 has only 6)
+//! and fall back to greedy matching beyond that.
+
+/// Classification accuracy from a correct-count.
+pub fn accuracy(correct: f32, n: usize) -> f64 {
+    assert!(n > 0);
+    (correct as f64 / n as f64).clamp(0.0, 1.0)
+}
+
+/// Macro-averaged F1 of a label assignment against ground truth (both in
+/// 0..k), WITHOUT cluster matching (used after a mapping is applied, and
+/// directly for classifiers).
+pub fn macro_f1(pred: &[i32], truth: &[i32], k: usize) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    assert!(!pred.is_empty());
+    let mut tp = vec![0f64; k];
+    let mut fp = vec![0f64; k];
+    let mut fn_ = vec![0f64; k];
+    for (&p, &t) in pred.iter().zip(truth) {
+        let (p, t) = (p as usize, t as usize);
+        assert!(p < k && t < k, "label out of range");
+        if p == t {
+            tp[p] += 1.0;
+        } else {
+            fp[p] += 1.0;
+            fn_[t] += 1.0;
+        }
+    }
+    let mut f1_sum = 0.0;
+    for c in 0..k {
+        let prec = if tp[c] + fp[c] > 0.0 {
+            tp[c] / (tp[c] + fp[c])
+        } else {
+            0.0
+        };
+        let rec = if tp[c] + fn_[c] > 0.0 {
+            tp[c] / (tp[c] + fn_[c])
+        } else {
+            0.0
+        };
+        f1_sum += if prec + rec > 0.0 {
+            2.0 * prec * rec / (prec + rec)
+        } else {
+            0.0
+        };
+    }
+    f1_sum / k as f64
+}
+
+/// Best-permutation macro-F1 for clustering: maps cluster ids to labels to
+/// maximize F1. Exact for k ≤ 8, greedy beyond.
+pub fn clustering_f1(assign: &[i32], truth: &[i32], k: usize) -> f64 {
+    assert_eq!(assign.len(), truth.len());
+    if k <= 8 {
+        let mut best = 0.0f64;
+        let mut perm: Vec<usize> = (0..k).collect();
+        permute(&mut perm, 0, &mut |p| {
+            let mapped: Vec<i32> = assign.iter().map(|&a| p[a as usize] as i32).collect();
+            let f1 = macro_f1(&mapped, truth, k);
+            if f1 > best {
+                best = f1;
+            }
+        });
+        best
+    } else {
+        greedy_match_f1(assign, truth, k)
+    }
+}
+
+/// Heap's algorithm over `perm[at..]`.
+fn permute(perm: &mut Vec<usize>, at: usize, visit: &mut dyn FnMut(&[usize])) {
+    if at == perm.len() {
+        visit(perm);
+        return;
+    }
+    for i in at..perm.len() {
+        perm.swap(at, i);
+        permute(perm, at + 1, visit);
+        perm.swap(at, i);
+    }
+}
+
+/// Greedy cluster->label matching by overlap count, then macro-F1.
+fn greedy_match_f1(assign: &[i32], truth: &[i32], k: usize) -> f64 {
+    let mut overlap = vec![vec![0usize; k]; k]; // [cluster][label]
+    for (&a, &t) in assign.iter().zip(truth) {
+        overlap[a as usize][t as usize] += 1;
+    }
+    let mut mapping = vec![usize::MAX; k];
+    let mut used = vec![false; k];
+    // Repeatedly take the globally largest unassigned (cluster, label) pair.
+    for _ in 0..k {
+        let mut best = (0usize, 0usize, 0usize);
+        let mut found = false;
+        for c in 0..k {
+            if mapping[c] != usize::MAX {
+                continue;
+            }
+            for l in 0..k {
+                if used[l] {
+                    continue;
+                }
+                if !found || overlap[c][l] > best.2 {
+                    best = (c, l, overlap[c][l]);
+                    found = true;
+                }
+            }
+        }
+        if !found {
+            break;
+        }
+        mapping[best.0] = best.1;
+        used[best.1] = true;
+    }
+    let mapped: Vec<i32> = assign.iter().map(|&a| mapping[a as usize] as i32).collect();
+    macro_f1(&mapped, truth, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(50.0, 100), 0.5);
+        assert_eq!(accuracy(0.0, 10), 0.0);
+        assert_eq!(accuracy(10.0, 10), 1.0);
+    }
+
+    #[test]
+    fn perfect_f1() {
+        let y = vec![0, 1, 2, 0, 1, 2];
+        assert!((macro_f1(&y, &y, 3) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clustering_f1_invariant_to_relabeling() {
+        let truth = vec![0, 0, 1, 1, 2, 2];
+        let assign_identity = vec![0, 0, 1, 1, 2, 2];
+        let assign_rotated = vec![1, 1, 2, 2, 0, 0];
+        let f_id = clustering_f1(&assign_identity, &truth, 3);
+        let f_rot = clustering_f1(&assign_rotated, &truth, 3);
+        assert!((f_id - 1.0).abs() < 1e-12);
+        assert!((f_rot - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clustering_f1_penalizes_mixing() {
+        let truth = vec![0, 0, 0, 1, 1, 1, 2, 2, 2];
+        let assign = vec![0, 0, 1, 1, 1, 0, 2, 2, 2]; // 2 of 9 mixed
+        let f1 = clustering_f1(&assign, &truth, 3);
+        assert!(f1 < 1.0 && f1 > 0.6, "f1 = {f1}");
+    }
+
+    #[test]
+    fn degenerate_single_cluster_assignment() {
+        let truth = vec![0, 1, 2, 0, 1, 2];
+        let assign = vec![0; 6];
+        let f1 = clustering_f1(&assign, &truth, 3);
+        // One class recovered partially; the others missed entirely.
+        assert!(f1 < 0.4, "f1 = {f1}");
+        assert!(f1 > 0.0);
+    }
+
+    #[test]
+    fn greedy_path_matches_exact_on_small_k() {
+        // Compare the greedy fallback against the exact permutation search
+        // on a case where greedy has a unique dominant matching.
+        let truth = vec![0, 0, 0, 1, 1, 1, 2, 2, 2];
+        let assign = vec![2, 2, 2, 0, 0, 0, 1, 1, 1];
+        let exact = clustering_f1(&assign, &truth, 3);
+        let greedy = greedy_match_f1(&assign, &truth, 3);
+        assert!((exact - greedy).abs() < 1e-12);
+        assert!((exact - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "label out of range")]
+    fn out_of_range_label_panics() {
+        macro_f1(&[0, 3], &[0, 1], 3);
+    }
+}

@@ -1,0 +1,210 @@
+//! Native (pure-Rust) K-means — the oracle twin of the `kmeans_step` /
+//! `kmeans_eval` HLO artifacts. Semantics match
+//! python/compile/kernels/ref.py (Lloyd E-step statistics; argmin ties to
+//! the lowest index like jnp.argmin).
+
+use crate::model::{ModelState, Task};
+use crate::util::rng::Rng;
+
+/// K-means shape spec. `k` clusters over `d`-dim points; params are the
+/// row-major `[k, d]` centers.
+#[derive(Clone, Copy, Debug)]
+pub struct KmeansSpec {
+    pub k: usize,
+    pub d: usize,
+}
+
+impl KmeansSpec {
+    pub fn param_len(&self) -> usize {
+        self.k * self.d
+    }
+
+    /// Random-normal center init (what the paper's t=0 "set the global
+    /// model randomly" does).
+    pub fn init_state(&self, rng: &mut Rng) -> ModelState {
+        let params = (0..self.param_len())
+            .map(|_| rng.normal() as f32)
+            .collect();
+        ModelState {
+            task: Task::Kmeans,
+            params,
+        }
+    }
+}
+
+/// E-step statistics over a batch: (sums [k*d], counts [k], inertia).
+pub fn stats(centers: &[f32], x: &[f32], spec: &KmeansSpec) -> (Vec<f32>, Vec<f32>, f32) {
+    let (k, d) = (spec.k, spec.d);
+    assert_eq!(centers.len(), k * d, "bad centers length");
+    let n = x.len() / d;
+    let mut sums = vec![0f32; k * d];
+    let mut counts = vec![0f32; k];
+    let mut inertia = 0f64;
+    // Precompute ||c||^2 (matches the kernel's expansion; distances are
+    // computed identically so argmin tie behaviour agrees bit-for-bit with
+    // the f32 math of the HLO path).
+    let cc: Vec<f32> = (0..k)
+        .map(|j| {
+            centers[j * d..(j + 1) * d]
+                .iter()
+                .map(|v| v * v)
+                .sum::<f32>()
+        })
+        .collect();
+    for i in 0..n {
+        let xi = &x[i * d..(i + 1) * d];
+        let xx: f32 = xi.iter().map(|v| v * v).sum();
+        let mut best = 0usize;
+        let mut best_d2 = f32::INFINITY;
+        for j in 0..k {
+            let cj = &centers[j * d..(j + 1) * d];
+            let mut cross = 0f32;
+            for t in 0..d {
+                cross += xi[t] * cj[t];
+            }
+            let d2 = xx - 2.0 * cross + cc[j];
+            if d2 < best_d2 {
+                best_d2 = d2;
+                best = j;
+            }
+        }
+        counts[best] += 1.0;
+        let sb = &mut sums[best * d..(best + 1) * d];
+        for t in 0..d {
+            sb[t] += xi[t];
+        }
+        inertia += best_d2 as f64;
+    }
+    (sums, counts, inertia as f32)
+}
+
+/// Assignment pass for eval: (assignments, inertia).
+pub fn assign(centers: &[f32], x: &[f32], spec: &KmeansSpec) -> (Vec<i32>, f32) {
+    let (k, d) = (spec.k, spec.d);
+    assert_eq!(centers.len(), k * d, "bad centers length");
+    let n = x.len() / d;
+    let mut out = Vec::with_capacity(n);
+    let mut inertia = 0f64;
+    let cc: Vec<f32> = (0..k)
+        .map(|j| {
+            centers[j * d..(j + 1) * d]
+                .iter()
+                .map(|v| v * v)
+                .sum::<f32>()
+        })
+        .collect();
+    for i in 0..n {
+        let xi = &x[i * d..(i + 1) * d];
+        let xx: f32 = xi.iter().map(|v| v * v).sum();
+        let mut best = 0usize;
+        let mut best_d2 = f32::INFINITY;
+        for j in 0..k {
+            let cj = &centers[j * d..(j + 1) * d];
+            let mut cross = 0f32;
+            for t in 0..d {
+                cross += xi[t] * cj[t];
+            }
+            let d2 = xx - 2.0 * cross + cc[j];
+            if d2 < best_d2 {
+                best_d2 = d2;
+                best = j;
+            }
+        }
+        out.push(best as i32);
+        inertia += best_d2 as f64;
+    }
+    (out, inertia as f32)
+}
+
+/// M-step: centers from accumulated (sums, counts); clusters with zero
+/// count keep their previous center (standard empty-cluster handling).
+pub fn mstep(centers: &mut [f32], sums: &[f32], counts: &[f32], spec: &KmeansSpec) {
+    let (k, d) = (spec.k, spec.d);
+    assert_eq!(centers.len(), k * d);
+    assert_eq!(sums.len(), k * d);
+    assert_eq!(counts.len(), k);
+    for j in 0..k {
+        if counts[j] > 0.0 {
+            let inv = 1.0 / counts[j];
+            for t in 0..d {
+                centers[j * d + t] = sums[j * d + t] * inv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> KmeansSpec {
+        KmeansSpec { k: 3, d: 2 }
+    }
+
+    #[test]
+    fn stats_counts_sum_to_batch() {
+        let s = spec();
+        let centers = vec![0.0, 0.0, 5.0, 5.0, -5.0, -5.0];
+        let x: Vec<f32> = (0..40).map(|i| (i % 7) as f32 - 3.0).collect();
+        let (_, counts, _) = stats(&centers, &x, &s);
+        assert_eq!(counts.iter().sum::<f32>(), 20.0);
+    }
+
+    #[test]
+    fn obvious_clusters_assign_correctly() {
+        let s = spec();
+        let centers = vec![0.0, 0.0, 10.0, 10.0, -10.0, -10.0];
+        let x = vec![0.1, -0.1, 9.9, 10.2, -9.8, -10.1, 0.2, 0.0];
+        let (a, inertia) = assign(&centers, &x, &s);
+        assert_eq!(a, vec![0, 1, 2, 0]);
+        assert!(inertia < 0.5);
+    }
+
+    #[test]
+    fn mstep_moves_centers_to_means() {
+        let s = spec();
+        let mut centers = vec![0.0, 0.0, 10.0, 10.0, -10.0, -10.0];
+        let sums = vec![2.0, 4.0, 0.0, 0.0, -30.0, -30.0];
+        let counts = vec![2.0, 0.0, 3.0];
+        mstep(&mut centers, &sums, &counts, &s);
+        assert_eq!(&centers[0..2], &[1.0, 2.0]);
+        // empty cluster kept its center
+        assert_eq!(&centers[2..4], &[10.0, 10.0]);
+        assert_eq!(&centers[4..6], &[-10.0, -10.0]);
+    }
+
+    #[test]
+    fn lloyd_converges_on_separated_blobs() {
+        let s = KmeansSpec { k: 3, d: 4 };
+        let mut rng = Rng::new(0);
+        let means = [[-6.0f32; 4], [0.0; 4], [6.0; 4]];
+        let mut x = Vec::new();
+        for i in 0..300 {
+            let m = &means[i % 3];
+            for t in 0..4 {
+                x.push(m[t] + rng.normal() as f32 * 0.5);
+            }
+        }
+        let mut state = s.init_state(&mut rng);
+        let mut inertias = Vec::new();
+        for _ in 0..15 {
+            let (sums, counts, inertia) = stats(&state.params, &x, &s);
+            inertias.push(inertia);
+            mstep(&mut state.params, &sums, &counts, &s);
+        }
+        assert!(
+            inertias.windows(2).all(|w| w[1] <= w[0] + 1e-3),
+            "non-monotone: {inertias:?}"
+        );
+        assert!(inertias.last().unwrap() / inertias[0] < 0.8);
+    }
+
+    #[test]
+    fn argmin_tie_picks_lowest_index() {
+        let s = KmeansSpec { k: 2, d: 1 };
+        let centers = vec![1.0, -1.0];
+        let x = vec![0.0]; // equidistant
+        let (a, _) = assign(&centers, &x, &s);
+        assert_eq!(a, vec![0]);
+    }
+}

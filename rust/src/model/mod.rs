@@ -1,0 +1,123 @@
+//! Model state shared between edges and the Cloud.
+//!
+//! Both use cases carry their parameters as a flat `Vec<f32>` so the
+//! coordinator's aggregation (weighted averaging) is model-agnostic:
+//! * SVM: `[w (d*c, row-major), b (c)]`
+//! * K-means: `[centers (k*d, row-major)]`
+
+pub mod kmeans;
+pub mod svm;
+
+/// Which learning task the system is training (paper §V-A: SVM supervised,
+/// K-means unsupervised).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    Svm,
+    Kmeans,
+}
+
+impl Task {
+    pub fn name(self) -> &'static str {
+        match self {
+            Task::Svm => "svm",
+            Task::Kmeans => "kmeans",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Task> {
+        match s.to_ascii_lowercase().as_str() {
+            "svm" => Some(Task::Svm),
+            "kmeans" | "k-means" => Some(Task::Kmeans),
+            _ => None,
+        }
+    }
+}
+
+/// Flat parameter vector + the task tag. The layout contract with the
+/// engines is documented above.
+#[derive(Clone, Debug)]
+pub struct ModelState {
+    pub task: Task,
+    pub params: Vec<f32>,
+}
+
+impl ModelState {
+    pub fn zeros(task: Task, len: usize) -> Self {
+        ModelState {
+            task,
+            params: vec![0.0; len],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.params.is_empty()
+    }
+
+    /// Euclidean distance to another state (the paper's K-means learning
+    /// utility is the negative of this between consecutive slots).
+    pub fn l2_distance(&self, other: &ModelState) -> f64 {
+        assert_eq!(self.params.len(), other.params.len());
+        self.params
+            .iter()
+            .zip(&other.params)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// In-place: self = self * (1 - w) + other * w.
+    pub fn lerp_from(&mut self, other: &ModelState, w: f64) {
+        assert_eq!(self.params.len(), other.params.len());
+        let w = w as f32;
+        for (a, b) in self.params.iter_mut().zip(&other.params) {
+            *a = *a * (1.0 - w) + *b * w;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l2_distance_basic() {
+        let a = ModelState {
+            task: Task::Svm,
+            params: vec![0.0, 3.0],
+        };
+        let b = ModelState {
+            task: Task::Svm,
+            params: vec![4.0, 0.0],
+        };
+        assert!((a.l2_distance(&b) - 5.0).abs() < 1e-9);
+        assert_eq!(a.l2_distance(&a), 0.0);
+    }
+
+    #[test]
+    fn lerp_midpoint() {
+        let mut a = ModelState {
+            task: Task::Kmeans,
+            params: vec![0.0, 2.0],
+        };
+        let b = ModelState {
+            task: Task::Kmeans,
+            params: vec![2.0, 0.0],
+        };
+        a.lerp_from(&b, 0.5);
+        assert_eq!(a.params, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn task_parse() {
+        assert_eq!(Task::parse("SVM"), Some(Task::Svm));
+        assert_eq!(Task::parse("k-means"), Some(Task::Kmeans));
+        assert_eq!(Task::parse("mlp"), None);
+    }
+}

@@ -1,0 +1,306 @@
+//! Native (pure-Rust) linear multiclass SVM — the oracle twin of the
+//! `svm_step`/`svm_eval` HLO artifacts. Semantics match
+//! python/compile/kernels/ref.py exactly (Weston–Watkins one-vs-rest hinge,
+//! SGD step with L2 regularization); the pjrt_parity integration test
+//! asserts per-step numeric agreement.
+
+use crate::model::{ModelState, Task};
+
+/// SVM hyperparameters + shape. `d` features, `c` classes.
+#[derive(Clone, Copy, Debug)]
+pub struct SvmSpec {
+    pub d: usize,
+    pub c: usize,
+    pub lr: f32,
+    pub reg: f32,
+}
+
+impl SvmSpec {
+    pub fn param_len(&self) -> usize {
+        self.d * self.c + self.c
+    }
+
+    pub fn init_state(&self) -> ModelState {
+        ModelState::zeros(Task::Svm, self.param_len())
+    }
+}
+
+/// Views into the flat parameter vector: (w [d*c], b [c]).
+pub fn split_params(params: &[f32], d: usize, c: usize) -> (&[f32], &[f32]) {
+    assert_eq!(params.len(), d * c + c, "bad svm param length");
+    params.split_at(d * c)
+}
+
+pub fn split_params_mut(params: &mut [f32], d: usize, c: usize) -> (&mut [f32], &mut [f32]) {
+    assert_eq!(params.len(), d * c + c, "bad svm param length");
+    params.split_at_mut(d * c)
+}
+
+/// scores[i*c + k] = x_i . w[:,k] + b[k]   (w row-major [d, c])
+fn scores_into(x: &[f32], w: &[f32], b: &[f32], d: usize, c: usize, out: &mut [f32]) {
+    // Monomorphize the deployed class count so the k-loop compiles to a
+    // fixed-width packed FMA (C=8 is the artifact contract; other widths
+    // take the generic path).
+    match c {
+        8 => scores_into_const::<8>(x, w, b, d, out),
+        4 => scores_into_const::<4>(x, w, b, d, out),
+        _ => scores_into_generic(x, w, b, d, c, out),
+    }
+}
+
+fn scores_into_const<const C: usize>(x: &[f32], w: &[f32], b: &[f32], d: usize, out: &mut [f32]) {
+    let n = x.len() / d;
+    debug_assert_eq!(out.len(), n * C);
+    let b: &[f32; C] = b.try_into().expect("bias width");
+    for i in 0..n {
+        let xi = &x[i * d..(i + 1) * d];
+        let mut acc = *b;
+        for (j, &xij) in xi.iter().enumerate() {
+            let wj: &[f32; C] = w[j * C..(j + 1) * C].try_into().unwrap();
+            for k in 0..C {
+                acc[k] += xij * wj[k];
+            }
+        }
+        out[i * C..(i + 1) * C].copy_from_slice(&acc);
+    }
+}
+
+fn scores_into_generic(x: &[f32], w: &[f32], b: &[f32], d: usize, c: usize, out: &mut [f32]) {
+    let n = x.len() / d;
+    debug_assert_eq!(out.len(), n * c);
+    for i in 0..n {
+        let xi = &x[i * d..(i + 1) * d];
+        let oi = &mut out[i * c..(i + 1) * c];
+        oi.copy_from_slice(b);
+        // Dense data: no zero-skip branch; the k-loop is a c-wide FMA that
+        // the autovectorizer turns into packed ops.
+        for (j, &xij) in xi.iter().enumerate() {
+            let wj = &w[j * c..(j + 1) * c];
+            for k in 0..c {
+                oi[k] += xij * wj[k];
+            }
+        }
+    }
+}
+
+/// dw += x_i ⊗ g_i with a compile-time class width (packed FMA).
+fn rank1_acc<const C: usize>(dw: &mut [f32], xi: &[f32], gi: &[f32]) {
+    let g: &[f32; C] = gi.try_into().expect("gradient width");
+    for (j, &xij) in xi.iter().enumerate() {
+        let dwj: &mut [f32; C] = (&mut dw[j * C..(j + 1) * C]).try_into().unwrap();
+        for k in 0..C {
+            dwj[k] += xij * g[k];
+        }
+    }
+}
+
+/// One SGD step on a batch; returns the regularized mean hinge loss.
+/// Mirrors ref.svm_step_ref / the svm_step HLO artifact.
+pub fn step(params: &mut [f32], x: &[f32], y: &[i32], spec: &SvmSpec) -> f32 {
+    let (d, c) = (spec.d, spec.c);
+    let n = x.len() / d;
+    assert_eq!(y.len(), n);
+    let mut scores = vec![0f32; n * c];
+    {
+        let (w, b) = split_params(params, d, c);
+        scores_into(x, w, b, d, c, &mut scores);
+    }
+
+    // Gradient accumulation: g[i, k] per sample, then dw = x^T g / n + reg*w.
+    let mut dw = vec![0f32; d * c];
+    let mut db = vec![0f32; c];
+    let mut gi = vec![0f32; c]; // reused per sample — no alloc in the loop
+    let mut loss_sum = 0f64;
+    for i in 0..n {
+        let yi = y[i] as usize;
+        debug_assert!(yi < c);
+        let si = &scores[i * c..(i + 1) * c];
+        let sy = si[yi];
+        let mut viol_count = 0f32;
+        gi.iter_mut().for_each(|v| *v = 0.0);
+        for k in 0..c {
+            if k == yi {
+                continue;
+            }
+            let margin = 1.0 + si[k] - sy;
+            if margin > 0.0 {
+                gi[k] = 1.0;
+                viol_count += 1.0;
+                loss_sum += margin as f64;
+            }
+        }
+        gi[yi] = -viol_count;
+        // accumulate dw += x_i^T g_i
+        let xi = &x[i * d..(i + 1) * d];
+        // Samples with no violations contribute nothing: skip the d*c pass.
+        if viol_count == 0.0 {
+            continue;
+        }
+        match c {
+            8 => rank1_acc::<8>(&mut dw, xi, &gi),
+            4 => rank1_acc::<4>(&mut dw, xi, &gi),
+            _ => {
+                for (j, &xij) in xi.iter().enumerate() {
+                    let dwj = &mut dw[j * c..(j + 1) * c];
+                    for k in 0..c {
+                        dwj[k] += xij * gi[k];
+                    }
+                }
+            }
+        }
+        for k in 0..c {
+            db[k] += gi[k];
+        }
+    }
+
+    let (w, b) = split_params_mut(params, d, c);
+    let inv_n = 1.0 / n as f32;
+    let mut w_sq = 0f64;
+    for v in w.iter() {
+        w_sq += (*v as f64) * (*v as f64);
+    }
+    for (wv, g) in w.iter_mut().zip(&dw) {
+        *wv -= spec.lr * (g * inv_n + spec.reg * *wv);
+    }
+    for (bv, g) in b.iter_mut().zip(&db) {
+        *bv -= spec.lr * g * inv_n;
+    }
+    (loss_sum / n as f64 + 0.5 * spec.reg as f64 * w_sq) as f32
+}
+
+/// Eval on a batch: (correct count, mean hinge loss). Mirrors svm_eval.
+pub fn eval(params: &[f32], x: &[f32], y: &[i32], spec: &SvmSpec) -> (f32, f32) {
+    let (d, c) = (spec.d, spec.c);
+    let n = x.len() / d;
+    assert_eq!(y.len(), n);
+    let (w, b) = split_params(params, d, c);
+    let mut scores = vec![0f32; n * c];
+    scores_into(x, w, b, d, c, &mut scores);
+    let mut correct = 0f32;
+    let mut loss_sum = 0f64;
+    for i in 0..n {
+        let si = &scores[i * c..(i + 1) * c];
+        let yi = y[i] as usize;
+        // argmax (ties -> lowest index, matching jnp.argmax)
+        let mut best = 0usize;
+        for k in 1..c {
+            if si[k] > si[best] {
+                best = k;
+            }
+        }
+        if best == yi {
+            correct += 1.0;
+        }
+        let sy = si[yi];
+        for k in 0..c {
+            if k == yi {
+                continue;
+            }
+            let m = 1.0 + si[k] - sy;
+            if m > 0.0 {
+                loss_sum += m as f64;
+            }
+        }
+    }
+    (correct, (loss_sum / n as f64) as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn spec() -> SvmSpec {
+        SvmSpec {
+            d: 10,
+            c: 4,
+            lr: 0.1,
+            reg: 0.0,
+        }
+    }
+
+    fn separable_batch(rng: &mut Rng, n: usize, s: &SvmSpec) -> (Vec<f32>, Vec<i32>) {
+        // label = argmax of first c features
+        let mut x = Vec::with_capacity(n * s.d);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let row: Vec<f32> = (0..s.d).map(|_| rng.normal() as f32).collect();
+            let mut best = 0;
+            for k in 1..s.c {
+                if row[k] > row[best] {
+                    best = k;
+                }
+            }
+            y.push(best as i32);
+            x.extend_from_slice(&row);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn zero_weights_loss_is_cminus1() {
+        let s = spec();
+        let mut params = s.init_state().params;
+        let x = vec![1.0f32; 8 * s.d];
+        let y = vec![0i32; 8];
+        let loss = step(&mut params, &x, &y, &s);
+        // At w=0: every non-target margin is exactly 1 -> loss = c-1.
+        assert!((loss - (s.c as f32 - 1.0)).abs() < 1e-5, "loss {loss}");
+    }
+
+    #[test]
+    fn training_reduces_loss_and_fits() {
+        let s = spec();
+        let mut rng = Rng::new(0);
+        let (x, y) = separable_batch(&mut rng, 256, &s);
+        let mut params = s.init_state().params;
+        let first = step(&mut params, &x, &y, &s);
+        let mut last = first;
+        for _ in 0..60 {
+            last = step(&mut params, &x, &y, &s);
+        }
+        assert!(last < 0.3 * first, "first={first} last={last}");
+        let (correct, _) = eval(&params, &x, &y, &s);
+        assert!(correct / 256.0 > 0.9, "acc={}", correct / 256.0);
+    }
+
+    #[test]
+    fn regularization_shrinks_weights() {
+        let mut s = spec();
+        s.reg = 0.5;
+        let mut rng = Rng::new(1);
+        let (x, y) = separable_batch(&mut rng, 64, &s);
+        let mut params = s.init_state().params;
+        for _ in 0..5 {
+            step(&mut params, &x, &y, &s);
+        }
+        let norm_reg: f64 = params.iter().map(|v| (*v as f64).powi(2)).sum();
+        let mut params2 = s.init_state().params;
+        let s2 = SvmSpec { reg: 0.0, ..s };
+        for _ in 0..5 {
+            step(&mut params2, &x, &y, &s2);
+        }
+        let norm_noreg: f64 = params2.iter().map(|v| (*v as f64).powi(2)).sum();
+        assert!(norm_reg < norm_noreg);
+    }
+
+    #[test]
+    fn eval_perfect_classifier() {
+        let s = spec();
+        // w = identity on the first c features -> picks argmax exactly.
+        let mut params = s.init_state().params;
+        for k in 0..s.c {
+            params[k * s.c + k] = 1.0; // w[k, k] = 1, row-major [d, c]
+        }
+        let mut rng = Rng::new(2);
+        let (x, y) = separable_batch(&mut rng, 128, &s);
+        let (correct, _) = eval(&params, &x, &y, &s);
+        assert_eq!(correct, 128.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad svm param length")]
+    fn bad_param_len_panics() {
+        split_params(&[0.0; 7], 2, 3);
+    }
+}

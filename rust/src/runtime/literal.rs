@@ -1,0 +1,68 @@
+//! Conversions between flat Rust buffers and `xla::Literal`s.
+
+use anyhow::{anyhow, Context, Result};
+
+/// Build an f32 literal of the given shape from a flat row-major slice.
+pub fn f32_literal(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let expect: usize = dims.iter().product();
+    if data.len() != expect {
+        return Err(anyhow!(
+            "f32 literal: have {} elements, shape {:?} wants {}",
+            data.len(),
+            dims,
+            expect
+        ));
+    }
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(lit);
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims_i64)
+        .map_err(|e| anyhow!("reshape to {:?}: {e:?}", dims))
+}
+
+/// Build an i32 literal of the given shape.
+pub fn i32_literal(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let expect: usize = dims.iter().product();
+    if data.len() != expect {
+        return Err(anyhow!(
+            "i32 literal: have {} elements, shape {:?} wants {}",
+            data.len(),
+            dims,
+            expect
+        ));
+    }
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(lit);
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims_i64)
+        .map_err(|e| anyhow!("reshape to {:?}: {e:?}", dims))
+}
+
+/// Scalar f32 literal (for lr / reg parameters).
+pub fn scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract an f32 vector from a literal (any shape, row-major flatten).
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow!("literal to f32 vec: {e:?}"))
+}
+
+/// Extract an i32 vector from a literal.
+pub fn to_i32_vec(lit: &xla::Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>()
+        .map_err(|e| anyhow!("literal to i32 vec: {e:?}"))
+}
+
+/// Extract a single f32 (scalar or 1-element literal).
+pub fn to_f32_scalar(lit: &xla::Literal) -> Result<f32> {
+    let v = to_f32_vec(lit)?;
+    v.first()
+        .copied()
+        .context("expected at least one element in scalar literal")
+}

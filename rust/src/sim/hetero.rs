@@ -1,0 +1,96 @@
+//! Heterogeneity profiles (paper §V-B.1): "the heterogeneity of edge
+//! servers is measured as the ratio of processing speed of the fastest edge
+//! server to that of the slowest one". H = 1 is full homogeneity.
+//!
+//! We express heterogeneity as per-edge *slowdown* multipliers on the
+//! compute cost: the fastest edge has slowdown 1.0, the slowest H, and the
+//! rest are spaced in between.
+
+use crate::util::rng::Rng;
+
+/// How slowdowns are spread across [1, H].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum HeteroProfile {
+    /// Evenly spaced from 1 to H (the deterministic default — keeps the
+    /// configured ratio exact).
+    Linear,
+    /// Uniform random in [1, H] with the extremes pinned so the realized
+    /// ratio is still exactly H.
+    Random,
+}
+
+impl HeteroProfile {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "linear" => Some(HeteroProfile::Linear),
+            "random" => Some(HeteroProfile::Random),
+            _ => None,
+        }
+    }
+
+    /// Produce the slowdown vector for `n` edges at heterogeneity ratio `h`.
+    pub fn slowdowns(&self, n: usize, h: f64, rng: &mut Rng) -> Vec<f64> {
+        assert!(n >= 1);
+        assert!(h >= 1.0, "heterogeneity ratio must be >= 1");
+        if n == 1 {
+            return vec![1.0];
+        }
+        match self {
+            HeteroProfile::Linear => (0..n)
+                .map(|i| 1.0 + (h - 1.0) * i as f64 / (n - 1) as f64)
+                .collect(),
+            HeteroProfile::Random => {
+                let mut v: Vec<f64> = (0..n).map(|_| rng.range_f64(1.0, h.max(1.0))).collect();
+                v[0] = 1.0;
+                v[n - 1] = h;
+                rng.shuffle(&mut v);
+                v
+            }
+        }
+    }
+}
+
+/// Realized heterogeneity ratio of a slowdown vector.
+pub fn realized_ratio(slowdowns: &[f64]) -> f64 {
+    let max = slowdowns.iter().cloned().fold(f64::MIN, f64::max);
+    let min = slowdowns.iter().cloned().fold(f64::MAX, f64::min);
+    max / min
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_hits_exact_ratio() {
+        let mut rng = Rng::new(0);
+        for &(n, h) in &[(2usize, 4.0f64), (3, 6.0), (10, 15.0), (100, 10.0)] {
+            let s = HeteroProfile::Linear.slowdowns(n, h, &mut rng);
+            assert_eq!(s.len(), n);
+            assert!((realized_ratio(&s) - h).abs() < 1e-9);
+            assert!(s.windows(2).all(|w| w[1] >= w[0]));
+        }
+    }
+
+    #[test]
+    fn homogeneous_case() {
+        let mut rng = Rng::new(1);
+        let s = HeteroProfile::Linear.slowdowns(5, 1.0, &mut rng);
+        assert!(s.iter().all(|&v| (v - 1.0).abs() < 1e-12));
+        assert_eq!(realized_ratio(&s), 1.0);
+    }
+
+    #[test]
+    fn random_profile_pins_extremes() {
+        let mut rng = Rng::new(2);
+        let s = HeteroProfile::Random.slowdowns(20, 8.0, &mut rng);
+        assert!((realized_ratio(&s) - 8.0).abs() < 1e-9);
+        assert!(s.iter().all(|&v| (1.0..=8.0).contains(&v)));
+    }
+
+    #[test]
+    fn single_edge_is_unit() {
+        let mut rng = Rng::new(3);
+        assert_eq!(HeteroProfile::Random.slowdowns(1, 10.0, &mut rng), vec![1.0]);
+    }
+}

@@ -1,0 +1,7 @@
+//! Discrete-event simulation substrate: virtual clock + event queue (async
+//! coordination), resource cost models (fixed / variable / measured — the
+//! paper's simulator and testbed modes), and heterogeneity profiles.
+
+pub mod clock;
+pub mod cost;
+pub mod hetero;

@@ -1,0 +1,157 @@
+//! Mini property-testing harness (no proptest offline).
+//!
+//! `property(seed, cases, gen, prop)` runs `prop` on `cases` random inputs
+//! drawn by `gen`. On failure it retries the failing case with progressively
+//! "smaller" regenerations (shrink-lite: re-draws with the generator's size
+//! hint halved) and panics with the seed + minimal found counterexample so
+//! the case is replayable.
+//!
+//! Coordinator invariants (budget accounting, arm feasibility, aggregation
+//! weights, event ordering) are checked with this in rust/tests/proptests.rs.
+
+use crate::util::rng::Rng;
+
+/// Generation context: RNG + size hint (shrunk on failure).
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    /// Size hint in (0, 1]; generators should scale ranges by this.
+    pub size: f64,
+}
+
+impl<'a> Gen<'a> {
+    /// Integer in [lo, hi], range shrunk toward lo by the size hint.
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        let span = ((hi - lo) as f64 * self.size).round() as usize;
+        self.rng.range_usize(lo, lo + span)
+    }
+
+    /// Float in [lo, hi], range shrunk toward lo by the size hint.
+    pub fn float(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, lo + (hi - lo) * self.size)
+    }
+
+    /// Uniform choice from a slice.
+    pub fn choice<'t, T>(&mut self, xs: &'t [T]) -> &'t T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vector of `n` values from a closure.
+    pub fn vec<T>(&mut self, n: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..n).map(|_| f(self)).collect()
+    }
+}
+
+/// Outcome of a single property case.
+pub type PropResult = Result<(), String>;
+
+/// Run a property over `cases` random inputs. Panics (test failure) with a
+/// replayable report on the first counterexample that survives shrinking.
+pub fn property<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut generate: impl FnMut(&mut Gen) -> T,
+    mut prop: impl FnMut(&T) -> PropResult,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = rng.next_u64();
+        let mut case_rng = Rng::new(case_seed);
+        let mut g = Gen {
+            rng: &mut case_rng,
+            size: 1.0,
+        };
+        let input = generate(&mut g);
+        if let Err(msg) = prop(&input) {
+            // Shrink-lite: re-draw from the same stream seed with smaller
+            // size hints; keep the smallest failing input found.
+            let mut best: (T, String) = (input, msg);
+            for shrink_step in 1..=8 {
+                let size = 1.0 / f64::powi(2.0, shrink_step);
+                let mut srng = Rng::new(case_seed);
+                let mut sg = Gen {
+                    rng: &mut srng,
+                    size,
+                };
+                let candidate = generate(&mut sg);
+                if let Err(m) = prop(&candidate) {
+                    best = (candidate, m);
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, case={case}, case_seed={case_seed}):\n  \
+                 counterexample: {:?}\n  reason: {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Assert-like helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        property(
+            1,
+            50,
+            |g| g.int(0, 100),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_counterexample() {
+        property(
+            2,
+            100,
+            |g| g.int(0, 1000),
+            |&x| {
+                if x < 900 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} too big"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        property(
+            3,
+            200,
+            |g| (g.int(5, 10), g.float(-1.0, 1.0)),
+            |&(i, f)| {
+                if !(5..=10).contains(&i) {
+                    return Err(format!("int {i} out of range"));
+                }
+                if !(-1.0..=1.0).contains(&f) {
+                    return Err(format!("float {f} out of range"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

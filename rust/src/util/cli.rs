@@ -1,0 +1,274 @@
+//! Declarative command-line flag parsing (no clap offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! args, subcommands, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One flag specification.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub takes_value: bool,
+}
+
+/// A declarative flag set for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub name: &'static str,
+    pub about: &'static str,
+    flags: Vec<FlagSpec>,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Cli {
+            name,
+            about,
+            flags: Vec::new(),
+        }
+    }
+
+    /// Value-taking flag with a default.
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: Some(default),
+            takes_value: true,
+        });
+        self
+    }
+
+    /// Value-taking flag with no default (optional).
+    pub fn opt_no_default(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: None,
+            takes_value: true,
+        });
+        self
+    }
+
+    /// Boolean switch.
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: None,
+            takes_value: false,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.name, self.about);
+        let _ = writeln!(s, "\nOptions:");
+        for f in &self.flags {
+            let arg = if f.takes_value {
+                format!("--{} <v>", f.name)
+            } else {
+                format!("--{}", f.name)
+            };
+            let dflt = f
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "  {arg:<24} {}{dflt}", f.help);
+        }
+        s
+    }
+
+    /// Parse a raw argv slice. Returns Err(message) on unknown flags or
+    /// missing values; Ok(None) if --help was requested (usage printed).
+    pub fn parse(&self, argv: &[String]) -> Result<Option<Args>, String> {
+        let mut args = Args::default();
+        for f in &self.flags {
+            if let Some(d) = f.default {
+                args.values.insert(f.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                print!("{}", self.usage());
+                return Ok(None);
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name} (see --help)"))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} requires a value"))?
+                        }
+                    };
+                    args.values.insert(name.to_string(), val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} takes no value"));
+                    }
+                    args.values.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Some(args))
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.get(name).unwrap_or_default().to_string()
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.get(name) == Some("true")
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .parse()
+            .map_err(|_| format!("--{name}: expected an unsigned integer"))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .parse()
+            .map_err(|_| format!("--{name}: expected a u64"))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .parse()
+            .map_err(|_| format!("--{name}: expected a number"))
+    }
+
+    /// Comma-separated list of numbers, e.g. `--hetero 1,5,10,15`.
+    pub fn f64_list(&self, name: &str) -> Result<Vec<f64>, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<f64>()
+                    .map_err(|_| format!("--{name}: bad number '{t}'"))
+            })
+            .collect()
+    }
+
+    pub fn usize_list(&self, name: &str) -> Result<Vec<usize>, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<usize>()
+                    .map_err(|_| format!("--{name}: bad integer '{t}'"))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("test", "test command")
+            .opt("edges", "3", "number of edges")
+            .opt("hetero", "1.0", "heterogeneity")
+            .opt_no_default("out", "output path")
+            .switch("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cli().parse(&argv(&[])).unwrap().unwrap();
+        assert_eq!(a.usize("edges").unwrap(), 3);
+        assert_eq!(a.f64("hetero").unwrap(), 1.0);
+        assert_eq!(a.get("out"), None);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = cli()
+            .parse(&argv(&["--edges", "50", "--hetero=6.5", "--verbose"]))
+            .unwrap()
+            .unwrap();
+        assert_eq!(a.usize("edges").unwrap(), 50);
+        assert_eq!(a.f64("hetero").unwrap(), 6.5);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cli()
+            .parse(&argv(&["train", "--edges", "5", "svm"]))
+            .unwrap()
+            .unwrap();
+        assert_eq!(a.positional, vec!["train", "svm"]);
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(cli().parse(&argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(cli().parse(&argv(&["--edges"])).is_err());
+    }
+
+    #[test]
+    fn lists_parse() {
+        let c = Cli::new("t", "t").opt("ns", "3,10,25", "edge counts");
+        let a = c.parse(&argv(&[])).unwrap().unwrap();
+        assert_eq!(a.usize_list("ns").unwrap(), vec![3, 10, 25]);
+        let a = c.parse(&argv(&["--ns", "1, 2 ,5"])).unwrap().unwrap();
+        assert_eq!(a.usize_list("ns").unwrap(), vec![1, 2, 5]);
+    }
+
+    #[test]
+    fn switch_rejects_value() {
+        assert!(cli().parse(&argv(&["--verbose=yes"])).is_err());
+    }
+}

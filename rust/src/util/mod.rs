@@ -1,0 +1,9 @@
+//! Self-contained substrates (the crate builds offline with no deps beyond
+//! `xla`/`anyhow`): JSON, PRNG, CLI parsing, statistics, logging, tables.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod table;

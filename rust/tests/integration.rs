@@ -1,0 +1,189 @@
+//! Integration tests: whole runs through the public API on the native
+//! engine, checking the paper's qualitative claims hold end to end.
+
+use ol4el::config::{Algo, RunConfig};
+use ol4el::coordinator;
+use ol4el::engine::native::NativeEngine;
+use ol4el::model::Task;
+
+fn cfg(task: Task, algo: Algo) -> RunConfig {
+    RunConfig {
+        task,
+        algo,
+        n_edges: 3,
+        hetero: 1.0,
+        budget: 2000.0,
+        data_n: 5000,
+        seed: 3,
+        ..Default::default()
+    }
+    .with_paper_utility()
+}
+
+#[test]
+fn all_algorithms_learn_svm() {
+    let engine = NativeEngine::default();
+    for algo in [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::AcSync, Algo::FixedI] {
+        let r = coordinator::run(&cfg(Task::Svm, algo), &engine).unwrap();
+        let first = r.trace.first().unwrap().metric;
+        assert!(
+            r.final_metric > first + 0.15,
+            "{} failed to learn: {first:.3} -> {:.3}",
+            algo.name(),
+            r.final_metric
+        );
+        assert!(r.total_updates > 0, "{}", algo.name());
+    }
+}
+
+#[test]
+fn all_algorithms_learn_kmeans() {
+    // K=3 cluster recovery has real seed variance (init + matching), so
+    // assert on the two-seed mean per algorithm.
+    let engine = NativeEngine::default();
+    for algo in [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::AcSync, Algo::FixedI] {
+        let mut mean = 0.0;
+        for seed in [3, 4] {
+            let mut c = cfg(Task::Kmeans, algo);
+            c.budget = 5000.0;
+            c.seed = seed;
+            mean += coordinator::run(&c, &engine).unwrap().final_metric / 2.0;
+        }
+        assert!(
+            mean > 0.6,
+            "{} weak clustering: mean F1 {:.3}",
+            algo.name(),
+            mean
+        );
+    }
+}
+
+#[test]
+fn runs_are_reproducible_across_algorithms() {
+    let engine = NativeEngine::default();
+    for algo in [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::AcSync, Algo::FixedI] {
+        let c = cfg(Task::Svm, algo);
+        let a = coordinator::run(&c, &engine).unwrap();
+        let b = coordinator::run(&c, &engine).unwrap();
+        assert_eq!(a.final_metric, b.final_metric, "{}", algo.name());
+        assert_eq!(a.total_updates, b.total_updates, "{}", algo.name());
+        assert_eq!(a.mean_spent, b.mean_spent, "{}", algo.name());
+    }
+}
+
+#[test]
+fn different_seeds_give_different_runs() {
+    let engine = NativeEngine::default();
+    let mut c = cfg(Task::Svm, Algo::Ol4elAsync);
+    let a = coordinator::run(&c, &engine).unwrap();
+    c.seed = 4;
+    let b = coordinator::run(&c, &engine).unwrap();
+    assert_ne!(
+        (a.final_metric, a.total_updates),
+        (b.final_metric, b.total_updates)
+    );
+}
+
+#[test]
+fn paper_claim_async_beats_sync_at_high_heterogeneity() {
+    // Fig. 3's crossover: at high H the async pattern dominates.
+    let engine = NativeEngine::default();
+    let mut acc_async = 0.0;
+    let mut acc_sync = 0.0;
+    for seed in [1, 2, 3] {
+        let mut ca = cfg(Task::Svm, Algo::Ol4elAsync);
+        ca.hetero = 10.0;
+        ca.budget = 3000.0;
+        ca.seed = seed;
+        let mut cs = ca.clone();
+        cs.algo = Algo::Ol4elSync;
+        acc_async += coordinator::run(&ca, &engine).unwrap().final_metric;
+        acc_sync += coordinator::run(&cs, &engine).unwrap().final_metric;
+    }
+    assert!(
+        acc_async > acc_sync,
+        "async {acc_async:.3} should beat sync {acc_sync:.3} at H=10"
+    );
+}
+
+#[test]
+fn paper_claim_accuracy_rises_with_budget() {
+    // Fig. 4's monotone trade-off: more resource -> better model.
+    let engine = NativeEngine::default();
+    let mut small = cfg(Task::Svm, Algo::Ol4elAsync);
+    small.budget = 500.0;
+    let mut large = small.clone();
+    large.budget = 4000.0;
+    let r_small = coordinator::run(&small, &engine).unwrap();
+    let r_large = coordinator::run(&large, &engine).unwrap();
+    assert!(
+        r_large.final_metric > r_small.final_metric,
+        "budget 4000 ({:.3}) should beat 500 ({:.3})",
+        r_large.final_metric,
+        r_small.final_metric
+    );
+}
+
+#[test]
+fn trace_is_monotone_in_time_and_consumption() {
+    let engine = NativeEngine::default();
+    for algo in [Algo::Ol4elSync, Algo::Ol4elAsync] {
+        let r = coordinator::run(&cfg(Task::Svm, algo), &engine).unwrap();
+        for w in r.trace.windows(2) {
+            assert!(w[1].wall_ms >= w[0].wall_ms, "{}", algo.name());
+            assert!(w[1].mean_spent >= w[0].mean_spent, "{}", algo.name());
+            assert!(w[1].updates >= w[0].updates, "{}", algo.name());
+        }
+    }
+}
+
+#[test]
+fn variable_cost_mode_runs_with_ucb_bv() {
+    let engine = NativeEngine::default();
+    let mut c = cfg(Task::Svm, Algo::Ol4elAsync);
+    c.cost.mode = ol4el::sim::cost::CostMode::Variable { cv: 0.3 };
+    let r = coordinator::run(&c, &engine).unwrap();
+    assert!(r.total_updates > 0);
+    assert!(r.final_metric > 0.3);
+}
+
+#[test]
+fn label_skew_partition_still_learns() {
+    let engine = NativeEngine::default();
+    let mut c = cfg(Task::Svm, Algo::Ol4elAsync);
+    c.partition = ol4el::config::PartitionKind::LabelSkew { alpha: 0.3 };
+    let r = coordinator::run(&c, &engine).unwrap();
+    assert!(r.final_metric > 0.4, "skewed F1 {}", r.final_metric);
+}
+
+#[test]
+fn single_edge_fleet_works() {
+    let engine = NativeEngine::default();
+    let mut c = cfg(Task::Kmeans, Algo::Ol4elAsync);
+    c.n_edges = 1;
+    let r = coordinator::run(&c, &engine).unwrap();
+    assert!(r.total_updates > 0);
+    assert_eq!(r.n_edges, 1);
+}
+
+#[test]
+fn tiny_budget_retires_without_updates() {
+    let engine = NativeEngine::default();
+    let mut c = cfg(Task::Svm, Algo::Ol4elAsync);
+    c.budget = 1.0; // cheaper than any arm
+    let r = coordinator::run(&c, &engine).unwrap();
+    assert_eq!(r.total_updates, 0);
+    assert_eq!(r.retired_edges, 3);
+    assert_eq!(r.mean_spent, 0.0);
+}
+
+#[test]
+fn config_json_roundtrip_through_run() {
+    let engine = NativeEngine::default();
+    let c = cfg(Task::Svm, Algo::Ol4elSync);
+    let j = c.to_json();
+    let c2 = RunConfig::from_json(&j).unwrap();
+    let a = coordinator::run(&c, &engine).unwrap();
+    let b = coordinator::run(&c2, &engine).unwrap();
+    assert_eq!(a.final_metric, b.final_metric);
+}

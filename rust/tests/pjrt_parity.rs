@@ -1,0 +1,159 @@
+//! The three-layer correctness closure: the PJRT engine (Pallas L1 + JAX
+//! L2, AOT-lowered to HLO) must agree numerically with the native Rust
+//! oracle, step by step and end to end.
+//!
+//! These tests are skipped (with a loud message) when artifacts/ has not
+//! been built — run `make artifacts` first. CI runs them always.
+
+use ol4el::engine::native::NativeEngine;
+use ol4el::engine::pjrt::PjrtEngine;
+use ol4el::engine::ComputeEngine;
+use ol4el::util::rng::Rng;
+
+fn pjrt() -> Option<PjrtEngine> {
+    match PjrtEngine::open("artifacts") {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("SKIP pjrt parity: {err}");
+            None
+        }
+    }
+}
+
+fn close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+#[test]
+fn svm_step_parity() {
+    let Some(pj) = pjrt() else { return };
+    let nat = NativeEngine::default();
+    let s = *nat.shapes();
+    let mut rng = Rng::new(0);
+    let x: Vec<f32> = (0..s.svm_batch * s.svm_d)
+        .map(|_| rng.normal() as f32)
+        .collect();
+    let y: Vec<i32> = (0..s.svm_batch)
+        .map(|_| rng.below(s.svm_c) as i32)
+        .collect();
+    let mut p_nat: Vec<f32> = (0..s.svm_param_len())
+        .map(|_| rng.normal() as f32 * 0.1)
+        .collect();
+    let mut p_pj = p_nat.clone();
+
+    for step in 0..5 {
+        let out_nat = nat.svm_step(&mut p_nat, &x, &y, 0.05, 1e-4).unwrap();
+        let out_pj = pj.svm_step(&mut p_pj, &x, &y, 0.05, 1e-4).unwrap();
+        assert!(
+            close(out_nat.loss, out_pj.loss, 1e-4),
+            "step {step}: loss {} vs {}",
+            out_nat.loss,
+            out_pj.loss
+        );
+        for (i, (a, b)) in p_nat.iter().zip(&p_pj).enumerate() {
+            assert!(
+                close(*a, *b, 1e-4),
+                "step {step}, param {i}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn svm_eval_parity() {
+    let Some(pj) = pjrt() else { return };
+    let nat = NativeEngine::default();
+    let s = *nat.shapes();
+    let mut rng = Rng::new(1);
+    let x: Vec<f32> = (0..s.svm_eval_batch * s.svm_d)
+        .map(|_| rng.normal() as f32)
+        .collect();
+    let y: Vec<i32> = (0..s.svm_eval_batch)
+        .map(|_| rng.below(s.svm_c) as i32)
+        .collect();
+    let p: Vec<f32> = (0..s.svm_param_len())
+        .map(|_| rng.normal() as f32 * 0.2)
+        .collect();
+    let (c_nat, l_nat) = nat.svm_eval(&p, &x, &y).unwrap();
+    let (c_pj, l_pj) = pj.svm_eval(&p, &x, &y).unwrap();
+    assert_eq!(c_nat, c_pj, "correct-count mismatch");
+    assert!(close(l_nat, l_pj, 1e-4), "loss {l_nat} vs {l_pj}");
+}
+
+#[test]
+fn kmeans_step_parity() {
+    let Some(pj) = pjrt() else { return };
+    let nat = NativeEngine::default();
+    let s = *nat.shapes();
+    let mut rng = Rng::new(2);
+    let x: Vec<f32> = (0..s.km_batch * s.km_d)
+        .map(|_| rng.normal() as f32)
+        .collect();
+    let centers: Vec<f32> = (0..s.km_param_len())
+        .map(|_| rng.normal() as f32)
+        .collect();
+    let out_nat = nat.kmeans_step(&centers, &x).unwrap();
+    let out_pj = pj.kmeans_step(&centers, &x).unwrap();
+    assert_eq!(out_nat.counts, out_pj.counts, "count vector mismatch");
+    for (i, (a, b)) in out_nat.sums.iter().zip(&out_pj.sums).enumerate() {
+        assert!(close(*a, *b, 1e-4), "sums[{i}]: {a} vs {b}");
+    }
+    assert!(
+        close(out_nat.inertia, out_pj.inertia, 1e-3),
+        "inertia {} vs {}",
+        out_nat.inertia,
+        out_pj.inertia
+    );
+}
+
+#[test]
+fn kmeans_eval_parity() {
+    let Some(pj) = pjrt() else { return };
+    let nat = NativeEngine::default();
+    let s = *nat.shapes();
+    let mut rng = Rng::new(3);
+    let x: Vec<f32> = (0..s.km_eval_batch * s.km_d)
+        .map(|_| rng.normal() as f32)
+        .collect();
+    let centers: Vec<f32> = (0..s.km_param_len())
+        .map(|_| rng.normal() as f32)
+        .collect();
+    let (a_nat, i_nat) = nat.kmeans_eval(&centers, &x).unwrap();
+    let (a_pj, i_pj) = pj.kmeans_eval(&centers, &x).unwrap();
+    assert_eq!(a_nat, a_pj, "assignment mismatch");
+    assert!(close(i_nat, i_pj, 1e-3), "inertia {i_nat} vs {i_pj}");
+}
+
+#[test]
+fn end_to_end_run_parity() {
+    // A short full training run must produce near-identical results on
+    // both engines (same seed, same data, same coordination decisions —
+    // only the compute backend differs).
+    let Some(pj) = pjrt() else { return };
+    let nat = NativeEngine::default();
+    let cfg = ol4el::config::RunConfig {
+        task: ol4el::model::Task::Svm,
+        algo: ol4el::config::Algo::Ol4elSync,
+        n_edges: 2,
+        budget: 500.0,
+        data_n: 2000,
+        seed: 9,
+        ..Default::default()
+    };
+    let r_nat = ol4el::coordinator::run(&cfg, &nat).unwrap();
+    let r_pj = ol4el::coordinator::run(&cfg, &pj).unwrap();
+    assert_eq!(r_nat.total_updates, r_pj.total_updates);
+    assert!(
+        (r_nat.final_metric - r_pj.final_metric).abs() < 0.02,
+        "metric {} vs {}",
+        r_nat.final_metric,
+        r_pj.final_metric
+    );
+}
+
+#[test]
+fn manifest_shapes_match_engine_contract() {
+    let Some(pj) = pjrt() else { return };
+    assert_eq!(*pj.shapes(), ol4el::engine::Shapes::default());
+    assert_eq!(pj.name(), "pjrt");
+}

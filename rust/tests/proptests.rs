@@ -1,0 +1,318 @@
+//! Property-based tests (in-repo testkit; proptest is unavailable offline)
+//! over the coordinator's invariants: budget accounting, arm feasibility,
+//! aggregation weights, event ordering, metric ranges.
+
+use ol4el::bandit::{kube::Kube, ucb_bv::UcbBv, BudgetedBandit};
+use ol4el::config::{Algo, PartitionKind, RunConfig};
+use ol4el::coordinator::{self, aggregate};
+use ol4el::engine::native::NativeEngine;
+use ol4el::metrics;
+use ol4el::model::{ModelState, Task};
+use ol4el::prop_assert;
+use ol4el::sim::clock::EventQueue;
+use ol4el::sim::hetero::{realized_ratio, HeteroProfile};
+use ol4el::testkit::property;
+use ol4el::util::rng::Rng;
+
+#[test]
+fn prop_bandit_never_selects_unaffordable_arm() {
+    property(
+        0xB1,
+        60,
+        |g| {
+            let n_arms = g.int(1, 8);
+            let costs: Vec<f64> = (0..n_arms).map(|_| g.float(1.0, 100.0)).collect();
+            let budget = g.float(0.0, 300.0);
+            let pulls = g.int(1, 30);
+            (costs, budget, pulls)
+        },
+        |(costs, budget, pulls)| {
+            let mut rng = Rng::new(7);
+            let mut b = Kube::new(costs.clone(), 0.2);
+            for _ in 0..*pulls {
+                match b.select(*budget, &mut rng) {
+                    Some(k) => {
+                        prop_assert!(
+                            costs[k] <= *budget,
+                            "selected arm {k} costing {} with budget {budget}",
+                            costs[k]
+                        );
+                        b.update(k, 0.5, costs[k]);
+                    }
+                    None => {
+                        let cheapest = costs.iter().cloned().fold(f64::MAX, f64::min);
+                        prop_assert!(
+                            cheapest > *budget,
+                            "returned None but arm costing {cheapest} was affordable"
+                        );
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ucb_bv_expected_costs_track_observations() {
+    property(
+        0xB2,
+        40,
+        |g| {
+            let n_arms = g.int(1, 6);
+            let true_costs: Vec<f64> = (0..n_arms).map(|_| g.float(5.0, 50.0)).collect();
+            (true_costs, g.int(20, 200))
+        },
+        |(true_costs, rounds)| {
+            let mut rng = Rng::new(11);
+            let mut b = UcbBv::new(vec![10.0; true_costs.len()]);
+            for _ in 0..*rounds {
+                if let Some(k) = b.select(1e9, &mut rng) {
+                    let c = true_costs[k] * (0.8 + 0.4 * rng.f64());
+                    b.update(k, 0.5, c);
+                }
+            }
+            for k in 0..true_costs.len() {
+                if b.stats(k).pulls >= 10 {
+                    let est = b.expected_cost(k);
+                    prop_assert!(
+                        (est - true_costs[k]).abs() / true_costs[k] < 0.35,
+                        "arm {k}: est {est:.1} vs true {:.1}",
+                        true_costs[k]
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_weighted_average_within_convex_hull() {
+    property(
+        0xA1,
+        80,
+        |g| {
+            let n = g.int(1, 10);
+            let len = g.int(1, 32);
+            let models: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..len).map(|_| g.float(-10.0, 10.0)).collect())
+                .collect();
+            let weights: Vec<f64> = (0..n).map(|_| g.float(0.01, 5.0)).collect();
+            (models, weights)
+        },
+        |(models, weights)| {
+            let states: Vec<ModelState> = models
+                .iter()
+                .map(|p| ModelState {
+                    task: Task::Svm,
+                    params: p.iter().map(|&v| v as f32).collect(),
+                })
+                .collect();
+            let pairs: Vec<(&ModelState, f64)> =
+                states.iter().zip(weights.iter().copied()).collect();
+            let avg = aggregate::weighted_average(&pairs);
+            for j in 0..models[0].len() {
+                let lo = models.iter().map(|m| m[j]).fold(f64::MAX, f64::min);
+                let hi = models.iter().map(|m| m[j]).fold(f64::MIN, f64::max);
+                let v = avg.params[j] as f64;
+                prop_assert!(
+                    v >= lo - 1e-3 && v <= hi + 1e-3,
+                    "coord {j}: {v} outside [{lo}, {hi}]"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_event_queue_pops_sorted() {
+    property(
+        0xE1,
+        60,
+        |g| {
+            let n = g.int(1, 200);
+            g.vec(n, |g| g.float(0.0, 1000.0))
+        },
+        |times| {
+            let mut q = EventQueue::new();
+            for (i, &t) in times.iter().enumerate() {
+                q.push(t, i);
+            }
+            let mut last = -1.0f64;
+            let mut count = 0;
+            while let Some(ev) = q.pop() {
+                prop_assert!(ev.time >= last, "out of order: {} after {last}", ev.time);
+                last = ev.time;
+                count += 1;
+            }
+            prop_assert!(count == times.len(), "lost events: {count}/{}", times.len());
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_hetero_profiles_realize_requested_ratio() {
+    property(
+        0x41,
+        60,
+        |g| {
+            let n = g.int(2, 50);
+            let h = g.float(1.0, 20.0);
+            let profile = *g.choice(&[HeteroProfile::Linear, HeteroProfile::Random]);
+            (n, h, profile)
+        },
+        |&(n, h, profile)| {
+            let mut rng = Rng::new(5);
+            let s = profile.slowdowns(n, h, &mut rng);
+            prop_assert!(s.len() == n, "wrong count");
+            prop_assert!(
+                (realized_ratio(&s) - h).abs() < 1e-6,
+                "ratio {} != {h}",
+                realized_ratio(&s)
+            );
+            prop_assert!(
+                s.iter().all(|&v| v >= 1.0 - 1e-12 && v <= h + 1e-9),
+                "slowdown out of [1, H]"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_clustering_f1_permutation_invariant_and_bounded() {
+    property(
+        0xF1,
+        60,
+        |g| {
+            let n = g.int(6, 200);
+            let k = g.int(2, 4);
+            let truth: Vec<i32> = (0..n).map(|_| g.int(0, k - 1) as i32).collect();
+            let assign: Vec<i32> = (0..n).map(|_| g.int(0, k - 1) as i32).collect();
+            let shift = g.int(0, k - 1);
+            (truth, assign, k, shift)
+        },
+        |(truth, assign, k, shift)| {
+            let f1 = metrics::clustering_f1(assign, truth, *k);
+            prop_assert!((0.0..=1.0).contains(&f1), "f1 {f1} out of range");
+            // Relabeling clusters must not change the matched score.
+            let relabeled: Vec<i32> = assign
+                .iter()
+                .map(|&a| ((a as usize + shift) % k) as i32)
+                .collect();
+            let f1b = metrics::clustering_f1(&relabeled, truth, *k);
+            prop_assert!((f1 - f1b).abs() < 1e-9, "relabel changed f1: {f1} vs {f1b}");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_runs_respect_budget_ledger() {
+    // For random small configs, no edge's spend may exceed budget by more
+    // than one maximal round (the in-flight round that exhausts it).
+    property(
+        0xC1,
+        8,
+        |g| {
+            let algo = *g.choice(&[Algo::Ol4elSync, Algo::Ol4elAsync, Algo::AcSync, Algo::FixedI]);
+            let task = *g.choice(&[Task::Svm, Task::Kmeans]);
+            let hetero = g.float(1.0, 8.0);
+            let budget = g.float(300.0, 1200.0);
+            let n_edges = g.int(2, 4);
+            (algo, task, hetero, budget, n_edges)
+        },
+        |&(algo, task, hetero, budget, n_edges)| {
+            let engine = NativeEngine::default();
+            let cfg = RunConfig {
+                task,
+                algo,
+                n_edges,
+                hetero,
+                budget,
+                data_n: 3000,
+                seed: 17,
+                ..Default::default()
+            };
+            let r = coordinator::run(&cfg, &engine).map_err(|e| e.to_string())?;
+            let max_round =
+                cfg.cost.nominal_arm_cost(cfg.tau_max, hetero) * (1.0 + cfg.ac_overhead) * 2.0;
+            prop_assert!(
+                r.mean_spent <= budget + max_round,
+                "{}: mean spent {} vs budget {budget}",
+                algo.name(),
+                r.mean_spent
+            );
+            prop_assert!(
+                (0.0..=1.0).contains(&r.final_metric),
+                "metric {} out of range",
+                r.final_metric
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_partitions_are_exact_covers() {
+    use ol4el::data::synth::TrafficLike;
+    use std::sync::Arc;
+    property(
+        0xD1,
+        30,
+        |g| {
+            let n_rows = g.int(50, 2000);
+            let n_edges = g.int(1, 20.min(n_rows / 3));
+            let alpha = g.float(0.05, 5.0);
+            let skew = g.bool();
+            (n_rows, n_edges.max(1), alpha, skew)
+        },
+        |&(n_rows, n_edges, alpha, skew)| {
+            let mut rng = Rng::new(23);
+            let ds = Arc::new(
+                TrafficLike {
+                    n: n_rows,
+                    ..Default::default()
+                }
+                .generate(&mut rng),
+            );
+            let shards = if skew {
+                ol4el::data::partition::label_skew(&ds, n_edges, alpha, &mut rng)
+            } else {
+                ol4el::data::partition::iid(&ds, n_edges, &mut rng)
+            };
+            let mut seen: Vec<usize> =
+                shards.iter().flat_map(|s| s.indices.clone()).collect();
+            seen.sort_unstable();
+            prop_assert!(seen.len() == n_rows, "covered {} of {n_rows}", seen.len());
+            prop_assert!(
+                seen == (0..n_rows).collect::<Vec<_>>(),
+                "partition is not an exact cover"
+            );
+            prop_assert!(shards.iter().all(|s| !s.is_empty()), "empty shard");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_label_skew_respects_partition_kind_parse() {
+    property(
+        0xD2,
+        40,
+        |g| g.float(0.01, 10.0),
+        |&alpha| {
+            let s = format!("skew:{alpha}");
+            match PartitionKind::parse(&s) {
+                Some(PartitionKind::LabelSkew { alpha: a }) => {
+                    prop_assert!((a - alpha).abs() < 1e-9, "parsed {a} != {alpha}");
+                    Ok(())
+                }
+                other => Err(format!("parse '{s}' gave {other:?}")),
+            }
+        },
+    );
+}
