@@ -1,18 +1,36 @@
 //! Scalability scenario (paper §V-B.3 / Fig. 5): grow the fleet from 3 to
 //! 50 edge servers at two heterogeneity levels and watch OL4EL-async's
-//! accuracy improve with N while OL4EL-sync pays the straggler.
+//! accuracy improve with N while OL4EL-sync pays the straggler — expressed
+//! as one declarative `ExperimentSuite` grid executed on worker threads.
 //!
 //!     cargo run --release --example fleet_scale
 
 use ol4el::config::{Algo, RunConfig};
-use ol4el::coordinator;
-use ol4el::harness::{build_engine, EngineKind};
+use ol4el::coordinator::{find_outcome, ExperimentSuite};
 use ol4el::model::Task;
 use ol4el::util::table::{f, Table};
 
 fn main() -> anyhow::Result<()> {
-    let engine = build_engine(EngineKind::Native, "artifacts")?;
     let t0 = std::time::Instant::now();
+
+    let base = RunConfig {
+        task: Task::Svm,
+        budget: 3000.0,
+        seed: 5,
+        ..Default::default()
+    };
+    // 4 fleet sizes x 2 heterogeneity levels x 2 manners = 16 cells, each
+    // a full training run — the suite fans them out across workers and
+    // returns outcomes in deterministic cell order.
+    let suite = ExperimentSuite::new("fleet-scale", base)
+        .algos([Algo::Ol4elAsync, Algo::Ol4elSync])
+        .fleet_sizes([3, 10, 25, 50])
+        .heteros([1.0, 10.0])
+        .configure(|cfg| {
+            cfg.data_n = 12_000.max(cfg.n_edges * 100);
+            *cfg = cfg.clone().with_paper_utility();
+        });
+    let outcomes = suite.run_native()?;
 
     let mut table = Table::new(
         "fleet scaling (SVM accuracy, budget 3000 ms/edge)",
@@ -20,28 +38,15 @@ fn main() -> anyhow::Result<()> {
     );
     for n in [3usize, 10, 25, 50] {
         let mut row = vec![n.to_string()];
-        let mut async_updates = 0u64;
         for algo in [Algo::Ol4elAsync, Algo::Ol4elSync] {
             for h in [1.0f64, 10.0] {
-                let cfg = RunConfig {
-                    task: Task::Svm,
-                    algo,
-                    n_edges: n,
-                    hetero: h,
-                    budget: 3000.0,
-                    data_n: 12_000.max(n * 100),
-                    seed: 5,
-                    ..Default::default()
-                }
-                .with_paper_utility();
-                let r = coordinator::run(&cfg, engine.as_ref())?;
-                row.push(f(r.final_metric, 4));
-                if algo == Algo::Ol4elAsync && h == 10.0 {
-                    async_updates = r.total_updates;
-                }
+                let out = find_outcome(&outcomes, Task::Svm, algo, n, h)
+                    .expect("suite covers the full grid");
+                row.push(f(out.agg.metric.mean(), 4));
             }
         }
-        row.push(async_updates.to_string());
+        let async_h10 = find_outcome(&outcomes, Task::Svm, Algo::Ol4elAsync, n, 10.0).unwrap();
+        row.push(format!("{:.0}", async_h10.agg.updates.mean()));
         table.row(row);
     }
     print!("{}", table.render());

@@ -1,35 +1,18 @@
 //! Unsupervised Edge Learning scenario (paper §V-A, "traffic images
 //! clipped from surveillance videos", K=3): distributed mini-batch K-means
 //! across edges with a *variable* resource-cost environment — the §IV-B.2
-//! regime where OL4EL must learn arm costs online (UCB-BV).
+//! regime where OL4EL must learn arm costs online (UCB-BV) — driven by the
+//! `Experiment::kmeans_traffic()` preset.
 //!
 //!     cargo run --release --example kmeans_traffic
 
-use ol4el::config::{Algo, BanditKind, RunConfig};
-use ol4el::coordinator;
+use ol4el::config::BanditKind;
+use ol4el::coordinator::Experiment;
 use ol4el::harness::{build_engine, EngineKind};
-use ol4el::model::Task;
-use ol4el::sim::cost::CostMode;
 use ol4el::util::table::{f, Table};
 
 fn main() -> anyhow::Result<()> {
     let engine = build_engine(EngineKind::Native, "artifacts")?;
-
-    let base = RunConfig {
-        task: Task::Kmeans,
-        algo: Algo::Ol4elAsync,
-        n_edges: 4,
-        hetero: 4.0,
-        budget: 5000.0,
-        data_n: 12_000,
-        cost: ol4el::sim::cost::CostModel {
-            mode: CostMode::Variable { cv: 0.35 },
-            ..Default::default()
-        },
-        seed: 21,
-        ..Default::default()
-    }
-    .with_paper_utility();
 
     println!("K-means on traffic-like data (K=3), variable resource costs (cv=0.35)\n");
 
@@ -40,8 +23,9 @@ fn main() -> anyhow::Result<()> {
         &["bandit", "final F1", "global updates", "mean spent (ms)"],
     );
     for bandit in [BanditKind::UcbBv, BanditKind::Kube { epsilon: 0.1 }] {
-        let cfg = RunConfig { bandit, ..base.clone() };
-        let r = coordinator::run(&cfg, engine.as_ref())?;
+        let r = Experiment::kmeans_traffic()
+            .bandit(bandit)
+            .run(engine.as_ref())?;
         table.row(vec![
             bandit.name().to_string(),
             f(r.final_metric, 4),
@@ -51,8 +35,9 @@ fn main() -> anyhow::Result<()> {
     }
     print!("{}", table.render());
 
-    // Show the learned interval distribution of the UCB-BV run.
-    let r = coordinator::run(&base, engine.as_ref())?;
+    // Show the learned interval distribution of the preset's default
+    // (auto-resolved to UCB-BV under variable costs).
+    let r = Experiment::kmeans_traffic().run(engine.as_ref())?;
     println!("\nUCB-BV interval pulls (τ=1..{}):", r.tau_histogram.len());
     let max = r.tau_histogram.iter().copied().max().unwrap_or(1).max(1);
     for (i, &c) in r.tau_histogram.iter().enumerate() {

@@ -1,14 +1,16 @@
-//! Quickstart: the full three-layer path end to end.
+//! Quickstart: the full three-layer path end to end, through the
+//! `Experiment` builder API.
 //!
 //! Loads the AOT HLO artifacts (JAX L2 + Pallas L1, built by
 //! `make artifacts`) into the PJRT CPU client, assembles a 3-edge
 //! heterogeneous fleet, and trains the paper's SVM task with OL4EL-async —
-//! printing the metric trace and the bandit's learned interval preferences.
+//! streaming the metric trace live via an `Observer` and printing the
+//! bandit's learned interval preferences at the end.
 //!
 //!     make artifacts && cargo run --release --example quickstart
 
-use ol4el::config::{Algo, RunConfig};
-use ol4el::coordinator;
+use ol4el::config::Algo;
+use ol4el::coordinator::{observer, Experiment, RunEvent};
 use ol4el::harness::{build_engine, EngineKind};
 use ol4el::model::Task;
 
@@ -25,42 +27,51 @@ fn main() -> anyhow::Result<()> {
         }
     };
 
-    let cfg = RunConfig {
-        task: Task::Svm,
-        algo: Algo::Ol4elAsync,
-        n_edges: 3,
-        hetero: 6.0,   // fastest edge 6x the slowest — the Fig. 4 regime
-        budget: 2500.0,
-        data_n: 8_000,
-        seed: 42,
-        ..Default::default()
-    };
+    let exp = Experiment::builder()
+        .task(Task::Svm)
+        .algo(Algo::Ol4elAsync)
+        .edges(3)
+        .hetero(6.0) // fastest edge 6x the slowest — the Fig. 4 regime
+        .budget(2500.0)
+        .data_n(8_000)
+        .seed(42)
+        // Streaming observer: watch the run as it happens instead of
+        // post-processing a trace. Every 25th update keeps output short.
+        .observe(observer::from_fn(|ev: &RunEvent| match ev {
+            RunEvent::GlobalUpdate { point } if point.updates % 25 == 0 => println!(
+                "  t={:>7.0}ms  spent={:>6.0}ms  updates={:>4}  acc={:.4}",
+                point.wall_ms, point.mean_spent, point.updates, point.metric
+            ),
+            RunEvent::EdgeRetired { edge, wall_ms, .. } => {
+                println!("  edge {edge} retired its budget at t={wall_ms:>7.0}ms")
+            }
+            _ => {}
+        }))
+        .build()?;
 
     println!("OL4EL quickstart");
     println!("  engine : {engine_name}");
     println!(
         "  task   : {} ({} classes x {} features, wafer-like)",
-        cfg.task.name(),
+        exp.config().task.name(),
         engine.shapes().svm_c,
         engine.shapes().svm_d
     );
     println!(
         "  fleet  : {} edges, heterogeneity H={}, budget {} ms each",
-        cfg.n_edges, cfg.hetero, cfg.budget
+        exp.config().n_edges,
+        exp.config().hetero,
+        exp.config().budget
     );
-    println!("  algo   : {} (per-edge budget-limited bandits)\n", cfg.algo.name());
+    println!(
+        "  algo   : {} (per-edge budget-limited bandits)\n",
+        exp.config().algo.name()
+    );
+    println!("live trace (virtual ms -> test accuracy):");
 
     let t0 = std::time::Instant::now();
-    let result = coordinator::run(&cfg, engine.as_ref())?;
+    let result = exp.run(engine.as_ref())?;
 
-    println!("trace (virtual ms -> test accuracy):");
-    let stride = (result.trace.len() / 12).max(1);
-    for p in result.trace.iter().step_by(stride) {
-        println!(
-            "  t={:>7.0}ms  spent={:>6.0}ms  updates={:>4}  acc={:.4}",
-            p.wall_ms, p.mean_spent, p.updates, p.metric
-        );
-    }
     println!(
         "\nfinal accuracy {:.4} after {} global updates ({} edges retired, host {:.1}s)",
         result.final_metric,

@@ -2,37 +2,26 @@
 //! manufacturing"): 8-class SVM over 59-dim features, label-skewed shards
 //! across a heterogeneous 5-edge fleet, comparing all four coordination
 //! algorithms at the same resource budget — the single-scenario version of
-//! the paper's Fig. 3b.
+//! the paper's Fig. 3b, driven by the `Experiment::svm_wafer()` preset.
 //!
 //!     cargo run --release --example svm_wafer [-- --engine pjrt]
 
-use ol4el::config::{Algo, RunConfig};
-use ol4el::coordinator;
+use ol4el::config::Algo;
+use ol4el::coordinator::Experiment;
 use ol4el::harness::{build_engine, EngineKind};
-use ol4el::model::Task;
 use ol4el::util::table::{f, Table};
 
 fn main() -> anyhow::Result<()> {
     let use_pjrt = std::env::args().any(|a| a == "pjrt" || a == "--engine=pjrt")
-        || std::env::args().collect::<Vec<_>>().windows(2).any(|w| {
-            w[0] == "--engine" && w[1] == "pjrt"
-        });
+        || std::env::args()
+            .collect::<Vec<_>>()
+            .windows(2)
+            .any(|w| w[0] == "--engine" && w[1] == "pjrt");
     let engine = if use_pjrt {
         build_engine(EngineKind::Pjrt, "artifacts")?
     } else {
         build_engine(EngineKind::Native, "artifacts")?
     };
-
-    let base = RunConfig {
-        task: Task::Svm,
-        n_edges: 5,
-        hetero: 6.0,
-        budget: 5000.0,
-        data_n: 12_000,
-        seed: 7,
-        ..Default::default()
-    }
-    .with_paper_utility();
 
     println!("SVM on wafer-like data: 5 edges, H=6, 5000 ms budget each\n");
     let mut table = Table::new(
@@ -40,8 +29,9 @@ fn main() -> anyhow::Result<()> {
         &["algorithm", "final acc", "global updates", "mean spent (ms)", "tau mode"],
     );
     for algo in [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::AcSync, Algo::FixedI] {
-        let cfg = RunConfig { algo, ..base.clone() };
-        let r = coordinator::run(&cfg, engine.as_ref())?;
+        // The preset carries the whole paper scenario; only the algorithm
+        // under comparison changes per run.
+        let r = Experiment::svm_wafer().algo(algo).run(engine.as_ref())?;
         // Most-pulled interval = the policy's revealed preference.
         let tau_mode = r
             .tau_histogram

@@ -1,16 +1,14 @@
 //! Testbed-mode scenario (paper §V-A "testbed experiments"): resource
 //! costs are the MEASURED wall-clock of real PJRT executions of the AOT
 //! HLO artifacts, scaled by each edge's heterogeneity multiplier — the
-//! in-process analogue of the paper's three-mini-PC docker testbed.
-//! Requires `make artifacts`.
+//! in-process analogue of the paper's three-mini-PC docker testbed, driven
+//! by the `Experiment::testbed()` preset. Requires `make artifacts`.
 //!
 //!     cargo run --release --example testbed_measured
 
-use ol4el::config::{Algo, RunConfig};
-use ol4el::coordinator;
+use ol4el::config::Algo;
+use ol4el::coordinator::Experiment;
 use ol4el::harness::{build_engine, EngineKind};
-use ol4el::model::Task;
-use ol4el::sim::cost::{CostMode, CostModel};
 use ol4el::util::table::{f, Table};
 
 fn main() -> anyhow::Result<()> {
@@ -24,32 +22,16 @@ fn main() -> anyhow::Result<()> {
     };
 
     // Measured costs: budgets are real milliseconds of (scaled) compute.
-    // PJRT CPU steps run ~fractions of a ms, so a small budget suffices.
-    let base = RunConfig {
-        task: Task::Svm,
-        n_edges: 3,
-        hetero: 6.0,
-        budget: 150.0,
-        cost: CostModel {
-            mode: CostMode::Measured,
-            base_comp: 1.0, // nominal floor used for feasibility pricing
-            base_comm: 2.0,
-        },
-        data_n: 8_000,
-        seed: 13,
-        ..Default::default()
-    }
-    .with_paper_utility();
-
+    // PJRT CPU steps run ~fractions of a ms, so the preset's small budget
+    // suffices.
     println!("Testbed mode: measured PJRT wall-clock as the resource meter\n");
     let mut table = Table::new(
         "measured-cost testbed (SVM, 3 edges, H=6, 150 ms budget)",
         &["algorithm", "final acc", "updates", "mean spent (ms)", "host s"],
     );
     for algo in [Algo::Ol4elSync, Algo::Ol4elAsync] {
-        let cfg = RunConfig { algo, ..base.clone() };
         let t0 = std::time::Instant::now();
-        let r = coordinator::run(&cfg, engine.as_ref())?;
+        let r = Experiment::testbed().algo(algo).run(engine.as_ref())?;
         table.row(vec![
             algo.name().to_string(),
             f(r.final_metric, 4),

@@ -22,6 +22,7 @@ pub fn opts_from_env() -> SweepOpts {
         quick: !full,
         seeds,
         engine,
+        artifacts: artifacts_dir(),
     }
 }
 

@@ -5,10 +5,8 @@ mod common;
 
 fn main() {
     let opts = common::opts_from_env();
-    let engine = ol4el::harness::build_engine(opts.engine, &common::artifacts_dir())
-        .expect("engine (run `make artifacts` for pjrt)");
     let t0 = std::time::Instant::now();
-    let tables = ol4el::harness::fig4::run(engine.as_ref(), &opts).expect("fig4 sweep");
+    let tables = ol4el::harness::fig4::run(&opts).expect("fig4 sweep");
     common::emit("fig4", &tables);
     eprintln!(
         "[bench fig4] engine={} quick={} seeds={} elapsed={:.1}s",

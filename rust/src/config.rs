@@ -63,18 +63,35 @@ pub enum BanditKind {
 }
 
 impl BanditKind {
+    /// Parse a bandit spec. Grammar:
+    /// `auto | kube[:EPS] | ucb-bv | ucb1 | eps-greedy[:EPS] | thompson`,
+    /// where `EPS` is the exploration rate in \[0, 1\] (default 0.1) —
+    /// e.g. `kube:0.2`, `eps-greedy:0.05`. Parameters are rejected on
+    /// policies that take none.
     pub fn parse(s: &str) -> Option<BanditKind> {
-        match s.to_ascii_lowercase().as_str() {
-            "auto" => Some(BanditKind::Auto),
-            "kube" => Some(BanditKind::Kube { epsilon: 0.1 }),
-            "ucb-bv" | "ucbbv" => Some(BanditKind::UcbBv),
-            "ucb1" => Some(BanditKind::Ucb1),
-            "eps-greedy" | "epsgreedy" => Some(BanditKind::EpsGreedy { epsilon: 0.1 }),
-            "thompson" => Some(BanditKind::Thompson),
+        let s = s.to_ascii_lowercase();
+        let (head, param) = match s.split_once(':') {
+            Some((head, param)) => (head, Some(param)),
+            None => (s.as_str(), None),
+        };
+        let epsilon = || -> Option<f64> {
+            match param {
+                None => Some(0.1),
+                Some(p) => p.parse().ok().filter(|e: &f64| (0.0..=1.0).contains(e)),
+            }
+        };
+        match head {
+            "auto" if param.is_none() => Some(BanditKind::Auto),
+            "kube" => Some(BanditKind::Kube { epsilon: epsilon()? }),
+            "ucb-bv" | "ucbbv" if param.is_none() => Some(BanditKind::UcbBv),
+            "ucb1" if param.is_none() => Some(BanditKind::Ucb1),
+            "eps-greedy" | "epsgreedy" => Some(BanditKind::EpsGreedy { epsilon: epsilon()? }),
+            "thompson" if param.is_none() => Some(BanditKind::Thompson),
             _ => None,
         }
     }
 
+    /// The policy's bare name (displays, tables).
     pub fn name(&self) -> &'static str {
         match self {
             BanditKind::Auto => "auto",
@@ -83,6 +100,18 @@ impl BanditKind {
             BanditKind::Ucb1 => "ucb1",
             BanditKind::EpsGreedy { .. } => "eps-greedy",
             BanditKind::Thompson => "thompson",
+        }
+    }
+
+    /// The full parameterized spec, round-trippable through [`parse`]
+    /// (this is what the JSON wire format carries, so ε survives).
+    ///
+    /// [`parse`]: BanditKind::parse
+    pub fn spec(&self) -> String {
+        match self {
+            BanditKind::Kube { epsilon } => format!("kube:{epsilon}"),
+            BanditKind::EpsGreedy { epsilon } => format!("eps-greedy:{epsilon}"),
+            other => other.name().to_string(),
         }
     }
 }
@@ -95,24 +124,35 @@ pub enum PartitionKind {
 }
 
 impl PartitionKind {
+    /// Parse a partition spec. Grammar: `iid | label-skew[:ALPHA]`, where
+    /// `ALPHA` is the Dirichlet concentration (> 0, default 0.5; smaller =
+    /// more skew) — e.g. `label-skew:0.3`. `skew[:ALPHA]` is accepted as a
+    /// legacy alias.
     pub fn parse(s: &str) -> Option<PartitionKind> {
         let s = s.to_ascii_lowercase();
         if s == "iid" {
             return Some(PartitionKind::Iid);
         }
-        if let Some(rest) = s.strip_prefix("skew:") {
-            return rest.parse().ok().map(|alpha| PartitionKind::LabelSkew { alpha });
-        }
-        if s == "skew" {
-            return Some(PartitionKind::LabelSkew { alpha: 0.5 });
+        for prefix in ["label-skew", "skew"] {
+            if s == prefix {
+                return Some(PartitionKind::LabelSkew { alpha: 0.5 });
+            }
+            if let Some(rest) = s.strip_prefix(prefix).and_then(|r| r.strip_prefix(':')) {
+                return rest
+                    .parse()
+                    .ok()
+                    .filter(|a: &f64| *a > 0.0 && a.is_finite())
+                    .map(|alpha| PartitionKind::LabelSkew { alpha });
+            }
         }
         None
     }
 
+    /// Canonical round-trippable spec (the JSON wire format).
     pub fn name(&self) -> String {
         match self {
             PartitionKind::Iid => "iid".to_string(),
-            PartitionKind::LabelSkew { alpha } => format!("skew:{alpha}"),
+            PartitionKind::LabelSkew { alpha } => format!("label-skew:{alpha}"),
         }
     }
 }
@@ -248,7 +288,7 @@ impl RunConfig {
             ("utility", Json::str(self.utility.name())),
             ("staleness_decay", Json::num(self.staleness_decay)),
             ("async_alpha", Json::num(self.async_alpha)),
-            ("bandit", Json::str(self.bandit.name())),
+            ("bandit", Json::str(self.bandit.spec())),
             ("fixed_interval", Json::num(self.fixed_interval as f64)),
             ("ac_overhead", Json::num(self.ac_overhead)),
             ("partition", Json::str(self.partition.name())),
@@ -373,6 +413,16 @@ impl RunConfig {
                 self.tau_max
             ));
         }
+        if self.eval_every == 0 {
+            return Err(anyhow!("eval_every must be >= 1"));
+        }
+        // Keep the typed world no looser than the wire grammar: a config
+        // that validates must round-trip through its own JSON spec.
+        if let BanditKind::Kube { epsilon } | BanditKind::EpsGreedy { epsilon } = self.bandit {
+            if !(0.0..=1.0).contains(&epsilon) {
+                return Err(anyhow!("bandit epsilon must be in [0, 1], got {epsilon}"));
+            }
+        }
         if self.data_n < self.n_edges {
             return Err(anyhow!("data_n smaller than n_edges"));
         }
@@ -437,6 +487,31 @@ mod tests {
         cfg = RunConfig::default();
         cfg.fixed_interval = 99;
         assert!(cfg.validate().is_err());
+        cfg = RunConfig::default();
+        cfg.eval_every = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_out_of_range_bandit_epsilon() {
+        // validate() must reject exactly what the wire grammar rejects,
+        // or a validated config could fail to reload from its own JSON.
+        for bandit in [
+            BanditKind::Kube { epsilon: 1.5 },
+            BanditKind::Kube { epsilon: -0.1 },
+            BanditKind::EpsGreedy { epsilon: 2.0 },
+        ] {
+            let cfg = RunConfig {
+                bandit,
+                ..Default::default()
+            };
+            assert!(cfg.validate().is_err(), "{bandit:?} accepted");
+        }
+        let ok = RunConfig {
+            bandit: BanditKind::Kube { epsilon: 0.2 },
+            ..Default::default()
+        };
+        assert!(ok.validate().is_ok());
     }
 
     #[test]
@@ -456,5 +531,99 @@ mod tests {
             Some(PartitionKind::LabelSkew { alpha: 0.1 })
         );
         assert_eq!(PartitionKind::parse("junk"), None);
+    }
+
+    #[test]
+    fn partition_parameterized_grammar() {
+        assert_eq!(
+            PartitionKind::parse("label-skew:0.3"),
+            Some(PartitionKind::LabelSkew { alpha: 0.3 })
+        );
+        assert_eq!(
+            PartitionKind::parse("label-skew"),
+            Some(PartitionKind::LabelSkew { alpha: 0.5 })
+        );
+        assert_eq!(
+            PartitionKind::parse("SKEW"),
+            Some(PartitionKind::LabelSkew { alpha: 0.5 })
+        );
+        // Nonsense concentrations are rejected, not silently accepted.
+        assert_eq!(PartitionKind::parse("label-skew:0"), None);
+        assert_eq!(PartitionKind::parse("label-skew:-1"), None);
+        assert_eq!(PartitionKind::parse("label-skew:x"), None);
+        // The canonical name round-trips.
+        let p = PartitionKind::LabelSkew { alpha: 0.3 };
+        assert_eq!(PartitionKind::parse(&p.name()), Some(p));
+    }
+
+    #[test]
+    fn bandit_parameterized_grammar() {
+        assert_eq!(
+            BanditKind::parse("kube:0.2"),
+            Some(BanditKind::Kube { epsilon: 0.2 })
+        );
+        assert_eq!(
+            BanditKind::parse("eps-greedy:0.05"),
+            Some(BanditKind::EpsGreedy { epsilon: 0.05 })
+        );
+        // Bare names keep the paper's default exploration rate.
+        assert_eq!(
+            BanditKind::parse("kube"),
+            Some(BanditKind::Kube { epsilon: 0.1 })
+        );
+        assert_eq!(
+            BanditKind::parse("EPSGREEDY"),
+            Some(BanditKind::EpsGreedy { epsilon: 0.1 })
+        );
+        // Out-of-range or malformed epsilons are rejected.
+        assert_eq!(BanditKind::parse("kube:1.5"), None);
+        assert_eq!(BanditKind::parse("kube:-0.1"), None);
+        assert_eq!(BanditKind::parse("kube:x"), None);
+        // Parameter-free policies reject parameters.
+        assert_eq!(BanditKind::parse("ucb1:0.1"), None);
+        assert_eq!(BanditKind::parse("auto:0.1"), None);
+        assert_eq!(BanditKind::parse("thompson:0.1"), None);
+        assert_eq!(BanditKind::parse("ucb-bv:0.1"), None);
+    }
+
+    #[test]
+    fn bandit_spec_roundtrips() {
+        for kind in [
+            BanditKind::Auto,
+            BanditKind::Kube { epsilon: 0.25 },
+            BanditKind::UcbBv,
+            BanditKind::Ucb1,
+            BanditKind::EpsGreedy { epsilon: 0.02 },
+            BanditKind::Thompson,
+        ] {
+            assert_eq!(BanditKind::parse(&kind.spec()), Some(kind), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_every_algo_bandit_combination() {
+        let algos = [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::FixedI, Algo::AcSync];
+        let bandits = [
+            BanditKind::Auto,
+            BanditKind::Kube { epsilon: 0.2 },
+            BanditKind::UcbBv,
+            BanditKind::Ucb1,
+            BanditKind::EpsGreedy { epsilon: 0.05 },
+            BanditKind::Thompson,
+        ];
+        for algo in algos {
+            for bandit in bandits {
+                let cfg = RunConfig {
+                    algo,
+                    bandit,
+                    seed: 7,
+                    ..Default::default()
+                };
+                let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+                assert_eq!(back.algo, algo);
+                assert_eq!(back.bandit, bandit, "{algo:?} x {bandit:?} lost ε");
+                assert_eq!(back.seed, 7);
+            }
+        }
     }
 }

@@ -100,6 +100,41 @@ mod tests {
     }
 
     #[test]
+    fn staleness_decay_monotone_over_full_range() {
+        // For every (alpha, decay) pair the weight must be non-increasing
+        // in staleness, never exceed the fresh weight, and respect the
+        // floor that keeps no edge silenced entirely.
+        for alpha in [0.05, 0.3, 0.6, 1.0] {
+            for decay in [0.0, 0.1, 0.5, 1.0, 2.0, 4.0] {
+                let mut prev = f64::INFINITY;
+                for staleness in 0..200 {
+                    let w = async_merge_weight(alpha, staleness, decay);
+                    assert!(
+                        w <= prev + 1e-15,
+                        "alpha={alpha} decay={decay}: w({staleness})={w} > w({})={prev}",
+                        staleness - 1
+                    );
+                    assert!(w <= alpha, "weight above fresh alpha");
+                    assert!(w >= 1e-4, "floor violated: {w}");
+                    prev = w;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stronger_decay_discounts_harder_at_equal_staleness() {
+        for staleness in [1u64, 5, 20] {
+            let gentle = async_merge_weight(0.6, staleness, 0.25);
+            let harsh = async_merge_weight(0.6, staleness, 2.0);
+            assert!(
+                harsh < gentle,
+                "staleness {staleness}: decay 2.0 ({harsh}) should discount more than 0.25 ({gentle})"
+            );
+        }
+    }
+
+    #[test]
     fn async_merge_lerps() {
         let mut g = state(vec![0.0, 0.0]);
         let l = state(vec![4.0, -4.0]);

@@ -1,9 +1,10 @@
-//! Asynchronous collaboration manner (paper Fig. 1 right, §III): the Cloud
-//! merges ONE edge's local model into the global model the moment that edge
-//! finishes its interval, discounted by staleness, then immediately hands
-//! the fresh global model and a new interval back to that edge — no
-//! barriers, no stragglers ("fast edge servers can immediately update the
-//! global model without waiting for the others", §V-B.1).
+//! Asynchronous collaboration manner (paper Fig. 1 right, §III), as a
+//! [`CollaborationMode`] plugged into the unified [`Session`] engine: the
+//! Cloud merges ONE edge's local model into the global model the moment
+//! that edge finishes its interval, discounted by staleness, then
+//! immediately hands the fresh global model and a new interval back to that
+//! edge — no barriers, no stragglers ("fast edge servers can immediately
+//! update the global model without waiting for the others", §V-B.1).
 //!
 //! Implemented as a discrete-event simulation over a virtual ms clock: each
 //! edge is an in-flight "local round" whose completion event carries its
@@ -12,11 +13,10 @@
 
 use anyhow::Result;
 
-use crate::config::RunConfig;
-use crate::coordinator::{
-    aggregate, build_strategy, utility::UtilityMeter, RunResult, TracePoint, World,
-};
-use crate::engine::ComputeEngine;
+use crate::coordinator::aggregate;
+use crate::coordinator::observer::{LocalReport, RunEvent};
+use crate::coordinator::session::{CollaborationMode, Session};
+use crate::coordinator::utility::UtilityKind;
 use crate::sim::clock::EventQueue;
 
 /// An in-flight local round awaiting its completion event.
@@ -24,140 +24,146 @@ use crate::sim::clock::EventQueue;
 struct InFlight {
     tau: usize,
     total_cost: f64,
+    train_signal: f64,
 }
 
-pub fn run_async(cfg: &RunConfig, engine: &dyn ComputeEngine) -> Result<RunResult> {
-    let mut world = World::build(cfg, engine)?;
-    let mut strategy = build_strategy(cfg, &world.slowdowns);
-    let mut meter = UtilityMeter::new(cfg.utility);
+/// Event-driven scheduling + staleness-discounted single-edge merging.
+#[derive(Debug, Default)]
+pub struct AsyncMerge {
+    queue: EventQueue,
+    inflight: Vec<Option<InFlight>>,
+}
 
-    let mut queue = EventQueue::new();
-    let mut inflight: Vec<Option<InFlight>> = vec![None; world.edges.len()];
-    let mut trace = Vec::new();
-    let mut updates = 0u64;
-
-    let metric0 = world.evaluate(cfg, engine)?;
-    trace.push(TracePoint {
-        wall_ms: 0.0,
-        mean_spent: 0.0,
-        updates: 0,
-        metric: metric0,
-    });
-
-    // Launch one local round per edge. The round's cost is charged up
-    // front (the edge is busy for exactly that resource-time); completion
-    // is scheduled at now + cost.
-    for i in 0..world.edges.len() {
-        launch(cfg, engine, &mut world, &mut *strategy, &mut queue, &mut inflight, i)?;
+impl AsyncMerge {
+    pub fn new() -> Self {
+        Self::default()
     }
 
-    let mut last_metric = metric0;
-    while let Some(ev) = queue.pop() {
+    /// Select an interval for edge `i`, run its local round, charge the
+    /// ledger and schedule the completion event. Retires the edge when it
+    /// crashes or nothing is affordable.
+    fn launch(&mut self, s: &mut Session<'_>, i: usize) -> Result<()> {
+        // Failure injection: fail-stop crash — the edge never reports
+        // again. (The paper's EL edges are "reliable and stateful", but any
+        // credible deployment must tolerate churn; rate 0 by default.)
+        if s.inject_failure(i) {
+            return Ok(());
+        }
+        let remaining = s.world.edges[i].remaining();
+        let Some(tau) = s.strategy.select(i, remaining, &mut s.world.rng) else {
+            s.world.edges[i].retired = true;
+            return Ok(());
+        };
+        let wall_ms = s.wall_ms;
+        s.emit(RunEvent::RoundStart {
+            edge: Some(i),
+            tau,
+            wall_ms,
+        });
+        // Decay the learning rate by per-edge progress, not raw global
+        // version: N async merges advance the fleet about as much as ONE
+        // barrier round, so the equivalent "round count" is version / N
+        // (otherwise large fleets would freeze their learning rate N times
+        // too early).
+        let n = s.world.edges.len() as u64;
+        let hyper = s.cfg().hyper.at_version(s.world.version / n);
+        let cost = s.cfg().cost;
+        let round = s.local_round(i, tau, &hyper)?;
+        let comm = cost.sample_comm(&mut s.world.rng);
+        let total = round.comp_cost + comm;
+        s.world.edges[i].charge(total);
+        self.inflight[i] = Some(InFlight {
+            tau,
+            total_cost: total,
+            train_signal: round.train_signal,
+        });
+        self.queue.push(self.queue.now() + total, i);
+        Ok(())
+    }
+}
+
+impl CollaborationMode for AsyncMerge {
+    fn name(&self) -> &'static str {
+        "async-merge"
+    }
+
+    fn begin(&mut self, s: &mut Session<'_>) -> Result<()> {
+        // Launch one local round per edge. The round's cost is charged up
+        // front (the edge is busy for exactly that resource-time);
+        // completion is scheduled at now + cost.
+        self.inflight = vec![None; s.world.edges.len()];
+        for i in 0..s.world.edges.len() {
+            self.launch(s, i)?;
+        }
+        Ok(())
+    }
+
+    fn step(&mut self, s: &mut Session<'_>) -> Result<Option<Vec<LocalReport>>> {
+        let Some(ev) = self.queue.pop() else {
+            return Ok(None); // every ledger exhausted: the run is over
+        };
+        s.wall_ms = self.queue.now();
         let i = ev.edge;
-        let fl = inflight[i].take().expect("completion without in-flight round");
+        let fl = self.inflight[i]
+            .take()
+            .expect("completion without in-flight round");
+        Ok(Some(vec![LocalReport {
+            edge: i,
+            tau: fl.tau,
+            cost: fl.total_cost,
+            train_signal: fl.train_signal,
+            base_version: s.world.edges[i].base_version,
+        }]))
+    }
+
+    fn on_report(&mut self, s: &mut Session<'_>, report: &LocalReport) -> Result<()> {
+        let i = report.edge;
 
         // Merge this edge's model into the global, staleness-discounted.
-        let prev_global = world.global.clone();
-        let staleness = world.version - world.edges[i].base_version;
-        let alpha =
-            aggregate::async_merge_weight(cfg.async_alpha, staleness, cfg.staleness_decay);
-        aggregate::async_merge(&mut world.global, &world.edges[i].model, alpha);
-        world.version += 1;
-        updates += 1;
+        let prev_global = s.world.global.clone();
+        let staleness = s.world.version - report.base_version;
+        let alpha = aggregate::async_merge_weight(
+            s.cfg().async_alpha,
+            staleness,
+            s.cfg().staleness_decay,
+        );
+        aggregate::async_merge(&mut s.world.global, &s.world.edges[i].model, alpha);
+        s.world.version += 1;
+        s.updates += 1;
 
         // Utility + bandit feedback with the edge's OWN observed cost.
-        let need_eval = updates % cfg.eval_every as u64 == 0;
-        let metric = if need_eval || matches!(cfg.utility, crate::coordinator::utility::UtilityKind::EvalGain) {
-            world.evaluate(cfg, engine)?
+        let need_eval = s.due_for_trace();
+        let metric = if need_eval || matches!(s.cfg().utility, UtilityKind::EvalGain) {
+            s.evaluate()?
         } else {
-            last_metric
+            s.last_metric
         };
-        last_metric = metric;
-        let u = meter.measure(&prev_global, &world.global, metric);
-        strategy.feedback(i, fl.tau, u, fl.total_cost);
+        s.last_metric = metric;
+        let u = s.measure_utility(&prev_global, metric);
+        s.strategy.feedback(i, report.tau, u, report.cost);
 
         // Reply the latest global model to the contributing edge only.
-        let (global, version) = (world.global.clone(), world.version);
-        world.edges[i].sync_with_global(&global, version);
+        let (global, version) = (s.world.global.clone(), s.world.version);
+        s.world.edges[i].sync_with_global(&global, version);
 
         if need_eval {
-            trace.push(TracePoint {
-                wall_ms: queue.now(),
-                mean_spent: world.mean_spent(),
-                updates,
-                metric,
-            });
+            s.record_trace_point(metric);
         }
 
         // Relaunch this edge if it can still afford an arm.
-        launch(cfg, engine, &mut world, &mut *strategy, &mut queue, &mut inflight, i)?;
+        self.launch(s, i)
     }
 
-    let final_metric = world.evaluate(cfg, engine)?;
-    let mean_spent = world.mean_spent();
-    trace.push(TracePoint {
-        wall_ms: queue.now(),
-        mean_spent,
-        updates,
-        metric: final_metric,
-    });
-    Ok(RunResult {
-        trace,
-        final_metric,
-        total_updates: updates,
-        wall_ms: queue.now(),
-        mean_spent,
-        tau_histogram: strategy.tau_histogram(),
-        retired_edges: world.edges.iter().filter(|e| e.retired).count(),
-        n_edges: cfg.n_edges,
-    })
-}
-
-/// Select an interval for edge `i`, run its local round, charge the ledger
-/// and schedule the completion event. Retires the edge when nothing is
-/// affordable.
-fn launch(
-    cfg: &RunConfig,
-    engine: &dyn ComputeEngine,
-    world: &mut World,
-    strategy: &mut dyn crate::coordinator::IntervalStrategy,
-    queue: &mut EventQueue,
-    inflight: &mut [Option<InFlight>],
-    i: usize,
-) -> Result<()> {
-    // Failure injection: fail-stop crash — the edge never reports again.
-    // (The paper's EL edges are "reliable and stateful", but any credible
-    // deployment must tolerate churn; rate 0 by default.)
-    if cfg.failure_rate > 0.0 && world.rng.f64() < cfg.failure_rate {
-        world.edges[i].retired = true;
-        return Ok(());
+    fn is_done(&self, _s: &Session<'_>) -> bool {
+        false // termination is the event queue draining (step -> None)
     }
-    let remaining = world.edges[i].remaining();
-    let Some(tau) = strategy.select(i, remaining, &mut world.rng) else {
-        world.edges[i].retired = true;
-        return Ok(());
-    };
-    // Decay the learning rate by per-edge progress, not raw global version:
-    // N async merges advance the fleet about as much as ONE barrier round,
-    // so the equivalent "round count" is version / N (otherwise large
-    // fleets would freeze their learning rate N times too early).
-    let hyper = cfg.hyper.at_version(world.version / world.edges.len() as u64);
-    let round = world.edges[i].local_round(tau, engine, &cfg.cost, &hyper)?;
-    let comm = cfg.cost.sample_comm(&mut world.rng);
-    let total = round.comp_cost + comm;
-    world.edges[i].charge(total);
-    inflight[i] = Some(InFlight {
-        tau,
-        total_cost: total,
-    });
-    queue.push(queue.now() + total, i);
-    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Algo;
+    use crate::config::{Algo, RunConfig};
+    use crate::coordinator::run;
     use crate::engine::native::NativeEngine;
     use crate::model::Task;
 
@@ -176,7 +182,7 @@ mod tests {
     #[test]
     fn async_run_completes_and_learns() {
         let engine = NativeEngine::default();
-        let r = run_async(&cfg(Task::Svm), &engine).unwrap();
+        let r = run(&cfg(Task::Svm), &engine).unwrap();
         assert!(r.total_updates > 0);
         assert_eq!(r.retired_edges, 3, "all edges should exhaust their budget");
         let first = r.trace.first().unwrap().metric;
@@ -193,7 +199,7 @@ mod tests {
         // single edge's busy time (~budget), not N x budget.
         let engine = NativeEngine::default();
         let c = cfg(Task::Kmeans);
-        let r = run_async(&c, &engine).unwrap();
+        let r = run(&c, &engine).unwrap();
         assert!(r.wall_ms <= c.budget * 1.5, "wall {} ms", r.wall_ms);
         assert!(r.wall_ms > 0.0);
     }
@@ -205,10 +211,10 @@ mod tests {
         let engine = NativeEngine::default();
         let mut ca = cfg(Task::Svm);
         ca.hetero = 10.0;
-        let ra = run_async(&ca, &engine).unwrap();
+        let ra = run(&ca, &engine).unwrap();
         let mut cs = ca.clone();
         cs.algo = Algo::Ol4elSync;
-        let rs = crate::coordinator::sync::run_sync(&cs, &engine).unwrap();
+        let rs = run(&cs, &engine).unwrap();
         assert!(
             ra.total_updates > rs.total_updates,
             "async {} should out-update sync {} at high H",
@@ -223,7 +229,7 @@ mod tests {
         let c = cfg(Task::Svm);
         // Budget accounting happens inside; verify via mean_spent bound:
         // each edge can overdraw by at most its final round's cost.
-        let r = run_async(&c, &engine).unwrap();
+        let r = run(&c, &engine).unwrap();
         let max_round = c.cost.nominal_arm_cost(c.tau_max, c.hetero.max(1.0)) * 1.5;
         assert!(r.mean_spent <= c.budget + max_round);
     }
@@ -232,8 +238,8 @@ mod tests {
     fn async_is_deterministic_for_fixed_seed() {
         let engine = NativeEngine::default();
         let c = cfg(Task::Kmeans);
-        let a = run_async(&c, &engine).unwrap();
-        let b = run_async(&c, &engine).unwrap();
+        let a = run(&c, &engine).unwrap();
+        let b = run(&c, &engine).unwrap();
         assert_eq!(a.total_updates, b.total_updates);
         assert_eq!(a.final_metric, b.final_metric);
         assert_eq!(a.tau_histogram, b.tau_histogram);

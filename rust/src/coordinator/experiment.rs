@@ -1,0 +1,453 @@
+//! The typed, validating front door of the run API.
+//!
+//! [`ExperimentBuilder`] replaces raw `RunConfig` literal construction:
+//! every knob has a typed setter, presets capture the paper's scenarios,
+//! and `build()` validates before anything runs. `RunConfig` itself remains
+//! the serde/JSON wire format — the builder *produces* it (`config()`,
+//! `to_json()`), and `from_config` / `from_json` re-enter the typed world
+//! from the wire.
+//!
+//! ```no_run
+//! use ol4el::coordinator::Experiment;
+//! use ol4el::engine::native::NativeEngine;
+//!
+//! let engine = NativeEngine::default();
+//! let result = Experiment::svm_wafer() // paper §V-A wafer scenario preset
+//!     .edges(8)
+//!     .hetero(4.0)
+//!     .seed(7)
+//!     .run(&engine)?;
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{Algo, BanditKind, PartitionKind, RunConfig};
+use crate::coordinator::observer::Observer;
+use crate::coordinator::session::Session;
+use crate::coordinator::RunResult;
+use crate::engine::ComputeEngine;
+use crate::model::Task;
+use crate::sim::cost::{CostMode, CostModel};
+use crate::sim::hetero::HeteroProfile;
+use crate::coordinator::utility::UtilityKind;
+use crate::util::json::Json;
+
+/// A validated, runnable experiment: a wire config plus the observers
+/// registered at build time.
+pub struct Experiment {
+    cfg: RunConfig,
+    observers: Vec<Box<dyn Observer>>,
+}
+
+impl Experiment {
+    /// An empty builder seeded with `RunConfig::default()`.
+    pub fn builder() -> ExperimentBuilder {
+        ExperimentBuilder::new()
+    }
+
+    /// Preset — paper §V-A supervised scenario: 8-class SVM over wafer-like
+    /// features, label-skewed shards, 5 heterogeneous edges (H=6) at the
+    /// testbed budget.
+    pub fn svm_wafer() -> ExperimentBuilder {
+        Experiment::builder()
+            .task(Task::Svm)
+            .edges(5)
+            .hetero(6.0)
+            .budget(5000.0)
+            .data_n(12_000)
+            .seed(7)
+            .paper_regime()
+    }
+
+    /// Preset — paper §V-A unsupervised scenario: K=3 K-means over
+    /// traffic-like data with *variable* resource costs (the §IV-B.2 regime
+    /// where OL4EL must learn arm costs online).
+    pub fn kmeans_traffic() -> ExperimentBuilder {
+        Experiment::builder()
+            .task(Task::Kmeans)
+            .algo(Algo::Ol4elAsync)
+            .edges(4)
+            .hetero(4.0)
+            .budget(5000.0)
+            .cost_mode(CostMode::Variable { cv: 0.35 })
+            .data_n(12_000)
+            .seed(21)
+            .paper_regime()
+    }
+
+    /// Preset — testbed mode: resource costs are the MEASURED wall-clock of
+    /// real engine executions scaled by each edge's slowdown (the paper's
+    /// three-mini-PC docker testbed, in process).
+    pub fn testbed() -> ExperimentBuilder {
+        Experiment::builder()
+            .task(Task::Svm)
+            .edges(3)
+            .hetero(6.0)
+            .budget(150.0)
+            .cost(CostModel {
+                mode: CostMode::Measured,
+                base_comp: 1.0, // nominal floor used for feasibility pricing
+                base_comm: 2.0,
+            })
+            .data_n(8_000)
+            .seed(13)
+            .paper_regime()
+    }
+
+    /// Adopt an existing wire config (validates it).
+    pub fn from_config(cfg: RunConfig) -> Result<Experiment> {
+        cfg.validate().map_err(|e| anyhow!("invalid experiment: {e}"))?;
+        Ok(Experiment {
+            cfg,
+            observers: Vec::new(),
+        })
+    }
+
+    /// Parse the JSON wire format (validates it).
+    pub fn from_json(j: &Json) -> Result<Experiment> {
+        Experiment::from_config(RunConfig::from_json(j)?)
+    }
+
+    /// The underlying wire config.
+    pub fn config(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    pub fn into_config(self) -> RunConfig {
+        self.cfg
+    }
+
+    /// Serialize the wire config.
+    pub fn to_json(&self) -> Json {
+        self.cfg.to_json()
+    }
+
+    /// Open a [`Session`] for this experiment, moving the registered
+    /// observers into it.
+    pub fn session<'e>(self, engine: &'e dyn ComputeEngine) -> Result<Session<'e>> {
+        let mut session = Session::new(&self.cfg, engine)?;
+        for obs in self.observers {
+            session.observe_boxed(obs);
+        }
+        Ok(session)
+    }
+
+    /// Run to completion on `engine` with the manner matching the config.
+    pub fn run(self, engine: &dyn ComputeEngine) -> Result<RunResult> {
+        self.session(engine)?.run()
+    }
+}
+
+/// Fluent, validating builder over the `RunConfig` wire format.
+pub struct ExperimentBuilder {
+    cfg: RunConfig,
+    observers: Vec<Box<dyn Observer>>,
+}
+
+impl Default for ExperimentBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ExperimentBuilder {
+    pub fn new() -> Self {
+        ExperimentBuilder {
+            cfg: RunConfig::default(),
+            observers: Vec::new(),
+        }
+    }
+
+    /// Start from an existing wire config (e.g. loaded from JSON).
+    pub fn from_config(cfg: RunConfig) -> Self {
+        ExperimentBuilder {
+            cfg,
+            observers: Vec::new(),
+        }
+    }
+
+    /// Peek at the config assembled so far (not yet validated).
+    pub fn config(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    pub fn task(mut self, task: Task) -> Self {
+        self.cfg.task = task;
+        self
+    }
+
+    pub fn algo(mut self, algo: Algo) -> Self {
+        self.cfg.algo = algo;
+        self
+    }
+
+    /// Fleet size (number of edge servers).
+    pub fn edges(mut self, n: usize) -> Self {
+        self.cfg.n_edges = n;
+        self
+    }
+
+    /// Heterogeneity ratio H (fastest/slowest processing speed, >= 1).
+    pub fn hetero(mut self, h: f64) -> Self {
+        self.cfg.hetero = h;
+        self
+    }
+
+    pub fn hetero_profile(mut self, profile: HeteroProfile) -> Self {
+        self.cfg.hetero_profile = profile;
+        self
+    }
+
+    /// Per-edge resource budget (ms; the paper's testbed uses 5000).
+    pub fn budget(mut self, ms: f64) -> Self {
+        self.cfg.budget = ms;
+        self
+    }
+
+    pub fn cost(mut self, cost: CostModel) -> Self {
+        self.cfg.cost = cost;
+        self
+    }
+
+    pub fn cost_mode(mut self, mode: CostMode) -> Self {
+        self.cfg.cost.mode = mode;
+        self
+    }
+
+    /// Nominal per-iteration compute and per-update communication costs.
+    pub fn base_costs(mut self, comp_ms: f64, comm_ms: f64) -> Self {
+        self.cfg.cost.base_comp = comp_ms;
+        self.cfg.cost.base_comm = comm_ms;
+        self
+    }
+
+    /// Longest global-update interval (the bandit's arm count).
+    pub fn tau_max(mut self, tau: usize) -> Self {
+        self.cfg.tau_max = tau;
+        self
+    }
+
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.cfg.hyper.lr = lr;
+        self
+    }
+
+    pub fn reg(mut self, reg: f32) -> Self {
+        self.cfg.hyper.reg = reg;
+        self
+    }
+
+    pub fn lr_decay(mut self, decay: f32) -> Self {
+        self.cfg.hyper.lr_decay = decay;
+        self
+    }
+
+    pub fn utility(mut self, kind: UtilityKind) -> Self {
+        self.cfg.utility = kind;
+        self
+    }
+
+    /// Async merge staleness decay exponent.
+    pub fn staleness_decay(mut self, decay: f64) -> Self {
+        self.cfg.staleness_decay = decay;
+        self
+    }
+
+    /// Async base mixing rate at a merge, in (0, 1].
+    pub fn async_alpha(mut self, alpha: f64) -> Self {
+        self.cfg.async_alpha = alpha;
+        self
+    }
+
+    pub fn bandit(mut self, kind: BanditKind) -> Self {
+        self.cfg.bandit = kind;
+        self
+    }
+
+    /// Interval for the Fixed-I baseline.
+    pub fn fixed_interval(mut self, interval: usize) -> Self {
+        self.cfg.fixed_interval = interval;
+        self
+    }
+
+    /// AC-sync's extra per-iteration edge compute fraction.
+    pub fn ac_overhead(mut self, overhead: f64) -> Self {
+        self.cfg.ac_overhead = overhead;
+        self
+    }
+
+    pub fn partition(mut self, kind: PartitionKind) -> Self {
+        self.cfg.partition = kind;
+        self
+    }
+
+    /// Training set size.
+    pub fn data_n(mut self, n: usize) -> Self {
+        self.cfg.data_n = n;
+        self
+    }
+
+    /// Generator difficulty knob (class/cluster separation).
+    pub fn separation(mut self, sep: f64) -> Self {
+        self.cfg.separation = sep;
+        self
+    }
+
+    /// Record a trace point every k-th global update (trace density;
+    /// clamped to >= 1 like the wire parser).
+    pub fn eval_every(mut self, k: usize) -> Self {
+        self.cfg.eval_every = k.max(1);
+        self
+    }
+
+    /// Per-launch probability that an edge fail-stops (async manner).
+    pub fn failure_rate(mut self, rate: f64) -> Self {
+        self.cfg.failure_rate = rate;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Apply the paper-figure regime for the configured task (eval-gain
+    /// utility, task-appropriate sharding). Call AFTER `task(..)`.
+    pub fn paper_regime(mut self) -> Self {
+        self.cfg = self.cfg.with_paper_utility();
+        self
+    }
+
+    /// Register a streaming [`Observer`]; it will receive the run's
+    /// [`RunEvent`](crate::coordinator::RunEvent) stream.
+    pub fn observe(mut self, observer: impl Observer + 'static) -> Self {
+        self.observers.push(Box::new(observer));
+        self
+    }
+
+    /// Validate and seal the experiment.
+    pub fn build(self) -> Result<Experiment> {
+        self.cfg
+            .validate()
+            .map_err(|e| anyhow!("invalid experiment: {e}"))?;
+        Ok(Experiment {
+            cfg: self.cfg,
+            observers: self.observers,
+        })
+    }
+
+    /// Validate, then run to completion on `engine`.
+    pub fn run(self, engine: &dyn ComputeEngine) -> Result<RunResult> {
+        self.build()?.run(engine)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::native::NativeEngine;
+
+    #[test]
+    fn builder_produces_wire_config() {
+        let exp = Experiment::builder()
+            .task(Task::Kmeans)
+            .algo(Algo::Ol4elSync)
+            .edges(7)
+            .hetero(3.0)
+            .budget(1234.0)
+            .tau_max(6)
+            .fixed_interval(2)
+            .seed(99)
+            .build()
+            .unwrap();
+        let cfg = exp.config();
+        assert_eq!(cfg.task, Task::Kmeans);
+        assert_eq!(cfg.algo, Algo::Ol4elSync);
+        assert_eq!(cfg.n_edges, 7);
+        assert_eq!(cfg.hetero, 3.0);
+        assert_eq!(cfg.budget, 1234.0);
+        assert_eq!(cfg.tau_max, 6);
+        assert_eq!(cfg.seed, 99);
+    }
+
+    #[test]
+    fn builder_rejects_bad_tau_max() {
+        assert!(Experiment::builder().tau_max(0).build().is_err());
+        // fixed_interval outside 1..=tau_max is a config contradiction.
+        assert!(Experiment::builder()
+            .tau_max(3)
+            .fixed_interval(9)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn builder_rejects_zero_edges() {
+        assert!(Experiment::builder().edges(0).build().is_err());
+    }
+
+    #[test]
+    fn builder_rejects_negative_budget() {
+        assert!(Experiment::builder().budget(-100.0).build().is_err());
+        assert!(Experiment::builder().budget(0.0).build().is_err());
+    }
+
+    #[test]
+    fn builder_rejects_bad_async_alpha_and_failure_rate() {
+        assert!(Experiment::builder().async_alpha(0.0).build().is_err());
+        assert!(Experiment::builder().async_alpha(1.5).build().is_err());
+        assert!(Experiment::builder().failure_rate(-0.1).build().is_err());
+        assert!(Experiment::builder().failure_rate(1.1).build().is_err());
+    }
+
+    #[test]
+    fn presets_validate_and_match_scenarios() {
+        let wafer = Experiment::svm_wafer().build().unwrap();
+        assert_eq!(wafer.config().task, Task::Svm);
+        assert_eq!(wafer.config().n_edges, 5);
+        assert!(matches!(
+            wafer.config().partition,
+            PartitionKind::LabelSkew { .. }
+        ));
+
+        let traffic = Experiment::kmeans_traffic().build().unwrap();
+        assert_eq!(traffic.config().task, Task::Kmeans);
+        assert!(matches!(
+            traffic.config().cost.mode,
+            CostMode::Variable { .. }
+        ));
+        assert_eq!(traffic.config().partition, PartitionKind::Iid);
+
+        let testbed = Experiment::testbed().build().unwrap();
+        assert_eq!(testbed.config().cost.mode, CostMode::Measured);
+        assert_eq!(testbed.config().budget, 150.0);
+    }
+
+    #[test]
+    fn builder_run_equals_wire_config_run() {
+        let engine = NativeEngine::default();
+        let cfg = RunConfig {
+            data_n: 3000,
+            budget: 700.0,
+            n_edges: 3,
+            seed: 5,
+            ..Default::default()
+        };
+        let a = crate::coordinator::run(&cfg, &engine).unwrap();
+        let b = ExperimentBuilder::from_config(cfg).run(&engine).unwrap();
+        assert_eq!(a.final_metric, b.final_metric);
+        assert_eq!(a.total_updates, b.total_updates);
+        assert_eq!(a.trace.len(), b.trace.len());
+    }
+
+    #[test]
+    fn json_roundtrip_through_experiment() {
+        let exp = Experiment::kmeans_traffic().build().unwrap();
+        let j = exp.to_json();
+        let back = Experiment::from_json(&j).unwrap();
+        assert_eq!(back.config().task, exp.config().task);
+        assert_eq!(back.config().n_edges, exp.config().n_edges);
+        assert_eq!(back.config().cost.mode, exp.config().cost.mode);
+    }
+}

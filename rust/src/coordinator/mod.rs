@@ -2,14 +2,41 @@
 //!
 //! The Cloud owns the global model, the learning-utility meter, and an
 //! *interval strategy* that decides each edge's global update interval τ
-//! (OL4EL's budget-limited bandits, or a baseline policy). Two collaboration
-//! manners (paper Fig. 1): synchronous barrier rounds (`sync`) and
-//! event-driven asynchronous merging (`asynchronous`).
+//! (OL4EL's budget-limited bandits, or a baseline policy). The run API is
+//! layered as:
+//!
+//! * [`Experiment`] / [`ExperimentBuilder`] (`experiment`) — the typed,
+//!   validating front door. Presets capture the paper's scenarios
+//!   (`Experiment::svm_wafer()`, `::kmeans_traffic()`, `::testbed()`);
+//!   `RunConfig` stays the serde/JSON wire format the builder produces.
+//! * [`Session`] (`session`) — the single run engine owning everything the
+//!   collaboration manners share: the assembled [`World`], budget ledgers,
+//!   failure injection, utility metering, eval cadence, observers.
+//! * [`CollaborationMode`] — the pluggable manner (paper Fig. 1):
+//!   [`sync::SyncBarrier`] barrier rounds and [`asynchronous::AsyncMerge`]
+//!   event-driven merging ship in-tree; new manners implement the
+//!   object-safe trait (`step`, `on_report`, `is_done`) without touching
+//!   the engine loop.
+//! * [`Observer`] / [`RunEvent`] (`observer`) — the streaming event API;
+//!   `RunResult::trace` is rebuilt from the bundled [`TraceObserver`]'s
+//!   `GlobalUpdate` stream.
+//! * [`ExperimentSuite`] (`suite`) — declarative multi-run grids over
+//!   seeds and config axes, executed on worker threads (the figure
+//!   harnesses are grid specs over this runner).
 
 pub mod aggregate;
 pub mod asynchronous;
+pub mod experiment;
+pub mod observer;
+pub mod session;
+pub mod suite;
 pub mod sync;
 pub mod utility;
+
+pub use experiment::{Experiment, ExperimentBuilder};
+pub use observer::{LocalReport, Observer, RunEvent, TraceObserver};
+pub use session::{default_mode, CollaborationMode, Session};
+pub use suite::{find_outcome, CellSpec, ExperimentSuite, SuiteOutcome};
 
 use std::sync::Arc;
 
@@ -31,7 +58,7 @@ use crate::model::{ModelState, Task};
 use crate::util::rng::Rng;
 
 /// One observed point of a run (recorded at global updates).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TracePoint {
     /// Virtual wall-clock ms (sync: sum of barrier rounds; async: event time).
     pub wall_ms: f64,
@@ -75,6 +102,29 @@ impl RunResult {
         } else {
             0.0
         }
+    }
+}
+
+/// Multi-seed aggregate of the headline numbers (final metric, update
+/// count, trade-off AUC) — the one aggregation shape shared by
+/// `harness::run_seeds` and [`ExperimentSuite`].
+#[derive(Clone, Debug, Default)]
+pub struct Aggregate {
+    pub metric: crate::util::stats::Welford,
+    pub updates: crate::util::stats::Welford,
+    pub auc: crate::util::stats::Welford,
+}
+
+impl Aggregate {
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// Fold one run's headline numbers.
+    pub fn push(&mut self, r: &RunResult) {
+        self.metric.push(r.final_metric);
+        self.updates.push(r.total_updates as f64);
+        self.auc.push(r.tradeoff_auc());
     }
 }
 
@@ -395,12 +445,10 @@ pub fn build_strategy(cfg: &RunConfig, slowdowns: &[f64]) -> Box<dyn IntervalStr
     }
 }
 
-/// Run a config end-to-end on an engine (dispatches sync/async manner).
+/// Run a config end-to-end on an engine: one [`Session`] driven by the
+/// collaboration mode matching the algorithm (paper Fig. 1).
 pub fn run(cfg: &RunConfig, engine: &dyn ComputeEngine) -> Result<RunResult> {
-    match cfg.algo {
-        Algo::Ol4elAsync => asynchronous::run_async(cfg, engine),
-        _ => sync::run_sync(cfg, engine),
-    }
+    Session::new(cfg, engine)?.run()
 }
 
 #[cfg(test)]
@@ -491,5 +539,52 @@ mod tests {
             n_edges: 1,
         };
         assert!(mk(0.2, 0.9).tradeoff_auc() > mk(0.2, 0.5).tradeoff_auc());
+    }
+
+    fn result_with_trace(trace: Vec<TracePoint>) -> RunResult {
+        RunResult {
+            final_metric: trace.last().map(|p| p.metric).unwrap_or(0.0),
+            total_updates: trace.len() as u64,
+            wall_ms: 0.0,
+            mean_spent: trace.last().map(|p| p.mean_spent).unwrap_or(0.0),
+            tau_histogram: vec![],
+            retired_edges: 0,
+            n_edges: 1,
+            trace,
+        }
+    }
+
+    fn tp(mean_spent: f64, metric: f64) -> TracePoint {
+        TracePoint {
+            wall_ms: 0.0,
+            mean_spent,
+            updates: 0,
+            metric,
+        }
+    }
+
+    #[test]
+    fn tradeoff_auc_empty_trace_is_zero() {
+        assert_eq!(result_with_trace(vec![]).tradeoff_auc(), 0.0);
+    }
+
+    #[test]
+    fn tradeoff_auc_single_point_is_zero() {
+        assert_eq!(result_with_trace(vec![tp(100.0, 0.9)]).tradeoff_auc(), 0.0);
+    }
+
+    #[test]
+    fn tradeoff_auc_zero_span_is_zero() {
+        // A run whose trace never consumed resource (e.g. retired before
+        // any update) must not divide by the zero span.
+        let r = result_with_trace(vec![tp(0.0, 0.1), tp(0.0, 0.2), tp(0.0, 0.3)]);
+        assert_eq!(r.tradeoff_auc(), 0.0);
+    }
+
+    #[test]
+    fn tradeoff_auc_is_mean_height_for_flat_metric() {
+        // Constant metric m over any consumption span integrates to m.
+        let r = result_with_trace(vec![tp(0.0, 0.7), tp(50.0, 0.7), tp(400.0, 0.7)]);
+        assert!((r.tradeoff_auc() - 0.7).abs() < 1e-12);
     }
 }

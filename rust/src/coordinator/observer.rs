@@ -1,0 +1,162 @@
+//! Streaming run observation.
+//!
+//! A [`Session`](crate::coordinator::Session) narrates its progress as a
+//! stream of [`RunEvent`]s to every registered [`Observer`] — replacing the
+//! legacy post-hoc `Vec<TracePoint>` with a push API that live dashboards,
+//! CSV sinks and tests can all tap without changing the run loop.
+//!
+//! The bundled [`TraceObserver`] is how `RunResult::trace` is rebuilt: it
+//! collects the [`RunEvent::GlobalUpdate`] payloads, which are emitted at
+//! exactly the cadence (plus the opening and closing points) at which the
+//! legacy drivers recorded trace points — so for a fixed seed the event
+//! stream reproduces the old trace bit for bit.
+
+use crate::coordinator::TracePoint;
+
+/// One edge's completed local round, as reported to the Cloud.
+#[derive(Clone, Debug)]
+pub struct LocalReport {
+    pub edge: usize,
+    /// The interval the scheduling policy chose for this round.
+    pub tau: usize,
+    /// Resource charged to the edge's own ledger for the round (sync: its
+    /// compute share including strategy overhead; async: compute + comm).
+    pub cost: f64,
+    /// Mean per-iteration training signal (hinge loss / batch inertia).
+    pub train_signal: f64,
+    /// Global version the round started from (async staleness accounting).
+    pub base_version: u64,
+}
+
+/// A streamed run event.
+#[derive(Clone, Debug)]
+pub enum RunEvent {
+    /// A local round was scheduled. Synchronous manner: one per barrier
+    /// round with `edge: None` (the whole fleet shares the decision);
+    /// asynchronous manner: one per edge launch.
+    RoundStart {
+        edge: Option<usize>,
+        tau: usize,
+        wall_ms: f64,
+    },
+    /// An edge finished a local round and reported to the Cloud.
+    LocalReport { report: LocalReport, wall_ms: f64 },
+    /// The global model advanced; the payload mirrors the legacy trace
+    /// point (emitted at the eval cadence plus the opening/closing points).
+    GlobalUpdate { point: TracePoint },
+    /// An edge left the run (budget exhausted or fail-stop crash).
+    EdgeRetired {
+        edge: usize,
+        wall_ms: f64,
+        spent: f64,
+    },
+    /// The run is over; `RunResult` carries the full summary.
+    Finished {
+        wall_ms: f64,
+        updates: u64,
+        final_metric: f64,
+    },
+}
+
+/// A streaming consumer of [`RunEvent`]s. Wrap a closure with
+/// [`from_fn`] to observe without defining a type.
+pub trait Observer {
+    fn on_event(&mut self, event: &RunEvent);
+}
+
+impl<O: Observer + ?Sized> Observer for Box<O> {
+    fn on_event(&mut self, event: &RunEvent) {
+        (**self).on_event(event)
+    }
+}
+
+/// An [`Observer`] wrapping a closure (see [`from_fn`]).
+pub struct FnObserver<F>(F);
+
+impl<F: FnMut(&RunEvent)> Observer for FnObserver<F> {
+    fn on_event(&mut self, event: &RunEvent) {
+        (self.0)(event)
+    }
+}
+
+/// Wrap a `FnMut(&RunEvent)` closure as an [`Observer`].
+pub fn from_fn<F: FnMut(&RunEvent)>(f: F) -> FnObserver<F> {
+    FnObserver(f)
+}
+
+/// The bundled observer that rebuilds the legacy `RunResult::trace` from
+/// the [`RunEvent::GlobalUpdate`] stream.
+#[derive(Clone, Debug, Default)]
+pub struct TraceObserver {
+    points: Vec<TracePoint>,
+}
+
+impl TraceObserver {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn points(&self) -> &[TracePoint] {
+        &self.points
+    }
+
+    pub fn into_points(self) -> Vec<TracePoint> {
+        self.points
+    }
+}
+
+impl Observer for TraceObserver {
+    fn on_event(&mut self, event: &RunEvent) {
+        if let RunEvent::GlobalUpdate { point } = event {
+            self.points.push(point.clone());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(updates: u64) -> TracePoint {
+        TracePoint {
+            wall_ms: updates as f64,
+            mean_spent: 0.0,
+            updates,
+            metric: 0.5,
+        }
+    }
+
+    #[test]
+    fn trace_observer_collects_global_updates_only() {
+        let mut t = TraceObserver::new();
+        t.on_event(&RunEvent::RoundStart {
+            edge: None,
+            tau: 3,
+            wall_ms: 0.0,
+        });
+        t.on_event(&RunEvent::GlobalUpdate { point: point(1) });
+        t.on_event(&RunEvent::EdgeRetired {
+            edge: 0,
+            wall_ms: 1.0,
+            spent: 2.0,
+        });
+        t.on_event(&RunEvent::GlobalUpdate { point: point(2) });
+        assert_eq!(t.points().len(), 2);
+        assert_eq!(t.into_points()[1].updates, 2);
+    }
+
+    #[test]
+    fn closures_wrap_as_observers() {
+        let mut count = 0usize;
+        {
+            let mut obs = from_fn(|_: &RunEvent| count += 1);
+            obs.on_event(&RunEvent::GlobalUpdate { point: point(0) });
+            obs.on_event(&RunEvent::Finished {
+                wall_ms: 0.0,
+                updates: 0,
+                final_metric: 0.0,
+            });
+        }
+        assert_eq!(count, 2);
+    }
+}

@@ -1,0 +1,357 @@
+//! The unified run engine.
+//!
+//! A [`Session`] owns everything both collaboration manners share — the
+//! assembled [`World`], the interval strategy, the budget ledgers, failure
+//! injection, the utility meter, the eval cadence and the observer stream —
+//! and drives a pluggable [`CollaborationMode`] that contributes only the
+//! manner-specific scheduling and merge policy. The legacy `run_sync` /
+//! `run_async` free functions collapsed into this one loop; the two modes
+//! ([`SyncBarrier`](super::sync::SyncBarrier) and
+//! [`AsyncMerge`](super::asynchronous::AsyncMerge)) preserve the original
+//! operation order exactly, so fixed-seed runs reproduce the legacy trace
+//! bit for bit.
+
+use anyhow::Result;
+
+use crate::config::{Algo, RunConfig};
+use crate::coordinator::observer::{LocalReport, Observer, RunEvent, TraceObserver};
+use crate::coordinator::utility::UtilityMeter;
+use crate::coordinator::{build_strategy, IntervalStrategy, RunResult, TracePoint, World};
+use crate::edge::{Hyper, LocalRound};
+use crate::engine::ComputeEngine;
+use crate::model::ModelState;
+
+/// A collaboration manner: the scheduling + merge policy a [`Session`]
+/// drives. Object-safe, so custom manners plug in without touching the
+/// engine loop.
+pub trait CollaborationMode {
+    fn name(&self) -> &'static str;
+
+    /// Called once before the loop (e.g. the async manner launches every
+    /// edge's first local round here).
+    fn begin(&mut self, session: &mut Session<'_>) -> Result<()> {
+        let _ = session;
+        Ok(())
+    }
+
+    /// Advance by one scheduling unit and return the local reports that
+    /// became ready, or `None` when the manner has no further work (no
+    /// affordable arm / event queue drained).
+    fn step(&mut self, session: &mut Session<'_>) -> Result<Option<Vec<LocalReport>>>;
+
+    /// Fold one report into the global model: the manner's merge policy,
+    /// utility metering and bandit feedback.
+    fn on_report(&mut self, session: &mut Session<'_>, report: &LocalReport) -> Result<()>;
+
+    /// Terminal condition checked between steps beyond step-exhaustion
+    /// (the sync barrier ends the whole cohort when any ledger retires).
+    fn is_done(&self, session: &Session<'_>) -> bool;
+}
+
+/// The default manner for an algorithm (paper Fig. 1: barrier rounds for
+/// every synchronous policy, event-driven merging for OL4EL-async).
+pub fn default_mode(algo: Algo) -> Box<dyn CollaborationMode> {
+    match algo {
+        Algo::Ol4elAsync => Box::new(super::asynchronous::AsyncMerge::new()),
+        _ => Box::new(super::sync::SyncBarrier::new()),
+    }
+}
+
+/// One configured run in flight: shared state + the engine loop.
+///
+/// Build one from an [`Experiment`](super::Experiment) (preferred) or
+/// directly from a [`RunConfig`] via [`Session::new`], register observers,
+/// then [`run`](Session::run) it.
+pub struct Session<'e> {
+    cfg: RunConfig,
+    engine: &'e dyn ComputeEngine,
+    pub world: World,
+    pub strategy: Box<dyn IntervalStrategy>,
+    meter: UtilityMeter,
+    trace: TraceObserver,
+    observers: Vec<Box<dyn Observer>>,
+    /// Virtual wall-clock ms (sync: sum of barrier rounds; async: event
+    /// time of the latest completion).
+    pub wall_ms: f64,
+    /// Global updates so far.
+    pub updates: u64,
+    /// Metric of the global model at the latest evaluation.
+    pub last_metric: f64,
+    retired_seen: Vec<bool>,
+}
+
+impl<'e> Session<'e> {
+    /// Assemble the world and strategy for `cfg` (validates the config).
+    pub fn new(cfg: &RunConfig, engine: &'e dyn ComputeEngine) -> Result<Session<'e>> {
+        let world = World::build(cfg, engine)?;
+        let strategy = build_strategy(cfg, &world.slowdowns);
+        let retired_seen = vec![false; world.edges.len()];
+        Ok(Session {
+            cfg: cfg.clone(),
+            engine,
+            world,
+            strategy,
+            meter: UtilityMeter::new(cfg.utility),
+            trace: TraceObserver::new(),
+            observers: Vec::new(),
+            wall_ms: 0.0,
+            updates: 0,
+            last_metric: 0.0,
+            retired_seen,
+        })
+    }
+
+    pub fn cfg(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    pub fn engine(&self) -> &dyn ComputeEngine {
+        self.engine
+    }
+
+    /// Register a streaming observer (in addition to the bundled
+    /// [`TraceObserver`] that rebuilds `RunResult::trace`).
+    pub fn observe(&mut self, observer: impl Observer + 'static) {
+        self.observe_boxed(Box::new(observer));
+    }
+
+    /// Register an already-boxed observer without re-boxing (one dispatch
+    /// hop per event instead of two).
+    pub fn observe_boxed(&mut self, observer: Box<dyn Observer>) {
+        self.observers.push(observer);
+    }
+
+    /// Evaluate the global model's test metric.
+    pub fn evaluate(&self) -> Result<f64> {
+        self.world.evaluate(&self.cfg, self.engine)
+    }
+
+    /// Learning utility of a global update `prev -> world.global` with the
+    /// post-update metric (the bandit's reward, §III-A).
+    pub fn measure_utility(&mut self, prev: &ModelState, metric: f64) -> f64 {
+        self.meter.measure(prev, &self.world.global, metric)
+    }
+
+    /// Run `tau` local iterations on one edge's engine-backed model.
+    pub fn local_round(&mut self, edge: usize, tau: usize, hyper: &Hyper) -> Result<LocalRound> {
+        self.world.edges[edge].local_round(tau, self.engine, &self.cfg.cost, hyper)
+    }
+
+    /// Failure injection (fail-stop): rolls the configured crash
+    /// probability for `edge` and retires it on a hit. Draw order matches
+    /// the legacy driver: no RNG is consumed when the rate is zero.
+    pub fn inject_failure(&mut self, edge: usize) -> bool {
+        if self.cfg.failure_rate > 0.0 && self.world.rng.f64() < self.cfg.failure_rate {
+            self.world.edges[edge].retired = true;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Is the current update count on the trace/eval cadence?
+    pub fn due_for_trace(&self) -> bool {
+        self.updates % self.cfg.eval_every as u64 == 0
+    }
+
+    /// Broadcast an event to the bundled trace and every observer.
+    pub fn emit(&mut self, event: RunEvent) {
+        self.trace.on_event(&event);
+        for obs in &mut self.observers {
+            obs.on_event(&event);
+        }
+    }
+
+    /// Emit the `GlobalUpdate` event for the current session state (this is
+    /// what the legacy drivers recorded as a trace point).
+    pub fn record_trace_point(&mut self, metric: f64) {
+        let point = TracePoint {
+            wall_ms: self.wall_ms,
+            mean_spent: self.world.mean_spent(),
+            updates: self.updates,
+            metric,
+        };
+        self.emit(RunEvent::GlobalUpdate { point });
+    }
+
+    /// Emit `EdgeRetired` for every edge that retired since the last sweep.
+    fn sweep_retirements(&mut self) {
+        for i in 0..self.world.edges.len() {
+            if self.world.edges[i].retired && !self.retired_seen[i] {
+                self.retired_seen[i] = true;
+                let spent = self.world.edges[i].spent;
+                let wall_ms = self.wall_ms;
+                self.emit(RunEvent::EdgeRetired {
+                    edge: i,
+                    wall_ms,
+                    spent,
+                });
+            }
+        }
+    }
+
+    /// Run to completion with the manner matching `cfg.algo`.
+    pub fn run(self) -> Result<RunResult> {
+        let mut mode = default_mode(self.cfg.algo);
+        self.run_with(mode.as_mut())
+    }
+
+    /// Run to completion with an explicit collaboration mode.
+    pub fn run_with(mut self, mode: &mut dyn CollaborationMode) -> Result<RunResult> {
+        let metric0 = self.evaluate()?;
+        self.last_metric = metric0;
+        self.record_trace_point(metric0); // the t=0 point
+
+        mode.begin(&mut self)?;
+        self.sweep_retirements();
+        loop {
+            if mode.is_done(&self) {
+                break;
+            }
+            let Some(reports) = mode.step(&mut self)? else {
+                break;
+            };
+            for report in &reports {
+                let wall_ms = self.wall_ms;
+                self.emit(RunEvent::LocalReport {
+                    report: report.clone(),
+                    wall_ms,
+                });
+                mode.on_report(&mut self, report)?;
+            }
+            self.sweep_retirements();
+        }
+
+        // Final evaluation + closing trace point, exactly like the legacy
+        // drivers (the closing point may duplicate the last cadence point).
+        let final_metric = self.evaluate()?;
+        let mean_spent = self.world.mean_spent();
+        self.record_trace_point(final_metric);
+        self.emit(RunEvent::Finished {
+            wall_ms: self.wall_ms,
+            updates: self.updates,
+            final_metric,
+        });
+        let trace = std::mem::take(&mut self.trace).into_points();
+        Ok(RunResult {
+            trace,
+            final_metric,
+            total_updates: self.updates,
+            wall_ms: self.wall_ms,
+            mean_spent,
+            tau_histogram: self.strategy.tau_histogram(),
+            retired_edges: self.world.edges.iter().filter(|e| e.retired).count(),
+            n_edges: self.cfg.n_edges,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::observer::from_fn;
+    use crate::engine::native::NativeEngine;
+    use crate::model::Task;
+    use std::cell::Cell;
+    use std::rc::Rc;
+
+    fn cfg(algo: Algo) -> RunConfig {
+        RunConfig {
+            algo,
+            task: Task::Svm,
+            data_n: 3000,
+            budget: 900.0,
+            n_edges: 3,
+            seed: 7,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn session_runs_both_manners() {
+        let engine = NativeEngine::default();
+        for algo in [Algo::Ol4elSync, Algo::Ol4elAsync] {
+            let r = Session::new(&cfg(algo), &engine).unwrap().run().unwrap();
+            assert!(r.total_updates > 0, "{algo:?}");
+            assert!(r.trace.len() >= 2, "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn session_matches_coordinator_run() {
+        let engine = NativeEngine::default();
+        for algo in [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::FixedI, Algo::AcSync] {
+            let c = cfg(algo);
+            let a = Session::new(&c, &engine).unwrap().run().unwrap();
+            let b = crate::coordinator::run(&c, &engine).unwrap();
+            assert_eq!(a.final_metric, b.final_metric, "{algo:?}");
+            assert_eq!(a.total_updates, b.total_updates, "{algo:?}");
+            assert_eq!(a.tau_histogram, b.tau_histogram, "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn observers_see_lifecycle_events() {
+        let engine = NativeEngine::default();
+        let rounds = Rc::new(Cell::new(0usize));
+        let reports = Rc::new(Cell::new(0usize));
+        let finished = Rc::new(Cell::new(0usize));
+        let (r2, p2, f2) = (rounds.clone(), reports.clone(), finished.clone());
+        let mut session = Session::new(&cfg(Algo::Ol4elAsync), &engine).unwrap();
+        session.observe(from_fn(move |ev: &RunEvent| match ev {
+            RunEvent::RoundStart { .. } => r2.set(r2.get() + 1),
+            RunEvent::LocalReport { .. } => p2.set(p2.get() + 1),
+            RunEvent::Finished { .. } => f2.set(f2.get() + 1),
+            _ => {}
+        }));
+        let result = session.run().unwrap();
+        assert_eq!(finished.get(), 1);
+        assert_eq!(reports.get() as u64, result.total_updates);
+        // Every completed report was launched, plus the final unaffordable
+        // launches that retired the edges.
+        assert!(rounds.get() >= reports.get());
+    }
+
+    #[test]
+    fn edge_retirements_are_streamed() {
+        let engine = NativeEngine::default();
+        let retired = Rc::new(Cell::new(0usize));
+        let r2 = retired.clone();
+        let mut session = Session::new(&cfg(Algo::Ol4elAsync), &engine).unwrap();
+        session.observe(from_fn(move |ev: &RunEvent| {
+            if matches!(ev, RunEvent::EdgeRetired { .. }) {
+                r2.set(r2.get() + 1);
+            }
+        }));
+        let result = session.run().unwrap();
+        assert_eq!(retired.get(), result.retired_edges);
+        assert_eq!(retired.get(), 3, "async edges all exhaust their budget");
+    }
+
+    #[test]
+    fn custom_mode_plugs_in() {
+        // A degenerate manner that never schedules anything: the session
+        // must still terminate cleanly with the opening/closing trace.
+        struct Idle;
+        impl CollaborationMode for Idle {
+            fn name(&self) -> &'static str {
+                "idle"
+            }
+            fn step(&mut self, _: &mut Session<'_>) -> Result<Option<Vec<LocalReport>>> {
+                Ok(None)
+            }
+            fn on_report(&mut self, _: &mut Session<'_>, _: &LocalReport) -> Result<()> {
+                Ok(())
+            }
+            fn is_done(&self, _: &Session<'_>) -> bool {
+                false
+            }
+        }
+        let engine = NativeEngine::default();
+        let session = Session::new(&cfg(Algo::Ol4elSync), &engine).unwrap();
+        let r = session.run_with(&mut Idle).unwrap();
+        assert_eq!(r.total_updates, 0);
+        assert_eq!(r.trace.len(), 2);
+        assert_eq!(r.mean_spent, 0.0);
+    }
+}

@@ -1,0 +1,414 @@
+//! Declarative multi-run grids: the scale lever behind the figure
+//! harnesses and any future sweep.
+//!
+//! An [`ExperimentSuite`] is a base config plus axes (tasks × algorithms ×
+//! fleet sizes × heterogeneity) and a seed list. `run` executes every cell
+//! across a pool of worker threads — each worker builds its OWN compute
+//! engine, because `ComputeEngine` is deliberately not `Send` (the PJRT
+//! client is `Rc`-based) — and returns per-cell [`SuiteOutcome`]s in cell
+//! order, so results are deterministic regardless of scheduling.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{Algo, RunConfig};
+use crate::coordinator::{self, Aggregate, RunResult};
+use crate::engine::{build_engine, ComputeEngine, EngineKind};
+use crate::model::Task;
+
+/// The axis coordinates of one grid cell.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CellSpec {
+    pub task: Task,
+    pub algo: Algo,
+    pub n_edges: usize,
+    pub hetero: f64,
+}
+
+/// One cell's multi-seed results.
+#[derive(Clone, Debug)]
+pub struct SuiteOutcome {
+    pub spec: CellSpec,
+    /// The fully-resolved cell config (before per-run seeding).
+    pub cfg: RunConfig,
+    /// Headline aggregates across the seed list.
+    pub agg: Aggregate,
+    /// Full per-seed results (traces included), in seed order — populated
+    /// only when [`ExperimentSuite::retain_runs`] is on, since traces
+    /// dominate a big sweep's memory.
+    pub runs: Vec<RunResult>,
+}
+
+/// A declarative grid of sessions over seeds and config axes.
+pub struct ExperimentSuite {
+    name: String,
+    base: RunConfig,
+    tasks: Vec<Task>,
+    algos: Vec<Algo>,
+    fleet_sizes: Vec<usize>,
+    heteros: Vec<f64>,
+    seeds: Vec<u64>,
+    workers: usize,
+    retain_runs: bool,
+    tweak: Option<Box<dyn Fn(&mut RunConfig) + Send + Sync>>,
+}
+
+impl ExperimentSuite {
+    /// A suite over `base`; unset axes stay at the base config's value.
+    pub fn new(name: impl Into<String>, base: RunConfig) -> Self {
+        let seeds = vec![base.seed];
+        ExperimentSuite {
+            name: name.into(),
+            base,
+            tasks: Vec::new(),
+            algos: Vec::new(),
+            fleet_sizes: Vec::new(),
+            heteros: Vec::new(),
+            seeds,
+            workers: 0,
+            retain_runs: false,
+            tweak: None,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn tasks(mut self, tasks: impl IntoIterator<Item = Task>) -> Self {
+        self.tasks = tasks.into_iter().collect();
+        self
+    }
+
+    pub fn algos(mut self, algos: impl IntoIterator<Item = Algo>) -> Self {
+        self.algos = algos.into_iter().collect();
+        self
+    }
+
+    pub fn fleet_sizes(mut self, ns: impl IntoIterator<Item = usize>) -> Self {
+        self.fleet_sizes = ns.into_iter().collect();
+        self
+    }
+
+    pub fn heteros(mut self, hs: impl IntoIterator<Item = f64>) -> Self {
+        self.heteros = hs.into_iter().collect();
+        self
+    }
+
+    /// Seeds every cell runs across (aggregated per cell).
+    pub fn seeds(mut self, seeds: impl IntoIterator<Item = u64>) -> Self {
+        self.seeds = seeds.into_iter().collect();
+        self
+    }
+
+    /// Worker-thread count; 0 (the default) uses the host parallelism.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
+    }
+
+    /// Keep every seed's full [`RunResult`] (traces included) in the
+    /// outcomes. Off by default: a paper-sized sweep holds thousands of
+    /// trace points per async run, and most consumers only read `agg`.
+    pub fn retain_runs(mut self, keep: bool) -> Self {
+        self.retain_runs = keep;
+        self
+    }
+
+    /// Per-cell config hook, applied after the axes are set — e.g. scale
+    /// `data_n` with the fleet or apply the paper regime per task.
+    pub fn configure(mut self, f: impl Fn(&mut RunConfig) + Send + Sync + 'static) -> Self {
+        self.tweak = Some(Box::new(f));
+        self
+    }
+
+    /// Materialize the grid (task-major, then algo, fleet size, hetero).
+    pub fn cells(&self) -> Vec<(CellSpec, RunConfig)> {
+        let one_task = [self.base.task];
+        let one_algo = [self.base.algo];
+        let one_n = [self.base.n_edges];
+        let one_h = [self.base.hetero];
+        let tasks: &[Task] = if self.tasks.is_empty() { &one_task } else { &self.tasks };
+        let algos: &[Algo] = if self.algos.is_empty() { &one_algo } else { &self.algos };
+        let ns: &[usize] = if self.fleet_sizes.is_empty() { &one_n } else { &self.fleet_sizes };
+        let hs: &[f64] = if self.heteros.is_empty() { &one_h } else { &self.heteros };
+
+        let mut cells = Vec::with_capacity(tasks.len() * algos.len() * ns.len() * hs.len());
+        for &task in tasks {
+            for &algo in algos {
+                for &n_edges in ns {
+                    for &hetero in hs {
+                        let mut cfg = self.base.clone();
+                        cfg.task = task;
+                        cfg.algo = algo;
+                        cfg.n_edges = n_edges;
+                        cfg.hetero = hetero;
+                        if let Some(f) = &self.tweak {
+                            f(&mut cfg);
+                        }
+                        let spec = CellSpec {
+                            task: cfg.task,
+                            algo: cfg.algo,
+                            n_edges: cfg.n_edges,
+                            hetero: cfg.hetero,
+                        };
+                        cells.push((spec, cfg));
+                    }
+                }
+            }
+        }
+        cells
+    }
+
+    /// Execute the grid on worker threads, each constructing its own
+    /// engine via `make_engine` (engines are deliberately not `Send`).
+    /// Outcomes come back in cell order.
+    pub fn run_with_engines<F>(&self, make_engine: F) -> Result<Vec<SuiteOutcome>>
+    where
+        F: Fn() -> Result<Box<dyn ComputeEngine>> + Sync,
+    {
+        if self.seeds.is_empty() {
+            return Err(anyhow!("suite '{}': empty seed list", self.name));
+        }
+        let cells = self.cells();
+        if cells.is_empty() {
+            return Ok(Vec::new());
+        }
+        for (i, (_, cfg)) in cells.iter().enumerate() {
+            cfg.validate()
+                .map_err(|e| anyhow!("suite '{}', cell {i}: {e}", self.name))?;
+        }
+
+        let workers = if self.workers > 0 {
+            self.workers
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        }
+        .min(cells.len())
+        .max(1);
+
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<SuiteOutcome>>> =
+            cells.iter().map(|_| Mutex::new(None)).collect();
+        let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| {
+                    let engine = match make_engine() {
+                        Ok(e) => e,
+                        Err(e) => {
+                            errors.lock().unwrap().push(format!("building engine: {e}"));
+                            return;
+                        }
+                    };
+                    loop {
+                        let i = next.fetch_add(1, Ordering::SeqCst);
+                        if i >= cells.len() {
+                            break;
+                        }
+                        let (spec, cfg) = &cells[i];
+                        match self.run_cell(*spec, cfg, engine.as_ref()) {
+                            Ok(outcome) => *slots[i].lock().unwrap() = Some(outcome),
+                            Err(e) => errors
+                                .lock()
+                                .unwrap()
+                                .push(format!("cell {i} ({spec:?}): {e}")),
+                        }
+                    }
+                });
+            }
+        });
+
+        let errors = errors.into_inner().unwrap();
+        if !errors.is_empty() {
+            return Err(anyhow!("suite '{}' failed: {}", self.name, errors.join("; ")));
+        }
+        Ok(slots
+            .into_iter()
+            .map(|slot| slot.into_inner().unwrap().expect("cell completed without outcome"))
+            .collect())
+    }
+
+    /// `run_with_engines` over a standard backend kind.
+    pub fn run(&self, engine_kind: EngineKind, artifacts_dir: &str) -> Result<Vec<SuiteOutcome>> {
+        self.run_with_engines(|| build_engine(engine_kind, artifacts_dir))
+    }
+
+    /// `run` on the native engine (the simulator default).
+    pub fn run_native(&self) -> Result<Vec<SuiteOutcome>> {
+        self.run(EngineKind::Native, "artifacts")
+    }
+
+    fn run_cell(
+        &self,
+        spec: CellSpec,
+        cfg: &RunConfig,
+        engine: &dyn ComputeEngine,
+    ) -> Result<SuiteOutcome> {
+        let mut runs = Vec::new();
+        let mut agg = Aggregate::empty();
+        for &seed in &self.seeds {
+            let mut c = cfg.clone();
+            c.seed = seed;
+            let r = coordinator::run(&c, engine)?;
+            agg.push(&r);
+            if self.retain_runs {
+                runs.push(r);
+            }
+        }
+        Ok(SuiteOutcome {
+            spec,
+            cfg: cfg.clone(),
+            agg,
+            runs,
+        })
+    }
+}
+
+/// Look up a cell's outcome by its axis coordinates.
+pub fn find_outcome<'a>(
+    outcomes: &'a [SuiteOutcome],
+    task: Task,
+    algo: Algo,
+    n_edges: usize,
+    hetero: f64,
+) -> Option<&'a SuiteOutcome> {
+    outcomes.iter().find(|o| {
+        o.spec.task == task
+            && o.spec.algo == algo
+            && o.spec.n_edges == n_edges
+            && o.spec.hetero == hetero
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_base() -> RunConfig {
+        RunConfig {
+            data_n: 3000,
+            budget: 600.0,
+            n_edges: 3,
+            seed: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn cells_cross_product_in_declared_order() {
+        let suite = ExperimentSuite::new("t", small_base())
+            .tasks([Task::Kmeans, Task::Svm])
+            .algos([Algo::Ol4elSync, Algo::Ol4elAsync])
+            .heteros([1.0, 5.0]);
+        let cells = suite.cells();
+        assert_eq!(cells.len(), 8);
+        assert_eq!(cells[0].0.task, Task::Kmeans);
+        assert_eq!(cells[0].0.algo, Algo::Ol4elSync);
+        assert_eq!(cells[0].0.hetero, 1.0);
+        assert_eq!(cells[1].0.hetero, 5.0);
+        assert_eq!(cells[7].0.task, Task::Svm);
+        assert_eq!(cells[7].0.algo, Algo::Ol4elAsync);
+    }
+
+    #[test]
+    fn unset_axes_fall_back_to_base() {
+        let suite = ExperimentSuite::new("t", small_base());
+        let cells = suite.cells();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].0.n_edges, 3);
+        assert_eq!(cells[0].0.hetero, 1.0);
+    }
+
+    #[test]
+    fn configure_hook_rewrites_cells() {
+        let suite = ExperimentSuite::new("t", small_base())
+            .fleet_sizes([2, 4])
+            .configure(|cfg| cfg.data_n = cfg.n_edges * 1000);
+        let cells = suite.cells();
+        assert_eq!(cells[0].1.data_n, 2000);
+        assert_eq!(cells[1].1.data_n, 4000);
+    }
+
+    #[test]
+    fn suite_runs_cells_across_seeds_deterministically() {
+        let suite = ExperimentSuite::new("t", small_base())
+            .algos([Algo::Ol4elSync, Algo::Ol4elAsync])
+            .seeds([1, 2])
+            .retain_runs(true)
+            .workers(2);
+        let a = suite.run_native().unwrap();
+        let b = suite.run_native().unwrap();
+        assert_eq!(a.len(), 2);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.spec, y.spec);
+            assert_eq!(x.agg.metric.count(), 2);
+            assert_eq!(x.runs.len(), 2);
+            assert_eq!(
+                x.agg.metric.mean(),
+                y.agg.metric.mean(),
+                "parallel nondeterminism"
+            );
+            assert_eq!(x.runs[0].final_metric, y.runs[0].final_metric);
+        }
+    }
+
+    #[test]
+    fn runs_dropped_unless_retained() {
+        let suite = ExperimentSuite::new("t", small_base()).seeds([1, 2]);
+        let out = suite.run_native().unwrap();
+        assert!(out[0].runs.is_empty());
+        assert_eq!(out[0].agg.metric.count(), 2);
+    }
+
+    #[test]
+    fn suite_outcome_matches_serial_run() {
+        let engine = crate::engine::native::NativeEngine::default();
+        let suite = ExperimentSuite::new("t", small_base())
+            .seeds([4])
+            .retain_runs(true);
+        let out = suite.run_native().unwrap();
+        let mut cfg = small_base();
+        cfg.seed = 4;
+        let serial = coordinator::run(&cfg, &engine).unwrap();
+        assert_eq!(out[0].runs[0].final_metric, serial.final_metric);
+        assert_eq!(out[0].runs[0].total_updates, serial.total_updates);
+        assert_eq!(out[0].agg.metric.mean(), serial.final_metric);
+    }
+
+    #[test]
+    fn custom_engine_factory_plugs_in() {
+        let suite = ExperimentSuite::new("t", small_base());
+        let out = suite
+            .run_with_engines(|| Ok(Box::new(crate::engine::native::NativeEngine::default())))
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(out[0].agg.metric.mean() > 0.0);
+    }
+
+    #[test]
+    fn empty_seed_list_is_an_error() {
+        let suite = ExperimentSuite::new("t", small_base()).seeds(Vec::<u64>::new());
+        assert!(suite.run_native().is_err());
+    }
+
+    #[test]
+    fn invalid_cell_reports_before_running() {
+        let mut base = small_base();
+        base.budget = -5.0;
+        let suite = ExperimentSuite::new("t", base);
+        let err = suite.run_native().unwrap_err().to_string();
+        assert!(err.contains("cell 0"), "{err}");
+    }
+
+    #[test]
+    fn find_outcome_locates_cells() {
+        let suite = ExperimentSuite::new("t", small_base()).heteros([1.0, 2.0]);
+        let outs = suite.run_native().unwrap();
+        assert!(find_outcome(&outs, Task::Svm, Algo::Ol4elAsync, 3, 2.0).is_some());
+        assert!(find_outcome(&outs, Task::Svm, Algo::Ol4elAsync, 3, 9.0).is_none());
+    }
+}

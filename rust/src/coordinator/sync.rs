@@ -1,4 +1,5 @@
-//! Synchronous collaboration manner (paper Fig. 1 left, §III):
+//! Synchronous collaboration manner (paper Fig. 1 left, §III), as a
+//! [`CollaborationMode`] plugged into the unified [`Session`] engine:
 //! every round the Cloud picks ONE interval τ (shared decision), all edges
 //! run τ local iterations, the Cloud barrier-aggregates the weighted
 //! average, evaluates utility, and feeds the bandit.
@@ -11,139 +12,162 @@
 
 use anyhow::Result;
 
-use crate::config::RunConfig;
-use crate::coordinator::{
-    aggregate, build_strategy, utility::UtilityMeter, RoundObservation, RunResult, TracePoint,
-    World,
-};
-use crate::engine::ComputeEngine;
+use crate::coordinator::observer::{LocalReport, RunEvent};
+use crate::coordinator::session::{CollaborationMode, Session};
+use crate::coordinator::{aggregate, RoundObservation};
+use crate::model::ModelState;
 
-pub fn run_sync(cfg: &RunConfig, engine: &dyn ComputeEngine) -> Result<RunResult> {
-    let mut world = World::build(cfg, engine)?;
-    let mut strategy = build_strategy(cfg, &world.slowdowns);
-    let mut meter = UtilityMeter::new(cfg.utility);
-    let overhead = 1.0 + strategy.edge_overhead();
+/// Barrier-round scheduling + weighted-average merging.
+#[derive(Debug, Default)]
+pub struct SyncBarrier {
+    /// 1 + the strategy's per-iteration edge overhead (AC-sync's local
+    /// estimations), captured once at `begin`.
+    overhead: f64,
+    round_tau: usize,
+    round_cost: f64,
+    round_comm: f64,
+    round_comp_sum: f64,
+    reported: usize,
+}
 
-    let mut trace = Vec::new();
-    let mut wall_ms = 0.0f64;
-    let mut updates = 0u64;
+impl SyncBarrier {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
 
-    let metric0 = world.evaluate(cfg, engine)?;
-    trace.push(TracePoint {
-        wall_ms: 0.0,
-        mean_spent: 0.0,
-        updates: 0,
-        metric: metric0,
-    });
+impl CollaborationMode for SyncBarrier {
+    fn name(&self) -> &'static str {
+        "sync-barrier"
+    }
 
-    loop {
+    fn begin(&mut self, s: &mut Session<'_>) -> Result<()> {
+        self.overhead = 1.0 + s.strategy.edge_overhead();
+        Ok(())
+    }
+
+    fn step(&mut self, s: &mut Session<'_>) -> Result<Option<Vec<LocalReport>>> {
         // The shared decision must be affordable for the *tightest* ledger
         // (every edge pays the barrier cost).
-        let min_remaining = world
+        let min_remaining = s
+            .world
             .edges
             .iter()
             .map(|e| e.remaining())
             .fold(f64::INFINITY, f64::min);
-        let Some(tau) = strategy.select(0, min_remaining, &mut world.rng) else {
-            break; // no affordable arm -> the fleet retires together
+        let Some(tau) = s.strategy.select(0, min_remaining, &mut s.world.rng) else {
+            return Ok(None); // no affordable arm -> the fleet retires together
         };
+        let wall_ms = s.wall_ms;
+        s.emit(RunEvent::RoundStart {
+            edge: None,
+            tau,
+            wall_ms,
+        });
 
         // Local rounds on every edge; the straggler defines the barrier.
-        let hyper = cfg.hyper.at_version(world.version);
+        let hyper = s.cfg().hyper.at_version(s.world.version);
+        let cost = s.cfg().cost;
+        let n = s.world.edges.len();
+        let mut reports = Vec::with_capacity(n);
         let mut barrier_comp = 0.0f64;
         let mut comp_sum = 0.0f64;
-        for edge in world.edges.iter_mut() {
-            let r = edge.local_round(tau, engine, &cfg.cost, &hyper)?;
-            let charged = r.comp_cost * overhead;
+        for i in 0..n {
+            let base_version = s.world.edges[i].base_version;
+            let r = s.local_round(i, tau, &hyper)?;
+            let charged = r.comp_cost * self.overhead;
             barrier_comp = barrier_comp.max(charged);
             comp_sum += charged;
+            reports.push(LocalReport {
+                edge: i,
+                tau,
+                cost: charged,
+                train_signal: r.train_signal,
+                base_version,
+            });
         }
-        let comm = cfg.cost.sample_comm(&mut world.rng);
+        let comm = cost.sample_comm(&mut s.world.rng);
         let barrier_cost = barrier_comp + comm;
 
         // Everyone waits for the straggler; everyone is charged the round.
-        for edge in world.edges.iter_mut() {
+        for edge in s.world.edges.iter_mut() {
             edge.charge(barrier_cost);
         }
-        wall_ms += barrier_cost;
+        s.wall_ms += barrier_cost;
 
-        // Weighted-average aggregation.
-        let prev_global = world.global.clone();
-        let locals: Vec<(&crate::model::ModelState, f64)> = world
+        self.round_tau = tau;
+        self.round_cost = barrier_cost;
+        self.round_comm = comm;
+        self.round_comp_sum = comp_sum;
+        self.reported = 0;
+        Ok(Some(reports))
+    }
+
+    fn on_report(&mut self, s: &mut Session<'_>, _report: &LocalReport) -> Result<()> {
+        self.reported += 1;
+        if self.reported < s.world.edges.len() {
+            return Ok(()); // the barrier waits for the whole cohort
+        }
+
+        // Weighted-average aggregation over the complete cohort.
+        let prev_global = s.world.global.clone();
+        let locals: Vec<(&ModelState, f64)> = s
+            .world
             .edges
             .iter()
-            .map(|e| (&e.model, world.weights[e.id]))
+            .map(|e| (&e.model, s.world.weights[e.id]))
             .collect();
         let new_global = aggregate::weighted_average(&locals);
 
         // Observation for adaptive strategies (divergence BEFORE download).
-        let divergence = world
+        let divergence = s
+            .world
             .edges
             .iter()
             .map(|e| e.model.l2_distance(&new_global))
             .sum::<f64>()
-            / world.edges.len() as f64;
+            / s.world.edges.len() as f64;
         let obs = RoundObservation {
             divergence,
             global_delta: prev_global.l2_distance(&new_global),
-            mean_comp: comp_sum / (world.edges.len() as f64 * tau as f64),
-            comm,
-            lr: cfg.hyper.lr as f64,
+            mean_comp: self.round_comp_sum / (s.world.edges.len() as f64 * self.round_tau as f64),
+            comm: self.round_comm,
+            lr: s.cfg().hyper.lr as f64,
         };
 
-        world.global = new_global;
-        world.version += 1;
-        updates += 1;
+        s.world.global = new_global;
+        s.world.version += 1;
+        s.updates += 1;
 
-        let metric = world.evaluate(cfg, engine)?;
-        let u = meter.measure(&prev_global, &world.global, metric);
-        strategy.feedback(0, tau, u, barrier_cost);
-        strategy.observe_round(&obs);
+        let metric = s.evaluate()?;
+        let u = s.measure_utility(&prev_global, metric);
+        s.strategy.feedback(0, self.round_tau, u, self.round_cost);
+        s.strategy.observe_round(&obs);
 
         // Download the fresh global model everywhere.
-        let (global, version) = (world.global.clone(), world.version);
-        for edge in world.edges.iter_mut() {
+        let (global, version) = (s.world.global.clone(), s.world.version);
+        for edge in s.world.edges.iter_mut() {
             edge.sync_with_global(&global, version);
         }
 
-        if updates % cfg.eval_every as u64 == 0 {
-            trace.push(TracePoint {
-                wall_ms,
-                mean_spent: world.mean_spent(),
-                updates,
-                metric,
-            });
+        s.last_metric = metric;
+        if s.due_for_trace() {
+            s.record_trace_point(metric);
         }
-
-        if world.edges.iter().any(|e| e.retired) {
-            break; // any exhausted ledger ends synchronous training
-        }
+        Ok(())
     }
 
-    let final_metric = world.evaluate(cfg, engine)?;
-    let mean_spent = world.mean_spent();
-    trace.push(TracePoint {
-        wall_ms,
-        mean_spent,
-        updates,
-        metric: final_metric,
-    });
-    Ok(RunResult {
-        trace,
-        final_metric,
-        total_updates: updates,
-        wall_ms,
-        mean_spent,
-        tau_histogram: strategy.tau_histogram(),
-        retired_edges: world.edges.iter().filter(|e| e.retired).count(),
-        n_edges: cfg.n_edges,
-    })
+    fn is_done(&self, s: &Session<'_>) -> bool {
+        // Any exhausted ledger ends synchronous training.
+        s.world.edges.iter().any(|e| e.retired)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Algo;
+    use crate::config::{Algo, RunConfig};
+    use crate::coordinator::run;
     use crate::engine::native::NativeEngine;
     use crate::model::Task;
 
@@ -162,7 +186,7 @@ mod tests {
     #[test]
     fn sync_run_consumes_budget_and_updates() {
         let engine = NativeEngine::default();
-        let r = run_sync(&cfg(Algo::Ol4elSync, Task::Svm), &engine).unwrap();
+        let r = run(&cfg(Algo::Ol4elSync, Task::Svm), &engine).unwrap();
         assert!(r.total_updates > 0, "no global updates happened");
         assert!(r.mean_spent > 0.0);
         assert!(r.mean_spent <= 1500.0 + 400.0, "overdraft too large");
@@ -174,7 +198,7 @@ mod tests {
     fn sync_budgets_never_overdraw_beyond_one_round() {
         let engine = NativeEngine::default();
         let c = cfg(Algo::Ol4elSync, Task::Kmeans);
-        let r = run_sync(&c, &engine).unwrap();
+        let r = run(&c, &engine).unwrap();
         // Ledger can exceed budget by at most one barrier round (the last).
         let max_round = c.cost.nominal_arm_cost(c.tau_max, c.hetero.max(1.0));
         assert!(r.mean_spent <= c.budget + max_round);
@@ -183,7 +207,7 @@ mod tests {
     #[test]
     fn sync_improves_over_untrained() {
         let engine = NativeEngine::default();
-        let r = run_sync(&cfg(Algo::Ol4elSync, Task::Svm), &engine).unwrap();
+        let r = run(&cfg(Algo::Ol4elSync, Task::Svm), &engine).unwrap();
         let first = r.trace.first().unwrap().metric;
         assert!(
             r.final_metric > first + 0.1,
@@ -195,7 +219,7 @@ mod tests {
     #[test]
     fn fixed_i_baseline_runs() {
         let engine = NativeEngine::default();
-        let r = run_sync(&cfg(Algo::FixedI, Task::Svm), &engine).unwrap();
+        let r = run(&cfg(Algo::FixedI, Task::Svm), &engine).unwrap();
         assert!(r.total_updates > 0);
         // Fixed-I only ever pulls one arm.
         let nonzero: Vec<usize> = r
@@ -215,13 +239,34 @@ mod tests {
         lo.hetero = 1.0;
         let mut hi = lo.clone();
         hi.hetero = 10.0;
-        let r_lo = run_sync(&lo, &engine).unwrap();
-        let r_hi = run_sync(&hi, &engine).unwrap();
+        let r_lo = run(&lo, &engine).unwrap();
+        let r_hi = run(&hi, &engine).unwrap();
         assert!(
             r_hi.total_updates < r_lo.total_updates,
             "straggler effect missing: {} vs {}",
             r_hi.total_updates,
             r_lo.total_updates
         );
+    }
+
+    #[test]
+    fn mode_reports_once_per_edge_per_round() {
+        use crate::coordinator::observer::from_fn;
+        use crate::coordinator::Session;
+        use std::cell::Cell;
+        use std::rc::Rc;
+        let engine = NativeEngine::default();
+        let reports = Rc::new(Cell::new(0u64));
+        let rounds = Rc::new(Cell::new(0u64));
+        let (rp, rd) = (reports.clone(), rounds.clone());
+        let mut session = Session::new(&cfg(Algo::Ol4elSync, Task::Svm), &engine).unwrap();
+        session.observe(from_fn(move |ev| match ev {
+            crate::coordinator::RunEvent::LocalReport { .. } => rp.set(rp.get() + 1),
+            crate::coordinator::RunEvent::RoundStart { edge: None, .. } => rd.set(rd.get() + 1),
+            _ => {}
+        }));
+        let r = session.run().unwrap();
+        assert_eq!(rounds.get(), r.total_updates);
+        assert_eq!(reports.get(), r.total_updates * 3);
     }
 }

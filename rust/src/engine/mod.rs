@@ -13,7 +13,47 @@
 pub mod native;
 pub mod pjrt;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
+
+/// Which compute backend a run executes on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Pure Rust (fast, shape-flexible) — the simulator default.
+    Native,
+    /// AOT HLO on PJRT — the full three-layer path (testbed default).
+    Pjrt,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Some(EngineKind::Native),
+            "pjrt" => Some(EngineKind::Pjrt),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Native => "native",
+            EngineKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Instantiate an engine. For `Pjrt` the artifact dir must exist
+/// (`make artifacts`).
+pub fn build_engine(kind: EngineKind, artifacts_dir: &str) -> Result<Box<dyn ComputeEngine>> {
+    match kind {
+        EngineKind::Native => Ok(Box::new(native::NativeEngine::default())),
+        EngineKind::Pjrt => {
+            let eng = pjrt::PjrtEngine::open(artifacts_dir)
+                .map_err(|e| anyhow!("opening artifacts at '{artifacts_dir}': {e}"))?;
+            eng.warmup()?;
+            Ok(Box::new(eng))
+        }
+    }
+}
 
 /// Static deployment shapes (must match python/compile/model.py and
 /// artifacts/manifest.json; the pjrt engine cross-checks at load time).

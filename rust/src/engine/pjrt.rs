@@ -81,8 +81,8 @@ impl ComputeEngine for PjrtEngine {
             f32_literal(b, &[s.svm_c])?,
             f32_literal(x, &[s.svm_batch, s.svm_d])?,
             i32_literal(y, &[s.svm_batch])?,
-            scalar_f32(lr),
-            scalar_f32(reg),
+            scalar_f32(lr)?,
+            scalar_f32(reg)?,
         ];
         let out = self.rt.borrow_mut().run("svm_step", &args)?;
         if out.len() != 3 {

@@ -1,4 +1,5 @@
-//! Figure 3 — "Model Accuracy vs. Heterogeneity" (paper §V-B.1).
+//! Figure 3 — "Model Accuracy vs. Heterogeneity" (paper §V-B.1), as a
+//! declarative [`ExperimentSuite`] grid.
 //!
 //! Testbed regime: 3 edge servers, fixed per-edge budget 5000 ms, sweep the
 //! heterogeneity ratio H; report K-means F1 (a) and SVM accuracy (b) for
@@ -9,11 +10,11 @@
 //!   * OL4EL-sync leads at low H (≤5), OL4EL-async takes over at high H;
 //!   * OL4EL-async peaks at ~12% over the baselines.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::config::{Algo, RunConfig};
-use crate::engine::ComputeEngine;
-use crate::harness::{run_seeds, SweepOpts};
+use crate::coordinator::{find_outcome, ExperimentSuite, SuiteOutcome};
+use crate::harness::SweepOpts;
 use crate::model::Task;
 use crate::util::table::{f, Table};
 
@@ -41,10 +42,27 @@ pub fn cell_config(task: Task, algo: Algo, h: f64, opts: &SweepOpts) -> RunConfi
     .with_paper_utility()
 }
 
+/// The Fig. 3 grid: tasks × algorithms × heterogeneity, every cell built
+/// by [`cell_config`].
+pub fn suite(opts: &SweepOpts) -> ExperimentSuite {
+    let o = opts.clone();
+    ExperimentSuite::new("fig3", cell_config(Task::Kmeans, ALGOS[0], 1.0, opts))
+        .tasks([Task::Kmeans, Task::Svm])
+        .algos(ALGOS)
+        .heteros(hetero_grid(opts.quick))
+        .seeds(opts.seed_list())
+        .configure(move |cfg| *cfg = cell_config(cfg.task, cfg.algo, cfg.hetero, &o))
+}
+
+fn cell<'a>(outs: &'a [SuiteOutcome], task: Task, algo: Algo, h: f64) -> Result<&'a SuiteOutcome> {
+    find_outcome(outs, task, algo, 3, h)
+        .ok_or_else(|| anyhow!("fig3: missing cell {task:?}/{algo:?}/H={h}"))
+}
+
 /// Run the full sweep; returns one table per task plus the headline-gap
 /// summary row (the paper's "12% enhancement").
-pub fn run(engine: &dyn ComputeEngine, opts: &SweepOpts) -> Result<Vec<Table>> {
-    let seeds = opts.seed_list();
+pub fn run(opts: &SweepOpts) -> Result<Vec<Table>> {
+    let outcomes = suite(opts).run(opts.engine, &opts.artifacts)?;
     let grid = hetero_grid(opts.quick);
     let mut tables = Vec::new();
     let mut best_gap = (0.0f64, 0.0f64, Task::Svm); // (gap, H, task)
@@ -55,7 +73,8 @@ pub fn run(engine: &dyn ComputeEngine, opts: &SweepOpts) -> Result<Vec<Table>> {
             Task::Svm => "accuracy",
         };
         let mut t = Table::new(
-            format!("Fig 3{}: {} {} vs heterogeneity (budget 5000ms, 3 edges)",
+            format!(
+                "Fig 3{}: {} {} vs heterogeneity (budget 5000ms, 3 edges)",
                 if task == Task::Kmeans { "a" } else { "b" },
                 task.name(),
                 metric_name
@@ -66,9 +85,7 @@ pub fn run(engine: &dyn ComputeEngine, opts: &SweepOpts) -> Result<Vec<Table>> {
             let mut row = vec![f(h, 0)];
             let mut cells = Vec::new();
             for algo in ALGOS {
-                let cfg = cell_config(task, algo, h, opts);
-                let agg = run_seeds(&cfg, engine, &seeds)?;
-                cells.push(agg.metric.mean());
+                cells.push(cell(&outcomes, task, algo, h)?.agg.metric.mean());
             }
             let baseline_best = cells[2].max(cells[3]);
             let gap = cells[1] - baseline_best;
@@ -116,5 +133,19 @@ mod tests {
         assert_eq!(cfg.n_edges, 3);
         assert_eq!(cfg.budget, 5000.0);
         assert_eq!(cfg.hetero, 6.0);
+    }
+
+    #[test]
+    fn suite_grid_matches_cell_config() {
+        let opts = SweepOpts::default();
+        let cells = suite(&opts).cells();
+        assert_eq!(cells.len(), 2 * ALGOS.len() * hetero_grid(true).len());
+        for (spec, cfg) in &cells {
+            let expect = cell_config(spec.task, spec.algo, spec.hetero, &opts);
+            assert_eq!(cfg.n_edges, expect.n_edges);
+            assert_eq!(cfg.budget, expect.budget);
+            assert_eq!(cfg.partition, expect.partition);
+            assert_eq!(cfg.data_n, expect.data_n);
+        }
     }
 }

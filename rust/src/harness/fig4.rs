@@ -1,5 +1,6 @@
 //! Figure 4 — "Model Accuracy vs. Edge Resource Consumption" (paper
-//! §V-B.2): the long-run trade-off at heterogeneity H = 6.
+//! §V-B.2): the long-run trade-off at heterogeneity H = 6, as a declarative
+//! [`ExperimentSuite`] grid.
 //!
 //! For each algorithm, record the (mean consumed resource, metric) trace of
 //! a run and resample it onto a common consumption grid so the curves are
@@ -9,11 +10,10 @@
 //!   * OL4EL curves dominate AC-sync everywhere;
 //!   * OL4EL-async ends highest once enough resource is consumed.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::config::{Algo, RunConfig};
-use crate::coordinator::{self};
-use crate::engine::ComputeEngine;
+use crate::coordinator::{self, find_outcome, ExperimentSuite};
 use crate::harness::SweepOpts;
 use crate::model::Task;
 use crate::util::stats::Welford;
@@ -33,6 +33,19 @@ pub fn cell_config(task: Task, algo: Algo, opts: &SweepOpts) -> RunConfig {
         ..Default::default()
     }
     .with_paper_utility()
+}
+
+/// The Fig. 4 grid: tasks × algorithms at H = 6.
+pub fn suite(opts: &SweepOpts) -> ExperimentSuite {
+    let o = opts.clone();
+    ExperimentSuite::new("fig4", cell_config(Task::Kmeans, ALGOS[0], opts))
+        .tasks([Task::Kmeans, Task::Svm])
+        .algos(ALGOS)
+        .seeds(opts.seed_list())
+        // Fig. 4 resamples full traces onto the consumption grid, so the
+        // per-seed RunResults must be kept.
+        .retain_runs(true)
+        .configure(move |cfg| *cfg = cell_config(cfg.task, cfg.algo, &o))
 }
 
 /// Metric of a trace at consumption level `x` (step interpolation — the
@@ -55,8 +68,8 @@ pub fn consumption_grid(budget: f64, points: usize) -> Vec<f64> {
         .collect()
 }
 
-pub fn run(engine: &dyn ComputeEngine, opts: &SweepOpts) -> Result<Vec<Table>> {
-    let seeds = opts.seed_list();
+pub fn run(opts: &SweepOpts) -> Result<Vec<Table>> {
+    let outcomes = suite(opts).run(opts.engine, &opts.artifacts)?;
     let grid = consumption_grid(5000.0, if opts.quick { 8 } else { 16 });
     let mut tables = Vec::new();
 
@@ -77,22 +90,20 @@ pub fn run(engine: &dyn ComputeEngine, opts: &SweepOpts) -> Result<Vec<Table>> {
         );
 
         // curves[algo][grid_idx] = Welford over seeds
-        let mut curves: Vec<Vec<Welford>> =
-            vec![vec![Welford::new(); grid.len()]; ALGOS.len()];
+        let mut curves: Vec<Vec<Welford>> = vec![vec![Welford::new(); grid.len()]; ALGOS.len()];
         for (ai, algo) in ALGOS.iter().enumerate() {
-            for &seed in &seeds {
-                let mut cfg = cell_config(task, *algo, opts);
-                cfg.seed = seed;
-                let r = coordinator::run(&cfg, engine)?;
+            let outcome = find_outcome(&outcomes, task, *algo, 3, HETERO)
+                .ok_or_else(|| anyhow!("fig4: missing cell {task:?}/{algo:?}"))?;
+            for run in &outcome.runs {
                 for (gi, &x) in grid.iter().enumerate() {
-                    curves[ai][gi].push(metric_at(&r.trace, x));
+                    curves[ai][gi].push(metric_at(&run.trace, x));
                 }
             }
         }
         for (gi, &x) in grid.iter().enumerate() {
             let mut row = vec![f(x, 0)];
-            for ai in 0..ALGOS.len() {
-                row.push(f(curves[ai][gi].mean(), 4));
+            for curve in &curves {
+                row.push(f(curve[gi].mean(), 4));
             }
             t.row(row);
         }
@@ -130,5 +141,12 @@ mod tests {
         assert_eq!(g.len(), 10);
         assert_eq!(*g.last().unwrap(), 5000.0);
         assert!(g[0] > 0.0);
+    }
+
+    #[test]
+    fn suite_covers_tasks_and_algos() {
+        let cells = suite(&SweepOpts::default()).cells();
+        assert_eq!(cells.len(), 2 * ALGOS.len());
+        assert!(cells.iter().all(|(s, c)| s.hetero == HETERO && c.budget == 5000.0));
     }
 }

@@ -1,17 +1,18 @@
 //! Figure 5 — "Model Accuracy vs. Number of Edge Servers" (paper §V-B.3):
 //! the scalability simulation, N from 3 to 100 edges under heterogeneity
-//! H ∈ {1, 5, 10, 15}; (a) K-means F1, (b) SVM accuracy; OL4EL-async at
-//! every (N, H) plus the OL4EL-sync comparison. Claims this regenerates:
+//! H ∈ {1, 5, 10, 15}, as a declarative [`ExperimentSuite`] grid; (a)
+//! K-means F1, (b) SVM accuracy; OL4EL-async at every (N, H) plus the
+//! OL4EL-sync comparison. Claims this regenerates:
 //!   * OL4EL-async improves with N (more aggregated information);
 //!   * accuracy degrades as H rises (stale slow-edge updates);
 //!   * OL4EL-sync wins at H=1 but collapses by H=15, where it is beaten by
 //!     OL4EL-async.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::config::{Algo, RunConfig};
-use crate::engine::ComputeEngine;
-use crate::harness::{run_seeds, SweepOpts};
+use crate::coordinator::{find_outcome, ExperimentSuite};
+use crate::harness::SweepOpts;
 use crate::model::Task;
 use crate::util::table::{f, Table};
 
@@ -45,8 +46,23 @@ pub fn cell_config(task: Task, algo: Algo, n: usize, h: f64, opts: &SweepOpts) -
     .with_paper_utility()
 }
 
-pub fn run(engine: &dyn ComputeEngine, opts: &SweepOpts) -> Result<Vec<Table>> {
-    let seeds = opts.seed_list();
+/// The Fig. 5 grid: tasks × {async, sync} × fleet sizes × heterogeneity,
+/// with `data_n` scaled to the fleet by [`cell_config`].
+pub fn suite(opts: &SweepOpts) -> ExperimentSuite {
+    let o = opts.clone();
+    ExperimentSuite::new("fig5", cell_config(Task::Kmeans, Algo::Ol4elAsync, 3, 1.0, opts))
+        .tasks([Task::Kmeans, Task::Svm])
+        .algos([Algo::Ol4elAsync, Algo::Ol4elSync])
+        .fleet_sizes(n_grid(opts.quick))
+        .heteros(h_grid(opts.quick))
+        .seeds(opts.seed_list())
+        .configure(move |cfg| {
+            *cfg = cell_config(cfg.task, cfg.algo, cfg.n_edges, cfg.hetero, &o)
+        })
+}
+
+pub fn run(opts: &SweepOpts) -> Result<Vec<Table>> {
+    let outcomes = suite(opts).run(opts.engine, &opts.artifacts)?;
     let ns = n_grid(opts.quick);
     let hs = h_grid(opts.quick);
     let mut tables = Vec::new();
@@ -76,9 +92,9 @@ pub fn run(engine: &dyn ComputeEngine, opts: &SweepOpts) -> Result<Vec<Table>> {
             let mut row = vec![n.to_string()];
             for algo in [Algo::Ol4elAsync, Algo::Ol4elSync] {
                 for &h in &hs {
-                    let cfg = cell_config(task, algo, n, h, opts);
-                    let agg = run_seeds(&cfg, engine, &seeds)?;
-                    row.push(f(agg.metric.mean(), 4));
+                    let outcome = find_outcome(&outcomes, task, algo, n, h)
+                        .ok_or_else(|| anyhow!("fig5: missing cell {task:?}/{algo:?}/N={n}/H={h}"))?;
+                    row.push(f(outcome.agg.metric.mean(), 4));
                 }
             }
             t.row(row);
@@ -112,5 +128,14 @@ mod tests {
         );
         assert!(cfg.data_n >= 100 * 40);
         assert_eq!(cfg.n_edges, 100);
+    }
+
+    #[test]
+    fn suite_scales_data_per_cell() {
+        let cells = suite(&SweepOpts::default()).cells();
+        assert_eq!(cells.len(), 2 * 2 * n_grid(true).len() * h_grid(true).len());
+        for (spec, cfg) in &cells {
+            assert!(cfg.data_n >= spec.n_edges * 40, "N={}", spec.n_edges);
+        }
     }
 }

@@ -1,79 +1,24 @@
-//! Experiment harness: turns `RunConfig`s into the tables/series the paper
-//! reports. One submodule per paper figure (Fig. 3, 4, 5); each is driven
+//! Experiment harness: turns declarative grids into the tables/series the
+//! paper reports. One submodule per paper figure (Fig. 3, 4, 5); each is a
+//! grid spec over [`ExperimentSuite`](crate::coordinator::ExperimentSuite)
+//! (worker-threaded, one engine per worker) rendered into tables, driven
 //! both by `cargo bench --bench figN` and by the `ol4el figN` CLI.
 
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::config::RunConfig;
-use crate::coordinator::{self, RunResult};
-use crate::engine::native::NativeEngine;
-use crate::engine::pjrt::PjrtEngine;
+use crate::coordinator;
 use crate::engine::ComputeEngine;
-use crate::util::stats::Welford;
 
-/// Which compute backend the harness runs on.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum EngineKind {
-    /// Pure Rust (fast, shape-flexible) — the simulator default.
-    Native,
-    /// AOT HLO on PJRT — the full three-layer path (testbed default).
-    Pjrt,
-}
-
-impl EngineKind {
-    pub fn parse(s: &str) -> Option<EngineKind> {
-        match s.to_ascii_lowercase().as_str() {
-            "native" => Some(EngineKind::Native),
-            "pjrt" => Some(EngineKind::Pjrt),
-            _ => None,
-        }
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            EngineKind::Native => "native",
-            EngineKind::Pjrt => "pjrt",
-        }
-    }
-}
-
-/// Instantiate an engine. For `Pjrt` the artifact dir must exist
-/// (`make artifacts`).
-pub fn build_engine(kind: EngineKind, artifacts_dir: &str) -> Result<Box<dyn ComputeEngine>> {
-    match kind {
-        EngineKind::Native => Ok(Box::new(NativeEngine::default())),
-        EngineKind::Pjrt => {
-            let eng = PjrtEngine::open(artifacts_dir)
-                .map_err(|e| anyhow!("opening artifacts at '{artifacts_dir}': {e}"))?;
-            eng.warmup()?;
-            Ok(Box::new(eng))
-        }
-    }
-}
-
-/// Multi-seed aggregate of a config.
-#[derive(Clone, Debug)]
-pub struct Aggregate {
-    pub metric: Welford,
-    pub updates: Welford,
-    pub auc: Welford,
-    pub sample: Option<RunResult>,
-}
-
-impl Aggregate {
-    pub fn empty() -> Self {
-        Aggregate {
-            metric: Welford::new(),
-            updates: Welford::new(),
-            auc: Welford::new(),
-            sample: None,
-        }
-    }
-}
+// Engine selection lives with the engines and the aggregate shape with the
+// coordinator; re-exported here because harness/bench call sites
+// historically imported them from this module.
+pub use crate::coordinator::Aggregate;
+pub use crate::engine::{build_engine, EngineKind};
 
 /// Run `cfg` across `seeds` and aggregate the headline numbers.
 pub fn run_seeds(
@@ -87,23 +32,20 @@ pub fn run_seeds(
         let mut c = cfg.clone();
         c.seed = seed;
         let r = coordinator::run(&c, engine)?;
-        agg.metric.push(r.final_metric);
-        agg.updates.push(r.total_updates as f64);
-        agg.auc.push(r.tradeoff_auc());
-        if agg.sample.is_none() {
-            agg.sample = Some(r);
-        }
+        agg.push(&r);
     }
     Ok(agg)
 }
 
 /// Shared sizing knobs for the figure benches: `quick` keeps `cargo bench`
-/// wall-time reasonable on one core; `full` mirrors the paper's sweep.
-#[derive(Clone, Copy, Debug)]
+/// wall-time reasonable; `full` mirrors the paper's sweep. `artifacts` is
+/// where suite workers load HLO from when `engine` is PJRT.
+#[derive(Clone, Debug)]
 pub struct SweepOpts {
     pub quick: bool,
     pub seeds: u64,
     pub engine: EngineKind,
+    pub artifacts: String,
 }
 
 impl Default for SweepOpts {
@@ -112,6 +54,7 @@ impl Default for SweepOpts {
             quick: true,
             seeds: 2,
             engine: EngineKind::Native,
+            artifacts: "artifacts".to_string(),
         }
     }
 }
@@ -145,6 +88,7 @@ mod tests {
 
     #[test]
     fn run_seeds_aggregates() {
+        use crate::engine::native::NativeEngine;
         let engine = NativeEngine::default();
         let cfg = RunConfig {
             data_n: 3000,
@@ -153,7 +97,7 @@ mod tests {
         };
         let agg = run_seeds(&cfg, &engine, &[1, 2]).unwrap();
         assert_eq!(agg.metric.count(), 2);
-        assert!(agg.sample.is_some());
+        assert_eq!(agg.updates.count(), 2);
         assert!(agg.metric.mean() > 0.0);
     }
 
@@ -165,7 +109,7 @@ mod tests {
         let f = SweepOpts {
             quick: false,
             seeds: 3,
-            engine: EngineKind::Native,
+            ..Default::default()
         };
         assert_eq!(f.data_n(), 20000);
         assert_eq!(f.seed_list().len(), 3);

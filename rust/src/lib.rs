@@ -13,9 +13,46 @@
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the hinge
 //!   forward+backward and the K-means assign+accumulate hot-spots.
 //!
+//! ## The run API
+//!
+//! Runs are composed, not dispatched: an
+//! [`Experiment`](coordinator::Experiment) (typed, validating builder with
+//! scenario presets) produces the `RunConfig` wire format and opens a
+//! [`Session`](coordinator::Session) — the single orchestration engine that
+//! owns budget ledgers, failure injection, utility metering and the eval
+//! cadence — which drives a pluggable
+//! [`CollaborationMode`](coordinator::CollaborationMode) (barrier rounds or
+//! event-driven async merging, paper Fig. 1) and streams
+//! [`RunEvent`](coordinator::RunEvent)s to registered
+//! [`Observer`](coordinator::Observer)s:
+//!
+//! ```no_run
+//! use ol4el::coordinator::{observer, Experiment, RunEvent};
+//! use ol4el::engine::native::NativeEngine;
+//!
+//! let engine = NativeEngine::default();
+//! let result = Experiment::svm_wafer() // paper §V-A scenario preset
+//!     .hetero(6.0)
+//!     .seed(7)
+//!     .observe(observer::from_fn(|ev: &RunEvent| {
+//!         if let RunEvent::GlobalUpdate { point } = ev {
+//!             eprintln!("update {} -> {:.4}", point.updates, point.metric);
+//!         }
+//!     }))
+//!     .run(&engine)?;
+//! assert!(result.final_metric > 0.0);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! Multi-run sweeps are declarative grids over
+//! [`ExperimentSuite`](coordinator::ExperimentSuite) (seeds × tasks ×
+//! algorithms × fleet sizes × heterogeneity), executed on worker threads —
+//! the `harness` figure generators are such grid specs.
+//!
 //! The request path is pure Rust: `runtime/` loads the HLO artifacts via
-//! the PJRT C API (`xla` crate) and `engine::pjrt` exposes them behind the
-//! same `ComputeEngine` trait as the pure-Rust `engine::native` oracle.
+//! the PJRT C API (`xla` crate, behind the `xla-backend` feature) and
+//! `engine::pjrt` exposes them behind the same `ComputeEngine` trait as the
+//! pure-Rust `engine::native` oracle.
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured reproduction of every figure.

@@ -5,12 +5,13 @@
 use anyhow::{anyhow, Result};
 
 use ol4el::config::{Algo, BanditKind, PartitionKind, RunConfig};
-use ol4el::coordinator::{self};
+use ol4el::coordinator::observer::from_fn;
+use ol4el::coordinator::utility::UtilityKind;
+use ol4el::coordinator::{ExperimentBuilder, RunEvent};
 use ol4el::harness::{self, EngineKind, SweepOpts};
 use ol4el::model::Task;
 use ol4el::sim::cost::CostMode;
 use ol4el::sim::hetero::HeteroProfile;
-use ol4el::coordinator::utility::UtilityKind;
 use ol4el::util::cli::{Args, Cli};
 use ol4el::util::json::Json;
 use ol4el::util::table::{f, Table};
@@ -80,9 +81,19 @@ fn train_cli() -> Cli {
         .opt("reg", "0.0001", "L2 regularization")
         .opt("lr-decay", "0.02", "per-global-update learning-rate decay")
         .opt("utility", "eval", "eval | delta (learning utility definition)")
-        .opt("bandit", "auto", "auto | kube | ucb-bv | ucb1 | eps-greedy | thompson")
+        .opt(
+            "bandit",
+            "auto",
+            "auto | kube[:EPS] | ucb-bv | ucb1 | eps-greedy[:EPS] | thompson; \
+             EPS = exploration rate in [0,1], default 0.1 (e.g. kube:0.2)",
+        )
         .opt("fixed-interval", "5", "interval for the fixed-i baseline")
-        .opt("partition", "iid", "iid | skew:<alpha>")
+        .opt(
+            "partition",
+            "iid",
+            "iid | label-skew[:ALPHA]; ALPHA = Dirichlet concentration > 0, \
+             default 0.5, smaller = more skew (e.g. label-skew:0.3)",
+        )
         .opt("data-n", "20000", "training set size")
         .opt("separation", "2.5", "dataset difficulty: class/cluster separation")
         .opt("staleness-decay", "0.5", "async merge staleness decay exponent")
@@ -94,11 +105,15 @@ fn train_cli() -> Cli {
         .opt("artifacts", "artifacts", "artifact directory for --engine pjrt")
         .opt_no_default("config", "load a JSON config file (flags override it)")
         .switch("trace", "print every trace point")
+        .switch("live", "stream global updates to stderr as they happen")
         .switch("json", "emit the result as JSON")
 }
 
-fn config_from_args(a: &Args) -> Result<RunConfig> {
-    let mut cfg = if let Some(path) = a.get("config") {
+/// Assemble an [`ExperimentBuilder`] from the CLI flag set. `--config`
+/// seeds the builder from the JSON wire format; every flag then overrides
+/// through the typed setters (flags all carry defaults).
+fn builder_from_args(a: &Args) -> Result<ExperimentBuilder> {
+    let base = if let Some(path) = a.get("config") {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow!("reading config '{path}': {e}"))?;
         let j = Json::parse(&text).map_err(|e| anyhow!("parsing config '{path}': {e}"))?;
@@ -106,43 +121,69 @@ fn config_from_args(a: &Args) -> Result<RunConfig> {
     } else {
         RunConfig::default()
     };
-    cfg.task = Task::parse(&a.str("task")).ok_or_else(|| anyhow!("bad --task"))?;
-    cfg.algo = Algo::parse(&a.str("algo")).ok_or_else(|| anyhow!("bad --algo"))?;
-    cfg.n_edges = a.usize("edges").map_err(|e| anyhow!(e))?;
-    cfg.hetero = a.f64("hetero").map_err(|e| anyhow!(e))?;
-    cfg.hetero_profile = HeteroProfile::parse(&a.str("hetero-profile"))
-        .ok_or_else(|| anyhow!("bad --hetero-profile"))?;
-    cfg.budget = a.f64("budget").map_err(|e| anyhow!(e))?;
-    cfg.cost.mode =
-        CostMode::parse(&a.str("cost-mode")).ok_or_else(|| anyhow!("bad --cost-mode"))?;
-    cfg.cost.base_comp = a.f64("base-comp").map_err(|e| anyhow!(e))?;
-    cfg.cost.base_comm = a.f64("base-comm").map_err(|e| anyhow!(e))?;
-    cfg.tau_max = a.usize("tau-max").map_err(|e| anyhow!(e))?;
-    cfg.hyper.lr = a.f64("lr").map_err(|e| anyhow!(e))? as f32;
-    cfg.hyper.reg = a.f64("reg").map_err(|e| anyhow!(e))? as f32;
-    cfg.hyper.lr_decay = a.f64("lr-decay").map_err(|e| anyhow!(e))? as f32;
-    cfg.utility =
-        UtilityKind::parse(&a.str("utility")).ok_or_else(|| anyhow!("bad --utility"))?;
-    cfg.bandit = BanditKind::parse(&a.str("bandit")).ok_or_else(|| anyhow!("bad --bandit"))?;
-    cfg.fixed_interval = a.usize("fixed-interval").map_err(|e| anyhow!(e))?;
-    cfg.partition =
-        PartitionKind::parse(&a.str("partition")).ok_or_else(|| anyhow!("bad --partition"))?;
-    cfg.data_n = a.usize("data-n").map_err(|e| anyhow!(e))?;
-    cfg.separation = a.f64("separation").map_err(|e| anyhow!(e))?;
-    cfg.staleness_decay = a.f64("staleness-decay").map_err(|e| anyhow!(e))?;
-    cfg.async_alpha = a.f64("async-alpha").map_err(|e| anyhow!(e))?;
-    cfg.eval_every = a.usize("eval-every").map_err(|e| anyhow!(e))?.max(1);
-    cfg.failure_rate = a.f64("failure-rate").map_err(|e| anyhow!(e))?;
-    cfg.seed = a.u64("seed").map_err(|e| anyhow!(e))?;
-    cfg.validate()?;
-    Ok(cfg)
+    let bandit_spec = a.str("bandit");
+    let partition_spec = a.str("partition");
+    Ok(ExperimentBuilder::from_config(base)
+        .task(Task::parse(&a.str("task")).ok_or_else(|| anyhow!("bad --task"))?)
+        .algo(Algo::parse(&a.str("algo")).ok_or_else(|| anyhow!("bad --algo"))?)
+        .edges(a.usize("edges").map_err(|e| anyhow!(e))?)
+        .hetero(a.f64("hetero").map_err(|e| anyhow!(e))?)
+        .hetero_profile(
+            HeteroProfile::parse(&a.str("hetero-profile"))
+                .ok_or_else(|| anyhow!("bad --hetero-profile"))?,
+        )
+        .budget(a.f64("budget").map_err(|e| anyhow!(e))?)
+        .cost_mode(
+            CostMode::parse(&a.str("cost-mode")).ok_or_else(|| anyhow!("bad --cost-mode"))?,
+        )
+        .base_costs(
+            a.f64("base-comp").map_err(|e| anyhow!(e))?,
+            a.f64("base-comm").map_err(|e| anyhow!(e))?,
+        )
+        .tau_max(a.usize("tau-max").map_err(|e| anyhow!(e))?)
+        .lr(a.f64("lr").map_err(|e| anyhow!(e))? as f32)
+        .reg(a.f64("reg").map_err(|e| anyhow!(e))? as f32)
+        .lr_decay(a.f64("lr-decay").map_err(|e| anyhow!(e))? as f32)
+        .utility(
+            UtilityKind::parse(&a.str("utility")).ok_or_else(|| anyhow!("bad --utility"))?,
+        )
+        .bandit(BanditKind::parse(&bandit_spec).ok_or_else(|| {
+            anyhow!("bad --bandit '{bandit_spec}' (grammar: auto | kube[:EPS] | ucb-bv | ucb1 | eps-greedy[:EPS] | thompson)")
+        })?)
+        .fixed_interval(a.usize("fixed-interval").map_err(|e| anyhow!(e))?)
+        .partition(PartitionKind::parse(&partition_spec).ok_or_else(|| {
+            anyhow!("bad --partition '{partition_spec}' (grammar: iid | label-skew[:ALPHA])")
+        })?)
+        .data_n(a.usize("data-n").map_err(|e| anyhow!(e))?)
+        .separation(a.f64("separation").map_err(|e| anyhow!(e))?)
+        .staleness_decay(a.f64("staleness-decay").map_err(|e| anyhow!(e))?)
+        .async_alpha(a.f64("async-alpha").map_err(|e| anyhow!(e))?)
+        .eval_every(a.usize("eval-every").map_err(|e| anyhow!(e))?)
+        .failure_rate(a.f64("failure-rate").map_err(|e| anyhow!(e))?)
+        .seed(a.u64("seed").map_err(|e| anyhow!(e))?))
 }
 
 fn cmd_train(argv: &[String]) -> Result<()> {
     let Some(a) = train_cli().parse(argv).map_err(|e| anyhow!(e))? else {
         return Ok(());
     };
-    let cfg = config_from_args(&a)?;
+    let mut builder = builder_from_args(&a)?;
+    if a.flag("live") {
+        // Streaming observer: narrate every recorded global update and
+        // every edge retirement while the run is still going.
+        builder = builder.observe(from_fn(|ev: &RunEvent| match ev {
+            RunEvent::GlobalUpdate { point } => eprintln!(
+                "[live] t={:>8.0}ms  spent={:>7.0}ms  updates={:>5}  metric={:.4}",
+                point.wall_ms, point.mean_spent, point.updates, point.metric
+            ),
+            RunEvent::EdgeRetired { edge, wall_ms, spent } => {
+                eprintln!("[live] edge {edge} retired at t={wall_ms:.0}ms ({spent:.0}ms spent)")
+            }
+            _ => {}
+        }));
+    }
+    let exp = builder.build()?;
+    let cfg = exp.config().clone();
     let engine_kind =
         EngineKind::parse(&a.str("engine")).ok_or_else(|| anyhow!("bad --engine"))?;
     let engine = harness::build_engine(engine_kind, &a.str("artifacts"))?;
@@ -157,7 +198,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         engine_kind.name()
     );
     let t0 = std::time::Instant::now();
-    let r = coordinator::run(&cfg, engine.as_ref())?;
+    let r = exp.run(engine.as_ref())?;
     let dt = t0.elapsed().as_secs_f64();
 
     if a.flag("json") {
@@ -217,7 +258,7 @@ fn cmd_deploy(argv: &[String]) -> Result<()> {
     let Some(a) = train_cli().parse(argv).map_err(|e| anyhow!(e))? else {
         return Ok(());
     };
-    let mut cfg = config_from_args(&a)?;
+    let mut cfg = builder_from_args(&a)?.build()?.into_config();
     cfg.cost.mode = CostMode::Measured;
     let engine = harness::build_engine(
         EngineKind::parse(&a.str("engine")).ok_or_else(|| anyhow!("bad --engine"))?,
@@ -255,13 +296,13 @@ fn cmd_fig(which: &str, argv: &[String]) -> Result<()> {
         quick: !a.flag("full"),
         seeds: a.u64("seeds").map_err(|e| anyhow!(e))?,
         engine: EngineKind::parse(&a.str("engine")).ok_or_else(|| anyhow!("bad --engine"))?,
+        artifacts: a.str("artifacts"),
     };
-    let engine = harness::build_engine(opts.engine, &a.str("artifacts"))?;
     let t0 = std::time::Instant::now();
     let tables = match which {
-        "fig3" => harness::fig3::run(engine.as_ref(), &opts)?,
-        "fig4" => harness::fig4::run(engine.as_ref(), &opts)?,
-        "fig5" => harness::fig5::run(engine.as_ref(), &opts)?,
+        "fig3" => harness::fig3::run(&opts)?,
+        "fig4" => harness::fig4::run(&opts)?,
+        "fig5" => harness::fig5::run(&opts)?,
         _ => unreachable!(),
     };
     let outdir = a.str("out");

@@ -1,9 +1,21 @@
-//! Conversions between flat Rust buffers and `xla::Literal`s.
+//! Conversions between flat Rust buffers and PJRT literals.
+//!
+//! With the `xla-backend` feature these wrap `xla::Literal`; without it
+//! they are stubs over an uninhabited type — constructors report the
+//! missing backend, extractors are unreachable (no literal can exist).
 
+#[cfg(feature = "xla-backend")]
 use anyhow::{anyhow, Context, Result};
 
+#[cfg(feature = "xla-backend")]
+pub type Literal = xla::Literal;
+
+#[cfg(not(feature = "xla-backend"))]
+pub enum Literal {}
+
 /// Build an f32 literal of the given shape from a flat row-major slice.
-pub fn f32_literal(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+#[cfg(feature = "xla-backend")]
+pub fn f32_literal(data: &[f32], dims: &[usize]) -> Result<Literal> {
     let expect: usize = dims.iter().product();
     if data.len() != expect {
         return Err(anyhow!(
@@ -23,7 +35,8 @@ pub fn f32_literal(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
 }
 
 /// Build an i32 literal of the given shape.
-pub fn i32_literal(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+#[cfg(feature = "xla-backend")]
+pub fn i32_literal(data: &[i32], dims: &[usize]) -> Result<Literal> {
     let expect: usize = dims.iter().product();
     if data.len() != expect {
         return Err(anyhow!(
@@ -43,26 +56,64 @@ pub fn i32_literal(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
 }
 
 /// Scalar f32 literal (for lr / reg parameters).
-pub fn scalar_f32(v: f32) -> xla::Literal {
-    xla::Literal::scalar(v)
+#[cfg(feature = "xla-backend")]
+pub fn scalar_f32(v: f32) -> Result<Literal> {
+    Ok(xla::Literal::scalar(v))
 }
 
 /// Extract an f32 vector from a literal (any shape, row-major flatten).
-pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+#[cfg(feature = "xla-backend")]
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
     lit.to_vec::<f32>()
         .map_err(|e| anyhow!("literal to f32 vec: {e:?}"))
 }
 
 /// Extract an i32 vector from a literal.
-pub fn to_i32_vec(lit: &xla::Literal) -> Result<Vec<i32>> {
+#[cfg(feature = "xla-backend")]
+pub fn to_i32_vec(lit: &Literal) -> Result<Vec<i32>> {
     lit.to_vec::<i32>()
         .map_err(|e| anyhow!("literal to i32 vec: {e:?}"))
 }
 
 /// Extract a single f32 (scalar or 1-element literal).
-pub fn to_f32_scalar(lit: &xla::Literal) -> Result<f32> {
+#[cfg(feature = "xla-backend")]
+pub fn to_f32_scalar(lit: &Literal) -> Result<f32> {
     let v = to_f32_vec(lit)?;
     v.first()
         .copied()
         .context("expected at least one element in scalar literal")
 }
+
+#[cfg(not(feature = "xla-backend"))]
+mod stubs {
+    use super::Literal;
+    use crate::runtime::STUB_MSG;
+    use anyhow::{anyhow, Result};
+
+    pub fn f32_literal(_data: &[f32], _dims: &[usize]) -> Result<Literal> {
+        Err(anyhow!(STUB_MSG))
+    }
+
+    pub fn i32_literal(_data: &[i32], _dims: &[usize]) -> Result<Literal> {
+        Err(anyhow!(STUB_MSG))
+    }
+
+    pub fn scalar_f32(_v: f32) -> Result<Literal> {
+        Err(anyhow!(STUB_MSG))
+    }
+
+    pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+        match *lit {}
+    }
+
+    pub fn to_i32_vec(lit: &Literal) -> Result<Vec<i32>> {
+        match *lit {}
+    }
+
+    pub fn to_f32_scalar(lit: &Literal) -> Result<f32> {
+        match *lit {}
+    }
+}
+
+#[cfg(not(feature = "xla-backend"))]
+pub use stubs::*;

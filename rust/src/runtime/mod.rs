@@ -3,128 +3,32 @@
 //! CPU PJRT client. This is the only place the `xla` crate is touched;
 //! Python never runs on this path.
 //!
+//! The `xla` bindings cannot be vendored into the offline build image, so
+//! the real implementation lives in `xla_impl` behind the `xla-backend`
+//! cargo feature (enabling it also requires adding the `xla` dependency to
+//! Cargo.toml). Without the feature, `stub::Runtime` presents the same API
+//! but fails at `open()` with a clear message — every native-engine path
+//! (the simulator default) is unaffected.
+//!
 //! Pattern follows /opt/xla-example/load_hlo: HLO *text* -> HloModuleProto
 //! -> XlaComputation -> client.compile -> execute. Text is the interchange
 //! format because xla_extension 0.5.1 rejects jax>=0.5 serialized protos.
 
 pub mod literal;
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+#[cfg(feature = "xla-backend")]
+mod xla_impl;
+#[cfg(feature = "xla-backend")]
+pub use xla_impl::Runtime;
 
-use anyhow::{anyhow, Context, Result};
+#[cfg(not(feature = "xla-backend"))]
+mod stub;
+#[cfg(not(feature = "xla-backend"))]
+pub use stub::Runtime;
 
-use crate::engine::Shapes;
-use crate::util::json::Json;
-
-/// A loaded artifact directory: PJRT client + manifest + compiled
-/// executables (compiled lazily, cached by entrypoint name).
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    pub manifest: Json,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
-}
-
-impl Runtime {
-    /// Open `dir` (usually "artifacts/"), parse its manifest and create the
-    /// PJRT CPU client.
-    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
-        let mpath = dir.join("manifest.json");
-        let mtext = std::fs::read_to_string(&mpath)
-            .with_context(|| format!("reading {} (run `make artifacts` first)", mpath.display()))?;
-        let manifest = Json::parse(&mtext).map_err(|e| anyhow!("manifest.json: {e}"))?;
-        let format = manifest
-            .get("format")
-            .and_then(Json::as_str)
-            .unwrap_or_default();
-        if format != "hlo-text/return-tuple" {
-            return Err(anyhow!("unsupported artifact format '{format}'"));
-        }
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
-        Ok(Runtime {
-            client,
-            dir,
-            manifest,
-            exes: HashMap::new(),
-        })
-    }
-
-    /// Deployment shapes recorded by the AOT step; used to cross-check the
-    /// Rust-side `Shapes` contract.
-    pub fn manifest_shapes(&self) -> Result<Shapes> {
-        let g = |p: &[&str]| -> Result<usize> {
-            self.manifest
-                .path(p)
-                .and_then(Json::as_usize)
-                .ok_or_else(|| anyhow!("manifest missing {:?}", p))
-        };
-        Ok(Shapes {
-            svm_d: g(&["shapes", "svm", "d"])?,
-            svm_c: g(&["shapes", "svm", "c"])?,
-            svm_batch: g(&["shapes", "svm", "batch"])?,
-            svm_eval_batch: g(&["shapes", "svm", "eval_batch"])?,
-            km_d: g(&["shapes", "kmeans", "d"])?,
-            km_k: g(&["shapes", "kmeans", "k"])?,
-            km_batch: g(&["shapes", "kmeans", "batch"])?,
-            km_eval_batch: g(&["shapes", "kmeans", "eval_batch"])?,
-        })
-    }
-
-    /// Entrypoint names present in the manifest.
-    pub fn entrypoints(&self) -> Vec<String> {
-        self.manifest
-            .get("entrypoints")
-            .and_then(Json::as_obj)
-            .map(|o| o.keys().cloned().collect())
-            .unwrap_or_default()
-    }
-
-    /// Compile (or fetch the cached) executable for an entrypoint.
-    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.exes.contains_key(name) {
-            let file = self
-                .manifest
-                .path(&["entrypoints", name, "file"])
-                .and_then(Json::as_str)
-                .ok_or_else(|| anyhow!("entrypoint '{name}' not in manifest"))?;
-            let path = self.dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-            self.exes.insert(name.to_string(), exe);
-        }
-        Ok(&self.exes[name])
-    }
-
-    /// Execute an entrypoint with the given argument literals; returns the
-    /// decomposed output tuple (return_tuple=True lowering).
-    pub fn run(&mut self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let exe = self.executable(name)?;
-        let result = exe
-            .execute::<xla::Literal>(args)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
-        let lit = result
-            .first()
-            .and_then(|r| r.first())
-            .ok_or_else(|| anyhow!("{name}: empty execution result"))?
-            .to_literal_sync()
-            .map_err(|e| anyhow!("{name}: to_literal_sync: {e:?}"))?;
-        lit.to_tuple()
-            .map_err(|e| anyhow!("{name}: decomposing output tuple: {e:?}"))
-    }
-
-    /// Number of addressable devices (diagnostics).
-    pub fn device_count(&self) -> usize {
-        self.client.device_count()
-    }
-
-    pub fn platform_name(&self) -> String {
-        self.client.platform_name()
-    }
-}
+/// The one error message every stubbed entrypoint reports.
+#[cfg(not(feature = "xla-backend"))]
+pub(crate) const STUB_MSG: &str =
+    "PJRT backend unavailable: ol4el was built without the `xla-backend` feature \
+     (the `xla` crate is not vendored in offline builds). Use `--engine native`, \
+     or add the xla dependency and rebuild with `--features xla-backend`";

@@ -1,0 +1,52 @@
+//! Offline stand-in for the PJRT runtime (built when the `xla-backend`
+//! feature is off). `Runtime::open` always fails with a clear message, so
+//! none of the other methods can ever be reached — they exist only to keep
+//! the call sites in `engine/pjrt.rs` and `main.rs` compiling unchanged.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::engine::Shapes;
+use crate::runtime::literal::Literal;
+use crate::runtime::STUB_MSG;
+use crate::util::json::Json;
+
+/// An executable handle that can never exist without the real backend.
+pub enum Executable {}
+
+/// Stub runtime: `open` fails, everything else is unreachable.
+pub struct Runtime {
+    pub manifest: Json,
+    never: Executable,
+}
+
+impl Runtime {
+    pub fn open(_dir: impl AsRef<Path>) -> Result<Self> {
+        Err(anyhow!(STUB_MSG))
+    }
+
+    pub fn manifest_shapes(&self) -> Result<Shapes> {
+        match self.never {}
+    }
+
+    pub fn entrypoints(&self) -> Vec<String> {
+        match self.never {}
+    }
+
+    pub fn executable(&mut self, _name: &str) -> Result<&Executable> {
+        match self.never {}
+    }
+
+    pub fn run(&mut self, _name: &str, _args: &[Literal]) -> Result<Vec<Literal>> {
+        match self.never {}
+    }
+
+    pub fn device_count(&self) -> usize {
+        match self.never {}
+    }
+
+    pub fn platform_name(&self) -> String {
+        match self.never {}
+    }
+}

@@ -2,9 +2,10 @@
 //! engine, checking the paper's qualitative claims hold end to end.
 
 use ol4el::config::{Algo, RunConfig};
-use ol4el::coordinator;
+use ol4el::coordinator::{self, observer, Experiment, RunEvent};
 use ol4el::engine::native::NativeEngine;
 use ol4el::model::Task;
+use std::sync::{Arc, Mutex};
 
 fn cfg(task: Task, algo: Algo) -> RunConfig {
     RunConfig {
@@ -186,4 +187,90 @@ fn config_json_roundtrip_through_run() {
     let a = coordinator::run(&c, &engine).unwrap();
     let b = coordinator::run(&c2, &engine).unwrap();
     assert_eq!(a.final_metric, b.final_metric);
+}
+
+#[test]
+fn observer_global_updates_mirror_trace_bit_for_bit() {
+    // Acceptance criterion of the Session redesign: an Observer registered
+    // via the builder receives exactly the GlobalUpdate stream that
+    // RunResult::trace is rebuilt from — bit-for-bit, both manners.
+    let engine = NativeEngine::default();
+    for algo in [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::AcSync, Algo::FixedI] {
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let sink = seen.clone();
+        let result = Experiment::builder()
+            .task(Task::Svm)
+            .algo(algo)
+            .edges(3)
+            .budget(2000.0)
+            .data_n(5000)
+            .seed(3)
+            .paper_regime()
+            .observe(observer::from_fn(move |ev: &RunEvent| {
+                if let RunEvent::GlobalUpdate { point } = ev {
+                    sink.lock().unwrap().push(point.clone());
+                }
+            }))
+            .run(&engine)
+            .unwrap();
+        let seen = seen.lock().unwrap();
+        assert_eq!(seen.len(), result.trace.len(), "{}", algo.name());
+        for (streamed, recorded) in seen.iter().zip(&result.trace) {
+            assert_eq!(streamed, recorded, "{}", algo.name());
+        }
+    }
+}
+
+#[test]
+fn experiment_builder_reproduces_wire_config_runs() {
+    // The builder is a front door over the same wire format: identical
+    // settings must give identical runs (same RNG schedule end to end).
+    let engine = NativeEngine::default();
+    let wire = cfg(Task::Svm, Algo::Ol4elAsync);
+    let a = coordinator::run(&wire, &engine).unwrap();
+    let b = Experiment::builder()
+        .task(Task::Svm)
+        .algo(Algo::Ol4elAsync)
+        .edges(3)
+        .hetero(1.0)
+        .budget(2000.0)
+        .data_n(5000)
+        .seed(3)
+        .paper_regime()
+        .run(&engine)
+        .unwrap();
+    assert_eq!(a.final_metric, b.final_metric);
+    assert_eq!(a.total_updates, b.total_updates);
+    assert_eq!(a.tau_histogram, b.tau_histogram);
+    assert_eq!(a.trace.len(), b.trace.len());
+}
+
+#[test]
+fn finished_event_matches_run_result() {
+    let engine = NativeEngine::default();
+    let summary = Arc::new(Mutex::new(None));
+    let sink = summary.clone();
+    let result = Experiment::builder()
+        .task(Task::Kmeans)
+        .algo(Algo::Ol4elAsync)
+        .edges(3)
+        .budget(1500.0)
+        .data_n(4000)
+        .seed(9)
+        .observe(observer::from_fn(move |ev: &RunEvent| {
+            if let RunEvent::Finished {
+                wall_ms,
+                updates,
+                final_metric,
+            } = ev
+            {
+                *sink.lock().unwrap() = Some((*wall_ms, *updates, *final_metric));
+            }
+        }))
+        .run(&engine)
+        .unwrap();
+    let (wall_ms, updates, final_metric) = summary.lock().unwrap().unwrap();
+    assert_eq!(wall_ms, result.wall_ms);
+    assert_eq!(updates, result.total_updates);
+    assert_eq!(final_metric, result.final_metric);
 }

@@ -1,0 +1,187 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build image resolves dependencies from vendored paths only, so the
+//! real crate cannot be fetched. This shim is source-compatible with the
+//! narrow surface the workspace uses:
+//!
+//! * [`Error`] — a string-backed error with a chain of context frames;
+//! * [`Result<T>`] — `Result` defaulted to that error type;
+//! * [`anyhow!`] — ad-hoc error construction from a message, a format
+//!   string, or any `Display` value;
+//! * [`bail!`] — early-return an [`anyhow!`] error;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//!
+//! Like the real crate, `Error` deliberately does NOT implement
+//! `std::error::Error`; that is what permits the blanket
+//! `From<E: std::error::Error>` conversion powering `?`.
+
+use std::fmt;
+
+/// A string-backed error with outer context frames (most recent first).
+pub struct Error {
+    msg: String,
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Construct from anything printable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error {
+            msg: m.to_string(),
+            context: Vec::new(),
+        }
+    }
+
+    /// Wrap a concrete error value.
+    pub fn new<E: std::error::Error>(e: E) -> Error {
+        Error::msg(e)
+    }
+
+    /// Attach an outer context frame.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.context.push(c.to_string());
+        self
+    }
+
+    fn render(&self) -> String {
+        let mut parts: Vec<&str> = self.context.iter().rev().map(|s| s.as_str()).collect();
+        parts.push(&self.msg);
+        parts.join(": ")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.render())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.render())
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result` with the error type defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a message literal (with inline captures), a
+/// single printable expression, or a format string with arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Context extension for `Result` and `Option`.
+pub trait Context<T> {
+    /// Attach a context frame to the error.
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+
+    /// Attach a lazily-evaluated context frame to the error.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn macro_forms() {
+        let lit = anyhow!("plain message");
+        assert_eq!(lit.to_string(), "plain message");
+        let v = 3;
+        let inline = anyhow!("value {v}");
+        assert_eq!(inline.to_string(), "value 3");
+        let fmt = anyhow!("value {}", 7);
+        assert_eq!(fmt.to_string(), "value 7");
+        let from_expr = anyhow!(String::from("owned"));
+        assert_eq!(from_expr.to_string(), "owned");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e: Result<()> = std::result::Result::<(), _>::Err(io_err())
+            .context("reading manifest")
+            .map_err(|e| e.context("opening artifacts"));
+        assert_eq!(
+            e.unwrap_err().to_string(),
+            "opening artifacts: reading manifest: missing"
+        );
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u8> = None;
+        assert_eq!(none.context("empty").unwrap_err().to_string(), "empty");
+        let lazy: Option<u8> = None;
+        assert!(lazy.with_context(|| format!("{}", 1)).is_err());
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(fail: bool) -> Result<u8> {
+            if fail {
+                bail!("boom {}", 1);
+            }
+            Ok(9)
+        }
+        assert_eq!(f(false).unwrap(), 9);
+        assert_eq!(f(true).unwrap_err().to_string(), "boom 1");
+    }
+}
