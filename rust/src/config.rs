@@ -5,6 +5,7 @@ use anyhow::{anyhow, Result};
 
 use crate::edge::Hyper;
 use crate::model::Task;
+use crate::net::{ChurnSpec, NetworkSpec};
 use crate::sim::cost::{CostMode, CostModel};
 use crate::sim::hetero::HeteroProfile;
 use crate::coordinator::utility::UtilityKind;
@@ -198,6 +199,13 @@ pub struct RunConfig {
     /// (async manner; synchronous EL is fail-stop for the whole cohort by
     /// construction).
     pub failure_rate: f64,
+    /// Network conditions of the edge↔cloud links (`net::NetworkSpec`
+    /// grammar, e.g. `lognormal:5:0.5,drop:0.01`); `ideal` routes through
+    /// the legacy direct-call fast path.
+    pub network: NetworkSpec,
+    /// Fleet churn schedule (`net::ChurnSpec` grammar, e.g.
+    /// `poisson:0.01,join:0.05`); `none` keeps the fleet static.
+    pub churn: ChurnSpec,
     pub seed: u64,
 }
 
@@ -226,6 +234,8 @@ impl Default for RunConfig {
             separation: 2.5,
             eval_every: 1,
             failure_rate: 0.0,
+            network: NetworkSpec::ideal(),
+            churn: ChurnSpec::none(),
             seed: 42,
         }
     }
@@ -296,6 +306,8 @@ impl RunConfig {
             ("separation", Json::num(self.separation)),
             ("eval_every", Json::num(self.eval_every as f64)),
             ("failure_rate", Json::num(self.failure_rate)),
+            ("network", Json::str(self.network.spec())),
+            ("churn", Json::str(self.churn.spec())),
             ("seed", Json::num(self.seed as f64)),
         ])
     }
@@ -387,6 +399,12 @@ impl RunConfig {
         if let Some(n) = gn("failure_rate") {
             cfg.failure_rate = n;
         }
+        if let Some(s) = gs("network") {
+            cfg.network = NetworkSpec::parse(s).ok_or_else(|| anyhow!("bad network '{s}'"))?;
+        }
+        if let Some(s) = gs("churn") {
+            cfg.churn = ChurnSpec::parse(s).ok_or_else(|| anyhow!("bad churn '{s}'"))?;
+        }
         if let Some(n) = gn("seed") {
             cfg.seed = n as u64;
         }
@@ -432,6 +450,12 @@ impl RunConfig {
         if !(0.0..=1.0).contains(&self.failure_rate) {
             return Err(anyhow!("failure_rate must be in [0, 1]"));
         }
+        // The net specs enforce the same ranges their wire grammar does
+        // (same precedent as the bandit ε check above).
+        self.network
+            .check()
+            .map_err(|e| anyhow!("network spec: {e}"))?;
+        self.churn.check().map_err(|e| anyhow!("churn spec: {e}"))?;
         Ok(())
     }
 }

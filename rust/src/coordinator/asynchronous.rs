@@ -103,7 +103,7 @@ impl CollaborationMode for AsyncMerge {
             return Ok(None); // every ledger exhausted: the run is over
         };
         s.wall_ms = self.queue.now();
-        let i = ev.edge;
+        let i = ev.payload;
         let fl = self.inflight[i]
             .take()
             .expect("completion without in-flight round");

@@ -28,6 +28,7 @@ use crate::coordinator::session::Session;
 use crate::coordinator::RunResult;
 use crate::engine::ComputeEngine;
 use crate::model::Task;
+use crate::net::{ChurnSpec, NetworkSpec};
 use crate::sim::cost::{CostMode, CostModel};
 use crate::sim::hetero::HeteroProfile;
 use crate::coordinator::utility::UtilityKind;
@@ -307,6 +308,23 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Network conditions of the edge↔cloud links. Anything other than
+    /// [`NetworkSpec::ideal`] routes the run through the transport-backed
+    /// collaboration manners, whose latency/drop/partition delays are
+    /// charged to the edges' ledgers and to the bandit's observed costs.
+    pub fn network(mut self, spec: NetworkSpec) -> Self {
+        self.cfg.network = spec;
+        self
+    }
+
+    /// Fleet churn schedule (Poisson join/leave, crash-restart, straggle);
+    /// anything other than [`ChurnSpec::none`] routes through the
+    /// transport-backed manners.
+    pub fn churn(mut self, spec: ChurnSpec) -> Self {
+        self.cfg.churn = spec;
+        self
+    }
+
     pub fn seed(mut self, seed: u64) -> Self {
         self.cfg.seed = seed;
         self
@@ -439,6 +457,21 @@ mod tests {
         assert_eq!(a.final_metric, b.final_metric);
         assert_eq!(a.total_updates, b.total_updates);
         assert_eq!(a.trace.len(), b.trace.len());
+    }
+
+    #[test]
+    fn builder_sets_network_and_churn() {
+        let exp = Experiment::builder()
+            .network(NetworkSpec::parse("lognormal:5:0.5,drop:0.01").unwrap())
+            .churn(ChurnSpec::parse("poisson:0.01,join:0.05").unwrap())
+            .build()
+            .unwrap();
+        assert!(!exp.config().network.is_ideal());
+        assert!(!exp.config().churn.is_none());
+        // And the wire format carries both round-trip.
+        let back = Experiment::from_json(&exp.to_json()).unwrap();
+        assert_eq!(back.config().network, exp.config().network);
+        assert_eq!(back.config().churn, exp.config().churn);
     }
 
     #[test]

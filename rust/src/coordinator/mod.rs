@@ -35,8 +35,8 @@ pub mod utility;
 
 pub use experiment::{Experiment, ExperimentBuilder};
 pub use observer::{LocalReport, Observer, RunEvent, TraceObserver};
-pub use session::{default_mode, CollaborationMode, Session};
-pub use suite::{find_outcome, CellSpec, ExperimentSuite, SuiteOutcome};
+pub use session::{default_mode, mode_for, CollaborationMode, Session};
+pub use suite::{find_outcome, find_outcome_net, CellSpec, ExperimentSuite, SuiteOutcome};
 
 use std::sync::Arc;
 
@@ -163,6 +163,11 @@ pub trait IntervalStrategy {
     /// System-state observation hook (AC-sync uses it; bandits ignore it).
     fn observe_round(&mut self, _obs: &RoundObservation) {}
 
+    /// Churn hook: edge `edge` joined mid-run with the given nominal arm
+    /// costs. Per-edge strategies allocate state here; shared/static
+    /// policies can ignore it (their `select` is edge-agnostic).
+    fn on_edge_joined(&mut self, _edge: usize, _arm_costs: Vec<f64>) {}
+
     /// Pull histogram over τ (diagnostics; arms indexed τ-1).
     fn tau_histogram(&self) -> Vec<u64>;
 }
@@ -173,6 +178,19 @@ pub trait IntervalStrategy {
 pub struct Ol4elStrategy {
     bandits: Vec<Box<dyn BudgetedBandit>>,
     shared: bool,
+    kind: BanditKind,
+}
+
+/// Construct one budgeted bandit of `kind` over the given arm costs.
+fn build_bandit(kind: BanditKind, costs: Vec<f64>) -> Box<dyn BudgetedBandit> {
+    match kind {
+        BanditKind::Kube { epsilon } => Box::new(Kube::new(costs, epsilon)),
+        BanditKind::UcbBv => Box::new(UcbBv::new(costs)),
+        BanditKind::Ucb1 => Box::new(Ucb1::new(costs)),
+        BanditKind::EpsGreedy { epsilon } => Box::new(EpsGreedy::new(costs, epsilon)),
+        BanditKind::Thompson => Box::new(Thompson::new(costs)),
+        BanditKind::Auto => unreachable!("resolve Auto before constructing"),
+    }
 }
 
 impl Ol4elStrategy {
@@ -180,18 +198,15 @@ impl Ol4elStrategy {
     /// the shared/sync case pass a single entry with barrier costs).
     pub fn new(kind: BanditKind, arm_costs_per_edge: Vec<Vec<f64>>, shared: bool) -> Self {
         assert!(!arm_costs_per_edge.is_empty());
-        let build = |costs: Vec<f64>| -> Box<dyn BudgetedBandit> {
-            match kind {
-                BanditKind::Kube { epsilon } => Box::new(Kube::new(costs, epsilon)),
-                BanditKind::UcbBv => Box::new(UcbBv::new(costs)),
-                BanditKind::Ucb1 => Box::new(Ucb1::new(costs)),
-                BanditKind::EpsGreedy { epsilon } => Box::new(EpsGreedy::new(costs, epsilon)),
-                BanditKind::Thompson => Box::new(Thompson::new(costs)),
-                BanditKind::Auto => unreachable!("resolve Auto before constructing"),
-            }
-        };
-        let bandits: Vec<_> = arm_costs_per_edge.into_iter().map(build).collect();
-        Ol4elStrategy { bandits, shared }
+        let bandits: Vec<_> = arm_costs_per_edge
+            .into_iter()
+            .map(|costs| build_bandit(kind, costs))
+            .collect();
+        Ol4elStrategy {
+            bandits,
+            shared,
+            kind,
+        }
     }
 
     fn bandit_for(&mut self, edge: usize) -> &mut Box<dyn BudgetedBandit> {
@@ -217,6 +232,15 @@ impl IntervalStrategy for Ol4elStrategy {
 
     fn feedback(&mut self, edge: usize, tau: usize, utility: f64, cost: f64) {
         self.bandit_for(edge).update(tau - 1, utility, cost);
+    }
+
+    fn on_edge_joined(&mut self, edge: usize, arm_costs: Vec<f64>) {
+        if self.shared {
+            return; // one bandit for the whole cohort (sync)
+        }
+        // Per-edge bandits: the joiner starts a fresh model at its index.
+        assert_eq!(edge, self.bandits.len(), "non-contiguous edge join");
+        self.bandits.push(build_bandit(self.kind, arm_costs));
     }
 
     fn tau_histogram(&self) -> Vec<u64> {
@@ -382,6 +406,31 @@ impl World {
             .map(|e| e.model.l2_distance(&self.global))
             .sum::<f64>()
             / self.edges.len() as f64
+    }
+
+    /// Churn: add a fresh edge mid-run. It adopts the CURRENT global model
+    /// (it downloads on arrival), a full budget, a shard cloned from a
+    /// random incumbent (a joiner brings comparable local data), and a
+    /// slowdown drawn uniformly from the configured heterogeneity range.
+    /// Aggregation weights are recomputed over the grown fleet. Returns
+    /// the new edge's index.
+    pub fn spawn_edge(&mut self, cfg: &RunConfig) -> usize {
+        let id = self.edges.len();
+        let donor = self.rng.below(id.max(1));
+        let shard = self.edges[donor].shard.clone();
+        let slowdown = self.rng.range_f64(1.0, cfg.hetero.max(1.0)).max(1.0);
+        let child_rng = self.rng.split();
+        let mut edge = EdgeServer::new(id, shard, self.global.clone(), slowdown, cfg.budget, child_rng);
+        edge.base_version = self.version;
+        self.edges.push(edge);
+        self.slowdowns.push(slowdown);
+        let total_rows: usize = self.edges.iter().map(|e| e.shard.len()).sum();
+        self.weights = self
+            .edges
+            .iter()
+            .map(|e| e.shard.len() as f64 / total_rows as f64)
+            .collect();
+        id
     }
 }
 

@@ -44,11 +44,23 @@ pub enum RunEvent {
     /// The global model advanced; the payload mirrors the legacy trace
     /// point (emitted at the eval cadence plus the opening/closing points).
     GlobalUpdate { point: TracePoint },
-    /// An edge left the run (budget exhausted or fail-stop crash).
+    /// An edge left the run (budget exhausted, fail-stop crash, or churn
+    /// departure).
     EdgeRetired {
         edge: usize,
         wall_ms: f64,
         spent: f64,
+    },
+    /// An edge entered the run after t=0: a churn join (fresh edge) or a
+    /// crash-restart rejoin of a previously retired edge.
+    EdgeJoined { edge: usize, wall_ms: f64 },
+    /// A network message to/from `edge` dropped `attempts` times; `lost`
+    /// means every retransmit failed and the payload never arrived.
+    MessageDropped {
+        edge: usize,
+        wall_ms: f64,
+        attempts: u32,
+        lost: bool,
     },
     /// The run is over; `RunResult` carries the full summary.
     Finished {

@@ -57,6 +57,20 @@ pub fn default_mode(algo: Algo) -> Box<dyn CollaborationMode> {
     }
 }
 
+/// The manner for a full config: the legacy direct-call manners when the
+/// network is ideal and the fleet static (byte-identical fast path), the
+/// transport-backed `net::` manners as soon as latency, loss, partitions
+/// or churn are configured.
+pub fn mode_for(cfg: &RunConfig) -> Box<dyn CollaborationMode> {
+    if cfg.network.is_ideal() && cfg.churn.is_none() {
+        return default_mode(cfg.algo);
+    }
+    match cfg.algo {
+        Algo::Ol4elAsync => Box::new(crate::net::NetAsyncMerge::new()),
+        _ => Box::new(crate::net::NetSyncBarrier::new()),
+    }
+}
+
 /// One configured run in flight: shared state + the engine loop.
 ///
 /// Build one from an [`Experiment`](super::Experiment) (preferred) or
@@ -190,9 +204,36 @@ impl<'e> Session<'e> {
         }
     }
 
-    /// Run to completion with the manner matching `cfg.algo`.
+    /// Churn: add a fresh edge to the fleet mid-run (full budget, donor
+    /// shard, slowdown drawn from the configured heterogeneity range) and
+    /// announce it to the strategy and the observers. Returns its index.
+    pub fn join_edge(&mut self) -> usize {
+        let i = self.world.spawn_edge(&self.cfg);
+        let costs = self.cfg.cost.arm_costs(self.cfg.tau_max, self.world.slowdowns[i]);
+        self.strategy.on_edge_joined(i, costs);
+        self.retired_seen.push(false);
+        let wall_ms = self.wall_ms;
+        self.emit(RunEvent::EdgeJoined { edge: i, wall_ms });
+        i
+    }
+
+    /// Churn: bring a crash-retired edge back (ledger intact). Refuses
+    /// when the budget is already exhausted. Emits `EdgeJoined`.
+    pub fn revive_edge(&mut self, i: usize) -> bool {
+        if self.world.edges[i].remaining() <= 0.0 || !self.world.edges[i].retired {
+            return false;
+        }
+        self.world.edges[i].revive();
+        self.retired_seen[i] = false;
+        let wall_ms = self.wall_ms;
+        self.emit(RunEvent::EdgeJoined { edge: i, wall_ms });
+        true
+    }
+
+    /// Run to completion with the manner matching the config (algorithm +
+    /// network/churn specs).
     pub fn run(self) -> Result<RunResult> {
-        let mut mode = default_mode(self.cfg.algo);
+        let mut mode = mode_for(&self.cfg);
         self.run_with(mode.as_mut())
     }
 
@@ -221,6 +262,9 @@ impl<'e> Session<'e> {
             }
             self.sweep_retirements();
         }
+        // Catch retirements from the draining step (e.g. a churn departure
+        // popping right before the event queue empties).
+        self.sweep_retirements();
 
         // Final evaluation + closing trace point, exactly like the legacy
         // drivers (the closing point may duplicate the last cadence point).

@@ -17,6 +17,7 @@ use crate::config::{Algo, RunConfig};
 use crate::coordinator::{self, Aggregate, RunResult};
 use crate::engine::{build_engine, ComputeEngine, EngineKind};
 use crate::model::Task;
+use crate::net::NetworkSpec;
 
 /// The axis coordinates of one grid cell.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -49,6 +50,7 @@ pub struct ExperimentSuite {
     algos: Vec<Algo>,
     fleet_sizes: Vec<usize>,
     heteros: Vec<f64>,
+    networks: Vec<NetworkSpec>,
     seeds: Vec<u64>,
     workers: usize,
     retain_runs: bool,
@@ -66,6 +68,7 @@ impl ExperimentSuite {
             algos: Vec::new(),
             fleet_sizes: Vec::new(),
             heteros: Vec::new(),
+            networks: Vec::new(),
             seeds,
             workers: 0,
             retain_runs: false,
@@ -97,6 +100,17 @@ impl ExperimentSuite {
         self
     }
 
+    /// Network-condition axis: every cell is repeated under each
+    /// [`NetworkSpec`] (the innermost axis; the spec lands in the cell's
+    /// `cfg.network`, routing it through the transport-backed manners).
+    /// `CellSpec` does not carry this axis — address specific cells with
+    /// [`find_outcome_net`] (plain [`find_outcome`] returns the first
+    /// network's cell).
+    pub fn networks(mut self, ns: impl IntoIterator<Item = NetworkSpec>) -> Self {
+        self.networks = ns.into_iter().collect();
+        self
+    }
+
     /// Seeds every cell runs across (aggregated per cell).
     pub fn seeds(mut self, seeds: impl IntoIterator<Item = u64>) -> Self {
         self.seeds = seeds.into_iter().collect();
@@ -124,37 +138,44 @@ impl ExperimentSuite {
         self
     }
 
-    /// Materialize the grid (task-major, then algo, fleet size, hetero).
+    /// Materialize the grid (task-major, then algo, fleet size, hetero,
+    /// network).
     pub fn cells(&self) -> Vec<(CellSpec, RunConfig)> {
         let one_task = [self.base.task];
         let one_algo = [self.base.algo];
         let one_n = [self.base.n_edges];
         let one_h = [self.base.hetero];
+        let one_net = [self.base.network.clone()];
         let tasks: &[Task] = if self.tasks.is_empty() { &one_task } else { &self.tasks };
         let algos: &[Algo] = if self.algos.is_empty() { &one_algo } else { &self.algos };
         let ns: &[usize] = if self.fleet_sizes.is_empty() { &one_n } else { &self.fleet_sizes };
         let hs: &[f64] = if self.heteros.is_empty() { &one_h } else { &self.heteros };
+        let nets: &[NetworkSpec] = if self.networks.is_empty() { &one_net } else { &self.networks };
 
-        let mut cells = Vec::with_capacity(tasks.len() * algos.len() * ns.len() * hs.len());
+        let cap = tasks.len() * algos.len() * ns.len() * hs.len() * nets.len();
+        let mut cells = Vec::with_capacity(cap);
         for &task in tasks {
             for &algo in algos {
                 for &n_edges in ns {
                     for &hetero in hs {
-                        let mut cfg = self.base.clone();
-                        cfg.task = task;
-                        cfg.algo = algo;
-                        cfg.n_edges = n_edges;
-                        cfg.hetero = hetero;
-                        if let Some(f) = &self.tweak {
-                            f(&mut cfg);
+                        for net in nets {
+                            let mut cfg = self.base.clone();
+                            cfg.task = task;
+                            cfg.algo = algo;
+                            cfg.n_edges = n_edges;
+                            cfg.hetero = hetero;
+                            cfg.network = net.clone();
+                            if let Some(f) = &self.tweak {
+                                f(&mut cfg);
+                            }
+                            let spec = CellSpec {
+                                task: cfg.task,
+                                algo: cfg.algo,
+                                n_edges: cfg.n_edges,
+                                hetero: cfg.hetero,
+                            };
+                            cells.push((spec, cfg));
                         }
-                        let spec = CellSpec {
-                            task: cfg.task,
-                            algo: cfg.algo,
-                            n_edges: cfg.n_edges,
-                            hetero: cfg.hetero,
-                        };
-                        cells.push((spec, cfg));
                     }
                 }
             }
@@ -269,6 +290,11 @@ impl ExperimentSuite {
 }
 
 /// Look up a cell's outcome by its axis coordinates.
+///
+/// `CellSpec` does not carry the network axis (it predates it and stays
+/// `Copy`), so in a suite built with [`ExperimentSuite::networks`] this
+/// returns the FIRST matching cell — i.e. the first network in the axis.
+/// Use [`find_outcome_net`] to disambiguate across network conditions.
 pub fn find_outcome<'a>(
     outcomes: &'a [SuiteOutcome],
     task: Task,
@@ -281,6 +307,26 @@ pub fn find_outcome<'a>(
             && o.spec.algo == algo
             && o.spec.n_edges == n_edges
             && o.spec.hetero == hetero
+    })
+}
+
+/// [`find_outcome`] additionally keyed by the cell's network condition
+/// (matched against the resolved `cfg.network`) — required to address a
+/// specific cell of a suite swept with [`ExperimentSuite::networks`].
+pub fn find_outcome_net<'a>(
+    outcomes: &'a [SuiteOutcome],
+    task: Task,
+    algo: Algo,
+    n_edges: usize,
+    hetero: f64,
+    network: &NetworkSpec,
+) -> Option<&'a SuiteOutcome> {
+    outcomes.iter().find(|o| {
+        o.spec.task == task
+            && o.spec.algo == algo
+            && o.spec.n_edges == n_edges
+            && o.spec.hetero == hetero
+            && &o.cfg.network == network
     })
 }
 
@@ -402,6 +448,45 @@ mod tests {
         let suite = ExperimentSuite::new("t", base);
         let err = suite.run_native().unwrap_err().to_string();
         assert!(err.contains("cell 0"), "{err}");
+    }
+
+    #[test]
+    fn network_axis_crosses_cells() {
+        let suite = ExperimentSuite::new("t", small_base())
+            .heteros([1.0, 4.0])
+            .networks([
+                NetworkSpec::ideal(),
+                NetworkSpec::parse("fixed:20").unwrap(),
+            ]);
+        let cells = suite.cells();
+        assert_eq!(cells.len(), 4);
+        assert!(cells[0].1.network.is_ideal());
+        assert!(!cells[1].1.network.is_ideal());
+        // Unset axis falls back to the base's network.
+        let plain = ExperimentSuite::new("t", small_base());
+        assert!(plain.cells()[0].1.network.is_ideal());
+    }
+
+    #[test]
+    fn find_outcome_net_disambiguates_network_cells() {
+        let fixed = NetworkSpec::parse("fixed:20").unwrap();
+        let suite = ExperimentSuite::new("t", small_base())
+            .networks([NetworkSpec::ideal(), fixed.clone()]);
+        let outs = suite.run_native().unwrap();
+        assert_eq!(outs.len(), 2);
+        // The plain lookup cannot tell the two cells apart (first wins)...
+        let first = find_outcome(&outs, Task::Svm, Algo::Ol4elAsync, 3, 1.0).unwrap();
+        assert!(first.cfg.network.is_ideal());
+        // ...the net-aware lookup addresses each condition exactly.
+        let slow = find_outcome_net(&outs, Task::Svm, Algo::Ol4elAsync, 3, 1.0, &fixed).unwrap();
+        assert_eq!(slow.cfg.network, fixed);
+        assert!(
+            find_outcome_net(&outs, Task::Svm, Algo::Ol4elAsync, 3, 1.0, &NetworkSpec::ideal())
+                .unwrap()
+                .cfg
+                .network
+                .is_ideal()
+        );
     }
 
     #[test]

@@ -124,6 +124,15 @@ impl EdgeServer {
         (self.spent / self.budget).min(1.0)
     }
 
+    /// Churn: bring a crash-retired edge back into the run. Its ledger is
+    /// untouched — a restart recovers the process, not the budget — so an
+    /// exhausted edge stays retired.
+    pub fn revive(&mut self) {
+        if self.spent < self.budget {
+            self.retired = false;
+        }
+    }
+
     /// Run τ local iterations on `engine`, charging compute resource per
     /// the cost model. Does NOT charge communication (the coordinator does
     /// that at the global update, where it also decides sync-barrier

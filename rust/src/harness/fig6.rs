@@ -1,0 +1,162 @@
+//! "Figure 6" — a scale figure the paper's 3-edge testbed could not
+//! produce: OL4EL's update throughput under fleet size × network
+//! conditions × churn, measured with the engine-free [`FleetSim`] over the
+//! message-passing transport.
+//!
+//! The sweep asks the system-scale questions the ROADMAP's heavy-traffic
+//! north star cares about: how does the asynchronous protocol's update
+//! rate degrade as WAN latency grows heavy-tailed, how much work do drops
+//! waste, and what does Poisson churn do to effective fleet capacity —
+//! at thousands of edges, in seconds of host time.
+
+use anyhow::Result;
+
+use crate::config::{Algo, RunConfig};
+use crate::harness::SweepOpts;
+use crate::net::{ChurnSpec, FleetSim, NetworkSpec};
+use crate::util::stats::Welford;
+use crate::util::table::{f, Table};
+
+pub fn edge_grid(quick: bool) -> Vec<usize> {
+    if quick {
+        vec![100, 500, 2000]
+    } else {
+        vec![1000, 5000, 10_000]
+    }
+}
+
+/// (label, spec) network conditions swept per fleet size.
+pub fn network_grid() -> Vec<(&'static str, NetworkSpec)> {
+    vec![
+        ("ideal", NetworkSpec::ideal()),
+        (
+            "lan 5ms",
+            NetworkSpec::parse("lognormal:5:0.3").expect("static spec"),
+        ),
+        (
+            "wan 20ms+drops",
+            NetworkSpec::parse("lognormal:20:0.8,drop:0.02").expect("static spec"),
+        ),
+    ]
+}
+
+/// (label, spec) churn schedules swept per fleet size.
+pub fn churn_grid() -> Vec<(&'static str, ChurnSpec)> {
+    vec![
+        ("static", ChurnSpec::none()),
+        (
+            "churny",
+            ChurnSpec::parse("poisson:0.05,join:0.1,restart:2000").expect("static spec"),
+        ),
+    ]
+}
+
+/// The base fleet config for one cell.
+pub fn cell_config(n: usize, algo: Algo) -> RunConfig {
+    RunConfig {
+        algo,
+        n_edges: n,
+        hetero: 4.0,
+        budget: 3000.0,
+        eval_every: 1000,
+        data_n: 20_000.max(n),
+        ..Default::default()
+    }
+}
+
+/// Run the sweep; one table of async fleet behavior plus a sync straggler
+/// comparison column.
+pub fn run(opts: &SweepOpts) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Fig 6: fleet scale x network x churn (engine-free protocol sim, budget 3000ms)",
+        &[
+            "edges",
+            "network",
+            "churn",
+            "updates",
+            "upd/edge",
+            "lost msgs",
+            "joined",
+            "virtual wall s",
+            "sync updates",
+            "Mevents/s",
+        ],
+    );
+    for n in edge_grid(opts.quick) {
+        for (net_label, net) in network_grid() {
+            for (churn_label, churn) in churn_grid() {
+                let mut updates = Welford::new();
+                let mut lost = Welford::new();
+                let mut joined = Welford::new();
+                let mut wall = Welford::new();
+                let mut sync_updates = Welford::new();
+                let mut evps = Welford::new();
+                for seed in opts.seed_list() {
+                    let mut cfg = cell_config(n, Algo::Ol4elAsync);
+                    cfg.network = net.clone();
+                    cfg.churn = churn.clone();
+                    cfg.seed = seed;
+                    let r = FleetSim::new(cfg.clone())?.run()?;
+                    updates.push(r.updates as f64);
+                    lost.push(r.messages_lost as f64);
+                    joined.push(r.joined as f64);
+                    wall.push(r.wall_ms / 1000.0);
+                    evps.push(r.events_per_sec());
+                    let mut scfg = cfg;
+                    scfg.algo = Algo::Ol4elSync;
+                    let rs = FleetSim::new(scfg)?.run()?;
+                    sync_updates.push(rs.updates as f64);
+                }
+                t.row(vec![
+                    n.to_string(),
+                    net_label.to_string(),
+                    churn_label.to_string(),
+                    f(updates.mean(), 0),
+                    f(updates.mean() / n as f64, 2),
+                    f(lost.mean(), 0),
+                    f(joined.mean(), 0),
+                    f(wall.mean(), 1),
+                    f(sync_updates.mean(), 0),
+                    f(evps.mean() / 1e6, 2),
+                ]);
+            }
+        }
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids_are_wellformed() {
+        assert_eq!(edge_grid(true).len(), 3);
+        assert!(edge_grid(false).iter().all(|&n| n >= 1000));
+        for (label, n) in network_grid() {
+            assert!(n.check().is_ok(), "{label}");
+        }
+        for (label, c) in churn_grid() {
+            assert!(c.check().is_ok(), "{label}");
+        }
+    }
+
+    #[test]
+    fn tiny_sweep_produces_full_grid() {
+        // A miniature fig6: every (network x churn) cell at one small
+        // fleet size, single seed — the full harness in microcosm.
+        let mut rows = 0;
+        for (_, net) in network_grid() {
+            for (_, churn) in churn_grid() {
+                let mut cfg = cell_config(50, Algo::Ol4elAsync);
+                cfg.budget = 800.0;
+                cfg.network = net.clone();
+                cfg.churn = churn.clone();
+                let r = FleetSim::new(cfg).unwrap().run().unwrap();
+                assert!(r.updates > 0);
+                rows += 1;
+            }
+        }
+        assert_eq!(rows, 6);
+    }
+}

@@ -2,11 +2,14 @@
 //! paper reports. One submodule per paper figure (Fig. 3, 4, 5); each is a
 //! grid spec over [`ExperimentSuite`](crate::coordinator::ExperimentSuite)
 //! (worker-threaded, one engine per worker) rendered into tables, driven
-//! both by `cargo bench --bench figN` and by the `ol4el figN` CLI.
+//! both by `cargo bench --bench figN` and by the `ol4el figN` CLI. Fig. 6
+//! goes beyond the paper: an engine-free fleet-scale sweep (edge count ×
+//! network × churn) over [`FleetSim`](crate::net::FleetSim).
 
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;
+pub mod fig6;
 
 use anyhow::Result;
 

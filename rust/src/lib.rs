@@ -46,8 +46,20 @@
 //!
 //! Multi-run sweeps are declarative grids over
 //! [`ExperimentSuite`](coordinator::ExperimentSuite) (seeds × tasks ×
-//! algorithms × fleet sizes × heterogeneity), executed on worker threads —
-//! the `harness` figure generators are such grid specs.
+//! algorithms × fleet sizes × heterogeneity × network conditions),
+//! executed on worker threads — the `harness` figure generators are such
+//! grid specs.
+//!
+//! ## The network layer
+//!
+//! The `net` module turns coordinator↔edge interaction into explicit
+//! messages over an object-safe [`Transport`](net::Transport): pluggable
+//! [`NetworkSpec`](net::NetworkSpec)s (latency / bandwidth / drop+retry /
+//! partitions), [`ChurnSpec`](net::ChurnSpec)s (Poisson join/leave,
+//! crash-restart, straggle), transport-backed collaboration manners that
+//! reproduce the direct-call engine bit for bit under the ideal network,
+//! and [`FleetSim`](net::FleetSim) — the engine-free protocol simulator
+//! that scales the whole stack to thousands of edges (`ol4el fleet`).
 //!
 //! The request path is pure Rust: `runtime/` loads the HLO artifacts via
 //! the PJRT C API (`xla` crate, behind the `xla-backend` feature) and
@@ -68,6 +80,7 @@ pub mod engine;
 pub mod harness;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod runtime;
 pub mod sim;
 pub mod testkit;

@@ -10,6 +10,7 @@ use ol4el::coordinator::utility::UtilityKind;
 use ol4el::coordinator::{ExperimentBuilder, RunEvent};
 use ol4el::harness::{self, EngineKind, SweepOpts};
 use ol4el::model::Task;
+use ol4el::net::{ChurnSpec, FleetSim, NetworkSpec};
 use ol4el::sim::cost::CostMode;
 use ol4el::sim::hetero::HeteroProfile;
 use ol4el::util::cli::{Args, Cli};
@@ -34,9 +35,18 @@ fn usage() -> String {
      Subcommands:\n\
        train               run one training configuration and print its trace\n\
        deploy              threaded testbed: one OS thread per edge, measured costs\n\
-       fig3 | fig4 | fig5  regenerate a paper figure (tables + results/*.csv)\n\
+       fleet               engine-free fleet simulation at 1000s of edges\n\
+                           (message-passing transport, network + churn models)\n\
+       fig3 .. fig6        regenerate a figure (tables + results/*.csv)\n\
        inspect-artifacts   show the AOT artifact manifest and PJRT platform\n\
        config              print the default config as JSON (edit + pass via --config)\n\
+     \n\
+     Spec grammars (shared by flags and the JSON wire format):\n\
+       --network  ideal | fixed:MS | uniform:LO:HI | lognormal:MEDIAN:SIGMA\n\
+                  [,bw:MBPS][,drop:P][,timeout:MS][,retries:N][,part:START-END]\n\
+       --churn    none | poisson:LEAVE[,join:RATE][,restart:MS][,straggle:P:FACTOR]\n\
+       --bandit   auto | kube[:EPS] | ucb-bv | ucb1 | eps-greedy[:EPS] | thompson\n\
+       --partition iid | label-skew[:ALPHA]\n\
      \n\
      Run `ol4el <subcommand> --help` for flags.\n"
         .to_string()
@@ -51,7 +61,8 @@ fn run_cli(argv: &[String]) -> Result<()> {
     match cmd.as_str() {
         "train" => cmd_train(rest),
         "deploy" => cmd_deploy(rest),
-        "fig3" | "fig4" | "fig5" => cmd_fig(cmd, rest),
+        "fleet" => cmd_fleet(rest),
+        "fig3" | "fig4" | "fig5" | "fig6" => cmd_fig(cmd, rest),
         "inspect-artifacts" => cmd_inspect(rest),
         "config" => {
             println!("{}", RunConfig::default().to_json().pretty());
@@ -100,6 +111,19 @@ fn train_cli() -> Cli {
         .opt("async-alpha", "0.6", "async base mixing rate at a merge")
         .opt("eval-every", "1", "record a trace point every k global updates")
         .opt("failure-rate", "0", "per-round probability an edge fail-stops (async)")
+        .opt(
+            "network",
+            "ideal",
+            "ideal | fixed:MS | uniform:LO:HI | lognormal:MEDIAN:SIGMA, \
+             plus [,bw:MBPS][,drop:P][,timeout:MS][,retries:N][,part:START-END] \
+             (e.g. lognormal:5:0.5,drop:0.01)",
+        )
+        .opt(
+            "churn",
+            "none",
+            "none | poisson:LEAVE[,join:RATE][,restart:MS][,straggle:P:FACTOR]; \
+             rates are events per 1000 virtual ms (e.g. poisson:0.01,join:0.05)",
+        )
         .opt("seed", "42", "PRNG seed")
         .opt("engine", "native", "native | pjrt (the full 3-layer path)")
         .opt("artifacts", "artifacts", "artifact directory for --engine pjrt")
@@ -160,7 +184,27 @@ fn builder_from_args(a: &Args) -> Result<ExperimentBuilder> {
         .async_alpha(a.f64("async-alpha").map_err(|e| anyhow!(e))?)
         .eval_every(a.usize("eval-every").map_err(|e| anyhow!(e))?)
         .failure_rate(a.f64("failure-rate").map_err(|e| anyhow!(e))?)
+        .network(parse_network(&a.str("network"))?)
+        .churn(parse_churn(&a.str("churn"))?)
         .seed(a.u64("seed").map_err(|e| anyhow!(e))?))
+}
+
+fn parse_network(spec: &str) -> Result<NetworkSpec> {
+    NetworkSpec::parse(spec).ok_or_else(|| {
+        anyhow!(
+            "bad --network '{spec}' (grammar: ideal | fixed:MS | uniform:LO:HI | \
+             lognormal:MEDIAN:SIGMA[,bw:MBPS][,drop:P][,timeout:MS][,retries:N][,part:START-END])"
+        )
+    })
+}
+
+fn parse_churn(spec: &str) -> Result<ChurnSpec> {
+    ChurnSpec::parse(spec).ok_or_else(|| {
+        anyhow!(
+            "bad --churn '{spec}' (grammar: none | \
+             poisson:LEAVE[,join:RATE][,restart:MS][,straggle:P:FACTOR])"
+        )
+    })
 }
 
 fn cmd_train(argv: &[String]) -> Result<()> {
@@ -279,6 +323,199 @@ fn cmd_deploy(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn fleet_cli() -> Cli {
+    Cli::new(
+        "ol4el fleet",
+        "engine-free fleet simulation: the OL4EL protocol + transport at scale",
+    )
+    .opt("edges", "5000", "fleet size at t=0")
+    .opt("mode", "async", "async | sync | both (collaboration manner)")
+    .opt("hetero", "4.0", "heterogeneity ratio H (>= 1)")
+    .opt("hetero-profile", "linear", "linear | random")
+    .opt("budget", "5000", "per-edge resource budget (ms)")
+    .opt("cost-mode", "fixed", "fixed | variable (no engine to measure)")
+    .opt("base-comp", "40", "nominal compute ms per local iteration")
+    .opt("base-comm", "60", "nominal communication ms per global update")
+    .opt("tau-max", "10", "longest global update interval (arm count)")
+    .opt("bandit", "auto", "auto | kube[:EPS] | ucb-bv | ucb1 | eps-greedy[:EPS] | thompson")
+    .opt(
+        "network",
+        "lognormal:5:0.5",
+        "network spec (see `ol4el --help` for the grammar)",
+    )
+    .opt("churn", "none", "churn spec (see `ol4el --help` for the grammar)")
+    .opt("model-bytes", "4096", "serialized model size driving transfer times")
+    .opt("eval-every", "100", "emit a GlobalUpdate trace point every k updates")
+    .opt("failure-rate", "0", "per-launch probability an edge fail-stops")
+    .opt("seed", "42", "PRNG seed")
+    .opt("bench-out", "BENCH_fleet.json", "where --smoke writes its numbers")
+    .switch("smoke", "perf smoke: run sync+async, write bench JSON, assert liveness")
+    .switch("live", "stream joins/retirements/drops to stderr")
+    .switch("json", "emit the report as JSON")
+}
+
+/// Assemble the fleet config from the CLI flag set.
+fn fleet_config(a: &Args, sync: bool) -> Result<RunConfig> {
+    let n_edges = a.usize("edges").map_err(|e| anyhow!(e))?;
+    let bandit_spec = a.str("bandit");
+    let defaults = RunConfig::default();
+    let mut cost = defaults.cost;
+    cost.mode = CostMode::parse(&a.str("cost-mode")).ok_or_else(|| anyhow!("bad --cost-mode"))?;
+    cost.base_comp = a.f64("base-comp").map_err(|e| anyhow!(e))?;
+    cost.base_comm = a.f64("base-comm").map_err(|e| anyhow!(e))?;
+    Ok(RunConfig {
+        algo: if sync { Algo::Ol4elSync } else { Algo::Ol4elAsync },
+        n_edges,
+        hetero: a.f64("hetero").map_err(|e| anyhow!(e))?,
+        hetero_profile: HeteroProfile::parse(&a.str("hetero-profile"))
+            .ok_or_else(|| anyhow!("bad --hetero-profile"))?,
+        budget: a.f64("budget").map_err(|e| anyhow!(e))?,
+        cost,
+        tau_max: a.usize("tau-max").map_err(|e| anyhow!(e))?,
+        bandit: BanditKind::parse(&bandit_spec)
+            .ok_or_else(|| anyhow!("bad --bandit '{bandit_spec}'"))?,
+        network: parse_network(&a.str("network"))?,
+        churn: parse_churn(&a.str("churn"))?,
+        eval_every: a.usize("eval-every").map_err(|e| anyhow!(e))?.max(1),
+        failure_rate: a.f64("failure-rate").map_err(|e| anyhow!(e))?,
+        seed: a.u64("seed").map_err(|e| anyhow!(e))?,
+        // The fleet trains no model; keep validate()'s data_n >= n_edges
+        // invariant satisfied without generating anything.
+        data_n: defaults.data_n.max(n_edges),
+        ..defaults
+    })
+}
+
+fn run_fleet(a: &Args, sync: bool) -> Result<ol4el::net::FleetReport> {
+    let mut sim = FleetSim::new(fleet_config(a, sync)?)?
+        .model_bytes(a.f64("model-bytes").map_err(|e| anyhow!(e))?);
+    if a.flag("live") {
+        sim = sim.observe(from_fn(|ev: &RunEvent| match ev {
+            RunEvent::EdgeJoined { edge, wall_ms } => {
+                eprintln!("[fleet] edge {edge} joined at t={wall_ms:.0}ms")
+            }
+            RunEvent::EdgeRetired { edge, wall_ms, spent } => {
+                eprintln!("[fleet] edge {edge} retired at t={wall_ms:.0}ms ({spent:.0}ms spent)")
+            }
+            RunEvent::MessageDropped { edge, wall_ms, attempts, lost } => eprintln!(
+                "[fleet] edge {edge}: {attempts} drops at t={wall_ms:.0}ms{}",
+                if *lost { " (LOST)" } else { "" }
+            ),
+            RunEvent::GlobalUpdate { point } => eprintln!(
+                "[fleet] t={:>9.0}ms updates={:>7} progress={:.3}",
+                point.wall_ms, point.updates, point.metric
+            ),
+            _ => {}
+        }));
+    }
+    sim.run()
+}
+
+fn fleet_report_json(r: &ol4el::net::FleetReport) -> Json {
+    Json::obj(vec![
+        ("edges", Json::num(r.n_edges as f64)),
+        ("joined", Json::num(r.joined as f64)),
+        ("retired", Json::num(r.retired as f64)),
+        ("updates", Json::num(r.updates as f64)),
+        ("virtual_wall_ms", Json::num(r.wall_ms)),
+        ("mean_spent_ms", Json::num(r.mean_spent)),
+        ("messages_sent", Json::num(r.messages_sent as f64)),
+        ("messages_lost", Json::num(r.messages_lost as f64)),
+        ("dropped_attempts", Json::num(r.dropped_attempts as f64)),
+        ("events", Json::num(r.events as f64)),
+        ("events_per_sec", Json::num(r.events_per_sec())),
+        ("peak_queue_depth", Json::num(r.peak_queue_depth as f64)),
+        ("host_seconds", Json::num(r.host_seconds)),
+    ])
+}
+
+fn print_fleet_report(mode: &str, r: &ol4el::net::FleetReport) {
+    println!(
+        "[{mode}] edges={} (+{} joined)  updates={}  virtual_wall={:.0}ms  mean_spent={:.0}ms",
+        r.n_edges, r.joined, r.updates, r.wall_ms, r.mean_spent
+    );
+    println!(
+        "[{mode}] messages={} (lost {}, {} dropped attempts)  events={} ({:.2} M/s)  peak_queue={}  host={:.2}s",
+        r.messages_sent,
+        r.messages_lost,
+        r.dropped_attempts,
+        r.events,
+        r.events_per_sec() / 1e6,
+        r.peak_queue_depth,
+        r.host_seconds
+    );
+}
+
+fn cmd_fleet(argv: &[String]) -> Result<()> {
+    let Some(a) = fleet_cli().parse(argv).map_err(|e| anyhow!(e))? else {
+        return Ok(());
+    };
+    if a.flag("smoke") {
+        return cmd_fleet_smoke(&a);
+    }
+    let mode = a.str("mode");
+    let runs: Vec<(&str, bool)> = match mode.as_str() {
+        "async" => vec![("async", false)],
+        "sync" => vec![("sync", true)],
+        "both" => vec![("sync", true), ("async", false)],
+        other => return Err(anyhow!("bad --mode '{other}' (async | sync | both)")),
+    };
+    let mut out = Vec::new();
+    for (name, sync) in runs {
+        let r = run_fleet(&a, sync)?;
+        print_fleet_report(name, &r);
+        out.push((name, r));
+    }
+    if a.flag("json") {
+        let j = Json::obj(
+            out.iter()
+                .map(|(name, r)| (*name, fleet_report_json(r)))
+                .collect(),
+        );
+        println!("{}", j.pretty());
+    }
+    Ok(())
+}
+
+/// The perf smoke behind CI's scale job: run the sync and async protocols
+/// at the configured scale and write wall time, throughput and queue
+/// high-water marks to `--bench-out` (BENCH_fleet.json).
+fn cmd_fleet_smoke(a: &Args) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    let r_async = run_fleet(a, false)?;
+    let r_sync = run_fleet(a, true)?;
+    let host_seconds = t0.elapsed().as_secs_f64();
+    for (name, r) in [("async", &r_async), ("sync", &r_sync)] {
+        print_fleet_report(name, r);
+        if r.updates == 0 {
+            return Err(anyhow!("fleet smoke: {name} made no updates"));
+        }
+    }
+    let events = r_async.events + r_sync.events;
+    let j = Json::obj(vec![
+        ("edges", Json::num(r_async.n_edges as f64)),
+        ("host_seconds", Json::num(host_seconds)),
+        (
+            "events_per_sec",
+            Json::num(if host_seconds > 0.0 {
+                events as f64 / host_seconds
+            } else {
+                0.0
+            }),
+        ),
+        (
+            "peak_queue_depth",
+            Json::num(r_async.peak_queue_depth.max(r_sync.peak_queue_depth) as f64),
+        ),
+        ("async", fleet_report_json(&r_async)),
+        ("sync", fleet_report_json(&r_sync)),
+    ]);
+    let path = a.str("bench-out");
+    std::fs::write(&path, j.pretty()).map_err(|e| anyhow!("writing {path}: {e}"))?;
+    eprintln!("[ol4el] wrote {path} ({host_seconds:.2}s host)");
+    Ok(())
+}
+
 fn fig_cli(name: &'static str) -> Cli {
     Cli::new(name, "regenerate a paper figure")
         .opt("engine", "native", "native | pjrt")
@@ -303,6 +540,7 @@ fn cmd_fig(which: &str, argv: &[String]) -> Result<()> {
         "fig3" => harness::fig3::run(&opts)?,
         "fig4" => harness::fig4::run(&opts)?,
         "fig5" => harness::fig5::run(&opts)?,
+        "fig6" => harness::fig6::run(&opts)?,
         _ => unreachable!(),
     };
     let outdir = a.str("out");

@@ -1,0 +1,236 @@
+//! Edge churn schedules and their wire grammar.
+//!
+//! A [`ChurnSpec`] describes how the fleet's membership evolves while a
+//! run is in flight: Poisson departures and joins, crash-restart, and
+//! transient per-round straggle. Grammar (alongside the `kube:0.2`-style
+//! bandit specs):
+//!
+//! ```text
+//! churn := 'none' | 'poisson:LEAVE' ( ',' knob )*
+//! knob  := 'join:RATE'          fleet-level join rate
+//!        | 'restart:MS'         departed edges come back after MS (crash-restart)
+//!        | 'straggle:P:FACTOR'  with prob P a round takes FACTOR x longer
+//! ```
+//!
+//! Rates are events per 1000 virtual ms: `poisson:0.01` means each edge
+//! departs with rate 0.01/s of simulated time; `join:0.05` means a new
+//! edge joins the fleet at 0.05/s (capped at the starting fleet size so
+//! runs stay finite). e.g. `poisson:0.01,join:0.05,straggle:0.1:4`.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::rng::Rng;
+
+/// Seed perturbation for the dedicated churn RNG stream — shared by every
+/// churn driver (Session manners and the fleet sim) so identical specs
+/// sample identical schedules for a given run seed.
+pub(crate) const CHURN_SEED: u64 = 0x6368_7572_6e5f_7267; // "churn_rg"
+
+/// The dedicated churn RNG for a run seed (independent of the training
+/// and transport streams).
+pub(crate) fn churn_rng(seed: u64) -> Rng {
+    Rng::new(seed ^ CHURN_SEED)
+}
+
+/// The churn schedule of a run (validated, JSON-round-trippable).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChurnSpec {
+    /// Per-edge departure rate (events per 1000 virtual ms).
+    pub leave_rate: f64,
+    /// Fleet-level join rate (events per 1000 virtual ms).
+    pub join_rate: f64,
+    /// When > 0, a departed edge restarts after this many ms (crash-restart
+    /// with its ledger intact); 0 = departures are permanent.
+    pub restart_ms: f64,
+    /// Per-round probability a launch straggles.
+    pub straggle_p: f64,
+    /// Wall-clock multiplier applied to a straggling round's completion
+    /// (the ledger is charged the nominal cost — contention slows the
+    /// round down, it does not consume extra budget).
+    pub straggle_factor: f64,
+}
+
+impl Default for ChurnSpec {
+    fn default() -> Self {
+        ChurnSpec::none()
+    }
+}
+
+impl ChurnSpec {
+    /// A static fleet: no joins, no leaves, no straggle.
+    pub fn none() -> ChurnSpec {
+        ChurnSpec {
+            leave_rate: 0.0,
+            join_rate: 0.0,
+            restart_ms: 0.0,
+            straggle_p: 0.0,
+            straggle_factor: 1.0,
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.leave_rate == 0.0 && self.join_rate == 0.0 && self.straggle_p == 0.0
+    }
+
+    /// Sample the next event gap (ms) of a Poisson process with `rate`
+    /// events per 1000 ms; `None` when the rate is zero (never fires).
+    /// Draws nothing from the RNG when the rate is zero.
+    pub fn exp_gap_ms(rate: f64, rng: &mut Rng) -> Option<f64> {
+        if rate <= 0.0 {
+            return None;
+        }
+        let u = rng.f64().max(f64::EPSILON);
+        Some(-u.ln() / rate * 1000.0)
+    }
+
+    /// Parse the grammar documented at the module head. Rejects exactly
+    /// what [`check`](ChurnSpec::check) rejects.
+    pub fn parse(s: &str) -> Option<ChurnSpec> {
+        let s = s.to_ascii_lowercase();
+        if s == "none" {
+            return Some(ChurnSpec::none());
+        }
+        let mut clauses = s.split(',');
+        let head = clauses.next()?.trim();
+        let leave = head.strip_prefix("poisson:")?;
+        let mut spec = ChurnSpec {
+            leave_rate: leave.parse().ok()?,
+            ..ChurnSpec::none()
+        };
+        for clause in clauses {
+            let mut parts = clause.trim().split(':');
+            match (parts.next()?, parts.next(), parts.next(), parts.next()) {
+                ("join", Some(r), None, None) => spec.join_rate = r.parse().ok()?,
+                ("restart", Some(ms), None, None) => spec.restart_ms = ms.parse().ok()?,
+                ("straggle", Some(p), Some(f), None) => {
+                    spec.straggle_p = p.parse().ok()?;
+                    spec.straggle_factor = f.parse().ok()?;
+                }
+                _ => return None,
+            }
+        }
+        spec.check().ok()?;
+        Some(spec)
+    }
+
+    /// The canonical round-trippable spec string; default knobs omitted.
+    pub fn spec(&self) -> String {
+        if self.is_none() {
+            return "none".to_string();
+        }
+        let mut s = format!("poisson:{}", self.leave_rate);
+        if self.join_rate > 0.0 {
+            s.push_str(&format!(",join:{}", self.join_rate));
+        }
+        if self.restart_ms > 0.0 {
+            s.push_str(&format!(",restart:{}", self.restart_ms));
+        }
+        if self.straggle_p > 0.0 {
+            s.push_str(&format!(",straggle:{}:{}", self.straggle_p, self.straggle_factor));
+        }
+        s
+    }
+
+    /// Validate value ranges — the typed world must be no looser than the
+    /// wire grammar (`RunConfig::validate` calls this).
+    pub fn check(&self) -> Result<()> {
+        for (name, rate) in [("leave", self.leave_rate), ("join", self.join_rate)] {
+            if !(rate.is_finite() && rate >= 0.0) {
+                return Err(anyhow!("churn {name} rate must be finite and >= 0, got {rate}"));
+            }
+        }
+        if !(self.restart_ms.is_finite() && self.restart_ms >= 0.0) {
+            return Err(anyhow!(
+                "churn restart must be finite and >= 0 ms, got {}",
+                self.restart_ms
+            ));
+        }
+        if !(0.0..1.0).contains(&self.straggle_p) {
+            return Err(anyhow!(
+                "straggle probability must be in [0, 1), got {}",
+                self.straggle_p
+            ));
+        }
+        if !(self.straggle_factor.is_finite() && self.straggle_factor >= 1.0) {
+            return Err(anyhow!(
+                "straggle factor must be >= 1, got {}",
+                self.straggle_factor
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_none() {
+        let c = ChurnSpec::none();
+        assert!(c.is_none());
+        assert!(c.check().is_ok());
+        assert_eq!(c.spec(), "none");
+        assert_eq!(ChurnSpec::parse("none"), Some(c));
+    }
+
+    #[test]
+    fn grammar_parses_full_spec() {
+        let c = ChurnSpec::parse("poisson:0.01,join:0.05,restart:3000,straggle:0.1:4").unwrap();
+        assert_eq!(c.leave_rate, 0.01);
+        assert_eq!(c.join_rate, 0.05);
+        assert_eq!(c.restart_ms, 3000.0);
+        assert_eq!(c.straggle_p, 0.1);
+        assert_eq!(c.straggle_factor, 4.0);
+        assert!(!c.is_none());
+    }
+
+    #[test]
+    fn grammar_rejects_nonsense() {
+        for bad in [
+            "junk",
+            "poisson",
+            "poisson:-1",
+            "poisson:nan",
+            "poisson:0.1,join:-2",
+            "poisson:0.1,restart:-5",
+            "poisson:0.1,straggle:0.5",
+            "poisson:0.1,straggle:1.5:2",
+            "poisson:0.1,straggle:0.5:0.5",
+            "poisson:0.1,warp:9",
+        ] {
+            assert!(ChurnSpec::parse(bad).is_none(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn spec_roundtrips() {
+        for s in [
+            "none",
+            "poisson:0.01",
+            "poisson:0,join:0.05",
+            "poisson:0.02,restart:500",
+            "poisson:0.01,join:0.05,restart:3000,straggle:0.1:4",
+        ] {
+            let c = ChurnSpec::parse(s).unwrap();
+            assert_eq!(ChurnSpec::parse(&c.spec()), Some(c.clone()), "{s}");
+        }
+    }
+
+    #[test]
+    fn exp_gap_mean_matches_rate() {
+        let mut rng = Rng::new(11);
+        // rate 0.5 events per second -> mean gap 2000 ms.
+        let n = 20_000;
+        let mean: f64 = (0..n)
+            .map(|_| ChurnSpec::exp_gap_ms(0.5, &mut rng).unwrap())
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - 2000.0).abs() < 60.0, "mean {mean}");
+        // Zero rate never fires and draws nothing.
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(1);
+        assert_eq!(ChurnSpec::exp_gap_ms(0.0, &mut a), None);
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+}

@@ -1,0 +1,795 @@
+//! Fleet-scale simulation: the OL4EL protocol at thousands of edges.
+//!
+//! [`FleetSim`] runs the synchronous barrier or asynchronous merge
+//! *protocol* — bandit interval selection, budget ledgers, message passing
+//! over a [`SimTransport`], network delays/drops and the full
+//! [`ChurnSpec`] — without a compute engine or real models. Local rounds
+//! are virtual: their resource cost is priced by the [`CostModel`]
+//! (fixed/variable), and learning progress is a synthetic
+//! diminishing-returns curve, so a 10k-edge run is bounded by event
+//! processing (O(log n) per event on the shared kernel), not by matrix
+//! math. This is the system-scale lens the paper's 3-edge testbed cannot
+//! provide: how update throughput, drops and churn interact as the fleet
+//! grows.
+//!
+//! The driver streams the same [`RunEvent`] vocabulary as the real
+//! [`Session`] engine (`RoundStart`/`LocalReport`/`GlobalUpdate`/
+//! `EdgeJoined`/`EdgeRetired`/`MessageDropped`/`Finished`), so observers
+//! written for training runs work unchanged at fleet scale.
+//!
+//! [`Session`]: crate::coordinator::Session
+//! [`CostModel`]: crate::sim::cost::CostModel
+
+use anyhow::{anyhow, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::observer::{LocalReport, Observer, RunEvent};
+use crate::coordinator::{build_strategy, IntervalStrategy, TracePoint};
+use crate::net::churn::{churn_rng, ChurnSpec};
+use crate::net::message::{Delivery, Message, NetEvent, Occurrence, Payload};
+use crate::net::transport::{SimTransport, Transport};
+use crate::sim::cost::{CostMode, CostModel};
+use crate::util::rng::Rng;
+
+/// Default serialized model size for fleet messages (bytes).
+pub const DEFAULT_MODEL_BYTES: f64 = 4096.0;
+
+/// Summary of one fleet-scale run.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    /// Edges at t=0.
+    pub n_edges: usize,
+    /// Churn joins that actually happened.
+    pub joined: usize,
+    /// Edges retired (budget, crash or departure) by the end.
+    pub retired: usize,
+    /// Global updates achieved within the budgets.
+    pub updates: u64,
+    /// Virtual wall-clock of the run (ms).
+    pub wall_ms: f64,
+    /// Mean per-edge resource consumed (ms).
+    pub mean_spent: f64,
+    /// Synthetic progress metric at the end (diminishing-returns curve).
+    pub final_progress: f64,
+    pub messages_sent: u64,
+    pub messages_lost: u64,
+    pub dropped_attempts: u64,
+    /// Events popped off the shared kernel.
+    pub events: u64,
+    /// High-water mark of the kernel queue depth.
+    pub peak_queue_depth: usize,
+    /// Host wall-clock the simulation took (seconds).
+    pub host_seconds: f64,
+}
+
+impl FleetReport {
+    /// Kernel throughput: events per host second.
+    pub fn events_per_sec(&self) -> f64 {
+        if self.host_seconds > 0.0 {
+            self.events as f64 / self.host_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The fleet-scale driver. Reuses [`RunConfig`] for everything it shares
+/// with training runs (fleet size, heterogeneity, budgets, cost model,
+/// bandit, network, churn, eval cadence, seed); `task`/`data_n` are
+/// ignored — no data is generated and no model is trained.
+pub struct FleetSim {
+    cfg: RunConfig,
+    model_bytes: f64,
+    observers: Vec<Box<dyn Observer>>,
+}
+
+impl FleetSim {
+    /// Validate and wrap a config for fleet simulation.
+    pub fn new(cfg: RunConfig) -> Result<FleetSim> {
+        cfg.validate()?;
+        if cfg.cost.mode == CostMode::Measured {
+            return Err(anyhow!(
+                "fleet simulation has no engine to measure; use cost mode fixed|variable"
+            ));
+        }
+        Ok(FleetSim {
+            cfg,
+            model_bytes: DEFAULT_MODEL_BYTES,
+            observers: Vec::new(),
+        })
+    }
+
+    pub fn cfg(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    /// Serialized model size driving transfer times (bytes).
+    pub fn model_bytes(mut self, bytes: f64) -> Self {
+        self.model_bytes = bytes.max(0.0);
+        self
+    }
+
+    /// Register a streaming [`Observer`] for the run's [`RunEvent`]s.
+    pub fn observe(mut self, observer: impl Observer + 'static) -> Self {
+        self.observers.push(Box::new(observer));
+        self
+    }
+
+    /// Run to completion with the protocol matching `cfg.algo`.
+    pub fn run(self) -> Result<FleetReport> {
+        let host0 = std::time::Instant::now();
+        let sync = self.cfg.algo.is_sync();
+        let mut fleet = Fleet::build(self.cfg, self.model_bytes, self.observers);
+        if sync {
+            fleet.run_sync();
+        } else {
+            fleet.run_async();
+        }
+        Ok(fleet.report(host0.elapsed().as_secs_f64()))
+    }
+}
+
+/// One virtual edge: ledger + protocol bookkeeping, no model, no data.
+struct FEdge {
+    slowdown: f64,
+    spent: f64,
+    retired: bool,
+    /// Churn-departed (crashed); in-flight work is void until a restart.
+    departed: bool,
+    base_version: u64,
+    /// (launch generation, τ, charged cost) of the round in flight.
+    inflight: Option<(u64, usize, f64)>,
+}
+
+impl FEdge {
+    fn new(slowdown: f64) -> FEdge {
+        FEdge {
+            slowdown,
+            spent: 0.0,
+            retired: false,
+            departed: false,
+            base_version: 0,
+            inflight: None,
+        }
+    }
+
+    fn remaining(&self, budget: f64) -> f64 {
+        (budget - self.spent).max(0.0)
+    }
+}
+
+/// Shared state of both protocol drivers.
+struct Fleet {
+    cfg: RunConfig,
+    model_bytes: f64,
+    observers: Vec<Box<dyn Observer>>,
+    edges: Vec<FEdge>,
+    strategy: Box<dyn IntervalStrategy>,
+    transport: SimTransport,
+    rng: Rng,
+    churn_rng: Rng,
+    wall_ms: f64,
+    version: u64,
+    updates: u64,
+    total_spent: f64,
+    round_seq: u64,
+    joins_done: usize,
+    max_joins: usize,
+    n_start: usize,
+}
+
+impl Fleet {
+    fn build(cfg: RunConfig, model_bytes: f64, observers: Vec<Box<dyn Observer>>) -> Fleet {
+        let mut rng = Rng::new(cfg.seed);
+        let slowdowns = cfg
+            .hetero_profile
+            .slowdowns(cfg.n_edges, cfg.hetero, &mut rng);
+        let strategy = build_strategy(&cfg, &slowdowns);
+        let mut transport = SimTransport::new(cfg.network.clone(), cfg.seed);
+        if cfg.network.bandwidth_mbps.is_finite() {
+            // Heterogeneous links follow the compute heterogeneity profile:
+            // slower hardware sits behind a proportionally thinner pipe.
+            transport.set_bandwidths(
+                slowdowns
+                    .iter()
+                    .map(|s| cfg.network.bandwidth_mbps / s)
+                    .collect(),
+            );
+        }
+        let churn_rng = churn_rng(cfg.seed);
+        let edges: Vec<FEdge> = slowdowns.iter().map(|&s| FEdge::new(s)).collect();
+        let max_joins = if cfg.churn.join_rate > 0.0 {
+            cfg.n_edges
+        } else {
+            0
+        };
+        let n_start = cfg.n_edges;
+        Fleet {
+            cfg,
+            model_bytes,
+            observers,
+            edges,
+            strategy,
+            transport,
+            rng,
+            churn_rng,
+            wall_ms: 0.0,
+            version: 0,
+            updates: 0,
+            total_spent: 0.0,
+            round_seq: 0,
+            joins_done: 0,
+            max_joins,
+            n_start,
+        }
+    }
+
+    fn emit(&mut self, ev: RunEvent) {
+        for obs in &mut self.observers {
+            obs.on_event(&ev);
+        }
+    }
+
+    /// Synthetic diminishing-returns learning curve in [0, 1).
+    fn progress(&self) -> f64 {
+        let scale = 20.0 * self.n_start as f64;
+        self.updates as f64 / (self.updates as f64 + scale)
+    }
+
+    /// Bandit reward for merging a τ-interval round at `staleness`.
+    fn utility(&self, tau: usize, staleness: u64) -> f64 {
+        (tau as f64 / self.cfg.tau_max as f64) * (1.0 - self.progress())
+            / (1.0 + 0.1 * staleness as f64)
+    }
+
+    fn charge(&mut self, i: usize, cost: f64) {
+        self.edges[i].spent += cost;
+        self.total_spent += cost;
+        if self.edges[i].spent >= self.cfg.budget {
+            self.edges[i].retired = true;
+        }
+    }
+
+    fn mean_spent(&self) -> f64 {
+        self.total_spent / self.edges.len() as f64
+    }
+
+    fn trace_point(&mut self) {
+        let point = TracePoint {
+            wall_ms: self.wall_ms,
+            mean_spent: self.mean_spent(),
+            updates: self.updates,
+            metric: self.progress(),
+        };
+        self.emit(RunEvent::GlobalUpdate { point });
+    }
+
+    fn emit_retired(&mut self, i: usize) {
+        let spent = self.edges[i].spent;
+        let wall_ms = self.wall_ms;
+        self.emit(RunEvent::EdgeRetired {
+            edge: i,
+            wall_ms,
+            spent,
+        });
+    }
+
+    fn note_drops(&mut self, d: &Delivery) {
+        if d.dropped_attempts > 0 || d.lost {
+            let edge = d.msg.edge().unwrap_or(0);
+            let wall_ms = self.wall_ms;
+            self.emit(RunEvent::MessageDropped {
+                edge,
+                wall_ms,
+                attempts: d.dropped_attempts,
+                lost: d.lost,
+            });
+        }
+    }
+
+    /// The virtual compute cost of τ iterations on edge `i`.
+    fn round_cost(&mut self, i: usize, tau: usize) -> f64 {
+        let slowdown = self.edges[i].slowdown;
+        let cost: CostModel = self.cfg.cost;
+        match cost.mode {
+            CostMode::Fixed => tau as f64 * cost.nominal_comp(slowdown),
+            _ => (0..tau)
+                .map(|_| cost.sample_comp(slowdown, 0.0, &mut self.rng))
+                .sum(),
+        }
+    }
+
+    fn report(&self, host_seconds: f64) -> FleetReport {
+        let stats = self.transport.stats();
+        FleetReport {
+            n_edges: self.n_start,
+            joined: self.joins_done,
+            retired: self.edges.iter().filter(|e| e.retired).count(),
+            updates: self.updates,
+            wall_ms: self.wall_ms,
+            mean_spent: self.mean_spent(),
+            final_progress: self.progress(),
+            messages_sent: stats.sent,
+            messages_lost: stats.lost,
+            dropped_attempts: stats.dropped_attempts,
+            events: self.transport.events_processed(),
+            peak_queue_depth: self.transport.peak_queue_depth(),
+            host_seconds,
+        }
+    }
+
+    // -- asynchronous protocol ---------------------------------------------
+
+    /// Select, price and schedule one virtual round on edge `i`.
+    fn launch(&mut self, i: usize) {
+        if self.cfg.failure_rate > 0.0 && self.rng.f64() < self.cfg.failure_rate {
+            self.edges[i].departed = true;
+            self.edges[i].retired = true;
+            self.emit_retired(i);
+            return;
+        }
+        let remaining = self.edges[i].remaining(self.cfg.budget);
+        let Some(tau) = self.strategy.select(i, remaining, &mut self.rng) else {
+            if !self.edges[i].retired {
+                self.edges[i].retired = true;
+            }
+            self.emit_retired(i);
+            return;
+        };
+        let wall_ms = self.wall_ms;
+        self.emit(RunEvent::RoundStart {
+            edge: Some(i),
+            tau,
+            wall_ms,
+        });
+        let comp = self.round_cost(i, tau);
+        let comm = self.cfg.cost.sample_comm(&mut self.rng);
+        let total = comp + comm;
+        self.charge(i, total);
+        self.round_seq += 1;
+        self.edges[i].inflight = Some((self.round_seq, tau, total));
+        let mut delay = total;
+        let churn = &self.cfg.churn;
+        if churn.straggle_p > 0.0 && self.churn_rng.f64() < churn.straggle_p {
+            delay *= churn.straggle_factor;
+        }
+        self.transport.schedule(
+            delay,
+            NetEvent::Compute {
+                edge: i,
+                round: self.round_seq,
+            },
+        );
+    }
+
+    fn schedule_leave(&mut self, i: usize) {
+        if let Some(gap) = ChurnSpec::exp_gap_ms(self.cfg.churn.leave_rate, &mut self.churn_rng)
+        {
+            self.transport.schedule(gap, NetEvent::Leave { edge: i });
+        }
+    }
+
+    fn schedule_join(&mut self) {
+        if self.joins_done >= self.max_joins {
+            return;
+        }
+        if let Some(gap) = ChurnSpec::exp_gap_ms(self.cfg.churn.join_rate, &mut self.churn_rng) {
+            self.transport.schedule(gap, NetEvent::Join);
+        }
+    }
+
+    /// Merge a delivered report and send the download back.
+    fn merge(&mut self, r: LocalReport, extra_delay: f64) {
+        let i = r.edge;
+        let staleness = self.version.saturating_sub(r.base_version);
+        let u = self.utility(r.tau, staleness);
+        self.version += 1;
+        self.updates += 1;
+        self.strategy.feedback(i, r.tau, u, r.cost + extra_delay);
+        if self.updates % self.cfg.eval_every as u64 == 0 {
+            self.trace_point();
+        }
+        if self.edges[i].departed {
+            return; // crashed while its upload flew; no download
+        }
+        let msg = Message::download(i, self.model_bytes, self.version);
+        if let Some(d) = self.transport.send(msg) {
+            self.deliver(d);
+        }
+    }
+
+    fn deliver(&mut self, d: Delivery) {
+        self.note_drops(&d);
+        let Some(i) = d.msg.edge() else { return };
+        if d.delay_ms > 0.0 {
+            self.charge(i, d.delay_ms);
+        }
+        match d.msg.payload {
+            Payload::Report(r) => {
+                if d.lost {
+                    if !self.edges[i].departed {
+                        self.launch(i); // wasted round; start over
+                    }
+                    return;
+                }
+                let wall_ms = self.wall_ms;
+                self.emit(RunEvent::LocalReport {
+                    report: r.clone(),
+                    wall_ms,
+                });
+                self.merge(r, d.delay_ms);
+            }
+            Payload::Global { version } => {
+                if self.edges[i].departed {
+                    return;
+                }
+                if self.edges[i].inflight.is_some() {
+                    // Stale download outliving a crash-restart: the edge is
+                    // already mid-round — relaunching would overwrite the
+                    // in-flight generation and void its charged work.
+                    return;
+                }
+                if d.lost {
+                    let msg = Message::download(i, self.model_bytes, self.version);
+                    if let Some(d2) = self.transport.send(msg) {
+                        self.deliver(d2);
+                    }
+                    return;
+                }
+                self.edges[i].base_version = version.max(self.edges[i].base_version);
+                self.launch(i);
+            }
+        }
+    }
+
+    fn run_async(&mut self) {
+        for i in 0..self.edges.len() {
+            self.launch(i);
+        }
+        for i in 0..self.edges.len() {
+            self.schedule_leave(i);
+        }
+        if self.max_joins > 0 {
+            self.schedule_join();
+        }
+
+        while let Some(occ) = self.transport.poll() {
+            self.wall_ms = self.transport.now();
+            match occ {
+                Occurrence::Local(NetEvent::Compute { edge: i, round }) => {
+                    let stale = self.edges[i].inflight.map(|(g, _, _)| g) != Some(round);
+                    if stale || self.edges[i].departed {
+                        continue;
+                    }
+                    let (_, tau, cost) = self.edges[i].inflight.take().expect("checked");
+                    let report = LocalReport {
+                        edge: i,
+                        tau,
+                        cost,
+                        train_signal: 0.0,
+                        base_version: self.edges[i].base_version,
+                    };
+                    let msg = Message::upload(i, self.model_bytes, report);
+                    if let Some(d) = self.transport.send(msg) {
+                        self.deliver(d);
+                    }
+                }
+                Occurrence::Delivery(d) => self.deliver(d),
+                Occurrence::Local(NetEvent::Leave { edge: i }) => {
+                    if self.edges[i].departed || self.edges[i].retired {
+                        continue;
+                    }
+                    self.edges[i].departed = true;
+                    self.edges[i].retired = true;
+                    self.edges[i].inflight = None;
+                    self.emit_retired(i);
+                    if self.cfg.churn.restart_ms > 0.0 {
+                        self.transport
+                            .schedule(self.cfg.churn.restart_ms, NetEvent::Restart { edge: i });
+                    }
+                }
+                Occurrence::Local(NetEvent::Restart { edge: i }) => {
+                    if !self.edges[i].departed {
+                        continue;
+                    }
+                    self.edges[i].departed = false;
+                    if self.edges[i].remaining(self.cfg.budget) > 0.0 {
+                        self.edges[i].retired = false;
+                        let wall_ms = self.wall_ms;
+                        self.emit(RunEvent::EdgeJoined { edge: i, wall_ms });
+                        self.launch(i);
+                        self.schedule_leave(i);
+                    }
+                }
+                Occurrence::Local(NetEvent::Join) => {
+                    if self.joins_done >= self.max_joins {
+                        continue;
+                    }
+                    self.joins_done += 1;
+                    let slowdown = self.rng.range_f64(1.0, self.cfg.hetero.max(1.0)).max(1.0);
+                    let i = self.edges.len();
+                    let mut e = FEdge::new(slowdown);
+                    e.base_version = self.version;
+                    self.edges.push(e);
+                    // Per-edge strategies allocate a fresh bandit for the
+                    // joiner (shared/static policies ignore the hook).
+                    let costs = self.cfg.cost.arm_costs(self.cfg.tau_max, slowdown);
+                    self.strategy.on_edge_joined(i, costs);
+                    let wall_ms = self.wall_ms;
+                    self.emit(RunEvent::EdgeJoined { edge: i, wall_ms });
+                    self.launch(i);
+                    self.schedule_leave(i);
+                    self.schedule_join();
+                }
+            }
+        }
+        self.finish();
+    }
+
+    // -- synchronous protocol ----------------------------------------------
+
+    fn run_sync(&mut self) {
+        loop {
+            self.transport.sync_clock(self.wall_ms);
+            let budget = self.cfg.budget;
+            let min_remaining = self
+                .edges
+                .iter()
+                .map(|e| e.remaining(budget))
+                .fold(f64::INFINITY, f64::min);
+            let Some(tau) = self.strategy.select(0, min_remaining, &mut self.rng) else {
+                break; // no affordable arm: the fleet retires together
+            };
+            let wall_ms = self.wall_ms;
+            self.emit(RunEvent::RoundStart {
+                edge: None,
+                tau,
+                wall_ms,
+            });
+
+            // Virtual local rounds; stragglers define the compute barrier.
+            let n = self.edges.len();
+            let mut barrier_comp = 0.0f64;
+            let mut reports = Vec::with_capacity(n);
+            for i in 0..n {
+                let comp = self.round_cost(i, tau);
+                let churn = &self.cfg.churn;
+                let mut effective = comp;
+                if churn.straggle_p > 0.0 && self.churn_rng.f64() < churn.straggle_p {
+                    effective *= churn.straggle_factor;
+                }
+                barrier_comp = barrier_comp.max(effective);
+                reports.push(LocalReport {
+                    edge: i,
+                    tau,
+                    cost: comp,
+                    train_signal: 0.0,
+                    base_version: self.version,
+                });
+            }
+            let comm = self.cfg.cost.sample_comm(&mut self.rng);
+
+            // Ship reports up and the broadcast down; the barrier waits for
+            // the slowest leg of each.
+            let mut up_wait = 0.0f64;
+            let mut pending = 0usize;
+            for r in &reports {
+                let msg = Message::upload(r.edge, self.model_bytes, r.clone());
+                match self.transport.send(msg) {
+                    Some(d) => {
+                        self.note_drops(&d);
+                        up_wait = up_wait.max(d.delay_ms);
+                    }
+                    None => pending += 1,
+                }
+            }
+            up_wait = up_wait.max(self.drain(pending));
+            let mut dl_wait = 0.0f64;
+            let mut pending = 0usize;
+            let version = self.version;
+            for i in 0..n {
+                match self
+                    .transport
+                    .send(Message::download(i, self.model_bytes, version))
+                {
+                    Some(d) => {
+                        self.note_drops(&d);
+                        dl_wait = dl_wait.max(d.delay_ms);
+                    }
+                    None => pending += 1,
+                }
+            }
+            dl_wait = dl_wait.max(self.drain(pending));
+
+            let barrier_cost = barrier_comp + comm + up_wait + dl_wait;
+            for i in 0..n {
+                self.charge(i, barrier_cost);
+            }
+            self.wall_ms += barrier_cost;
+            let wall_ms = self.wall_ms;
+            for r in reports {
+                self.emit(RunEvent::LocalReport {
+                    report: r,
+                    wall_ms,
+                });
+            }
+
+            self.version += 1;
+            self.updates += 1;
+            let u = self.utility(tau, 0);
+            self.strategy.feedback(0, tau, u, barrier_cost);
+            for e in &mut self.edges {
+                e.base_version = self.version;
+            }
+            if self.updates % self.cfg.eval_every as u64 == 0 {
+                self.trace_point();
+            }
+
+            // Per-round churn hazard: a departure ends the cohort.
+            let churn = self.cfg.churn.clone();
+            if churn.leave_rate > 0.0 {
+                let p_leave = 1.0 - (-churn.leave_rate * barrier_cost / 1000.0).exp();
+                for i in 0..n {
+                    if self.churn_rng.f64() < p_leave {
+                        self.edges[i].departed = true;
+                        self.edges[i].retired = true;
+                    }
+                }
+            }
+            if self.edges.iter().any(|e| e.retired) {
+                break;
+            }
+        }
+        // Synchronous EL is fail-stop for the cohort: when one edge ends,
+        // everyone stops. Report whoever actually retired.
+        for i in 0..self.edges.len() {
+            if self.edges[i].retired {
+                self.emit_retired(i);
+            }
+        }
+        self.finish();
+    }
+
+    /// Wait for `pending` queued deliveries; returns the slowest one.
+    fn drain(&mut self, mut pending: usize) -> f64 {
+        let mut wait = 0.0f64;
+        while pending > 0 {
+            match self.transport.poll() {
+                Some(Occurrence::Delivery(d)) => {
+                    self.note_drops(&d);
+                    wait = wait.max(d.delay_ms);
+                    pending -= 1;
+                }
+                Some(Occurrence::Local(_)) => {} // no local events in sync
+                None => break,                   // defensive; cannot happen
+            }
+        }
+        wait
+    }
+
+    fn finish(&mut self) {
+        self.trace_point();
+        let ev = RunEvent::Finished {
+            wall_ms: self.wall_ms,
+            updates: self.updates,
+            final_metric: self.progress(),
+        };
+        self.emit(ev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Algo;
+    use crate::coordinator::observer::from_fn;
+    use crate::net::model::NetworkSpec;
+    use std::cell::Cell;
+    use std::rc::Rc;
+
+    fn fleet_cfg(algo: Algo, n: usize) -> RunConfig {
+        RunConfig {
+            algo,
+            n_edges: n,
+            hetero: 4.0,
+            budget: 1500.0,
+            data_n: n.max(3000), // ignored by the fleet; satisfies validate
+            eval_every: 50,
+            seed: 9,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn async_fleet_runs_at_scale() {
+        let r = FleetSim::new(fleet_cfg(Algo::Ol4elAsync, 1000))
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(r.n_edges, 1000);
+        assert_eq!(r.retired, 1000, "every ledger should exhaust");
+        assert!(r.updates > 1000, "only {} updates", r.updates);
+        assert!(r.wall_ms > 0.0);
+        assert!(r.events > 0);
+        assert!(r.peak_queue_depth >= 1000);
+        assert!(r.mean_spent <= 1500.0 + 500.0);
+    }
+
+    #[test]
+    fn sync_fleet_runs_at_scale() {
+        let r = FleetSim::new(fleet_cfg(Algo::Ol4elSync, 500))
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(r.updates > 0);
+        assert!(r.retired > 0, "the cohort should eventually stop");
+        assert_eq!(r.messages_sent, r.updates * 2 * 500, "2 legs x N per round");
+    }
+
+    #[test]
+    fn network_and_churn_shape_the_fleet() {
+        let mut cfg = fleet_cfg(Algo::Ol4elAsync, 300);
+        cfg.network = NetworkSpec::parse("lognormal:5:0.5,drop:0.05").unwrap();
+        // Fleet-level join rate 5/s over a ~1.5s run: joins are certain.
+        cfg.churn = ChurnSpec::parse("poisson:0.2,join:5").unwrap();
+        let joined = Rc::new(Cell::new(0usize));
+        let retired = Rc::new(Cell::new(0usize));
+        let dropped = Rc::new(Cell::new(0usize));
+        let (j2, r2, d2) = (joined.clone(), retired.clone(), dropped.clone());
+        let r = FleetSim::new(cfg)
+            .unwrap()
+            .observe(from_fn(move |ev: &RunEvent| match ev {
+                RunEvent::EdgeJoined { .. } => j2.set(j2.get() + 1),
+                RunEvent::EdgeRetired { .. } => r2.set(r2.get() + 1),
+                RunEvent::MessageDropped { .. } => d2.set(d2.get() + 1),
+                _ => {}
+            }))
+            .run()
+            .unwrap();
+        assert!(joined.get() > 0, "no joins");
+        assert!(retired.get() > 0, "no retirements");
+        assert!(dropped.get() > 0, "no drops at drop:0.05");
+        // No restarts configured, so every EdgeJoined is a fresh join.
+        assert_eq!(r.joined, joined.get());
+        assert!(r.messages_lost > 0 || r.dropped_attempts > 0);
+    }
+
+    #[test]
+    fn fleet_is_deterministic() {
+        let mut cfg = fleet_cfg(Algo::Ol4elAsync, 200);
+        cfg.network = NetworkSpec::parse("uniform:1:9,drop:0.02").unwrap();
+        cfg.churn = ChurnSpec::parse("poisson:0.3,restart:200").unwrap();
+        let a = FleetSim::new(cfg.clone()).unwrap().run().unwrap();
+        let b = FleetSim::new(cfg).unwrap().run().unwrap();
+        assert_eq!(a.updates, b.updates);
+        assert_eq!(a.wall_ms, b.wall_ms);
+        assert_eq!(a.messages_sent, b.messages_sent);
+        assert_eq!(a.messages_lost, b.messages_lost);
+    }
+
+    #[test]
+    fn measured_cost_mode_is_rejected() {
+        let mut cfg = fleet_cfg(Algo::Ol4elAsync, 10);
+        cfg.cost.mode = CostMode::Measured;
+        assert!(FleetSim::new(cfg).is_err());
+    }
+
+    #[test]
+    fn trace_points_follow_eval_cadence() {
+        let mut cfg = fleet_cfg(Algo::Ol4elAsync, 100);
+        cfg.eval_every = 10;
+        let points = Rc::new(Cell::new(0u64));
+        let p2 = points.clone();
+        let r = FleetSim::new(cfg)
+            .unwrap()
+            .observe(from_fn(move |ev: &RunEvent| {
+                if matches!(ev, RunEvent::GlobalUpdate { .. }) {
+                    p2.set(p2.get() + 1);
+                }
+            }))
+            .run()
+            .unwrap();
+        // Cadence points plus the closing point.
+        assert_eq!(points.get(), r.updates / 10 + 1);
+    }
+}

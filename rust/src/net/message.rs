@@ -1,0 +1,129 @@
+//! The message vocabulary of the edge↔cloud wire.
+
+use crate::coordinator::observer::LocalReport;
+
+/// A network endpoint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Node {
+    Cloud,
+    Edge(usize),
+}
+
+/// What a message carries.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Edge → Cloud: a completed local round.
+    Report(LocalReport),
+    /// Cloud → Edge: the fresh global model (version stamp; the simulated
+    /// transport moves timing, not parameters — the receiver reads the
+    /// authoritative state on delivery).
+    Global { version: u64 },
+}
+
+/// One message in flight.
+#[derive(Clone, Debug)]
+pub struct Message {
+    pub from: Node,
+    pub to: Node,
+    /// Serialized size driving the bandwidth term of the transfer time.
+    pub size_bytes: f64,
+    pub payload: Payload,
+}
+
+impl Message {
+    /// An edge's upload of its local round report.
+    pub fn upload(edge: usize, size_bytes: f64, report: LocalReport) -> Message {
+        Message {
+            from: Node::Edge(edge),
+            to: Node::Cloud,
+            size_bytes,
+            payload: Payload::Report(report),
+        }
+    }
+
+    /// The Cloud's download of the global model to one edge.
+    pub fn download(edge: usize, size_bytes: f64, version: u64) -> Message {
+        Message {
+            from: Node::Cloud,
+            to: Node::Edge(edge),
+            size_bytes,
+            payload: Payload::Global { version },
+        }
+    }
+
+    /// The edge endpoint of this message (either direction).
+    pub fn edge(&self) -> Option<usize> {
+        match (self.from, self.to) {
+            (Node::Edge(i), _) => Some(i),
+            (_, Node::Edge(i)) => Some(i),
+            _ => None,
+        }
+    }
+}
+
+/// The outcome of one send, produced when the message's fate resolves.
+#[derive(Clone, Debug)]
+pub struct Delivery {
+    pub msg: Message,
+    /// Total time from send to resolution: retransmit timeouts plus the
+    /// final attempt's latency + transfer time (or just the timeouts when
+    /// every attempt dropped).
+    pub delay_ms: f64,
+    /// Attempts that dropped before the message got through (or gave up).
+    pub dropped_attempts: u32,
+    /// True when every attempt (1 + retries) dropped: the sender observes
+    /// a final timeout and the payload never arrives.
+    pub lost: bool,
+}
+
+/// A non-network event scheduled on the transport's virtual clock —
+/// compute completions and churn alarms share the kernel with message
+/// deliveries so all virtual-time events have one total order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetEvent {
+    /// An edge finished its τ local iterations. `round` is the launch
+    /// generation: a crash-restart invalidates the generation, so a stale
+    /// completion popping after the edge died is discarded instead of
+    /// reporting work the crash destroyed.
+    Compute { edge: usize, round: u64 },
+    /// Churn: the edge departs (crash / leave).
+    Leave { edge: usize },
+    /// Churn: a crashed edge comes back.
+    Restart { edge: usize },
+    /// Churn: a fresh edge joins the fleet.
+    Join,
+}
+
+/// What [`Transport::poll`](super::Transport::poll) hands back.
+#[derive(Clone, Debug)]
+pub enum Occurrence {
+    Local(NetEvent),
+    Delivery(Delivery),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(edge: usize) -> LocalReport {
+        LocalReport {
+            edge,
+            tau: 3,
+            cost: 10.0,
+            train_signal: 0.5,
+            base_version: 0,
+        }
+    }
+
+    #[test]
+    fn constructors_address_correctly() {
+        let up = Message::upload(4, 1024.0, report(4));
+        assert_eq!(up.from, Node::Edge(4));
+        assert_eq!(up.to, Node::Cloud);
+        assert_eq!(up.edge(), Some(4));
+        let down = Message::download(7, 2048.0, 9);
+        assert_eq!(down.from, Node::Cloud);
+        assert_eq!(down.edge(), Some(7));
+        assert!(matches!(down.payload, Payload::Global { version: 9 }));
+    }
+}

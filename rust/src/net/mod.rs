@@ -1,0 +1,49 @@
+//! The network layer: explicit coordinator↔edge message passing.
+//!
+//! The paper's OL4EL protocol is an edge-*cloud* protocol — edges upload
+//! local updates over a constrained network and the Cloud replies with the
+//! fresh global model — yet the in-process engine historically invoked
+//! `EdgeServer::local_round` as a direct function call, making latency,
+//! bandwidth, loss and churn invisible to the bandit's cost/utility
+//! trade-off. This subsystem turns that interaction into messages over an
+//! object-safe [`Transport`]:
+//!
+//! * [`message`] — the wire vocabulary: [`Message`]/[`Payload`] envelopes,
+//!   node addresses and delivery records.
+//! * [`model`] — pluggable [`NetworkSpec`]s: fixed / uniform / lognormal
+//!   latency, per-edge bandwidth with size-proportional transfer time,
+//!   probabilistic drop with timeout + retry, and scripted partition
+//!   windows. Parse grammar: `lognormal:5:0.5,bw:10,drop:0.01`.
+//! * [`churn`] — [`ChurnSpec`]: Poisson join/leave, crash-restart and
+//!   transient straggle schedules. Grammar: `poisson:0.01,join:0.05`.
+//! * [`transport`] — the [`Transport`] trait and the deterministic
+//!   in-memory [`SimTransport`], built on the shared event kernel
+//!   ([`crate::sim::clock::EventQueue`], O(log n) scheduling). The trait is
+//!   shaped so a socket transport can slot in later.
+//! * [`modes`] — network-aware collaboration manners for the [`Session`]
+//!   engine: [`NetSyncBarrier`] and [`NetAsyncMerge`] reproduce the legacy
+//!   direct-call manners bit for bit under [`NetworkSpec::ideal`] and
+//!   charge every network delay to the edges' resource ledgers otherwise,
+//!   so the bandit actually pays for the network.
+//! * [`fleet`] — [`FleetSim`]: the scale driver. No compute engine, no
+//!   real models — virtual local rounds priced by the [`CostModel`]
+//!   (fixed/variable) flow through the transport at thousands-of-edges
+//!   scale, with churn, streaming the same [`RunEvent`] vocabulary.
+//!
+//! [`Session`]: crate::coordinator::Session
+//! [`RunEvent`]: crate::coordinator::RunEvent
+//! [`CostModel`]: crate::sim::cost::CostModel
+
+pub mod churn;
+pub mod fleet;
+pub mod message;
+pub mod model;
+pub mod modes;
+pub mod transport;
+
+pub use churn::ChurnSpec;
+pub use fleet::{FleetReport, FleetSim};
+pub use message::{Delivery, Message, NetEvent, Node, Occurrence, Payload};
+pub use model::{LatencyModel, NetworkSpec};
+pub use modes::{NetAsyncMerge, NetSyncBarrier};
+pub use transport::{SimTransport, Transport, TransportStats};

@@ -1,0 +1,361 @@
+//! Pluggable network conditions and their wire grammar.
+//!
+//! A [`NetworkSpec`] describes what the edge↔cloud links do to a message:
+//! propagation latency (fixed / uniform / lognormal), bandwidth-limited
+//! transfer time proportional to the message size, Bernoulli drops with
+//! timeout + retry, and scripted partition windows during which nothing
+//! gets through. [`SimTransport`](super::SimTransport) samples it; the
+//! spec itself is deterministic data and round-trips through the same
+//! colon/comma grammar the CLI and JSON wire format share:
+//!
+//! ```text
+//! network  := latency ( ',' knob )*
+//! latency  := 'ideal' | 'fixed:MS' | 'uniform:LO:HI'
+//!           | 'lognormal:MEDIAN_MS:SIGMA'
+//! knob     := 'bw:MBPS'        per-edge link bandwidth (default: unlimited)
+//!           | 'drop:P'         per-attempt drop probability in [0, 1)
+//!           | 'timeout:MS'     retransmit timeout (default 200)
+//!           | 'retries:N'      retransmit attempts after the first (default 3)
+//!           | 'part:START-END' scripted partition window in virtual ms
+//! ```
+//!
+//! e.g. `lognormal:5:0.5,bw:10,drop:0.01` or `fixed:20,part:1000-2500`.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::rng::Rng;
+
+/// Propagation latency distribution of one message attempt.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LatencyModel {
+    /// No propagation delay (the `ideal` grammar head).
+    Zero,
+    /// Constant latency in ms.
+    Fixed(f64),
+    /// Uniform in [lo, hi] ms.
+    Uniform { lo: f64, hi: f64 },
+    /// Lognormal with the given median (ms) and log-space sigma — the
+    /// standard heavy-tailed WAN latency model.
+    LogNormal { median_ms: f64, sigma: f64 },
+}
+
+impl LatencyModel {
+    /// Sample one attempt's propagation delay. Draws NOTHING from the RNG
+    /// for the deterministic variants, so `Zero`/`Fixed` specs perturb no
+    /// random stream.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            LatencyModel::Zero => 0.0,
+            LatencyModel::Fixed(ms) => ms,
+            LatencyModel::Uniform { lo, hi } => rng.range_f64(lo, hi),
+            LatencyModel::LogNormal { median_ms, sigma } => {
+                median_ms * (sigma * rng.normal()).exp()
+            }
+        }
+    }
+}
+
+/// The network conditions of a run (validated, JSON-round-trippable).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetworkSpec {
+    pub latency: LatencyModel,
+    /// Per-edge link bandwidth in Mbit/s; `f64::INFINITY` = unconstrained.
+    /// Transfer time of a message is `size_bytes * 8e-3 / bandwidth` ms.
+    pub bandwidth_mbps: f64,
+    /// Per-attempt drop probability in [0, 1).
+    pub drop_rate: f64,
+    /// Retransmit timeout in ms charged per dropped attempt.
+    pub timeout_ms: f64,
+    /// Retransmit attempts after the first; a message whose 1 + retries
+    /// attempts all drop is LOST (the sender sees the final timeout).
+    pub max_retries: u32,
+    /// Scripted outage windows `[start, end)` in virtual ms: every attempt
+    /// that starts inside a window drops.
+    pub partitions: Vec<(f64, f64)>,
+}
+
+pub(crate) const DEFAULT_TIMEOUT_MS: f64 = 200.0;
+pub(crate) const DEFAULT_RETRIES: u32 = 3;
+
+impl Default for NetworkSpec {
+    fn default() -> Self {
+        NetworkSpec::ideal()
+    }
+}
+
+impl NetworkSpec {
+    /// Zero latency, unlimited bandwidth, no drops, no partitions — the
+    /// spec under which the transport path reproduces the direct-call
+    /// engine bit for bit.
+    pub fn ideal() -> NetworkSpec {
+        NetworkSpec {
+            latency: LatencyModel::Zero,
+            bandwidth_mbps: f64::INFINITY,
+            drop_rate: 0.0,
+            timeout_ms: DEFAULT_TIMEOUT_MS,
+            max_retries: DEFAULT_RETRIES,
+            partitions: Vec::new(),
+        }
+    }
+
+    /// Does this spec add any delay, loss or outage at all?
+    pub fn is_ideal(&self) -> bool {
+        matches!(self.latency, LatencyModel::Zero)
+            && self.bandwidth_mbps.is_infinite()
+            && self.drop_rate == 0.0
+            && self.partitions.is_empty()
+    }
+
+    /// Is virtual time `t` inside a scripted partition window?
+    pub fn in_partition(&self, t: f64) -> bool {
+        self.partitions.iter().any(|&(s, e)| t >= s && t < e)
+    }
+
+    /// Transfer time (ms) of `size_bytes` over a link of `bw_mbps`.
+    pub fn transfer_ms(size_bytes: f64, bw_mbps: f64) -> f64 {
+        if bw_mbps.is_finite() && bw_mbps > 0.0 {
+            size_bytes * 8e-3 / bw_mbps
+        } else {
+            0.0
+        }
+    }
+
+    /// Parse the grammar documented at the module head. Rejects exactly
+    /// what [`check`](NetworkSpec::check) rejects.
+    pub fn parse(s: &str) -> Option<NetworkSpec> {
+        let s = s.to_ascii_lowercase();
+        let mut clauses = s.split(',');
+        let latency = parse_latency(clauses.next()?.trim())?;
+        let mut spec = NetworkSpec {
+            latency,
+            ..NetworkSpec::ideal()
+        };
+        for clause in clauses {
+            let (key, val) = clause.trim().split_once(':')?;
+            match key {
+                "bw" => spec.bandwidth_mbps = val.parse().ok()?,
+                "drop" => spec.drop_rate = val.parse().ok()?,
+                "timeout" => spec.timeout_ms = val.parse().ok()?,
+                "retries" => spec.max_retries = val.parse().ok()?,
+                "part" => {
+                    let (a, b) = val.split_once('-')?;
+                    spec.partitions
+                        .push((a.parse().ok()?, b.parse().ok()?));
+                }
+                _ => return None,
+            }
+        }
+        spec.check().ok()?;
+        Some(spec)
+    }
+
+    /// The canonical round-trippable spec string (what the JSON wire
+    /// format carries); default-valued knobs are omitted.
+    pub fn spec(&self) -> String {
+        let mut s = match self.latency {
+            LatencyModel::Zero => "ideal".to_string(),
+            LatencyModel::Fixed(ms) => format!("fixed:{ms}"),
+            LatencyModel::Uniform { lo, hi } => format!("uniform:{lo}:{hi}"),
+            LatencyModel::LogNormal { median_ms, sigma } => {
+                format!("lognormal:{median_ms}:{sigma}")
+            }
+        };
+        if self.bandwidth_mbps.is_finite() {
+            s.push_str(&format!(",bw:{}", self.bandwidth_mbps));
+        }
+        if self.drop_rate > 0.0 {
+            s.push_str(&format!(",drop:{}", self.drop_rate));
+        }
+        if self.timeout_ms != DEFAULT_TIMEOUT_MS {
+            s.push_str(&format!(",timeout:{}", self.timeout_ms));
+        }
+        if self.max_retries != DEFAULT_RETRIES {
+            s.push_str(&format!(",retries:{}", self.max_retries));
+        }
+        for &(a, b) in &self.partitions {
+            s.push_str(&format!(",part:{a}-{b}"));
+        }
+        s
+    }
+
+    /// Validate value ranges — the typed world must be no looser than the
+    /// wire grammar (`RunConfig::validate` calls this).
+    pub fn check(&self) -> Result<()> {
+        match self.latency {
+            LatencyModel::Zero => {}
+            LatencyModel::Fixed(ms) => {
+                if !(ms.is_finite() && ms >= 0.0) {
+                    return Err(anyhow!("fixed latency must be finite and >= 0, got {ms}"));
+                }
+            }
+            LatencyModel::Uniform { lo, hi } => {
+                if !(lo.is_finite() && hi.is_finite() && 0.0 <= lo && lo <= hi) {
+                    return Err(anyhow!("uniform latency needs 0 <= lo <= hi, got {lo}..{hi}"));
+                }
+            }
+            LatencyModel::LogNormal { median_ms, sigma } => {
+                if !(median_ms.is_finite() && median_ms > 0.0) {
+                    return Err(anyhow!("lognormal median must be > 0, got {median_ms}"));
+                }
+                if !(sigma.is_finite() && sigma >= 0.0) {
+                    return Err(anyhow!("lognormal sigma must be >= 0, got {sigma}"));
+                }
+            }
+        }
+        if self.bandwidth_mbps.is_nan() || self.bandwidth_mbps <= 0.0 {
+            return Err(anyhow!(
+                "bandwidth must be > 0 Mbps, got {}",
+                self.bandwidth_mbps
+            ));
+        }
+        if !(0.0..1.0).contains(&self.drop_rate) {
+            return Err(anyhow!(
+                "drop rate must be in [0, 1), got {}",
+                self.drop_rate
+            ));
+        }
+        if !(self.timeout_ms.is_finite() && self.timeout_ms > 0.0) {
+            return Err(anyhow!("timeout must be > 0 ms, got {}", self.timeout_ms));
+        }
+        for &(a, b) in &self.partitions {
+            if !(a.is_finite() && b.is_finite() && 0.0 <= a && a < b) {
+                return Err(anyhow!("partition window needs 0 <= start < end, got {a}-{b}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_latency(head: &str) -> Option<LatencyModel> {
+    if head == "ideal" {
+        return Some(LatencyModel::Zero);
+    }
+    let mut parts = head.split(':');
+    let kind = parts.next()?;
+    let nums: Vec<f64> = parts.map(|p| p.parse().ok()).collect::<Option<_>>()?;
+    match (kind, nums.as_slice()) {
+        ("fixed", [ms]) => Some(LatencyModel::Fixed(*ms)),
+        ("uniform", [lo, hi]) => Some(LatencyModel::Uniform { lo: *lo, hi: *hi }),
+        ("lognormal", [median_ms, sigma]) => Some(LatencyModel::LogNormal {
+            median_ms: *median_ms,
+            sigma: *sigma,
+        }),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_is_ideal() {
+        let n = NetworkSpec::ideal();
+        assert!(n.is_ideal());
+        assert!(n.check().is_ok());
+        assert_eq!(n.spec(), "ideal");
+        assert_eq!(NetworkSpec::parse("ideal"), Some(n));
+    }
+
+    #[test]
+    fn grammar_parses_full_spec() {
+        let n = NetworkSpec::parse("lognormal:5:0.5,bw:10,drop:0.01,timeout:150,retries:2")
+            .unwrap();
+        assert_eq!(
+            n.latency,
+            LatencyModel::LogNormal {
+                median_ms: 5.0,
+                sigma: 0.5
+            }
+        );
+        assert_eq!(n.bandwidth_mbps, 10.0);
+        assert_eq!(n.drop_rate, 0.01);
+        assert_eq!(n.timeout_ms, 150.0);
+        assert_eq!(n.max_retries, 2);
+        assert!(!n.is_ideal());
+    }
+
+    #[test]
+    fn grammar_parses_partitions() {
+        let n = NetworkSpec::parse("fixed:20,part:1000-2500,part:4000-4100").unwrap();
+        assert_eq!(n.partitions, vec![(1000.0, 2500.0), (4000.0, 4100.0)]);
+        assert!(n.in_partition(1000.0));
+        assert!(n.in_partition(2499.9));
+        assert!(!n.in_partition(2500.0));
+        assert!(!n.in_partition(3000.0));
+    }
+
+    #[test]
+    fn grammar_rejects_nonsense() {
+        for bad in [
+            "nope",
+            "fixed",
+            "fixed:-1",
+            "fixed:nan",
+            "uniform:5",
+            "uniform:9:3",
+            "lognormal:0:0.5",
+            "lognormal:5:-1",
+            "ideal,drop:1.0",
+            "ideal,drop:-0.1",
+            "ideal,bw:0",
+            "ideal,bw:-3",
+            "ideal,timeout:0",
+            "ideal,retries:x",
+            "ideal,part:500-100",
+            "ideal,part:-5-10",
+            "ideal,junk:3",
+            "ideal,part:100",
+        ] {
+            assert!(NetworkSpec::parse(bad).is_none(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn spec_roundtrips() {
+        for s in [
+            "ideal",
+            "fixed:20",
+            "uniform:1:8",
+            "lognormal:5:0.5",
+            "lognormal:5:0.5,bw:10,drop:0.01",
+            "fixed:2,timeout:50,retries:1,part:100-200",
+            "ideal,drop:0.25",
+        ] {
+            let n = NetworkSpec::parse(s).unwrap();
+            assert_eq!(NetworkSpec::parse(&n.spec()), Some(n.clone()), "{s}");
+        }
+    }
+
+    #[test]
+    fn transfer_time_scales_with_size_over_bandwidth() {
+        // 1 MB over 8 Mbit/s = 1 second.
+        let ms = NetworkSpec::transfer_ms(1_000_000.0, 8.0);
+        assert!((ms - 1000.0).abs() < 1e-9);
+        assert_eq!(NetworkSpec::transfer_ms(1e9, f64::INFINITY), 0.0);
+    }
+
+    #[test]
+    fn deterministic_latencies_draw_nothing() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        assert_eq!(LatencyModel::Zero.sample(&mut a), 0.0);
+        assert_eq!(LatencyModel::Fixed(12.0).sample(&mut a), 12.0);
+        // The RNG state is untouched by deterministic variants.
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn lognormal_median_is_roughly_right() {
+        let m = LatencyModel::LogNormal {
+            median_ms: 10.0,
+            sigma: 0.5,
+        };
+        let mut rng = Rng::new(3);
+        let mut xs: Vec<f64> = (0..4001).map(|_| m.sample(&mut rng)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = xs[2000];
+        assert!((median - 10.0).abs() < 1.0, "median {median}");
+        assert!(xs.iter().all(|&x| x > 0.0));
+    }
+}

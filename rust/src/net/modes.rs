@@ -1,0 +1,878 @@
+//! Network-aware collaboration manners for the [`Session`] engine.
+//!
+//! [`NetSyncBarrier`] and [`NetAsyncMerge`] are the transport-backed
+//! counterparts of the direct-call manners in `coordinator::sync` /
+//! `coordinator::asynchronous`: every report and global download travels
+//! as a [`Message`] over an object-safe [`Transport`], and every ms a
+//! message spends on the wire is charged to the edge's resource ledger and
+//! to the cost the bandit observes — the network becomes part of the
+//! cost/utility trade-off the paper's bandit optimizes.
+//!
+//! Under [`NetworkSpec::ideal`](crate::net::NetworkSpec::ideal) with no
+//! churn, zero-delay sends resolve synchronously (a zero-latency network
+//! IS a function call), no RNG stream is touched, and both manners
+//! reproduce the legacy direct-call event stream bit for bit — asserted by
+//! `tests/integration.rs`. With real latency/loss/churn specs they open
+//! the delay- and churn-aware scenario family: drops retry and eventually
+//! waste the round, partitions stall the barrier, edges crash, restart and
+//! join mid-run (`EdgeJoined` / `EdgeRetired` / `MessageDropped` events).
+//!
+//! [`Session`]: crate::coordinator::Session
+
+use anyhow::Result;
+
+use crate::coordinator::aggregate;
+use crate::coordinator::observer::{LocalReport, RunEvent};
+use crate::coordinator::session::{CollaborationMode, Session};
+use crate::coordinator::utility::UtilityKind;
+use crate::coordinator::RoundObservation;
+use crate::model::ModelState;
+use crate::net::churn::{churn_rng, ChurnSpec};
+use crate::net::message::{Delivery, Message, NetEvent, Occurrence, Payload};
+use crate::net::transport::{SimTransport, Transport};
+use crate::util::rng::Rng;
+
+/// Serialized size of one model exchange (the params as f32s).
+fn model_bytes(s: &Session<'_>) -> f64 {
+    (s.world.global.params.len() * std::mem::size_of::<f32>()) as f64
+}
+
+/// An in-flight local round awaiting its completion event.
+#[derive(Clone, Copy, Debug)]
+struct InFlight {
+    round: u64,
+    tau: usize,
+    total_cost: f64,
+    train_signal: f64,
+}
+
+// ---------------------------------------------------------------------------
+// Asynchronous manner over the transport
+// ---------------------------------------------------------------------------
+
+/// Event-driven staleness-discounted merging (paper Fig. 1 right) with the
+/// coordinator↔edge interaction as explicit messages: completions upload a
+/// [`Payload::Report`], the Cloud merges on delivery and replies with a
+/// [`Payload::Global`] download, and the edge relaunches when the download
+/// lands. Supports the full [`ChurnSpec`]: Poisson leave, crash-restart,
+/// capped Poisson joins and transient straggle.
+pub struct NetAsyncMerge {
+    transport: Box<dyn Transport>,
+    injected: bool,
+    inflight: Vec<Option<InFlight>>,
+    /// Churn-departed (crashed) edges: in-flight work is void and nothing
+    /// relaunches until a restart.
+    departed: Vec<bool>,
+    churn: ChurnSpec,
+    churn_rng: Rng,
+    round_seq: u64,
+    joins_done: usize,
+    max_joins: usize,
+}
+
+impl Default for NetAsyncMerge {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NetAsyncMerge {
+    /// A manner that builds its [`SimTransport`] from the session's
+    /// `cfg.network` at `begin`.
+    pub fn new() -> NetAsyncMerge {
+        NetAsyncMerge {
+            transport: Box::new(SimTransport::new(
+                crate::net::NetworkSpec::ideal(),
+                0,
+            )),
+            injected: false,
+            inflight: Vec::new(),
+            departed: Vec::new(),
+            churn: ChurnSpec::none(),
+            churn_rng: Rng::new(0),
+            round_seq: 0,
+            joins_done: 0,
+            max_joins: 0,
+        }
+    }
+
+    /// Inject a custom transport (e.g. a pre-configured [`SimTransport`]
+    /// with per-edge bandwidths, or a future socket transport).
+    pub fn with_transport(transport: Box<dyn Transport>) -> NetAsyncMerge {
+        NetAsyncMerge {
+            transport,
+            injected: true,
+            ..NetAsyncMerge::new()
+        }
+    }
+
+    /// Select, run and schedule one local round on edge `i` — draw-for-draw
+    /// the legacy `AsyncMerge::launch`, with the completion scheduled on
+    /// the transport (stretched by a transient straggle when configured).
+    fn launch(&mut self, s: &mut Session<'_>, i: usize) -> Result<()> {
+        if s.inject_failure(i) {
+            self.departed[i] = true; // fail-stop: never reports again
+            return Ok(());
+        }
+        let remaining = s.world.edges[i].remaining();
+        let Some(tau) = s.strategy.select(i, remaining, &mut s.world.rng) else {
+            s.world.edges[i].retired = true;
+            return Ok(());
+        };
+        let wall_ms = s.wall_ms;
+        s.emit(RunEvent::RoundStart {
+            edge: Some(i),
+            tau,
+            wall_ms,
+        });
+        // Learning-rate decay by per-edge progress (see AsyncMerge).
+        let n = s.world.edges.len() as u64;
+        let hyper = s.cfg().hyper.at_version(s.world.version / n);
+        let cost = s.cfg().cost;
+        let round = s.local_round(i, tau, &hyper)?;
+        let comm = cost.sample_comm(&mut s.world.rng);
+        let total = round.comp_cost + comm;
+        s.world.edges[i].charge(total);
+        self.round_seq += 1;
+        self.inflight[i] = Some(InFlight {
+            round: self.round_seq,
+            tau,
+            total_cost: total,
+            train_signal: round.train_signal,
+        });
+        // Transient straggle: the round lands late but costs the nominal.
+        let mut delay = total;
+        if self.churn.straggle_p > 0.0 && self.churn_rng.f64() < self.churn.straggle_p {
+            delay *= self.churn.straggle_factor;
+        }
+        self.transport.schedule(
+            delay,
+            NetEvent::Compute {
+                edge: i,
+                round: self.round_seq,
+            },
+        );
+        Ok(())
+    }
+
+    /// Send the fresh global model to edge `i`. Returns true when the
+    /// download resolved instantly (zero delay) and the edge is synced —
+    /// the caller decides when to relaunch so the legacy event order is
+    /// preserved.
+    fn send_download(&mut self, s: &mut Session<'_>, i: usize) -> Result<bool> {
+        let bytes = model_bytes(s);
+        let msg = Message::download(i, bytes, s.world.version);
+        match self.transport.send(msg) {
+            Some(_instant) => {
+                // Zero-delay ⇒ no timeouts ⇒ no drops, not lost.
+                let (global, version) = (s.world.global.clone(), s.world.version);
+                s.world.edges[i].sync_with_global(&global, version);
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
+    /// Process one resolved delivery. Returns a report when the Cloud
+    /// received an upload that the session loop should fold in.
+    fn deliver(&mut self, s: &mut Session<'_>, d: Delivery) -> Result<Option<LocalReport>> {
+        let Some(i) = d.msg.edge() else {
+            return Ok(None);
+        };
+        if d.dropped_attempts > 0 || d.lost {
+            let wall_ms = s.wall_ms;
+            s.emit(RunEvent::MessageDropped {
+                edge: i,
+                wall_ms,
+                attempts: d.dropped_attempts,
+                lost: d.lost,
+            });
+        }
+        if d.delay_ms > 0.0 {
+            // Time on the wire (timeouts included) burns the edge's budget.
+            s.world.edges[i].charge(d.delay_ms);
+        }
+        match d.msg.payload {
+            Payload::Report(mut r) => {
+                if d.lost {
+                    // The round never reached the Cloud: the work is wasted
+                    // and the edge starts over (if it is still alive).
+                    if !self.departed[i] {
+                        self.launch(s, i)?;
+                    }
+                    return Ok(None);
+                }
+                r.cost += d.delay_ms; // the bandit pays for the network
+                Ok(Some(r))
+            }
+            Payload::Global { .. } => {
+                if self.departed[i] {
+                    return Ok(None); // crashed while the download flew
+                }
+                if self.inflight[i].is_some() {
+                    // Stale download outliving a crash-restart: the edge
+                    // already started a fresh round — adopting this model
+                    // mid-round would clobber its training and relaunching
+                    // would double-charge the ledger. Drop it; a fresh
+                    // download follows the in-flight round's report.
+                    return Ok(None);
+                }
+                if d.lost {
+                    // Application-level resend of the model download.
+                    if self.send_download(s, i)? {
+                        self.launch(s, i)?;
+                    }
+                    return Ok(None);
+                }
+                let (global, version) = (s.world.global.clone(), s.world.version);
+                s.world.edges[i].sync_with_global(&global, version);
+                self.launch(s, i)?;
+                Ok(None)
+            }
+        }
+    }
+
+    fn on_leave(&mut self, s: &mut Session<'_>, i: usize) {
+        if i >= s.world.edges.len() || self.departed[i] || s.world.edges[i].retired {
+            return;
+        }
+        self.departed[i] = true;
+        self.inflight[i] = None; // mid-round work dies with the process
+        s.world.edges[i].retired = true;
+        if self.churn.restart_ms > 0.0 {
+            self.transport
+                .schedule(self.churn.restart_ms, NetEvent::Restart { edge: i });
+        }
+    }
+
+    fn on_restart(&mut self, s: &mut Session<'_>, i: usize) -> Result<()> {
+        if !self.departed[i] {
+            return Ok(());
+        }
+        self.departed[i] = false;
+        if s.revive_edge(i) {
+            self.launch(s, i)?;
+            if let Some(gap) = ChurnSpec::exp_gap_ms(self.churn.leave_rate, &mut self.churn_rng)
+            {
+                self.transport.schedule(gap, NetEvent::Leave { edge: i });
+            }
+        }
+        Ok(())
+    }
+
+    fn on_join(&mut self, s: &mut Session<'_>) -> Result<()> {
+        if self.joins_done >= self.max_joins {
+            return Ok(());
+        }
+        self.joins_done += 1;
+        let i = s.join_edge();
+        self.inflight.push(None);
+        self.departed.push(false);
+        self.launch(s, i)?;
+        if let Some(gap) = ChurnSpec::exp_gap_ms(self.churn.leave_rate, &mut self.churn_rng) {
+            self.transport.schedule(gap, NetEvent::Leave { edge: i });
+        }
+        if self.joins_done < self.max_joins {
+            if let Some(gap) = ChurnSpec::exp_gap_ms(self.churn.join_rate, &mut self.churn_rng)
+            {
+                self.transport.schedule(gap, NetEvent::Join);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl CollaborationMode for NetAsyncMerge {
+    fn name(&self) -> &'static str {
+        "net-async-merge"
+    }
+
+    fn begin(&mut self, s: &mut Session<'_>) -> Result<()> {
+        let cfg = s.cfg().clone();
+        if !self.injected {
+            self.transport = Box::new(SimTransport::new(cfg.network.clone(), cfg.seed));
+        }
+        self.churn = cfg.churn.clone();
+        self.churn_rng = churn_rng(cfg.seed);
+        self.round_seq = 0;
+        self.joins_done = 0;
+        // Joins are capped at the starting fleet size so a join-heavy spec
+        // cannot keep a run alive forever on fresh budgets.
+        self.max_joins = if cfg.churn.join_rate > 0.0 { cfg.n_edges } else { 0 };
+        let n = s.world.edges.len();
+        self.inflight = vec![None; n];
+        self.departed = vec![false; n];
+        for i in 0..n {
+            self.launch(s, i)?;
+        }
+        // Churn alarms ride the same kernel as completions + deliveries.
+        for i in 0..n {
+            if let Some(gap) = ChurnSpec::exp_gap_ms(self.churn.leave_rate, &mut self.churn_rng)
+            {
+                self.transport.schedule(gap, NetEvent::Leave { edge: i });
+            }
+        }
+        if self.max_joins > 0 {
+            if let Some(gap) = ChurnSpec::exp_gap_ms(self.churn.join_rate, &mut self.churn_rng) {
+                self.transport.schedule(gap, NetEvent::Join);
+            }
+        }
+        Ok(())
+    }
+
+    fn step(&mut self, s: &mut Session<'_>) -> Result<Option<Vec<LocalReport>>> {
+        loop {
+            let Some(occ) = self.transport.poll() else {
+                return Ok(None); // kernel drained: the run is over
+            };
+            s.wall_ms = self.transport.now();
+            match occ {
+                Occurrence::Local(NetEvent::Compute { edge: i, round }) => {
+                    // Discard completions whose generation died (crash).
+                    let current = self.inflight[i].map(|fl| fl.round);
+                    if current != Some(round) || self.departed[i] {
+                        continue;
+                    }
+                    let fl = self.inflight[i].take().expect("generation checked");
+                    let report = LocalReport {
+                        edge: i,
+                        tau: fl.tau,
+                        cost: fl.total_cost,
+                        train_signal: fl.train_signal,
+                        base_version: s.world.edges[i].base_version,
+                    };
+                    let msg = Message::upload(i, model_bytes(s), report);
+                    if let Some(d) = self.transport.send(msg) {
+                        if let Some(r) = self.deliver(s, d)? {
+                            return Ok(Some(vec![r]));
+                        }
+                    }
+                }
+                Occurrence::Delivery(d) => {
+                    if let Some(r) = self.deliver(s, d)? {
+                        return Ok(Some(vec![r]));
+                    }
+                }
+                Occurrence::Local(NetEvent::Leave { edge: i }) => self.on_leave(s, i),
+                Occurrence::Local(NetEvent::Restart { edge: i }) => self.on_restart(s, i)?,
+                Occurrence::Local(NetEvent::Join) => self.on_join(s)?,
+            }
+        }
+    }
+
+    fn on_report(&mut self, s: &mut Session<'_>, report: &LocalReport) -> Result<()> {
+        let i = report.edge;
+
+        // Staleness-discounted merge — verbatim the legacy AsyncMerge.
+        let prev_global = s.world.global.clone();
+        let staleness = s.world.version - report.base_version;
+        let alpha = aggregate::async_merge_weight(
+            s.cfg().async_alpha,
+            staleness,
+            s.cfg().staleness_decay,
+        );
+        aggregate::async_merge(&mut s.world.global, &s.world.edges[i].model, alpha);
+        s.world.version += 1;
+        s.updates += 1;
+
+        let need_eval = s.due_for_trace();
+        let metric = if need_eval || matches!(s.cfg().utility, UtilityKind::EvalGain) {
+            s.evaluate()?
+        } else {
+            s.last_metric
+        };
+        s.last_metric = metric;
+        let u = s.measure_utility(&prev_global, metric);
+        s.strategy.feedback(i, report.tau, u, report.cost);
+
+        // Reply the fresh global over the wire. An instant (zero-delay)
+        // download syncs now; the relaunch is deferred past the cadence
+        // trace point to preserve the legacy event order exactly.
+        let mut relaunch_now = false;
+        if !self.departed[i] && self.send_download(s, i)? {
+            relaunch_now = true;
+        }
+        if need_eval {
+            s.record_trace_point(metric);
+        }
+        if relaunch_now {
+            self.launch(s, i)?;
+        }
+        Ok(())
+    }
+
+    fn is_done(&self, _s: &Session<'_>) -> bool {
+        false // termination is the kernel draining (step -> None)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Synchronous manner over the transport
+// ---------------------------------------------------------------------------
+
+/// Barrier rounds (paper Fig. 1 left) with the report uploads and the
+/// global-model broadcast shipped over the transport: the barrier waits
+/// for the slowest upload AND the slowest download, every edge is charged
+/// the whole round (waiting burns budget — the paper's straggler effect,
+/// now including network stragglers), and the shared bandit prices the
+/// network into its cost feedback.
+///
+/// Reliability model: a sync barrier cannot complete with a hole in the
+/// cohort, so a message whose retries are exhausted is treated as arriving
+/// after its timeouts anyway (TCP-like eventual delivery) — observable as
+/// a `MessageDropped { lost: true }` event plus the stretched barrier.
+/// Churn: departures end the cohort after the round (synchronous EL is
+/// fail-stop by construction); joins are ignored; straggle stretches the
+/// straggler's contribution to the barrier.
+pub struct NetSyncBarrier {
+    transport: Box<dyn Transport>,
+    injected: bool,
+    churn: ChurnSpec,
+    churn_rng: Rng,
+    overhead: f64,
+    round_tau: usize,
+    round_cost: f64,
+    round_comm: f64,
+    round_comp_sum: f64,
+    reported: usize,
+}
+
+impl Default for NetSyncBarrier {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NetSyncBarrier {
+    pub fn new() -> NetSyncBarrier {
+        NetSyncBarrier {
+            transport: Box::new(SimTransport::new(
+                crate::net::NetworkSpec::ideal(),
+                0,
+            )),
+            injected: false,
+            churn: ChurnSpec::none(),
+            churn_rng: Rng::new(0),
+            overhead: 0.0,
+            round_tau: 0,
+            round_cost: 0.0,
+            round_comm: 0.0,
+            round_comp_sum: 0.0,
+            reported: 0,
+        }
+    }
+
+    /// Inject a custom transport (see [`NetAsyncMerge::with_transport`]).
+    pub fn with_transport(transport: Box<dyn Transport>) -> NetSyncBarrier {
+        NetSyncBarrier {
+            transport,
+            injected: true,
+            ..NetSyncBarrier::new()
+        }
+    }
+
+    /// Record a delivery's drops and return its wire time.
+    fn note_delivery(&mut self, s: &mut Session<'_>, d: &Delivery) -> f64 {
+        if d.dropped_attempts > 0 || d.lost {
+            let edge = d.msg.edge().unwrap_or(0);
+            let wall_ms = s.wall_ms;
+            s.emit(RunEvent::MessageDropped {
+                edge,
+                wall_ms,
+                attempts: d.dropped_attempts,
+                lost: d.lost,
+            });
+        }
+        d.delay_ms
+    }
+
+    /// Wait for `pending` queued deliveries; returns the slowest one.
+    fn drain(&mut self, s: &mut Session<'_>, mut pending: usize) -> f64 {
+        let mut wait = 0.0f64;
+        while pending > 0 {
+            match self.transport.poll() {
+                Some(Occurrence::Delivery(d)) => {
+                    wait = wait.max(self.note_delivery(s, &d));
+                    pending -= 1;
+                }
+                Some(Occurrence::Local(_)) => {} // no local events in sync
+                None => break,                   // defensive; cannot happen
+            }
+        }
+        wait
+    }
+}
+
+impl CollaborationMode for NetSyncBarrier {
+    fn name(&self) -> &'static str {
+        "net-sync-barrier"
+    }
+
+    fn begin(&mut self, s: &mut Session<'_>) -> Result<()> {
+        let cfg = s.cfg().clone();
+        if !self.injected {
+            self.transport = Box::new(SimTransport::new(cfg.network.clone(), cfg.seed));
+        }
+        self.churn = cfg.churn.clone();
+        self.churn_rng = churn_rng(cfg.seed);
+        self.overhead = 1.0 + s.strategy.edge_overhead();
+        Ok(())
+    }
+
+    fn step(&mut self, s: &mut Session<'_>) -> Result<Option<Vec<LocalReport>>> {
+        self.transport.sync_clock(s.wall_ms);
+        // Shared decision priced for the tightest ledger — legacy verbatim.
+        let min_remaining = s
+            .world
+            .edges
+            .iter()
+            .map(|e| e.remaining())
+            .fold(f64::INFINITY, f64::min);
+        let Some(tau) = s.strategy.select(0, min_remaining, &mut s.world.rng) else {
+            return Ok(None); // no affordable arm -> the fleet retires together
+        };
+        let wall_ms = s.wall_ms;
+        s.emit(RunEvent::RoundStart {
+            edge: None,
+            tau,
+            wall_ms,
+        });
+
+        // Local rounds on every edge; stragglers (hardware heterogeneity ×
+        // transient churn straggle) define the compute barrier.
+        let hyper = s.cfg().hyper.at_version(s.world.version);
+        let cost = s.cfg().cost;
+        let n = s.world.edges.len();
+        let mut reports = Vec::with_capacity(n);
+        let mut barrier_comp = 0.0f64;
+        let mut comp_sum = 0.0f64;
+        for i in 0..n {
+            let base_version = s.world.edges[i].base_version;
+            let r = s.local_round(i, tau, &hyper)?;
+            let charged = r.comp_cost * self.overhead;
+            let mut effective = charged;
+            if self.churn.straggle_p > 0.0 && self.churn_rng.f64() < self.churn.straggle_p {
+                effective *= self.churn.straggle_factor;
+            }
+            barrier_comp = barrier_comp.max(effective);
+            comp_sum += charged;
+            reports.push(LocalReport {
+                edge: i,
+                tau,
+                cost: charged,
+                train_signal: r.train_signal,
+                base_version,
+            });
+        }
+        let comm = cost.sample_comm(&mut s.world.rng);
+
+        // Ship every report up and the global broadcast down; the barrier
+        // waits for the slowest of each leg.
+        let bytes = model_bytes(s);
+        let mut up_wait = 0.0f64;
+        let mut pending = 0usize;
+        for r in &reports {
+            match self.transport.send(Message::upload(r.edge, bytes, r.clone())) {
+                Some(d) => up_wait = up_wait.max(self.note_delivery(s, &d)),
+                None => pending += 1,
+            }
+        }
+        up_wait = up_wait.max(self.drain(s, pending));
+        let version = s.world.version;
+        let mut dl_wait = 0.0f64;
+        let mut pending = 0usize;
+        for i in 0..n {
+            match self.transport.send(Message::download(i, bytes, version)) {
+                Some(d) => dl_wait = dl_wait.max(self.note_delivery(s, &d)),
+                None => pending += 1,
+            }
+        }
+        dl_wait = dl_wait.max(self.drain(s, pending));
+
+        // Everyone waits for the slowest compute + the network; everyone
+        // is charged the whole round.
+        let barrier_cost = barrier_comp + comm + up_wait + dl_wait;
+        for edge in s.world.edges.iter_mut() {
+            edge.charge(barrier_cost);
+        }
+        s.wall_ms += barrier_cost;
+
+        // Per-round churn hazard: a departure ends synchronous training
+        // after this round (the cohort is fail-stop by construction).
+        if self.churn.leave_rate > 0.0 {
+            let p_leave = 1.0 - (-self.churn.leave_rate * barrier_cost / 1000.0).exp();
+            for edge in s.world.edges.iter_mut() {
+                if self.churn_rng.f64() < p_leave {
+                    edge.retired = true;
+                }
+            }
+        }
+
+        self.round_tau = tau;
+        self.round_cost = barrier_cost;
+        self.round_comm = comm;
+        self.round_comp_sum = comp_sum;
+        self.reported = 0;
+        Ok(Some(reports))
+    }
+
+    fn on_report(&mut self, s: &mut Session<'_>, _report: &LocalReport) -> Result<()> {
+        self.reported += 1;
+        if self.reported < s.world.edges.len() {
+            return Ok(()); // the barrier waits for the whole cohort
+        }
+
+        // Weighted-average aggregation — legacy SyncBarrier verbatim; the
+        // bandit's cost feedback now includes the network waits.
+        let prev_global = s.world.global.clone();
+        let locals: Vec<(&ModelState, f64)> = s
+            .world
+            .edges
+            .iter()
+            .map(|e| (&e.model, s.world.weights[e.id]))
+            .collect();
+        let new_global = aggregate::weighted_average(&locals);
+
+        let divergence = s
+            .world
+            .edges
+            .iter()
+            .map(|e| e.model.l2_distance(&new_global))
+            .sum::<f64>()
+            / s.world.edges.len() as f64;
+        let obs = RoundObservation {
+            divergence,
+            global_delta: prev_global.l2_distance(&new_global),
+            mean_comp: self.round_comp_sum / (s.world.edges.len() as f64 * self.round_tau as f64),
+            comm: self.round_comm,
+            lr: s.cfg().hyper.lr as f64,
+        };
+
+        s.world.global = new_global;
+        s.world.version += 1;
+        s.updates += 1;
+
+        let metric = s.evaluate()?;
+        let u = s.measure_utility(&prev_global, metric);
+        s.strategy.feedback(0, self.round_tau, u, self.round_cost);
+        s.strategy.observe_round(&obs);
+
+        let (global, version) = (s.world.global.clone(), s.world.version);
+        for edge in s.world.edges.iter_mut() {
+            edge.sync_with_global(&global, version);
+        }
+
+        s.last_metric = metric;
+        if s.due_for_trace() {
+            s.record_trace_point(metric);
+        }
+        Ok(())
+    }
+
+    fn is_done(&self, s: &Session<'_>) -> bool {
+        // Any exhausted or departed ledger ends synchronous training.
+        s.world.edges.iter().any(|e| e.retired)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Algo, RunConfig};
+    use crate::engine::native::NativeEngine;
+    use crate::model::Task;
+    use crate::net::model::NetworkSpec;
+    use std::cell::Cell;
+    use std::rc::Rc;
+
+    fn cfg(algo: Algo) -> RunConfig {
+        RunConfig {
+            algo,
+            task: Task::Svm,
+            data_n: 3000,
+            budget: 900.0,
+            n_edges: 3,
+            seed: 7,
+            ..Default::default()
+        }
+    }
+
+    fn run_with_mode(c: &RunConfig, mode: &mut dyn CollaborationMode) -> crate::coordinator::RunResult {
+        let engine = NativeEngine::default();
+        Session::new(c, &engine)
+            .unwrap()
+            .run_with(mode)
+            .unwrap()
+    }
+
+    #[test]
+    fn ideal_transport_matches_direct_call_async() {
+        let c = cfg(Algo::Ol4elAsync);
+        let engine = NativeEngine::default();
+        let direct = crate::coordinator::run(&c, &engine).unwrap();
+        let netted = run_with_mode(&c, &mut NetAsyncMerge::new());
+        assert_eq!(direct.final_metric, netted.final_metric);
+        assert_eq!(direct.total_updates, netted.total_updates);
+        assert_eq!(direct.wall_ms, netted.wall_ms);
+        assert_eq!(direct.mean_spent, netted.mean_spent);
+        assert_eq!(direct.tau_histogram, netted.tau_histogram);
+        assert_eq!(direct.trace, netted.trace);
+    }
+
+    #[test]
+    fn ideal_transport_matches_direct_call_sync() {
+        for algo in [Algo::Ol4elSync, Algo::FixedI, Algo::AcSync] {
+            let c = cfg(algo);
+            let engine = NativeEngine::default();
+            let direct = crate::coordinator::run(&c, &engine).unwrap();
+            let netted = run_with_mode(&c, &mut NetSyncBarrier::new());
+            assert_eq!(direct.final_metric, netted.final_metric, "{algo:?}");
+            assert_eq!(direct.total_updates, netted.total_updates, "{algo:?}");
+            assert_eq!(direct.wall_ms, netted.wall_ms, "{algo:?}");
+            assert_eq!(direct.trace, netted.trace, "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn latency_slows_the_run_and_is_charged() {
+        let mut c = cfg(Algo::Ol4elAsync);
+        // 300ms per message leg: a round-trip costs more than the
+        // cheapest arm itself, so the wire tax must eat whole rounds.
+        c.network = NetworkSpec::parse("fixed:300").unwrap();
+        let ideal = {
+            let mut c0 = c.clone();
+            c0.network = NetworkSpec::ideal();
+            let engine = NativeEngine::default();
+            crate::coordinator::run(&c0, &engine).unwrap()
+        };
+        let engine = NativeEngine::default();
+        let slow = crate::coordinator::run(&c, &engine).unwrap();
+        assert!(
+            slow.total_updates < ideal.total_updates,
+            "latency should cost updates: {} vs {}",
+            slow.total_updates,
+            ideal.total_updates
+        );
+        // The wire time landed on the ledgers: the slow run burned its
+        // budget on fewer updates.
+        assert!(slow.mean_spent > 0.0);
+    }
+
+    #[test]
+    fn lost_uploads_waste_rounds_and_are_observable() {
+        let mut c = cfg(Algo::Ol4elAsync);
+        // Heavy loss with zero retries: many rounds never reach the Cloud.
+        c.network = NetworkSpec::parse("ideal,drop:0.4,retries:0,timeout:30").unwrap();
+        let drops = Rc::new(Cell::new(0u32));
+        let losses = Rc::new(Cell::new(0u32));
+        let (d2, l2) = (drops.clone(), losses.clone());
+        let engine = NativeEngine::default();
+        let mut session = Session::new(&c, &engine).unwrap();
+        session.observe(crate::coordinator::observer::from_fn(move |ev: &RunEvent| {
+            if let RunEvent::MessageDropped { attempts, lost, .. } = ev {
+                d2.set(d2.get() + attempts);
+                if *lost {
+                    l2.set(l2.get() + 1);
+                }
+            }
+        }));
+        let r = session.run().unwrap();
+        assert!(losses.get() > 0, "no losses at drop:0.4");
+        assert!(drops.get() >= losses.get());
+        assert!(r.total_updates > 0, "the run should still make progress");
+    }
+
+    #[test]
+    fn churn_leave_retires_edges_early() {
+        let mut c = cfg(Algo::Ol4elAsync);
+        c.budget = 5000.0;
+        // Aggressive departures: every edge leaves within ~100ms on average.
+        c.churn = ChurnSpec::parse("poisson:10").unwrap();
+        let engine = NativeEngine::default();
+        let r = crate::coordinator::run(&c, &engine).unwrap();
+        assert_eq!(r.retired_edges, 3);
+        // Departed long before the budget was spent.
+        assert!(
+            r.mean_spent < c.budget * 0.9,
+            "churn should cut consumption short: {}",
+            r.mean_spent
+        );
+    }
+
+    #[test]
+    fn churn_joins_grow_the_fleet_and_stream_events() {
+        let mut c = cfg(Algo::Ol4elAsync);
+        c.budget = 2000.0;
+        c.churn = ChurnSpec::parse("poisson:0,join:5").unwrap();
+        let joined = Rc::new(Cell::new(0usize));
+        let j2 = joined.clone();
+        let engine = NativeEngine::default();
+        let mut session = Session::new(&c, &engine).unwrap();
+        session.observe(crate::coordinator::observer::from_fn(move |ev: &RunEvent| {
+            if matches!(ev, RunEvent::EdgeJoined { .. }) {
+                j2.set(j2.get() + 1);
+            }
+        }));
+        let r = session.run().unwrap();
+        assert!(joined.get() > 0, "no joins at join:5");
+        assert!(joined.get() <= c.n_edges, "joins must be capped");
+        assert_eq!(r.retired_edges, c.n_edges + joined.get());
+        assert!(r.total_updates > 0);
+    }
+
+    #[test]
+    fn crash_restart_edges_rejoin() {
+        let mut c = cfg(Algo::Ol4elAsync);
+        c.budget = 3000.0;
+        c.churn = ChurnSpec::parse("poisson:2,restart:100").unwrap();
+        let rejoined = Rc::new(Cell::new(0usize));
+        let j2 = rejoined.clone();
+        let engine = NativeEngine::default();
+        let mut session = Session::new(&c, &engine).unwrap();
+        session.observe(crate::coordinator::observer::from_fn(move |ev: &RunEvent| {
+            if matches!(ev, RunEvent::EdgeJoined { .. }) {
+                j2.set(j2.get() + 1);
+            }
+        }));
+        let r = session.run().unwrap();
+        assert!(rejoined.get() > 0, "no restarts at poisson:2,restart:100");
+        // Restarted edges keep burning their ledgers down to retirement.
+        assert_eq!(r.retired_edges, 3);
+    }
+
+    #[test]
+    fn sync_barrier_pays_for_partitions() {
+        let mut c = cfg(Algo::Ol4elSync);
+        c.budget = 3000.0;
+        // Repeated outage windows keep taxing the barrier with timeout
+        // retransmits — roughly half the budget goes to waiting.
+        c.network = NetworkSpec::parse(
+            "ideal,part:0-500,part:700-1200,part:1400-1900,part:2100-2600,timeout:100",
+        )
+        .unwrap();
+        let engine = NativeEngine::default();
+        let r = crate::coordinator::run(&c, &engine).unwrap();
+        let mut c0 = c.clone();
+        c0.network = NetworkSpec::ideal();
+        let r0 = crate::coordinator::run(&c0, &engine).unwrap();
+        assert!(
+            r.total_updates < r0.total_updates,
+            "partitions should cost rounds: {} vs {}",
+            r.total_updates,
+            r0.total_updates
+        );
+    }
+
+    #[test]
+    fn runs_with_network_are_deterministic() {
+        let mut c = cfg(Algo::Ol4elAsync);
+        c.network = NetworkSpec::parse("lognormal:5:0.5,drop:0.05").unwrap();
+        c.churn = ChurnSpec::parse("poisson:0.5,join:0.5").unwrap();
+        let engine = NativeEngine::default();
+        let a = crate::coordinator::run(&c, &engine).unwrap();
+        let b = crate::coordinator::run(&c, &engine).unwrap();
+        assert_eq!(a.final_metric, b.final_metric);
+        assert_eq!(a.total_updates, b.total_updates);
+        assert_eq!(a.mean_spent, b.mean_spent);
+    }
+}

@@ -1,0 +1,397 @@
+//! The object-safe [`Transport`] trait and its deterministic in-memory
+//! implementation.
+//!
+//! A transport owns the virtual clock: message deliveries, compute
+//! completions and churn alarms are all scheduled through it, so every
+//! source of virtual-time events shares one total order (the generalized
+//! [`EventQueue`] kernel, O(log n) per operation). [`SimTransport`]
+//! resolves each send's fate *at send time* — retransmit timeouts, final
+//! latency + transfer time, or loss — from its own seeded RNG stream, so
+//! network randomness never perturbs the training RNG and an
+//! [ideal](crate::net::NetworkSpec::ideal) network draws nothing at all.
+//!
+//! Zero-delay deliveries are returned synchronously from [`Transport::send`]
+//! instead of round-tripping through the queue: a zero-latency network IS a
+//! function call, which is exactly how the transport path reproduces the
+//! legacy direct-call engine bit for bit under the ideal spec.
+//!
+//! The trait is deliberately narrow (send / poll / schedule / clock) so a
+//! socket transport against real edges can implement it later: `send`
+//! writes to the wire, `poll` becomes a readiness wait, and `schedule`
+//! maps to timer registration.
+
+use crate::net::message::{Delivery, Message, NetEvent, Occurrence};
+use crate::net::model::NetworkSpec;
+use crate::sim::clock::EventQueue;
+use crate::util::rng::Rng;
+
+/// Counters a transport keeps about its traffic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransportStats {
+    /// Messages handed to `send`.
+    pub sent: u64,
+    /// Messages that (eventually) arrived.
+    pub delivered: u64,
+    /// Messages whose every attempt dropped.
+    pub lost: u64,
+    /// Individual dropped attempts across all messages.
+    pub dropped_attempts: u64,
+}
+
+/// Message passing + virtual-time scheduling between the Cloud and the
+/// edge fleet. Object safe: collaboration manners and the fleet driver
+/// hold `Box<dyn Transport>`.
+pub trait Transport {
+    fn name(&self) -> &'static str;
+
+    /// Current virtual time in ms.
+    fn now(&self) -> f64;
+
+    /// Advance the clock to `now_ms` without an event (forward only) —
+    /// used by barrier-style drivers that account whole rounds at once.
+    fn sync_clock(&mut self, now_ms: f64);
+
+    /// Schedule a local (non-network) event `delay_ms` from now.
+    fn schedule(&mut self, delay_ms: f64, ev: NetEvent);
+
+    /// Send a message. `Some(delivery)` means it resolved with zero delay
+    /// (the instant fast-path); otherwise its [`Delivery`] — successful or
+    /// lost — surfaces later through [`poll`](Transport::poll).
+    fn send(&mut self, msg: Message) -> Option<Delivery>;
+
+    /// Pop the next occurrence in virtual time, advancing the clock;
+    /// `None` when nothing is scheduled or in flight.
+    fn poll(&mut self) -> Option<Occurrence>;
+
+    /// Messages currently queued for future delivery.
+    fn in_flight(&self) -> usize;
+
+    fn stats(&self) -> TransportStats;
+
+    /// Total events popped off the kernel (throughput accounting).
+    fn events_processed(&self) -> u64;
+
+    /// High-water mark of the event queue depth.
+    fn peak_queue_depth(&self) -> usize;
+}
+
+/// What rides the shared kernel inside [`SimTransport`].
+#[derive(Clone, Debug)]
+enum Sched {
+    Local(NetEvent),
+    Deliver(Delivery),
+}
+
+/// Deterministic in-memory transport: seeded, delivery ordered by the
+/// virtual clock with insertion-order tie-breaking.
+pub struct SimTransport {
+    spec: NetworkSpec,
+    queue: EventQueue<Sched>,
+    rng: Rng,
+    /// Optional per-edge bandwidth (Mbps) overriding `spec.bandwidth_mbps`
+    /// for heterogeneous links; indexed by edge id.
+    bandwidths: Vec<f64>,
+    in_flight: usize,
+    stats: TransportStats,
+}
+
+impl SimTransport {
+    /// A transport over `spec`, seeded deterministically. The RNG stream
+    /// is derived from (but independent of) the run seed so network
+    /// randomness never perturbs training draws.
+    pub fn new(spec: NetworkSpec, seed: u64) -> SimTransport {
+        SimTransport {
+            spec,
+            queue: EventQueue::new(),
+            rng: Rng::new(seed ^ 0x6e65_745f_7472_616e), // "net_tran"
+            bandwidths: Vec::new(),
+            in_flight: 0,
+            stats: TransportStats::default(),
+        }
+    }
+
+    pub fn spec(&self) -> &NetworkSpec {
+        &self.spec
+    }
+
+    /// Give each edge its own link bandwidth (Mbps); edges beyond the
+    /// vector fall back to the spec-wide bandwidth.
+    pub fn set_bandwidths(&mut self, mbps: Vec<f64>) {
+        self.bandwidths = mbps;
+    }
+
+    fn bandwidth_for(&self, msg: &Message) -> f64 {
+        msg.edge()
+            .and_then(|i| self.bandwidths.get(i).copied())
+            .unwrap_or(self.spec.bandwidth_mbps)
+    }
+
+    /// Resolve a message's fate: (total delay, dropped attempts, lost).
+    fn resolve(&mut self, msg: &Message) -> (f64, u32, bool) {
+        let transfer = NetworkSpec::transfer_ms(msg.size_bytes, self.bandwidth_for(msg));
+        let mut waited = 0.0;
+        let mut dropped = 0u32;
+        for _ in 0..=self.spec.max_retries {
+            let t = self.queue.now() + waited;
+            let drops = if self.spec.in_partition(t) {
+                true
+            } else {
+                self.spec.drop_rate > 0.0 && self.rng.f64() < self.spec.drop_rate
+            };
+            if drops {
+                dropped += 1;
+                waited += self.spec.timeout_ms;
+                continue;
+            }
+            let delay = waited + self.spec.latency.sample(&mut self.rng) + transfer;
+            return (delay, dropped, false);
+        }
+        (waited, dropped, true)
+    }
+}
+
+impl Transport for SimTransport {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn now(&self) -> f64 {
+        self.queue.now()
+    }
+
+    fn sync_clock(&mut self, now_ms: f64) {
+        self.queue.advance_to(now_ms);
+    }
+
+    fn schedule(&mut self, delay_ms: f64, ev: NetEvent) {
+        let at = self.queue.now() + delay_ms.max(0.0);
+        self.queue.push(at, Sched::Local(ev));
+    }
+
+    fn send(&mut self, msg: Message) -> Option<Delivery> {
+        self.stats.sent += 1;
+        let (delay_ms, dropped_attempts, lost) = self.resolve(&msg);
+        self.stats.dropped_attempts += u64::from(dropped_attempts);
+        if lost {
+            self.stats.lost += 1;
+        } else {
+            self.stats.delivered += 1;
+        }
+        let delivery = Delivery {
+            msg,
+            delay_ms,
+            dropped_attempts,
+            lost,
+        };
+        if delay_ms <= 0.0 && !lost {
+            return Some(delivery); // zero-latency network == function call
+        }
+        self.in_flight += 1;
+        let at = self.queue.now() + delay_ms;
+        self.queue.push(at, Sched::Deliver(delivery));
+        None
+    }
+
+    fn poll(&mut self) -> Option<Occurrence> {
+        let ev = self.queue.pop()?;
+        Some(match ev.payload {
+            Sched::Local(e) => Occurrence::Local(e),
+            Sched::Deliver(d) => {
+                self.in_flight -= 1;
+                Occurrence::Delivery(d)
+            }
+        })
+    }
+
+    fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.stats
+    }
+
+    fn events_processed(&self) -> u64 {
+        self.queue.popped()
+    }
+
+    fn peak_queue_depth(&self) -> usize {
+        self.queue.peak_len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::observer::LocalReport;
+    use crate::net::message::{Node, Payload};
+    use crate::net::model::LatencyModel;
+
+    fn report(edge: usize) -> LocalReport {
+        LocalReport {
+            edge,
+            tau: 2,
+            cost: 5.0,
+            train_signal: 0.1,
+            base_version: 0,
+        }
+    }
+
+    fn upload(edge: usize) -> Message {
+        Message::upload(edge, 1024.0, report(edge))
+    }
+
+    #[test]
+    fn ideal_sends_resolve_instantly_with_no_rng_draws() {
+        let mut t = SimTransport::new(NetworkSpec::ideal(), 42);
+        let before = t.rng.clone().next_u64();
+        let d = t.send(upload(0)).expect("instant");
+        assert_eq!(d.delay_ms, 0.0);
+        assert!(!d.lost);
+        assert_eq!(d.dropped_attempts, 0);
+        assert_eq!(t.in_flight(), 0);
+        assert_eq!(t.rng.next_u64(), before, "ideal network drew from the RNG");
+        assert_eq!(t.stats().delivered, 1);
+    }
+
+    #[test]
+    fn fixed_latency_delivers_in_clock_order() {
+        let spec = NetworkSpec {
+            latency: LatencyModel::Fixed(10.0),
+            ..NetworkSpec::ideal()
+        };
+        let mut t = SimTransport::new(spec, 1);
+        assert!(t.send(upload(0)).is_none());
+        t.schedule(5.0, NetEvent::Compute { edge: 9, round: 0 });
+        assert_eq!(t.in_flight(), 1);
+        // The 5ms compute event precedes the 10ms delivery.
+        match t.poll().unwrap() {
+            Occurrence::Local(NetEvent::Compute { edge, .. }) => assert_eq!(edge, 9),
+            other => panic!("unexpected {other:?}"),
+        }
+        match t.poll().unwrap() {
+            Occurrence::Delivery(d) => {
+                assert_eq!(d.delay_ms, 10.0);
+                assert_eq!(d.msg.edge(), Some(0));
+                assert!(matches!(d.msg.payload, Payload::Report(_)));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(t.now(), 10.0);
+        assert!(t.poll().is_none());
+        assert_eq!(t.in_flight(), 0);
+    }
+
+    #[test]
+    fn bandwidth_adds_size_proportional_transfer_time() {
+        let spec = NetworkSpec {
+            bandwidth_mbps: 8.0,
+            ..NetworkSpec::ideal()
+        };
+        let mut t = SimTransport::new(spec, 1);
+        // 100 kB over 8 Mbit/s = 100 ms.
+        assert!(t.send(Message::upload(0, 100_000.0, report(0))).is_none());
+        let Occurrence::Delivery(d) = t.poll().unwrap() else {
+            panic!("expected delivery");
+        };
+        assert!((d.delay_ms - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_edge_bandwidths_override_the_spec() {
+        let spec = NetworkSpec {
+            bandwidth_mbps: 8.0,
+            ..NetworkSpec::ideal()
+        };
+        let mut t = SimTransport::new(spec, 1);
+        t.set_bandwidths(vec![8.0, 4.0]);
+        let _ = t.send(Message::upload(1, 100_000.0, report(1)));
+        let Occurrence::Delivery(d) = t.poll().unwrap() else {
+            panic!("expected delivery");
+        };
+        assert!((d.delay_ms - 200.0).abs() < 1e-9, "slow link {d:?}");
+    }
+
+    #[test]
+    fn drops_retry_with_timeout_and_eventually_lose() {
+        // drop_rate ~ 1: every attempt drops, so the message is lost after
+        // (1 + retries) attempts having waited retries+1 timeouts.
+        let spec = NetworkSpec {
+            drop_rate: 0.999_999,
+            timeout_ms: 50.0,
+            max_retries: 2,
+            ..NetworkSpec::ideal()
+        };
+        let mut t = SimTransport::new(spec, 7);
+        assert!(t.send(upload(0)).is_none());
+        let Occurrence::Delivery(d) = t.poll().unwrap() else {
+            panic!("expected delivery");
+        };
+        assert!(d.lost);
+        assert_eq!(d.dropped_attempts, 3);
+        assert_eq!(d.delay_ms, 150.0);
+        assert_eq!(t.stats().lost, 1);
+        assert_eq!(t.stats().dropped_attempts, 3);
+    }
+
+    #[test]
+    fn partitions_force_drops_then_heal() {
+        let spec = NetworkSpec {
+            partitions: vec![(0.0, 100.0)],
+            timeout_ms: 60.0,
+            max_retries: 3,
+            ..NetworkSpec::ideal()
+        };
+        let mut t = SimTransport::new(spec, 3);
+        // Sent at t=0 inside the partition: attempts at 0 and 60 drop, the
+        // attempt at 120 is outside the window and succeeds instantly.
+        assert!(t.send(upload(0)).is_none());
+        let Occurrence::Delivery(d) = t.poll().unwrap() else {
+            panic!("expected delivery");
+        };
+        assert!(!d.lost);
+        assert_eq!(d.dropped_attempts, 2);
+        assert_eq!(d.delay_ms, 120.0);
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let spec = NetworkSpec::parse("lognormal:5:0.5,drop:0.1").unwrap();
+        let run = |seed| {
+            let mut t = SimTransport::new(spec.clone(), seed);
+            let mut delays = Vec::new();
+            for i in 0..50 {
+                if t.send(upload(i)).is_none() {
+                    if let Some(Occurrence::Delivery(d)) = t.poll() {
+                        delays.push(d.delay_ms);
+                    }
+                }
+            }
+            delays
+        };
+        assert_eq!(run(9), run(9));
+        assert_ne!(run(9), run(10));
+    }
+
+    #[test]
+    fn sync_clock_moves_partitions_into_view() {
+        let spec = NetworkSpec {
+            partitions: vec![(1000.0, 2000.0)],
+            timeout_ms: 600.0,
+            max_retries: 1,
+            ..NetworkSpec::ideal()
+        };
+        let mut t = SimTransport::new(spec, 3);
+        // Before the window: instant.
+        assert!(t.send(upload(0)).is_some());
+        // Inside the window: both attempts (at 1500 and 2100) — the second
+        // lands after the heal, so one drop then success.
+        t.sync_clock(1500.0);
+        assert!(t.send(upload(0)).is_none());
+        let Occurrence::Delivery(d) = t.poll().unwrap() else {
+            panic!("expected delivery");
+        };
+        assert_eq!(d.dropped_attempts, 1);
+        assert!(!d.lost);
+    }
+}

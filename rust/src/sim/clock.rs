@@ -1,52 +1,111 @@
-//! Virtual clock + deterministic event queue for the asynchronous
-//! coordinator. Time is f64 milliseconds of simulated resource-time; ties
-//! are broken by insertion sequence so runs are fully reproducible.
+//! Virtual clock + deterministic event queue — the shared event kernel
+//! behind the asynchronous coordinator and the `net::` fleet simulation.
+//! Time is f64 milliseconds of simulated resource-time; ties are broken by
+//! insertion sequence so runs are fully reproducible.
+//!
+//! The queue is generic over its payload: the async collaboration manner
+//! schedules bare edge indices, while [`crate::net::SimTransport`] schedules
+//! message deliveries and churn alarms through the same kernel so every
+//! source of virtual-time events shares ONE total order. Scheduling and
+//! popping are both O(log n) (binary heap), which is what keeps 10k-edge
+//! fleet simulations tractable.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::fmt;
 
-/// An edge-completion event.
+/// A typed scheduling error (see [`EventQueue::try_push`]).
 #[derive(Clone, Copy, Debug, PartialEq)]
-pub struct Event {
-    pub time: f64,
-    pub seq: u64,
-    pub edge: usize,
+pub enum ClockError {
+    /// The event time was NaN or infinite. [`Event`]'s `Ord` contract
+    /// requires finite times, so these are rejected at the door instead of
+    /// silently comparing as `Equal` inside the heap.
+    NonFiniteTime { time: f64 },
+    /// The event time precedes the current virtual clock.
+    TimeRegression { time: f64, now: f64 },
 }
 
-impl Eq for Event {}
+impl fmt::Display for ClockError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ClockError::NonFiniteTime { time } => {
+                write!(f, "non-finite event time {time}")
+            }
+            ClockError::TimeRegression { time, now } => {
+                write!(f, "scheduling into the past: {time} < {now}")
+            }
+        }
+    }
+}
 
-impl Ord for Event {
+impl std::error::Error for ClockError {}
+
+/// A scheduled event: a finite time, an insertion sequence number (the tie
+/// breaker) and an arbitrary payload.
+#[derive(Clone, Copy, Debug)]
+pub struct Event<T> {
+    pub time: f64,
+    pub seq: u64,
+    pub payload: T,
+}
+
+impl<T> PartialEq for Event<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl<T> Eq for Event<T> {}
+
+impl<T> Ord for Event<T> {
     fn cmp(&self, other: &Self) -> Ordering {
-        // Min-heap semantics via reversed comparison in the queue; here we
-        // define the natural (time, seq) order. Times are finite by
-        // construction (asserted on push).
+        // Natural (time, seq) order; the queue reverses it for min-heap
+        // semantics. Contract: times are FINITE — enforced by
+        // `EventQueue::try_push` rejecting NaN/∞ with a typed error, and
+        // asserted here so hand-built events cannot smuggle NaN into the
+        // heap and silently compare `Equal`.
         self.time
             .partial_cmp(&other.time)
-            .unwrap_or(Ordering::Equal)
+            .expect("Event times must be finite (EventQueue rejects NaN on push)")
             .then_with(|| self.seq.cmp(&other.seq))
     }
 }
 
-impl PartialOrd for Event {
+impl<T> PartialOrd for Event<T> {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
 }
 
 /// Min-ordered event queue with a monotone virtual clock.
-#[derive(Debug, Default)]
-pub struct EventQueue {
-    heap: BinaryHeap<std::cmp::Reverse<Event>>,
+#[derive(Debug)]
+pub struct EventQueue<T = usize> {
+    heap: BinaryHeap<std::cmp::Reverse<Event<T>>>,
     seq: u64,
     now: f64,
+    popped: u64,
+    peak: usize,
 }
 
-impl EventQueue {
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: 0.0,
+            popped: 0,
+            peak: 0,
+        }
+    }
+}
+
+impl<T> EventQueue<T> {
     pub fn new() -> Self {
         Self::default()
     }
 
-    /// Current virtual time (the time of the last popped event).
+    /// Current virtual time (the time of the last popped event, or the
+    /// last [`advance_to`](EventQueue::advance_to)).
     pub fn now(&self) -> f64 {
         self.now
     }
@@ -59,28 +118,63 @@ impl EventQueue {
         self.heap.is_empty()
     }
 
-    /// Schedule an edge completion at absolute time `time`.
-    pub fn push(&mut self, time: f64, edge: usize) {
-        assert!(time.is_finite(), "non-finite event time");
-        assert!(
-            time + 1e-9 >= self.now,
-            "scheduling into the past: {time} < {}",
-            self.now
-        );
+    /// Total events popped so far (throughput accounting).
+    pub fn popped(&self) -> u64 {
+        self.popped
+    }
+
+    /// High-water mark of the queue depth.
+    pub fn peak_len(&self) -> usize {
+        self.peak
+    }
+
+    /// Schedule an event at absolute time `time`, rejecting non-finite
+    /// times and regressions with a typed error.
+    pub fn try_push(&mut self, time: f64, payload: T) -> Result<(), ClockError> {
+        if !time.is_finite() {
+            return Err(ClockError::NonFiniteTime { time });
+        }
+        if time + 1e-9 < self.now {
+            return Err(ClockError::TimeRegression {
+                time,
+                now: self.now,
+            });
+        }
         let ev = Event {
             time,
             seq: self.seq,
-            edge,
+            payload,
         };
         self.seq += 1;
         self.heap.push(std::cmp::Reverse(ev));
+        self.peak = self.peak.max(self.heap.len());
+        Ok(())
+    }
+
+    /// Schedule an event at absolute time `time`; panics on the errors
+    /// [`try_push`](EventQueue::try_push) reports (programming bugs in
+    /// in-tree schedulers).
+    pub fn push(&mut self, time: f64, payload: T) {
+        if let Err(e) = self.try_push(time, payload) {
+            panic!("{e}");
+        }
     }
 
     /// Pop the earliest event, advancing the clock.
-    pub fn pop(&mut self) -> Option<Event> {
+    pub fn pop(&mut self) -> Option<Event<T>> {
         let ev = self.heap.pop()?.0;
         self.now = ev.time;
+        self.popped += 1;
         Some(ev)
+    }
+
+    /// Advance the clock without popping (forward only) — used by drivers
+    /// that account some spans of virtual time outside the queue (e.g. the
+    /// synchronous barrier charging a whole round at once).
+    pub fn advance_to(&mut self, time: f64) {
+        if time.is_finite() && time > self.now {
+            self.now = time;
+        }
     }
 }
 
@@ -94,9 +188,11 @@ mod tests {
         q.push(5.0, 0);
         q.push(1.0, 1);
         q.push(3.0, 2);
-        let order: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|e| e.edge).collect();
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|e| e.payload).collect();
         assert_eq!(order, vec![1, 2, 0]);
         assert_eq!(q.now(), 5.0);
+        assert_eq!(q.popped(), 3);
+        assert_eq!(q.peak_len(), 3);
     }
 
     #[test]
@@ -105,7 +201,7 @@ mod tests {
         q.push(2.0, 7);
         q.push(2.0, 8);
         q.push(2.0, 9);
-        let order: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|e| e.edge).collect();
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|e| e.payload).collect();
         assert_eq!(order, vec![7, 8, 9]);
     }
 
@@ -118,7 +214,7 @@ mod tests {
         while let Some(e) = q.pop() {
             assert!(e.time >= last);
             last = e.time;
-            if e.edge == 0 {
+            if e.payload == 0 {
                 q.push(1.5, 2); // schedule relative to the new now
             }
         }
@@ -132,5 +228,89 @@ mod tests {
         q.push(5.0, 0);
         q.pop();
         q.push(1.0, 1);
+    }
+
+    #[test]
+    fn nan_time_is_a_typed_error_not_equal() {
+        // Regression: NaN used to flow into `Event::cmp` where
+        // `partial_cmp(..).unwrap_or(Equal)` silently treated it as equal
+        // to everything, corrupting heap order. It must be rejected with a
+        // typed error before it ever reaches the heap.
+        let mut q = EventQueue::new();
+        q.push(1.0, 0);
+        assert!(matches!(
+            q.try_push(f64::NAN, 1),
+            Err(ClockError::NonFiniteTime { .. })
+        ));
+        assert!(matches!(
+            q.try_push(f64::INFINITY, 1),
+            Err(ClockError::NonFiniteTime { .. })
+        ));
+        // The queue is untouched by the rejected pushes.
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop().unwrap().payload, 0);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn regression_is_a_typed_error() {
+        let mut q = EventQueue::new();
+        q.push(5.0, 0);
+        q.pop();
+        assert_eq!(
+            q.try_push(1.0, 1),
+            Err(ClockError::TimeRegression {
+                time: 1.0,
+                now: 5.0
+            })
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn hand_built_nan_event_panics_in_cmp() {
+        let a = Event {
+            time: f64::NAN,
+            seq: 0,
+            payload: 0usize,
+        };
+        let b = Event {
+            time: 1.0,
+            seq: 1,
+            payload: 0usize,
+        };
+        let _ = a.cmp(&b);
+    }
+
+    #[test]
+    fn advance_to_moves_forward_only() {
+        let mut q: EventQueue<usize> = EventQueue::new();
+        q.advance_to(10.0);
+        assert_eq!(q.now(), 10.0);
+        q.advance_to(4.0);
+        assert_eq!(q.now(), 10.0);
+        q.advance_to(f64::NAN);
+        assert_eq!(q.now(), 10.0);
+        // Pushing before the advanced clock is a regression.
+        assert!(matches!(
+            q.try_push(3.0, 0),
+            Err(ClockError::TimeRegression { .. })
+        ));
+        q.push(11.0, 1);
+        assert_eq!(q.pop().unwrap().time, 11.0);
+    }
+
+    #[test]
+    fn generic_payloads_ride_the_same_kernel() {
+        #[derive(Clone, Debug, PartialEq)]
+        enum Ev {
+            Compute(usize),
+            Deliver(String),
+        }
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        q.push(2.0, Ev::Deliver("report".into()));
+        q.push(1.0, Ev::Compute(3));
+        assert_eq!(q.pop().unwrap().payload, Ev::Compute(3));
+        assert_eq!(q.pop().unwrap().payload, Ev::Deliver("report".into()));
     }
 }

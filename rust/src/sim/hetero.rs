@@ -89,6 +89,41 @@ mod tests {
     }
 
     #[test]
+    fn random_profile_realized_ratio_is_exactly_h_after_shuffle() {
+        // The invariant the Random profile promises: the extremes are
+        // pinned BEFORE the shuffle, so the realized fastest/slowest ratio
+        // is exactly H (not approximately) for any fleet size, seed and H —
+        // the shuffle only relocates the pinned 1.0 and H, never loses
+        // them. Guard it across a grid of n × H × seeds.
+        for seed in [0u64, 7, 99, 12345] {
+            let mut rng = Rng::new(seed);
+            for &n in &[2usize, 3, 5, 20, 100, 1000] {
+                for &h in &[1.0f64, 1.5, 4.0, 8.0, 15.0] {
+                    let s = HeteroProfile::Random.slowdowns(n, h, &mut rng);
+                    assert_eq!(s.len(), n);
+                    // Exact pins survive the shuffle somewhere in the vector.
+                    assert!(
+                        s.iter().any(|&v| v == 1.0),
+                        "fastest pin lost (n={n}, h={h}, seed={seed})"
+                    );
+                    assert!(
+                        s.iter().any(|&v| v == h),
+                        "slowest pin lost (n={n}, h={h}, seed={seed})"
+                    );
+                    // The realized ratio is exactly H: the pins ARE the
+                    // extremes because everything else is inside [1, H].
+                    assert_eq!(
+                        realized_ratio(&s),
+                        h,
+                        "ratio drifted (n={n}, h={h}, seed={seed})"
+                    );
+                    assert!(s.iter().all(|&v| (1.0..=h).contains(&v)));
+                }
+            }
+        }
+    }
+
+    #[test]
     fn single_edge_is_unit() {
         let mut rng = Rng::new(3);
         assert_eq!(HeteroProfile::Random.slowdowns(1, 10.0, &mut rng), vec![1.0]);

@@ -2,9 +2,10 @@
 //! engine, checking the paper's qualitative claims hold end to end.
 
 use ol4el::config::{Algo, RunConfig};
-use ol4el::coordinator::{self, observer, Experiment, RunEvent};
+use ol4el::coordinator::{self, observer, Experiment, RunEvent, Session};
 use ol4el::engine::native::NativeEngine;
 use ol4el::model::Task;
+use ol4el::net::{ChurnSpec, FleetSim, NetAsyncMerge, NetSyncBarrier, NetworkSpec};
 use std::sync::{Arc, Mutex};
 
 fn cfg(task: Task, algo: Algo) -> RunConfig {
@@ -243,6 +244,159 @@ fn experiment_builder_reproduces_wire_config_runs() {
     assert_eq!(a.total_updates, b.total_updates);
     assert_eq!(a.tau_histogram, b.tau_histogram);
     assert_eq!(a.trace.len(), b.trace.len());
+}
+
+/// Run `cfg` and capture its full event stream as Debug strings (f64s
+/// print with shortest-round-trip precision, so string equality IS
+/// bit-for-bit equality of every payload).
+fn event_stream(
+    cfg: &RunConfig,
+    mode: Option<&mut dyn coordinator::CollaborationMode>,
+) -> (Vec<String>, coordinator::RunResult) {
+    let engine = NativeEngine::default();
+    let seen = Arc::new(Mutex::new(Vec::new()));
+    let sink = seen.clone();
+    let mut session = Session::new(cfg, &engine).unwrap();
+    session.observe(observer::from_fn(move |ev: &RunEvent| {
+        sink.lock().unwrap().push(format!("{ev:?}"));
+    }));
+    let result = match mode {
+        Some(m) => session.run_with(m).unwrap(),
+        None => session.run().unwrap(),
+    };
+    let stream = seen.lock().unwrap().clone();
+    (stream, result)
+}
+
+#[test]
+fn net_transport_with_ideal_network_reproduces_direct_stream_bit_for_bit() {
+    // The net:: acceptance criterion: under NetworkSpec::ideal with no
+    // churn, a fixed-seed run routed through SimTransport emits EXACTLY
+    // the event stream of the legacy direct-call manners — every
+    // RoundStart, LocalReport, GlobalUpdate, EdgeRetired and Finished
+    // payload, in order, bit for bit.
+    for algo in [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::AcSync, Algo::FixedI] {
+        let c = cfg(Task::Svm, algo);
+        assert!(c.network.is_ideal() && c.churn.is_none());
+        let (direct_stream, direct) = event_stream(&c, None);
+        let netted = |c: &RunConfig| {
+            if algo == Algo::Ol4elAsync {
+                let mut m = NetAsyncMerge::new();
+                event_stream(c, Some(&mut m))
+            } else {
+                let mut m = NetSyncBarrier::new();
+                event_stream(c, Some(&mut m))
+            }
+        };
+        let (net_stream, net) = netted(&c);
+        assert_eq!(
+            direct_stream.len(),
+            net_stream.len(),
+            "{}: stream length",
+            algo.name()
+        );
+        for (k, (d, n)) in direct_stream.iter().zip(&net_stream).enumerate() {
+            assert_eq!(d, n, "{}: event {k} diverged", algo.name());
+        }
+        assert_eq!(direct.final_metric, net.final_metric, "{}", algo.name());
+        assert_eq!(direct.total_updates, net.total_updates, "{}", algo.name());
+        assert_eq!(direct.wall_ms, net.wall_ms, "{}", algo.name());
+        assert_eq!(direct.mean_spent, net.mean_spent, "{}", algo.name());
+        assert_eq!(direct.tau_histogram, net.tau_histogram, "{}", algo.name());
+    }
+}
+
+#[test]
+fn network_and_churn_survive_the_json_roundtrip() {
+    // Satellite of the net:: PR, matching the PR 1 ε-range precedent: the
+    // specs ride RunConfig's wire format without loss.
+    let mut c = cfg(Task::Svm, Algo::Ol4elAsync);
+    c.network = NetworkSpec::parse("lognormal:5:0.5,bw:10,drop:0.01,part:100-200").unwrap();
+    c.churn = ChurnSpec::parse("poisson:0.01,join:0.05,restart:3000,straggle:0.1:4").unwrap();
+    let back = RunConfig::from_json(&c.to_json()).unwrap();
+    assert_eq!(back.network, c.network);
+    assert_eq!(back.churn, c.churn);
+    // Defaults round-trip to defaults.
+    let d = RunConfig::default();
+    let back = RunConfig::from_json(&d.to_json()).unwrap();
+    assert!(back.network.is_ideal());
+    assert!(back.churn.is_none());
+}
+
+#[test]
+fn validate_rejects_what_the_net_wire_grammar_rejects() {
+    // A validated config must reload from its own JSON: out-of-range spec
+    // values are refused by validate() exactly as parse() refuses them.
+    let mut c = RunConfig::default();
+    c.network.drop_rate = 1.0; // grammar requires [0, 1)
+    assert!(c.validate().is_err());
+    c = RunConfig::default();
+    c.network.timeout_ms = 0.0;
+    assert!(c.validate().is_err());
+    c = RunConfig::default();
+    c.network.partitions.push((500.0, 100.0));
+    assert!(c.validate().is_err());
+    c = RunConfig::default();
+    c.churn.leave_rate = -1.0;
+    assert!(c.validate().is_err());
+    c = RunConfig::default();
+    c.churn.straggle_factor = 0.5;
+    assert!(c.validate().is_err());
+    // And the JSON parser refuses malformed specs outright.
+    let mut j = RunConfig::default().to_json();
+    if let ol4el::util::json::Json::Obj(map) = &mut j {
+        map.insert(
+            "network".to_string(),
+            ol4el::util::json::Json::Str("warp:9".to_string()),
+        );
+    }
+    assert!(RunConfig::from_json(&j).is_err());
+}
+
+#[test]
+fn fleet_5000_edges_with_latency_and_churn_completes() {
+    // Acceptance: a 5000-edge sync+async fleet with lognormal latency and
+    // Poisson churn completes inside the CI budget and streams
+    // EdgeJoined / EdgeRetired / MessageDropped through the Observer API.
+    let base = RunConfig {
+        algo: Algo::Ol4elAsync,
+        n_edges: 5000,
+        hetero: 6.0,
+        budget: 1200.0,
+        data_n: 20_000,
+        eval_every: 1000,
+        network: NetworkSpec::parse("lognormal:5:0.5,drop:0.02").unwrap(),
+        // join is a FLEET-level rate per virtual second: 10/s over a ~2s
+        // run is ~20 expected joins — far from the zero-join flake zone.
+        churn: ChurnSpec::parse("poisson:0.05,join:10").unwrap(),
+        seed: 17,
+        ..Default::default()
+    };
+    let joined = Arc::new(Mutex::new(0usize));
+    let retired = Arc::new(Mutex::new(0usize));
+    let dropped = Arc::new(Mutex::new(0usize));
+    let (j2, r2, d2) = (joined.clone(), retired.clone(), dropped.clone());
+    let r = FleetSim::new(base.clone())
+        .unwrap()
+        .observe(observer::from_fn(move |ev: &RunEvent| match ev {
+            RunEvent::EdgeJoined { .. } => *j2.lock().unwrap() += 1,
+            RunEvent::EdgeRetired { .. } => *r2.lock().unwrap() += 1,
+            RunEvent::MessageDropped { .. } => *d2.lock().unwrap() += 1,
+            _ => {}
+        }))
+        .run()
+        .unwrap();
+    assert!(r.updates > 5000, "async updates {}", r.updates);
+    assert_eq!(r.n_edges, 5000);
+    assert!(*joined.lock().unwrap() > 0, "no EdgeJoined events");
+    assert!(*retired.lock().unwrap() > 0, "no EdgeRetired events");
+    assert!(*dropped.lock().unwrap() > 0, "no MessageDropped events");
+
+    let mut sync_cfg = base;
+    sync_cfg.algo = Algo::Ol4elSync;
+    let rs = FleetSim::new(sync_cfg).unwrap().run().unwrap();
+    assert!(rs.updates > 0, "sync fleet made no updates");
+    assert!(rs.messages_sent >= rs.updates * 2 * 5000);
 }
 
 #[test]
