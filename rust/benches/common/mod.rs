@@ -23,6 +23,7 @@ pub fn opts_from_env() -> SweepOpts {
         seeds,
         engine,
         artifacts: artifacts_dir(),
+        ..Default::default()
     }
 }
 

@@ -5,14 +5,17 @@ use crate::bandit::{ArmStats, BudgetedBandit};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
+/// Budget-blind ε-greedy over the arm set (ablation baseline).
 pub struct EpsGreedy {
     costs: Vec<f64>,
     stats: Vec<ArmStats>,
+    /// Exploration rate in [0, 1].
     pub epsilon: f64,
     init_queue: Vec<usize>,
 }
 
 impl EpsGreedy {
+    /// An ε-greedy bandit over arms with the given nominal costs.
     pub fn new(costs: Vec<f64>, epsilon: f64) -> Self {
         assert!(!costs.is_empty());
         assert!(costs.iter().all(|&c| c > 0.0));

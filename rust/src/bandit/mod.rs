@@ -19,17 +19,22 @@ pub mod thompson;
 pub mod ucb1;
 pub mod ucb_bv;
 
+use crate::config::BanditKind;
 use crate::util::rng::Rng;
 
 /// Per-arm running statistics.
 #[derive(Clone, Debug, Default)]
 pub struct ArmStats {
+    /// Times the arm was pulled.
     pub pulls: u64,
+    /// Running mean observed reward.
     pub mean_reward: f64,
+    /// Running mean observed cost.
     pub mean_cost: f64,
 }
 
 impl ArmStats {
+    /// Fold one observation into the running means.
     pub fn update(&mut self, reward: f64, cost: f64) {
         self.pulls += 1;
         let n = self.pulls as f64;
@@ -41,8 +46,10 @@ impl ArmStats {
 /// A budget-limited bandit over `n_arms` arms (arm index i = interval τ=i+1
 /// by convention of the coordinator, but the bandit itself is agnostic).
 pub trait BudgetedBandit {
+    /// The policy's display name.
     fn name(&self) -> &'static str;
 
+    /// Number of arms.
     fn n_arms(&self) -> usize;
 
     /// Choose an arm given the remaining budget, or None if no arm is
@@ -67,6 +74,24 @@ pub trait BudgetedBandit {
     /// Cheapest affordable arm test: can the edge still pull anything?
     fn any_affordable(&self, remaining_budget: f64) -> bool {
         (0..self.n_arms()).any(|a| self.expected_cost(a) <= remaining_budget)
+    }
+}
+
+/// Construct one budgeted bandit of `kind` over the given arm costs.
+///
+/// The returned box is `Send` so per-edge bandits can live on the sharded
+/// fleet simulator's worker threads; every in-tree policy is plain data.
+/// `BanditKind::Auto` must be resolved (via
+/// [`RunConfig::resolved_bandit`](crate::config::RunConfig::resolved_bandit))
+/// before construction.
+pub fn build(kind: BanditKind, costs: Vec<f64>) -> Box<dyn BudgetedBandit + Send> {
+    match kind {
+        BanditKind::Kube { epsilon } => Box::new(kube::Kube::new(costs, epsilon)),
+        BanditKind::UcbBv => Box::new(ucb_bv::UcbBv::new(costs)),
+        BanditKind::Ucb1 => Box::new(ucb1::Ucb1::new(costs)),
+        BanditKind::EpsGreedy { epsilon } => Box::new(eps_greedy::EpsGreedy::new(costs, epsilon)),
+        BanditKind::Thompson => Box::new(thompson::Thompson::new(costs)),
+        BanditKind::Auto => unreachable!("resolve BanditKind::Auto before constructing"),
     }
 }
 

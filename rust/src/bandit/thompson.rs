@@ -10,6 +10,9 @@ use crate::bandit::{ArmStats, BudgetedBandit};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
+/// Budgeted Thompson sampling over Beta posteriors (extension beyond
+/// the paper): sample a plausible reward per arm, rank by sampled
+/// reward per expected cost.
 pub struct Thompson {
     costs: Vec<f64>,
     stats: Vec<ArmStats>,
@@ -20,6 +23,7 @@ pub struct Thompson {
 }
 
 impl Thompson {
+    /// A Thompson bandit over arms with the given nominal costs.
     pub fn new(costs: Vec<f64>) -> Self {
         assert!(!costs.is_empty());
         assert!(costs.iter().all(|&c| c > 0.0));

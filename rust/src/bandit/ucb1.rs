@@ -6,6 +6,8 @@ use crate::bandit::{ucb_bonus, ArmStats, BudgetedBandit};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
+/// Budget-blind UCB1 (ablation baseline): classic mean + bonus ranking,
+/// no cost awareness beyond affordability.
 pub struct Ucb1 {
     costs: Vec<f64>,
     stats: Vec<ArmStats>,
@@ -13,6 +15,7 @@ pub struct Ucb1 {
 }
 
 impl Ucb1 {
+    /// A UCB1 bandit over arms with the given nominal costs.
     pub fn new(costs: Vec<f64>) -> Self {
         assert!(!costs.is_empty());
         assert!(costs.iter().all(|&c| c > 0.0));

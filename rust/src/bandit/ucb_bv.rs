@@ -33,6 +33,7 @@ pub struct UcbBv {
 }
 
 impl UcbBv {
+    /// A UCB-BV bandit; `cost_prior` seeds the per-arm cost estimates.
     pub fn new(cost_prior: Vec<f64>) -> Self {
         assert!(!cost_prior.is_empty());
         assert!(cost_prior.iter().all(|&c| c > 0.0));

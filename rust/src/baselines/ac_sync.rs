@@ -29,6 +29,9 @@ use crate::coordinator::{IntervalStrategy, RoundObservation};
 use crate::util::rng::Rng;
 use crate::util::stats::Ewma;
 
+/// Adaptive-control synchronous EL (Wang et al. INFOCOM'18): picks τ by
+/// a control rule over observed divergence and cost, paying a per-
+/// iteration estimation overhead on every edge.
 pub struct AcSyncStrategy {
     tau_max: usize,
     /// Nominal per-iteration compute cost at the barrier (straggler) rate.
@@ -48,6 +51,8 @@ pub struct AcSyncStrategy {
 }
 
 impl AcSyncStrategy {
+    /// An AC-sync strategy from nominal costs, its estimation overhead and
+    /// the learning rate η its control rule assumes.
     pub fn new(tau_max: usize, comp: f64, comm: f64, overhead: f64, eta: f64) -> Self {
         assert!(tau_max >= 1);
         assert!(comp > 0.0 && comm >= 0.0);

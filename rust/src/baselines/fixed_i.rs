@@ -4,6 +4,7 @@
 use crate::coordinator::IntervalStrategy;
 use crate::util::rng::Rng;
 
+/// The Fixed-I strategy: one constant interval for every edge.
 pub struct FixedIStrategy {
     interval: usize,
     pulls: Vec<u64>,
@@ -13,6 +14,7 @@ pub struct FixedIStrategy {
 }
 
 impl FixedIStrategy {
+    /// A Fixed-I strategy pulling `interval` (must be ≤ `tau_max`).
     pub fn new(interval: usize, tau_max: usize) -> Self {
         assert!(interval >= 1 && interval <= tau_max);
         FixedIStrategy {

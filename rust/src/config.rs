@@ -26,6 +26,8 @@ pub enum Algo {
 }
 
 impl Algo {
+    /// Parse an algorithm name (`ol4el-sync|ol4el-async|fixed-i|ac-sync`,
+    /// with short aliases).
     pub fn parse(s: &str) -> Option<Algo> {
         match s.to_ascii_lowercase().as_str() {
             "ol4el-sync" | "sync" => Some(Algo::Ol4elSync),
@@ -36,6 +38,7 @@ impl Algo {
         }
     }
 
+    /// Canonical display/wire name.
     pub fn name(&self) -> &'static str {
         match self {
             Algo::Ol4elSync => "ol4el-sync",
@@ -45,6 +48,7 @@ impl Algo {
         }
     }
 
+    /// Barrier-round protocols (everything except OL4EL-async).
     pub fn is_sync(&self) -> bool {
         !matches!(self, Algo::Ol4elAsync)
     }
@@ -54,10 +58,15 @@ impl Algo {
 /// paper's pairing: fixed costs → KUBE, variable/measured → UCB-BV).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum BanditKind {
+    /// Resolve against the cost mode (paper §IV-B pairing).
     Auto,
+    /// KUBE with exploration rate ε (fixed, known costs).
     Kube { epsilon: f64 },
+    /// UCB-BV (variable, unknown i.i.d. costs).
     UcbBv,
+    /// Budget-blind UCB1 (ablation).
     Ucb1,
+    /// Budget-blind ε-greedy (ablation).
     EpsGreedy { epsilon: f64 },
     /// Budgeted Thompson sampling (extension beyond the paper).
     Thompson,
@@ -120,7 +129,9 @@ impl BanditKind {
 /// How training data is split across edges.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum PartitionKind {
+    /// Independent uniform shards.
     Iid,
+    /// Dirichlet(α) label skew; smaller α = more skew.
     LabelSkew { alpha: f64 },
 }
 
@@ -162,24 +173,32 @@ impl PartitionKind {
 /// point on any paper figure.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
+    /// Learning task (SVM or K-means).
     pub task: Task,
+    /// Coordination algorithm under test.
     pub algo: Algo,
+    /// Fleet size at t=0.
     pub n_edges: usize,
     /// Heterogeneity ratio H (fastest/slowest processing speed).
     pub hetero: f64,
+    /// How slowdowns are laid out across the fleet.
     pub hetero_profile: HeteroProfile,
     /// Per-edge resource budget (ms; paper's testbed uses 5000).
     pub budget: f64,
+    /// Resource cost model (mode + nominal comp/comm).
     pub cost: CostModel,
     /// Longest global-update interval (arm count).
     pub tau_max: usize,
+    /// Training hyperparameters shared by every edge.
     pub hyper: Hyper,
+    /// Learning-utility definition feeding the bandit.
     pub utility: UtilityKind,
     /// Async merge staleness decay exponent.
     pub staleness_decay: f64,
     /// Async base mixing rate: how much of a zero-staleness contribution
     /// the global model absorbs at a merge.
     pub async_alpha: f64,
+    /// Bandit policy for the OL4EL strategies.
     pub bandit: BanditKind,
     /// Fixed interval for the Fixed-I baseline.
     pub fixed_interval: usize,
@@ -187,6 +206,7 @@ pub struct RunConfig {
     /// control estimations (paper §V-B.1 credits OL4EL-sync's win to AC's
     /// local calculations).
     pub ac_overhead: f64,
+    /// How training data is split across edges.
     pub partition: PartitionKind,
     /// Training set size (paper: 20k per task; benches shrink for speed).
     pub data_n: usize,
@@ -206,6 +226,7 @@ pub struct RunConfig {
     /// Fleet churn schedule (`net::ChurnSpec` grammar, e.g.
     /// `poisson:0.01,join:0.05`); `none` keeps the fleet static.
     pub churn: ChurnSpec,
+    /// PRNG seed; `(config, seed)` fully reproduces a run.
     pub seed: u64,
 }
 
@@ -269,6 +290,8 @@ impl RunConfig {
         self
     }
 
+    /// Serialize to the JSON wire format (spec strings for the nested
+    /// grammars, so files stay hand-editable).
     pub fn to_json(&self) -> Json {
         let cost_mode = match self.cost.mode {
             CostMode::Fixed => Json::str("fixed"),
@@ -312,6 +335,8 @@ impl RunConfig {
         ])
     }
 
+    /// Deserialize from the JSON wire format; unknown spellings are typed
+    /// errors and the result is `validate()`d.
     pub fn from_json(j: &Json) -> Result<RunConfig> {
         let mut cfg = RunConfig::default();
         let gs = |k: &str| j.get(k).and_then(Json::as_str);
@@ -412,6 +437,8 @@ impl RunConfig {
         Ok(cfg)
     }
 
+    /// Check every invariant the wire grammars enforce (and a few more);
+    /// every constructor path calls this.
     pub fn validate(&self) -> Result<()> {
         if self.n_edges == 0 {
             return Err(anyhow!("n_edges must be >= 1"));

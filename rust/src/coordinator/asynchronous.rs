@@ -35,6 +35,7 @@ pub struct AsyncMerge {
 }
 
 impl AsyncMerge {
+    /// An async-merge manner (state is created lazily on `begin`).
     pub fn new() -> Self {
         Self::default()
     }

@@ -115,6 +115,7 @@ impl Experiment {
         &self.cfg
     }
 
+    /// Unwrap into the underlying validated [`RunConfig`] wire format.
     pub fn into_config(self) -> RunConfig {
         self.cfg
     }
@@ -141,6 +142,23 @@ impl Experiment {
 }
 
 /// Fluent, validating builder over the `RunConfig` wire format.
+///
+/// ```
+/// use ol4el::coordinator::ExperimentBuilder;
+/// use ol4el::engine::native::NativeEngine;
+/// use ol4el::model::Task;
+///
+/// let result = ExperimentBuilder::new()
+///     .task(Task::Svm)
+///     .edges(3)
+///     .budget(400.0)   // tiny budget: a doctest-sized run
+///     .data_n(3000)
+///     .seed(7)
+///     .build()?
+///     .run(&NativeEngine::default())?;
+/// assert!(result.total_updates > 0);
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub struct ExperimentBuilder {
     cfg: RunConfig,
     observers: Vec<Box<dyn Observer>>,
@@ -153,6 +171,7 @@ impl Default for ExperimentBuilder {
 }
 
 impl ExperimentBuilder {
+    /// A builder over the default configuration.
     pub fn new() -> Self {
         ExperimentBuilder {
             cfg: RunConfig::default(),
@@ -173,11 +192,13 @@ impl ExperimentBuilder {
         &self.cfg
     }
 
+    /// Learning task (SVM or K-means).
     pub fn task(mut self, task: Task) -> Self {
         self.cfg.task = task;
         self
     }
 
+    /// Coordination algorithm under test.
     pub fn algo(mut self, algo: Algo) -> Self {
         self.cfg.algo = algo;
         self
@@ -195,6 +216,7 @@ impl ExperimentBuilder {
         self
     }
 
+    /// How slowdowns are laid out across the fleet.
     pub fn hetero_profile(mut self, profile: HeteroProfile) -> Self {
         self.cfg.hetero_profile = profile;
         self
@@ -206,11 +228,13 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Full resource cost model (mode + nominal comp/comm).
     pub fn cost(mut self, cost: CostModel) -> Self {
         self.cfg.cost = cost;
         self
     }
 
+    /// Resource cost mode only, keeping the nominal costs.
     pub fn cost_mode(mut self, mode: CostMode) -> Self {
         self.cfg.cost.mode = mode;
         self
@@ -229,21 +253,25 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Initial learning rate.
     pub fn lr(mut self, lr: f32) -> Self {
         self.cfg.hyper.lr = lr;
         self
     }
 
+    /// L2 regularization strength.
     pub fn reg(mut self, reg: f32) -> Self {
         self.cfg.hyper.reg = reg;
         self
     }
 
+    /// Per-global-update learning-rate decay.
     pub fn lr_decay(mut self, decay: f32) -> Self {
         self.cfg.hyper.lr_decay = decay;
         self
     }
 
+    /// Learning-utility definition feeding the bandit.
     pub fn utility(mut self, kind: UtilityKind) -> Self {
         self.cfg.utility = kind;
         self
@@ -261,6 +289,7 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Bandit policy for the OL4EL strategies.
     pub fn bandit(mut self, kind: BanditKind) -> Self {
         self.cfg.bandit = kind;
         self
@@ -278,6 +307,7 @@ impl ExperimentBuilder {
         self
     }
 
+    /// How training data is split across edges.
     pub fn partition(mut self, kind: PartitionKind) -> Self {
         self.cfg.partition = kind;
         self
@@ -325,6 +355,7 @@ impl ExperimentBuilder {
         self
     }
 
+    /// PRNG seed; `(config, seed)` fully reproduces a run.
     pub fn seed(mut self, seed: u64) -> Self {
         self.cfg.seed = seed;
         self

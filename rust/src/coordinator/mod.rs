@@ -42,10 +42,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use crate::bandit::{
-    eps_greedy::EpsGreedy, kube::Kube, thompson::Thompson, ucb1::Ucb1, ucb_bv::UcbBv,
-    BudgetedBandit,
-};
+use crate::bandit::BudgetedBandit;
 use crate::config::{Algo, BanditKind, PartitionKind, RunConfig};
 use crate::data::synth::{TrafficLike, WaferLike};
 use crate::data::{eval_buffer, partition, Dataset};
@@ -73,14 +70,21 @@ pub struct TracePoint {
 /// Result of a complete run.
 #[derive(Clone, Debug)]
 pub struct RunResult {
+    /// Trace points recorded at the eval cadence.
     pub trace: Vec<TracePoint>,
+    /// Test metric of the final global model.
     pub final_metric: f64,
+    /// Global updates achieved within the budgets.
     pub total_updates: u64,
+    /// Virtual wall-clock of the run (ms).
     pub wall_ms: f64,
+    /// Mean per-edge resource consumed (ms).
     pub mean_spent: f64,
     /// Pull counts per arm (τ = index+1), summed over edges.
     pub tau_histogram: Vec<u64>,
+    /// Edges that retired (budget or failure) before the end.
     pub retired_edges: usize,
+    /// Fleet size at t=0.
     pub n_edges: usize,
 }
 
@@ -110,12 +114,16 @@ impl RunResult {
 /// `harness::run_seeds` and [`ExperimentSuite`].
 #[derive(Clone, Debug, Default)]
 pub struct Aggregate {
+    /// Final-metric aggregate across seeds.
     pub metric: crate::util::stats::Welford,
+    /// Update-count aggregate across seeds.
     pub updates: crate::util::stats::Welford,
+    /// Trade-off AUC aggregate across seeds.
     pub auc: crate::util::stats::Welford,
 }
 
 impl Aggregate {
+    /// An empty aggregate (alias of `Default`).
     pub fn empty() -> Self {
         Self::default()
     }
@@ -146,6 +154,7 @@ pub struct RoundObservation {
 
 /// A policy choosing each edge's global update interval τ ∈ 1..=tau_max.
 pub trait IntervalStrategy {
+    /// The strategy's display name.
     fn name(&self) -> String;
 
     /// Choose τ for `edge` given its remaining budget; None retires it.
@@ -183,14 +192,9 @@ pub struct Ol4elStrategy {
 
 /// Construct one budgeted bandit of `kind` over the given arm costs.
 fn build_bandit(kind: BanditKind, costs: Vec<f64>) -> Box<dyn BudgetedBandit> {
-    match kind {
-        BanditKind::Kube { epsilon } => Box::new(Kube::new(costs, epsilon)),
-        BanditKind::UcbBv => Box::new(UcbBv::new(costs)),
-        BanditKind::Ucb1 => Box::new(Ucb1::new(costs)),
-        BanditKind::EpsGreedy { epsilon } => Box::new(EpsGreedy::new(costs, epsilon)),
-        BanditKind::Thompson => Box::new(Thompson::new(costs)),
-        BanditKind::Auto => unreachable!("resolve Auto before constructing"),
-    }
+    // The shared factory hands back a `Send` box (the fleet simulator
+    // needs that bound); here it simply coerces to the plain trait object.
+    crate::bandit::build(kind, costs)
 }
 
 impl Ol4elStrategy {
@@ -257,13 +261,21 @@ impl IntervalStrategy for Ol4elStrategy {
 
 /// The assembled run state: edges, global model, eval buffers, meter.
 pub struct World {
+    /// The edge fleet (local models, shards, ledgers).
     pub edges: Vec<EdgeServer>,
+    /// The global model.
     pub global: ModelState,
+    /// Global model version (increments per update).
     pub version: u64,
+    /// Flattened eval batch features.
     pub eval_x: Vec<f32>,
+    /// Eval batch labels.
     pub eval_y: Vec<i32>,
+    /// Per-edge aggregation weights (shard-size proportional).
     pub weights: Vec<f64>,
+    /// The run's main RNG stream.
     pub rng: Rng,
+    /// Per-edge heterogeneity slowdowns.
     pub slowdowns: Vec<f64>,
 }
 

@@ -14,8 +14,9 @@
 use crate::coordinator::TracePoint;
 
 /// One edge's completed local round, as reported to the Cloud.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct LocalReport {
+    /// Reporting edge id.
     pub edge: usize,
     /// The interval the scheduling policy chose for this round.
     pub tau: usize,
@@ -29,7 +30,11 @@ pub struct LocalReport {
 }
 
 /// A streamed run event.
-#[derive(Clone, Debug)]
+///
+/// `PartialEq` compares payloads exactly (f64 bit values included): the
+/// sharded fleet's equivalence tests assert that two runs produce *equal*
+/// event streams, which for deterministic simulations means bit-for-bit.
+#[derive(Clone, Debug, PartialEq)]
 pub enum RunEvent {
     /// A local round was scheduled. Synchronous manner: one per barrier
     /// round with `edge: None` (the whole fleet shares the decision);
@@ -73,6 +78,7 @@ pub enum RunEvent {
 /// A streaming consumer of [`RunEvent`]s. Wrap a closure with
 /// [`from_fn`] to observe without defining a type.
 pub trait Observer {
+    /// Receive one event; called synchronously from the run loop.
     fn on_event(&mut self, event: &RunEvent);
 }
 
@@ -104,14 +110,17 @@ pub struct TraceObserver {
 }
 
 impl TraceObserver {
+    /// An empty trace collector.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// The collected trace points so far.
     pub fn points(&self) -> &[TracePoint] {
         &self.points
     }
 
+    /// Unwrap into the collected trace points.
     pub fn into_points(self) -> Vec<TracePoint> {
         self.points
     }

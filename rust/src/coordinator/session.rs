@@ -25,6 +25,7 @@ use crate::model::ModelState;
 /// drives. Object-safe, so custom manners plug in without touching the
 /// engine loop.
 pub trait CollaborationMode {
+    /// The manner's display name.
     fn name(&self) -> &'static str;
 
     /// Called once before the loop (e.g. the async manner launches every
@@ -79,7 +80,9 @@ pub fn mode_for(cfg: &RunConfig) -> Box<dyn CollaborationMode> {
 pub struct Session<'e> {
     cfg: RunConfig,
     engine: &'e dyn ComputeEngine,
+    /// The assembled run state (fleet, global model, eval buffers).
     pub world: World,
+    /// The interval strategy choosing each τ.
     pub strategy: Box<dyn IntervalStrategy>,
     meter: UtilityMeter,
     trace: TraceObserver,
@@ -115,10 +118,12 @@ impl<'e> Session<'e> {
         })
     }
 
+    /// The run configuration.
     pub fn cfg(&self) -> &RunConfig {
         &self.cfg
     }
 
+    /// The compute engine executing local rounds.
     pub fn engine(&self) -> &dyn ComputeEngine {
         self.engine
     }

@@ -22,15 +22,20 @@ use crate::net::NetworkSpec;
 /// The axis coordinates of one grid cell.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CellSpec {
+    /// Learning task of the cell.
     pub task: Task,
+    /// Coordination algorithm of the cell.
     pub algo: Algo,
+    /// Fleet size of the cell.
     pub n_edges: usize,
+    /// Heterogeneity ratio of the cell.
     pub hetero: f64,
 }
 
 /// One cell's multi-seed results.
 #[derive(Clone, Debug)]
 pub struct SuiteOutcome {
+    /// The axis coordinates this outcome belongs to.
     pub spec: CellSpec,
     /// The fully-resolved cell config (before per-run seeding).
     pub cfg: RunConfig,
@@ -76,25 +81,30 @@ impl ExperimentSuite {
         }
     }
 
+    /// The suite's display name.
     pub fn name(&self) -> &str {
         &self.name
     }
 
+    /// Sweep axis: learning tasks.
     pub fn tasks(mut self, tasks: impl IntoIterator<Item = Task>) -> Self {
         self.tasks = tasks.into_iter().collect();
         self
     }
 
+    /// Sweep axis: coordination algorithms.
     pub fn algos(mut self, algos: impl IntoIterator<Item = Algo>) -> Self {
         self.algos = algos.into_iter().collect();
         self
     }
 
+    /// Sweep axis: fleet sizes.
     pub fn fleet_sizes(mut self, ns: impl IntoIterator<Item = usize>) -> Self {
         self.fleet_sizes = ns.into_iter().collect();
         self
     }
 
+    /// Sweep axis: heterogeneity ratios.
     pub fn heteros(mut self, hs: impl IntoIterator<Item = f64>) -> Self {
         self.heteros = hs.into_iter().collect();
         self

@@ -31,6 +31,7 @@ pub struct SyncBarrier {
 }
 
 impl SyncBarrier {
+    /// A barrier-round manner.
     pub fn new() -> Self {
         Self::default()
     }

@@ -16,11 +16,14 @@ use crate::util::stats::Ewma;
 /// Which utility definition a run uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum UtilityKind {
+    /// Held-out eval gain on the Cloud's test set (the paper's meter).
     EvalGain,
+    /// Global-model parameter movement (engine-free proxy).
     ParamDelta,
 }
 
 impl UtilityKind {
+    /// Parse a utility name (`eval | delta`).
     pub fn parse(s: &str) -> Option<UtilityKind> {
         match s.to_ascii_lowercase().as_str() {
             "evalgain" | "eval-gain" | "eval" => Some(UtilityKind::EvalGain),
@@ -29,6 +32,7 @@ impl UtilityKind {
         }
     }
 
+    /// Canonical display/wire name.
     pub fn name(&self) -> &'static str {
         match self {
             UtilityKind::EvalGain => "eval-gain",
@@ -48,6 +52,7 @@ pub struct UtilityMeter {
 }
 
 impl UtilityMeter {
+    /// A meter of the given kind.
     pub fn new(kind: UtilityKind) -> Self {
         UtilityMeter {
             kind,
@@ -56,6 +61,7 @@ impl UtilityMeter {
         }
     }
 
+    /// Which utility definition this meter implements.
     pub fn kind(&self) -> UtilityKind {
         self.kind
     }

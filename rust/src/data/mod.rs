@@ -15,13 +15,18 @@ use std::sync::Arc;
 /// shown to the learner).
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// Row-major features (n × d).
     pub x: Vec<f32>,
+    /// Labels (class id, or ground-truth cluster).
     pub y: Vec<i32>,
+    /// Number of rows.
     pub n: usize,
+    /// Feature dimension.
     pub d: usize,
 }
 
 impl Dataset {
+    /// A dataset from flat row-major features and labels.
     pub fn new(x: Vec<f32>, y: Vec<i32>, d: usize) -> Self {
         assert_eq!(x.len() % d, 0, "x length not a multiple of d");
         let n = x.len() / d;
@@ -29,6 +34,7 @@ impl Dataset {
         Dataset { x, y, n, d }
     }
 
+    /// One row of features.
     pub fn row(&self, i: usize) -> &[f32] {
         &self.x[i * self.d..(i + 1) * self.d]
     }
@@ -56,12 +62,15 @@ impl Dataset {
 /// shared dataset plus a cursor for sequential batch delivery).
 #[derive(Clone, Debug)]
 pub struct Shard {
+    /// The backing dataset.
     pub data: Arc<Dataset>,
+    /// This shard's row indices into the dataset.
     pub indices: Vec<usize>,
     cursor: usize,
 }
 
 impl Shard {
+    /// A shard as a view of `indices` into `data`.
     pub fn new(data: Arc<Dataset>, indices: Vec<usize>) -> Self {
         assert!(!indices.is_empty(), "empty shard");
         for &i in &indices {
@@ -74,10 +83,12 @@ impl Shard {
         }
     }
 
+    /// Rows in this shard.
     pub fn len(&self) -> usize {
         self.indices.len()
     }
 
+    /// Whether the shard holds no rows.
     pub fn is_empty(&self) -> bool {
         self.indices.is_empty()
     }

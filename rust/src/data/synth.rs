@@ -16,8 +16,11 @@ use crate::util::rng::Rng;
 /// Parameters for the SVM (wafer-like) generator.
 #[derive(Clone, Debug)]
 pub struct WaferLike {
+    /// Rows to generate.
     pub n: usize,
+    /// Feature dimension.
     pub d: usize,
+    /// Number of classes.
     pub classes: usize,
     /// Distance scale between class prototypes (larger = easier).
     pub separation: f64,
@@ -41,6 +44,7 @@ impl Default for WaferLike {
 }
 
 impl WaferLike {
+    /// Generate the dataset from the RNG (deterministic per seed).
     pub fn generate(&self, rng: &mut Rng) -> Dataset {
         assert!(self.classes >= 2 && self.d >= 1 && self.n >= self.classes);
         // Random unit-ish prototypes scaled by separation.
@@ -79,8 +83,11 @@ impl WaferLike {
 /// Parameters for the K-means (traffic-like) generator.
 #[derive(Clone, Debug)]
 pub struct TrafficLike {
+    /// Rows to generate.
     pub n: usize,
+    /// Feature dimension.
     pub d: usize,
+    /// Number of clusters.
     pub k: usize,
     /// Distance between cluster means (larger = cleaner clusters).
     pub separation: f64,
@@ -105,6 +112,7 @@ impl Default for TrafficLike {
 }
 
 impl TrafficLike {
+    /// Generate the dataset from the RNG (deterministic per seed).
     pub fn generate(&self, rng: &mut Rng) -> Dataset {
         assert!(self.k >= 2 && self.d >= 1 && self.n >= self.k);
         let means: Vec<Vec<f64>> = (0..self.k)

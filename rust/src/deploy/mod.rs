@@ -54,10 +54,15 @@ struct Report {
 /// Outcome of a threaded deployment run.
 #[derive(Clone, Debug)]
 pub struct DeployResult {
+    /// Test metric of the final global model.
     pub final_metric: f64,
+    /// Global updates achieved within the budgets.
     pub total_updates: u64,
+    /// Real wall-clock the deployment took (seconds).
     pub host_seconds: f64,
+    /// Measured resource spent per edge (ms).
     pub per_edge_spent: Vec<f64>,
+    /// Local rounds completed per edge.
     pub per_edge_rounds: Vec<u64>,
 }
 

@@ -14,7 +14,9 @@ use crate::util::rng::Rng;
 /// Training hyperparameters carried by every edge.
 #[derive(Clone, Copy, Debug)]
 pub struct Hyper {
+    /// Learning rate.
     pub lr: f32,
+    /// L2 regularization strength.
     pub reg: f32,
     /// Per-global-update learning-rate decay: the effective rate at global
     /// version v is `lr / (1 + lr_decay * v)`. SGD's noise floor scales
@@ -52,14 +54,18 @@ pub struct LocalRound {
     /// Mean training signal across iterations (hinge loss for SVM, batch
     /// inertia for K-means) — diagnostics only, not the bandit reward.
     pub train_signal: f64,
+    /// Iterations actually executed (τ, or fewer on budget exhaustion).
     pub iterations: usize,
 }
 
 /// An edge server (paper Fig. 1: local model + local data + resource
 /// constraint).
 pub struct EdgeServer {
+    /// Edge id (stable across the run).
     pub id: usize,
+    /// This edge's training shard.
     pub shard: Shard,
+    /// The local model.
     pub model: ModelState,
     /// Heterogeneity slowdown multiplier (1.0 = fastest class of edge).
     pub slowdown: f64,
@@ -70,6 +76,7 @@ pub struct EdgeServer {
     /// Version of the global model this edge last synchronized with
     /// (async staleness bookkeeping).
     pub base_version: u64,
+    /// Set when the budget is exhausted (or the edge fail-stopped).
     pub retired: bool,
     /// Per-edge RNG stream (variable-cost sampling).
     pub rng: Rng,
@@ -80,6 +87,7 @@ pub struct EdgeServer {
 }
 
 impl EdgeServer {
+    /// An edge over its shard, starting from the given global model.
     pub fn new(
         id: usize,
         shard: Shard,

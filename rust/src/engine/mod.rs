@@ -25,6 +25,7 @@ pub enum EngineKind {
 }
 
 impl EngineKind {
+    /// Parse an engine name (`native | pjrt`).
     pub fn parse(s: &str) -> Option<EngineKind> {
         match s.to_ascii_lowercase().as_str() {
             "native" => Some(EngineKind::Native),
@@ -33,6 +34,7 @@ impl EngineKind {
         }
     }
 
+    /// Canonical display name.
     pub fn name(&self) -> &'static str {
         match self {
             EngineKind::Native => "native",
@@ -59,13 +61,21 @@ pub fn build_engine(kind: EngineKind, artifacts_dir: &str) -> Result<Box<dyn Com
 /// artifacts/manifest.json; the pjrt engine cross-checks at load time).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Shapes {
+    /// SVM feature dimension.
     pub svm_d: usize,
+    /// SVM class count.
     pub svm_c: usize,
+    /// SVM local-iteration batch size.
     pub svm_batch: usize,
+    /// SVM eval batch size.
     pub svm_eval_batch: usize,
+    /// K-means feature dimension.
     pub km_d: usize,
+    /// K-means cluster count.
     pub km_k: usize,
+    /// K-means local-iteration batch size.
     pub km_batch: usize,
+    /// K-means eval batch size.
     pub km_eval_batch: usize,
 }
 
@@ -89,10 +99,12 @@ impl Default for Shapes {
 }
 
 impl Shapes {
+    /// Flat parameter length of the SVM model (weights + biases).
     pub fn svm_param_len(&self) -> usize {
         self.svm_d * self.svm_c + self.svm_c
     }
 
+    /// Flat parameter length of the K-means model (centers).
     pub fn km_param_len(&self) -> usize {
         self.km_k * self.km_d
     }
@@ -101,14 +113,18 @@ impl Shapes {
 /// Output of one SVM local iteration.
 #[derive(Clone, Debug)]
 pub struct SvmStepOut {
+    /// Mean hinge loss of the batch.
     pub loss: f32,
 }
 
 /// Output of one K-means statistics pass.
 #[derive(Clone, Debug)]
 pub struct KmeansStepOut {
+    /// Per-cluster coordinate sums (k × d, row-major).
     pub sums: Vec<f32>,
+    /// Per-cluster assignment counts.
     pub counts: Vec<f32>,
+    /// Batch inertia (sum of squared distances to assigned centers).
     pub inertia: f32,
 }
 
@@ -117,8 +133,10 @@ pub struct KmeansStepOut {
 /// Deliberately NOT `Send`: the pjrt engine holds an `Rc`-based PJRT client.
 /// Parallel sweeps construct one (native) engine per worker thread instead.
 pub trait ComputeEngine {
+    /// The backend's display name.
     fn name(&self) -> &'static str;
 
+    /// The deployment shapes this engine was built for.
     fn shapes(&self) -> &Shapes;
 
     /// One SGD step on the regularized multiclass hinge; `params` updated

@@ -15,6 +15,7 @@ pub struct NativeEngine {
 }
 
 impl NativeEngine {
+    /// A native engine over the given deployment shapes.
     pub fn new(shapes: Shapes) -> Self {
         NativeEngine { shapes }
     }

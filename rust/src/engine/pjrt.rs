@@ -52,6 +52,7 @@ impl PjrtEngine {
         Ok(())
     }
 
+    /// The PJRT platform name (diagnostics).
     pub fn platform_name(&self) -> String {
         self.rt.borrow().platform_name()
     }

@@ -18,8 +18,10 @@ use crate::harness::SweepOpts;
 use crate::model::Task;
 use crate::util::table::{f, Table};
 
+/// The four algorithms every figure compares.
 pub const ALGOS: [Algo; 4] = [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::AcSync, Algo::FixedI];
 
+/// Heterogeneity ratios swept (H axis).
 pub fn hetero_grid(quick: bool) -> Vec<f64> {
     if quick {
         vec![1.0, 3.0, 6.0, 10.0]

@@ -19,9 +19,12 @@ use crate::model::Task;
 use crate::util::stats::Welford;
 use crate::util::table::{f, Table};
 
+/// The four algorithms every figure compares.
 pub const ALGOS: [Algo; 4] = [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::AcSync, Algo::FixedI];
+/// Fixed heterogeneity ratio of the Fig. 4 scenario.
 pub const HETERO: f64 = 6.0;
 
+/// The run config of one (task, algo) cell.
 pub fn cell_config(task: Task, algo: Algo, opts: &SweepOpts) -> RunConfig {
     RunConfig {
         task,
@@ -62,12 +65,14 @@ fn metric_at(trace: &[coordinator::TracePoint], x: f64) -> f64 {
     m
 }
 
+/// Evenly spaced consumption checkpoints up to `budget`.
 pub fn consumption_grid(budget: f64, points: usize) -> Vec<f64> {
     (1..=points)
         .map(|i| budget * i as f64 / points as f64)
         .collect()
 }
 
+/// Run the sweep and render its tables.
 pub fn run(opts: &SweepOpts) -> Result<Vec<Table>> {
     let outcomes = suite(opts).run(opts.engine, &opts.artifacts)?;
     let grid = consumption_grid(5000.0, if opts.quick { 8 } else { 16 });

@@ -16,6 +16,7 @@ use crate::harness::SweepOpts;
 use crate::model::Task;
 use crate::util::table::{f, Table};
 
+/// Fleet sizes swept (N axis).
 pub fn n_grid(quick: bool) -> Vec<usize> {
     if quick {
         vec![3, 10, 25]
@@ -24,6 +25,7 @@ pub fn n_grid(quick: bool) -> Vec<usize> {
     }
 }
 
+/// Heterogeneity ratios swept (H axis).
 pub fn h_grid(quick: bool) -> Vec<f64> {
     if quick {
         vec![1.0, 15.0]
@@ -32,6 +34,7 @@ pub fn h_grid(quick: bool) -> Vec<f64> {
     }
 }
 
+/// The run config of one (task, algo, N, H) cell.
 pub fn cell_config(task: Task, algo: Algo, n: usize, h: f64, opts: &SweepOpts) -> RunConfig {
     RunConfig {
         task,
@@ -61,6 +64,7 @@ pub fn suite(opts: &SweepOpts) -> ExperimentSuite {
         })
 }
 
+/// Run the sweep and render its tables.
 pub fn run(opts: &SweepOpts) -> Result<Vec<Table>> {
     let outcomes = suite(opts).run(opts.engine, &opts.artifacts)?;
     let ns = n_grid(opts.quick);

@@ -17,6 +17,7 @@ use crate::net::{ChurnSpec, FleetSim, NetworkSpec};
 use crate::util::stats::Welford;
 use crate::util::table::{f, Table};
 
+/// Fleet sizes swept.
 pub fn edge_grid(quick: bool) -> Vec<usize> {
     if quick {
         vec![100, 500, 2000]
@@ -49,6 +50,13 @@ pub fn churn_grid() -> Vec<(&'static str, ChurnSpec)> {
             ChurnSpec::parse("poisson:0.05,join:0.1,restart:2000").expect("static spec"),
         ),
     ]
+}
+
+/// A [`FleetSim`] honoring the sweep's shard override (0 = the default,
+/// available parallelism). Any value yields bit-identical results.
+fn sim_with_shards(cfg: RunConfig, shards: usize) -> Result<FleetSim> {
+    let sim = FleetSim::new(cfg)?;
+    Ok(if shards > 0 { sim.shards(shards) } else { sim })
 }
 
 /// The base fleet config for one cell.
@@ -96,7 +104,7 @@ pub fn run(opts: &SweepOpts) -> Result<Vec<Table>> {
                     cfg.network = net.clone();
                     cfg.churn = churn.clone();
                     cfg.seed = seed;
-                    let r = FleetSim::new(cfg.clone())?.run()?;
+                    let r = sim_with_shards(cfg.clone(), opts.shards)?.run()?;
                     updates.push(r.updates as f64);
                     lost.push(r.messages_lost as f64);
                     joined.push(r.joined as f64);
@@ -104,7 +112,7 @@ pub fn run(opts: &SweepOpts) -> Result<Vec<Table>> {
                     evps.push(r.events_per_sec());
                     let mut scfg = cfg;
                     scfg.algo = Algo::Ol4elSync;
-                    let rs = FleetSim::new(scfg)?.run()?;
+                    let rs = sim_with_shards(scfg, opts.shards)?.run()?;
                     sync_updates.push(rs.updates as f64);
                 }
                 t.row(vec![

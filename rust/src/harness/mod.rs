@@ -45,10 +45,21 @@ pub fn run_seeds(
 /// where suite workers load HLO from when `engine` is PJRT.
 #[derive(Clone, Debug)]
 pub struct SweepOpts {
+    /// `quick` keeps `cargo bench` wall-time reasonable; `full` mirrors
+    /// the paper's sweep.
     pub quick: bool,
+    /// Seeds per grid cell.
     pub seeds: u64,
+    /// Compute engine driving the training sweeps.
     pub engine: EngineKind,
+    /// HLO artifact directory for `EngineKind::Pjrt` suite workers.
     pub artifacts: String,
+    /// Worker shards for the fleet sweeps (fig6); 0 = the [`FleetSim`]
+    /// default, the host's available parallelism. Results are identical
+    /// at any value — this only trades threads for wall-clock.
+    ///
+    /// [`FleetSim`]: crate::net::FleetSim
+    pub shards: usize,
 }
 
 impl Default for SweepOpts {
@@ -58,11 +69,13 @@ impl Default for SweepOpts {
             seeds: 2,
             engine: EngineKind::Native,
             artifacts: "artifacts".to_string(),
+            shards: 0,
         }
     }
 }
 
 impl SweepOpts {
+    /// The concrete seed values (42, 43, …).
     pub fn seed_list(&self) -> Vec<u64> {
         (0..self.seeds.max(1)).map(|i| 42 + i).collect()
     }

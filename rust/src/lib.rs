@@ -61,13 +61,28 @@
 //! and [`FleetSim`](net::FleetSim) — the engine-free protocol simulator
 //! that scales the whole stack to thousands of edges (`ol4el fleet`).
 //!
+//! ## Fleet scale
+//!
+//! [`FleetSim`](net::FleetSim) drives the protocol without a compute
+//! engine at 10k–100k edges, **sharded across worker threads**: edges are
+//! partitioned over per-shard event queues that advance in conservative
+//! lockstep windows bounded by the network's guaranteed minimum message
+//! delay. Per-edge RNG streams and a deterministic event-merge make a
+//! sharded run **bit-for-bit identical** to the single-threaded run at
+//! any shard count (`ol4el fleet --shards N`; the contract is spelled out
+//! in `docs/ARCHITECTURE.md` and enforced by `tests/sharding.rs` and the
+//! CI smoke).
+//!
 //! The request path is pure Rust: `runtime/` loads the HLO artifacts via
 //! the PJRT C API (`xla` crate, behind the `xla-backend` feature) and
 //! `engine::pjrt` exposes them behind the same `ComputeEngine` trait as the
 //! pure-Rust `engine::native` oracle.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured reproduction of every figure.
+//! See `docs/ARCHITECTURE.md` for the layer-by-layer architecture book
+//! and `docs/GRAMMAR.md` for the spec grammars (single-sourced into
+//! `ol4el --help`).
+
+#![warn(missing_docs)]
 
 pub mod bandit;
 pub mod baselines;

@@ -30,26 +30,22 @@ fn main() {
 }
 
 fn usage() -> String {
-    "ol4el — OL4EL edge-cloud collaborative learning (Han et al. 2020)\n\
-     \n\
-     Subcommands:\n\
-       train               run one training configuration and print its trace\n\
-       deploy              threaded testbed: one OS thread per edge, measured costs\n\
-       fleet               engine-free fleet simulation at 1000s of edges\n\
-                           (message-passing transport, network + churn models)\n\
-       fig3 .. fig6        regenerate a figure (tables + results/*.csv)\n\
-       inspect-artifacts   show the AOT artifact manifest and PJRT platform\n\
-       config              print the default config as JSON (edit + pass via --config)\n\
-     \n\
-     Spec grammars (shared by flags and the JSON wire format):\n\
-       --network  ideal | fixed:MS | uniform:LO:HI | lognormal:MEDIAN:SIGMA\n\
-                  [,bw:MBPS][,drop:P][,timeout:MS][,retries:N][,part:START-END]\n\
-       --churn    none | poisson:LEAVE[,join:RATE][,restart:MS][,straggle:P:FACTOR]\n\
-       --bandit   auto | kube[:EPS] | ucb-bv | ucb1 | eps-greedy[:EPS] | thompson\n\
-       --partition iid | label-skew[:ALPHA]\n\
-     \n\
-     Run `ol4el <subcommand> --help` for flags.\n"
-        .to_string()
+    format!(
+        "ol4el — OL4EL edge-cloud collaborative learning (Han et al. 2020)\n\
+         \n\
+         Subcommands:\n\
+           train               run one training configuration and print its trace\n\
+           deploy              threaded testbed: one OS thread per edge, measured costs\n\
+           fleet               engine-free sharded fleet simulation at 10k-100k edges\n\
+                               (message-passing transport, network + churn models)\n\
+           fig3 .. fig6        regenerate a figure (tables + results/*.csv)\n\
+           inspect-artifacts   show the AOT artifact manifest and PJRT platform\n\
+           config              print the default config as JSON (edit + pass via --config)\n\
+         \n\
+         {}\n\
+         Run `ol4el <subcommand> --help` for flags.\n",
+        ol4el::util::cli::SPEC_GRAMMAR
+    )
 }
 
 fn run_cli(argv: &[String]) -> Result<()> {
@@ -347,9 +343,19 @@ fn fleet_cli() -> Cli {
     .opt("model-bytes", "4096", "serialized model size driving transfer times")
     .opt("eval-every", "100", "emit a GlobalUpdate trace point every k updates")
     .opt("failure-rate", "0", "per-launch probability an edge fail-stops")
+    .opt(
+        "shards",
+        "0",
+        "worker threads to shard the fleet over (0 = available parallelism); \
+         results are bit-identical at any value",
+    )
     .opt("seed", "42", "PRNG seed")
     .opt("bench-out", "BENCH_fleet.json", "where --smoke writes its numbers")
-    .switch("smoke", "perf smoke: run sync+async, write bench JSON, assert liveness")
+    .switch(
+        "smoke",
+        "perf smoke: run sync+async at 1 shard and at --shards, assert bit-equal \
+         results, write bench JSON with the speedup",
+    )
     .switch("live", "stream joins/retirements/drops to stderr")
     .switch("json", "emit the report as JSON")
 }
@@ -386,9 +392,20 @@ fn fleet_config(a: &Args, sync: bool) -> Result<RunConfig> {
     })
 }
 
-fn run_fleet(a: &Args, sync: bool) -> Result<ol4el::net::FleetReport> {
+fn run_fleet(
+    a: &Args,
+    sync: bool,
+    shards_override: Option<usize>,
+) -> Result<ol4el::net::FleetReport> {
     let mut sim = FleetSim::new(fleet_config(a, sync)?)?
         .model_bytes(a.f64("model-bytes").map_err(|e| anyhow!(e))?);
+    let shards = match shards_override {
+        Some(n) => n,
+        None => a.usize("shards").map_err(|e| anyhow!(e))?,
+    };
+    if shards > 0 {
+        sim = sim.shards(shards);
+    }
     if a.flag("live") {
         sim = sim.observe(from_fn(|ev: &RunEvent| match ev {
             RunEvent::EdgeJoined { edge, wall_ms } => {
@@ -425,6 +442,9 @@ fn fleet_report_json(r: &ol4el::net::FleetReport) -> Json {
         ("events", Json::num(r.events as f64)),
         ("events_per_sec", Json::num(r.events_per_sec())),
         ("peak_queue_depth", Json::num(r.peak_queue_depth as f64)),
+        ("shards", Json::num(r.shards as f64)),
+        ("setup_seconds", Json::num(r.setup_seconds)),
+        ("loop_seconds", Json::num(r.loop_seconds)),
         ("host_seconds", Json::num(r.host_seconds)),
     ])
 }
@@ -435,14 +455,17 @@ fn print_fleet_report(mode: &str, r: &ol4el::net::FleetReport) {
         r.n_edges, r.joined, r.updates, r.wall_ms, r.mean_spent
     );
     println!(
-        "[{mode}] messages={} (lost {}, {} dropped attempts)  events={} ({:.2} M/s)  peak_queue={}  host={:.2}s",
+        "[{mode}] messages={} (lost {}, {} dropped attempts)  events={} ({:.2} M/s)  \
+         peak_queue={}  shards={}  setup={:.2}s loop={:.2}s",
         r.messages_sent,
         r.messages_lost,
         r.dropped_attempts,
         r.events,
         r.events_per_sec() / 1e6,
         r.peak_queue_depth,
-        r.host_seconds
+        r.shards,
+        r.setup_seconds,
+        r.loop_seconds
     );
 }
 
@@ -462,7 +485,7 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
     };
     let mut out = Vec::new();
     for (name, sync) in runs {
-        let r = run_fleet(&a, sync)?;
+        let r = run_fleet(&a, sync, None)?;
         print_fleet_report(name, &r);
         out.push((name, r));
     }
@@ -478,12 +501,20 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
 }
 
 /// The perf smoke behind CI's scale job: run the sync and async protocols
-/// at the configured scale and write wall time, throughput and queue
-/// high-water marks to `--bench-out` (BENCH_fleet.json).
+/// at 1 shard and at `--shards` (0 = available parallelism), assert the
+/// protocol results are bit-identical, and write throughput + the
+/// sharding speedup to `--bench-out` (BENCH_fleet.json).
+///
+/// Setup (spec parsing, fleet construction, thread spawn) and the event
+/// loop are timed separately — `events_per_sec` and the speedup compare
+/// event-loop time only, so the numbers measure the simulator, not the
+/// constructor.
 fn cmd_fleet_smoke(a: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
-    let r_async = run_fleet(a, false)?;
-    let r_sync = run_fleet(a, true)?;
+    let base_async = run_fleet(a, false, Some(1))?;
+    let base_sync = run_fleet(a, true, Some(1))?;
+    let r_async = run_fleet(a, false, None)?;
+    let r_sync = run_fleet(a, true, None)?;
     let host_seconds = t0.elapsed().as_secs_f64();
     for (name, r) in [("async", &r_async), ("sync", &r_sync)] {
         print_fleet_report(name, r);
@@ -491,24 +522,70 @@ fn cmd_fleet_smoke(a: &Args) -> Result<()> {
             return Err(anyhow!("fleet smoke: {name} made no updates"));
         }
     }
+    // The determinism contract, enforced on every CI run: sharding may
+    // only change wall-clock, never results.
+    for (name, one, many) in [
+        ("async", &base_async, &r_async),
+        ("sync", &base_sync, &r_sync),
+    ] {
+        if one.updates != many.updates
+            || one.wall_ms != many.wall_ms
+            || one.mean_spent != many.mean_spent
+            || one.messages_sent != many.messages_sent
+            || one.messages_lost != many.messages_lost
+        {
+            return Err(anyhow!(
+                "fleet smoke: {name} diverged between 1 shard and {} shards",
+                many.shards
+            ));
+        }
+    }
+    let lookahead = parse_network(&a.str("network"))?
+        .min_delay_ms(a.f64("model-bytes").map_err(|e| anyhow!(e))?);
+    if lookahead <= 0.0 {
+        eprintln!(
+            "[ol4el] note: this network spec has zero lookahead (ideal/lognormal \
+             latency) — sharded runs stay exact but cannot speed up; use \
+             fixed:MS or uniform:LO:HI latency to measure speedups"
+        );
+    }
+    let setup_all = base_async.setup_seconds
+        + base_sync.setup_seconds
+        + r_async.setup_seconds
+        + r_sync.setup_seconds;
+    let loop_1 = base_async.loop_seconds + base_sync.loop_seconds;
+    let loop_n = r_async.loop_seconds + r_sync.loop_seconds;
     let events = r_async.events + r_sync.events;
+    let evps_1 = if loop_1 > 0.0 { events as f64 / loop_1 } else { 0.0 };
+    let evps_n = if loop_n > 0.0 { events as f64 / loop_n } else { 0.0 };
+    let speedup = if evps_1 > 0.0 { evps_n / evps_1 } else { 0.0 };
+    println!(
+        "[smoke] shards={} events/sec {:.2}M (1-shard {:.2}M)  speedup {:.2}x",
+        r_async.shards,
+        evps_n / 1e6,
+        evps_1 / 1e6,
+        speedup
+    );
     let j = Json::obj(vec![
         ("edges", Json::num(r_async.n_edges as f64)),
+        ("shards", Json::num(r_async.shards as f64)),
+        // host_seconds spans all four runs; setup + the two loop entries
+        // reconcile with it (modulo teardown), so the components add up.
         ("host_seconds", Json::num(host_seconds)),
-        (
-            "events_per_sec",
-            Json::num(if host_seconds > 0.0 {
-                events as f64 / host_seconds
-            } else {
-                0.0
-            }),
-        ),
+        ("setup_seconds", Json::num(setup_all)),
+        ("loop_seconds_1shard", Json::num(loop_1)),
+        ("loop_seconds_nshard", Json::num(loop_n)),
+        ("events_per_sec", Json::num(evps_n)),
+        ("events_per_sec_1shard", Json::num(evps_1)),
+        ("speedup_vs_1shard", Json::num(speedup)),
         (
             "peak_queue_depth",
             Json::num(r_async.peak_queue_depth.max(r_sync.peak_queue_depth) as f64),
         ),
         ("async", fleet_report_json(&r_async)),
         ("sync", fleet_report_json(&r_sync)),
+        ("async_1shard", fleet_report_json(&base_async)),
+        ("sync_1shard", fleet_report_json(&base_sync)),
     ]);
     let path = a.str("bench-out");
     std::fs::write(&path, j.pretty()).map_err(|e| anyhow!("writing {path}: {e}"))?;
@@ -522,6 +599,11 @@ fn fig_cli(name: &'static str) -> Cli {
         .opt("artifacts", "artifacts", "artifact dir for pjrt")
         .opt("seeds", "2", "seeds per cell")
         .opt("out", "results", "CSV output directory")
+        .opt(
+            "shards",
+            "0",
+            "fleet-sim worker shards for fig6 (0 = available parallelism)",
+        )
         .switch("full", "full paper-sized sweep (slower)")
 }
 
@@ -534,6 +616,7 @@ fn cmd_fig(which: &str, argv: &[String]) -> Result<()> {
         seeds: a.u64("seeds").map_err(|e| anyhow!(e))?,
         engine: EngineKind::parse(&a.str("engine")).ok_or_else(|| anyhow!("bad --engine"))?,
         artifacts: a.str("artifacts"),
+        shards: a.usize("shards").map_err(|e| anyhow!(e))?,
     };
     let t0 = std::time::Instant::now();
     let tables = match which {

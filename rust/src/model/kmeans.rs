@@ -10,11 +10,14 @@ use crate::util::rng::Rng;
 /// row-major `[k, d]` centers.
 #[derive(Clone, Copy, Debug)]
 pub struct KmeansSpec {
+    /// Number of clusters.
     pub k: usize,
+    /// Feature dimension.
     pub d: usize,
 }
 
 impl KmeansSpec {
+    /// Flat parameter length (k × d center coordinates).
     pub fn param_len(&self) -> usize {
         self.k * self.d
     }

@@ -12,11 +12,14 @@ pub mod svm;
 /// K-means unsupervised).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Task {
+    /// Multi-class linear SVM (wafer-map-like classification).
     Svm,
+    /// Mini-batch K-means (traffic-stream-like clustering).
     Kmeans,
 }
 
 impl Task {
+    /// Canonical display/wire name.
     pub fn name(self) -> &'static str {
         match self {
             Task::Svm => "svm",
@@ -24,6 +27,7 @@ impl Task {
         }
     }
 
+    /// Parse a task name (`svm | kmeans`).
     pub fn parse(s: &str) -> Option<Task> {
         match s.to_ascii_lowercase().as_str() {
             "svm" => Some(Task::Svm),
@@ -37,11 +41,14 @@ impl Task {
 /// engines is documented above.
 #[derive(Clone, Debug)]
 pub struct ModelState {
+    /// Which task the parameters belong to.
     pub task: Task,
+    /// Flat parameter buffer (layout per task, see the module docs).
     pub params: Vec<f32>,
 }
 
 impl ModelState {
+    /// An all-zeros model of the given task and length.
     pub fn zeros(task: Task, len: usize) -> Self {
         ModelState {
             task,
@@ -49,10 +56,12 @@ impl ModelState {
         }
     }
 
+    /// Flat parameter count.
     pub fn len(&self) -> usize {
         self.params.len()
     }
 
+    /// Whether the model has no parameters.
     pub fn is_empty(&self) -> bool {
         self.params.is_empty()
     }

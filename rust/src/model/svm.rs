@@ -9,17 +9,23 @@ use crate::model::{ModelState, Task};
 /// SVM hyperparameters + shape. `d` features, `c` classes.
 #[derive(Clone, Copy, Debug)]
 pub struct SvmSpec {
+    /// Feature dimension.
     pub d: usize,
+    /// Class count.
     pub c: usize,
+    /// Learning rate.
     pub lr: f32,
+    /// L2 regularization strength.
     pub reg: f32,
 }
 
 impl SvmSpec {
+    /// Flat parameter length (d × c weights + c biases).
     pub fn param_len(&self) -> usize {
         self.d * self.c + self.c
     }
 
+    /// The zero-initialized model state (paper: random/zero init at t=0).
     pub fn init_state(&self) -> ModelState {
         ModelState::zeros(Task::Svm, self.param_len())
     }
@@ -31,6 +37,7 @@ pub fn split_params(params: &[f32], d: usize, c: usize) -> (&[f32], &[f32]) {
     params.split_at(d * c)
 }
 
+/// Split a flat parameter buffer into (weights, biases) views.
 pub fn split_params_mut(params: &mut [f32], d: usize, c: usize) -> (&mut [f32], &mut [f32]) {
     assert_eq!(params.len(), d * c + c, "bad svm param length");
     params.split_at_mut(d * c)

@@ -68,6 +68,7 @@ impl ChurnSpec {
         }
     }
 
+    /// Whether this schedule never changes the fleet.
     pub fn is_none(&self) -> bool {
         self.leave_rate == 0.0 && self.join_rate == 0.0 && self.straggle_p == 0.0
     }
@@ -85,6 +86,17 @@ impl ChurnSpec {
 
     /// Parse the grammar documented at the module head. Rejects exactly
     /// what [`check`](ChurnSpec::check) rejects.
+    ///
+    /// ```
+    /// use ol4el::net::ChurnSpec;
+    ///
+    /// let c = ChurnSpec::parse("poisson:0.01,join:0.05,restart:3000").unwrap();
+    /// assert_eq!(c.leave_rate, 0.01);
+    /// assert_eq!(c.restart_ms, 3000.0);
+    /// // The canonical spec string round-trips:
+    /// assert_eq!(ChurnSpec::parse(&c.spec()), Some(c));
+    /// assert!(ChurnSpec::parse("poisson:-1").is_none());
+    /// ```
     pub fn parse(s: &str) -> Option<ChurnSpec> {
         let s = s.to_ascii_lowercase();
         if s == "none" {

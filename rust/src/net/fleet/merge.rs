@@ -1,0 +1,845 @@
+//! The coordinator side of the sharded fleet simulator: the cloud's
+//! sequential state, the conservative window loop, and the deterministic
+//! merge of per-shard event streams.
+//!
+//! ## The determinism contract
+//!
+//! A sharded run must be **bit-for-bit identical** to the 1-shard run at
+//! any shard count. Three mechanisms carry that guarantee:
+//!
+//! 1. **Per-edge RNG streams** (see [`super::shard`]): no draw depends on
+//!    edge placement.
+//! 2. **Conservative windows**: every cross-thread message is a delivered
+//!    network message, and [`resolve_fate`] guarantees its delay is at
+//!    least the lookahead `Δ = NetworkSpec::min_delay_ms(model_bytes)`.
+//!    Advancing all shards through `[T, T + Δ)` in lockstep therefore
+//!    cannot miss an arrival: anything sent inside the window lands at or
+//!    after its end. With `Δ = 0` (ideal or lognormal latency) the window
+//!    degenerates to the single instant `T` and the loop iterates passes
+//!    until the instant quiesces — still exact, no longer parallel.
+//! 3. **Key-stamped total order**: every run event and ledger charge
+//!    carries a [`Key`] `(time, source, seq)` where source 0 is the cloud
+//!    and source `1 + edge` is the edge, each with its own deterministic
+//!    sequence counter. Events are merged and emitted in key order;
+//!    charges are replayed into the cloud's running `total_spent` in key
+//!    order, so the `mean_spent` inside every trace point is the same
+//!    f64 at any shard count.
+//!
+//! [`resolve_fate`]: crate::net::transport::resolve_fate
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+use std::sync::mpsc::{Receiver, Sender};
+
+use crate::config::RunConfig;
+use crate::coordinator::observer::{Observer, RunEvent};
+use crate::coordinator::TracePoint;
+use crate::net::churn::ChurnSpec;
+use crate::net::transport::resolve_fate;
+use crate::util::rng::Rng;
+
+use super::shard::{
+    stream, ChargeRec, Cmd, DownMsg, Inject, Out, SpawnMsg, UpMsg, WindowOut, SALT_CLOUD_JOIN,
+};
+
+/// Global order stamp of one run event, ledger charge or cloud-queue
+/// entry: virtual time, then source (0 = cloud, `1 + edge` = that edge),
+/// then the source's own sequence counter. Keys are unique by
+/// construction and independent of shard placement, so sorting by key
+/// reproduces the 1-shard total order exactly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub(crate) struct Key {
+    /// Virtual time (ms); must be finite.
+    pub time: f64,
+    /// 0 for the cloud, `1 + edge id` for an edge.
+    pub src: u64,
+    /// The source's own monotone counter.
+    pub seq: u64,
+}
+
+impl Eq for Key {}
+
+impl Ord for Key {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.time
+            .partial_cmp(&other.time)
+            .expect("event keys must carry finite times")
+            .then_with(|| self.src.cmp(&other.src))
+            .then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
+impl PartialOrd for Key {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The synthetic diminishing-returns learning curve in [0, 1) — the ONE
+/// definition both protocol drivers meter progress against (fig6's
+/// sync-vs-async comparison is only meaningful if they share it).
+fn progress_curve(updates: u64, n_start: usize) -> f64 {
+    let scale = 20.0 * n_start as f64;
+    updates as f64 / (updates as f64 + scale)
+}
+
+/// Bandit reward for merging a τ-interval round at the given progress and
+/// staleness (staleness 0 = the synchronous barrier case).
+fn merge_utility(tau: usize, tau_max: usize, progress: f64, staleness: u64) -> f64 {
+    (tau as f64 / tau_max as f64) * (1.0 - progress) / (1.0 + 0.1 * staleness as f64)
+}
+
+/// Charge records ride a min-heap ordered by key (keys are unique, so
+/// comparing keys alone is a total order).
+struct ChargeEntry(ChargeRec);
+
+impl PartialEq for ChargeEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.key == other.0.key
+    }
+}
+impl Eq for ChargeEntry {}
+impl Ord for ChargeEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.key.cmp(&other.0.key)
+    }
+}
+impl PartialOrd for ChargeEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// What sits in the cloud's own event queue.
+#[derive(Debug)]
+enum CloudEv {
+    /// A delivered upload (from a shard, via a window barrier).
+    Upload(UpMsg),
+    /// A churn join alarm.
+    JoinAlarm,
+}
+
+struct CloudItem {
+    key: Key,
+    ev: CloudEv,
+}
+
+impl PartialEq for CloudItem {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key
+    }
+}
+impl Eq for CloudItem {}
+impl Ord for CloudItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.key.cmp(&other.key)
+    }
+}
+impl PartialOrd for CloudItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The async protocol's sequential cloud: global version and update
+/// counters, the learning-progress meter, the charge replay, and churn
+/// joins. All of it is cheap bookkeeping — the expensive work (RNG,
+/// queues) stays on the shards.
+pub(crate) struct Cloud {
+    cfg: RunConfig,
+    model_bytes: f64,
+    version: u64,
+    updates: u64,
+    total_spent: f64,
+    /// Fleet size as of now (grows at join alarms, like the reference
+    /// engine's `edges.len()`); the `mean_spent` divisor.
+    edge_count: usize,
+    n_start: usize,
+    next_edge_id: usize,
+    joins_done: usize,
+    max_joins: usize,
+    seq: u64,
+    queue: BinaryHeap<Reverse<CloudItem>>,
+    pending: BinaryHeap<Reverse<ChargeEntry>>,
+    join_rng: Rng,
+    /// Window buffer of emitted events (drained by the driver).
+    events: Vec<(Key, RunEvent)>,
+    /// Window buffer of outgoing replies/spawns (drained by the driver).
+    outbox: Vec<Inject>,
+    processed: u64,
+    /// Time of the latest processed cloud event.
+    wall_ms: f64,
+}
+
+impl Cloud {
+    /// A fresh cloud for `cfg`, fleet-sized counters at t = 0.
+    pub fn new(cfg: RunConfig, model_bytes: f64) -> Cloud {
+        let max_joins = if cfg.churn.join_rate > 0.0 {
+            cfg.n_edges
+        } else {
+            0
+        };
+        let join_rng = stream(cfg.seed, SALT_CLOUD_JOIN, 0);
+        let n = cfg.n_edges;
+        Cloud {
+            cfg,
+            model_bytes,
+            version: 0,
+            updates: 0,
+            total_spent: 0.0,
+            edge_count: n,
+            n_start: n,
+            next_edge_id: n,
+            joins_done: 0,
+            max_joins,
+            seq: 0,
+            queue: BinaryHeap::new(),
+            pending: BinaryHeap::new(),
+            join_rng,
+            events: Vec::new(),
+            outbox: Vec::new(),
+            processed: 0,
+            wall_ms: 0.0,
+        }
+    }
+
+    /// Synthetic diminishing-returns learning curve in [0, 1).
+    fn progress(&self) -> f64 {
+        progress_curve(self.updates, self.n_start)
+    }
+
+    /// Bandit reward for merging a τ-interval round at `staleness`.
+    fn utility(&self, tau: usize, staleness: u64) -> f64 {
+        merge_utility(tau, self.cfg.tau_max, self.progress(), staleness)
+    }
+
+    fn emit(&mut self, time: f64, ev: RunEvent) {
+        let key = Key {
+            time,
+            src: 0,
+            seq: self.seq,
+        };
+        self.seq += 1;
+        self.events.push((key, ev));
+    }
+
+    fn trace_point(&mut self, t: f64) {
+        let point = TracePoint {
+            wall_ms: t,
+            mean_spent: self.total_spent / self.edge_count as f64,
+            updates: self.updates,
+            metric: self.progress(),
+        };
+        self.emit(t, RunEvent::GlobalUpdate { point });
+    }
+
+    /// Replay every recorded charge ordered before `key` into the running
+    /// spend — this is what makes `mean_spent` shard-count independent.
+    fn apply_charges_before(&mut self, key: Key) {
+        loop {
+            let ready = match self.pending.peek() {
+                Some(Reverse(entry)) => entry.0.key < key,
+                None => false,
+            };
+            if !ready {
+                break;
+            }
+            let Reverse(entry) = self.pending.pop().expect("peeked");
+            self.total_spent += entry.0.amount;
+        }
+    }
+
+    /// Absorb one shard's window output (charges + uploads).
+    pub fn absorb(&mut self, charges: Vec<ChargeRec>, uploads: Vec<UpMsg>) {
+        for c in charges {
+            self.pending.push(Reverse(ChargeEntry(c)));
+        }
+        for up in uploads {
+            let key = Key {
+                time: up.arrive_ms,
+                src: 1 + up.report.edge as u64,
+                seq: up.seq,
+            };
+            self.queue.push(Reverse(CloudItem {
+                key,
+                ev: CloudEv::Upload(up),
+            }));
+        }
+    }
+
+    /// Earliest queued cloud event, if any.
+    pub fn next_time(&self) -> Option<f64> {
+        self.queue.peek().map(|r| r.0.key.time)
+    }
+
+    /// Arm the first join alarm (t = 0).
+    pub fn start(&mut self) {
+        self.schedule_join(0.0);
+    }
+
+    fn schedule_join(&mut self, now: f64) {
+        if self.joins_done >= self.max_joins {
+            return;
+        }
+        if let Some(gap) = ChurnSpec::exp_gap_ms(self.cfg.churn.join_rate, &mut self.join_rng) {
+            let key = Key {
+                time: now + gap,
+                src: 0,
+                seq: self.seq,
+            };
+            self.seq += 1;
+            self.queue.push(Reverse(CloudItem {
+                key,
+                ev: CloudEv::JoinAlarm,
+            }));
+        }
+    }
+
+    /// Merge one delivered upload: meter utility, advance the global
+    /// version, stamp the trace cadence, and reply (payload only — timing
+    /// was pre-resolved by the shard).
+    fn on_upload(&mut self, key: Key, up: UpMsg) {
+        let t = up.arrive_ms;
+        self.apply_charges_before(key);
+        self.total_spent += up.delay_ms;
+        if up.dropped_attempts > 0 {
+            self.emit(
+                t,
+                RunEvent::MessageDropped {
+                    edge: up.report.edge,
+                    wall_ms: t,
+                    attempts: up.dropped_attempts,
+                    lost: false,
+                },
+            );
+        }
+        self.emit(
+            t,
+            RunEvent::LocalReport {
+                report: up.report.clone(),
+                wall_ms: t,
+            },
+        );
+        let staleness = self.version.saturating_sub(up.report.base_version);
+        let u = self.utility(up.report.tau, staleness);
+        self.version += 1;
+        self.updates += 1;
+        if self.updates % self.cfg.eval_every as u64 == 0 {
+            self.trace_point(t);
+        }
+        self.outbox.push(Inject::Down(DownMsg {
+            edge: up.report.edge,
+            arrive_ms: up.down.arrive_ms,
+            version: self.version,
+            fb_tau: up.report.tau,
+            fb_utility: u,
+            fb_cost: up.report.cost + up.delay_ms,
+            carried_ms: up.delay_ms,
+            delay_ms: up.down.charge_ms,
+            dropped_attempts: up.down.dropped_attempts,
+        }));
+    }
+
+    /// A join alarm fired: draw the joiner, announce it, and send its
+    /// registration (which rides the network like everything else, so its
+    /// arrival respects the lookahead).
+    fn on_join_alarm(&mut self, t: f64) {
+        if self.joins_done >= self.max_joins {
+            return;
+        }
+        self.joins_done += 1;
+        let hetero = self.cfg.hetero.max(1.0);
+        let slowdown = self.join_rng.range_f64(1.0, hetero).max(1.0);
+        let gid = self.next_edge_id;
+        self.next_edge_id += 1;
+        self.edge_count += 1;
+        self.emit(
+            t,
+            RunEvent::EdgeJoined {
+                edge: gid,
+                wall_ms: t,
+            },
+        );
+        let spec = self.cfg.network.clone();
+        let bw = if spec.bandwidth_mbps.is_finite() {
+            spec.bandwidth_mbps / slowdown
+        } else {
+            f64::INFINITY
+        };
+        let mut at = t;
+        loop {
+            let (delay, _dropped, lost) =
+                resolve_fate(&spec, bw, at, self.model_bytes, &mut self.join_rng);
+            at += delay;
+            if !lost {
+                break;
+            }
+        }
+        self.outbox.push(Inject::Spawn(SpawnMsg {
+            edge: gid,
+            slowdown,
+            base_version: self.version,
+            arrive_ms: at,
+        }));
+        self.schedule_join(t);
+    }
+
+    /// Drain and handle every cloud event inside the window.
+    fn process_window(&mut self, bound: f64, inclusive: bool) {
+        loop {
+            let ready = match self.queue.peek() {
+                Some(Reverse(item)) => {
+                    if inclusive {
+                        item.key.time <= bound
+                    } else {
+                        item.key.time < bound
+                    }
+                }
+                None => false,
+            };
+            if !ready {
+                break;
+            }
+            let Reverse(item) = self.queue.pop().expect("peeked");
+            self.processed += 1;
+            self.wall_ms = self.wall_ms.max(item.key.time);
+            match item.ev {
+                CloudEv::Upload(up) => self.on_upload(item.key, up),
+                CloudEv::JoinAlarm => {
+                    let key = item.key;
+                    self.apply_charges_before(key);
+                    self.on_join_alarm(key.time);
+                }
+            }
+        }
+    }
+
+    /// Close the run: fold in every outstanding charge, stamp the closing
+    /// trace point and the `Finished` event at the final wall clock.
+    fn finish(&mut self, final_wall: f64) {
+        while let Some(Reverse(entry)) = self.pending.pop() {
+            self.total_spent += entry.0.amount;
+        }
+        self.trace_point(final_wall);
+        let updates = self.updates;
+        let final_metric = self.progress();
+        self.emit(
+            final_wall,
+            RunEvent::Finished {
+                wall_ms: final_wall,
+                updates,
+                final_metric,
+            },
+        );
+    }
+}
+
+/// Protocol-level summary a driver hands back to [`FleetSim::run`]
+/// (host-time and per-shard diagnostics are collected separately).
+///
+/// [`FleetSim::run`]: super::FleetSim::run
+pub(crate) struct DriverSummary {
+    /// Global updates achieved.
+    pub updates: u64,
+    /// Churn joins performed.
+    pub joined: usize,
+    /// Final virtual wall clock (ms).
+    pub wall_ms: f64,
+    /// Sum of all ledger charges.
+    pub total_spent: f64,
+    /// Fleet size at the end (divisor of `mean_spent`).
+    pub edge_count: usize,
+    /// Final synthetic progress.
+    pub final_progress: f64,
+    /// Events processed on the coordinator + shard queues.
+    pub events: u64,
+    /// For the synchronous driver: the retired-edge emission already
+    /// happened and shards' flags are authoritative only for churn; the
+    /// driver reports its own count here (`None` for async — count shard
+    /// flags instead).
+    pub sync_retired: Option<usize>,
+}
+
+/// Did `t` land inside the window ending at `bound`?
+fn in_window(t: f64, bound: f64, inclusive: bool) -> bool {
+    if inclusive {
+        t <= bound
+    } else {
+        t < bound
+    }
+}
+
+/// The asynchronous protocol's coordinator loop: lockstep conservative
+/// windows over the worker shards, sequential cloud merging, and the
+/// key-ordered event merge feeding the observers.
+pub(crate) fn run_async(
+    cfg: &RunConfig,
+    model_bytes: f64,
+    cmd: &[Sender<Cmd>],
+    out: &Receiver<Out>,
+    observers: &mut [Box<dyn Observer>],
+) -> DriverSummary {
+    let k = cmd.len();
+    let lookahead = cfg.network.min_delay_ms(model_bytes);
+    let mut cloud = Cloud::new(cfg.clone(), model_bytes);
+    let mut shard_next: Vec<Option<f64>> = vec![None; k];
+    let mut shard_last: Vec<f64> = vec![0.0; k];
+    let mut inboxes: Vec<Vec<Inject>> = (0..k).map(|_| Vec::new()).collect();
+    let mut shard_processed: u64 = 0;
+    let mut window_events: Vec<(Key, RunEvent)> = Vec::new();
+
+    fn absorb_window(
+        o: WindowOut,
+        cloud: &mut Cloud,
+        shard_next: &mut [Option<f64>],
+        shard_last: &mut [f64],
+        shard_processed: &mut u64,
+        window_events: &mut Vec<(Key, RunEvent)>,
+    ) {
+        shard_next[o.shard] = if o.has_next { Some(o.next_time) } else { None };
+        shard_last[o.shard] = shard_last[o.shard].max(o.last_time);
+        *shard_processed += o.processed;
+        window_events.extend(o.events);
+        cloud.absorb(o.charges, o.uploads);
+    }
+
+    // t = 0: initial launches everywhere, first join alarm on the cloud.
+    for tx in cmd {
+        tx.send(Cmd::Start).expect("fleet worker hung up");
+    }
+    for _ in 0..k {
+        match out.recv().expect("fleet worker hung up") {
+            Out::Window(o) => absorb_window(
+                o,
+                &mut cloud,
+                &mut shard_next,
+                &mut shard_last,
+                &mut shard_processed,
+                &mut window_events,
+            ),
+            _ => unreachable!("Start answers with Window"),
+        }
+    }
+    cloud.start();
+
+    loop {
+        // Global minimum next event across cloud, shards and undelivered
+        // barrier traffic.
+        let mut t_min: Option<f64> = cloud.next_time();
+        for s in 0..k {
+            let mut sn = shard_next[s];
+            for m in &inboxes[s] {
+                let a = m.arrive_ms();
+                sn = Some(sn.map_or(a, |v: f64| v.min(a)));
+            }
+            if let Some(v) = sn {
+                t_min = Some(t_min.map_or(v, |w| w.min(v)));
+            }
+        }
+        let Some(t0) = t_min else { break };
+        let (bound, inclusive) = if lookahead > 0.0 {
+            (t0 + lookahead, false)
+        } else {
+            (t0, true)
+        };
+
+        // One pass for a positive lookahead; with Δ = 0, iterate passes
+        // until the instant quiesces (zero-delay cascades).
+        loop {
+            let mut poked = 0usize;
+            for s in 0..k {
+                let has_work = shard_next[s].map_or(false, |t| in_window(t, bound, inclusive));
+                let has_inbox = inboxes[s]
+                    .iter()
+                    .any(|m| in_window(m.arrive_ms(), bound, inclusive));
+                if !(has_work || has_inbox) {
+                    continue;
+                }
+                // Deliver only traffic that arrives inside this window;
+                // later arrivals wait for their own window's barrier so
+                // queue insertion order stays shard-count independent.
+                let mut inbox = Vec::new();
+                let mut rest = Vec::new();
+                for m in inboxes[s].drain(..) {
+                    if in_window(m.arrive_ms(), bound, inclusive) {
+                        inbox.push(m);
+                    } else {
+                        rest.push(m);
+                    }
+                }
+                inboxes[s] = rest;
+                cmd[s]
+                    .send(Cmd::Window {
+                        bound,
+                        inclusive,
+                        inbox,
+                    })
+                    .expect("fleet worker hung up");
+                poked += 1;
+            }
+            for _ in 0..poked {
+                match out.recv().expect("fleet worker hung up") {
+                    Out::Window(o) => absorb_window(
+                        o,
+                        &mut cloud,
+                        &mut shard_next,
+                        &mut shard_last,
+                        &mut shard_processed,
+                        &mut window_events,
+                    ),
+                    _ => unreachable!("Window answers with Window"),
+                }
+            }
+            cloud.process_window(bound, inclusive);
+            window_events.append(&mut cloud.events);
+            for m in cloud.outbox.drain(..) {
+                debug_assert!(
+                    m.arrive_ms() >= bound || inclusive,
+                    "conservative window violated: arrival {} inside [.., {})",
+                    m.arrive_ms(),
+                    bound
+                );
+                inboxes[m.edge() % k].push(m);
+            }
+            if !inclusive {
+                break;
+            }
+            let cloud_again = cloud.next_time().map_or(false, |t| t <= bound);
+            let shard_again = (0..k).any(|s| {
+                shard_next[s].map_or(false, |t| t <= bound)
+                    || inboxes[s].iter().any(|m| m.arrive_ms() <= bound)
+            });
+            if !(cloud_again || shard_again) {
+                break;
+            }
+        }
+
+        // Deterministic merge: one total order regardless of shard count.
+        window_events.sort_by(|a, b| a.0.cmp(&b.0));
+        for (_, ev) in window_events.drain(..) {
+            for obs in observers.iter_mut() {
+                obs.on_event(&ev);
+            }
+        }
+    }
+
+    let final_wall = shard_last
+        .iter()
+        .fold(cloud.wall_ms, |acc, &t| acc.max(t));
+    cloud.finish(final_wall);
+    window_events.append(&mut cloud.events);
+    window_events.sort_by(|a, b| a.0.cmp(&b.0));
+    for (_, ev) in window_events.drain(..) {
+        for obs in observers.iter_mut() {
+            obs.on_event(&ev);
+        }
+    }
+
+    DriverSummary {
+        updates: cloud.updates,
+        joined: cloud.joins_done,
+        wall_ms: final_wall,
+        total_spent: cloud.total_spent,
+        edge_count: cloud.edge_count,
+        final_progress: cloud.progress(),
+        events: shard_processed + cloud.processed,
+        sync_retired: None,
+    }
+}
+
+/// The synchronous protocol's coordinator loop: barrier rounds whose
+/// per-edge work (cost draws, straggle, both message legs) fans out to
+/// the shards and reduces with exact max/min operations, so any shard
+/// count produces the identical round sequence.
+pub(crate) fn run_sync(
+    cfg: &RunConfig,
+    slowdowns: &[f64],
+    cmd: &[Sender<Cmd>],
+    out: &Receiver<Out>,
+    observers: &mut [Box<dyn Observer>],
+) -> DriverSummary {
+    let k = cmd.len();
+    let mut strategy = crate::coordinator::build_strategy(cfg, slowdowns);
+    let mut rng = stream(cfg.seed, super::shard::SALT_SYNC_CLOUD, 0);
+    let n = cfg.n_edges;
+    let n_start = n;
+    let mut wall = 0.0f64;
+    let mut spent_each = 0.0f64;
+    let mut total_spent = 0.0f64;
+    let mut version = 0u64;
+    let mut updates = 0u64;
+    let mut departed: Vec<usize> = Vec::new();
+    let mut budget_retired = false;
+
+    let progress = |updates: u64| progress_curve(updates, n_start);
+    fn emit(observers: &mut [Box<dyn Observer>], ev: RunEvent) {
+        for obs in observers.iter_mut() {
+            obs.on_event(&ev);
+        }
+    }
+
+    loop {
+        let min_remaining = (cfg.budget - spent_each).max(0.0);
+        let Some(tau) = strategy.select(0, min_remaining, &mut rng) else {
+            break; // no affordable arm: the fleet retires together
+        };
+        emit(
+            observers,
+            RunEvent::RoundStart {
+                edge: None,
+                tau,
+                wall_ms: wall,
+            },
+        );
+
+        for tx in cmd {
+            tx.send(Cmd::SyncRound {
+                wall_ms: wall,
+                tau,
+                version,
+            })
+            .expect("fleet worker hung up");
+        }
+        let mut barrier_comp = 0.0f64;
+        let mut up_wait = 0.0f64;
+        let mut dl_wait = 0.0f64;
+        let mut reports = Vec::with_capacity(n);
+        let mut up_drops = Vec::new();
+        let mut dl_drops = Vec::new();
+        for _ in 0..k {
+            match out.recv().expect("fleet worker hung up") {
+                Out::Sync(o) => {
+                    barrier_comp = barrier_comp.max(o.barrier_comp);
+                    up_wait = up_wait.max(o.up_wait);
+                    dl_wait = dl_wait.max(o.dl_wait);
+                    reports.extend(o.reports);
+                    up_drops.extend(o.up_drops);
+                    dl_drops.extend(o.dl_drops);
+                }
+                _ => unreachable!("SyncRound answers with Sync"),
+            }
+        }
+        // Deterministic emission order: upload drops then reply drops,
+        // each in edge order, at the round-start clock.
+        up_drops.sort_by_key(|d| d.0);
+        dl_drops.sort_by_key(|d| d.0);
+        for (edge, attempts, lost) in up_drops.into_iter().chain(dl_drops) {
+            emit(
+                observers,
+                RunEvent::MessageDropped {
+                    edge,
+                    wall_ms: wall,
+                    attempts,
+                    lost,
+                },
+            );
+        }
+
+        let comm = cfg.cost.sample_comm(&mut rng);
+        let barrier_cost = barrier_comp + comm + up_wait + dl_wait;
+        // The reference accumulation: one add per edge, in edge order.
+        for _ in 0..n {
+            total_spent += barrier_cost;
+        }
+        spent_each += barrier_cost;
+        wall += barrier_cost;
+        reports.sort_by_key(|r| r.edge);
+        for report in reports {
+            emit(
+                observers,
+                RunEvent::LocalReport {
+                    report,
+                    wall_ms: wall,
+                },
+            );
+        }
+
+        version += 1;
+        updates += 1;
+        let u = merge_utility(tau, cfg.tau_max, progress(updates), 0);
+        strategy.feedback(0, tau, u, barrier_cost);
+        if updates % cfg.eval_every as u64 == 0 {
+            emit(
+                observers,
+                RunEvent::GlobalUpdate {
+                    point: TracePoint {
+                        wall_ms: wall,
+                        mean_spent: total_spent / n as f64,
+                        updates,
+                        metric: progress(updates),
+                    },
+                },
+            );
+        }
+
+        if spent_each >= cfg.budget {
+            budget_retired = true;
+        }
+        // Per-round churn hazard: a departure ends the cohort.
+        if cfg.churn.leave_rate > 0.0 {
+            let p_leave = 1.0 - (-cfg.churn.leave_rate * barrier_cost / 1000.0).exp();
+            for tx in cmd {
+                tx.send(Cmd::SyncHazard { p_leave })
+                    .expect("fleet worker hung up");
+            }
+            for _ in 0..k {
+                match out.recv().expect("fleet worker hung up") {
+                    Out::Hazard(o) => departed.extend(o.departed),
+                    _ => unreachable!("SyncHazard answers with Hazard"),
+                }
+            }
+        }
+        if budget_retired || !departed.is_empty() {
+            break;
+        }
+    }
+
+    // Synchronous EL is fail-stop for the cohort: when one edge ends,
+    // everyone stops. Report whoever actually retired, in edge order.
+    let retired: Vec<usize> = if budget_retired {
+        (0..n).collect()
+    } else {
+        departed.sort_unstable();
+        departed
+    };
+    for &edge in &retired {
+        emit(
+            observers,
+            RunEvent::EdgeRetired {
+                edge,
+                wall_ms: wall,
+                spent: spent_each,
+            },
+        );
+    }
+    emit(
+        observers,
+        RunEvent::GlobalUpdate {
+            point: TracePoint {
+                wall_ms: wall,
+                mean_spent: total_spent / n as f64,
+                updates,
+                metric: progress(updates),
+            },
+        },
+    );
+    emit(
+        observers,
+        RunEvent::Finished {
+            wall_ms: wall,
+            updates,
+            final_metric: progress(updates),
+        },
+    );
+
+    DriverSummary {
+        updates,
+        joined: 0,
+        wall_ms: wall,
+        total_spent,
+        edge_count: n,
+        final_progress: progress(updates),
+        events: 0, // filled from message counters by the caller
+        sync_retired: Some(retired.len()),
+    }
+}

@@ -1,0 +1,442 @@
+//! Fleet-scale simulation: the OL4EL protocol at tens of thousands of
+//! edges, sharded across worker threads.
+//!
+//! [`FleetSim`] runs the synchronous barrier or asynchronous merge
+//! *protocol* — bandit interval selection, budget ledgers, message
+//! delays/drops and the full [`ChurnSpec`] — without a compute engine or
+//! real models. Local rounds are virtual: their resource cost is priced by
+//! the [`CostModel`] (fixed/variable) and learning progress is a synthetic
+//! diminishing-returns curve, so a 100k-edge run is bounded by event
+//! processing, not matrix math. This is the system-scale lens the paper's
+//! 3-edge testbed cannot provide: how update throughput, drops and churn
+//! interact as the fleet grows.
+//!
+//! ## Sharded execution
+//!
+//! The fleet is partitioned round-robin over `N` worker threads
+//! ([`FleetSim::shards`], default: available parallelism). Each shard owns
+//! its edges' state, bandits and an [`EventQueue`]; shards advance in
+//! lockstep *conservative windows* bounded by the network's guaranteed
+//! minimum message delay ([`NetworkSpec::min_delay_ms`]), exchanging
+//! cross-thread deliveries only at window barriers. Because every random
+//! draw comes from a per-edge stream and every event/charge carries a
+//! deterministic global key, **a sharded run is bit-for-bit identical to
+//! the single-threaded run at any shard count** — the full contract (and
+//! its proof sketch) lives in the internal `merge` module docs and in
+//! `docs/ARCHITECTURE.md`.
+//!
+//! Zero-lookahead networks (`ideal`, or `lognormal` latency whose support
+//! reaches 0) still run correctly but degenerate to one timestamp per
+//! window; for parallel speedups use a latency model with a positive
+//! floor (`fixed:MS`, `uniform:LO:HI`).
+//!
+//! The driver streams the same [`RunEvent`] vocabulary as the real
+//! [`Session`] engine, so observers written for training runs work
+//! unchanged at fleet scale:
+//!
+//! ```
+//! use ol4el::config::{Algo, RunConfig};
+//! use ol4el::net::FleetSim;
+//!
+//! let cfg = RunConfig {
+//!     algo: Algo::Ol4elAsync,
+//!     n_edges: 50,
+//!     hetero: 4.0,
+//!     budget: 400.0,
+//!     data_n: 3000, // ignored by the fleet; satisfies validate()
+//!     ..Default::default()
+//! };
+//! let report = FleetSim::new(cfg)?.shards(2).run()?;
+//! assert_eq!(report.n_edges, 50);
+//! assert!(report.updates > 0);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! [`Session`]: crate::coordinator::Session
+//! [`CostModel`]: crate::sim::cost::CostModel
+//! [`ChurnSpec`]: crate::net::ChurnSpec
+//! [`NetworkSpec::min_delay_ms`]: crate::net::NetworkSpec::min_delay_ms
+//! [`EventQueue`]: crate::sim::clock::EventQueue
+//! [`RunEvent`]: crate::coordinator::RunEvent
+
+mod merge;
+mod shard;
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::thread;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::observer::Observer;
+use crate::sim::cost::CostMode;
+use crate::util::rng::Rng;
+
+use merge::{run_async, run_sync, DriverSummary};
+use shard::{run_worker, Cmd, Out, Shard};
+
+/// Default serialized model size for fleet messages (bytes).
+pub const DEFAULT_MODEL_BYTES: f64 = 4096.0;
+
+/// Upper bound on worker shards (beyond this, barrier overhead dominates
+/// any realistic fleet).
+const MAX_SHARDS: usize = 64;
+
+/// Summary of one fleet-scale run.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    /// Edges at t=0.
+    pub n_edges: usize,
+    /// Churn joins that actually happened.
+    pub joined: usize,
+    /// Edges retired (budget, crash or departure) by the end.
+    pub retired: usize,
+    /// Global updates achieved within the budgets.
+    pub updates: u64,
+    /// Virtual wall-clock of the run (ms).
+    pub wall_ms: f64,
+    /// Mean per-edge resource consumed (ms).
+    pub mean_spent: f64,
+    /// Synthetic progress metric at the end (diminishing-returns curve).
+    pub final_progress: f64,
+    /// Messages resolved by the transport model (uploads, replies and
+    /// retransmits; joins' registrations are control-plane and uncounted).
+    pub messages_sent: u64,
+    /// Messages whose every attempt dropped.
+    pub messages_lost: u64,
+    /// Individual dropped attempts across all messages.
+    pub dropped_attempts: u64,
+    /// Events processed across all shard queues and the cloud queue
+    /// (async), or messages resolved (sync, which has no event queue).
+    pub events: u64,
+    /// High-water mark of any single shard's queue depth. Unlike the
+    /// protocol fields above, this is an execution diagnostic and varies
+    /// with the shard count.
+    pub peak_queue_depth: usize,
+    /// Worker shards the run actually used.
+    pub shards: usize,
+    /// Host seconds spent building the fleet (spec parsing, RNG streams,
+    /// thread spawn) — kept separate so throughput numbers are honest.
+    pub setup_seconds: f64,
+    /// Host seconds inside the event loop, teardown excluded (the number
+    /// speedups compare).
+    pub loop_seconds: f64,
+    /// Total host seconds (setup + event loop + worker teardown).
+    pub host_seconds: f64,
+}
+
+impl FleetReport {
+    /// Simulator throughput: events per host second of *event-loop* time
+    /// (setup excluded, so 1-shard vs N-shard ratios measure the loop).
+    pub fn events_per_sec(&self) -> f64 {
+        if self.loop_seconds > 0.0 {
+            self.events as f64 / self.loop_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The fleet-scale driver. Reuses [`RunConfig`] for everything it shares
+/// with training runs (fleet size, heterogeneity, budgets, cost model,
+/// bandit, network, churn, eval cadence, seed); `task`/`data_n` are
+/// ignored — no data is generated and no model is trained.
+pub struct FleetSim {
+    cfg: RunConfig,
+    model_bytes: f64,
+    observers: Vec<Box<dyn Observer>>,
+    shards: usize,
+    /// Shard count came from the default, not [`FleetSim::shards`]: the
+    /// runner may collapse it to 1 when the network has zero lookahead
+    /// (no parallelism to win, barrier overhead to lose).
+    auto_shards: bool,
+}
+
+impl FleetSim {
+    /// Validate and wrap a config for fleet simulation. The shard count
+    /// defaults to the host's available parallelism
+    /// ([`shards`](FleetSim::shards) overrides it); results are identical
+    /// at any shard count.
+    pub fn new(cfg: RunConfig) -> Result<FleetSim> {
+        cfg.validate()?;
+        if cfg.cost.mode == CostMode::Measured {
+            return Err(anyhow!(
+                "fleet simulation has no engine to measure; use cost mode fixed|variable"
+            ));
+        }
+        let default_shards = thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Ok(FleetSim {
+            cfg,
+            model_bytes: DEFAULT_MODEL_BYTES,
+            observers: Vec::new(),
+            shards: default_shards.clamp(1, MAX_SHARDS),
+            auto_shards: true,
+        })
+    }
+
+    /// The wrapped (validated) configuration.
+    pub fn cfg(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    /// Serialized model size driving transfer times (bytes).
+    pub fn model_bytes(mut self, bytes: f64) -> Self {
+        self.model_bytes = bytes.max(0.0);
+        self
+    }
+
+    /// Worker shards to partition the fleet over (clamped to `1..=64` and
+    /// to the fleet size at run time). Bit-for-bit identical results at
+    /// any value — this knob trades threads for wall-clock only.
+    pub fn shards(mut self, n: usize) -> Self {
+        self.shards = n.clamp(1, MAX_SHARDS);
+        self.auto_shards = false;
+        self
+    }
+
+    /// Register a streaming [`Observer`] for the run's
+    /// [`RunEvent`](crate::coordinator::RunEvent)s.
+    pub fn observe(mut self, observer: impl Observer + 'static) -> Self {
+        self.observers.push(Box::new(observer));
+        self
+    }
+
+    /// Run to completion with the protocol matching `cfg.algo`.
+    pub fn run(self) -> Result<FleetReport> {
+        let FleetSim {
+            cfg,
+            model_bytes,
+            mut observers,
+            shards,
+            auto_shards,
+        } = self;
+        let setup0 = std::time::Instant::now();
+        let sync = cfg.algo.is_sync();
+        let mut k = shards.min(cfg.n_edges).max(1);
+        if auto_shards && !sync && cfg.network.min_delay_ms(model_bytes) <= 0.0 {
+            // Zero lookahead (ideal / lognormal latency): windows degenerate
+            // to single timestamps, so extra shards only add barrier
+            // round-trips. Results are identical either way; don't pay for
+            // threads the physics can't use. An explicit `.shards(n)`
+            // overrides this (the equivalence tests rely on that).
+            k = 1;
+        }
+
+        let mut rng = Rng::new(cfg.seed);
+        let slowdowns = cfg
+            .hetero_profile
+            .slowdowns(cfg.n_edges, cfg.hetero, &mut rng);
+
+        let (out_tx, out_rx): (Sender<Out>, Receiver<Out>) = mpsc::channel();
+        let mut cmd_txs: Vec<Sender<Cmd>> = Vec::with_capacity(k);
+        let mut handles = Vec::with_capacity(k);
+        for s in 0..k {
+            let shard = Shard::new(s, k, cfg.clone(), model_bytes, &slowdowns);
+            let (tx, rx): (Sender<Cmd>, Receiver<Cmd>) = mpsc::channel();
+            let out = out_tx.clone();
+            handles.push(thread::spawn(move || run_worker(shard, rx, out)));
+            cmd_txs.push(tx);
+        }
+        drop(out_tx);
+        let setup_seconds = setup0.elapsed().as_secs_f64();
+
+        let loop0 = std::time::Instant::now();
+        let summary: DriverSummary = if sync {
+            run_sync(&cfg, &slowdowns, &cmd_txs, &out_rx, &mut observers)
+        } else {
+            run_async(&cfg, model_bytes, &cmd_txs, &out_rx, &mut observers)
+        };
+        // Stop the loop clock before teardown: Finish round-trips and
+        // thread joins scale with the shard count and must not bias the
+        // 1-shard vs N-shard throughput comparison.
+        let loop_seconds = loop0.elapsed().as_secs_f64();
+
+        // Teardown: gather per-shard counters, then join the workers.
+        for tx in &cmd_txs {
+            tx.send(Cmd::Finish).expect("fleet worker hung up");
+        }
+        let mut shard_retired = 0usize;
+        let mut sent = 0u64;
+        let mut lost = 0u64;
+        let mut dropped = 0u64;
+        let mut peak_queue = 0usize;
+        for _ in 0..k {
+            match out_rx.recv().expect("fleet worker hung up") {
+                Out::Finish(f) => {
+                    shard_retired += f.retired;
+                    sent += f.sent;
+                    lost += f.lost;
+                    dropped += f.dropped_attempts;
+                    peak_queue = peak_queue.max(f.peak_queue);
+                }
+                _ => unreachable!("Finish answers with Finish"),
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+
+        let retired = summary.sync_retired.unwrap_or(shard_retired);
+        let events = if sync { sent } else { summary.events };
+        Ok(FleetReport {
+            n_edges: cfg.n_edges,
+            joined: summary.joined,
+            retired,
+            updates: summary.updates,
+            wall_ms: summary.wall_ms,
+            mean_spent: summary.total_spent / summary.edge_count as f64,
+            final_progress: summary.final_progress,
+            messages_sent: sent,
+            messages_lost: lost,
+            dropped_attempts: dropped,
+            events,
+            peak_queue_depth: peak_queue,
+            shards: k,
+            setup_seconds,
+            loop_seconds,
+            host_seconds: setup0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Algo;
+    use crate::coordinator::observer::{from_fn, RunEvent};
+    use crate::net::churn::ChurnSpec;
+    use crate::net::model::NetworkSpec;
+    use std::cell::Cell;
+    use std::rc::Rc;
+
+    fn fleet_cfg(algo: Algo, n: usize) -> RunConfig {
+        RunConfig {
+            algo,
+            n_edges: n,
+            hetero: 4.0,
+            budget: 1500.0,
+            data_n: n.max(3000), // ignored by the fleet; satisfies validate
+            eval_every: 50,
+            seed: 9,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn async_fleet_runs_at_scale() {
+        let r = FleetSim::new(fleet_cfg(Algo::Ol4elAsync, 1000))
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(r.n_edges, 1000);
+        assert_eq!(r.retired, 1000, "every ledger should exhaust");
+        assert!(r.updates > 1000, "only {} updates", r.updates);
+        assert!(r.wall_ms > 0.0);
+        assert!(r.events > 0);
+        assert!(r.shards >= 1);
+        assert!(r.mean_spent <= 1500.0 + 500.0);
+        assert!(r.loop_seconds > 0.0 && r.host_seconds >= r.loop_seconds);
+    }
+
+    #[test]
+    fn sync_fleet_runs_at_scale() {
+        let r = FleetSim::new(fleet_cfg(Algo::Ol4elSync, 500))
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(r.updates > 0);
+        assert!(r.retired > 0, "the cohort should eventually stop");
+        assert_eq!(r.messages_sent, r.updates * 2 * 500, "2 legs x N per round");
+    }
+
+    #[test]
+    fn network_and_churn_shape_the_fleet() {
+        let mut cfg = fleet_cfg(Algo::Ol4elAsync, 300);
+        cfg.network = NetworkSpec::parse("lognormal:5:0.5,drop:0.05").unwrap();
+        // Fleet-level join rate 5/s over a ~1.5s run: joins are certain.
+        cfg.churn = ChurnSpec::parse("poisson:0.2,join:5").unwrap();
+        let joined = Rc::new(Cell::new(0usize));
+        let retired = Rc::new(Cell::new(0usize));
+        let dropped = Rc::new(Cell::new(0usize));
+        let (j2, r2, d2) = (joined.clone(), retired.clone(), dropped.clone());
+        let r = FleetSim::new(cfg)
+            .unwrap()
+            .observe(from_fn(move |ev: &RunEvent| match ev {
+                RunEvent::EdgeJoined { .. } => j2.set(j2.get() + 1),
+                RunEvent::EdgeRetired { .. } => r2.set(r2.get() + 1),
+                RunEvent::MessageDropped { .. } => d2.set(d2.get() + 1),
+                _ => {}
+            }))
+            .run()
+            .unwrap();
+        assert!(joined.get() > 0, "no joins");
+        assert!(retired.get() > 0, "no retirements");
+        assert!(dropped.get() > 0, "no drops at drop:0.05");
+        // No restarts configured, so every EdgeJoined is a fresh join.
+        assert_eq!(r.joined, joined.get());
+        assert!(r.messages_lost > 0 || r.dropped_attempts > 0);
+    }
+
+    #[test]
+    fn fleet_is_deterministic() {
+        let mut cfg = fleet_cfg(Algo::Ol4elAsync, 200);
+        cfg.network = NetworkSpec::parse("uniform:1:9,drop:0.02").unwrap();
+        cfg.churn = ChurnSpec::parse("poisson:0.3,restart:200").unwrap();
+        let a = FleetSim::new(cfg.clone()).unwrap().run().unwrap();
+        let b = FleetSim::new(cfg).unwrap().run().unwrap();
+        assert_eq!(a.updates, b.updates);
+        assert_eq!(a.wall_ms, b.wall_ms);
+        assert_eq!(a.messages_sent, b.messages_sent);
+        assert_eq!(a.messages_lost, b.messages_lost);
+    }
+
+    #[test]
+    fn measured_cost_mode_is_rejected() {
+        let mut cfg = fleet_cfg(Algo::Ol4elAsync, 10);
+        cfg.cost.mode = CostMode::Measured;
+        assert!(FleetSim::new(cfg).is_err());
+    }
+
+    #[test]
+    fn trace_points_follow_eval_cadence() {
+        let mut cfg = fleet_cfg(Algo::Ol4elAsync, 100);
+        cfg.eval_every = 10;
+        let points = Rc::new(Cell::new(0u64));
+        let p2 = points.clone();
+        let r = FleetSim::new(cfg)
+            .unwrap()
+            .observe(from_fn(move |ev: &RunEvent| {
+                if matches!(ev, RunEvent::GlobalUpdate { .. }) {
+                    p2.set(p2.get() + 1);
+                }
+            }))
+            .run()
+            .unwrap();
+        // Cadence points plus the closing point.
+        assert_eq!(points.get(), r.updates / 10 + 1);
+    }
+
+    #[test]
+    fn shard_count_does_not_change_the_report() {
+        // The cheap in-module equivalence check; the full RunEvent-stream
+        // equivalence matrix lives in tests/sharding.rs.
+        let mut cfg = fleet_cfg(Algo::Ol4elAsync, 120);
+        cfg.network = NetworkSpec::parse("uniform:2:10,drop:0.02").unwrap();
+        cfg.churn = ChurnSpec::parse("poisson:0.2,join:2,restart:300").unwrap();
+        let one = FleetSim::new(cfg.clone()).unwrap().shards(1).run().unwrap();
+        let four = FleetSim::new(cfg).unwrap().shards(4).run().unwrap();
+        assert_eq!(one.updates, four.updates);
+        assert_eq!(one.wall_ms, four.wall_ms);
+        assert_eq!(one.mean_spent, four.mean_spent);
+        assert_eq!(one.retired, four.retired);
+        assert_eq!(one.joined, four.joined);
+        assert_eq!(one.messages_sent, four.messages_sent);
+        assert_eq!(one.messages_lost, four.messages_lost);
+        assert_eq!(one.dropped_attempts, four.dropped_attempts);
+        assert_eq!(one.events, four.events);
+        assert_eq!(one.shards, 1);
+        assert_eq!(four.shards, 4);
+    }
+}

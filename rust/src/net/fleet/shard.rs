@@ -1,0 +1,991 @@
+//! The worker side of the sharded fleet simulator.
+//!
+//! A [`Shard`] owns a disjoint subset of the fleet's edges (round-robin by
+//! edge id), one [`EventQueue`] for their virtual-time events, and — for
+//! the asynchronous protocol — one budgeted bandit per owned edge. A
+//! worker thread drives the shard through [`Cmd`]s from the coordinator
+//! loop and answers every command with exactly one [`Out`].
+//!
+//! ## Placement independence
+//!
+//! Nothing a shard computes depends on *which* shard it is or how many
+//! shards exist. Every random draw comes from a **per-edge stream**
+//! derived from `(run seed, salt, edge id)`:
+//!
+//! * `rng` — fail-stop draws, bandit arm selection, compute/comm cost
+//!   samples;
+//! * `churn` — straggle draws, leave gaps, the sync hazard;
+//! * `uplink` / `downlink` — the network fate of the edge's uploads and
+//!   of the cloud's replies.
+//!
+//! Events and charge records are stamped with a global
+//! [`Key`](super::merge::Key) `(time, 1 + edge, per-edge seq)` minted in
+//! the edge's own causal order, so the coordinator can merge the streams
+//! of any shard count into the identical total order.
+//!
+//! ## Pre-resolved replies
+//!
+//! When an upload resolves as delivered, the shard immediately resolves
+//! the *entire* reply chain on the edge's downlink stream (the cloud
+//! responds at exactly the upload's arrival instant, so every retransmit
+//! time is already determined). Timing and retries of the reply are
+//! therefore known shard-side; the cloud only fills in the payload —
+//! global version and bandit feedback — at the window barrier. This keeps
+//! all RNG work off the sequential coordinator path.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender};
+
+use crate::bandit::{self, BudgetedBandit};
+use crate::config::{BanditKind, RunConfig};
+use crate::coordinator::observer::{LocalReport, RunEvent};
+use crate::net::churn::ChurnSpec;
+use crate::net::transport::resolve_fate;
+use crate::sim::clock::EventQueue;
+use crate::sim::cost::CostMode;
+use crate::util::rng::Rng;
+
+use super::merge::Key;
+
+/// Seed salts for the independent per-edge (and cloud) RNG streams.
+/// Distinct salts keep the streams from colliding for a given edge id;
+/// the per-id multiply spreads ids across the seed space.
+const SALT_EDGE: u64 = 0x6564_6765_5f72_6e67; // "edge_rng"
+const SALT_CHURN: u64 = 0x6368_7572_6e5f_6564; // "churn_ed"
+const SALT_UPLINK: u64 = 0x7570_5f6c_696e_6b00; // "up_link"
+const SALT_DOWNLINK: u64 = 0x646f_776e_5f6c_6e6b; // "down_lnk"
+/// Salt of the cloud's join stream (slowdown draws, registration fates,
+/// join alarm gaps) — lives here with its siblings.
+pub(crate) const SALT_CLOUD_JOIN: u64 = 0x6a6f_696e_5f72_6e67; // "join_rng"
+/// Salt of the synchronous driver's cloud stream (shared-bandit selection
+/// and the per-round comm draw).
+pub(crate) const SALT_SYNC_CLOUD: u64 = 0x7379_6e63_5f63_6c64; // "sync_cld"
+
+/// Derive the deterministic RNG stream `(seed, salt, id)` — identical for
+/// a given edge no matter which shard (or how many shards) hosts it.
+pub(crate) fn stream(seed: u64, salt: u64, id: u64) -> Rng {
+    Rng::new(seed ^ salt ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(31))
+}
+
+/// The cloud's reply to one merged upload, routed to the owning shard at
+/// a window barrier. Timing (`arrive_ms`, waits, retries) was pre-resolved
+/// by the shard at upload time; the cloud contributes the payload.
+#[derive(Clone, Debug)]
+pub(crate) struct DownMsg {
+    /// Destination edge (global id).
+    pub edge: usize,
+    /// Pre-resolved arrival instant of the (eventually successful) reply.
+    pub arrive_ms: f64,
+    /// Global version after the merge (the edge's new base version).
+    pub version: u64,
+    /// Bandit feedback from the merge: the pulled interval ...
+    pub fb_tau: usize,
+    /// ... the learning utility the merge observed ...
+    pub fb_utility: f64,
+    /// ... and the full observed cost (round cost + upload wait).
+    pub fb_cost: f64,
+    /// Upload-leg wait: already in the cloud's running spend, charge the
+    /// edge's own ledger only.
+    pub carried_ms: f64,
+    /// Reply-leg wait (including lost-retransmit timeouts): charge the
+    /// ledger AND emit a charge record for the cloud's running spend.
+    pub delay_ms: f64,
+    /// Drops the successful reply survived (emitted on arrival).
+    pub dropped_attempts: u32,
+}
+
+/// A churn joiner's registration, routed to the owning shard.
+#[derive(Clone, Debug)]
+pub(crate) struct SpawnMsg {
+    /// The fresh edge's global id (cloud-assigned, contiguous).
+    pub edge: usize,
+    /// Heterogeneity slowdown drawn by the cloud's join stream.
+    pub slowdown: f64,
+    /// Global version at join time (the joiner downloads on arrival).
+    pub base_version: u64,
+    /// When the registration gets through and the edge starts working.
+    pub arrive_ms: f64,
+}
+
+/// Cross-thread traffic injected into a shard at a window barrier.
+#[derive(Clone, Debug)]
+pub(crate) enum Inject {
+    /// Cloud reply to a merged upload.
+    Down(DownMsg),
+    /// Churn joiner registration.
+    Spawn(SpawnMsg),
+}
+
+impl Inject {
+    /// Virtual arrival instant (decides which window delivers it).
+    pub fn arrive_ms(&self) -> f64 {
+        match self {
+            Inject::Down(d) => d.arrive_ms,
+            Inject::Spawn(s) => s.arrive_ms,
+        }
+    }
+
+    /// Destination edge (global id) — routes to `edge % shards`.
+    pub fn edge(&self) -> usize {
+        match self {
+            Inject::Down(d) => d.edge,
+            Inject::Spawn(s) => s.edge,
+        }
+    }
+}
+
+/// The pre-resolved fate of the cloud's reply to one upload.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct DownPlan {
+    /// Arrival instant of the successful reply attempt.
+    pub arrive_ms: f64,
+    /// Total reply wait (lost-retransmit timeouts + final delivery delay).
+    pub charge_ms: f64,
+    /// Drops the successful attempt survived.
+    pub dropped_attempts: u32,
+}
+
+/// One delivered upload, handed to the cloud at a window barrier.
+#[derive(Clone, Debug)]
+pub(crate) struct UpMsg {
+    /// Arrival instant at the cloud.
+    pub arrive_ms: f64,
+    /// Per-edge key sequence minted at send — orders same-instant arrivals
+    /// deterministically in the cloud's queue.
+    pub seq: u64,
+    /// The round report the message carries.
+    pub report: LocalReport,
+    /// Upload wait (latency + transfer + any survived-drop timeouts).
+    pub delay_ms: f64,
+    /// Drops the upload survived (the cloud notes them on arrival).
+    pub dropped_attempts: u32,
+    /// Pre-resolved fate of the cloud's reply.
+    pub down: DownPlan,
+}
+
+/// One ledger charge, key-stamped so the cloud can replay all shards'
+/// charges in the exact global order when it computes `mean_spent`.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct ChargeRec {
+    /// Global order stamp (unique by construction).
+    pub key: Key,
+    /// Milliseconds charged.
+    pub amount: f64,
+}
+
+/// A command from the coordinator loop to one worker.
+pub(crate) enum Cmd {
+    /// Perform the t=0 launches and churn alarms (async protocol).
+    Start,
+    /// Advance through one conservative window: deliver `inbox`, then
+    /// drain queue events with time `< bound` (`<= bound` when
+    /// `inclusive`, the zero-lookahead degenerate window).
+    Window {
+        /// Window upper bound in virtual ms.
+        bound: f64,
+        /// Zero-lookahead mode: the window is the single instant `bound`.
+        inclusive: bool,
+        /// Cross-thread traffic that arrives inside this window.
+        inbox: Vec<Inject>,
+    },
+    /// Synchronous protocol: run one barrier round's local work.
+    SyncRound {
+        /// Round start instant (resolves partition windows).
+        wall_ms: f64,
+        /// The shared bandit's chosen interval.
+        tau: usize,
+        /// Global version the round starts from.
+        version: u64,
+    },
+    /// Synchronous protocol: draw the per-round departure hazard.
+    SyncHazard {
+        /// Per-edge departure probability this round.
+        p_leave: f64,
+    },
+    /// Tear down: answer with final counters and exit the worker loop.
+    Finish,
+}
+
+/// A shard's answer to [`Cmd::Start`] / [`Cmd::Window`].
+pub(crate) struct WindowOut {
+    /// Which shard answered.
+    pub shard: usize,
+    /// Uploads that arrive at the cloud (any time ≥ the window bound).
+    pub uploads: Vec<UpMsg>,
+    /// Ledger charges made this window, key-stamped.
+    pub charges: Vec<ChargeRec>,
+    /// Run events emitted this window, key-stamped for the global merge.
+    pub events: Vec<(Key, RunEvent)>,
+    /// Earliest still-queued event (exact: the queue only changes through
+    /// this shard's own processing and barrier injections).
+    pub next_time: f64,
+    /// Whether the queue still holds anything (`next_time` is meaningful).
+    pub has_next: bool,
+    /// Events popped this window.
+    pub processed: u64,
+    /// Clock after the last pop (for the final wall-clock reduction).
+    pub last_time: f64,
+}
+
+/// A shard's answer to [`Cmd::SyncRound`]: partial reductions of one
+/// barrier round over its owned edges.
+pub(crate) struct SyncRoundOut {
+    /// Slowest (straggle-scaled) local compute among owned edges.
+    pub barrier_comp: f64,
+    /// Slowest upload resolution among owned edges.
+    pub up_wait: f64,
+    /// Slowest reply resolution among owned edges.
+    pub dl_wait: f64,
+    /// Per-edge round reports (cost = un-straggled compute).
+    pub reports: Vec<LocalReport>,
+    /// Upload drop observations `(edge, attempts, lost)` in edge order.
+    pub up_drops: Vec<(usize, u32, bool)>,
+    /// Reply drop observations `(edge, attempts, lost)` in edge order.
+    pub dl_drops: Vec<(usize, u32, bool)>,
+}
+
+/// A shard's answer to [`Cmd::SyncHazard`].
+pub(crate) struct HazardOut {
+    /// Owned edges that departed this round (global ids).
+    pub departed: Vec<usize>,
+}
+
+/// A shard's answer to [`Cmd::Finish`].
+pub(crate) struct FinishOut {
+    /// Owned edges whose `retired` flag is set.
+    pub retired: usize,
+    /// Messages this shard resolved (uploads + pre-resolved replies).
+    pub sent: u64,
+    /// ... of which lost outright.
+    pub lost: u64,
+    /// Individual dropped attempts across all messages.
+    pub dropped_attempts: u64,
+    /// High-water mark of this shard's event queue.
+    pub peak_queue: usize,
+}
+
+/// Everything a worker can answer with.
+pub(crate) enum Out {
+    /// Answer to `Start` / `Window`.
+    Window(WindowOut),
+    /// Answer to `SyncRound`.
+    Sync(SyncRoundOut),
+    /// Answer to `SyncHazard`.
+    Hazard(HazardOut),
+    /// Answer to `Finish`.
+    Finish(FinishOut),
+}
+
+/// A queue event on one shard (edge ids are global).
+#[derive(Clone, Debug)]
+enum Ev {
+    /// The edge finished its τ local iterations of launch generation
+    /// `round` (stale generations are discarded — crash semantics).
+    Compute { edge: usize, round: u64 },
+    /// Churn departure alarm.
+    Leave { edge: usize },
+    /// Crash-restart alarm.
+    Restart { edge: usize },
+    /// A lost upload's final timeout lapsed: note the loss, charge the
+    /// wasted wait, start the round over.
+    Relaunch { edge: usize, waited: f64, attempts: u32 },
+    /// A lost cloud reply's final timeout lapsed (pre-resolved): note it.
+    DropNote { edge: usize, attempts: u32 },
+    /// The cloud's reply arrives.
+    Deliver(DownMsg),
+    /// A churn joiner's registration arrives: create the edge, launch it.
+    Spawn(SpawnMsg),
+}
+
+/// One virtual edge: ledger + protocol bookkeeping + its RNG streams.
+struct FEdge {
+    /// Global edge id.
+    id: usize,
+    slowdown: f64,
+    spent: f64,
+    retired: bool,
+    /// Churn-departed (crashed); in-flight work is void until a restart.
+    departed: bool,
+    base_version: u64,
+    /// (launch generation, τ, charged cost) of the round in flight.
+    inflight: Option<(u64, usize, f64)>,
+    /// Launch generation counter (invalidates stale completions).
+    round_seq: u64,
+    /// Per-edge key sequence for events, charges and upload stamps.
+    key_seq: u64,
+    /// Training-side draws: fail-stop, arm selection, cost samples.
+    rng: Rng,
+    /// Churn draws: straggle, leave gaps, sync hazard.
+    churn: Rng,
+    /// Upload fates.
+    uplink: Rng,
+    /// Reply fates (pre-resolved at upload time).
+    downlink: Rng,
+}
+
+impl FEdge {
+    fn new(seed: u64, id: usize, slowdown: f64) -> FEdge {
+        FEdge {
+            id,
+            slowdown,
+            spent: 0.0,
+            retired: false,
+            departed: false,
+            base_version: 0,
+            inflight: None,
+            round_seq: 0,
+            key_seq: 0,
+            rng: stream(seed, SALT_EDGE, id as u64),
+            churn: stream(seed, SALT_CHURN, id as u64),
+            uplink: stream(seed, SALT_UPLINK, id as u64),
+            downlink: stream(seed, SALT_DOWNLINK, id as u64),
+        }
+    }
+}
+
+/// One worker's slice of the fleet.
+pub(crate) struct Shard {
+    id: usize,
+    k: usize,
+    cfg: RunConfig,
+    kind: BanditKind,
+    model_bytes: f64,
+    /// Owned edges, in arrival order; `slots` maps global id → index.
+    edges: Vec<FEdge>,
+    /// Async protocol: one budgeted bandit per owned edge (same index).
+    bandits: Vec<Box<dyn BudgetedBandit + Send>>,
+    slots: HashMap<usize, usize>,
+    queue: EventQueue<Ev>,
+    out_uploads: Vec<UpMsg>,
+    out_charges: Vec<ChargeRec>,
+    out_events: Vec<(Key, RunEvent)>,
+    processed: u64,
+    sent: u64,
+    lost: u64,
+    dropped_attempts: u64,
+}
+
+impl Shard {
+    /// Build shard `id` of `k`, owning every initial edge with
+    /// `edge % k == id` (ascending id order).
+    pub fn new(
+        id: usize,
+        k: usize,
+        cfg: RunConfig,
+        model_bytes: f64,
+        slowdowns: &[f64],
+    ) -> Shard {
+        let kind = cfg.resolved_bandit();
+        let is_async = !cfg.algo.is_sync();
+        let mut edges = Vec::new();
+        let mut bandits: Vec<Box<dyn BudgetedBandit + Send>> = Vec::new();
+        let mut slots = HashMap::new();
+        let mut gid = id;
+        while gid < cfg.n_edges {
+            slots.insert(gid, edges.len());
+            edges.push(FEdge::new(cfg.seed, gid, slowdowns[gid]));
+            if is_async {
+                bandits.push(bandit::build(
+                    kind,
+                    cfg.cost.arm_costs(cfg.tau_max, slowdowns[gid]),
+                ));
+            }
+            gid += k;
+        }
+        Shard {
+            id,
+            k,
+            cfg,
+            kind,
+            model_bytes,
+            edges,
+            bandits,
+            slots,
+            queue: EventQueue::new(),
+            out_uploads: Vec::new(),
+            out_charges: Vec::new(),
+            out_events: Vec::new(),
+            processed: 0,
+            sent: 0,
+            lost: 0,
+            dropped_attempts: 0,
+        }
+    }
+
+    fn slot(&self, gid: usize) -> usize {
+        *self.slots.get(&gid).expect("event for unknown edge")
+    }
+
+    /// The edge's link bandwidth: slower hardware sits behind a
+    /// proportionally thinner pipe (matches the compute heterogeneity).
+    fn link_bw(&self, l: usize) -> f64 {
+        let bw = self.cfg.network.bandwidth_mbps;
+        if bw.is_finite() {
+            bw / self.edges[l].slowdown
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Mint the next key-stamp for edge slot `l` at `time`.
+    fn next_key(&mut self, l: usize, time: f64) -> Key {
+        let e = &mut self.edges[l];
+        let key = Key {
+            time,
+            src: 1 + e.id as u64,
+            seq: e.key_seq,
+        };
+        e.key_seq += 1;
+        key
+    }
+
+    fn emit(&mut self, l: usize, ev: RunEvent) {
+        let key = self.next_key(l, self.queue.now());
+        self.out_events.push((key, ev));
+    }
+
+    fn emit_retired(&mut self, l: usize) {
+        let edge = self.edges[l].id;
+        let spent = self.edges[l].spent;
+        let wall_ms = self.queue.now();
+        self.emit(
+            l,
+            RunEvent::EdgeRetired {
+                edge,
+                wall_ms,
+                spent,
+            },
+        );
+    }
+
+    /// Charge the edge's ledger AND record it for the cloud's running
+    /// spend replay.
+    fn charge(&mut self, l: usize, amount: f64) {
+        let key = self.next_key(l, self.queue.now());
+        self.out_charges.push(ChargeRec { key, amount });
+        self.charge_ledger_only(l, amount);
+    }
+
+    /// Charge only the edge's ledger (the cloud already counted it).
+    fn charge_ledger_only(&mut self, l: usize, amount: f64) {
+        let e = &mut self.edges[l];
+        e.spent += amount;
+        if e.spent >= self.cfg.budget {
+            e.retired = true;
+        }
+    }
+
+    /// The virtual compute cost of τ iterations on edge slot `l`.
+    fn round_cost(&mut self, l: usize, tau: usize) -> f64 {
+        let cost = self.cfg.cost;
+        let e = &mut self.edges[l];
+        match cost.mode {
+            CostMode::Fixed => tau as f64 * cost.nominal_comp(e.slowdown),
+            _ => (0..tau)
+                .map(|_| cost.sample_comp(e.slowdown, 0.0, &mut e.rng))
+                .sum::<f64>(),
+        }
+    }
+
+    // -- asynchronous protocol ---------------------------------------------
+
+    /// Select, price and schedule one virtual round on edge slot `l`.
+    fn launch(&mut self, l: usize) {
+        let now = self.queue.now();
+        if self.cfg.failure_rate > 0.0 && self.edges[l].rng.f64() < self.cfg.failure_rate {
+            self.edges[l].departed = true;
+            self.edges[l].retired = true;
+            self.emit_retired(l);
+            return;
+        }
+        let remaining = (self.cfg.budget - self.edges[l].spent).max(0.0);
+        let selected = {
+            let e = &mut self.edges[l];
+            self.bandits[l].select(remaining, &mut e.rng)
+        };
+        let Some(arm) = selected else {
+            if !self.edges[l].retired {
+                self.edges[l].retired = true;
+            }
+            self.emit_retired(l);
+            return;
+        };
+        let tau = arm + 1;
+        let gid = self.edges[l].id;
+        self.emit(
+            l,
+            RunEvent::RoundStart {
+                edge: Some(gid),
+                tau,
+                wall_ms: now,
+            },
+        );
+        let comp = self.round_cost(l, tau);
+        let cost_model = self.cfg.cost;
+        let comm = cost_model.sample_comm(&mut self.edges[l].rng);
+        let total = comp + comm;
+        self.charge(l, total);
+        let straggle_p = self.cfg.churn.straggle_p;
+        let straggle_factor = self.cfg.churn.straggle_factor;
+        let round = {
+            let e = &mut self.edges[l];
+            e.round_seq += 1;
+            e.inflight = Some((e.round_seq, tau, total));
+            e.round_seq
+        };
+        let mut delay = total;
+        if straggle_p > 0.0 && self.edges[l].churn.f64() < straggle_p {
+            delay *= straggle_factor;
+        }
+        self.queue.push(now + delay, Ev::Compute { edge: gid, round });
+    }
+
+    fn schedule_leave(&mut self, l: usize) {
+        let rate = self.cfg.churn.leave_rate;
+        let gid = self.edges[l].id;
+        let gap = ChurnSpec::exp_gap_ms(rate, &mut self.edges[l].churn);
+        if let Some(gap) = gap {
+            let at = self.queue.now() + gap;
+            self.queue.push(at, Ev::Leave { edge: gid });
+        }
+    }
+
+    /// t=0: launch every owned edge, then arm its departure alarm.
+    fn start(&mut self) {
+        for l in 0..self.edges.len() {
+            self.launch(l);
+        }
+        for l in 0..self.edges.len() {
+            self.schedule_leave(l);
+        }
+    }
+
+    /// The edge finished τ iterations: ship the report upward.
+    fn on_compute(&mut self, l: usize, round: u64) {
+        let stale = self.edges[l].inflight.map(|(g, _, _)| g) != Some(round);
+        if stale || self.edges[l].departed {
+            return;
+        }
+        let (_, tau, cost) = self.edges[l].inflight.take().expect("checked inflight");
+        let report = LocalReport {
+            edge: self.edges[l].id,
+            tau,
+            cost,
+            train_signal: 0.0,
+            base_version: self.edges[l].base_version,
+        };
+        self.send_upload(l, report);
+    }
+
+    /// Resolve an upload's fate; on delivery, also pre-resolve the reply.
+    fn send_upload(&mut self, l: usize, report: LocalReport) {
+        let now = self.queue.now();
+        let bytes = self.model_bytes;
+        let bw = self.link_bw(l);
+        self.sent += 1;
+        let (delay, dropped, is_lost) = {
+            let e = &mut self.edges[l];
+            resolve_fate(&self.cfg.network, bw, now, bytes, &mut e.uplink)
+        };
+        self.dropped_attempts += u64::from(dropped);
+        if is_lost {
+            self.lost += 1;
+            let gid = self.edges[l].id;
+            // The sender observes the final timeout, writes the round off
+            // and starts over.
+            self.queue.push(
+                now + delay,
+                Ev::Relaunch {
+                    edge: gid,
+                    waited: delay,
+                    attempts: dropped,
+                },
+            );
+            return;
+        }
+        let arrive_ms = now + delay;
+        let down = self.plan_download(l, arrive_ms);
+        let seq = {
+            let e = &mut self.edges[l];
+            let s = e.key_seq;
+            e.key_seq += 1;
+            s
+        };
+        self.out_uploads.push(UpMsg {
+            arrive_ms,
+            seq,
+            report,
+            delay_ms: delay,
+            dropped_attempts: dropped,
+            down,
+        });
+    }
+
+    /// Pre-resolve the cloud's reply chain on the edge's downlink stream:
+    /// the cloud answers at exactly `send_ms`, lost attempts retransmit
+    /// when their final timeout lapses (noted as local drop events), and
+    /// the loop ends with the delivered attempt.
+    fn plan_download(&mut self, l: usize, send_ms: f64) -> DownPlan {
+        let bytes = self.model_bytes;
+        let bw = self.link_bw(l);
+        let gid = self.edges[l].id;
+        let mut at = send_ms;
+        let mut charge = 0.0;
+        loop {
+            self.sent += 1;
+            let (delay, dropped, is_lost) = {
+                let e = &mut self.edges[l];
+                resolve_fate(&self.cfg.network, bw, at, bytes, &mut e.downlink)
+            };
+            self.dropped_attempts += u64::from(dropped);
+            charge += delay;
+            at += delay;
+            if is_lost {
+                self.lost += 1;
+                self.queue.push(
+                    at,
+                    Ev::DropNote {
+                        edge: gid,
+                        attempts: dropped,
+                    },
+                );
+                continue;
+            }
+            return DownPlan {
+                arrive_ms: at,
+                charge_ms: charge,
+                dropped_attempts: dropped,
+            };
+        }
+    }
+
+    /// The cloud's reply arrives: apply feedback, charge the waits, pull
+    /// the fresh model and start the next round.
+    fn on_deliver(&mut self, m: DownMsg) {
+        let l = self.slot(m.edge);
+        // Feedback computed at the merge rides the reply; apply it before
+        // the next selection can consult the arm stats.
+        if m.fb_tau >= 1 {
+            self.bandits[l].update(m.fb_tau - 1, m.fb_utility, m.fb_cost);
+        }
+        if self.edges[l].departed {
+            return; // crashed while the reply flew: nothing arrives
+        }
+        if m.dropped_attempts > 0 {
+            let wall_ms = self.queue.now();
+            self.emit(
+                l,
+                RunEvent::MessageDropped {
+                    edge: m.edge,
+                    wall_ms,
+                    attempts: m.dropped_attempts,
+                    lost: false,
+                },
+            );
+        }
+        if m.delay_ms > 0.0 {
+            self.charge(l, m.delay_ms);
+        }
+        if m.carried_ms > 0.0 {
+            self.charge_ledger_only(l, m.carried_ms);
+        }
+        if self.edges[l].inflight.is_some() {
+            // Stale reply outliving a crash-restart: the edge is already
+            // mid-round — relaunching would void the in-flight generation.
+            return;
+        }
+        let e = &mut self.edges[l];
+        e.base_version = m.version.max(e.base_version);
+        self.launch(l);
+    }
+
+    /// A lost upload's final timeout lapsed.
+    fn on_relaunch(&mut self, l: usize, waited: f64, attempts: u32) {
+        let gid = self.edges[l].id;
+        let wall_ms = self.queue.now();
+        self.emit(
+            l,
+            RunEvent::MessageDropped {
+                edge: gid,
+                wall_ms,
+                attempts,
+                lost: true,
+            },
+        );
+        if waited > 0.0 {
+            self.charge(l, waited);
+        }
+        if !self.edges[l].departed {
+            self.launch(l); // wasted round; start over
+        }
+    }
+
+    /// A lost reply's final timeout lapsed (retransmit already planned).
+    fn on_drop_note(&mut self, l: usize, attempts: u32) {
+        let gid = self.edges[l].id;
+        let wall_ms = self.queue.now();
+        self.emit(
+            l,
+            RunEvent::MessageDropped {
+                edge: gid,
+                wall_ms,
+                attempts,
+                lost: true,
+            },
+        );
+    }
+
+    fn on_leave(&mut self, l: usize) {
+        if self.edges[l].departed || self.edges[l].retired {
+            return;
+        }
+        {
+            let e = &mut self.edges[l];
+            e.departed = true;
+            e.retired = true;
+            e.inflight = None;
+        }
+        self.emit_retired(l);
+        let restart = self.cfg.churn.restart_ms;
+        if restart > 0.0 {
+            let gid = self.edges[l].id;
+            let at = self.queue.now() + restart;
+            self.queue.push(at, Ev::Restart { edge: gid });
+        }
+    }
+
+    fn on_restart(&mut self, l: usize) {
+        if !self.edges[l].departed {
+            return;
+        }
+        self.edges[l].departed = false;
+        if self.cfg.budget - self.edges[l].spent > 0.0 {
+            self.edges[l].retired = false;
+            let gid = self.edges[l].id;
+            let wall_ms = self.queue.now();
+            self.emit(
+                l,
+                RunEvent::EdgeJoined {
+                    edge: gid,
+                    wall_ms,
+                },
+            );
+            self.launch(l);
+            self.schedule_leave(l);
+        }
+    }
+
+    /// A churn joiner's registration arrived: create the edge (fresh
+    /// ledger, fresh bandit, streams derived from its global id so the
+    /// result is shard-count independent) and put it to work.
+    fn on_spawn(&mut self, m: SpawnMsg) {
+        debug_assert_eq!(m.edge % self.k, self.id, "spawn routed to wrong shard");
+        let l = self.edges.len();
+        self.slots.insert(m.edge, l);
+        let mut e = FEdge::new(self.cfg.seed, m.edge, m.slowdown);
+        e.base_version = m.base_version;
+        self.edges.push(e);
+        let costs = self.cfg.cost.arm_costs(self.cfg.tau_max, m.slowdown);
+        self.bandits.push(bandit::build(self.kind, costs));
+        self.launch(l);
+        self.schedule_leave(l);
+    }
+
+    /// Deliver barrier traffic into the local queue.
+    fn inject(&mut self, inbox: Vec<Inject>) {
+        for m in inbox {
+            let at = m.arrive_ms();
+            match m {
+                Inject::Down(d) => self.queue.push(at, Ev::Deliver(d)),
+                Inject::Spawn(s) => self.queue.push(at, Ev::Spawn(s)),
+            }
+        }
+    }
+
+    /// Drain every queue event inside the window and hand back the
+    /// window's cross-thread traffic, charges and events.
+    fn process_window(&mut self, bound: f64, inclusive: bool) -> WindowOut {
+        loop {
+            let ev = if inclusive {
+                self.queue.pop_through(bound)
+            } else {
+                self.queue.pop_before(bound)
+            };
+            let Some(ev) = ev else { break };
+            self.processed += 1;
+            match ev.payload {
+                Ev::Compute { edge, round } => {
+                    let l = self.slot(edge);
+                    self.on_compute(l, round);
+                }
+                Ev::Leave { edge } => {
+                    let l = self.slot(edge);
+                    self.on_leave(l);
+                }
+                Ev::Restart { edge } => {
+                    let l = self.slot(edge);
+                    self.on_restart(l);
+                }
+                Ev::Relaunch {
+                    edge,
+                    waited,
+                    attempts,
+                } => {
+                    let l = self.slot(edge);
+                    self.on_relaunch(l, waited, attempts);
+                }
+                Ev::DropNote { edge, attempts } => {
+                    let l = self.slot(edge);
+                    self.on_drop_note(l, attempts);
+                }
+                Ev::Deliver(d) => self.on_deliver(d),
+                Ev::Spawn(s) => self.on_spawn(s),
+            }
+        }
+        self.take_window_out()
+    }
+
+    fn take_window_out(&mut self) -> WindowOut {
+        let next = self.queue.next_time();
+        WindowOut {
+            shard: self.id,
+            uploads: std::mem::take(&mut self.out_uploads),
+            charges: std::mem::take(&mut self.out_charges),
+            events: std::mem::take(&mut self.out_events),
+            next_time: next.unwrap_or(0.0),
+            has_next: next.is_some(),
+            processed: std::mem::take(&mut self.processed),
+            last_time: self.queue.now(),
+        }
+    }
+
+    // -- synchronous protocol ----------------------------------------------
+
+    /// One barrier round over the owned edges: straggle-scaled compute,
+    /// upload + reply resolution, per-edge reports. Pure per-edge streams
+    /// and max-reductions, so the result is shard-count independent.
+    fn sync_round(&mut self, wall_ms: f64, tau: usize, version: u64) -> SyncRoundOut {
+        let straggle_p = self.cfg.churn.straggle_p;
+        let straggle_factor = self.cfg.churn.straggle_factor;
+        let bytes = self.model_bytes;
+        let n = self.edges.len();
+        let mut barrier_comp = 0.0f64;
+        let mut up_wait = 0.0f64;
+        let mut dl_wait = 0.0f64;
+        let mut reports = Vec::with_capacity(n);
+        let mut up_drops = Vec::new();
+        let mut dl_drops = Vec::new();
+        for l in 0..n {
+            let gid = self.edges[l].id;
+            let comp = self.round_cost(l, tau);
+            let mut effective = comp;
+            if straggle_p > 0.0 && self.edges[l].churn.f64() < straggle_p {
+                effective *= straggle_factor;
+            }
+            barrier_comp = barrier_comp.max(effective);
+            reports.push(LocalReport {
+                edge: gid,
+                tau,
+                cost: comp,
+                train_signal: 0.0,
+                base_version: version,
+            });
+            let bw = self.link_bw(l);
+            // Upload leg.
+            self.sent += 1;
+            let (delay, dropped, is_lost) = {
+                let e = &mut self.edges[l];
+                resolve_fate(&self.cfg.network, bw, wall_ms, bytes, &mut e.uplink)
+            };
+            self.dropped_attempts += u64::from(dropped);
+            if is_lost {
+                self.lost += 1;
+            }
+            if dropped > 0 || is_lost {
+                up_drops.push((gid, dropped, is_lost));
+            }
+            up_wait = up_wait.max(delay);
+            // Broadcast (reply) leg.
+            self.sent += 1;
+            let (delay, dropped, is_lost) = {
+                let e = &mut self.edges[l];
+                resolve_fate(&self.cfg.network, bw, wall_ms, bytes, &mut e.downlink)
+            };
+            self.dropped_attempts += u64::from(dropped);
+            if is_lost {
+                self.lost += 1;
+            }
+            if dropped > 0 || is_lost {
+                dl_drops.push((gid, dropped, is_lost));
+            }
+            dl_wait = dl_wait.max(delay);
+        }
+        SyncRoundOut {
+            barrier_comp,
+            up_wait,
+            dl_wait,
+            reports,
+            up_drops,
+            dl_drops,
+        }
+    }
+
+    /// Per-round departure hazard draw on each owned edge's churn stream.
+    fn sync_hazard(&mut self, p_leave: f64) -> HazardOut {
+        let mut departed = Vec::new();
+        for e in self.edges.iter_mut() {
+            if e.churn.f64() < p_leave {
+                e.departed = true;
+                e.retired = true;
+                departed.push(e.id);
+            }
+        }
+        HazardOut {
+            departed,
+        }
+    }
+
+    fn finish_out(&self) -> FinishOut {
+        FinishOut {
+            retired: self.edges.iter().filter(|e| e.retired).count(),
+            sent: self.sent,
+            lost: self.lost,
+            dropped_attempts: self.dropped_attempts,
+            peak_queue: self.queue.peak_len(),
+        }
+    }
+}
+
+/// The worker thread body: answer every command with exactly one [`Out`]
+/// until `Finish` (or a hung-up channel) ends the loop.
+pub(crate) fn run_worker(mut shard: Shard, rx: Receiver<Cmd>, tx: Sender<Out>) {
+    while let Ok(cmd) = rx.recv() {
+        let out = match cmd {
+            Cmd::Start => {
+                shard.start();
+                Out::Window(shard.take_window_out())
+            }
+            Cmd::Window {
+                bound,
+                inclusive,
+                inbox,
+            } => {
+                shard.inject(inbox);
+                Out::Window(shard.process_window(bound, inclusive))
+            }
+            Cmd::SyncRound {
+                wall_ms,
+                tau,
+                version,
+            } => Out::Sync(shard.sync_round(wall_ms, tau, version)),
+            Cmd::SyncHazard { p_leave } => Out::Hazard(shard.sync_hazard(p_leave)),
+            Cmd::Finish => {
+                let _ = tx.send(Out::Finish(shard.finish_out()));
+                break;
+            }
+        };
+        if tx.send(out).is_err() {
+            break;
+        }
+    }
+}

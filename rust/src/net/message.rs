@@ -5,7 +5,9 @@ use crate::coordinator::observer::LocalReport;
 /// A network endpoint.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Node {
+    /// The Cloud coordinator.
     Cloud,
+    /// Edge server `i`.
     Edge(usize),
 }
 
@@ -23,10 +25,13 @@ pub enum Payload {
 /// One message in flight.
 #[derive(Clone, Debug)]
 pub struct Message {
+    /// Sender.
     pub from: Node,
+    /// Recipient.
     pub to: Node,
     /// Serialized size driving the bandwidth term of the transfer time.
     pub size_bytes: f64,
+    /// What the message carries.
     pub payload: Payload,
 }
 
@@ -64,6 +69,7 @@ impl Message {
 /// The outcome of one send, produced when the message's fate resolves.
 #[derive(Clone, Debug)]
 pub struct Delivery {
+    /// The message whose fate resolved.
     pub msg: Message,
     /// Total time from send to resolution: retransmit timeouts plus the
     /// final attempt's latency + transfer time (or just the timeouts when
@@ -97,7 +103,9 @@ pub enum NetEvent {
 /// What [`Transport::poll`](super::Transport::poll) hands back.
 #[derive(Clone, Debug)]
 pub enum Occurrence {
+    /// A scheduled non-network event fired.
     Local(NetEvent),
+    /// A message's fate resolved (delivered or lost).
     Delivery(Delivery),
 }
 

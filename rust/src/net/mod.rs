@@ -27,8 +27,10 @@
 //!   so the bandit actually pays for the network.
 //! * [`fleet`] — [`FleetSim`]: the scale driver. No compute engine, no
 //!   real models — virtual local rounds priced by the [`CostModel`]
-//!   (fixed/variable) flow through the transport at thousands-of-edges
-//!   scale, with churn, streaming the same [`RunEvent`] vocabulary.
+//!   (fixed/variable) at 10k–100k edges, with churn, streaming the same
+//!   [`RunEvent`] vocabulary. Sharded across worker threads with
+//!   conservative time-window synchronization: results are bit-for-bit
+//!   identical at any shard count (see `docs/ARCHITECTURE.md`).
 //!
 //! [`Session`]: crate::coordinator::Session
 //! [`RunEvent`]: crate::coordinator::RunEvent

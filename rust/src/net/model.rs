@@ -53,11 +53,27 @@ impl LatencyModel {
             }
         }
     }
+
+    /// Greatest lower bound of [`sample`](LatencyModel::sample): no draw
+    /// can come out below this. `Uniform` is bounded by its `lo`, `Fixed`
+    /// by itself; the lognormal's support reaches down to 0, so its bound
+    /// is 0 — which is what makes lognormal WANs the worst case for the
+    /// sharded fleet's conservative lookahead window (see
+    /// [`NetworkSpec::min_delay_ms`]).
+    pub fn min_ms(&self) -> f64 {
+        match *self {
+            LatencyModel::Zero => 0.0,
+            LatencyModel::Fixed(ms) => ms,
+            LatencyModel::Uniform { lo, .. } => lo,
+            LatencyModel::LogNormal { .. } => 0.0,
+        }
+    }
 }
 
 /// The network conditions of a run (validated, JSON-round-trippable).
 #[derive(Clone, Debug, PartialEq)]
 pub struct NetworkSpec {
+    /// Propagation latency model of one attempt.
     pub latency: LatencyModel,
     /// Per-edge link bandwidth in Mbit/s; `f64::INFINITY` = unconstrained.
     /// Transfer time of a message is `size_bytes * 8e-3 / bandwidth` ms.
@@ -120,8 +136,32 @@ impl NetworkSpec {
         }
     }
 
+    /// Guaranteed lower bound (ms) on the end-to-end delay of any
+    /// *delivered* message of `size_bytes`: the latency floor plus the
+    /// transfer time over the fastest configured link. This is the
+    /// *lookahead* of the sharded fleet simulator — two shards can safely
+    /// advance `min_delay_ms` of virtual time without exchanging messages,
+    /// because nothing sent inside that window can arrive inside it.
+    /// Zero (ideal or lognormal latency) degenerates the window to a
+    /// single timestamp: still exact, no longer parallel.
+    pub fn min_delay_ms(&self, size_bytes: f64) -> f64 {
+        self.latency.min_ms() + NetworkSpec::transfer_ms(size_bytes, self.bandwidth_mbps)
+    }
+
     /// Parse the grammar documented at the module head. Rejects exactly
     /// what [`check`](NetworkSpec::check) rejects.
+    ///
+    /// ```
+    /// use ol4el::net::NetworkSpec;
+    ///
+    /// let n = NetworkSpec::parse("lognormal:5:0.5,bw:10,drop:0.01").unwrap();
+    /// assert_eq!(n.bandwidth_mbps, 10.0);
+    /// assert_eq!(n.drop_rate, 0.01);
+    /// // The canonical spec string round-trips:
+    /// assert_eq!(NetworkSpec::parse(&n.spec()), Some(n));
+    /// // Nonsense is rejected, not guessed at:
+    /// assert!(NetworkSpec::parse("uniform:9:3").is_none());
+    /// ```
     pub fn parse(s: &str) -> Option<NetworkSpec> {
         let s = s.to_ascii_lowercase();
         let mut clauses = s.split(',');

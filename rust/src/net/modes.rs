@@ -444,6 +444,7 @@ impl Default for NetSyncBarrier {
 }
 
 impl NetSyncBarrier {
+    /// A transport-backed barrier manner.
     pub fn new() -> NetSyncBarrier {
         NetSyncBarrier {
             transport: Box::new(SimTransport::new(

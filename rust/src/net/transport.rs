@@ -42,6 +42,7 @@ pub struct TransportStats {
 /// edge fleet. Object safe: collaboration manners and the fleet driver
 /// hold `Box<dyn Transport>`.
 pub trait Transport {
+    /// The transport's display name.
     fn name(&self) -> &'static str;
 
     /// Current virtual time in ms.
@@ -66,6 +67,7 @@ pub trait Transport {
     /// Messages currently queued for future delivery.
     fn in_flight(&self) -> usize;
 
+    /// Traffic counters so far.
     fn stats(&self) -> TransportStats;
 
     /// Total events popped off the kernel (throughput accounting).
@@ -110,6 +112,7 @@ impl SimTransport {
         }
     }
 
+    /// The network conditions this transport samples.
     pub fn spec(&self) -> &NetworkSpec {
         &self.spec
     }
@@ -128,26 +131,52 @@ impl SimTransport {
 
     /// Resolve a message's fate: (total delay, dropped attempts, lost).
     fn resolve(&mut self, msg: &Message) -> (f64, u32, bool) {
-        let transfer = NetworkSpec::transfer_ms(msg.size_bytes, self.bandwidth_for(msg));
-        let mut waited = 0.0;
-        let mut dropped = 0u32;
-        for _ in 0..=self.spec.max_retries {
-            let t = self.queue.now() + waited;
-            let drops = if self.spec.in_partition(t) {
-                true
-            } else {
-                self.spec.drop_rate > 0.0 && self.rng.f64() < self.spec.drop_rate
-            };
-            if drops {
-                dropped += 1;
-                waited += self.spec.timeout_ms;
-                continue;
-            }
-            let delay = waited + self.spec.latency.sample(&mut self.rng) + transfer;
-            return (delay, dropped, false);
-        }
-        (waited, dropped, true)
+        let bw = self.bandwidth_for(msg);
+        let now = self.queue.now();
+        resolve_fate(&self.spec, bw, now, msg.size_bytes, &mut self.rng)
     }
+}
+
+/// Resolve one message's fate against `spec` at virtual time `now_ms`,
+/// drawing from `rng`: returns `(total delay, dropped attempts, lost)`.
+///
+/// This is the one send-resolution algorithm shared by [`SimTransport`]
+/// (single transport-wide stream) and the sharded fleet's per-edge link
+/// streams — per attempt: a partition check / drop draw, a timeout on
+/// drop, and on success the latency draw plus the size-proportional
+/// transfer time over `bw_mbps`. A message whose `1 + max_retries`
+/// attempts all drop is LOST and its delay is the accumulated timeouts.
+///
+/// Delivered messages always satisfy
+/// `delay >= spec.latency.min_ms() + transfer_ms(size, bw)` — the
+/// invariant the sharded fleet's conservative window synchronization
+/// rests on ([`NetworkSpec::min_delay_ms`]).
+pub fn resolve_fate(
+    spec: &NetworkSpec,
+    bw_mbps: f64,
+    now_ms: f64,
+    size_bytes: f64,
+    rng: &mut Rng,
+) -> (f64, u32, bool) {
+    let transfer = NetworkSpec::transfer_ms(size_bytes, bw_mbps);
+    let mut waited = 0.0;
+    let mut dropped = 0u32;
+    for _ in 0..=spec.max_retries {
+        let t = now_ms + waited;
+        let drops = if spec.in_partition(t) {
+            true
+        } else {
+            spec.drop_rate > 0.0 && rng.f64() < spec.drop_rate
+        };
+        if drops {
+            dropped += 1;
+            waited += spec.timeout_ms;
+            continue;
+        }
+        let delay = waited + spec.latency.sample(rng) + transfer;
+        return (delay, dropped, false);
+    }
+    (waited, dropped, true)
 }
 
 impl Transport for SimTransport {

@@ -8,9 +8,11 @@
 use anyhow::{anyhow, Context, Result};
 
 #[cfg(feature = "xla-backend")]
+/// A device-transferable PJRT literal (the real `xla::Literal`).
 pub type Literal = xla::Literal;
 
 #[cfg(not(feature = "xla-backend"))]
+/// Uninhabited stand-in: no literal can exist without the backend.
 pub enum Literal {}
 
 /// Build an f32 literal of the given shape from a flat row-major slice.
@@ -90,26 +92,32 @@ mod stubs {
     use crate::runtime::STUB_MSG;
     use anyhow::{anyhow, Result};
 
+    /// Stub: reports the missing `xla-backend` feature.
     pub fn f32_literal(_data: &[f32], _dims: &[usize]) -> Result<Literal> {
         Err(anyhow!(STUB_MSG))
     }
 
+    /// Stub: reports the missing `xla-backend` feature.
     pub fn i32_literal(_data: &[i32], _dims: &[usize]) -> Result<Literal> {
         Err(anyhow!(STUB_MSG))
     }
 
+    /// Stub: reports the missing `xla-backend` feature.
     pub fn scalar_f32(_v: f32) -> Result<Literal> {
         Err(anyhow!(STUB_MSG))
     }
 
+    /// Stub: unreachable (no literal can exist without the backend).
     pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
         match *lit {}
     }
 
+    /// Stub: unreachable (no literal can exist without the backend).
     pub fn to_i32_vec(lit: &Literal) -> Result<Vec<i32>> {
         match *lit {}
     }
 
+    /// Stub: unreachable (no literal can exist without the backend).
     pub fn to_f32_scalar(lit: &Literal) -> Result<f32> {
         match *lit {}
     }

@@ -17,35 +17,43 @@ pub enum Executable {}
 
 /// Stub runtime: `open` fails, everything else is unreachable.
 pub struct Runtime {
+    /// The artifact manifest (never populated in the stub).
     pub manifest: Json,
     never: Executable,
 }
 
 impl Runtime {
+    /// Always fails: the `xla-backend` feature is not compiled in.
     pub fn open(_dir: impl AsRef<Path>) -> Result<Self> {
         Err(anyhow!(STUB_MSG))
     }
 
+    /// Unreachable without the backend.
     pub fn manifest_shapes(&self) -> Result<Shapes> {
         match self.never {}
     }
 
+    /// Unreachable without the backend.
     pub fn entrypoints(&self) -> Vec<String> {
         match self.never {}
     }
 
+    /// Unreachable without the backend.
     pub fn executable(&mut self, _name: &str) -> Result<&Executable> {
         match self.never {}
     }
 
+    /// Unreachable without the backend.
     pub fn run(&mut self, _name: &str, _args: &[Literal]) -> Result<Vec<Literal>> {
         match self.never {}
     }
 
+    /// Unreachable without the backend.
     pub fn device_count(&self) -> usize {
         match self.never {}
     }
 
+    /// Unreachable without the backend.
     pub fn platform_name(&self) -> String {
         match self.never {}
     }

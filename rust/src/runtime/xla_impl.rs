@@ -14,6 +14,7 @@ use crate::util::json::Json;
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
+    /// The parsed artifact manifest.
     pub manifest: Json,
     exes: HashMap<String, xla::PjRtLoadedExecutable>,
 }
@@ -116,6 +117,7 @@ impl Runtime {
         self.client.device_count()
     }
 
+    /// The PJRT platform name (e.g. `cpu`).
     pub fn platform_name(&self) -> String {
         self.client.platform_name()
     }

@@ -44,8 +44,11 @@ impl std::error::Error for ClockError {}
 /// breaker) and an arbitrary payload.
 #[derive(Clone, Copy, Debug)]
 pub struct Event<T> {
+    /// Absolute virtual time (ms); finite by construction.
     pub time: f64,
+    /// Insertion sequence number (the tie breaker).
     pub seq: u64,
+    /// The scheduled payload.
     pub payload: T,
 }
 
@@ -100,6 +103,7 @@ impl<T> Default for EventQueue<T> {
 }
 
 impl<T> EventQueue<T> {
+    /// An empty queue at t = 0.
     pub fn new() -> Self {
         Self::default()
     }
@@ -110,10 +114,12 @@ impl<T> EventQueue<T> {
         self.now
     }
 
+    /// Events currently scheduled.
     pub fn len(&self) -> usize {
         self.heap.len()
     }
 
+    /// Whether nothing is scheduled.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
@@ -166,6 +172,36 @@ impl<T> EventQueue<T> {
         self.now = ev.time;
         self.popped += 1;
         Some(ev)
+    }
+
+    /// Time of the earliest scheduled event without popping it — the
+    /// "local virtual time" a conservative parallel simulation reports at
+    /// a window barrier.
+    pub fn next_time(&self) -> Option<f64> {
+        self.heap.peek().map(|r| r.0.time)
+    }
+
+    /// Pop the earliest event only if it is strictly before `bound` —
+    /// the window-bounded drain of the sharded fleet simulator: a shard
+    /// repeatedly calls this to exhaust its window `[now, bound)` without
+    /// touching events that belong to later windows.
+    pub fn pop_before(&mut self, bound: f64) -> Option<Event<T>> {
+        if self.next_time()? < bound {
+            self.pop()
+        } else {
+            None
+        }
+    }
+
+    /// Pop the earliest event only if it is at or before `bound` — the
+    /// inclusive variant used when the lookahead is zero and a "window"
+    /// degenerates to a single timestamp.
+    pub fn pop_through(&mut self, bound: f64) -> Option<Event<T>> {
+        if self.next_time()? <= bound {
+            self.pop()
+        } else {
+            None
+        }
     }
 
     /// Advance the clock without popping (forward only) — used by drivers
@@ -298,6 +334,33 @@ mod tests {
         ));
         q.push(11.0, 1);
         assert_eq!(q.pop().unwrap().time, 11.0);
+    }
+
+    #[test]
+    fn window_bounded_drains() {
+        let mut q = EventQueue::new();
+        q.push(1.0, 0);
+        q.push(2.0, 1);
+        q.push(2.0, 2);
+        q.push(3.0, 3);
+        assert_eq!(q.next_time(), Some(1.0));
+        // Exclusive drain of [_, 2.0): only the 1.0 event.
+        let mut got = Vec::new();
+        while let Some(e) = q.pop_before(2.0) {
+            got.push(e.payload);
+        }
+        assert_eq!(got, vec![0]);
+        assert_eq!(q.next_time(), Some(2.0));
+        // Inclusive drain through 2.0: both tied events, not the 3.0 one.
+        got.clear();
+        while let Some(e) = q.pop_through(2.0) {
+            got.push(e.payload);
+        }
+        assert_eq!(got, vec![1, 2]);
+        assert_eq!(q.next_time(), Some(3.0));
+        assert!(q.pop_before(3.0).is_none(), "strict bound excludes 3.0");
+        assert_eq!(q.pop_through(3.0).unwrap().payload, 3);
+        assert!(q.next_time().is_none());
     }
 
     #[test]

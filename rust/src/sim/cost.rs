@@ -19,12 +19,16 @@ use crate::util::rng::Rng;
 /// How per-pull costs are produced.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum CostMode {
+    /// Constants through the run (paper §IV-B.1).
     Fixed,
+    /// I.i.d. draws around the nominal with coefficient of variation `cv`.
     Variable { cv: f64 },
+    /// Testbed mode: charge measured wall-clock × slowdown.
     Measured,
 }
 
 impl CostMode {
+    /// Parse a mode name (`fixed | variable | measured`).
     pub fn parse(s: &str) -> Option<CostMode> {
         match s.to_ascii_lowercase().as_str() {
             "fixed" => Some(CostMode::Fixed),
@@ -34,6 +38,7 @@ impl CostMode {
         }
     }
 
+    /// Canonical display/wire name.
     pub fn name(&self) -> &'static str {
         match self {
             CostMode::Fixed => "fixed",
@@ -46,6 +51,7 @@ impl CostMode {
 /// The cost model shared by all edges of a run.
 #[derive(Clone, Copy, Debug)]
 pub struct CostModel {
+    /// How per-pull costs are produced.
     pub mode: CostMode,
     /// Nominal compute cost (ms) of ONE local iteration at slowdown 1.0.
     pub base_comp: f64,

@@ -20,6 +20,7 @@ pub enum HeteroProfile {
 }
 
 impl HeteroProfile {
+    /// Parse a profile name (`linear | random`).
     pub fn parse(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
             "linear" => Some(HeteroProfile::Linear),

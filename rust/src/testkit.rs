@@ -13,6 +13,7 @@ use crate::util::rng::Rng;
 
 /// Generation context: RNG + size hint (shrunk on failure).
 pub struct Gen<'a> {
+    /// The generation RNG stream.
     pub rng: &'a mut Rng,
     /// Size hint in (0, 1]; generators should scale ranges by this.
     pub size: f64,
@@ -36,6 +37,7 @@ impl<'a> Gen<'a> {
         &xs[self.rng.below(xs.len())]
     }
 
+    /// A fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u64() & 1 == 1
     }

@@ -6,19 +6,35 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// The spec-grammar reference shared by `ol4el --help` and the docs —
+/// single-sourced from `docs/GRAMMAR.md` so the CLI and the written
+/// documentation can never drift apart (a CLI test asserts `--help`
+/// contains every production).
+///
+/// The include reaches above the cargo package root (repo `docs/`, not
+/// `rust/`): fine for this `publish = false` repo-bound crate, but if the
+/// crate is ever packaged standalone the file must move under `rust/`.
+pub const SPEC_GRAMMAR: &str = include_str!("../../../docs/GRAMMAR.md");
+
 /// One flag specification.
 #[derive(Clone, Debug)]
 pub struct FlagSpec {
+    /// Flag name (without the leading `--`).
     pub name: &'static str,
+    /// One-line help text.
     pub help: &'static str,
+    /// Default value; `None` for optional value-less flags.
     pub default: Option<&'static str>,
+    /// Whether the flag consumes a value (false = boolean switch).
     pub takes_value: bool,
 }
 
 /// A declarative flag set for one (sub)command.
 #[derive(Clone, Debug, Default)]
 pub struct Cli {
+    /// Command name shown in usage.
     pub name: &'static str,
+    /// One-line command description.
     pub about: &'static str,
     flags: Vec<FlagSpec>,
 }
@@ -27,10 +43,12 @@ pub struct Cli {
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     values: BTreeMap<String, String>,
+    /// Positional (non-flag) arguments in order.
     pub positional: Vec<String>,
 }
 
 impl Cli {
+    /// A flag set for the named (sub)command.
     pub fn new(name: &'static str, about: &'static str) -> Self {
         Cli {
             name,
@@ -72,6 +90,7 @@ impl Cli {
         self
     }
 
+    /// Render the auto-generated `--help` text.
     pub fn usage(&self) -> String {
         let mut s = String::new();
         let _ = writeln!(s, "{} — {}", self.name, self.about);
@@ -144,18 +163,22 @@ impl Cli {
 }
 
 impl Args {
+    /// Raw value of a flag, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
     }
 
+    /// String value of a flag (empty when absent).
     pub fn str(&self, name: &str) -> String {
         self.get(name).unwrap_or_default().to_string()
     }
 
+    /// Whether a boolean switch was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.get(name) == Some("true")
     }
 
+    /// Parse a flag as `usize`.
     pub fn usize(&self, name: &str) -> Result<usize, String> {
         self.get(name)
             .ok_or_else(|| format!("missing --{name}"))?
@@ -163,6 +186,7 @@ impl Args {
             .map_err(|_| format!("--{name}: expected an unsigned integer"))
     }
 
+    /// Parse a flag as `u64`.
     pub fn u64(&self, name: &str) -> Result<u64, String> {
         self.get(name)
             .ok_or_else(|| format!("missing --{name}"))?
@@ -170,6 +194,7 @@ impl Args {
             .map_err(|_| format!("--{name}: expected a u64"))
     }
 
+    /// Parse a flag as `f64`.
     pub fn f64(&self, name: &str) -> Result<f64, String> {
         self.get(name)
             .ok_or_else(|| format!("missing --{name}"))?
@@ -190,6 +215,7 @@ impl Args {
             .collect()
     }
 
+    /// Parse a flag as a comma-separated `usize` list.
     pub fn usize_list(&self, name: &str) -> Result<Vec<usize>, String> {
         self.get(name)
             .ok_or_else(|| format!("missing --{name}"))?

@@ -10,15 +10,22 @@ use std::fmt;
 /// A JSON value. Objects use BTreeMap so printing is deterministic.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (f64, like JavaScript).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Json>),
+    /// JSON object (sorted keys — deterministic output).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a JSON document.
     pub fn parse(src: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
             src: src.as_bytes(),
@@ -35,12 +42,14 @@ impl Json {
 
     // -- typed accessors ----------------------------------------------------
 
+    /// Number value, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// Non-negative integer value, if losslessly representable.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|n| {
             if n >= 0.0 && n.fract() == 0.0 {
@@ -50,24 +59,28 @@ impl Json {
             }
         })
     }
+    /// String value, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// Boolean value, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// Array items, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
             _ => None,
         }
     }
+    /// Key→value map, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -89,15 +102,19 @@ impl Json {
 
     // -- builders ------------------------------------------------------------
 
+    /// An object from (key, value) pairs.
     pub fn obj(fields: Vec<(&str, Json)>) -> Json {
         Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
+    /// A number value.
     pub fn num(n: f64) -> Json {
         Json::Num(n)
     }
+    /// A string value.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
+    /// An array from an iterator of values.
     pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
         Json::Arr(items.into_iter().collect())
     }
@@ -106,7 +123,9 @@ impl Json {
 /// Parse error with byte offset.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// Byte offset of the error.
     pub pos: usize,
 }
 

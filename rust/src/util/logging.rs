@@ -5,17 +5,24 @@
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
+/// Log severity (ordered: error < warn < info < debug < trace).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
 pub enum Level {
+    /// Unrecoverable problems.
     Error = 0,
+    /// Suspicious-but-survivable conditions.
     Warn = 1,
+    /// High-level progress (default).
     Info = 2,
+    /// Per-round detail.
     Debug = 3,
+    /// Per-event firehose.
     Trace = 4,
 }
 
 impl Level {
+    /// Parse a level name (`error|warn|info|debug|trace`).
     pub fn from_str(s: &str) -> Option<Level> {
         match s.to_ascii_lowercase().as_str() {
             "error" => Some(Level::Error),
@@ -27,6 +34,7 @@ impl Level {
         }
     }
 
+    /// Fixed-width tag for log lines.
     pub fn tag(self) -> &'static str {
         match self {
             Level::Error => "ERROR",
@@ -41,10 +49,12 @@ impl Level {
 static LEVEL: AtomicU8 = AtomicU8::new(2); // default Info
 static INIT: std::sync::Once = std::sync::Once::new();
 
+/// Set the process-global level.
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
+/// The process-global level (initialized from `OL4EL_LOG`).
 pub fn level() -> Level {
     init_from_env();
     match LEVEL.load(Ordering::Relaxed) {
@@ -66,16 +76,19 @@ fn init_from_env() {
     });
 }
 
+/// Whether messages at level `l` are currently emitted.
 pub fn enabled(l: Level) -> bool {
     l <= level()
 }
 
+/// Emit one log line (use the macros instead of calling this).
 pub fn log(l: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     if enabled(l) {
         eprintln!("[{} {}] {}", l.tag(), module, msg);
     }
 }
 
+/// Log at `Info` level (printf-style arguments).
 #[macro_export]
 macro_rules! info {
     ($($arg:tt)*) => {
@@ -83,6 +96,7 @@ macro_rules! info {
     };
 }
 
+/// Log at `Warn` level (named `warn_` to dodge the built-in lint's name).
 #[macro_export]
 macro_rules! warn_ {
     ($($arg:tt)*) => {
@@ -90,6 +104,7 @@ macro_rules! warn_ {
     };
 }
 
+/// Log at `Debug` level (printf-style arguments).
 #[macro_export]
 macro_rules! debug {
     ($($arg:tt)*) => {
@@ -97,6 +112,7 @@ macro_rules! debug {
     };
 }
 
+/// Log at `Error` level (printf-style arguments).
 #[macro_export]
 macro_rules! error {
     ($($arg:tt)*) => {

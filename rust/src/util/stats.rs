@@ -11,10 +11,12 @@ pub struct Welford {
 }
 
 impl Welford {
+    /// An empty accumulator.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Fold one observation.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -22,10 +24,12 @@ impl Welford {
         self.m2 += d * (x - self.mean);
     }
 
+    /// Observations folded so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean.
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -43,6 +47,7 @@ impl Welford {
         }
     }
 
+    /// Sample standard deviation.
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }
@@ -81,11 +86,13 @@ pub struct Ewma {
 }
 
 impl Ewma {
+    /// An EWMA with smoothing factor `alpha` in [0, 1].
     pub fn new(alpha: f64) -> Self {
         assert!((0.0..=1.0).contains(&alpha), "alpha must be in [0,1]");
         Ewma { alpha, value: None }
     }
 
+    /// Fold one observation.
     pub fn push(&mut self, x: f64) {
         self.value = Some(match self.value {
             None => x,
@@ -93,6 +100,7 @@ impl Ewma {
         });
     }
 
+    /// Current average (`None` before the first observation).
     pub fn get(&self) -> Option<f64> {
         self.value
     }
@@ -114,6 +122,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Arithmetic mean of a slice (0 for empty).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         0.0
@@ -122,6 +131,7 @@ pub fn mean(xs: &[f64]) -> f64 {
     }
 }
 
+/// Sample standard deviation of a slice (0 below 2 elements).
 pub fn std(xs: &[f64]) -> f64 {
     if xs.len() < 2 {
         return 0.0;

@@ -10,12 +10,16 @@ use std::path::Path;
 /// An aligned text table with a header row.
 #[derive(Clone, Debug)]
 pub struct Table {
+    /// Table caption.
     pub title: String,
+    /// Column names.
     pub header: Vec<String>,
+    /// Row cells (stringified).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with the given caption and columns.
     pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
         Table {
             title: title.into(),
@@ -24,6 +28,7 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the column count).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(
             cells.len(),

@@ -1,0 +1,85 @@
+//! Doc/help drift guard: the spec-grammar reference is single-sourced
+//! from `docs/GRAMMAR.md` (via `util::cli::SPEC_GRAMMAR`), included
+//! verbatim in `ol4el --help`, and linked from the README. This test runs
+//! the real binary and asserts the help output contains every grammar
+//! production, so the CLI and the written docs cannot drift apart.
+
+use std::process::Command;
+
+/// Every production of every spec grammar, as spelled in docs/GRAMMAR.md.
+const PRODUCTIONS: &[&str] = &[
+    // network
+    "ideal",
+    "fixed:MS",
+    "uniform:LO:HI",
+    "lognormal:MEDIAN_MS:SIGMA",
+    "bw:MBPS",
+    "drop:P",
+    "timeout:MS",
+    "retries:N",
+    "part:START-END",
+    // churn
+    "none",
+    "poisson:LEAVE",
+    "join:RATE",
+    "restart:MS",
+    "straggle:P:FACTOR",
+    // bandit
+    "auto",
+    "kube[:EPS]",
+    "ucb-bv",
+    "ucb1",
+    "eps-greedy[:EPS]",
+    "thompson",
+    // partition
+    "iid",
+    "label-skew[:ALPHA]",
+    // scalar enums
+    "'fixed' | 'variable' | 'measured'",
+    "'linear' | 'random'",
+    "'eval' | 'delta'",
+];
+
+fn help_output() -> String {
+    let out = Command::new(env!("CARGO_BIN_EXE_ol4el"))
+        .arg("--help")
+        .output()
+        .expect("run ol4el --help");
+    assert!(out.status.success(), "--help exited nonzero");
+    String::from_utf8(out.stdout).expect("utf8 help output")
+}
+
+#[test]
+fn help_contains_every_grammar_production() {
+    let help = help_output();
+    for prod in PRODUCTIONS {
+        assert!(
+            help.contains(prod),
+            "`ol4el --help` lost grammar production {prod:?} — \
+             docs/GRAMMAR.md and the CLI have drifted"
+        );
+    }
+}
+
+#[test]
+fn help_is_the_single_sourced_grammar() {
+    // The help must embed SPEC_GRAMMAR verbatim (not a paraphrase).
+    let help = help_output();
+    assert!(
+        help.contains(ol4el::util::cli::SPEC_GRAMMAR),
+        "--help no longer includes docs/GRAMMAR.md verbatim"
+    );
+}
+
+#[test]
+fn spec_grammar_parses_its_own_examples() {
+    // The examples documented in the grammar must actually parse.
+    use ol4el::config::{BanditKind, PartitionKind};
+    use ol4el::net::{ChurnSpec, NetworkSpec};
+    assert!(NetworkSpec::parse("lognormal:5:0.5,bw:10,drop:0.01").is_some());
+    assert!(NetworkSpec::parse("fixed:20,part:1000-2500").is_some());
+    assert!(ChurnSpec::parse("poisson:0.01,join:0.05").is_some());
+    assert!(ChurnSpec::parse("poisson:0.2,restart:500,straggle:0.1:4").is_some());
+    assert!(BanditKind::parse("kube:0.2").is_some());
+    assert!(PartitionKind::parse("label-skew:0.3").is_some());
+}

@@ -1,0 +1,167 @@
+//! The sharded fleet simulator's determinism contract: a sharded run is
+//! **bit-for-bit identical** to the single-threaded run at any shard
+//! count. These tests capture the full `RunEvent` stream (every payload
+//! f64 included — `RunEvent: PartialEq` compares exact bits) and the
+//! protocol-level report fields across shard counts.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use ol4el::config::{Algo, RunConfig};
+use ol4el::coordinator::observer::from_fn;
+use ol4el::coordinator::RunEvent;
+use ol4el::net::{ChurnSpec, FleetReport, FleetSim, NetworkSpec};
+
+/// Run a fleet at `shards`, capturing the complete event stream.
+fn run_captured(cfg: RunConfig, shards: usize) -> (Vec<RunEvent>, FleetReport) {
+    let events = Rc::new(RefCell::new(Vec::new()));
+    let sink = events.clone();
+    let report = FleetSim::new(cfg)
+        .unwrap()
+        .shards(shards)
+        .observe(from_fn(move |ev: &RunEvent| {
+            sink.borrow_mut().push(ev.clone());
+        }))
+        .run()
+        .unwrap();
+    let events = Rc::try_unwrap(events).unwrap().into_inner();
+    (events, report)
+}
+
+/// Protocol fields that must not depend on the shard count
+/// (`peak_queue_depth` and host timings legitimately do).
+fn assert_reports_equal(a: &FleetReport, b: &FleetReport, what: &str) {
+    assert_eq!(a.updates, b.updates, "{what}: updates");
+    assert_eq!(a.wall_ms, b.wall_ms, "{what}: wall_ms");
+    assert_eq!(a.mean_spent, b.mean_spent, "{what}: mean_spent");
+    assert_eq!(a.final_progress, b.final_progress, "{what}: final_progress");
+    assert_eq!(a.retired, b.retired, "{what}: retired");
+    assert_eq!(a.joined, b.joined, "{what}: joined");
+    assert_eq!(a.messages_sent, b.messages_sent, "{what}: messages_sent");
+    assert_eq!(a.messages_lost, b.messages_lost, "{what}: messages_lost");
+    assert_eq!(
+        a.dropped_attempts, b.dropped_attempts,
+        "{what}: dropped_attempts"
+    );
+    assert_eq!(a.events, b.events, "{what}: events");
+}
+
+fn equivalence_cfg(algo: Algo, seed: u64) -> RunConfig {
+    RunConfig {
+        algo,
+        n_edges: 60,
+        hetero: 4.0,
+        budget: 900.0,
+        data_n: 3000, // ignored by the fleet; satisfies validate()
+        eval_every: 20,
+        // Lognormal latency has zero lookahead — the adversarial case for
+        // conservative windows (every window degenerates to one instant).
+        network: NetworkSpec::parse("lognormal:5:0.5,drop:0.02").unwrap(),
+        churn: ChurnSpec::parse("poisson:0.2,join:1,restart:400,straggle:0.1:3").unwrap(),
+        seed,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn async_event_stream_identical_across_shard_counts() {
+    let cfg = equivalence_cfg(Algo::Ol4elAsync, 11);
+    let (ref_events, ref_report) = run_captured(cfg.clone(), 1);
+    assert!(ref_report.updates > 0, "reference run made no updates");
+    assert!(
+        ref_events.iter().any(|e| matches!(e, RunEvent::Finished { .. })),
+        "stream must close with Finished"
+    );
+    for shards in [2, 4, 7] {
+        let (events, report) = run_captured(cfg.clone(), shards);
+        assert_eq!(
+            events.len(),
+            ref_events.len(),
+            "async {shards}-shard stream length"
+        );
+        assert_eq!(events, ref_events, "async {shards}-shard stream diverged");
+        assert_reports_equal(&ref_report, &report, &format!("async {shards} shards"));
+    }
+}
+
+#[test]
+fn sync_event_stream_identical_across_shard_counts() {
+    let cfg = equivalence_cfg(Algo::Ol4elSync, 23);
+    let (ref_events, ref_report) = run_captured(cfg.clone(), 1);
+    assert!(ref_report.updates > 0, "reference run made no updates");
+    for shards in [2, 4, 7] {
+        let (events, report) = run_captured(cfg.clone(), shards);
+        assert_eq!(events, ref_events, "sync {shards}-shard stream diverged");
+        assert_reports_equal(&ref_report, &report, &format!("sync {shards} shards"));
+    }
+}
+
+#[test]
+fn equivalence_holds_across_seeds_and_modes() {
+    // A broader (but shallower) sweep: sync and async, three seeds,
+    // 1 vs 4 shards, protocol reports bit-equal.
+    for algo in [Algo::Ol4elAsync, Algo::Ol4elSync] {
+        for seed in [1, 7, 42] {
+            let cfg = equivalence_cfg(algo, seed);
+            let (_, one) = run_captured(cfg.clone(), 1);
+            let (_, four) = run_captured(cfg, 4);
+            assert_reports_equal(&one, &four, &format!("{algo:?} seed {seed}"));
+        }
+    }
+}
+
+#[test]
+fn window_barrier_boundary_latency_equal_to_lookahead() {
+    // With `fixed:8` latency and unlimited bandwidth the lookahead is
+    // exactly 8 ms, so every delivered message sent at a window's opening
+    // instant arrives EXACTLY at the window bound — the boundary the
+    // conservative synchronization must classify as "next window". Any
+    // off-by-one in the window arithmetic (processing `<= bound` instead
+    // of `< bound`, or dropping an arrival at the bound) breaks the
+    // equivalence or loses messages.
+    for algo in [Algo::Ol4elAsync, Algo::Ol4elSync] {
+        let cfg = RunConfig {
+            algo,
+            n_edges: 40,
+            hetero: 3.0,
+            budget: 800.0,
+            data_n: 3000,
+            eval_every: 10,
+            network: NetworkSpec::parse("fixed:8").unwrap(),
+            churn: ChurnSpec::parse("poisson:0.1,restart:300").unwrap(),
+            seed: 5,
+            ..Default::default()
+        };
+        let (ref_events, ref_report) = run_captured(cfg.clone(), 1);
+        assert!(ref_report.updates > 0, "{algo:?}: no updates at the boundary");
+        for shards in [2, 4] {
+            let (events, report) = run_captured(cfg.clone(), shards);
+            assert_eq!(
+                events, ref_events,
+                "{algo:?} {shards}-shard boundary stream diverged"
+            );
+            assert_reports_equal(&ref_report, &report, &format!("{algo:?} boundary"));
+        }
+    }
+}
+
+#[test]
+fn zero_latency_ideal_network_still_exact() {
+    // The fully degenerate case: ideal network, zero lookahead AND
+    // zero-delay messages — every window collapses to cascades at a
+    // single instant. No parallelism, but the contract must hold.
+    let cfg = RunConfig {
+        algo: Algo::Ol4elAsync,
+        n_edges: 50,
+        hetero: 5.0,
+        budget: 700.0,
+        data_n: 3000,
+        eval_every: 25,
+        seed: 3,
+        ..Default::default()
+    };
+    let (ref_events, ref_report) = run_captured(cfg.clone(), 1);
+    let (events, report) = run_captured(cfg, 4);
+    assert_eq!(events, ref_events, "ideal-network stream diverged");
+    assert_reports_equal(&ref_report, &report, "ideal network");
+}
