@@ -11,7 +11,7 @@ use std::rc::Rc;
 use ol4el::config::{Algo, RunConfig};
 use ol4el::coordinator::{observer, Experiment, RunEvent};
 use ol4el::engine::native::NativeEngine;
-use ol4el::model::Task;
+use ol4el::model::TaskSpec;
 use ol4el::net::{ChurnSpec, FleetSim, NetworkSpec};
 
 fn main() -> anyhow::Result<()> {
@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
 
     // -- 2. The same protocol at 2000 edges (engine-free) ------------------
     let cfg = RunConfig {
-        task: Task::Svm, // ignored: the fleet trains no model
+        task: TaskSpec::svm(), // ignored: the fleet trains no model
         algo: Algo::Ol4elAsync,
         n_edges: 2000,
         hetero: 6.0,

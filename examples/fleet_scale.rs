@@ -7,14 +7,14 @@
 
 use ol4el::config::{Algo, RunConfig};
 use ol4el::coordinator::{find_outcome, ExperimentSuite};
-use ol4el::model::Task;
+use ol4el::model::TaskSpec;
 use ol4el::util::table::{f, Table};
 
 fn main() -> anyhow::Result<()> {
     let t0 = std::time::Instant::now();
 
     let base = RunConfig {
-        task: Task::Svm,
+        task: TaskSpec::svm(),
         budget: 3000.0,
         seed: 5,
         ..Default::default()
@@ -40,12 +40,12 @@ fn main() -> anyhow::Result<()> {
         let mut row = vec![n.to_string()];
         for algo in [Algo::Ol4elAsync, Algo::Ol4elSync] {
             for h in [1.0f64, 10.0] {
-                let out = find_outcome(&outcomes, Task::Svm, algo, n, h)
+                let out = find_outcome(&outcomes, &TaskSpec::svm(), algo, n, h)
                     .expect("suite covers the full grid");
                 row.push(f(out.agg.metric.mean(), 4));
             }
         }
-        let async_h10 = find_outcome(&outcomes, Task::Svm, Algo::Ol4elAsync, n, 10.0).unwrap();
+        let async_h10 = find_outcome(&outcomes, &TaskSpec::svm(), Algo::Ol4elAsync, n, 10.0).unwrap();
         row.push(format!("{:.0}", async_h10.agg.updates.mean()));
         table.row(row);
     }

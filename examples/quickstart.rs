@@ -12,7 +12,7 @@
 use ol4el::config::Algo;
 use ol4el::coordinator::{observer, Experiment, RunEvent};
 use ol4el::harness::{build_engine, EngineKind};
-use ol4el::model::Task;
+use ol4el::model::{Learner as _, TaskSpec};
 
 fn main() -> anyhow::Result<()> {
     // The production engine: HLO artifacts on PJRT. Falls back to the
@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
     };
 
     let exp = Experiment::builder()
-        .task(Task::Svm)
+        .task(TaskSpec::svm())
         .algo(Algo::Ol4elAsync)
         .edges(3)
         .hetero(6.0) // fastest edge 6x the slowest — the Fig. 4 regime
@@ -51,11 +51,11 @@ fn main() -> anyhow::Result<()> {
 
     println!("OL4EL quickstart");
     println!("  engine : {engine_name}");
+    let learner = exp.config().task.learner();
     println!(
-        "  task   : {} ({} classes x {} features, wafer-like)",
+        "  task   : {} ({} parameters, wafer-like data)",
         exp.config().task.name(),
-        engine.shapes().svm_c,
-        engine.shapes().svm_d
+        learner.param_len()
     );
     println!(
         "  fleet  : {} edges, heterogeneity H={}, budget {} ms each",

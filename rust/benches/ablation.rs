@@ -11,7 +11,7 @@ mod common;
 use ol4el::config::{Algo, BanditKind, PartitionKind, RunConfig};
 use ol4el::coordinator::utility::UtilityKind;
 use ol4el::harness::run_seeds;
-use ol4el::model::Task;
+use ol4el::model::TaskSpec;
 use ol4el::sim::cost::CostMode;
 use ol4el::util::table::{f, Table};
 
@@ -19,7 +19,7 @@ fn base(opts: &ol4el::harness::SweepOpts) -> RunConfig {
     // Paper regime (label-skew for SVM) at a budget inside the rising part
     // of the learning curve, so ablated knobs actually move the metric.
     RunConfig {
-        task: Task::Svm,
+        task: TaskSpec::svm(),
         algo: Algo::Ol4elAsync,
         n_edges: 3,
         hetero: 6.0,
@@ -91,10 +91,10 @@ fn main() {
             "A3: learning-utility definition",
             &["task", "utility", "metric"],
         );
-        for task in [Task::Svm, Task::Kmeans] {
+        for task in [TaskSpec::svm(), TaskSpec::kmeans()] {
             for util in [UtilityKind::EvalGain, UtilityKind::ParamDelta] {
                 let mut cfg = base(&opts);
-                cfg.task = task;
+                cfg.task = task.clone();
                 cfg.utility = util;
                 let agg = run_seeds(&cfg, engine, &seeds).expect("run");
                 t.row(vec![

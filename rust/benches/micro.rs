@@ -7,9 +7,9 @@ mod common;
 
 use ol4el::bandit::{kube::Kube, ucb_bv::UcbBv, BudgetedBandit};
 use ol4el::coordinator::aggregate;
+use ol4el::edge::Hyper;
 use ol4el::engine::native::NativeEngine;
-use ol4el::engine::ComputeEngine;
-use ol4el::model::{ModelState, Task};
+use ol4el::model::{Learner as _, ModelState, TaskSpec};
 use ol4el::sim::clock::EventQueue;
 use ol4el::util::rng::Rng;
 use ol4el::util::table::{f, Table};
@@ -84,10 +84,7 @@ fn main() {
     // Aggregation throughput: weighted average of 100 SVM models (480 f32).
     {
         let models: Vec<ModelState> = (0..100)
-            .map(|i| ModelState {
-                task: Task::Svm,
-                params: vec![i as f32; 480],
-            })
+            .map(|i| ModelState::new(vec![i as f32; 480]))
             .collect();
         let iters = 20_000;
         let (per, _) = time_it(iters, || {
@@ -126,64 +123,63 @@ fn main() {
         ]);
     }
 
-    // Native engine step latencies (the simulator's inner loop).
+    // Native local-step latencies per registered task (the simulator's
+    // inner loop now dispatches through the Learner plugin API).
     {
         let eng = NativeEngine::default();
-        let s = *eng.shapes();
-        let x: Vec<f32> = (0..s.svm_batch * s.svm_d).map(|i| (i % 17) as f32 * 0.1).collect();
-        let y: Vec<i32> = (0..s.svm_batch).map(|i| (i % s.svm_c) as i32).collect();
-        let mut params = vec![0.01f32; s.svm_param_len()];
-        let iters = 2_000;
-        let (per, _) = time_it(iters, || {
-            eng.svm_step(&mut params, &x, &y, 0.05, 1e-4).unwrap().loss
-        });
-        t.row(vec![
-            "native svm_step".into(),
-            iters.to_string(),
-            fmt_time(per),
-            f(1.0 / per, 0),
-        ]);
-
-        let xk: Vec<f32> = (0..s.km_batch * s.km_d).map(|i| (i % 13) as f32 * 0.3).collect();
-        let centers = vec![0.5f32; s.km_param_len()];
-        let iters = 20_000;
-        let (per, _) = time_it(iters, || eng.kmeans_step(&centers, &xk).unwrap().inertia);
-        t.row(vec![
-            "native kmeans_step".into(),
-            iters.to_string(),
-            fmt_time(per),
-            f(1.0 / per, 0),
-        ]);
+        let hyper = Hyper::default();
+        for (name, _) in ol4el::model::registered_tasks() {
+            let learner = TaskSpec::parse(name).expect("registered").learner();
+            let mut rng = Rng::new(0);
+            let ds = learner.synth(4096, 2.5, &mut rng);
+            let mut params = learner.init_params(&ds, &mut rng);
+            let n = learner.batch();
+            let x = ds.x[..n * ds.d].to_vec();
+            let y = ds.y[..n].to_vec();
+            let iters = 5_000;
+            let (per, _) = time_it(iters, || {
+                learner
+                    .local_step(&eng, &mut params, &x, &y, &hyper)
+                    .unwrap()
+                    .signal
+            });
+            t.row(vec![
+                format!("native {name} step"),
+                iters.to_string(),
+                fmt_time(per),
+                f(1.0 / per, 0),
+            ]);
+        }
     }
 
-    // PJRT step latency, if artifacts are present (the full L1+L2 path).
+    // PJRT fused-kernel latency, if artifacts are present (the full
+    // L1+L2 path; tasks without artifacts run their portable path).
     match ol4el::engine::pjrt::PjrtEngine::open(common::artifacts_dir()) {
         Ok(eng) => {
             eng.warmup().expect("warmup");
-            let s = *eng.shapes();
-            let x: Vec<f32> = (0..s.svm_batch * s.svm_d).map(|i| (i % 17) as f32 * 0.1).collect();
-            let y: Vec<i32> = (0..s.svm_batch).map(|i| (i % s.svm_c) as i32).collect();
-            let mut params = vec![0.01f32; s.svm_param_len()];
-            let iters = 200;
-            let (per, _) = time_it(iters, || {
-                eng.svm_step(&mut params, &x, &y, 0.05, 1e-4).unwrap().loss
-            });
-            t.row(vec![
-                "pjrt svm_step".into(),
-                iters.to_string(),
-                fmt_time(per),
-                f(1.0 / per, 0),
-            ]);
-
-            let xk: Vec<f32> = (0..s.km_batch * s.km_d).map(|i| (i % 13) as f32 * 0.3).collect();
-            let centers = vec![0.5f32; s.km_param_len()];
-            let (per, _) = time_it(iters, || eng.kmeans_step(&centers, &xk).unwrap().inertia);
-            t.row(vec![
-                "pjrt kmeans_step".into(),
-                iters.to_string(),
-                fmt_time(per),
-                f(1.0 / per, 0),
-            ]);
+            let hyper = Hyper::default();
+            for name in ["svm", "kmeans"] {
+                let learner = TaskSpec::parse(name).expect("registered").learner();
+                let mut rng = Rng::new(0);
+                let ds = learner.synth(4096, 2.5, &mut rng);
+                let mut params = learner.init_params(&ds, &mut rng);
+                let n = learner.batch();
+                let x = ds.x[..n * ds.d].to_vec();
+                let y = ds.y[..n].to_vec();
+                let iters = 200;
+                let (per, _) = time_it(iters, || {
+                    learner
+                        .local_step(&eng, &mut params, &x, &y, &hyper)
+                        .unwrap()
+                        .signal
+                });
+                t.row(vec![
+                    format!("pjrt {name} step"),
+                    iters.to_string(),
+                    fmt_time(per),
+                    f(1.0 / per, 0),
+                ]);
+            }
         }
         Err(e) => {
             eprintln!("[bench micro] pjrt rows skipped: {e}");

@@ -4,7 +4,7 @@
 use anyhow::{anyhow, Result};
 
 use crate::edge::Hyper;
-use crate::model::Task;
+use crate::model::{Learner as _, TaskSpec};
 use crate::net::{ChurnSpec, NetworkSpec};
 use crate::sim::cost::{CostMode, CostModel};
 use crate::sim::hetero::HeteroProfile;
@@ -173,8 +173,10 @@ impl PartitionKind {
 /// point on any paper figure.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
-    /// Learning task (SVM or K-means).
-    pub task: Task,
+    /// Learning task: a registry spec (`svm`, `kmeans:k=5`,
+    /// `logreg:d=59:c=8`, any registered task — grammar in
+    /// docs/GRAMMAR.md).
+    pub task: TaskSpec,
     /// Coordination algorithm under test.
     pub algo: Algo,
     /// Fleet size at t=0.
@@ -233,7 +235,7 @@ pub struct RunConfig {
 impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
-            task: Task::Svm,
+            task: TaskSpec::svm(),
             algo: Algo::Ol4elAsync,
             n_edges: 3,
             hetero: 1.0,
@@ -275,18 +277,16 @@ impl RunConfig {
     }
 
     /// The paper-figure regime for the configured task: eval-gain utility
-    /// (the Cloud's test set), and the task-appropriate sharding — label-
-    /// skewed shards for the supervised SVM ("different local datasets",
-    /// §III; the standard cross-silo FL protocol), IID shards for K-means
-    /// (the paper clusters a common surveillance stream, and cluster-
-    /// skewed shards degenerate mini-batch Lloyd regardless of policy —
-    /// ablated in benches/ablation.rs A5).
+    /// (the Cloud's test set), and the task-appropriate sharding as the
+    /// learner declares it — label-skewed shards for supervised tasks
+    /// ("different local datasets", §III; the standard cross-silo FL
+    /// protocol), IID shards for unsupervised ones (the paper clusters a
+    /// common surveillance stream, and cluster-skewed shards degenerate
+    /// mini-batch Lloyd regardless of policy — ablated in
+    /// benches/ablation.rs A5).
     pub fn with_paper_utility(mut self) -> Self {
         self.utility = UtilityKind::EvalGain;
-        self.partition = match self.task {
-            Task::Svm => PartitionKind::LabelSkew { alpha: 0.5 },
-            Task::Kmeans => PartitionKind::Iid,
-        };
+        self.partition = self.task.learner().paper_partition();
         self
     }
 
@@ -299,7 +299,7 @@ impl RunConfig {
             CostMode::Measured => Json::str("measured"),
         };
         Json::obj(vec![
-            ("task", Json::str(self.task.name())),
+            ("task", Json::str(self.task.spec())),
             ("algo", Json::str(self.algo.name())),
             ("n_edges", Json::num(self.n_edges as f64)),
             ("hetero", Json::num(self.hetero)),
@@ -342,7 +342,7 @@ impl RunConfig {
         let gs = |k: &str| j.get(k).and_then(Json::as_str);
         let gn = |k: &str| j.get(k).and_then(Json::as_f64);
         if let Some(s) = gs("task") {
-            cfg.task = Task::parse(s).ok_or_else(|| anyhow!("bad task '{s}'"))?;
+            cfg.task = TaskSpec::parse(s).map_err(|e| anyhow!("bad task '{s}': {e}"))?;
         }
         if let Some(s) = gs("algo") {
             cfg.algo = Algo::parse(s).ok_or_else(|| anyhow!("bad algo '{s}'"))?;
@@ -468,8 +468,30 @@ impl RunConfig {
                 return Err(anyhow!("bandit epsilon must be in [0, 1], got {epsilon}"));
             }
         }
-        if self.data_n < self.n_edges {
-            return Err(anyhow!("data_n smaller than n_edges"));
+        // Dataset sizing is checked here, up front, so a bad eval split or
+        // an uncoverable fleet is a typed builder/config error instead of
+        // an assert deep inside `Dataset::split_eval` / shard construction
+        // mid-run.
+        let learner = self.task.learner();
+        let eval_n = learner.eval_batch();
+        if self.data_n <= eval_n {
+            return Err(anyhow!(
+                "task '{}': data_n ({}) must exceed the {}-row eval split \
+                 held out for the Cloud's test set",
+                self.task.spec(),
+                self.data_n,
+                eval_n
+            ));
+        }
+        if self.data_n - eval_n < self.n_edges {
+            return Err(anyhow!(
+                "task '{}': after the {}-row eval split only {} training \
+                 rows remain — too few to cover {} edges",
+                self.task.spec(),
+                eval_n,
+                self.data_n - eval_n,
+                self.n_edges
+            ));
         }
         if !(0.0..=1.0).contains(&self.async_alpha) || self.async_alpha == 0.0 {
             return Err(anyhow!("async_alpha must be in (0, 1]"));
@@ -494,7 +516,7 @@ mod tests {
     #[test]
     fn json_roundtrip_preserves_fields() {
         let mut cfg = RunConfig::default();
-        cfg.task = Task::Kmeans;
+        cfg.task = TaskSpec::kmeans();
         cfg.algo = Algo::AcSync;
         cfg.n_edges = 17;
         cfg.hetero = 6.0;
@@ -504,7 +526,7 @@ mod tests {
         cfg.seed = 99;
         let j = cfg.to_json();
         let back = RunConfig::from_json(&j).unwrap();
-        assert_eq!(back.task, Task::Kmeans);
+        assert_eq!(back.task, TaskSpec::kmeans());
         assert_eq!(back.algo, Algo::AcSync);
         assert_eq!(back.n_edges, 17);
         assert_eq!(back.hetero, 6.0);
@@ -649,6 +671,61 @@ mod tests {
         ] {
             assert_eq!(BanditKind::parse(&kind.spec()), Some(kind), "{kind:?}");
         }
+    }
+
+    #[test]
+    fn parameterized_task_specs_survive_the_json_roundtrip() {
+        // Satellite: `kmeans:k=5` must survive config -> JSON -> config,
+        // across every registered task x algo (mirrors BanditKind::spec).
+        let algos = [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::FixedI, Algo::AcSync];
+        let specs = [
+            "svm",
+            "svm:d=20:c=4",
+            "kmeans",
+            "kmeans:k=5",
+            "logreg",
+            "logreg:d=59:c=8",
+            "gmm",
+            "gmm:k=3",
+            "gmm:k=4:d=8",
+        ];
+        for algo in algos {
+            for spec in specs {
+                let cfg = RunConfig {
+                    algo,
+                    task: TaskSpec::parse(spec).unwrap(),
+                    seed: 7,
+                    ..Default::default()
+                };
+                let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+                assert_eq!(back.task, cfg.task, "{algo:?} x {spec} lost the task spec");
+                assert_eq!(back.algo, algo);
+            }
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_eval_splits_up_front() {
+        // Satellite: an eval split >= data_n used to assert deep inside
+        // Dataset::split_eval mid-run; now it is a typed config error.
+        let mut cfg = RunConfig::default();
+        cfg.data_n = 512; // == the default eval batch
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("eval split"), "{err}");
+        assert!(err.contains("data_n"), "{err}");
+
+        // Too few post-split rows to cover the fleet is its own error.
+        let mut cfg = RunConfig::default();
+        cfg.data_n = 515;
+        cfg.n_edges = 10;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("too few to cover 10 edges"), "{err}");
+
+        // The boundary cases pass.
+        let mut cfg = RunConfig::default();
+        cfg.data_n = 515;
+        cfg.n_edges = 3;
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

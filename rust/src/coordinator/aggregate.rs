@@ -1,30 +1,42 @@
 //! Global model aggregation (paper §III: "weighted average of all local
 //! models" in the synchronous manner; single-edge merge with staleness
 //! discounting in the asynchronous manner).
+//!
+//! The barrier's merge rule is a [`Learner`](crate::model::Learner) hook
+//! (`Learner::aggregate`); its default is [`weighted_average_params`] —
+//! correct for SGD-family parameter layouts; for mean-style layouts
+//! (K-means centers, GMM means) it matches the sufficient-statistics
+//! merge when assignments are shard-proportional and approximates it
+//! otherwise (tasks needing the exact statistic override the hook).
 
 use crate::model::ModelState;
 
-/// Synchronous barrier aggregation: global = Σ w_i · local_i with weights
-/// normalized internally (weights are shard sizes in the coordinator).
-pub fn weighted_average(locals: &[(&ModelState, f64)]) -> ModelState {
+/// Shard-weighted parameter averaging: out = Σ (w_i / Σw) · local_i, with
+/// f64 accumulation (weights are shard sizes in the coordinator). The
+/// default `Learner::aggregate` rule.
+pub fn weighted_average_params(locals: &[(&[f32], f64)]) -> Vec<f32> {
     assert!(!locals.is_empty(), "aggregating zero models");
     let total_w: f64 = locals.iter().map(|(_, w)| *w).sum();
     assert!(total_w > 0.0, "zero total aggregation weight");
-    let len = locals[0].0.params.len();
-    let task = locals[0].0.task;
+    let len = locals[0].0.len();
     let mut out = vec![0f64; len];
-    for (m, w) in locals {
-        assert_eq!(m.params.len(), len, "parameter length mismatch");
-        assert_eq!(m.task, task, "task mismatch in aggregation");
+    for (p, w) in locals {
+        assert_eq!(p.len(), len, "parameter length mismatch");
         let wn = *w / total_w;
-        for (o, p) in out.iter_mut().zip(&m.params) {
-            *o += wn * (*p as f64);
+        for (o, v) in out.iter_mut().zip(p.iter()) {
+            *o += wn * (*v as f64);
         }
     }
-    ModelState {
-        task,
-        params: out.into_iter().map(|v| v as f32).collect(),
-    }
+    out.into_iter().map(|v| v as f32).collect()
+}
+
+/// [`weighted_average_params`] over [`ModelState`]s.
+pub fn weighted_average(locals: &[(&ModelState, f64)]) -> ModelState {
+    let params: Vec<(&[f32], f64)> = locals
+        .iter()
+        .map(|(m, w)| (m.params.as_slice(), *w))
+        .collect();
+    ModelState::new(weighted_average_params(&params))
 }
 
 /// Asynchronous merge weight for an edge contribution:
@@ -51,13 +63,9 @@ pub fn async_merge(global: &mut ModelState, local: &ModelState, alpha: f64) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::Task;
 
     fn state(p: Vec<f32>) -> ModelState {
-        ModelState {
-            task: Task::Kmeans,
-            params: p,
-        }
+        ModelState::new(p)
     }
 
     #[test]

@@ -166,9 +166,9 @@ mod tests {
     use crate::config::{Algo, RunConfig};
     use crate::coordinator::run;
     use crate::engine::native::NativeEngine;
-    use crate::model::Task;
+    use crate::model::TaskSpec;
 
-    fn cfg(task: Task) -> RunConfig {
+    fn cfg(task: TaskSpec) -> RunConfig {
         RunConfig {
             algo: Algo::Ol4elAsync,
             task,
@@ -183,7 +183,7 @@ mod tests {
     #[test]
     fn async_run_completes_and_learns() {
         let engine = NativeEngine::default();
-        let r = run(&cfg(Task::Svm), &engine).unwrap();
+        let r = run(&cfg(TaskSpec::svm()), &engine).unwrap();
         assert!(r.total_updates > 0);
         assert_eq!(r.retired_edges, 3, "all edges should exhaust their budget");
         let first = r.trace.first().unwrap().metric;
@@ -199,7 +199,7 @@ mod tests {
         // With no barriers the virtual wall-clock is bounded by the longest
         // single edge's busy time (~budget), not N x budget.
         let engine = NativeEngine::default();
-        let c = cfg(Task::Kmeans);
+        let c = cfg(TaskSpec::kmeans());
         let r = run(&c, &engine).unwrap();
         assert!(r.wall_ms <= c.budget * 1.5, "wall {} ms", r.wall_ms);
         assert!(r.wall_ms > 0.0);
@@ -210,7 +210,7 @@ mod tests {
         // The async pattern's whole point (paper Fig. 3): at high H the
         // fast edges keep updating. Count updates at H=10 async vs sync.
         let engine = NativeEngine::default();
-        let mut ca = cfg(Task::Svm);
+        let mut ca = cfg(TaskSpec::svm());
         ca.hetero = 10.0;
         let ra = run(&ca, &engine).unwrap();
         let mut cs = ca.clone();
@@ -227,7 +227,7 @@ mod tests {
     #[test]
     fn async_budget_never_exceeded_per_edge() {
         let engine = NativeEngine::default();
-        let c = cfg(Task::Svm);
+        let c = cfg(TaskSpec::svm());
         // Budget accounting happens inside; verify via mean_spent bound:
         // each edge can overdraw by at most its final round's cost.
         let r = run(&c, &engine).unwrap();
@@ -238,7 +238,7 @@ mod tests {
     #[test]
     fn async_is_deterministic_for_fixed_seed() {
         let engine = NativeEngine::default();
-        let c = cfg(Task::Kmeans);
+        let c = cfg(TaskSpec::kmeans());
         let a = run(&c, &engine).unwrap();
         let b = run(&c, &engine).unwrap();
         assert_eq!(a.total_updates, b.total_updates);

@@ -27,7 +27,7 @@ use crate::coordinator::observer::Observer;
 use crate::coordinator::session::Session;
 use crate::coordinator::RunResult;
 use crate::engine::ComputeEngine;
-use crate::model::Task;
+use crate::model::TaskSpec;
 use crate::net::{ChurnSpec, NetworkSpec};
 use crate::sim::cost::{CostMode, CostModel};
 use crate::sim::hetero::HeteroProfile;
@@ -52,7 +52,7 @@ impl Experiment {
     /// testbed budget.
     pub fn svm_wafer() -> ExperimentBuilder {
         Experiment::builder()
-            .task(Task::Svm)
+            .task(TaskSpec::svm())
             .edges(5)
             .hetero(6.0)
             .budget(5000.0)
@@ -66,7 +66,7 @@ impl Experiment {
     /// where OL4EL must learn arm costs online).
     pub fn kmeans_traffic() -> ExperimentBuilder {
         Experiment::builder()
-            .task(Task::Kmeans)
+            .task(TaskSpec::kmeans())
             .algo(Algo::Ol4elAsync)
             .edges(4)
             .hetero(4.0)
@@ -82,7 +82,7 @@ impl Experiment {
     /// three-mini-PC docker testbed, in process).
     pub fn testbed() -> ExperimentBuilder {
         Experiment::builder()
-            .task(Task::Svm)
+            .task(TaskSpec::svm())
             .edges(3)
             .hetero(6.0)
             .budget(150.0)
@@ -146,10 +146,10 @@ impl Experiment {
 /// ```
 /// use ol4el::coordinator::ExperimentBuilder;
 /// use ol4el::engine::native::NativeEngine;
-/// use ol4el::model::Task;
+/// use ol4el::model::TaskSpec;
 ///
 /// let result = ExperimentBuilder::new()
-///     .task(Task::Svm)
+///     .task(TaskSpec::svm())
 ///     .edges(3)
 ///     .budget(400.0)   // tiny budget: a doctest-sized run
 ///     .data_n(3000)
@@ -192,8 +192,9 @@ impl ExperimentBuilder {
         &self.cfg
     }
 
-    /// Learning task (SVM or K-means).
-    pub fn task(mut self, task: Task) -> Self {
+    /// Learning task (a registry spec — `TaskSpec::svm()`,
+    /// `TaskSpec::parse("kmeans:k=5")?`, any registered task).
+    pub fn task(mut self, task: TaskSpec) -> Self {
         self.cfg.task = task;
         self
     }
@@ -400,7 +401,7 @@ mod tests {
     #[test]
     fn builder_produces_wire_config() {
         let exp = Experiment::builder()
-            .task(Task::Kmeans)
+            .task(TaskSpec::kmeans())
             .algo(Algo::Ol4elSync)
             .edges(7)
             .hetero(3.0)
@@ -411,7 +412,7 @@ mod tests {
             .build()
             .unwrap();
         let cfg = exp.config();
-        assert_eq!(cfg.task, Task::Kmeans);
+        assert_eq!(cfg.task, TaskSpec::kmeans());
         assert_eq!(cfg.algo, Algo::Ol4elSync);
         assert_eq!(cfg.n_edges, 7);
         assert_eq!(cfg.hetero, 3.0);
@@ -453,7 +454,7 @@ mod tests {
     #[test]
     fn presets_validate_and_match_scenarios() {
         let wafer = Experiment::svm_wafer().build().unwrap();
-        assert_eq!(wafer.config().task, Task::Svm);
+        assert_eq!(wafer.config().task, TaskSpec::svm());
         assert_eq!(wafer.config().n_edges, 5);
         assert!(matches!(
             wafer.config().partition,
@@ -461,7 +462,7 @@ mod tests {
         ));
 
         let traffic = Experiment::kmeans_traffic().build().unwrap();
-        assert_eq!(traffic.config().task, Task::Kmeans);
+        assert_eq!(traffic.config().task, TaskSpec::kmeans());
         assert!(matches!(
             traffic.config().cost.mode,
             CostMode::Variable { .. }

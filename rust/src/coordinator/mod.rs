@@ -38,20 +38,14 @@ pub use observer::{LocalReport, Observer, RunEvent, TraceObserver};
 pub use session::{default_mode, mode_for, CollaborationMode, Session};
 pub use suite::{find_outcome, find_outcome_net, CellSpec, ExperimentSuite, SuiteOutcome};
 
-use std::sync::Arc;
-
 use anyhow::{anyhow, Result};
 
 use crate::bandit::BudgetedBandit;
 use crate::config::{Algo, BanditKind, PartitionKind, RunConfig};
-use crate::data::synth::{TrafficLike, WaferLike};
-use crate::data::{eval_buffer, partition, Dataset};
+use crate::data::{eval_buffer, partition};
 use crate::edge::EdgeServer;
 use crate::engine::ComputeEngine;
-use crate::metrics;
-use crate::model::kmeans::KmeansSpec;
-use crate::model::svm::SvmSpec;
-use crate::model::{ModelState, Task};
+use crate::model::{Learner, ModelState};
 use crate::util::rng::Rng;
 
 /// One observed point of a run (recorded at global updates).
@@ -259,8 +253,12 @@ impl IntervalStrategy for Ol4elStrategy {
     }
 }
 
-/// The assembled run state: edges, global model, eval buffers, meter.
+/// The assembled run state: the task's learner, edges, global model, eval
+/// buffers, meter.
 pub struct World {
+    /// The task's learner (parameter layout, local iteration, metric,
+    /// aggregation rule — resolved once from `cfg.task`).
+    pub learner: Box<dyn Learner>,
     /// The edge fleet (local models, shards, ledgers).
     pub edges: Vec<EdgeServer>,
     /// The global model.
@@ -280,41 +278,20 @@ pub struct World {
 }
 
 impl World {
-    /// Build the fleet from a config: generate data, split eval, shard,
-    /// create edges with heterogeneity slowdowns and budget ledgers.
+    /// Build the fleet from a config: resolve the learner, generate data,
+    /// split eval, shard, create edges with heterogeneity slowdowns and
+    /// budget ledgers. Entirely task-agnostic — every task-specific
+    /// decision is a [`Learner`] call.
     pub fn build(cfg: &RunConfig, engine: &dyn ComputeEngine) -> Result<World> {
+        let _ = engine; // engines are stateless now; kept for call-site symmetry
         cfg.validate().map_err(|e| anyhow!("invalid config: {e}"))?;
-        let shapes = *engine.shapes();
+        let learner = cfg.task.learner();
         let mut rng = Rng::new(cfg.seed);
 
-        // Data + eval split sized to the HLO eval batch.
-        let (train, eval, eval_n): (Arc<Dataset>, Arc<Dataset>, usize) = match cfg.task {
-            Task::Svm => {
-                let ds = WaferLike {
-                    n: cfg.data_n,
-                    d: shapes.svm_d,
-                    classes: shapes.svm_c,
-                    separation: cfg.separation,
-                    ..Default::default()
-                }
-                .generate(&mut rng);
-                let (t, e) = ds.split_eval(shapes.svm_eval_batch);
-                (t, e, shapes.svm_eval_batch)
-            }
-            Task::Kmeans => {
-                let ds = TrafficLike {
-                    n: cfg.data_n,
-                    d: shapes.km_d,
-                    k: shapes.km_k,
-                    separation: cfg.separation,
-                    ..Default::default()
-                }
-                .generate(&mut rng);
-                let (t, e) = ds.split_eval(shapes.km_eval_batch);
-                (t, e, shapes.km_eval_batch)
-            }
-        };
-        let (eval_x, eval_y) = eval_buffer(&eval, eval_n);
+        // Data + eval split sized to the learner's eval batch.
+        let ds = learner.synth(cfg.data_n, cfg.separation, &mut rng);
+        let (train, eval) = ds.split_eval(learner.eval_batch());
+        let (eval_x, eval_y) = eval_buffer(&eval, learner.eval_batch());
 
         let shards = match cfg.partition {
             PartitionKind::Iid => partition::iid(&train, cfg.n_edges, &mut rng),
@@ -333,53 +310,10 @@ impl World {
             .slowdowns(cfg.n_edges, cfg.hetero, &mut rng);
 
         // Global model init (paper: "when t=0, we set the global model
-        // randomly"). K-means centers start at random *training points* so
-        // no cluster begins empty.
-        let global = match cfg.task {
-            Task::Svm => SvmSpec {
-                d: shapes.svm_d,
-                c: shapes.svm_c,
-                lr: cfg.hyper.lr,
-                reg: cfg.hyper.reg,
-            }
-            .init_state(),
-            Task::Kmeans => {
-                let spec = KmeansSpec {
-                    k: shapes.km_k,
-                    d: shapes.km_d,
-                };
-                // k-means++ seeding over a subsample: spreads the initial
-                // centers across blobs so no policy starts with collapsed
-                // centers (helps every algorithm equally).
-                let sample_n = train.n.min(1024);
-                let mut params = Vec::with_capacity(spec.param_len());
-                let first = train.row(rng.below(train.n));
-                params.extend_from_slice(first);
-                let mut d2 = vec![0f64; sample_n];
-                for _ in 1..spec.k {
-                    for (i, slot) in d2.iter_mut().enumerate() {
-                        let row = train.row(i * train.n / sample_n);
-                        let mut best = f64::INFINITY;
-                        for c in 0..params.len() / spec.d {
-                            let center = &params[c * spec.d..(c + 1) * spec.d];
-                            let dist: f64 = row
-                                .iter()
-                                .zip(center)
-                                .map(|(a, b)| ((a - b) as f64).powi(2))
-                                .sum();
-                            best = best.min(dist);
-                        }
-                        *slot = best;
-                    }
-                    let pick = rng.weighted_choice(&d2).unwrap_or(0);
-                    params.extend_from_slice(train.row(pick * train.n / sample_n));
-                }
-                ModelState {
-                    task: Task::Kmeans,
-                    params,
-                }
-            }
-        };
+        // randomly") — the learner owns the layout and any data-dependent
+        // seeding (K-means++ starts centers at training points so no
+        // cluster begins empty).
+        let global = ModelState::new(learner.init_params(&train, &mut rng));
 
         let edges: Vec<EdgeServer> = shards
             .into_iter()
@@ -390,6 +324,7 @@ impl World {
             .collect();
 
         Ok(World {
+            learner,
             edges,
             global,
             version: 0,
@@ -401,9 +336,11 @@ impl World {
         })
     }
 
-    /// Evaluate the global model's test metric (accuracy / clustering F1).
-    pub fn evaluate(&self, cfg: &RunConfig, engine: &dyn ComputeEngine) -> Result<f64> {
-        evaluate_model(&self.global, cfg.task, engine, &self.eval_x, &self.eval_y)
+    /// Evaluate the global model's test metric (the learner's headline
+    /// metric: accuracy, clustering F1, …).
+    pub fn evaluate(&self, engine: &dyn ComputeEngine) -> Result<f64> {
+        self.learner
+            .evaluate(engine, &self.global.params, &self.eval_x, &self.eval_y)
     }
 
     /// Mean per-edge resource consumed.
@@ -446,28 +383,16 @@ impl World {
     }
 }
 
-/// Metric of an arbitrary model on a fixed eval buffer.
+/// Metric of an arbitrary model on a fixed eval buffer (thin forwarding
+/// wrapper over [`Learner::evaluate`] for call sites holding raw state).
 pub fn evaluate_model(
     model: &ModelState,
-    task: Task,
+    learner: &dyn Learner,
     engine: &dyn ComputeEngine,
     eval_x: &[f32],
     eval_y: &[i32],
 ) -> Result<f64> {
-    match task {
-        Task::Svm => {
-            let (correct, _loss) = engine.svm_eval(&model.params, eval_x, eval_y)?;
-            Ok(metrics::accuracy(correct, eval_y.len()))
-        }
-        Task::Kmeans => {
-            let (assign, _inertia) = engine.kmeans_eval(&model.params, eval_x)?;
-            Ok(metrics::clustering_f1(
-                &assign,
-                eval_y,
-                engine.shapes().km_k,
-            ))
-        }
-    }
+    learner.evaluate(engine, &model.params, eval_x, eval_y)
 }
 
 /// Build the configured interval strategy for a fleet with the given
@@ -555,9 +480,23 @@ mod tests {
         let cfg = small_cfg();
         let engine = NativeEngine::default();
         let w = World::build(&cfg, &engine).unwrap();
-        let m = w.evaluate(&cfg, &engine).unwrap();
+        let m = w.evaluate(&engine).unwrap();
         // Zero-weight SVM predicts class 0 for everything: ~1/8 accuracy.
         assert!(m < 0.3, "untrained accuracy {m}");
+    }
+
+    #[test]
+    fn world_builds_for_every_registered_task() {
+        let engine = NativeEngine::default();
+        for name in ["svm", "kmeans", "logreg", "gmm"] {
+            let mut cfg = small_cfg();
+            cfg.task = crate::model::TaskSpec::parse(name).unwrap();
+            let w = World::build(&cfg, &engine).unwrap();
+            assert_eq!(w.learner.name(), name);
+            assert_eq!(w.global.len(), w.learner.param_len(), "{name}");
+            let m = w.evaluate(&engine).unwrap();
+            assert!((0.0..=1.0).contains(&m), "{name}: metric {m}");
+        }
     }
 
     #[test]

@@ -142,7 +142,7 @@ impl<'e> Session<'e> {
 
     /// Evaluate the global model's test metric.
     pub fn evaluate(&self) -> Result<f64> {
-        self.world.evaluate(&self.cfg, self.engine)
+        self.world.evaluate(self.engine)
     }
 
     /// Learning utility of a global update `prev -> world.global` with the
@@ -153,7 +153,9 @@ impl<'e> Session<'e> {
 
     /// Run `tau` local iterations on one edge's engine-backed model.
     pub fn local_round(&mut self, edge: usize, tau: usize, hyper: &Hyper) -> Result<LocalRound> {
-        self.world.edges[edge].local_round(tau, self.engine, &self.cfg.cost, hyper)
+        let world = &mut self.world;
+        let (learner, edges) = (&world.learner, &mut world.edges);
+        edges[edge].local_round(tau, learner.as_ref(), self.engine, &self.cfg.cost, hyper)
     }
 
     /// Failure injection (fail-stop): rolls the configured crash
@@ -300,14 +302,14 @@ mod tests {
     use super::*;
     use crate::coordinator::observer::from_fn;
     use crate::engine::native::NativeEngine;
-    use crate::model::Task;
+    use crate::model::TaskSpec;
     use std::cell::Cell;
     use std::rc::Rc;
 
     fn cfg(algo: Algo) -> RunConfig {
         RunConfig {
             algo,
-            task: Task::Svm,
+            task: TaskSpec::svm(),
             data_n: 3000,
             budget: 900.0,
             n_edges: 3,

@@ -16,14 +16,14 @@ use anyhow::{anyhow, Result};
 use crate::config::{Algo, RunConfig};
 use crate::coordinator::{self, Aggregate, RunResult};
 use crate::engine::{build_engine, ComputeEngine, EngineKind};
-use crate::model::Task;
+use crate::model::TaskSpec;
 use crate::net::NetworkSpec;
 
 /// The axis coordinates of one grid cell.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct CellSpec {
-    /// Learning task of the cell.
-    pub task: Task,
+    /// Learning task of the cell (registry spec).
+    pub task: TaskSpec,
     /// Coordination algorithm of the cell.
     pub algo: Algo,
     /// Fleet size of the cell.
@@ -51,7 +51,7 @@ pub struct SuiteOutcome {
 pub struct ExperimentSuite {
     name: String,
     base: RunConfig,
-    tasks: Vec<Task>,
+    tasks: Vec<TaskSpec>,
     algos: Vec<Algo>,
     fleet_sizes: Vec<usize>,
     heteros: Vec<f64>,
@@ -86,8 +86,9 @@ impl ExperimentSuite {
         &self.name
     }
 
-    /// Sweep axis: learning tasks.
-    pub fn tasks(mut self, tasks: impl IntoIterator<Item = Task>) -> Self {
+    /// Sweep axis: learning tasks (registry specs, e.g.
+    /// `TaskSpec::parse("kmeans:k=5")`).
+    pub fn tasks(mut self, tasks: impl IntoIterator<Item = TaskSpec>) -> Self {
         self.tasks = tasks.into_iter().collect();
         self
     }
@@ -151,12 +152,12 @@ impl ExperimentSuite {
     /// Materialize the grid (task-major, then algo, fleet size, hetero,
     /// network).
     pub fn cells(&self) -> Vec<(CellSpec, RunConfig)> {
-        let one_task = [self.base.task];
+        let one_task = [self.base.task.clone()];
         let one_algo = [self.base.algo];
         let one_n = [self.base.n_edges];
         let one_h = [self.base.hetero];
         let one_net = [self.base.network.clone()];
-        let tasks: &[Task] = if self.tasks.is_empty() { &one_task } else { &self.tasks };
+        let tasks: &[TaskSpec] = if self.tasks.is_empty() { &one_task } else { &self.tasks };
         let algos: &[Algo] = if self.algos.is_empty() { &one_algo } else { &self.algos };
         let ns: &[usize] = if self.fleet_sizes.is_empty() { &one_n } else { &self.fleet_sizes };
         let hs: &[f64] = if self.heteros.is_empty() { &one_h } else { &self.heteros };
@@ -164,13 +165,13 @@ impl ExperimentSuite {
 
         let cap = tasks.len() * algos.len() * ns.len() * hs.len() * nets.len();
         let mut cells = Vec::with_capacity(cap);
-        for &task in tasks {
+        for task in tasks {
             for &algo in algos {
                 for &n_edges in ns {
                     for &hetero in hs {
                         for net in nets {
                             let mut cfg = self.base.clone();
-                            cfg.task = task;
+                            cfg.task = task.clone();
                             cfg.algo = algo;
                             cfg.n_edges = n_edges;
                             cfg.hetero = hetero;
@@ -179,7 +180,7 @@ impl ExperimentSuite {
                                 f(&mut cfg);
                             }
                             let spec = CellSpec {
-                                task: cfg.task,
+                                task: cfg.task.clone(),
                                 algo: cfg.algo,
                                 n_edges: cfg.n_edges,
                                 hetero: cfg.hetero,
@@ -241,7 +242,7 @@ impl ExperimentSuite {
                             break;
                         }
                         let (spec, cfg) = &cells[i];
-                        match self.run_cell(*spec, cfg, engine.as_ref()) {
+                        match self.run_cell(spec.clone(), cfg, engine.as_ref()) {
                             Ok(outcome) => *slots[i].lock().unwrap() = Some(outcome),
                             Err(e) => errors
                                 .lock()
@@ -301,19 +302,19 @@ impl ExperimentSuite {
 
 /// Look up a cell's outcome by its axis coordinates.
 ///
-/// `CellSpec` does not carry the network axis (it predates it and stays
-/// `Copy`), so in a suite built with [`ExperimentSuite::networks`] this
-/// returns the FIRST matching cell — i.e. the first network in the axis.
-/// Use [`find_outcome_net`] to disambiguate across network conditions.
+/// `CellSpec` does not carry the network axis (it predates it), so in a
+/// suite built with [`ExperimentSuite::networks`] this returns the FIRST
+/// matching cell — i.e. the first network in the axis. Use
+/// [`find_outcome_net`] to disambiguate across network conditions.
 pub fn find_outcome<'a>(
     outcomes: &'a [SuiteOutcome],
-    task: Task,
+    task: &TaskSpec,
     algo: Algo,
     n_edges: usize,
     hetero: f64,
 ) -> Option<&'a SuiteOutcome> {
     outcomes.iter().find(|o| {
-        o.spec.task == task
+        o.spec.task == *task
             && o.spec.algo == algo
             && o.spec.n_edges == n_edges
             && o.spec.hetero == hetero
@@ -325,14 +326,14 @@ pub fn find_outcome<'a>(
 /// specific cell of a suite swept with [`ExperimentSuite::networks`].
 pub fn find_outcome_net<'a>(
     outcomes: &'a [SuiteOutcome],
-    task: Task,
+    task: &TaskSpec,
     algo: Algo,
     n_edges: usize,
     hetero: f64,
     network: &NetworkSpec,
 ) -> Option<&'a SuiteOutcome> {
     outcomes.iter().find(|o| {
-        o.spec.task == task
+        o.spec.task == *task
             && o.spec.algo == algo
             && o.spec.n_edges == n_edges
             && o.spec.hetero == hetero
@@ -357,16 +358,16 @@ mod tests {
     #[test]
     fn cells_cross_product_in_declared_order() {
         let suite = ExperimentSuite::new("t", small_base())
-            .tasks([Task::Kmeans, Task::Svm])
+            .tasks([TaskSpec::kmeans(), TaskSpec::svm()])
             .algos([Algo::Ol4elSync, Algo::Ol4elAsync])
             .heteros([1.0, 5.0]);
         let cells = suite.cells();
         assert_eq!(cells.len(), 8);
-        assert_eq!(cells[0].0.task, Task::Kmeans);
+        assert_eq!(cells[0].0.task, TaskSpec::kmeans());
         assert_eq!(cells[0].0.algo, Algo::Ol4elSync);
         assert_eq!(cells[0].0.hetero, 1.0);
         assert_eq!(cells[1].0.hetero, 5.0);
-        assert_eq!(cells[7].0.task, Task::Svm);
+        assert_eq!(cells[7].0.task, TaskSpec::svm());
         assert_eq!(cells[7].0.algo, Algo::Ol4elAsync);
     }
 
@@ -485,13 +486,13 @@ mod tests {
         let outs = suite.run_native().unwrap();
         assert_eq!(outs.len(), 2);
         // The plain lookup cannot tell the two cells apart (first wins)...
-        let first = find_outcome(&outs, Task::Svm, Algo::Ol4elAsync, 3, 1.0).unwrap();
+        let first = find_outcome(&outs, &TaskSpec::svm(), Algo::Ol4elAsync, 3, 1.0).unwrap();
         assert!(first.cfg.network.is_ideal());
         // ...the net-aware lookup addresses each condition exactly.
-        let slow = find_outcome_net(&outs, Task::Svm, Algo::Ol4elAsync, 3, 1.0, &fixed).unwrap();
+        let slow = find_outcome_net(&outs, &TaskSpec::svm(), Algo::Ol4elAsync, 3, 1.0, &fixed).unwrap();
         assert_eq!(slow.cfg.network, fixed);
         assert!(
-            find_outcome_net(&outs, Task::Svm, Algo::Ol4elAsync, 3, 1.0, &NetworkSpec::ideal())
+            find_outcome_net(&outs, &TaskSpec::svm(), Algo::Ol4elAsync, 3, 1.0, &NetworkSpec::ideal())
                 .unwrap()
                 .cfg
                 .network
@@ -503,7 +504,7 @@ mod tests {
     fn find_outcome_locates_cells() {
         let suite = ExperimentSuite::new("t", small_base()).heteros([1.0, 2.0]);
         let outs = suite.run_native().unwrap();
-        assert!(find_outcome(&outs, Task::Svm, Algo::Ol4elAsync, 3, 2.0).is_some());
-        assert!(find_outcome(&outs, Task::Svm, Algo::Ol4elAsync, 3, 9.0).is_none());
+        assert!(find_outcome(&outs, &TaskSpec::svm(), Algo::Ol4elAsync, 3, 2.0).is_some());
+        assert!(find_outcome(&outs, &TaskSpec::svm(), Algo::Ol4elAsync, 3, 9.0).is_none());
     }
 }

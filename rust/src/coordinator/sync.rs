@@ -14,8 +14,8 @@ use anyhow::Result;
 
 use crate::coordinator::observer::{LocalReport, RunEvent};
 use crate::coordinator::session::{CollaborationMode, Session};
-use crate::coordinator::{aggregate, RoundObservation};
-use crate::model::ModelState;
+use crate::coordinator::RoundObservation;
+use crate::model::{Learner as _, ModelState};
 
 /// Barrier-round scheduling + weighted-average merging.
 #[derive(Debug, Default)]
@@ -110,15 +110,16 @@ impl CollaborationMode for SyncBarrier {
             return Ok(()); // the barrier waits for the whole cohort
         }
 
-        // Weighted-average aggregation over the complete cohort.
+        // Aggregation over the complete cohort via the learner's merge
+        // rule (default: shard-weighted parameter averaging).
         let prev_global = s.world.global.clone();
-        let locals: Vec<(&ModelState, f64)> = s
+        let locals: Vec<(&[f32], f64)> = s
             .world
             .edges
             .iter()
-            .map(|e| (&e.model, s.world.weights[e.id]))
+            .map(|e| (e.model.params.as_slice(), s.world.weights[e.id]))
             .collect();
-        let new_global = aggregate::weighted_average(&locals);
+        let new_global = ModelState::new(s.world.learner.aggregate(&locals));
 
         // Observation for adaptive strategies (divergence BEFORE download).
         let divergence = s
@@ -170,9 +171,9 @@ mod tests {
     use crate::config::{Algo, RunConfig};
     use crate::coordinator::run;
     use crate::engine::native::NativeEngine;
-    use crate::model::Task;
+    use crate::model::TaskSpec;
 
-    fn cfg(algo: Algo, task: Task) -> RunConfig {
+    fn cfg(algo: Algo, task: TaskSpec) -> RunConfig {
         RunConfig {
             algo,
             task,
@@ -187,7 +188,7 @@ mod tests {
     #[test]
     fn sync_run_consumes_budget_and_updates() {
         let engine = NativeEngine::default();
-        let r = run(&cfg(Algo::Ol4elSync, Task::Svm), &engine).unwrap();
+        let r = run(&cfg(Algo::Ol4elSync, TaskSpec::svm()), &engine).unwrap();
         assert!(r.total_updates > 0, "no global updates happened");
         assert!(r.mean_spent > 0.0);
         assert!(r.mean_spent <= 1500.0 + 400.0, "overdraft too large");
@@ -198,7 +199,7 @@ mod tests {
     #[test]
     fn sync_budgets_never_overdraw_beyond_one_round() {
         let engine = NativeEngine::default();
-        let c = cfg(Algo::Ol4elSync, Task::Kmeans);
+        let c = cfg(Algo::Ol4elSync, TaskSpec::kmeans());
         let r = run(&c, &engine).unwrap();
         // Ledger can exceed budget by at most one barrier round (the last).
         let max_round = c.cost.nominal_arm_cost(c.tau_max, c.hetero.max(1.0));
@@ -208,7 +209,7 @@ mod tests {
     #[test]
     fn sync_improves_over_untrained() {
         let engine = NativeEngine::default();
-        let r = run(&cfg(Algo::Ol4elSync, Task::Svm), &engine).unwrap();
+        let r = run(&cfg(Algo::Ol4elSync, TaskSpec::svm()), &engine).unwrap();
         let first = r.trace.first().unwrap().metric;
         assert!(
             r.final_metric > first + 0.1,
@@ -220,7 +221,7 @@ mod tests {
     #[test]
     fn fixed_i_baseline_runs() {
         let engine = NativeEngine::default();
-        let r = run(&cfg(Algo::FixedI, Task::Svm), &engine).unwrap();
+        let r = run(&cfg(Algo::FixedI, TaskSpec::svm()), &engine).unwrap();
         assert!(r.total_updates > 0);
         // Fixed-I only ever pulls one arm.
         let nonzero: Vec<usize> = r
@@ -236,7 +237,7 @@ mod tests {
     #[test]
     fn heterogeneity_reduces_sync_updates() {
         let engine = NativeEngine::default();
-        let mut lo = cfg(Algo::Ol4elSync, Task::Svm);
+        let mut lo = cfg(Algo::Ol4elSync, TaskSpec::svm());
         lo.hetero = 1.0;
         let mut hi = lo.clone();
         hi.hetero = 10.0;
@@ -260,7 +261,7 @@ mod tests {
         let reports = Rc::new(Cell::new(0u64));
         let rounds = Rc::new(Cell::new(0u64));
         let (rp, rd) = (reports.clone(), rounds.clone());
-        let mut session = Session::new(&cfg(Algo::Ol4elSync, Task::Svm), &engine).unwrap();
+        let mut session = Session::new(&cfg(Algo::Ol4elSync, TaskSpec::svm()), &engine).unwrap();
         session.observe(from_fn(move |ev| match ev {
             crate::coordinator::RunEvent::LocalReport { .. } => rp.set(rp.get() + 1),
             crate::coordinator::RunEvent::RoundStart { edge: None, .. } => rd.set(rd.get() + 1),

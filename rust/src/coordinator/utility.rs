@@ -94,13 +94,9 @@ impl UtilityMeter {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::Task;
 
     fn state(p: Vec<f32>) -> ModelState {
-        ModelState {
-            task: Task::Svm,
-            params: p,
-        }
+        ModelState::new(p)
     }
 
     #[test]

@@ -21,7 +21,7 @@ use crate::config::RunConfig;
 use crate::coordinator::{aggregate, build_strategy, utility::UtilityMeter, World};
 use crate::engine::native::NativeEngine;
 use crate::engine::ComputeEngine;
-use crate::model::ModelState;
+use crate::model::{Learner as _, ModelState};
 
 /// Leader -> edge commands.
 enum Command {
@@ -80,19 +80,21 @@ pub fn run_threaded(cfg: &RunConfig, leader_engine: &dyn ComputeEngine) -> Resul
     let mut cmd_txs: Vec<mpsc::Sender<Command>> = Vec::with_capacity(n);
     let mut handles = Vec::with_capacity(n);
 
-    // Spawn edge threads. Each owns its shard (moved out of the World) and
-    // charges measured, slowdown-scaled wall-clock per round.
+    // Spawn edge threads. Each owns its shard (moved out of the World),
+    // materializes its own learner from the task spec, and charges
+    // measured, slowdown-scaled wall-clock per round.
     for (i, edge) in world.edges.iter_mut().enumerate() {
         let (cmd_tx, cmd_rx) = mpsc::channel::<Command>();
         cmd_txs.push(cmd_tx);
         let mut shard = edge.shard.clone();
         let slowdown = edge.slowdown;
-        let task = edge.model.task;
-        let shapes = *leader_engine.shapes();
+        let task = cfg.task.clone();
         let reg = cfg.hyper.reg;
         let report_tx = report_tx.clone();
         handles.push(thread::spawn(move || {
-            let engine = NativeEngine::new(shapes);
+            let learner = task.learner();
+            let engine = NativeEngine::default();
+            let batch = learner.batch();
             let mut xbuf: Vec<f32> = Vec::new();
             let mut ybuf: Vec<i32> = Vec::new();
             while let Ok(cmd) = cmd_rx.recv() {
@@ -106,37 +108,21 @@ pub fn run_threaded(cfg: &RunConfig, leader_engine: &dyn ComputeEngine) -> Resul
                     } => {
                         let t0 = Instant::now();
                         let mut signal = 0.0f64;
+                        let hyper = crate::edge::Hyper {
+                            lr,
+                            reg,
+                            lr_decay: 0.0, // the leader decays lr per dispatch
+                        };
                         for _ in 0..tau {
-                            match task {
-                                crate::model::Task::Svm => {
-                                    shard.next_batch(shapes.svm_batch, &mut xbuf, &mut ybuf);
-                                    if let Ok(out) =
-                                        engine.svm_step(&mut global.params, &xbuf, &ybuf, lr, reg)
-                                    {
-                                        signal += out.loss as f64;
-                                    }
-                                }
-                                crate::model::Task::Kmeans => {
-                                    shard.next_batch(shapes.km_batch, &mut xbuf, &mut ybuf);
-                                    if let Ok(out) = engine.kmeans_step(&global.params, &xbuf) {
-                                        let spec = crate::model::kmeans::KmeansSpec {
-                                            k: shapes.km_k,
-                                            d: shapes.km_d,
-                                        };
-                                        let eta = (lr as f64 * 0.75).clamp(0.0, 1.0) as f32;
-                                        let mut target = global.params.clone();
-                                        crate::model::kmeans::mstep(
-                                            &mut target,
-                                            &out.sums,
-                                            &out.counts,
-                                            &spec,
-                                        );
-                                        for (c, t) in global.params.iter_mut().zip(&target) {
-                                            *c += eta * (*t - *c);
-                                        }
-                                        signal += out.inertia as f64;
-                                    }
-                                }
+                            shard.next_batch(batch, &mut xbuf, &mut ybuf);
+                            if let Ok(out) = learner.local_step(
+                                &engine,
+                                &mut global.params,
+                                &xbuf,
+                                &ybuf,
+                                &hyper,
+                            ) {
+                                signal += out.signal;
                             }
                         }
                         // Impose heterogeneity: a slowdown-s edge really
@@ -168,7 +154,7 @@ pub fn run_threaded(cfg: &RunConfig, leader_engine: &dyn ComputeEngine) -> Resul
     let mut active = vec![true; n];
     let mut updates = 0u64;
     let mut per_edge_rounds = vec![0u64; n];
-    let mut last_metric = world.evaluate(cfg, leader_engine)?;
+    let mut last_metric = world.evaluate(leader_engine)?;
     for i in 0..n {
         dispatch(cfg, &mut world, &mut *strategy, &cmd_txs, &mut active, i)?;
     }
@@ -191,7 +177,7 @@ pub fn run_threaded(cfg: &RunConfig, leader_engine: &dyn ComputeEngine) -> Resul
         world.version += 1;
         updates += 1;
 
-        let metric = world.evaluate(cfg, leader_engine)?;
+        let metric = world.evaluate(leader_engine)?;
         let u = meter.measure(&prev_global, &world.global, metric);
         strategy.feedback(i, report.tau, u, report.cost_ms);
         last_metric = metric;
@@ -256,12 +242,12 @@ fn dispatch(
 mod tests {
     use super::*;
     use crate::config::Algo;
-    use crate::model::Task;
+    use crate::model::TaskSpec;
     use crate::sim::cost::{CostMode, CostModel};
 
     fn cfg() -> RunConfig {
         RunConfig {
-            task: Task::Svm,
+            task: TaskSpec::svm(),
             algo: Algo::Ol4elAsync,
             n_edges: 3,
             hetero: 3.0,
@@ -303,7 +289,7 @@ mod tests {
     fn threaded_deploy_kmeans_runs() {
         let engine = NativeEngine::default();
         let mut c = cfg();
-        c.task = Task::Kmeans;
+        c.task = TaskSpec::kmeans();
         let r = run_threaded(&c, &engine).unwrap();
         assert!(r.total_updates > 0);
         assert!(r.final_metric > 0.2);

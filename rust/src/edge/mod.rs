@@ -6,8 +6,7 @@ use anyhow::Result;
 
 use crate::data::Shard;
 use crate::engine::ComputeEngine;
-use crate::model::kmeans::KmeansSpec;
-use crate::model::{kmeans, ModelState, Task};
+use crate::model::{Learner, ModelState};
 use crate::sim::cost::CostModel;
 use crate::util::rng::Rng;
 
@@ -51,8 +50,9 @@ impl Hyper {
 pub struct LocalRound {
     /// Total compute cost charged for the τ iterations (resource ms).
     pub comp_cost: f64,
-    /// Mean training signal across iterations (hinge loss for SVM, batch
-    /// inertia for K-means) — diagnostics only, not the bandit reward.
+    /// Mean training signal across iterations (the learner's per-batch
+    /// signal: hinge loss, inertia, NLL, …) — diagnostics only, not the
+    /// bandit reward.
     pub train_signal: f64,
     /// Iterations actually executed (τ, or fewer on budget exhaustion).
     pub iterations: usize,
@@ -141,59 +141,33 @@ impl EdgeServer {
         }
     }
 
-    /// Run τ local iterations on `engine`, charging compute resource per
-    /// the cost model. Does NOT charge communication (the coordinator does
-    /// that at the global update, where it also decides sync-barrier
-    /// semantics).
+    /// Run τ local iterations of `learner` on `engine`, charging compute
+    /// resource per the cost model. Does NOT charge communication (the
+    /// coordinator does that at the global update, where it also decides
+    /// sync-barrier semantics).
     pub fn local_round(
         &mut self,
         tau: usize,
+        learner: &dyn Learner,
         engine: &dyn ComputeEngine,
         cost: &CostModel,
         hyper: &Hyper,
     ) -> Result<LocalRound> {
         assert!(tau >= 1, "tau must be >= 1");
-        let shapes = *engine.shapes();
+        let batch = learner.batch();
         let mut total_cost = 0.0;
         let mut signal = 0.0;
         for _ in 0..tau {
             let t0 = std::time::Instant::now();
-            match self.model.task {
-                Task::Svm => {
-                    self.shard
-                        .next_batch(shapes.svm_batch, &mut self.xbuf, &mut self.ybuf);
-                    let out = engine.svm_step(
-                        &mut self.model.params,
-                        &self.xbuf,
-                        &self.ybuf,
-                        hyper.lr,
-                        hyper.reg,
-                    )?;
-                    signal += out.loss as f64;
-                }
-                Task::Kmeans => {
-                    self.shard
-                        .next_batch(shapes.km_batch, &mut self.xbuf, &mut self.ybuf);
-                    let out = engine.kmeans_step(&self.model.params, &self.xbuf)?;
-                    let spec = KmeansSpec {
-                        k: shapes.km_k,
-                        d: shapes.km_d,
-                    };
-                    // Damped mini-batch M-step (Sculley-style online
-                    // K-means): centers move a decaying step toward the
-                    // batch means. Like the SVM's lr decay, this couples
-                    // clustering quality to the number of achievable
-                    // updates — a full M-step per tiny batch would both
-                    // thrash and converge instantly.
-                    let eta = (hyper.lr as f64 * 0.75).clamp(0.0, 1.0) as f32;
-                    let mut target = self.model.params.clone();
-                    kmeans::mstep(&mut target, &out.sums, &out.counts, &spec);
-                    for (c, t) in self.model.params.iter_mut().zip(&target) {
-                        *c += eta * (*t - *c);
-                    }
-                    signal += out.inertia as f64;
-                }
-            }
+            self.shard.next_batch(batch, &mut self.xbuf, &mut self.ybuf);
+            let out = learner.local_step(
+                engine,
+                &mut self.model.params,
+                &self.xbuf,
+                &self.ybuf,
+                hyper,
+            )?;
+            signal += out.signal;
             let measured_ms = t0.elapsed().as_secs_f64() * 1e3;
             total_cost += cost.sample_comp(self.slowdown, measured_ms, &mut self.rng);
         }
@@ -214,57 +188,24 @@ impl EdgeServer {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::synth::TrafficLike;
-    use crate::data::{partition, Dataset};
+    use crate::data::partition;
     use crate::engine::native::NativeEngine;
-    use crate::engine::Shapes;
-    use crate::model::svm::SvmSpec;
+    use crate::model::TaskSpec;
     use std::sync::Arc;
 
-    fn mk_edge(task: Task) -> (EdgeServer, NativeEngine) {
+    fn mk_edge(spec: TaskSpec) -> (EdgeServer, Box<dyn Learner>, NativeEngine) {
         let mut rng = Rng::new(0);
-        let shapes = Shapes::default();
-        let engine = NativeEngine::new(shapes);
-        let (ds, model): (Arc<Dataset>, ModelState) = match task {
-            Task::Kmeans => {
-                let ds = Arc::new(
-                    TrafficLike {
-                        n: 2000,
-                        ..Default::default()
-                    }
-                    .generate(&mut rng),
-                );
-                let spec = KmeansSpec {
-                    k: shapes.km_k,
-                    d: shapes.km_d,
-                };
-                (ds, spec.init_state(&mut rng))
-            }
-            Task::Svm => {
-                let ds = Arc::new(
-                    crate::data::synth::WaferLike {
-                        n: 2000,
-                        ..Default::default()
-                    }
-                    .generate(&mut rng),
-                );
-                let spec = SvmSpec {
-                    d: shapes.svm_d,
-                    c: shapes.svm_c,
-                    lr: 0.05,
-                    reg: 1e-4,
-                };
-                (ds, spec.init_state())
-            }
-        };
+        let learner = spec.learner();
+        let ds = Arc::new(learner.synth(2000, 3.0, &mut rng));
+        let model = ModelState::new(learner.init_params(&ds, &mut rng));
         let shard = partition::iid(&ds, 1, &mut rng).remove(0);
         let edge = EdgeServer::new(0, shard, model, 2.0, 1000.0, rng.split());
-        (edge, engine)
+        (edge, learner, NativeEngine::default())
     }
 
     #[test]
     fn budget_ledger_and_retirement() {
-        let (mut e, _) = mk_edge(Task::Svm);
+        let (mut e, _, _) = mk_edge(TaskSpec::svm());
         assert_eq!(e.remaining(), 1000.0);
         e.charge(400.0);
         assert_eq!(e.remaining(), 600.0);
@@ -277,10 +218,12 @@ mod tests {
 
     #[test]
     fn local_round_charges_tau_times_comp() {
-        let (mut e, eng) = mk_edge(Task::Svm);
+        let (mut e, learner, eng) = mk_edge(TaskSpec::svm());
         let cost = CostModel::default(); // Fixed
         let hyper = Hyper::default();
-        let r = e.local_round(3, &eng, &cost, &hyper).unwrap();
+        let r = e
+            .local_round(3, learner.as_ref(), &eng, &cost, &hyper)
+            .unwrap();
         assert_eq!(r.iterations, 3);
         // Fixed mode: exactly tau * base_comp * slowdown.
         assert!((r.comp_cost - 3.0 * cost.base_comp * 2.0).abs() < 1e-9);
@@ -288,17 +231,24 @@ mod tests {
     }
 
     #[test]
-    fn kmeans_round_updates_centers() {
-        let (mut e, eng) = mk_edge(Task::Kmeans);
-        let before = e.model.params.clone();
-        let cost = CostModel::default();
-        e.local_round(2, &eng, &cost, &Hyper::default()).unwrap();
-        assert_ne!(before, e.model.params);
+    fn every_registered_task_runs_a_local_round() {
+        // The edge loop is task-agnostic: any registered learner must
+        // drive it, including the plugin-proof tasks.
+        for name in ["svm", "kmeans", "logreg", "gmm"] {
+            let (mut e, learner, eng) = mk_edge(TaskSpec::parse(name).unwrap());
+            let before = e.model.params.clone();
+            let cost = CostModel::default();
+            let r = e
+                .local_round(2, learner.as_ref(), &eng, &cost, &Hyper::default())
+                .unwrap();
+            assert_eq!(r.iterations, 2, "{name}");
+            assert_ne!(before, e.model.params, "{name}: params unchanged");
+        }
     }
 
     #[test]
     fn sync_with_global_copies_params() {
-        let (mut e, _) = mk_edge(Task::Svm);
+        let (mut e, _, _) = mk_edge(TaskSpec::svm());
         let mut g = e.model.clone();
         for p in g.params.iter_mut() {
             *p += 1.0;

@@ -1,14 +1,24 @@
-//! The compute engine abstraction: what an edge server's "local iteration"
-//! and the Cloud's "utility evaluation" run on.
+//! The compute engine abstraction: what an edge server's local iteration
+//! and the Cloud's evaluation run on.
 //!
-//! Two implementations:
-//! * `native` — pure Rust, shape-flexible; used for large simulator sweeps
-//!   and as the numeric oracle.
-//! * `pjrt`   — the production path: AOT-compiled HLO artifacts (JAX+Pallas
-//!   lowered at build time) executed via the PJRT CPU client. Shapes are
-//!   static per the artifact manifest.
+//! The interface is **task-agnostic** — the engine knows nothing about
+//! SVMs or K-means. Learners ([`model::learner`]) reach compute through
+//! two doors:
 //!
-//! The two are asserted numerically equivalent in rust/tests/pjrt_parity.rs.
+//! * [`EngineOps`] — primitive kernel ops (gemm/axpy/argmin-distance/
+//!   scatter-reduce), implemented ONCE by the shared [`CpuOps`] and
+//!   returned by every backend's [`ComputeEngine::ops`]. This is the
+//!   portable path every learner must provide.
+//! * [`ComputeEngine::run_kernel`] — optional fused AOT kernels, keyed by
+//!   learner name (`"svm_step"`, `"kmeans_eval"`, …). The `pjrt` backend
+//!   resolves these against its artifact manifest (JAX+Pallas lowered at
+//!   build time, executed via the PJRT CPU client); the `native` backend
+//!   ships none and learners fall back to their portable math.
+//!
+//! The two paths are asserted numerically equivalent in
+//! rust/tests/pjrt_parity.rs for the tasks that ship artifacts.
+//!
+//! [`model::learner`]: crate::model::learner
 
 pub mod native;
 pub mod pjrt;
@@ -57,8 +67,11 @@ pub fn build_engine(kind: EngineKind, artifacts_dir: &str) -> Result<Box<dyn Com
     }
 }
 
-/// Static deployment shapes (must match python/compile/model.py and
-/// artifacts/manifest.json; the pjrt engine cross-checks at load time).
+/// Shape contract of the AOT artifact manifest (must match
+/// python/compile/model.py and artifacts/manifest.json; the pjrt engine
+/// cross-checks at load time). These are the deployed dimensions of the
+/// two tasks that ship fused kernels — run-time shapes live with each
+/// [`Learner`](crate::model::Learner), which defaults to these values.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Shapes {
     /// SVM feature dimension.
@@ -99,66 +112,227 @@ impl Default for Shapes {
 }
 
 impl Shapes {
-    /// Flat parameter length of the SVM model (weights + biases).
+    /// Flat parameter length of the SVM artifact (weights + biases).
     pub fn svm_param_len(&self) -> usize {
         self.svm_d * self.svm_c + self.svm_c
     }
 
-    /// Flat parameter length of the K-means model (centers).
+    /// Flat parameter length of the K-means artifact (centers).
     pub fn km_param_len(&self) -> usize {
         self.km_k * self.km_d
     }
 }
 
-/// Output of one SVM local iteration.
-#[derive(Clone, Debug)]
-pub struct SvmStepOut {
-    /// Mean hinge loss of the batch.
-    pub loss: f32,
+/// One input buffer of a fused kernel call.
+#[derive(Clone, Copy, Debug)]
+pub enum KernelArg<'a> {
+    /// Row-major f32 tensor with its dims.
+    F32 {
+        /// Flat row-major data.
+        data: &'a [f32],
+        /// Tensor dimensions (product must equal `data.len()`).
+        dims: &'a [usize],
+    },
+    /// Row-major i32 tensor with its dims.
+    I32 {
+        /// Flat row-major data.
+        data: &'a [i32],
+        /// Tensor dimensions (product must equal `data.len()`).
+        dims: &'a [usize],
+    },
+    /// Scalar f32 (hyperparameters like lr/reg).
+    Scalar(f32),
 }
 
-/// Output of one K-means statistics pass.
-#[derive(Clone, Debug)]
-pub struct KmeansStepOut {
-    /// Per-cluster coordinate sums (k × d, row-major).
-    pub sums: Vec<f32>,
-    /// Per-cluster assignment counts.
-    pub counts: Vec<f32>,
-    /// Batch inertia (sum of squared distances to assigned centers).
-    pub inertia: f32,
+/// Expected type of one fused-kernel output (the caller — the learner —
+/// owns the artifact's output contract).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OutKind {
+    /// Flat f32 buffer.
+    F32Vec,
+    /// Flat i32 buffer.
+    I32Vec,
+    /// Scalar f32.
+    Scalar,
 }
 
-/// A compute backend. Parameter layouts follow model/mod.rs.
+/// One output buffer of a fused kernel call.
+#[derive(Clone, Debug)]
+pub enum KernelOut {
+    /// Flat f32 buffer.
+    F32(Vec<f32>),
+    /// Flat i32 buffer.
+    I32(Vec<i32>),
+    /// Scalar f32.
+    Scalar(f32),
+}
+
+impl KernelOut {
+    /// Unwrap an f32 buffer output.
+    pub fn into_f32s(self) -> Result<Vec<f32>> {
+        match self {
+            KernelOut::F32(v) => Ok(v),
+            other => Err(anyhow!("expected f32 kernel output, got {other:?}")),
+        }
+    }
+
+    /// Unwrap an i32 buffer output.
+    pub fn into_i32s(self) -> Result<Vec<i32>> {
+        match self {
+            KernelOut::I32(v) => Ok(v),
+            other => Err(anyhow!("expected i32 kernel output, got {other:?}")),
+        }
+    }
+
+    /// Unwrap a scalar output.
+    pub fn into_scalar(self) -> Result<f32> {
+        match self {
+            KernelOut::Scalar(v) => Ok(v),
+            other => Err(anyhow!("expected scalar kernel output, got {other:?}")),
+        }
+    }
+}
+
+/// Task-agnostic primitive kernel ops — the portable compute surface
+/// learners compose their math from. Implemented once ([`CpuOps`]) and
+/// shared by every backend; the f32 accumulation orders are part of the
+/// numeric contract (they match the AOT kernels' reference semantics).
+pub trait EngineOps {
+    /// Dense scores: `out[i*c + j] = x_i · w[:, j] + b[j]` for `n` rows of
+    /// `d` features against a row-major `[d, c]` weight matrix.
+    fn gemm_bias(&self, x: &[f32], w: &[f32], b: &[f32], d: usize, c: usize, out: &mut [f32]);
+
+    /// `y += a * x` (in place).
+    fn axpy(&self, a: f32, x: &[f32], y: &mut [f32]);
+
+    /// Nearest-center assignment of `n` rows against row-major `[k, d]`
+    /// centers; fills `assign` (resized to `n`) and returns the summed
+    /// squared distance (inertia). Ties break to the lowest index.
+    fn argmin_dist(&self, x: &[f32], centers: &[f32], d: usize, k: usize, assign: &mut Vec<i32>)
+        -> f32;
+
+    /// Scatter rows of `x` into per-group coordinate sums and counts by
+    /// `assign` (groups in `0..k`).
+    fn scatter_add(
+        &self,
+        x: &[f32],
+        assign: &[i32],
+        d: usize,
+        k: usize,
+        sums: &mut [f32],
+        counts: &mut [f32],
+    );
+
+    /// Sum-reduce a buffer in f64 (order-stable left fold).
+    fn reduce_sum(&self, v: &[f32]) -> f64;
+}
+
+/// The shared CPU implementation of [`EngineOps`] (the only one: backends
+/// differ in fused kernels, not primitives).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CpuOps;
+
+/// The process-wide [`CpuOps`] instance backends hand out from
+/// [`ComputeEngine::ops`].
+pub static CPU_OPS: CpuOps = CpuOps;
+
+impl EngineOps for CpuOps {
+    fn gemm_bias(&self, x: &[f32], w: &[f32], b: &[f32], d: usize, c: usize, out: &mut [f32]) {
+        crate::model::svm::scores_into(x, w, b, d, c, out);
+    }
+
+    fn axpy(&self, a: f32, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), y.len(), "axpy length mismatch");
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += a * *xi;
+        }
+    }
+
+    fn argmin_dist(
+        &self,
+        x: &[f32],
+        centers: &[f32],
+        d: usize,
+        k: usize,
+        assign: &mut Vec<i32>,
+    ) -> f32 {
+        let spec = crate::model::kmeans::KmeansSpec { k, d };
+        let (a, inertia) = crate::model::kmeans::assign(centers, x, &spec);
+        *assign = a;
+        inertia
+    }
+
+    fn scatter_add(
+        &self,
+        x: &[f32],
+        assign: &[i32],
+        d: usize,
+        k: usize,
+        sums: &mut [f32],
+        counts: &mut [f32],
+    ) {
+        assert_eq!(sums.len(), k * d, "scatter_add sums length");
+        assert_eq!(counts.len(), k, "scatter_add counts length");
+        assert_eq!(assign.len() * d, x.len(), "scatter_add row count");
+        for (i, &g) in assign.iter().enumerate() {
+            let g = g as usize;
+            assert!(g < k, "scatter_add group out of range");
+            counts[g] += 1.0;
+            let row = &x[i * d..(i + 1) * d];
+            let sg = &mut sums[g * d..(g + 1) * d];
+            for (s, v) in sg.iter_mut().zip(row) {
+                *s += v;
+            }
+        }
+    }
+
+    fn reduce_sum(&self, v: &[f32]) -> f64 {
+        v.iter().map(|&x| x as f64).sum()
+    }
+}
+
+/// A compute backend. Task-agnostic: primitives via [`ops`], optional
+/// fused per-learner AOT kernels via [`run_kernel`].
 ///
-/// Deliberately NOT `Send`: the pjrt engine holds an `Rc`-based PJRT client.
-/// Parallel sweeps construct one (native) engine per worker thread instead.
+/// Deliberately NOT `Send`: the pjrt engine holds an `Rc`-based PJRT
+/// client. Parallel sweeps construct one (native) engine per worker
+/// thread instead.
+///
+/// [`ops`]: ComputeEngine::ops
+/// [`run_kernel`]: ComputeEngine::run_kernel
 pub trait ComputeEngine {
     /// The backend's display name.
     fn name(&self) -> &'static str;
 
-    /// The deployment shapes this engine was built for.
-    fn shapes(&self) -> &Shapes;
+    /// The primitive kernel ops (shared CPU implementation by default).
+    fn ops(&self) -> &dyn EngineOps {
+        &CPU_OPS
+    }
 
-    /// One SGD step on the regularized multiclass hinge; `params` updated
-    /// in place. x is [batch, d] row-major, y [batch].
-    fn svm_step(
+    /// Whether this backend ships a fused kernel named `kernel`
+    /// (convention: `"{learner}_step"` / `"{learner}_eval"`, keyed by
+    /// learner name in the artifact manifest).
+    fn has_kernel(&self, kernel: &str) -> bool {
+        let _ = kernel;
+        false
+    }
+
+    /// Execute a fused kernel. `outs` declares the expected output types
+    /// (the learner owns its artifact's I/O contract). Backends without
+    /// the kernel error; call [`has_kernel`](ComputeEngine::has_kernel)
+    /// first and fall back to the portable path.
+    fn run_kernel(
         &self,
-        params: &mut [f32],
-        x: &[f32],
-        y: &[i32],
-        lr: f32,
-        reg: f32,
-    ) -> Result<SvmStepOut>;
-
-    /// Eval on [eval_batch] rows: (correct count, mean hinge loss).
-    fn svm_eval(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)>;
-
-    /// Lloyd E-step statistics for one batch (the local iteration's M-step
-    /// division is done by the caller via `model::kmeans::mstep`).
-    fn kmeans_step(&self, centers: &[f32], x: &[f32]) -> Result<KmeansStepOut>;
-
-    /// Assignment pass on [eval_batch] rows: (assignments, inertia).
-    fn kmeans_eval(&self, centers: &[f32], x: &[f32]) -> Result<(Vec<i32>, f32)>;
+        kernel: &str,
+        args: &[KernelArg<'_>],
+        outs: &[OutKind],
+    ) -> Result<Vec<KernelOut>> {
+        let _ = (args, outs);
+        Err(anyhow!(
+            "engine '{}' has no fused kernel '{kernel}'",
+            self.name()
+        ))
+    }
 }
 
 #[cfg(test)]
@@ -173,5 +347,60 @@ mod tests {
         assert_eq!(s.svm_batch, 64);
         assert_eq!(s.km_batch, 64);
         assert_eq!(s.km_eval_batch, 512);
+    }
+
+    #[test]
+    fn cpu_ops_gemm_matches_reference_scores() {
+        // gemm_bias IS the SVM reference score kernel: same inputs, same
+        // f32 accumulation order, bit-equal outputs.
+        let (d, c, n) = (5, 4, 3);
+        let x: Vec<f32> = (0..n * d).map(|i| (i as f32) * 0.3 - 1.0).collect();
+        let w: Vec<f32> = (0..d * c).map(|i| (i as f32) * 0.1 - 0.2).collect();
+        let b: Vec<f32> = (0..c).map(|i| i as f32 * 0.5).collect();
+        let mut out = vec![0f32; n * c];
+        CPU_OPS.gemm_bias(&x, &w, &b, d, c, &mut out);
+        let mut expect = vec![0f32; n * c];
+        crate::model::svm::scores_into(&x, &w, &b, d, c, &mut expect);
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn cpu_ops_argmin_matches_reference_assign() {
+        let (d, k) = (2, 3);
+        let centers = vec![0.0, 0.0, 10.0, 10.0, -10.0, -10.0];
+        let x = vec![0.1, -0.1, 9.9, 10.2, -9.8, -10.1];
+        let mut assign = Vec::new();
+        let inertia = CPU_OPS.argmin_dist(&x, &centers, d, k, &mut assign);
+        let spec = crate::model::kmeans::KmeansSpec { k, d };
+        let (expect, expect_inertia) = crate::model::kmeans::assign(&centers, &x, &spec);
+        assert_eq!(assign, expect);
+        assert_eq!(inertia, expect_inertia);
+    }
+
+    #[test]
+    fn cpu_ops_scatter_and_axpy() {
+        let x = vec![1.0f32, 2.0, 3.0, 4.0];
+        let assign = vec![1, 1];
+        let mut sums = vec![0f32; 4];
+        let mut counts = vec![0f32; 2];
+        CPU_OPS.scatter_add(&x, &assign, 2, 2, &mut sums, &mut counts);
+        assert_eq!(counts, vec![0.0, 2.0]);
+        assert_eq!(&sums[2..], &[4.0, 6.0]);
+
+        let mut y = vec![1.0f32, 1.0];
+        CPU_OPS.axpy(2.0, &[3.0, 4.0], &mut y);
+        assert_eq!(y, vec![7.0, 9.0]);
+        assert_eq!(CPU_OPS.reduce_sum(&y), 16.0);
+    }
+
+    #[test]
+    fn default_engine_has_no_fused_kernels() {
+        let eng = native::NativeEngine::default();
+        assert!(!eng.has_kernel("svm_step"));
+        assert!(eng
+            .run_kernel("svm_step", &[], &[])
+            .unwrap_err()
+            .to_string()
+            .contains("no fused kernel"));
     }
 }

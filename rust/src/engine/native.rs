@@ -1,29 +1,19 @@
-//! Pure-Rust compute engine. Shape-flexible (accepts any batch size whose
-//! row count divides the buffer length) — used for the big simulator sweeps
-//! (Fig 5 goes to 100 edges) and as the numeric oracle for the pjrt engine.
+//! Pure-Rust compute engine: the simulator default and the numeric
+//! oracle. Ships no fused kernels — every learner runs its portable path
+//! on the shared [`CpuOps`](crate::engine::CpuOps) primitives, which is
+//! exactly the reference math the AOT artifacts are lowered from.
 
-use anyhow::Result;
+use crate::engine::ComputeEngine;
 
-use crate::engine::{ComputeEngine, KmeansStepOut, Shapes, SvmStepOut};
-use crate::model::{kmeans, svm};
-
-/// Native engine; `shapes` carries the canonical dims used to interpret the
-/// flat parameter vectors.
-#[derive(Clone, Debug)]
-pub struct NativeEngine {
-    shapes: Shapes,
-}
+/// The native (pure-Rust) backend. Stateless: shapes live with each
+/// learner, primitives with the shared [`CpuOps`](crate::engine::CpuOps).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeEngine;
 
 impl NativeEngine {
-    /// A native engine over the given deployment shapes.
-    pub fn new(shapes: Shapes) -> Self {
-        NativeEngine { shapes }
-    }
-}
-
-impl Default for NativeEngine {
-    fn default() -> Self {
-        NativeEngine::new(Shapes::default())
+    /// A native engine.
+    pub fn new() -> Self {
+        NativeEngine
     }
 }
 
@@ -31,106 +21,43 @@ impl ComputeEngine for NativeEngine {
     fn name(&self) -> &'static str {
         "native"
     }
-
-    fn shapes(&self) -> &Shapes {
-        &self.shapes
-    }
-
-    fn svm_step(
-        &self,
-        params: &mut [f32],
-        x: &[f32],
-        y: &[i32],
-        lr: f32,
-        reg: f32,
-    ) -> Result<SvmStepOut> {
-        let spec = svm::SvmSpec {
-            d: self.shapes.svm_d,
-            c: self.shapes.svm_c,
-            lr,
-            reg,
-        };
-        let loss = svm::step(params, x, y, &spec);
-        Ok(SvmStepOut { loss })
-    }
-
-    fn svm_eval(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
-        let spec = svm::SvmSpec {
-            d: self.shapes.svm_d,
-            c: self.shapes.svm_c,
-            lr: 0.0,
-            reg: 0.0,
-        };
-        Ok(svm::eval(params, x, y, &spec))
-    }
-
-    fn kmeans_step(&self, centers: &[f32], x: &[f32]) -> Result<KmeansStepOut> {
-        let spec = kmeans::KmeansSpec {
-            k: self.shapes.km_k,
-            d: self.shapes.km_d,
-        };
-        let (sums, counts, inertia) = kmeans::stats(centers, x, &spec);
-        Ok(KmeansStepOut {
-            sums,
-            counts,
-            inertia,
-        })
-    }
-
-    fn kmeans_eval(&self, centers: &[f32], x: &[f32]) -> Result<(Vec<i32>, f32)> {
-        let spec = kmeans::KmeansSpec {
-            k: self.shapes.km_k,
-            d: self.shapes.km_d,
-        };
-        Ok(kmeans::assign(centers, x, &spec))
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::rng::Rng;
+    use crate::engine::EngineOps;
 
     #[test]
-    fn svm_step_reduces_loss_on_repeat() {
+    fn native_engine_exposes_shared_ops() {
         let eng = NativeEngine::default();
-        let s = eng.shapes();
-        let mut rng = Rng::new(0);
-        let x: Vec<f32> = (0..s.svm_batch * s.svm_d)
-            .map(|_| rng.normal() as f32)
-            .collect();
-        let y: Vec<i32> = (0..s.svm_batch)
-            .map(|i| {
-                let row = &x[i * s.svm_d..i * s.svm_d + s.svm_c];
-                let mut best = 0;
-                for k in 1..s.svm_c {
-                    if row[k] > row[best] {
-                        best = k;
-                    }
-                }
-                best as i32
-            })
-            .collect();
-        let mut params = vec![0f32; s.svm_param_len()];
-        let first = eng.svm_step(&mut params, &x, &y, 0.1, 0.0).unwrap().loss;
-        let mut last = first;
-        for _ in 0..40 {
-            last = eng.svm_step(&mut params, &x, &y, 0.1, 0.0).unwrap().loss;
-        }
-        assert!(last < first * 0.5);
+        assert_eq!(eng.name(), "native");
+        let mut y = vec![0.0f32, 0.0];
+        eng.ops().axpy(1.5, &[2.0, 4.0], &mut y);
+        assert_eq!(y, vec![3.0, 6.0]);
     }
 
     #[test]
-    fn kmeans_counts_conserve_batch() {
+    fn learner_portable_steps_run_on_native() {
+        use crate::edge::Hyper;
+        use crate::model::{Learner as _, TaskSpec};
+        use crate::util::rng::Rng;
         let eng = NativeEngine::default();
-        let s = eng.shapes();
-        let mut rng = Rng::new(1);
-        let centers: Vec<f32> = (0..s.km_param_len()).map(|_| rng.normal() as f32).collect();
-        let x: Vec<f32> = (0..s.km_batch * s.km_d)
-            .map(|_| rng.normal() as f32)
-            .collect();
-        let out = eng.kmeans_step(&centers, &x).unwrap();
-        assert_eq!(out.counts.iter().sum::<f32>() as usize, s.km_batch);
-        assert_eq!(out.sums.len(), s.km_param_len());
+        let hyper = Hyper::default();
+        let mut rng = Rng::new(0);
+        for spec in [TaskSpec::svm(), TaskSpec::kmeans()] {
+            let learner = spec.learner();
+            let ds = learner.synth(1000, 3.0, &mut rng);
+            let mut params = learner.init_params(&ds, &mut rng);
+            let n = learner.batch();
+            let x: Vec<f32> = ds.x[..n * ds.d].to_vec();
+            let y: Vec<i32> = ds.y[..n].to_vec();
+            let before = params.clone();
+            let out = learner
+                .local_step(&eng, &mut params, &x, &y, &hyper)
+                .unwrap();
+            assert!(out.signal.is_finite(), "{}", learner.name());
+            assert_ne!(before, params, "{} step was a no-op", learner.name());
+        }
     }
 }

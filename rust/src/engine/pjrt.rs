@@ -1,16 +1,21 @@
 //! The production compute engine: AOT-compiled HLO artifacts (JAX L2 +
 //! Pallas L1, lowered at build time) executed through the PJRT CPU client.
 //!
-//! Numerics are asserted equal to the native engine in
-//! rust/tests/pjrt_parity.rs; structure (batch/tile schedule) is owned by
-//! the Pallas kernels.
+//! The artifact manifest is keyed by learner name: an entrypoint
+//! `"{learner}_{step|eval}"` is the fused kernel
+//! [`ComputeEngine::run_kernel`] serves for that learner. Tasks without
+//! artifacts (anything beyond the deployed svm/kmeans set) transparently
+//! fall back to their portable path on the shared CPU primitives —
+//! [`has_kernel`](ComputeEngine::has_kernel) simply reports false.
+//!
+//! Numerics of the fused kernels are asserted against the portable path
+//! in rust/tests/pjrt_parity.rs.
 
 use std::cell::RefCell;
 
 use anyhow::{anyhow, Result};
 
-use crate::engine::{ComputeEngine, KmeansStepOut, Shapes, SvmStepOut};
-use crate::model::svm::split_params;
+use crate::engine::{ComputeEngine, KernelArg, KernelOut, OutKind, Shapes};
 use crate::runtime::literal::{
     f32_literal, i32_literal, scalar_f32, to_f32_scalar, to_f32_vec, to_i32_vec,
 };
@@ -21,11 +26,12 @@ use crate::runtime::Runtime;
 pub struct PjrtEngine {
     rt: RefCell<Runtime>,
     shapes: Shapes,
+    entrypoints: Vec<String>,
 }
 
 impl PjrtEngine {
     /// Open the artifact directory and cross-check its manifest against the
-    /// Rust-side shape contract.
+    /// Rust-side shape contract of the deployed learners.
     pub fn open(dir: impl AsRef<std::path::Path>) -> Result<Self> {
         let rt = Runtime::open(dir)?;
         let shapes = rt.manifest_shapes()?;
@@ -36,9 +42,11 @@ impl PjrtEngine {
                  re-run `make artifacts` after changing python/compile/model.py"
             ));
         }
+        let entrypoints = rt.entrypoints();
         Ok(PjrtEngine {
             rt: RefCell::new(rt),
             shapes,
+            entrypoints,
         })
     }
 
@@ -56,6 +64,11 @@ impl PjrtEngine {
     pub fn platform_name(&self) -> String {
         self.rt.borrow().platform_name()
     }
+
+    /// The artifact shape contract this engine was opened against.
+    pub fn shapes(&self) -> &Shapes {
+        &self.shapes
+    }
 }
 
 impl ComputeEngine for PjrtEngine {
@@ -63,83 +76,48 @@ impl ComputeEngine for PjrtEngine {
         "pjrt"
     }
 
-    fn shapes(&self) -> &Shapes {
-        &self.shapes
+    fn has_kernel(&self, kernel: &str) -> bool {
+        self.entrypoints.iter().any(|e| e == kernel)
     }
 
-    fn svm_step(
+    fn run_kernel(
         &self,
-        params: &mut [f32],
-        x: &[f32],
-        y: &[i32],
-        lr: f32,
-        reg: f32,
-    ) -> Result<SvmStepOut> {
-        let s = &self.shapes;
-        let (w, b) = split_params(params, s.svm_d, s.svm_c);
-        let args = [
-            f32_literal(w, &[s.svm_d, s.svm_c])?,
-            f32_literal(b, &[s.svm_c])?,
-            f32_literal(x, &[s.svm_batch, s.svm_d])?,
-            i32_literal(y, &[s.svm_batch])?,
-            scalar_f32(lr)?,
-            scalar_f32(reg)?,
-        ];
-        let out = self.rt.borrow_mut().run("svm_step", &args)?;
-        if out.len() != 3 {
-            return Err(anyhow!("svm_step: expected 3 outputs, got {}", out.len()));
+        kernel: &str,
+        args: &[KernelArg<'_>],
+        outs: &[OutKind],
+    ) -> Result<Vec<KernelOut>> {
+        if !self.has_kernel(kernel) {
+            return Err(anyhow!(
+                "pjrt artifacts have no fused kernel '{kernel}' \
+                 (manifest entrypoints: {})",
+                self.entrypoints.join(", ")
+            ));
         }
-        let w2 = to_f32_vec(&out[0])?;
-        let b2 = to_f32_vec(&out[1])?;
-        let loss = to_f32_scalar(&out[2])?;
-        params[..s.svm_d * s.svm_c].copy_from_slice(&w2);
-        params[s.svm_d * s.svm_c..].copy_from_slice(&b2);
-        Ok(SvmStepOut { loss })
-    }
-
-    fn svm_eval(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
-        let s = &self.shapes;
-        let (w, b) = split_params(params, s.svm_d, s.svm_c);
-        let args = [
-            f32_literal(w, &[s.svm_d, s.svm_c])?,
-            f32_literal(b, &[s.svm_c])?,
-            f32_literal(x, &[s.svm_eval_batch, s.svm_d])?,
-            i32_literal(y, &[s.svm_eval_batch])?,
-        ];
-        let out = self.rt.borrow_mut().run("svm_eval", &args)?;
-        if out.len() != 2 {
-            return Err(anyhow!("svm_eval: expected 2 outputs, got {}", out.len()));
+        let mut lits = Vec::with_capacity(args.len());
+        for a in args {
+            lits.push(match a {
+                KernelArg::F32 { data, dims } => f32_literal(data, dims)?,
+                KernelArg::I32 { data, dims } => i32_literal(data, dims)?,
+                KernelArg::Scalar(v) => scalar_f32(*v)?,
+            });
         }
-        Ok((to_f32_scalar(&out[0])?, to_f32_scalar(&out[1])?))
-    }
-
-    fn kmeans_step(&self, centers: &[f32], x: &[f32]) -> Result<KmeansStepOut> {
-        let s = &self.shapes;
-        let args = [
-            f32_literal(centers, &[s.km_k, s.km_d])?,
-            f32_literal(x, &[s.km_batch, s.km_d])?,
-        ];
-        let out = self.rt.borrow_mut().run("kmeans_step", &args)?;
-        if out.len() != 3 {
-            return Err(anyhow!("kmeans_step: expected 3 outputs, got {}", out.len()));
+        let raw = self.rt.borrow_mut().run(kernel, &lits)?;
+        if raw.len() != outs.len() {
+            return Err(anyhow!(
+                "{kernel}: expected {} outputs, got {}",
+                outs.len(),
+                raw.len()
+            ));
         }
-        Ok(KmeansStepOut {
-            sums: to_f32_vec(&out[0])?,
-            counts: to_f32_vec(&out[1])?,
-            inertia: to_f32_scalar(&out[2])?,
-        })
-    }
-
-    fn kmeans_eval(&self, centers: &[f32], x: &[f32]) -> Result<(Vec<i32>, f32)> {
-        let s = &self.shapes;
-        let args = [
-            f32_literal(centers, &[s.km_k, s.km_d])?,
-            f32_literal(x, &[s.km_eval_batch, s.km_d])?,
-        ];
-        let out = self.rt.borrow_mut().run("kmeans_eval", &args)?;
-        if out.len() != 2 {
-            return Err(anyhow!("kmeans_eval: expected 2 outputs, got {}", out.len()));
-        }
-        Ok((to_i32_vec(&out[0])?, to_f32_scalar(&out[1])?))
+        raw.iter()
+            .zip(outs)
+            .map(|(lit, kind)| {
+                Ok(match kind {
+                    OutKind::F32Vec => KernelOut::F32(to_f32_vec(lit)?),
+                    OutKind::I32Vec => KernelOut::I32(to_i32_vec(lit)?),
+                    OutKind::Scalar => KernelOut::Scalar(to_f32_scalar(lit)?),
+                })
+            })
+            .collect()
     }
 }

@@ -15,7 +15,7 @@ use anyhow::{anyhow, Result};
 use crate::config::{Algo, RunConfig};
 use crate::coordinator::{find_outcome, ExperimentSuite, SuiteOutcome};
 use crate::harness::SweepOpts;
-use crate::model::Task;
+use crate::model::{Learner as _, TaskSpec};
 use crate::util::table::{f, Table};
 
 /// The four algorithms every figure compares.
@@ -31,9 +31,9 @@ pub fn hetero_grid(quick: bool) -> Vec<f64> {
 }
 
 /// The config for one Fig. 3 cell.
-pub fn cell_config(task: Task, algo: Algo, h: f64, opts: &SweepOpts) -> RunConfig {
+pub fn cell_config(task: &TaskSpec, algo: Algo, h: f64, opts: &SweepOpts) -> RunConfig {
     RunConfig {
-        task,
+        task: task.clone(),
         algo,
         n_edges: 3,
         hetero: h,
@@ -48,17 +48,22 @@ pub fn cell_config(task: Task, algo: Algo, h: f64, opts: &SweepOpts) -> RunConfi
 /// by [`cell_config`].
 pub fn suite(opts: &SweepOpts) -> ExperimentSuite {
     let o = opts.clone();
-    ExperimentSuite::new("fig3", cell_config(Task::Kmeans, ALGOS[0], 1.0, opts))
-        .tasks([Task::Kmeans, Task::Svm])
+    ExperimentSuite::new("fig3", cell_config(&TaskSpec::kmeans(), ALGOS[0], 1.0, opts))
+        .tasks([TaskSpec::kmeans(), TaskSpec::svm()])
         .algos(ALGOS)
         .heteros(hetero_grid(opts.quick))
         .seeds(opts.seed_list())
-        .configure(move |cfg| *cfg = cell_config(cfg.task, cfg.algo, cfg.hetero, &o))
+        .configure(move |cfg| *cfg = cell_config(&cfg.task.clone(), cfg.algo, cfg.hetero, &o))
 }
 
-fn cell<'a>(outs: &'a [SuiteOutcome], task: Task, algo: Algo, h: f64) -> Result<&'a SuiteOutcome> {
+fn cell<'a>(
+    outs: &'a [SuiteOutcome],
+    task: &TaskSpec,
+    algo: Algo,
+    h: f64,
+) -> Result<&'a SuiteOutcome> {
     find_outcome(outs, task, algo, 3, h)
-        .ok_or_else(|| anyhow!("fig3: missing cell {task:?}/{algo:?}/H={h}"))
+        .ok_or_else(|| anyhow!("fig3: missing cell {task}/{algo:?}/H={h}"))
 }
 
 /// Run the full sweep; returns one table per task plus the headline-gap
@@ -67,17 +72,14 @@ pub fn run(opts: &SweepOpts) -> Result<Vec<Table>> {
     let outcomes = suite(opts).run(opts.engine, &opts.artifacts)?;
     let grid = hetero_grid(opts.quick);
     let mut tables = Vec::new();
-    let mut best_gap = (0.0f64, 0.0f64, Task::Svm); // (gap, H, task)
+    let mut best_gap = (0.0f64, 0.0f64, TaskSpec::svm()); // (gap, H, task)
 
-    for task in [Task::Kmeans, Task::Svm] {
-        let metric_name = match task {
-            Task::Kmeans => "F1",
-            Task::Svm => "accuracy",
-        };
+    for task in [TaskSpec::kmeans(), TaskSpec::svm()] {
+        let metric_name = task.learner().metric_name();
         let mut t = Table::new(
             format!(
                 "Fig 3{}: {} {} vs heterogeneity (budget 5000ms, 3 edges)",
-                if task == Task::Kmeans { "a" } else { "b" },
+                if task.name() == "kmeans" { "a" } else { "b" },
                 task.name(),
                 metric_name
             ),
@@ -87,12 +89,12 @@ pub fn run(opts: &SweepOpts) -> Result<Vec<Table>> {
             let mut row = vec![f(h, 0)];
             let mut cells = Vec::new();
             for algo in ALGOS {
-                cells.push(cell(&outcomes, task, algo, h)?.agg.metric.mean());
+                cells.push(cell(&outcomes, &task, algo, h)?.agg.metric.mean());
             }
             let baseline_best = cells[2].max(cells[3]);
             let gap = cells[1] - baseline_best;
             if gap > best_gap.0 {
-                best_gap = (gap, h, task);
+                best_gap = (gap, h, task.clone());
             }
             for c in &cells {
                 row.push(f(*c, 4));
@@ -131,7 +133,7 @@ mod tests {
 
     #[test]
     fn cell_config_matches_paper_regime() {
-        let cfg = cell_config(Task::Svm, Algo::AcSync, 6.0, &SweepOpts::default());
+        let cfg = cell_config(&TaskSpec::svm(), Algo::AcSync, 6.0, &SweepOpts::default());
         assert_eq!(cfg.n_edges, 3);
         assert_eq!(cfg.budget, 5000.0);
         assert_eq!(cfg.hetero, 6.0);
@@ -143,7 +145,7 @@ mod tests {
         let cells = suite(&opts).cells();
         assert_eq!(cells.len(), 2 * ALGOS.len() * hetero_grid(true).len());
         for (spec, cfg) in &cells {
-            let expect = cell_config(spec.task, spec.algo, spec.hetero, &opts);
+            let expect = cell_config(&spec.task, spec.algo, spec.hetero, &opts);
             assert_eq!(cfg.n_edges, expect.n_edges);
             assert_eq!(cfg.budget, expect.budget);
             assert_eq!(cfg.partition, expect.partition);

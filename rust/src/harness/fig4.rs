@@ -15,7 +15,7 @@ use anyhow::{anyhow, Result};
 use crate::config::{Algo, RunConfig};
 use crate::coordinator::{self, find_outcome, ExperimentSuite};
 use crate::harness::SweepOpts;
-use crate::model::Task;
+use crate::model::{Learner as _, TaskSpec};
 use crate::util::stats::Welford;
 use crate::util::table::{f, Table};
 
@@ -25,9 +25,9 @@ pub const ALGOS: [Algo; 4] = [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::AcSync, A
 pub const HETERO: f64 = 6.0;
 
 /// The run config of one (task, algo) cell.
-pub fn cell_config(task: Task, algo: Algo, opts: &SweepOpts) -> RunConfig {
+pub fn cell_config(task: &TaskSpec, algo: Algo, opts: &SweepOpts) -> RunConfig {
     RunConfig {
-        task,
+        task: task.clone(),
         algo,
         n_edges: 3,
         hetero: HETERO,
@@ -41,14 +41,14 @@ pub fn cell_config(task: Task, algo: Algo, opts: &SweepOpts) -> RunConfig {
 /// The Fig. 4 grid: tasks × algorithms at H = 6.
 pub fn suite(opts: &SweepOpts) -> ExperimentSuite {
     let o = opts.clone();
-    ExperimentSuite::new("fig4", cell_config(Task::Kmeans, ALGOS[0], opts))
-        .tasks([Task::Kmeans, Task::Svm])
+    ExperimentSuite::new("fig4", cell_config(&TaskSpec::kmeans(), ALGOS[0], opts))
+        .tasks([TaskSpec::kmeans(), TaskSpec::svm()])
         .algos(ALGOS)
         .seeds(opts.seed_list())
         // Fig. 4 resamples full traces onto the consumption grid, so the
         // per-seed RunResults must be kept.
         .retain_runs(true)
-        .configure(move |cfg| *cfg = cell_config(cfg.task, cfg.algo, &o))
+        .configure(move |cfg| *cfg = cell_config(&cfg.task.clone(), cfg.algo, &o))
 }
 
 /// Metric of a trace at consumption level `x` (step interpolation — the
@@ -78,11 +78,8 @@ pub fn run(opts: &SweepOpts) -> Result<Vec<Table>> {
     let grid = consumption_grid(5000.0, if opts.quick { 8 } else { 16 });
     let mut tables = Vec::new();
 
-    for task in [Task::Kmeans, Task::Svm] {
-        let metric_name = match task {
-            Task::Kmeans => "F1",
-            Task::Svm => "accuracy",
-        };
+    for task in [TaskSpec::kmeans(), TaskSpec::svm()] {
+        let metric_name = task.learner().metric_name();
         let mut header: Vec<String> = vec!["consumed_ms".into()];
         header.extend(ALGOS.iter().map(|a| a.name().to_string()));
         let mut t = Table::new(
@@ -97,8 +94,8 @@ pub fn run(opts: &SweepOpts) -> Result<Vec<Table>> {
         // curves[algo][grid_idx] = Welford over seeds
         let mut curves: Vec<Vec<Welford>> = vec![vec![Welford::new(); grid.len()]; ALGOS.len()];
         for (ai, algo) in ALGOS.iter().enumerate() {
-            let outcome = find_outcome(&outcomes, task, *algo, 3, HETERO)
-                .ok_or_else(|| anyhow!("fig4: missing cell {task:?}/{algo:?}"))?;
+            let outcome = find_outcome(&outcomes, &task, *algo, 3, HETERO)
+                .ok_or_else(|| anyhow!("fig4: missing cell {task}/{algo:?}"))?;
             for run in &outcome.runs {
                 for (gi, &x) in grid.iter().enumerate() {
                     curves[ai][gi].push(metric_at(&run.trace, x));

@@ -13,7 +13,7 @@ use anyhow::{anyhow, Result};
 use crate::config::{Algo, RunConfig};
 use crate::coordinator::{find_outcome, ExperimentSuite};
 use crate::harness::SweepOpts;
-use crate::model::Task;
+use crate::model::{Learner as _, TaskSpec};
 use crate::util::table::{f, Table};
 
 /// Fleet sizes swept (N axis).
@@ -35,9 +35,9 @@ pub fn h_grid(quick: bool) -> Vec<f64> {
 }
 
 /// The run config of one (task, algo, N, H) cell.
-pub fn cell_config(task: Task, algo: Algo, n: usize, h: f64, opts: &SweepOpts) -> RunConfig {
+pub fn cell_config(task: &TaskSpec, algo: Algo, n: usize, h: f64, opts: &SweepOpts) -> RunConfig {
     RunConfig {
-        task,
+        task: task.clone(),
         algo,
         n_edges: n,
         hetero: h,
@@ -53,14 +53,14 @@ pub fn cell_config(task: Task, algo: Algo, n: usize, h: f64, opts: &SweepOpts) -
 /// with `data_n` scaled to the fleet by [`cell_config`].
 pub fn suite(opts: &SweepOpts) -> ExperimentSuite {
     let o = opts.clone();
-    ExperimentSuite::new("fig5", cell_config(Task::Kmeans, Algo::Ol4elAsync, 3, 1.0, opts))
-        .tasks([Task::Kmeans, Task::Svm])
+    ExperimentSuite::new("fig5", cell_config(&TaskSpec::kmeans(), Algo::Ol4elAsync, 3, 1.0, opts))
+        .tasks([TaskSpec::kmeans(), TaskSpec::svm()])
         .algos([Algo::Ol4elAsync, Algo::Ol4elSync])
         .fleet_sizes(n_grid(opts.quick))
         .heteros(h_grid(opts.quick))
         .seeds(opts.seed_list())
         .configure(move |cfg| {
-            *cfg = cell_config(cfg.task, cfg.algo, cfg.n_edges, cfg.hetero, &o)
+            *cfg = cell_config(&cfg.task.clone(), cfg.algo, cfg.n_edges, cfg.hetero, &o)
         })
 }
 
@@ -71,11 +71,8 @@ pub fn run(opts: &SweepOpts) -> Result<Vec<Table>> {
     let hs = h_grid(opts.quick);
     let mut tables = Vec::new();
 
-    for task in [Task::Kmeans, Task::Svm] {
-        let metric_name = match task {
-            Task::Kmeans => "F1",
-            Task::Svm => "accuracy",
-        };
+    for task in [TaskSpec::kmeans(), TaskSpec::svm()] {
+        let metric_name = task.learner().metric_name();
         let mut header: Vec<String> = vec!["N".into()];
         for &h in &hs {
             header.push(format!("async H={h:.0}"));
@@ -86,7 +83,7 @@ pub fn run(opts: &SweepOpts) -> Result<Vec<Table>> {
         let mut t = Table::new(
             format!(
                 "Fig 5{}: {} {} vs number of edge servers",
-                if task == Task::Kmeans { "a" } else { "b" },
+                if task.name() == "kmeans" { "a" } else { "b" },
                 task.name(),
                 metric_name
             ),
@@ -96,8 +93,8 @@ pub fn run(opts: &SweepOpts) -> Result<Vec<Table>> {
             let mut row = vec![n.to_string()];
             for algo in [Algo::Ol4elAsync, Algo::Ol4elSync] {
                 for &h in &hs {
-                    let outcome = find_outcome(&outcomes, task, algo, n, h)
-                        .ok_or_else(|| anyhow!("fig5: missing cell {task:?}/{algo:?}/N={n}/H={h}"))?;
+                    let outcome = find_outcome(&outcomes, &task, algo, n, h)
+                        .ok_or_else(|| anyhow!("fig5: missing cell {task}/{algo:?}/N={n}/H={h}"))?;
                     row.push(f(outcome.agg.metric.mean(), 4));
                 }
             }
@@ -124,7 +121,7 @@ mod tests {
     #[test]
     fn cell_config_scales_data_with_fleet() {
         let cfg = cell_config(
-            Task::Svm,
+            &TaskSpec::svm(),
             Algo::Ol4elAsync,
             100,
             15.0,

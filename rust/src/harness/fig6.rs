@@ -67,7 +67,7 @@ pub fn cell_config(n: usize, algo: Algo) -> RunConfig {
         hetero: 4.0,
         budget: 3000.0,
         eval_every: 1000,
-        data_n: 20_000.max(n),
+        data_n: 20_000.max(n + 512),
         ..Default::default()
     }
 }

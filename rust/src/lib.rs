@@ -13,6 +13,19 @@
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the hinge
 //!   forward+backward and the K-means assign+accumulate hot-spots.
 //!
+//! ## The task layer
+//!
+//! Learning tasks are **plugins**, not enum cases: an object-safe
+//! [`Learner`](model::Learner) owns the parameter layout and init, the
+//! local iteration, the evaluation metric, the aggregation rule and the
+//! synthetic data generator, resolved by name through the task registry
+//! ([`TaskSpec`](model::TaskSpec), grammar `NAME[:KEY=N]*` — `svm`,
+//! `kmeans:k=5`, `logreg:d=59:c=8`, `gmm:k=3`, or anything added via
+//! [`model::register`]). Compute is task-agnostic: learners compose the
+//! shared [`EngineOps`](engine::EngineOps) primitives, with optional
+//! fused AOT kernels keyed by learner name in the PJRT artifact
+//! manifest.
+//!
 //! ## The run API
 //!
 //! Runs are composed, not dispatched: an

@@ -9,7 +9,7 @@ use ol4el::coordinator::observer::from_fn;
 use ol4el::coordinator::utility::UtilityKind;
 use ol4el::coordinator::{ExperimentBuilder, RunEvent};
 use ol4el::harness::{self, EngineKind, SweepOpts};
-use ol4el::model::Task;
+use ol4el::model::{Learner as _, TaskSpec};
 use ol4el::net::{ChurnSpec, FleetSim, NetworkSpec};
 use ol4el::sim::cost::CostMode;
 use ol4el::sim::hetero::HeteroProfile;
@@ -39,6 +39,7 @@ fn usage() -> String {
            fleet               engine-free sharded fleet simulation at 10k-100k edges\n\
                                (message-passing transport, network + churn models)\n\
            fig3 .. fig6        regenerate a figure (tables + results/*.csv)\n\
+           bench-tasks         per-task step/event throughput (BENCH_tasks.json)\n\
            inspect-artifacts   show the AOT artifact manifest and PJRT platform\n\
            config              print the default config as JSON (edit + pass via --config)\n\
          \n\
@@ -59,6 +60,7 @@ fn run_cli(argv: &[String]) -> Result<()> {
         "deploy" => cmd_deploy(rest),
         "fleet" => cmd_fleet(rest),
         "fig3" | "fig4" | "fig5" | "fig6" => cmd_fig(cmd, rest),
+        "bench-tasks" => cmd_bench_tasks(rest),
         "inspect-artifacts" => cmd_inspect(rest),
         "config" => {
             println!("{}", RunConfig::default().to_json().pretty());
@@ -74,7 +76,12 @@ fn run_cli(argv: &[String]) -> Result<()> {
 
 fn train_cli() -> Cli {
     Cli::new("ol4el train", "run one training configuration")
-        .opt("task", "svm", "svm | kmeans")
+        .opt(
+            "task",
+            "svm",
+            "task spec: svm | kmeans | logreg | gmm, parameterized NAME[:KEY=N]* \
+             (e.g. kmeans:k=5, logreg:d=59:c=8, gmm:k=3; see the grammar below)",
+        )
         .opt("algo", "ol4el-async", "ol4el-sync | ol4el-async | ac-sync | fixed-i")
         .opt("edges", "3", "number of edge servers")
         .opt("hetero", "1.0", "heterogeneity ratio H (>= 1)")
@@ -144,7 +151,7 @@ fn builder_from_args(a: &Args) -> Result<ExperimentBuilder> {
     let bandit_spec = a.str("bandit");
     let partition_spec = a.str("partition");
     Ok(ExperimentBuilder::from_config(base)
-        .task(Task::parse(&a.str("task")).ok_or_else(|| anyhow!("bad --task"))?)
+        .task(parse_task(&a.str("task"))?)
         .algo(Algo::parse(&a.str("algo")).ok_or_else(|| anyhow!("bad --algo"))?)
         .edges(a.usize("edges").map_err(|e| anyhow!(e))?)
         .hetero(a.f64("hetero").map_err(|e| anyhow!(e))?)
@@ -183,6 +190,11 @@ fn builder_from_args(a: &Args) -> Result<ExperimentBuilder> {
         .network(parse_network(&a.str("network"))?)
         .churn(parse_churn(&a.str("churn"))?)
         .seed(a.u64("seed").map_err(|e| anyhow!(e))?))
+}
+
+fn parse_task(spec: &str) -> Result<TaskSpec> {
+    TaskSpec::parse(spec)
+        .map_err(|e| anyhow!("bad --task '{spec}': {e} (grammar: NAME[:KEY=N]*, e.g. kmeans:k=5)"))
 }
 
 fn parse_network(spec: &str) -> Result<NetworkSpec> {
@@ -276,10 +288,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         }
         print!("{}", t.render());
     }
-    let metric_name = match cfg.task {
-        Task::Svm => "accuracy",
-        Task::Kmeans => "F1",
-    };
+    let metric_name = cfg.task.learner().metric_name();
     println!(
         "final {metric_name}={:.4}  global_updates={}  virtual_wall={:.0}ms  mean_spent={:.0}ms  retired={}/{}  host={:.2}s",
         r.final_metric, r.total_updates, r.wall_ms, r.mean_spent, r.retired_edges, r.n_edges, dt
@@ -325,6 +334,12 @@ fn fleet_cli() -> Cli {
         "engine-free fleet simulation: the OL4EL protocol + transport at scale",
     )
     .opt("edges", "5000", "fleet size at t=0")
+    .opt(
+        "task",
+        "svm",
+        "task spec carried by the fleet config (protocol-only sim: any \
+         registered task, e.g. logreg — validated, not trained)",
+    )
     .opt("mode", "async", "async | sync | both (collaboration manner)")
     .opt("hetero", "4.0", "heterogeneity ratio H (>= 1)")
     .opt("hetero-profile", "linear", "linear | random")
@@ -369,7 +384,10 @@ fn fleet_config(a: &Args, sync: bool) -> Result<RunConfig> {
     cost.mode = CostMode::parse(&a.str("cost-mode")).ok_or_else(|| anyhow!("bad --cost-mode"))?;
     cost.base_comp = a.f64("base-comp").map_err(|e| anyhow!(e))?;
     cost.base_comm = a.f64("base-comm").map_err(|e| anyhow!(e))?;
+    let task = parse_task(&a.str("task"))?;
+    let eval_n = task.learner().eval_batch();
     Ok(RunConfig {
+        task,
         algo: if sync { Algo::Ol4elSync } else { Algo::Ol4elAsync },
         n_edges,
         hetero: a.f64("hetero").map_err(|e| anyhow!(e))?,
@@ -385,9 +403,10 @@ fn fleet_config(a: &Args, sync: bool) -> Result<RunConfig> {
         eval_every: a.usize("eval-every").map_err(|e| anyhow!(e))?.max(1),
         failure_rate: a.f64("failure-rate").map_err(|e| anyhow!(e))?,
         seed: a.u64("seed").map_err(|e| anyhow!(e))?,
-        // The fleet trains no model; keep validate()'s data_n >= n_edges
-        // invariant satisfied without generating anything.
-        data_n: defaults.data_n.max(n_edges),
+        // The fleet trains no model; keep validate()'s dataset-sizing
+        // invariants (eval split + per-edge coverage) satisfied at any
+        // fleet size without generating anything.
+        data_n: defaults.data_n.max(n_edges + eval_n),
         ..defaults
     })
 }
@@ -590,6 +609,105 @@ fn cmd_fleet_smoke(a: &Args) -> Result<()> {
     let path = a.str("bench-out");
     std::fs::write(&path, j.pretty()).map_err(|e| anyhow!("writing {path}: {e}"))?;
     eprintln!("[ol4el] wrote {path} ({host_seconds:.2}s host)");
+    Ok(())
+}
+
+fn bench_tasks_cli() -> Cli {
+    Cli::new(
+        "ol4el bench-tasks",
+        "per-task throughput: native local-step rate + engine-free fleet event rate",
+    )
+    .opt("steps", "2000", "local iterations timed per task")
+    .opt(
+        "fleet-edges",
+        "1000",
+        "fleet size of the per-task event-rate probe",
+    )
+    .opt("budget", "1000", "per-edge budget (ms) of the fleet probe")
+    .opt("seed", "42", "PRNG seed")
+    .opt("out", "BENCH_tasks.json", "output JSON path")
+}
+
+/// The per-task throughput bench behind CI's scale-smoke job: for every
+/// registered task, time `--steps` native local iterations (steps/sec)
+/// and one engine-free fleet run carrying the task's config
+/// (events/sec), then write BENCH_tasks.json — the perf trajectory's
+/// task-diversity axis.
+fn cmd_bench_tasks(argv: &[String]) -> Result<()> {
+    let Some(a) = bench_tasks_cli().parse(argv).map_err(|e| anyhow!(e))? else {
+        return Ok(());
+    };
+    let steps = a.usize("steps").map_err(|e| anyhow!(e))?.max(1);
+    let edges = a.usize("fleet-edges").map_err(|e| anyhow!(e))?.max(1);
+    let budget = a.f64("budget").map_err(|e| anyhow!(e))?;
+    let seed = a.u64("seed").map_err(|e| anyhow!(e))?;
+    let engine = ol4el::engine::native::NativeEngine::default();
+
+    let mut t = Table::new(
+        "per-task throughput (native local steps + engine-free fleet)",
+        &["task", "steps/sec", "events/sec"],
+    );
+    let mut rows = Vec::new();
+    for (name, _about) in ol4el::model::registered_tasks() {
+        let spec = TaskSpec::parse(name)?;
+        let learner = spec.learner();
+        let mut rng = ol4el::util::rng::Rng::new(seed);
+        let n = (learner.batch() * 8).max(1024);
+        let ds = std::sync::Arc::new(learner.synth(n, 2.5, &mut rng));
+        let mut params = learner.init_params(&ds, &mut rng);
+        let mut shard = ol4el::data::partition::iid(&ds, 1, &mut rng).remove(0);
+        let hyper = ol4el::edge::Hyper::default();
+        let (mut xbuf, mut ybuf) = (Vec::new(), Vec::new());
+        // Warmup outside the clock.
+        for _ in 0..steps.min(32) {
+            shard.next_batch(learner.batch(), &mut xbuf, &mut ybuf);
+            learner.local_step(&engine, &mut params, &xbuf, &ybuf, &hyper)?;
+        }
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            shard.next_batch(learner.batch(), &mut xbuf, &mut ybuf);
+            learner.local_step(&engine, &mut params, &xbuf, &ybuf, &hyper)?;
+        }
+        let step_secs = t0.elapsed().as_secs_f64();
+        let steps_per_sec = steps as f64 / step_secs.max(1e-9);
+
+        let fleet_cfg = RunConfig {
+            task: spec.clone(),
+            algo: Algo::Ol4elAsync,
+            n_edges: edges,
+            hetero: 4.0,
+            budget,
+            eval_every: 200,
+            // Engine-free probe: data is never generated; satisfy the
+            // eval-split + coverage invariants at any fleet size.
+            data_n: 20_000.max(edges + learner.eval_batch()),
+            seed,
+            ..Default::default()
+        };
+        let report = FleetSim::new(fleet_cfg)?.run()?;
+        let events_per_sec = report.events_per_sec();
+
+        t.row(vec![
+            name.to_string(),
+            f(steps_per_sec, 0),
+            f(events_per_sec, 0),
+        ]);
+        rows.push(Json::obj(vec![
+            ("task", Json::str(name)),
+            ("steps_per_sec", Json::num(steps_per_sec)),
+            ("events_per_sec", Json::num(events_per_sec)),
+            ("steps_timed", Json::num(steps as f64)),
+            ("fleet_edges", Json::num(edges as f64)),
+        ]));
+    }
+    print!("{}", t.render());
+    let j = Json::obj(vec![
+        ("seed", Json::num(seed as f64)),
+        ("tasks", Json::arr(rows.into_iter())),
+    ]);
+    let path = a.str("out");
+    std::fs::write(&path, j.pretty()).map_err(|e| anyhow!("writing {path}: {e}"))?;
+    eprintln!("[ol4el] wrote {path}");
     Ok(())
 }
 

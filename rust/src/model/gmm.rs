@@ -1,0 +1,387 @@
+//! Spherical Gaussian mixture via hard EM — the unsupervised **plugin
+//! proof** of the open task layer. Like [`logreg`](crate::model::logreg),
+//! this module is written purely against the public `Learner` API: the
+//! E-step's accumulation runs on the shared
+//! [`EngineOps::scatter_add`](crate::engine::EngineOps::scatter_add)
+//! primitive and the task registers through the same [`TaskFactory`] an
+//! out-of-tree task would use. Registry name `gmm`, spec
+//! `gmm[:k=COMPONENTS][:d=DIM]` (e.g. `gmm:k=3`).
+//!
+//! Model: flat `[means (k*d, row-major), logvar (k)]` — each component is
+//! an isotropic Gaussian `N(μ_j, σ_j² I)`. Means start at farthest-point
+//! seeded training rows. One local iteration is one
+//! damped hard-EM step on the batch: assign each row to the component
+//! maximizing its log-density, then move the assigned means toward the
+//! batch means and the log-variances toward the batch's mean squared
+//! deviation (the same Sculley-style damping the K-means learner uses, so
+//! update counts couple to clustering quality). Aggregation keeps the
+//! default shard-weighted parameter averaging — a deliberate
+//! approximation for this layout: exact sufficient-statistics merging
+//! would weight each component by its per-shard assignment mass and
+//! combine variances arithmetically (plus between-shard mean scatter),
+//! while averaging log-variances takes a geometric mean. Under roughly
+//! shard-proportional assignments the approximation is close, and it
+//! keeps the merge bit-compatible with every other learner. The metric
+//! is best-permutation clustering F1 of the hard assignments.
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::edge::Hyper;
+use crate::engine::{ComputeEngine, EngineOps as _};
+use crate::metrics;
+use crate::model::learner::{Learner, StepOut};
+use crate::model::registry::{TaskFactory, TaskParams};
+use crate::util::rng::Rng;
+
+/// Log-variances are clamped to this range so a component grabbing a
+/// single point cannot collapse (σ² → 0 sends its density to ∞ and
+/// freezes hard EM).
+const LOGVAR_RANGE: (f32, f32) = (-6.0, 6.0);
+
+/// The spherical-GMM task. Defaults mirror the K-means scenario's data
+/// shape (k=3, d=16) so both unsupervised tasks share the traffic-like
+/// corpus.
+#[derive(Clone, Copy, Debug)]
+pub struct GmmLearner {
+    /// Mixture components.
+    pub k: usize,
+    /// Feature dimension.
+    pub d: usize,
+}
+
+impl Default for GmmLearner {
+    fn default() -> Self {
+        GmmLearner { k: 3, d: 16 }
+    }
+}
+
+/// The registry factory for `gmm[:k=COMPONENTS][:d=DIM]`.
+pub fn factory() -> TaskFactory {
+    TaskFactory {
+        name: "gmm",
+        about: "spherical Gaussian mixture via damped hard EM; k=COMPONENTS d=DIM",
+        build: |p: &mut TaskParams| {
+            let learner = GmmLearner {
+                k: p.take("k", 3),
+                d: p.take("d", 16),
+            };
+            if learner.k < 2 || learner.d < 1 {
+                return Err(anyhow::anyhow!(
+                    "gmm needs k >= 2 and d >= 1, got k={} d={}",
+                    learner.k,
+                    learner.d
+                ));
+            }
+            Ok(Box::new(learner))
+        },
+    }
+}
+
+impl GmmLearner {
+    fn means_len(&self) -> usize {
+        self.k * self.d
+    }
+
+    /// Hard E-step: per-row argmax of the isotropic log-density
+    /// `-½(‖x−μ_j‖²/σ_j² + d·ln σ_j²)` (the `2π` constant is shared by
+    /// every component and dropped). Fills `assign` and the per-row
+    /// squared distance to the winning mean; returns the mean negative
+    /// (shifted) log-likelihood as the training signal.
+    fn hard_assign(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        assign: &mut Vec<i32>,
+        d2_best: &mut Vec<f32>,
+    ) -> f64 {
+        let (k, d) = (self.k, self.d);
+        let (means, logvar) = params.split_at(self.means_len());
+        let n = x.len() / d;
+        assign.clear();
+        d2_best.clear();
+        let var: Vec<f32> = logvar.iter().map(|lv| lv.exp()).collect();
+        let penalty: Vec<f32> = logvar.iter().map(|lv| d as f32 * lv).collect();
+        let mut nll = 0f64;
+        for i in 0..n {
+            let xi = &x[i * d..(i + 1) * d];
+            let mut best = 0usize;
+            let mut best_ll = f32::NEG_INFINITY;
+            let mut best_d2 = 0f32;
+            for j in 0..k {
+                let mj = &means[j * d..(j + 1) * d];
+                let mut d2 = 0f32;
+                for t in 0..d {
+                    let diff = xi[t] - mj[t];
+                    d2 += diff * diff;
+                }
+                let ll = -0.5 * (d2 / var[j] + penalty[j]);
+                if ll > best_ll {
+                    best_ll = ll;
+                    best = j;
+                    best_d2 = d2;
+                }
+            }
+            assign.push(best as i32);
+            d2_best.push(best_d2);
+            nll += -(best_ll as f64);
+        }
+        nll / n as f64
+    }
+}
+
+impl Learner for GmmLearner {
+    fn name(&self) -> &'static str {
+        "gmm"
+    }
+
+    fn spec(&self) -> String {
+        let mut s = "gmm".to_string();
+        let dflt = GmmLearner::default();
+        if self.k != dflt.k {
+            s.push_str(&format!(":k={}", self.k));
+        }
+        if self.d != dflt.d {
+            s.push_str(&format!(":d={}", self.d));
+        }
+        s
+    }
+
+    fn supervised(&self) -> bool {
+        false
+    }
+
+    fn metric_name(&self) -> &'static str {
+        "F1"
+    }
+
+    fn param_len(&self) -> usize {
+        self.means_len() + self.k
+    }
+
+    fn synth(&self, n: usize, separation: f64, rng: &mut Rng) -> Dataset {
+        crate::data::synth::TrafficLike {
+            n,
+            d: self.d,
+            k: self.k,
+            separation,
+            ..Default::default()
+        }
+        .generate(rng)
+    }
+
+    /// Farthest-point seeding over a subsample (the deterministic cousin
+    /// of the K-means learner's k-means++ init): the first mean is a
+    /// random training row, each further mean the subsample row farthest
+    /// from every mean so far — so no two components start inside the
+    /// same blob. Log-variances start at 0 (σ² = 1).
+    fn init_params(&self, train: &Dataset, rng: &mut Rng) -> Vec<f32> {
+        let d = self.d;
+        let mut params = Vec::with_capacity(self.param_len());
+        params.extend_from_slice(train.row(rng.below(train.n)));
+        let sample_n = train.n.min(1024);
+        for _ in 1..self.k {
+            let mut best = (0usize, -1.0f64);
+            for i in 0..sample_n {
+                let row = train.row(i * train.n / sample_n);
+                let mut min_d = f64::INFINITY;
+                for c in 0..params.len() / d {
+                    let center = &params[c * d..(c + 1) * d];
+                    let dist: f64 = row
+                        .iter()
+                        .zip(center)
+                        .map(|(a, b)| ((a - b) as f64).powi(2))
+                        .sum();
+                    min_d = min_d.min(dist);
+                }
+                if min_d > best.1 {
+                    best = (i, min_d);
+                }
+            }
+            params.extend_from_slice(train.row(best.0 * train.n / sample_n));
+        }
+        params.resize(self.param_len(), 0.0);
+        params
+    }
+
+    fn local_step(
+        &self,
+        engine: &dyn ComputeEngine,
+        params: &mut [f32],
+        x: &[f32],
+        y: &[i32],
+        hyper: &Hyper,
+    ) -> Result<StepOut> {
+        let _ = y; // unsupervised: labels never reach the learner
+        let (k, d) = (self.k, self.d);
+        let n = x.len() / d;
+        let mut assign = Vec::new();
+        let mut d2_best = Vec::new();
+        let nll = self.hard_assign(params, x, &mut assign, &mut d2_best);
+
+        // M-step statistics on the shared primitives.
+        let mut sums = vec![0f32; k * d];
+        let mut counts = vec![0f32; k];
+        engine
+            .ops()
+            .scatter_add(x, &assign, d, k, &mut sums, &mut counts);
+        let mut sq = vec![0f64; k];
+        for i in 0..n {
+            sq[assign[i] as usize] += d2_best[i] as f64;
+        }
+
+        // Damped updates (the K-means learner's eta): empty components
+        // keep their parameters — standard empty-cluster handling.
+        let eta = (hyper.lr as f64 * 0.75).clamp(0.0, 1.0) as f32;
+        let (means, logvar) = params.split_at_mut(self.means_len());
+        for j in 0..k {
+            if counts[j] <= 0.0 {
+                continue;
+            }
+            let inv = 1.0 / counts[j];
+            let mj = &mut means[j * d..(j + 1) * d];
+            for t in 0..d {
+                let target = sums[j * d + t] * inv;
+                mj[t] += eta * (target - mj[t]);
+            }
+            // Batch variance estimate against the pre-update mean.
+            let vhat = (sq[j] / (counts[j] as f64 * d as f64)).max(1e-6);
+            let target = (vhat.ln() as f32).clamp(LOGVAR_RANGE.0, LOGVAR_RANGE.1);
+            logvar[j] += eta * (target - logvar[j]);
+        }
+        Ok(StepOut { signal: nll })
+    }
+
+    fn evaluate(
+        &self,
+        _engine: &dyn ComputeEngine,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<f64> {
+        let mut assign = Vec::new();
+        let mut d2 = Vec::new();
+        self.hard_assign(params, x, &mut assign, &mut d2);
+        Ok(metrics::clustering_f1(&assign, y, self.k))
+    }
+
+    fn clone_box(&self) -> Box<dyn Learner> {
+        Box::new(*self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::native::NativeEngine;
+
+    fn blobs(n: usize, d: usize, rng: &mut Rng) -> (Vec<f32>, Vec<i32>) {
+        let centers = [[-6.0f32; 16], [0.0; 16], [6.0; 16]];
+        let mut x = Vec::with_capacity(n * d);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = i % 3;
+            for t in 0..d {
+                x.push(centers[c][t] + rng.normal() as f32 * 0.5);
+            }
+            y.push(c as i32);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn hard_em_recovers_separated_blobs() {
+        let learner = GmmLearner::default();
+        let engine = NativeEngine::default();
+        let mut rng = Rng::new(3);
+        let (x, y) = blobs(300, learner.d, &mut rng);
+        let ds = Dataset::new(x.clone(), y.clone(), learner.d);
+        let mut params = learner.init_params(&ds, &mut rng);
+        let hyper = Hyper {
+            lr: 0.6,
+            reg: 0.0,
+            lr_decay: 0.0,
+        };
+        let first = learner
+            .local_step(&engine, &mut params, &x, &y, &hyper)
+            .unwrap()
+            .signal;
+        let mut last = first;
+        for _ in 0..30 {
+            last = learner
+                .local_step(&engine, &mut params, &x, &y, &hyper)
+                .unwrap()
+                .signal;
+        }
+        assert!(last < first, "NLL did not fall: {first} -> {last}");
+        let f1 = learner.evaluate(&engine, &params, &x, &y).unwrap();
+        assert!(f1 > 0.9, "F1 {f1} on well-separated blobs");
+    }
+
+    #[test]
+    fn variances_adapt_toward_batch_scatter() {
+        let learner = GmmLearner { k: 2, d: 4 };
+        let engine = NativeEngine::default();
+        let mut rng = Rng::new(7);
+        // Two blobs with very different scatter.
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..200 {
+            let (c, center, sigma) = if i % 2 == 0 {
+                (0, -8.0, 0.2f64)
+            } else {
+                (1, 8.0, 2.0)
+            };
+            for _ in 0..4 {
+                x.push((center + rng.normal() * sigma) as f32);
+            }
+            y.push(c);
+        }
+        let ds = Dataset::new(x.clone(), y.clone(), 4);
+        let mut params = learner.init_params(&ds, &mut rng);
+        let hyper = Hyper {
+            lr: 0.8,
+            reg: 0.0,
+            lr_decay: 0.0,
+        };
+        for _ in 0..40 {
+            learner
+                .local_step(&engine, &mut params, &x, &y, &hyper)
+                .unwrap();
+        }
+        let logvar = &params[learner.means_len()..];
+        // Components must end with distinctly different variances, ordered
+        // by their blob's scatter (component order is recovered by the
+        // means' signs).
+        let means0 = params[0];
+        let (tight, wide) = if means0 < 0.0 {
+            (logvar[0], logvar[1])
+        } else {
+            (logvar[1], logvar[0])
+        };
+        assert!(
+            tight < wide,
+            "tight blob logvar {tight} should be below wide blob {wide}"
+        );
+    }
+
+    #[test]
+    fn empty_component_keeps_parameters() {
+        let learner = GmmLearner { k: 2, d: 2 };
+        let engine = NativeEngine::default();
+        // All points near the origin: the far component stays unassigned.
+        let x = vec![0.1f32, -0.1, 0.05, 0.0, -0.02, 0.03];
+        let y = vec![0, 0, 0];
+        let mut params = vec![0.0, 0.0, 100.0, 100.0, 0.0, 0.0];
+        let before_far = [params[2], params[3], params[5]];
+        let hyper = Hyper {
+            lr: 0.9,
+            reg: 0.0,
+            lr_decay: 0.0,
+        };
+        learner
+            .local_step(&engine, &mut params, &x, &y, &hyper)
+            .unwrap();
+        assert_eq!([params[2], params[3], params[5]], before_far);
+    }
+}

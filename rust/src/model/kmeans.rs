@@ -1,9 +1,19 @@
-//! Native (pure-Rust) K-means — the oracle twin of the `kmeans_step` /
-//! `kmeans_eval` HLO artifacts. Semantics match
-//! python/compile/kernels/ref.py (Lloyd E-step statistics; argmin ties to
-//! the lowest index like jnp.argmin).
+//! Mini-batch K-means: the reference (pure-Rust) numerics — the oracle
+//! twin of the `kmeans_step`/`kmeans_eval` HLO artifacts, semantics
+//! matching python/compile/kernels/ref.py (Lloyd E-step statistics;
+//! argmin ties to the lowest index like jnp.argmin) — plus the
+//! [`KmeansLearner`] plugging the task into the open [`Learner`] API
+//! (registry name `kmeans`, spec `kmeans[:k=CLUSTERS][:d=DIM]`).
 
-use crate::model::{ModelState, Task};
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::edge::Hyper;
+use crate::engine::{ComputeEngine, KernelArg, OutKind};
+use crate::metrics;
+use crate::model::learner::{Learner, StepOut};
+use crate::model::registry::{TaskFactory, TaskParams};
+use crate::model::ModelState;
 use crate::util::rng::Rng;
 
 /// K-means shape spec. `k` clusters over `d`-dim points; params are the
@@ -28,10 +38,7 @@ impl KmeansSpec {
         let params = (0..self.param_len())
             .map(|_| rng.normal() as f32)
             .collect();
-        ModelState {
-            task: Task::Kmeans,
-            params,
-        }
+        ModelState::new(params)
     }
 }
 
@@ -133,6 +140,225 @@ pub fn mstep(centers: &mut [f32], sums: &[f32], counts: &[f32], spec: &KmeansSpe
                 centers[j * d + t] = sums[j * d + t] * inv;
             }
         }
+    }
+}
+
+/// The K-means task as a [`Learner`] plugin. Defaults mirror the deployed
+/// artifact contract (k=3, d=16, batch 64, eval batch 512).
+#[derive(Clone, Copy, Debug)]
+pub struct KmeansLearner {
+    /// Number of clusters.
+    pub k: usize,
+    /// Feature dimension.
+    pub d: usize,
+}
+
+impl Default for KmeansLearner {
+    fn default() -> Self {
+        KmeansLearner { k: 3, d: 16 }
+    }
+}
+
+impl KmeansLearner {
+    fn kspec(&self) -> KmeansSpec {
+        KmeansSpec {
+            k: self.k,
+            d: self.d,
+        }
+    }
+
+    /// Whether the backend's fused kernel may serve this call — the AOT
+    /// artifacts are compiled for FIXED shapes (see the manifest
+    /// contract), so a parameterized learner (`kmeans:k=5`) or an
+    /// off-contract batch takes the portable path.
+    fn fused_ok(&self, engine: &dyn ComputeEngine, kernel: &str, n: usize, batch: usize) -> bool {
+        let contract = crate::engine::Shapes::default();
+        self.k == contract.km_k
+            && self.d == contract.km_d
+            && n == batch
+            && engine.has_kernel(kernel)
+    }
+}
+
+/// The registry factory for `kmeans[:k=CLUSTERS][:d=DIM]`.
+pub fn factory() -> TaskFactory {
+    TaskFactory {
+        name: "kmeans",
+        about: "mini-batch K-means (damped Lloyd); k=CLUSTERS d=DIM",
+        build: |p: &mut TaskParams| {
+            let learner = KmeansLearner {
+                k: p.take("k", 3),
+                d: p.take("d", 16),
+            };
+            if learner.k < 2 || learner.d < 1 {
+                return Err(anyhow::anyhow!(
+                    "kmeans needs k >= 2 and d >= 1, got k={} d={}",
+                    learner.k,
+                    learner.d
+                ));
+            }
+            Ok(Box::new(learner))
+        },
+    }
+}
+
+impl Learner for KmeansLearner {
+    fn name(&self) -> &'static str {
+        "kmeans"
+    }
+
+    fn spec(&self) -> String {
+        let mut s = "kmeans".to_string();
+        let dflt = KmeansLearner::default();
+        if self.k != dflt.k {
+            s.push_str(&format!(":k={}", self.k));
+        }
+        if self.d != dflt.d {
+            s.push_str(&format!(":d={}", self.d));
+        }
+        s
+    }
+
+    fn supervised(&self) -> bool {
+        false
+    }
+
+    fn metric_name(&self) -> &'static str {
+        "F1"
+    }
+
+    fn param_len(&self) -> usize {
+        self.k * self.d
+    }
+
+    fn synth(&self, n: usize, separation: f64, rng: &mut Rng) -> Dataset {
+        crate::data::synth::TrafficLike {
+            n,
+            d: self.d,
+            k: self.k,
+            separation,
+            ..Default::default()
+        }
+        .generate(rng)
+    }
+
+    /// k-means++ seeding over a subsample: spreads the initial centers
+    /// across blobs so no cluster begins empty and no policy starts with
+    /// collapsed centers (helps every algorithm equally). The RNG
+    /// consumption is exactly the legacy coordinator init, so fixed-seed
+    /// runs reproduce the pre-plugin traces.
+    fn init_params(&self, train: &Dataset, rng: &mut Rng) -> Vec<f32> {
+        let spec = self.kspec();
+        let sample_n = train.n.min(1024);
+        let mut params = Vec::with_capacity(spec.param_len());
+        let first = train.row(rng.below(train.n));
+        params.extend_from_slice(first);
+        let mut d2 = vec![0f64; sample_n];
+        for _ in 1..spec.k {
+            for (i, slot) in d2.iter_mut().enumerate() {
+                let row = train.row(i * train.n / sample_n);
+                let mut best = f64::INFINITY;
+                for c in 0..params.len() / spec.d {
+                    let center = &params[c * spec.d..(c + 1) * spec.d];
+                    let dist: f64 = row
+                        .iter()
+                        .zip(center)
+                        .map(|(a, b)| ((a - b) as f64).powi(2))
+                        .sum();
+                    best = best.min(dist);
+                }
+                *slot = best;
+            }
+            let pick = rng.weighted_choice(&d2).unwrap_or(0);
+            params.extend_from_slice(train.row(pick * train.n / sample_n));
+        }
+        params
+    }
+
+    /// Damped mini-batch M-step (Sculley-style online K-means): centers
+    /// move a decaying step toward the batch means. Like the SVM's lr
+    /// decay, this couples clustering quality to the number of achievable
+    /// updates — a full M-step per tiny batch would both thrash and
+    /// converge instantly.
+    fn local_step(
+        &self,
+        engine: &dyn ComputeEngine,
+        params: &mut [f32],
+        x: &[f32],
+        y: &[i32],
+        hyper: &Hyper,
+    ) -> Result<StepOut> {
+        let _ = y; // unsupervised: labels never reach the learner
+        let spec = self.kspec();
+        let n = x.len() / self.d;
+        let (sums, counts, inertia) = if self.fused_ok(
+            engine,
+            "kmeans_step",
+            n,
+            crate::engine::Shapes::default().km_batch,
+        ) {
+            let c_dims = [self.k, self.d];
+            let x_dims = [n, self.d];
+            let out = engine.run_kernel(
+                "kmeans_step",
+                &[
+                    KernelArg::F32 { data: params, dims: &c_dims },
+                    KernelArg::F32 { data: x, dims: &x_dims },
+                ],
+                &[OutKind::F32Vec, OutKind::F32Vec, OutKind::Scalar],
+            )?;
+            let mut it = out.into_iter();
+            let sums = it.next().unwrap().into_f32s()?;
+            let counts = it.next().unwrap().into_f32s()?;
+            let inertia = it.next().unwrap().into_scalar()?;
+            (sums, counts, inertia)
+        } else {
+            stats(params, x, &spec)
+        };
+        let eta = (hyper.lr as f64 * 0.75).clamp(0.0, 1.0) as f32;
+        let mut target = params.to_vec();
+        mstep(&mut target, &sums, &counts, &spec);
+        for (c, t) in params.iter_mut().zip(&target) {
+            *c += eta * (*t - *c);
+        }
+        Ok(StepOut {
+            signal: inertia as f64,
+        })
+    }
+
+    fn evaluate(
+        &self,
+        engine: &dyn ComputeEngine,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<f64> {
+        let n = x.len() / self.d;
+        let assignments = if self.fused_ok(
+            engine,
+            "kmeans_eval",
+            n,
+            crate::engine::Shapes::default().km_eval_batch,
+        ) {
+            let c_dims = [self.k, self.d];
+            let x_dims = [n, self.d];
+            let out = engine.run_kernel(
+                "kmeans_eval",
+                &[
+                    KernelArg::F32 { data: params, dims: &c_dims },
+                    KernelArg::F32 { data: x, dims: &x_dims },
+                ],
+                &[OutKind::I32Vec, OutKind::Scalar],
+            )?;
+            out.into_iter().next().unwrap().into_i32s()?
+        } else {
+            assign(params, x, &self.kspec()).0
+        };
+        Ok(metrics::clustering_f1(&assignments, y, self.k))
+    }
+
+    fn clone_box(&self) -> Box<dyn Learner> {
+        Box::new(*self)
     }
 }
 

@@ -1,0 +1,189 @@
+//! The object-safe [`Learner`] plugin API — the open task layer.
+//!
+//! A learner is ONE value that owns everything task-specific the system
+//! ever needs: its parameter layout and initialization, its local
+//! iteration and evaluation metric, its aggregation rule, its synthetic
+//! data generator and its default deployment shapes. Every other layer —
+//! the edge round loop, the coordinator's aggregation and utility
+//! metering, the suites, the figure harnesses, the CLI and the fleet
+//! simulator — is written against `Box<dyn Learner>` and never matches on
+//! a task enum. Adding a workload is one `impl Learner` plus one
+//! [`register`](crate::model::registry::register) call (see
+//! `docs/ARCHITECTURE.md` § "The task layer"); `model/logreg.rs` and
+//! `model/gmm.rs` are in-tree proofs written purely against this API.
+//!
+//! Learners reach compute through two doors of
+//! [`ComputeEngine`](crate::engine::ComputeEngine):
+//!
+//! * the task-agnostic primitive ops
+//!   ([`EngineOps`](crate::engine::EngineOps): gemm/axpy/argmin-distance/
+//!   scatter-reduce), implemented once and available on every backend —
+//!   the portable path every learner must provide;
+//! * optional fused AOT kernels
+//!   ([`run_kernel`](crate::engine::ComputeEngine::run_kernel)), keyed by
+//!   `"{learner}_{step|eval}"` in the PJRT artifact manifest — an
+//!   accelerator fast path a learner MAY use when
+//!   [`has_kernel`](crate::engine::ComputeEngine::has_kernel) says the
+//!   backend ships one.
+
+use anyhow::Result;
+
+use crate::config::PartitionKind;
+use crate::coordinator::aggregate;
+use crate::data::Dataset;
+use crate::edge::Hyper;
+use crate::engine::ComputeEngine;
+use crate::util::rng::Rng;
+
+/// Output of one local iteration.
+#[derive(Clone, Copy, Debug)]
+pub struct StepOut {
+    /// Mean training signal of the batch (hinge loss, inertia, NLL, …) —
+    /// diagnostics only, never the bandit reward.
+    pub signal: f64,
+}
+
+/// A pluggable learning task. Object-safe; the system only ever holds
+/// `Box<dyn Learner>`.
+///
+/// The contract every implementation must keep:
+///
+/// * `local_step` updates `params` in place and must be deterministic in
+///   its inputs (all randomness comes from the batch the caller drew);
+/// * `evaluate` returns the task's headline metric in `[0, 1]` (the
+///   utility meter and the figure tables assume a unit range);
+/// * `aggregate` (default: shard-weighted parameter averaging) must
+///   return a vector of `param_len()` — it is the synchronous barrier's
+///   merge rule. For mean-style parameter layouts (centers, means) the
+///   shard-size-weighted average matches the sufficient-statistics merge
+///   exactly when assignments are shard-proportional, and approximates
+///   it otherwise — override the hook when a task needs the exact
+///   statistic (e.g. count-weighted or variance-aware merging);
+/// * `synth` must consume the RNG identically for a given `(n, d, …)` so
+///   fixed-seed runs reproduce.
+pub trait Learner {
+    /// Registry name (`"svm"`, `"kmeans"`, `"logreg"`, `"gmm"`, …) — also
+    /// the key prefix of the backend's fused kernels.
+    fn name(&self) -> &'static str;
+
+    /// Canonical parameterized spec, round-trippable through
+    /// [`TaskSpec::parse`](crate::model::TaskSpec::parse) (e.g.
+    /// `kmeans:k=5`; bare `name` when every parameter is the default).
+    /// This is what the JSON wire format carries.
+    fn spec(&self) -> String;
+
+    /// Whether the task consumes labels (drives the paper regime's
+    /// default sharding: label-skew for supervised tasks, IID otherwise).
+    fn supervised(&self) -> bool;
+
+    /// Display name of the evaluation metric (`"accuracy"`, `"F1"`, …).
+    fn metric_name(&self) -> &'static str;
+
+    /// Flat parameter count of the model.
+    fn param_len(&self) -> usize;
+
+    /// Local-iteration batch size (rows per `local_step`).
+    fn batch(&self) -> usize {
+        64
+    }
+
+    /// Eval batch size (rows in the Cloud's held-out test buffer).
+    fn eval_batch(&self) -> usize {
+        512
+    }
+
+    /// Generate the training corpus (`n` pre-shuffled rows at the given
+    /// generator difficulty).
+    fn synth(&self, n: usize, separation: f64, rng: &mut Rng) -> Dataset;
+
+    /// The global model at t=0 (paper: "set the global model randomly").
+    /// May inspect the training data for data-dependent seeding (e.g.
+    /// k-means++ over a subsample).
+    fn init_params(&self, train: &Dataset, rng: &mut Rng) -> Vec<f32>;
+
+    /// One local iteration on a batch; `params` updated in place.
+    fn local_step(
+        &self,
+        engine: &dyn ComputeEngine,
+        params: &mut [f32],
+        x: &[f32],
+        y: &[i32],
+        hyper: &Hyper,
+    ) -> Result<StepOut>;
+
+    /// Headline test metric of `params` on an eval buffer, in `[0, 1]`.
+    fn evaluate(
+        &self,
+        engine: &dyn ComputeEngine,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<f64>;
+
+    /// The synchronous barrier's merge rule: fold the cohort's local
+    /// parameter vectors (with their aggregation weights) into the next
+    /// global vector. Default: normalized weighted averaging — correct
+    /// for SGD-family tasks and a close approximation for mean-style
+    /// layouts (exact when assignments are shard-proportional); override
+    /// for tasks needing an exact sufficient-statistics merge.
+    fn aggregate(&self, locals: &[(&[f32], f64)]) -> Vec<f32> {
+        aggregate::weighted_average_params(locals)
+    }
+
+    /// The paper-figure sharding regime for this task (see
+    /// [`RunConfig::with_paper_utility`](crate::config::RunConfig::with_paper_utility)).
+    fn paper_partition(&self) -> PartitionKind {
+        if self.supervised() {
+            PartitionKind::LabelSkew { alpha: 0.5 }
+        } else {
+            PartitionKind::Iid
+        }
+    }
+
+    /// Clone into a fresh box (object-safe `Clone`).
+    fn clone_box(&self) -> Box<dyn Learner>;
+}
+
+impl Clone for Box<dyn Learner> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TaskSpec;
+
+    #[test]
+    fn default_paper_partition_follows_supervision() {
+        let svm = TaskSpec::svm().learner();
+        assert!(svm.supervised());
+        assert!(matches!(
+            svm.paper_partition(),
+            PartitionKind::LabelSkew { .. }
+        ));
+        let km = TaskSpec::kmeans().learner();
+        assert!(!km.supervised());
+        assert_eq!(km.paper_partition(), PartitionKind::Iid);
+    }
+
+    #[test]
+    fn default_aggregate_is_weighted_average() {
+        let learner = TaskSpec::kmeans().learner();
+        let a = vec![0.0f32; learner.param_len()];
+        let mut b = vec![0.0f32; learner.param_len()];
+        b[0] = 2.0;
+        let merged = learner.aggregate(&[(a.as_slice(), 1.0), (b.as_slice(), 1.0)]);
+        assert_eq!(merged.len(), learner.param_len());
+        assert!((merged[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn boxed_learner_clones() {
+        let learner: Box<dyn Learner> = TaskSpec::svm().learner();
+        let twin = learner.clone();
+        assert_eq!(twin.name(), "svm");
+        assert_eq!(twin.param_len(), learner.param_len());
+    }
+}

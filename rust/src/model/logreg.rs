@@ -1,0 +1,323 @@
+//! Multinomial logistic regression — the supervised **plugin proof** of
+//! the open task layer. This module is written purely against the public
+//! `Learner` API: it composes the shared
+//! [`EngineOps`](crate::engine::EngineOps) primitives (the dense-score
+//! `gemm_bias` kernel), defines no engine methods, and registers through
+//! the same [`TaskFactory`] an out-of-tree task would use. Registry name
+//! `logreg`, spec `logreg[:d=DIM][:c=CLASSES]` (e.g. `logreg:d=59:c=8`).
+//!
+//! Model: flat `[w (d*c, row-major), b (c)]` — the same layout family as
+//! the SVM, so the default shard-weighted parameter averaging is the
+//! correct aggregation rule. One local iteration is one SGD step on the
+//! batch's softmax cross-entropy with L2 regularization; the training
+//! signal is the regularized mean negative log-likelihood.
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::edge::Hyper;
+use crate::engine::{ComputeEngine, EngineOps as _};
+use crate::metrics;
+use crate::model::learner::{Learner, StepOut};
+use crate::model::registry::{TaskFactory, TaskParams};
+use crate::util::rng::Rng;
+
+/// The logistic-regression task. Defaults mirror the SVM scenario's data
+/// shape (d=59, c=8) so both supervised tasks share the wafer-like corpus.
+#[derive(Clone, Copy, Debug)]
+pub struct LogRegLearner {
+    /// Feature dimension.
+    pub d: usize,
+    /// Class count.
+    pub c: usize,
+}
+
+impl Default for LogRegLearner {
+    fn default() -> Self {
+        LogRegLearner { d: 59, c: 8 }
+    }
+}
+
+/// The registry factory for `logreg[:d=DIM][:c=CLASSES]`.
+pub fn factory() -> TaskFactory {
+    TaskFactory {
+        name: "logreg",
+        about: "multinomial logistic regression (softmax SGD); d=DIM c=CLASSES",
+        build: |p: &mut TaskParams| {
+            let learner = LogRegLearner {
+                d: p.take("d", 59),
+                c: p.take("c", 8),
+            };
+            if learner.d < 1 || learner.c < 2 {
+                return Err(anyhow::anyhow!(
+                    "logreg needs d >= 1 and c >= 2, got d={} c={}",
+                    learner.d,
+                    learner.c
+                ));
+            }
+            Ok(Box::new(learner))
+        },
+    }
+}
+
+impl LogRegLearner {
+    /// Batch scores via the shared gemm primitive, then in-place softmax.
+    /// Returns the mean NLL of the batch and leaves the per-row
+    /// probabilities in `scores`.
+    fn softmax_scores(
+        &self,
+        engine: &dyn ComputeEngine,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        scores: &mut Vec<f32>,
+    ) -> f64 {
+        let (d, c) = (self.d, self.c);
+        let n = x.len() / d;
+        let (w, b) = params.split_at(d * c);
+        scores.clear();
+        scores.resize(n * c, 0.0);
+        engine.ops().gemm_bias(x, w, b, d, c, scores);
+        let mut nll = 0f64;
+        for i in 0..n {
+            let row = &mut scores[i * c..(i + 1) * c];
+            // Max-subtracted softmax for numeric stability.
+            let mut max = f32::NEG_INFINITY;
+            for &s in row.iter() {
+                max = max.max(s);
+            }
+            let mut z = 0f32;
+            for s in row.iter_mut() {
+                *s = (*s - max).exp();
+                z += *s;
+            }
+            let inv_z = 1.0 / z;
+            for s in row.iter_mut() {
+                *s *= inv_z;
+            }
+            let yi = y[i] as usize;
+            debug_assert!(yi < c);
+            nll += -(row[yi].max(1e-12) as f64).ln();
+        }
+        nll / n as f64
+    }
+}
+
+impl Learner for LogRegLearner {
+    fn name(&self) -> &'static str {
+        "logreg"
+    }
+
+    fn spec(&self) -> String {
+        let mut s = "logreg".to_string();
+        let dflt = LogRegLearner::default();
+        if self.d != dflt.d {
+            s.push_str(&format!(":d={}", self.d));
+        }
+        if self.c != dflt.c {
+            s.push_str(&format!(":c={}", self.c));
+        }
+        s
+    }
+
+    fn supervised(&self) -> bool {
+        true
+    }
+
+    fn metric_name(&self) -> &'static str {
+        "accuracy"
+    }
+
+    fn param_len(&self) -> usize {
+        self.d * self.c + self.c
+    }
+
+    fn synth(&self, n: usize, separation: f64, rng: &mut Rng) -> Dataset {
+        crate::data::synth::WaferLike {
+            n,
+            d: self.d,
+            classes: self.c,
+            separation,
+            ..Default::default()
+        }
+        .generate(rng)
+    }
+
+    fn init_params(&self, _train: &Dataset, _rng: &mut Rng) -> Vec<f32> {
+        vec![0.0; self.param_len()]
+    }
+
+    fn local_step(
+        &self,
+        engine: &dyn ComputeEngine,
+        params: &mut [f32],
+        x: &[f32],
+        y: &[i32],
+        hyper: &Hyper,
+    ) -> Result<StepOut> {
+        let (d, c) = (self.d, self.c);
+        let n = x.len() / d;
+        let mut probs = Vec::new();
+        let nll = self.softmax_scores(engine, params, x, y, &mut probs);
+
+        // Gradient: g[i, k] = p[i, k] - 1{k == y_i}; dw = x^T g / n + reg*w.
+        let mut dw = vec![0f32; d * c];
+        let mut db = vec![0f32; c];
+        for i in 0..n {
+            let gi = &mut probs[i * c..(i + 1) * c];
+            gi[y[i] as usize] -= 1.0;
+            let xi = &x[i * d..(i + 1) * d];
+            for (j, &xij) in xi.iter().enumerate() {
+                let dwj = &mut dw[j * c..(j + 1) * c];
+                for k in 0..c {
+                    dwj[k] += xij * gi[k];
+                }
+            }
+            for k in 0..c {
+                db[k] += gi[k];
+            }
+        }
+
+        let (w, b) = params.split_at_mut(d * c);
+        let inv_n = 1.0 / n as f32;
+        let mut w_sq = 0f64;
+        for v in w.iter() {
+            w_sq += (*v as f64) * (*v as f64);
+        }
+        for (wv, g) in w.iter_mut().zip(&dw) {
+            *wv -= hyper.lr * (g * inv_n + hyper.reg * *wv);
+        }
+        for (bv, g) in b.iter_mut().zip(&db) {
+            *bv -= hyper.lr * g * inv_n;
+        }
+        Ok(StepOut {
+            signal: nll + 0.5 * hyper.reg as f64 * w_sq,
+        })
+    }
+
+    fn evaluate(
+        &self,
+        engine: &dyn ComputeEngine,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<f64> {
+        let (d, c) = (self.d, self.c);
+        let n = x.len() / d;
+        let (w, b) = params.split_at(d * c);
+        let mut scores = vec![0f32; n * c];
+        engine.ops().gemm_bias(x, w, b, d, c, &mut scores);
+        let mut correct = 0f32;
+        for i in 0..n {
+            let row = &scores[i * c..(i + 1) * c];
+            let mut best = 0usize;
+            for k in 1..c {
+                if row[k] > row[best] {
+                    best = k;
+                }
+            }
+            if best == y[i] as usize {
+                correct += 1.0;
+            }
+        }
+        Ok(metrics::accuracy(correct, n))
+    }
+
+    fn clone_box(&self) -> Box<dyn Learner> {
+        Box::new(*self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::native::NativeEngine;
+
+    fn separable(n: usize, lr: &LogRegLearner, rng: &mut Rng) -> (Vec<f32>, Vec<i32>) {
+        // label = argmax of the first c features
+        let mut x = Vec::with_capacity(n * lr.d);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let row: Vec<f32> = (0..lr.d).map(|_| rng.normal() as f32).collect();
+            let mut best = 0;
+            for k in 1..lr.c {
+                if row[k] > row[best] {
+                    best = k;
+                }
+            }
+            y.push(best as i32);
+            x.extend_from_slice(&row);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn zero_weights_nll_is_ln_c() {
+        let learner = LogRegLearner { d: 10, c: 4 };
+        let engine = NativeEngine::default();
+        let mut params = vec![0f32; learner.param_len()];
+        let x = vec![1.0f32; 8 * learner.d];
+        let y = vec![0i32; 8];
+        let hyper = Hyper {
+            lr: 0.0,
+            reg: 0.0,
+            lr_decay: 0.0,
+        };
+        let out = learner
+            .local_step(&engine, &mut params, &x, &y, &hyper)
+            .unwrap();
+        // Uniform softmax: NLL = ln(c).
+        assert!((out.signal - (learner.c as f64).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn sgd_fits_separable_batch() {
+        let learner = LogRegLearner { d: 10, c: 4 };
+        let engine = NativeEngine::default();
+        let mut rng = Rng::new(0);
+        let (x, y) = separable(256, &learner, &mut rng);
+        let mut params = vec![0f32; learner.param_len()];
+        let hyper = Hyper {
+            lr: 0.5,
+            reg: 0.0,
+            lr_decay: 0.0,
+        };
+        let first = learner
+            .local_step(&engine, &mut params, &x, &y, &hyper)
+            .unwrap()
+            .signal;
+        let mut last = first;
+        for _ in 0..80 {
+            last = learner
+                .local_step(&engine, &mut params, &x, &y, &hyper)
+                .unwrap()
+                .signal;
+        }
+        assert!(last < 0.3 * first, "first={first} last={last}");
+        let acc = learner.evaluate(&engine, &params, &x, &y).unwrap();
+        assert!(acc > 0.9, "acc={acc}");
+    }
+
+    #[test]
+    fn regularization_shrinks_weights() {
+        let learner = LogRegLearner { d: 10, c: 4 };
+        let engine = NativeEngine::default();
+        let mut rng = Rng::new(1);
+        let (x, y) = separable(64, &learner, &mut rng);
+        let mut run = |reg: f32| {
+            let mut params = vec![0f32; learner.param_len()];
+            let hyper = Hyper {
+                lr: 0.3,
+                reg,
+                lr_decay: 0.0,
+            };
+            for _ in 0..10 {
+                learner
+                    .local_step(&engine, &mut params, &x, &y, &hyper)
+                    .unwrap();
+            }
+            params.iter().map(|v| (*v as f64).powi(2)).sum::<f64>()
+        };
+        assert!(run(0.5) < run(0.0));
+    }
+}

@@ -1,57 +1,53 @@
-//! Model state shared between edges and the Cloud.
+//! The task layer: model state shared between edges and the Cloud, and
+//! the open [`Learner`] plugin API that replaced the closed SVM/K-means
+//! task enum.
 //!
-//! Both use cases carry their parameters as a flat `Vec<f32>` so the
-//! coordinator's aggregation (weighted averaging) is model-agnostic:
-//! * SVM: `[w (d*c, row-major), b (c)]`
-//! * K-means: `[centers (k*d, row-major)]`
+//! Every task carries its parameters as a flat `Vec<f32>` so the
+//! coordinator's merges stay model-agnostic; everything else that is
+//! task-specific — parameter layout and init, the local iteration, the
+//! evaluation metric, the aggregation rule, the synthetic data generator
+//! and the default shapes — lives behind the object-safe [`Learner`]
+//! trait, resolved by name through the [`registry`] (wire type:
+//! [`TaskSpec`], grammar `NAME[:KEY=N]*`, e.g. `kmeans:k=5`).
+//!
+//! In-tree learners (flat parameter layouts):
+//!
+//! * [`svm`] — multi-class linear SVM, `[w (d*c, row-major), b (c)]`
+//!   (wafer-map-like classification, paper §V-A supervised);
+//! * [`kmeans`] — mini-batch K-means, `[centers (k*d, row-major)]`
+//!   (traffic-stream-like clustering, paper §V-A unsupervised);
+//! * [`logreg`] — multinomial logistic regression, `[w (d*c), b (c)]`
+//!   (plugin proof, written purely against the public API);
+//! * [`gmm`] — spherical GMM via hard EM, `[means (k*d), logvar (k)]`
+//!   (plugin proof, unsupervised).
 
+pub mod gmm;
 pub mod kmeans;
+pub mod learner;
+pub mod logreg;
+pub mod registry;
 pub mod svm;
 
-/// Which learning task the system is training (paper §V-A: SVM supervised,
-/// K-means unsupervised).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Task {
-    /// Multi-class linear SVM (wafer-map-like classification).
-    Svm,
-    /// Mini-batch K-means (traffic-stream-like clustering).
-    Kmeans,
-}
+pub use learner::{Learner, StepOut};
+pub use registry::{register, registered_tasks, TaskFactory, TaskParams, TaskSpec};
 
-impl Task {
-    /// Canonical display/wire name.
-    pub fn name(self) -> &'static str {
-        match self {
-            Task::Svm => "svm",
-            Task::Kmeans => "kmeans",
-        }
-    }
-
-    /// Parse a task name (`svm | kmeans`).
-    pub fn parse(s: &str) -> Option<Task> {
-        match s.to_ascii_lowercase().as_str() {
-            "svm" => Some(Task::Svm),
-            "kmeans" | "k-means" => Some(Task::Kmeans),
-            _ => None,
-        }
-    }
-}
-
-/// Flat parameter vector + the task tag. The layout contract with the
-/// engines is documented above.
-#[derive(Clone, Debug)]
+/// Flat parameter vector. The layout contract is owned by the task's
+/// [`Learner`] (see the module docs).
+#[derive(Clone, Debug, PartialEq)]
 pub struct ModelState {
-    /// Which task the parameters belong to.
-    pub task: Task,
     /// Flat parameter buffer (layout per task, see the module docs).
     pub params: Vec<f32>,
 }
 
 impl ModelState {
-    /// An all-zeros model of the given task and length.
-    pub fn zeros(task: Task, len: usize) -> Self {
+    /// A model over the given flat parameters.
+    pub fn new(params: Vec<f32>) -> Self {
+        ModelState { params }
+    }
+
+    /// An all-zeros model of the given length.
+    pub fn zeros(len: usize) -> Self {
         ModelState {
-            task,
             params: vec![0.0; len],
         }
     }
@@ -97,36 +93,25 @@ mod tests {
 
     #[test]
     fn l2_distance_basic() {
-        let a = ModelState {
-            task: Task::Svm,
-            params: vec![0.0, 3.0],
-        };
-        let b = ModelState {
-            task: Task::Svm,
-            params: vec![4.0, 0.0],
-        };
+        let a = ModelState::new(vec![0.0, 3.0]);
+        let b = ModelState::new(vec![4.0, 0.0]);
         assert!((a.l2_distance(&b) - 5.0).abs() < 1e-9);
         assert_eq!(a.l2_distance(&a), 0.0);
     }
 
     #[test]
     fn lerp_midpoint() {
-        let mut a = ModelState {
-            task: Task::Kmeans,
-            params: vec![0.0, 2.0],
-        };
-        let b = ModelState {
-            task: Task::Kmeans,
-            params: vec![2.0, 0.0],
-        };
+        let mut a = ModelState::new(vec![0.0, 2.0]);
+        let b = ModelState::new(vec![2.0, 0.0]);
         a.lerp_from(&b, 0.5);
         assert_eq!(a.params, vec![1.0, 1.0]);
     }
 
     #[test]
-    fn task_parse() {
-        assert_eq!(Task::parse("SVM"), Some(Task::Svm));
-        assert_eq!(Task::parse("k-means"), Some(Task::Kmeans));
-        assert_eq!(Task::parse("mlp"), None);
+    fn zeros_and_len() {
+        let z = ModelState::zeros(4);
+        assert_eq!(z.len(), 4);
+        assert!(!z.is_empty());
+        assert!(z.params.iter().all(|&p| p == 0.0));
     }
 }

@@ -1,0 +1,292 @@
+//! The task registry: name → [`Learner`] factories, and the [`TaskSpec`]
+//! wire type the rest of the system carries instead of a task enum.
+//!
+//! Grammar (single-sourced in `docs/GRAMMAR.md`):
+//!
+//! ```text
+//! task := NAME ( ':' KEY '=' N )*
+//! ```
+//!
+//! e.g. `svm`, `kmeans:k=5`, `logreg:d=59:c=8`, `gmm:k=3`. `NAME` resolves
+//! against the registry; `KEY=N` pairs are integer parameters each factory
+//! interprets (unknown keys are typed errors, never silently dropped).
+//! The JSON wire format keeps accepting the legacy `"svm"` / `"kmeans"`
+//! spellings unchanged (`"k-means"` stays an accepted alias).
+//!
+//! The registry ships four tasks (`svm`, `kmeans`, `logreg`, `gmm`) and is
+//! open: [`register`] adds a new task at runtime, after which its spec
+//! works everywhere a task name does — `--task`, the JSON wire format,
+//! suites, the fleet simulator. `logreg` and `gmm` are themselves
+//! registered through the same factory type an external caller would use.
+
+use std::collections::BTreeMap;
+use std::sync::{OnceLock, RwLock};
+
+use anyhow::{anyhow, Result};
+
+use crate::model::learner::Learner;
+
+/// Integer parameters of a task spec (`k=3`, `d=59`, …). Factories take
+/// what they understand; [`TaskParams::finish`] rejects leftovers so a
+/// typo like `kmeans:q=3` is an error, not a silent default.
+pub struct TaskParams {
+    pairs: BTreeMap<String, usize>,
+}
+
+impl TaskParams {
+    fn parse(segments: &[&str]) -> Result<TaskParams> {
+        let mut pairs = BTreeMap::new();
+        for seg in segments {
+            let (key, val) = seg
+                .split_once('=')
+                .ok_or_else(|| anyhow!("task parameter '{seg}' is not KEY=N"))?;
+            let val: usize = val
+                .parse()
+                .map_err(|_| anyhow!("task parameter '{seg}': '{val}' is not an integer"))?;
+            if pairs.insert(key.to_string(), val).is_some() {
+                return Err(anyhow!("task parameter '{key}' given twice"));
+            }
+        }
+        Ok(TaskParams { pairs })
+    }
+
+    /// Take an integer parameter, falling back to `default` when absent.
+    pub fn take(&mut self, key: &str, default: usize) -> usize {
+        self.pairs.remove(key).unwrap_or(default)
+    }
+
+    /// Error on parameters the factory did not consume.
+    pub fn finish(&self, task: &str) -> Result<()> {
+        if let Some(key) = self.pairs.keys().next() {
+            return Err(anyhow!(
+                "task '{task}' does not take a parameter '{key}'"
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// One registered task: a name plus a factory from spec parameters to a
+/// learner. Plain `fn` pointers keep the registry `Send + Sync` without
+/// imposing bounds on learners themselves.
+pub struct TaskFactory {
+    /// Registry name (the spec head, e.g. `"kmeans"`).
+    pub name: &'static str,
+    /// One-line description for `--help` and diagnostics.
+    pub about: &'static str,
+    /// Build a learner from the spec's `KEY=N` parameters.
+    pub build: fn(&mut TaskParams) -> Result<Box<dyn Learner>>,
+}
+
+fn registry() -> &'static RwLock<Vec<TaskFactory>> {
+    static REGISTRY: OnceLock<RwLock<Vec<TaskFactory>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        RwLock::new(vec![
+            crate::model::svm::factory(),
+            crate::model::kmeans::factory(),
+            // The two openness proofs ride the same public factory type an
+            // out-of-tree task would use.
+            crate::model::logreg::factory(),
+            crate::model::gmm::factory(),
+        ])
+    })
+}
+
+/// Register a new task. Errors when the name collides with an existing
+/// registration (names are the spec heads and the fused-kernel keys, so
+/// they must stay unique).
+pub fn register(factory: TaskFactory) -> Result<()> {
+    let mut reg = registry().write().unwrap();
+    if reg.iter().any(|f| f.name == factory.name) {
+        return Err(anyhow!("task '{}' is already registered", factory.name));
+    }
+    reg.push(factory);
+    Ok(())
+}
+
+/// Every registered task as `(name, about)`, in registration order.
+pub fn registered_tasks() -> Vec<(&'static str, &'static str)> {
+    registry()
+        .read()
+        .unwrap()
+        .iter()
+        .map(|f| (f.name, f.about))
+        .collect()
+}
+
+/// Resolve a task spec string into a learner.
+pub fn resolve(spec: &str) -> Result<Box<dyn Learner>> {
+    let spec = spec.to_ascii_lowercase();
+    let mut segments = spec.split(':');
+    let head = segments.next().unwrap_or("");
+    // Legacy wire alias kept from the enum era.
+    let head = if head == "k-means" { "kmeans" } else { head };
+    let params: Vec<&str> = segments.collect();
+    let reg = registry().read().unwrap();
+    let factory = reg
+        .iter()
+        .find(|f| f.name == head)
+        .ok_or_else(|| {
+            let known: Vec<&str> = reg.iter().map(|f| f.name).collect();
+            anyhow!(
+                "unknown task '{head}' (registered: {}; grammar: NAME[:KEY=N]*)",
+                known.join(", ")
+            )
+        })?;
+    let mut p = TaskParams::parse(&params)?;
+    let learner = (factory.build)(&mut p)?;
+    p.finish(head)?;
+    Ok(learner)
+}
+
+/// A validated task spec — the wire/config representation of a learner.
+///
+/// Holds the canonical spec string (`learner.spec()` of the resolved
+/// learner, so explicitly-spelled default parameters collapse:
+/// `kmeans:k=3` canonicalizes to `kmeans`). Cheap to clone and `Send`, so
+/// configs cross worker threads freely; the learner itself is
+/// materialized per run via [`TaskSpec::learner`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TaskSpec {
+    spec: String,
+}
+
+impl TaskSpec {
+    /// Parse and validate a task spec against the registry, canonicalizing
+    /// the parameter spelling. This is the wire entry point: the JSON
+    /// format and `--task` both come through here.
+    pub fn parse(s: &str) -> Result<TaskSpec> {
+        let learner = resolve(s)?;
+        Ok(TaskSpec {
+            spec: learner.spec(),
+        })
+    }
+
+    /// The default SVM task (the paper's supervised scenario).
+    pub fn svm() -> TaskSpec {
+        TaskSpec {
+            spec: "svm".to_string(),
+        }
+    }
+
+    /// The default K-means task (the paper's unsupervised scenario).
+    pub fn kmeans() -> TaskSpec {
+        TaskSpec {
+            spec: "kmeans".to_string(),
+        }
+    }
+
+    /// The logistic-regression task (plugin proof, supervised).
+    pub fn logreg() -> TaskSpec {
+        TaskSpec {
+            spec: "logreg".to_string(),
+        }
+    }
+
+    /// The spherical-GMM task (plugin proof, unsupervised).
+    pub fn gmm() -> TaskSpec {
+        TaskSpec {
+            spec: "gmm".to_string(),
+        }
+    }
+
+    /// The canonical spec string (what the JSON wire format carries).
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    /// The task's registry name (the spec head).
+    pub fn name(&self) -> &str {
+        self.spec.split(':').next().unwrap_or(&self.spec)
+    }
+
+    /// Materialize the learner. Infallible: a `TaskSpec` only exists via
+    /// [`parse`](TaskSpec::parse) or the builtin constructors, and the
+    /// registry is append-only.
+    pub fn learner(&self) -> Box<dyn Learner> {
+        resolve(&self.spec).expect("TaskSpec was validated at construction")
+    }
+}
+
+impl Default for TaskSpec {
+    fn default() -> Self {
+        TaskSpec::svm()
+    }
+}
+
+impl std::fmt::Display for TaskSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_tasks_resolve() {
+        for name in ["svm", "kmeans", "logreg", "gmm"] {
+            let learner = resolve(name).unwrap();
+            assert_eq!(learner.name(), name);
+            assert!(learner.param_len() > 0);
+        }
+    }
+
+    #[test]
+    fn legacy_wire_spellings_still_parse() {
+        assert_eq!(TaskSpec::parse("SVM").unwrap().name(), "svm");
+        assert_eq!(TaskSpec::parse("k-means").unwrap().name(), "kmeans");
+        assert_eq!(TaskSpec::parse("kmeans").unwrap(), TaskSpec::kmeans());
+    }
+
+    #[test]
+    fn parameterized_specs_canonicalize_and_roundtrip() {
+        // Non-default parameters survive...
+        let spec = TaskSpec::parse("kmeans:k=5").unwrap();
+        assert_eq!(spec.spec(), "kmeans:k=5");
+        assert_eq!(TaskSpec::parse(spec.spec()).unwrap(), spec);
+        // ...explicit defaults collapse to the bare name...
+        assert_eq!(TaskSpec::parse("kmeans:k=3").unwrap(), TaskSpec::kmeans());
+        // ...and multi-parameter specs keep every non-default.
+        let lr = TaskSpec::parse("logreg:d=20:c=4").unwrap();
+        assert_eq!(lr.spec(), "logreg:d=20:c=4");
+        let learner = lr.learner();
+        assert_eq!(learner.param_len(), 20 * 4 + 4);
+    }
+
+    #[test]
+    fn bad_specs_are_typed_errors() {
+        assert!(TaskSpec::parse("mlp").is_err());
+        assert!(TaskSpec::parse("kmeans:k").is_err());
+        assert!(TaskSpec::parse("kmeans:k=x").is_err());
+        assert!(TaskSpec::parse("kmeans:q=3").is_err(), "unknown key accepted");
+        assert!(TaskSpec::parse("kmeans:k=3:k=4").is_err(), "dup key accepted");
+        let err = TaskSpec::parse("warp").unwrap_err().to_string();
+        assert!(err.contains("registered:"), "{err}");
+    }
+
+    #[test]
+    fn unknown_task_error_lists_registry() {
+        let err = resolve("nope").unwrap_err().to_string();
+        for name in ["svm", "kmeans", "logreg", "gmm"] {
+            assert!(err.contains(name), "{err}");
+        }
+    }
+
+    #[test]
+    fn duplicate_registration_rejected() {
+        let err = register(TaskFactory {
+            name: "svm",
+            about: "imposter",
+            build: |_| Err(anyhow!("never")),
+        });
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn registered_tasks_lists_builtins_in_order() {
+        let names: Vec<&str> = registered_tasks().iter().map(|(n, _)| *n).collect();
+        assert!(names.starts_with(&["svm", "kmeans", "logreg", "gmm"]));
+    }
+}

@@ -1,10 +1,21 @@
-//! Native (pure-Rust) linear multiclass SVM — the oracle twin of the
-//! `svm_step`/`svm_eval` HLO artifacts. Semantics match
-//! python/compile/kernels/ref.py exactly (Weston–Watkins one-vs-rest hinge,
-//! SGD step with L2 regularization); the pjrt_parity integration test
-//! asserts per-step numeric agreement.
+//! Multi-class linear SVM: the reference (pure-Rust) numerics — the
+//! oracle twin of the `svm_step`/`svm_eval` HLO artifacts, semantics
+//! matching python/compile/kernels/ref.py exactly (Weston–Watkins
+//! one-vs-rest hinge, SGD step with L2 regularization; the pjrt_parity
+//! integration test asserts per-step numeric agreement) — plus the
+//! [`SvmLearner`] plugging the task into the open [`Learner`] API
+//! (registry name `svm`, spec `svm[:d=DIM][:c=CLASSES]`).
 
-use crate::model::{ModelState, Task};
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::edge::Hyper;
+use crate::engine::{ComputeEngine, KernelArg, OutKind};
+use crate::metrics;
+use crate::model::learner::{Learner, StepOut};
+use crate::model::registry::{TaskFactory, TaskParams};
+use crate::model::ModelState;
+use crate::util::rng::Rng;
 
 /// SVM hyperparameters + shape. `d` features, `c` classes.
 #[derive(Clone, Copy, Debug)]
@@ -27,7 +38,7 @@ impl SvmSpec {
 
     /// The zero-initialized model state (paper: random/zero init at t=0).
     pub fn init_state(&self) -> ModelState {
-        ModelState::zeros(Task::Svm, self.param_len())
+        ModelState::zeros(self.param_len())
     }
 }
 
@@ -43,8 +54,10 @@ pub fn split_params_mut(params: &mut [f32], d: usize, c: usize) -> (&mut [f32], 
     params.split_at_mut(d * c)
 }
 
-/// scores[i*c + k] = x_i . w[:,k] + b[k]   (w row-major [d, c])
-fn scores_into(x: &[f32], w: &[f32], b: &[f32], d: usize, c: usize, out: &mut [f32]) {
+/// scores[i*c + k] = x_i . w[:,k] + b[k]   (w row-major [d, c]).
+/// Also the implementation behind `EngineOps::gemm_bias` — the shared
+/// dense-score primitive every learner can compose.
+pub(crate) fn scores_into(x: &[f32], w: &[f32], b: &[f32], d: usize, c: usize, out: &mut [f32]) {
     // Monomorphize the deployed class count so the k-loop compiles to a
     // fixed-width packed FMA (C=8 is the artifact contract; other widths
     // take the generic path).
@@ -212,10 +225,204 @@ pub fn eval(params: &[f32], x: &[f32], y: &[i32], spec: &SvmSpec) -> (f32, f32) 
     (correct, (loss_sum / n as f64) as f32)
 }
 
+/// The SVM task as a [`Learner`] plugin. Defaults mirror the deployed
+/// artifact contract (d=59, c=8, batch 64, eval batch 512).
+#[derive(Clone, Copy, Debug)]
+pub struct SvmLearner {
+    /// Feature dimension.
+    pub d: usize,
+    /// Class count.
+    pub c: usize,
+}
+
+impl Default for SvmLearner {
+    fn default() -> Self {
+        SvmLearner { d: 59, c: 8 }
+    }
+}
+
+impl SvmLearner {
+    fn spec_of(&self, hyper: &Hyper) -> SvmSpec {
+        SvmSpec {
+            d: self.d,
+            c: self.c,
+            lr: hyper.lr,
+            reg: hyper.reg,
+        }
+    }
+
+    /// Whether the backend's fused kernel may serve this call: the AOT
+    /// artifacts are compiled for FIXED shapes (the manifest contract),
+    /// so a parameterized learner (`svm:d=20:c=4`) or an off-contract
+    /// batch must take the portable path instead of feeding wrong-shaped
+    /// literals to the executable.
+    fn fused_ok(&self, engine: &dyn ComputeEngine, kernel: &str, n: usize, batch: usize) -> bool {
+        let contract = crate::engine::Shapes::default();
+        self.d == contract.svm_d
+            && self.c == contract.svm_c
+            && n == batch
+            && engine.has_kernel(kernel)
+    }
+}
+
+/// The registry factory for `svm[:d=DIM][:c=CLASSES]`.
+pub fn factory() -> TaskFactory {
+    TaskFactory {
+        name: "svm",
+        about: "multi-class linear SVM (hinge SGD); d=DIM c=CLASSES",
+        build: |p: &mut TaskParams| {
+            let learner = SvmLearner {
+                d: p.take("d", 59),
+                c: p.take("c", 8),
+            };
+            if learner.d < 1 || learner.c < 2 {
+                return Err(anyhow::anyhow!(
+                    "svm needs d >= 1 and c >= 2, got d={} c={}",
+                    learner.d,
+                    learner.c
+                ));
+            }
+            Ok(Box::new(learner))
+        },
+    }
+}
+
+impl Learner for SvmLearner {
+    fn name(&self) -> &'static str {
+        "svm"
+    }
+
+    fn spec(&self) -> String {
+        let mut s = "svm".to_string();
+        let dflt = SvmLearner::default();
+        if self.d != dflt.d {
+            s.push_str(&format!(":d={}", self.d));
+        }
+        if self.c != dflt.c {
+            s.push_str(&format!(":c={}", self.c));
+        }
+        s
+    }
+
+    fn supervised(&self) -> bool {
+        true
+    }
+
+    fn metric_name(&self) -> &'static str {
+        "accuracy"
+    }
+
+    fn param_len(&self) -> usize {
+        self.d * self.c + self.c
+    }
+
+    fn synth(&self, n: usize, separation: f64, rng: &mut Rng) -> Dataset {
+        crate::data::synth::WaferLike {
+            n,
+            d: self.d,
+            classes: self.c,
+            separation,
+            ..Default::default()
+        }
+        .generate(rng)
+    }
+
+    fn init_params(&self, _train: &Dataset, _rng: &mut Rng) -> Vec<f32> {
+        vec![0.0; self.param_len()]
+    }
+
+    fn local_step(
+        &self,
+        engine: &dyn ComputeEngine,
+        params: &mut [f32],
+        x: &[f32],
+        y: &[i32],
+        hyper: &Hyper,
+    ) -> Result<StepOut> {
+        let n = x.len() / self.d;
+        if self.fused_ok(engine, "svm_step", n, crate::engine::Shapes::default().svm_batch) {
+            let (w, b) = params.split_at(self.d * self.c);
+            let w_dims = [self.d, self.c];
+            let b_dims = [self.c];
+            let x_dims = [n, self.d];
+            let y_dims = [n];
+            let out = engine.run_kernel(
+                "svm_step",
+                &[
+                    KernelArg::F32 { data: w, dims: &w_dims },
+                    KernelArg::F32 { data: b, dims: &b_dims },
+                    KernelArg::F32 { data: x, dims: &x_dims },
+                    KernelArg::I32 { data: y, dims: &y_dims },
+                    KernelArg::Scalar(hyper.lr),
+                    KernelArg::Scalar(hyper.reg),
+                ],
+                &[OutKind::F32Vec, OutKind::F32Vec, OutKind::Scalar],
+            )?;
+            let mut it = out.into_iter();
+            let w2 = it.next().unwrap().into_f32s()?;
+            let b2 = it.next().unwrap().into_f32s()?;
+            let loss = it.next().unwrap().into_scalar()?;
+            params[..self.d * self.c].copy_from_slice(&w2);
+            params[self.d * self.c..].copy_from_slice(&b2);
+            return Ok(StepOut {
+                signal: loss as f64,
+            });
+        }
+        let loss = step(params, x, y, &self.spec_of(hyper));
+        Ok(StepOut {
+            signal: loss as f64,
+        })
+    }
+
+    fn evaluate(
+        &self,
+        engine: &dyn ComputeEngine,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<f64> {
+        let n = x.len() / self.d;
+        if self.fused_ok(engine, "svm_eval", n, crate::engine::Shapes::default().svm_eval_batch) {
+            let (w, b) = split_params(params, self.d, self.c);
+            let w_dims = [self.d, self.c];
+            let b_dims = [self.c];
+            let x_dims = [n, self.d];
+            let y_dims = [n];
+            let out = engine.run_kernel(
+                "svm_eval",
+                &[
+                    KernelArg::F32 { data: w, dims: &w_dims },
+                    KernelArg::F32 { data: b, dims: &b_dims },
+                    KernelArg::F32 { data: x, dims: &x_dims },
+                    KernelArg::I32 { data: y, dims: &y_dims },
+                ],
+                &[OutKind::Scalar, OutKind::Scalar],
+            )?;
+            let correct = out.into_iter().next().unwrap().into_scalar()?;
+            return Ok(metrics::accuracy(correct, y.len()));
+        }
+        let (correct, _loss) = eval(
+            params,
+            x,
+            y,
+            &SvmSpec {
+                d: self.d,
+                c: self.c,
+                lr: 0.0,
+                reg: 0.0,
+            },
+        );
+        Ok(metrics::accuracy(correct, y.len()))
+    }
+
+    fn clone_box(&self) -> Box<dyn Learner> {
+        Box::new(*self)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::rng::Rng;
 
     fn spec() -> SvmSpec {
         SvmSpec {

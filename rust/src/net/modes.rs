@@ -26,7 +26,7 @@ use crate::coordinator::observer::{LocalReport, RunEvent};
 use crate::coordinator::session::{CollaborationMode, Session};
 use crate::coordinator::utility::UtilityKind;
 use crate::coordinator::RoundObservation;
-use crate::model::ModelState;
+use crate::model::{Learner as _, ModelState};
 use crate::net::churn::{churn_rng, ChurnSpec};
 use crate::net::message::{Delivery, Message, NetEvent, Occurrence, Payload};
 use crate::net::transport::{SimTransport, Transport};
@@ -623,16 +623,17 @@ impl CollaborationMode for NetSyncBarrier {
             return Ok(()); // the barrier waits for the whole cohort
         }
 
-        // Weighted-average aggregation — legacy SyncBarrier verbatim; the
+        // Aggregation via the learner's merge rule — legacy SyncBarrier
+        // verbatim (default: shard-weighted parameter averaging); the
         // bandit's cost feedback now includes the network waits.
         let prev_global = s.world.global.clone();
-        let locals: Vec<(&ModelState, f64)> = s
+        let locals: Vec<(&[f32], f64)> = s
             .world
             .edges
             .iter()
-            .map(|e| (&e.model, s.world.weights[e.id]))
+            .map(|e| (e.model.params.as_slice(), s.world.weights[e.id]))
             .collect();
-        let new_global = aggregate::weighted_average(&locals);
+        let new_global = ModelState::new(s.world.learner.aggregate(&locals));
 
         let divergence = s
             .world
@@ -681,7 +682,7 @@ mod tests {
     use super::*;
     use crate::config::{Algo, RunConfig};
     use crate::engine::native::NativeEngine;
-    use crate::model::Task;
+    use crate::model::TaskSpec;
     use crate::net::model::NetworkSpec;
     use std::cell::Cell;
     use std::rc::Rc;
@@ -689,7 +690,7 @@ mod tests {
     fn cfg(algo: Algo) -> RunConfig {
         RunConfig {
             algo,
-            task: Task::Svm,
+            task: TaskSpec::svm(),
             data_n: 3000,
             budget: 900.0,
             n_edges: 3,

@@ -8,6 +8,15 @@ use std::process::Command;
 
 /// Every production of every spec grammar, as spelled in docs/GRAMMAR.md.
 const PRODUCTIONS: &[&str] = &[
+    // task
+    "task     := NAME ( ':' KEY '=' N )*",
+    "'svm'",
+    "'kmeans'",
+    "'logreg'",
+    "'gmm'",
+    "k=CLUSTERS",
+    "d=DIM c=CLASSES",
+    "k=COMPONENTS",
     // network
     "ideal",
     "fixed:MS",
@@ -75,11 +84,29 @@ fn help_is_the_single_sourced_grammar() {
 fn spec_grammar_parses_its_own_examples() {
     // The examples documented in the grammar must actually parse.
     use ol4el::config::{BanditKind, PartitionKind};
+    use ol4el::model::TaskSpec;
     use ol4el::net::{ChurnSpec, NetworkSpec};
+    assert!(TaskSpec::parse("kmeans:k=5").is_ok());
+    assert!(TaskSpec::parse("logreg:d=59:c=8").is_ok());
+    assert!(TaskSpec::parse("gmm:k=3").is_ok());
     assert!(NetworkSpec::parse("lognormal:5:0.5,bw:10,drop:0.01").is_some());
     assert!(NetworkSpec::parse("fixed:20,part:1000-2500").is_some());
     assert!(ChurnSpec::parse("poisson:0.01,join:0.05").is_some());
     assert!(ChurnSpec::parse("poisson:0.2,restart:500,straggle:0.1:4").is_some());
     assert!(BanditKind::parse("kube:0.2").is_some());
     assert!(PartitionKind::parse("label-skew:0.3").is_some());
+}
+
+#[test]
+fn train_help_documents_the_task_spec_grammar() {
+    // The train subcommand's --task flag must teach the registry grammar.
+    let out = Command::new(env!("CARGO_BIN_EXE_ol4el"))
+        .args(["train", "--help"])
+        .output()
+        .expect("run ol4el train --help");
+    assert!(out.status.success());
+    let help = String::from_utf8(out.stdout).expect("utf8");
+    for needle in ["--task", "logreg", "gmm", "kmeans:k=5"] {
+        assert!(help.contains(needle), "train --help lost {needle:?}");
+    }
 }

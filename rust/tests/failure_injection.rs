@@ -5,12 +5,12 @@
 use ol4el::config::{Algo, BanditKind, RunConfig};
 use ol4el::coordinator;
 use ol4el::engine::native::NativeEngine;
-use ol4el::model::Task;
+use ol4el::model::TaskSpec;
 use ol4el::sim::cost::CostMode;
 
 fn base() -> RunConfig {
     RunConfig {
-        task: Task::Svm,
+        task: TaskSpec::svm(),
         algo: Algo::Ol4elAsync,
         n_edges: 4,
         hetero: 4.0,

@@ -4,11 +4,11 @@
 use ol4el::config::{Algo, RunConfig};
 use ol4el::coordinator::{self, observer, Experiment, RunEvent, Session};
 use ol4el::engine::native::NativeEngine;
-use ol4el::model::Task;
+use ol4el::model::TaskSpec;
 use ol4el::net::{ChurnSpec, FleetSim, NetAsyncMerge, NetSyncBarrier, NetworkSpec};
 use std::sync::{Arc, Mutex};
 
-fn cfg(task: Task, algo: Algo) -> RunConfig {
+fn cfg(task: TaskSpec, algo: Algo) -> RunConfig {
     RunConfig {
         task,
         algo,
@@ -26,7 +26,7 @@ fn cfg(task: Task, algo: Algo) -> RunConfig {
 fn all_algorithms_learn_svm() {
     let engine = NativeEngine::default();
     for algo in [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::AcSync, Algo::FixedI] {
-        let r = coordinator::run(&cfg(Task::Svm, algo), &engine).unwrap();
+        let r = coordinator::run(&cfg(TaskSpec::svm(), algo), &engine).unwrap();
         let first = r.trace.first().unwrap().metric;
         assert!(
             r.final_metric > first + 0.15,
@@ -46,7 +46,7 @@ fn all_algorithms_learn_kmeans() {
     for algo in [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::AcSync, Algo::FixedI] {
         let mut mean = 0.0;
         for seed in [3, 4] {
-            let mut c = cfg(Task::Kmeans, algo);
+            let mut c = cfg(TaskSpec::kmeans(), algo);
             c.budget = 5000.0;
             c.seed = seed;
             mean += coordinator::run(&c, &engine).unwrap().final_metric / 2.0;
@@ -64,7 +64,7 @@ fn all_algorithms_learn_kmeans() {
 fn runs_are_reproducible_across_algorithms() {
     let engine = NativeEngine::default();
     for algo in [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::AcSync, Algo::FixedI] {
-        let c = cfg(Task::Svm, algo);
+        let c = cfg(TaskSpec::svm(), algo);
         let a = coordinator::run(&c, &engine).unwrap();
         let b = coordinator::run(&c, &engine).unwrap();
         assert_eq!(a.final_metric, b.final_metric, "{}", algo.name());
@@ -76,7 +76,7 @@ fn runs_are_reproducible_across_algorithms() {
 #[test]
 fn different_seeds_give_different_runs() {
     let engine = NativeEngine::default();
-    let mut c = cfg(Task::Svm, Algo::Ol4elAsync);
+    let mut c = cfg(TaskSpec::svm(), Algo::Ol4elAsync);
     let a = coordinator::run(&c, &engine).unwrap();
     c.seed = 4;
     let b = coordinator::run(&c, &engine).unwrap();
@@ -93,7 +93,7 @@ fn paper_claim_async_beats_sync_at_high_heterogeneity() {
     let mut acc_async = 0.0;
     let mut acc_sync = 0.0;
     for seed in [1, 2, 3] {
-        let mut ca = cfg(Task::Svm, Algo::Ol4elAsync);
+        let mut ca = cfg(TaskSpec::svm(), Algo::Ol4elAsync);
         ca.hetero = 10.0;
         ca.budget = 3000.0;
         ca.seed = seed;
@@ -112,7 +112,7 @@ fn paper_claim_async_beats_sync_at_high_heterogeneity() {
 fn paper_claim_accuracy_rises_with_budget() {
     // Fig. 4's monotone trade-off: more resource -> better model.
     let engine = NativeEngine::default();
-    let mut small = cfg(Task::Svm, Algo::Ol4elAsync);
+    let mut small = cfg(TaskSpec::svm(), Algo::Ol4elAsync);
     small.budget = 500.0;
     let mut large = small.clone();
     large.budget = 4000.0;
@@ -130,7 +130,7 @@ fn paper_claim_accuracy_rises_with_budget() {
 fn trace_is_monotone_in_time_and_consumption() {
     let engine = NativeEngine::default();
     for algo in [Algo::Ol4elSync, Algo::Ol4elAsync] {
-        let r = coordinator::run(&cfg(Task::Svm, algo), &engine).unwrap();
+        let r = coordinator::run(&cfg(TaskSpec::svm(), algo), &engine).unwrap();
         for w in r.trace.windows(2) {
             assert!(w[1].wall_ms >= w[0].wall_ms, "{}", algo.name());
             assert!(w[1].mean_spent >= w[0].mean_spent, "{}", algo.name());
@@ -142,7 +142,7 @@ fn trace_is_monotone_in_time_and_consumption() {
 #[test]
 fn variable_cost_mode_runs_with_ucb_bv() {
     let engine = NativeEngine::default();
-    let mut c = cfg(Task::Svm, Algo::Ol4elAsync);
+    let mut c = cfg(TaskSpec::svm(), Algo::Ol4elAsync);
     c.cost.mode = ol4el::sim::cost::CostMode::Variable { cv: 0.3 };
     let r = coordinator::run(&c, &engine).unwrap();
     assert!(r.total_updates > 0);
@@ -152,7 +152,7 @@ fn variable_cost_mode_runs_with_ucb_bv() {
 #[test]
 fn label_skew_partition_still_learns() {
     let engine = NativeEngine::default();
-    let mut c = cfg(Task::Svm, Algo::Ol4elAsync);
+    let mut c = cfg(TaskSpec::svm(), Algo::Ol4elAsync);
     c.partition = ol4el::config::PartitionKind::LabelSkew { alpha: 0.3 };
     let r = coordinator::run(&c, &engine).unwrap();
     assert!(r.final_metric > 0.4, "skewed F1 {}", r.final_metric);
@@ -161,7 +161,7 @@ fn label_skew_partition_still_learns() {
 #[test]
 fn single_edge_fleet_works() {
     let engine = NativeEngine::default();
-    let mut c = cfg(Task::Kmeans, Algo::Ol4elAsync);
+    let mut c = cfg(TaskSpec::kmeans(), Algo::Ol4elAsync);
     c.n_edges = 1;
     let r = coordinator::run(&c, &engine).unwrap();
     assert!(r.total_updates > 0);
@@ -171,7 +171,7 @@ fn single_edge_fleet_works() {
 #[test]
 fn tiny_budget_retires_without_updates() {
     let engine = NativeEngine::default();
-    let mut c = cfg(Task::Svm, Algo::Ol4elAsync);
+    let mut c = cfg(TaskSpec::svm(), Algo::Ol4elAsync);
     c.budget = 1.0; // cheaper than any arm
     let r = coordinator::run(&c, &engine).unwrap();
     assert_eq!(r.total_updates, 0);
@@ -182,7 +182,7 @@ fn tiny_budget_retires_without_updates() {
 #[test]
 fn config_json_roundtrip_through_run() {
     let engine = NativeEngine::default();
-    let c = cfg(Task::Svm, Algo::Ol4elSync);
+    let c = cfg(TaskSpec::svm(), Algo::Ol4elSync);
     let j = c.to_json();
     let c2 = RunConfig::from_json(&j).unwrap();
     let a = coordinator::run(&c, &engine).unwrap();
@@ -200,7 +200,7 @@ fn observer_global_updates_mirror_trace_bit_for_bit() {
         let seen = Arc::new(Mutex::new(Vec::new()));
         let sink = seen.clone();
         let result = Experiment::builder()
-            .task(Task::Svm)
+            .task(TaskSpec::svm())
             .algo(algo)
             .edges(3)
             .budget(2000.0)
@@ -227,10 +227,10 @@ fn experiment_builder_reproduces_wire_config_runs() {
     // The builder is a front door over the same wire format: identical
     // settings must give identical runs (same RNG schedule end to end).
     let engine = NativeEngine::default();
-    let wire = cfg(Task::Svm, Algo::Ol4elAsync);
+    let wire = cfg(TaskSpec::svm(), Algo::Ol4elAsync);
     let a = coordinator::run(&wire, &engine).unwrap();
     let b = Experiment::builder()
-        .task(Task::Svm)
+        .task(TaskSpec::svm())
         .algo(Algo::Ol4elAsync)
         .edges(3)
         .hetero(1.0)
@@ -276,7 +276,7 @@ fn net_transport_with_ideal_network_reproduces_direct_stream_bit_for_bit() {
     // RoundStart, LocalReport, GlobalUpdate, EdgeRetired and Finished
     // payload, in order, bit for bit.
     for algo in [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::AcSync, Algo::FixedI] {
-        let c = cfg(Task::Svm, algo);
+        let c = cfg(TaskSpec::svm(), algo);
         assert!(c.network.is_ideal() && c.churn.is_none());
         let (direct_stream, direct) = event_stream(&c, None);
         let netted = |c: &RunConfig| {
@@ -310,7 +310,7 @@ fn net_transport_with_ideal_network_reproduces_direct_stream_bit_for_bit() {
 fn network_and_churn_survive_the_json_roundtrip() {
     // Satellite of the net:: PR, matching the PR 1 ε-range precedent: the
     // specs ride RunConfig's wire format without loss.
-    let mut c = cfg(Task::Svm, Algo::Ol4elAsync);
+    let mut c = cfg(TaskSpec::svm(), Algo::Ol4elAsync);
     c.network = NetworkSpec::parse("lognormal:5:0.5,bw:10,drop:0.01,part:100-200").unwrap();
     c.churn = ChurnSpec::parse("poisson:0.01,join:0.05,restart:3000,straggle:0.1:4").unwrap();
     let back = RunConfig::from_json(&c.to_json()).unwrap();
@@ -405,7 +405,7 @@ fn finished_event_matches_run_result() {
     let summary = Arc::new(Mutex::new(None));
     let sink = summary.clone();
     let result = Experiment::builder()
-        .task(Task::Kmeans)
+        .task(TaskSpec::kmeans())
         .algo(Algo::Ol4elAsync)
         .edges(3)
         .budget(1500.0)

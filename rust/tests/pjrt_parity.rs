@@ -1,13 +1,17 @@
-//! The three-layer correctness closure: the PJRT engine (Pallas L1 + JAX
-//! L2, AOT-lowered to HLO) must agree numerically with the native Rust
-//! oracle, step by step and end to end.
+//! The three-layer correctness closure: the PJRT engine's fused AOT
+//! kernels (Pallas L1 + JAX L2, lowered to HLO) must agree numerically
+//! with the learners' portable path on the native oracle, step by step
+//! and end to end. The fused kernels are keyed by learner name in the
+//! artifact manifest ("svm_step", "kmeans_eval", ...).
 //!
 //! These tests are skipped (with a loud message) when artifacts/ has not
 //! been built — run `make artifacts` first. CI runs them always.
 
+use ol4el::edge::Hyper;
 use ol4el::engine::native::NativeEngine;
 use ol4el::engine::pjrt::PjrtEngine;
 use ol4el::engine::ComputeEngine;
+use ol4el::model::{Learner as _, TaskSpec};
 use ol4el::util::rng::Rng;
 
 fn pjrt() -> Option<PjrtEngine> {
@@ -24,11 +28,17 @@ fn close(a: f32, b: f32, tol: f32) -> bool {
     (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
 }
 
+fn close64(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
 #[test]
 fn svm_step_parity() {
     let Some(pj) = pjrt() else { return };
     let nat = NativeEngine::default();
-    let s = *nat.shapes();
+    assert!(pj.has_kernel("svm_step"), "manifest lost svm_step");
+    let learner = TaskSpec::svm().learner();
+    let s = *pj.shapes();
     let mut rng = Rng::new(0);
     let x: Vec<f32> = (0..s.svm_batch * s.svm_d)
         .map(|_| rng.normal() as f32)
@@ -40,21 +50,25 @@ fn svm_step_parity() {
         .map(|_| rng.normal() as f32 * 0.1)
         .collect();
     let mut p_pj = p_nat.clone();
+    let hyper = Hyper {
+        lr: 0.05,
+        reg: 1e-4,
+        lr_decay: 0.0,
+    };
 
     for step in 0..5 {
-        let out_nat = nat.svm_step(&mut p_nat, &x, &y, 0.05, 1e-4).unwrap();
-        let out_pj = pj.svm_step(&mut p_pj, &x, &y, 0.05, 1e-4).unwrap();
+        let out_nat = learner
+            .local_step(&nat, &mut p_nat, &x, &y, &hyper)
+            .unwrap();
+        let out_pj = learner.local_step(&pj, &mut p_pj, &x, &y, &hyper).unwrap();
         assert!(
-            close(out_nat.loss, out_pj.loss, 1e-4),
+            close64(out_nat.signal, out_pj.signal, 1e-4),
             "step {step}: loss {} vs {}",
-            out_nat.loss,
-            out_pj.loss
+            out_nat.signal,
+            out_pj.signal
         );
         for (i, (a, b)) in p_nat.iter().zip(&p_pj).enumerate() {
-            assert!(
-                close(*a, *b, 1e-4),
-                "step {step}, param {i}: {a} vs {b}"
-            );
+            assert!(close(*a, *b, 1e-4), "step {step}, param {i}: {a} vs {b}");
         }
     }
 }
@@ -63,7 +77,8 @@ fn svm_step_parity() {
 fn svm_eval_parity() {
     let Some(pj) = pjrt() else { return };
     let nat = NativeEngine::default();
-    let s = *nat.shapes();
+    let learner = TaskSpec::svm().learner();
+    let s = *pj.shapes();
     let mut rng = Rng::new(1);
     let x: Vec<f32> = (0..s.svm_eval_batch * s.svm_d)
         .map(|_| rng.normal() as f32)
@@ -74,17 +89,18 @@ fn svm_eval_parity() {
     let p: Vec<f32> = (0..s.svm_param_len())
         .map(|_| rng.normal() as f32 * 0.2)
         .collect();
-    let (c_nat, l_nat) = nat.svm_eval(&p, &x, &y).unwrap();
-    let (c_pj, l_pj) = pj.svm_eval(&p, &x, &y).unwrap();
-    assert_eq!(c_nat, c_pj, "correct-count mismatch");
-    assert!(close(l_nat, l_pj, 1e-4), "loss {l_nat} vs {l_pj}");
+    let m_nat = learner.evaluate(&nat, &p, &x, &y).unwrap();
+    let m_pj = learner.evaluate(&pj, &p, &x, &y).unwrap();
+    assert_eq!(m_nat, m_pj, "accuracy mismatch");
 }
 
 #[test]
 fn kmeans_step_parity() {
     let Some(pj) = pjrt() else { return };
     let nat = NativeEngine::default();
-    let s = *nat.shapes();
+    assert!(pj.has_kernel("kmeans_step"), "manifest lost kmeans_step");
+    let learner = TaskSpec::kmeans().learner();
+    let s = *pj.shapes();
     let mut rng = Rng::new(2);
     let x: Vec<f32> = (0..s.km_batch * s.km_d)
         .map(|_| rng.normal() as f32)
@@ -92,25 +108,28 @@ fn kmeans_step_parity() {
     let centers: Vec<f32> = (0..s.km_param_len())
         .map(|_| rng.normal() as f32)
         .collect();
-    let out_nat = nat.kmeans_step(&centers, &x).unwrap();
-    let out_pj = pj.kmeans_step(&centers, &x).unwrap();
-    assert_eq!(out_nat.counts, out_pj.counts, "count vector mismatch");
-    for (i, (a, b)) in out_nat.sums.iter().zip(&out_pj.sums).enumerate() {
-        assert!(close(*a, *b, 1e-4), "sums[{i}]: {a} vs {b}");
-    }
+    let hyper = Hyper::default();
+    let mut c_nat = centers.clone();
+    let mut c_pj = centers;
+    let out_nat = learner.local_step(&nat, &mut c_nat, &x, &[], &hyper).unwrap();
+    let out_pj = learner.local_step(&pj, &mut c_pj, &x, &[], &hyper).unwrap();
     assert!(
-        close(out_nat.inertia, out_pj.inertia, 1e-3),
+        close64(out_nat.signal, out_pj.signal, 1e-3),
         "inertia {} vs {}",
-        out_nat.inertia,
-        out_pj.inertia
+        out_nat.signal,
+        out_pj.signal
     );
+    for (i, (a, b)) in c_nat.iter().zip(&c_pj).enumerate() {
+        assert!(close(*a, *b, 1e-4), "center coord {i}: {a} vs {b}");
+    }
 }
 
 #[test]
 fn kmeans_eval_parity() {
     let Some(pj) = pjrt() else { return };
     let nat = NativeEngine::default();
-    let s = *nat.shapes();
+    let learner = TaskSpec::kmeans().learner();
+    let s = *pj.shapes();
     let mut rng = Rng::new(3);
     let x: Vec<f32> = (0..s.km_eval_batch * s.km_d)
         .map(|_| rng.normal() as f32)
@@ -118,10 +137,35 @@ fn kmeans_eval_parity() {
     let centers: Vec<f32> = (0..s.km_param_len())
         .map(|_| rng.normal() as f32)
         .collect();
-    let (a_nat, i_nat) = nat.kmeans_eval(&centers, &x).unwrap();
-    let (a_pj, i_pj) = pj.kmeans_eval(&centers, &x).unwrap();
-    assert_eq!(a_nat, a_pj, "assignment mismatch");
-    assert!(close(i_nat, i_pj, 1e-3), "inertia {i_nat} vs {i_pj}");
+    let y: Vec<i32> = (0..s.km_eval_batch).map(|i| (i % s.km_k) as i32).collect();
+    let m_nat = learner.evaluate(&nat, &centers, &x, &y).unwrap();
+    let m_pj = learner.evaluate(&pj, &centers, &x, &y).unwrap();
+    assert_eq!(m_nat, m_pj, "clustering F1 mismatch");
+}
+
+#[test]
+fn tasks_without_artifacts_fall_back_to_portable_path() {
+    // The open-task contract on the production backend: a learner with no
+    // fused kernels (logreg, gmm) still runs on pjrt, numerically equal
+    // to the native path because both take the portable route.
+    let Some(pj) = pjrt() else { return };
+    let nat = NativeEngine::default();
+    for spec in [TaskSpec::logreg(), TaskSpec::gmm()] {
+        let learner = spec.learner();
+        assert!(!pj.has_kernel(&format!("{}_step", learner.name())));
+        let mut rng = Rng::new(4);
+        let ds = learner.synth(1024, 2.5, &mut rng);
+        let mut p_nat = learner.init_params(&ds, &mut rng);
+        let mut p_pj = p_nat.clone();
+        let n = learner.batch();
+        let x = ds.x[..n * ds.d].to_vec();
+        let y = ds.y[..n].to_vec();
+        let hyper = Hyper::default();
+        let a = learner.local_step(&nat, &mut p_nat, &x, &y, &hyper).unwrap();
+        let b = learner.local_step(&pj, &mut p_pj, &x, &y, &hyper).unwrap();
+        assert_eq!(a.signal, b.signal, "{}", learner.name());
+        assert_eq!(p_nat, p_pj, "{}", learner.name());
+    }
 }
 
 #[test]
@@ -132,7 +176,7 @@ fn end_to_end_run_parity() {
     let Some(pj) = pjrt() else { return };
     let nat = NativeEngine::default();
     let cfg = ol4el::config::RunConfig {
-        task: ol4el::model::Task::Svm,
+        task: TaskSpec::svm(),
         algo: ol4el::config::Algo::Ol4elSync,
         n_edges: 2,
         budget: 500.0,

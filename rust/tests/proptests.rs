@@ -7,7 +7,7 @@ use ol4el::config::{Algo, PartitionKind, RunConfig};
 use ol4el::coordinator::{self, aggregate};
 use ol4el::engine::native::NativeEngine;
 use ol4el::metrics;
-use ol4el::model::{ModelState, Task};
+use ol4el::model::{ModelState, TaskSpec};
 use ol4el::prop_assert;
 use ol4el::sim::clock::EventQueue;
 use ol4el::sim::hetero::{realized_ratio, HeteroProfile};
@@ -104,10 +104,7 @@ fn prop_weighted_average_within_convex_hull() {
         |(models, weights)| {
             let states: Vec<ModelState> = models
                 .iter()
-                .map(|p| ModelState {
-                    task: Task::Svm,
-                    params: p.iter().map(|&v| v as f32).collect(),
-                })
+                .map(|p| ModelState::new(p.iter().map(|&v| v as f32).collect()))
                 .collect();
             let pairs: Vec<(&ModelState, f64)> =
                 states.iter().zip(weights.iter().copied()).collect();
@@ -219,16 +216,24 @@ fn prop_runs_respect_budget_ledger() {
         8,
         |g| {
             let algo = *g.choice(&[Algo::Ol4elSync, Algo::Ol4elAsync, Algo::AcSync, Algo::FixedI]);
-            let task = *g.choice(&[Task::Svm, Task::Kmeans]);
+            let task = g
+                .choice(&[
+                    TaskSpec::svm(),
+                    TaskSpec::kmeans(),
+                    TaskSpec::logreg(),
+                    TaskSpec::gmm(),
+                ])
+                .clone();
             let hetero = g.float(1.0, 8.0);
             let budget = g.float(300.0, 1200.0);
             let n_edges = g.int(2, 4);
             (algo, task, hetero, budget, n_edges)
         },
-        |&(algo, task, hetero, budget, n_edges)| {
+        |(algo, task, hetero, budget, n_edges)| {
+            let (algo, hetero, budget, n_edges) = (*algo, *hetero, *budget, *n_edges);
             let engine = NativeEngine::default();
             let cfg = RunConfig {
-                task,
+                task: task.clone(),
                 algo,
                 n_edges,
                 hetero,
