@@ -8,11 +8,12 @@
 use std::cell::Cell;
 use std::rc::Rc;
 
-use ol4el::config::{Algo, RunConfig};
+use ol4el::config::RunConfig;
 use ol4el::coordinator::{observer, Experiment, RunEvent};
 use ol4el::engine::native::NativeEngine;
 use ol4el::model::TaskSpec;
 use ol4el::net::{ChurnSpec, FleetSim, NetworkSpec};
+use ol4el::strategy::StrategySpec;
 
 fn main() -> anyhow::Result<()> {
     // -- 1. Real training over a bad network with churn --------------------
@@ -21,7 +22,7 @@ fn main() -> anyhow::Result<()> {
     let churn_events = Rc::new(Cell::new(0u32));
     let (d2, c2) = (drops.clone(), churn_events.clone());
     let result = Experiment::svm_wafer()
-        .algo(Algo::Ol4elAsync)
+        .strategy(StrategySpec::ol4el_async())
         .budget(3000.0)
         .network(NetworkSpec::parse("lognormal:10:0.6,drop:0.05").expect("spec"))
         .churn(ChurnSpec::parse("poisson:0.2,restart:500").expect("spec"))
@@ -43,7 +44,7 @@ fn main() -> anyhow::Result<()> {
 
     // Baseline: same run over the ideal network, no churn.
     let ideal = Experiment::svm_wafer()
-        .algo(Algo::Ol4elAsync)
+        .strategy(StrategySpec::ol4el_async())
         .budget(3000.0)
         .run(&engine)?;
     println!(
@@ -56,7 +57,7 @@ fn main() -> anyhow::Result<()> {
     // -- 2. The same protocol at 2000 edges (engine-free) ------------------
     let cfg = RunConfig {
         task: TaskSpec::svm(), // ignored: the fleet trains no model
-        algo: Algo::Ol4elAsync,
+        strategy: StrategySpec::ol4el_async(),
         n_edges: 2000,
         hetero: 6.0,
         budget: 3000.0,

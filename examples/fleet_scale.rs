@@ -5,9 +5,10 @@
 //!
 //!     cargo run --release --example fleet_scale
 
-use ol4el::config::{Algo, RunConfig};
+use ol4el::config::RunConfig;
 use ol4el::coordinator::{find_outcome, ExperimentSuite};
 use ol4el::model::TaskSpec;
+use ol4el::strategy::StrategySpec;
 use ol4el::util::table::{f, Table};
 
 fn main() -> anyhow::Result<()> {
@@ -23,7 +24,7 @@ fn main() -> anyhow::Result<()> {
     // a full training run — the suite fans them out across workers and
     // returns outcomes in deterministic cell order.
     let suite = ExperimentSuite::new("fleet-scale", base)
-        .algos([Algo::Ol4elAsync, Algo::Ol4elSync])
+        .strategies([StrategySpec::ol4el_async(), StrategySpec::ol4el_sync()])
         .fleet_sizes([3, 10, 25, 50])
         .heteros([1.0, 10.0])
         .configure(|cfg| {
@@ -38,14 +39,16 @@ fn main() -> anyhow::Result<()> {
     );
     for n in [3usize, 10, 25, 50] {
         let mut row = vec![n.to_string()];
-        for algo in [Algo::Ol4elAsync, Algo::Ol4elSync] {
+        for strategy in [StrategySpec::ol4el_async(), StrategySpec::ol4el_sync()] {
             for h in [1.0f64, 10.0] {
-                let out = find_outcome(&outcomes, &TaskSpec::svm(), algo, n, h)
+                let out = find_outcome(&outcomes, &TaskSpec::svm(), &strategy, n, h)
                     .expect("suite covers the full grid");
                 row.push(f(out.agg.metric.mean(), 4));
             }
         }
-        let async_h10 = find_outcome(&outcomes, &TaskSpec::svm(), Algo::Ol4elAsync, n, 10.0).unwrap();
+        let async_h10 =
+            find_outcome(&outcomes, &TaskSpec::svm(), &StrategySpec::ol4el_async(), n, 10.0)
+                .unwrap();
         row.push(format!("{:.0}", async_h10.agg.updates.mean()));
         table.row(row);
     }

@@ -6,8 +6,8 @@
 //!
 //!     cargo run --release --example kmeans_traffic
 
-use ol4el::config::BanditKind;
 use ol4el::coordinator::Experiment;
+use ol4el::strategy::StrategySpec;
 use ol4el::harness::{build_engine, EngineKind};
 use ol4el::util::table::{f, Table};
 
@@ -22,12 +22,12 @@ fn main() -> anyhow::Result<()> {
         "variable-cost world: cost-aware vs cost-assuming bandits",
         &["bandit", "final F1", "global updates", "mean spent (ms)"],
     );
-    for bandit in [BanditKind::UcbBv, BanditKind::Kube { epsilon: 0.1 }] {
+    for bandit in ["ucb-bv", "kube"] {
         let r = Experiment::kmeans_traffic()
-            .bandit(bandit)
+            .strategy(StrategySpec::parse(&format!("ol4el:bandit={bandit}"))?)
             .run(engine.as_ref())?;
         table.row(vec![
-            bandit.name().to_string(),
+            bandit.to_string(),
             f(r.final_metric, 4),
             r.total_updates.to_string(),
             f(r.mean_spent, 0),

@@ -9,8 +9,8 @@
 //!
 //!     make artifacts && cargo run --release --example quickstart
 
-use ol4el::config::Algo;
 use ol4el::coordinator::{observer, Experiment, RunEvent};
+use ol4el::strategy::StrategySpec;
 use ol4el::harness::{build_engine, EngineKind};
 use ol4el::model::{Learner as _, TaskSpec};
 
@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
 
     let exp = Experiment::builder()
         .task(TaskSpec::svm())
-        .algo(Algo::Ol4elAsync)
+        .strategy(StrategySpec::ol4el_async())
         .edges(3)
         .hetero(6.0) // fastest edge 6x the slowest — the Fig. 4 regime
         .budget(2500.0)
@@ -64,8 +64,8 @@ fn main() -> anyhow::Result<()> {
         exp.config().budget
     );
     println!(
-        "  algo   : {} (per-edge budget-limited bandits)\n",
-        exp.config().algo.name()
+        "  strategy: {} (per-edge budget-limited bandits)\n",
+        exp.config().strategy.label()
     );
     println!("live trace (virtual ms -> test accuracy):");
 

@@ -6,8 +6,8 @@
 //!
 //!     cargo run --release --example svm_wafer [-- --engine pjrt]
 
-use ol4el::config::Algo;
 use ol4el::coordinator::Experiment;
+use ol4el::strategy::StrategySpec;
 use ol4el::harness::{build_engine, EngineKind};
 use ol4el::util::table::{f, Table};
 
@@ -28,10 +28,17 @@ fn main() -> anyhow::Result<()> {
         "coordination algorithms at the same budget",
         &["algorithm", "final acc", "global updates", "mean spent (ms)", "tau mode"],
     );
-    for algo in [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::AcSync, Algo::FixedI] {
-        // The preset carries the whole paper scenario; only the algorithm
+    for strategy in [
+        StrategySpec::ol4el_sync(),
+        StrategySpec::ol4el_async(),
+        StrategySpec::ac_sync(),
+        StrategySpec::fixed_i(),
+    ] {
+        // The preset carries the whole paper scenario; only the strategy
         // under comparison changes per run.
-        let r = Experiment::svm_wafer().algo(algo).run(engine.as_ref())?;
+        let r = Experiment::svm_wafer()
+            .strategy(strategy.clone())
+            .run(engine.as_ref())?;
         // Most-pulled interval = the policy's revealed preference.
         let tau_mode = r
             .tau_histogram
@@ -41,7 +48,7 @@ fn main() -> anyhow::Result<()> {
             .map(|(i, _)| i + 1)
             .unwrap_or(0);
         table.row(vec![
-            algo.name().to_string(),
+            strategy.label(),
             f(r.final_metric, 4),
             r.total_updates.to_string(),
             f(r.mean_spent, 0),

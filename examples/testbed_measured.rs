@@ -6,8 +6,8 @@
 //!
 //!     cargo run --release --example testbed_measured
 
-use ol4el::config::Algo;
 use ol4el::coordinator::Experiment;
+use ol4el::strategy::StrategySpec;
 use ol4el::harness::{build_engine, EngineKind};
 use ol4el::util::table::{f, Table};
 
@@ -29,11 +29,13 @@ fn main() -> anyhow::Result<()> {
         "measured-cost testbed (SVM, 3 edges, H=6, 150 ms budget)",
         &["algorithm", "final acc", "updates", "mean spent (ms)", "host s"],
     );
-    for algo in [Algo::Ol4elSync, Algo::Ol4elAsync] {
+    for strategy in [StrategySpec::ol4el_sync(), StrategySpec::ol4el_async()] {
         let t0 = std::time::Instant::now();
-        let r = Experiment::testbed().algo(algo).run(engine.as_ref())?;
+        let r = Experiment::testbed()
+            .strategy(strategy.clone())
+            .run(engine.as_ref())?;
         table.row(vec![
-            algo.name().to_string(),
+            strategy.label(),
             f(r.final_metric, 4),
             r.total_updates.to_string(),
             f(r.mean_spent, 1),

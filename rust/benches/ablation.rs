@@ -8,11 +8,12 @@
 
 mod common;
 
-use ol4el::config::{Algo, BanditKind, PartitionKind, RunConfig};
+use ol4el::config::{PartitionKind, RunConfig};
 use ol4el::coordinator::utility::UtilityKind;
 use ol4el::harness::run_seeds;
 use ol4el::model::TaskSpec;
 use ol4el::sim::cost::CostMode;
+use ol4el::strategy::StrategySpec;
 use ol4el::util::table::{f, Table};
 
 fn base(opts: &ol4el::harness::SweepOpts) -> RunConfig {
@@ -20,7 +21,7 @@ fn base(opts: &ol4el::harness::SweepOpts) -> RunConfig {
     // of the learning curve, so ablated knobs actually move the metric.
     RunConfig {
         task: TaskSpec::svm(),
-        algo: Algo::Ol4elAsync,
+        strategy: StrategySpec::ol4el_async(),
         n_edges: 3,
         hetero: 6.0,
         budget: 3500.0,
@@ -45,18 +46,13 @@ fn main() {
             "A1: bandit policy (fixed costs, H=6, async)",
             &["bandit", "accuracy", "updates"],
         );
-        for kind in [
-            BanditKind::Kube { epsilon: 0.1 },
-            BanditKind::UcbBv,
-            BanditKind::Ucb1,
-            BanditKind::EpsGreedy { epsilon: 0.1 },
-            BanditKind::Thompson,
-        ] {
+        for bandit in ["kube", "ucb-bv", "ucb1", "eps-greedy", "thompson"] {
             let mut cfg = base(&opts);
-            cfg.bandit = kind;
+            cfg.strategy =
+                StrategySpec::parse(&format!("ol4el:bandit={bandit}")).expect("spec");
             let agg = run_seeds(&cfg, engine, &seeds).expect("run");
             t.row(vec![
-                kind.name().into(),
+                bandit.into(),
                 f(agg.metric.mean(), 4),
                 f(agg.updates.mean(), 0),
             ]);
@@ -71,13 +67,14 @@ fn main() {
             "A2: variable-cost robustness (cv=0.4)",
             &["bandit", "accuracy", "updates"],
         );
-        for kind in [BanditKind::Kube { epsilon: 0.1 }, BanditKind::UcbBv] {
+        for bandit in ["kube", "ucb-bv"] {
             let mut cfg = base(&opts);
             cfg.cost.mode = CostMode::Variable { cv: 0.4 };
-            cfg.bandit = kind;
+            cfg.strategy =
+                StrategySpec::parse(&format!("ol4el:bandit={bandit}")).expect("spec");
             let agg = run_seeds(&cfg, engine, &seeds).expect("run");
             t.row(vec![
-                kind.name().into(),
+                bandit.into(),
                 f(agg.metric.mean(), 4),
                 f(agg.updates.mean(), 0),
             ]);

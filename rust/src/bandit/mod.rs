@@ -19,8 +19,118 @@ pub mod thompson;
 pub mod ucb1;
 pub mod ucb_bv;
 
-use crate::config::BanditKind;
+use crate::sim::cost::CostMode;
 use crate::util::rng::Rng;
+
+/// Default exploration rate for the ε-parameterized policies (the paper's
+/// 0.1).
+pub const DEFAULT_EPSILON: f64 = 0.1;
+
+/// A validated bandit policy spec: the name of one of the in-tree
+/// budgeted-bandit policies plus its exploration rate (meaningful only for
+/// `kube` and `eps-greedy`). This is the open-world replacement of the old
+/// `config::BanditKind` enum: the [`ol4el`](crate::strategy) strategy
+/// carries one of these, and [`build`] dispatches on the validated name.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BanditSpec {
+    name: String,
+    epsilon: f64,
+}
+
+impl BanditSpec {
+    /// Validate a bandit name (+ optional ε). Aliases `ucbbv`/`epsgreedy`
+    /// normalize; an ε on a policy that takes none is rejected, as is an ε
+    /// outside \[0, 1\].
+    pub fn new(name: &str, epsilon: Option<f64>) -> Option<BanditSpec> {
+        let name = match name.to_ascii_lowercase().as_str() {
+            "ucbbv" => "ucb-bv".to_string(),
+            "epsgreedy" => "eps-greedy".to_string(),
+            other => other.to_string(),
+        };
+        let takes_eps = matches!(name.as_str(), "kube" | "eps-greedy");
+        if !matches!(
+            name.as_str(),
+            "auto" | "kube" | "ucb-bv" | "ucb1" | "eps-greedy" | "thompson"
+        ) {
+            return None;
+        }
+        if epsilon.is_some() && !takes_eps {
+            return None;
+        }
+        let epsilon = match epsilon {
+            None => DEFAULT_EPSILON,
+            Some(e) if (0.0..=1.0).contains(&e) => e,
+            Some(_) => return None,
+        };
+        Some(BanditSpec { name, epsilon })
+    }
+
+    /// Parse the legacy colon grammar:
+    /// `auto | kube[:EPS] | ucb-bv | ucb1 | eps-greedy[:EPS] | thompson`,
+    /// where `EPS` is the exploration rate in \[0, 1\] (default 0.1) —
+    /// e.g. `kube:0.2`, `eps-greedy:0.05`. This is what the legacy
+    /// `bandit` JSON wire field and the `--bandit` CLI alias carry.
+    pub fn parse(s: &str) -> Option<BanditSpec> {
+        let (head, param) = match s.split_once(':') {
+            Some((head, param)) => (head, Some(param.parse::<f64>().ok()?)),
+            None => (s, None),
+        };
+        BanditSpec::new(head, param)
+    }
+
+    /// The policy's bare name (`auto`, `kube`, `ucb-bv`, …).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The exploration rate (only meaningful when [`takes_epsilon`]).
+    ///
+    /// [`takes_epsilon`]: BanditSpec::takes_epsilon
+    pub fn epsilon(&self) -> f64 {
+        self.epsilon
+    }
+
+    /// Does this policy take an exploration-rate parameter?
+    pub fn takes_epsilon(&self) -> bool {
+        matches!(self.name.as_str(), "kube" | "eps-greedy")
+    }
+
+    /// Is this the `auto` placeholder (resolve before [`build`])?
+    pub fn is_auto(&self) -> bool {
+        self.name == "auto"
+    }
+
+    /// The legacy colon-form spec, round-trippable through [`parse`]
+    /// (e.g. `kube:0.2`; parameter-free policies print bare).
+    ///
+    /// [`parse`]: BanditSpec::parse
+    pub fn spec(&self) -> String {
+        if self.takes_epsilon() {
+            format!("{}:{}", self.name, self.epsilon)
+        } else {
+            self.name.clone()
+        }
+    }
+
+    /// Resolve `auto` against the cost mode (paper §IV-B pairing: fixed,
+    /// known costs → KUBE; variable/measured costs → UCB-BV). Non-auto
+    /// specs pass through unchanged.
+    pub fn resolve(&self, mode: CostMode) -> BanditSpec {
+        if !self.is_auto() {
+            return self.clone();
+        }
+        match mode {
+            CostMode::Fixed => BanditSpec {
+                name: "kube".to_string(),
+                epsilon: DEFAULT_EPSILON,
+            },
+            CostMode::Variable { .. } | CostMode::Measured => BanditSpec {
+                name: "ucb-bv".to_string(),
+                epsilon: DEFAULT_EPSILON,
+            },
+        }
+    }
+}
 
 /// Per-arm running statistics.
 #[derive(Clone, Debug, Default)]
@@ -81,17 +191,17 @@ pub trait BudgetedBandit {
 ///
 /// The returned box is `Send` so per-edge bandits can live on the sharded
 /// fleet simulator's worker threads; every in-tree policy is plain data.
-/// `BanditKind::Auto` must be resolved (via
-/// [`RunConfig::resolved_bandit`](crate::config::RunConfig::resolved_bandit))
-/// before construction.
-pub fn build(kind: BanditKind, costs: Vec<f64>) -> Box<dyn BudgetedBandit + Send> {
-    match kind {
-        BanditKind::Kube { epsilon } => Box::new(kube::Kube::new(costs, epsilon)),
-        BanditKind::UcbBv => Box::new(ucb_bv::UcbBv::new(costs)),
-        BanditKind::Ucb1 => Box::new(ucb1::Ucb1::new(costs)),
-        BanditKind::EpsGreedy { epsilon } => Box::new(eps_greedy::EpsGreedy::new(costs, epsilon)),
-        BanditKind::Thompson => Box::new(thompson::Thompson::new(costs)),
-        BanditKind::Auto => unreachable!("resolve BanditKind::Auto before constructing"),
+/// `auto` must be resolved (via [`BanditSpec::resolve`]) before
+/// construction.
+pub fn build(kind: &BanditSpec, costs: Vec<f64>) -> Box<dyn BudgetedBandit + Send> {
+    match kind.name() {
+        "kube" => Box::new(kube::Kube::new(costs, kind.epsilon())),
+        "ucb-bv" => Box::new(ucb_bv::UcbBv::new(costs)),
+        "ucb1" => Box::new(ucb1::Ucb1::new(costs)),
+        "eps-greedy" => Box::new(eps_greedy::EpsGreedy::new(costs, kind.epsilon())),
+        "thompson" => Box::new(thompson::Thompson::new(costs)),
+        "auto" => unreachable!("resolve BanditSpec 'auto' before constructing"),
+        other => unreachable!("BanditSpec validated an unknown policy '{other}'"),
     }
 }
 
@@ -124,5 +234,54 @@ mod tests {
         assert!(ucb_bonus(10, 5) > 0.0);
         // Bonus shrinks with more pulls of the arm.
         assert!(ucb_bonus(100, 50) < ucb_bonus(100, 5));
+    }
+
+    #[test]
+    fn bandit_spec_parses_the_legacy_grammar() {
+        let k = BanditSpec::parse("kube:0.2").unwrap();
+        assert_eq!(k.name(), "kube");
+        assert!((k.epsilon() - 0.2).abs() < 1e-12);
+        // Bare names keep the paper's default exploration rate.
+        assert_eq!(BanditSpec::parse("kube").unwrap().epsilon(), DEFAULT_EPSILON);
+        assert_eq!(BanditSpec::parse("EPSGREEDY").unwrap().name(), "eps-greedy");
+        assert_eq!(BanditSpec::parse("ucbbv").unwrap().name(), "ucb-bv");
+        // Out-of-range or malformed epsilons are rejected.
+        assert!(BanditSpec::parse("kube:1.5").is_none());
+        assert!(BanditSpec::parse("kube:-0.1").is_none());
+        assert!(BanditSpec::parse("kube:x").is_none());
+        // Parameter-free policies reject parameters.
+        assert!(BanditSpec::parse("ucb1:0.1").is_none());
+        assert!(BanditSpec::parse("auto:0.1").is_none());
+        assert!(BanditSpec::parse("thompson:0.1").is_none());
+        assert!(BanditSpec::parse("ucb-bv:0.1").is_none());
+        // Unknown policies are rejected.
+        assert!(BanditSpec::parse("warp").is_none());
+    }
+
+    #[test]
+    fn bandit_spec_roundtrips() {
+        for s in ["auto", "kube:0.25", "ucb-bv", "ucb1", "eps-greedy:0.02", "thompson"] {
+            let spec = BanditSpec::parse(s).unwrap();
+            assert_eq!(BanditSpec::parse(&spec.spec()), Some(spec), "{s}");
+        }
+    }
+
+    #[test]
+    fn auto_resolution_follows_cost_mode() {
+        let auto = BanditSpec::parse("auto").unwrap();
+        assert_eq!(auto.resolve(CostMode::Fixed).name(), "kube");
+        assert_eq!(auto.resolve(CostMode::Variable { cv: 0.2 }).name(), "ucb-bv");
+        assert_eq!(auto.resolve(CostMode::Measured).name(), "ucb-bv");
+        let pinned = BanditSpec::parse("ucb1").unwrap();
+        assert_eq!(pinned.resolve(CostMode::Fixed), pinned);
+    }
+
+    #[test]
+    fn build_dispatches_every_policy() {
+        for s in ["kube", "ucb-bv", "ucb1", "eps-greedy", "thompson"] {
+            let spec = BanditSpec::parse(s).unwrap();
+            let b = build(&spec, vec![10.0, 20.0, 30.0]);
+            assert_eq!(b.n_arms(), 3, "{s}");
+        }
     }
 }

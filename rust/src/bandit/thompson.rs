@@ -3,8 +3,9 @@
 //! arm's [0,1] utility, sampled density `θ_k / c_k` as the selection
 //! score, with the same feasibility/retirement semantics as KUBE.
 //!
-//! Included as a first-class `BanditKind` so the ablation bench can ask
-//! whether posterior sampling beats UCB-style optimism in this setting.
+//! Included as a first-class bandit policy (`ol4el:bandit=thompson`) so
+//! the ablation bench can ask whether posterior sampling beats UCB-style
+//! optimism in this setting.
 
 use crate::bandit::{ArmStats, BudgetedBandit};
 use crate::util::rng::Rng;

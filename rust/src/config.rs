@@ -1,130 +1,24 @@
 //! Typed experiment configuration with JSON round-trip — the config system
 //! behind the CLI, the examples and every bench harness.
+//!
+//! The decision policy is a [`StrategySpec`] registry spec (grammar
+//! `NAME[:KEY=V]*`, see `docs/GRAMMAR.md`) — the old closed `Algo` ×
+//! `BanditKind` enum pair is gone. The JSON wire format keeps accepting
+//! the legacy `algo` / `bandit` / `fixed_interval` field trio, which
+//! canonicalizes into the same [`StrategySpec`] (`{"algo": "ol4el-sync",
+//! "bandit": "kube:0.2"}` parses to `ol4el:bandit=kube:eps=0.2:mode=sync`).
 
 use anyhow::{anyhow, Result};
 
+use crate::bandit::BanditSpec;
+use crate::coordinator::utility::UtilityKind;
 use crate::edge::Hyper;
 use crate::model::{Learner as _, TaskSpec};
 use crate::net::{ChurnSpec, NetworkSpec};
 use crate::sim::cost::{CostMode, CostModel};
 use crate::sim::hetero::HeteroProfile;
-use crate::coordinator::utility::UtilityKind;
+use crate::strategy::StrategySpec;
 use crate::util::json::Json;
-
-/// The four coordination algorithms evaluated in the paper (§V-A).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Algo {
-    /// OL4EL, synchronous pattern: one shared bandit, barrier aggregation.
-    Ol4elSync,
-    /// OL4EL, asynchronous pattern: per-edge bandits, immediate merge.
-    Ol4elAsync,
-    /// Baseline: fixed global update interval I (paper's "Fixed I").
-    FixedI,
-    /// Baseline: adaptive-control synchronous EL (Wang et al. INFOCOM'18,
-    /// the paper's "AC-sync").
-    AcSync,
-}
-
-impl Algo {
-    /// Parse an algorithm name (`ol4el-sync|ol4el-async|fixed-i|ac-sync`,
-    /// with short aliases).
-    pub fn parse(s: &str) -> Option<Algo> {
-        match s.to_ascii_lowercase().as_str() {
-            "ol4el-sync" | "sync" => Some(Algo::Ol4elSync),
-            "ol4el-async" | "async" => Some(Algo::Ol4elAsync),
-            "fixed-i" | "fixed" => Some(Algo::FixedI),
-            "ac-sync" | "acsync" => Some(Algo::AcSync),
-            _ => None,
-        }
-    }
-
-    /// Canonical display/wire name.
-    pub fn name(&self) -> &'static str {
-        match self {
-            Algo::Ol4elSync => "ol4el-sync",
-            Algo::Ol4elAsync => "ol4el-async",
-            Algo::FixedI => "fixed-i",
-            Algo::AcSync => "ac-sync",
-        }
-    }
-
-    /// Barrier-round protocols (everything except OL4EL-async).
-    pub fn is_sync(&self) -> bool {
-        !matches!(self, Algo::Ol4elAsync)
-    }
-}
-
-/// Which bandit policy OL4EL uses (ablation surface; `Auto` picks the
-/// paper's pairing: fixed costs → KUBE, variable/measured → UCB-BV).
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum BanditKind {
-    /// Resolve against the cost mode (paper §IV-B pairing).
-    Auto,
-    /// KUBE with exploration rate ε (fixed, known costs).
-    Kube { epsilon: f64 },
-    /// UCB-BV (variable, unknown i.i.d. costs).
-    UcbBv,
-    /// Budget-blind UCB1 (ablation).
-    Ucb1,
-    /// Budget-blind ε-greedy (ablation).
-    EpsGreedy { epsilon: f64 },
-    /// Budgeted Thompson sampling (extension beyond the paper).
-    Thompson,
-}
-
-impl BanditKind {
-    /// Parse a bandit spec. Grammar:
-    /// `auto | kube[:EPS] | ucb-bv | ucb1 | eps-greedy[:EPS] | thompson`,
-    /// where `EPS` is the exploration rate in \[0, 1\] (default 0.1) —
-    /// e.g. `kube:0.2`, `eps-greedy:0.05`. Parameters are rejected on
-    /// policies that take none.
-    pub fn parse(s: &str) -> Option<BanditKind> {
-        let s = s.to_ascii_lowercase();
-        let (head, param) = match s.split_once(':') {
-            Some((head, param)) => (head, Some(param)),
-            None => (s.as_str(), None),
-        };
-        let epsilon = || -> Option<f64> {
-            match param {
-                None => Some(0.1),
-                Some(p) => p.parse().ok().filter(|e: &f64| (0.0..=1.0).contains(e)),
-            }
-        };
-        match head {
-            "auto" if param.is_none() => Some(BanditKind::Auto),
-            "kube" => Some(BanditKind::Kube { epsilon: epsilon()? }),
-            "ucb-bv" | "ucbbv" if param.is_none() => Some(BanditKind::UcbBv),
-            "ucb1" if param.is_none() => Some(BanditKind::Ucb1),
-            "eps-greedy" | "epsgreedy" => Some(BanditKind::EpsGreedy { epsilon: epsilon()? }),
-            "thompson" if param.is_none() => Some(BanditKind::Thompson),
-            _ => None,
-        }
-    }
-
-    /// The policy's bare name (displays, tables).
-    pub fn name(&self) -> &'static str {
-        match self {
-            BanditKind::Auto => "auto",
-            BanditKind::Kube { .. } => "kube",
-            BanditKind::UcbBv => "ucb-bv",
-            BanditKind::Ucb1 => "ucb1",
-            BanditKind::EpsGreedy { .. } => "eps-greedy",
-            BanditKind::Thompson => "thompson",
-        }
-    }
-
-    /// The full parameterized spec, round-trippable through [`parse`]
-    /// (this is what the JSON wire format carries, so ε survives).
-    ///
-    /// [`parse`]: BanditKind::parse
-    pub fn spec(&self) -> String {
-        match self {
-            BanditKind::Kube { epsilon } => format!("kube:{epsilon}"),
-            BanditKind::EpsGreedy { epsilon } => format!("eps-greedy:{epsilon}"),
-            other => other.name().to_string(),
-        }
-    }
-}
 
 /// How training data is split across edges.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -177,8 +71,12 @@ pub struct RunConfig {
     /// `logreg:d=59:c=8`, any registered task — grammar in
     /// docs/GRAMMAR.md).
     pub task: TaskSpec,
-    /// Coordination algorithm under test.
-    pub algo: Algo,
+    /// Interval-decision strategy: a registry spec (`ol4el`,
+    /// `ol4el:bandit=kube:eps=0.1:mode=sync`, `fixed-i:i=8`, `ac-sync`,
+    /// `greedy-budget`, any registered strategy — grammar in
+    /// docs/GRAMMAR.md). The spec also selects the collaboration manner
+    /// via its `mode=` key / factory default ([`StrategySpec::is_sync`]).
+    pub strategy: StrategySpec,
     /// Fleet size at t=0.
     pub n_edges: usize,
     /// Heterogeneity ratio H (fastest/slowest processing speed).
@@ -200,10 +98,6 @@ pub struct RunConfig {
     /// Async base mixing rate: how much of a zero-staleness contribution
     /// the global model absorbs at a merge.
     pub async_alpha: f64,
-    /// Bandit policy for the OL4EL strategies.
-    pub bandit: BanditKind,
-    /// Fixed interval for the Fixed-I baseline.
-    pub fixed_interval: usize,
     /// AC-sync extra per-iteration edge compute (fraction) for its local
     /// control estimations (paper §V-B.1 credits OL4EL-sync's win to AC's
     /// local calculations).
@@ -236,7 +130,7 @@ impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
             task: TaskSpec::svm(),
-            algo: Algo::Ol4elAsync,
+            strategy: StrategySpec::ol4el_async(),
             n_edges: 3,
             hetero: 1.0,
             hetero_profile: HeteroProfile::Linear,
@@ -247,8 +141,6 @@ impl Default for RunConfig {
             utility: UtilityKind::EvalGain,
             staleness_decay: 0.5,
             async_alpha: 0.6,
-            bandit: BanditKind::Auto,
-            fixed_interval: 5,
             ac_overhead: 0.25,
             // Task-neutral default; figure harnesses apply the paper
             // regime via `with_paper_utility` (label-skew for SVM).
@@ -264,16 +156,52 @@ impl Default for RunConfig {
     }
 }
 
-impl RunConfig {
-    /// Resolve `BanditKind::Auto` against the cost mode (paper §IV-B).
-    pub fn resolved_bandit(&self) -> BanditKind {
-        match self.bandit {
-            BanditKind::Auto => match self.cost.mode {
-                CostMode::Fixed => BanditKind::Kube { epsilon: 0.1 },
-                CostMode::Variable { .. } | CostMode::Measured => BanditKind::UcbBv,
-            },
-            other => other,
+/// Canonicalize the legacy `algo` + `bandit` + `fixed_interval` wire
+/// field trio into a [`StrategySpec`] (`{"algo": "ac-sync", "bandit":
+/// "kube"}` → `ac-sync`; the bandit only parameterizes the ol4el
+/// strategies, exactly as it only ever did).
+pub fn legacy_strategy(
+    algo: &str,
+    bandit: Option<&str>,
+    fixed_interval: Option<usize>,
+) -> Result<StrategySpec> {
+    // Validate the bandit field for EVERY algo, exactly as the enum-era
+    // wire did (a typo'd bandit was a typed error even when the algo made
+    // no use of it); only the ol4el strategies then consume it.
+    let bandit = match bandit {
+        Some(b) => Some(BanditSpec::parse(b).ok_or_else(|| anyhow!("bad bandit '{b}'"))?),
+        None => None,
+    };
+    let algo = algo.to_ascii_lowercase();
+    match algo.as_str() {
+        "ol4el-sync" | "sync" | "ol4el-async" | "async" => {
+            let sync = matches!(algo.as_str(), "ol4el-sync" | "sync");
+            let mut spec = String::from("ol4el");
+            if let Some(b) = bandit {
+                spec.push_str(&format!(":bandit={}", b.name()));
+                if b.takes_epsilon() {
+                    spec.push_str(&format!(":eps={}", b.epsilon()));
+                }
+            }
+            if sync {
+                spec.push_str(":mode=sync");
+            }
+            StrategySpec::parse(&spec)
         }
+        "fixed-i" | "fixed" => {
+            let i = fixed_interval.unwrap_or(5);
+            StrategySpec::parse(&format!("fixed-i:i={i}"))
+        }
+        "ac-sync" | "acsync" => StrategySpec::parse("ac-sync"),
+        other => Err(anyhow!("bad algo '{other}'")),
+    }
+}
+
+impl RunConfig {
+    /// Does the configured strategy run under the synchronous barrier
+    /// manner (shorthand for `self.strategy.is_sync()`)?
+    pub fn sync(&self) -> bool {
+        self.strategy.is_sync()
     }
 
     /// The paper-figure regime for the configured task: eval-gain utility
@@ -293,14 +221,9 @@ impl RunConfig {
     /// Serialize to the JSON wire format (spec strings for the nested
     /// grammars, so files stay hand-editable).
     pub fn to_json(&self) -> Json {
-        let cost_mode = match self.cost.mode {
-            CostMode::Fixed => Json::str("fixed"),
-            CostMode::Variable { cv } => Json::obj(vec![("variable", Json::num(cv))]),
-            CostMode::Measured => Json::str("measured"),
-        };
         Json::obj(vec![
             ("task", Json::str(self.task.spec())),
-            ("algo", Json::str(self.algo.name())),
+            ("strategy", Json::str(self.strategy.spec())),
             ("n_edges", Json::num(self.n_edges as f64)),
             ("hetero", Json::num(self.hetero)),
             (
@@ -311,7 +234,7 @@ impl RunConfig {
                 }),
             ),
             ("budget", Json::num(self.budget)),
-            ("cost_mode", cost_mode),
+            ("cost_mode", Json::str(self.cost.mode.spec())),
             ("base_comp", Json::num(self.cost.base_comp)),
             ("base_comm", Json::num(self.cost.base_comm)),
             ("tau_max", Json::num(self.tau_max as f64)),
@@ -321,8 +244,6 @@ impl RunConfig {
             ("utility", Json::str(self.utility.name())),
             ("staleness_decay", Json::num(self.staleness_decay)),
             ("async_alpha", Json::num(self.async_alpha)),
-            ("bandit", Json::str(self.bandit.spec())),
-            ("fixed_interval", Json::num(self.fixed_interval as f64)),
             ("ac_overhead", Json::num(self.ac_overhead)),
             ("partition", Json::str(self.partition.name())),
             ("data_n", Json::num(self.data_n as f64)),
@@ -336,7 +257,9 @@ impl RunConfig {
     }
 
     /// Deserialize from the JSON wire format; unknown spellings are typed
-    /// errors and the result is `validate()`d.
+    /// errors and the result is `validate()`d. The legacy `algo` /
+    /// `bandit` / `fixed_interval` field trio still parses (canonicalized
+    /// into `strategy`; an explicit `strategy` field wins).
     pub fn from_json(j: &Json) -> Result<RunConfig> {
         let mut cfg = RunConfig::default();
         let gs = |k: &str| j.get(k).and_then(Json::as_str);
@@ -344,8 +267,18 @@ impl RunConfig {
         if let Some(s) = gs("task") {
             cfg.task = TaskSpec::parse(s).map_err(|e| anyhow!("bad task '{s}': {e}"))?;
         }
-        if let Some(s) = gs("algo") {
-            cfg.algo = Algo::parse(s).ok_or_else(|| anyhow!("bad algo '{s}'"))?;
+        if let Some(s) = gs("strategy") {
+            cfg.strategy =
+                StrategySpec::parse(s).map_err(|e| anyhow!("bad strategy '{s}': {e}"))?;
+        } else if gs("algo").is_some() || gs("bandit").is_some() || gn("fixed_interval").is_some()
+        {
+            // Legacy wire fields from the enum era.
+            let algo = gs("algo").unwrap_or("ol4el-async");
+            cfg.strategy = legacy_strategy(
+                algo,
+                gs("bandit"),
+                gn("fixed_interval").map(|n| n as usize),
+            )?;
         }
         if let Some(n) = gn("n_edges") {
             cfg.n_edges = n as usize;
@@ -365,6 +298,7 @@ impl RunConfig {
                 cfg.cost.mode =
                     CostMode::parse(s).ok_or_else(|| anyhow!("bad cost_mode '{s}'"))?;
             }
+            // Legacy wire shape: {"variable": CV}.
             Some(Json::Obj(o)) => {
                 if let Some(cv) = o.get("variable").and_then(Json::as_f64) {
                     cfg.cost.mode = CostMode::Variable { cv };
@@ -399,12 +333,6 @@ impl RunConfig {
         if let Some(n) = gn("async_alpha") {
             cfg.async_alpha = n;
         }
-        if let Some(s) = gs("bandit") {
-            cfg.bandit = BanditKind::parse(s).ok_or_else(|| anyhow!("bad bandit '{s}'"))?;
-        }
-        if let Some(n) = gn("fixed_interval") {
-            cfg.fixed_interval = n as usize;
-        }
         if let Some(n) = gn("ac_overhead") {
             cfg.ac_overhead = n;
         }
@@ -433,6 +361,19 @@ impl RunConfig {
         if let Some(n) = gn("seed") {
             cfg.seed = n as u64;
         }
+        // The enum-era wire rejected an out-of-range fixed_interval for
+        // EVERY algo (validate() checked the field unconditionally); keep
+        // the legacy field exactly that strict even when the chosen
+        // strategy discards it.
+        if let Some(n) = gn("fixed_interval") {
+            let i = n as usize;
+            if i == 0 || i > cfg.tau_max {
+                return Err(anyhow!(
+                    "fixed_interval must be in 1..=tau_max ({})",
+                    cfg.tau_max
+                ));
+            }
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -452,22 +393,21 @@ impl RunConfig {
         if self.tau_max == 0 {
             return Err(anyhow!("tau_max must be >= 1"));
         }
-        if self.fixed_interval == 0 || self.fixed_interval > self.tau_max {
-            return Err(anyhow!(
-                "fixed_interval must be in 1..=tau_max ({})",
-                self.tau_max
-            ));
-        }
         if self.eval_every == 0 {
             return Err(anyhow!("eval_every must be >= 1"));
         }
         // Keep the typed world no looser than the wire grammar: a config
         // that validates must round-trip through its own JSON spec.
-        if let BanditKind::Kube { epsilon } | BanditKind::EpsGreedy { epsilon } = self.bandit {
-            if !(0.0..=1.0).contains(&epsilon) {
-                return Err(anyhow!("bandit epsilon must be in [0, 1], got {epsilon}"));
+        if let CostMode::Variable { cv } = self.cost.mode {
+            if !(cv.is_finite() && cv >= 0.0) {
+                return Err(anyhow!(
+                    "variable cost cv must be finite and >= 0, got {cv}"
+                ));
             }
         }
+        // Strategy invariants that need the full config (e.g. fixed-i's
+        // interval fitting 1..=tau_max) live with the registered factory.
+        self.strategy.check(self)?;
         // Dataset sizing is checked here, up front, so a bad eval split or
         // an uncoverable fleet is a typed builder/config error instead of
         // an assert deep inside `Dataset::split_eval` / shard construction
@@ -500,7 +440,7 @@ impl RunConfig {
             return Err(anyhow!("failure_rate must be in [0, 1]"));
         }
         // The net specs enforce the same ranges their wire grammar does
-        // (same precedent as the bandit ε check above).
+        // (same precedent as the cost-mode check above).
         self.network
             .check()
             .map_err(|e| anyhow!("network spec: {e}"))?;
@@ -517,7 +457,7 @@ mod tests {
     fn json_roundtrip_preserves_fields() {
         let mut cfg = RunConfig::default();
         cfg.task = TaskSpec::kmeans();
-        cfg.algo = Algo::AcSync;
+        cfg.strategy = StrategySpec::ac_sync();
         cfg.n_edges = 17;
         cfg.hetero = 6.0;
         cfg.cost.mode = CostMode::Variable { cv: 0.35 };
@@ -527,7 +467,7 @@ mod tests {
         let j = cfg.to_json();
         let back = RunConfig::from_json(&j).unwrap();
         assert_eq!(back.task, TaskSpec::kmeans());
-        assert_eq!(back.algo, Algo::AcSync);
+        assert_eq!(back.strategy, StrategySpec::ac_sync());
         assert_eq!(back.n_edges, 17);
         assert_eq!(back.hetero, 6.0);
         assert_eq!(back.cost.mode, CostMode::Variable { cv: 0.35 });
@@ -537,16 +477,28 @@ mod tests {
     }
 
     #[test]
-    fn auto_bandit_resolution_follows_cost_mode() {
+    fn variable_cost_cv_survives_the_json_roundtrip() {
+        // Satellite: the wire used to carry {"variable": cv} only via a
+        // JSON object; the spec string now round-trips it too.
         let mut cfg = RunConfig::default();
-        cfg.cost.mode = CostMode::Fixed;
-        assert!(matches!(cfg.resolved_bandit(), BanditKind::Kube { .. }));
-        cfg.cost.mode = CostMode::Variable { cv: 0.2 };
-        assert_eq!(cfg.resolved_bandit(), BanditKind::UcbBv);
-        cfg.cost.mode = CostMode::Measured;
-        assert_eq!(cfg.resolved_bandit(), BanditKind::UcbBv);
-        cfg.bandit = BanditKind::Ucb1;
-        assert_eq!(cfg.resolved_bandit(), BanditKind::Ucb1);
+        cfg.cost.mode = CostMode::Variable { cv: 0.35 };
+        let j = cfg.to_json();
+        assert_eq!(
+            j.get("cost_mode").and_then(Json::as_str),
+            Some("variable:0.35")
+        );
+        let back = RunConfig::from_json(&j).unwrap();
+        assert_eq!(back.cost.mode, CostMode::Variable { cv: 0.35 });
+        // The legacy object shape still parses.
+        let mut legacy = RunConfig::default().to_json();
+        if let Json::Obj(map) = &mut legacy {
+            map.insert(
+                "cost_mode".to_string(),
+                Json::obj(vec![("variable", Json::num(0.4))]),
+            );
+        }
+        let back = RunConfig::from_json(&legacy).unwrap();
+        assert_eq!(back.cost.mode, CostMode::Variable { cv: 0.4 });
     }
 
     #[test]
@@ -558,42 +510,120 @@ mod tests {
         cfg.hetero = 0.5;
         assert!(cfg.validate().is_err());
         cfg = RunConfig::default();
-        cfg.fixed_interval = 99;
-        assert!(cfg.validate().is_err());
+        cfg.strategy = StrategySpec::parse("fixed-i:i=99").unwrap();
+        assert!(cfg.validate().is_err(), "interval beyond tau_max accepted");
         cfg = RunConfig::default();
         cfg.eval_every = 0;
         assert!(cfg.validate().is_err());
+        cfg = RunConfig::default();
+        cfg.cost.mode = CostMode::Variable { cv: -0.2 };
+        assert!(cfg.validate().is_err(), "negative cv accepted");
+        cfg = RunConfig::default();
+        cfg.cost.mode = CostMode::Variable { cv: f64::NAN };
+        assert!(cfg.validate().is_err(), "NaN cv accepted");
     }
 
     #[test]
-    fn validation_rejects_out_of_range_bandit_epsilon() {
-        // validate() must reject exactly what the wire grammar rejects,
-        // or a validated config could fail to reload from its own JSON.
-        for bandit in [
-            BanditKind::Kube { epsilon: 1.5 },
-            BanditKind::Kube { epsilon: -0.1 },
-            BanditKind::EpsGreedy { epsilon: 2.0 },
-        ] {
+    fn strategy_specs_survive_the_json_roundtrip() {
+        let strategies = [
+            "ol4el",
+            "ol4el:mode=sync",
+            "ol4el:bandit=kube:eps=0.2",
+            "ol4el:bandit=thompson",
+            "fixed-i",
+            "fixed-i:i=8",
+            "ac-sync",
+            "greedy-budget",
+            "greedy-budget:deadline=500",
+        ];
+        for spec in strategies {
             let cfg = RunConfig {
-                bandit,
+                strategy: StrategySpec::parse(spec).unwrap(),
+                seed: 7,
                 ..Default::default()
             };
-            assert!(cfg.validate().is_err(), "{bandit:?} accepted");
+            let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(back.strategy, cfg.strategy, "{spec} lost the strategy");
+            assert_eq!(back.seed, 7);
         }
-        let ok = RunConfig {
-            bandit: BanditKind::Kube { epsilon: 0.2 },
-            ..Default::default()
-        };
-        assert!(ok.validate().is_ok());
     }
 
     #[test]
-    fn algo_parsing() {
-        assert_eq!(Algo::parse("ol4el-async"), Some(Algo::Ol4elAsync));
-        assert_eq!(Algo::parse("AC-SYNC"), Some(Algo::AcSync));
-        assert_eq!(Algo::parse("nope"), None);
-        assert!(Algo::Ol4elSync.is_sync());
-        assert!(!Algo::Ol4elAsync.is_sync());
+    fn legacy_algo_bandit_fields_canonicalize() {
+        // The pre-registry wire format must keep parsing: algo + bandit
+        // (+ fixed_interval) fold into one canonical StrategySpec.
+        let legacy = |edits: &[(&str, Json)]| {
+            let mut j = RunConfig::default().to_json();
+            if let Json::Obj(map) = &mut j {
+                map.remove("strategy");
+                for (k, v) in edits {
+                    map.insert(k.to_string(), v.clone());
+                }
+            }
+            RunConfig::from_json(&j).unwrap().strategy
+        };
+        assert_eq!(
+            legacy(&[("algo", Json::str("ol4el-async"))]),
+            StrategySpec::ol4el_async()
+        );
+        assert_eq!(
+            legacy(&[("algo", Json::str("ol4el-sync")), ("bandit", Json::str("kube:0.2"))]),
+            StrategySpec::parse("ol4el:bandit=kube:eps=0.2:mode=sync").unwrap()
+        );
+        assert_eq!(
+            legacy(&[("algo", Json::str("ac-sync")), ("bandit", Json::str("kube"))]),
+            StrategySpec::ac_sync()
+        );
+        assert_eq!(
+            legacy(&[("algo", Json::str("fixed-i")), ("fixed_interval", Json::num(8.0))]),
+            StrategySpec::parse("fixed-i:i=8").unwrap()
+        );
+        // A bandit field alone implies the default (async) ol4el.
+        assert_eq!(
+            legacy(&[("bandit", Json::str("thompson"))]),
+            StrategySpec::parse("ol4el:bandit=thompson").unwrap()
+        );
+        // An explicit strategy field wins over the legacy trio.
+        let mut j = RunConfig::default().to_json();
+        if let Json::Obj(map) = &mut j {
+            map.insert("strategy".to_string(), Json::str("ac-sync"));
+            map.insert("algo".to_string(), Json::str("ol4el-async"));
+        }
+        assert_eq!(
+            RunConfig::from_json(&j).unwrap().strategy,
+            StrategySpec::ac_sync()
+        );
+    }
+
+    #[test]
+    fn legacy_strategy_rejects_unknown_algos() {
+        assert!(legacy_strategy("warp", None, None).is_err());
+        assert!(legacy_strategy("ol4el-async", Some("nope"), None).is_err());
+        // A malformed bandit is rejected even for algos that ignore it —
+        // the wire stays exactly as strict as the enum era.
+        assert!(legacy_strategy("ac-sync", Some("kub"), None).is_err());
+        assert!(legacy_strategy("fixed-i", Some("kube:9"), Some(3)).is_err());
+        // Likewise an out-of-range legacy fixed_interval field fails for
+        // every algo, exactly as the old unconditional validate() did.
+        let mut j = RunConfig::default().to_json();
+        if let Json::Obj(map) = &mut j {
+            map.remove("strategy");
+            map.insert("algo".to_string(), Json::str("ol4el-async"));
+            map.insert("fixed_interval".to_string(), Json::num(99.0));
+        }
+        let err = RunConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("fixed_interval"), "{err}");
+        // Short aliases from the enum era.
+        assert!(legacy_strategy("sync", None, None).unwrap().is_sync());
+        assert!(!legacy_strategy("async", None, None).unwrap().is_sync());
+        assert_eq!(
+            legacy_strategy("fixed", None, None).unwrap(),
+            StrategySpec::fixed_i()
+        );
+        assert_eq!(
+            legacy_strategy("acsync", None, None).unwrap(),
+            StrategySpec::ac_sync()
+        );
     }
 
     #[test]
@@ -630,83 +660,8 @@ mod tests {
     }
 
     #[test]
-    fn bandit_parameterized_grammar() {
-        assert_eq!(
-            BanditKind::parse("kube:0.2"),
-            Some(BanditKind::Kube { epsilon: 0.2 })
-        );
-        assert_eq!(
-            BanditKind::parse("eps-greedy:0.05"),
-            Some(BanditKind::EpsGreedy { epsilon: 0.05 })
-        );
-        // Bare names keep the paper's default exploration rate.
-        assert_eq!(
-            BanditKind::parse("kube"),
-            Some(BanditKind::Kube { epsilon: 0.1 })
-        );
-        assert_eq!(
-            BanditKind::parse("EPSGREEDY"),
-            Some(BanditKind::EpsGreedy { epsilon: 0.1 })
-        );
-        // Out-of-range or malformed epsilons are rejected.
-        assert_eq!(BanditKind::parse("kube:1.5"), None);
-        assert_eq!(BanditKind::parse("kube:-0.1"), None);
-        assert_eq!(BanditKind::parse("kube:x"), None);
-        // Parameter-free policies reject parameters.
-        assert_eq!(BanditKind::parse("ucb1:0.1"), None);
-        assert_eq!(BanditKind::parse("auto:0.1"), None);
-        assert_eq!(BanditKind::parse("thompson:0.1"), None);
-        assert_eq!(BanditKind::parse("ucb-bv:0.1"), None);
-    }
-
-    #[test]
-    fn bandit_spec_roundtrips() {
-        for kind in [
-            BanditKind::Auto,
-            BanditKind::Kube { epsilon: 0.25 },
-            BanditKind::UcbBv,
-            BanditKind::Ucb1,
-            BanditKind::EpsGreedy { epsilon: 0.02 },
-            BanditKind::Thompson,
-        ] {
-            assert_eq!(BanditKind::parse(&kind.spec()), Some(kind), "{kind:?}");
-        }
-    }
-
-    #[test]
-    fn parameterized_task_specs_survive_the_json_roundtrip() {
-        // Satellite: `kmeans:k=5` must survive config -> JSON -> config,
-        // across every registered task x algo (mirrors BanditKind::spec).
-        let algos = [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::FixedI, Algo::AcSync];
-        let specs = [
-            "svm",
-            "svm:d=20:c=4",
-            "kmeans",
-            "kmeans:k=5",
-            "logreg",
-            "logreg:d=59:c=8",
-            "gmm",
-            "gmm:k=3",
-            "gmm:k=4:d=8",
-        ];
-        for algo in algos {
-            for spec in specs {
-                let cfg = RunConfig {
-                    algo,
-                    task: TaskSpec::parse(spec).unwrap(),
-                    seed: 7,
-                    ..Default::default()
-                };
-                let back = RunConfig::from_json(&cfg.to_json()).unwrap();
-                assert_eq!(back.task, cfg.task, "{algo:?} x {spec} lost the task spec");
-                assert_eq!(back.algo, algo);
-            }
-        }
-    }
-
-    #[test]
     fn validation_rejects_bad_eval_splits_up_front() {
-        // Satellite: an eval split >= data_n used to assert deep inside
+        // An eval split >= data_n used to assert deep inside
         // Dataset::split_eval mid-run; now it is a typed config error.
         let mut cfg = RunConfig::default();
         cfg.data_n = 512; // == the default eval batch
@@ -729,27 +684,26 @@ mod tests {
     }
 
     #[test]
-    fn json_roundtrip_every_algo_bandit_combination() {
-        let algos = [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::FixedI, Algo::AcSync];
-        let bandits = [
-            BanditKind::Auto,
-            BanditKind::Kube { epsilon: 0.2 },
-            BanditKind::UcbBv,
-            BanditKind::Ucb1,
-            BanditKind::EpsGreedy { epsilon: 0.05 },
-            BanditKind::Thompson,
+    fn json_roundtrip_every_strategy_task_combination() {
+        let strategies = [
+            StrategySpec::ol4el_sync(),
+            StrategySpec::ol4el_async(),
+            StrategySpec::fixed_i(),
+            StrategySpec::ac_sync(),
+            StrategySpec::greedy_budget(),
         ];
-        for algo in algos {
-            for bandit in bandits {
+        let tasks = ["svm", "kmeans:k=5", "logreg:d=59:c=8", "gmm"];
+        for strategy in &strategies {
+            for task in tasks {
                 let cfg = RunConfig {
-                    algo,
-                    bandit,
+                    strategy: strategy.clone(),
+                    task: TaskSpec::parse(task).unwrap(),
                     seed: 7,
                     ..Default::default()
                 };
                 let back = RunConfig::from_json(&cfg.to_json()).unwrap();
-                assert_eq!(back.algo, algo);
-                assert_eq!(back.bandit, bandit, "{algo:?} x {bandit:?} lost ε");
+                assert_eq!(back.strategy, cfg.strategy, "{strategy} x {task}");
+                assert_eq!(back.task, cfg.task, "{strategy} x {task}");
                 assert_eq!(back.seed, 7);
             }
         }

@@ -163,14 +163,15 @@ impl CollaborationMode for AsyncMerge {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{Algo, RunConfig};
+    use crate::config::RunConfig;
     use crate::coordinator::run;
     use crate::engine::native::NativeEngine;
     use crate::model::TaskSpec;
+    use crate::strategy::StrategySpec;
 
     fn cfg(task: TaskSpec) -> RunConfig {
         RunConfig {
-            algo: Algo::Ol4elAsync,
+            strategy: StrategySpec::ol4el_async(),
             task,
             data_n: 4000,
             budget: 1500.0,
@@ -214,7 +215,7 @@ mod tests {
         ca.hetero = 10.0;
         let ra = run(&ca, &engine).unwrap();
         let mut cs = ca.clone();
-        cs.algo = Algo::Ol4elSync;
+        cs.strategy = StrategySpec::ol4el_sync();
         let rs = run(&cs, &engine).unwrap();
         assert!(
             ra.total_updates > rs.total_updates,

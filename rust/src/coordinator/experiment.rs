@@ -22,7 +22,7 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::config::{Algo, BanditKind, PartitionKind, RunConfig};
+use crate::config::{PartitionKind, RunConfig};
 use crate::coordinator::observer::Observer;
 use crate::coordinator::session::Session;
 use crate::coordinator::RunResult;
@@ -31,6 +31,7 @@ use crate::model::TaskSpec;
 use crate::net::{ChurnSpec, NetworkSpec};
 use crate::sim::cost::{CostMode, CostModel};
 use crate::sim::hetero::HeteroProfile;
+use crate::strategy::StrategySpec;
 use crate::coordinator::utility::UtilityKind;
 use crate::util::json::Json;
 
@@ -67,7 +68,7 @@ impl Experiment {
     pub fn kmeans_traffic() -> ExperimentBuilder {
         Experiment::builder()
             .task(TaskSpec::kmeans())
-            .algo(Algo::Ol4elAsync)
+            .strategy(StrategySpec::ol4el_async())
             .edges(4)
             .hetero(4.0)
             .budget(5000.0)
@@ -199,9 +200,12 @@ impl ExperimentBuilder {
         self
     }
 
-    /// Coordination algorithm under test.
-    pub fn algo(mut self, algo: Algo) -> Self {
-        self.cfg.algo = algo;
+    /// Interval-decision strategy under test (a registry spec —
+    /// `StrategySpec::ol4el_sync()`, `StrategySpec::parse("fixed-i:i=8")?`,
+    /// any registered strategy). The spec also carries the collaboration
+    /// manner (`mode=sync|async` / the factory default).
+    pub fn strategy(mut self, spec: StrategySpec) -> Self {
+        self.cfg.strategy = spec;
         self
     }
 
@@ -287,18 +291,6 @@ impl ExperimentBuilder {
     /// Async base mixing rate at a merge, in (0, 1].
     pub fn async_alpha(mut self, alpha: f64) -> Self {
         self.cfg.async_alpha = alpha;
-        self
-    }
-
-    /// Bandit policy for the OL4EL strategies.
-    pub fn bandit(mut self, kind: BanditKind) -> Self {
-        self.cfg.bandit = kind;
-        self
-    }
-
-    /// Interval for the Fixed-I baseline.
-    pub fn fixed_interval(mut self, interval: usize) -> Self {
-        self.cfg.fixed_interval = interval;
         self
     }
 
@@ -402,18 +394,17 @@ mod tests {
     fn builder_produces_wire_config() {
         let exp = Experiment::builder()
             .task(TaskSpec::kmeans())
-            .algo(Algo::Ol4elSync)
+            .strategy(StrategySpec::ol4el_sync())
             .edges(7)
             .hetero(3.0)
             .budget(1234.0)
             .tau_max(6)
-            .fixed_interval(2)
             .seed(99)
             .build()
             .unwrap();
         let cfg = exp.config();
         assert_eq!(cfg.task, TaskSpec::kmeans());
-        assert_eq!(cfg.algo, Algo::Ol4elSync);
+        assert_eq!(cfg.strategy, StrategySpec::ol4el_sync());
         assert_eq!(cfg.n_edges, 7);
         assert_eq!(cfg.hetero, 3.0);
         assert_eq!(cfg.budget, 1234.0);
@@ -424,10 +415,10 @@ mod tests {
     #[test]
     fn builder_rejects_bad_tau_max() {
         assert!(Experiment::builder().tau_max(0).build().is_err());
-        // fixed_interval outside 1..=tau_max is a config contradiction.
+        // A fixed-i interval outside 1..=tau_max is a config contradiction.
         assert!(Experiment::builder()
             .tau_max(3)
-            .fixed_interval(9)
+            .strategy(StrategySpec::parse("fixed-i:i=9").unwrap())
             .build()
             .is_err());
     }

@@ -1,8 +1,9 @@
 //! The Cloud coordinator — the paper's L3 system contribution.
 //!
-//! The Cloud owns the global model, the learning-utility meter, and an
-//! *interval strategy* that decides each edge's global update interval τ
-//! (OL4EL's budget-limited bandits, or a baseline policy). The run API is
+//! The Cloud owns the global model, the learning-utility meter, and a
+//! [`Strategy`] from the open strategy layer (`crate::strategy`) that
+//! decides each edge's global update interval τ (OL4EL's budget-limited
+//! bandits, a baseline policy, or any registered plugin). The run API is
 //! layered as:
 //!
 //! * [`Experiment`] / [`ExperimentBuilder`] (`experiment`) — the typed,
@@ -40,13 +41,16 @@ pub use suite::{find_outcome, find_outcome_net, CellSpec, ExperimentSuite, Suite
 
 use anyhow::{anyhow, Result};
 
-use crate::bandit::BudgetedBandit;
-use crate::config::{Algo, BanditKind, PartitionKind, RunConfig};
+use crate::config::{PartitionKind, RunConfig};
 use crate::data::{eval_buffer, partition};
 use crate::edge::EdgeServer;
 use crate::engine::ComputeEngine;
 use crate::model::{Learner, ModelState};
 use crate::util::rng::Rng;
+
+// The decision layer lives in `crate::strategy`; these re-exports keep
+// the coordinator the one-stop import for run-engine call sites.
+pub use crate::strategy::{RoundObservation, Strategy};
 
 /// One observed point of a run (recorded at global updates).
 #[derive(Clone, Debug, PartialEq)]
@@ -127,129 +131,6 @@ impl Aggregate {
         self.metric.push(r.final_metric);
         self.updates.push(r.total_updates as f64);
         self.auc.push(r.tradeoff_auc());
-    }
-}
-
-/// Per-round observation handed to strategies that estimate system state
-/// (AC-sync's adaptive control uses divergence + loss movement).
-#[derive(Clone, Copy, Debug, Default)]
-pub struct RoundObservation {
-    /// Mean L2 distance of local models from the fresh global model.
-    pub divergence: f64,
-    /// L2 distance between consecutive global models.
-    pub global_delta: f64,
-    /// Mean per-iteration compute cost observed this round.
-    pub mean_comp: f64,
-    /// Communication cost observed this round.
-    pub comm: f64,
-    /// Learning rate in force.
-    pub lr: f64,
-}
-
-/// A policy choosing each edge's global update interval τ ∈ 1..=tau_max.
-pub trait IntervalStrategy {
-    /// The strategy's display name.
-    fn name(&self) -> String;
-
-    /// Choose τ for `edge` given its remaining budget; None retires it.
-    fn select(&mut self, edge: usize, remaining_budget: f64, rng: &mut Rng) -> Option<usize>;
-
-    /// Reward/cost feedback after the corresponding global update.
-    fn feedback(&mut self, edge: usize, tau: usize, utility: f64, cost: f64);
-
-    /// Extra per-iteration compute fraction this strategy imposes on edges
-    /// (AC-sync's local estimations; 0 for everything else).
-    fn edge_overhead(&self) -> f64 {
-        0.0
-    }
-
-    /// System-state observation hook (AC-sync uses it; bandits ignore it).
-    fn observe_round(&mut self, _obs: &RoundObservation) {}
-
-    /// Churn hook: edge `edge` joined mid-run with the given nominal arm
-    /// costs. Per-edge strategies allocate state here; shared/static
-    /// policies can ignore it (their `select` is edge-agnostic).
-    fn on_edge_joined(&mut self, _edge: usize, _arm_costs: Vec<f64>) {}
-
-    /// Pull histogram over τ (diagnostics; arms indexed τ-1).
-    fn tau_histogram(&self) -> Vec<u64>;
-}
-
-/// OL4EL's strategy: budget-limited bandit(s) over τ. Synchronous mode uses
-/// one shared bandit (paper §IV-B: "only one bandit model for all edge
-/// servers in synchronous EL"); asynchronous uses one per edge.
-pub struct Ol4elStrategy {
-    bandits: Vec<Box<dyn BudgetedBandit>>,
-    shared: bool,
-    kind: BanditKind,
-}
-
-/// Construct one budgeted bandit of `kind` over the given arm costs.
-fn build_bandit(kind: BanditKind, costs: Vec<f64>) -> Box<dyn BudgetedBandit> {
-    // The shared factory hands back a `Send` box (the fleet simulator
-    // needs that bound); here it simply coerces to the plain trait object.
-    crate::bandit::build(kind, costs)
-}
-
-impl Ol4elStrategy {
-    /// `arm_costs_per_edge[e][k]` = nominal cost of arm k for edge e (for
-    /// the shared/sync case pass a single entry with barrier costs).
-    pub fn new(kind: BanditKind, arm_costs_per_edge: Vec<Vec<f64>>, shared: bool) -> Self {
-        assert!(!arm_costs_per_edge.is_empty());
-        let bandits: Vec<_> = arm_costs_per_edge
-            .into_iter()
-            .map(|costs| build_bandit(kind, costs))
-            .collect();
-        Ol4elStrategy {
-            bandits,
-            shared,
-            kind,
-        }
-    }
-
-    fn bandit_for(&mut self, edge: usize) -> &mut Box<dyn BudgetedBandit> {
-        let idx = if self.shared { 0 } else { edge };
-        &mut self.bandits[idx]
-    }
-}
-
-impl IntervalStrategy for Ol4elStrategy {
-    fn name(&self) -> String {
-        format!(
-            "ol4el({}, {})",
-            self.bandits[0].name(),
-            if self.shared { "shared" } else { "per-edge" }
-        )
-    }
-
-    fn select(&mut self, edge: usize, remaining_budget: f64, rng: &mut Rng) -> Option<usize> {
-        self.bandit_for(edge)
-            .select(remaining_budget, rng)
-            .map(|arm| arm + 1)
-    }
-
-    fn feedback(&mut self, edge: usize, tau: usize, utility: f64, cost: f64) {
-        self.bandit_for(edge).update(tau - 1, utility, cost);
-    }
-
-    fn on_edge_joined(&mut self, edge: usize, arm_costs: Vec<f64>) {
-        if self.shared {
-            return; // one bandit for the whole cohort (sync)
-        }
-        // Per-edge bandits: the joiner starts a fresh model at its index.
-        assert_eq!(edge, self.bandits.len(), "non-contiguous edge join");
-        self.bandits.push(build_bandit(self.kind, arm_costs));
-    }
-
-    fn tau_histogram(&self) -> Vec<u64> {
-        let n_arms = self.bandits[0].n_arms();
-        let mut h = vec![0u64; n_arms];
-        for b in &self.bandits {
-            for (k, slot) in h.iter_mut().enumerate() {
-                *slot += b.stats(k).pulls;
-            }
-        }
-        h
     }
 }
 
@@ -395,42 +276,6 @@ pub fn evaluate_model(
     learner.evaluate(engine, &model.params, eval_x, eval_y)
 }
 
-/// Build the configured interval strategy for a fleet with the given
-/// per-edge slowdowns.
-pub fn build_strategy(cfg: &RunConfig, slowdowns: &[f64]) -> Box<dyn IntervalStrategy> {
-    let kind = cfg.resolved_bandit();
-    match cfg.algo {
-        Algo::Ol4elSync => {
-            // Shared bandit prices arms at the BARRIER cost: the straggler
-            // defines the round, and every edge is charged the wait.
-            let max_slow = slowdowns.iter().cloned().fold(1.0f64, f64::max);
-            let costs = cfg.cost.arm_costs(cfg.tau_max, max_slow);
-            Box::new(Ol4elStrategy::new(kind, vec![costs], true))
-        }
-        Algo::Ol4elAsync => {
-            let per_edge: Vec<Vec<f64>> = slowdowns
-                .iter()
-                .map(|&s| cfg.cost.arm_costs(cfg.tau_max, s))
-                .collect();
-            Box::new(Ol4elStrategy::new(kind, per_edge, false))
-        }
-        Algo::FixedI => Box::new(crate::baselines::fixed_i::FixedIStrategy::new(
-            cfg.fixed_interval,
-            cfg.tau_max,
-        )),
-        Algo::AcSync => {
-            let max_slow = slowdowns.iter().cloned().fold(1.0f64, f64::max);
-            Box::new(crate::baselines::ac_sync::AcSyncStrategy::new(
-                cfg.tau_max,
-                cfg.cost.nominal_comp(max_slow),
-                cfg.cost.nominal_comm(),
-                cfg.ac_overhead,
-                cfg.hyper.lr as f64,
-            ))
-        }
-    }
-}
-
 /// Run a config end-to-end on an engine: one [`Session`] driven by the
 /// collaboration mode matching the algorithm (paper Fig. 1).
 pub fn run(cfg: &RunConfig, engine: &dyn ComputeEngine) -> Result<RunResult> {
@@ -500,17 +345,17 @@ mod tests {
     }
 
     #[test]
-    fn strategy_factory_matches_algo() {
+    fn strategy_factory_matches_spec() {
         let cfg = small_cfg();
-        let s = build_strategy(&cfg, &[1.0, 2.0, 3.0]);
+        let s = crate::strategy::build(&cfg, &[1.0, 2.0, 3.0]).unwrap();
         assert!(s.name().contains("per-edge"));
         let mut cfg2 = small_cfg();
-        cfg2.algo = Algo::Ol4elSync;
-        let s2 = build_strategy(&cfg2, &[1.0, 2.0, 3.0]);
+        cfg2.strategy = crate::strategy::StrategySpec::ol4el_sync();
+        let s2 = crate::strategy::build(&cfg2, &[1.0, 2.0, 3.0]).unwrap();
         assert!(s2.name().contains("shared"));
         let mut cfg3 = small_cfg();
-        cfg3.algo = Algo::FixedI;
-        assert_eq!(build_strategy(&cfg3, &[1.0]).name(), "fixed-i(5)");
+        cfg3.strategy = crate::strategy::StrategySpec::fixed_i();
+        assert_eq!(crate::strategy::build(&cfg3, &[1.0]).unwrap().name(), "fixed-i(5)");
     }
 
     #[test]

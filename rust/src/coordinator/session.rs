@@ -13,13 +13,14 @@
 
 use anyhow::Result;
 
-use crate::config::{Algo, RunConfig};
+use crate::config::RunConfig;
 use crate::coordinator::observer::{LocalReport, Observer, RunEvent, TraceObserver};
 use crate::coordinator::utility::UtilityMeter;
-use crate::coordinator::{build_strategy, IntervalStrategy, RunResult, TracePoint, World};
+use crate::coordinator::{RunResult, TracePoint, World};
 use crate::edge::{Hyper, LocalRound};
 use crate::engine::ComputeEngine;
 use crate::model::ModelState;
+use crate::strategy::{self, Strategy};
 
 /// A collaboration manner: the scheduling + merge policy a [`Session`]
 /// drives. Object-safe, so custom manners plug in without touching the
@@ -49,26 +50,30 @@ pub trait CollaborationMode {
     fn is_done(&self, session: &Session<'_>) -> bool;
 }
 
-/// The default manner for an algorithm (paper Fig. 1: barrier rounds for
-/// every synchronous policy, event-driven merging for OL4EL-async).
-pub fn default_mode(algo: Algo) -> Box<dyn CollaborationMode> {
-    match algo {
-        Algo::Ol4elAsync => Box::new(super::asynchronous::AsyncMerge::new()),
-        _ => Box::new(super::sync::SyncBarrier::new()),
+/// The default manner for a strategy's declared mode (paper Fig. 1:
+/// barrier rounds for every synchronous policy, event-driven merging for
+/// the asynchronous ones).
+pub fn default_mode(sync: bool) -> Box<dyn CollaborationMode> {
+    if sync {
+        Box::new(super::sync::SyncBarrier::new())
+    } else {
+        Box::new(super::asynchronous::AsyncMerge::new())
     }
 }
 
 /// The manner for a full config: the legacy direct-call manners when the
 /// network is ideal and the fleet static (byte-identical fast path), the
 /// transport-backed `net::` manners as soon as latency, loss, partitions
-/// or churn are configured.
+/// or churn are configured. Sync-vs-async comes from the strategy spec
+/// ([`RunConfig::sync`]).
 pub fn mode_for(cfg: &RunConfig) -> Box<dyn CollaborationMode> {
     if cfg.network.is_ideal() && cfg.churn.is_none() {
-        return default_mode(cfg.algo);
+        return default_mode(cfg.sync());
     }
-    match cfg.algo {
-        Algo::Ol4elAsync => Box::new(crate::net::NetAsyncMerge::new()),
-        _ => Box::new(crate::net::NetSyncBarrier::new()),
+    if cfg.sync() {
+        Box::new(crate::net::NetSyncBarrier::new())
+    } else {
+        Box::new(crate::net::NetAsyncMerge::new())
     }
 }
 
@@ -83,7 +88,7 @@ pub struct Session<'e> {
     /// The assembled run state (fleet, global model, eval buffers).
     pub world: World,
     /// The interval strategy choosing each τ.
-    pub strategy: Box<dyn IntervalStrategy>,
+    pub strategy: Box<dyn Strategy>,
     meter: UtilityMeter,
     trace: TraceObserver,
     observers: Vec<Box<dyn Observer>>,
@@ -101,7 +106,7 @@ impl<'e> Session<'e> {
     /// Assemble the world and strategy for `cfg` (validates the config).
     pub fn new(cfg: &RunConfig, engine: &'e dyn ComputeEngine) -> Result<Session<'e>> {
         let world = World::build(cfg, engine)?;
-        let strategy = build_strategy(cfg, &world.slowdowns);
+        let strategy = strategy::build(cfg, &world.slowdowns)?;
         let retired_seen = vec![false; world.edges.len()];
         Ok(Session {
             cfg: cfg.clone(),
@@ -195,11 +200,13 @@ impl<'e> Session<'e> {
         self.emit(RunEvent::GlobalUpdate { point });
     }
 
-    /// Emit `EdgeRetired` for every edge that retired since the last sweep.
+    /// Emit `EdgeRetired` for every edge that retired since the last sweep
+    /// (announcing each one to the strategy's retirement hook first).
     fn sweep_retirements(&mut self) {
         for i in 0..self.world.edges.len() {
             if self.world.edges[i].retired && !self.retired_seen[i] {
                 self.retired_seen[i] = true;
+                self.strategy.on_edge_retired(i);
                 let spent = self.world.edges[i].spent;
                 let wall_ms = self.wall_ms;
                 self.emit(RunEvent::EdgeRetired {
@@ -306,9 +313,11 @@ mod tests {
     use std::cell::Cell;
     use std::rc::Rc;
 
-    fn cfg(algo: Algo) -> RunConfig {
+    use crate::strategy::StrategySpec;
+
+    fn cfg(strategy: StrategySpec) -> RunConfig {
         RunConfig {
-            algo,
+            strategy,
             task: TaskSpec::svm(),
             data_n: 3000,
             budget: 900.0,
@@ -321,23 +330,31 @@ mod tests {
     #[test]
     fn session_runs_both_manners() {
         let engine = NativeEngine::default();
-        for algo in [Algo::Ol4elSync, Algo::Ol4elAsync] {
-            let r = Session::new(&cfg(algo), &engine).unwrap().run().unwrap();
-            assert!(r.total_updates > 0, "{algo:?}");
-            assert!(r.trace.len() >= 2, "{algo:?}");
+        for strategy in [StrategySpec::ol4el_sync(), StrategySpec::ol4el_async()] {
+            let r = Session::new(&cfg(strategy.clone()), &engine)
+                .unwrap()
+                .run()
+                .unwrap();
+            assert!(r.total_updates > 0, "{strategy}");
+            assert!(r.trace.len() >= 2, "{strategy}");
         }
     }
 
     #[test]
     fn session_matches_coordinator_run() {
         let engine = NativeEngine::default();
-        for algo in [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::FixedI, Algo::AcSync] {
-            let c = cfg(algo);
+        for strategy in [
+            StrategySpec::ol4el_sync(),
+            StrategySpec::ol4el_async(),
+            StrategySpec::fixed_i(),
+            StrategySpec::ac_sync(),
+        ] {
+            let c = cfg(strategy.clone());
             let a = Session::new(&c, &engine).unwrap().run().unwrap();
             let b = crate::coordinator::run(&c, &engine).unwrap();
-            assert_eq!(a.final_metric, b.final_metric, "{algo:?}");
-            assert_eq!(a.total_updates, b.total_updates, "{algo:?}");
-            assert_eq!(a.tau_histogram, b.tau_histogram, "{algo:?}");
+            assert_eq!(a.final_metric, b.final_metric, "{strategy}");
+            assert_eq!(a.total_updates, b.total_updates, "{strategy}");
+            assert_eq!(a.tau_histogram, b.tau_histogram, "{strategy}");
         }
     }
 
@@ -348,7 +365,7 @@ mod tests {
         let reports = Rc::new(Cell::new(0usize));
         let finished = Rc::new(Cell::new(0usize));
         let (r2, p2, f2) = (rounds.clone(), reports.clone(), finished.clone());
-        let mut session = Session::new(&cfg(Algo::Ol4elAsync), &engine).unwrap();
+        let mut session = Session::new(&cfg(StrategySpec::ol4el_async()), &engine).unwrap();
         session.observe(from_fn(move |ev: &RunEvent| match ev {
             RunEvent::RoundStart { .. } => r2.set(r2.get() + 1),
             RunEvent::LocalReport { .. } => p2.set(p2.get() + 1),
@@ -368,7 +385,7 @@ mod tests {
         let engine = NativeEngine::default();
         let retired = Rc::new(Cell::new(0usize));
         let r2 = retired.clone();
-        let mut session = Session::new(&cfg(Algo::Ol4elAsync), &engine).unwrap();
+        let mut session = Session::new(&cfg(StrategySpec::ol4el_async()), &engine).unwrap();
         session.observe(from_fn(move |ev: &RunEvent| {
             if matches!(ev, RunEvent::EdgeRetired { .. }) {
                 r2.set(r2.get() + 1);
@@ -399,7 +416,7 @@ mod tests {
             }
         }
         let engine = NativeEngine::default();
-        let session = Session::new(&cfg(Algo::Ol4elSync), &engine).unwrap();
+        let session = Session::new(&cfg(StrategySpec::ol4el_sync()), &engine).unwrap();
         let r = session.run_with(&mut Idle).unwrap();
         assert_eq!(r.total_updates, 0);
         assert_eq!(r.trace.len(), 2);

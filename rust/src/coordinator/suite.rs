@@ -1,7 +1,7 @@
 //! Declarative multi-run grids: the scale lever behind the figure
 //! harnesses and any future sweep.
 //!
-//! An [`ExperimentSuite`] is a base config plus axes (tasks × algorithms ×
+//! An [`ExperimentSuite`] is a base config plus axes (tasks × strategies ×
 //! fleet sizes × heterogeneity) and a seed list. `run` executes every cell
 //! across a pool of worker threads — each worker builds its OWN compute
 //! engine, because `ComputeEngine` is deliberately not `Send` (the PJRT
@@ -13,19 +13,20 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, Result};
 
-use crate::config::{Algo, RunConfig};
+use crate::config::RunConfig;
 use crate::coordinator::{self, Aggregate, RunResult};
 use crate::engine::{build_engine, ComputeEngine, EngineKind};
 use crate::model::TaskSpec;
 use crate::net::NetworkSpec;
+use crate::strategy::StrategySpec;
 
 /// The axis coordinates of one grid cell.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CellSpec {
     /// Learning task of the cell (registry spec).
     pub task: TaskSpec,
-    /// Coordination algorithm of the cell.
-    pub algo: Algo,
+    /// Interval-decision strategy of the cell (registry spec).
+    pub strategy: StrategySpec,
     /// Fleet size of the cell.
     pub n_edges: usize,
     /// Heterogeneity ratio of the cell.
@@ -52,7 +53,7 @@ pub struct ExperimentSuite {
     name: String,
     base: RunConfig,
     tasks: Vec<TaskSpec>,
-    algos: Vec<Algo>,
+    strategies: Vec<StrategySpec>,
     fleet_sizes: Vec<usize>,
     heteros: Vec<f64>,
     networks: Vec<NetworkSpec>,
@@ -70,7 +71,7 @@ impl ExperimentSuite {
             name: name.into(),
             base,
             tasks: Vec::new(),
-            algos: Vec::new(),
+            strategies: Vec::new(),
             fleet_sizes: Vec::new(),
             heteros: Vec::new(),
             networks: Vec::new(),
@@ -93,9 +94,10 @@ impl ExperimentSuite {
         self
     }
 
-    /// Sweep axis: coordination algorithms.
-    pub fn algos(mut self, algos: impl IntoIterator<Item = Algo>) -> Self {
-        self.algos = algos.into_iter().collect();
+    /// Sweep axis: interval-decision strategies (registry specs, e.g.
+    /// `StrategySpec::parse("ol4el:bandit=kube")?`).
+    pub fn strategies(mut self, specs: impl IntoIterator<Item = StrategySpec>) -> Self {
+        self.strategies = specs.into_iter().collect();
         self
     }
 
@@ -149,30 +151,34 @@ impl ExperimentSuite {
         self
     }
 
-    /// Materialize the grid (task-major, then algo, fleet size, hetero,
-    /// network).
+    /// Materialize the grid (task-major, then strategy, fleet size,
+    /// hetero, network).
     pub fn cells(&self) -> Vec<(CellSpec, RunConfig)> {
         let one_task = [self.base.task.clone()];
-        let one_algo = [self.base.algo];
+        let one_strategy = [self.base.strategy.clone()];
         let one_n = [self.base.n_edges];
         let one_h = [self.base.hetero];
         let one_net = [self.base.network.clone()];
         let tasks: &[TaskSpec] = if self.tasks.is_empty() { &one_task } else { &self.tasks };
-        let algos: &[Algo] = if self.algos.is_empty() { &one_algo } else { &self.algos };
+        let strategies: &[StrategySpec] = if self.strategies.is_empty() {
+            &one_strategy
+        } else {
+            &self.strategies
+        };
         let ns: &[usize] = if self.fleet_sizes.is_empty() { &one_n } else { &self.fleet_sizes };
         let hs: &[f64] = if self.heteros.is_empty() { &one_h } else { &self.heteros };
         let nets: &[NetworkSpec] = if self.networks.is_empty() { &one_net } else { &self.networks };
 
-        let cap = tasks.len() * algos.len() * ns.len() * hs.len() * nets.len();
+        let cap = tasks.len() * strategies.len() * ns.len() * hs.len() * nets.len();
         let mut cells = Vec::with_capacity(cap);
         for task in tasks {
-            for &algo in algos {
+            for strategy in strategies {
                 for &n_edges in ns {
                     for &hetero in hs {
                         for net in nets {
                             let mut cfg = self.base.clone();
                             cfg.task = task.clone();
-                            cfg.algo = algo;
+                            cfg.strategy = strategy.clone();
                             cfg.n_edges = n_edges;
                             cfg.hetero = hetero;
                             cfg.network = net.clone();
@@ -181,7 +187,7 @@ impl ExperimentSuite {
                             }
                             let spec = CellSpec {
                                 task: cfg.task.clone(),
-                                algo: cfg.algo,
+                                strategy: cfg.strategy.clone(),
                                 n_edges: cfg.n_edges,
                                 hetero: cfg.hetero,
                             };
@@ -309,13 +315,13 @@ impl ExperimentSuite {
 pub fn find_outcome<'a>(
     outcomes: &'a [SuiteOutcome],
     task: &TaskSpec,
-    algo: Algo,
+    strategy: &StrategySpec,
     n_edges: usize,
     hetero: f64,
 ) -> Option<&'a SuiteOutcome> {
     outcomes.iter().find(|o| {
         o.spec.task == *task
-            && o.spec.algo == algo
+            && o.spec.strategy == *strategy
             && o.spec.n_edges == n_edges
             && o.spec.hetero == hetero
     })
@@ -327,14 +333,14 @@ pub fn find_outcome<'a>(
 pub fn find_outcome_net<'a>(
     outcomes: &'a [SuiteOutcome],
     task: &TaskSpec,
-    algo: Algo,
+    strategy: &StrategySpec,
     n_edges: usize,
     hetero: f64,
     network: &NetworkSpec,
 ) -> Option<&'a SuiteOutcome> {
     outcomes.iter().find(|o| {
         o.spec.task == *task
-            && o.spec.algo == algo
+            && o.spec.strategy == *strategy
             && o.spec.n_edges == n_edges
             && o.spec.hetero == hetero
             && &o.cfg.network == network
@@ -359,16 +365,16 @@ mod tests {
     fn cells_cross_product_in_declared_order() {
         let suite = ExperimentSuite::new("t", small_base())
             .tasks([TaskSpec::kmeans(), TaskSpec::svm()])
-            .algos([Algo::Ol4elSync, Algo::Ol4elAsync])
+            .strategies([StrategySpec::ol4el_sync(), StrategySpec::ol4el_async()])
             .heteros([1.0, 5.0]);
         let cells = suite.cells();
         assert_eq!(cells.len(), 8);
         assert_eq!(cells[0].0.task, TaskSpec::kmeans());
-        assert_eq!(cells[0].0.algo, Algo::Ol4elSync);
+        assert_eq!(cells[0].0.strategy, StrategySpec::ol4el_sync());
         assert_eq!(cells[0].0.hetero, 1.0);
         assert_eq!(cells[1].0.hetero, 5.0);
         assert_eq!(cells[7].0.task, TaskSpec::svm());
-        assert_eq!(cells[7].0.algo, Algo::Ol4elAsync);
+        assert_eq!(cells[7].0.strategy, StrategySpec::ol4el_async());
     }
 
     #[test]
@@ -393,7 +399,7 @@ mod tests {
     #[test]
     fn suite_runs_cells_across_seeds_deterministically() {
         let suite = ExperimentSuite::new("t", small_base())
-            .algos([Algo::Ol4elSync, Algo::Ol4elAsync])
+            .strategies([StrategySpec::ol4el_sync(), StrategySpec::ol4el_async()])
             .seeds([1, 2])
             .retain_runs(true)
             .workers(2);
@@ -486,13 +492,14 @@ mod tests {
         let outs = suite.run_native().unwrap();
         assert_eq!(outs.len(), 2);
         // The plain lookup cannot tell the two cells apart (first wins)...
-        let first = find_outcome(&outs, &TaskSpec::svm(), Algo::Ol4elAsync, 3, 1.0).unwrap();
+        let ol4el = StrategySpec::ol4el_async();
+        let first = find_outcome(&outs, &TaskSpec::svm(), &ol4el, 3, 1.0).unwrap();
         assert!(first.cfg.network.is_ideal());
         // ...the net-aware lookup addresses each condition exactly.
-        let slow = find_outcome_net(&outs, &TaskSpec::svm(), Algo::Ol4elAsync, 3, 1.0, &fixed).unwrap();
+        let slow = find_outcome_net(&outs, &TaskSpec::svm(), &ol4el, 3, 1.0, &fixed).unwrap();
         assert_eq!(slow.cfg.network, fixed);
         assert!(
-            find_outcome_net(&outs, &TaskSpec::svm(), Algo::Ol4elAsync, 3, 1.0, &NetworkSpec::ideal())
+            find_outcome_net(&outs, &TaskSpec::svm(), &ol4el, 3, 1.0, &NetworkSpec::ideal())
                 .unwrap()
                 .cfg
                 .network
@@ -504,7 +511,8 @@ mod tests {
     fn find_outcome_locates_cells() {
         let suite = ExperimentSuite::new("t", small_base()).heteros([1.0, 2.0]);
         let outs = suite.run_native().unwrap();
-        assert!(find_outcome(&outs, &TaskSpec::svm(), Algo::Ol4elAsync, 3, 2.0).is_some());
-        assert!(find_outcome(&outs, &TaskSpec::svm(), Algo::Ol4elAsync, 3, 9.0).is_none());
+        let ol4el = StrategySpec::ol4el_async();
+        assert!(find_outcome(&outs, &TaskSpec::svm(), &ol4el, 3, 2.0).is_some());
+        assert!(find_outcome(&outs, &TaskSpec::svm(), &ol4el, 3, 9.0).is_none());
     }
 }

@@ -14,8 +14,8 @@ use anyhow::Result;
 
 use crate::coordinator::observer::{LocalReport, RunEvent};
 use crate::coordinator::session::{CollaborationMode, Session};
-use crate::coordinator::RoundObservation;
 use crate::model::{Learner as _, ModelState};
+use crate::strategy::RoundObservation;
 
 /// Barrier-round scheduling + weighted-average merging.
 #[derive(Debug, Default)]
@@ -168,14 +168,15 @@ impl CollaborationMode for SyncBarrier {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{Algo, RunConfig};
+    use crate::config::RunConfig;
     use crate::coordinator::run;
     use crate::engine::native::NativeEngine;
     use crate::model::TaskSpec;
+    use crate::strategy::StrategySpec;
 
-    fn cfg(algo: Algo, task: TaskSpec) -> RunConfig {
+    fn cfg(strategy: StrategySpec, task: TaskSpec) -> RunConfig {
         RunConfig {
-            algo,
+            strategy,
             task,
             data_n: 4000,
             budget: 1500.0,
@@ -188,7 +189,7 @@ mod tests {
     #[test]
     fn sync_run_consumes_budget_and_updates() {
         let engine = NativeEngine::default();
-        let r = run(&cfg(Algo::Ol4elSync, TaskSpec::svm()), &engine).unwrap();
+        let r = run(&cfg(StrategySpec::ol4el_sync(), TaskSpec::svm()), &engine).unwrap();
         assert!(r.total_updates > 0, "no global updates happened");
         assert!(r.mean_spent > 0.0);
         assert!(r.mean_spent <= 1500.0 + 400.0, "overdraft too large");
@@ -199,7 +200,7 @@ mod tests {
     #[test]
     fn sync_budgets_never_overdraw_beyond_one_round() {
         let engine = NativeEngine::default();
-        let c = cfg(Algo::Ol4elSync, TaskSpec::kmeans());
+        let c = cfg(StrategySpec::ol4el_sync(), TaskSpec::kmeans());
         let r = run(&c, &engine).unwrap();
         // Ledger can exceed budget by at most one barrier round (the last).
         let max_round = c.cost.nominal_arm_cost(c.tau_max, c.hetero.max(1.0));
@@ -209,7 +210,7 @@ mod tests {
     #[test]
     fn sync_improves_over_untrained() {
         let engine = NativeEngine::default();
-        let r = run(&cfg(Algo::Ol4elSync, TaskSpec::svm()), &engine).unwrap();
+        let r = run(&cfg(StrategySpec::ol4el_sync(), TaskSpec::svm()), &engine).unwrap();
         let first = r.trace.first().unwrap().metric;
         assert!(
             r.final_metric > first + 0.1,
@@ -221,7 +222,7 @@ mod tests {
     #[test]
     fn fixed_i_baseline_runs() {
         let engine = NativeEngine::default();
-        let r = run(&cfg(Algo::FixedI, TaskSpec::svm()), &engine).unwrap();
+        let r = run(&cfg(StrategySpec::fixed_i(), TaskSpec::svm()), &engine).unwrap();
         assert!(r.total_updates > 0);
         // Fixed-I only ever pulls one arm.
         let nonzero: Vec<usize> = r
@@ -237,7 +238,7 @@ mod tests {
     #[test]
     fn heterogeneity_reduces_sync_updates() {
         let engine = NativeEngine::default();
-        let mut lo = cfg(Algo::Ol4elSync, TaskSpec::svm());
+        let mut lo = cfg(StrategySpec::ol4el_sync(), TaskSpec::svm());
         lo.hetero = 1.0;
         let mut hi = lo.clone();
         hi.hetero = 10.0;
@@ -261,7 +262,7 @@ mod tests {
         let reports = Rc::new(Cell::new(0u64));
         let rounds = Rc::new(Cell::new(0u64));
         let (rp, rd) = (reports.clone(), rounds.clone());
-        let mut session = Session::new(&cfg(Algo::Ol4elSync, TaskSpec::svm()), &engine).unwrap();
+        let mut session = Session::new(&cfg(StrategySpec::ol4el_sync(), TaskSpec::svm()), &engine).unwrap();
         session.observe(from_fn(move |ev| match ev {
             crate::coordinator::RunEvent::LocalReport { .. } => rp.set(rp.get() + 1),
             crate::coordinator::RunEvent::RoundStart { edge: None, .. } => rd.set(rd.get() + 1),

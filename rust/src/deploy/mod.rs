@@ -18,7 +18,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::config::RunConfig;
-use crate::coordinator::{aggregate, build_strategy, utility::UtilityMeter, World};
+use crate::coordinator::{aggregate, utility::UtilityMeter, World};
+use crate::strategy::{self, Strategy};
 use crate::engine::native::NativeEngine;
 use crate::engine::ComputeEngine;
 use crate::model::{Learner as _, ModelState};
@@ -72,7 +73,7 @@ pub struct DeployResult {
 pub fn run_threaded(cfg: &RunConfig, leader_engine: &dyn ComputeEngine) -> Result<DeployResult> {
     let t_start = Instant::now();
     let mut world = World::build(cfg, leader_engine)?;
-    let mut strategy = build_strategy(cfg, &world.slowdowns);
+    let mut strategy = strategy::build(cfg, &world.slowdowns)?;
     let mut meter = UtilityMeter::new(cfg.utility);
     let n = world.edges.len();
 
@@ -208,7 +209,7 @@ pub fn run_threaded(cfg: &RunConfig, leader_engine: &dyn ComputeEngine) -> Resul
 fn dispatch(
     cfg: &RunConfig,
     world: &mut World,
-    strategy: &mut dyn crate::coordinator::IntervalStrategy,
+    strategy: &mut dyn Strategy,
     cmd_txs: &[mpsc::Sender<Command>],
     active: &mut [bool],
     i: usize,
@@ -232,6 +233,7 @@ fn dispatch(
         None => {
             active[i] = false;
             world.edges[i].retired = true;
+            strategy.on_edge_retired(i);
             let _ = cmd_txs[i].send(Command::Retire);
         }
     }
@@ -241,14 +243,12 @@ fn dispatch(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Algo;
     use crate::model::TaskSpec;
     use crate::sim::cost::{CostMode, CostModel};
 
     fn cfg() -> RunConfig {
         RunConfig {
             task: TaskSpec::svm(),
-            algo: Algo::Ol4elAsync,
             n_edges: 3,
             hetero: 3.0,
             // Measured wall-clock budgets: native steps run in tens of µs,

@@ -12,14 +12,12 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::config::{Algo, RunConfig};
+use crate::config::RunConfig;
 use crate::coordinator::{find_outcome, ExperimentSuite, SuiteOutcome};
-use crate::harness::SweepOpts;
+use crate::harness::{paper_strategies, SweepOpts};
 use crate::model::{Learner as _, TaskSpec};
+use crate::strategy::StrategySpec;
 use crate::util::table::{f, Table};
-
-/// The four algorithms every figure compares.
-pub const ALGOS: [Algo; 4] = [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::AcSync, Algo::FixedI];
 
 /// Heterogeneity ratios swept (H axis).
 pub fn hetero_grid(quick: bool) -> Vec<f64> {
@@ -31,10 +29,10 @@ pub fn hetero_grid(quick: bool) -> Vec<f64> {
 }
 
 /// The config for one Fig. 3 cell.
-pub fn cell_config(task: &TaskSpec, algo: Algo, h: f64, opts: &SweepOpts) -> RunConfig {
+pub fn cell_config(task: &TaskSpec, strategy: &StrategySpec, h: f64, opts: &SweepOpts) -> RunConfig {
     RunConfig {
         task: task.clone(),
-        algo,
+        strategy: strategy.clone(),
         n_edges: 3,
         hetero: h,
         budget: 5000.0,
@@ -44,26 +42,32 @@ pub fn cell_config(task: &TaskSpec, algo: Algo, h: f64, opts: &SweepOpts) -> Run
     .with_paper_utility()
 }
 
-/// The Fig. 3 grid: tasks × algorithms × heterogeneity, every cell built
+/// The Fig. 3 grid: tasks × strategies × heterogeneity, every cell built
 /// by [`cell_config`].
 pub fn suite(opts: &SweepOpts) -> ExperimentSuite {
     let o = opts.clone();
-    ExperimentSuite::new("fig3", cell_config(&TaskSpec::kmeans(), ALGOS[0], 1.0, opts))
-        .tasks([TaskSpec::kmeans(), TaskSpec::svm()])
-        .algos(ALGOS)
-        .heteros(hetero_grid(opts.quick))
-        .seeds(opts.seed_list())
-        .configure(move |cfg| *cfg = cell_config(&cfg.task.clone(), cfg.algo, cfg.hetero, &o))
+    let strategies = paper_strategies();
+    ExperimentSuite::new(
+        "fig3",
+        cell_config(&TaskSpec::kmeans(), &strategies[0], 1.0, opts),
+    )
+    .tasks([TaskSpec::kmeans(), TaskSpec::svm()])
+    .strategies(strategies)
+    .heteros(hetero_grid(opts.quick))
+    .seeds(opts.seed_list())
+    .configure(move |cfg| {
+        *cfg = cell_config(&cfg.task.clone(), &cfg.strategy.clone(), cfg.hetero, &o)
+    })
 }
 
 fn cell<'a>(
     outs: &'a [SuiteOutcome],
     task: &TaskSpec,
-    algo: Algo,
+    strategy: &StrategySpec,
     h: f64,
 ) -> Result<&'a SuiteOutcome> {
-    find_outcome(outs, task, algo, 3, h)
-        .ok_or_else(|| anyhow!("fig3: missing cell {task}/{algo:?}/H={h}"))
+    find_outcome(outs, task, strategy, 3, h)
+        .ok_or_else(|| anyhow!("fig3: missing cell {task}/{strategy}/H={h}"))
 }
 
 /// Run the full sweep; returns one table per task plus the headline-gap
@@ -88,8 +92,8 @@ pub fn run(opts: &SweepOpts) -> Result<Vec<Table>> {
         for &h in &grid {
             let mut row = vec![f(h, 0)];
             let mut cells = Vec::new();
-            for algo in ALGOS {
-                cells.push(cell(&outcomes, &task, algo, h)?.agg.metric.mean());
+            for strategy in paper_strategies() {
+                cells.push(cell(&outcomes, &task, &strategy, h)?.agg.metric.mean());
             }
             let baseline_best = cells[2].max(cells[3]);
             let gap = cells[1] - baseline_best;
@@ -133,7 +137,7 @@ mod tests {
 
     #[test]
     fn cell_config_matches_paper_regime() {
-        let cfg = cell_config(&TaskSpec::svm(), Algo::AcSync, 6.0, &SweepOpts::default());
+        let cfg = cell_config(&TaskSpec::svm(), &StrategySpec::ac_sync(), 6.0, &SweepOpts::default());
         assert_eq!(cfg.n_edges, 3);
         assert_eq!(cfg.budget, 5000.0);
         assert_eq!(cfg.hetero, 6.0);
@@ -143,9 +147,9 @@ mod tests {
     fn suite_grid_matches_cell_config() {
         let opts = SweepOpts::default();
         let cells = suite(&opts).cells();
-        assert_eq!(cells.len(), 2 * ALGOS.len() * hetero_grid(true).len());
+        assert_eq!(cells.len(), 2 * paper_strategies().len() * hetero_grid(true).len());
         for (spec, cfg) in &cells {
-            let expect = cell_config(&spec.task, spec.algo, spec.hetero, &opts);
+            let expect = cell_config(&spec.task, &spec.strategy, spec.hetero, &opts);
             assert_eq!(cfg.n_edges, expect.n_edges);
             assert_eq!(cfg.budget, expect.budget);
             assert_eq!(cfg.partition, expect.partition);

@@ -12,23 +12,22 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::config::{Algo, RunConfig};
+use crate::config::RunConfig;
 use crate::coordinator::{self, find_outcome, ExperimentSuite};
-use crate::harness::SweepOpts;
+use crate::harness::{paper_strategies, SweepOpts};
 use crate::model::{Learner as _, TaskSpec};
+use crate::strategy::StrategySpec;
 use crate::util::stats::Welford;
 use crate::util::table::{f, Table};
 
-/// The four algorithms every figure compares.
-pub const ALGOS: [Algo; 4] = [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::AcSync, Algo::FixedI];
 /// Fixed heterogeneity ratio of the Fig. 4 scenario.
 pub const HETERO: f64 = 6.0;
 
-/// The run config of one (task, algo) cell.
-pub fn cell_config(task: &TaskSpec, algo: Algo, opts: &SweepOpts) -> RunConfig {
+/// The run config of one (task, strategy) cell.
+pub fn cell_config(task: &TaskSpec, strategy: &StrategySpec, opts: &SweepOpts) -> RunConfig {
     RunConfig {
         task: task.clone(),
-        algo,
+        strategy: strategy.clone(),
         n_edges: 3,
         hetero: HETERO,
         budget: 5000.0,
@@ -38,17 +37,18 @@ pub fn cell_config(task: &TaskSpec, algo: Algo, opts: &SweepOpts) -> RunConfig {
     .with_paper_utility()
 }
 
-/// The Fig. 4 grid: tasks × algorithms at H = 6.
+/// The Fig. 4 grid: tasks × strategies at H = 6.
 pub fn suite(opts: &SweepOpts) -> ExperimentSuite {
     let o = opts.clone();
-    ExperimentSuite::new("fig4", cell_config(&TaskSpec::kmeans(), ALGOS[0], opts))
+    let strategies = paper_strategies();
+    ExperimentSuite::new("fig4", cell_config(&TaskSpec::kmeans(), &strategies[0], opts))
         .tasks([TaskSpec::kmeans(), TaskSpec::svm()])
-        .algos(ALGOS)
+        .strategies(strategies)
         .seeds(opts.seed_list())
         // Fig. 4 resamples full traces onto the consumption grid, so the
         // per-seed RunResults must be kept.
         .retain_runs(true)
-        .configure(move |cfg| *cfg = cell_config(&cfg.task.clone(), cfg.algo, &o))
+        .configure(move |cfg| *cfg = cell_config(&cfg.task.clone(), &cfg.strategy.clone(), &o))
 }
 
 /// Metric of a trace at consumption level `x` (step interpolation — the
@@ -78,10 +78,11 @@ pub fn run(opts: &SweepOpts) -> Result<Vec<Table>> {
     let grid = consumption_grid(5000.0, if opts.quick { 8 } else { 16 });
     let mut tables = Vec::new();
 
+    let strategies = paper_strategies();
     for task in [TaskSpec::kmeans(), TaskSpec::svm()] {
         let metric_name = task.learner().metric_name();
         let mut header: Vec<String> = vec!["consumed_ms".into()];
-        header.extend(ALGOS.iter().map(|a| a.name().to_string()));
+        header.extend(strategies.iter().map(|s| s.label()));
         let mut t = Table::new(
             format!(
                 "Fig 4 ({}): {} vs mean edge resource consumption (H=6)",
@@ -91,11 +92,12 @@ pub fn run(opts: &SweepOpts) -> Result<Vec<Table>> {
             &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
         );
 
-        // curves[algo][grid_idx] = Welford over seeds
-        let mut curves: Vec<Vec<Welford>> = vec![vec![Welford::new(); grid.len()]; ALGOS.len()];
-        for (ai, algo) in ALGOS.iter().enumerate() {
-            let outcome = find_outcome(&outcomes, &task, *algo, 3, HETERO)
-                .ok_or_else(|| anyhow!("fig4: missing cell {task}/{algo:?}"))?;
+        // curves[strategy][grid_idx] = Welford over seeds
+        let mut curves: Vec<Vec<Welford>> =
+            vec![vec![Welford::new(); grid.len()]; strategies.len()];
+        for (ai, strategy) in strategies.iter().enumerate() {
+            let outcome = find_outcome(&outcomes, &task, strategy, 3, HETERO)
+                .ok_or_else(|| anyhow!("fig4: missing cell {task}/{strategy}"))?;
             for run in &outcome.runs {
                 for (gi, &x) in grid.iter().enumerate() {
                     curves[ai][gi].push(metric_at(&run.trace, x));
@@ -146,9 +148,9 @@ mod tests {
     }
 
     #[test]
-    fn suite_covers_tasks_and_algos() {
+    fn suite_covers_tasks_and_strategies() {
         let cells = suite(&SweepOpts::default()).cells();
-        assert_eq!(cells.len(), 2 * ALGOS.len());
+        assert_eq!(cells.len(), 2 * paper_strategies().len());
         assert!(cells.iter().all(|(s, c)| s.hetero == HETERO && c.budget == 5000.0));
     }
 }

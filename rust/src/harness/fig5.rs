@@ -10,10 +10,11 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::config::{Algo, RunConfig};
+use crate::config::RunConfig;
 use crate::coordinator::{find_outcome, ExperimentSuite};
 use crate::harness::SweepOpts;
 use crate::model::{Learner as _, TaskSpec};
+use crate::strategy::StrategySpec;
 use crate::util::table::{f, Table};
 
 /// Fleet sizes swept (N axis).
@@ -34,11 +35,17 @@ pub fn h_grid(quick: bool) -> Vec<f64> {
     }
 }
 
-/// The run config of one (task, algo, N, H) cell.
-pub fn cell_config(task: &TaskSpec, algo: Algo, n: usize, h: f64, opts: &SweepOpts) -> RunConfig {
+/// The run config of one (task, strategy, N, H) cell.
+pub fn cell_config(
+    task: &TaskSpec,
+    strategy: &StrategySpec,
+    n: usize,
+    h: f64,
+    opts: &SweepOpts,
+) -> RunConfig {
     RunConfig {
         task: task.clone(),
-        algo,
+        strategy: strategy.clone(),
         n_edges: n,
         hetero: h,
         // Simulation regime: unit-cost clock; same budget for every cell.
@@ -53,15 +60,24 @@ pub fn cell_config(task: &TaskSpec, algo: Algo, n: usize, h: f64, opts: &SweepOp
 /// with `data_n` scaled to the fleet by [`cell_config`].
 pub fn suite(opts: &SweepOpts) -> ExperimentSuite {
     let o = opts.clone();
-    ExperimentSuite::new("fig5", cell_config(&TaskSpec::kmeans(), Algo::Ol4elAsync, 3, 1.0, opts))
-        .tasks([TaskSpec::kmeans(), TaskSpec::svm()])
-        .algos([Algo::Ol4elAsync, Algo::Ol4elSync])
-        .fleet_sizes(n_grid(opts.quick))
-        .heteros(h_grid(opts.quick))
-        .seeds(opts.seed_list())
-        .configure(move |cfg| {
-            *cfg = cell_config(&cfg.task.clone(), cfg.algo, cfg.n_edges, cfg.hetero, &o)
-        })
+    ExperimentSuite::new(
+        "fig5",
+        cell_config(&TaskSpec::kmeans(), &StrategySpec::ol4el_async(), 3, 1.0, opts),
+    )
+    .tasks([TaskSpec::kmeans(), TaskSpec::svm()])
+    .strategies([StrategySpec::ol4el_async(), StrategySpec::ol4el_sync()])
+    .fleet_sizes(n_grid(opts.quick))
+    .heteros(h_grid(opts.quick))
+    .seeds(opts.seed_list())
+    .configure(move |cfg| {
+        *cfg = cell_config(
+            &cfg.task.clone(),
+            &cfg.strategy.clone(),
+            cfg.n_edges,
+            cfg.hetero,
+            &o,
+        )
+    })
 }
 
 /// Run the sweep and render its tables.
@@ -91,10 +107,12 @@ pub fn run(opts: &SweepOpts) -> Result<Vec<Table>> {
         );
         for &n in &ns {
             let mut row = vec![n.to_string()];
-            for algo in [Algo::Ol4elAsync, Algo::Ol4elSync] {
+            for strategy in [StrategySpec::ol4el_async(), StrategySpec::ol4el_sync()] {
                 for &h in &hs {
-                    let outcome = find_outcome(&outcomes, &task, algo, n, h)
-                        .ok_or_else(|| anyhow!("fig5: missing cell {task}/{algo:?}/N={n}/H={h}"))?;
+                    let outcome = find_outcome(&outcomes, &task, &strategy, n, h)
+                        .ok_or_else(|| {
+                            anyhow!("fig5: missing cell {task}/{strategy}/N={n}/H={h}")
+                        })?;
                     row.push(f(outcome.agg.metric.mean(), 4));
                 }
             }
@@ -122,7 +140,7 @@ mod tests {
     fn cell_config_scales_data_with_fleet() {
         let cfg = cell_config(
             &TaskSpec::svm(),
-            Algo::Ol4elAsync,
+            &StrategySpec::ol4el_async(),
             100,
             15.0,
             &SweepOpts::default(),

@@ -11,9 +11,10 @@
 
 use anyhow::Result;
 
-use crate::config::{Algo, RunConfig};
+use crate::config::RunConfig;
 use crate::harness::SweepOpts;
 use crate::net::{ChurnSpec, FleetSim, NetworkSpec};
+use crate::strategy::StrategySpec;
 use crate::util::stats::Welford;
 use crate::util::table::{f, Table};
 
@@ -60,9 +61,9 @@ fn sim_with_shards(cfg: RunConfig, shards: usize) -> Result<FleetSim> {
 }
 
 /// The base fleet config for one cell.
-pub fn cell_config(n: usize, algo: Algo) -> RunConfig {
+pub fn cell_config(n: usize, strategy: StrategySpec) -> RunConfig {
     RunConfig {
-        algo,
+        strategy,
         n_edges: n,
         hetero: 4.0,
         budget: 3000.0,
@@ -100,7 +101,7 @@ pub fn run(opts: &SweepOpts) -> Result<Vec<Table>> {
                 let mut sync_updates = Welford::new();
                 let mut evps = Welford::new();
                 for seed in opts.seed_list() {
-                    let mut cfg = cell_config(n, Algo::Ol4elAsync);
+                    let mut cfg = cell_config(n, StrategySpec::ol4el_async());
                     cfg.network = net.clone();
                     cfg.churn = churn.clone();
                     cfg.seed = seed;
@@ -111,7 +112,7 @@ pub fn run(opts: &SweepOpts) -> Result<Vec<Table>> {
                     wall.push(r.wall_ms / 1000.0);
                     evps.push(r.events_per_sec());
                     let mut scfg = cfg;
-                    scfg.algo = Algo::Ol4elSync;
+                    scfg.strategy = StrategySpec::ol4el_sync();
                     let rs = sim_with_shards(scfg, opts.shards)?.run()?;
                     sync_updates.push(rs.updates as f64);
                 }
@@ -156,7 +157,7 @@ mod tests {
         let mut rows = 0;
         for (_, net) in network_grid() {
             for (_, churn) in churn_grid() {
-                let mut cfg = cell_config(50, Algo::Ol4elAsync);
+                let mut cfg = cell_config(50, StrategySpec::ol4el_async());
                 cfg.budget = 800.0;
                 cfg.network = net.clone();
                 cfg.churn = churn.clone();

@@ -16,6 +16,18 @@ use anyhow::Result;
 use crate::config::RunConfig;
 use crate::coordinator;
 use crate::engine::ComputeEngine;
+use crate::strategy::StrategySpec;
+
+/// The four strategies every paper figure compares (§V-A): the two OL4EL
+/// manners plus the AC-sync and Fixed-I baselines.
+pub fn paper_strategies() -> [StrategySpec; 4] {
+    [
+        StrategySpec::ol4el_sync(),
+        StrategySpec::ol4el_async(),
+        StrategySpec::ac_sync(),
+        StrategySpec::fixed_i(),
+    ]
+}
 
 // Engine selection lives with the engines and the aggregate shape with the
 // coordinator; re-exported here because harness/bench call sites

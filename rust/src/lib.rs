@@ -26,6 +26,20 @@
 //! fused AOT kernels keyed by learner name in the PJRT artifact
 //! manifest.
 //!
+//! ## The strategy layer
+//!
+//! Interval-decision policies are plugins too: an object-safe
+//! [`Strategy`](strategy::Strategy) decides each edge's global-update
+//! interval τ, observes reward/cost, reacts to joins/retirements, and
+//! declares its collaboration manner, resolved by name through the
+//! strategy registry ([`StrategySpec`](strategy::StrategySpec), grammar
+//! `NAME[:KEY=V]*` — `ol4el:bandit=kube:eps=0.1`, `fixed-i:i=8`,
+//! `ac-sync`, `greedy-budget`, or anything added via
+//! [`strategy::register`]). The paper's budget-limited bandits (`bandit/`)
+//! back the `ol4el` strategy; the baselines and the deadline-aware
+//! `greedy-budget` policy register through the same factory path an
+//! out-of-tree strategy would use.
+//!
 //! ## The run API
 //!
 //! Runs are composed, not dispatched: an
@@ -98,7 +112,6 @@
 #![warn(missing_docs)]
 
 pub mod bandit;
-pub mod baselines;
 pub mod config;
 pub mod coordinator;
 pub mod data;
@@ -111,5 +124,6 @@ pub mod model;
 pub mod net;
 pub mod runtime;
 pub mod sim;
+pub mod strategy;
 pub mod testkit;
 pub mod util;

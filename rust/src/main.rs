@@ -4,7 +4,7 @@
 
 use anyhow::{anyhow, Result};
 
-use ol4el::config::{Algo, BanditKind, PartitionKind, RunConfig};
+use ol4el::config::{legacy_strategy, PartitionKind, RunConfig};
 use ol4el::coordinator::observer::from_fn;
 use ol4el::coordinator::utility::UtilityKind;
 use ol4el::coordinator::{ExperimentBuilder, RunEvent};
@@ -13,7 +13,8 @@ use ol4el::model::{Learner as _, TaskSpec};
 use ol4el::net::{ChurnSpec, FleetSim, NetworkSpec};
 use ol4el::sim::cost::CostMode;
 use ol4el::sim::hetero::HeteroProfile;
-use ol4el::util::cli::{Args, Cli};
+use ol4el::strategy::StrategySpec;
+use ol4el::util::cli::{Args, Cli, BANDIT_GRAMMAR, STRATEGY_GRAMMAR};
 use ol4el::util::json::Json;
 use ol4el::util::table::{f, Table};
 
@@ -40,6 +41,8 @@ fn usage() -> String {
                                (message-passing transport, network + churn models)\n\
            fig3 .. fig6        regenerate a figure (tables + results/*.csv)\n\
            bench-tasks         per-task step/event throughput (BENCH_tasks.json)\n\
+           bench-strategies    per-strategy decision-loop throughput\n\
+                               (BENCH_strategies.json)\n\
            inspect-artifacts   show the AOT artifact manifest and PJRT platform\n\
            config              print the default config as JSON (edit + pass via --config)\n\
          \n\
@@ -61,6 +64,7 @@ fn run_cli(argv: &[String]) -> Result<()> {
         "fleet" => cmd_fleet(rest),
         "fig3" | "fig4" | "fig5" | "fig6" => cmd_fig(cmd, rest),
         "bench-tasks" => cmd_bench_tasks(rest),
+        "bench-strategies" => cmd_bench_strategies(rest),
         "inspect-artifacts" => cmd_inspect(rest),
         "config" => {
             println!("{}", RunConfig::default().to_json().pretty());
@@ -82,12 +86,17 @@ fn train_cli() -> Cli {
             "task spec: svm | kmeans | logreg | gmm, parameterized NAME[:KEY=N]* \
              (e.g. kmeans:k=5, logreg:d=59:c=8, gmm:k=3; see the grammar below)",
         )
-        .opt("algo", "ol4el-async", "ol4el-sync | ol4el-async | ac-sync | fixed-i")
+        .opt_no_default("strategy", STRATEGY_GRAMMAR)
+        .opt(
+            "algo",
+            "ol4el-async",
+            "legacy alias of --strategy: ol4el-sync | ol4el-async | ac-sync | fixed-i",
+        )
         .opt("edges", "3", "number of edge servers")
         .opt("hetero", "1.0", "heterogeneity ratio H (>= 1)")
         .opt("hetero-profile", "linear", "linear | random")
         .opt("budget", "5000", "per-edge resource budget (ms)")
-        .opt("cost-mode", "fixed", "fixed | variable | measured")
+        .opt("cost-mode", "fixed", "fixed | variable[:CV] | measured")
         .opt("base-comp", "40", "nominal compute ms per local iteration")
         .opt("base-comm", "60", "nominal communication ms per global update")
         .opt("tau-max", "10", "longest global update interval (arm count)")
@@ -95,13 +104,12 @@ fn train_cli() -> Cli {
         .opt("reg", "0.0001", "L2 regularization")
         .opt("lr-decay", "0.02", "per-global-update learning-rate decay")
         .opt("utility", "eval", "eval | delta (learning utility definition)")
+        .opt("bandit", "auto", BANDIT_GRAMMAR)
         .opt(
-            "bandit",
-            "auto",
-            "auto | kube[:EPS] | ucb-bv | ucb1 | eps-greedy[:EPS] | thompson; \
-             EPS = exploration rate in [0,1], default 0.1 (e.g. kube:0.2)",
+            "fixed-interval",
+            "5",
+            "legacy alias: interval for the fixed-i baseline (spec form: fixed-i:i=N)",
         )
-        .opt("fixed-interval", "5", "interval for the fixed-i baseline")
         .opt(
             "partition",
             "iid",
@@ -136,6 +144,30 @@ fn train_cli() -> Cli {
         .switch("json", "emit the result as JSON")
 }
 
+/// Resolve the strategy spec from the CLI flag set: `--strategy` wins;
+/// otherwise the legacy `--algo` / `--bandit` / `--fixed-interval` alias
+/// trio composes the same canonical spec the JSON wire fields would.
+fn strategy_from_args(a: &Args) -> Result<StrategySpec> {
+    if let Some(spec) = a.get("strategy") {
+        return StrategySpec::parse(spec)
+            .map_err(|e| anyhow!("bad --strategy '{spec}': {e} (grammar: {STRATEGY_GRAMMAR})"));
+    }
+    let algo = a.str("algo");
+    let bandit = a.str("bandit");
+    let fixed = a.usize("fixed-interval").map_err(|e| anyhow!(e))?;
+    // The legacy flag trio stays exactly as strict as the enum-era CLI:
+    // an out-of-range --fixed-interval fails for every --algo, even the
+    // ones that discard it.
+    let tau_max = a.usize("tau-max").map_err(|e| anyhow!(e))?;
+    if fixed == 0 || fixed > tau_max {
+        return Err(anyhow!(
+            "--fixed-interval must be in 1..=tau-max ({tau_max})"
+        ));
+    }
+    legacy_strategy(&algo, Some(&bandit), Some(fixed))
+        .map_err(|e| anyhow!("{e} (bandit grammar: {BANDIT_GRAMMAR})"))
+}
+
 /// Assemble an [`ExperimentBuilder`] from the CLI flag set. `--config`
 /// seeds the builder from the JSON wire format; every flag then overrides
 /// through the typed setters (flags all carry defaults).
@@ -148,11 +180,10 @@ fn builder_from_args(a: &Args) -> Result<ExperimentBuilder> {
     } else {
         RunConfig::default()
     };
-    let bandit_spec = a.str("bandit");
     let partition_spec = a.str("partition");
     Ok(ExperimentBuilder::from_config(base)
         .task(parse_task(&a.str("task"))?)
-        .algo(Algo::parse(&a.str("algo")).ok_or_else(|| anyhow!("bad --algo"))?)
+        .strategy(strategy_from_args(a)?)
         .edges(a.usize("edges").map_err(|e| anyhow!(e))?)
         .hetero(a.f64("hetero").map_err(|e| anyhow!(e))?)
         .hetero_profile(
@@ -174,10 +205,6 @@ fn builder_from_args(a: &Args) -> Result<ExperimentBuilder> {
         .utility(
             UtilityKind::parse(&a.str("utility")).ok_or_else(|| anyhow!("bad --utility"))?,
         )
-        .bandit(BanditKind::parse(&bandit_spec).ok_or_else(|| {
-            anyhow!("bad --bandit '{bandit_spec}' (grammar: auto | kube[:EPS] | ucb-bv | ucb1 | eps-greedy[:EPS] | thompson)")
-        })?)
-        .fixed_interval(a.usize("fixed-interval").map_err(|e| anyhow!(e))?)
         .partition(PartitionKind::parse(&partition_spec).ok_or_else(|| {
             anyhow!("bad --partition '{partition_spec}' (grammar: iid | label-skew[:ALPHA])")
         })?)
@@ -241,9 +268,9 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     let engine = harness::build_engine(engine_kind, &a.str("artifacts"))?;
 
     eprintln!(
-        "[ol4el] task={} algo={} edges={} H={} budget={}ms engine={}",
+        "[ol4el] task={} strategy={} edges={} H={} budget={}ms engine={}",
         cfg.task.name(),
-        cfg.algo.name(),
+        cfg.strategy.label(),
         cfg.n_edges,
         cfg.hetero,
         cfg.budget,
@@ -344,11 +371,12 @@ fn fleet_cli() -> Cli {
     .opt("hetero", "4.0", "heterogeneity ratio H (>= 1)")
     .opt("hetero-profile", "linear", "linear | random")
     .opt("budget", "5000", "per-edge resource budget (ms)")
-    .opt("cost-mode", "fixed", "fixed | variable (no engine to measure)")
+    .opt("cost-mode", "fixed", "fixed | variable[:CV] (no engine to measure)")
     .opt("base-comp", "40", "nominal compute ms per local iteration")
     .opt("base-comm", "60", "nominal communication ms per global update")
     .opt("tau-max", "10", "longest global update interval (arm count)")
-    .opt("bandit", "auto", "auto | kube[:EPS] | ucb-bv | ucb1 | eps-greedy[:EPS] | thompson")
+    .opt("strategy", "ol4el", STRATEGY_GRAMMAR)
+    .opt("bandit", "auto", BANDIT_GRAMMAR)
     .opt(
         "network",
         "lognormal:5:0.5",
@@ -375,10 +403,34 @@ fn fleet_cli() -> Cli {
     .switch("json", "emit the report as JSON")
 }
 
-/// Assemble the fleet config from the CLI flag set.
+/// Assemble the fleet config from the CLI flag set. `--mode` (the `sync`
+/// flag here) pins the strategy spec's manner via
+/// [`StrategySpec::with_mode`]; the legacy `--bandit` alias parameterizes
+/// the default `ol4el` strategy.
 fn fleet_config(a: &Args, sync: bool) -> Result<RunConfig> {
     let n_edges = a.usize("edges").map_err(|e| anyhow!(e))?;
+    let strategy_spec = a.str("strategy");
     let bandit_spec = a.str("bandit");
+    let base_strategy = if bandit_spec != "auto" {
+        // The legacy --bandit alias only parameterizes the default ol4el
+        // strategy; combining it with an explicit non-default --strategy
+        // is ambiguous — refuse rather than silently drop one of them.
+        if strategy_spec != "ol4el" {
+            return Err(anyhow!(
+                "--bandit '{bandit_spec}' conflicts with --strategy '{strategy_spec}'; \
+                 fold the bandit into the spec (ol4el:bandit=B[:eps=E])"
+            ));
+        }
+        legacy_strategy("ol4el-async", Some(&bandit_spec), None)
+            .map_err(|e| anyhow!("{e} (bandit grammar: {BANDIT_GRAMMAR})"))?
+    } else {
+        StrategySpec::parse(&strategy_spec).map_err(|e| {
+            anyhow!("bad --strategy '{strategy_spec}': {e} (grammar: {STRATEGY_GRAMMAR})")
+        })?
+    };
+    let strategy = base_strategy
+        .with_mode(sync)
+        .map_err(|e| anyhow!("--strategy '{strategy_spec}' with --mode: {e}"))?;
     let defaults = RunConfig::default();
     let mut cost = defaults.cost;
     cost.mode = CostMode::parse(&a.str("cost-mode")).ok_or_else(|| anyhow!("bad --cost-mode"))?;
@@ -388,7 +440,7 @@ fn fleet_config(a: &Args, sync: bool) -> Result<RunConfig> {
     let eval_n = task.learner().eval_batch();
     Ok(RunConfig {
         task,
-        algo: if sync { Algo::Ol4elSync } else { Algo::Ol4elAsync },
+        strategy,
         n_edges,
         hetero: a.f64("hetero").map_err(|e| anyhow!(e))?,
         hetero_profile: HeteroProfile::parse(&a.str("hetero-profile"))
@@ -396,8 +448,6 @@ fn fleet_config(a: &Args, sync: bool) -> Result<RunConfig> {
         budget: a.f64("budget").map_err(|e| anyhow!(e))?,
         cost,
         tau_max: a.usize("tau-max").map_err(|e| anyhow!(e))?,
-        bandit: BanditKind::parse(&bandit_spec)
-            .ok_or_else(|| anyhow!("bad --bandit '{bandit_spec}'"))?,
         network: parse_network(&a.str("network"))?,
         churn: parse_churn(&a.str("churn"))?,
         eval_every: a.usize("eval-every").map_err(|e| anyhow!(e))?.max(1),
@@ -673,7 +723,6 @@ fn cmd_bench_tasks(argv: &[String]) -> Result<()> {
 
         let fleet_cfg = RunConfig {
             task: spec.clone(),
-            algo: Algo::Ol4elAsync,
             n_edges: edges,
             hetero: 4.0,
             budget,
@@ -704,6 +753,113 @@ fn cmd_bench_tasks(argv: &[String]) -> Result<()> {
     let j = Json::obj(vec![
         ("seed", Json::num(seed as f64)),
         ("tasks", Json::arr(rows.into_iter())),
+    ]);
+    let path = a.str("out");
+    std::fs::write(&path, j.pretty()).map_err(|e| anyhow!("writing {path}: {e}"))?;
+    eprintln!("[ol4el] wrote {path}");
+    Ok(())
+}
+
+fn bench_strategies_cli() -> Cli {
+    Cli::new(
+        "ol4el bench-strategies",
+        "per-strategy decision-loop throughput (selects/sec, updates/sec)",
+    )
+    .opt("iters", "200000", "select and feedback calls timed per strategy")
+    .opt("edges", "64", "fleet size the strategy instance is built for")
+    .opt("tau-max", "10", "arm count of the decision problem")
+    .opt("seed", "42", "PRNG seed of the selection stream")
+    .opt("out", "BENCH_strategies.json", "output JSON path")
+}
+
+/// The per-strategy decision-loop bench behind CI's scale-smoke job: for
+/// every registered strategy, build one instance through the public
+/// registry path (its default manner), then time `--iters` select calls
+/// and `--iters` feedback calls against an ample budget — the strategy
+/// layer's cost ceiling, isolated from training and transport. Writes
+/// BENCH_strategies.json (gated > 0 per strategy in CI).
+fn cmd_bench_strategies(argv: &[String]) -> Result<()> {
+    let Some(a) = bench_strategies_cli().parse(argv).map_err(|e| anyhow!(e))? else {
+        return Ok(());
+    };
+    let iters = a.usize("iters").map_err(|e| anyhow!(e))?.max(1);
+    let edges = a.usize("edges").map_err(|e| anyhow!(e))?.max(1);
+    let tau_max = a.usize("tau-max").map_err(|e| anyhow!(e))?.max(1);
+    let seed = a.u64("seed").map_err(|e| anyhow!(e))?;
+
+    let mut t = Table::new(
+        "per-strategy decision-loop throughput",
+        &["strategy", "selects/sec", "updates/sec"],
+    );
+    let mut rows = Vec::new();
+    for (name, _about) in ol4el::strategy::registered_strategies() {
+        let spec = StrategySpec::parse(name)?;
+        let cfg = RunConfig {
+            strategy: spec.clone(),
+            n_edges: edges,
+            hetero: 4.0,
+            tau_max,
+            // Ample budget: selection never retires inside the loop.
+            budget: 1e12,
+            data_n: RunConfig::default().data_n.max(edges + 1024),
+            seed,
+            ..Default::default()
+        };
+        cfg.validate()?;
+        let mut rng = ol4el::util::rng::Rng::new(seed);
+        let slowdowns = cfg
+            .hetero_profile
+            .slowdowns(cfg.n_edges, cfg.hetero, &mut rng);
+        let mut strategy = ol4el::strategy::build(&cfg, &slowdowns)?;
+        // A shared (sync) strategy always decides for index 0; per-edge
+        // ones rotate across the fleet.
+        let rotate = !strategy.is_sync();
+        let mut sel_rng = ol4el::util::rng::Rng::new(seed ^ 0x5e1e_c7);
+
+        // Warmup outside the clock (fills UCB-style priors).
+        for k in 0..iters.min(256) {
+            let e = if rotate { k % edges } else { 0 };
+            if let Some(tau) = strategy.select(e, 1e12, &mut sel_rng) {
+                strategy.feedback(e, tau, 0.5, tau as f64 * 40.0 + 60.0);
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let mut last_tau = 1usize;
+        for k in 0..iters {
+            let e = if rotate { k % edges } else { 0 };
+            if let Some(tau) = strategy.select(e, 1e12, &mut sel_rng) {
+                last_tau = tau;
+            }
+        }
+        let select_secs = t0.elapsed().as_secs_f64();
+        let t1 = std::time::Instant::now();
+        for k in 0..iters {
+            let e = if rotate { k % edges } else { 0 };
+            let tau = 1 + (last_tau + k) % tau_max;
+            strategy.feedback(e, tau, 0.5, tau as f64 * 40.0 + 60.0);
+        }
+        let update_secs = t1.elapsed().as_secs_f64();
+        let selects_per_sec = iters as f64 / select_secs.max(1e-9);
+        let updates_per_sec = iters as f64 / update_secs.max(1e-9);
+
+        t.row(vec![
+            name.to_string(),
+            f(selects_per_sec, 0),
+            f(updates_per_sec, 0),
+        ]);
+        rows.push(Json::obj(vec![
+            ("strategy", Json::str(name)),
+            ("selects_per_sec", Json::num(selects_per_sec)),
+            ("updates_per_sec", Json::num(updates_per_sec)),
+            ("iters", Json::num(iters as f64)),
+            ("edges", Json::num(edges as f64)),
+            ("tau_max", Json::num(tau_max as f64)),
+        ]));
+    }
+    print!("{}", t.render());
+    let j = Json::obj(vec![
+        ("seed", Json::num(seed as f64)),
+        ("strategies", Json::arr(rows.into_iter())),
     ]);
     let path = a.str("out");
     std::fs::write(&path, j.pretty()).map_err(|e| anyhow!("writing {path}: {e}"))?;

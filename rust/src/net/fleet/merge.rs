@@ -653,13 +653,12 @@ pub(crate) fn run_async(
 /// count produces the identical round sequence.
 pub(crate) fn run_sync(
     cfg: &RunConfig,
-    slowdowns: &[f64],
+    mut strategy: Box<dyn crate::strategy::Strategy>,
     cmd: &[Sender<Cmd>],
     out: &Receiver<Out>,
     observers: &mut [Box<dyn Observer>],
 ) -> DriverSummary {
     let k = cmd.len();
-    let mut strategy = crate::coordinator::build_strategy(cfg, slowdowns);
     let mut rng = stream(cfg.seed, super::shard::SALT_SYNC_CLOUD, 0);
     let n = cfg.n_edges;
     let n_start = n;

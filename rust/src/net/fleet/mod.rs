@@ -35,11 +35,10 @@
 //! unchanged at fleet scale:
 //!
 //! ```
-//! use ol4el::config::{Algo, RunConfig};
+//! use ol4el::config::RunConfig;
 //! use ol4el::net::FleetSim;
 //!
 //! let cfg = RunConfig {
-//!     algo: Algo::Ol4elAsync,
 //!     n_edges: 50,
 //!     hetero: 4.0,
 //!     budget: 400.0,
@@ -139,7 +138,7 @@ impl FleetReport {
 
 /// The fleet-scale driver. Reuses [`RunConfig`] for everything it shares
 /// with training runs (fleet size, heterogeneity, budgets, cost model,
-/// bandit, network, churn, eval cadence, seed); `task`/`data_n` are
+/// strategy, network, churn, eval cadence, seed); `task`/`data_n` are
 /// ignored — no data is generated and no model is trained.
 pub struct FleetSim {
     cfg: RunConfig,
@@ -203,7 +202,8 @@ impl FleetSim {
         self
     }
 
-    /// Run to completion with the protocol matching `cfg.algo`.
+    /// Run to completion with the protocol matching the strategy spec's
+    /// declared manner (`cfg.strategy.is_sync()`).
     pub fn run(self) -> Result<FleetReport> {
         let FleetSim {
             cfg,
@@ -213,7 +213,7 @@ impl FleetSim {
             auto_shards,
         } = self;
         let setup0 = std::time::Instant::now();
-        let sync = cfg.algo.is_sync();
+        let sync = cfg.sync();
         let mut k = shards.min(cfg.n_edges).max(1);
         if auto_shards && !sync && cfg.network.min_delay_ms(model_bytes) <= 0.0 {
             // Zero lookahead (ideal / lognormal latency): windows degenerate
@@ -229,11 +229,19 @@ impl FleetSim {
             .hetero_profile
             .slowdowns(cfg.n_edges, cfg.hetero, &mut rng);
 
+        // Build the barrier protocol's shared strategy in the setup phase
+        // (a fallible plugin hook — surfaced as a typed error, not a
+        // worker-thread panic).
+        let sync_strategy = if sync {
+            Some(crate::strategy::build(&cfg, &slowdowns)?)
+        } else {
+            None
+        };
         let (out_tx, out_rx): (Sender<Out>, Receiver<Out>) = mpsc::channel();
         let mut cmd_txs: Vec<Sender<Cmd>> = Vec::with_capacity(k);
         let mut handles = Vec::with_capacity(k);
         for s in 0..k {
-            let shard = Shard::new(s, k, cfg.clone(), model_bytes, &slowdowns);
+            let shard = Shard::new(s, k, cfg.clone(), model_bytes, &slowdowns)?;
             let (tx, rx): (Sender<Cmd>, Receiver<Cmd>) = mpsc::channel();
             let out = out_tx.clone();
             handles.push(thread::spawn(move || run_worker(shard, rx, out)));
@@ -243,8 +251,8 @@ impl FleetSim {
         let setup_seconds = setup0.elapsed().as_secs_f64();
 
         let loop0 = std::time::Instant::now();
-        let summary: DriverSummary = if sync {
-            run_sync(&cfg, &slowdowns, &cmd_txs, &out_rx, &mut observers)
+        let summary: DriverSummary = if let Some(strategy) = sync_strategy {
+            run_sync(&cfg, strategy, &cmd_txs, &out_rx, &mut observers)
         } else {
             run_async(&cfg, model_bytes, &cmd_txs, &out_rx, &mut observers)
         };
@@ -304,16 +312,16 @@ impl FleetSim {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Algo;
     use crate::coordinator::observer::{from_fn, RunEvent};
     use crate::net::churn::ChurnSpec;
     use crate::net::model::NetworkSpec;
+    use crate::strategy::StrategySpec;
     use std::cell::Cell;
     use std::rc::Rc;
 
-    fn fleet_cfg(algo: Algo, n: usize) -> RunConfig {
+    fn fleet_cfg(strategy: StrategySpec, n: usize) -> RunConfig {
         RunConfig {
-            algo,
+            strategy,
             n_edges: n,
             hetero: 4.0,
             budget: 1500.0,
@@ -326,7 +334,7 @@ mod tests {
 
     #[test]
     fn async_fleet_runs_at_scale() {
-        let r = FleetSim::new(fleet_cfg(Algo::Ol4elAsync, 1000))
+        let r = FleetSim::new(fleet_cfg(StrategySpec::ol4el_async(), 1000))
             .unwrap()
             .run()
             .unwrap();
@@ -342,7 +350,7 @@ mod tests {
 
     #[test]
     fn sync_fleet_runs_at_scale() {
-        let r = FleetSim::new(fleet_cfg(Algo::Ol4elSync, 500))
+        let r = FleetSim::new(fleet_cfg(StrategySpec::ol4el_sync(), 500))
             .unwrap()
             .run()
             .unwrap();
@@ -353,7 +361,7 @@ mod tests {
 
     #[test]
     fn network_and_churn_shape_the_fleet() {
-        let mut cfg = fleet_cfg(Algo::Ol4elAsync, 300);
+        let mut cfg = fleet_cfg(StrategySpec::ol4el_async(), 300);
         cfg.network = NetworkSpec::parse("lognormal:5:0.5,drop:0.05").unwrap();
         // Fleet-level join rate 5/s over a ~1.5s run: joins are certain.
         cfg.churn = ChurnSpec::parse("poisson:0.2,join:5").unwrap();
@@ -381,7 +389,7 @@ mod tests {
 
     #[test]
     fn fleet_is_deterministic() {
-        let mut cfg = fleet_cfg(Algo::Ol4elAsync, 200);
+        let mut cfg = fleet_cfg(StrategySpec::ol4el_async(), 200);
         cfg.network = NetworkSpec::parse("uniform:1:9,drop:0.02").unwrap();
         cfg.churn = ChurnSpec::parse("poisson:0.3,restart:200").unwrap();
         let a = FleetSim::new(cfg.clone()).unwrap().run().unwrap();
@@ -394,14 +402,14 @@ mod tests {
 
     #[test]
     fn measured_cost_mode_is_rejected() {
-        let mut cfg = fleet_cfg(Algo::Ol4elAsync, 10);
+        let mut cfg = fleet_cfg(StrategySpec::ol4el_async(), 10);
         cfg.cost.mode = CostMode::Measured;
         assert!(FleetSim::new(cfg).is_err());
     }
 
     #[test]
     fn trace_points_follow_eval_cadence() {
-        let mut cfg = fleet_cfg(Algo::Ol4elAsync, 100);
+        let mut cfg = fleet_cfg(StrategySpec::ol4el_async(), 100);
         cfg.eval_every = 10;
         let points = Rc::new(Cell::new(0u64));
         let p2 = points.clone();
@@ -422,7 +430,7 @@ mod tests {
     fn shard_count_does_not_change_the_report() {
         // The cheap in-module equivalence check; the full RunEvent-stream
         // equivalence matrix lives in tests/sharding.rs.
-        let mut cfg = fleet_cfg(Algo::Ol4elAsync, 120);
+        let mut cfg = fleet_cfg(StrategySpec::ol4el_async(), 120);
         cfg.network = NetworkSpec::parse("uniform:2:10,drop:0.02").unwrap();
         cfg.churn = ChurnSpec::parse("poisson:0.2,join:2,restart:300").unwrap();
         let one = FleetSim::new(cfg.clone()).unwrap().shards(1).run().unwrap();

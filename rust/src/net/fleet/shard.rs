@@ -2,7 +2,9 @@
 //!
 //! A [`Shard`] owns a disjoint subset of the fleet's edges (round-robin by
 //! edge id), one [`EventQueue`] for their virtual-time events, and — for
-//! the asynchronous protocol — one budgeted bandit per owned edge. A
+//! the asynchronous protocol — one single-edge [`Strategy`] instance per
+//! owned edge (built via [`strategy::build_edge`], so an edge's decision
+//! state lives wherever the edge lives and is placement-independent). A
 //! worker thread drives the shard through [`Cmd`]s from the coordinator
 //! loop and answers every command with exactly one [`Out`].
 //!
@@ -12,7 +14,7 @@
 //! shards exist. Every random draw comes from a **per-edge stream**
 //! derived from `(run seed, salt, edge id)`:
 //!
-//! * `rng` — fail-stop draws, bandit arm selection, compute/comm cost
+//! * `rng` — fail-stop draws, strategy interval selection, compute/comm cost
 //!   samples;
 //! * `churn` — straggle draws, leave gaps, the sync hazard;
 //! * `uplink` / `downlink` — the network fate of the edge's uploads and
@@ -36,9 +38,9 @@
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender};
 
-use crate::bandit::{self, BudgetedBandit};
-use crate::config::{BanditKind, RunConfig};
+use crate::config::RunConfig;
 use crate::coordinator::observer::{LocalReport, RunEvent};
+use crate::strategy::{self, Strategy};
 use crate::net::churn::ChurnSpec;
 use crate::net::transport::resolve_fate;
 use crate::sim::clock::EventQueue;
@@ -348,12 +350,12 @@ pub(crate) struct Shard {
     id: usize,
     k: usize,
     cfg: RunConfig,
-    kind: BanditKind,
     model_bytes: f64,
     /// Owned edges, in arrival order; `slots` maps global id → index.
     edges: Vec<FEdge>,
-    /// Async protocol: one budgeted bandit per owned edge (same index).
-    bandits: Vec<Box<dyn BudgetedBandit + Send>>,
+    /// Async protocol: one single-edge strategy instance per owned edge
+    /// (same index; `select`/`feedback` always address edge 0).
+    strategies: Vec<Box<dyn Strategy>>,
     slots: HashMap<usize, usize>,
     queue: EventQueue<Ev>,
     out_uploads: Vec<UpMsg>,
@@ -367,39 +369,36 @@ pub(crate) struct Shard {
 
 impl Shard {
     /// Build shard `id` of `k`, owning every initial edge with
-    /// `edge % k == id` (ascending id order).
+    /// `edge % k == id` (ascending id order). Fallible because the
+    /// strategy factory's build hook is (an out-of-tree factory may
+    /// reject conditions its parse-time hooks cannot see).
     pub fn new(
         id: usize,
         k: usize,
         cfg: RunConfig,
         model_bytes: f64,
         slowdowns: &[f64],
-    ) -> Shard {
-        let kind = cfg.resolved_bandit();
-        let is_async = !cfg.algo.is_sync();
+    ) -> anyhow::Result<Shard> {
+        let is_async = !cfg.strategy.is_sync();
         let mut edges = Vec::new();
-        let mut bandits: Vec<Box<dyn BudgetedBandit + Send>> = Vec::new();
+        let mut strategies: Vec<Box<dyn Strategy>> = Vec::new();
         let mut slots = HashMap::new();
         let mut gid = id;
         while gid < cfg.n_edges {
             slots.insert(gid, edges.len());
             edges.push(FEdge::new(cfg.seed, gid, slowdowns[gid]));
             if is_async {
-                bandits.push(bandit::build(
-                    kind,
-                    cfg.cost.arm_costs(cfg.tau_max, slowdowns[gid]),
-                ));
+                strategies.push(strategy::build_edge(&cfg, slowdowns[gid])?);
             }
             gid += k;
         }
-        Shard {
+        Ok(Shard {
             id,
             k,
             cfg,
-            kind,
             model_bytes,
             edges,
-            bandits,
+            strategies,
             slots,
             queue: EventQueue::new(),
             out_uploads: Vec::new(),
@@ -409,7 +408,7 @@ impl Shard {
             sent: 0,
             lost: 0,
             dropped_attempts: 0,
-        }
+        })
     }
 
     fn slot(&self, gid: usize) -> usize {
@@ -445,6 +444,9 @@ impl Shard {
     }
 
     fn emit_retired(&mut self, l: usize) {
+        if let Some(st) = self.strategies.get_mut(l) {
+            st.on_edge_retired(0);
+        }
         let edge = self.edges[l].id;
         let spent = self.edges[l].spent;
         let wall_ms = self.queue.now();
@@ -501,16 +503,15 @@ impl Shard {
         let remaining = (self.cfg.budget - self.edges[l].spent).max(0.0);
         let selected = {
             let e = &mut self.edges[l];
-            self.bandits[l].select(remaining, &mut e.rng)
+            self.strategies[l].select(0, remaining, &mut e.rng)
         };
-        let Some(arm) = selected else {
+        let Some(tau) = selected else {
             if !self.edges[l].retired {
                 self.edges[l].retired = true;
             }
             self.emit_retired(l);
             return;
         };
-        let tau = arm + 1;
         let gid = self.edges[l].id;
         self.emit(
             l,
@@ -664,9 +665,9 @@ impl Shard {
     fn on_deliver(&mut self, m: DownMsg) {
         let l = self.slot(m.edge);
         // Feedback computed at the merge rides the reply; apply it before
-        // the next selection can consult the arm stats.
+        // the next selection can consult the strategy's state.
         if m.fb_tau >= 1 {
-            self.bandits[l].update(m.fb_tau - 1, m.fb_utility, m.fb_cost);
+            self.strategies[l].feedback(0, m.fb_tau, m.fb_utility, m.fb_cost);
         }
         if self.edges[l].departed {
             return; // crashed while the reply flew: nothing arrives
@@ -776,8 +777,9 @@ impl Shard {
     }
 
     /// A churn joiner's registration arrived: create the edge (fresh
-    /// ledger, fresh bandit, streams derived from its global id so the
-    /// result is shard-count independent) and put it to work.
+    /// ledger, fresh single-edge strategy instance, streams derived from
+    /// its global id so the result is shard-count independent) and put it
+    /// to work.
     fn on_spawn(&mut self, m: SpawnMsg) {
         debug_assert_eq!(m.edge % self.k, self.id, "spawn routed to wrong shard");
         let l = self.edges.len();
@@ -785,8 +787,13 @@ impl Shard {
         let mut e = FEdge::new(self.cfg.seed, m.edge, m.slowdown);
         e.base_version = m.base_version;
         self.edges.push(e);
-        let costs = self.cfg.cost.arm_costs(self.cfg.tau_max, m.slowdown);
-        self.bandits.push(bandit::build(self.kind, costs));
+        // The factory already built instances for the whole t=0 fleet; a
+        // failure for a joiner's slowdown mid-run is a plugin bug, and a
+        // worker thread has no error channel — fail loudly.
+        self.strategies.push(
+            strategy::build_edge(&self.cfg, m.slowdown)
+                .expect("strategy factory failed for a churn joiner"),
+        );
         self.launch(l);
         self.schedule_leave(l);
     }

@@ -25,8 +25,8 @@ use crate::coordinator::aggregate;
 use crate::coordinator::observer::{LocalReport, RunEvent};
 use crate::coordinator::session::{CollaborationMode, Session};
 use crate::coordinator::utility::UtilityKind;
-use crate::coordinator::RoundObservation;
 use crate::model::{Learner as _, ModelState};
+use crate::strategy::RoundObservation;
 use crate::net::churn::{churn_rng, ChurnSpec};
 use crate::net::message::{Delivery, Message, NetEvent, Occurrence, Payload};
 use crate::net::transport::{SimTransport, Transport};
@@ -680,16 +680,17 @@ impl CollaborationMode for NetSyncBarrier {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{Algo, RunConfig};
+    use crate::config::RunConfig;
     use crate::engine::native::NativeEngine;
     use crate::model::TaskSpec;
     use crate::net::model::NetworkSpec;
+    use crate::strategy::StrategySpec;
     use std::cell::Cell;
     use std::rc::Rc;
 
-    fn cfg(algo: Algo) -> RunConfig {
+    fn cfg(strategy: StrategySpec) -> RunConfig {
         RunConfig {
-            algo,
+            strategy,
             task: TaskSpec::svm(),
             data_n: 3000,
             budget: 900.0,
@@ -709,7 +710,7 @@ mod tests {
 
     #[test]
     fn ideal_transport_matches_direct_call_async() {
-        let c = cfg(Algo::Ol4elAsync);
+        let c = cfg(StrategySpec::ol4el_async());
         let engine = NativeEngine::default();
         let direct = crate::coordinator::run(&c, &engine).unwrap();
         let netted = run_with_mode(&c, &mut NetAsyncMerge::new());
@@ -723,21 +724,25 @@ mod tests {
 
     #[test]
     fn ideal_transport_matches_direct_call_sync() {
-        for algo in [Algo::Ol4elSync, Algo::FixedI, Algo::AcSync] {
-            let c = cfg(algo);
+        for strategy in [
+            StrategySpec::ol4el_sync(),
+            StrategySpec::fixed_i(),
+            StrategySpec::ac_sync(),
+        ] {
+            let c = cfg(strategy.clone());
             let engine = NativeEngine::default();
             let direct = crate::coordinator::run(&c, &engine).unwrap();
             let netted = run_with_mode(&c, &mut NetSyncBarrier::new());
-            assert_eq!(direct.final_metric, netted.final_metric, "{algo:?}");
-            assert_eq!(direct.total_updates, netted.total_updates, "{algo:?}");
-            assert_eq!(direct.wall_ms, netted.wall_ms, "{algo:?}");
-            assert_eq!(direct.trace, netted.trace, "{algo:?}");
+            assert_eq!(direct.final_metric, netted.final_metric, "{strategy}");
+            assert_eq!(direct.total_updates, netted.total_updates, "{strategy}");
+            assert_eq!(direct.wall_ms, netted.wall_ms, "{strategy}");
+            assert_eq!(direct.trace, netted.trace, "{strategy}");
         }
     }
 
     #[test]
     fn latency_slows_the_run_and_is_charged() {
-        let mut c = cfg(Algo::Ol4elAsync);
+        let mut c = cfg(StrategySpec::ol4el_async());
         // 300ms per message leg: a round-trip costs more than the
         // cheapest arm itself, so the wire tax must eat whole rounds.
         c.network = NetworkSpec::parse("fixed:300").unwrap();
@@ -762,7 +767,7 @@ mod tests {
 
     #[test]
     fn lost_uploads_waste_rounds_and_are_observable() {
-        let mut c = cfg(Algo::Ol4elAsync);
+        let mut c = cfg(StrategySpec::ol4el_async());
         // Heavy loss with zero retries: many rounds never reach the Cloud.
         c.network = NetworkSpec::parse("ideal,drop:0.4,retries:0,timeout:30").unwrap();
         let drops = Rc::new(Cell::new(0u32));
@@ -786,7 +791,7 @@ mod tests {
 
     #[test]
     fn churn_leave_retires_edges_early() {
-        let mut c = cfg(Algo::Ol4elAsync);
+        let mut c = cfg(StrategySpec::ol4el_async());
         c.budget = 5000.0;
         // Aggressive departures: every edge leaves within ~100ms on average.
         c.churn = ChurnSpec::parse("poisson:10").unwrap();
@@ -803,7 +808,7 @@ mod tests {
 
     #[test]
     fn churn_joins_grow_the_fleet_and_stream_events() {
-        let mut c = cfg(Algo::Ol4elAsync);
+        let mut c = cfg(StrategySpec::ol4el_async());
         c.budget = 2000.0;
         c.churn = ChurnSpec::parse("poisson:0,join:5").unwrap();
         let joined = Rc::new(Cell::new(0usize));
@@ -824,7 +829,7 @@ mod tests {
 
     #[test]
     fn crash_restart_edges_rejoin() {
-        let mut c = cfg(Algo::Ol4elAsync);
+        let mut c = cfg(StrategySpec::ol4el_async());
         c.budget = 3000.0;
         c.churn = ChurnSpec::parse("poisson:2,restart:100").unwrap();
         let rejoined = Rc::new(Cell::new(0usize));
@@ -844,7 +849,7 @@ mod tests {
 
     #[test]
     fn sync_barrier_pays_for_partitions() {
-        let mut c = cfg(Algo::Ol4elSync);
+        let mut c = cfg(StrategySpec::ol4el_sync());
         c.budget = 3000.0;
         // Repeated outage windows keep taxing the barrier with timeout
         // retransmits — roughly half the budget goes to waiting.
@@ -867,7 +872,7 @@ mod tests {
 
     #[test]
     fn runs_with_network_are_deterministic() {
-        let mut c = cfg(Algo::Ol4elAsync);
+        let mut c = cfg(StrategySpec::ol4el_async());
         c.network = NetworkSpec::parse("lognormal:5:0.5,drop:0.05").unwrap();
         c.churn = ChurnSpec::parse("poisson:0.5,join:0.5").unwrap();
         let engine = NativeEngine::default();

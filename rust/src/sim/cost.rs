@@ -27,23 +27,49 @@ pub enum CostMode {
     Measured,
 }
 
+/// Default coefficient of variation for bare `variable` (the historical
+/// hardcoded value, now overridable via `variable:CV`).
+const DEFAULT_CV: f64 = 0.2;
+
 impl CostMode {
-    /// Parse a mode name (`fixed | variable | measured`).
+    /// Parse a mode spec: `fixed | variable[:CV] | measured`, where `CV`
+    /// is the coefficient of variation (finite, >= 0; default 0.2) — e.g.
+    /// `variable:0.35`. Negative or non-finite CVs are rejected, not
+    /// silently defaulted.
     pub fn parse(s: &str) -> Option<CostMode> {
-        match s.to_ascii_lowercase().as_str() {
+        let s = s.to_ascii_lowercase();
+        match s.as_str() {
             "fixed" => Some(CostMode::Fixed),
-            "variable" => Some(CostMode::Variable { cv: 0.2 }),
+            "variable" => Some(CostMode::Variable { cv: DEFAULT_CV }),
             "measured" => Some(CostMode::Measured),
-            _ => None,
+            _ => s
+                .strip_prefix("variable:")
+                .and_then(|cv| cv.parse::<f64>().ok())
+                .filter(|cv| cv.is_finite() && *cv >= 0.0)
+                .map(|cv| CostMode::Variable { cv }),
         }
     }
 
-    /// Canonical display/wire name.
+    /// Canonical display/wire name (the bare head; see [`spec`] for the
+    /// parameterized round-trippable form).
+    ///
+    /// [`spec`]: CostMode::spec
     pub fn name(&self) -> &'static str {
         match self {
             CostMode::Fixed => "fixed",
             CostMode::Variable { .. } => "variable",
             CostMode::Measured => "measured",
+        }
+    }
+
+    /// The full parameterized spec, round-trippable through [`parse`]
+    /// (this is what the JSON wire format carries, so `cv` survives).
+    ///
+    /// [`parse`]: CostMode::parse
+    pub fn spec(&self) -> String {
+        match self {
+            CostMode::Variable { cv } => format!("variable:{cv}"),
+            other => other.name().to_string(),
         }
     }
 }
@@ -195,5 +221,43 @@ mod tests {
         let v = m.arm_costs(3, 2.0);
         assert_eq!(v.len(), 3);
         assert!(v.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn cost_mode_parses_parameterized_variable() {
+        // Satellite bugfix: `variable` used to silently hardcode cv = 0.2
+        // with no way to say otherwise; the grammar is now variable[:CV].
+        assert_eq!(CostMode::parse("fixed"), Some(CostMode::Fixed));
+        assert_eq!(CostMode::parse("measured"), Some(CostMode::Measured));
+        assert_eq!(
+            CostMode::parse("variable"),
+            Some(CostMode::Variable { cv: 0.2 })
+        );
+        assert_eq!(
+            CostMode::parse("variable:0.35"),
+            Some(CostMode::Variable { cv: 0.35 })
+        );
+        assert_eq!(
+            CostMode::parse("VARIABLE:0"),
+            Some(CostMode::Variable { cv: 0.0 })
+        );
+        // Nonsense CVs are rejected, not silently accepted.
+        assert_eq!(CostMode::parse("variable:-0.1"), None);
+        assert_eq!(CostMode::parse("variable:nan"), None);
+        assert_eq!(CostMode::parse("variable:inf"), None);
+        assert_eq!(CostMode::parse("variable:x"), None);
+        assert_eq!(CostMode::parse("warp"), None);
+    }
+
+    #[test]
+    fn cost_mode_spec_roundtrips() {
+        for mode in [
+            CostMode::Fixed,
+            CostMode::Measured,
+            CostMode::Variable { cv: 0.2 },
+            CostMode::Variable { cv: 0.35 },
+        ] {
+            assert_eq!(CostMode::parse(&mode.spec()), Some(mode), "{mode:?}");
+        }
     }
 }

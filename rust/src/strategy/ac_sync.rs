@@ -1,6 +1,7 @@
 //! "AC-sync": the state-of-the-art synchronous comparison algorithm
 //! (paper §V-A) — Wang et al., "When edge meets learning: Adaptive control
-//! for resource-constrained distributed machine learning", INFOCOM 2018.
+//! for resource-constrained distributed machine learning", INFOCOM 2018 —
+//! as a registered, barrier-only [`Strategy`] (spec: `ac-sync`).
 //!
 //! Wang's controller adapts the aggregation interval τ by re-estimating,
 //! from observed training state, the gradient-divergence δ and smoothness β
@@ -25,9 +26,44 @@
 //! carries a per-iteration edge compute overhead that OL4EL avoids by
 //! keeping all decision computation on the Cloud, §V-B.1).
 
-use crate::coordinator::{IntervalStrategy, RoundObservation};
+use anyhow::Result;
+
+use crate::strategy::registry::{always_valid, StrategyFactory, StrategyParams, StrategySpec};
+use crate::strategy::{RoundObservation, Strategy, StrategyCtx};
 use crate::util::rng::Rng;
 use crate::util::stats::Ewma;
+
+/// The registry entry for `ac-sync`.
+pub fn factory() -> StrategyFactory {
+    StrategyFactory {
+        name: "ac-sync",
+        about: "Wang et al. adaptive-control baseline (barrier-only)",
+        sync_ok: true,
+        async_ok: false,
+        default_sync: true,
+        canon,
+        check: always_valid,
+        build,
+    }
+}
+
+fn canon(_p: &mut StrategyParams) -> Result<String> {
+    Ok(String::new())
+}
+
+fn build(spec: &StrategySpec, ctx: &StrategyCtx) -> Result<Box<dyn Strategy>> {
+    let mut p = spec.params();
+    let _ = p.take_mode()?; // sync-only; the registry already validated it
+    p.finish("ac-sync")?;
+    let max_slow = ctx.slowdowns.iter().cloned().fold(1.0f64, f64::max);
+    Ok(Box::new(AcSyncStrategy::new(
+        ctx.cfg.tau_max,
+        ctx.cfg.cost.nominal_comp(max_slow),
+        ctx.cfg.cost.nominal_comm(),
+        ctx.cfg.ac_overhead,
+        ctx.cfg.hyper.lr as f64,
+    )))
+}
 
 /// Adaptive-control synchronous EL (Wang et al. INFOCOM'18): picks τ by
 /// a control rule over observed divergence and cost, paying a per-
@@ -94,9 +130,13 @@ impl AcSyncStrategy {
     }
 }
 
-impl IntervalStrategy for AcSyncStrategy {
+impl Strategy for AcSyncStrategy {
     fn name(&self) -> String {
         "ac-sync".to_string()
+    }
+
+    fn is_sync(&self) -> bool {
+        true
     }
 
     fn select(&mut self, _edge: usize, remaining_budget: f64, _rng: &mut Rng) -> Option<usize> {

@@ -1,0 +1,204 @@
+//! "Fixed I": distributed training with a constant global update interval
+//! (paper §V-A) — the FedAvg-style static policy OL4EL is compared
+//! against, as a registered [`Strategy`]. Spec: `fixed-i[:i=N]` (default
+//! I = 5, the legacy `fixed_interval` default); runs under either manner
+//! (the paper evaluates it under the barrier, its default).
+
+use anyhow::{anyhow, Result};
+
+use crate::config::RunConfig;
+use crate::strategy::registry::{StrategyFactory, StrategyParams, StrategySpec};
+use crate::strategy::{Strategy, StrategyCtx};
+use crate::util::rng::Rng;
+
+/// The legacy default interval (`RunConfig::fixed_interval` used to
+/// default to 5).
+const DEFAULT_INTERVAL: usize = 5;
+
+/// The registry entry for `fixed-i`.
+pub fn factory() -> StrategyFactory {
+    StrategyFactory {
+        name: "fixed-i",
+        about: "constant interval baseline (paper §V-A); i=N",
+        sync_ok: true,
+        async_ok: true,
+        default_sync: true,
+        canon,
+        check,
+        build,
+    }
+}
+
+fn take_interval(p: &mut StrategyParams) -> Result<usize> {
+    let i = p.take_usize("i")?.unwrap_or(DEFAULT_INTERVAL);
+    if i == 0 {
+        return Err(anyhow!("fixed-i interval i must be >= 1"));
+    }
+    Ok(i)
+}
+
+fn canon(p: &mut StrategyParams) -> Result<String> {
+    let i = take_interval(p)?;
+    Ok(if i == DEFAULT_INTERVAL {
+        String::new()
+    } else {
+        format!("i={i}")
+    })
+}
+
+fn check(spec: &StrategySpec, cfg: &RunConfig) -> Result<()> {
+    let mut p = spec.params();
+    let i = take_interval(&mut p)?;
+    if i > cfg.tau_max {
+        return Err(anyhow!(
+            "strategy 'fixed-i': interval i={i} must be in 1..=tau_max ({})",
+            cfg.tau_max
+        ));
+    }
+    Ok(())
+}
+
+fn build(spec: &StrategySpec, ctx: &StrategyCtx) -> Result<Box<dyn Strategy>> {
+    let mut p = spec.params();
+    let i = take_interval(&mut p)?;
+    // The registry resolved the manner at parse time; don't re-hardcode
+    // the default here (it would silently drift from `default_sync`).
+    let sync = spec.is_sync();
+    let _ = p.take_mode()?;
+    p.finish("fixed-i")?;
+    Ok(Box::new(FixedIStrategy::with_mode(
+        i,
+        ctx.cfg.tau_max,
+        sync,
+    )))
+}
+
+/// The Fixed-I strategy: one constant interval for every edge.
+pub struct FixedIStrategy {
+    interval: usize,
+    pulls: Vec<u64>,
+    /// Nominal cost of the fixed arm per decision index (one shared entry
+    /// under the barrier, one per edge under async merging — each edge's
+    /// observed round cost differs with its slowdown), learned from
+    /// feedback so retirement is budget-aware even for this static
+    /// policy. Grown on demand so churn joins need no special casing.
+    last_cost: Vec<f64>,
+    sync: bool,
+}
+
+impl FixedIStrategy {
+    /// A Fixed-I strategy pulling `interval` (must be ≤ `tau_max`) under
+    /// the synchronous barrier (the paper's regime).
+    pub fn new(interval: usize, tau_max: usize) -> Self {
+        FixedIStrategy::with_mode(interval, tau_max, true)
+    }
+
+    /// A Fixed-I strategy pinned to a collaboration manner.
+    pub fn with_mode(interval: usize, tau_max: usize, sync: bool) -> Self {
+        assert!(interval >= 1 && interval <= tau_max);
+        FixedIStrategy {
+            interval,
+            pulls: vec![0; tau_max],
+            last_cost: Vec::new(),
+            sync,
+        }
+    }
+
+    /// The decision index for `edge` (0 under the shared barrier),
+    /// growing the per-index state on first touch.
+    fn slot(&mut self, edge: usize) -> usize {
+        let idx = if self.sync { 0 } else { edge };
+        if idx >= self.last_cost.len() {
+            self.last_cost.resize(idx + 1, 0.0);
+        }
+        idx
+    }
+}
+
+impl Strategy for FixedIStrategy {
+    fn name(&self) -> String {
+        format!("fixed-i({})", self.interval)
+    }
+
+    fn is_sync(&self) -> bool {
+        self.sync
+    }
+
+    fn select(&mut self, edge: usize, remaining_budget: f64, _rng: &mut Rng) -> Option<usize> {
+        let idx = self.slot(edge);
+        // Retire once this edge's observed round cost exceeds the
+        // remainder.
+        if self.last_cost[idx] > 0.0 && self.last_cost[idx] > remaining_budget {
+            return None;
+        }
+        if remaining_budget <= 0.0 {
+            return None;
+        }
+        self.pulls[self.interval - 1] += 1;
+        Some(self.interval)
+    }
+
+    fn feedback(&mut self, edge: usize, _tau: usize, _utility: f64, cost: f64) {
+        let idx = self.slot(edge);
+        self.last_cost[idx] = cost;
+    }
+
+    fn tau_histogram(&self) -> Vec<u64> {
+        self.pulls.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn always_returns_configured_interval() {
+        let mut s = FixedIStrategy::new(4, 10);
+        let mut rng = Rng::new(0);
+        for _ in 0..10 {
+            assert_eq!(s.select(0, 1000.0, &mut rng), Some(4));
+            s.feedback(0, 4, 0.5, 70.0);
+        }
+        assert_eq!(s.tau_histogram()[3], 10);
+        assert!(s.is_sync());
+    }
+
+    #[test]
+    fn retires_when_cost_exceeds_remaining() {
+        let mut s = FixedIStrategy::new(2, 10);
+        let mut rng = Rng::new(0);
+        assert!(s.select(0, 100.0, &mut rng).is_some());
+        s.feedback(0, 2, 0.5, 120.0);
+        assert_eq!(s.select(0, 100.0, &mut rng), None);
+        assert!(s.select(0, 200.0, &mut rng).is_some());
+    }
+
+    #[test]
+    fn async_mode_tracks_costs_per_edge() {
+        // A slow edge's expensive round must not poison a fast edge's
+        // retirement check (per-edge last_cost under async merging).
+        let mut s = FixedIStrategy::with_mode(2, 10, false);
+        let mut rng = Rng::new(0);
+        s.feedback(0, 2, 0.5, 900.0); // slow edge
+        s.feedback(1, 2, 0.5, 90.0); // fast edge
+        assert_eq!(s.select(0, 500.0, &mut rng), None, "slow edge retires");
+        assert_eq!(s.select(1, 500.0, &mut rng), Some(2), "fast edge keeps going");
+    }
+
+    #[test]
+    #[should_panic]
+    fn interval_must_fit_tau_max() {
+        FixedIStrategy::new(11, 10);
+    }
+
+    #[test]
+    fn check_rejects_interval_beyond_tau_max() {
+        let cfg = RunConfig::default(); // tau_max = 10
+        let ok = StrategySpec::parse("fixed-i:i=8").unwrap();
+        assert!(ok.check(&cfg).is_ok());
+        let bad = StrategySpec::parse("fixed-i:i=99").unwrap();
+        let err = bad.check(&cfg).unwrap_err().to_string();
+        assert!(err.contains("tau_max"), "{err}");
+    }
+}

@@ -1,0 +1,190 @@
+//! `greedy-budget`: a deadline-aware greedy interval policy, and the
+//! strategy layer's openness proof — registered through the same public
+//! [`StrategyFactory`] path an out-of-tree strategy would use.
+//!
+//! Per slot it picks the **largest affordable τ** under two ceilings: the
+//! edge's remaining resource budget and an optional per-slot resource
+//! deadline (`deadline=MS`) — "never start a round you cannot finish
+//! before the deadline", the shape of the delay/energy-constrained
+//! allocation in Mohammad et al., *"Task Allocation for Asynchronous
+//! Mobile Edge Learning with Delay and Energy Constraints"*. With no
+//! deadline it degenerates to the greedy max-τ policy. Entirely
+//! deterministic: no RNG, per-edge nominal arm costs only, so it is
+//! trivially placement-independent on the sharded fleet simulator.
+//!
+//! Spec: `greedy-budget[:deadline=MS][:mode=sync|async]` (default async).
+
+use anyhow::{anyhow, Result};
+
+use crate::strategy::registry::{always_valid, StrategyFactory, StrategyParams, StrategySpec};
+use crate::strategy::{Strategy, StrategyCtx};
+use crate::util::rng::Rng;
+
+/// The registry entry for `greedy-budget`.
+pub fn factory() -> StrategyFactory {
+    StrategyFactory {
+        name: "greedy-budget",
+        about: "largest affordable τ under a per-slot resource deadline; deadline=MS",
+        sync_ok: true,
+        async_ok: true,
+        default_sync: false,
+        canon,
+        check: always_valid,
+        build,
+    }
+}
+
+fn take_deadline(p: &mut StrategyParams) -> Result<f64> {
+    match p.take_f64("deadline")? {
+        None => Ok(f64::INFINITY),
+        Some(d) if d.is_finite() && d > 0.0 => Ok(d),
+        Some(d) => Err(anyhow!(
+            "greedy-budget deadline must be a positive finite ms value, got {d}"
+        )),
+    }
+}
+
+fn canon(p: &mut StrategyParams) -> Result<String> {
+    let deadline = take_deadline(p)?;
+    Ok(if deadline.is_finite() {
+        format!("deadline={deadline}")
+    } else {
+        String::new()
+    })
+}
+
+fn build(spec: &StrategySpec, ctx: &StrategyCtx) -> Result<Box<dyn Strategy>> {
+    let mut p = spec.params();
+    let deadline = take_deadline(&mut p)?;
+    // The registry resolved the manner at parse time; don't re-hardcode
+    // the default here (it would silently drift from `default_sync`).
+    let sync = spec.is_sync();
+    let _ = p.take_mode()?;
+    p.finish("greedy-budget")?;
+    // Shared decision priced at the barrier (straggler) cost under the
+    // sync manner, per-edge costs otherwise — ctx owns the pricing rule.
+    Ok(Box::new(GreedyBudgetStrategy::new(
+        ctx.arm_costs(sync),
+        deadline,
+        sync,
+    )))
+}
+
+/// The deadline-aware greedy policy: largest τ whose nominal cost fits
+/// `min(remaining budget, deadline)`.
+pub struct GreedyBudgetStrategy {
+    /// Nominal arm costs per decision index (one entry when shared).
+    arm_costs: Vec<Vec<f64>>,
+    deadline: f64,
+    shared: bool,
+    pulls: Vec<u64>,
+}
+
+impl GreedyBudgetStrategy {
+    /// A greedy policy over the given per-edge nominal arm costs (one
+    /// entry = shared/sync pricing) and per-slot `deadline` ceiling
+    /// (`f64::INFINITY` disables it).
+    pub fn new(arm_costs: Vec<Vec<f64>>, deadline: f64, shared: bool) -> Self {
+        assert!(!arm_costs.is_empty());
+        let n_arms = arm_costs[0].len();
+        GreedyBudgetStrategy {
+            arm_costs,
+            deadline,
+            shared,
+            pulls: vec![0; n_arms],
+        }
+    }
+}
+
+impl Strategy for GreedyBudgetStrategy {
+    fn name(&self) -> String {
+        if self.deadline.is_finite() {
+            format!("greedy-budget(deadline={})", self.deadline)
+        } else {
+            "greedy-budget".to_string()
+        }
+    }
+
+    fn is_sync(&self) -> bool {
+        self.shared
+    }
+
+    fn select(&mut self, edge: usize, remaining_budget: f64, _rng: &mut Rng) -> Option<usize> {
+        let idx = if self.shared { 0 } else { edge };
+        let cap = remaining_budget.min(self.deadline);
+        // Arm costs are monotone in τ; take the largest that fits.
+        let mut best = None;
+        for (k, &cost) in self.arm_costs[idx].iter().enumerate() {
+            if cost <= cap {
+                best = Some(k + 1);
+            }
+        }
+        if let Some(tau) = best {
+            self.pulls[tau - 1] += 1;
+        }
+        best
+    }
+
+    fn feedback(&mut self, _edge: usize, _tau: usize, _utility: f64, _cost: f64) {
+        // Deterministic policy: nothing to learn.
+    }
+
+    fn on_edge_joined(&mut self, edge: usize, arm_costs: Vec<f64>) {
+        if self.shared {
+            return;
+        }
+        assert_eq!(edge, self.arm_costs.len(), "non-contiguous edge join");
+        self.arm_costs.push(arm_costs);
+    }
+
+    fn tau_histogram(&self) -> Vec<u64> {
+        self.pulls.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn costs() -> Vec<f64> {
+        vec![100.0, 140.0, 180.0, 220.0] // τ·comp + comm shape
+    }
+
+    #[test]
+    fn picks_largest_affordable_tau() {
+        let mut s = GreedyBudgetStrategy::new(vec![costs()], f64::INFINITY, false);
+        let mut rng = Rng::new(0);
+        assert_eq!(s.select(0, 1000.0, &mut rng), Some(4));
+        assert_eq!(s.select(0, 181.0, &mut rng), Some(3));
+        assert_eq!(s.select(0, 100.0, &mut rng), Some(1));
+        assert_eq!(s.select(0, 99.0, &mut rng), None, "nothing affordable");
+        assert_eq!(s.tau_histogram(), vec![1, 0, 1, 1]);
+    }
+
+    #[test]
+    fn deadline_caps_the_pick_below_the_budget() {
+        let mut s = GreedyBudgetStrategy::new(vec![costs()], 150.0, false);
+        let mut rng = Rng::new(0);
+        // Budget would afford τ=4, but the per-slot deadline only fits τ=2.
+        assert_eq!(s.select(0, 1000.0, &mut rng), Some(2));
+    }
+
+    #[test]
+    fn per_edge_costs_and_joins() {
+        let slow: Vec<f64> = costs().iter().map(|c| c * 3.0).collect();
+        let mut s = GreedyBudgetStrategy::new(vec![costs(), slow], f64::INFINITY, false);
+        let mut rng = Rng::new(0);
+        assert_eq!(s.select(0, 200.0, &mut rng), Some(2));
+        assert_eq!(s.select(1, 200.0, &mut rng), None, "slow edge can't afford");
+        s.on_edge_joined(2, costs());
+        assert_eq!(s.select(2, 200.0, &mut rng), Some(2));
+    }
+
+    #[test]
+    fn shared_mode_routes_all_edges_to_one_cost_table() {
+        let mut s = GreedyBudgetStrategy::new(vec![costs()], f64::INFINITY, true);
+        let mut rng = Rng::new(0);
+        assert!(s.is_sync());
+        assert_eq!(s.select(7, 1000.0, &mut rng), Some(4));
+    }
+}

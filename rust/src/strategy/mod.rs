@@ -1,0 +1,218 @@
+//! The strategy layer — the paper's *decision* contribution as an open
+//! plugin surface, mirroring the task layer in `model/`.
+//!
+//! A [`Strategy`] decides each edge's global-update interval τ per
+//! scheduling slot, observes the resulting reward/cost, reacts to fleet
+//! churn (joins/retirements), and declares which collaboration manner it
+//! runs under (synchronous barrier vs asynchronous merge). Strategies are
+//! resolved by name through the strategy registry
+//! ([`StrategySpec`], grammar `NAME[:KEY=V]*` — `ol4el:bandit=kube:eps=0.1`,
+//! `fixed-i:i=8`, `ac-sync`, `greedy-budget`, or anything added via
+//! [`register`]); the old closed `Algo` × `BanditKind` enum pair is gone.
+//!
+//! In-tree strategies:
+//! * [`ol4el`] — the paper's budget-limited bandits over τ (§IV); one
+//!   shared bandit under the barrier, one per edge under async merging.
+//!   Parameterized by bandit spec (`bandit=`, `eps=`).
+//! * [`fixed_i`] — the "Fixed I" baseline (§V-A): one constant interval.
+//! * [`ac_sync`] — Wang et al.'s adaptive-control baseline (§V-A),
+//!   barrier-only.
+//! * [`greedy_budget`] — a deadline-aware greedy policy (largest
+//!   affordable τ under a per-slot resource deadline), registered through
+//!   the same public factory path an out-of-tree strategy would use.
+//!
+//! ## Determinism obligations
+//!
+//! Fixed-seed runs must be bit-for-bit reproducible, and the sharded
+//! fleet simulator additionally requires *placement independence*:
+//!
+//! * `decide`/`select` may only draw from the `rng` handed in — never
+//!   from ambient state — and must draw the same number of variates for
+//!   the same (state, inputs).
+//! * Per-edge state must be keyed by the edge index alone so a strategy
+//!   instance built for one edge ([`build_edge`]) behaves exactly like
+//!   that edge's slice of a fleet-wide instance ([`build`]).
+//! * `observe`/`feedback` must be pure state updates (no RNG).
+
+pub mod ac_sync;
+pub mod fixed_i;
+pub mod greedy_budget;
+pub mod ol4el;
+pub mod registry;
+
+pub use registry::{
+    register, registered_strategies, StrategyFactory, StrategyParams, StrategySpec,
+};
+
+use crate::config::RunConfig;
+use crate::util::rng::Rng;
+
+/// Per-round observation handed to strategies that estimate system state
+/// (AC-sync's adaptive control uses divergence + loss movement).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundObservation {
+    /// Mean L2 distance of local models from the fresh global model.
+    pub divergence: f64,
+    /// L2 distance between consecutive global models.
+    pub global_delta: f64,
+    /// Mean per-iteration compute cost observed this round.
+    pub mean_comp: f64,
+    /// Communication cost observed this round.
+    pub comm: f64,
+    /// Learning rate in force.
+    pub lr: f64,
+}
+
+/// A policy choosing each edge's global update interval τ ∈ 1..=tau_max.
+///
+/// Object-safe and `Send` (per-edge instances ride the fleet simulator's
+/// worker threads). See the module docs for the determinism obligations
+/// `select`/`feedback` implementations must honor.
+pub trait Strategy: Send {
+    /// The strategy's display name.
+    fn name(&self) -> String;
+
+    /// Does this instance run under the synchronous barrier manner
+    /// (shared per-round decision) or the asynchronous merge manner
+    /// (per-edge decisions)?
+    fn is_sync(&self) -> bool;
+
+    /// Choose τ for `edge` given its remaining budget; None retires it.
+    fn select(&mut self, edge: usize, remaining_budget: f64, rng: &mut Rng) -> Option<usize>;
+
+    /// Reward/cost feedback after the corresponding global update.
+    fn feedback(&mut self, edge: usize, tau: usize, utility: f64, cost: f64);
+
+    /// Extra per-iteration compute fraction this strategy imposes on edges
+    /// (AC-sync's local estimations; 0 for everything else).
+    fn edge_overhead(&self) -> f64 {
+        0.0
+    }
+
+    /// System-state observation hook (AC-sync uses it; bandits ignore it).
+    fn observe_round(&mut self, _obs: &RoundObservation) {}
+
+    /// Churn hook: edge `edge` joined mid-run with the given nominal arm
+    /// costs. Per-edge strategies allocate state here; shared/static
+    /// policies can ignore it (their `select` is edge-agnostic).
+    fn on_edge_joined(&mut self, _edge: usize, _arm_costs: Vec<f64>) {}
+
+    /// Churn hook: edge `edge` retired (budget exhausted, crash, or
+    /// departure). Must not draw RNG — purely a bookkeeping opportunity.
+    fn on_edge_retired(&mut self, _edge: usize) {}
+
+    /// Pull histogram over τ (diagnostics; arms indexed τ-1).
+    fn tau_histogram(&self) -> Vec<u64>;
+}
+
+/// Everything a [`StrategyFactory`] build needs: the run config (cost
+/// model, τ range, hyper, strategy spec) and the per-edge heterogeneity
+/// slowdowns of the fleet the instance will serve.
+pub struct StrategyCtx<'a> {
+    /// The full run configuration.
+    pub cfg: &'a RunConfig,
+    /// Per-edge slowdowns, indexed by the edge indices `select` will see.
+    /// For a single-edge instance ([`build_edge`]) this has length 1.
+    pub slowdowns: &'a [f64],
+}
+
+impl StrategyCtx<'_> {
+    /// Nominal arm-cost tables for this fleet under the given manner —
+    /// the pricing rule every cost-aware factory shares: one table priced
+    /// at the BARRIER (straggler) cost when `sync` (the straggler defines
+    /// the round and every edge is charged the wait), one table per edge
+    /// at its own cost otherwise.
+    pub fn arm_costs(&self, sync: bool) -> Vec<Vec<f64>> {
+        if sync {
+            let max_slow = self.slowdowns.iter().cloned().fold(1.0f64, f64::max);
+            vec![self.cfg.cost.arm_costs(self.cfg.tau_max, max_slow)]
+        } else {
+            self.slowdowns
+                .iter()
+                .map(|&s| self.cfg.cost.arm_costs(self.cfg.tau_max, s))
+                .collect()
+        }
+    }
+}
+
+/// Build the configured strategy for a fleet with the given per-edge
+/// slowdowns. For in-tree strategies this cannot fail once
+/// `RunConfig::validate` passed, but the factory's `build` hook is
+/// fallible by contract (an out-of-tree factory may reject conditions
+/// its parse-time `canon` and config-level `check` hooks cannot see,
+/// e.g. invariants over the realized slowdowns), so the error is
+/// propagated as a typed error, not a panic.
+pub fn build(cfg: &RunConfig, slowdowns: &[f64]) -> anyhow::Result<Box<dyn Strategy>> {
+    cfg.strategy.resolve(&StrategyCtx { cfg, slowdowns })
+}
+
+/// Build a single-edge strategy instance for the sharded fleet simulator:
+/// the edge's decision state lives wherever the edge lives, keyed by
+/// `edge == 0`, so results are independent of shard placement. Only
+/// meaningful for async-manner specs (the barrier manner uses one shared
+/// [`build`] instance on the coordinator).
+pub fn build_edge(cfg: &RunConfig, slowdown: f64) -> anyhow::Result<Box<dyn Strategy>> {
+    debug_assert!(
+        !cfg.strategy.is_sync(),
+        "per-edge strategy instances are an async-manner concept"
+    );
+    let slowdowns = [slowdown];
+    cfg.strategy.resolve(&StrategyCtx {
+        cfg,
+        slowdowns: &slowdowns,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_matches_spec_manner() {
+        let mut cfg = RunConfig {
+            data_n: 3000,
+            budget: 800.0,
+            n_edges: 3,
+            ..Default::default()
+        };
+        let s = build(&cfg, &[1.0, 2.0, 3.0]).unwrap();
+        assert!(!s.is_sync());
+        assert!(s.name().contains("per-edge"));
+        cfg.strategy = StrategySpec::ol4el_sync();
+        let s2 = build(&cfg, &[1.0, 2.0, 3.0]).unwrap();
+        assert!(s2.is_sync());
+        assert!(s2.name().contains("shared"));
+        cfg.strategy = StrategySpec::fixed_i();
+        assert_eq!(build(&cfg, &[1.0]).unwrap().name(), "fixed-i(5)");
+        cfg.strategy = StrategySpec::ac_sync();
+        assert_eq!(build(&cfg, &[1.0]).unwrap().name(), "ac-sync");
+        cfg.strategy = StrategySpec::greedy_budget();
+        assert!(build(&cfg, &[1.0]).unwrap().name().starts_with("greedy-budget"));
+    }
+
+    #[test]
+    fn edge_instance_matches_fleet_slice() {
+        // A per-edge ol4el instance must make the same decisions as the
+        // matching edge of a fleet-wide instance (placement independence).
+        let cfg = RunConfig {
+            data_n: 3000,
+            budget: 800.0,
+            n_edges: 2,
+            ..Default::default()
+        };
+        let slowdowns = [1.0, 3.0];
+        let mut fleet = build(&cfg, &slowdowns).unwrap();
+        let mut solo = build_edge(&cfg, 3.0).unwrap();
+        let mut rng_a = Rng::new(7);
+        let mut rng_b = Rng::new(7);
+        for _ in 0..20 {
+            let a = fleet.select(1, 700.0, &mut rng_a);
+            let b = solo.select(0, 700.0, &mut rng_b);
+            assert_eq!(a, b);
+            if let Some(tau) = a {
+                fleet.feedback(1, tau, 0.5, 90.0);
+                solo.feedback(0, tau, 0.5, 90.0);
+            }
+        }
+    }
+}

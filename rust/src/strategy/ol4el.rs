@@ -1,0 +1,184 @@
+//! OL4EL's strategy: budget-limited bandit(s) over τ (paper §IV), as a
+//! registered [`Strategy`]. Synchronous mode uses one shared bandit
+//! (paper §IV-B: "only one bandit model for all edge servers in
+//! synchronous EL") priced at the barrier (straggler) cost; asynchronous
+//! uses one bandit per edge priced at that edge's own cost. The bandit
+//! policy is a spec parameter (`bandit=kube|ucb-bv|ucb1|eps-greedy|
+//! thompson|auto`, plus `eps=` for the ε-parameterized policies); `auto`
+//! resolves against the cost mode at build time (§IV-B pairing).
+
+use anyhow::Result;
+
+use crate::bandit::{self, BanditSpec, BudgetedBandit, DEFAULT_EPSILON};
+use crate::strategy::registry::{always_valid, StrategyFactory, StrategyParams};
+use crate::strategy::{Strategy, StrategyCtx};
+use crate::util::rng::Rng;
+
+/// The registry entry for `ol4el`.
+pub fn factory() -> StrategyFactory {
+    StrategyFactory {
+        name: "ol4el",
+        about: "budget-limited bandit over τ (paper §IV); bandit=B, eps=E",
+        sync_ok: true,
+        async_ok: true,
+        default_sync: false,
+        canon,
+        check: always_valid,
+        build,
+    }
+}
+
+/// Read the bandit spec out of the parameter set (shared by canon/build).
+fn take_bandit(p: &mut StrategyParams) -> Result<BanditSpec> {
+    let name = p.take("bandit").unwrap_or_else(|| "auto".to_string());
+    let eps = p.take_f64("eps")?;
+    BanditSpec::new(&name, eps).ok_or_else(|| {
+        anyhow::anyhow!(
+            "bad bandit parameters 'bandit={name}{}' (grammar: bandit=auto|kube|ucb-bv|ucb1|\
+             eps-greedy|thompson, eps in [0,1] only for kube/eps-greedy)",
+            eps.map(|e| format!(":eps={e}")).unwrap_or_default()
+        )
+    })
+}
+
+fn canon(p: &mut StrategyParams) -> Result<String> {
+    let bandit = take_bandit(p)?;
+    let mut tail = Vec::new();
+    if !bandit.is_auto() {
+        tail.push(format!("bandit={}", bandit.name()));
+    }
+    if bandit.takes_epsilon() && bandit.epsilon() != DEFAULT_EPSILON {
+        tail.push(format!("eps={}", bandit.epsilon()));
+    }
+    Ok(tail.join(":"))
+}
+
+fn build(
+    spec: &crate::strategy::StrategySpec,
+    ctx: &StrategyCtx,
+) -> Result<Box<dyn Strategy>> {
+    let mut p = spec.params();
+    let bandit = take_bandit(&mut p)?;
+    // The registry resolved the manner at parse time (explicit mode= or
+    // the factory default); the canonical spec is the single source.
+    let sync = spec.is_sync();
+    let _ = p.take_mode()?;
+    p.finish("ol4el")?;
+    let kind = bandit.resolve(ctx.cfg.cost.mode);
+    // One shared bandit priced at the barrier cost (sync), or one bandit
+    // per edge priced at its own cost (async) — ctx owns the pricing rule.
+    Ok(Box::new(Ol4elStrategy::new(kind, ctx.arm_costs(sync), sync)))
+}
+
+/// The bandit-backed strategy: one shared bandit (sync barrier) or one
+/// per edge (async merging).
+pub struct Ol4elStrategy {
+    bandits: Vec<Box<dyn BudgetedBandit + Send>>,
+    shared: bool,
+    kind: BanditSpec,
+}
+
+impl Ol4elStrategy {
+    /// `arm_costs_per_edge[e][k]` = nominal cost of arm k for edge e (for
+    /// the shared/sync case pass a single entry with barrier costs).
+    /// `kind` must be resolved (not `auto`).
+    pub fn new(kind: BanditSpec, arm_costs_per_edge: Vec<Vec<f64>>, shared: bool) -> Self {
+        assert!(!arm_costs_per_edge.is_empty());
+        let bandits: Vec<_> = arm_costs_per_edge
+            .into_iter()
+            .map(|costs| bandit::build(&kind, costs))
+            .collect();
+        Ol4elStrategy {
+            bandits,
+            shared,
+            kind,
+        }
+    }
+
+    fn bandit_for(&mut self, edge: usize) -> &mut Box<dyn BudgetedBandit + Send> {
+        let idx = if self.shared { 0 } else { edge };
+        &mut self.bandits[idx]
+    }
+}
+
+impl Strategy for Ol4elStrategy {
+    fn name(&self) -> String {
+        format!(
+            "ol4el({}, {})",
+            self.bandits[0].name(),
+            if self.shared { "shared" } else { "per-edge" }
+        )
+    }
+
+    fn is_sync(&self) -> bool {
+        self.shared
+    }
+
+    fn select(&mut self, edge: usize, remaining_budget: f64, rng: &mut Rng) -> Option<usize> {
+        self.bandit_for(edge)
+            .select(remaining_budget, rng)
+            .map(|arm| arm + 1)
+    }
+
+    fn feedback(&mut self, edge: usize, tau: usize, utility: f64, cost: f64) {
+        self.bandit_for(edge).update(tau - 1, utility, cost);
+    }
+
+    fn on_edge_joined(&mut self, edge: usize, arm_costs: Vec<f64>) {
+        if self.shared {
+            return; // one bandit for the whole cohort (sync)
+        }
+        // Per-edge bandits: the joiner starts a fresh model at its index.
+        assert_eq!(edge, self.bandits.len(), "non-contiguous edge join");
+        self.bandits.push(bandit::build(&self.kind, arm_costs));
+    }
+
+    fn tau_histogram(&self) -> Vec<u64> {
+        let n_arms = self.bandits[0].n_arms();
+        let mut h = vec![0u64; n_arms];
+        for b in &self.bandits {
+            for (k, slot) in h.iter_mut().enumerate() {
+                *slot += b.stats(k).pulls;
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kube() -> BanditSpec {
+        BanditSpec::parse("kube").unwrap()
+    }
+
+    #[test]
+    fn shared_strategy_routes_every_edge_to_one_bandit() {
+        let mut s = Ol4elStrategy::new(kube(), vec![vec![50.0, 90.0, 130.0]], true);
+        let mut rng = Rng::new(1);
+        for edge in 0..5 {
+            let tau = s.select(edge, 1000.0, &mut rng).unwrap();
+            s.feedback(edge, tau, 0.5, 60.0);
+        }
+        assert_eq!(s.tau_histogram().iter().sum::<u64>(), 5);
+        assert!(s.is_sync());
+        assert!(s.name().contains("shared"));
+    }
+
+    #[test]
+    fn per_edge_strategy_grows_on_join() {
+        let mut s = Ol4elStrategy::new(kube(), vec![vec![50.0, 90.0]], false);
+        assert!(!s.is_sync());
+        s.on_edge_joined(1, vec![70.0, 120.0]);
+        let mut rng = Rng::new(2);
+        assert!(s.select(1, 500.0, &mut rng).is_some());
+    }
+
+    #[test]
+    fn retirement_on_unaffordable_budget() {
+        let mut s = Ol4elStrategy::new(kube(), vec![vec![100.0, 180.0]], false);
+        let mut rng = Rng::new(3);
+        assert_eq!(s.select(0, 10.0, &mut rng), None);
+    }
+}

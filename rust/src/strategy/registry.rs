@@ -1,0 +1,578 @@
+//! The strategy registry: name → [`Strategy`] factories, and the
+//! [`StrategySpec`] wire type the rest of the system carries instead of
+//! the old `Algo` × `BanditKind` enum pair.
+//!
+//! Grammar (single-sourced in `docs/GRAMMAR.md`):
+//!
+//! ```text
+//! strategy := NAME ( ':' KEY '=' V )*
+//! ```
+//!
+//! e.g. `ol4el:bandit=kube:eps=0.1`, `fixed-i:i=8`, `ac-sync`,
+//! `greedy-budget:deadline=500`. `NAME` resolves against the registry;
+//! `KEY=V` pairs are parameters each factory interprets (unknown keys are
+//! typed errors, never silently dropped). The universal `mode=sync|async`
+//! key selects the collaboration manner for strategies that support both;
+//! each factory declares which manners it can run under and which is its
+//! default, and the canonical spec collapses explicit defaults (the
+//! canonical spec of `ol4el:bandit=auto:mode=async` is plain `ol4el`).
+//!
+//! Legacy spellings stay parseable: `ol4el-sync` / `ol4el-async` (and the
+//! `sync` / `async` short aliases) map onto `ol4el` with the matching
+//! `mode=`, `fixed` onto `fixed-i`, `acsync` onto `ac-sync`, and a bare
+//! bandit name (`thompson`, `kube`, …) is sugar for `ol4el:bandit=NAME`.
+//!
+//! The registry ships four strategies (`ol4el`, `fixed-i`, `ac-sync`,
+//! `greedy-budget`) and is open: [`register`] adds a new strategy at
+//! runtime, after which its spec works everywhere a strategy name does —
+//! `--strategy`, the JSON wire format, suites, the sharded fleet
+//! simulator. `greedy-budget` is itself registered through the same
+//! factory type an external caller would use.
+
+use std::collections::BTreeMap;
+use std::sync::{OnceLock, RwLock};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::RunConfig;
+use crate::strategy::{Strategy, StrategyCtx};
+
+/// `KEY=V` parameters of a strategy spec (`bandit=kube`, `eps=0.1`,
+/// `i=8`, …). Factories take what they understand;
+/// [`StrategyParams::finish`] rejects leftovers so a typo like
+/// `ol4el:bandot=kube` is an error, not a silent default.
+pub struct StrategyParams {
+    pairs: BTreeMap<String, String>,
+}
+
+impl StrategyParams {
+    fn parse(segments: &[&str]) -> Result<StrategyParams> {
+        let mut pairs = BTreeMap::new();
+        for seg in segments {
+            let (key, val) = seg
+                .split_once('=')
+                .ok_or_else(|| anyhow!("strategy parameter '{seg}' is not KEY=V"))?;
+            if pairs.insert(key.to_string(), val.to_string()).is_some() {
+                return Err(anyhow!("strategy parameter '{key}' given twice"));
+            }
+        }
+        Ok(StrategyParams { pairs })
+    }
+
+    /// Take a raw string parameter, if present.
+    pub fn take(&mut self, key: &str) -> Option<String> {
+        self.pairs.remove(key)
+    }
+
+    /// Take a float parameter; malformed values are typed errors.
+    pub fn take_f64(&mut self, key: &str) -> Result<Option<f64>> {
+        match self.pairs.remove(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| anyhow!("strategy parameter '{key}={v}': not a number")),
+        }
+    }
+
+    /// Take an integer parameter; malformed values are typed errors.
+    pub fn take_usize(&mut self, key: &str) -> Result<Option<usize>> {
+        match self.pairs.remove(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| anyhow!("strategy parameter '{key}={v}': not an integer")),
+        }
+    }
+
+    /// Take the universal `mode=sync|async` key: `Some(true)` = sync,
+    /// `Some(false)` = async, `None` = absent (factory default applies).
+    pub fn take_mode(&mut self) -> Result<Option<bool>> {
+        match self.pairs.remove("mode") {
+            None => Ok(None),
+            Some(v) => match v.as_str() {
+                "sync" => Ok(Some(true)),
+                "async" => Ok(Some(false)),
+                other => Err(anyhow!("strategy parameter 'mode={other}': expected sync|async")),
+            },
+        }
+    }
+
+    /// Error on parameters the factory did not consume.
+    pub fn finish(&self, strategy: &str) -> Result<()> {
+        if let Some(key) = self.pairs.keys().next() {
+            return Err(anyhow!(
+                "strategy '{strategy}' does not take a parameter '{key}'"
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// One registered strategy: a name, the collaboration manners it can run
+/// under, and factories from spec parameters to canonical form and to a
+/// live [`Strategy`]. Plain `fn` pointers keep the registry
+/// `Send + Sync` without imposing bounds on strategies themselves (the
+/// trait itself requires `Send` so instances can ride the fleet
+/// simulator's worker threads).
+pub struct StrategyFactory {
+    /// Registry name (the spec head, e.g. `"fixed-i"`).
+    pub name: &'static str,
+    /// One-line description for `--help` and diagnostics.
+    pub about: &'static str,
+    /// Can this strategy drive the synchronous barrier manner?
+    pub sync_ok: bool,
+    /// Can this strategy drive the asynchronous merge manner?
+    pub async_ok: bool,
+    /// The manner used when the spec carries no `mode=` key (`true` =
+    /// sync). Must be consistent with `sync_ok`/`async_ok`.
+    pub default_sync: bool,
+    /// Validate the non-`mode` parameters and return the canonical
+    /// parameter tail (`""` when every parameter is at its default;
+    /// `mode` is handled by the registry and must not appear here).
+    pub canon: fn(&mut StrategyParams) -> Result<String>,
+    /// Config-level invariants that need the full [`RunConfig`] (e.g.
+    /// `fixed-i`'s `i <= tau_max`); called by `RunConfig::validate`.
+    pub check: fn(&StrategySpec, &RunConfig) -> Result<()>,
+    /// Build a live strategy for the fleet described by the context.
+    pub build: fn(&StrategySpec, &StrategyCtx) -> Result<Box<dyn Strategy>>,
+}
+
+/// A `check` hook for strategies with no config-level invariants.
+pub fn always_valid(_spec: &StrategySpec, _cfg: &RunConfig) -> Result<()> {
+    Ok(())
+}
+
+fn registry() -> &'static RwLock<Vec<StrategyFactory>> {
+    static REGISTRY: OnceLock<RwLock<Vec<StrategyFactory>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        RwLock::new(vec![
+            crate::strategy::ol4el::factory(),
+            crate::strategy::fixed_i::factory(),
+            crate::strategy::ac_sync::factory(),
+            // The openness proof rides the same public factory type an
+            // out-of-tree strategy would use.
+            crate::strategy::greedy_budget::factory(),
+        ])
+    })
+}
+
+/// Register a new strategy. Errors when the name collides with an
+/// existing registration (names are the spec heads, so they must stay
+/// unique), or when the manner flags are contradictory.
+pub fn register(factory: StrategyFactory) -> Result<()> {
+    if !factory.sync_ok && !factory.async_ok {
+        return Err(anyhow!(
+            "strategy '{}' must support at least one manner",
+            factory.name
+        ));
+    }
+    if (factory.default_sync && !factory.sync_ok) || (!factory.default_sync && !factory.async_ok) {
+        return Err(anyhow!(
+            "strategy '{}': default mode is not a supported manner",
+            factory.name
+        ));
+    }
+    let mut reg = registry().write().unwrap();
+    if reg.iter().any(|f| f.name == factory.name) {
+        return Err(anyhow!("strategy '{}' is already registered", factory.name));
+    }
+    reg.push(factory);
+    Ok(())
+}
+
+/// Every registered strategy as `(name, about)`, in registration order.
+pub fn registered_strategies() -> Vec<(&'static str, &'static str)> {
+    registry()
+        .read()
+        .unwrap()
+        .iter()
+        .map(|f| (f.name, f.about))
+        .collect()
+}
+
+/// Normalize a spec head through the legacy aliases. Returns the registry
+/// head plus any parameters the alias implies (`ol4el-sync` implies
+/// `mode=sync`; a bare bandit name implies `bandit=NAME`).
+fn resolve_alias(head: &str) -> (String, Vec<(&'static str, String)>) {
+    match head {
+        "ol4el-sync" | "sync" => ("ol4el".into(), vec![("mode", "sync".into())]),
+        "ol4el-async" | "async" => ("ol4el".into(), vec![("mode", "async".into())]),
+        "fixed" => ("fixed-i".into(), vec![]),
+        "acsync" => ("ac-sync".into(), vec![]),
+        // A bare bandit name is sugar for the bandit-backed strategy.
+        "auto" | "kube" | "ucb-bv" | "ucbbv" | "ucb1" | "eps-greedy" | "epsgreedy"
+        | "thompson" => ("ol4el".into(), vec![("bandit", head.to_string())]),
+        other => (other.to_string(), vec![]),
+    }
+}
+
+/// Look up a factory and run `f` on it.
+fn with_factory<T>(head: &str, f: impl FnOnce(&StrategyFactory) -> Result<T>) -> Result<T> {
+    let reg = registry().read().unwrap();
+    let factory = reg.iter().find(|s| s.name == head).ok_or_else(|| {
+        let known: Vec<&str> = reg.iter().map(|s| s.name).collect();
+        anyhow!(
+            "unknown strategy '{head}' (registered: {}; grammar: NAME[:KEY=V]*)",
+            known.join(", ")
+        )
+    })?;
+    f(factory)
+}
+
+/// Parse + canonicalize a raw spec string against the registry.
+fn canonicalize(s: &str) -> Result<String> {
+    let s = s.to_ascii_lowercase();
+    let mut segments = s.split(':');
+    let head = segments.next().unwrap_or("");
+    let (head, implied) = resolve_alias(head);
+    let params: Vec<&str> = segments.collect();
+    let mut p = StrategyParams::parse(&params)?;
+    for (key, val) in implied {
+        if let Some(explicit) = p.pairs.get(key) {
+            if explicit != &val {
+                return Err(anyhow!(
+                    "spec '{s}' implies {key}={val} but also says {key}={explicit}"
+                ));
+            }
+        } else {
+            p.pairs.insert(key.to_string(), val);
+        }
+    }
+    with_factory(&head, |factory| {
+        let mode = p.take_mode()?;
+        let sync = mode.unwrap_or(factory.default_sync);
+        if sync && !factory.sync_ok {
+            return Err(anyhow!(
+                "strategy '{head}' cannot run under the synchronous manner"
+            ));
+        }
+        if !sync && !factory.async_ok {
+            return Err(anyhow!(
+                "strategy '{head}' cannot run under the asynchronous manner"
+            ));
+        }
+        let tail = (factory.canon)(&mut p)?;
+        p.finish(&head)?;
+        let mut spec = head.clone();
+        if !tail.is_empty() {
+            spec.push(':');
+            spec.push_str(&tail);
+        }
+        if sync != factory.default_sync {
+            spec.push_str(if sync { ":mode=sync" } else { ":mode=async" });
+        }
+        Ok(spec)
+    })
+}
+
+/// A validated strategy spec — the wire/config representation of an
+/// interval-decision policy.
+///
+/// Holds the canonical spec string (explicitly-spelled default parameters
+/// collapse: `ol4el:bandit=auto` canonicalizes to `ol4el`). Cheap to
+/// clone and `Send`, so configs cross worker threads freely; the strategy
+/// itself is materialized per run via [`crate::strategy::build`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StrategySpec {
+    spec: String,
+}
+
+impl StrategySpec {
+    /// Parse and validate a strategy spec against the registry,
+    /// canonicalizing the parameter spelling. This is the wire entry
+    /// point: the JSON format and `--strategy` both come through here.
+    pub fn parse(s: &str) -> Result<StrategySpec> {
+        Ok(StrategySpec {
+            spec: canonicalize(s)?,
+        })
+    }
+
+    /// OL4EL under the asynchronous manner (per-edge bandits) — the
+    /// default strategy, and the canonical form of the legacy
+    /// `ol4el-async` algorithm.
+    pub fn ol4el_async() -> StrategySpec {
+        StrategySpec {
+            spec: "ol4el".to_string(),
+        }
+    }
+
+    /// OL4EL under the synchronous barrier (one shared bandit) — the
+    /// canonical form of the legacy `ol4el-sync` algorithm.
+    pub fn ol4el_sync() -> StrategySpec {
+        StrategySpec {
+            spec: "ol4el:mode=sync".to_string(),
+        }
+    }
+
+    /// The Fixed-I baseline at the paper's default interval (I = 5).
+    pub fn fixed_i() -> StrategySpec {
+        StrategySpec {
+            spec: "fixed-i".to_string(),
+        }
+    }
+
+    /// The AC-sync baseline (Wang et al. INFOCOM'18).
+    pub fn ac_sync() -> StrategySpec {
+        StrategySpec {
+            spec: "ac-sync".to_string(),
+        }
+    }
+
+    /// The deadline-aware greedy policy (plugin proof).
+    pub fn greedy_budget() -> StrategySpec {
+        StrategySpec {
+            spec: "greedy-budget".to_string(),
+        }
+    }
+
+    /// The canonical spec string (what the JSON wire format carries).
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    /// The strategy's registry name (the spec head).
+    pub fn name(&self) -> &str {
+        self.spec.split(':').next().unwrap_or(&self.spec)
+    }
+
+    /// The value of one `KEY=V` parameter, if present in the canonical
+    /// spec (collapsed defaults are absent by construction).
+    pub fn param(&self, key: &str) -> Option<&str> {
+        self.spec
+            .split(':')
+            .skip(1)
+            .find_map(|seg| seg.strip_prefix(key).and_then(|r| r.strip_prefix('=')))
+    }
+
+    /// The canonical parameters as a fresh [`StrategyParams`] (for
+    /// factories re-reading their own canonical output at build time).
+    pub fn params(&self) -> StrategyParams {
+        let segments: Vec<&str> = self.spec.split(':').skip(1).collect();
+        StrategyParams::parse(&segments).expect("canonical spec params re-parse")
+    }
+
+    /// Does this spec run under the synchronous barrier manner? Explicit
+    /// `mode=` wins; otherwise the factory's declared default applies.
+    pub fn is_sync(&self) -> bool {
+        match self.param("mode") {
+            Some("sync") => true,
+            Some("async") => false,
+            _ => with_factory(self.name(), |f| Ok(f.default_sync))
+                .expect("StrategySpec was validated at construction"),
+        }
+    }
+
+    /// This spec pinned to a manner: re-canonicalized with `mode=` forced
+    /// to `sync`/`async`. Errors when the strategy cannot run under the
+    /// requested manner.
+    pub fn with_mode(&self, sync: bool) -> Result<StrategySpec> {
+        let kept: Vec<&str> = self
+            .spec
+            .split(':')
+            .filter(|seg| !seg.starts_with("mode="))
+            .collect();
+        let mode = if sync { "mode=sync" } else { "mode=async" };
+        StrategySpec::parse(&format!("{}:{}", kept.join(":"), mode))
+    }
+
+    /// Human label for tables and logs: the legacy `ol4el-sync` /
+    /// `ol4el-async` names for the bandit-backed strategy (mode folded
+    /// into the name), the canonical spec for everything else.
+    pub fn label(&self) -> String {
+        if self.name() == "ol4el" {
+            let mut label = if self.is_sync() {
+                "ol4el-sync".to_string()
+            } else {
+                "ol4el-async".to_string()
+            };
+            if let Some(b) = self.param("bandit") {
+                label.push_str(&format!("({b})"));
+            }
+            label
+        } else {
+            self.spec.clone()
+        }
+    }
+
+    /// Run the registered config-level `check` hook (e.g. `fixed-i`'s
+    /// `i <= tau_max`); `RunConfig::validate` calls this.
+    pub fn check(&self, cfg: &RunConfig) -> Result<()> {
+        with_factory(self.name(), |f| (f.check)(self, cfg))
+    }
+
+    /// Materialize the strategy for the fleet described by `ctx`.
+    pub fn resolve(&self, ctx: &StrategyCtx) -> Result<Box<dyn Strategy>> {
+        with_factory(self.name(), |f| (f.build)(self, ctx))
+    }
+}
+
+impl Default for StrategySpec {
+    fn default() -> Self {
+        StrategySpec::ol4el_async()
+    }
+}
+
+impl std::fmt::Display for StrategySpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_strategies_resolve() {
+        for name in ["ol4el", "fixed-i", "ac-sync", "greedy-budget"] {
+            let spec = StrategySpec::parse(name).unwrap();
+            assert_eq!(spec.name(), name);
+        }
+    }
+
+    #[test]
+    fn legacy_algo_spellings_still_parse() {
+        assert_eq!(
+            StrategySpec::parse("ol4el-sync").unwrap(),
+            StrategySpec::ol4el_sync()
+        );
+        assert_eq!(
+            StrategySpec::parse("OL4EL-ASYNC").unwrap(),
+            StrategySpec::ol4el_async()
+        );
+        assert_eq!(StrategySpec::parse("sync").unwrap(), StrategySpec::ol4el_sync());
+        assert_eq!(StrategySpec::parse("fixed").unwrap(), StrategySpec::fixed_i());
+        assert_eq!(StrategySpec::parse("acsync").unwrap(), StrategySpec::ac_sync());
+    }
+
+    #[test]
+    fn bare_bandit_names_are_ol4el_sugar() {
+        assert_eq!(
+            StrategySpec::parse("thompson").unwrap().spec(),
+            "ol4el:bandit=thompson"
+        );
+        assert_eq!(
+            StrategySpec::parse("kube:eps=0.2").unwrap().spec(),
+            "ol4el:bandit=kube:eps=0.2"
+        );
+        // auto is the ol4el default and collapses entirely.
+        assert_eq!(StrategySpec::parse("auto").unwrap().spec(), "ol4el");
+    }
+
+    #[test]
+    fn canonical_specs_collapse_defaults_and_roundtrip() {
+        for (input, canonical) in [
+            ("ol4el:bandit=auto:mode=async", "ol4el"),
+            ("ol4el:bandit=kube:eps=0.1", "ol4el:bandit=kube"),
+            ("ol4el:bandit=kube:eps=0.2", "ol4el:bandit=kube:eps=0.2"),
+            ("ol4el:mode=sync", "ol4el:mode=sync"),
+            ("fixed-i:i=5", "fixed-i"),
+            ("fixed-i:i=8", "fixed-i:i=8"),
+            ("ac-sync:mode=sync", "ac-sync"),
+            ("greedy-budget:mode=async", "greedy-budget"),
+            ("greedy-budget:deadline=500", "greedy-budget:deadline=500"),
+        ] {
+            let spec = StrategySpec::parse(input).unwrap();
+            assert_eq!(spec.spec(), canonical, "{input}");
+            assert_eq!(StrategySpec::parse(spec.spec()).unwrap(), spec, "{input}");
+        }
+    }
+
+    #[test]
+    fn mode_and_manner_support() {
+        assert!(!StrategySpec::ol4el_async().is_sync());
+        assert!(StrategySpec::ol4el_sync().is_sync());
+        assert!(StrategySpec::fixed_i().is_sync());
+        assert!(StrategySpec::ac_sync().is_sync());
+        assert!(!StrategySpec::greedy_budget().is_sync());
+        // ac-sync is barrier-only: an async request is a typed error.
+        assert!(StrategySpec::parse("ac-sync:mode=async").is_err());
+        assert!(StrategySpec::ac_sync().with_mode(false).is_err());
+        // fixed-i and greedy-budget run under either manner.
+        assert!(!StrategySpec::fixed_i().with_mode(false).unwrap().is_sync());
+        assert!(StrategySpec::greedy_budget().with_mode(true).unwrap().is_sync());
+        // with_mode back to the default collapses the mode key.
+        assert_eq!(
+            StrategySpec::ol4el_sync().with_mode(false).unwrap(),
+            StrategySpec::ol4el_async()
+        );
+    }
+
+    #[test]
+    fn bad_specs_are_typed_errors() {
+        assert!(StrategySpec::parse("warp").is_err());
+        assert!(StrategySpec::parse("ol4el:bandit").is_err());
+        assert!(StrategySpec::parse("ol4el:bandit=warp").is_err());
+        assert!(StrategySpec::parse("ol4el:eps=0.1").is_err(), "eps without an eps bandit");
+        assert!(StrategySpec::parse("ol4el:bandit=kube:eps=1.5").is_err());
+        assert!(StrategySpec::parse("ol4el:bandit=ucb1:eps=0.1").is_err());
+        assert!(StrategySpec::parse("ol4el:mode=warp").is_err());
+        assert!(StrategySpec::parse("ol4el:k=3").is_err(), "unknown key accepted");
+        assert!(StrategySpec::parse("fixed-i:i=0").is_err());
+        assert!(StrategySpec::parse("fixed-i:i=x").is_err());
+        assert!(StrategySpec::parse("fixed-i:i=2:i=3").is_err(), "dup key accepted");
+        assert!(StrategySpec::parse("greedy-budget:deadline=0").is_err());
+        assert!(StrategySpec::parse("greedy-budget:deadline=nan").is_err());
+        // Alias-implied parameters must not contradict explicit ones.
+        assert!(StrategySpec::parse("ol4el-sync:mode=async").is_err());
+        let err = StrategySpec::parse("warp").unwrap_err().to_string();
+        assert!(err.contains("registered:"), "{err}");
+    }
+
+    #[test]
+    fn unknown_strategy_error_lists_registry() {
+        let err = StrategySpec::parse("nope").unwrap_err().to_string();
+        for name in ["ol4el", "fixed-i", "ac-sync", "greedy-budget"] {
+            assert!(err.contains(name), "{err}");
+        }
+    }
+
+    fn imposter_canon(_p: &mut StrategyParams) -> Result<String> {
+        Ok(String::new())
+    }
+
+    fn imposter_build(
+        _spec: &StrategySpec,
+        _ctx: &crate::strategy::StrategyCtx,
+    ) -> Result<Box<dyn Strategy>> {
+        Err(anyhow!("never"))
+    }
+
+    #[test]
+    fn duplicate_registration_rejected() {
+        let err = register(StrategyFactory {
+            name: "ol4el",
+            about: "imposter",
+            sync_ok: true,
+            async_ok: true,
+            default_sync: false,
+            canon: imposter_canon,
+            check: always_valid,
+            build: imposter_build,
+        });
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn labels_fold_mode_into_the_legacy_names() {
+        assert_eq!(StrategySpec::ol4el_async().label(), "ol4el-async");
+        assert_eq!(StrategySpec::ol4el_sync().label(), "ol4el-sync");
+        assert_eq!(
+            StrategySpec::parse("ol4el:bandit=kube").unwrap().label(),
+            "ol4el-async(kube)"
+        );
+        assert_eq!(StrategySpec::fixed_i().label(), "fixed-i");
+        assert_eq!(
+            StrategySpec::parse("fixed-i:i=8").unwrap().label(),
+            "fixed-i:i=8"
+        );
+    }
+
+    #[test]
+    fn registered_strategies_lists_builtins_in_order() {
+        let names: Vec<&str> = registered_strategies().iter().map(|(n, _)| *n).collect();
+        assert!(names.starts_with(&["ol4el", "fixed-i", "ac-sync", "greedy-budget"]));
+    }
+}

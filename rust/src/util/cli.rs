@@ -16,6 +16,25 @@ use std::fmt::Write as _;
 /// crate is ever packaged standalone the file must move under `rust/`.
 pub const SPEC_GRAMMAR: &str = include_str!("../../../docs/GRAMMAR.md");
 
+/// The strategy-spec grammar one-liner used by every `--strategy` flag
+/// help and error message. Single-sourced here (next to [`SPEC_GRAMMAR`])
+/// so the help texts, the error messages and the docs cannot drift —
+/// `tests/cli_help.rs` asserts the productions appear in `train --help`
+/// and `fleet --help`.
+pub const STRATEGY_GRAMMAR: &str =
+    "ol4el[:bandit=B][:eps=E][:mode=sync|async] | fixed-i[:i=N] | ac-sync | \
+     greedy-budget[:deadline=MS][:mode=sync|async] | any registered strategy; \
+     legacy aliases ol4el-sync | ol4el-async | fixed | acsync still parse, and \
+     a bare bandit name B is sugar for ol4el:bandit=B";
+
+/// The bandit-policy grammar one-liner shared by the legacy `--bandit`
+/// alias flag's help and error message (the same names are the `bandit=`
+/// values of the `ol4el` strategy spec). Previously this string was
+/// duplicated verbatim in three places in `main.rs`.
+pub const BANDIT_GRAMMAR: &str =
+    "auto | kube[:EPS] | ucb-bv | ucb1 | eps-greedy[:EPS] | thompson; \
+     EPS = exploration rate in [0,1], default 0.1 (e.g. kube:0.2)";
+
 /// One flag specification.
 #[derive(Clone, Debug)]
 pub struct FlagSpec {

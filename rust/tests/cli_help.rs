@@ -17,6 +17,15 @@ const PRODUCTIONS: &[&str] = &[
     "k=CLUSTERS",
     "d=DIM c=CLASSES",
     "k=COMPONENTS",
+    // strategy
+    "strategy := NAME ( ':' KEY '=' V )*",
+    "'ol4el'   bandit=B eps=E",
+    "'fixed-i' i=N",
+    "'ac-sync'",
+    "'greedy-budget' deadline=MS",
+    "mode=sync|async",
+    "'ol4el-sync' | 'ol4el-async'",
+    "sugar for ol4el:bandit=B",
     // network
     "ideal",
     "fixed:MS",
@@ -33,7 +42,7 @@ const PRODUCTIONS: &[&str] = &[
     "join:RATE",
     "restart:MS",
     "straggle:P:FACTOR",
-    // bandit
+    // bandit (the legacy form; also the bandit= values of ol4el)
     "auto",
     "kube[:EPS]",
     "ucb-bv",
@@ -44,7 +53,7 @@ const PRODUCTIONS: &[&str] = &[
     "iid",
     "label-skew[:ALPHA]",
     // scalar enums
-    "'fixed' | 'variable' | 'measured'",
+    "'fixed' | 'variable[:CV]' | 'measured'",
     "'linear' | 'random'",
     "'eval' | 'delta'",
 ];
@@ -55,6 +64,15 @@ fn help_output() -> String {
         .output()
         .expect("run ol4el --help");
     assert!(out.status.success(), "--help exited nonzero");
+    String::from_utf8(out.stdout).expect("utf8 help output")
+}
+
+fn subcommand_help(sub: &str) -> String {
+    let out = Command::new(env!("CARGO_BIN_EXE_ol4el"))
+        .args([sub, "--help"])
+        .output()
+        .unwrap_or_else(|e| panic!("run ol4el {sub} --help: {e}"));
+    assert!(out.status.success(), "{sub} --help exited nonzero");
     String::from_utf8(out.stdout).expect("utf8 help output")
 }
 
@@ -83,30 +101,63 @@ fn help_is_the_single_sourced_grammar() {
 #[test]
 fn spec_grammar_parses_its_own_examples() {
     // The examples documented in the grammar must actually parse.
-    use ol4el::config::{BanditKind, PartitionKind};
+    use ol4el::bandit::BanditSpec;
+    use ol4el::config::PartitionKind;
     use ol4el::model::TaskSpec;
     use ol4el::net::{ChurnSpec, NetworkSpec};
+    use ol4el::sim::cost::CostMode;
+    use ol4el::strategy::StrategySpec;
     assert!(TaskSpec::parse("kmeans:k=5").is_ok());
     assert!(TaskSpec::parse("logreg:d=59:c=8").is_ok());
     assert!(TaskSpec::parse("gmm:k=3").is_ok());
+    assert!(StrategySpec::parse("ol4el:bandit=kube:eps=0.1").is_ok());
+    assert!(StrategySpec::parse("fixed-i:i=8").is_ok());
+    assert!(StrategySpec::parse("ac-sync").is_ok());
+    assert!(StrategySpec::parse("greedy-budget:deadline=500").is_ok());
+    assert!(StrategySpec::parse("thompson").is_ok());
     assert!(NetworkSpec::parse("lognormal:5:0.5,bw:10,drop:0.01").is_some());
     assert!(NetworkSpec::parse("fixed:20,part:1000-2500").is_some());
     assert!(ChurnSpec::parse("poisson:0.01,join:0.05").is_some());
     assert!(ChurnSpec::parse("poisson:0.2,restart:500,straggle:0.1:4").is_some());
-    assert!(BanditKind::parse("kube:0.2").is_some());
+    assert!(BanditSpec::parse("kube:0.2").is_some());
     assert!(PartitionKind::parse("label-skew:0.3").is_some());
+    assert!(CostMode::parse("variable:0.35").is_some());
 }
 
 #[test]
 fn train_help_documents_the_task_spec_grammar() {
     // The train subcommand's --task flag must teach the registry grammar.
-    let out = Command::new(env!("CARGO_BIN_EXE_ol4el"))
-        .args(["train", "--help"])
-        .output()
-        .expect("run ol4el train --help");
-    assert!(out.status.success());
-    let help = String::from_utf8(out.stdout).expect("utf8");
+    let help = subcommand_help("train");
     for needle in ["--task", "logreg", "gmm", "kmeans:k=5"] {
         assert!(help.contains(needle), "train --help lost {needle:?}");
+    }
+}
+
+#[test]
+fn train_and_fleet_help_document_the_strategy_grammar() {
+    // Satellite: the strategy grammar is single-sourced in
+    // `util::cli::STRATEGY_GRAMMAR` (next to SPEC_GRAMMAR) and must show
+    // up wherever a --strategy flag exists — train AND fleet.
+    for sub in ["train", "fleet"] {
+        let help = subcommand_help(sub);
+        assert!(
+            help.contains(ol4el::util::cli::STRATEGY_GRAMMAR),
+            "{sub} --help lost the single-sourced strategy grammar"
+        );
+        for needle in [
+            "--strategy",
+            "ol4el[:bandit=B]",
+            "fixed-i[:i=N]",
+            "ac-sync",
+            "greedy-budget[:deadline=MS]",
+        ] {
+            assert!(help.contains(needle), "{sub} --help lost {needle:?}");
+        }
+        // The legacy bandit alias teaches its grammar from the same
+        // single-sourced string.
+        assert!(
+            help.contains(ol4el::util::cli::BANDIT_GRAMMAR),
+            "{sub} --help lost the single-sourced bandit grammar"
+        );
     }
 }

@@ -2,16 +2,16 @@
 //! configurations, and adversarial parameterizations must never hang,
 //! panic, or corrupt the budget ledger.
 
-use ol4el::config::{Algo, BanditKind, RunConfig};
+use ol4el::config::RunConfig;
 use ol4el::coordinator;
 use ol4el::engine::native::NativeEngine;
 use ol4el::model::TaskSpec;
 use ol4el::sim::cost::CostMode;
+use ol4el::strategy::StrategySpec;
 
 fn base() -> RunConfig {
     RunConfig {
         task: TaskSpec::svm(),
-        algo: Algo::Ol4elAsync,
         n_edges: 4,
         hetero: 4.0,
         budget: 1500.0,
@@ -85,7 +85,6 @@ fn tau_max_one_degenerates_to_constant_policy() {
     let engine = NativeEngine::default();
     let mut c = base();
     c.tau_max = 1;
-    c.fixed_interval = 1;
     let r = coordinator::run(&c, &engine).unwrap();
     assert_eq!(r.tau_histogram.len(), 1);
     assert!(r.total_updates > 0);
@@ -118,27 +117,16 @@ fn huge_tau_max_with_tiny_budget_only_uses_feasible_arms() {
 }
 
 #[test]
-fn all_bandits_run_all_algorithms() {
+fn all_bandits_run_all_manners() {
     let engine = NativeEngine::default();
-    for bandit in [
-        BanditKind::Kube { epsilon: 0.1 },
-        BanditKind::UcbBv,
-        BanditKind::Ucb1,
-        BanditKind::EpsGreedy { epsilon: 0.1 },
-        BanditKind::Thompson,
-    ] {
-        for algo in [Algo::Ol4elSync, Algo::Ol4elAsync] {
+    for bandit in ["kube", "ucb-bv", "ucb1", "eps-greedy", "thompson"] {
+        for mode in ["sync", "async"] {
             let mut c = base();
-            c.bandit = bandit;
-            c.algo = algo;
+            c.strategy =
+                StrategySpec::parse(&format!("ol4el:bandit={bandit}:mode={mode}")).unwrap();
             c.budget = 1000.0;
             let r = coordinator::run(&c, &engine).unwrap();
-            assert!(
-                r.total_updates > 0,
-                "{}/{} produced no updates",
-                bandit.name(),
-                algo.name()
-            );
+            assert!(r.total_updates > 0, "{bandit}/{mode} produced no updates");
         }
     }
 }

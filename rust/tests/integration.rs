@@ -1,17 +1,19 @@
 //! Integration tests: whole runs through the public API on the native
 //! engine, checking the paper's qualitative claims hold end to end.
 
-use ol4el::config::{Algo, RunConfig};
+use ol4el::config::RunConfig;
 use ol4el::coordinator::{self, observer, Experiment, RunEvent, Session};
 use ol4el::engine::native::NativeEngine;
+use ol4el::harness::paper_strategies;
 use ol4el::model::TaskSpec;
 use ol4el::net::{ChurnSpec, FleetSim, NetAsyncMerge, NetSyncBarrier, NetworkSpec};
+use ol4el::strategy::StrategySpec;
 use std::sync::{Arc, Mutex};
 
-fn cfg(task: TaskSpec, algo: Algo) -> RunConfig {
+fn cfg(task: TaskSpec, strategy: StrategySpec) -> RunConfig {
     RunConfig {
         task,
-        algo,
+        strategy,
         n_edges: 3,
         hetero: 1.0,
         budget: 2000.0,
@@ -25,16 +27,15 @@ fn cfg(task: TaskSpec, algo: Algo) -> RunConfig {
 #[test]
 fn all_algorithms_learn_svm() {
     let engine = NativeEngine::default();
-    for algo in [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::AcSync, Algo::FixedI] {
-        let r = coordinator::run(&cfg(TaskSpec::svm(), algo), &engine).unwrap();
+    for strategy in paper_strategies() {
+        let r = coordinator::run(&cfg(TaskSpec::svm(), strategy.clone()), &engine).unwrap();
         let first = r.trace.first().unwrap().metric;
         assert!(
             r.final_metric > first + 0.15,
-            "{} failed to learn: {first:.3} -> {:.3}",
-            algo.name(),
+            "{strategy} failed to learn: {first:.3} -> {:.3}",
             r.final_metric
         );
-        assert!(r.total_updates > 0, "{}", algo.name());
+        assert!(r.total_updates > 0, "{strategy}");
     }
 }
 
@@ -43,40 +44,35 @@ fn all_algorithms_learn_kmeans() {
     // K=3 cluster recovery has real seed variance (init + matching), so
     // assert on the two-seed mean per algorithm.
     let engine = NativeEngine::default();
-    for algo in [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::AcSync, Algo::FixedI] {
+    for strategy in paper_strategies() {
         let mut mean = 0.0;
         for seed in [3, 4] {
-            let mut c = cfg(TaskSpec::kmeans(), algo);
+            let mut c = cfg(TaskSpec::kmeans(), strategy.clone());
             c.budget = 5000.0;
             c.seed = seed;
             mean += coordinator::run(&c, &engine).unwrap().final_metric / 2.0;
         }
-        assert!(
-            mean > 0.6,
-            "{} weak clustering: mean F1 {:.3}",
-            algo.name(),
-            mean
-        );
+        assert!(mean > 0.6, "{strategy} weak clustering: mean F1 {mean:.3}");
     }
 }
 
 #[test]
 fn runs_are_reproducible_across_algorithms() {
     let engine = NativeEngine::default();
-    for algo in [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::AcSync, Algo::FixedI] {
-        let c = cfg(TaskSpec::svm(), algo);
+    for strategy in paper_strategies() {
+        let c = cfg(TaskSpec::svm(), strategy.clone());
         let a = coordinator::run(&c, &engine).unwrap();
         let b = coordinator::run(&c, &engine).unwrap();
-        assert_eq!(a.final_metric, b.final_metric, "{}", algo.name());
-        assert_eq!(a.total_updates, b.total_updates, "{}", algo.name());
-        assert_eq!(a.mean_spent, b.mean_spent, "{}", algo.name());
+        assert_eq!(a.final_metric, b.final_metric, "{strategy}");
+        assert_eq!(a.total_updates, b.total_updates, "{strategy}");
+        assert_eq!(a.mean_spent, b.mean_spent, "{strategy}");
     }
 }
 
 #[test]
 fn different_seeds_give_different_runs() {
     let engine = NativeEngine::default();
-    let mut c = cfg(TaskSpec::svm(), Algo::Ol4elAsync);
+    let mut c = cfg(TaskSpec::svm(), StrategySpec::ol4el_async());
     let a = coordinator::run(&c, &engine).unwrap();
     c.seed = 4;
     let b = coordinator::run(&c, &engine).unwrap();
@@ -93,12 +89,12 @@ fn paper_claim_async_beats_sync_at_high_heterogeneity() {
     let mut acc_async = 0.0;
     let mut acc_sync = 0.0;
     for seed in [1, 2, 3] {
-        let mut ca = cfg(TaskSpec::svm(), Algo::Ol4elAsync);
+        let mut ca = cfg(TaskSpec::svm(), StrategySpec::ol4el_async());
         ca.hetero = 10.0;
         ca.budget = 3000.0;
         ca.seed = seed;
         let mut cs = ca.clone();
-        cs.algo = Algo::Ol4elSync;
+        cs.strategy = StrategySpec::ol4el_sync();
         acc_async += coordinator::run(&ca, &engine).unwrap().final_metric;
         acc_sync += coordinator::run(&cs, &engine).unwrap().final_metric;
     }
@@ -112,7 +108,7 @@ fn paper_claim_async_beats_sync_at_high_heterogeneity() {
 fn paper_claim_accuracy_rises_with_budget() {
     // Fig. 4's monotone trade-off: more resource -> better model.
     let engine = NativeEngine::default();
-    let mut small = cfg(TaskSpec::svm(), Algo::Ol4elAsync);
+    let mut small = cfg(TaskSpec::svm(), StrategySpec::ol4el_async());
     small.budget = 500.0;
     let mut large = small.clone();
     large.budget = 4000.0;
@@ -129,12 +125,12 @@ fn paper_claim_accuracy_rises_with_budget() {
 #[test]
 fn trace_is_monotone_in_time_and_consumption() {
     let engine = NativeEngine::default();
-    for algo in [Algo::Ol4elSync, Algo::Ol4elAsync] {
-        let r = coordinator::run(&cfg(TaskSpec::svm(), algo), &engine).unwrap();
+    for strategy in [StrategySpec::ol4el_sync(), StrategySpec::ol4el_async()] {
+        let r = coordinator::run(&cfg(TaskSpec::svm(), strategy.clone()), &engine).unwrap();
         for w in r.trace.windows(2) {
-            assert!(w[1].wall_ms >= w[0].wall_ms, "{}", algo.name());
-            assert!(w[1].mean_spent >= w[0].mean_spent, "{}", algo.name());
-            assert!(w[1].updates >= w[0].updates, "{}", algo.name());
+            assert!(w[1].wall_ms >= w[0].wall_ms, "{strategy}");
+            assert!(w[1].mean_spent >= w[0].mean_spent, "{strategy}");
+            assert!(w[1].updates >= w[0].updates, "{strategy}");
         }
     }
 }
@@ -142,7 +138,7 @@ fn trace_is_monotone_in_time_and_consumption() {
 #[test]
 fn variable_cost_mode_runs_with_ucb_bv() {
     let engine = NativeEngine::default();
-    let mut c = cfg(TaskSpec::svm(), Algo::Ol4elAsync);
+    let mut c = cfg(TaskSpec::svm(), StrategySpec::ol4el_async());
     c.cost.mode = ol4el::sim::cost::CostMode::Variable { cv: 0.3 };
     let r = coordinator::run(&c, &engine).unwrap();
     assert!(r.total_updates > 0);
@@ -152,7 +148,7 @@ fn variable_cost_mode_runs_with_ucb_bv() {
 #[test]
 fn label_skew_partition_still_learns() {
     let engine = NativeEngine::default();
-    let mut c = cfg(TaskSpec::svm(), Algo::Ol4elAsync);
+    let mut c = cfg(TaskSpec::svm(), StrategySpec::ol4el_async());
     c.partition = ol4el::config::PartitionKind::LabelSkew { alpha: 0.3 };
     let r = coordinator::run(&c, &engine).unwrap();
     assert!(r.final_metric > 0.4, "skewed F1 {}", r.final_metric);
@@ -161,7 +157,7 @@ fn label_skew_partition_still_learns() {
 #[test]
 fn single_edge_fleet_works() {
     let engine = NativeEngine::default();
-    let mut c = cfg(TaskSpec::kmeans(), Algo::Ol4elAsync);
+    let mut c = cfg(TaskSpec::kmeans(), StrategySpec::ol4el_async());
     c.n_edges = 1;
     let r = coordinator::run(&c, &engine).unwrap();
     assert!(r.total_updates > 0);
@@ -171,7 +167,7 @@ fn single_edge_fleet_works() {
 #[test]
 fn tiny_budget_retires_without_updates() {
     let engine = NativeEngine::default();
-    let mut c = cfg(TaskSpec::svm(), Algo::Ol4elAsync);
+    let mut c = cfg(TaskSpec::svm(), StrategySpec::ol4el_async());
     c.budget = 1.0; // cheaper than any arm
     let r = coordinator::run(&c, &engine).unwrap();
     assert_eq!(r.total_updates, 0);
@@ -182,7 +178,7 @@ fn tiny_budget_retires_without_updates() {
 #[test]
 fn config_json_roundtrip_through_run() {
     let engine = NativeEngine::default();
-    let c = cfg(TaskSpec::svm(), Algo::Ol4elSync);
+    let c = cfg(TaskSpec::svm(), StrategySpec::ol4el_sync());
     let j = c.to_json();
     let c2 = RunConfig::from_json(&j).unwrap();
     let a = coordinator::run(&c, &engine).unwrap();
@@ -196,12 +192,12 @@ fn observer_global_updates_mirror_trace_bit_for_bit() {
     // via the builder receives exactly the GlobalUpdate stream that
     // RunResult::trace is rebuilt from — bit-for-bit, both manners.
     let engine = NativeEngine::default();
-    for algo in [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::AcSync, Algo::FixedI] {
+    for strategy in paper_strategies() {
         let seen = Arc::new(Mutex::new(Vec::new()));
         let sink = seen.clone();
         let result = Experiment::builder()
             .task(TaskSpec::svm())
-            .algo(algo)
+            .strategy(strategy.clone())
             .edges(3)
             .budget(2000.0)
             .data_n(5000)
@@ -215,9 +211,9 @@ fn observer_global_updates_mirror_trace_bit_for_bit() {
             .run(&engine)
             .unwrap();
         let seen = seen.lock().unwrap();
-        assert_eq!(seen.len(), result.trace.len(), "{}", algo.name());
+        assert_eq!(seen.len(), result.trace.len(), "{strategy}");
         for (streamed, recorded) in seen.iter().zip(&result.trace) {
-            assert_eq!(streamed, recorded, "{}", algo.name());
+            assert_eq!(streamed, recorded, "{strategy}");
         }
     }
 }
@@ -227,11 +223,11 @@ fn experiment_builder_reproduces_wire_config_runs() {
     // The builder is a front door over the same wire format: identical
     // settings must give identical runs (same RNG schedule end to end).
     let engine = NativeEngine::default();
-    let wire = cfg(TaskSpec::svm(), Algo::Ol4elAsync);
+    let wire = cfg(TaskSpec::svm(), StrategySpec::ol4el_async());
     let a = coordinator::run(&wire, &engine).unwrap();
     let b = Experiment::builder()
         .task(TaskSpec::svm())
-        .algo(Algo::Ol4elAsync)
+        .strategy(StrategySpec::ol4el_async())
         .edges(3)
         .hetero(1.0)
         .budget(2000.0)
@@ -275,12 +271,12 @@ fn net_transport_with_ideal_network_reproduces_direct_stream_bit_for_bit() {
     // the event stream of the legacy direct-call manners — every
     // RoundStart, LocalReport, GlobalUpdate, EdgeRetired and Finished
     // payload, in order, bit for bit.
-    for algo in [Algo::Ol4elSync, Algo::Ol4elAsync, Algo::AcSync, Algo::FixedI] {
-        let c = cfg(TaskSpec::svm(), algo);
+    for strategy in paper_strategies() {
+        let c = cfg(TaskSpec::svm(), strategy.clone());
         assert!(c.network.is_ideal() && c.churn.is_none());
         let (direct_stream, direct) = event_stream(&c, None);
         let netted = |c: &RunConfig| {
-            if algo == Algo::Ol4elAsync {
+            if !c.sync() {
                 let mut m = NetAsyncMerge::new();
                 event_stream(c, Some(&mut m))
             } else {
@@ -292,17 +288,16 @@ fn net_transport_with_ideal_network_reproduces_direct_stream_bit_for_bit() {
         assert_eq!(
             direct_stream.len(),
             net_stream.len(),
-            "{}: stream length",
-            algo.name()
+            "{strategy}: stream length"
         );
         for (k, (d, n)) in direct_stream.iter().zip(&net_stream).enumerate() {
-            assert_eq!(d, n, "{}: event {k} diverged", algo.name());
+            assert_eq!(d, n, "{strategy}: event {k} diverged");
         }
-        assert_eq!(direct.final_metric, net.final_metric, "{}", algo.name());
-        assert_eq!(direct.total_updates, net.total_updates, "{}", algo.name());
-        assert_eq!(direct.wall_ms, net.wall_ms, "{}", algo.name());
-        assert_eq!(direct.mean_spent, net.mean_spent, "{}", algo.name());
-        assert_eq!(direct.tau_histogram, net.tau_histogram, "{}", algo.name());
+        assert_eq!(direct.final_metric, net.final_metric, "{strategy}");
+        assert_eq!(direct.total_updates, net.total_updates, "{strategy}");
+        assert_eq!(direct.wall_ms, net.wall_ms, "{strategy}");
+        assert_eq!(direct.mean_spent, net.mean_spent, "{strategy}");
+        assert_eq!(direct.tau_histogram, net.tau_histogram, "{strategy}");
     }
 }
 
@@ -310,7 +305,7 @@ fn net_transport_with_ideal_network_reproduces_direct_stream_bit_for_bit() {
 fn network_and_churn_survive_the_json_roundtrip() {
     // Satellite of the net:: PR, matching the PR 1 ε-range precedent: the
     // specs ride RunConfig's wire format without loss.
-    let mut c = cfg(TaskSpec::svm(), Algo::Ol4elAsync);
+    let mut c = cfg(TaskSpec::svm(), StrategySpec::ol4el_async());
     c.network = NetworkSpec::parse("lognormal:5:0.5,bw:10,drop:0.01,part:100-200").unwrap();
     c.churn = ChurnSpec::parse("poisson:0.01,join:0.05,restart:3000,straggle:0.1:4").unwrap();
     let back = RunConfig::from_json(&c.to_json()).unwrap();
@@ -359,7 +354,7 @@ fn fleet_5000_edges_with_latency_and_churn_completes() {
     // Poisson churn completes inside the CI budget and streams
     // EdgeJoined / EdgeRetired / MessageDropped through the Observer API.
     let base = RunConfig {
-        algo: Algo::Ol4elAsync,
+        strategy: StrategySpec::ol4el_async(),
         n_edges: 5000,
         hetero: 6.0,
         budget: 1200.0,
@@ -393,7 +388,7 @@ fn fleet_5000_edges_with_latency_and_churn_completes() {
     assert!(*dropped.lock().unwrap() > 0, "no MessageDropped events");
 
     let mut sync_cfg = base;
-    sync_cfg.algo = Algo::Ol4elSync;
+    sync_cfg.strategy = StrategySpec::ol4el_sync();
     let rs = FleetSim::new(sync_cfg).unwrap().run().unwrap();
     assert!(rs.updates > 0, "sync fleet made no updates");
     assert!(rs.messages_sent >= rs.updates * 2 * 5000);
@@ -406,7 +401,7 @@ fn finished_event_matches_run_result() {
     let sink = summary.clone();
     let result = Experiment::builder()
         .task(TaskSpec::kmeans())
-        .algo(Algo::Ol4elAsync)
+        .strategy(StrategySpec::ol4el_async())
         .edges(3)
         .budget(1500.0)
         .data_n(4000)

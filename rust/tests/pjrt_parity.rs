@@ -177,7 +177,7 @@ fn end_to_end_run_parity() {
     let nat = NativeEngine::default();
     let cfg = ol4el::config::RunConfig {
         task: TaskSpec::svm(),
-        algo: ol4el::config::Algo::Ol4elSync,
+        strategy: ol4el::strategy::StrategySpec::ol4el_sync(),
         n_edges: 2,
         budget: 500.0,
         data_n: 2000,

@@ -3,7 +3,7 @@
 //! aggregation weights, event ordering, metric ranges.
 
 use ol4el::bandit::{kube::Kube, ucb_bv::UcbBv, BudgetedBandit};
-use ol4el::config::{Algo, PartitionKind, RunConfig};
+use ol4el::config::{PartitionKind, RunConfig};
 use ol4el::coordinator::{self, aggregate};
 use ol4el::engine::native::NativeEngine;
 use ol4el::metrics;
@@ -11,6 +11,7 @@ use ol4el::model::{ModelState, TaskSpec};
 use ol4el::prop_assert;
 use ol4el::sim::clock::EventQueue;
 use ol4el::sim::hetero::{realized_ratio, HeteroProfile};
+use ol4el::strategy::StrategySpec;
 use ol4el::testkit::property;
 use ol4el::util::rng::Rng;
 
@@ -215,7 +216,14 @@ fn prop_runs_respect_budget_ledger() {
         0xC1,
         8,
         |g| {
-            let algo = *g.choice(&[Algo::Ol4elSync, Algo::Ol4elAsync, Algo::AcSync, Algo::FixedI]);
+            let strategy = g
+                .choice(&[
+                    StrategySpec::ol4el_sync(),
+                    StrategySpec::ol4el_async(),
+                    StrategySpec::ac_sync(),
+                    StrategySpec::fixed_i(),
+                ])
+                .clone();
             let task = g
                 .choice(&[
                     TaskSpec::svm(),
@@ -227,14 +235,14 @@ fn prop_runs_respect_budget_ledger() {
             let hetero = g.float(1.0, 8.0);
             let budget = g.float(300.0, 1200.0);
             let n_edges = g.int(2, 4);
-            (algo, task, hetero, budget, n_edges)
+            (strategy, task, hetero, budget, n_edges)
         },
-        |(algo, task, hetero, budget, n_edges)| {
-            let (algo, hetero, budget, n_edges) = (*algo, *hetero, *budget, *n_edges);
+        |(strategy, task, hetero, budget, n_edges)| {
+            let (hetero, budget, n_edges) = (*hetero, *budget, *n_edges);
             let engine = NativeEngine::default();
             let cfg = RunConfig {
                 task: task.clone(),
-                algo,
+                strategy: strategy.clone(),
                 n_edges,
                 hetero,
                 budget,
@@ -247,8 +255,7 @@ fn prop_runs_respect_budget_ledger() {
                 cfg.cost.nominal_arm_cost(cfg.tau_max, hetero) * (1.0 + cfg.ac_overhead) * 2.0;
             prop_assert!(
                 r.mean_spent <= budget + max_round,
-                "{}: mean spent {} vs budget {budget}",
-                algo.name(),
+                "{strategy}: mean spent {} vs budget {budget}",
                 r.mean_spent
             );
             prop_assert!(

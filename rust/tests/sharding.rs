@@ -7,10 +7,11 @@
 use std::cell::RefCell;
 use std::rc::Rc;
 
-use ol4el::config::{Algo, RunConfig};
+use ol4el::config::RunConfig;
 use ol4el::coordinator::observer::from_fn;
 use ol4el::coordinator::RunEvent;
 use ol4el::net::{ChurnSpec, FleetReport, FleetSim, NetworkSpec};
+use ol4el::strategy::StrategySpec;
 
 /// Run a fleet at `shards`, capturing the complete event stream.
 fn run_captured(cfg: RunConfig, shards: usize) -> (Vec<RunEvent>, FleetReport) {
@@ -46,9 +47,9 @@ fn assert_reports_equal(a: &FleetReport, b: &FleetReport, what: &str) {
     assert_eq!(a.events, b.events, "{what}: events");
 }
 
-fn equivalence_cfg(algo: Algo, seed: u64) -> RunConfig {
+fn equivalence_cfg(strategy: StrategySpec, seed: u64) -> RunConfig {
     RunConfig {
-        algo,
+        strategy,
         n_edges: 60,
         hetero: 4.0,
         budget: 900.0,
@@ -65,7 +66,7 @@ fn equivalence_cfg(algo: Algo, seed: u64) -> RunConfig {
 
 #[test]
 fn async_event_stream_identical_across_shard_counts() {
-    let cfg = equivalence_cfg(Algo::Ol4elAsync, 11);
+    let cfg = equivalence_cfg(StrategySpec::ol4el_async(), 11);
     let (ref_events, ref_report) = run_captured(cfg.clone(), 1);
     assert!(ref_report.updates > 0, "reference run made no updates");
     assert!(
@@ -86,7 +87,7 @@ fn async_event_stream_identical_across_shard_counts() {
 
 #[test]
 fn sync_event_stream_identical_across_shard_counts() {
-    let cfg = equivalence_cfg(Algo::Ol4elSync, 23);
+    let cfg = equivalence_cfg(StrategySpec::ol4el_sync(), 23);
     let (ref_events, ref_report) = run_captured(cfg.clone(), 1);
     assert!(ref_report.updates > 0, "reference run made no updates");
     for shards in [2, 4, 7] {
@@ -100,12 +101,12 @@ fn sync_event_stream_identical_across_shard_counts() {
 fn equivalence_holds_across_seeds_and_modes() {
     // A broader (but shallower) sweep: sync and async, three seeds,
     // 1 vs 4 shards, protocol reports bit-equal.
-    for algo in [Algo::Ol4elAsync, Algo::Ol4elSync] {
+    for strategy in [StrategySpec::ol4el_async(), StrategySpec::ol4el_sync()] {
         for seed in [1, 7, 42] {
-            let cfg = equivalence_cfg(algo, seed);
+            let cfg = equivalence_cfg(strategy.clone(), seed);
             let (_, one) = run_captured(cfg.clone(), 1);
             let (_, four) = run_captured(cfg, 4);
-            assert_reports_equal(&one, &four, &format!("{algo:?} seed {seed}"));
+            assert_reports_equal(&one, &four, &format!("{strategy} seed {seed}"));
         }
     }
 }
@@ -119,9 +120,9 @@ fn window_barrier_boundary_latency_equal_to_lookahead() {
     // off-by-one in the window arithmetic (processing `<= bound` instead
     // of `< bound`, or dropping an arrival at the bound) breaks the
     // equivalence or loses messages.
-    for algo in [Algo::Ol4elAsync, Algo::Ol4elSync] {
+    for strategy in [StrategySpec::ol4el_async(), StrategySpec::ol4el_sync()] {
         let cfg = RunConfig {
-            algo,
+            strategy: strategy.clone(),
             n_edges: 40,
             hetero: 3.0,
             budget: 800.0,
@@ -133,14 +134,14 @@ fn window_barrier_boundary_latency_equal_to_lookahead() {
             ..Default::default()
         };
         let (ref_events, ref_report) = run_captured(cfg.clone(), 1);
-        assert!(ref_report.updates > 0, "{algo:?}: no updates at the boundary");
+        assert!(ref_report.updates > 0, "{strategy}: no updates at the boundary");
         for shards in [2, 4] {
             let (events, report) = run_captured(cfg.clone(), shards);
             assert_eq!(
                 events, ref_events,
-                "{algo:?} {shards}-shard boundary stream diverged"
+                "{strategy} {shards}-shard boundary stream diverged"
             );
-            assert_reports_equal(&ref_report, &report, &format!("{algo:?} boundary"));
+            assert_reports_equal(&ref_report, &report, &format!("{strategy} boundary"));
         }
     }
 }
@@ -151,7 +152,6 @@ fn zero_latency_ideal_network_still_exact() {
     // zero-delay messages — every window collapses to cascades at a
     // single instant. No parallelism, but the contract must hold.
     let cfg = RunConfig {
-        algo: Algo::Ol4elAsync,
         n_edges: 50,
         hetero: 5.0,
         budget: 700.0,

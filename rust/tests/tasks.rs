@@ -17,8 +17,9 @@
 
 use std::sync::{Arc, Mutex};
 
-use ol4el::config::{Algo, RunConfig};
+use ol4el::config::RunConfig;
 use ol4el::coordinator::{self, find_outcome, observer, ExperimentSuite, RunEvent, Session};
+use ol4el::strategy::StrategySpec;
 use ol4el::data::Dataset;
 use ol4el::edge::Hyper;
 use ol4el::engine::native::NativeEngine;
@@ -28,10 +29,10 @@ use ol4el::model::{self, Learner, StepOut, TaskFactory, TaskSpec};
 use ol4el::net::FleetSim;
 use ol4el::util::rng::Rng;
 
-fn cfg(task: TaskSpec, algo: Algo) -> RunConfig {
+fn cfg(task: TaskSpec, strategy: StrategySpec) -> RunConfig {
     RunConfig {
         task,
-        algo,
+        strategy,
         n_edges: 3,
         budget: 1500.0,
         data_n: 4000,
@@ -147,13 +148,13 @@ fn fixed_seed_event_streams_reproduce_exactly() {
     // runs emit identical event streams for both manners and both legacy
     // tasks (the trace/TracePoint payloads ride inside the stream).
     for task in [TaskSpec::svm(), TaskSpec::kmeans()] {
-        for algo in [Algo::Ol4elSync, Algo::Ol4elAsync] {
-            let c = cfg(task.clone(), algo);
+        for strategy in [StrategySpec::ol4el_sync(), StrategySpec::ol4el_async()] {
+            let c = cfg(task.clone(), strategy.clone());
             let (s1, r1) = event_stream(&c);
             let (s2, r2) = event_stream(&c);
-            assert_eq!(s1.len(), s2.len(), "{task}/{algo:?}");
+            assert_eq!(s1.len(), s2.len(), "{task}/{strategy}");
             for (k, (a, b)) in s1.iter().zip(&s2).enumerate() {
-                assert_eq!(a, b, "{task}/{algo:?}: event {k} diverged");
+                assert_eq!(a, b, "{task}/{strategy}: event {k} diverged");
             }
             assert_eq!(r1.final_metric, r2.final_metric);
             assert_eq!(r1.trace, r2.trace);
@@ -169,16 +170,16 @@ fn fixed_seed_event_streams_reproduce_exactly() {
 #[test]
 fn logreg_trains_end_to_end_both_manners() {
     let engine = NativeEngine::default();
-    for algo in [Algo::Ol4elSync, Algo::Ol4elAsync] {
-        let mut c = cfg(TaskSpec::parse("logreg:d=59:c=8").unwrap(), algo);
+    for strategy in [StrategySpec::ol4el_sync(), StrategySpec::ol4el_async()] {
+        let mut c = cfg(TaskSpec::parse("logreg:d=59:c=8").unwrap(), strategy.clone());
         c.budget = 2500.0;
         c = c.with_paper_utility();
         let r = coordinator::run(&c, &engine).unwrap();
         let first = r.trace.first().unwrap().metric;
-        assert!(r.total_updates > 0, "{algo:?}");
+        assert!(r.total_updates > 0, "{strategy}");
         assert!(
             r.final_metric > first + 0.15,
-            "{algo:?}: logreg failed to learn: {first:.3} -> {:.3}",
+            "{strategy}: logreg failed to learn: {first:.3} -> {:.3}",
             r.final_metric
         );
     }
@@ -187,17 +188,17 @@ fn logreg_trains_end_to_end_both_manners() {
 #[test]
 fn gmm_trains_end_to_end_both_manners() {
     let engine = NativeEngine::default();
-    for algo in [Algo::Ol4elSync, Algo::Ol4elAsync] {
+    for strategy in [StrategySpec::ol4el_sync(), StrategySpec::ol4el_async()] {
         // Cluster recovery has seed variance (init + matching): assert on
         // the two-seed mean, like the kmeans integration test.
         let mut mean = 0.0;
         for seed in [3, 4] {
-            let mut c = cfg(TaskSpec::parse("gmm:k=3").unwrap(), algo);
+            let mut c = cfg(TaskSpec::parse("gmm:k=3").unwrap(), strategy.clone());
             c.budget = 5000.0;
             c.seed = seed;
             mean += coordinator::run(&c, &engine).unwrap().final_metric / 2.0;
         }
-        assert!(mean > 0.6, "{algo:?}: weak GMM clustering, mean F1 {mean:.3}");
+        assert!(mean > 0.6, "{strategy}: weak GMM clustering, mean F1 {mean:.3}");
     }
 }
 
@@ -216,7 +217,7 @@ fn suites_sweep_the_new_tasks() {
             TaskSpec::logreg(),
             TaskSpec::parse("gmm:k=3").unwrap(),
         ])
-        .algos([Algo::Ol4elAsync]);
+        .strategies([StrategySpec::ol4el_async()]);
     let outs = suite.run_native().unwrap();
     assert_eq!(outs.len(), 3);
     for out in &outs {
@@ -226,8 +227,9 @@ fn suites_sweep_the_new_tasks() {
             out.spec.task
         );
     }
-    assert!(find_outcome(&outs, &TaskSpec::logreg(), Algo::Ol4elAsync, 3, 1.0).is_some());
-    assert!(find_outcome(&outs, &TaskSpec::gmm(), Algo::Ol4elAsync, 3, 1.0).is_some());
+    let ol4el = StrategySpec::ol4el_async();
+    assert!(find_outcome(&outs, &TaskSpec::logreg(), &ol4el, 3, 1.0).is_some());
+    assert!(find_outcome(&outs, &TaskSpec::gmm(), &ol4el, 3, 1.0).is_some());
 }
 
 #[test]
@@ -238,7 +240,6 @@ fn fleet_carries_new_tasks_and_sharding_stays_exact() {
     for task in [TaskSpec::logreg(), TaskSpec::parse("gmm:k=3").unwrap()] {
         let c = RunConfig {
             task,
-            algo: Algo::Ol4elAsync,
             n_edges: 120,
             hetero: 4.0,
             budget: 1200.0,
@@ -352,7 +353,7 @@ fn runtime_registered_task_runs_end_to_end() {
     let spec = TaskSpec::parse("toymean").unwrap();
     assert_eq!(spec.name(), "toymean");
     // ...survives the JSON wire format...
-    let mut c = cfg(spec, Algo::Ol4elSync);
+    let mut c = cfg(spec, StrategySpec::ol4el_sync());
     c.data_n = 1000;
     c.budget = 800.0;
     c.hyper.lr = 0.5; // the toy tracker needs a brisk step to converge
