@@ -36,7 +36,9 @@ pub mod utility;
 
 pub use experiment::{Experiment, ExperimentBuilder};
 pub use observer::{LocalReport, Observer, RunEvent, TraceObserver};
-pub use session::{default_mode, mode_for, CollaborationMode, Session};
+pub use session::{
+    default_mode, mode_for, CollaborationMode, RemoteOutcome, RemoteRunner, Session,
+};
 pub use suite::{find_outcome, find_outcome_net, CellSpec, ExperimentSuite, SuiteOutcome};
 
 use anyhow::{anyhow, Result};

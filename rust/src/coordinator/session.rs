@@ -50,6 +50,48 @@ pub trait CollaborationMode {
     fn is_done(&self, session: &Session<'_>) -> bool;
 }
 
+/// Routes every [`Session::local_round`] to an out-of-process edge — the
+/// hook behind `coordinator serve` (`net::wire`).
+///
+/// Installing a runner changes *where* the τ local iterations execute,
+/// never their order, their inputs, or the coordinator-side RNG draws:
+/// the collaboration manners keep calling `local_round` at exactly the
+/// same points, so a remote run's event stream is bit-identical to the
+/// in-process run by construction.
+pub trait RemoteRunner {
+    /// Execute τ iterations for `edge` remotely. `params` holds the
+    /// coordinator's mirror of the edge's local model: the launch ships
+    /// it out, and the edge's updated parameters are written back in
+    /// place before returning (untouched when the edge is gone).
+    fn remote_round(
+        &mut self,
+        edge: usize,
+        tau: usize,
+        hyper: &Hyper,
+        params: &mut Vec<f32>,
+    ) -> Result<RemoteOutcome>;
+
+    /// Called once after the run loop finishes (e.g. broadcast a clean
+    /// shutdown to every connected edge). Default: nothing.
+    fn finish(&mut self) {}
+}
+
+/// What one [`RemoteRunner::remote_round`] call reports back.
+#[derive(Clone, Debug)]
+pub struct RemoteOutcome {
+    /// The round result (a zero fallback round when `gone`/`left`).
+    pub round: LocalRound,
+    /// Times the edge dropped and successfully rejoined during the round
+    /// (each one becomes an `EdgeJoined` event).
+    pub rejoined: u32,
+    /// The edge crashed and never came back inside the rejoin window —
+    /// it is retired and never launched again.
+    pub gone: bool,
+    /// The edge departed cleanly (`Leave`) — retired, but distinguished
+    /// from a crash.
+    pub left: bool,
+}
+
 /// The default manner for a strategy's declared mode (paper Fig. 1:
 /// barrier rounds for every synchronous policy, event-driven merging for
 /// the asynchronous ones).
@@ -100,6 +142,7 @@ pub struct Session<'e> {
     /// Metric of the global model at the latest evaluation.
     pub last_metric: f64,
     retired_seen: Vec<bool>,
+    remote: Option<Box<dyn RemoteRunner>>,
 }
 
 impl<'e> Session<'e> {
@@ -120,7 +163,15 @@ impl<'e> Session<'e> {
             updates: 0,
             last_metric: 0.0,
             retired_seen,
+            remote: None,
         })
+    }
+
+    /// Install a [`RemoteRunner`]: every subsequent
+    /// [`local_round`](Session::local_round) executes on a remote edge
+    /// process instead of the in-process fleet (`coordinator serve`).
+    pub fn set_remote(&mut self, runner: Box<dyn RemoteRunner>) {
+        self.remote = Some(runner);
     }
 
     /// The run configuration.
@@ -156,11 +207,37 @@ impl<'e> Session<'e> {
         self.meter.measure(prev, &self.world.global, metric)
     }
 
-    /// Run `tau` local iterations on one edge's engine-backed model.
+    /// Run `tau` local iterations on one edge's engine-backed model —
+    /// in process, or on a remote edge process when a [`RemoteRunner`] is
+    /// installed (same call sites, same results, different machine).
     pub fn local_round(&mut self, edge: usize, tau: usize, hyper: &Hyper) -> Result<LocalRound> {
+        if self.remote.is_some() {
+            return self.remote_round(edge, tau, hyper);
+        }
         let world = &mut self.world;
         let (learner, edges) = (&world.learner, &mut world.edges);
         edges[edge].local_round(tau, learner.as_ref(), self.engine, &self.cfg.cost, hyper)
+    }
+
+    /// The remote branch of [`local_round`](Session::local_round): ship
+    /// the round out, mirror the returned parameters, and translate the
+    /// connection lifecycle into the fleet lifecycle (`EdgeJoined` per
+    /// successful rejoin; retirement on crash-without-rejoin or clean
+    /// leave, which the next [`sweep_retirements`](Self::sweep_retirements)
+    /// turns into `EdgeRetired`).
+    fn remote_round(&mut self, edge: usize, tau: usize, hyper: &Hyper) -> Result<LocalRound> {
+        let mut runner = self.remote.take().expect("remote runner installed");
+        let out = runner.remote_round(edge, tau, hyper, &mut self.world.edges[edge].model.params);
+        self.remote = Some(runner);
+        let out = out?;
+        for _ in 0..out.rejoined {
+            let wall_ms = self.wall_ms;
+            self.emit(RunEvent::EdgeJoined { edge, wall_ms });
+        }
+        if out.gone || out.left {
+            self.world.edges[edge].retired = true;
+        }
+        Ok(out.round)
     }
 
     /// Failure injection (fail-stop): rolls the configured crash
@@ -290,6 +367,9 @@ impl<'e> Session<'e> {
             updates: self.updates,
             final_metric,
         });
+        if let Some(runner) = self.remote.as_mut() {
+            runner.finish();
+        }
         let trace = std::mem::take(&mut self.trace).into_points();
         Ok(RunResult {
             trace,

@@ -113,6 +113,18 @@ impl Shard {
     pub fn cursor(&self) -> usize {
         self.cursor
     }
+
+    /// Advance the cursor by `rows` positions, wrapping exactly like
+    /// [`next_batch`](Shard::next_batch) (one step per row) without
+    /// materializing anything — the crash-recovery fast-forward a
+    /// rejoining `net::wire` edge uses to replay its batch sequence.
+    pub fn advance(&mut self, rows: u64) {
+        if self.indices.is_empty() {
+            return;
+        }
+        let len = self.indices.len() as u64;
+        self.cursor = ((self.cursor as u64 + rows % len) % len) as usize;
+    }
 }
 
 /// Materialize a full eval set as contiguous buffers of exactly `n` rows
@@ -174,6 +186,26 @@ mod tests {
         assert_eq!(&x[0..2], &[1.0, 1.1]);
         // Cursor advanced 5 mod 2 = 1.
         assert_eq!(shard.cursor(), 1);
+    }
+
+    #[test]
+    fn advance_matches_replayed_batches() {
+        let ds = Arc::new(tiny());
+        let mut replayed = Shard::new(ds.clone(), vec![0, 2, 3]);
+        let mut skipped = Shard::new(ds, vec![0, 2, 3]);
+        let (mut x, mut y) = (Vec::new(), Vec::new());
+        for _ in 0..7 {
+            replayed.next_batch(2, &mut x, &mut y);
+        }
+        skipped.advance(7 * 2);
+        assert_eq!(skipped.cursor(), replayed.cursor());
+        // The next batch after a fast-forward is the batch a live shard
+        // would have produced — the rejoin determinism contract.
+        let (mut x2, mut y2) = (Vec::new(), Vec::new());
+        replayed.next_batch(2, &mut x, &mut y);
+        skipped.next_batch(2, &mut x2, &mut y2);
+        assert_eq!(x, x2);
+        assert_eq!(y, y2);
     }
 
     #[test]

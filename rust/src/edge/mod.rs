@@ -178,6 +178,21 @@ impl EdgeServer {
         })
     }
 
+    /// Crash-recovery fast-forward (`net::wire` rejoin): skip this
+    /// freshly rebuilt edge past `iterations` local iterations it already
+    /// completed before crashing, by advancing the shard cursor one
+    /// `batch` per iteration and replaying the per-iteration cost draw —
+    /// so the shard position and the RNG stream land exactly where a
+    /// crash-free edge would be. Parameters are not touched (the
+    /// coordinator ships them with every launch), and nothing is charged
+    /// (the ledger lives coordinator-side).
+    pub fn fast_forward(&mut self, iterations: u64, batch: usize, cost: &CostModel) {
+        self.shard.advance(iterations.saturating_mul(batch as u64));
+        for _ in 0..iterations {
+            let _ = cost.sample_comp(self.slowdown, 0.0, &mut self.rng);
+        }
+    }
+
     /// Adopt the global model (download at a global update).
     pub fn sync_with_global(&mut self, global: &ModelState, version: u64) {
         self.model.params.copy_from_slice(&global.params);
@@ -244,6 +259,36 @@ mod tests {
             assert_eq!(r.iterations, 2, "{name}");
             assert_ne!(before, e.model.params, "{name}: params unchanged");
         }
+    }
+
+    #[test]
+    fn fast_forward_matches_a_live_edge() {
+        // A rebuilt-and-fast-forwarded edge must continue exactly like
+        // the edge that ran straight through — under the Variable cost
+        // mode, whose per-iteration draws are the hard part to replay.
+        use crate::sim::cost::CostMode;
+        let cost = CostModel {
+            mode: CostMode::Variable { cv: 0.3 },
+            ..CostModel::default()
+        };
+        let hyper = Hyper::default();
+        let (mut live, learner, eng) = mk_edge(TaskSpec::svm());
+        let (mut rebuilt, _, _) = mk_edge(TaskSpec::svm());
+        for tau in [3usize, 5, 2] {
+            live.local_round(tau, learner.as_ref(), &eng, &cost, &hyper)
+                .unwrap();
+        }
+        rebuilt.fast_forward(3 + 5 + 2, learner.batch(), &cost);
+        rebuilt.model.params.copy_from_slice(&live.model.params);
+        let a = live
+            .local_round(4, learner.as_ref(), &eng, &cost, &hyper)
+            .unwrap();
+        let b = rebuilt
+            .local_round(4, learner.as_ref(), &eng, &cost, &hyper)
+            .unwrap();
+        assert_eq!(a.comp_cost, b.comp_cost, "cost RNG stream must replay");
+        assert_eq!(a.train_signal, b.train_signal, "shard cursor must replay");
+        assert_eq!(live.model.params, rebuilt.model.params);
     }
 
     #[test]

@@ -7,14 +7,15 @@ use anyhow::{anyhow, Result};
 use ol4el::config::{legacy_strategy, PartitionKind, RunConfig};
 use ol4el::coordinator::observer::from_fn;
 use ol4el::coordinator::utility::UtilityKind;
-use ol4el::coordinator::{ExperimentBuilder, RunEvent};
+use ol4el::coordinator::{ExperimentBuilder, RunEvent, RunResult};
 use ol4el::harness::{self, EngineKind, SweepOpts};
 use ol4el::model::{Learner as _, TaskSpec};
+use ol4el::net::wire::{accept_fleet, bench_loopback, JoinOpts, WireServer};
 use ol4el::net::{ChurnSpec, FleetSim, NetworkSpec};
 use ol4el::sim::cost::CostMode;
 use ol4el::sim::hetero::HeteroProfile;
 use ol4el::strategy::StrategySpec;
-use ol4el::util::cli::{Args, Cli, BANDIT_GRAMMAR, STRATEGY_GRAMMAR};
+use ol4el::util::cli::{Args, Cli, BANDIT_GRAMMAR, STRATEGY_GRAMMAR, WIRE_GRAMMAR};
 use ol4el::util::json::Json;
 use ol4el::util::table::{f, Table};
 
@@ -39,6 +40,9 @@ fn usage() -> String {
            deploy              threaded testbed: one OS thread per edge, measured costs\n\
            fleet               engine-free sharded fleet simulation at 10k-100k edges\n\
                                (message-passing transport, network + churn models)\n\
+           coordinator serve   real deployment: serve one session to remote edge\n\
+                               processes over TCP (length-prefixed JSON frames)\n\
+           edge join ADDR      real deployment: run one edge server process\n\
            fig3 .. fig6        regenerate a figure (tables + results/*.csv)\n\
            bench-tasks         per-task step/event throughput (BENCH_tasks.json)\n\
            bench-strategies    per-strategy decision-loop throughput\n\
@@ -62,6 +66,8 @@ fn run_cli(argv: &[String]) -> Result<()> {
         "train" => cmd_train(rest),
         "deploy" => cmd_deploy(rest),
         "fleet" => cmd_fleet(rest),
+        "coordinator" => cmd_coordinator(rest),
+        "edge" => cmd_edge(rest),
         "fig3" | "fig4" | "fig5" | "fig6" => cmd_fig(cmd, rest),
         "bench-tasks" => cmd_bench_tasks(rest),
         "bench-strategies" => cmd_bench_strategies(rest),
@@ -279,7 +285,15 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     let t0 = std::time::Instant::now();
     let r = exp.run(engine.as_ref())?;
     let dt = t0.elapsed().as_secs_f64();
+    report_run(&a, &cfg, &r, dt)
+}
 
+/// Post-run reporting shared by `train` and `coordinator serve`: the
+/// `--json` document, the `--trace` table and the summary lines. One
+/// format on purpose — the distributed run's output is diffable against
+/// the in-process run's (`tests/wire_e2e.rs` asserts everything but
+/// `host_seconds` is bit-identical).
+fn report_run(a: &Args, cfg: &RunConfig, r: &RunResult, dt: f64) -> Result<()> {
     if a.flag("json") {
         let trace = Json::arr(r.trace.iter().map(|p| {
             Json::obj(vec![
@@ -355,6 +369,227 @@ fn cmd_deploy(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn coordinator_usage() -> String {
+    format!(
+        "ol4el coordinator — real networked deployment: the cloud side\n\
+         \n\
+         Subcommands:\n\
+           serve    listen on --addr, gather the fleet, run one session over TCP\n\
+         \n\
+         Grammar: {WIRE_GRAMMAR}\n\
+         \n\
+         Run `ol4el coordinator serve --help` for flags.\n"
+    )
+}
+
+fn cmd_coordinator(argv: &[String]) -> Result<()> {
+    match argv.first().map(String::as_str) {
+        Some("serve") => cmd_serve(&argv[1..]),
+        None | Some("--help") | Some("-h") | Some("help") => {
+            print!("{}", coordinator_usage());
+            Ok(())
+        }
+        Some(other) => Err(anyhow!(
+            "unknown coordinator subcommand '{other}'\n\n{}",
+            coordinator_usage()
+        )),
+    }
+}
+
+/// `coordinator serve` = the full `train` flag set plus the listen
+/// address and the crash-handling windows: the served session is the
+/// same experiment a local `train` would run.
+fn serve_cli() -> Cli {
+    let mut cli = train_cli()
+        .opt("addr", "127.0.0.1:7070", "HOST:PORT to listen on for edge joins")
+        .opt(
+            "round-timeout-ms",
+            "30000",
+            "ms to wait for a round's report before declaring the edge crashed",
+        )
+        .opt(
+            "rejoin-window-ms",
+            "10000",
+            "ms a crashed edge may rejoin before being retired for good",
+        );
+    cli.name = "ol4el coordinator serve";
+    cli.about = "serve one training session to remote edge processes over TCP";
+    cli
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let Some(a) = serve_cli().parse(argv).map_err(|e| anyhow!(e))? else {
+        return Ok(());
+    };
+    let exp = builder_from_args(&a)?.build()?;
+    let cfg = exp.config().clone();
+    if !cfg.network.is_ideal() || !cfg.churn.is_none() {
+        return Err(anyhow!(
+            "coordinator serve runs on a real network: --network must stay 'ideal' and \
+             --churn 'none' (the simulated models belong to `train` and `fleet`; \
+             real latency and real crashes come in over the wire)"
+        ));
+    }
+    let engine_kind =
+        EngineKind::parse(&a.str("engine")).ok_or_else(|| anyhow!("bad --engine"))?;
+    let engine = harness::build_engine(engine_kind, &a.str("artifacts"))?;
+    let addr = a.str("addr");
+    let listener =
+        std::net::TcpListener::bind(&addr).map_err(|e| anyhow!("binding {addr}: {e}"))?;
+    let local = listener
+        .local_addr()
+        .map_err(|e| anyhow!("local addr: {e}"))?;
+    eprintln!(
+        "[ol4el] coordinator: listening on {local} for {} edges (task={} strategy={})",
+        cfg.n_edges,
+        cfg.task.name(),
+        cfg.strategy.label()
+    );
+    let fleet =
+        accept_fleet(&listener, cfg.n_edges).map_err(|e| anyhow!("gathering the fleet: {e}"))?;
+    let mut session = exp.session(engine.as_ref())?;
+    // Hello-reported slowdown overrides replace the hetero profile's
+    // value for that edge. The strategy prices arms off the slowdown
+    // vector, so rebuild it before any select sees the stale profile.
+    let mut overridden = false;
+    for (i, p) in fleet.iter().enumerate() {
+        if let Some(s) = p.slowdown {
+            session.world.slowdowns[i] = s;
+            session.world.edges[i].slowdown = s;
+            overridden = true;
+        }
+    }
+    if overridden {
+        session.strategy = ol4el::strategy::build(&cfg, &session.world.slowdowns)?;
+    }
+    let server = WireServer::start(
+        listener,
+        fleet,
+        cfg.to_json(),
+        session.world.slowdowns.clone(),
+        std::time::Duration::from_millis(a.u64("round-timeout-ms").map_err(|e| anyhow!(e))?),
+        std::time::Duration::from_millis(a.u64("rejoin-window-ms").map_err(|e| anyhow!(e))?),
+    )
+    .map_err(|e| anyhow!("starting the wire server: {e}"))?;
+    session.set_remote(Box::new(server));
+    if a.flag("live") {
+        session.observe(from_fn(|ev: &RunEvent| match ev {
+            RunEvent::GlobalUpdate { point } => eprintln!(
+                "[live] t={:>8.0}ms  spent={:>7.0}ms  updates={:>5}  metric={:.4}",
+                point.wall_ms, point.mean_spent, point.updates, point.metric
+            ),
+            RunEvent::EdgeJoined { edge, wall_ms } => {
+                eprintln!("[live] edge {edge} rejoined at t={wall_ms:.0}ms")
+            }
+            RunEvent::EdgeRetired { edge, wall_ms, spent } => {
+                eprintln!("[live] edge {edge} retired at t={wall_ms:.0}ms ({spent:.0}ms spent)")
+            }
+            _ => {}
+        }));
+    }
+    eprintln!("[ol4el] coordinator: fleet complete — running");
+    let t0 = std::time::Instant::now();
+    let r = session.run()?;
+    let dt = t0.elapsed().as_secs_f64();
+    report_run(&a, &cfg, &r, dt)
+}
+
+fn edge_usage() -> String {
+    format!(
+        "ol4el edge — real networked deployment: one edge server process\n\
+         \n\
+         Subcommands:\n\
+           join ADDR    connect to a coordinator and serve local rounds\n\
+         \n\
+         Grammar: {WIRE_GRAMMAR}\n\
+         \n\
+         Run `ol4el edge join --help` for flags.\n"
+    )
+}
+
+fn cmd_edge(argv: &[String]) -> Result<()> {
+    match argv.first().map(String::as_str) {
+        Some("join") => cmd_edge_join(&argv[1..]),
+        None | Some("--help") | Some("-h") | Some("help") => {
+            print!("{}", edge_usage());
+            Ok(())
+        }
+        Some(other) => Err(anyhow!(
+            "unknown edge subcommand '{other}'\n\n{}",
+            edge_usage()
+        )),
+    }
+}
+
+fn edge_join_cli() -> Cli {
+    Cli::new(
+        "ol4el edge join",
+        "join a coordinator as one edge server process (positional: ADDR = HOST:PORT)",
+    )
+    .opt_no_default(
+        "slowdown",
+        "heterogeneity slowdown override (>= 1) reported at join",
+    )
+    .opt_no_default("leave-after", "send a clean Leave after completing N rounds")
+    .opt_no_default(
+        "drop-round",
+        "chaos: drop the connection without reporting round N, once, then rejoin",
+    )
+    .opt_no_default("rejoin", "rejoin a running session as this edge id")
+    .opt("max-backoff-ms", "2000", "reconnect backoff ceiling (ms)")
+    .opt("max-attempts", "40", "connection attempts before giving up")
+    .opt("engine", "native", "native | pjrt (the full 3-layer path)")
+    .opt("artifacts", "artifacts", "artifact directory for --engine pjrt")
+}
+
+fn cmd_edge_join(argv: &[String]) -> Result<()> {
+    let Some(a) = edge_join_cli().parse(argv).map_err(|e| anyhow!(e))? else {
+        return Ok(());
+    };
+    let Some(addr) = a.positional.first() else {
+        return Err(anyhow!(
+            "edge join: missing ADDR (HOST:PORT; see `ol4el edge join --help`)"
+        ));
+    };
+    let opt_f64 = |k: &str| -> Result<Option<f64>> {
+        a.get(k)
+            .map(|s| {
+                s.parse::<f64>()
+                    .map_err(|_| anyhow!("--{k}: expected a number"))
+            })
+            .transpose()
+    };
+    let opt_u64 = |k: &str| -> Result<Option<u64>> {
+        a.get(k)
+            .map(|s| {
+                s.parse::<u64>()
+                    .map_err(|_| anyhow!("--{k}: expected a u64"))
+            })
+            .transpose()
+    };
+    let opt_usize = |k: &str| -> Result<Option<usize>> {
+        a.get(k)
+            .map(|s| {
+                s.parse::<usize>()
+                    .map_err(|_| anyhow!("--{k}: expected an unsigned integer"))
+            })
+            .transpose()
+    };
+    let opts = JoinOpts {
+        slowdown: opt_f64("slowdown")?,
+        leave_after: opt_u64("leave-after")?,
+        drop_round: opt_u64("drop-round")?,
+        rejoin: opt_usize("rejoin")?,
+        max_backoff_ms: a.u64("max-backoff-ms").map_err(|e| anyhow!(e))?,
+        max_attempts: a.u64("max-attempts").map_err(|e| anyhow!(e))? as u32,
+    };
+    let engine = harness::build_engine(
+        EngineKind::parse(&a.str("engine")).ok_or_else(|| anyhow!("bad --engine"))?,
+        &a.str("artifacts"),
+    )?;
+    ol4el::net::wire::join(addr, &opts, engine.as_ref())
+}
+
 fn fleet_cli() -> Cli {
     Cli::new(
         "ol4el fleet",
@@ -394,6 +629,16 @@ fn fleet_cli() -> Cli {
     )
     .opt("seed", "42", "PRNG seed")
     .opt("bench-out", "BENCH_fleet.json", "where --smoke writes its numbers")
+    .opt(
+        "wire-bench-out",
+        "BENCH_wire.json",
+        "where --smoke writes the TCP loopback wire measurement",
+    )
+    .opt(
+        "wire-frames",
+        "2000",
+        "round trips the --smoke wire bench pushes through 127.0.0.1",
+    )
     .switch(
         "smoke",
         "perf smoke: run sync+async at 1 shard and at --shards, assert bit-equal \
@@ -659,6 +904,18 @@ fn cmd_fleet_smoke(a: &Args) -> Result<()> {
     let path = a.str("bench-out");
     std::fs::write(&path, j.pretty()).map_err(|e| anyhow!("writing {path}: {e}"))?;
     eprintln!("[ol4el] wrote {path} ({host_seconds:.2}s host)");
+
+    // The real-wire loopback measurement (net::wire): frame codec + TCP
+    // transport throughput, gated > 0 in CI's net-e2e job.
+    let frames = a.usize("wire-frames").map_err(|e| anyhow!(e))?.max(1);
+    let wb = bench_loopback(frames).map_err(|e| anyhow!("wire bench: {e}"))?;
+    println!(
+        "[smoke] wire: {:.0} frames/sec  RTT mean {:.3}ms max {:.3}ms  ({} round trips of {} bytes)",
+        wb.frames_per_sec, wb.mean_round_trip_ms, wb.max_round_trip_ms, wb.frames, wb.frame_bytes
+    );
+    let wpath = a.str("wire-bench-out");
+    std::fs::write(&wpath, wb.to_json().pretty()).map_err(|e| anyhow!("writing {wpath}: {e}"))?;
+    eprintln!("[ol4el] wrote {wpath}");
     Ok(())
 }
 

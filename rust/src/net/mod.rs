@@ -25,6 +25,11 @@
 //!   direct-call manners bit for bit under [`NetworkSpec::ideal`] and
 //!   charge every network delay to the edges' resource ledgers otherwise,
 //!   so the bandit actually pays for the network.
+//! * [`wire`] — the *real* network: [`TcpTransport`] speaking
+//!   length-prefixed JSON frames over `std::net` sockets, plus the
+//!   rendezvous protocol behind `ol4el coordinator serve` / `ol4el edge
+//!   join` that splits a session across processes while keeping the
+//!   result bit-identical to the in-process ideal-network run.
 //! * [`fleet`] — [`FleetSim`]: the scale driver. No compute engine, no
 //!   real models — virtual local rounds priced by the [`CostModel`]
 //!   (fixed/variable) at 10k–100k edges, with churn, streaming the same
@@ -42,6 +47,7 @@ pub mod message;
 pub mod model;
 pub mod modes;
 pub mod transport;
+pub mod wire;
 
 pub use churn::ChurnSpec;
 pub use fleet::{FleetReport, FleetSim};
@@ -49,3 +55,4 @@ pub use message::{Delivery, Message, NetEvent, Node, Occurrence, Payload};
 pub use model::{LatencyModel, NetworkSpec};
 pub use modes::{NetAsyncMerge, NetSyncBarrier};
 pub use transport::{SimTransport, Transport, TransportStats};
+pub use wire::TcpTransport;

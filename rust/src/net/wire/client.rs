@@ -1,0 +1,269 @@
+//! The edge side of the rendezvous protocol: `ol4el edge join`.
+//!
+//! One process per edge. The client connects, says `Hello`, and rebuilds
+//! its entire world from the `Welcome`'s run config: `World::build` is
+//! deterministic in the config alone, so the edge derives the same
+//! synthetic shard, initial parameters and per-edge RNG stream the
+//! coordinator's bookkeeping assumes — training data never crosses the
+//! wire. It then serves `Launch` → compute τ iterations → `Done` until
+//! `Shutdown`, answering nothing else.
+//!
+//! Crash recovery: any connection drop triggers reconnect-on-drop with
+//! bounded exponential backoff and `Hello{rejoin: Some(id)}`. The fresh
+//! `Welcome` carries `iters_done`, and
+//! [`EdgeServer::fast_forward`] replays the rebuilt shard cursor and
+//! cost-RNG past the banked iterations — so the recomputed round is
+//! bit-identical to the one the crash destroyed, and the whole session
+//! stays bit-identical to a crash-free run.
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::World;
+use crate::edge::{EdgeServer, Hyper};
+use crate::engine::ComputeEngine;
+use crate::model::Learner;
+
+use super::frame::{write_frame, Frame, FrameReader, WireError, PROTO_VERSION};
+
+/// Idle time before the client probes the coordinator with a `Ping`.
+const HEARTBEAT: Duration = Duration::from_secs(2);
+
+/// `edge join` options (every knob of the `edge join` CLI grammar).
+#[derive(Clone, Debug)]
+pub struct JoinOpts {
+    /// Heterogeneity-slowdown override sent in the `Hello` (must be ≥ 1;
+    /// the coordinator applies it fleet-wide before the run starts).
+    pub slowdown: Option<f64>,
+    /// Leave cleanly (send `Leave`) after completing this many rounds.
+    pub leave_after: Option<u64>,
+    /// Chaos knob for the e2e tests: drop the connection *without
+    /// reporting* after computing this round, once, then recover through
+    /// the rejoin path.
+    pub drop_round: Option<u64>,
+    /// Rejoin as this edge id instead of asking for a fresh one.
+    pub rejoin: Option<usize>,
+    /// Reconnect backoff ceiling in ms.
+    pub max_backoff_ms: u64,
+    /// Connection attempts before giving up (drops reset the count).
+    pub max_attempts: u32,
+}
+
+impl Default for JoinOpts {
+    fn default() -> Self {
+        JoinOpts {
+            slowdown: None,
+            leave_after: None,
+            drop_round: None,
+            rejoin: None,
+            max_backoff_ms: 2000,
+            max_attempts: 40,
+        }
+    }
+}
+
+/// Why one connection's serve loop ended.
+enum End {
+    /// The coordinator said `Shutdown`: the session is over.
+    Shutdown,
+    /// We sent `Leave` (clean departure).
+    Left,
+    /// The connection dropped while we held this edge id.
+    Dropped(usize),
+}
+
+/// Run the edge process against `addr` until the session ends: the whole
+/// `edge join` lifecycle including reconnect-on-drop with bounded
+/// backoff. Returns when the coordinator shuts the session down (or the
+/// edge leaves cleanly); errors only on non-recoverable failures.
+pub fn join(addr: &str, opts: &JoinOpts, engine: &dyn ComputeEngine) -> Result<()> {
+    let mut rejoin = opts.rejoin;
+    let mut rounds_done: u64 = 0;
+    let mut chaos_armed = opts.drop_round.is_some();
+    let mut attempts = 0u32;
+    let mut backoff = Duration::from_millis(250);
+    let ceiling = Duration::from_millis(opts.max_backoff_ms.max(1));
+    loop {
+        match serve_connection(addr, rejoin, opts, engine, &mut rounds_done, &mut chaos_armed) {
+            Ok(End::Shutdown) => {
+                eprintln!("[ol4el] edge: session over ({rounds_done} rounds served)");
+                return Ok(());
+            }
+            Ok(End::Left) => {
+                eprintln!("[ol4el] edge: left cleanly after {rounds_done} rounds");
+                return Ok(());
+            }
+            Ok(End::Dropped(id)) => {
+                rejoin = Some(id);
+                attempts = 0;
+                eprintln!(
+                    "[ol4el] edge {id}: connection dropped — reconnecting in {}ms",
+                    backoff.as_millis()
+                );
+            }
+            Err(e) => {
+                attempts += 1;
+                if attempts >= opts.max_attempts {
+                    return Err(e.context(format!("giving up after {attempts} attempts")));
+                }
+                eprintln!(
+                    "[ol4el] edge: attempt {attempts} failed ({e:#}); retrying in {}ms",
+                    backoff.as_millis()
+                );
+            }
+        }
+        std::thread::sleep(backoff);
+        backoff = (backoff * 2).min(ceiling);
+    }
+}
+
+/// The rebuilt local state one `Welcome` yields.
+struct LocalState {
+    server: EdgeServer,
+    learner: Box<dyn Learner>,
+    cfg: RunConfig,
+}
+
+/// One connection: handshake, then serve rounds until the session ends
+/// or the socket dies.
+fn serve_connection(
+    addr: &str,
+    rejoin: Option<usize>,
+    opts: &JoinOpts,
+    engine: &dyn ComputeEngine,
+    rounds_done: &mut u64,
+    chaos_armed: &mut bool,
+) -> Result<End> {
+    let stream = TcpStream::connect(addr).map_err(|e| anyhow!("connecting {addr}: {e}"))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(HEARTBEAT)).ok();
+    let mut write_half = stream
+        .try_clone()
+        .map_err(|e| anyhow!("cloning socket: {e}"))?;
+    let mut read_half = stream;
+    write_frame(
+        &mut write_half,
+        &Frame::Hello {
+            rejoin,
+            slowdown: opts.slowdown,
+            proto: PROTO_VERSION,
+        },
+    )
+    .map_err(|e| anyhow!("hello: {e}"))?;
+
+    let mut fr = FrameReader::new();
+    let mut me: Option<LocalState> = None;
+    let mut my_id = rejoin;
+    let dropped = |id: Option<usize>| match id {
+        Some(id) => Ok(End::Dropped(id)),
+        None => Err(anyhow!("connection lost before the welcome")),
+    };
+    loop {
+        match fr.read_frame(&mut read_half) {
+            Ok(Frame::Welcome {
+                edge,
+                config,
+                iters_done,
+                slowdown,
+            }) => {
+                me = Some(rebuild(edge, &config, iters_done, slowdown, engine)?);
+                my_id = Some(edge);
+            }
+            Ok(Frame::Launch {
+                seq,
+                tau,
+                lr,
+                params,
+            }) => {
+                let Some(local) = me.as_mut() else {
+                    bail!("protocol violation: launch before welcome");
+                };
+                local.server.model.params = params;
+                let hyper = Hyper {
+                    lr,
+                    ..local.cfg.hyper
+                };
+                let round = local.server.local_round(
+                    tau,
+                    local.learner.as_ref(),
+                    engine,
+                    &local.cfg.cost,
+                    &hyper,
+                )?;
+                *rounds_done += 1;
+                if *chaos_armed && opts.drop_round == Some(*rounds_done) {
+                    *chaos_armed = false;
+                    eprintln!(
+                        "[ol4el] edge {}: chaos — dropping the connection without reporting",
+                        my_id.unwrap_or(usize::MAX)
+                    );
+                    return dropped(my_id);
+                }
+                let done = Frame::Done {
+                    seq,
+                    comp_cost: round.comp_cost,
+                    train_signal: round.train_signal,
+                    iterations: round.iterations,
+                    params: local.server.model.params.clone(),
+                };
+                if write_frame(&mut write_half, &done).is_err() {
+                    return dropped(my_id);
+                }
+                if opts.leave_after == Some(*rounds_done) {
+                    let _ = write_frame(&mut write_half, &Frame::Leave);
+                    return Ok(End::Left);
+                }
+            }
+            Ok(Frame::Shutdown) => return Ok(End::Shutdown),
+            Ok(Frame::Ping) => {
+                if write_frame(&mut write_half, &Frame::Pong).is_err() {
+                    return dropped(my_id);
+                }
+            }
+            Ok(_) => {} // Pong and anything else: ignore
+            Err(WireError::Timeout) => {
+                // Idle: probe the coordinator so a silent death surfaces.
+                if write_frame(&mut write_half, &Frame::Ping).is_err() {
+                    return dropped(my_id);
+                }
+            }
+            Err(WireError::Eof) | Err(WireError::Io(_)) => return dropped(my_id),
+            Err(e) => return Err(anyhow!("protocol error: {e}")),
+        }
+    }
+}
+
+/// Rebuild this edge's local state from the welcome: deterministically
+/// reconstruct the world from the config, keep only our own edge, apply
+/// the effective slowdown, and fast-forward past banked iterations.
+fn rebuild(
+    edge: usize,
+    config: &crate::util::json::Json,
+    iters_done: u64,
+    slowdown: f64,
+    engine: &dyn ComputeEngine,
+) -> Result<LocalState> {
+    let cfg = RunConfig::from_json(config)?;
+    let World {
+        learner, mut edges, ..
+    } = World::build(&cfg, engine)?;
+    if edge >= edges.len() {
+        bail!("welcome assigned edge {edge} but the config builds {} edges", edges.len());
+    }
+    let mut server = edges.remove(edge);
+    server.slowdown = slowdown;
+    if iters_done > 0 {
+        server.fast_forward(iters_done, learner.batch(), &cfg.cost);
+    }
+    eprintln!(
+        "[ol4el] edge {edge}: welcomed (slowdown {slowdown}, fast-forward {iters_done} iterations)"
+    );
+    Ok(LocalState {
+        server,
+        learner,
+        cfg,
+    })
+}

@@ -1,0 +1,685 @@
+//! The wire format: length-prefixed JSON frames.
+//!
+//! Every frame on a `net::wire` TCP connection is a 4-byte big-endian
+//! `u32` length followed by exactly that many bytes of UTF-8 JSON (one
+//! [`Frame`] per body, encoded through `util::json` — no serde, no new
+//! dependencies). The codec is hostile-input safe: malformed, truncated,
+//! or oversized bytes surface as typed [`WireError`]s, never panics.
+//!
+//! ## Numeric exactness
+//!
+//! `util::json::Json` prints an `f64` with Rust's shortest round-trip
+//! representation and parses it back bit-exactly, and every `f32`
+//! widens to `f64` and narrows back without loss. Model parameters and
+//! costs therefore survive the wire bit-for-bit — the foundation of the
+//! deployment determinism contract (a remote run's trace is
+//! bit-identical to the in-process run).
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::io::{ErrorKind, Read, Write};
+
+use crate::coordinator::observer::LocalReport;
+use crate::net::message::{Delivery, Message, Node, Payload};
+use crate::util::json::Json;
+
+/// Protocol version carried in `Hello` and checked by the coordinator.
+pub const PROTO_VERSION: u64 = 1;
+
+/// Hard cap on a frame body (32 MiB). A length prefix above this is a
+/// protocol violation (or garbage bytes) and kills the connection before
+/// any allocation happens.
+pub const MAX_FRAME: usize = 32 << 20;
+
+/// A typed wire failure. Everything the codec and the rendezvous
+/// protocol can hit on hostile or broken connections, with no panics.
+#[derive(Debug)]
+pub enum WireError {
+    /// An OS-level socket error.
+    Io(std::io::Error),
+    /// A length prefix exceeded [`MAX_FRAME`].
+    TooLarge(usize),
+    /// The frame body was not valid JSON (or not UTF-8).
+    BadJson(String),
+    /// The JSON parsed but did not shape a known [`Frame`].
+    BadFrame(String),
+    /// The peer closed the connection (possibly mid-frame).
+    Eof,
+    /// A read deadline elapsed; any partial frame stays buffered in the
+    /// [`FrameReader`] and the read can simply be retried.
+    Timeout,
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "socket error: {e}"),
+            WireError::TooLarge(n) => {
+                write!(f, "frame length {n} exceeds the {MAX_FRAME}-byte cap")
+            }
+            WireError::BadJson(m) => write!(f, "frame body is not valid JSON: {m}"),
+            WireError::BadFrame(m) => write!(f, "malformed frame: {m}"),
+            WireError::Eof => write!(f, "connection closed by peer"),
+            WireError::Timeout => write!(f, "read timed out"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> WireError {
+        WireError::Io(e)
+    }
+}
+
+/// One protocol frame. `Hello`/`Welcome` form the rendezvous handshake,
+/// `Launch`/`Done` carry rounds, `Leave`/`Shutdown` end sessions cleanly
+/// (distinguishing a clean departure from a crash), `Ping`/`Pong` keep
+/// idle connections alive, and `Msg` tunnels the simulator's [`Message`]
+/// vocabulary for [`TcpTransport`](super::TcpTransport).
+#[derive(Clone, Debug)]
+pub enum Frame {
+    /// Edge → coordinator, first frame on every connection.
+    Hello {
+        /// `Some(id)`: a crashed edge reclaiming its identity.
+        /// `None`: a fresh edge asking for an id.
+        rejoin: Option<usize>,
+        /// Optional heterogeneity-slowdown override (`edge join --slowdown`).
+        slowdown: Option<f64>,
+        /// Must equal [`PROTO_VERSION`].
+        proto: u64,
+    },
+    /// Coordinator → edge, the handshake reply: identity + the full run
+    /// config (JSON wire format) the edge rebuilds its world from, plus
+    /// how many local iterations to fast-forward past (0 on first join).
+    Welcome {
+        /// The edge id assigned (or confirmed, on rejoin).
+        edge: usize,
+        /// The run config, `RunConfig::to_json` wire format, verbatim.
+        config: Json,
+        /// Local iterations already banked by received `Done`s — the
+        /// rejoining edge replays its shard cursor and cost-RNG past them.
+        iters_done: u64,
+        /// The effective slowdown for this edge (after any override).
+        slowdown: f64,
+    },
+    /// Coordinator → edge: run τ local iterations from these parameters.
+    Launch {
+        /// Round sequence number, echoed in the matching `Done`.
+        seq: u64,
+        /// The global-update interval chosen by the strategy.
+        tau: usize,
+        /// The effective (already decayed) learning rate for this round.
+        lr: f32,
+        /// The edge's local model parameters to start from.
+        params: Vec<f32>,
+    },
+    /// Edge → coordinator: the completed round (mirrors `LocalRound`).
+    Done {
+        /// Echo of the `Launch` sequence number.
+        seq: u64,
+        /// Total compute cost charged over the τ iterations.
+        comp_cost: f64,
+        /// Mean per-iteration training signal.
+        train_signal: f64,
+        /// Iterations actually run (= τ).
+        iterations: usize,
+        /// The updated local model parameters.
+        params: Vec<f32>,
+    },
+    /// Edge → coordinator: clean departure (retire me; not a crash).
+    Leave,
+    /// Coordinator → edge: the session is over, exit cleanly.
+    Shutdown,
+    /// Keepalive probe (either direction).
+    Ping,
+    /// Keepalive reply.
+    Pong,
+    /// A tunneled simulator [`Message`] — the [`Transport`] payload
+    /// carried by [`TcpTransport`](super::TcpTransport).
+    ///
+    /// [`Transport`]: crate::net::Transport
+    Msg(Message),
+}
+
+impl Frame {
+    /// Encode this frame as its JSON body.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Frame::Hello {
+                rejoin,
+                slowdown,
+                proto,
+            } => Json::obj(vec![
+                ("t", Json::str("hello")),
+                ("proto", Json::num(*proto as f64)),
+                ("rejoin", opt_num(rejoin.map(|r| r as f64))),
+                ("slowdown", opt_num(*slowdown)),
+            ]),
+            Frame::Welcome {
+                edge,
+                config,
+                iters_done,
+                slowdown,
+            } => Json::obj(vec![
+                ("t", Json::str("welcome")),
+                ("edge", Json::num(*edge as f64)),
+                ("iters_done", Json::num(*iters_done as f64)),
+                ("slowdown", Json::num(*slowdown)),
+                ("config", config.clone()),
+            ]),
+            Frame::Launch {
+                seq,
+                tau,
+                lr,
+                params,
+            } => Json::obj(vec![
+                ("t", Json::str("launch")),
+                ("seq", Json::num(*seq as f64)),
+                ("tau", Json::num(*tau as f64)),
+                ("lr", Json::num(*lr as f64)),
+                ("params", params_to_json(params)),
+            ]),
+            Frame::Done {
+                seq,
+                comp_cost,
+                train_signal,
+                iterations,
+                params,
+            } => Json::obj(vec![
+                ("t", Json::str("done")),
+                ("seq", Json::num(*seq as f64)),
+                ("comp_cost", Json::num(*comp_cost)),
+                ("train_signal", Json::num(*train_signal)),
+                ("iterations", Json::num(*iterations as f64)),
+                ("params", params_to_json(params)),
+            ]),
+            Frame::Leave => Json::obj(vec![("t", Json::str("leave"))]),
+            Frame::Shutdown => Json::obj(vec![("t", Json::str("shutdown"))]),
+            Frame::Ping => Json::obj(vec![("t", Json::str("ping"))]),
+            Frame::Pong => Json::obj(vec![("t", Json::str("pong"))]),
+            Frame::Msg(m) => Json::obj(vec![("t", Json::str("msg")), ("msg", message_to_json(m))]),
+        }
+    }
+
+    /// Decode a frame from its JSON body.
+    pub fn from_json(j: &Json) -> Result<Frame, WireError> {
+        let t = j
+            .get("t")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("frame has no 't' tag"))?;
+        match t {
+            "hello" => Ok(Frame::Hello {
+                rejoin: match j.get("rejoin") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => Some(v.as_usize().ok_or_else(|| bad("hello.rejoin"))?),
+                },
+                slowdown: match j.get("slowdown") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => Some(v.as_f64().ok_or_else(|| bad("hello.slowdown"))?),
+                },
+                proto: need_f64(j, "proto")? as u64,
+            }),
+            "welcome" => Ok(Frame::Welcome {
+                edge: need_usize(j, "edge")?,
+                config: j.get("config").cloned().ok_or_else(|| bad("welcome.config"))?,
+                iters_done: need_f64(j, "iters_done")? as u64,
+                slowdown: need_f64(j, "slowdown")?,
+            }),
+            "launch" => Ok(Frame::Launch {
+                seq: need_f64(j, "seq")? as u64,
+                tau: need_usize(j, "tau")?,
+                lr: need_f64(j, "lr")? as f32,
+                params: params_from_json(j.get("params"))?,
+            }),
+            "done" => Ok(Frame::Done {
+                seq: need_f64(j, "seq")? as u64,
+                comp_cost: need_f64(j, "comp_cost")?,
+                train_signal: need_f64(j, "train_signal")?,
+                iterations: need_usize(j, "iterations")?,
+                params: params_from_json(j.get("params"))?,
+            }),
+            "leave" => Ok(Frame::Leave),
+            "shutdown" => Ok(Frame::Shutdown),
+            "ping" => Ok(Frame::Ping),
+            "pong" => Ok(Frame::Pong),
+            "msg" => Ok(Frame::Msg(message_from_json(
+                j.get("msg").ok_or_else(|| bad("msg frame has no body"))?,
+            )?)),
+            other => Err(bad(&format!("unknown frame tag '{other}'"))),
+        }
+    }
+}
+
+fn bad(m: &str) -> WireError {
+    WireError::BadFrame(m.to_string())
+}
+
+fn opt_num(v: Option<f64>) -> Json {
+    v.map(Json::num).unwrap_or(Json::Null)
+}
+
+fn need_f64(j: &Json, key: &str) -> Result<f64, WireError> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| bad(&format!("missing or non-numeric '{key}'")))
+}
+
+fn need_usize(j: &Json, key: &str) -> Result<usize, WireError> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| bad(&format!("missing or non-integer '{key}'")))
+}
+
+fn params_to_json(params: &[f32]) -> Json {
+    Json::arr(params.iter().map(|&p| Json::num(p as f64)))
+}
+
+fn params_from_json(j: Option<&Json>) -> Result<Vec<f32>, WireError> {
+    j.and_then(Json::as_arr)
+        .ok_or_else(|| bad("missing 'params' array"))?
+        .iter()
+        .map(|v| v.as_f64().map(|x| x as f32).ok_or_else(|| bad("non-numeric param")))
+        .collect()
+}
+
+/// Encode a simulator [`Message`] (covers every [`Payload`] variant).
+pub fn message_to_json(m: &Message) -> Json {
+    let payload = match &m.payload {
+        Payload::Report(r) => Json::obj(vec![("report", report_to_json(r))]),
+        Payload::Global { version } => Json::obj(vec![(
+            "global",
+            Json::obj(vec![("version", Json::num(*version as f64))]),
+        )]),
+    };
+    Json::obj(vec![
+        ("from", node_to_json(m.from)),
+        ("to", node_to_json(m.to)),
+        ("size_bytes", Json::num(m.size_bytes)),
+        ("payload", payload),
+    ])
+}
+
+/// Decode a simulator [`Message`].
+pub fn message_from_json(j: &Json) -> Result<Message, WireError> {
+    let payload = j.get("payload").ok_or_else(|| bad("message.payload"))?;
+    let payload = if let Some(r) = payload.get("report") {
+        Payload::Report(report_from_json(r)?)
+    } else if let Some(g) = payload.get("global") {
+        Payload::Global {
+            version: need_f64(g, "version")? as u64,
+        }
+    } else {
+        return Err(bad("unknown payload variant"));
+    };
+    Ok(Message {
+        from: node_from_json(j.get("from").ok_or_else(|| bad("message.from"))?)?,
+        to: node_from_json(j.get("to").ok_or_else(|| bad("message.to"))?)?,
+        size_bytes: need_f64(j, "size_bytes")?,
+        payload,
+    })
+}
+
+fn node_to_json(n: Node) -> Json {
+    match n {
+        Node::Cloud => Json::str("cloud"),
+        Node::Edge(i) => Json::obj(vec![("edge", Json::num(i as f64))]),
+    }
+}
+
+fn node_from_json(j: &Json) -> Result<Node, WireError> {
+    if j.as_str() == Some("cloud") {
+        return Ok(Node::Cloud);
+    }
+    Ok(Node::Edge(need_usize(j, "edge")?))
+}
+
+fn report_to_json(r: &LocalReport) -> Json {
+    Json::obj(vec![
+        ("edge", Json::num(r.edge as f64)),
+        ("tau", Json::num(r.tau as f64)),
+        ("cost", Json::num(r.cost)),
+        ("train_signal", Json::num(r.train_signal)),
+        ("base_version", Json::num(r.base_version as f64)),
+    ])
+}
+
+fn report_from_json(j: &Json) -> Result<LocalReport, WireError> {
+    Ok(LocalReport {
+        edge: need_usize(j, "edge")?,
+        tau: need_usize(j, "tau")?,
+        cost: need_f64(j, "cost")?,
+        train_signal: need_f64(j, "train_signal")?,
+        base_version: need_f64(j, "base_version")? as u64,
+    })
+}
+
+/// Encode a [`Delivery`] (used by transport-level diagnostics/tests).
+pub fn delivery_to_json(d: &Delivery) -> Json {
+    Json::obj(vec![
+        ("msg", message_to_json(&d.msg)),
+        ("delay_ms", Json::num(d.delay_ms)),
+        ("dropped_attempts", Json::num(d.dropped_attempts as f64)),
+        ("lost", Json::Bool(d.lost)),
+    ])
+}
+
+/// Decode a [`Delivery`].
+pub fn delivery_from_json(j: &Json) -> Result<Delivery, WireError> {
+    Ok(Delivery {
+        msg: message_from_json(j.get("msg").ok_or_else(|| bad("delivery.msg"))?)?,
+        delay_ms: need_f64(j, "delay_ms")?,
+        dropped_attempts: need_f64(j, "dropped_attempts")? as u32,
+        lost: j
+            .get("lost")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| bad("delivery.lost"))?,
+    })
+}
+
+/// Serialize one frame onto a writer: 4-byte big-endian length + JSON
+/// body, then flush (frames are the protocol's unit of progress).
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<(), WireError> {
+    let body = frame.to_json().to_string();
+    let bytes = body.as_bytes();
+    if bytes.len() > MAX_FRAME {
+        return Err(WireError::TooLarge(bytes.len()));
+    }
+    w.write_all(&(bytes.len() as u32).to_be_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Decode one frame body (the bytes after the length prefix).
+pub fn decode(body: &[u8]) -> Result<Frame, WireError> {
+    let text =
+        std::str::from_utf8(body).map_err(|e| WireError::BadJson(format!("not UTF-8: {e}")))?;
+    let j = Json::parse(text).map_err(|e| WireError::BadJson(e.to_string()))?;
+    Frame::from_json(&j)
+}
+
+/// An incremental frame decoder that owns its partial-read state.
+///
+/// `read_frame` pulls bytes from the reader until a whole frame is
+/// buffered. A read timeout ([`WireError::Timeout`]) is *retryable*: any
+/// partially received frame stays in the internal buffer, so heartbeat
+/// loops can interleave `Ping` writes with reads without ever corrupting
+/// the stream.
+#[derive(Debug, Default)]
+pub struct FrameReader {
+    buf: VecDeque<u8>,
+}
+
+impl FrameReader {
+    /// An empty reader.
+    pub fn new() -> FrameReader {
+        FrameReader::default()
+    }
+
+    /// Read until one complete frame decodes, then return it.
+    ///
+    /// Errors: [`WireError::Timeout`] if the reader's deadline elapses
+    /// (retryable — buffered bytes are kept), [`WireError::Eof`] when the
+    /// peer closes, and the codec's typed errors on hostile bytes.
+    pub fn read_frame(&mut self, r: &mut impl Read) -> Result<Frame, WireError> {
+        let mut chunk = [0u8; 8192];
+        loop {
+            if let Some(frame) = self.try_decode()? {
+                return Ok(frame);
+            }
+            match r.read(&mut chunk) {
+                Ok(0) => return Err(WireError::Eof),
+                Ok(n) => self.buf.extend(&chunk[..n]),
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                    return Err(WireError::Timeout)
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(WireError::Io(e)),
+            }
+        }
+    }
+
+    /// Decode a frame from the buffer if one is fully present.
+    fn try_decode(&mut self) -> Result<Option<Frame>, WireError> {
+        if self.buf.len() < 4 {
+            return Ok(None);
+        }
+        let header: Vec<u8> = self.buf.iter().take(4).copied().collect();
+        let len = u32::from_be_bytes([header[0], header[1], header[2], header[3]]) as usize;
+        if len > MAX_FRAME {
+            return Err(WireError::TooLarge(len));
+        }
+        if self.buf.len() < 4 + len {
+            return Ok(None);
+        }
+        self.buf.drain(..4);
+        let body: Vec<u8> = self.buf.drain(..len).collect();
+        decode(&body).map(Some)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let mut bytes = Vec::new();
+        write_frame(&mut bytes, f).unwrap();
+        let mut fr = FrameReader::new();
+        fr.read_frame(&mut bytes.as_slice()).unwrap()
+    }
+
+    #[test]
+    fn every_frame_variant_round_trips() {
+        let frames = [
+            Frame::Hello {
+                rejoin: None,
+                slowdown: Some(2.5),
+                proto: PROTO_VERSION,
+            },
+            Frame::Hello {
+                rejoin: Some(7),
+                slowdown: None,
+                proto: PROTO_VERSION,
+            },
+            Frame::Welcome {
+                edge: 2,
+                config: crate::config::RunConfig::default().to_json(),
+                iters_done: 123,
+                slowdown: 4.0,
+            },
+            Frame::Launch {
+                seq: 9,
+                tau: 5,
+                lr: 0.05,
+                params: vec![0.25, -1.5, 3.25e-7, f32::MIN_POSITIVE],
+            },
+            Frame::Done {
+                seq: 9,
+                comp_cost: 417.3125,
+                train_signal: 0.123456789,
+                iterations: 5,
+                params: vec![1.0, -2.0],
+            },
+            Frame::Leave,
+            Frame::Shutdown,
+            Frame::Ping,
+            Frame::Pong,
+        ];
+        for f in &frames {
+            let back = roundtrip(f);
+            // Bit-exact on the numeric payloads (the determinism contract).
+            assert_eq!(format!("{:?}", back), format!("{f:?}"));
+        }
+    }
+
+    #[test]
+    fn params_survive_bit_exactly() {
+        let params: Vec<f32> = (0..512)
+            .map(|i| ((i as f32) * 0.137).sin() * 10f32.powi((i % 9) as i32 - 4))
+            .collect();
+        let f = Frame::Launch {
+            seq: 1,
+            tau: 1,
+            lr: 0.0123456,
+            params: params.clone(),
+        };
+        match roundtrip(&f) {
+            Frame::Launch { params: back, lr, .. } => {
+                assert_eq!(back, params, "f32 params must survive the wire bit-exactly");
+                assert_eq!(lr.to_bits(), 0.0123456f32.to_bits());
+            }
+            other => panic!("wrong frame back: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn every_payload_variant_round_trips() {
+        let report = LocalReport {
+            edge: 3,
+            tau: 7,
+            cost: 280.5,
+            train_signal: 0.875,
+            base_version: 42,
+        };
+        let msgs = [
+            Message::upload(3, 4096.0, report),
+            Message::download(5, 8192.0, 11),
+        ];
+        for m in &msgs {
+            let j = message_to_json(m);
+            let back = message_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+            assert_eq!(format!("{back:?}"), format!("{m:?}"));
+            let f = roundtrip(&Frame::Msg(m.clone()));
+            assert_eq!(format!("{f:?}"), format!("{:?}", Frame::Msg(m.clone())));
+        }
+        let d = Delivery {
+            msg: msgs[0].clone(),
+            delay_ms: 17.25,
+            dropped_attempts: 2,
+            lost: false,
+        };
+        let back = delivery_from_json(&delivery_to_json(&d)).unwrap();
+        assert_eq!(format!("{back:?}"), format!("{d:?}"));
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_a_typed_error() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&(MAX_FRAME as u32 + 1).to_be_bytes());
+        bytes.extend_from_slice(b"whatever");
+        let mut fr = FrameReader::new();
+        match fr.read_frame(&mut bytes.as_slice()) {
+            Err(WireError::TooLarge(n)) => assert_eq!(n, MAX_FRAME + 1),
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_frame_is_eof_not_a_panic() {
+        let mut bytes = Vec::new();
+        write_frame(&mut bytes, &Frame::Ping).unwrap();
+        bytes.truncate(bytes.len() - 3);
+        let mut fr = FrameReader::new();
+        assert!(matches!(
+            fr.read_frame(&mut bytes.as_slice()),
+            Err(WireError::Eof)
+        ));
+    }
+
+    #[test]
+    fn hostile_bytes_are_typed_errors_not_panics() {
+        // Valid length prefix, garbage body.
+        let mut bytes = 7u32.to_be_bytes().to_vec();
+        bytes.extend_from_slice(&[0xff, 0xfe, 0x00, 0x41, 0x42, 0x43, 0x44]);
+        let mut fr = FrameReader::new();
+        assert!(matches!(
+            fr.read_frame(&mut bytes.as_slice()),
+            Err(WireError::BadJson(_))
+        ));
+        // Valid JSON, wrong shape.
+        for body in [
+            "{\"x\":1}",
+            "{\"t\":\"nope\"}",
+            "{\"t\":\"launch\",\"seq\":1}",
+            "{\"t\":\"done\",\"seq\":\"str\"}",
+            "[1,2,3]",
+            "{\"t\":\"welcome\",\"edge\":-1}",
+        ] {
+            let mut bytes = (body.len() as u32).to_be_bytes().to_vec();
+            bytes.extend_from_slice(body.as_bytes());
+            let mut fr = FrameReader::new();
+            assert!(
+                matches!(
+                    fr.read_frame(&mut bytes.as_slice()),
+                    Err(WireError::BadFrame(_))
+                ),
+                "body {body:?} must be a BadFrame error"
+            );
+        }
+    }
+
+    #[test]
+    fn partial_reads_survive_timeouts() {
+        // A reader that yields the frame in 1-byte sips with a timeout
+        // between each: the FrameReader must keep its partial state.
+        struct Sips {
+            bytes: Vec<u8>,
+            pos: usize,
+            parity: bool,
+        }
+        impl Read for Sips {
+            fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+                self.parity = !self.parity;
+                if self.parity {
+                    return Err(std::io::Error::from(ErrorKind::WouldBlock));
+                }
+                if self.pos >= self.bytes.len() {
+                    return Ok(0);
+                }
+                out[0] = self.bytes[self.pos];
+                self.pos += 1;
+                Ok(1)
+            }
+        }
+        let mut bytes = Vec::new();
+        let f = Frame::Done {
+            seq: 3,
+            comp_cost: 120.0,
+            train_signal: 0.5,
+            iterations: 3,
+            params: vec![1.5, 2.5],
+        };
+        write_frame(&mut bytes, &f).unwrap();
+        let mut sips = Sips {
+            bytes,
+            pos: 0,
+            parity: false,
+        };
+        let mut fr = FrameReader::new();
+        let mut timeouts = 0;
+        let back = loop {
+            match fr.read_frame(&mut sips) {
+                Ok(frame) => break frame,
+                Err(WireError::Timeout) => timeouts += 1,
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        };
+        assert!(timeouts > 10, "the sip reader must have timed out repeatedly");
+        assert_eq!(format!("{back:?}"), format!("{f:?}"));
+    }
+
+    #[test]
+    fn two_frames_in_one_buffer_decode_in_order() {
+        let mut bytes = Vec::new();
+        write_frame(&mut bytes, &Frame::Ping).unwrap();
+        write_frame(&mut bytes, &Frame::Leave).unwrap();
+        let mut fr = FrameReader::new();
+        let mut cursor = bytes.as_slice();
+        assert!(matches!(fr.read_frame(&mut cursor).unwrap(), Frame::Ping));
+        assert!(matches!(fr.read_frame(&mut cursor).unwrap(), Frame::Leave));
+        assert!(matches!(fr.read_frame(&mut cursor), Err(WireError::Eof)));
+    }
+}

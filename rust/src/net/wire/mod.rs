@@ -1,0 +1,42 @@
+//! Real networked deployment: length-prefixed JSON frames over TCP.
+//!
+//! Everything else in `net::` *simulates* a network; this module is the
+//! real one. It splits a run into processes — `ol4el coordinator serve`
+//! drives the ordinary [`Session`](crate::coordinator::Session) loop while
+//! `ol4el edge join` processes execute the local rounds — and is built so
+//! the distributed run is **bit-identical** to the in-process ideal-network
+//! run with the same config:
+//!
+//! - [`frame`] — the wire codec: `Frame` (hello / welcome / launch / done /
+//!   leave / shutdown / ping / pong / msg), 4-byte big-endian length
+//!   prefix + JSON body, hostile-input-safe incremental [`FrameReader`].
+//! - [`tcp`] — [`TcpTransport`], the [`Transport`](crate::net::Transport)
+//!   impl over a real socket (wall-clock `now()`, real deliveries), plus
+//!   the loopback throughput bench behind `fleet --smoke`.
+//! - [`server`] — the coordinator's rendezvous: gather the fleet, welcome
+//!   each edge with the full run config, then serve each
+//!   [`Session::local_round`](crate::coordinator::Session) as a
+//!   synchronous RPC ([`WireServer`] implements
+//!   [`RemoteRunner`](crate::coordinator::RemoteRunner)). Handles
+//!   rejoin-after-crash, round timeouts, and clean `Leave` vs. crash.
+//! - [`client`] — the edge process: rebuild the world deterministically
+//!   from the welcomed config, serve launches, reconnect on drop with
+//!   bounded backoff and replay-exact fast-forward.
+//!
+//! Determinism argument, in one breath: the coordinator executes rounds in
+//! exactly the order the in-process session would (the `RemoteRunner` hook
+//! sits *inside* `local_round`, below every strategy/RNG decision), each
+//! RPC ships the full parameter vector both ways through a codec that
+//! round-trips `f32` bit-exactly, and a crashed edge that rejoins replays
+//! its shard cursor and cost-RNG to the exact pre-crash state. Wall-clock
+//! timing varies; the `TracePoint` stream does not.
+
+pub mod client;
+pub mod frame;
+pub mod server;
+pub mod tcp;
+
+pub use client::{join, JoinOpts};
+pub use frame::{write_frame, Frame, FrameReader, WireError, MAX_FRAME, PROTO_VERSION};
+pub use server::{accept_fleet, PendingEdge, WireServer};
+pub use tcp::{bench_loopback, echo_once, TcpTransport, WireBench};

@@ -1,0 +1,429 @@
+//! The coordinator side of the rendezvous protocol.
+//!
+//! [`accept_fleet`] gathers the fleet: it blocks until `n_edges` fresh
+//! `Hello`s arrive, assigning edge ids in arrival order. [`WireServer`]
+//! then welcomes every edge with the run config and drives the session's
+//! rounds over the wire as the installed
+//! [`RemoteRunner`](crate::coordinator::session::RemoteRunner):
+//!
+//! * `Launch{seq, τ, lr, params}` out, `Done{seq, …}` back — one
+//!   synchronous RPC per `Session::local_round`, so every collaboration
+//!   manner works remotely unchanged and bit-identically.
+//! * A dropped connection opens a bounded *rejoin window*: a `Hello`
+//!   with `rejoin: Some(id)` restores the edge (the fresh `Welcome`
+//!   carries `iters_done` so the edge fast-forwards its rebuilt state),
+//!   the launch is re-sent, and each successful rejoin surfaces as an
+//!   `EdgeJoined` run event. A window that closes empty marks the edge
+//!   *gone* — retired, fallback rounds thereafter.
+//! * A `Leave` frame is a *clean* departure: retired without the crash
+//!   path, so `EdgeRetired` fires with no rejoin wait.
+//!
+//! Per-connection reader threads answer `Ping` keepalives directly and
+//! funnel frames into channels; a listener thread keeps accepting after
+//! the fleet gathers, routing rejoin connections to the round loop and
+//! refusing fresh mid-run joins.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::session::{RemoteOutcome, RemoteRunner};
+use crate::edge::{Hyper, LocalRound};
+use crate::util::json::Json;
+
+use super::frame::{write_frame, Frame, FrameReader, WireError, PROTO_VERSION};
+
+/// How long a connecting edge gets to speak its `Hello`.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// A connection's shared write half.
+type Writer = Arc<Mutex<TcpStream>>;
+
+/// What a reader thread forwards to the round loop.
+enum Inbound {
+    /// A decoded frame from the edge.
+    Frame(Frame),
+    /// The connection died (EOF or socket error).
+    Disconnected,
+}
+
+/// One live edge connection: shared writer + the reader thread's channel.
+struct Link {
+    writer: Writer,
+    rx: Receiver<Inbound>,
+}
+
+fn lock(w: &Writer) -> std::sync::MutexGuard<'_, TcpStream> {
+    match w.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Spawn the per-connection reader: decodes frames, answers `Ping` with
+/// `Pong` in place, forwards everything else, and reports disconnects.
+fn spawn_reader(mut read_half: TcpStream, writer: Writer) -> Receiver<Inbound> {
+    let (tx, rx) = channel();
+    std::thread::spawn(move || {
+        let mut fr = FrameReader::new();
+        loop {
+            match fr.read_frame(&mut read_half) {
+                Ok(Frame::Ping) => {
+                    if write_frame(&mut *lock(&writer), &Frame::Pong).is_err() {
+                        let _ = tx.send(Inbound::Disconnected);
+                        return;
+                    }
+                }
+                Ok(f) => {
+                    if tx.send(Inbound::Frame(f)).is_err() {
+                        return; // the edge was replaced; this link is dead
+                    }
+                }
+                Err(WireError::Timeout) => {} // no deadline set; spurious
+                Err(_) => {
+                    let _ = tx.send(Inbound::Disconnected);
+                    return;
+                }
+            }
+        }
+    });
+    rx
+}
+
+/// Complete the `Hello` handshake on a fresh connection. Returns the
+/// hello plus the wired-up link, or `None` (connection dropped) when the
+/// peer is slow, gone, or speaks the wrong protocol.
+fn handshake(stream: TcpStream) -> Option<(Frame, Link)> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT)).ok();
+    let mut fr = FrameReader::new();
+    let hello = {
+        let mut read = &stream;
+        fr.read_frame(&mut read).ok()?
+    };
+    let ok = matches!(hello, Frame::Hello { proto, .. } if proto == PROTO_VERSION);
+    if !ok {
+        eprintln!("[ol4el] wire: refusing a connection that is not a proto-{PROTO_VERSION} hello");
+        return None;
+    }
+    stream.set_read_timeout(None).ok();
+    let writer: Writer = Arc::new(Mutex::new(stream.try_clone().ok()?));
+    let rx = spawn_reader(stream, Arc::clone(&writer));
+    Some((hello, Link { writer, rx }))
+}
+
+/// A gathered edge awaiting its `Welcome`.
+pub struct PendingEdge {
+    link: Link,
+    /// The slowdown override the edge requested in its `Hello`, if any.
+    pub slowdown: Option<f64>,
+}
+
+/// Block until `n_edges` fresh edges have said `Hello`, assigning edge
+/// ids `0..n_edges` in arrival order. Rejoin hellos and wrong-protocol
+/// connections are refused (dropped) during the gather phase.
+pub fn accept_fleet(listener: &TcpListener, n_edges: usize) -> Result<Vec<PendingEdge>, WireError> {
+    let mut fleet = Vec::with_capacity(n_edges);
+    while fleet.len() < n_edges {
+        let (stream, peer) = listener.accept()?;
+        let Some((hello, link)) = handshake(stream) else {
+            continue;
+        };
+        match hello {
+            Frame::Hello {
+                rejoin: None,
+                slowdown,
+                ..
+            } => {
+                if let Some(s) = slowdown {
+                    if s < 1.0 || s.is_nan() {
+                        eprintln!("[ol4el] wire: refusing {peer}: slowdown {s} < 1");
+                        continue;
+                    }
+                }
+                eprintln!(
+                    "[ol4el] wire: edge {} joined from {peer}",
+                    fleet.len()
+                );
+                fleet.push(PendingEdge { link, slowdown });
+            }
+            _ => {
+                eprintln!("[ol4el] wire: refusing rejoin from {peer} before the run starts");
+            }
+        }
+    }
+    Ok(fleet)
+}
+
+/// Keep accepting after the fleet gathered: route `Hello{rejoin}`
+/// connections to the round loop, refuse everything else. Runs until the
+/// process exits (or the receiver side is dropped).
+fn spawn_rejoin_listener(listener: TcpListener, n_edges: usize, tx: Sender<(usize, Link)>) {
+    std::thread::spawn(move || loop {
+        let Ok((stream, peer)) = listener.accept() else {
+            return;
+        };
+        let Some((hello, link)) = handshake(stream) else {
+            continue;
+        };
+        match hello {
+            Frame::Hello {
+                rejoin: Some(id), ..
+            } if id < n_edges => {
+                eprintln!("[ol4el] wire: edge {id} reconnecting from {peer}");
+                if tx.send((id, link)).is_err() {
+                    return;
+                }
+            }
+            _ => {
+                eprintln!("[ol4el] wire: refusing fresh join from {peer} mid-run");
+            }
+        }
+    });
+}
+
+/// Per-edge protocol state on the coordinator.
+struct EdgeState {
+    /// Local iterations banked by received `Done`s — what a rejoining
+    /// edge is told to fast-forward past.
+    iters_done: u64,
+    /// Crashed and never rejoined; permanently fallback.
+    gone: bool,
+    /// Departed cleanly via `Leave`.
+    left: bool,
+}
+
+/// The coordinator's [`RemoteRunner`]: one synchronous `Launch`/`Done`
+/// RPC per local round, with crash/rejoin/leave handling. See the module
+/// docs for the protocol.
+pub struct WireServer {
+    links: Vec<Link>,
+    state: Vec<EdgeState>,
+    /// The run config shipped in every `Welcome` (rejoins included).
+    config: Json,
+    /// Effective per-edge slowdowns (after overrides), for `Welcome`s.
+    slowdowns: Vec<f64>,
+    rejoin_rx: Receiver<(usize, Link)>,
+    /// Rejoin connections that arrived while another edge was in flight.
+    stash: Vec<(usize, Link)>,
+    round_timeout: Duration,
+    rejoin_window: Duration,
+    next_seq: u64,
+}
+
+impl WireServer {
+    /// Welcome the gathered fleet (edge id, config, effective slowdown),
+    /// hand the listener to the rejoin-router thread, and return the
+    /// runner to install with `Session::set_remote`.
+    pub fn start(
+        listener: TcpListener,
+        fleet: Vec<PendingEdge>,
+        config: Json,
+        slowdowns: Vec<f64>,
+        round_timeout: Duration,
+        rejoin_window: Duration,
+    ) -> Result<WireServer, WireError> {
+        assert_eq!(fleet.len(), slowdowns.len(), "one slowdown per edge");
+        let mut links = Vec::with_capacity(fleet.len());
+        for (edge, pending) in fleet.into_iter().enumerate() {
+            let welcome = Frame::Welcome {
+                edge,
+                config: config.clone(),
+                iters_done: 0,
+                slowdown: slowdowns[edge],
+            };
+            write_frame(&mut *lock(&pending.link.writer), &welcome)?;
+            links.push(pending.link);
+        }
+        let (tx, rejoin_rx) = channel();
+        let n = links.len();
+        spawn_rejoin_listener(listener, n, tx);
+        Ok(WireServer {
+            state: (0..n)
+                .map(|_| EdgeState {
+                    iters_done: 0,
+                    gone: false,
+                    left: false,
+                })
+                .collect(),
+            links,
+            config,
+            slowdowns,
+            rejoin_rx,
+            stash: Vec::new(),
+            round_timeout,
+            rejoin_window,
+            next_seq: 0,
+        })
+    }
+
+    /// The fallback outcome for an edge that is not coming back.
+    fn fallback(&self, edge: usize, rejoined: u32) -> RemoteOutcome {
+        RemoteOutcome {
+            round: LocalRound {
+                comp_cost: 0.0,
+                train_signal: 0.0,
+                iterations: 0,
+            },
+            rejoined,
+            gone: self.state[edge].gone,
+            left: self.state[edge].left,
+        }
+    }
+
+    fn mark_gone(&mut self, edge: usize, rejoined: u32) -> RemoteOutcome {
+        eprintln!("[ol4el] wire: edge {edge} is gone (no rejoin inside the window) — retiring it");
+        self.state[edge].gone = true;
+        self.fallback(edge, rejoined)
+    }
+
+    /// Wait out the rejoin window for `edge`. On success the link is
+    /// replaced, the `Welcome{iters_done}` sent, and the caller re-sends
+    /// its launch. Rejoins for *other* edges that surface meanwhile are
+    /// stashed for their own turn.
+    fn try_rejoin(&mut self, edge: usize) -> bool {
+        let deadline = Instant::now() + self.rejoin_window;
+        loop {
+            while let Ok(pair) = self.rejoin_rx.try_recv() {
+                self.stash.push(pair);
+            }
+            if let Some(pos) = self.stash.iter().position(|(id, _)| *id == edge) {
+                let (_, link) = self.stash.remove(pos);
+                let welcome = Frame::Welcome {
+                    edge,
+                    config: self.config.clone(),
+                    iters_done: self.state[edge].iters_done,
+                    slowdown: self.slowdowns[edge],
+                };
+                if write_frame(&mut *lock(&link.writer), &welcome).is_err() {
+                    continue; // that reconnect died already; keep waiting
+                }
+                self.links[edge] = link;
+                return true;
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return false;
+            }
+            match self.rejoin_rx.recv_timeout(left) {
+                Ok(pair) => self.stash.push(pair),
+                Err(RecvTimeoutError::Timeout) => return false,
+                Err(RecvTimeoutError::Disconnected) => return false,
+            }
+        }
+    }
+}
+
+impl RemoteRunner for WireServer {
+    fn remote_round(
+        &mut self,
+        edge: usize,
+        tau: usize,
+        hyper: &Hyper,
+        params: &mut Vec<f32>,
+    ) -> Result<RemoteOutcome> {
+        let mut rejoined = 0u32;
+        if self.state[edge].gone || self.state[edge].left {
+            // Never launched again; the manner drains its budget through
+            // zero-cost fallback rounds and terminates.
+            return Ok(self.fallback(edge, rejoined));
+        }
+        // Drain anything the edge said between rounds: a clean `Leave`
+        // must be honored before launching into a closing socket, and a
+        // between-rounds crash goes straight to the rejoin window.
+        while let Ok(inbound) = self.links[edge].rx.try_recv() {
+            match inbound {
+                Inbound::Frame(Frame::Leave) => {
+                    eprintln!("[ol4el] wire: edge {edge} left cleanly");
+                    self.state[edge].left = true;
+                    return Ok(self.fallback(edge, rejoined));
+                }
+                Inbound::Frame(_) => {}
+                Inbound::Disconnected => {
+                    if self.try_rejoin(edge) {
+                        rejoined += 1;
+                        break;
+                    }
+                    return Ok(self.mark_gone(edge, rejoined));
+                }
+            }
+        }
+        self.next_seq += 1;
+        let seq = self.next_seq;
+        'launch: loop {
+            let launch = Frame::Launch {
+                seq,
+                tau,
+                lr: hyper.lr,
+                params: params.clone(),
+            };
+            if write_frame(&mut *lock(&self.links[edge].writer), &launch).is_err() {
+                if self.try_rejoin(edge) {
+                    rejoined += 1;
+                    continue 'launch;
+                }
+                return Ok(self.mark_gone(edge, rejoined));
+            }
+            let deadline = Instant::now() + self.round_timeout;
+            loop {
+                let wait = deadline.saturating_duration_since(Instant::now());
+                if wait.is_zero() {
+                    return Ok(self.mark_gone(edge, rejoined));
+                }
+                match self.links[edge].rx.recv_timeout(wait) {
+                    Ok(Inbound::Frame(Frame::Done {
+                        seq: got,
+                        comp_cost,
+                        train_signal,
+                        iterations,
+                        params: fresh,
+                    })) if got == seq => {
+                        *params = fresh;
+                        self.state[edge].iters_done += tau as u64;
+                        return Ok(RemoteOutcome {
+                            round: LocalRound {
+                                comp_cost,
+                                train_signal,
+                                iterations,
+                            },
+                            rejoined,
+                            gone: false,
+                            left: false,
+                        });
+                    }
+                    // A stale Done from before a crash: the recomputed
+                    // one is on its way.
+                    Ok(Inbound::Frame(Frame::Done { .. })) => continue,
+                    Ok(Inbound::Frame(Frame::Leave)) => {
+                        eprintln!("[ol4el] wire: edge {edge} left cleanly");
+                        self.state[edge].left = true;
+                        return Ok(self.fallback(edge, rejoined));
+                    }
+                    Ok(Inbound::Frame(_)) => continue, // Pong etc.
+                    Ok(Inbound::Disconnected) | Err(RecvTimeoutError::Disconnected) => {
+                        if self.try_rejoin(edge) {
+                            rejoined += 1;
+                            continue 'launch;
+                        }
+                        return Ok(self.mark_gone(edge, rejoined));
+                    }
+                    Err(RecvTimeoutError::Timeout) => {
+                        return Ok(self.mark_gone(edge, rejoined));
+                    }
+                }
+            }
+        }
+    }
+
+    fn finish(&mut self) {
+        for (i, link) in self.links.iter().enumerate() {
+            if self.state[i].gone {
+                continue;
+            }
+            let _ = write_frame(&mut *lock(&link.writer), &Frame::Shutdown);
+        }
+    }
+}

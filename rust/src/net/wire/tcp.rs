@@ -1,0 +1,456 @@
+//! [`TcpTransport`]: the object-safe [`Transport`] trait over a real
+//! TCP connection.
+//!
+//! Where [`SimTransport`](crate::net::transport::SimTransport) *models*
+//! latency on a virtual clock, `TcpTransport` *measures* it on the real
+//! one: `now()` is wall time since creation, `send` writes a
+//! [`Frame::Msg`] onto the socket, and deliveries surface through
+//! `poll` as tunneled messages arrive from the peer. Local events
+//! ([`NetEvent`]) still ride an in-process timer heap keyed by real
+//! time, so drivers written against the trait run unmodified.
+//!
+//! The module also hosts the loopback echo peer and the
+//! [`bench_loopback`] measurement behind `fleet --smoke`'s
+//! `BENCH_wire.json` (frames/sec, round-trip ms over 127.0.0.1).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::net::message::{Delivery, Message, NetEvent, Occurrence};
+use crate::net::transport::{Transport, TransportStats};
+use crate::util::json::Json;
+
+use super::frame::{write_frame, Frame, FrameReader, WireError};
+
+/// How long `poll` waits for the wire before reporting "nothing" while
+/// messages are still in flight.
+const POLL_WAIT: Duration = Duration::from_secs(10);
+
+/// A timer-heap entry ordered by (fire time, insertion sequence) — the
+/// same total order the simulated kernel uses, so `schedule`d events pop
+/// deterministically even at equal timestamps.
+#[derive(Debug)]
+struct Timer {
+    at: f64,
+    seq: u64,
+    ev: NetEvent,
+}
+
+impl PartialEq for Timer {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Timer {}
+impl PartialOrd for Timer {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Timer {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.at
+            .total_cmp(&other.at)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// The [`Transport`] trait over one real TCP connection.
+pub struct TcpTransport {
+    writer: Arc<Mutex<TcpStream>>,
+    incoming: Receiver<Message>,
+    start: Instant,
+    clock_floor: f64,
+    /// Send timestamps (ms) of messages whose replies are outstanding,
+    /// FIFO-paired with arrivals to measure per-message round trips.
+    pending: VecDeque<f64>,
+    timers: BinaryHeap<Reverse<Timer>>,
+    timer_seq: u64,
+    stats: TransportStats,
+    events: u64,
+    peak: usize,
+}
+
+impl TcpTransport {
+    /// Connect to a peer that speaks the frame protocol (for example the
+    /// echo peer behind [`bench_loopback`]). Spawns a reader thread that
+    /// forwards tunneled [`Message`]s and answers keepalive pings.
+    pub fn connect(addr: &str) -> Result<TcpTransport, WireError> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        let writer = Arc::new(Mutex::new(stream.try_clone()?));
+        let (tx, rx) = channel();
+        let reply = Arc::clone(&writer);
+        let mut read_half = stream;
+        std::thread::spawn(move || {
+            let mut fr = FrameReader::new();
+            loop {
+                match fr.read_frame(&mut read_half) {
+                    Ok(Frame::Msg(m)) => {
+                        if tx.send(m).is_err() {
+                            return;
+                        }
+                    }
+                    Ok(Frame::Ping) => {
+                        let mut w = match reply.lock() {
+                            Ok(w) => w,
+                            Err(p) => p.into_inner(),
+                        };
+                        if write_frame(&mut *w, &Frame::Pong).is_err() {
+                            return;
+                        }
+                    }
+                    Ok(_) => {}
+                    Err(WireError::Timeout) => {}
+                    Err(_) => return,
+                }
+            }
+        });
+        Ok(TcpTransport {
+            writer,
+            incoming: rx,
+            start: Instant::now(),
+            clock_floor: 0.0,
+            pending: VecDeque::new(),
+            timers: BinaryHeap::new(),
+            timer_seq: 0,
+            stats: TransportStats::default(),
+            events: 0,
+            peak: 0,
+        })
+    }
+
+    fn wall_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    fn note_depth(&mut self) {
+        self.peak = self.peak.max(self.timers.len() + self.pending.len());
+    }
+
+    fn deliver(&mut self, msg: Message) -> Occurrence {
+        let now = self.wall_ms();
+        let sent_at = self.pending.pop_front().unwrap_or(now);
+        self.stats.delivered += 1;
+        self.events += 1;
+        Occurrence::Delivery(Delivery {
+            msg,
+            delay_ms: now - sent_at,
+            dropped_attempts: 0,
+            lost: false,
+        })
+    }
+
+    fn due_timer(&mut self) -> Option<Occurrence> {
+        let now = self.now();
+        if let Some(Reverse(t)) = self.timers.peek() {
+            if t.at <= now {
+                let Reverse(t) = self.timers.pop().expect("peeked timer");
+                self.events += 1;
+                return Some(Occurrence::Local(t.ev));
+            }
+        }
+        None
+    }
+}
+
+impl Transport for TcpTransport {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn now(&self) -> f64 {
+        self.wall_ms().max(self.clock_floor)
+    }
+
+    fn sync_clock(&mut self, now_ms: f64) {
+        self.clock_floor = self.clock_floor.max(now_ms);
+    }
+
+    fn schedule(&mut self, delay_ms: f64, ev: NetEvent) {
+        self.timer_seq += 1;
+        self.timers.push(Reverse(Timer {
+            at: self.now() + delay_ms.max(0.0),
+            seq: self.timer_seq,
+            ev,
+        }));
+        self.note_depth();
+    }
+
+    fn send(&mut self, msg: Message) -> Option<Delivery> {
+        self.stats.sent += 1;
+        let wrote = {
+            let mut w = match self.writer.lock() {
+                Ok(w) => w,
+                Err(p) => p.into_inner(),
+            };
+            write_frame(&mut *w, &Frame::Msg(msg.clone())).is_ok()
+        };
+        if !wrote {
+            // A dead socket resolves the fate instantly: lost.
+            self.stats.lost += 1;
+            self.stats.dropped_attempts += 1;
+            return Some(Delivery {
+                msg,
+                delay_ms: 0.0,
+                dropped_attempts: 1,
+                lost: true,
+            });
+        }
+        self.pending.push_back(self.wall_ms());
+        self.note_depth();
+        None
+    }
+
+    fn poll(&mut self) -> Option<Occurrence> {
+        if let Some(occ) = self.due_timer() {
+            return Some(occ);
+        }
+        // Drain anything already arrived.
+        if let Ok(m) = self.incoming.try_recv() {
+            return Some(self.deliver(m));
+        }
+        if !self.pending.is_empty() {
+            // Messages are in flight: give the real wire a bounded wait,
+            // punctuated by any timer that comes due first.
+            let deadline = Instant::now() + POLL_WAIT;
+            loop {
+                if let Some(occ) = self.due_timer() {
+                    return Some(occ);
+                }
+                let step = deadline
+                    .saturating_duration_since(Instant::now())
+                    .min(Duration::from_millis(20));
+                if step.is_zero() {
+                    return None;
+                }
+                match self.incoming.recv_timeout(step) {
+                    Ok(m) => return Some(self.deliver(m)),
+                    Err(RecvTimeoutError::Timeout) => continue,
+                    Err(RecvTimeoutError::Disconnected) => return None,
+                }
+            }
+        }
+        // Only timers remain: sleep until the earliest fires.
+        let at = self.timers.peek().map(|Reverse(t)| t.at)?;
+        let wait = (at - self.now()).max(0.0);
+        std::thread::sleep(Duration::from_secs_f64(wait / 1e3));
+        self.due_timer()
+    }
+
+    fn in_flight(&self) -> usize {
+        self.pending.len()
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.stats
+    }
+
+    fn events_processed(&self) -> u64 {
+        self.events
+    }
+
+    fn peak_queue_depth(&self) -> usize {
+        self.peak
+    }
+}
+
+/// Accept one connection and echo every frame straight back — the
+/// loopback peer for [`bench_loopback`] and the transport tests.
+pub fn echo_once(listener: TcpListener) {
+    let Ok((mut read_half, _)) = listener.accept() else {
+        return;
+    };
+    read_half.set_nodelay(true).ok();
+    let Ok(mut write_half) = read_half.try_clone() else {
+        return;
+    };
+    let mut fr = FrameReader::new();
+    loop {
+        match fr.read_frame(&mut read_half) {
+            Ok(f) => {
+                if write_frame(&mut write_half, &f).is_err() {
+                    return;
+                }
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// What [`bench_loopback`] measured.
+#[derive(Clone, Copy, Debug)]
+pub struct WireBench {
+    /// Round trips completed.
+    pub frames: u64,
+    /// Bytes of one encoded frame (the measured payload).
+    pub frame_bytes: usize,
+    /// Wall seconds for the whole measurement.
+    pub seconds: f64,
+    /// One-way frames per second (2 wire crossings per round trip).
+    pub frames_per_sec: f64,
+    /// Mean round-trip latency in ms.
+    pub mean_round_trip_ms: f64,
+    /// Worst round-trip latency in ms.
+    pub max_round_trip_ms: f64,
+}
+
+impl WireBench {
+    /// The bench record written to `BENCH_wire.json`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("frames", Json::num(self.frames as f64)),
+            ("frame_bytes", Json::num(self.frame_bytes as f64)),
+            ("seconds", Json::num(self.seconds)),
+            ("frames_per_sec", Json::num(self.frames_per_sec)),
+            ("mean_round_trip_ms", Json::num(self.mean_round_trip_ms)),
+            ("max_round_trip_ms", Json::num(self.max_round_trip_ms)),
+        ])
+    }
+}
+
+/// Measure the frame codec + [`TcpTransport`] over 127.0.0.1: spawn an
+/// echo peer, ping-pong `frames` report messages through the full
+/// length-prefix/JSON/TCP path, and report throughput and round trips.
+pub fn bench_loopback(frames: usize) -> Result<WireBench, WireError> {
+    use crate::coordinator::observer::LocalReport;
+
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let echo = std::thread::spawn(move || echo_once(listener));
+    let report = LocalReport {
+        edge: 0,
+        tau: 5,
+        cost: 200.0,
+        train_signal: 0.5,
+        base_version: 1,
+    };
+    let probe = Message::upload(0, 4096.0, report);
+    let frame_bytes = {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Msg(probe.clone()))?;
+        buf.len()
+    };
+    let mut t = TcpTransport::connect(&addr.to_string())?;
+    let t0 = Instant::now();
+    let mut total_rtt = 0.0;
+    let mut max_rtt = 0.0f64;
+    let mut done = 0u64;
+    for _ in 0..frames {
+        t.send(probe.clone());
+        match t.poll() {
+            Some(Occurrence::Delivery(d)) => {
+                total_rtt += d.delay_ms;
+                max_rtt = max_rtt.max(d.delay_ms);
+                done += 1;
+            }
+            _ => return Err(WireError::Timeout),
+        }
+    }
+    let seconds = t0.elapsed().as_secs_f64();
+    drop(t);
+    let _ = echo.join();
+    Ok(WireBench {
+        frames: done,
+        frame_bytes,
+        seconds,
+        // Each round trip crosses the wire twice.
+        frames_per_sec: if seconds > 0.0 {
+            2.0 * done as f64 / seconds
+        } else {
+            0.0
+        },
+        mean_round_trip_ms: if done > 0 { total_rtt / done as f64 } else { 0.0 },
+        max_round_trip_ms: max_rtt,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::observer::LocalReport;
+
+    fn report() -> LocalReport {
+        LocalReport {
+            edge: 1,
+            tau: 2,
+            cost: 80.0,
+            train_signal: 0.25,
+            base_version: 3,
+        }
+    }
+
+    #[test]
+    fn loopback_send_poll_delivers_with_stats() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let echo = std::thread::spawn(move || echo_once(listener));
+        let mut t = TcpTransport::connect(&addr.to_string()).unwrap();
+        assert_eq!(t.name(), "tcp");
+        for i in 0..8u64 {
+            assert!(t.send(Message::download(1, 512.0, i)).is_none());
+            assert_eq!(t.in_flight(), 1);
+            match t.poll() {
+                Some(Occurrence::Delivery(d)) => {
+                    assert!(!d.lost);
+                    assert!(d.delay_ms >= 0.0);
+                    assert!(matches!(
+                        d.msg.payload,
+                        crate::net::message::Payload::Global { version } if version == i
+                    ));
+                }
+                other => panic!("expected a delivery, got {other:?}"),
+            }
+        }
+        assert!(t.send(Message::upload(1, 512.0, report())).is_none());
+        assert!(matches!(t.poll(), Some(Occurrence::Delivery(_))));
+        let s = t.stats();
+        assert_eq!(s.sent, 9);
+        assert_eq!(s.delivered, 9);
+        assert_eq!(s.lost, 0);
+        assert_eq!(t.in_flight(), 0);
+        assert!(t.events_processed() >= 9);
+        drop(t);
+        let _ = echo.join();
+    }
+
+    #[test]
+    fn timers_fire_in_order_and_clock_moves_forward_only() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let echo = std::thread::spawn(move || echo_once(listener));
+        let mut t = TcpTransport::connect(&addr.to_string()).unwrap();
+        t.schedule(6.0, NetEvent::Leave { edge: 2 });
+        t.schedule(2.0, NetEvent::Compute { edge: 1, round: 4 });
+        match t.poll() {
+            Some(Occurrence::Local(NetEvent::Compute { edge: 1, round: 4 })) => {}
+            other => panic!("expected the earlier timer first, got {other:?}"),
+        }
+        match t.poll() {
+            Some(Occurrence::Local(NetEvent::Leave { edge: 2 })) => {}
+            other => panic!("expected the later timer second, got {other:?}"),
+        }
+        let before = t.now();
+        t.sync_clock(before + 1e6);
+        assert!(t.now() >= before + 1e6, "sync_clock must floor the clock");
+        t.sync_clock(0.0);
+        assert!(t.now() >= before + 1e6, "the clock never moves backward");
+        assert!(t.peak_queue_depth() >= 2);
+        drop(t);
+        let _ = echo.join();
+    }
+
+    #[test]
+    fn bench_loopback_measures_something() {
+        let b = bench_loopback(64).unwrap();
+        assert_eq!(b.frames, 64);
+        assert!(b.frames_per_sec > 0.0);
+        assert!(b.mean_round_trip_ms >= 0.0);
+        assert!(b.frame_bytes > 4);
+        assert!(b.to_json().get("frames_per_sec").is_some());
+    }
+}

@@ -35,6 +35,17 @@ pub const BANDIT_GRAMMAR: &str =
     "auto | kube[:EPS] | ucb-bv | ucb1 | eps-greedy[:EPS] | thompson; \
      EPS = exploration rate in [0,1], default 0.1 (e.g. kube:0.2)";
 
+/// The real-deployment grammar one-liner shared by `ol4el coordinator
+/// --help` and `ol4el edge --help` (the full productions live in
+/// `docs/GRAMMAR.md`, which `ol4el --help` embeds via [`SPEC_GRAMMAR`]).
+/// Single-sourced here so the two subcommand helps and the docs cannot
+/// drift — `tests/cli_help.rs` asserts both helps contain it.
+pub const WIRE_GRAMMAR: &str =
+    "addr := HOST ':' PORT (e.g. 127.0.0.1:7070); \
+     serve := 'coordinator serve' '--addr' addr train-flags; \
+     join := 'edge join' addr ['--slowdown' S>=1] ['--leave-after' N] \
+     ['--rejoin' ID] ['--drop-round' N]";
+
 /// One flag specification.
 #[derive(Clone, Debug)]
 pub struct FlagSpec {

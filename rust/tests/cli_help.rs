@@ -42,6 +42,14 @@ const PRODUCTIONS: &[&str] = &[
     "join:RATE",
     "restart:MS",
     "straggle:P:FACTOR",
+    // real deployment (net::wire)
+    "addr     := HOST ':' PORT",
+    "'coordinator serve' '--addr' addr",
+    "'edge join' addr",
+    "['--slowdown' S]",
+    "['--leave-after' N]",
+    "['--rejoin' ID]",
+    "['--drop-round' N]",
     // bandit (the legacy form; also the bandit= values of ol4el)
     "auto",
     "kube[:EPS]",
@@ -122,6 +130,42 @@ fn spec_grammar_parses_its_own_examples() {
     assert!(BanditSpec::parse("kube:0.2").is_some());
     assert!(PartitionKind::parse("label-skew:0.3").is_some());
     assert!(CostMode::parse("variable:0.35").is_some());
+}
+
+/// `ol4el SUB SUBSUB --help` (two-level subcommands: `coordinator serve`,
+/// `edge join`).
+fn nested_help(sub: &str, subsub: &str) -> String {
+    let out = Command::new(env!("CARGO_BIN_EXE_ol4el"))
+        .args([sub, subsub, "--help"])
+        .output()
+        .unwrap_or_else(|e| panic!("run ol4el {sub} {subsub} --help: {e}"));
+    assert!(out.status.success(), "{sub} {subsub} --help exited nonzero");
+    String::from_utf8(out.stdout).expect("utf8 help output")
+}
+
+#[test]
+fn coordinator_and_edge_help_document_the_wire_grammar() {
+    // The deployment grammar is single-sourced in `util::cli::WIRE_GRAMMAR`
+    // and must show up in both process-split entry points.
+    for sub in ["coordinator", "edge"] {
+        let help = subcommand_help(sub);
+        assert!(
+            help.contains(ol4el::util::cli::WIRE_GRAMMAR),
+            "{sub} --help lost the single-sourced wire grammar"
+        );
+    }
+}
+
+#[test]
+fn serve_and_join_help_document_their_flags() {
+    let serve = nested_help("coordinator", "serve");
+    for needle in ["--addr", "--round-timeout-ms", "--rejoin-window-ms", "--task", "--strategy"] {
+        assert!(serve.contains(needle), "coordinator serve --help lost {needle:?}");
+    }
+    let join = nested_help("edge", "join");
+    for needle in ["--slowdown", "--leave-after", "--rejoin", "--drop-round", "--max-backoff-ms"] {
+        assert!(join.contains(needle), "edge join --help lost {needle:?}");
+    }
 }
 
 #[test]

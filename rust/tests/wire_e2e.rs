@@ -1,0 +1,247 @@
+//! Loopback end-to-end tests for the real networked deployment
+//! (`net::wire`): `ol4el coordinator serve` + N `ol4el edge join`
+//! processes on 127.0.0.1, asserted bit-identical to the in-process
+//! `ol4el train` run with the same config — including through a
+//! crash-and-rejoin — and terminating when an edge dies for good.
+
+use std::net::TcpListener;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use ol4el::util::json::Json;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_ol4el")
+}
+
+/// A port the OS just handed out (freed before use; the window between
+/// drop and the coordinator's bind is the standard acceptable race).
+fn free_port() -> u16 {
+    TcpListener::bind("127.0.0.1:0")
+        .expect("bind :0")
+        .local_addr()
+        .expect("local addr")
+        .port()
+}
+
+/// Child processes killed on drop, so a failing assertion can't leak
+/// edge processes that retry-connect for the rest of the test run.
+struct Procs(Vec<Child>);
+
+impl Drop for Procs {
+    fn drop(&mut self) {
+        for c in &mut self.0 {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+/// Wait for `child` with a hard timeout, returning its output (stdout
+/// must be piped). Kills and panics on timeout.
+fn wait_output(mut child: Child, secs: u64, what: &str) -> std::process::Output {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    loop {
+        match child.try_wait().expect("try_wait") {
+            Some(_) => return child.wait_with_output().expect("wait_with_output"),
+            None if Instant::now() > deadline => {
+                let _ = child.kill();
+                let _ = child.wait();
+                panic!("{what} timed out after {secs}s");
+            }
+            None => std::thread::sleep(Duration::from_millis(50)),
+        }
+    }
+}
+
+/// The shared run configuration: small enough to finish in seconds,
+/// big enough to make many strategy decisions and global updates.
+fn config_args(strategy: &str, budget: &str) -> Vec<String> {
+    [
+        "--task",
+        "svm",
+        "--strategy",
+        strategy,
+        "--edges",
+        "3",
+        "--budget",
+        budget,
+        "--data-n",
+        "4000",
+        "--seed",
+        "7",
+        "--eval-every",
+        "1",
+        "--json",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect()
+}
+
+/// Run in-process `ol4el train` and return its parsed `--json` output.
+fn local_run(strategy: &str, budget: &str) -> Json {
+    let out = Command::new(bin())
+        .arg("train")
+        .args(config_args(strategy, budget))
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn train");
+    let out = wait_output(out, 120, "ol4el train");
+    assert!(out.status.success(), "train exited nonzero");
+    Json::parse(&String::from_utf8(out.stdout).expect("utf8")).expect("train json")
+}
+
+/// Run `coordinator serve` + one `edge join` process per entry of
+/// `edge_flags` and return serve's parsed `--json` output.
+fn distributed_run(
+    strategy: &str,
+    budget: &str,
+    serve_extra: &[&str],
+    edge_flags: &[&[&str]],
+) -> Json {
+    let addr = format!("127.0.0.1:{}", free_port());
+    let serve = Command::new(bin())
+        .args(["coordinator", "serve", "--addr", &addr])
+        .args(config_args(strategy, budget))
+        .args(serve_extra)
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn serve");
+    let mut edges = Procs(Vec::new());
+    for flags in edge_flags {
+        edges.0.push(
+            Command::new(bin())
+                .args(["edge", "join", &addr])
+                .args(*flags)
+                .stdout(Stdio::null())
+                .spawn()
+                .expect("spawn edge"),
+        );
+    }
+    let out = wait_output(serve, 180, "coordinator serve");
+    assert!(
+        out.status.success(),
+        "serve exited nonzero: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    // Shutdown frames end every edge process cleanly.
+    for e in std::mem::take(&mut edges.0) {
+        let out = wait_output(e, 60, "edge join");
+        assert!(out.status.success(), "an edge exited nonzero");
+    }
+    Json::parse(&String::from_utf8(out.stdout).expect("utf8")).expect("serve json")
+}
+
+/// Assert two run documents are bit-identical in everything that is not
+/// host wall-clock: the full TracePoint stream and the summary scalars.
+fn assert_bit_identical(local: &Json, dist: &Json, what: &str) {
+    for key in [
+        "final_metric",
+        "updates",
+        "wall_ms",
+        "mean_spent",
+        "retired_edges",
+        "trace",
+        "config",
+    ] {
+        assert_eq!(
+            local.get(key),
+            dist.get(key),
+            "{what}: '{key}' differs between in-process train and the wire"
+        );
+    }
+    let n = dist
+        .get("trace")
+        .and_then(Json::as_arr)
+        .map(<[Json]>::len)
+        .unwrap_or(0);
+    assert!(n > 3, "{what}: only {n} trace points — run too trivial to prove anything");
+}
+
+#[test]
+fn sync_session_is_bit_identical_over_the_wire() {
+    let strategy = "ol4el:mode=sync";
+    let local = local_run(strategy, "1500");
+    let dist = distributed_run(strategy, "1500", &[], &[&[], &[], &[]]);
+    assert_bit_identical(&local, &dist, "sync");
+}
+
+#[test]
+fn async_session_with_a_mid_round_crash_is_bit_identical() {
+    // One edge drops its connection after computing round 3 *without
+    // reporting it*, then rejoins: the coordinator resends the launch,
+    // the edge fast-forwards and recomputes the identical round, and the
+    // final document still matches the crash-free in-process run bit for
+    // bit — the ISSUE's deterministic-crash-recovery acceptance test.
+    let strategy = "ol4el";
+    let local = local_run(strategy, "1500");
+    let dist = distributed_run(
+        strategy,
+        "1500",
+        &[],
+        &[
+            &["--drop-round", "3", "--max-backoff-ms", "250"],
+            &[],
+            &[],
+        ],
+    );
+    assert_bit_identical(&local, &dist, "async+crash");
+}
+
+#[test]
+fn clean_leave_retires_the_edge_and_the_session_finishes() {
+    let dist = distributed_run(
+        "ol4el",
+        "1500",
+        &[],
+        &[&["--leave-after", "2"], &[], &[]],
+    );
+    let retired = dist
+        .get("retired_edges")
+        .and_then(Json::as_f64)
+        .expect("retired_edges");
+    assert!(
+        retired >= 1.0,
+        "a clean Leave must retire the departing edge (got {retired})"
+    );
+}
+
+#[test]
+fn session_survives_a_permanently_dead_edge() {
+    // SIGKILL one edge process mid-run and never bring it back: the
+    // coordinator waits out the (short) rejoin window, retires the edge,
+    // and the session still terminates with a clean exit. A large budget
+    // keeps the session alive well past the kill; if the race is ever
+    // lost the test degrades to a plain three-edge run, not a failure.
+    let addr = format!("127.0.0.1:{}", free_port());
+    let serve = Command::new(bin())
+        .args(["coordinator", "serve", "--addr", &addr])
+        .args(config_args("ol4el", "60000"))
+        .args(["--rejoin-window-ms", "500", "--round-timeout-ms", "10000"])
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn serve");
+    let mut edges = Procs(Vec::new());
+    for _ in 0..3 {
+        edges.0.push(
+            Command::new(bin())
+                .args(["edge", "join", &addr])
+                .stdout(Stdio::null())
+                .spawn()
+                .expect("spawn edge"),
+        );
+    }
+    std::thread::sleep(Duration::from_millis(750));
+    let victim = &mut edges.0[2];
+    let _ = victim.kill();
+    let _ = victim.wait();
+    let out = wait_output(serve, 180, "coordinator serve (dead edge)");
+    assert!(
+        out.status.success(),
+        "serve must terminate cleanly with a permanently dead edge: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let j = Json::parse(&String::from_utf8(out.stdout).expect("utf8")).expect("serve json");
+    assert!(j.get("updates").and_then(Json::as_f64).unwrap_or(0.0) > 0.0);
+}
