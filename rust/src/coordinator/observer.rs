@@ -167,6 +167,75 @@ mod tests {
     }
 
     #[test]
+    fn trace_observer_ignores_membership_and_drop_events() {
+        // The churn vocabulary must never leak into the rebuilt trace:
+        // joins, drops and retirements pass through without a point.
+        let mut t = TraceObserver::new();
+        t.on_event(&RunEvent::EdgeJoined {
+            edge: 7,
+            wall_ms: 120.0,
+        });
+        t.on_event(&RunEvent::MessageDropped {
+            edge: 7,
+            wall_ms: 130.0,
+            attempts: 2,
+            lost: false,
+        });
+        t.on_event(&RunEvent::EdgeRetired {
+            edge: 7,
+            wall_ms: 140.0,
+            spent: 900.0,
+        });
+        assert!(t.points().is_empty());
+        t.on_event(&RunEvent::GlobalUpdate { point: point(1) });
+        assert_eq!(t.points().len(), 1);
+    }
+
+    #[test]
+    fn fn_observer_sees_every_churn_event_with_exact_payloads() {
+        // FnObserver must forward EdgeJoined / MessageDropped / EdgeRetired
+        // verbatim — the fleet's live view depends on the payloads.
+        let mut seen: Vec<String> = Vec::new();
+        {
+            let mut obs = from_fn(|ev: &RunEvent| match ev {
+                RunEvent::EdgeJoined { edge, wall_ms } => {
+                    seen.push(format!("join:{edge}@{wall_ms}"))
+                }
+                RunEvent::MessageDropped {
+                    edge,
+                    attempts,
+                    lost,
+                    ..
+                } => seen.push(format!("drop:{edge}:{attempts}:{lost}")),
+                RunEvent::EdgeRetired { edge, spent, .. } => {
+                    seen.push(format!("retire:{edge}:{spent}"))
+                }
+                _ => {}
+            });
+            obs.on_event(&RunEvent::EdgeJoined {
+                edge: 3,
+                wall_ms: 50.0,
+            });
+            obs.on_event(&RunEvent::MessageDropped {
+                edge: 3,
+                wall_ms: 60.0,
+                attempts: 4,
+                lost: true,
+            });
+            obs.on_event(&RunEvent::EdgeRetired {
+                edge: 3,
+                wall_ms: 70.0,
+                spent: 123.5,
+            });
+            obs.on_event(&RunEvent::GlobalUpdate { point: point(9) });
+        }
+        assert_eq!(
+            seen,
+            vec!["join:3@50", "drop:3:4:true", "retire:3:123.5"]
+        );
+    }
+
+    #[test]
     fn closures_wrap_as_observers() {
         let mut count = 0usize;
         {

@@ -143,6 +143,11 @@ pub struct Session<'e> {
     pub last_metric: f64,
     retired_seen: Vec<bool>,
     remote: Option<Box<dyn RemoteRunner>>,
+    // Telemetry handles, cached once so the round path never takes the
+    // registry lock. Out-of-band by contract (`crate::telemetry`): they
+    // read the wall clock and atomics only.
+    tele_rounds: std::sync::Arc<crate::telemetry::Counter>,
+    tele_round_us: std::sync::Arc<crate::telemetry::Histogram>,
 }
 
 impl<'e> Session<'e> {
@@ -164,6 +169,8 @@ impl<'e> Session<'e> {
             last_metric: 0.0,
             retired_seen,
             remote: None,
+            tele_rounds: crate::telemetry::counter("session.rounds"),
+            tele_round_us: crate::telemetry::histogram("session.local_round_us"),
         })
     }
 
@@ -198,6 +205,7 @@ impl<'e> Session<'e> {
 
     /// Evaluate the global model's test metric.
     pub fn evaluate(&self) -> Result<f64> {
+        let _span = crate::telemetry::span("session.evaluate_us");
         self.world.evaluate(self.engine)
     }
 
@@ -211,6 +219,8 @@ impl<'e> Session<'e> {
     /// in process, or on a remote edge process when a [`RemoteRunner`] is
     /// installed (same call sites, same results, different machine).
     pub fn local_round(&mut self, edge: usize, tau: usize, hyper: &Hyper) -> Result<LocalRound> {
+        self.tele_rounds.inc();
+        let _span = crate::telemetry::span_with(&self.tele_round_us, "session.local_round_us");
         if self.remote.is_some() {
             return self.remote_round(edge, tau, hyper);
         }

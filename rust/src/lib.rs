@@ -100,6 +100,17 @@
 //! in `docs/ARCHITECTURE.md` and enforced by `tests/sharding.rs` and the
 //! CI smoke).
 //!
+//! ## Observability
+//!
+//! The `telemetry` module is the process-global instrumentation layer:
+//! named atomic counters/gauges/log-scale histograms, RAII
+//! [`Span`](telemetry::Span) timers, JSONL export (`--telemetry FILE`,
+//! sampled via `--telemetry-sample N`), a Prometheus-style text
+//! exposition, and a live `Stats` scrape frame on the wire protocol.
+//! It is **out-of-band by contract**: instruments read wall-clock and
+//! atomics only — never an RNG stream, event queue, or charge ledger —
+//! so every bit-identity suite passes with instrumentation enabled.
+//!
 //! The request path is pure Rust: `runtime/` loads the HLO artifacts via
 //! the PJRT C API (`xla` crate, behind the `xla-backend` feature) and
 //! `engine::pjrt` exposes them behind the same `ComputeEngine` trait as the
@@ -125,5 +136,6 @@ pub mod net;
 pub mod runtime;
 pub mod sim;
 pub mod strategy;
+pub mod telemetry;
 pub mod testkit;
 pub mod util;

@@ -145,6 +145,15 @@ fn train_cli() -> Cli {
         .opt("engine", "native", "native | pjrt (the full 3-layer path)")
         .opt("artifacts", "artifacts", "artifact directory for --engine pjrt")
         .opt_no_default("config", "load a JSON config file (flags override it)")
+        .opt_no_default(
+            "telemetry",
+            "stream span/counter/histogram records to this JSONL file",
+        )
+        .opt(
+            "telemetry-sample",
+            "1",
+            "record every Nth span (flush snapshots are never sampled)",
+        )
         .switch("trace", "print every trace point")
         .switch("live", "stream global updates to stderr as they happen")
         .switch("json", "emit the result as JSON")
@@ -225,6 +234,34 @@ fn builder_from_args(a: &Args) -> Result<ExperimentBuilder> {
         .seed(a.u64("seed").map_err(|e| anyhow!(e))?))
 }
 
+/// Install the JSONL telemetry sink from the shared flag pair
+/// (`--telemetry FILE`, `--telemetry-sample N`). Returns whether a sink
+/// was installed; the sample rate applies either way.
+fn telemetry_from_args(a: &Args) -> Result<bool> {
+    let sample = a.u64("telemetry-sample").map_err(|e| anyhow!(e))? as u32;
+    ol4el::telemetry::set_sample(sample);
+    let Some(path) = a.get("telemetry") else {
+        return Ok(false);
+    };
+    ol4el::telemetry::install_jsonl(path, sample)
+        .map_err(|e| anyhow!("opening --telemetry '{path}': {e}"))?;
+    Ok(true)
+}
+
+/// End-of-command telemetry epilogue: flush instrument snapshots into
+/// the sink, print the summary table to stderr at `--log info`, and
+/// close the sink. No-op when `--telemetry` wasn't given.
+fn telemetry_finish(installed: bool) {
+    if !installed {
+        return;
+    }
+    ol4el::telemetry::flush();
+    if ol4el::util::logging::enabled(ol4el::util::logging::Level::Info) {
+        eprint!("{}", ol4el::telemetry::report());
+    }
+    ol4el::telemetry::uninstall();
+}
+
 fn parse_task(spec: &str) -> Result<TaskSpec> {
     TaskSpec::parse(spec)
         .map_err(|e| anyhow!("bad --task '{spec}': {e} (grammar: NAME[:KEY=N]*, e.g. kmeans:k=5)"))
@@ -282,10 +319,13 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         cfg.budget,
         engine_kind.name()
     );
+    let tele = telemetry_from_args(&a)?;
     let t0 = std::time::Instant::now();
     let r = exp.run(engine.as_ref())?;
     let dt = t0.elapsed().as_secs_f64();
-    report_run(&a, &cfg, &r, dt)
+    let out = report_run(&a, &cfg, &r, dt);
+    telemetry_finish(tele);
+    out
 }
 
 /// Post-run reporting shared by `train` and `coordinator serve`: the
@@ -375,6 +415,7 @@ fn coordinator_usage() -> String {
          \n\
          Subcommands:\n\
            serve    listen on --addr, gather the fleet, run one session over TCP\n\
+           stats    scrape one live telemetry snapshot from a running coordinator\n\
          \n\
          Grammar: {WIRE_GRAMMAR}\n\
          \n\
@@ -385,6 +426,7 @@ fn coordinator_usage() -> String {
 fn cmd_coordinator(argv: &[String]) -> Result<()> {
     match argv.first().map(String::as_str) {
         Some("serve") => cmd_serve(&argv[1..]),
+        Some("stats") => cmd_stats(&argv[1..]),
         None | Some("--help") | Some("-h") | Some("help") => {
             print!("{}", coordinator_usage());
             Ok(())
@@ -394,6 +436,95 @@ fn cmd_coordinator(argv: &[String]) -> Result<()> {
             coordinator_usage()
         )),
     }
+}
+
+fn stats_cli() -> Cli {
+    Cli::new(
+        "ol4el coordinator stats",
+        "connect, send one Stats frame, print the coordinator's live telemetry snapshot",
+    )
+    .opt("addr", "127.0.0.1:7070", "HOST:PORT of the running coordinator")
+    .opt("format", "json", "json | prom (Prometheus text exposition)")
+    .opt("timeout-ms", "5000", "ms to wait for the StatsReply")
+}
+
+/// `coordinator stats` — the live metrics endpoint's client: one `Stats`
+/// frame in, one `StatsReply` out, rendered as JSON or Prometheus text.
+/// Works against any wire listener (pre-Hello and mid-session alike).
+fn cmd_stats(argv: &[String]) -> Result<()> {
+    use ol4el::net::wire::{Frame, FrameReader, WireError};
+    let Some(a) = stats_cli().parse(argv).map_err(|e| anyhow!(e))? else {
+        return Ok(());
+    };
+    let addr = a.str("addr");
+    let timeout = std::time::Duration::from_millis(a.u64("timeout-ms").map_err(|e| anyhow!(e))?);
+    let stream =
+        std::net::TcpStream::connect(&addr).map_err(|e| anyhow!("connecting {addr}: {e}"))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(timeout)).ok();
+    let mut write_half = stream
+        .try_clone()
+        .map_err(|e| anyhow!("cloning socket: {e}"))?;
+    ol4el::net::wire::write_frame(&mut write_half, &Frame::Stats)
+        .map_err(|e| anyhow!("sending stats request: {e}"))?;
+    let mut fr = FrameReader::new();
+    let mut read_half = &stream;
+    loop {
+        match fr.read_frame(&mut read_half) {
+            Ok(Frame::StatsReply { metrics }) => {
+                match a.str("format").as_str() {
+                    "json" => println!("{}", metrics.pretty()),
+                    "prom" => print!("{}", prom_from_snapshot(&metrics)),
+                    other => return Err(anyhow!("bad --format '{other}' (json | prom)")),
+                }
+                return Ok(());
+            }
+            Ok(_) => {} // a busy session may interleave other frames; keep reading
+            Err(WireError::Timeout) => {
+                return Err(anyhow!("no StatsReply within {}ms", timeout.as_millis()))
+            }
+            Err(e) => return Err(anyhow!("reading stats reply: {e}")),
+        }
+    }
+}
+
+/// Render a remote [`telemetry::snapshot`] JSON document as Prometheus
+/// text exposition (the local-registry renderer lives in
+/// `telemetry::prometheus`; this one works on the scraped snapshot).
+///
+/// [`telemetry::snapshot`]: ol4el::telemetry::snapshot
+fn prom_from_snapshot(metrics: &Json) -> String {
+    fn name_of(s: &str) -> String {
+        s.chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+            .collect()
+    }
+    let mut out = String::new();
+    let section = |j: &Json, key: &str| -> Vec<(String, Json)> {
+        match j.get(key) {
+            Some(Json::Obj(m)) => m.iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
+            _ => Vec::new(),
+        }
+    };
+    for (k, v) in section(metrics, "counters") {
+        let n = name_of(&k);
+        out.push_str(&format!("# TYPE {n} counter\n{n} {v}\n"));
+    }
+    for (k, v) in section(metrics, "gauges") {
+        let n = name_of(&k);
+        let val = v.get("value").cloned().unwrap_or(Json::num(0.0));
+        out.push_str(&format!("# TYPE {n} gauge\n{n} {val}\n"));
+    }
+    for (k, v) in section(metrics, "histograms") {
+        let n = name_of(&k);
+        out.push_str(&format!("# TYPE {n} summary\n"));
+        for field in ["count", "mean_us", "p50_us", "p99_us", "max_us"] {
+            if let Some(val) = v.get(field) {
+                out.push_str(&format!("{n}_{field} {val}\n"));
+            }
+        }
+    }
+    out
 }
 
 /// `coordinator serve` = the full `train` flag set plus the listen
@@ -488,10 +619,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         }));
     }
     eprintln!("[ol4el] coordinator: fleet complete — running");
+    let tele = telemetry_from_args(&a)?;
     let t0 = std::time::Instant::now();
     let r = session.run()?;
     let dt = t0.elapsed().as_secs_f64();
-    report_run(&a, &cfg, &r, dt)
+    let out = report_run(&a, &cfg, &r, dt);
+    telemetry_finish(tele);
+    out
 }
 
 fn edge_usage() -> String {
@@ -540,6 +674,15 @@ fn edge_join_cli() -> Cli {
     .opt("max-attempts", "40", "connection attempts before giving up")
     .opt("engine", "native", "native | pjrt (the full 3-layer path)")
     .opt("artifacts", "artifacts", "artifact directory for --engine pjrt")
+    .opt_no_default(
+        "telemetry",
+        "stream span/counter/histogram records to this JSONL file",
+    )
+    .opt(
+        "telemetry-sample",
+        "1",
+        "record every Nth span (flush snapshots are never sampled)",
+    )
 }
 
 fn cmd_edge_join(argv: &[String]) -> Result<()> {
@@ -587,7 +730,10 @@ fn cmd_edge_join(argv: &[String]) -> Result<()> {
         EngineKind::parse(&a.str("engine")).ok_or_else(|| anyhow!("bad --engine"))?,
         &a.str("artifacts"),
     )?;
-    ol4el::net::wire::join(addr, &opts, engine.as_ref())
+    let tele = telemetry_from_args(&a)?;
+    let out = ol4el::net::wire::join(addr, &opts, engine.as_ref());
+    telemetry_finish(tele);
+    out
 }
 
 fn fleet_cli() -> Cli {
@@ -628,6 +774,15 @@ fn fleet_cli() -> Cli {
          results are bit-identical at any value",
     )
     .opt("seed", "42", "PRNG seed")
+    .opt_no_default(
+        "telemetry",
+        "stream span/counter/histogram records to this JSONL file",
+    )
+    .opt(
+        "telemetry-sample",
+        "1",
+        "record every Nth span (flush snapshots are never sampled)",
+    )
     .opt("bench-out", "BENCH_fleet.json", "where --smoke writes its numbers")
     .opt(
         "wire-bench-out",
@@ -787,8 +942,11 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
     let Some(a) = fleet_cli().parse(argv).map_err(|e| anyhow!(e))? else {
         return Ok(());
     };
+    let tele = telemetry_from_args(&a)?;
     if a.flag("smoke") {
-        return cmd_fleet_smoke(&a);
+        let out = cmd_fleet_smoke(&a);
+        telemetry_finish(tele);
+        return out;
     }
     let mode = a.str("mode");
     let runs: Vec<(&str, bool)> = match mode.as_str() {
@@ -811,6 +969,7 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         );
         println!("{}", j.pretty());
     }
+    telemetry_finish(tele);
     Ok(())
 }
 
@@ -916,7 +1075,52 @@ fn cmd_fleet_smoke(a: &Args) -> Result<()> {
     let wpath = a.str("wire-bench-out");
     std::fs::write(&wpath, wb.to_json().pretty()).map_err(|e| anyhow!("writing {wpath}: {e}"))?;
     eprintln!("[ol4el] wrote {wpath}");
+    append_bench_history(
+        "fleet-smoke",
+        &Json::obj(vec![("fleet", j), ("wire", wb.to_json())]),
+    );
     Ok(())
+}
+
+/// Append one benchkit-style record to `BENCH_history.jsonl`: which bench
+/// ran, when, on what machine and git revision, plus the bench's own
+/// numbers — the repo's perf trajectory as one JSONL line per run.
+/// Best-effort: an unwritable file is a note, never an error.
+fn append_bench_history(kind: &str, payload: &Json) {
+    use std::io::Write as _;
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(0);
+    let git = std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .unwrap_or_else(|| "unknown".to_string());
+    let epoch = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let rec = Json::obj(vec![
+        ("bench", Json::str(kind)),
+        ("epoch_secs", Json::num(epoch as f64)),
+        ("git", Json::str(&git)),
+        ("os", Json::str(std::env::consts::OS)),
+        ("arch", Json::str(std::env::consts::ARCH)),
+        ("cores", Json::num(cores as f64)),
+        ("result", payload.clone()),
+    ]);
+    let line = format!("{rec}\n");
+    let written = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("BENCH_history.jsonl")
+        .and_then(|mut f| f.write_all(line.as_bytes()));
+    match written {
+        Ok(()) => eprintln!("[ol4el] appended BENCH_history.jsonl ({kind})"),
+        Err(e) => eprintln!("[ol4el] note: could not append BENCH_history.jsonl: {e}"),
+    }
 }
 
 fn bench_tasks_cli() -> Cli {
@@ -1014,6 +1218,7 @@ fn cmd_bench_tasks(argv: &[String]) -> Result<()> {
     let path = a.str("out");
     std::fs::write(&path, j.pretty()).map_err(|e| anyhow!("writing {path}: {e}"))?;
     eprintln!("[ol4el] wrote {path}");
+    append_bench_history("bench-tasks", &j);
     Ok(())
 }
 
@@ -1121,6 +1326,7 @@ fn cmd_bench_strategies(argv: &[String]) -> Result<()> {
     let path = a.str("out");
     std::fs::write(&path, j.pretty()).map_err(|e| anyhow!("writing {path}: {e}"))?;
     eprintln!("[ol4el] wrote {path}");
+    append_bench_history("bench-strategies", &j);
     Ok(())
 }
 

@@ -481,6 +481,10 @@ pub(crate) fn run_async(
 ) -> DriverSummary {
     let k = cmd.len();
     let lookahead = cfg.network.min_delay_ms(model_bytes);
+    // Telemetry handles, fetched once per run. Out-of-band by contract:
+    // wall-clock + atomics only, never the RNG streams or event keys.
+    let tele_stall_us = crate::telemetry::histogram("fleet.window_stall_us");
+    let tele_merge_us = crate::telemetry::histogram("session.merge_us");
     let mut cloud = Cloud::new(cfg.clone(), model_bytes);
     let mut shard_next: Vec<Option<f64>> = vec![None; k];
     let mut shard_last: Vec<f64> = vec![0.0; k];
@@ -577,20 +581,29 @@ pub(crate) fn run_async(
                     .expect("fleet worker hung up");
                 poked += 1;
             }
-            for _ in 0..poked {
-                match out.recv().expect("fleet worker hung up") {
-                    Out::Window(o) => absorb_window(
-                        o,
-                        &mut cloud,
-                        &mut shard_next,
-                        &mut shard_last,
-                        &mut shard_processed,
-                        &mut window_events,
-                    ),
-                    _ => unreachable!("Window answers with Window"),
+            if poked > 0 {
+                // How long the coordinator idles at the lockstep barrier
+                // waiting for the slowest poked shard.
+                let t_stall = std::time::Instant::now();
+                for _ in 0..poked {
+                    match out.recv().expect("fleet worker hung up") {
+                        Out::Window(o) => absorb_window(
+                            o,
+                            &mut cloud,
+                            &mut shard_next,
+                            &mut shard_last,
+                            &mut shard_processed,
+                            &mut window_events,
+                        ),
+                        _ => unreachable!("Window answers with Window"),
+                    }
                 }
+                tele_stall_us.observe_us(t_stall.elapsed().as_micros() as u64);
             }
-            cloud.process_window(bound, inclusive);
+            {
+                let _span = crate::telemetry::span_with(&tele_merge_us, "session.merge_us");
+                cloud.process_window(bound, inclusive);
+            }
             window_events.append(&mut cloud.events);
             for m in cloud.outbox.drain(..) {
                 debug_assert!(
@@ -677,9 +690,19 @@ pub(crate) fn run_sync(
         }
     }
 
+    // Telemetry handles for the sync decision layer (out-of-band: the
+    // select timing reads the wall clock, never the `rng` stream).
+    let tele_selects = crate::telemetry::counter("session.selects");
+    let tele_select_us = crate::telemetry::histogram("session.select_us");
+    let tele_stall_us = crate::telemetry::histogram("fleet.window_stall_us");
+
     loop {
         let min_remaining = (cfg.budget - spent_each).max(0.0);
-        let Some(tau) = strategy.select(0, min_remaining, &mut rng) else {
+        tele_selects.inc();
+        let t_select = std::time::Instant::now();
+        let selected = strategy.select(0, min_remaining, &mut rng);
+        tele_select_us.observe_us(t_select.elapsed().as_micros() as u64);
+        let Some(tau) = selected else {
             break; // no affordable arm: the fleet retires together
         };
         emit(
@@ -705,6 +728,7 @@ pub(crate) fn run_sync(
         let mut reports = Vec::with_capacity(n);
         let mut up_drops = Vec::new();
         let mut dl_drops = Vec::new();
+        let t_stall = std::time::Instant::now();
         for _ in 0..k {
             match out.recv().expect("fleet worker hung up") {
                 Out::Sync(o) => {
@@ -718,6 +742,7 @@ pub(crate) fn run_sync(
                 _ => unreachable!("SyncRound answers with Sync"),
             }
         }
+        tele_stall_us.observe_us(t_stall.elapsed().as_micros() as u64);
         // Deterministic emission order: upload drops then reply drops,
         // each in edge order, at the round-start clock.
         up_drops.sort_by_key(|d| d.0);

@@ -365,6 +365,15 @@ pub(crate) struct Shard {
     sent: u64,
     lost: u64,
     dropped_attempts: u64,
+    // Telemetry handles, fetched once at build time so the event loop
+    // never touches the registry lock. Strictly out-of-band
+    // (`crate::telemetry`): atomics + wall clock, no RNG, no queue
+    // writes — the sharding bit-identity contract is untouched.
+    tele_events: std::sync::Arc<crate::telemetry::Counter>,
+    tele_queue: std::sync::Arc<crate::telemetry::Gauge>,
+    tele_window_us: std::sync::Arc<crate::telemetry::Histogram>,
+    tele_selects: std::sync::Arc<crate::telemetry::Counter>,
+    tele_select_us: std::sync::Arc<crate::telemetry::Histogram>,
 }
 
 impl Shard {
@@ -408,6 +417,11 @@ impl Shard {
             sent: 0,
             lost: 0,
             dropped_attempts: 0,
+            tele_events: crate::telemetry::counter("fleet.shard.events"),
+            tele_queue: crate::telemetry::gauge("fleet.shard.queue_depth"),
+            tele_window_us: crate::telemetry::histogram("fleet.window_us"),
+            tele_selects: crate::telemetry::counter("session.selects"),
+            tele_select_us: crate::telemetry::histogram("session.select_us"),
         })
     }
 
@@ -501,10 +515,14 @@ impl Shard {
             return;
         }
         let remaining = (self.cfg.budget - self.edges[l].spent).max(0.0);
+        self.tele_selects.inc();
+        let t_select = std::time::Instant::now();
         let selected = {
             let e = &mut self.edges[l];
             self.strategies[l].select(0, remaining, &mut e.rng)
         };
+        self.tele_select_us
+            .observe_us(t_select.elapsed().as_micros() as u64);
         let Some(tau) = selected else {
             if !self.edges[l].retired {
                 self.edges[l].retired = true;
@@ -812,6 +830,8 @@ impl Shard {
     /// Drain every queue event inside the window and hand back the
     /// window's cross-thread traffic, charges and events.
     fn process_window(&mut self, bound: f64, inclusive: bool) -> WindowOut {
+        let _span = crate::telemetry::span_with(&self.tele_window_us, "fleet.window_us");
+        let before = self.processed;
         loop {
             let ev = if inclusive {
                 self.queue.pop_through(bound)
@@ -849,6 +869,8 @@ impl Shard {
                 Ev::Spawn(s) => self.on_spawn(s),
             }
         }
+        self.tele_events.add(self.processed - before);
+        self.tele_queue.set(self.queue.peak_len() as u64);
         self.take_window_out()
     }
 
@@ -953,6 +975,14 @@ impl Shard {
     }
 
     fn finish_out(&self) -> FinishOut {
+        // One-shot mirror of the shard's transport tallies into the
+        // process-global telemetry registry (cheap enough to look up by
+        // name here: finish runs once per shard per run).
+        crate::telemetry::counter("transport.sent").add(self.sent);
+        crate::telemetry::counter("transport.lost").add(self.lost);
+        crate::telemetry::counter("transport.dropped_attempts").add(self.dropped_attempts);
+        crate::telemetry::counter("transport.bytes")
+            .add((self.sent as f64 * self.model_bytes) as u64);
         FinishOut {
             retired: self.edges.iter().filter(|e| e.retired).count(),
             sent: self.sent,

@@ -95,6 +95,14 @@ pub struct SimTransport {
     bandwidths: Vec<f64>,
     in_flight: usize,
     stats: TransportStats,
+    // Telemetry handles, fetched once at construction so `send` never
+    // takes the registry lock. Out-of-band by contract: counters only —
+    // the transport RNG stream and queue are untouched (the
+    // `ideal_sends_resolve_instantly_with_no_rng_draws` test still holds).
+    tele_sent: std::sync::Arc<crate::telemetry::Counter>,
+    tele_lost: std::sync::Arc<crate::telemetry::Counter>,
+    tele_dropped: std::sync::Arc<crate::telemetry::Counter>,
+    tele_bytes: std::sync::Arc<crate::telemetry::Counter>,
 }
 
 impl SimTransport {
@@ -109,6 +117,10 @@ impl SimTransport {
             bandwidths: Vec::new(),
             in_flight: 0,
             stats: TransportStats::default(),
+            tele_sent: crate::telemetry::counter("transport.sent"),
+            tele_lost: crate::telemetry::counter("transport.lost"),
+            tele_dropped: crate::telemetry::counter("transport.dropped_attempts"),
+            tele_bytes: crate::telemetry::counter("transport.bytes"),
         }
     }
 
@@ -199,10 +211,14 @@ impl Transport for SimTransport {
 
     fn send(&mut self, msg: Message) -> Option<Delivery> {
         self.stats.sent += 1;
+        self.tele_sent.inc();
+        self.tele_bytes.add(msg.size_bytes as u64);
         let (delay_ms, dropped_attempts, lost) = self.resolve(&msg);
         self.stats.dropped_attempts += u64::from(dropped_attempts);
+        self.tele_dropped.add(u64::from(dropped_attempts));
         if lost {
             self.stats.lost += 1;
+            self.tele_lost.inc();
         } else {
             self.stats.delivered += 1;
         }

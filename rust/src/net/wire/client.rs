@@ -99,6 +99,7 @@ pub fn join(addr: &str, opts: &JoinOpts, engine: &dyn ComputeEngine) -> Result<(
             Ok(End::Dropped(id)) => {
                 rejoin = Some(id);
                 attempts = 0;
+                crate::telemetry::counter("wire.client.rejoins").inc();
                 eprintln!(
                     "[ol4el] edge {id}: connection dropped — reconnecting in {}ms",
                     backoff.as_millis()
@@ -186,13 +187,17 @@ fn serve_connection(
                     lr,
                     ..local.cfg.hyper
                 };
-                let round = local.server.local_round(
-                    tau,
-                    local.learner.as_ref(),
-                    engine,
-                    &local.cfg.cost,
-                    &hyper,
-                )?;
+                let round = {
+                    let _span = crate::telemetry::span("wire.client.round_us");
+                    local.server.local_round(
+                        tau,
+                        local.learner.as_ref(),
+                        engine,
+                        &local.cfg.cost,
+                        &hyper,
+                    )?
+                };
+                crate::telemetry::counter("wire.client.rounds").inc();
                 *rounds_done += 1;
                 if *chaos_armed && opts.drop_round == Some(*rounds_done) {
                     *chaos_armed = false;
@@ -226,6 +231,7 @@ fn serve_connection(
             Ok(_) => {} // Pong and anything else: ignore
             Err(WireError::Timeout) => {
                 // Idle: probe the coordinator so a silent death surfaces.
+                crate::telemetry::counter("wire.client.heartbeats").inc();
                 if write_frame(&mut write_half, &Frame::Ping).is_err() {
                     return dropped(my_id);
                 }

@@ -136,6 +136,16 @@ pub enum Frame {
     Ping,
     /// Keepalive reply.
     Pong,
+    /// Client → coordinator: request one telemetry snapshot frame (the
+    /// live metrics endpoint — answered even before any `Hello`).
+    Stats,
+    /// Coordinator → client: one [`telemetry::snapshot`] frame.
+    ///
+    /// [`telemetry::snapshot`]: crate::telemetry::snapshot
+    StatsReply {
+        /// The snapshot (counters / gauges / histogram summaries).
+        metrics: Json,
+    },
     /// A tunneled simulator [`Message`] — the [`Transport`] payload
     /// carried by [`TcpTransport`](super::TcpTransport).
     ///
@@ -199,6 +209,11 @@ impl Frame {
             Frame::Shutdown => Json::obj(vec![("t", Json::str("shutdown"))]),
             Frame::Ping => Json::obj(vec![("t", Json::str("ping"))]),
             Frame::Pong => Json::obj(vec![("t", Json::str("pong"))]),
+            Frame::Stats => Json::obj(vec![("t", Json::str("stats"))]),
+            Frame::StatsReply { metrics } => Json::obj(vec![
+                ("t", Json::str("stats_reply")),
+                ("metrics", metrics.clone()),
+            ]),
             Frame::Msg(m) => Json::obj(vec![("t", Json::str("msg")), ("msg", message_to_json(m))]),
         }
     }
@@ -244,6 +259,13 @@ impl Frame {
             "shutdown" => Ok(Frame::Shutdown),
             "ping" => Ok(Frame::Ping),
             "pong" => Ok(Frame::Pong),
+            "stats" => Ok(Frame::Stats),
+            "stats_reply" => Ok(Frame::StatsReply {
+                metrics: j
+                    .get("metrics")
+                    .cloned()
+                    .ok_or_else(|| bad("stats_reply.metrics"))?,
+            }),
             "msg" => Ok(Frame::Msg(message_from_json(
                 j.get("msg").ok_or_else(|| bad("msg frame has no body"))?,
             )?)),
@@ -507,6 +529,13 @@ mod tests {
             Frame::Shutdown,
             Frame::Ping,
             Frame::Pong,
+            Frame::Stats,
+            Frame::StatsReply {
+                metrics: Json::obj(vec![(
+                    "counters",
+                    Json::obj(vec![("session.rounds", Json::num(42.0))]),
+                )]),
+            },
         ];
         for f in &frames {
             let back = roundtrip(f);

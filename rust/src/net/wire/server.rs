@@ -77,6 +77,17 @@ fn spawn_reader(mut read_half: TcpStream, writer: Writer) -> Receiver<Inbound> {
                         return;
                     }
                 }
+                Ok(Frame::Stats) => {
+                    // The live metrics endpoint, in-session flavor: any
+                    // connected peer can scrape one snapshot at any time.
+                    let reply = Frame::StatsReply {
+                        metrics: crate::telemetry::snapshot(),
+                    };
+                    if write_frame(&mut *lock(&writer), &reply).is_err() {
+                        let _ = tx.send(Inbound::Disconnected);
+                        return;
+                    }
+                }
                 Ok(f) => {
                     if tx.send(Inbound::Frame(f)).is_err() {
                         return; // the edge was replaced; this link is dead
@@ -104,6 +115,16 @@ fn handshake(stream: TcpStream) -> Option<(Frame, Link)> {
         let mut read = &stream;
         fr.read_frame(&mut read).ok()?
     };
+    if matches!(hello, Frame::Stats) {
+        // The live metrics endpoint, pre-Hello flavor: `ol4el coordinator
+        // stats` opens a connection, asks, reads one frame, hangs up.
+        let reply = Frame::StatsReply {
+            metrics: crate::telemetry::snapshot(),
+        };
+        let mut w = &stream;
+        let _ = write_frame(&mut w, &reply);
+        return None;
+    }
     let ok = matches!(hello, Frame::Hello { proto, .. } if proto == PROTO_VERSION);
     if !ok {
         eprintln!("[ol4el] wire: refusing a connection that is not a proto-{PROTO_VERSION} hello");
@@ -276,6 +297,7 @@ impl WireServer {
 
     fn mark_gone(&mut self, edge: usize, rejoined: u32) -> RemoteOutcome {
         eprintln!("[ol4el] wire: edge {edge} is gone (no rejoin inside the window) — retiring it");
+        crate::telemetry::counter("wire.server.timeouts").inc();
         self.state[edge].gone = true;
         self.fallback(edge, rejoined)
     }
@@ -302,6 +324,7 @@ impl WireServer {
                     continue; // that reconnect died already; keep waiting
                 }
                 self.links[edge] = link;
+                crate::telemetry::counter("wire.server.rejoins").inc();
                 return true;
             }
             let left = deadline.saturating_duration_since(Instant::now());
@@ -383,6 +406,7 @@ impl RemoteRunner for WireServer {
                     })) if got == seq => {
                         *params = fresh;
                         self.state[edge].iters_done += tau as u64;
+                        crate::telemetry::counter("wire.server.rounds").inc();
                         return Ok(RemoteOutcome {
                             round: LocalRound {
                                 comp_cost,

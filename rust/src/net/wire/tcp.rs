@@ -73,6 +73,13 @@ pub struct TcpTransport {
     stats: TransportStats,
     events: u64,
     peak: usize,
+    // Telemetry handles, fetched once at connect time so the send/recv
+    // paths never take the registry lock (out-of-band: wall clock and
+    // atomics only).
+    tele_sent: Arc<crate::telemetry::Counter>,
+    tele_delivered: Arc<crate::telemetry::Counter>,
+    tele_lost: Arc<crate::telemetry::Counter>,
+    tele_rtt_us: Arc<crate::telemetry::Histogram>,
 }
 
 impl TcpTransport {
@@ -121,6 +128,10 @@ impl TcpTransport {
             stats: TransportStats::default(),
             events: 0,
             peak: 0,
+            tele_sent: crate::telemetry::counter("wire.sent"),
+            tele_delivered: crate::telemetry::counter("wire.delivered"),
+            tele_lost: crate::telemetry::counter("wire.lost"),
+            tele_rtt_us: crate::telemetry::histogram("wire.rtt_us"),
         })
     }
 
@@ -137,6 +148,8 @@ impl TcpTransport {
         let sent_at = self.pending.pop_front().unwrap_or(now);
         self.stats.delivered += 1;
         self.events += 1;
+        self.tele_delivered.inc();
+        self.tele_rtt_us.observe_ms(now - sent_at);
         Occurrence::Delivery(Delivery {
             msg,
             delay_ms: now - sent_at,
@@ -183,6 +196,7 @@ impl Transport for TcpTransport {
 
     fn send(&mut self, msg: Message) -> Option<Delivery> {
         self.stats.sent += 1;
+        self.tele_sent.inc();
         let wrote = {
             let mut w = match self.writer.lock() {
                 Ok(w) => w,
@@ -194,6 +208,7 @@ impl Transport for TcpTransport {
             // A dead socket resolves the fate instantly: lost.
             self.stats.lost += 1;
             self.stats.dropped_attempts += 1;
+            self.tele_lost.inc();
             return Some(Delivery {
                 msg,
                 delay_ms: 0.0,
@@ -336,6 +351,7 @@ pub fn bench_loopback(frames: usize) -> Result<WireBench, WireError> {
         buf.len()
     };
     let mut t = TcpTransport::connect(&addr.to_string())?;
+    let _span = crate::telemetry::span("wire.bench_us");
     let t0 = Instant::now();
     let mut total_rtt = 0.0;
     let mut max_rtt = 0.0f64;

@@ -1,0 +1,249 @@
+//! The three instrument kinds: [`Counter`], [`Gauge`] and log-scale
+//! [`Histogram`] — plain atomics end to end, so the hot paths that carry
+//! them (shard event loops, transport sends) pay one `fetch_add` per
+//! observation and never take a lock, block, or draw randomness.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of log₂ buckets a [`Histogram`] carries. Bucket `k` counts
+/// observations in `[2^(k-1), 2^k)` microseconds (bucket 0 counts exact
+/// zeros); the last bucket absorbs everything ≥ `2^(BUCKETS-2)` µs
+/// (≈ 76 hours — effectively +∞ for round timings).
+pub const BUCKETS: usize = 40;
+
+/// A monotonically increasing event count (sends, merges, rounds, …).
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    /// A zeroed counter.
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    /// Add `n` to the count.
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Add 1 to the count.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current count.
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-written value plus its high-water mark (queue depths,
+/// in-flight message counts).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicU64,
+    hi: AtomicU64,
+}
+
+impl Gauge {
+    /// A zeroed gauge.
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    /// Record the current value (and fold it into the high-water mark).
+    pub fn set(&self, v: u64) {
+        self.v.store(v, Ordering::Relaxed);
+        self.hi.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Latest recorded value.
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    /// Largest value ever recorded.
+    pub fn high_water(&self) -> u64 {
+        self.hi.load(Ordering::Relaxed)
+    }
+}
+
+/// A log₂-bucketed histogram over integer microseconds: `count`, `sum`,
+/// exact `max`, and [`BUCKETS`] power-of-two buckets. Quantiles are
+/// bucket-resolution approximations (each bucket spans a factor of 2, so
+/// a reported p99 is within 2x of the true value) — the right trade for
+/// a lock-free instrument that survives 100k-edge fleets.
+#[derive(Debug)]
+pub struct Histogram {
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+impl Histogram {
+    /// A zeroed histogram.
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Which bucket a microsecond value lands in.
+    pub fn bucket_index(us: u64) -> usize {
+        ((u64::BITS - us.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+
+    /// The inclusive upper bound (µs) of bucket `idx` (`u64::MAX` for
+    /// the overflow bucket).
+    pub fn bucket_le(idx: usize) -> u64 {
+        if idx >= BUCKETS - 1 {
+            u64::MAX
+        } else {
+            (1u64 << idx) - 1
+        }
+    }
+
+    /// Record one observation of `us` microseconds.
+    pub fn observe_us(&self, us: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+        self.buckets[Self::bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one observation given in (possibly fractional)
+    /// milliseconds; negative or non-finite inputs clamp to zero.
+    pub fn observe_ms(&self, ms: f64) {
+        let us = if ms.is_finite() && ms > 0.0 {
+            (ms * 1e3).round() as u64
+        } else {
+            0
+        };
+        self.observe_us(us);
+    }
+
+    /// Observations recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all observed microseconds.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Largest single observation (µs), exact.
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Mean observation in microseconds (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us() as f64 / n as f64
+        }
+    }
+
+    /// Snapshot of every bucket's count, index order.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Approximate quantile (µs): the upper bound of the first bucket at
+    /// which the cumulative count reaches `q · count`. `q` is clamped to
+    /// `[0, 1]`; an empty histogram reports 0.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * n as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (idx, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                // Cap the reported bound at the exact max: tighter and
+                // never claims a latency that was not observed.
+                return Self::bucket_le(idx).min(self.max_us());
+            }
+        }
+        self.max_us()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.set(7);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+        assert_eq!(g.high_water(), 7);
+    }
+
+    #[test]
+    fn bucket_index_is_log2() {
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 1);
+        assert_eq!(Histogram::bucket_index(2), 2);
+        assert_eq!(Histogram::bucket_index(3), 2);
+        assert_eq!(Histogram::bucket_index(4), 3);
+        assert_eq!(Histogram::bucket_index(1023), 10);
+        assert_eq!(Histogram::bucket_index(1024), 11);
+        assert_eq!(Histogram::bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_observes_and_estimates() {
+        let h = Histogram::new();
+        for us in [10u64, 20, 30, 40, 1000] {
+            h.observe_us(us);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum_us(), 1100);
+        assert_eq!(h.max_us(), 1000);
+        assert!(h.mean_us() > 0.0);
+        // p50 lands in the bucket containing 20-30 µs; the log-scale
+        // bound is within a factor of 2 above.
+        let p50 = h.quantile_us(0.5);
+        assert!((15..=63).contains(&p50), "p50 was {p50}");
+        // p100 caps at the exact maximum.
+        assert_eq!(h.quantile_us(1.0), 1000);
+        assert_eq!(h.bucket_counts().iter().sum::<u64>(), 5);
+    }
+
+    #[test]
+    fn observe_ms_clamps_bad_input() {
+        let h = Histogram::new();
+        h.observe_ms(-5.0);
+        h.observe_ms(f64::NAN);
+        h.observe_ms(1.5);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.sum_us(), 1500);
+    }
+}

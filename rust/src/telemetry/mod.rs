@@ -1,0 +1,479 @@
+//! Process-global, determinism-safe instrumentation: named counters,
+//! gauges and log-scale histograms, RAII [`Span`] timers, a pluggable
+//! [`TelemetrySink`] (JSONL file export, in-memory capture), a
+//! Prometheus-style text exposition, and a summary table.
+//!
+//! ## The out-of-band contract
+//!
+//! Telemetry observes; it never participates. Every instrument is a
+//! plain atomic, every span reads only the wall clock, and nothing in
+//! this module touches an RNG stream, an event queue, or a charge
+//! ledger — so every bit-identity suite (sharding equivalence, wire
+//! e2e, fixed-seed traces) passes unchanged with instrumentation
+//! enabled. Records go to stderr-adjacent destinations only (a JSONL
+//! file, a scrape reply, the log stream): **stdout is never written**,
+//! because run reports on stdout are bit-diffed by the e2e tests.
+//!
+//! ## Shape
+//!
+//! * [`counter`] / [`gauge`] / [`histogram`] return `Arc` handles from
+//!   a name-keyed registry. Registration takes a lock once; the handle
+//!   is lock-free thereafter — hot paths (shard event loops, transport
+//!   sends) cache the handle at construction time.
+//! * [`span`] opens an RAII timer that folds its duration into the
+//!   same-named histogram and, when a sink is installed, emits a
+//!   structured span record with parent/child nesting (per-thread).
+//! * [`install_jsonl`] / [`install`] attach a sink; [`flush`] appends a
+//!   full registry snapshot (counter/gauge/histogram records) and
+//!   flushes; [`uninstall`] detaches. Span records are sampled 1-in-N
+//!   (`set_sample`, the `--telemetry-sample N` flag) so per-event
+//!   instrumentation survives 100k-edge fleets; snapshots are always
+//!   complete.
+//! * [`snapshot`] (JSON, served over the wire `Stats` frame),
+//!   [`prometheus`] (text exposition) and [`report`] (aligned table for
+//!   `--log info`) read the same registry.
+
+pub mod metrics;
+pub mod sink;
+// The module (type namespace) and `fn span` (value namespace) coexist.
+mod span;
+
+/// RAII span timer (see [`span()`] / [`span_with`]).
+pub use span::Span;
+
+pub use metrics::{Counter, Gauge, Histogram};
+pub use sink::{JsonlSink, TelemetrySink, VecSink};
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, RwLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// One registered instrument.
+enum Instrument {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Hist(Arc<Histogram>),
+}
+
+static REGISTRY: Mutex<BTreeMap<String, Instrument>> = Mutex::new(BTreeMap::new());
+static SINK: RwLock<Option<Arc<dyn TelemetrySink>>> = RwLock::new(None);
+/// Fast gate mirroring `SINK.is_some()` — hot paths check one atomic.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+/// Emit 1 of every `SAMPLE` span records (1 = everything).
+static SAMPLE: AtomicU32 = AtomicU32::new(1);
+/// Global emission tick driving the sample gate.
+static TICK: AtomicU64 = AtomicU64::new(0);
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+fn registry() -> MutexGuard<'static, BTreeMap<String, Instrument>> {
+    match REGISTRY.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Microseconds since the first telemetry call in this process.
+pub(crate) fn since_epoch_us() -> u64 {
+    let epoch = *EPOCH.get_or_init(Instant::now);
+    u64::try_from(epoch.elapsed().as_micros()).unwrap_or(u64::MAX)
+}
+
+pub(crate) fn next_span_id() -> u64 {
+    NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// The counter registered under `name` (created on first use). Panics
+/// if `name` is already registered as a different instrument kind.
+pub fn counter(name: &str) -> Arc<Counter> {
+    let mut reg = registry();
+    let entry = reg
+        .entry(name.to_string())
+        .or_insert_with(|| Instrument::Counter(Arc::new(Counter::new())));
+    match entry {
+        Instrument::Counter(c) => Arc::clone(c),
+        _ => panic!("telemetry name '{name}' is not a counter"),
+    }
+}
+
+/// The gauge registered under `name` (created on first use). Panics if
+/// `name` is already registered as a different instrument kind.
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    let mut reg = registry();
+    let entry = reg
+        .entry(name.to_string())
+        .or_insert_with(|| Instrument::Gauge(Arc::new(Gauge::new())));
+    match entry {
+        Instrument::Gauge(g) => Arc::clone(g),
+        _ => panic!("telemetry name '{name}' is not a gauge"),
+    }
+}
+
+/// The histogram registered under `name` (created on first use). Panics
+/// if `name` is already registered as a different instrument kind.
+pub fn histogram(name: &str) -> Arc<Histogram> {
+    let mut reg = registry();
+    let entry = reg
+        .entry(name.to_string())
+        .or_insert_with(|| Instrument::Hist(Arc::new(Histogram::new())));
+    match entry {
+        Instrument::Hist(h) => Arc::clone(h),
+        _ => panic!("telemetry name '{name}' is not a histogram"),
+    }
+}
+
+/// Open a span named `name`: the duration lands in the histogram of the
+/// same name, and a span record is emitted (sampled) when a sink is
+/// installed. Takes the registry lock once — for per-event hot loops,
+/// pre-fetch the histogram and use [`span_with`].
+pub fn span(name: &'static str) -> Span {
+    Span::open(name, histogram(name))
+}
+
+/// Open a span against a pre-fetched histogram handle (no registry
+/// lock) — the hot-loop variant of [`span`].
+pub fn span_with(hist: &Arc<Histogram>, name: &'static str) -> Span {
+    Span::open(name, Arc::clone(hist))
+}
+
+/// Is a sink installed? Hot paths use this to skip record formatting;
+/// instruments themselves always accumulate.
+pub fn active() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// The current 1-in-N span sample rate.
+pub fn sample() -> u32 {
+    SAMPLE.load(Ordering::Relaxed).max(1)
+}
+
+/// Set the 1-in-N span sample rate (0 is treated as 1).
+pub fn set_sample(n: u32) {
+    SAMPLE.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Advance the emission tick and report whether this event passes the
+/// 1-in-N sample gate.
+pub(crate) fn sampled() -> bool {
+    let n = sample() as u64;
+    TICK.fetch_add(1, Ordering::Relaxed) % n == 0
+}
+
+/// Install a sink (replacing any current one) and set the span sample
+/// rate. Emits a `meta` record describing the stream.
+pub fn install(sink: Arc<dyn TelemetrySink>, sample: u32) {
+    set_sample(sample);
+    {
+        let mut g = match SINK.write() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        *g = Some(sink);
+    }
+    ACTIVE.store(true, Ordering::Relaxed);
+    emit(&Json::obj(vec![
+        ("t", Json::str("meta")),
+        ("version", Json::num(1.0)),
+        ("sample", Json::num(self::sample() as f64)),
+    ]));
+}
+
+/// Install a [`JsonlSink`] writing to `path` with the given span sample
+/// rate — the implementation behind `--telemetry FILE`.
+pub fn install_jsonl(path: &str, sample: u32) -> std::io::Result<()> {
+    let sink = JsonlSink::create(path)?;
+    install(Arc::new(sink), sample);
+    Ok(())
+}
+
+/// Detach the current sink (after a final [`flush`]). Instruments keep
+/// accumulating; only export stops.
+pub fn uninstall() {
+    flush();
+    let mut g = match SINK.write() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    ACTIVE.store(false, Ordering::Relaxed);
+    *g = None;
+}
+
+/// Send one record to the installed sink (no-op when none is).
+pub(crate) fn emit(record: &Json) {
+    let g = match SINK.read() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    if let Some(sink) = g.as_ref() {
+        sink.emit(record);
+    }
+}
+
+fn hist_record(name: &str, h: &Histogram) -> Json {
+    let buckets: Vec<Json> = h
+        .bucket_counts()
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| **n > 0)
+        .map(|(idx, n)| {
+            Json::arr(vec![
+                Json::num(Histogram::bucket_le(idx).min(1u64 << 62) as f64),
+                Json::num(*n as f64),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("t", Json::str("hist")),
+        ("name", Json::str(name)),
+        ("count", Json::num(h.count() as f64)),
+        ("sum_us", Json::num(h.sum_us() as f64)),
+        ("max_us", Json::num(h.max_us() as f64)),
+        ("p50_us", Json::num(h.quantile_us(0.5) as f64)),
+        ("p99_us", Json::num(h.quantile_us(0.99) as f64)),
+        ("buckets", Json::Arr(buckets)),
+    ])
+}
+
+/// Append a complete registry snapshot (one record per instrument) to
+/// the sink and flush it. Snapshots are never sampled.
+pub fn flush() {
+    if !active() {
+        return;
+    }
+    let records: Vec<Json> = {
+        let reg = registry();
+        reg.iter()
+            .map(|(name, inst)| match inst {
+                Instrument::Counter(c) => Json::obj(vec![
+                    ("t", Json::str("counter")),
+                    ("name", Json::str(name.as_str())),
+                    ("value", Json::num(c.get() as f64)),
+                ]),
+                Instrument::Gauge(g) => Json::obj(vec![
+                    ("t", Json::str("gauge")),
+                    ("name", Json::str(name.as_str())),
+                    ("value", Json::num(g.get() as f64)),
+                    ("high", Json::num(g.high_water() as f64)),
+                ]),
+                Instrument::Hist(h) => hist_record(name, h),
+            })
+            .collect()
+    };
+    for rec in &records {
+        emit(rec);
+    }
+    let g = match SINK.read() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    if let Some(sink) = g.as_ref() {
+        sink.flush();
+    }
+}
+
+/// A JSON snapshot of every instrument — the payload of the wire
+/// `StatsReply` frame and of `coordinator stats`.
+pub fn snapshot() -> Json {
+    let reg = registry();
+    let mut counters = BTreeMap::new();
+    let mut gauges = BTreeMap::new();
+    let mut hists = BTreeMap::new();
+    for (name, inst) in reg.iter() {
+        match inst {
+            Instrument::Counter(c) => {
+                counters.insert(name.clone(), Json::num(c.get() as f64));
+            }
+            Instrument::Gauge(g) => {
+                gauges.insert(
+                    name.clone(),
+                    Json::obj(vec![
+                        ("value", Json::num(g.get() as f64)),
+                        ("high", Json::num(g.high_water() as f64)),
+                    ]),
+                );
+            }
+            Instrument::Hist(h) => {
+                hists.insert(
+                    name.clone(),
+                    Json::obj(vec![
+                        ("count", Json::num(h.count() as f64)),
+                        ("mean_us", Json::num(h.mean_us())),
+                        ("p50_us", Json::num(h.quantile_us(0.5) as f64)),
+                        ("p99_us", Json::num(h.quantile_us(0.99) as f64)),
+                        ("max_us", Json::num(h.max_us() as f64)),
+                    ]),
+                );
+            }
+        }
+    }
+    Json::obj(vec![
+        ("counters", Json::Obj(counters)),
+        ("gauges", Json::Obj(gauges)),
+        ("histograms", Json::Obj(hists)),
+    ])
+}
+
+/// Prometheus metric names allow `[a-zA-Z0-9_:]`; ours use dots.
+fn prom_name(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect()
+}
+
+/// Render every instrument in the Prometheus text exposition format
+/// (counters, gauges, and cumulative-bucket histograms).
+pub fn prometheus() -> String {
+    use std::fmt::Write as _;
+    let reg = registry();
+    let mut out = String::new();
+    for (name, inst) in reg.iter() {
+        let n = prom_name(name);
+        match inst {
+            Instrument::Counter(c) => {
+                let _ = writeln!(out, "# TYPE {n} counter");
+                let _ = writeln!(out, "{n} {}", c.get());
+            }
+            Instrument::Gauge(g) => {
+                let _ = writeln!(out, "# TYPE {n} gauge");
+                let _ = writeln!(out, "{n} {}", g.get());
+                let _ = writeln!(out, "{n}_high_water {}", g.high_water());
+            }
+            Instrument::Hist(h) => {
+                let _ = writeln!(out, "# TYPE {n} histogram");
+                let mut cum = 0u64;
+                for (idx, b) in h.bucket_counts().iter().enumerate() {
+                    if *b == 0 {
+                        continue;
+                    }
+                    cum += b;
+                    let le = Histogram::bucket_le(idx);
+                    // The overflow bucket is covered by the +Inf line below.
+                    if le != u64::MAX {
+                        let _ = writeln!(out, "{n}_bucket{{le=\"{le}\"}} {cum}");
+                    }
+                }
+                let _ = writeln!(out, "{n}_bucket{{le=\"+Inf\"}} {}", h.count());
+                let _ = writeln!(out, "{n}_sum {}", h.sum_us());
+                let _ = writeln!(out, "{n}_count {}", h.count());
+            }
+        }
+    }
+    out
+}
+
+/// An aligned summary table of every instrument — printed to stderr at
+/// `--log info` when a run finishes.
+pub fn report() -> String {
+    let reg = registry();
+    let mut t = Table::new(
+        "telemetry",
+        &["metric", "kind", "count", "mean_ms", "p50_ms", "p99_ms", "max_ms"],
+    );
+    let ms = |us: f64| format!("{:.3}", us / 1e3);
+    for (name, inst) in reg.iter() {
+        match inst {
+            Instrument::Counter(c) => t.row(vec![
+                name.clone(),
+                "counter".into(),
+                c.get().to_string(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]),
+            Instrument::Gauge(g) => t.row(vec![
+                name.clone(),
+                "gauge".into(),
+                g.get().to_string(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                format!("{} (high)", g.high_water()),
+            ]),
+            Instrument::Hist(h) => t.row(vec![
+                name.clone(),
+                "hist".into(),
+                h.count().to_string(),
+                ms(h.mean_us()),
+                ms(h.quantile_us(0.5) as f64),
+                ms(h.quantile_us(0.99) as f64),
+                ms(h.max_us() as f64),
+            ]),
+        }
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry, sink and tick are process-global, so everything that
+    // installs/uninstalls must run inside ONE test fn (cargo runs tests
+    // in threads of one process).
+    #[test]
+    fn registry_sink_snapshot_and_report_work_end_to_end() {
+        let c = counter("test.mod.counter");
+        let g = gauge("test.mod.gauge");
+        let h = histogram("test.mod.hist");
+        c.add(3);
+        g.set(9);
+        h.observe_us(500);
+
+        // Same name → same instrument.
+        assert_eq!(counter("test.mod.counter").get(), 3);
+
+        // Spans land in the same-named histogram.
+        drop(span("test.mod.span"));
+        assert_eq!(histogram("test.mod.span").count(), 1);
+
+        // Snapshot, prometheus and report all see the instruments.
+        let snap = snapshot();
+        assert!(snap.path(&["counters", "test.mod.counter"]).is_some());
+        assert!(snap.path(&["gauges", "test.mod.gauge"]).is_some());
+        assert!(snap.path(&["histograms", "test.mod.hist"]).is_some());
+        let prom = prometheus();
+        assert!(prom.contains("# TYPE test_mod_counter counter"));
+        assert!(prom.contains("test_mod_hist_count 1"));
+        let rep = report();
+        assert!(rep.contains("test.mod.counter"));
+        assert!(rep.contains("test.mod.hist"));
+
+        // Install a capture sink: spans stream, flush snapshots all.
+        assert!(!active());
+        let sink = Arc::new(VecSink::new());
+        install(Arc::clone(&sink) as Arc<dyn TelemetrySink>, 1);
+        assert!(active());
+        drop(span("test.mod.streamed"));
+        flush();
+        uninstall();
+        assert!(!active());
+        let records = sink.take();
+        let kind = |r: &Json| r.get("t").and_then(|t| t.as_str().map(String::from));
+        assert!(records.iter().any(|r| kind(r).as_deref() == Some("meta")));
+        assert!(records.iter().any(|r| kind(r).as_deref() == Some("span")));
+        assert!(records.iter().any(|r| kind(r).as_deref() == Some("counter")));
+        assert!(records.iter().any(|r| kind(r).as_deref() == Some("hist")));
+        // After uninstall nothing streams.
+        drop(span("test.mod.silent"));
+        assert!(sink.take().is_empty());
+    }
+
+    #[test]
+    fn sample_rate_clamps_to_one() {
+        set_sample(0);
+        assert_eq!(sample(), 1);
+        set_sample(1);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a counter")]
+    fn kind_mismatch_panics() {
+        let _ = gauge("test.mod.kind_clash");
+        let _ = counter("test.mod.kind_clash");
+    }
+}

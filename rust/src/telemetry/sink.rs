@@ -1,0 +1,121 @@
+//! Where telemetry records go: the object-safe [`TelemetrySink`] trait,
+//! the JSONL file sink, and an in-memory sink for tests.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// A destination for structured telemetry records. Implementations must
+/// be internally synchronized: `emit` is called concurrently from shard
+/// workers, reader threads and the coordinator, and each record must
+/// land whole (no interleaving).
+pub trait TelemetrySink: Send + Sync {
+    /// Write one record. Must be atomic per record.
+    fn emit(&self, record: &Json);
+    /// Push buffered records to durable storage (best effort).
+    fn flush(&self) {}
+}
+
+/// One JSON object per line, buffered, to a file — the `--telemetry
+/// FILE` sink. A mutex around the writer makes each line atomic.
+pub struct JsonlSink {
+    w: Mutex<BufWriter<File>>,
+}
+
+impl JsonlSink {
+    /// Create (truncate) `path` and return the sink.
+    pub fn create(path: &str) -> std::io::Result<JsonlSink> {
+        let file = File::create(path)?;
+        Ok(JsonlSink {
+            w: Mutex::new(BufWriter::new(file)),
+        })
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BufWriter<File>> {
+        match self.w.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+}
+
+impl TelemetrySink for JsonlSink {
+    fn emit(&self, record: &Json) {
+        // One formatted line, one write call: records never tear.
+        let line = format!("{record}\n");
+        let _ = self.lock().write_all(line.as_bytes());
+    }
+
+    fn flush(&self) {
+        let _ = self.lock().flush();
+    }
+}
+
+/// A sink that buffers records in memory — for tests and for callers
+/// that want to inspect the stream programmatically.
+#[derive(Default)]
+pub struct VecSink {
+    records: Mutex<Vec<Json>>,
+}
+
+impl VecSink {
+    /// An empty buffer sink.
+    pub fn new() -> VecSink {
+        VecSink::default()
+    }
+
+    /// Drain everything emitted so far.
+    pub fn take(&self) -> Vec<Json> {
+        let mut g = match self.records.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        std::mem::take(&mut *g)
+    }
+}
+
+impl TelemetrySink for VecSink {
+    fn emit(&self, record: &Json) {
+        let mut g = match self.records.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        g.push(record.clone());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_sink_writes_one_object_per_line() {
+        let path = std::env::temp_dir().join(format!(
+            "ol4el_jsonl_sink_test_{}.jsonl",
+            std::process::id()
+        ));
+        let path_str = path.to_str().unwrap().to_string();
+        let sink = JsonlSink::create(&path_str).unwrap();
+        sink.emit(&Json::obj(vec![("t", Json::str("a")), ("v", Json::num(1.0))]));
+        sink.emit(&Json::obj(vec![("t", Json::str("b"))]));
+        sink.flush();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            Json::parse(line).expect("every line parses");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn vec_sink_buffers_and_drains() {
+        let s = VecSink::new();
+        s.emit(&Json::num(1.0));
+        s.emit(&Json::num(2.0));
+        assert_eq!(s.take().len(), 2);
+        assert!(s.take().is_empty());
+    }
+}

@@ -1,0 +1,130 @@
+//! RAII span timers with parent/child nesting.
+//!
+//! A [`Span`] measures the wall-clock time between its creation and its
+//! drop, folds the duration into a same-named [`Histogram`], and — when
+//! a sink is installed and the sample gate admits it — emits one
+//! structured span record. Nesting is tracked per thread: a span opened
+//! while another is live records that span's id as its `parent`, so the
+//! exported stream reconstructs the call tree without any global lock.
+
+use std::cell::RefCell;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+use super::metrics::Histogram;
+
+thread_local! {
+    /// The ids of the spans currently open on this thread, outermost
+    /// first — the top of the stack is the parent of the next span.
+    static SPAN_STACK: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// A live timed region. Create one with [`super::span`] (registry lookup
+/// by name) or [`super::span_with`] (pre-fetched histogram handle, for
+/// hot loops); the measurement happens on drop.
+pub struct Span {
+    name: &'static str,
+    id: u64,
+    parent: Option<u64>,
+    /// Microseconds since the telemetry epoch at span open.
+    at_us: u64,
+    start: Instant,
+    hist: Arc<Histogram>,
+}
+
+impl Span {
+    pub(super) fn open(name: &'static str, hist: Arc<Histogram>) -> Span {
+        let id = super::next_span_id();
+        let parent = SPAN_STACK.with(|s| {
+            let mut s = s.borrow_mut();
+            let parent = s.last().copied();
+            s.push(id);
+            parent
+        });
+        Span {
+            name,
+            id,
+            parent,
+            at_us: super::since_epoch_us(),
+            start: Instant::now(),
+            hist,
+        }
+    }
+
+    /// The span's unique id (process-scoped).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The enclosing span's id, if this span was opened inside one on
+    /// the same thread.
+    pub fn parent(&self) -> Option<u64> {
+        self.parent
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let us = {
+            let micros = self.start.elapsed().as_micros();
+            u64::try_from(micros).unwrap_or(u64::MAX)
+        };
+        self.hist.observe_us(us);
+        SPAN_STACK.with(|s| {
+            let mut s = s.borrow_mut();
+            // Spans are scope-bound so the top is ours; tolerate
+            // out-of-order drops (e.g. moved spans) by value.
+            if s.last() == Some(&self.id) {
+                s.pop();
+            } else if let Some(pos) = s.iter().rposition(|&v| v == self.id) {
+                s.remove(pos);
+            }
+        });
+        if super::active() && super::sampled() {
+            let parent = match self.parent {
+                Some(p) => Json::num(p as f64),
+                None => Json::Null,
+            };
+            super::emit(&Json::obj(vec![
+                ("t", Json::str("span")),
+                ("name", Json::str(self.name)),
+                ("id", Json::num(self.id as f64)),
+                ("parent", parent),
+                ("at_us", Json::num(self.at_us as f64)),
+                ("us", Json::num(us as f64)),
+            ]));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_nest_per_thread() {
+        let h = Arc::new(Histogram::new());
+        let outer = Span::open("outer", Arc::clone(&h));
+        let inner = Span::open("inner", Arc::clone(&h));
+        assert_eq!(inner.parent(), Some(outer.id()));
+        drop(inner);
+        drop(outer);
+        assert_eq!(h.count(), 2);
+        // After both drops the stack is empty: a fresh span is a root.
+        let root = Span::open("root", Arc::clone(&h));
+        assert_eq!(root.parent(), None);
+    }
+
+    #[test]
+    fn out_of_order_drop_is_tolerated() {
+        let h = Arc::new(Histogram::new());
+        let a = Span::open("a", Arc::clone(&h));
+        let b = Span::open("b", Arc::clone(&h));
+        drop(a); // dropped before its child
+        drop(b);
+        let root = Span::open("after", Arc::clone(&h));
+        assert_eq!(root.parent(), None, "stack must fully unwind");
+    }
+}

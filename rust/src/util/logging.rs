@@ -69,8 +69,15 @@ pub fn level() -> Level {
 fn init_from_env() {
     INIT.call_once(|| {
         if let Ok(v) = std::env::var("OL4EL_LOG") {
-            if let Some(l) = Level::from_str(&v) {
-                LEVEL.store(l as u8, Ordering::Relaxed);
+            match Level::from_str(&v) {
+                Some(l) => LEVEL.store(l as u8, Ordering::Relaxed),
+                // A typo'd OL4EL_LOG silently falling back to Info is a
+                // debugging trap; say so once (call_once = once).
+                None => emit(
+                    Level::Warn,
+                    "ol4el::util::logging",
+                    format_args!("ignoring invalid OL4EL_LOG value {v:?} (want error|warn|info|debug|trace)"),
+                ),
             }
         }
     });
@@ -81,10 +88,21 @@ pub fn enabled(l: Level) -> bool {
     l <= level()
 }
 
+/// Format the whole line first, then push it through one `write_all` on
+/// the locked handle: shard workers and wire reader threads log
+/// concurrently, and per-piece `eprintln!` formatting lets their lines
+/// tear into each other.
+fn emit(l: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    use std::io::Write as _;
+    let line = format!("[{} {}] {}\n", l.tag(), module, msg);
+    let mut err = std::io::stderr().lock();
+    let _ = err.write_all(line.as_bytes());
+}
+
 /// Emit one log line (use the macros instead of calling this).
 pub fn log(l: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     if enabled(l) {
-        eprintln!("[{} {}] {}", l.tag(), module, msg);
+        emit(l, module, msg);
     }
 }
 

@@ -50,6 +50,11 @@ const PRODUCTIONS: &[&str] = &[
     "['--leave-after' N]",
     "['--rejoin' ID]",
     "['--drop-round' N]",
+    // telemetry (the observability surface)
+    "telemetry := '--telemetry' FILE",
+    "['--telemetry-sample' N]",
+    "'coordinator stats' '--addr' addr",
+    "['--format' 'json'|'prom']",
     // bandit (the legacy form; also the bandit= values of ol4el)
     "auto",
     "kube[:EPS]",
@@ -165,6 +170,28 @@ fn serve_and_join_help_document_their_flags() {
     let join = nested_help("edge", "join");
     for needle in ["--slowdown", "--leave-after", "--rejoin", "--drop-round", "--max-backoff-ms"] {
         assert!(join.contains(needle), "edge join --help lost {needle:?}");
+    }
+}
+
+#[test]
+fn telemetry_flags_document_everywhere_they_exist() {
+    // Satellite: the telemetry surface is uniform — every long-running
+    // entry point (train, fleet, coordinator serve, edge join) takes
+    // --telemetry FILE and --telemetry-sample N, and the coordinator
+    // exposes a `stats` scrape subcommand.
+    for help in [
+        subcommand_help("train"),
+        subcommand_help("fleet"),
+        nested_help("coordinator", "serve"),
+        nested_help("edge", "join"),
+    ] {
+        for needle in ["--telemetry", "--telemetry-sample"] {
+            assert!(help.contains(needle), "a telemetry entry point lost {needle:?}");
+        }
+    }
+    let stats = nested_help("coordinator", "stats");
+    for needle in ["--addr", "--format", "--timeout-ms"] {
+        assert!(stats.contains(needle), "coordinator stats --help lost {needle:?}");
     }
 }
 

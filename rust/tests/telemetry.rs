@@ -1,0 +1,142 @@
+//! The telemetry layer's out-of-band contract, end to end: enabling
+//! instrumentation (a live sink + sampling) must not perturb a single
+//! bit of any run — telemetry reads wall-clock and atomics, never an RNG
+//! stream, event queue, or charge ledger.
+//!
+//! This is an integration test binary on purpose: the telemetry sink and
+//! sample rate are process-global, so the install/run/uninstall sequence
+//! below runs inside ONE test fn and never races the library's own unit
+//! tests (separate process).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use ol4el::config::RunConfig;
+use ol4el::coordinator::observer::from_fn;
+use ol4el::coordinator::RunEvent;
+use ol4el::net::{ChurnSpec, FleetSim, NetworkSpec};
+use ol4el::strategy::StrategySpec;
+use ol4el::telemetry;
+use ol4el::util::json::Json;
+
+/// Run a fleet at `shards`, capturing the complete event stream.
+fn run_captured(cfg: RunConfig, shards: usize) -> Vec<RunEvent> {
+    let events = Rc::new(RefCell::new(Vec::new()));
+    let sink = events.clone();
+    FleetSim::new(cfg)
+        .unwrap()
+        .shards(shards)
+        .observe(from_fn(move |ev: &RunEvent| {
+            sink.borrow_mut().push(ev.clone());
+        }))
+        .run()
+        .unwrap();
+    Rc::try_unwrap(events).unwrap().into_inner()
+}
+
+fn equivalence_cfg(strategy: StrategySpec, seed: u64) -> RunConfig {
+    RunConfig {
+        strategy,
+        n_edges: 60,
+        hetero: 4.0,
+        budget: 900.0,
+        data_n: 3000, // ignored by the fleet; satisfies validate()
+        eval_every: 20,
+        network: NetworkSpec::parse("lognormal:5:0.5,drop:0.02").unwrap(),
+        churn: ChurnSpec::parse("poisson:0.2,join:1,restart:400,straggle:0.1:3").unwrap(),
+        seed,
+        ..Default::default()
+    }
+}
+
+/// ONE test fn on purpose: install/uninstall mutate process-global state,
+/// and the default test runner is multi-threaded — a second telemetry
+/// test in this binary would race the sink. Everything sequences here.
+#[test]
+fn telemetry_on_is_bit_identical_to_telemetry_off() {
+    // -- baseline: telemetry uninstalled, sample untouched ----------------
+    let async_cfg = equivalence_cfg(StrategySpec::ol4el_async(), 11);
+    let sync_cfg = equivalence_cfg(StrategySpec::ol4el_sync(), 23);
+    let base_async_1 = run_captured(async_cfg.clone(), 1);
+    let base_async_4 = run_captured(async_cfg.clone(), 4);
+    let base_sync_1 = run_captured(sync_cfg.clone(), 1);
+    let base_sync_4 = run_captured(sync_cfg.clone(), 4);
+    assert_eq!(
+        base_async_1, base_async_4,
+        "sharding contract broken before telemetry even engages"
+    );
+    assert_eq!(base_sync_1, base_sync_4, "sync sharding contract broken");
+
+    // -- telemetry ON: live sink, aggressive sampling ---------------------
+    let sink = Arc::new(telemetry::VecSink::new());
+    telemetry::install(sink.clone(), 3);
+    assert!(telemetry::active(), "install must arm the sink");
+
+    let tele_async_1 = run_captured(async_cfg.clone(), 1);
+    let tele_async_4 = run_captured(async_cfg, 4);
+    let tele_sync_1 = run_captured(sync_cfg.clone(), 1);
+    let tele_sync_4 = run_captured(sync_cfg, 4);
+    telemetry::flush();
+    let records = sink.take();
+    telemetry::uninstall();
+    telemetry::set_sample(1);
+    assert!(!telemetry::active(), "uninstall must disarm the sink");
+
+    // The out-of-band contract: instrumentation changed NOTHING.
+    assert_eq!(base_async_1, tele_async_1, "async 1-shard diverged under telemetry");
+    assert_eq!(base_async_4, tele_async_4, "async 4-shard diverged under telemetry");
+    assert_eq!(base_sync_1, tele_sync_1, "sync 1-shard diverged under telemetry");
+    assert_eq!(base_sync_4, tele_sync_4, "sync 4-shard diverged under telemetry");
+
+    // -- and the sink actually observed the run ---------------------------
+    assert!(
+        !records.is_empty(),
+        "telemetry-on runs must emit records into the sink"
+    );
+    let tag = |r: &Json| r.get("t").and_then(Json::as_str).map(str::to_string);
+    assert!(
+        records.iter().any(|r| tag(r).as_deref() == Some("meta")),
+        "install must emit a meta record"
+    );
+    assert!(
+        records.iter().any(|r| tag(r).as_deref() == Some("span")),
+        "sampled spans must stream into the sink"
+    );
+    assert!(
+        records.iter().any(|r| tag(r).as_deref() == Some("counter")),
+        "flush must snapshot counters"
+    );
+    assert!(
+        records.iter().any(|r| tag(r).as_deref() == Some("hist")),
+        "flush must snapshot histograms"
+    );
+
+    // Records from all three instrumented layers: the decision layer
+    // (session.*), the shard loop (fleet.*) and the transport (transport.*).
+    let names: Vec<String> = records
+        .iter()
+        .filter_map(|r| r.get("name").and_then(Json::as_str).map(str::to_string))
+        .collect();
+    for layer in ["session.", "fleet.", "transport."] {
+        assert!(
+            names.iter().any(|n| n.starts_with(layer)),
+            "no record from the {layer}* layer (got {names:?})"
+        );
+    }
+
+    // Core counters counted: the shard loop popped events and the
+    // strategy layer made selections.
+    let counter_value = |name: &str| -> f64 {
+        records
+            .iter()
+            .filter(|r| tag(r).as_deref() == Some("counter"))
+            .filter(|r| r.get("name").and_then(Json::as_str) == Some(name))
+            .filter_map(|r| r.get("value").and_then(Json::as_f64))
+            .next_back()
+            .unwrap_or(0.0)
+    };
+    assert!(counter_value("fleet.shard.events") > 0.0, "no events counted");
+    assert!(counter_value("session.selects") > 0.0, "no selects counted");
+    assert!(counter_value("transport.sent") > 0.0, "no sends counted");
+}
