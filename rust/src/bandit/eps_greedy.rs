@@ -1,8 +1,13 @@
 //! ε-greedy over reward density — simple ablation baseline for the paper's
 //! UCB-based selection (same cost model as KUBE, no confidence bounds).
 
-use crate::bandit::{ArmStats, BudgetedBandit};
+use crate::bandit::{
+    arm_queue_from_json, arm_queue_to_json, stats_from_json, stats_to_json, ArmStats,
+    BudgetedBandit,
+};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
+use anyhow::anyhow;
 
 #[derive(Clone, Debug)]
 /// Budget-blind ε-greedy over the arm set (ablation baseline).
@@ -75,6 +80,28 @@ impl BudgetedBandit for EpsGreedy {
 
     fn stats(&self, arm: usize) -> &ArmStats {
         &self.stats[arm]
+    }
+
+    fn snapshot(&self) -> anyhow::Result<Json> {
+        Ok(Json::obj(vec![
+            ("stats", stats_to_json(&self.stats)),
+            ("init_queue", arm_queue_to_json(&self.init_queue)),
+        ]))
+    }
+
+    fn restore(&mut self, snap: &Json) -> anyhow::Result<()> {
+        let n = self.n_arms();
+        self.stats = stats_from_json(
+            snap.get("stats")
+                .ok_or_else(|| anyhow!("eps-greedy snapshot missing 'stats'"))?,
+            n,
+        )?;
+        self.init_queue = arm_queue_from_json(
+            snap.get("init_queue")
+                .ok_or_else(|| anyhow!("eps-greedy snapshot missing 'init_queue'"))?,
+            n,
+        )?;
+        Ok(())
     }
 }
 

@@ -16,8 +16,13 @@
 //! step). ε is configurable and ablated in benches/ablation.rs; the
 //! interpretation is documented in DESIGN.md §6.
 
-use crate::bandit::{ucb_bonus, ArmStats, BudgetedBandit};
+use crate::bandit::{
+    arm_queue_from_json, arm_queue_to_json, stats_from_json, stats_to_json, ucb_bonus, ArmStats,
+    BudgetedBandit,
+};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
+use anyhow::anyhow;
 
 /// KUBE-style bandit with constant, known arm costs.
 #[derive(Clone, Debug)]
@@ -124,6 +129,28 @@ impl BudgetedBandit for Kube {
 
     fn stats(&self, arm: usize) -> &ArmStats {
         &self.stats[arm]
+    }
+
+    fn snapshot(&self) -> anyhow::Result<Json> {
+        Ok(Json::obj(vec![
+            ("stats", stats_to_json(&self.stats)),
+            ("init_queue", arm_queue_to_json(&self.init_queue)),
+        ]))
+    }
+
+    fn restore(&mut self, snap: &Json) -> anyhow::Result<()> {
+        let n = self.n_arms();
+        self.stats = stats_from_json(
+            snap.get("stats")
+                .ok_or_else(|| anyhow!("kube snapshot missing 'stats'"))?,
+            n,
+        )?;
+        self.init_queue = arm_queue_from_json(
+            snap.get("init_queue")
+                .ok_or_else(|| anyhow!("kube snapshot missing 'init_queue'"))?,
+            n,
+        )?;
+        Ok(())
     }
 }
 

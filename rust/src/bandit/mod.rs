@@ -20,7 +20,9 @@ pub mod ucb1;
 pub mod ucb_bv;
 
 use crate::sim::cost::CostMode;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Result};
 
 /// Default exploration rate for the ε-parameterized policies (the paper's
 /// 0.1).
@@ -185,6 +187,104 @@ pub trait BudgetedBandit {
     fn any_affordable(&self, remaining_budget: f64) -> bool {
         (0..self.n_arms()).any(|a| self.expected_cost(a) <= remaining_budget)
     }
+
+    /// Serialize the policy's mutable state (posteriors, pull counts,
+    /// pending initialization) as a checkpoint fragment. The default
+    /// ERRORS: a stateful out-of-tree policy that does not opt in cannot
+    /// silently produce checkpoints that resume wrong — checkpointing is
+    /// simply unavailable until the policy implements the pair. All five
+    /// in-tree policies implement it.
+    fn snapshot(&self) -> Result<Json> {
+        Err(anyhow!(
+            "bandit policy '{}' does not implement snapshot(); \
+             checkpoint/resume is unavailable for this policy",
+            self.name()
+        ))
+    }
+
+    /// Restore a [`snapshot`](BudgetedBandit::snapshot) fragment into a
+    /// freshly constructed policy of the same kind over the same arm set.
+    /// After a successful restore, `select`/`update` behave bit-identically
+    /// to the policy the snapshot was taken from. The default errors (see
+    /// [`snapshot`](BudgetedBandit::snapshot)).
+    fn restore(&mut self, _snap: &Json) -> Result<()> {
+        Err(anyhow!(
+            "bandit policy '{}' does not implement restore(); \
+             checkpoint/resume is unavailable for this policy",
+            self.name()
+        ))
+    }
+}
+
+/// Serialize per-arm [`ArmStats`] as a checkpoint fragment. Pull counts
+/// are full-range u64 and travel as hex strings (see [`Json::hex`]); the
+/// running means are exact through the shortest-round-trip f64 printer.
+pub fn stats_to_json(stats: &[ArmStats]) -> Json {
+    Json::arr(stats.iter().map(|s| {
+        Json::obj(vec![
+            ("pulls", Json::hex(s.pulls)),
+            ("mean_reward", Json::num(s.mean_reward)),
+            ("mean_cost", Json::num(s.mean_cost)),
+        ])
+    }))
+}
+
+/// Decode a [`stats_to_json`] fragment, validating the arm count against
+/// the freshly constructed policy it is being restored into.
+pub fn stats_from_json(snap: &Json, n_arms: usize) -> Result<Vec<ArmStats>> {
+    let arr = snap
+        .as_arr()
+        .ok_or_else(|| anyhow!("bandit stats snapshot is not an array"))?;
+    if arr.len() != n_arms {
+        bail!(
+            "bandit stats snapshot has {} arms, this policy has {n_arms} \
+             (was the tau-max or arm table changed between checkpoint and resume?)",
+            arr.len()
+        );
+    }
+    arr.iter()
+        .map(|j| {
+            Ok(ArmStats {
+                pulls: j
+                    .get("pulls")
+                    .and_then(Json::as_hex_u64)
+                    .ok_or_else(|| anyhow!("bad 'pulls' in bandit stats snapshot"))?,
+                mean_reward: j
+                    .get("mean_reward")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("bad 'mean_reward' in bandit stats snapshot"))?,
+                mean_cost: j
+                    .get("mean_cost")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("bad 'mean_cost' in bandit stats snapshot"))?,
+            })
+        })
+        .collect()
+}
+
+/// Serialize an initialization queue (pending arm indices, pop order from
+/// the back) as a checkpoint fragment.
+pub fn arm_queue_to_json(queue: &[usize]) -> Json {
+    Json::arr(queue.iter().map(|&k| Json::num(k as f64)))
+}
+
+/// Decode an [`arm_queue_to_json`] fragment, validating every index
+/// against the policy's arm count.
+pub fn arm_queue_from_json(snap: &Json, n_arms: usize) -> Result<Vec<usize>> {
+    let arr = snap
+        .as_arr()
+        .ok_or_else(|| anyhow!("bandit init-queue snapshot is not an array"))?;
+    arr.iter()
+        .map(|j| {
+            let k = j
+                .as_usize()
+                .ok_or_else(|| anyhow!("bad arm index in bandit init-queue snapshot"))?;
+            if k >= n_arms {
+                bail!("arm index {k} out of range in bandit init-queue snapshot ({n_arms} arms)");
+            }
+            Ok(k)
+        })
+        .collect()
 }
 
 /// Construct one budgeted bandit of `kind` over the given arm costs.

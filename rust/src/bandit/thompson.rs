@@ -7,8 +7,10 @@
 //! the ablation bench can ask whether posterior sampling beats UCB-style
 //! optimism in this setting.
 
-use crate::bandit::{ArmStats, BudgetedBandit};
+use crate::bandit::{stats_from_json, stats_to_json, ArmStats, BudgetedBandit};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
+use anyhow::{anyhow, bail};
 
 #[derive(Clone, Debug)]
 /// Budgeted Thompson sampling over Beta posteriors (extension beyond
@@ -108,6 +110,50 @@ impl BudgetedBandit for Thompson {
 
     fn stats(&self, arm: usize) -> &ArmStats {
         &self.stats[arm]
+    }
+
+    fn snapshot(&self) -> anyhow::Result<Json> {
+        Ok(Json::obj(vec![
+            ("stats", stats_to_json(&self.stats)),
+            (
+                "posts",
+                Json::arr(
+                    self.posts
+                        .iter()
+                        .map(|&(a, b)| Json::arr([Json::num(a), Json::num(b)])),
+                ),
+            ),
+        ]))
+    }
+
+    fn restore(&mut self, snap: &Json) -> anyhow::Result<()> {
+        let n = self.n_arms();
+        self.stats = stats_from_json(
+            snap.get("stats")
+                .ok_or_else(|| anyhow!("thompson snapshot missing 'stats'"))?,
+            n,
+        )?;
+        let posts = snap
+            .get("posts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("thompson snapshot missing 'posts'"))?;
+        if posts.len() != n {
+            bail!("thompson snapshot has {} posteriors, expected {n}", posts.len());
+        }
+        self.posts = posts
+            .iter()
+            .map(|p| {
+                let pair = p.as_arr().filter(|a| a.len() == 2);
+                match pair {
+                    Some(a) => match (a[0].as_f64(), a[1].as_f64()) {
+                        (Some(al), Some(be)) => Ok((al, be)),
+                        _ => Err(anyhow!("non-numeric Beta pseudo-counts in thompson snapshot")),
+                    },
+                    None => Err(anyhow!("malformed posterior pair in thompson snapshot")),
+                }
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(())
     }
 }
 

@@ -2,8 +2,13 @@
 //! when the bandit maximizes reward but ignores arm costs entirely (it
 //! still refuses unaffordable pulls, but never prefers cheaper arms).
 
-use crate::bandit::{ucb_bonus, ArmStats, BudgetedBandit};
+use crate::bandit::{
+    arm_queue_from_json, arm_queue_to_json, stats_from_json, stats_to_json, ucb_bonus, ArmStats,
+    BudgetedBandit,
+};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
+use anyhow::anyhow;
 
 #[derive(Clone, Debug)]
 /// Budget-blind UCB1 (ablation baseline): classic mean + bonus ranking,
@@ -71,6 +76,28 @@ impl BudgetedBandit for Ucb1 {
 
     fn stats(&self, arm: usize) -> &ArmStats {
         &self.stats[arm]
+    }
+
+    fn snapshot(&self) -> anyhow::Result<Json> {
+        Ok(Json::obj(vec![
+            ("stats", stats_to_json(&self.stats)),
+            ("init_queue", arm_queue_to_json(&self.init_queue)),
+        ]))
+    }
+
+    fn restore(&mut self, snap: &Json) -> anyhow::Result<()> {
+        let n = self.n_arms();
+        self.stats = stats_from_json(
+            snap.get("stats")
+                .ok_or_else(|| anyhow!("ucb1 snapshot missing 'stats'"))?,
+            n,
+        )?;
+        self.init_queue = arm_queue_from_json(
+            snap.get("init_queue")
+                .ok_or_else(|| anyhow!("ucb1 snapshot missing 'init_queue'"))?,
+            n,
+        )?;
+        Ok(())
     }
 }
 

@@ -15,8 +15,13 @@
 //! The paper's utility-cost ordering step then uses expected (not known)
 //! costs; feasibility uses the same estimates.
 
-use crate::bandit::{ArmStats, BudgetedBandit};
+use crate::bandit::{
+    arm_queue_from_json, arm_queue_to_json, stats_from_json, stats_to_json, ArmStats,
+    BudgetedBandit,
+};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
+use anyhow::anyhow;
 
 /// UCB-BV1-style bandit with unknown i.i.d. arm costs.
 #[derive(Clone, Debug)]
@@ -123,6 +128,28 @@ impl BudgetedBandit for UcbBv {
 
     fn stats(&self, arm: usize) -> &ArmStats {
         &self.stats[arm]
+    }
+
+    fn snapshot(&self) -> anyhow::Result<Json> {
+        Ok(Json::obj(vec![
+            ("stats", stats_to_json(&self.stats)),
+            ("init_queue", arm_queue_to_json(&self.init_queue)),
+        ]))
+    }
+
+    fn restore(&mut self, snap: &Json) -> anyhow::Result<()> {
+        let n = self.n_arms();
+        self.stats = stats_from_json(
+            snap.get("stats")
+                .ok_or_else(|| anyhow!("ucb-bv snapshot missing 'stats'"))?,
+            n,
+        )?;
+        self.init_queue = arm_queue_from_json(
+            snap.get("init_queue")
+                .ok_or_else(|| anyhow!("ucb-bv snapshot missing 'init_queue'"))?,
+            n,
+        )?;
+        Ok(())
     }
 }
 

@@ -218,6 +218,15 @@ impl RunConfig {
         self
     }
 
+    /// Canonical fingerprint: the compact print of the JSON wire form.
+    /// Object keys are sorted and numbers print deterministically, so two
+    /// configs describe the same run iff their fingerprints are equal —
+    /// checkpoint/resume uses this to refuse a `--resume` whose explicit
+    /// CLI flags contradict the config embedded in the checkpoint.
+    pub fn fingerprint(&self) -> String {
+        self.to_json().to_string()
+    }
+
     /// Serialize to the JSON wire format (spec strings for the nested
     /// grammars, so files stay hand-editable).
     pub fn to_json(&self) -> Json {
@@ -624,6 +633,18 @@ mod tests {
             legacy_strategy("acsync", None, None).unwrap(),
             StrategySpec::ac_sync()
         );
+    }
+
+    #[test]
+    fn fingerprint_separates_distinct_runs_only() {
+        let a = RunConfig::default();
+        let mut b = RunConfig::default();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // Survives a JSON round trip (what a checkpoint does to it).
+        let back = RunConfig::from_json(&a.to_json()).unwrap();
+        assert_eq!(a.fingerprint(), back.fingerprint());
+        b.seed = 43;
+        assert_ne!(a.fingerprint(), b.fingerprint());
     }
 
     #[test]

@@ -11,13 +11,14 @@
 //! cost; each edge has its OWN bandit (paper §IV-B: "different bandit
 //! models for all edge servers in asynchronous EL").
 
-use anyhow::Result;
+use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::aggregate;
 use crate::coordinator::observer::{LocalReport, RunEvent};
 use crate::coordinator::session::{CollaborationMode, Session};
 use crate::coordinator::utility::UtilityKind;
 use crate::sim::clock::EventQueue;
+use crate::util::json::Json;
 
 /// An in-flight local round awaiting its completion event.
 #[derive(Clone, Copy, Debug)]
@@ -157,6 +158,99 @@ impl CollaborationMode for AsyncMerge {
 
     fn is_done(&self, _s: &Session<'_>) -> bool {
         false // termination is the event queue draining (step -> None)
+    }
+
+    fn snapshot(&self) -> Result<Json> {
+        // The async manner IS state: the virtual clock, the pending
+        // completion events (with their tie-break sequence numbers), and
+        // every in-flight round's cost/signal. All of it travels.
+        let events = self.queue.entries().into_iter().map(|(t, seq, edge)| {
+            Json::arr([Json::num(t), Json::hex(seq), Json::num(edge as f64)])
+        });
+        let inflight = self.inflight.iter().map(|fl| match fl {
+            None => Json::Null,
+            Some(fl) => Json::obj(vec![
+                ("tau", Json::num(fl.tau as f64)),
+                ("total_cost", Json::num(fl.total_cost)),
+                ("train_signal", Json::num(fl.train_signal)),
+            ]),
+        });
+        Ok(Json::obj(vec![
+            ("kind", Json::str("async")),
+            ("now", Json::num(self.queue.now())),
+            ("seq", Json::hex(self.queue.seq())),
+            ("events", Json::arr(events)),
+            ("inflight", Json::arr(inflight)),
+        ]))
+    }
+
+    fn restore(&mut self, s: &mut Session<'_>, snap: &Json) -> Result<()> {
+        match snap.get("kind").and_then(Json::as_str) {
+            Some("async") => {}
+            other => bail!(
+                "checkpoint mode is {:?}, the async manner cannot resume it",
+                other.unwrap_or("<missing>")
+            ),
+        }
+        let now = snap
+            .get("now")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("async checkpoint missing 'now'"))?;
+        let seq = snap
+            .get("seq")
+            .and_then(Json::as_hex_u64)
+            .ok_or_else(|| anyhow!("async checkpoint missing 'seq'"))?;
+        let events = snap
+            .get("events")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("async checkpoint missing 'events'"))?
+            .iter()
+            .map(|ev| {
+                let t = ev.as_arr().filter(|t| t.len() == 3);
+                let t = t.ok_or_else(|| anyhow!("async checkpoint event is not a triple"))?;
+                Ok((
+                    t[0].as_f64()
+                        .ok_or_else(|| anyhow!("bad event time"))?,
+                    t[1].as_hex_u64()
+                        .ok_or_else(|| anyhow!("bad event seq"))?,
+                    t[2].as_usize()
+                        .ok_or_else(|| anyhow!("bad event edge"))?,
+                ))
+            })
+            .collect::<Result<Vec<(f64, u64, usize)>>>()?;
+        self.queue = EventQueue::restore(now, seq, events);
+        let inflight = snap
+            .get("inflight")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("async checkpoint missing 'inflight'"))?;
+        if inflight.len() != s.world.edges.len() {
+            bail!(
+                "async checkpoint tracks {} in-flight slots for a {}-edge fleet",
+                inflight.len(),
+                s.world.edges.len()
+            );
+        }
+        self.inflight = inflight
+            .iter()
+            .map(|fl| match fl {
+                Json::Null => Ok(None),
+                fl => Ok(Some(InFlight {
+                    tau: fl
+                        .get("tau")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("bad in-flight 'tau'"))?,
+                    total_cost: fl
+                        .get("total_cost")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| anyhow!("bad in-flight 'total_cost'"))?,
+                    train_signal: fl
+                        .get("train_signal")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| anyhow!("bad in-flight 'train_signal'"))?,
+                })),
+            })
+            .collect::<Result<Vec<Option<InFlight>>>>()?;
+        Ok(())
     }
 }
 

@@ -1,0 +1,240 @@
+//! Versioned checkpoint documents for the long-running service mode.
+//!
+//! [`Session::checkpoint`](super::Session::checkpoint) serializes the FULL
+//! run state — learner parameters, per-strategy/bandit posteriors, charge
+//! ledgers, round/eval cursors, and every RNG stream — through
+//! [`util::json`](crate::util::json) as one versioned document, and
+//! [`Session::resume`](super::Session::resume) inverts it exactly. The
+//! determinism contract (per-edge RNG streams, key-stamped event merge)
+//! makes these snapshots *exact*: a run resumed from a checkpoint emits
+//! the uninterrupted run's remaining event stream bit for bit. This
+//! module owns the schema version and the shared field codecs; the
+//! document itself is assembled by the session (which owns the state).
+//!
+//! Precision notes: JSON numbers are f64, so full-range u64 counters (RNG
+//! state words, event sequence numbers, update counts) travel as
+//! [`Json::hex`] strings, f32 parameters travel exactly through the f64
+//! wire, and non-integral f64s print as their shortest round-trip
+//! representation — every field is lossless, which is what lets the
+//! restart-equality suite assert hard equality on resumed runs.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::TracePoint;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Format version stamped into every checkpoint document's `version`
+/// field; bumped on any incompatible schema change so a stale document is
+/// a typed error instead of a silently-wrong resume.
+pub const CHECKPOINT_VERSION: u64 = 1;
+
+/// Reject documents from an unknown or missing format version.
+pub fn check_version(doc: &Json) -> Result<()> {
+    let v = doc
+        .get("version")
+        .and_then(Json::as_hex_u64)
+        .ok_or_else(|| anyhow!("checkpoint document has no 'version' field"))?;
+    if v != CHECKPOINT_VERSION {
+        bail!("checkpoint format version {v} is not the supported {CHECKPOINT_VERSION}");
+    }
+    Ok(())
+}
+
+/// The run config a checkpoint was taken under (embedded verbatim, so a
+/// resume needs no side-channel config file).
+pub fn config_of(doc: &Json) -> Result<RunConfig> {
+    let j = doc
+        .get("config")
+        .ok_or_else(|| anyhow!("checkpoint document has no 'config' field"))?;
+    RunConfig::from_json(j).context("checkpoint 'config' does not parse")
+}
+
+/// Serialize one RNG stream: the four state words as hex strings (full
+/// u64 range) plus the cached Box–Muller spare.
+pub fn rng_to_json(rng: &Rng) -> Json {
+    let (s, spare) = rng.state();
+    Json::obj(vec![
+        ("s", Json::arr(s.iter().map(|&w| Json::hex(w)))),
+        ("gauss", spare.map(Json::num).unwrap_or(Json::Null)),
+    ])
+}
+
+/// Restore an RNG stream serialized by [`rng_to_json`]; the restored
+/// stream resumes the exact draw sequence.
+pub fn rng_from_json(j: &Json) -> Result<Rng> {
+    let words = j
+        .get("s")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("rng state missing 's'"))?;
+    if words.len() != 4 {
+        bail!("rng state has {} words, expected 4", words.len());
+    }
+    let mut s = [0u64; 4];
+    for (slot, w) in s.iter_mut().zip(words) {
+        *slot = w
+            .as_hex_u64()
+            .ok_or_else(|| anyhow!("bad rng state word"))?;
+    }
+    Ok(Rng::restore(s, j.get("gauss").and_then(Json::as_f64)))
+}
+
+/// Serialize model parameters (f32 values are exact through the f64 wire).
+pub fn params_to_json(params: &[f32]) -> Json {
+    Json::arr(params.iter().map(|&p| Json::num(p as f64)))
+}
+
+/// Decode model parameters, checking the task's expected layout length.
+pub fn params_from_json(j: &Json, expect: usize) -> Result<Vec<f32>> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| anyhow!("checkpoint params is not an array"))?;
+    if arr.len() != expect {
+        bail!(
+            "checkpoint params have {} values, the task layout expects {expect}",
+            arr.len()
+        );
+    }
+    arr.iter()
+        .map(|v| {
+            v.as_f64()
+                .map(|p| p as f32)
+                .ok_or_else(|| anyhow!("bad param value in checkpoint"))
+        })
+        .collect()
+}
+
+/// Serialize one recorded trace point.
+pub fn trace_point_to_json(p: &TracePoint) -> Json {
+    Json::obj(vec![
+        ("wall_ms", Json::num(p.wall_ms)),
+        ("mean_spent", Json::num(p.mean_spent)),
+        ("updates", Json::hex(p.updates)),
+        ("metric", Json::num(p.metric)),
+    ])
+}
+
+/// Decode one trace point serialized by [`trace_point_to_json`].
+pub fn trace_point_from_json(j: &Json) -> Result<TracePoint> {
+    let bad = |what: &str| anyhow!("checkpoint trace point missing/bad '{what}'");
+    Ok(TracePoint {
+        wall_ms: j
+            .get("wall_ms")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| bad("wall_ms"))?,
+        mean_spent: j
+            .get("mean_spent")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| bad("mean_spent"))?,
+        updates: j
+            .get("updates")
+            .and_then(Json::as_hex_u64)
+            .ok_or_else(|| bad("updates"))?,
+        metric: j
+            .get("metric")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| bad("metric"))?,
+    })
+}
+
+/// Write a checkpoint document to `path` via a sibling `.tmp` file and an
+/// atomic rename, so a crash mid-write never leaves a torn document where
+/// a resume would look for one.
+pub fn save(path: &Path, doc: &Json) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, format!("{}\n", doc.pretty()))
+        .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming checkpoint into {}", path.display()))?;
+    Ok(())
+}
+
+/// Read, parse and version-check a checkpoint document.
+pub fn load(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading checkpoint {}", path.display()))?;
+    let doc = Json::parse(&text)
+        .map_err(|e| anyhow!("checkpoint {} is not valid JSON: {e}", path.display()))?;
+    check_version(&doc)?;
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_codec_resumes_the_exact_stream() {
+        let mut rng = Rng::new(42);
+        for _ in 0..13 {
+            rng.next_u64();
+        }
+        let _ = rng.normal(); // cache a Box–Muller spare
+        let mut twin = rng_from_json(&rng_to_json(&rng)).unwrap();
+        for _ in 0..32 {
+            assert_eq!(rng.next_u64(), twin.next_u64());
+            assert_eq!(rng.normal().to_bits(), twin.normal().to_bits());
+        }
+    }
+
+    #[test]
+    fn rng_codec_rejects_malformed_state() {
+        assert!(rng_from_json(&Json::obj(vec![])).is_err());
+        let short = Json::obj(vec![("s", Json::arr([Json::hex(1)]))]);
+        assert!(rng_from_json(&short).is_err());
+    }
+
+    #[test]
+    fn params_codec_is_exact_and_checks_length() {
+        let params = vec![0.1f32, -3.25, 1e-7, f32::MAX, 0.0];
+        let j = params_to_json(&params);
+        // Through a full print/parse cycle, since that is what a file does.
+        let j = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(params_from_json(&j, 5).unwrap(), params);
+        let err = params_from_json(&j, 4).unwrap_err().to_string();
+        assert!(err.contains("expects 4"), "{err}");
+    }
+
+    #[test]
+    fn trace_point_codec_roundtrips() {
+        let p = TracePoint {
+            wall_ms: 123.456,
+            mean_spent: 78.9,
+            updates: u64::MAX,
+            metric: 0.875,
+        };
+        let j = Json::parse(&trace_point_to_json(&p).to_string()).unwrap();
+        assert_eq!(trace_point_from_json(&j).unwrap(), p);
+    }
+
+    #[test]
+    fn version_gate_rejects_foreign_documents() {
+        assert!(check_version(&Json::obj(vec![])).is_err());
+        let future = Json::obj(vec![("version", Json::num(99.0))]);
+        let err = check_version(&future).unwrap_err().to_string();
+        assert!(err.contains("99"), "{err}");
+        let ok = Json::obj(vec![("version", Json::num(CHECKPOINT_VERSION as f64))]);
+        assert!(check_version(&ok).is_ok());
+    }
+
+    #[test]
+    fn save_load_roundtrips_through_disk() {
+        let dir = std::env::temp_dir().join(format!("ol4el-ckpt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("checkpoint.json");
+        let doc = Json::obj(vec![
+            ("version", Json::num(CHECKPOINT_VERSION as f64)),
+            ("payload", Json::hex(u64::MAX)),
+        ]);
+        save(&path, &doc).unwrap();
+        assert_eq!(load(&path).unwrap(), doc);
+        // The version gate applies on load.
+        let stale = Json::obj(vec![("version", Json::num(0.0))]);
+        save(&path, &stale).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

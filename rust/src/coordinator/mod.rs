@@ -27,6 +27,7 @@
 
 pub mod aggregate;
 pub mod asynchronous;
+pub mod checkpoint;
 pub mod experiment;
 pub mod observer;
 pub mod session;

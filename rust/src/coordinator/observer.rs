@@ -115,6 +115,13 @@ impl TraceObserver {
         Self::default()
     }
 
+    /// A collector pre-seeded with points — how a resumed session restores
+    /// the trace prefix recorded before the checkpoint, so the final
+    /// `RunResult::trace` equals the uninterrupted run's end to end.
+    pub fn with_points(points: Vec<TracePoint>) -> Self {
+        TraceObserver { points }
+    }
+
     /// The collected trace points so far.
     pub fn points(&self) -> &[TracePoint] {
         &self.points

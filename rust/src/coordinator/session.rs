@@ -11,9 +11,12 @@
 //! operation order exactly, so fixed-seed runs reproduce the legacy trace
 //! bit for bit.
 
-use anyhow::Result;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
 
 use crate::config::RunConfig;
+use crate::coordinator::checkpoint;
 use crate::coordinator::observer::{LocalReport, Observer, RunEvent, TraceObserver};
 use crate::coordinator::utility::UtilityMeter;
 use crate::coordinator::{RunResult, TracePoint, World};
@@ -21,6 +24,7 @@ use crate::edge::{Hyper, LocalRound};
 use crate::engine::ComputeEngine;
 use crate::model::ModelState;
 use crate::strategy::{self, Strategy};
+use crate::util::json::Json;
 
 /// A collaboration manner: the scheduling + merge policy a [`Session`]
 /// drives. Object-safe, so custom manners plug in without touching the
@@ -48,6 +52,32 @@ pub trait CollaborationMode {
     /// Terminal condition checked between steps beyond step-exhaustion
     /// (the sync barrier ends the whole cohort when any ledger retires).
     fn is_done(&self, session: &Session<'_>) -> bool;
+
+    /// Serialize this manner's scheduling state at the session's quiescent
+    /// between-rounds boundary (the sync barrier carries nothing across
+    /// rounds; the async manner carries its event queue and in-flight
+    /// rounds). The default ERRORS, so a custom manner that has not opted
+    /// in cannot produce checkpoints that silently resume wrong.
+    fn snapshot(&self) -> Result<Json> {
+        Err(anyhow!(
+            "collaboration manner '{}' does not implement snapshot(); \
+             checkpoint/resume is unavailable under this manner",
+            self.name()
+        ))
+    }
+
+    /// Counterpart of [`begin`](CollaborationMode::begin) on a resumed
+    /// session: rebuild the scheduling state from a
+    /// [`snapshot`](CollaborationMode::snapshot) fragment instead of
+    /// launching round zero. The default ERRORS (see `snapshot`).
+    fn restore(&mut self, session: &mut Session<'_>, snap: &Json) -> Result<()> {
+        let _ = (session, snap);
+        Err(anyhow!(
+            "collaboration manner '{}' does not implement restore(); \
+             checkpoint/resume is unavailable under this manner",
+            self.name()
+        ))
+    }
 }
 
 /// Routes every [`Session::local_round`] to an out-of-process edge — the
@@ -143,6 +173,12 @@ pub struct Session<'e> {
     pub last_metric: f64,
     retired_seen: Vec<bool>,
     remote: Option<Box<dyn RemoteRunner>>,
+    // Checkpoint/resume plumbing: the manner snapshot a resumed session
+    // replays instead of `begin`, and the periodic write cadence.
+    resume_mode: Option<Json>,
+    ckpt_every: u64,
+    ckpt_path: Option<PathBuf>,
+    ckpt_last: u64,
     // Telemetry handles, cached once so the round path never takes the
     // registry lock. Out-of-band by contract (`crate::telemetry`): they
     // read the wall clock and atomics only.
@@ -169,6 +205,10 @@ impl<'e> Session<'e> {
             last_metric: 0.0,
             retired_seen,
             remote: None,
+            resume_mode: None,
+            ckpt_every: 0,
+            ckpt_path: None,
+            ckpt_last: 0,
             tele_rounds: crate::telemetry::counter("session.rounds"),
             tele_round_us: crate::telemetry::histogram("session.local_round_us"),
         })
@@ -240,6 +280,10 @@ impl<'e> Session<'e> {
         let out = runner.remote_round(edge, tau, hyper, &mut self.world.edges[edge].model.params);
         self.remote = Some(runner);
         let out = out?;
+        // Mirror the remote edge's iteration count (in-process edges count
+        // inside `EdgeServer::local_round`), so a serve-mode checkpoint
+        // knows how far to fast-forward a rejoining edge.
+        self.world.edges[edge].iters_done += out.round.iterations as u64;
         for _ in 0..out.rejoined {
             let wall_ms = self.wall_ms;
             self.emit(RunEvent::EdgeJoined { edge, wall_ms });
@@ -331,6 +375,251 @@ impl<'e> Session<'e> {
         true
     }
 
+    /// Enable periodic checkpointing: every `every` global updates the
+    /// session serializes itself ([`checkpoint`](Session::checkpoint)) to
+    /// `path` via an atomic write-and-rename. `every == 0` disables.
+    pub fn set_checkpoint(&mut self, every: u64, path: impl Into<PathBuf>) {
+        self.ckpt_every = every;
+        self.ckpt_path = Some(path.into());
+    }
+
+    /// Serialize the full session state as a versioned checkpoint
+    /// document: the config, learner parameters, strategy/bandit
+    /// posteriors, charge ledgers, shard cursors, every RNG stream, the
+    /// eval/trace cursors, and `mode`'s scheduling state. Only meaningful
+    /// at the engine loop's quiescent between-rounds boundary (where
+    /// [`run_with`](Session::run_with) takes it);
+    /// [`Session::resume`] inverts it exactly.
+    pub fn checkpoint(&self, mode: &dyn CollaborationMode) -> Result<Json> {
+        let w = &self.world;
+        let edges = w.edges.iter().map(|e| {
+            Json::obj(vec![
+                ("params", checkpoint::params_to_json(&e.model.params)),
+                ("spent", Json::num(e.spent)),
+                ("base_version", Json::hex(e.base_version)),
+                ("retired", Json::Bool(e.retired)),
+                ("iters_done", Json::hex(e.iters_done)),
+                ("cursor", Json::num(e.shard.cursor() as f64)),
+                ("slowdown", Json::num(e.slowdown)),
+                ("rng", checkpoint::rng_to_json(&e.rng)),
+            ])
+        });
+        let (meter_metric, meter_scale) = self.meter.state();
+        let opt = |v: Option<f64>| v.map(Json::num).unwrap_or(Json::Null);
+        Ok(Json::obj(vec![
+            (
+                "version",
+                Json::num(checkpoint::CHECKPOINT_VERSION as f64),
+            ),
+            ("config", self.cfg.to_json()),
+            (
+                "world",
+                Json::obj(vec![
+                    ("global", checkpoint::params_to_json(&w.global.params)),
+                    ("model_version", Json::hex(w.version)),
+                    ("rng", checkpoint::rng_to_json(&w.rng)),
+                    (
+                        "slowdowns",
+                        Json::arr(w.slowdowns.iter().map(|&s| Json::num(s))),
+                    ),
+                    ("edges", Json::arr(edges)),
+                ]),
+            ),
+            (
+                "session",
+                Json::obj(vec![
+                    ("wall_ms", Json::num(self.wall_ms)),
+                    ("updates", Json::hex(self.updates)),
+                    ("last_metric", Json::num(self.last_metric)),
+                    (
+                        "retired_seen",
+                        Json::arr(self.retired_seen.iter().map(|&b| Json::Bool(b))),
+                    ),
+                    (
+                        "meter",
+                        Json::obj(vec![
+                            ("last_metric", opt(meter_metric)),
+                            ("gain_scale", opt(meter_scale)),
+                        ]),
+                    ),
+                    (
+                        "trace",
+                        Json::arr(
+                            self.trace.points().iter().map(checkpoint::trace_point_to_json),
+                        ),
+                    ),
+                ]),
+            ),
+            ("strategy", self.strategy.snapshot()?),
+            ("mode", mode.snapshot()?),
+        ]))
+    }
+
+    /// Rebuild a session from a checkpoint document: the world is built
+    /// FRESH from the embedded config (immutable structure — data, shards,
+    /// eval split — is deterministic given the seed), then every piece of
+    /// mutable state the document captured is overlaid. Driving the
+    /// returned session produces the uninterrupted run's remaining event
+    /// stream and final scalars bit for bit.
+    pub fn resume(doc: &Json, engine: &'e dyn ComputeEngine) -> Result<Session<'e>> {
+        checkpoint::check_version(doc)?;
+        let cfg = checkpoint::config_of(doc)?;
+        let mut s = Session::new(&cfg, engine)?;
+
+        let w = doc
+            .get("world")
+            .ok_or_else(|| anyhow!("checkpoint missing 'world'"))?;
+        let slowdowns = w
+            .get("slowdowns")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("checkpoint world missing 'slowdowns'"))?
+            .iter()
+            .map(|j| j.as_f64().ok_or_else(|| anyhow!("bad slowdown value")))
+            .collect::<Result<Vec<f64>>>()?;
+        if slowdowns.len() != s.world.edges.len() {
+            bail!(
+                "checkpoint fleet has {} edges, the config builds {} \
+                 (checkpointing a churned fleet is not supported)",
+                slowdowns.len(),
+                s.world.edges.len()
+            );
+        }
+        // The checkpoint's slowdowns are the truth (`coordinator serve`
+        // learns real slowdowns at the Hello handshake): when they differ
+        // from the config-derived fleet, overlay them and rebuild the
+        // strategy so its arm-cost tables price the real fleet.
+        if slowdowns != s.world.slowdowns {
+            for (e, &sd) in s.world.edges.iter_mut().zip(&slowdowns) {
+                e.slowdown = sd;
+            }
+            s.world.slowdowns = slowdowns.clone();
+            s.strategy = strategy::build(&cfg, &slowdowns)?;
+        }
+        s.strategy.restore(
+            doc.get("strategy")
+                .ok_or_else(|| anyhow!("checkpoint missing 'strategy'"))?,
+        )?;
+
+        s.world.global.params = checkpoint::params_from_json(
+            w.get("global")
+                .ok_or_else(|| anyhow!("checkpoint world missing 'global'"))?,
+            s.world.global.params.len(),
+        )?;
+        s.world.version = w
+            .get("model_version")
+            .and_then(Json::as_hex_u64)
+            .ok_or_else(|| anyhow!("checkpoint world missing 'model_version'"))?;
+        s.world.rng = checkpoint::rng_from_json(
+            w.get("rng")
+                .ok_or_else(|| anyhow!("checkpoint world missing 'rng'"))?,
+        )?;
+        let edges = w
+            .get("edges")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("checkpoint world missing 'edges'"))?;
+        if edges.len() != s.world.edges.len() {
+            bail!(
+                "checkpoint has {} edge entries for a {}-edge fleet",
+                edges.len(),
+                s.world.edges.len()
+            );
+        }
+        for (e, ej) in s.world.edges.iter_mut().zip(edges) {
+            let field = |k: &str| {
+                ej.get(k)
+                    .ok_or_else(|| anyhow!("checkpoint edge entry missing '{k}'"))
+            };
+            let expect = e.model.params.len();
+            e.model.params = checkpoint::params_from_json(field("params")?, expect)?;
+            e.spent = field("spent")?
+                .as_f64()
+                .ok_or_else(|| anyhow!("bad edge 'spent'"))?;
+            e.base_version = field("base_version")?
+                .as_hex_u64()
+                .ok_or_else(|| anyhow!("bad edge 'base_version'"))?;
+            e.retired = field("retired")?
+                .as_bool()
+                .ok_or_else(|| anyhow!("bad edge 'retired'"))?;
+            e.iters_done = field("iters_done")?
+                .as_hex_u64()
+                .ok_or_else(|| anyhow!("bad edge 'iters_done'"))?;
+            e.rng = checkpoint::rng_from_json(field("rng")?)?;
+            // A fresh shard starts at cursor 0; advance to the recorded
+            // position (same wrap rule as live batch delivery).
+            let cursor = field("cursor")?
+                .as_hex_u64()
+                .ok_or_else(|| anyhow!("bad edge 'cursor'"))?;
+            e.shard.advance(cursor);
+        }
+
+        let sess = doc
+            .get("session")
+            .ok_or_else(|| anyhow!("checkpoint missing 'session'"))?;
+        let sfield = |k: &str| {
+            sess.get(k)
+                .ok_or_else(|| anyhow!("checkpoint session missing '{k}'"))
+        };
+        s.wall_ms = sfield("wall_ms")?
+            .as_f64()
+            .ok_or_else(|| anyhow!("bad session 'wall_ms'"))?;
+        s.updates = sfield("updates")?
+            .as_hex_u64()
+            .ok_or_else(|| anyhow!("bad session 'updates'"))?;
+        s.last_metric = sfield("last_metric")?
+            .as_f64()
+            .ok_or_else(|| anyhow!("bad session 'last_metric'"))?;
+        s.retired_seen = sfield("retired_seen")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("bad session 'retired_seen'"))?
+            .iter()
+            .map(|j| j.as_bool().ok_or_else(|| anyhow!("bad retired_seen flag")))
+            .collect::<Result<Vec<bool>>>()?;
+        if s.retired_seen.len() != s.world.edges.len() {
+            bail!("checkpoint retired_seen does not cover the fleet");
+        }
+        let meter = sfield("meter")?;
+        s.meter.restore(
+            meter.get("last_metric").and_then(Json::as_f64),
+            meter.get("gain_scale").and_then(Json::as_f64),
+        );
+        let points = sfield("trace")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("bad session 'trace'"))?
+            .iter()
+            .map(checkpoint::trace_point_from_json)
+            .collect::<Result<Vec<TracePoint>>>()?;
+        s.trace = TraceObserver::with_points(points);
+        // Don't immediately re-write a checkpoint for the round we just
+        // resumed at.
+        s.ckpt_last = s.updates;
+        s.resume_mode = Some(
+            doc.get("mode")
+                .cloned()
+                .ok_or_else(|| anyhow!("checkpoint missing 'mode'"))?,
+        );
+        Ok(s)
+    }
+
+    /// Write a periodic checkpoint when the update counter crosses the
+    /// configured cadence (no-op otherwise). Pure file I/O — no RNG is
+    /// touched — so a checkpointing run emits the same event stream as a
+    /// run without it.
+    fn maybe_checkpoint(&mut self, mode: &dyn CollaborationMode) -> Result<()> {
+        if self.ckpt_every == 0 || self.updates == 0 || self.updates == self.ckpt_last {
+            return Ok(());
+        }
+        if self.updates % self.ckpt_every != 0 {
+            return Ok(());
+        }
+        self.ckpt_last = self.updates;
+        let doc = self.checkpoint(mode)?;
+        let path = self
+            .ckpt_path
+            .clone()
+            .expect("checkpoint path set alongside the cadence");
+        checkpoint::save(&path, &doc)
+    }
+
     /// Run to completion with the manner matching the config (algorithm +
     /// network/churn specs).
     pub fn run(self) -> Result<RunResult> {
@@ -340,11 +629,19 @@ impl<'e> Session<'e> {
 
     /// Run to completion with an explicit collaboration mode.
     pub fn run_with(mut self, mode: &mut dyn CollaborationMode) -> Result<RunResult> {
-        let metric0 = self.evaluate()?;
-        self.last_metric = metric0;
-        self.record_trace_point(metric0); // the t=0 point
+        if let Some(snap) = self.resume_mode.take() {
+            // Resumed session: the t=0 evaluation and trace point already
+            // happened in the original run (the trace prefix carries
+            // them); rebuild the manner's scheduling state instead of
+            // launching round zero.
+            mode.restore(&mut self, &snap)?;
+        } else {
+            let metric0 = self.evaluate()?;
+            self.last_metric = metric0;
+            self.record_trace_point(metric0); // the t=0 point
 
-        mode.begin(&mut self)?;
+            mode.begin(&mut self)?;
+        }
         self.sweep_retirements();
         loop {
             if mode.is_done(&self) {
@@ -362,6 +659,7 @@ impl<'e> Session<'e> {
                 mode.on_report(&mut self, report)?;
             }
             self.sweep_retirements();
+            self.maybe_checkpoint(&*mode)?;
         }
         // Catch retirements from the draining step (e.g. a churn departure
         // popping right before the event queue empties).

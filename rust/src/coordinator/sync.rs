@@ -10,12 +10,13 @@
 //! edge's time budget; this is exactly why the paper's sync algorithms
 //! degrade as heterogeneity grows, Fig. 3).
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::coordinator::observer::{LocalReport, RunEvent};
 use crate::coordinator::session::{CollaborationMode, Session};
 use crate::model::{Learner as _, ModelState};
 use crate::strategy::RoundObservation;
+use crate::util::json::Json;
 
 /// Barrier-round scheduling + weighted-average merging.
 #[derive(Debug, Default)]
@@ -162,6 +163,26 @@ impl CollaborationMode for SyncBarrier {
     fn is_done(&self, s: &Session<'_>) -> bool {
         // Any exhausted ledger ends synchronous training.
         s.world.edges.iter().any(|e| e.retired)
+    }
+
+    fn snapshot(&self) -> Result<Json> {
+        // The barrier carries nothing across rounds: the round_* fields
+        // are rewritten wholesale by the next `step`, and `overhead` is
+        // re-derived from the restored strategy. Only the manner tag
+        // travels, so a resume under the wrong manner is a typed error.
+        Ok(Json::obj(vec![("kind", Json::str("sync"))]))
+    }
+
+    fn restore(&mut self, s: &mut Session<'_>, snap: &Json) -> Result<()> {
+        match snap.get("kind").and_then(Json::as_str) {
+            Some("sync") => {}
+            other => bail!(
+                "checkpoint mode is {:?}, the sync barrier cannot resume it",
+                other.unwrap_or("<missing>")
+            ),
+        }
+        self.overhead = 1.0 + s.strategy.edge_overhead();
+        Ok(())
     }
 }
 

@@ -89,6 +89,19 @@ impl UtilityMeter {
         self.last_metric = Some(metric);
         u.clamp(0.0, 1.0)
     }
+
+    /// Checkpoint snapshot: `(last_metric, gain_scale)`. The meter kind
+    /// itself travels in the run config, not the snapshot.
+    pub fn state(&self) -> (Option<f64>, Option<f64>) {
+        (self.last_metric, self.gain_scale.get())
+    }
+
+    /// Restore a [`UtilityMeter::state`] snapshot so the next `measure`
+    /// call produces the same utility as the uninterrupted run.
+    pub fn restore(&mut self, last_metric: Option<f64>, gain_scale: Option<f64>) {
+        self.last_metric = last_metric;
+        self.gain_scale.set(gain_scale);
+    }
 }
 
 #[cfg(test)]

@@ -78,6 +78,9 @@ pub struct EdgeServer {
     pub base_version: u64,
     /// Set when the budget is exhausted (or the edge fail-stopped).
     pub retired: bool,
+    /// Total local iterations executed so far (checkpoint/rejoin
+    /// fast-forward bookkeeping).
+    pub iters_done: u64,
     /// Per-edge RNG stream (variable-cost sampling).
     pub rng: Rng,
     // Scratch batch buffers (reused across iterations — no allocation in
@@ -107,6 +110,7 @@ impl EdgeServer {
             spent: 0.0,
             base_version: 0,
             retired: false,
+            iters_done: 0,
             rng,
             xbuf: Vec::new(),
             ybuf: Vec::new(),
@@ -171,6 +175,7 @@ impl EdgeServer {
             let measured_ms = t0.elapsed().as_secs_f64() * 1e3;
             total_cost += cost.sample_comp(self.slowdown, measured_ms, &mut self.rng);
         }
+        self.iters_done += tau as u64;
         Ok(LocalRound {
             comp_cost: total_cost,
             train_signal: signal / tau as f64,
@@ -191,6 +196,7 @@ impl EdgeServer {
         for _ in 0..iterations {
             let _ = cost.sample_comp(self.slowdown, 0.0, &mut self.rng);
         }
+        self.iters_done += iterations;
     }
 
     /// Adopt the global model (download at a global update).

@@ -7,15 +7,19 @@ use anyhow::{anyhow, Result};
 use ol4el::config::{legacy_strategy, PartitionKind, RunConfig};
 use ol4el::coordinator::observer::from_fn;
 use ol4el::coordinator::utility::UtilityKind;
-use ol4el::coordinator::{ExperimentBuilder, RunEvent, RunResult};
+use ol4el::coordinator::{checkpoint, ExperimentBuilder, RunEvent, RunResult, Session};
 use ol4el::harness::{self, EngineKind, SweepOpts};
 use ol4el::model::{Learner as _, TaskSpec};
-use ol4el::net::wire::{accept_fleet, bench_loopback, JoinOpts, WireServer};
+use ol4el::net::wire::{
+    accept_fleet_with, bench_loopback, serve_checkpoint_from, JoinOpts, WireServer,
+};
 use ol4el::net::{ChurnSpec, FleetSim, NetworkSpec};
 use ol4el::sim::cost::CostMode;
 use ol4el::sim::hetero::HeteroProfile;
 use ol4el::strategy::StrategySpec;
-use ol4el::util::cli::{Args, Cli, BANDIT_GRAMMAR, STRATEGY_GRAMMAR, WIRE_GRAMMAR};
+use ol4el::util::cli::{
+    Args, Cli, BANDIT_GRAMMAR, CHECKPOINT_GRAMMAR, STRATEGY_GRAMMAR, WIRE_GRAMMAR,
+};
 use ol4el::util::json::Json;
 use ol4el::util::table::{f, Table};
 
@@ -154,6 +158,21 @@ fn train_cli() -> Cli {
             "1",
             "record every Nth span (flush snapshots are never sampled)",
         )
+        .opt(
+            "checkpoint-every",
+            "0",
+            "write a resumable snapshot every N global updates (0 = off)",
+        )
+        .opt(
+            "checkpoint-to",
+            "checkpoint.json",
+            "where --checkpoint-every writes the snapshot (atomic replace)",
+        )
+        .opt_no_default(
+            "resume",
+            "resume from a checkpoint file; the snapshot's embedded config is \
+             the truth (run-shape flags must match it or stay at defaults)",
+        )
         .switch("trace", "print every trace point")
         .switch("live", "stream global updates to stderr as they happen")
         .switch("json", "emit the result as JSON")
@@ -285,15 +304,68 @@ fn parse_churn(spec: &str) -> Result<ChurnSpec> {
     })
 }
 
+/// Load the `--resume` checkpoint document and refuse a flag set that
+/// contradicts it: the snapshot's embedded config is the truth on resume,
+/// so the run-shape flags must either spell out the checkpoint's own
+/// config (fingerprint-equal) or stay untouched at the parser defaults.
+/// Flags outside [`RunConfig`] (`--engine`, `--telemetry`, `--json`, the
+/// checkpoint flags themselves) are free to vary.
+fn load_resume(a: &Args, path: &str, defaults: &Cli) -> Result<Json> {
+    let doc = checkpoint::load(std::path::Path::new(path))
+        .map_err(|e| anyhow!("loading --resume '{path}': {e}"))?;
+    let flags = builder_from_args(a)?.build()?.into_config().fingerprint();
+    let ckpt = checkpoint::config_of(&doc)?.fingerprint();
+    if flags != ckpt {
+        let empty = defaults
+            .parse(&[])
+            .map_err(|e| anyhow!(e))?
+            .ok_or_else(|| anyhow!("--help in an empty argv"))?;
+        let baseline = builder_from_args(&empty)?.build()?.into_config().fingerprint();
+        if flags != baseline {
+            return Err(anyhow!(
+                "--resume '{path}': the flag set contradicts the checkpoint's \
+                 config; drop the run-shape flags (the snapshot carries the \
+                 full config) or pass exactly the flags the checkpointed run \
+                 used"
+            ));
+        }
+    }
+    Ok(doc)
+}
+
+/// Shared `--checkpoint-every` / `--checkpoint-to` wiring for `train` and
+/// `coordinator serve`: arm the session's periodic snapshot writer.
+/// Returns the armed path (`None` when checkpointing is off).
+fn checkpoint_from_args(a: &Args, session: &mut Session<'_>) -> Result<Option<String>> {
+    let every = a.u64("checkpoint-every").map_err(|e| anyhow!(e))?;
+    if every == 0 {
+        return Ok(None);
+    }
+    let path = a.str("checkpoint-to");
+    session.set_checkpoint(every, &path);
+    Ok(Some(path))
+}
+
 fn cmd_train(argv: &[String]) -> Result<()> {
     let Some(a) = train_cli().parse(argv).map_err(|e| anyhow!(e))? else {
         return Ok(());
     };
-    let mut builder = builder_from_args(&a)?;
+    let engine_kind =
+        EngineKind::parse(&a.str("engine")).ok_or_else(|| anyhow!("bad --engine"))?;
+    let engine = harness::build_engine(engine_kind, &a.str("artifacts"))?;
+    let mut session = match a.get("resume") {
+        Some(path) => {
+            let doc = load_resume(&a, path, &train_cli())?;
+            Session::resume(&doc, engine.as_ref())?
+        }
+        None => builder_from_args(&a)?.build()?.session(engine.as_ref())?,
+    };
+    let cfg = session.cfg().clone();
+    checkpoint_from_args(&a, &mut session)?;
     if a.flag("live") {
         // Streaming observer: narrate every recorded global update and
         // every edge retirement while the run is still going.
-        builder = builder.observe(from_fn(|ev: &RunEvent| match ev {
+        session.observe(from_fn(|ev: &RunEvent| match ev {
             RunEvent::GlobalUpdate { point } => eprintln!(
                 "[live] t={:>8.0}ms  spent={:>7.0}ms  updates={:>5}  metric={:.4}",
                 point.wall_ms, point.mean_spent, point.updates, point.metric
@@ -304,24 +376,20 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             _ => {}
         }));
     }
-    let exp = builder.build()?;
-    let cfg = exp.config().clone();
-    let engine_kind =
-        EngineKind::parse(&a.str("engine")).ok_or_else(|| anyhow!("bad --engine"))?;
-    let engine = harness::build_engine(engine_kind, &a.str("artifacts"))?;
 
     eprintln!(
-        "[ol4el] task={} strategy={} edges={} H={} budget={}ms engine={}",
+        "[ol4el] task={} strategy={} edges={} H={} budget={}ms engine={}{}",
         cfg.task.name(),
         cfg.strategy.label(),
         cfg.n_edges,
         cfg.hetero,
         cfg.budget,
-        engine_kind.name()
+        engine_kind.name(),
+        if a.get("resume").is_some() { " (resumed)" } else { "" }
     );
     let tele = telemetry_from_args(&a)?;
     let t0 = std::time::Instant::now();
-    let r = exp.run(engine.as_ref())?;
+    let r = session.run()?;
     let dt = t0.elapsed().as_secs_f64();
     let out = report_run(&a, &cfg, &r, dt);
     telemetry_finish(tele);
@@ -418,6 +486,8 @@ fn coordinator_usage() -> String {
            stats    scrape one live telemetry snapshot from a running coordinator\n\
          \n\
          Grammar: {WIRE_GRAMMAR}\n\
+         \n\
+         Checkpoints: {CHECKPOINT_GRAMMAR}\n\
          \n\
          Run `ol4el coordinator serve --help` for flags.\n"
     )
@@ -552,8 +622,18 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let Some(a) = serve_cli().parse(argv).map_err(|e| anyhow!(e))? else {
         return Ok(());
     };
-    let exp = builder_from_args(&a)?.build()?;
-    let cfg = exp.config().clone();
+    let engine_kind =
+        EngineKind::parse(&a.str("engine")).ok_or_else(|| anyhow!("bad --engine"))?;
+    let engine = harness::build_engine(engine_kind, &a.str("artifacts"))?;
+    let resuming = a.get("resume").is_some();
+    let mut session = match a.get("resume") {
+        Some(path) => {
+            let doc = load_resume(&a, path, &serve_cli())?;
+            Session::resume(&doc, engine.as_ref())?
+        }
+        None => builder_from_args(&a)?.build()?.session(engine.as_ref())?,
+    };
+    let cfg = session.cfg().clone();
     if !cfg.network.is_ideal() || !cfg.churn.is_none() {
         return Err(anyhow!(
             "coordinator serve runs on a real network: --network must stay 'ideal' and \
@@ -561,9 +641,6 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
              real latency and real crashes come in over the wire)"
         ));
     }
-    let engine_kind =
-        EngineKind::parse(&a.str("engine")).ok_or_else(|| anyhow!("bad --engine"))?;
-    let engine = harness::build_engine(engine_kind, &a.str("artifacts"))?;
     let addr = a.str("addr");
     let listener =
         std::net::TcpListener::bind(&addr).map_err(|e| anyhow!("binding {addr}: {e}"))?;
@@ -571,38 +648,63 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .local_addr()
         .map_err(|e| anyhow!("local addr: {e}"))?;
     eprintln!(
-        "[ol4el] coordinator: listening on {local} for {} edges (task={} strategy={})",
+        "[ol4el] coordinator: listening on {local} for {} edges (task={} strategy={}{})",
         cfg.n_edges,
         cfg.task.name(),
-        cfg.strategy.label()
+        cfg.strategy.label(),
+        if resuming { ", resumed" } else { "" }
     );
-    let fleet =
-        accept_fleet(&listener, cfg.n_edges).map_err(|e| anyhow!("gathering the fleet: {e}"))?;
-    let mut session = exp.session(engine.as_ref())?;
-    // Hello-reported slowdown overrides replace the hetero profile's
-    // value for that edge. The strategy prices arms off the slowdown
-    // vector, so rebuild it before any select sees the stale profile.
-    let mut overridden = false;
-    for (i, p) in fleet.iter().enumerate() {
-        if let Some(s) = p.slowdown {
-            session.world.slowdowns[i] = s;
-            session.world.edges[i].slowdown = s;
-            overridden = true;
+    let fleet = accept_fleet_with(&listener, cfg.n_edges, resuming)
+        .map_err(|e| anyhow!("gathering the fleet: {e}"))?;
+    if resuming {
+        // On --resume the checkpoint's slowdown vector is the truth:
+        // Hello overrides are ignored so the restored strategy state
+        // keeps pricing the arms it was trained on.
+        for (i, p) in fleet.iter().enumerate() {
+            if p.slowdown.is_some_and(|s| s != session.world.slowdowns[i]) {
+                eprintln!(
+                    "[ol4el] coordinator: edge {i} reported a slowdown override — \
+                     ignored; the checkpoint pins the slowdown vector"
+                );
+            }
+        }
+    } else {
+        // Hello-reported slowdown overrides replace the hetero profile's
+        // value for that edge. The strategy prices arms off the slowdown
+        // vector, so rebuild it before any select sees the stale profile.
+        let mut overridden = false;
+        for (i, p) in fleet.iter().enumerate() {
+            if let Some(s) = p.slowdown {
+                session.world.slowdowns[i] = s;
+                session.world.edges[i].slowdown = s;
+                overridden = true;
+            }
+        }
+        if overridden {
+            session.strategy = ol4el::strategy::build(&cfg, &session.world.slowdowns)?;
         }
     }
-    if overridden {
-        session.strategy = ol4el::strategy::build(&cfg, &session.world.slowdowns)?;
-    }
+    // The banked iteration count each edge must fast-forward past on
+    // welcome: all zeros on a fresh run, the checkpoint's `iters_done`
+    // on a --resume.
+    let iters: Vec<u64> = session.world.edges.iter().map(|e| e.iters_done).collect();
     let server = WireServer::start(
         listener,
         fleet,
         cfg.to_json(),
         session.world.slowdowns.clone(),
+        iters,
         std::time::Duration::from_millis(a.u64("round-timeout-ms").map_err(|e| anyhow!(e))?),
         std::time::Duration::from_millis(a.u64("rejoin-window-ms").map_err(|e| anyhow!(e))?),
     )
     .map_err(|e| anyhow!("starting the wire server: {e}"))?;
     session.set_remote(Box::new(server));
+    if let Some(path) = checkpoint_from_args(&a, &mut session)? {
+        // Publish the snapshot file through the wire's CheckpointReq
+        // endpoint so a restarted coordinator (or a curious client) can
+        // fetch the latest document without filesystem access.
+        serve_checkpoint_from(path);
+    }
     if a.flag("live") {
         session.observe(from_fn(|ev: &RunEvent| match ev {
             RunEvent::GlobalUpdate { point } => eprintln!(

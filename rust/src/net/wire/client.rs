@@ -17,7 +17,7 @@
 //! stays bit-identical to a crash-free run.
 
 use std::net::TcpStream;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -238,6 +238,38 @@ fn serve_connection(
             }
             Err(WireError::Eof) | Err(WireError::Io(_)) => return dropped(my_id),
             Err(e) => return Err(anyhow!("protocol error: {e}")),
+        }
+    }
+}
+
+/// Fetch the serving coordinator's latest checkpoint document: connect,
+/// send `CheckpointReq`, read one `Checkpoint` frame back, hang up (the
+/// pre-`Hello` endpoint, like `coordinator stats`). `Json::Null` means
+/// the coordinator has not written a checkpoint yet.
+pub fn fetch_checkpoint(addr: &str, timeout: Duration) -> Result<crate::util::json::Json> {
+    let stream = TcpStream::connect(addr).map_err(|e| anyhow!("connecting {addr}: {e}"))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(timeout)).ok();
+    let mut write_half = stream
+        .try_clone()
+        .map_err(|e| anyhow!("cloning socket: {e}"))?;
+    let mut read_half = stream;
+    write_frame(&mut write_half, &Frame::CheckpointReq)
+        .map_err(|e| anyhow!("checkpoint_req: {e}"))?;
+    let mut fr = FrameReader::new();
+    let deadline = Instant::now() + timeout;
+    loop {
+        match fr.read_frame(&mut read_half) {
+            Ok(Frame::Checkpoint { doc }) => return Ok(doc),
+            Ok(_) => {} // a stray Pong etc.; keep waiting for the reply
+            Err(WireError::Timeout) => {}
+            Err(e) => return Err(anyhow!("fetching checkpoint from {addr}: {e}")),
+        }
+        if Instant::now() >= deadline {
+            bail!(
+                "no Checkpoint frame from {addr} within {}ms",
+                timeout.as_millis()
+            );
         }
     }
 }

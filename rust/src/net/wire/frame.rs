@@ -146,6 +146,17 @@ pub enum Frame {
         /// The snapshot (counters / gauges / histogram summaries).
         metrics: Json,
     },
+    /// Client → coordinator: request the coordinator's latest checkpoint
+    /// document (the service-mode snapshot endpoint — answered even
+    /// before any `Hello`, like `Stats`).
+    CheckpointReq,
+    /// Coordinator → client: the latest checkpoint document, or
+    /// `Json::Null` when checkpointing is disabled or none has been
+    /// written yet.
+    Checkpoint {
+        /// The versioned checkpoint document (`coordinator::checkpoint`).
+        doc: Json,
+    },
     /// A tunneled simulator [`Message`] — the [`Transport`] payload
     /// carried by [`TcpTransport`](super::TcpTransport).
     ///
@@ -214,6 +225,11 @@ impl Frame {
                 ("t", Json::str("stats_reply")),
                 ("metrics", metrics.clone()),
             ]),
+            Frame::CheckpointReq => Json::obj(vec![("t", Json::str("checkpoint_req"))]),
+            Frame::Checkpoint { doc } => Json::obj(vec![
+                ("t", Json::str("checkpoint")),
+                ("doc", doc.clone()),
+            ]),
             Frame::Msg(m) => Json::obj(vec![("t", Json::str("msg")), ("msg", message_to_json(m))]),
         }
     }
@@ -265,6 +281,10 @@ impl Frame {
                     .get("metrics")
                     .cloned()
                     .ok_or_else(|| bad("stats_reply.metrics"))?,
+            }),
+            "checkpoint_req" => Ok(Frame::CheckpointReq),
+            "checkpoint" => Ok(Frame::Checkpoint {
+                doc: j.get("doc").cloned().ok_or_else(|| bad("checkpoint.doc"))?,
             }),
             "msg" => Ok(Frame::Msg(message_from_json(
                 j.get("msg").ok_or_else(|| bad("msg frame has no body"))?,
@@ -535,6 +555,14 @@ mod tests {
                     "counters",
                     Json::obj(vec![("session.rounds", Json::num(42.0))]),
                 )]),
+            },
+            Frame::CheckpointReq,
+            Frame::Checkpoint { doc: Json::Null },
+            Frame::Checkpoint {
+                doc: Json::obj(vec![
+                    ("version", Json::num(1.0)),
+                    ("updates", Json::str("0xffffffffffffffff")),
+                ]),
             },
         ];
         for f in &frames {

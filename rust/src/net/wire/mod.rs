@@ -36,7 +36,9 @@ pub mod frame;
 pub mod server;
 pub mod tcp;
 
-pub use client::{join, JoinOpts};
+pub use client::{fetch_checkpoint, join, JoinOpts};
 pub use frame::{write_frame, Frame, FrameReader, WireError, MAX_FRAME, PROTO_VERSION};
-pub use server::{accept_fleet, PendingEdge, WireServer};
+pub use server::{
+    accept_fleet, accept_fleet_with, serve_checkpoint_from, PendingEdge, WireServer,
+};
 pub use tcp::{bench_loopback, echo_once, TcpTransport, WireBench};

@@ -24,8 +24,9 @@
 //! refusing fresh mid-run joins.
 
 use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -38,6 +39,28 @@ use super::frame::{write_frame, Frame, FrameReader, WireError, PROTO_VERSION};
 
 /// How long a connecting edge gets to speak its `Hello`.
 const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Where the serving coordinator writes its periodic checkpoints; the
+/// `CheckpointReq` endpoint answers from this file (the atomic
+/// write-and-rename in `coordinator::checkpoint::save` guarantees a
+/// reader never sees a torn document).
+static CKPT_PATH: OnceLock<PathBuf> = OnceLock::new();
+
+/// Publish the checkpoint file the `CheckpointReq` endpoint serves.
+/// Called once by `coordinator serve` before accepting connections;
+/// later calls are no-ops.
+pub fn serve_checkpoint_from(path: impl Into<PathBuf>) {
+    let _ = CKPT_PATH.set(path.into());
+}
+
+/// The latest published checkpoint document, or `Json::Null` when
+/// checkpointing is off or no document has been written yet.
+fn latest_checkpoint() -> Json {
+    CKPT_PATH
+        .get()
+        .and_then(|p| crate::coordinator::checkpoint::load(p).ok())
+        .unwrap_or(Json::Null)
+}
 
 /// A connection's shared write half.
 type Writer = Arc<Mutex<TcpStream>>;
@@ -88,6 +111,16 @@ fn spawn_reader(mut read_half: TcpStream, writer: Writer) -> Receiver<Inbound> {
                         return;
                     }
                 }
+                Ok(Frame::CheckpointReq) => {
+                    // The snapshot endpoint, in-session flavor.
+                    let reply = Frame::Checkpoint {
+                        doc: latest_checkpoint(),
+                    };
+                    if write_frame(&mut *lock(&writer), &reply).is_err() {
+                        let _ = tx.send(Inbound::Disconnected);
+                        return;
+                    }
+                }
                 Ok(f) => {
                     if tx.send(Inbound::Frame(f)).is_err() {
                         return; // the edge was replaced; this link is dead
@@ -125,6 +158,16 @@ fn handshake(stream: TcpStream) -> Option<(Frame, Link)> {
         let _ = write_frame(&mut w, &reply);
         return None;
     }
+    if matches!(hello, Frame::CheckpointReq) {
+        // The snapshot endpoint, pre-Hello flavor: ask, read one
+        // `Checkpoint` frame, hang up.
+        let reply = Frame::Checkpoint {
+            doc: latest_checkpoint(),
+        };
+        let mut w = &stream;
+        let _ = write_frame(&mut w, &reply);
+        return None;
+    }
     let ok = matches!(hello, Frame::Hello { proto, .. } if proto == PROTO_VERSION);
     if !ok {
         eprintln!("[ol4el] wire: refusing a connection that is not a proto-{PROTO_VERSION} hello");
@@ -147,8 +190,25 @@ pub struct PendingEdge {
 /// ids `0..n_edges` in arrival order. Rejoin hellos and wrong-protocol
 /// connections are refused (dropped) during the gather phase.
 pub fn accept_fleet(listener: &TcpListener, n_edges: usize) -> Result<Vec<PendingEdge>, WireError> {
-    let mut fleet = Vec::with_capacity(n_edges);
-    while fleet.len() < n_edges {
+    accept_fleet_with(listener, n_edges, false)
+}
+
+/// [`accept_fleet`] with the resume handshake: when `resume` is set,
+/// `Hello{rejoin: Some(id)}` is *accepted* during the gather and slots
+/// the edge back at its claimed id — this is how a killed-and-restarted
+/// `coordinator serve --resume` re-gathers the surviving `edge join`
+/// processes, which reconnect claiming their old identities. Fresh
+/// `Hello`s fill the unclaimed slots in arrival order, so the returned
+/// fleet is always in edge-id order.
+pub fn accept_fleet_with(
+    listener: &TcpListener,
+    n_edges: usize,
+    resume: bool,
+) -> Result<Vec<PendingEdge>, WireError> {
+    let mut slots: Vec<Option<PendingEdge>> = (0..n_edges).map(|_| None).collect();
+    let mut fresh: Vec<PendingEdge> = Vec::new();
+    let mut gathered = 0usize;
+    while gathered < n_edges {
         let (stream, peer) = listener.accept()?;
         let Some((hello, link)) = handshake(stream) else {
             continue;
@@ -165,18 +225,36 @@ pub fn accept_fleet(listener: &TcpListener, n_edges: usize) -> Result<Vec<Pendin
                         continue;
                     }
                 }
-                eprintln!(
-                    "[ol4el] wire: edge {} joined from {peer}",
-                    fleet.len()
-                );
-                fleet.push(PendingEdge { link, slowdown });
+                eprintln!("[ol4el] wire: edge {} joined from {peer}", fresh.len());
+                fresh.push(PendingEdge { link, slowdown });
+                gathered += 1;
+            }
+            Frame::Hello {
+                rejoin: Some(id),
+                slowdown,
+                ..
+            } if resume && id < n_edges => {
+                if slots[id].is_some() {
+                    eprintln!("[ol4el] wire: refusing {peer}: edge {id} already reclaimed");
+                    continue;
+                }
+                eprintln!("[ol4el] wire: edge {id} reclaimed by {peer} (resume)");
+                slots[id] = Some(PendingEdge { link, slowdown });
+                gathered += 1;
             }
             _ => {
                 eprintln!("[ol4el] wire: refusing rejoin from {peer} before the run starts");
             }
         }
     }
-    Ok(fleet)
+    // Fresh joiners fill the unclaimed slots in arrival order (in a
+    // non-resume gather every slot is unclaimed, so this is exactly the
+    // legacy arrival-order assignment).
+    let mut fresh = fresh.into_iter();
+    Ok(slots
+        .into_iter()
+        .map(|s| s.unwrap_or_else(|| fresh.next().expect("gather counted the fleet")))
+        .collect())
 }
 
 /// Keep accepting after the fleet gathered: route `Hello{rejoin}`
@@ -236,24 +314,28 @@ pub struct WireServer {
 }
 
 impl WireServer {
-    /// Welcome the gathered fleet (edge id, config, effective slowdown),
-    /// hand the listener to the rejoin-router thread, and return the
-    /// runner to install with `Session::set_remote`.
+    /// Welcome the gathered fleet (edge id, config, effective slowdown,
+    /// and the banked iteration count each edge fast-forwards past —
+    /// all zeros on a fresh run, the checkpoint's `iters_done` on a
+    /// `--resume`), hand the listener to the rejoin-router thread, and
+    /// return the runner to install with `Session::set_remote`.
     pub fn start(
         listener: TcpListener,
         fleet: Vec<PendingEdge>,
         config: Json,
         slowdowns: Vec<f64>,
+        iters: Vec<u64>,
         round_timeout: Duration,
         rejoin_window: Duration,
     ) -> Result<WireServer, WireError> {
         assert_eq!(fleet.len(), slowdowns.len(), "one slowdown per edge");
+        assert_eq!(fleet.len(), iters.len(), "one iteration count per edge");
         let mut links = Vec::with_capacity(fleet.len());
         for (edge, pending) in fleet.into_iter().enumerate() {
             let welcome = Frame::Welcome {
                 edge,
                 config: config.clone(),
-                iters_done: 0,
+                iters_done: iters[edge],
                 slowdown: slowdowns[edge],
             };
             write_frame(&mut *lock(&pending.link.writer), &welcome)?;
@@ -263,9 +345,10 @@ impl WireServer {
         let n = links.len();
         spawn_rejoin_listener(listener, n, tx);
         Ok(WireServer {
-            state: (0..n)
-                .map(|_| EdgeState {
-                    iters_done: 0,
+            state: iters
+                .into_iter()
+                .map(|iters_done| EdgeState {
+                    iters_done,
                     gone: false,
                     left: false,
                 })

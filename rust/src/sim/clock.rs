@@ -212,6 +212,50 @@ impl<T> EventQueue<T> {
             self.now = time;
         }
     }
+
+    /// Next sequence number that will be assigned (checkpoint snapshot).
+    /// Restoring this alongside [`entries`](EventQueue::entries) preserves
+    /// the tie-break order of every event scheduled after the restore.
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+}
+
+impl<T: Clone> EventQueue<T> {
+    /// The scheduled events as `(time, seq, payload)` triples in pop
+    /// order — a checkpoint snapshot of the pending work. `popped` and
+    /// `peak_len` are throughput accounting, not simulation state, and are
+    /// deliberately not part of the snapshot.
+    pub fn entries(&self) -> Vec<(f64, u64, T)> {
+        let mut evs: Vec<&Event<T>> = self.heap.iter().map(|r| &r.0).collect();
+        evs.sort();
+        evs.iter()
+            .map(|e| (e.time, e.seq, e.payload.clone()))
+            .collect()
+    }
+
+    /// Rebuild a queue from a checkpoint snapshot: the clock, the next
+    /// sequence number, and the pending events with their ORIGINAL
+    /// sequence numbers (so ties still break exactly as they would have in
+    /// the uninterrupted run). `popped`/`peak_len` restart at zero.
+    pub fn restore(now: f64, seq: u64, events: Vec<(f64, u64, T)>) -> Self {
+        let mut q = EventQueue {
+            heap: BinaryHeap::with_capacity(events.len()),
+            seq,
+            now,
+            popped: 0,
+            peak: 0,
+        };
+        for (time, ev_seq, payload) in events {
+            q.heap.push(std::cmp::Reverse(Event {
+                time,
+                seq: ev_seq,
+                payload,
+            }));
+        }
+        q.peak = q.heap.len();
+        q
+    }
 }
 
 #[cfg(test)]
@@ -361,6 +405,27 @@ mod tests {
         assert!(q.pop_before(3.0).is_none(), "strict bound excludes 3.0");
         assert_eq!(q.pop_through(3.0).unwrap().payload, 3);
         assert!(q.next_time().is_none());
+    }
+
+    #[test]
+    fn snapshot_restore_preserves_order_and_ties() {
+        let mut q = EventQueue::new();
+        q.push(2.0, 10);
+        q.push(1.0, 11);
+        q.push(2.0, 12); // ties with the first push; original seq wins
+        q.pop(); // consume the 1.0 event so now > 0
+        let snap = (q.now(), q.seq(), q.entries());
+        let mut twin: EventQueue<usize> = EventQueue::restore(snap.0, snap.1, snap.2);
+        assert_eq!(twin.now(), q.now());
+        // New pushes in both queues get the same seq, so future ties break
+        // identically too.
+        q.push(2.0, 13);
+        twin.push(2.0, 13);
+        let a: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|e| e.payload).collect();
+        let b: Vec<usize> = std::iter::from_fn(|| twin.pop()).map(|e| e.payload).collect();
+        assert_eq!(a, vec![10, 12, 13]);
+        assert_eq!(a, b);
+        assert_eq!(twin.now(), q.now());
     }
 
     #[test]

@@ -30,6 +30,7 @@ use anyhow::Result;
 
 use crate::strategy::registry::{always_valid, StrategyFactory, StrategyParams, StrategySpec};
 use crate::strategy::{RoundObservation, Strategy, StrategyCtx};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::stats::Ewma;
 
@@ -186,6 +187,48 @@ impl Strategy for AcSyncStrategy {
 
     fn tau_histogram(&self) -> Vec<u64> {
         self.pulls.clone()
+    }
+
+    fn snapshot(&self) -> Result<Json> {
+        let opt = |v: Option<f64>| v.map(Json::num).unwrap_or(Json::Null);
+        Ok(Json::obj(vec![
+            ("delta_hat", opt(self.delta_hat.get())),
+            ("beta_hat", opt(self.beta_hat.get())),
+            ("last_cost", Json::num(self.last_cost)),
+            ("current_tau", Json::num(self.current_tau as f64)),
+            ("pulls", Json::arr(self.pulls.iter().map(|&p| Json::hex(p)))),
+        ]))
+    }
+
+    fn restore(&mut self, snap: &Json) -> Result<()> {
+        let bail = |what: &str| anyhow::anyhow!("ac-sync snapshot missing/bad '{what}'");
+        self.delta_hat
+            .set(snap.get("delta_hat").and_then(Json::as_f64));
+        self.beta_hat.set(snap.get("beta_hat").and_then(Json::as_f64));
+        self.last_cost = snap
+            .get("last_cost")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| bail("last_cost"))?;
+        self.current_tau = snap
+            .get("current_tau")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| bail("current_tau"))?;
+        let pulls = snap
+            .get("pulls")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bail("pulls"))?;
+        if pulls.len() != self.pulls.len() {
+            return Err(anyhow::anyhow!(
+                "ac-sync snapshot has {} arms, expected {}",
+                pulls.len(),
+                self.pulls.len()
+            ));
+        }
+        self.pulls = pulls
+            .iter()
+            .map(|j| j.as_hex_u64().ok_or_else(|| bail("pulls")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(())
     }
 }
 

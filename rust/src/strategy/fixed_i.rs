@@ -9,6 +9,7 @@ use anyhow::{anyhow, Result};
 use crate::config::RunConfig;
 use crate::strategy::registry::{StrategyFactory, StrategyParams, StrategySpec};
 use crate::strategy::{Strategy, StrategyCtx};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// The legacy default interval (`RunConfig::fixed_interval` used to
@@ -145,6 +146,48 @@ impl Strategy for FixedIStrategy {
 
     fn tau_histogram(&self) -> Vec<u64> {
         self.pulls.clone()
+    }
+
+    fn snapshot(&self) -> Result<Json> {
+        Ok(Json::obj(vec![
+            ("pulls", Json::arr(self.pulls.iter().map(|&p| Json::hex(p)))),
+            (
+                "last_cost",
+                Json::arr(self.last_cost.iter().map(|&c| Json::num(c))),
+            ),
+        ]))
+    }
+
+    fn restore(&mut self, snap: &Json) -> Result<()> {
+        let pulls = snap
+            .get("pulls")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("fixed-i snapshot missing 'pulls'"))?;
+        if pulls.len() != self.pulls.len() {
+            return Err(anyhow!(
+                "fixed-i snapshot has {} arms, expected {}",
+                pulls.len(),
+                self.pulls.len()
+            ));
+        }
+        self.pulls = pulls
+            .iter()
+            .map(|j| {
+                j.as_hex_u64()
+                    .ok_or_else(|| anyhow!("bad pull count in fixed-i snapshot"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        self.last_cost = snap
+            .get("last_cost")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("fixed-i snapshot missing 'last_cost'"))?
+            .iter()
+            .map(|j| {
+                j.as_f64()
+                    .ok_or_else(|| anyhow!("bad cost in fixed-i snapshot"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(())
     }
 }
 

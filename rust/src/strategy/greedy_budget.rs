@@ -18,6 +18,7 @@ use anyhow::{anyhow, Result};
 
 use crate::strategy::registry::{always_valid, StrategyFactory, StrategyParams, StrategySpec};
 use crate::strategy::{Strategy, StrategyCtx};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// The registry entry for `greedy-budget`.
@@ -139,6 +140,37 @@ impl Strategy for GreedyBudgetStrategy {
 
     fn tau_histogram(&self) -> Vec<u64> {
         self.pulls.clone()
+    }
+
+    fn snapshot(&self) -> Result<Json> {
+        // The arm-cost tables and deadline are rebuilt from the config on
+        // resume; the pull histogram is the only mutable state.
+        Ok(Json::obj(vec![(
+            "pulls",
+            Json::arr(self.pulls.iter().map(|&p| Json::hex(p))),
+        )]))
+    }
+
+    fn restore(&mut self, snap: &Json) -> Result<()> {
+        let pulls = snap
+            .get("pulls")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("greedy-budget snapshot missing 'pulls'"))?;
+        if pulls.len() != self.pulls.len() {
+            return Err(anyhow!(
+                "greedy-budget snapshot has {} arms, expected {}",
+                pulls.len(),
+                self.pulls.len()
+            ));
+        }
+        self.pulls = pulls
+            .iter()
+            .map(|j| {
+                j.as_hex_u64()
+                    .ok_or_else(|| anyhow!("bad pull count in greedy-budget snapshot"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(())
     }
 }
 

@@ -33,6 +33,20 @@
 //!   instance built for one edge ([`build_edge`]) behaves exactly like
 //!   that edge's slice of a fleet-wide instance ([`build`]).
 //! * `observe`/`feedback` must be pure state updates (no RNG).
+//!
+//! ## Checkpoint obligations
+//!
+//! The checkpoint/resume service mode serializes strategies through
+//! [`Strategy::snapshot`] / [`Strategy::restore`]. The registry contract:
+//! a restored strategy is built FRESH from the run config (so immutable
+//! structure — arm-cost tables, intervals, deadlines — is reconstructed,
+//! not serialized), then `restore` overlays the mutable state the
+//! snapshot captured. After restore, `select`/`feedback` must behave
+//! bit-identically to the instance the snapshot was taken from. The
+//! default implementations ERROR: a stateful out-of-tree strategy that
+//! has not opted in cannot silently produce checkpoints that resume
+//! wrong — checkpointing is unavailable until it implements the pair.
+//! All four in-tree strategies implement it.
 
 pub mod ac_sync;
 pub mod fixed_i;
@@ -103,6 +117,31 @@ pub trait Strategy: Send {
 
     /// Pull histogram over τ (diagnostics; arms indexed τ-1).
     fn tau_histogram(&self) -> Vec<u64>;
+
+    /// Serialize this strategy's mutable state (posteriors, pull counts,
+    /// learned costs) as a checkpoint fragment. See the module docs'
+    /// checkpoint obligations; the default ERRORS so stateful plugins
+    /// that do not opt in cannot produce silently-wrong checkpoints.
+    fn snapshot(&self) -> anyhow::Result<crate::util::json::Json> {
+        Err(anyhow::anyhow!(
+            "strategy '{}' does not implement snapshot(); \
+             checkpoint/resume is unavailable for this strategy",
+            self.name()
+        ))
+    }
+
+    /// Restore a [`snapshot`](Strategy::snapshot) fragment into a freshly
+    /// built instance of the same spec over the same fleet. After a
+    /// successful restore, behavior is bit-identical to the instance the
+    /// snapshot was taken from. The default ERRORS (see
+    /// [`snapshot`](Strategy::snapshot)).
+    fn restore(&mut self, _snap: &crate::util::json::Json) -> anyhow::Result<()> {
+        Err(anyhow::anyhow!(
+            "strategy '{}' does not implement restore(); \
+             checkpoint/resume is unavailable for this strategy",
+            self.name()
+        ))
+    }
 }
 
 /// Everything a [`StrategyFactory`] build needs: the run config (cost

@@ -12,6 +12,7 @@ use anyhow::Result;
 use crate::bandit::{self, BanditSpec, BudgetedBandit, DEFAULT_EPSILON};
 use crate::strategy::registry::{always_valid, StrategyFactory, StrategyParams};
 use crate::strategy::{Strategy, StrategyCtx};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// The registry entry for `ol4el`.
@@ -142,6 +143,34 @@ impl Strategy for Ol4elStrategy {
             }
         }
         h
+    }
+
+    fn snapshot(&self) -> Result<Json> {
+        let bandits = self
+            .bandits
+            .iter()
+            .map(|b| b.snapshot())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Json::obj(vec![("bandits", Json::Arr(bandits))]))
+    }
+
+    fn restore(&mut self, snap: &Json) -> Result<()> {
+        let arr = snap
+            .get("bandits")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("ol4el snapshot missing 'bandits'"))?;
+        if arr.len() != self.bandits.len() {
+            anyhow::bail!(
+                "ol4el snapshot has {} bandit(s), this instance has {} \
+                 (fleet shape changed between checkpoint and resume?)",
+                arr.len(),
+                self.bandits.len()
+            );
+        }
+        for (b, s) in self.bandits.iter_mut().zip(arr) {
+            b.restore(s)?;
+        }
+        Ok(())
     }
 }
 

@@ -93,6 +93,29 @@ pub fn property<T: std::fmt::Debug>(
     }
 }
 
+/// Poll `cond` every `interval` until it returns true or `deadline`
+/// elapses; returns whether the condition held before the deadline.
+///
+/// The e2e tests' replacement for fixed sleeps: a process that is ready
+/// early is detected early, a slow CI machine gets the whole deadline
+/// before anything is declared broken.
+pub fn poll_until(
+    deadline: std::time::Duration,
+    interval: std::time::Duration,
+    mut cond: impl FnMut() -> bool,
+) -> bool {
+    let t0 = std::time::Instant::now();
+    loop {
+        if cond() {
+            return true;
+        }
+        if t0.elapsed() >= deadline {
+            return false;
+        }
+        std::thread::sleep(interval);
+    }
+}
+
 /// Assert-like helper for property bodies.
 #[macro_export]
 macro_rules! prop_assert {

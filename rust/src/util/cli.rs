@@ -46,6 +46,15 @@ pub const WIRE_GRAMMAR: &str =
      join := 'edge join' addr ['--slowdown' S>=1] ['--leave-after' N] \
      ['--rejoin' ID] ['--drop-round' N]";
 
+/// The checkpoint/resume grammar one-liner shared by `ol4el coordinator
+/// --help` and the checkpoint flag helps (the full productions live in
+/// `docs/GRAMMAR.md`, embedded in `ol4el --help` via [`SPEC_GRAMMAR`]).
+/// Single-sourced here so the helps and the docs cannot drift —
+/// `tests/cli_help.rs` asserts it appears.
+pub const CHECKPOINT_GRAMMAR: &str =
+    "checkpoint := '--checkpoint-every' N ['--checkpoint-to' FILE]; \
+     resume := '--resume' FILE (the snapshot's embedded config is the truth)";
+
 /// One flag specification.
 #[derive(Clone, Debug)]
 pub struct FlagSpec {

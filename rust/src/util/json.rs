@@ -118,6 +118,30 @@ impl Json {
     pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
         Json::Arr(items.into_iter().collect())
     }
+
+    /// A full-range u64 encoded as a lowercase hex string. JSON numbers
+    /// here are f64 (53 mantissa bits), so raw RNG state words and event
+    /// sequence counters would lose bits as `Num` — checkpoints carry
+    /// them as `"0x..."` strings instead (see [`Json::as_hex_u64`]).
+    pub fn hex(v: u64) -> Json {
+        Json::Str(format!("0x{v:x}"))
+    }
+
+    /// Decode a u64 from a `"0x..."` hex string built by [`Json::hex`].
+    /// Also accepts a plain non-negative integral `Num` that fits
+    /// losslessly, so hand-written documents stay usable.
+    pub fn as_hex_u64(&self) -> Option<u64> {
+        match self {
+            Json::Str(s) => {
+                let hex = s.strip_prefix("0x")?;
+                u64::from_str_radix(hex, 16).ok()
+            }
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n < 9.007_199_254_740_992e15 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
 }
 
 /// Parse error with byte offset.
@@ -516,6 +540,20 @@ mod tests {
     fn integer_formatting_stays_integral() {
         assert_eq!(Json::Num(100.0).to_string(), "100");
         assert_eq!(Json::Num(0.5).to_string(), "0.5");
+    }
+
+    #[test]
+    fn hex_u64_roundtrips_full_range() {
+        for v in [0u64, 1, 53, u64::MAX, 0x9E3779B97F4A7C15] {
+            let j = Json::hex(v);
+            assert_eq!(j.as_hex_u64(), Some(v));
+            // ...and survives a print/parse cycle (it's just a string).
+            assert_eq!(Json::parse(&j.to_string()).unwrap().as_hex_u64(), Some(v));
+        }
+        // Plain integral numbers are accepted for hand-written docs.
+        assert_eq!(Json::Num(42.0).as_hex_u64(), Some(42));
+        assert_eq!(Json::Num(-1.0).as_hex_u64(), None);
+        assert_eq!(Json::Str("zz".into()).as_hex_u64(), None);
     }
 
     #[test]

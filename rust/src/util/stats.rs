@@ -104,6 +104,12 @@ impl Ewma {
     pub fn get(&self) -> Option<f64> {
         self.value
     }
+
+    /// Overwrite the current average (checkpoint restore). `None` resets
+    /// to the pre-first-observation state; the smoothing factor is kept.
+    pub fn set(&mut self, value: Option<f64>) {
+        self.value = value;
+    }
 }
 
 /// Percentile by linear interpolation on a sorted copy (p in [0,100]).

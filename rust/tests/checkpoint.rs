@@ -1,0 +1,273 @@
+//! The restart-equals-uninterrupted equality suite.
+//!
+//! Three facts are proven for every collaboration manner × task ×
+//! built-in strategy cell:
+//!
+//! 1. Checkpointing is a pure side effect: a run that writes periodic
+//!    snapshots emits the *same* event stream and final scalars as the
+//!    same run without checkpointing (file I/O only, no RNG perturbed).
+//! 2. Restart equals uninterrupted: resuming a mid-run snapshot replays
+//!    the remainder of the run bit for bit — the resumed `RunResult`
+//!    (final metric, updates, wall clock, ledgers, tau histogram, the
+//!    full trace) equals the never-interrupted baseline, and the resumed
+//!    event stream is exactly the baseline stream's suffix.
+//! 3. The snapshot round-trips: resume + re-checkpoint at the same round
+//!    reproduces the identical JSON document.
+
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use ol4el::config::RunConfig;
+use ol4el::coordinator::observer::from_fn;
+use ol4el::coordinator::{
+    checkpoint, mode_for, CollaborationMode, RunEvent, RunResult, Session,
+};
+use ol4el::engine::native::NativeEngine;
+use ol4el::model::TaskSpec;
+use ol4el::strategy::StrategySpec;
+use ol4el::util::json::Json;
+
+/// A small-but-not-degenerate run: enough budget for several global
+/// updates in every manner so a genuinely mid-run snapshot exists.
+fn cfg(task: &str, strategy: &str) -> RunConfig {
+    RunConfig {
+        task: TaskSpec::parse(task).unwrap(),
+        strategy: StrategySpec::parse(strategy).unwrap(),
+        n_edges: 3,
+        hetero: 3.0,
+        budget: 1200.0,
+        data_n: 3000,
+        seed: 11,
+        ..Default::default()
+    }
+}
+
+/// A scratch directory unique to this test process + cell.
+fn scratch(label: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "ol4el-ckpt-{}-{}",
+        std::process::id(),
+        label.replace([':', '=', '/'], "_")
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Run `cfg` to completion collecting the full event stream. When
+/// `snapshot` is set, periodic checkpointing (cadence 1) writes to
+/// `snapshot.0`, and the first `GlobalUpdate` event at `updates >= 2`
+/// copies the then-latest snapshot aside to `snapshot.1` — a guaranteed
+/// mid-run checkpoint, captured without perturbing the run.
+fn run_collecting(
+    cfg: &RunConfig,
+    engine: &NativeEngine,
+    snapshot: Option<(&Path, &Path)>,
+) -> (RunResult, Vec<RunEvent>) {
+    let events: Rc<RefCell<Vec<RunEvent>>> = Rc::new(RefCell::new(Vec::new()));
+    let sink = events.clone();
+    let mut s = Session::new(cfg, engine).unwrap();
+    if let Some((live, _)) = snapshot {
+        s.set_checkpoint(1, live);
+    }
+    let copy = snapshot.map(|(live, aside)| (live.to_path_buf(), aside.to_path_buf()));
+    s.observe(from_fn(move |ev: &RunEvent| {
+        if let (Some((live, aside)), RunEvent::GlobalUpdate { point }) = (&copy, ev) {
+            if point.updates >= 2 && live.exists() && !aside.exists() {
+                std::fs::copy(live, aside).unwrap();
+            }
+        }
+        sink.borrow_mut().push(ev.clone());
+    }));
+    let r = s.run().unwrap();
+    let ev = events.borrow().clone();
+    (r, ev)
+}
+
+/// Resume from a checkpoint document and run to completion, collecting
+/// the resumed event stream.
+fn resume_collecting(doc: &Json, engine: &NativeEngine) -> (RunResult, Vec<RunEvent>) {
+    let events: Rc<RefCell<Vec<RunEvent>>> = Rc::new(RefCell::new(Vec::new()));
+    let sink = events.clone();
+    let mut s = Session::resume(doc, engine).unwrap();
+    s.observe(from_fn(move |ev: &RunEvent| sink.borrow_mut().push(ev.clone())));
+    let r = s.run().unwrap();
+    let ev = events.borrow().clone();
+    (r, ev)
+}
+
+/// Bit-for-bit `RunResult` equality (f64 compared through `to_bits`).
+fn assert_result_bits(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(
+        a.final_metric.to_bits(),
+        b.final_metric.to_bits(),
+        "{what}: final_metric {} vs {}",
+        a.final_metric,
+        b.final_metric
+    );
+    assert_eq!(a.total_updates, b.total_updates, "{what}: total_updates");
+    assert_eq!(a.wall_ms.to_bits(), b.wall_ms.to_bits(), "{what}: wall_ms");
+    assert_eq!(
+        a.mean_spent.to_bits(),
+        b.mean_spent.to_bits(),
+        "{what}: mean_spent"
+    );
+    assert_eq!(a.tau_histogram, b.tau_histogram, "{what}: tau_histogram");
+    assert_eq!(a.retired_edges, b.retired_edges, "{what}: retired_edges");
+    assert_eq!(a.n_edges, b.n_edges, "{what}: n_edges");
+    assert_eq!(a.trace.len(), b.trace.len(), "{what}: trace length");
+    for (i, (pa, pb)) in a.trace.iter().zip(&b.trace).enumerate() {
+        assert_eq!(
+            pa.wall_ms.to_bits(),
+            pb.wall_ms.to_bits(),
+            "{what}: trace[{i}].wall_ms"
+        );
+        assert_eq!(
+            pa.mean_spent.to_bits(),
+            pb.mean_spent.to_bits(),
+            "{what}: trace[{i}].mean_spent"
+        );
+        assert_eq!(pa.updates, pb.updates, "{what}: trace[{i}].updates");
+        assert_eq!(
+            pa.metric.to_bits(),
+            pb.metric.to_bits(),
+            "{what}: trace[{i}].metric"
+        );
+    }
+}
+
+/// One cell of the equality matrix: baseline, checkpointed baseline,
+/// mid-run resume, and the snapshot JSON round-trip.
+fn check_cell(task: &str, strategy: &str) {
+    let engine = NativeEngine::default();
+    let c = cfg(task, strategy);
+    let what = format!("{task}/{strategy}");
+    let dir = scratch(&what);
+    let live = dir.join("checkpoint.json");
+    let aside = dir.join("midrun.json");
+
+    // 1. Ground truth, no checkpointing anywhere near it.
+    let (r0, ev0) = run_collecting(&c, &engine, None);
+    assert!(
+        r0.total_updates >= 4,
+        "{what}: run too short to checkpoint mid-way ({} updates)",
+        r0.total_updates
+    );
+
+    // 2. Checkpointing is a pure side effect.
+    let (r1, ev1) = run_collecting(&c, &engine, Some((&live, &aside)));
+    assert_result_bits(&r0, &r1, &format!("{what}: checkpointing perturbed the run"));
+    assert_eq!(
+        ev0, ev1,
+        "{what}: checkpointing changed the event stream"
+    );
+
+    // 3. Restart equals uninterrupted, from a genuinely mid-run snapshot.
+    assert!(aside.exists(), "{what}: no mid-run snapshot was captured");
+    let doc = checkpoint::load(&aside).unwrap();
+    let (r2, ev2) = resume_collecting(&doc, &engine);
+    assert_result_bits(&r0, &r2, &format!("{what}: resumed run diverged"));
+    assert!(
+        !ev2.is_empty() && ev2.len() < ev0.len(),
+        "{what}: resume replayed {} of {} events — not a mid-run cut",
+        ev2.len(),
+        ev0.len()
+    );
+    assert_eq!(
+        &ev0[ev0.len() - ev2.len()..],
+        &ev2[..],
+        "{what}: resumed event stream is not the baseline's suffix"
+    );
+
+    // 4. Resume + re-checkpoint at the same round is the identity.
+    let mut s = Session::resume(&doc, &engine).unwrap();
+    let run_cfg = s.cfg().clone();
+    let mut mode = mode_for(&run_cfg);
+    mode.restore(&mut s, doc.get("mode").unwrap()).unwrap();
+    let doc2 = s.checkpoint(mode.as_ref()).unwrap();
+    assert_eq!(
+        doc.to_string(),
+        doc2.to_string(),
+        "{what}: checkpoint JSON does not round-trip through resume"
+    );
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The strategy axis for one collaboration manner. `ac-sync` is
+/// barrier-only and appears in the sync row alone.
+fn strategies(mode: &str) -> Vec<String> {
+    let mut v = vec![
+        format!("ol4el:mode={mode}"),
+        format!("fixed-i:mode={mode}"),
+        format!("greedy-budget:mode={mode}"),
+    ];
+    if mode == "sync" {
+        v.push("ac-sync".to_string());
+    }
+    v
+}
+
+fn check_task(task: &str) {
+    for mode in ["sync", "async"] {
+        for strategy in strategies(mode) {
+            check_cell(task, &strategy);
+        }
+    }
+}
+
+#[test]
+fn restart_equals_uninterrupted_svm() {
+    check_task("svm");
+}
+
+#[test]
+fn restart_equals_uninterrupted_kmeans() {
+    check_task("kmeans");
+}
+
+#[test]
+fn restart_equals_uninterrupted_logreg() {
+    check_task("logreg");
+}
+
+#[test]
+fn restart_equals_uninterrupted_gmm() {
+    check_task("gmm");
+}
+
+#[test]
+fn resume_refuses_a_version_from_the_future() {
+    let engine = NativeEngine::default();
+    let c = cfg("svm", "ol4el");
+    let dir = scratch("future-version");
+    let live = dir.join("checkpoint.json");
+    let aside = dir.join("midrun.json");
+    run_collecting(&c, &engine, Some((&live, &aside)));
+    let mut doc = checkpoint::load(&aside).unwrap();
+    if let Json::Obj(m) = &mut doc {
+        m.insert("version".into(), Json::num(999.0));
+    }
+    let err = Session::resume(&doc, &engine).unwrap_err().to_string();
+    assert!(err.contains("version"), "unhelpful version error: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_refuses_a_differently_sized_fleet() {
+    let engine = NativeEngine::default();
+    let c = cfg("svm", "ol4el");
+    let dir = scratch("fleet-size");
+    let live = dir.join("checkpoint.json");
+    let aside = dir.join("midrun.json");
+    run_collecting(&c, &engine, Some((&live, &aside)));
+    let mut doc = checkpoint::load(&aside).unwrap();
+    // Rewrite the embedded config to a bigger fleet: the structural
+    // state (per-edge entries, slowdowns) no longer covers it.
+    let bigger = RunConfig { n_edges: 5, ..cfg("svm", "ol4el") };
+    if let Json::Obj(m) = &mut doc {
+        m.insert("config".into(), bigger.to_json());
+    }
+    assert!(Session::resume(&doc, &engine).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -55,6 +55,10 @@ const PRODUCTIONS: &[&str] = &[
     "['--telemetry-sample' N]",
     "'coordinator stats' '--addr' addr",
     "['--format' 'json'|'prom']",
+    // checkpoint/resume (the elastic service surface)
+    "checkpoint := '--checkpoint-every' N",
+    "['--checkpoint-to' FILE]",
+    "resume   := '--resume' FILE",
     // bandit (the legacy form; also the bandit= values of ol4el)
     "auto",
     "kube[:EPS]",
@@ -193,6 +197,26 @@ fn telemetry_flags_document_everywhere_they_exist() {
     for needle in ["--addr", "--format", "--timeout-ms"] {
         assert!(stats.contains(needle), "coordinator stats --help lost {needle:?}");
     }
+}
+
+#[test]
+fn checkpoint_flags_document_everywhere_they_exist() {
+    // Satellite: the checkpoint/resume surface is uniform — both session
+    // owners (train and coordinator serve) take --checkpoint-every,
+    // --checkpoint-to and --resume, and the coordinator help teaches the
+    // single-sourced grammar one-liner.
+    for help in [subcommand_help("train"), nested_help("coordinator", "serve")] {
+        for needle in ["--checkpoint-every", "--checkpoint-to", "--resume"] {
+            assert!(
+                help.contains(needle),
+                "a checkpointing entry point lost {needle:?}"
+            );
+        }
+    }
+    assert!(
+        subcommand_help("coordinator").contains(ol4el::util::cli::CHECKPOINT_GRAMMAR),
+        "coordinator --help lost the single-sourced checkpoint grammar"
+    );
 }
 
 #[test]

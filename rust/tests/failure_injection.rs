@@ -141,6 +141,61 @@ fn variable_costs_with_huge_cv_never_hang() {
 }
 
 #[test]
+fn checkpointed_failure_injection_resumes_bit_identically() {
+    // Failure draws come from checkpointed RNG streams, so even a run
+    // that kills edges at random is restart-equal: periodic snapshots
+    // don't perturb it, and resuming the last snapshot reproduces the
+    // uninterrupted run's final scalars bit for bit.
+    use ol4el::coordinator::{checkpoint, Session};
+    let engine = NativeEngine::default();
+    let mut c = base();
+    c.failure_rate = 0.1;
+    let r0 = coordinator::run(&c, &engine).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("ol4el-fail-ckpt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ckpt.json");
+    let mut s = Session::new(&c, &engine).unwrap();
+    s.set_checkpoint(1, &path);
+    let r1 = s.run().unwrap();
+    assert_eq!(r0.final_metric.to_bits(), r1.final_metric.to_bits());
+    assert_eq!(r0.total_updates, r1.total_updates);
+    assert_eq!(r0.wall_ms.to_bits(), r1.wall_ms.to_bits());
+    assert_eq!(r0.retired_edges, r1.retired_edges);
+
+    let doc = checkpoint::load(&path).unwrap();
+    let r2 = Session::resume(&doc, &engine).unwrap().run().unwrap();
+    assert_eq!(r0.final_metric.to_bits(), r2.final_metric.to_bits());
+    assert_eq!(r0.total_updates, r2.total_updates);
+    assert_eq!(r0.wall_ms.to_bits(), r2.wall_ms.to_bits());
+    assert_eq!(r0.mean_spent.to_bits(), r2.mean_spent.to_bits());
+    assert_eq!(r0.tau_histogram, r2.tau_histogram);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn churned_manners_refuse_to_checkpoint() {
+    // The simulated network/churn manners have not opted into
+    // snapshot(): arming checkpoints under them must be a loud, typed
+    // error at the first boundary — never a silently-wrong resume.
+    use ol4el::coordinator::Session;
+    use ol4el::net::ChurnSpec;
+    let engine = NativeEngine::default();
+    let mut c = base();
+    c.churn = ChurnSpec::parse("poisson:0.05").unwrap();
+    let dir = std::env::temp_dir().join(format!("ol4el-churn-ckpt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut s = Session::new(&c, &engine).unwrap();
+    s.set_checkpoint(1, dir.join("nope.json"));
+    let err = s.run().unwrap_err().to_string();
+    assert!(
+        err.contains("snapshot"),
+        "expected a manner-opt-out error, got: {err}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn threaded_deploy_with_failures_is_not_supported_but_sim_is() {
     // Document the contract: failure injection lives in the simulator
     // path; the threaded deploy runs crash-free (its failure mode is a

@@ -2,7 +2,7 @@
 //! over the coordinator's invariants: budget accounting, arm feasibility,
 //! aggregation weights, event ordering, metric ranges.
 
-use ol4el::bandit::{kube::Kube, ucb_bv::UcbBv, BudgetedBandit};
+use ol4el::bandit::{self, kube::Kube, ucb_bv::UcbBv, BanditSpec, BudgetedBandit};
 use ol4el::config::{PartitionKind, RunConfig};
 use ol4el::coordinator::{self, aggregate};
 use ol4el::engine::native::NativeEngine;
@@ -11,7 +11,7 @@ use ol4el::model::{ModelState, TaskSpec};
 use ol4el::prop_assert;
 use ol4el::sim::clock::EventQueue;
 use ol4el::sim::hetero::{realized_ratio, HeteroProfile};
-use ol4el::strategy::StrategySpec;
+use ol4el::strategy::{self, Strategy, StrategySpec};
 use ol4el::testkit::property;
 use ol4el::util::rng::Rng;
 
@@ -305,6 +305,173 @@ fn prop_partitions_are_exact_covers() {
                 "partition is not an exact cover"
             );
             prop_assert!(shards.iter().all(|s| !s.is_empty()), "empty shard");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_strategy_snapshot_restore_roundtrip() {
+    // Checkpoint obligation, stated as a property: for any built-in
+    // strategy warmed up by an arbitrary select/feedback history, a fresh
+    // instance restored from its snapshot behaves bit-identically — same
+    // arm choices under equal-seeded RNG streams, same histogram, and the
+    // re-taken snapshot is the identical JSON document.
+    property(
+        0x5A,
+        30,
+        |g| {
+            let mode = *g.choice(&["sync", "async"]);
+            let name = *g.choice(&["ol4el", "fixed-i", "greedy-budget"]);
+            let spec = if mode == "sync" && g.bool() {
+                "ac-sync".to_string()
+            } else {
+                format!("{name}:mode={mode}")
+            };
+            let n_edges = g.int(2, 4);
+            let hetero = g.float(1.0, 6.0);
+            let slowdowns = g.vec(n_edges, |g| g.float(1.0, hetero));
+            let warmup = g.int(1, 25);
+            let seed = g.rng.next_u64();
+            (spec, slowdowns, warmup, seed)
+        },
+        |(spec, slowdowns, warmup, seed)| {
+            let cfg = RunConfig {
+                strategy: StrategySpec::parse(spec).map_err(|e| e.to_string())?,
+                n_edges: slowdowns.len(),
+                ..Default::default()
+            };
+            let mut a = strategy::build(&cfg, slowdowns).map_err(|e| e.to_string())?;
+            let sync = a.is_sync();
+            let edge_of = |step: usize| if sync { 0 } else { step % slowdowns.len() };
+            let mut warm_rng = Rng::new(*seed);
+            for step in 0..*warmup {
+                let e = edge_of(step);
+                if let Some(tau) = a.select(e, 1e12, &mut warm_rng) {
+                    a.feedback(e, tau, warm_rng.f64(), tau as f64 * 40.0 + 60.0);
+                }
+            }
+            let snap = a.snapshot().map_err(|e| e.to_string())?;
+            let mut b = strategy::build(&cfg, slowdowns).map_err(|e| e.to_string())?;
+            b.restore(&snap).map_err(|e| e.to_string())?;
+            let mut ra = Rng::new(seed.wrapping_add(1));
+            let mut rb = Rng::new(seed.wrapping_add(1));
+            for step in 0..20 {
+                let e = edge_of(step);
+                let pa = a.select(e, 1e12, &mut ra);
+                let pb = b.select(e, 1e12, &mut rb);
+                prop_assert!(
+                    pa == pb,
+                    "{spec}: step {step} diverged after restore: {pa:?} vs {pb:?}"
+                );
+                if let Some(tau) = pa {
+                    let u = 0.2 + 0.1 * (step % 7) as f64;
+                    let cost = tau as f64 * 40.0 + 60.0;
+                    a.feedback(e, tau, u, cost);
+                    b.feedback(e, tau, u, cost);
+                }
+            }
+            prop_assert!(
+                a.tau_histogram() == b.tau_histogram(),
+                "{spec}: tau histograms diverged after restore"
+            );
+            let ja = a.snapshot().map_err(|e| e.to_string())?.to_string();
+            let jb = b.snapshot().map_err(|e| e.to_string())?.to_string();
+            prop_assert!(ja == jb, "{spec}: snapshot does not round-trip:\n{ja}\nvs\n{jb}");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bandit_snapshot_restore_roundtrip() {
+    // Same obligation one layer down: every in-tree budgeted-bandit
+    // policy restored from a snapshot continues the select/update stream
+    // bit-identically to the original instance.
+    property(
+        0x5B,
+        40,
+        |g| {
+            let name = *g.choice(&["kube", "ucb-bv", "ucb1", "eps-greedy", "thompson"]);
+            let n_arms = g.int(1, 8);
+            let costs = g.vec(n_arms, |g| g.float(5.0, 120.0));
+            let warmup = g.int(0, 40);
+            let seed = g.rng.next_u64();
+            (name.to_string(), costs, warmup, seed)
+        },
+        |(name, costs, warmup, seed)| {
+            let kind = BanditSpec::parse(name).ok_or_else(|| format!("bad kind {name}"))?;
+            let mut a = bandit::build(&kind, costs.clone());
+            let mut warm_rng = Rng::new(*seed);
+            for _ in 0..*warmup {
+                if let Some(k) = a.select(1e12, &mut warm_rng) {
+                    a.update(k, warm_rng.f64(), costs[k] * (0.8 + 0.4 * warm_rng.f64()));
+                }
+            }
+            let snap = a.snapshot().map_err(|e| e.to_string())?;
+            let mut b = bandit::build(&kind, costs.clone());
+            b.restore(&snap).map_err(|e| e.to_string())?;
+            let mut ra = Rng::new(seed.wrapping_add(1));
+            let mut rb = Rng::new(seed.wrapping_add(1));
+            for step in 0..25 {
+                let ka = a.select(1e12, &mut ra);
+                let kb = b.select(1e12, &mut rb);
+                prop_assert!(
+                    ka == kb,
+                    "{name}: step {step} diverged after restore: {ka:?} vs {kb:?}"
+                );
+                if let Some(k) = ka {
+                    let reward = 0.2 + 0.6 * (step % 7) as f64 / 7.0;
+                    let cost = costs[k] * (0.85 + 0.01 * (step % 9) as f64);
+                    a.update(k, reward, cost);
+                    b.update(k, reward, cost);
+                }
+            }
+            let ja = a.snapshot().map_err(|e| e.to_string())?.to_string();
+            let jb = b.snapshot().map_err(|e| e.to_string())?.to_string();
+            prop_assert!(ja == jb, "{name}: snapshot does not round-trip:\n{ja}\nvs\n{jb}");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rng_save_restore_resumes_exact_stream() {
+    // The RNG is the last carrier of hidden state: saving (`state`) and
+    // restoring at an ARBITRARY cut point — including between the two
+    // halves of a Box–Muller pair, where the spare gaussian is live —
+    // must resume the exact draw sequence, whatever mix of draw kinds
+    // follows the cut.
+    property(
+        0x5C,
+        80,
+        |g| {
+            let seed = g.rng.next_u64();
+            let prefix = g.int(0, 64);
+            let tail = g.int(1, 64);
+            let kinds = g.vec(prefix + tail, |g| g.int(0, 2));
+            (seed, prefix, kinds)
+        },
+        |(seed, prefix, kinds)| {
+            fn draw(r: &mut Rng, kind: usize) -> u64 {
+                match kind {
+                    0 => r.next_u64(),
+                    1 => r.f64().to_bits(),
+                    _ => r.normal().to_bits(),
+                }
+            }
+            let mut r = Rng::new(*seed);
+            for &k in &kinds[..*prefix] {
+                draw(&mut r, k);
+            }
+            let (words, spare) = r.state();
+            let expect: Vec<u64> = kinds[*prefix..].iter().map(|&k| draw(&mut r, k)).collect();
+            let mut q = Rng::restore(words, spare);
+            let got: Vec<u64> = kinds[*prefix..].iter().map(|&k| draw(&mut q, k)).collect();
+            prop_assert!(
+                expect == got,
+                "restored stream diverged at cut {prefix}: {expect:?} vs {got:?}"
+            );
             Ok(())
         },
     );

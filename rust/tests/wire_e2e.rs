@@ -8,6 +8,7 @@ use std::net::TcpListener;
 use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};
 
+use ol4el::testkit::poll_until;
 use ol4el::util::json::Json;
 
 fn bin() -> &'static str {
@@ -52,6 +53,40 @@ fn wait_output(mut child: Child, secs: u64, what: &str) -> std::process::Output 
             None => std::thread::sleep(Duration::from_millis(50)),
         }
     }
+}
+
+/// Poll the live stats endpoint until the coordinator has served at
+/// least `rounds` local rounds — the run is demonstrably underway. The
+/// shared `testkit::poll_until` replaces the fixed sleeps this file used
+/// to carry: readiness is detected as soon as it is true, and a slow CI
+/// machine gets the whole deadline.
+fn wait_for_rounds(addr: &str, rounds: f64, secs: u64) {
+    let ok = poll_until(
+        Duration::from_secs(secs),
+        Duration::from_millis(50),
+        || {
+            let Ok(out) = Command::new(bin())
+                .args(["coordinator", "stats", "--addr", addr, "--timeout-ms", "500"])
+                .output()
+            else {
+                return false;
+            };
+            if !out.status.success() {
+                return false;
+            }
+            let Ok(text) = String::from_utf8(out.stdout) else {
+                return false;
+            };
+            let Ok(j) = Json::parse(&text) else {
+                return false;
+            };
+            j.get("counters")
+                .and_then(|c| c.get("wire.server.rounds"))
+                .and_then(Json::as_f64)
+                .is_some_and(|n| n >= rounds)
+        },
+    );
+    assert!(ok, "coordinator at {addr} never reached {rounds} served rounds");
 }
 
 /// The shared run configuration: small enough to finish in seconds,
@@ -232,7 +267,7 @@ fn session_survives_a_permanently_dead_edge() {
                 .expect("spawn edge"),
         );
     }
-    std::thread::sleep(Duration::from_millis(750));
+    wait_for_rounds(&addr, 3.0, 60);
     let victim = &mut edges.0[2];
     let _ = victim.kill();
     let _ = victim.wait();
@@ -244,4 +279,126 @@ fn session_survives_a_permanently_dead_edge() {
     );
     let j = Json::parse(&String::from_utf8(out.stdout).expect("utf8")).expect("serve json");
     assert!(j.get("updates").and_then(Json::as_f64).unwrap_or(0.0) > 0.0);
+}
+
+#[test]
+fn killed_coordinator_restarts_with_resume_and_matches_the_baseline() {
+    // The elastic-service acceptance test: SIGKILL `coordinator serve`
+    // mid-run, restart it with `--resume` from its own periodic
+    // checkpoint, and the surviving `edge join` processes reconnect
+    // through their ordinary backoff loop. The restarted session's --json
+    // report must equal the never-killed in-process baseline bit for bit.
+    let strategy = "ol4el";
+    let budget = "4000";
+    let local = local_run(strategy, budget);
+
+    let dir = std::env::temp_dir().join(format!("ol4el-wire-ckpt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    let ckpt = dir.join("serve.json");
+    let ckpt_s = ckpt.to_str().expect("utf8 path").to_string();
+    let addr = format!("127.0.0.1:{}", free_port());
+    let ckpt_flags = ["--checkpoint-every", "2", "--checkpoint-to", &ckpt_s];
+    let serve1 = Command::new(bin())
+        .args(["coordinator", "serve", "--addr", &addr])
+        .args(config_args(strategy, budget))
+        .args(ckpt_flags)
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn serve");
+    let mut serve1 = Procs(vec![serve1]);
+    let mut edges = Procs(Vec::new());
+    for _ in 0..3 {
+        edges.0.push(
+            Command::new(bin())
+                .args(["edge", "join", &addr, "--max-backoff-ms", "250"])
+                .stdout(Stdio::null())
+                .spawn()
+                .expect("spawn edge"),
+        );
+    }
+    // Kill as soon as a mid-run snapshot lands on disk (cadence 2 with a
+    // generous budget: the run is nowhere near done at that point).
+    let wrote = poll_until(
+        Duration::from_secs(60),
+        Duration::from_millis(25),
+        || ckpt.exists(),
+    );
+    assert!(wrote, "the coordinator never wrote {}", ckpt.display());
+    {
+        let victim = &mut serve1.0[0];
+        let _ = victim.kill(); // SIGKILL: no shutdown frames, no flush
+        let _ = victim.wait();
+    }
+    let serve2 = Command::new(bin())
+        .args(["coordinator", "serve", "--addr", &addr])
+        .args(config_args(strategy, budget))
+        .args(ckpt_flags)
+        .args(["--resume", &ckpt_s])
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn resumed serve");
+    let out = wait_output(serve2, 180, "coordinator serve --resume");
+    assert!(
+        out.status.success(),
+        "resumed serve exited nonzero: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    // Every surviving edge reconnected, was re-welcomed at its banked
+    // iteration count, and exits cleanly on the resumed session's
+    // Shutdown.
+    for e in std::mem::take(&mut edges.0) {
+        let out = wait_output(e, 60, "edge join (across the restart)");
+        assert!(out.status.success(), "an edge did not survive the coordinator restart");
+    }
+    let resumed = Json::parse(&String::from_utf8(out.stdout).expect("utf8")).expect("serve json");
+    assert_bit_identical(&local, &resumed, "kill+resume");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn checkpoint_endpoint_serves_the_latest_snapshot() {
+    // The CheckpointReq wire endpoint: while a checkpointing session is
+    // live, any client can fetch the latest snapshot document pre-Hello
+    // (the same path a monitoring sidecar or a warm standby would use).
+    let dir = std::env::temp_dir().join(format!("ol4el-wire-fetch-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    let ckpt = dir.join("serve.json");
+    let ckpt_s = ckpt.to_str().expect("utf8 path").to_string();
+    let addr = format!("127.0.0.1:{}", free_port());
+    let serve = Command::new(bin())
+        .args(["coordinator", "serve", "--addr", &addr])
+        .args(config_args("ol4el", "4000"))
+        .args(["--checkpoint-every", "2", "--checkpoint-to", &ckpt_s])
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn serve");
+    let mut edges = Procs(Vec::new());
+    for _ in 0..3 {
+        edges.0.push(
+            Command::new(bin())
+                .args(["edge", "join", &addr])
+                .stdout(Stdio::null())
+                .spawn()
+                .expect("spawn edge"),
+        );
+    }
+    let wrote = poll_until(
+        Duration::from_secs(60),
+        Duration::from_millis(25),
+        || ckpt.exists(),
+    );
+    assert!(wrote, "the coordinator never wrote {}", ckpt.display());
+    let doc = ol4el::net::wire::fetch_checkpoint(&addr, Duration::from_secs(10))
+        .expect("fetch_checkpoint");
+    assert!(
+        doc.get("version").is_some() && doc.get("config").is_some(),
+        "fetched checkpoint is not a snapshot document: {doc}"
+    );
+    let out = wait_output(serve, 180, "coordinator serve (checkpoint endpoint)");
+    assert!(out.status.success());
+    for e in std::mem::take(&mut edges.0) {
+        let out = wait_output(e, 60, "edge join");
+        assert!(out.status.success(), "an edge exited nonzero");
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }
