@@ -14,7 +14,7 @@ use crate::bandit::BanditSpec;
 use crate::coordinator::utility::UtilityKind;
 use crate::edge::Hyper;
 use crate::model::{Learner as _, TaskSpec};
-use crate::net::{ChurnSpec, NetworkSpec};
+use crate::net::{ChurnSpec, NetworkSpec, Topology};
 use crate::sim::cost::{CostMode, CostModel};
 use crate::sim::hetero::HeteroProfile;
 use crate::strategy::StrategySpec;
@@ -122,6 +122,11 @@ pub struct RunConfig {
     /// Fleet churn schedule (`net::ChurnSpec` grammar, e.g.
     /// `poisson:0.01,join:0.05`); `none` keeps the fleet static.
     pub churn: ChurnSpec,
+    /// Aggregation topology (`net::Topology` grammar: `flat` |
+    /// `tree:R[:fanout=N]`); `flat` and `tree:1` route through the
+    /// existing single-cloud manners bit for bit, R >= 2 engages the
+    /// hierarchical (regional aggregator) paths.
+    pub topology: Topology,
     /// PRNG seed; `(config, seed)` fully reproduces a run.
     pub seed: u64,
 }
@@ -151,6 +156,7 @@ impl Default for RunConfig {
             failure_rate: 0.0,
             network: NetworkSpec::ideal(),
             churn: ChurnSpec::none(),
+            topology: Topology::Flat,
             seed: 42,
         }
     }
@@ -261,6 +267,7 @@ impl RunConfig {
             ("failure_rate", Json::num(self.failure_rate)),
             ("network", Json::str(self.network.spec())),
             ("churn", Json::str(self.churn.spec())),
+            ("topology", Json::str(self.topology.spec())),
             ("seed", Json::num(self.seed as f64)),
         ])
     }
@@ -367,6 +374,10 @@ impl RunConfig {
         if let Some(s) = gs("churn") {
             cfg.churn = ChurnSpec::parse(s).ok_or_else(|| anyhow!("bad churn '{s}'"))?;
         }
+        // Absent on pre-topology wire documents (and checkpoints): flat.
+        if let Some(s) = gs("topology") {
+            cfg.topology = Topology::parse(s).ok_or_else(|| anyhow!("bad topology '{s}'"))?;
+        }
         if let Some(n) = gn("seed") {
             cfg.seed = n as u64;
         }
@@ -454,6 +465,9 @@ impl RunConfig {
             .check()
             .map_err(|e| anyhow!("network spec: {e}"))?;
         self.churn.check().map_err(|e| anyhow!("churn spec: {e}"))?;
+        self.topology
+            .check(self.n_edges)
+            .map_err(|e| anyhow!("topology spec: {e}"))?;
         Ok(())
     }
 }
@@ -508,6 +522,66 @@ mod tests {
         }
         let back = RunConfig::from_json(&legacy).unwrap();
         assert_eq!(back.cost.mode, CostMode::Variable { cv: 0.4 });
+    }
+
+    #[test]
+    fn topology_survives_the_json_roundtrip_across_manners() {
+        // Satellite: the topology spec is part of the wire format (and
+        // therefore the checkpoint fingerprint) for BOTH manners, and a
+        // pre-topology document defaults to flat.
+        for strategy in [StrategySpec::ol4el_sync(), StrategySpec::ol4el_async()] {
+            let mut cfg = RunConfig::default();
+            cfg.strategy = strategy;
+            cfg.n_edges = 40;
+            cfg.topology = Topology::parse("tree:8:fanout=4").unwrap();
+            let j = cfg.to_json();
+            assert_eq!(
+                j.get("topology").and_then(Json::as_str),
+                Some("tree:8:fanout=4")
+            );
+            let back = RunConfig::from_json(&j).unwrap();
+            assert_eq!(back.topology, cfg.topology);
+            assert_ne!(
+                cfg.fingerprint(),
+                RunConfig { topology: Topology::Flat, ..cfg.clone() }.fingerprint(),
+                "topology must separate fingerprints"
+            );
+        }
+        let mut legacy = RunConfig::default().to_json();
+        if let Json::Obj(map) = &mut legacy {
+            map.remove("topology");
+        }
+        let back = RunConfig::from_json(&legacy).unwrap();
+        assert_eq!(back.topology, Topology::Flat, "absent field defaults flat");
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_trees_with_typed_messages() {
+        let mut cfg = RunConfig::default();
+        cfg.n_edges = 10;
+        cfg.topology = Topology::parse("tree:0").unwrap();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(
+            err.contains("topology spec") && err.contains("at least one region"),
+            "{err}"
+        );
+        cfg.topology = Topology::parse("tree:11").unwrap();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(
+            err.contains("more regions (11) than edges (10)"),
+            "{err}"
+        );
+        cfg.topology = Topology::parse("tree:4:fanout=0").unwrap();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("fanout must be >= 1"), "{err}");
+        cfg.topology = Topology::parse("tree:10").unwrap();
+        assert!(cfg.validate().is_ok(), "R == n_edges is a legal tree");
+        // The same rejections surface through the JSON wire.
+        let mut j = RunConfig::default().to_json();
+        if let Json::Obj(map) = &mut j {
+            map.insert("topology".to_string(), Json::str("tree:0"));
+        }
+        assert!(RunConfig::from_json(&j).is_err());
     }
 
     #[test]

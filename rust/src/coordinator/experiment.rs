@@ -28,7 +28,7 @@ use crate::coordinator::session::Session;
 use crate::coordinator::RunResult;
 use crate::engine::ComputeEngine;
 use crate::model::TaskSpec;
-use crate::net::{ChurnSpec, NetworkSpec};
+use crate::net::{ChurnSpec, NetworkSpec, Topology};
 use crate::sim::cost::{CostMode, CostModel};
 use crate::sim::hetero::HeteroProfile;
 use crate::strategy::StrategySpec;
@@ -345,6 +345,16 @@ impl ExperimentBuilder {
     /// transport-backed manners.
     pub fn churn(mut self, spec: ChurnSpec) -> Self {
         self.cfg.churn = spec;
+        self
+    }
+
+    /// Aggregation topology: [`Topology::Flat`] (every edge reports to
+    /// the cloud) or `tree:R`, which routes the run through the
+    /// tree-backed collaboration manners / fleet drivers where regional
+    /// aggregators pre-combine edge updates. `tree:1` is bit-identical
+    /// to flat.
+    pub fn topology(mut self, topology: Topology) -> Self {
+        self.cfg.topology = topology;
         self
     }
 

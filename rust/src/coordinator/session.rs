@@ -138,7 +138,24 @@ pub fn default_mode(sync: bool) -> Box<dyn CollaborationMode> {
 /// transport-backed `net::` manners as soon as latency, loss, partitions
 /// or churn are configured. Sync-vs-async comes from the strategy spec
 /// ([`RunConfig::sync`]).
+///
+/// A hierarchical topology (`tree:R` with R >= 2) routes to the
+/// tree-backed manners ([`crate::net::HierSyncBarrier`] /
+/// [`crate::net::HierAsyncMerge`]) first: regional aggregators pre-combine
+/// edge updates and the cloud merges R regional summaries. `flat` and
+/// `tree:1` — a single region IS the cloud — keep the existing routing, so
+/// a `tree:1` run is bit-identical to a `flat` run at any network/churn
+/// setting. (The session-level tree manners model aggregation structure
+/// only; the tree x network x churn cross product is the fleet
+/// simulator's.)
 pub fn mode_for(cfg: &RunConfig) -> Box<dyn CollaborationMode> {
+    if cfg.topology.hierarchical() {
+        return if cfg.sync() {
+            Box::new(crate::net::HierSyncBarrier::new())
+        } else {
+            Box::new(crate::net::HierAsyncMerge::new())
+        };
+    }
     if cfg.network.is_ideal() && cfg.churn.is_none() {
         return default_mode(cfg.sync());
     }

@@ -13,12 +13,13 @@ use ol4el::model::{Learner as _, TaskSpec};
 use ol4el::net::wire::{
     accept_fleet_with, bench_loopback, serve_checkpoint_from, JoinOpts, WireServer,
 };
-use ol4el::net::{ChurnSpec, FleetSim, NetworkSpec};
+use ol4el::net::{ChurnSpec, FleetSim, NetworkSpec, Topology};
 use ol4el::sim::cost::CostMode;
 use ol4el::sim::hetero::HeteroProfile;
 use ol4el::strategy::StrategySpec;
 use ol4el::util::cli::{
-    Args, Cli, BANDIT_GRAMMAR, CHECKPOINT_GRAMMAR, STRATEGY_GRAMMAR, WIRE_GRAMMAR,
+    Args, Cli, BANDIT_GRAMMAR, CHECKPOINT_GRAMMAR, STRATEGY_GRAMMAR, TOPOLOGY_GRAMMAR,
+    WIRE_GRAMMAR,
 };
 use ol4el::util::json::Json;
 use ol4el::util::table::{f, Table};
@@ -145,6 +146,7 @@ fn train_cli() -> Cli {
             "none | poisson:LEAVE[,join:RATE][,restart:MS][,straggle:P:FACTOR]; \
              rates are events per 1000 virtual ms (e.g. poisson:0.01,join:0.05)",
         )
+        .opt("topology", "flat", TOPOLOGY_GRAMMAR)
         .opt("seed", "42", "PRNG seed")
         .opt("engine", "native", "native | pjrt (the full 3-layer path)")
         .opt("artifacts", "artifacts", "artifact directory for --engine pjrt")
@@ -250,6 +252,7 @@ fn builder_from_args(a: &Args) -> Result<ExperimentBuilder> {
         .failure_rate(a.f64("failure-rate").map_err(|e| anyhow!(e))?)
         .network(parse_network(&a.str("network"))?)
         .churn(parse_churn(&a.str("churn"))?)
+        .topology(parse_topology(&a.str("topology"))?)
         .seed(a.u64("seed").map_err(|e| anyhow!(e))?))
 }
 
@@ -302,6 +305,11 @@ fn parse_churn(spec: &str) -> Result<ChurnSpec> {
              poisson:LEAVE[,join:RATE][,restart:MS][,straggle:P:FACTOR])"
         )
     })
+}
+
+fn parse_topology(spec: &str) -> Result<Topology> {
+    Topology::parse(spec)
+        .ok_or_else(|| anyhow!("bad --topology '{spec}' (grammar: {TOPOLOGY_GRAMMAR})"))
 }
 
 /// Load the `--resume` checkpoint document and refuse a flag set that
@@ -866,6 +874,7 @@ fn fleet_cli() -> Cli {
         "network spec (see `ol4el --help` for the grammar)",
     )
     .opt("churn", "none", "churn spec (see `ol4el --help` for the grammar)")
+    .opt("topology", "flat", TOPOLOGY_GRAMMAR)
     .opt("model-bytes", "4096", "serialized model size driving transfer times")
     .opt("eval-every", "100", "emit a GlobalUpdate trace point every k updates")
     .opt("failure-rate", "0", "per-launch probability an edge fail-stops")
@@ -952,6 +961,7 @@ fn fleet_config(a: &Args, sync: bool) -> Result<RunConfig> {
         tau_max: a.usize("tau-max").map_err(|e| anyhow!(e))?,
         network: parse_network(&a.str("network"))?,
         churn: parse_churn(&a.str("churn"))?,
+        topology: parse_topology(&a.str("topology"))?,
         eval_every: a.usize("eval-every").map_err(|e| anyhow!(e))?.max(1),
         failure_rate: a.f64("failure-rate").map_err(|e| anyhow!(e))?,
         seed: a.u64("seed").map_err(|e| anyhow!(e))?,

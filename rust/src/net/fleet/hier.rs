@@ -1,31 +1,45 @@
-//! The coordinator side of the sharded fleet simulator: the cloud's
-//! sequential state, the conservative window loop, and the deterministic
-//! merge of per-shard event streams.
+//! Hierarchical (`tree:R`) drivers for the sharded fleet simulator.
 //!
-//! ## The determinism contract
+//! Under a [`Topology::Tree`](crate::net::Topology) the fleet's edges are
+//! partitioned across `R` regional aggregators; each region pre-combines
+//! its edges' uploads and forwards one *summary* per `fanout` merges over
+//! its own regional→cloud uplink, so the root merges `R` summary streams
+//! instead of `n` edge reports. `tree:1` never reaches this module —
+//! [`FleetSim::run`](super::FleetSim::run) routes single-region trees
+//! through the flat drivers, which makes the `tree:1 ≡ flat` bit-identity
+//! hold by construction.
 //!
-//! A sharded run must be **bit-for-bit identical** to the 1-shard run at
-//! any shard count. Three mechanisms carry that guarantee:
+//! ## Region ↔ shard mapping
 //!
-//! 1. **Per-edge RNG streams** (see [`super::shard`]): no draw depends on
-//!    edge placement.
-//! 2. **Conservative windows**: every cross-thread message is a delivered
-//!    network message, and [`resolve_fate`] guarantees its delay is at
-//!    least the lookahead `Δ = NetworkSpec::min_delay_ms(model_bytes)`.
-//!    Advancing all shards through `[T, T + Δ)` in lockstep therefore
-//!    cannot miss an arrival: anything sent inside the window lands at or
-//!    after its end. With `Δ = 0` (ideal or lognormal latency) the window
-//!    degenerates to the single instant `T` and the loop iterates passes
-//!    until the instant quiesces — still exact, no longer parallel.
-//! 3. **Key-stamped total order**: every run event and ledger charge
-//!    carries a [`Key`] `(time, source, seq)` where source 0 is the cloud
-//!    and source `1 + edge` is the edge, each with its own deterministic
-//!    sequence counter. Events are merged and emitted in key order;
-//!    charges are replayed into the cloud's running `total_spent` in key
-//!    order, so the `mean_spent` inside every trace point is the same
-//!    f64 at any shard count.
+//! Regions are assigned by the pure function [`region_of`] (`gid % R`) —
+//! the same round-robin rule that places edges on worker shards. The
+//! regional aggregators themselves live on the sequential coordinator
+//! (they are protocol bookkeeping, not compute), so the shard workers are
+//! completely region-agnostic in the async protocol and only *bucket*
+//! their existing per-round reductions per region in the sync protocol.
+//! All regional RNG draws come from per-region streams
+//! (`stream(seed, SALT_REGION_UP, r)`) consumed in key order on the
+//! coordinator, which keeps every hierarchical run bit-for-bit identical
+//! at any shard count — the same contract the flat drivers prove.
 //!
-//! [`resolve_fate`]: crate::net::transport::resolve_fate
+//! ## What the tree changes (and what it does not)
+//!
+//! * **Async**: edge staleness and reply versions are measured against
+//!   the edge's *regional* version; the root's global version, update
+//!   counter and the learning-progress meter advance only when a summary
+//!   arrives. Partial regional batches at shutdown are dropped (their
+//!   edges already received feedback). Per-edge strategies keep seeing
+//!   region-local conditions through their observed costs; the
+//!   [`RegionSignal`] observation surface is fed by the *sync* driver
+//!   (shared strategy) and by the session-level tree manners.
+//! * **Sync**: each round's barrier is priced per region —
+//!   `comp_r + up_r + dl_r` plus the region's own uplink + downlink legs
+//!   — and the cohort waits for the slowest region. The shared strategy
+//!   observes one [`RegionSignal`] per region per round.
+//! * Regional uplink messages are control-plane traffic like churn
+//!   registrations: priced by [`resolve_fate`] (retrying until
+//!   delivered), charged to virtual time, but not counted in
+//!   `messages_sent` (which counts edge↔cloud data messages).
 
 use std::cmp::{Ordering, Reverse};
 use std::collections::BinaryHeap;
@@ -36,158 +50,136 @@ use crate::coordinator::observer::{Observer, RunEvent};
 use crate::coordinator::TracePoint;
 use crate::net::churn::ChurnSpec;
 use crate::net::transport::resolve_fate;
+use crate::strategy::RegionSignal;
 use crate::util::rng::Rng;
 
+use super::merge::{in_window, merge_utility, progress_curve, ChargeEntry, DriverSummary, Key};
 use super::shard::{
     stream, ChargeRec, Cmd, DownMsg, Inject, Out, SpawnMsg, UpMsg, WindowOut, SALT_CLOUD_JOIN,
+    SALT_REGION_UP, SALT_SYNC_CLOUD,
 };
 
-/// Global order stamp of one run event, ledger charge or cloud-queue
-/// entry: virtual time, then source (0 = cloud, `1 + edge` = that edge),
-/// then the source's own sequence counter. Keys are unique by
-/// construction and independent of shard placement, so sorting by key
-/// reproduces the 1-shard total order exactly.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub(crate) struct Key {
-    /// Virtual time (ms); must be finite.
-    pub time: f64,
-    /// 0 for the cloud, `1 + edge id` for an edge.
-    pub src: u64,
-    /// The source's own monotone counter.
-    pub seq: u64,
+/// Region of global edge `gid` under `regions` aggregators: round-robin
+/// (`gid % regions`), a pure function of the id so joiners, shards and
+/// both drivers agree without any routing table.
+pub(crate) fn region_of(gid: usize, regions: usize) -> usize {
+    gid % regions
 }
 
-impl Eq for Key {}
-
-impl Ord for Key {
-    fn cmp(&self, other: &Self) -> Ordering {
-        self.time
-            .partial_cmp(&other.time)
-            .expect("event keys must carry finite times")
-            .then_with(|| self.src.cmp(&other.src))
-            .then_with(|| self.seq.cmp(&other.seq))
-    }
-}
-
-impl PartialOrd for Key {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-/// The synthetic diminishing-returns learning curve in [0, 1) — the ONE
-/// definition every protocol driver (flat and hierarchical) meters
-/// progress against (fig6's sync-vs-async comparison is only meaningful
-/// if they share it).
-pub(crate) fn progress_curve(updates: u64, n_start: usize) -> f64 {
-    let scale = 20.0 * n_start as f64;
-    updates as f64 / (updates as f64 + scale)
-}
-
-/// Bandit reward for merging a τ-interval round at the given progress and
-/// staleness (staleness 0 = the synchronous barrier case).
-pub(crate) fn merge_utility(tau: usize, tau_max: usize, progress: f64, staleness: u64) -> f64 {
-    (tau as f64 / tau_max as f64) * (1.0 - progress) / (1.0 + 0.1 * staleness as f64)
-}
-
-/// Charge records ride a min-heap ordered by key (keys are unique, so
-/// comparing keys alone is a total order). Shared with the hierarchical
-/// driver (`super::hier`), whose root replays charges the same way.
-pub(crate) struct ChargeEntry(pub ChargeRec);
-
-impl PartialEq for ChargeEntry {
-    fn eq(&self, other: &Self) -> bool {
-        self.0.key == other.0.key
-    }
-}
-impl Eq for ChargeEntry {}
-impl Ord for ChargeEntry {
-    fn cmp(&self, other: &Self) -> Ordering {
-        self.0.key.cmp(&other.0.key)
-    }
-}
-impl PartialOrd for ChargeEntry {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-/// What sits in the cloud's own event queue.
+/// What sits in the hierarchical root's event queue.
 #[derive(Debug)]
-enum CloudEv {
-    /// A delivered upload (from a shard, via a window barrier).
+enum HierEv {
+    /// A delivered upload (merged by its edge's regional aggregator).
     Upload(UpMsg),
     /// A churn join alarm.
     JoinAlarm,
+    /// A regional summary arriving at the root after its uplink delay.
+    Summary {
+        /// Which regional aggregator sent it.
+        region: usize,
+        /// Edge merges batched into it.
+        fanin: usize,
+    },
 }
 
-struct CloudItem {
+struct HierItem {
     key: Key,
-    ev: CloudEv,
+    ev: HierEv,
 }
 
-impl PartialEq for CloudItem {
+impl PartialEq for HierItem {
     fn eq(&self, other: &Self) -> bool {
         self.key == other.key
     }
 }
-impl Eq for CloudItem {}
-impl Ord for CloudItem {
+impl Eq for HierItem {}
+impl Ord for HierItem {
     fn cmp(&self, other: &Self) -> Ordering {
         self.key.cmp(&other.key)
     }
 }
-impl PartialOrd for CloudItem {
+impl PartialOrd for HierItem {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
 }
 
-/// The async protocol's sequential cloud: global version and update
-/// counters, the learning-progress meter, the charge replay, and churn
-/// joins. All of it is cheap bookkeeping — the expensive work (RNG,
-/// queues) stays on the shards.
-pub(crate) struct Cloud {
+/// The async protocol's sequential root + regional aggregators: regional
+/// version counters and fan-in batches, the root's update/progress
+/// meters, the charge replay and churn joins. Mirrors the flat
+/// [`Cloud`](super::merge) — the regional tier is pure bookkeeping on the
+/// coordinator, so the expensive work (per-edge RNG, queues) stays on the
+/// shards exactly as in the flat driver.
+struct HierCloud {
     cfg: RunConfig,
     model_bytes: f64,
+    regions: usize,
+    fanout: u64,
+    /// Regional model versions (staleness and reply versions are
+    /// region-local).
+    region_version: Vec<u64>,
+    /// Merges performed per region since t=0 (fanout cadence).
+    region_merges: Vec<u64>,
+    /// Reports folded since the region's last uplink — the next
+    /// summary's fan-in.
+    region_fanin: Vec<usize>,
+    /// Per-region uplink fate streams (`stream(seed, SALT_REGION_UP, r)`).
+    region_up_rng: Vec<Rng>,
+    /// Root (global) version: one bump per summary merge.
     version: u64,
+    /// Root merges — the run's global update counter and trace cadence.
     updates: u64,
+    /// Edge reports folded *at the root* (via summaries): the progress
+    /// meter's input, so learning only advances when work reaches the
+    /// cloud.
+    edge_merges: u64,
     total_spent: f64,
-    /// Fleet size as of now (grows at join alarms, like the reference
-    /// engine's `edges.len()`); the `mean_spent` divisor.
     edge_count: usize,
     n_start: usize,
     next_edge_id: usize,
     joins_done: usize,
     max_joins: usize,
     seq: u64,
-    queue: BinaryHeap<Reverse<CloudItem>>,
+    queue: BinaryHeap<Reverse<HierItem>>,
     pending: BinaryHeap<Reverse<ChargeEntry>>,
     join_rng: Rng,
-    /// Window buffer of emitted events (drained by the driver).
     events: Vec<(Key, RunEvent)>,
-    /// Window buffer of outgoing replies/spawns (drained by the driver).
     outbox: Vec<Inject>,
     processed: u64,
-    /// Time of the latest processed cloud event.
     wall_ms: f64,
+    // Telemetry handles, fetched once per run. Out-of-band by contract:
+    // atomics + wall clock, never the RNG streams or event keys.
+    tele_region_merges: std::sync::Arc<crate::telemetry::Counter>,
+    tele_region_fanin: std::sync::Arc<crate::telemetry::Histogram>,
+    tele_uplink_us: std::sync::Arc<crate::telemetry::Histogram>,
 }
 
-impl Cloud {
-    /// A fresh cloud for `cfg`, fleet-sized counters at t = 0.
-    pub fn new(cfg: RunConfig, model_bytes: f64) -> Cloud {
+impl HierCloud {
+    fn new(cfg: RunConfig, model_bytes: f64) -> HierCloud {
+        let regions = cfg.topology.regions();
+        let fanout = cfg.topology.fanout() as u64;
         let max_joins = if cfg.churn.join_rate > 0.0 {
             cfg.n_edges
         } else {
             0
         };
         let join_rng = stream(cfg.seed, SALT_CLOUD_JOIN, 0);
+        let region_up_rng = (0..regions)
+            .map(|r| stream(cfg.seed, SALT_REGION_UP, r as u64))
+            .collect();
         let n = cfg.n_edges;
-        Cloud {
+        HierCloud {
             cfg,
             model_bytes,
+            regions,
+            fanout,
+            region_version: vec![0; regions],
+            region_merges: vec![0; regions],
+            region_fanin: vec![0; regions],
+            region_up_rng,
             version: 0,
             updates: 0,
+            edge_merges: 0,
             total_spent: 0.0,
             edge_count: n,
             n_start: n,
@@ -202,17 +194,14 @@ impl Cloud {
             outbox: Vec::new(),
             processed: 0,
             wall_ms: 0.0,
+            tele_region_merges: crate::telemetry::counter("fleet.region.merges"),
+            tele_region_fanin: crate::telemetry::histogram("fleet.region.fanin"),
+            tele_uplink_us: crate::telemetry::histogram("hier.uplink_us"),
         }
     }
 
-    /// Synthetic diminishing-returns learning curve in [0, 1).
     fn progress(&self) -> f64 {
-        progress_curve(self.updates, self.n_start)
-    }
-
-    /// Bandit reward for merging a τ-interval round at `staleness`.
-    fn utility(&self, tau: usize, staleness: u64) -> f64 {
-        merge_utility(tau, self.cfg.tau_max, self.progress(), staleness)
+        progress_curve(self.edge_merges, self.n_start)
     }
 
     fn emit(&mut self, time: f64, ev: RunEvent) {
@@ -236,7 +225,8 @@ impl Cloud {
     }
 
     /// Replay every recorded charge ordered before `key` into the running
-    /// spend — this is what makes `mean_spent` shard-count independent.
+    /// spend — identical to the flat cloud's replay, so `mean_spent` is
+    /// shard-count independent here too.
     fn apply_charges_before(&mut self, key: Key) {
         loop {
             let ready = match self.pending.peek() {
@@ -252,7 +242,7 @@ impl Cloud {
     }
 
     /// Absorb one shard's window output (charges + uploads).
-    pub fn absorb(&mut self, charges: Vec<ChargeRec>, uploads: Vec<UpMsg>) {
+    fn absorb(&mut self, charges: Vec<ChargeRec>, uploads: Vec<UpMsg>) {
         for c in charges {
             self.pending.push(Reverse(ChargeEntry(c)));
         }
@@ -262,20 +252,20 @@ impl Cloud {
                 src: 1 + up.report.edge as u64,
                 seq: up.seq,
             };
-            self.queue.push(Reverse(CloudItem {
+            self.queue.push(Reverse(HierItem {
                 key,
-                ev: CloudEv::Upload(up),
+                ev: HierEv::Upload(up),
             }));
         }
     }
 
-    /// Earliest queued cloud event, if any.
-    pub fn next_time(&self) -> Option<f64> {
+    /// Earliest queued root event, if any.
+    fn next_time(&self) -> Option<f64> {
         self.queue.peek().map(|r| r.0.key.time)
     }
 
     /// Arm the first join alarm (t = 0).
-    pub fn start(&mut self) {
+    fn start(&mut self) {
         self.schedule_join(0.0);
     }
 
@@ -290,16 +280,19 @@ impl Cloud {
                 seq: self.seq,
             };
             self.seq += 1;
-            self.queue.push(Reverse(CloudItem {
+            self.queue.push(Reverse(HierItem {
                 key,
-                ev: CloudEv::JoinAlarm,
+                ev: HierEv::JoinAlarm,
             }));
         }
     }
 
-    /// Merge one delivered upload: meter utility, advance the global
-    /// version, stamp the trace cadence, and reply (payload only — timing
-    /// was pre-resolved by the shard).
+    /// A regional aggregator merges one delivered upload: region-local
+    /// staleness and version, bandit feedback riding the pre-resolved
+    /// reply, and — every `fanout`-th merge — a summary dispatched over
+    /// the region's uplink. Conservative-window safe: the uplink delay is
+    /// at least the network's minimum delay, so a summary scheduled
+    /// inside a window always lands at or after its bound.
     fn on_upload(&mut self, key: Key, up: UpMsg) {
         let t = up.arrive_ms;
         self.apply_charges_before(key);
@@ -322,17 +315,17 @@ impl Cloud {
                 wall_ms: t,
             },
         );
-        let staleness = self.version.saturating_sub(up.report.base_version);
-        let u = self.utility(up.report.tau, staleness);
-        self.version += 1;
-        self.updates += 1;
-        if self.updates % self.cfg.eval_every as u64 == 0 {
-            self.trace_point(t);
-        }
+        let r = region_of(up.report.edge, self.regions);
+        let staleness = self.region_version[r].saturating_sub(up.report.base_version);
+        let u = merge_utility(up.report.tau, self.cfg.tau_max, self.progress(), staleness);
+        self.region_version[r] += 1;
+        self.region_merges[r] += 1;
+        self.region_fanin[r] += 1;
+        self.tele_region_merges.inc();
         self.outbox.push(Inject::Down(DownMsg {
             edge: up.report.edge,
             arrive_ms: up.down.arrive_ms,
-            version: self.version,
+            version: self.region_version[r],
             fb_tau: up.report.tau,
             fb_utility: u,
             fb_cost: up.report.cost + up.delay_ms,
@@ -340,11 +333,65 @@ impl Cloud {
             delay_ms: up.down.charge_ms,
             dropped_attempts: up.down.dropped_attempts,
         }));
+        if self.region_merges[r] % self.fanout == 0 {
+            self.send_summary(r, t);
+        }
     }
 
-    /// A join alarm fired: draw the joiner, announce it, and send its
-    /// registration (which rides the network like everything else, so its
-    /// arrival respects the lookahead).
+    /// Dispatch region `r`'s batched summary at `t`: resolve the uplink
+    /// fate on the region's own stream (retrying until delivered, like a
+    /// join registration) and queue the root merge at the arrival
+    /// instant.
+    fn send_summary(&mut self, r: usize, t: f64) {
+        let fanin = std::mem::take(&mut self.region_fanin[r]);
+        if fanin == 0 {
+            return;
+        }
+        let mut at = t;
+        loop {
+            let (delay, _dropped, lost) = resolve_fate(
+                &self.cfg.network,
+                self.cfg.network.bandwidth_mbps,
+                at,
+                self.model_bytes,
+                &mut self.region_up_rng[r],
+            );
+            at += delay;
+            if !lost {
+                break;
+            }
+        }
+        // Virtual uplink latency in µs (the histogram records values, not
+        // host time, for this instrument).
+        self.tele_uplink_us.observe_us(((at - t) * 1000.0) as u64);
+        let key = Key {
+            time: at,
+            src: 0,
+            seq: self.seq,
+        };
+        self.seq += 1;
+        self.queue.push(Reverse(HierItem {
+            key,
+            ev: HierEv::Summary { region: r, fanin },
+        }));
+    }
+
+    /// A regional summary reached the root: fold its batched edge merges
+    /// into the global meters and stamp the trace cadence.
+    fn on_summary(&mut self, key: Key, fanin: usize) {
+        self.apply_charges_before(key);
+        self.version += 1;
+        self.updates += 1;
+        self.edge_merges += fanin as u64;
+        self.tele_region_fanin.observe_us(fanin as u64);
+        if self.updates % self.cfg.eval_every as u64 == 0 {
+            self.trace_point(key.time);
+        }
+    }
+
+    /// A join alarm fired — identical to the flat cloud: the joiner's
+    /// global id decides its region (`region_of`), so no extra draws and
+    /// no routing state.
     fn on_join_alarm(&mut self, t: f64) {
         if self.joins_done >= self.max_joins {
             return;
@@ -380,23 +427,17 @@ impl Cloud {
         self.outbox.push(Inject::Spawn(SpawnMsg {
             edge: gid,
             slowdown,
-            base_version: self.version,
+            base_version: self.region_version[region_of(gid, self.regions)],
             arrive_ms: at,
         }));
         self.schedule_join(t);
     }
 
-    /// Drain and handle every cloud event inside the window.
+    /// Drain and handle every root event inside the window.
     fn process_window(&mut self, bound: f64, inclusive: bool) {
         loop {
             let ready = match self.queue.peek() {
-                Some(Reverse(item)) => {
-                    if inclusive {
-                        item.key.time <= bound
-                    } else {
-                        item.key.time < bound
-                    }
-                }
+                Some(Reverse(item)) => in_window(item.key.time, bound, inclusive),
                 None => false,
             };
             if !ready {
@@ -406,18 +447,21 @@ impl Cloud {
             self.processed += 1;
             self.wall_ms = self.wall_ms.max(item.key.time);
             match item.ev {
-                CloudEv::Upload(up) => self.on_upload(item.key, up),
-                CloudEv::JoinAlarm => {
+                HierEv::Upload(up) => self.on_upload(item.key, up),
+                HierEv::JoinAlarm => {
                     let key = item.key;
                     self.apply_charges_before(key);
                     self.on_join_alarm(key.time);
                 }
+                HierEv::Summary { fanin, .. } => self.on_summary(item.key, fanin),
             }
         }
     }
 
     /// Close the run: fold in every outstanding charge, stamp the closing
-    /// trace point and the `Finished` event at the final wall clock.
+    /// trace point and the `Finished` event. Partial regional batches
+    /// (fan-in accumulated but never uplinked) are dropped — their edges
+    /// already received feedback; only the global meters miss them.
     fn finish(&mut self, final_wall: f64) {
         while let Some(Reverse(entry)) = self.pending.pop() {
             self.total_spent += entry.0.amount;
@@ -436,44 +480,10 @@ impl Cloud {
     }
 }
 
-/// Protocol-level summary a driver hands back to [`FleetSim::run`]
-/// (host-time and per-shard diagnostics are collected separately).
-///
-/// [`FleetSim::run`]: super::FleetSim::run
-pub(crate) struct DriverSummary {
-    /// Global updates achieved.
-    pub updates: u64,
-    /// Churn joins performed.
-    pub joined: usize,
-    /// Final virtual wall clock (ms).
-    pub wall_ms: f64,
-    /// Sum of all ledger charges.
-    pub total_spent: f64,
-    /// Fleet size at the end (divisor of `mean_spent`).
-    pub edge_count: usize,
-    /// Final synthetic progress.
-    pub final_progress: f64,
-    /// Events processed on the coordinator + shard queues.
-    pub events: u64,
-    /// For the synchronous driver: the retired-edge emission already
-    /// happened and shards' flags are authoritative only for churn; the
-    /// driver reports its own count here (`None` for async — count shard
-    /// flags instead).
-    pub sync_retired: Option<usize>,
-}
-
-/// Did `t` land inside the window ending at `bound`?
-pub(crate) fn in_window(t: f64, bound: f64, inclusive: bool) -> bool {
-    if inclusive {
-        t <= bound
-    } else {
-        t < bound
-    }
-}
-
-/// The asynchronous protocol's coordinator loop: lockstep conservative
-/// windows over the worker shards, sequential cloud merging, and the
-/// key-ordered event merge feeding the observers.
+/// The hierarchical asynchronous coordinator loop: the flat driver's
+/// conservative-window lockstep verbatim, with [`HierCloud`] standing in
+/// for the flat cloud. The shard workers are untouched — regions exist
+/// only on this side of the channel.
 pub(crate) fn run_async(
     cfg: &RunConfig,
     model_bytes: f64,
@@ -483,26 +493,19 @@ pub(crate) fn run_async(
 ) -> DriverSummary {
     let k = cmd.len();
     let lookahead = cfg.network.min_delay_ms(model_bytes);
-    // Telemetry handles, fetched once per run. Out-of-band by contract:
-    // wall-clock + atomics only, never the RNG streams or event keys.
     let tele_stall_us = crate::telemetry::histogram("fleet.window_stall_us");
     let tele_merge_us = crate::telemetry::histogram("session.merge_us");
-    let mut cloud = Cloud::new(cfg.clone(), model_bytes);
+    let mut cloud = HierCloud::new(cfg.clone(), model_bytes);
     let mut shard_next: Vec<Option<f64>> = vec![None; k];
     let mut shard_last: Vec<f64> = vec![0.0; k];
     let mut inboxes: Vec<Vec<Inject>> = (0..k).map(|_| Vec::new()).collect();
-    // Scratch buffer for the deliver-now/defer partition below, swapped
-    // back into `inboxes[s]` each pass so steady-state traffic routing
-    // reuses the same two allocations per shard instead of allocating a
-    // fresh `rest` vector every window (allocation-only: the partition
-    // order and contents are untouched).
     let mut deferred: Vec<Inject> = Vec::new();
     let mut shard_processed: u64 = 0;
     let mut window_events: Vec<(Key, RunEvent)> = Vec::new();
 
     fn absorb_window(
         o: WindowOut,
-        cloud: &mut Cloud,
+        cloud: &mut HierCloud,
         shard_next: &mut [Option<f64>],
         shard_last: &mut [f64],
         shard_processed: &mut u64,
@@ -515,7 +518,6 @@ pub(crate) fn run_async(
         cloud.absorb(o.charges, o.uploads);
     }
 
-    // t = 0: initial launches everywhere, first join alarm on the cloud.
     for tx in cmd {
         tx.send(Cmd::Start).expect("fleet worker hung up");
     }
@@ -535,8 +537,6 @@ pub(crate) fn run_async(
     cloud.start();
 
     loop {
-        // Global minimum next event across cloud, shards and undelivered
-        // barrier traffic.
         let mut t_min: Option<f64> = cloud.next_time();
         for s in 0..k {
             let mut sn = shard_next[s];
@@ -555,8 +555,6 @@ pub(crate) fn run_async(
             (t0, true)
         };
 
-        // One pass for a positive lookahead; with Δ = 0, iterate passes
-        // until the instant quiesces (zero-delay cascades).
         loop {
             let mut poked = 0usize;
             for s in 0..k {
@@ -567,9 +565,6 @@ pub(crate) fn run_async(
                 if !(has_work || has_inbox) {
                     continue;
                 }
-                // Deliver only traffic that arrives inside this window;
-                // later arrivals wait for their own window's barrier so
-                // queue insertion order stays shard-count independent.
                 let mut inbox = Vec::new();
                 for m in inboxes[s].drain(..) {
                     if in_window(m.arrive_ms(), bound, inclusive) {
@@ -589,8 +584,6 @@ pub(crate) fn run_async(
                 poked += 1;
             }
             if poked > 0 {
-                // How long the coordinator idles at the lockstep barrier
-                // waiting for the slowest poked shard.
                 let t_stall = std::time::Instant::now();
                 for _ in 0..poked {
                     match out.recv().expect("fleet worker hung up") {
@@ -634,7 +627,6 @@ pub(crate) fn run_async(
             }
         }
 
-        // Deterministic merge: one total order regardless of shard count.
         window_events.sort_by(|a, b| a.0.cmp(&b.0));
         for (_, ev) in window_events.drain(..) {
             for obs in observers.iter_mut() {
@@ -643,9 +635,7 @@ pub(crate) fn run_async(
         }
     }
 
-    let final_wall = shard_last
-        .iter()
-        .fold(cloud.wall_ms, |acc, &t| acc.max(t));
+    let final_wall = shard_last.iter().fold(cloud.wall_ms, |acc, &t| acc.max(t));
     cloud.finish(final_wall);
     window_events.append(&mut cloud.events);
     window_events.sort_by(|a, b| a.0.cmp(&b.0));
@@ -667,19 +657,28 @@ pub(crate) fn run_async(
     }
 }
 
-/// The synchronous protocol's coordinator loop: barrier rounds whose
-/// per-edge work (cost draws, straggle, both message legs) fans out to
-/// the shards and reduces with exact max/min operations, so any shard
-/// count produces the identical round sequence.
+/// The hierarchical synchronous coordinator loop: the flat barrier
+/// protocol with a regional tier in the pricing. Shards answer the same
+/// `SyncRound` command, additionally bucketing their maxima per region;
+/// the driver max-reduces each region across shards, resolves the R
+/// regional uplink + downlink legs on per-region streams, and the round
+/// costs what the slowest region chain costs — so a deep-but-balanced
+/// tree beats `n` edges hammering one cloud link. The shared strategy
+/// observes one [`RegionSignal`] per region per round.
 pub(crate) fn run_sync(
     cfg: &RunConfig,
+    model_bytes: f64,
     mut strategy: Box<dyn crate::strategy::Strategy>,
     cmd: &[Sender<Cmd>],
     out: &Receiver<Out>,
     observers: &mut [Box<dyn Observer>],
 ) -> DriverSummary {
     let k = cmd.len();
-    let mut rng = stream(cfg.seed, super::shard::SALT_SYNC_CLOUD, 0);
+    let regions = cfg.topology.regions();
+    let mut rng = stream(cfg.seed, SALT_SYNC_CLOUD, 0);
+    let mut region_rng: Vec<Rng> = (0..regions)
+        .map(|r| stream(cfg.seed, SALT_REGION_UP, r as u64))
+        .collect();
     let n = cfg.n_edges;
     let n_start = n;
     let mut wall = 0.0f64;
@@ -697,11 +696,18 @@ pub(crate) fn run_sync(
         }
     }
 
-    // Telemetry handles for the sync decision layer (out-of-band: the
-    // select timing reads the wall clock, never the `rng` stream).
     let tele_selects = crate::telemetry::counter("session.selects");
     let tele_select_us = crate::telemetry::histogram("session.select_us");
     let tele_stall_us = crate::telemetry::histogram("fleet.window_stall_us");
+    let tele_region_merges = crate::telemetry::counter("fleet.region.merges");
+    let tele_region_fanin = crate::telemetry::histogram("fleet.region.fanin");
+    let tele_uplink_us = crate::telemetry::histogram("hier.uplink_us");
+
+    // Region sizes are a pure function of (n, R): `region_of` is
+    // round-robin, so region r owns ceil((n - r) / R) initial edges.
+    let region_n: Vec<usize> = (0..regions)
+        .map(|r| (n.saturating_sub(r)).div_ceil(regions))
+        .collect();
 
     loop {
         let min_remaining = (cfg.budget - spent_each).max(0.0);
@@ -729,9 +735,9 @@ pub(crate) fn run_sync(
             })
             .expect("fleet worker hung up");
         }
-        let mut barrier_comp = 0.0f64;
-        let mut up_wait = 0.0f64;
-        let mut dl_wait = 0.0f64;
+        let mut region_comp = vec![0.0f64; regions];
+        let mut region_up = vec![0.0f64; regions];
+        let mut region_dl = vec![0.0f64; regions];
         let mut reports = Vec::with_capacity(n);
         let mut up_drops = Vec::new();
         let mut dl_drops = Vec::new();
@@ -739,9 +745,11 @@ pub(crate) fn run_sync(
         for _ in 0..k {
             match out.recv().expect("fleet worker hung up") {
                 Out::Sync(o) => {
-                    barrier_comp = barrier_comp.max(o.barrier_comp);
-                    up_wait = up_wait.max(o.up_wait);
-                    dl_wait = dl_wait.max(o.dl_wait);
+                    for r in 0..regions {
+                        region_comp[r] = region_comp[r].max(o.region_comp[r]);
+                        region_up[r] = region_up[r].max(o.region_up[r]);
+                        region_dl[r] = region_dl[r].max(o.region_dl[r]);
+                    }
                     reports.extend(o.reports);
                     up_drops.extend(o.up_drops);
                     dl_drops.extend(o.dl_drops);
@@ -750,8 +758,6 @@ pub(crate) fn run_sync(
             }
         }
         tele_stall_us.observe_us(t_stall.elapsed().as_micros() as u64);
-        // Deterministic emission order: upload drops then reply drops,
-        // each in edge order, at the round-start clock.
         up_drops.sort_by_key(|d| d.0);
         dl_drops.sort_by_key(|d| d.0);
         for (edge, attempts, lost) in up_drops.into_iter().chain(dl_drops) {
@@ -767,8 +773,58 @@ pub(crate) fn run_sync(
         }
 
         let comm = cfg.cost.sample_comm(&mut rng);
-        let barrier_cost = barrier_comp + comm + up_wait + dl_wait;
-        // The reference accumulation: one add per edge, in edge order.
+        // Regional chains: each region's barrier completes at
+        // comp_r + up_r + dl_r, then its summary takes the uplink and the
+        // refreshed model the downlink (drawn on the region's own stream,
+        // retrying until delivered); the cohort waits for the slowest.
+        let mut region_cost_sum = vec![0.0f64; regions];
+        for rep in &reports {
+            region_cost_sum[region_of(rep.edge, regions)] += rep.cost;
+        }
+        let mut slowest_chain = 0.0f64;
+        let mut signals = Vec::with_capacity(regions);
+        for r in 0..regions {
+            let mut reg_up = 0.0f64;
+            loop {
+                let (delay, _dropped, lost) = resolve_fate(
+                    &cfg.network,
+                    cfg.network.bandwidth_mbps,
+                    wall,
+                    model_bytes,
+                    &mut region_rng[r],
+                );
+                reg_up += delay;
+                if !lost {
+                    break;
+                }
+            }
+            let mut reg_dl = 0.0f64;
+            loop {
+                let (delay, _dropped, lost) = resolve_fate(
+                    &cfg.network,
+                    cfg.network.bandwidth_mbps,
+                    wall,
+                    model_bytes,
+                    &mut region_rng[r],
+                );
+                reg_dl += delay;
+                if !lost {
+                    break;
+                }
+            }
+            slowest_chain =
+                slowest_chain.max(region_comp[r] + region_up[r] + region_dl[r] + reg_up + reg_dl);
+            tele_region_merges.inc();
+            tele_region_fanin.observe_us(region_n[r] as u64);
+            tele_uplink_us.observe_us((reg_up * 1000.0) as u64);
+            signals.push(RegionSignal {
+                region: r,
+                fanin: region_n[r],
+                mean_cost: region_cost_sum[r] / region_n[r].max(1) as f64,
+                uplink_ms: reg_up,
+            });
+        }
+        let barrier_cost = slowest_chain + comm;
         for _ in 0..n {
             total_spent += barrier_cost;
         }
@@ -789,6 +845,9 @@ pub(crate) fn run_sync(
         updates += 1;
         let u = merge_utility(tau, cfg.tau_max, progress(updates), 0);
         strategy.feedback(0, tau, u, barrier_cost);
+        for signal in &signals {
+            strategy.observe_region(signal);
+        }
         if updates % cfg.eval_every as u64 == 0 {
             emit(
                 observers,
@@ -806,7 +865,6 @@ pub(crate) fn run_sync(
         if spent_each >= cfg.budget {
             budget_retired = true;
         }
-        // Per-round churn hazard: a departure ends the cohort.
         if cfg.churn.leave_rate > 0.0 {
             let p_leave = 1.0 - (-cfg.churn.leave_rate * barrier_cost / 1000.0).exp();
             for tx in cmd {
@@ -825,8 +883,6 @@ pub(crate) fn run_sync(
         }
     }
 
-    // Synchronous EL is fail-stop for the cohort: when one edge ends,
-    // everyone stops. Report whoever actually retired, in edge order.
     let retired: Vec<usize> = if budget_retired {
         (0..n).collect()
     } else {
@@ -872,5 +928,28 @@ pub(crate) fn run_sync(
         final_progress: progress(updates),
         events: 0, // filled from message counters by the caller
         sync_retired: Some(retired.len()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn region_round_robin_partitions_the_fleet() {
+        // The closed-form region size the sync driver uses —
+        // ceil((n - r) / R) — must match what `region_of` actually deals
+        // out, for sizes that do and don't divide evenly.
+        for (n, regions) in [(1000usize, 4usize), (997, 7), (5, 5), (6, 4)] {
+            let mut counts = vec![0usize; regions];
+            for gid in 0..n {
+                counts[region_of(gid, regions)] += 1;
+            }
+            let expected: Vec<usize> = (0..regions)
+                .map(|r| (n.saturating_sub(r)).div_ceil(regions))
+                .collect();
+            assert_eq!(counts, expected, "n={n} R={regions}");
+            assert_eq!(counts.iter().sum::<usize>(), n);
+        }
     }
 }

@@ -30,6 +30,16 @@
 //! window; for parallel speedups use a latency model with a positive
 //! floor (`fixed:MS`, `uniform:LO:HI`).
 //!
+//! ## Hierarchical topologies
+//!
+//! Under a [`Topology::Tree`](crate::net::Topology) with more than one
+//! region, [`FleetSim::run`] routes to the hierarchical drivers in the
+//! internal `hier` module: regional aggregators pre-combine edge traffic
+//! (`region = gid % R`) and the cloud merges `R` regional summary streams
+//! instead of `n` edge reports. `tree:1` routes through the flat drivers
+//! unchanged, which is what makes the documented `tree:1 ≡ flat`
+//! bit-identity hold by construction (asserted in `tests/sharding.rs`).
+//!
 //! The driver streams the same [`RunEvent`] vocabulary as the real
 //! [`Session`] engine, so observers written for training runs work
 //! unchanged at fleet scale:
@@ -58,6 +68,7 @@
 //! [`EventQueue`]: crate::sim::clock::EventQueue
 //! [`RunEvent`]: crate::coordinator::RunEvent
 
+mod hier;
 mod merge;
 mod shard;
 
@@ -251,10 +262,17 @@ impl FleetSim {
         let setup_seconds = setup0.elapsed().as_secs_f64();
 
         let loop0 = std::time::Instant::now();
-        let summary: DriverSummary = if let Some(strategy) = sync_strategy {
-            run_sync(&cfg, strategy, &cmd_txs, &out_rx, &mut observers)
-        } else {
-            run_async(&cfg, model_bytes, &cmd_txs, &out_rx, &mut observers)
+        // tree:1 deliberately routes through the flat drivers: a
+        // single-region tree is the flat protocol, so the documented
+        // `tree:1 ≡ flat` bit-identity holds by construction.
+        let hierarchical = cfg.topology.regions() > 1;
+        let summary: DriverSummary = match (sync_strategy, hierarchical) {
+            (Some(strategy), false) => run_sync(&cfg, strategy, &cmd_txs, &out_rx, &mut observers),
+            (Some(strategy), true) => {
+                hier::run_sync(&cfg, model_bytes, strategy, &cmd_txs, &out_rx, &mut observers)
+            }
+            (None, false) => run_async(&cfg, model_bytes, &cmd_txs, &out_rx, &mut observers),
+            (None, true) => hier::run_async(&cfg, model_bytes, &cmd_txs, &out_rx, &mut observers),
         };
         // Stop the loop clock before teardown: Finish round-trips and
         // thread joins scale with the shard count and must not bias the
@@ -315,6 +333,7 @@ mod tests {
     use crate::coordinator::observer::{from_fn, RunEvent};
     use crate::net::churn::ChurnSpec;
     use crate::net::model::NetworkSpec;
+    use crate::net::Topology;
     use crate::strategy::StrategySpec;
     use std::cell::Cell;
     use std::rc::Rc;
@@ -446,5 +465,66 @@ mod tests {
         assert_eq!(one.events, four.events);
         assert_eq!(one.shards, 1);
         assert_eq!(four.shards, 4);
+    }
+
+    #[test]
+    fn tree_one_report_equals_flat() {
+        // tree:1 routes through the flat drivers, so the reports must be
+        // bit-identical (the full event-stream check is in
+        // tests/sharding.rs).
+        let mut flat = fleet_cfg(StrategySpec::ol4el_async(), 80);
+        flat.network = NetworkSpec::parse("uniform:2:10,drop:0.02").unwrap();
+        flat.churn = ChurnSpec::parse("poisson:0.2,join:2").unwrap();
+        let mut tree = flat.clone();
+        tree.topology = Topology::parse("tree:1").unwrap();
+        let a = FleetSim::new(flat).unwrap().run().unwrap();
+        let b = FleetSim::new(tree).unwrap().run().unwrap();
+        assert_eq!(a.updates, b.updates);
+        assert_eq!(a.wall_ms, b.wall_ms);
+        assert_eq!(a.mean_spent, b.mean_spent);
+        assert_eq!(a.joined, b.joined);
+        assert_eq!(a.retired, b.retired);
+        assert_eq!(a.messages_sent, b.messages_sent);
+        assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn hier_async_fleet_is_shard_independent() {
+        let mut cfg = fleet_cfg(StrategySpec::ol4el_async(), 120);
+        cfg.topology = Topology::parse("tree:4:fanout=2").unwrap();
+        cfg.network = NetworkSpec::parse("uniform:2:10,drop:0.02").unwrap();
+        cfg.churn = ChurnSpec::parse("poisson:0.2,join:2,restart:300").unwrap();
+        let one = FleetSim::new(cfg.clone()).unwrap().shards(1).run().unwrap();
+        let four = FleetSim::new(cfg).unwrap().shards(4).run().unwrap();
+        assert!(one.updates > 0, "root never merged a summary");
+        assert_eq!(one.updates, four.updates);
+        assert_eq!(one.wall_ms, four.wall_ms);
+        assert_eq!(one.mean_spent, four.mean_spent);
+        assert_eq!(one.retired, four.retired);
+        assert_eq!(one.joined, four.joined);
+        assert_eq!(one.messages_sent, four.messages_sent);
+        assert_eq!(one.messages_lost, four.messages_lost);
+        assert_eq!(one.dropped_attempts, four.dropped_attempts);
+        assert_eq!(one.events, four.events);
+    }
+
+    #[test]
+    fn hier_sync_fleet_is_shard_independent() {
+        let mut cfg = fleet_cfg(StrategySpec::ol4el_sync(), 60);
+        cfg.topology = Topology::parse("tree:3").unwrap();
+        cfg.network = NetworkSpec::parse("uniform:2:10").unwrap();
+        cfg.churn = ChurnSpec::parse("poisson:0.2").unwrap();
+        let one = FleetSim::new(cfg.clone()).unwrap().shards(1).run().unwrap();
+        let three = FleetSim::new(cfg).unwrap().shards(3).run().unwrap();
+        assert!(one.updates > 0);
+        assert!(one.retired > 0, "the cohort should eventually stop");
+        // Regional legs are control-plane: the data-message count is
+        // still 2 legs x N per round, exactly as flat sync.
+        assert_eq!(one.messages_sent, one.updates * 2 * 60);
+        assert_eq!(one.updates, three.updates);
+        assert_eq!(one.wall_ms, three.wall_ms);
+        assert_eq!(one.mean_spent, three.mean_spent);
+        assert_eq!(one.retired, three.retired);
+        assert_eq!(one.messages_sent, three.messages_sent);
     }
 }

@@ -62,6 +62,10 @@ pub(crate) const SALT_CLOUD_JOIN: u64 = 0x6a6f_696e_5f72_6e67; // "join_rng"
 /// Salt of the synchronous driver's cloud stream (shared-bandit selection
 /// and the per-round comm draw).
 pub(crate) const SALT_SYNC_CLOUD: u64 = 0x7379_6e63_5f63_6c64; // "sync_cld"
+/// Salt of the per-region regional→cloud uplink streams of the
+/// hierarchical (`tree:R`) drivers — `stream(seed, SALT_REGION_UP, r)`
+/// resolves region `r`'s summary uplinks, independent of shard count.
+pub(crate) const SALT_REGION_UP: u64 = 0x7265_6769_6f6e_5f75; // "region_u"
 
 /// Derive the deterministic RNG stream `(seed, salt, id)` — identical for
 /// a given edge no matter which shard (or how many shards) hosts it.
@@ -231,6 +235,12 @@ pub(crate) struct WindowOut {
 
 /// A shard's answer to [`Cmd::SyncRound`]: partial reductions of one
 /// barrier round over its owned edges.
+///
+/// Under a hierarchical topology (`tree:R`, R > 1) the same maxima are
+/// additionally bucketed per region (`region_*[r]` over owned edges with
+/// `region_of(edge) == r`), so the driver can price each regional
+/// barrier separately before the regional→cloud uplink legs. The RNG
+/// draws are identical either way — bucketing only reads results.
 pub(crate) struct SyncRoundOut {
     /// Slowest (straggle-scaled) local compute among owned edges.
     pub barrier_comp: f64,
@@ -244,6 +254,12 @@ pub(crate) struct SyncRoundOut {
     pub up_drops: Vec<(usize, u32, bool)>,
     /// Reply drop observations `(edge, attempts, lost)` in edge order.
     pub dl_drops: Vec<(usize, u32, bool)>,
+    /// Per-region slowest compute (length R when hierarchical, else 0).
+    pub region_comp: Vec<f64>,
+    /// Per-region slowest upload resolution (length R or 0).
+    pub region_up: Vec<f64>,
+    /// Per-region slowest reply resolution (length R or 0).
+    pub region_dl: Vec<f64>,
 }
 
 /// A shard's answer to [`Cmd::SyncHazard`].
@@ -299,15 +315,16 @@ enum Ev {
     Spawn(SpawnMsg),
 }
 
-/// One virtual edge: ledger + protocol bookkeeping + its RNG streams.
+/// One virtual edge: protocol bookkeeping + its RNG streams. The hot
+/// ledger state (`spent` / `retired` / `departed`) lives in parallel
+/// arrays on [`Shard`] (struct-of-arrays): the budget check after every
+/// charge and the hazard/finish sweeps touch only those columns, so at
+/// 10⁶ edges they scan dense `Vec<f64>` / `Vec<bool>` lanes instead of
+/// striding through ~200-byte edge structs.
 struct FEdge {
     /// Global edge id.
     id: usize,
     slowdown: f64,
-    spent: f64,
-    retired: bool,
-    /// Churn-departed (crashed); in-flight work is void until a restart.
-    departed: bool,
     base_version: u64,
     /// (launch generation, τ, charged cost) of the round in flight.
     inflight: Option<(u64, usize, f64)>,
@@ -330,9 +347,6 @@ impl FEdge {
         FEdge {
             id,
             slowdown,
-            spent: 0.0,
-            retired: false,
-            departed: false,
             base_version: 0,
             inflight: None,
             round_seq: 0,
@@ -351,16 +365,32 @@ pub(crate) struct Shard {
     k: usize,
     cfg: RunConfig,
     model_bytes: f64,
-    /// Owned edges, in arrival order; `slots` maps global id → index.
+    /// Owned edges, in arrival order (struct-of-arrays with the three
+    /// ledger columns below; `slot` maps global id → index).
     edges: Vec<FEdge>,
+    /// Ledger column: resource spent (ms), indexed like `edges`.
+    spent: Vec<f64>,
+    /// Ledger column: budget exhausted / stopped, indexed like `edges`.
+    retired: Vec<bool>,
+    /// Ledger column: churn-departed (crashed; in-flight work is void
+    /// until a restart), indexed like `edges`.
+    departed: Vec<bool>,
     /// Async protocol: one single-edge strategy instance per owned edge
     /// (same index; `select`/`feedback` always address edge 0).
     strategies: Vec<Box<dyn Strategy>>,
-    slots: HashMap<usize, usize>,
+    /// Slot lookup for churn joiners only — initial edges are placed
+    /// round-robin so their slot is the pure computation `gid / k`.
+    joiner_slots: HashMap<usize, usize>,
     queue: EventQueue<Ev>,
     out_uploads: Vec<UpMsg>,
     out_charges: Vec<ChargeRec>,
     out_events: Vec<(Key, RunEvent)>,
+    /// High-water marks of the three output buffers: each window's
+    /// replacement vector is preallocated to the largest batch seen, so
+    /// the steady-state loop stops growing fresh allocations.
+    cap_uploads: usize,
+    cap_charges: usize,
+    cap_events: usize,
     processed: u64,
     sent: u64,
     lost: u64,
@@ -389,30 +419,36 @@ impl Shard {
         slowdowns: &[f64],
     ) -> anyhow::Result<Shard> {
         let is_async = !cfg.strategy.is_sync();
-        let mut edges = Vec::new();
+        let owned = cfg.n_edges.saturating_sub(id).div_ceil(k.max(1));
+        let mut edges = Vec::with_capacity(owned);
         let mut strategies: Vec<Box<dyn Strategy>> = Vec::new();
-        let mut slots = HashMap::new();
         let mut gid = id;
         while gid < cfg.n_edges {
-            slots.insert(gid, edges.len());
             edges.push(FEdge::new(cfg.seed, gid, slowdowns[gid]));
             if is_async {
                 strategies.push(strategy::build_edge(&cfg, slowdowns[gid])?);
             }
             gid += k;
         }
+        let n = edges.len();
         Ok(Shard {
             id,
             k,
             cfg,
             model_bytes,
             edges,
+            spent: vec![0.0; n],
+            retired: vec![false; n],
+            departed: vec![false; n],
             strategies,
-            slots,
+            joiner_slots: HashMap::new(),
             queue: EventQueue::new(),
             out_uploads: Vec::new(),
             out_charges: Vec::new(),
             out_events: Vec::new(),
+            cap_uploads: 0,
+            cap_charges: 0,
+            cap_events: 0,
             processed: 0,
             sent: 0,
             lost: 0,
@@ -425,8 +461,18 @@ impl Shard {
         })
     }
 
+    /// Slot of global edge `gid`. Initial edges are pushed in ascending
+    /// id order with stride `k` (`gid = id, id + k, id + 2k, …`), so
+    /// their slot is the pure computation `gid / k` — no hash lookup on
+    /// the hot path. Only churn joiners (ids ≥ `n_edges`) go through the
+    /// side map.
     fn slot(&self, gid: usize) -> usize {
-        *self.slots.get(&gid).expect("event for unknown edge")
+        if gid < self.cfg.n_edges {
+            debug_assert_eq!(gid % self.k, self.id, "event routed to wrong shard");
+            gid / self.k
+        } else {
+            *self.joiner_slots.get(&gid).expect("event for unknown edge")
+        }
     }
 
     /// The edge's link bandwidth: slower hardware sits behind a
@@ -462,7 +508,7 @@ impl Shard {
             st.on_edge_retired(0);
         }
         let edge = self.edges[l].id;
-        let spent = self.edges[l].spent;
+        let spent = self.spent[l];
         let wall_ms = self.queue.now();
         self.emit(
             l,
@@ -484,10 +530,9 @@ impl Shard {
 
     /// Charge only the edge's ledger (the cloud already counted it).
     fn charge_ledger_only(&mut self, l: usize, amount: f64) {
-        let e = &mut self.edges[l];
-        e.spent += amount;
-        if e.spent >= self.cfg.budget {
-            e.retired = true;
+        self.spent[l] += amount;
+        if self.spent[l] >= self.cfg.budget {
+            self.retired[l] = true;
         }
     }
 
@@ -509,12 +554,12 @@ impl Shard {
     fn launch(&mut self, l: usize) {
         let now = self.queue.now();
         if self.cfg.failure_rate > 0.0 && self.edges[l].rng.f64() < self.cfg.failure_rate {
-            self.edges[l].departed = true;
-            self.edges[l].retired = true;
+            self.departed[l] = true;
+            self.retired[l] = true;
             self.emit_retired(l);
             return;
         }
-        let remaining = (self.cfg.budget - self.edges[l].spent).max(0.0);
+        let remaining = (self.cfg.budget - self.spent[l]).max(0.0);
         self.tele_selects.inc();
         let t_select = std::time::Instant::now();
         let selected = {
@@ -524,9 +569,7 @@ impl Shard {
         self.tele_select_us
             .observe_us(t_select.elapsed().as_micros() as u64);
         let Some(tau) = selected else {
-            if !self.edges[l].retired {
-                self.edges[l].retired = true;
-            }
+            self.retired[l] = true;
             self.emit_retired(l);
             return;
         };
@@ -582,7 +625,7 @@ impl Shard {
     /// The edge finished τ iterations: ship the report upward.
     fn on_compute(&mut self, l: usize, round: u64) {
         let stale = self.edges[l].inflight.map(|(g, _, _)| g) != Some(round);
-        if stale || self.edges[l].departed {
+        if stale || self.departed[l] {
             return;
         }
         let (_, tau, cost) = self.edges[l].inflight.take().expect("checked inflight");
@@ -687,7 +730,7 @@ impl Shard {
         if m.fb_tau >= 1 {
             self.strategies[l].feedback(0, m.fb_tau, m.fb_utility, m.fb_cost);
         }
-        if self.edges[l].departed {
+        if self.departed[l] {
             return; // crashed while the reply flew: nothing arrives
         }
         if m.dropped_attempts > 0 {
@@ -734,7 +777,7 @@ impl Shard {
         if waited > 0.0 {
             self.charge(l, waited);
         }
-        if !self.edges[l].departed {
+        if !self.departed[l] {
             self.launch(l); // wasted round; start over
         }
     }
@@ -755,15 +798,12 @@ impl Shard {
     }
 
     fn on_leave(&mut self, l: usize) {
-        if self.edges[l].departed || self.edges[l].retired {
+        if self.departed[l] || self.retired[l] {
             return;
         }
-        {
-            let e = &mut self.edges[l];
-            e.departed = true;
-            e.retired = true;
-            e.inflight = None;
-        }
+        self.departed[l] = true;
+        self.retired[l] = true;
+        self.edges[l].inflight = None;
         self.emit_retired(l);
         let restart = self.cfg.churn.restart_ms;
         if restart > 0.0 {
@@ -774,12 +814,12 @@ impl Shard {
     }
 
     fn on_restart(&mut self, l: usize) {
-        if !self.edges[l].departed {
+        if !self.departed[l] {
             return;
         }
-        self.edges[l].departed = false;
-        if self.cfg.budget - self.edges[l].spent > 0.0 {
-            self.edges[l].retired = false;
+        self.departed[l] = false;
+        if self.cfg.budget - self.spent[l] > 0.0 {
+            self.retired[l] = false;
             let gid = self.edges[l].id;
             let wall_ms = self.queue.now();
             self.emit(
@@ -801,10 +841,13 @@ impl Shard {
     fn on_spawn(&mut self, m: SpawnMsg) {
         debug_assert_eq!(m.edge % self.k, self.id, "spawn routed to wrong shard");
         let l = self.edges.len();
-        self.slots.insert(m.edge, l);
+        self.joiner_slots.insert(m.edge, l);
         let mut e = FEdge::new(self.cfg.seed, m.edge, m.slowdown);
         e.base_version = m.base_version;
         self.edges.push(e);
+        self.spent.push(0.0);
+        self.retired.push(false);
+        self.departed.push(false);
         // The factory already built instances for the whole t=0 fleet; a
         // failure for a joiner's slowdown mid-run is a plugin bug, and a
         // worker thread has no error channel — fail loudly.
@@ -876,11 +919,22 @@ impl Shard {
 
     fn take_window_out(&mut self) -> WindowOut {
         let next = self.queue.next_time();
+        // Hand the buffers over preallocated to the high-water mark, so
+        // after warmup the per-window refills stop allocating.
+        self.cap_uploads = self.cap_uploads.max(self.out_uploads.len());
+        self.cap_charges = self.cap_charges.max(self.out_charges.len());
+        self.cap_events = self.cap_events.max(self.out_events.len());
         WindowOut {
             shard: self.id,
-            uploads: std::mem::take(&mut self.out_uploads),
-            charges: std::mem::take(&mut self.out_charges),
-            events: std::mem::take(&mut self.out_events),
+            uploads: std::mem::replace(
+                &mut self.out_uploads,
+                Vec::with_capacity(self.cap_uploads),
+            ),
+            charges: std::mem::replace(
+                &mut self.out_charges,
+                Vec::with_capacity(self.cap_charges),
+            ),
+            events: std::mem::replace(&mut self.out_events, Vec::with_capacity(self.cap_events)),
             next_time: next.unwrap_or(0.0),
             has_next: next.is_some(),
             processed: std::mem::take(&mut self.processed),
@@ -898,20 +952,32 @@ impl Shard {
         let straggle_factor = self.cfg.churn.straggle_factor;
         let bytes = self.model_bytes;
         let n = self.edges.len();
+        // Hierarchical topologies additionally bucket the same maxima per
+        // region (pure bookkeeping over results already drawn — the RNG
+        // streams and their draw order are identical to the flat path).
+        let regions = self.cfg.topology.regions();
+        let hier = regions > 1;
         let mut barrier_comp = 0.0f64;
         let mut up_wait = 0.0f64;
         let mut dl_wait = 0.0f64;
+        let mut region_comp = vec![0.0f64; if hier { regions } else { 0 }];
+        let mut region_up = vec![0.0f64; if hier { regions } else { 0 }];
+        let mut region_dl = vec![0.0f64; if hier { regions } else { 0 }];
         let mut reports = Vec::with_capacity(n);
         let mut up_drops = Vec::new();
         let mut dl_drops = Vec::new();
         for l in 0..n {
             let gid = self.edges[l].id;
+            let r = gid % regions;
             let comp = self.round_cost(l, tau);
             let mut effective = comp;
             if straggle_p > 0.0 && self.edges[l].churn.f64() < straggle_p {
                 effective *= straggle_factor;
             }
             barrier_comp = barrier_comp.max(effective);
+            if hier {
+                region_comp[r] = region_comp[r].max(effective);
+            }
             reports.push(LocalReport {
                 edge: gid,
                 tau,
@@ -934,6 +1000,9 @@ impl Shard {
                 up_drops.push((gid, dropped, is_lost));
             }
             up_wait = up_wait.max(delay);
+            if hier {
+                region_up[r] = region_up[r].max(delay);
+            }
             // Broadcast (reply) leg.
             self.sent += 1;
             let (delay, dropped, is_lost) = {
@@ -948,6 +1017,9 @@ impl Shard {
                 dl_drops.push((gid, dropped, is_lost));
             }
             dl_wait = dl_wait.max(delay);
+            if hier {
+                region_dl[r] = region_dl[r].max(delay);
+            }
         }
         SyncRoundOut {
             barrier_comp,
@@ -956,22 +1028,23 @@ impl Shard {
             reports,
             up_drops,
             dl_drops,
+            region_comp,
+            region_up,
+            region_dl,
         }
     }
 
     /// Per-round departure hazard draw on each owned edge's churn stream.
     fn sync_hazard(&mut self, p_leave: f64) -> HazardOut {
         let mut departed = Vec::new();
-        for e in self.edges.iter_mut() {
-            if e.churn.f64() < p_leave {
-                e.departed = true;
-                e.retired = true;
-                departed.push(e.id);
+        for l in 0..self.edges.len() {
+            if self.edges[l].churn.f64() < p_leave {
+                self.departed[l] = true;
+                self.retired[l] = true;
+                departed.push(self.edges[l].id);
             }
         }
-        HazardOut {
-            departed,
-        }
+        HazardOut { departed }
     }
 
     fn finish_out(&self) -> FinishOut {
@@ -984,7 +1057,7 @@ impl Shard {
         crate::telemetry::counter("transport.bytes")
             .add((self.sent as f64 * self.model_bytes) as u64);
         FinishOut {
-            retired: self.edges.iter().filter(|e| e.retired).count(),
+            retired: self.retired.iter().filter(|&&r| r).count(),
             sent: self.sent,
             lost: self.lost,
             dropped_attempts: self.dropped_attempts,

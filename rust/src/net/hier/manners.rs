@@ -1,0 +1,515 @@
+//! Tree-backed collaboration manners: regional aggregators pre-combine
+//! edge updates, and the cloud merges R regional summaries instead of n
+//! edge reports.
+//!
+//! Both manners transcribe their flat counterparts
+//! ([`SyncBarrier`](crate::coordinator::sync::SyncBarrier),
+//! [`AsyncMerge`](crate::coordinator::asynchronous::AsyncMerge)) — same
+//! scheduling, same RNG draw order, same ledger math — and change only the
+//! merge policy: edge models first combine *within their region* via the
+//! learner's own merge rule ([`Learner::aggregate`] in the barrier,
+//! staleness-discounted lerp in the async manner), then the cloud folds
+//! the regional summaries. An edge's region is `edge_id % R`, matching the
+//! fleet simulator's region mapping.
+//!
+//! `tree:1` never reaches these manners: the session router
+//! ([`mode_for`](crate::coordinator::mode_for)) sends a single-region tree
+//! down the flat code path, because one region combining every edge IS the
+//! cloud — that is what makes `tree:1` bit-identical to `flat`. (For the
+//! barrier the identity also holds structurally: aggregating one regional
+//! summary with its own total weight is the identity, asserted in the unit
+//! tests below.)
+//!
+//! These manners model aggregation *structure*, not transport: like the
+//! legacy ideal-path manners they simulate no latency, loss or churn. The
+//! tree x network x churn cross product — regional uplink legs, per-region
+//! join streams — lives in the fleet simulator (`net::fleet::hier`).
+//! Neither manner opts into checkpointing (the default `snapshot` errors),
+//! so hierarchical sessions do not resume — same stance as the simulated
+//! network manners.
+
+use anyhow::Result;
+
+use crate::coordinator::aggregate;
+use crate::coordinator::observer::{LocalReport, RunEvent};
+use crate::coordinator::session::{CollaborationMode, Session};
+use crate::coordinator::utility::UtilityKind;
+use crate::model::{Learner as _, ModelState};
+use crate::sim::clock::EventQueue;
+use crate::strategy::{RegionSignal, RoundObservation};
+
+/// Barrier rounds with two-tier weighted aggregation: every round each
+/// region pre-combines its edges' models (shard-weighted), then the cloud
+/// combines the R regional summaries weighted by regional data share.
+#[derive(Debug, Default)]
+pub struct HierSyncBarrier {
+    regions: usize,
+    overhead: f64,
+    round_tau: usize,
+    round_cost: f64,
+    round_comm: f64,
+    round_comp_sum: f64,
+    // Per-region cost accumulators for the strategy's region observations,
+    // rebuilt every round.
+    region_cost: Vec<f64>,
+    region_n: Vec<usize>,
+    reported: usize,
+}
+
+impl HierSyncBarrier {
+    /// A tree-backed barrier manner; the region count comes from the
+    /// session config's topology at `begin`.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl CollaborationMode for HierSyncBarrier {
+    fn name(&self) -> &'static str {
+        "hier-sync-barrier"
+    }
+
+    fn begin(&mut self, s: &mut Session<'_>) -> Result<()> {
+        self.regions = s.cfg().topology.regions();
+        self.overhead = 1.0 + s.strategy.edge_overhead();
+        Ok(())
+    }
+
+    fn step(&mut self, s: &mut Session<'_>) -> Result<Option<Vec<LocalReport>>> {
+        // Identical to the flat barrier: shared decision, affordable for
+        // the tightest ledger, straggler defines the round.
+        let min_remaining = s
+            .world
+            .edges
+            .iter()
+            .map(|e| e.remaining())
+            .fold(f64::INFINITY, f64::min);
+        let Some(tau) = s.strategy.select(0, min_remaining, &mut s.world.rng) else {
+            return Ok(None);
+        };
+        let wall_ms = s.wall_ms;
+        s.emit(RunEvent::RoundStart {
+            edge: None,
+            tau,
+            wall_ms,
+        });
+
+        let hyper = s.cfg().hyper.at_version(s.world.version);
+        let cost = s.cfg().cost;
+        let n = s.world.edges.len();
+        let mut reports = Vec::with_capacity(n);
+        let mut barrier_comp = 0.0f64;
+        let mut comp_sum = 0.0f64;
+        self.region_cost = vec![0.0; self.regions];
+        self.region_n = vec![0; self.regions];
+        for i in 0..n {
+            let base_version = s.world.edges[i].base_version;
+            let r = s.local_round(i, tau, &hyper)?;
+            let charged = r.comp_cost * self.overhead;
+            barrier_comp = barrier_comp.max(charged);
+            comp_sum += charged;
+            self.region_cost[i % self.regions] += charged;
+            self.region_n[i % self.regions] += 1;
+            reports.push(LocalReport {
+                edge: i,
+                tau,
+                cost: charged,
+                train_signal: r.train_signal,
+                base_version,
+            });
+        }
+        let comm = cost.sample_comm(&mut s.world.rng);
+        let barrier_cost = barrier_comp + comm;
+
+        for edge in s.world.edges.iter_mut() {
+            edge.charge(barrier_cost);
+        }
+        s.wall_ms += barrier_cost;
+
+        self.round_tau = tau;
+        self.round_cost = barrier_cost;
+        self.round_comm = comm;
+        self.round_comp_sum = comp_sum;
+        self.reported = 0;
+        Ok(Some(reports))
+    }
+
+    fn on_report(&mut self, s: &mut Session<'_>, _report: &LocalReport) -> Result<()> {
+        self.reported += 1;
+        if self.reported < s.world.edges.len() {
+            return Ok(());
+        }
+
+        // Tier 1: each region pre-combines its own edges via the learner's
+        // merge rule (shard-weighted, exactly the flat barrier's rule
+        // applied to the regional cohort). Tier 2: the cloud combines the
+        // regional summaries, each weighted by its region's total data
+        // share — for a single region the summary is taken verbatim, so a
+        // one-region tree reproduces the flat aggregate exactly.
+        let prev_global = s.world.global.clone();
+        let mut summaries: Vec<(Vec<f32>, f64)> = Vec::with_capacity(self.regions);
+        for r in 0..self.regions {
+            let locals: Vec<(&[f32], f64)> = s
+                .world
+                .edges
+                .iter()
+                .filter(|e| e.id % self.regions == r)
+                .map(|e| (e.model.params.as_slice(), s.world.weights[e.id]))
+                .collect();
+            let weight: f64 = locals.iter().map(|(_, w)| *w).sum();
+            summaries.push((s.world.learner.aggregate(&locals), weight));
+        }
+        let new_global = if self.regions == 1 {
+            ModelState::new(summaries.pop().expect("one regional summary").0)
+        } else {
+            let uplinked: Vec<(&[f32], f64)> = summaries
+                .iter()
+                .map(|(p, w)| (p.as_slice(), *w))
+                .collect();
+            ModelState::new(s.world.learner.aggregate(&uplinked))
+        };
+
+        let divergence = s
+            .world
+            .edges
+            .iter()
+            .map(|e| e.model.l2_distance(&new_global))
+            .sum::<f64>()
+            / s.world.edges.len() as f64;
+        let obs = RoundObservation {
+            divergence,
+            global_delta: prev_global.l2_distance(&new_global),
+            mean_comp: self.round_comp_sum / (s.world.edges.len() as f64 * self.round_tau as f64),
+            comm: self.round_comm,
+            lr: s.cfg().hyper.lr as f64,
+        };
+
+        s.world.global = new_global;
+        s.world.version += 1;
+        s.updates += 1;
+
+        let metric = s.evaluate()?;
+        let u = s.measure_utility(&prev_global, metric);
+        s.strategy.feedback(0, self.round_tau, u, self.round_cost);
+        s.strategy.observe_round(&obs);
+        // Region-local signals: per-region mean compute cost this round.
+        // The session manners model no transport, so the shared comm draw
+        // stands in for every region's uplink.
+        for r in 0..self.regions {
+            let n_r = self.region_n[r];
+            if n_r == 0 {
+                continue;
+            }
+            s.strategy.observe_region(&RegionSignal {
+                region: r,
+                fanin: n_r,
+                mean_cost: self.region_cost[r] / n_r as f64,
+                uplink_ms: self.round_comm,
+            });
+        }
+
+        let (global, version) = (s.world.global.clone(), s.world.version);
+        for edge in s.world.edges.iter_mut() {
+            edge.sync_with_global(&global, version);
+        }
+
+        s.last_metric = metric;
+        if s.due_for_trace() {
+            s.record_trace_point(metric);
+        }
+        Ok(())
+    }
+
+    fn is_done(&self, s: &Session<'_>) -> bool {
+        s.world.edges.iter().any(|e| e.retired)
+    }
+}
+
+/// An in-flight local round awaiting its completion event.
+#[derive(Clone, Copy, Debug)]
+struct InFlight {
+    tau: usize,
+    total_cost: f64,
+    train_signal: f64,
+}
+
+/// Event-driven scheduling with two-tier merging: an edge's finished model
+/// lerps into its REGION model (staleness measured against the regional
+/// version), and every `fanout` regional merges the region folds into the
+/// global model and re-syncs from it — the cloud absorbs batched regional
+/// summaries instead of every edge report.
+#[derive(Debug, Default)]
+pub struct HierAsyncMerge {
+    queue: EventQueue,
+    inflight: Vec<Option<InFlight>>,
+    regions: usize,
+    fanout: u64,
+    region_models: Vec<ModelState>,
+    region_versions: Vec<u64>,
+    region_merges: Vec<u64>,
+    region_cost: Vec<f64>,
+    region_cost_n: Vec<u64>,
+}
+
+impl HierAsyncMerge {
+    /// A tree-backed async manner; regions and fanout come from the
+    /// session config's topology at `begin`.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Identical to the flat async launch: failure roll, interval
+    /// selection, local round, up-front charge, completion event.
+    fn launch(&mut self, s: &mut Session<'_>, i: usize) -> Result<()> {
+        if s.inject_failure(i) {
+            return Ok(());
+        }
+        let remaining = s.world.edges[i].remaining();
+        let Some(tau) = s.strategy.select(i, remaining, &mut s.world.rng) else {
+            s.world.edges[i].retired = true;
+            return Ok(());
+        };
+        let wall_ms = s.wall_ms;
+        s.emit(RunEvent::RoundStart {
+            edge: Some(i),
+            tau,
+            wall_ms,
+        });
+        let n = s.world.edges.len() as u64;
+        let hyper = s.cfg().hyper.at_version(s.world.version / n);
+        let cost = s.cfg().cost;
+        let round = s.local_round(i, tau, &hyper)?;
+        let comm = cost.sample_comm(&mut s.world.rng);
+        let total = round.comp_cost + comm;
+        s.world.edges[i].charge(total);
+        self.inflight[i] = Some(InFlight {
+            tau,
+            total_cost: total,
+            train_signal: round.train_signal,
+        });
+        self.queue.push(self.queue.now() + total, i);
+        Ok(())
+    }
+}
+
+impl CollaborationMode for HierAsyncMerge {
+    fn name(&self) -> &'static str {
+        "hier-async-merge"
+    }
+
+    fn begin(&mut self, s: &mut Session<'_>) -> Result<()> {
+        self.regions = s.cfg().topology.regions();
+        self.fanout = s.cfg().topology.fanout() as u64;
+        self.region_models = vec![s.world.global.clone(); self.regions];
+        self.region_versions = vec![0; self.regions];
+        self.region_merges = vec![0; self.regions];
+        self.region_cost = vec![0.0; self.regions];
+        self.region_cost_n = vec![0; self.regions];
+        self.inflight = vec![None; s.world.edges.len()];
+        for i in 0..s.world.edges.len() {
+            self.launch(s, i)?;
+        }
+        Ok(())
+    }
+
+    fn step(&mut self, s: &mut Session<'_>) -> Result<Option<Vec<LocalReport>>> {
+        let Some(ev) = self.queue.pop() else {
+            return Ok(None);
+        };
+        s.wall_ms = self.queue.now();
+        let i = ev.payload;
+        let fl = self.inflight[i]
+            .take()
+            .expect("completion without in-flight round");
+        Ok(Some(vec![LocalReport {
+            edge: i,
+            tau: fl.tau,
+            cost: fl.total_cost,
+            train_signal: fl.train_signal,
+            base_version: s.world.edges[i].base_version,
+        }]))
+    }
+
+    fn on_report(&mut self, s: &mut Session<'_>, report: &LocalReport) -> Result<()> {
+        let i = report.edge;
+        let r = i % self.regions;
+
+        // Tier 1: merge this edge's model into its REGION model, staleness
+        // measured against the regional version the edge last synced from.
+        let prev_global = s.world.global.clone();
+        let staleness = self.region_versions[r].saturating_sub(report.base_version);
+        let alpha = aggregate::async_merge_weight(
+            s.cfg().async_alpha,
+            staleness,
+            s.cfg().staleness_decay,
+        );
+        aggregate::async_merge(&mut self.region_models[r], &s.world.edges[i].model, alpha);
+        self.region_versions[r] += 1;
+        self.region_merges[r] += 1;
+        self.region_cost[r] += report.cost;
+        self.region_cost_n[r] += 1;
+
+        // Tier 2: every `fanout` regional merges the region uplinks its
+        // summary — the global model absorbs it at the fresh mixing rate,
+        // the region re-syncs from the new global (the download leg), and
+        // the strategy observes the region's cost window.
+        if self.region_merges[r] % self.fanout == 0 {
+            aggregate::async_merge(&mut s.world.global, &self.region_models[r], s.cfg().async_alpha);
+            s.world.version += 1;
+            self.region_models[r] = s.world.global.clone();
+            let fanin = self.region_cost_n[r];
+            s.strategy.observe_region(&RegionSignal {
+                region: r,
+                fanin: fanin as usize,
+                mean_cost: self.region_cost[r] / fanin.max(1) as f64,
+                uplink_ms: 0.0,
+            });
+            self.region_cost[r] = 0.0;
+            self.region_cost_n[r] = 0;
+        }
+        s.updates += 1;
+
+        // Utility + bandit feedback, exactly the flat async cadence. The
+        // meter measures the GLOBAL model's motion, so between uplinks a
+        // regional merge earns ~zero utility — the bandit learns that
+        // reward arrives at the fanout cadence.
+        let need_eval = s.due_for_trace();
+        let metric = if need_eval || matches!(s.cfg().utility, UtilityKind::EvalGain) {
+            s.evaluate()?
+        } else {
+            s.last_metric
+        };
+        s.last_metric = metric;
+        let u = s.measure_utility(&prev_global, metric);
+        s.strategy.feedback(i, report.tau, u, report.cost);
+
+        // Reply the edge its region's latest model (not the global: in a
+        // tree the edge only ever talks to its regional aggregator).
+        let (model, version) = (self.region_models[r].clone(), self.region_versions[r]);
+        s.world.edges[i].sync_with_global(&model, version);
+
+        if need_eval {
+            s.record_trace_point(metric);
+        }
+
+        self.launch(s, i)
+    }
+
+    fn is_done(&self, _s: &Session<'_>) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+    use crate::coordinator::sync::SyncBarrier;
+    use crate::coordinator::{mode_for, Session};
+    use crate::engine::native::NativeEngine;
+    use crate::model::TaskSpec;
+    use crate::net::Topology;
+    use crate::strategy::StrategySpec;
+
+    fn cfg(strategy: StrategySpec, topology: &str) -> RunConfig {
+        RunConfig {
+            strategy,
+            task: TaskSpec::svm(),
+            data_n: 3000,
+            budget: 900.0,
+            n_edges: 4,
+            seed: 7,
+            topology: Topology::parse(topology).unwrap(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn mode_for_routes_trees_to_hier_manners_and_tree1_flat() {
+        assert_eq!(mode_for(&cfg(StrategySpec::ol4el_sync(), "tree:2")).name(), "hier-sync-barrier");
+        assert_eq!(mode_for(&cfg(StrategySpec::ol4el_async(), "tree:2")).name(), "hier-async-merge");
+        // A single region IS the cloud: tree:1 takes the flat path.
+        assert_eq!(mode_for(&cfg(StrategySpec::ol4el_sync(), "tree:1")).name(), "sync-barrier");
+        assert_eq!(mode_for(&cfg(StrategySpec::ol4el_async(), "tree:1")).name(), "async-merge");
+        assert_eq!(mode_for(&cfg(StrategySpec::ol4el_sync(), "flat")).name(), "sync-barrier");
+    }
+
+    #[test]
+    fn tree1_runs_bit_identical_to_flat_for_both_manners() {
+        // The acceptance identity at the session level: a tree:1 config's
+        // full run equals the flat config's run, trace and scalars.
+        let engine = NativeEngine::default();
+        for strategy in [StrategySpec::ol4el_sync(), StrategySpec::ol4el_async()] {
+            let flat = Session::new(&cfg(strategy.clone(), "flat"), &engine)
+                .unwrap()
+                .run()
+                .unwrap();
+            let tree = Session::new(&cfg(strategy.clone(), "tree:1"), &engine)
+                .unwrap()
+                .run()
+                .unwrap();
+            assert_eq!(flat.trace, tree.trace, "{strategy}");
+            assert_eq!(flat.final_metric, tree.final_metric, "{strategy}");
+            assert_eq!(flat.total_updates, tree.total_updates, "{strategy}");
+            assert_eq!(flat.mean_spent, tree.mean_spent, "{strategy}");
+            assert_eq!(flat.tau_histogram, tree.tau_histogram, "{strategy}");
+        }
+    }
+
+    #[test]
+    fn hier_barrier_with_one_region_matches_flat_barrier_exactly() {
+        // Structural identity, not just routing: driving the hierarchical
+        // barrier itself with R=1 reproduces the flat barrier bit for bit
+        // (one regional summary, taken verbatim, is the flat aggregate).
+        let engine = NativeEngine::default();
+        let c = cfg(StrategySpec::ol4el_sync(), "tree:1");
+        let flat = Session::new(&c, &engine)
+            .unwrap()
+            .run_with(&mut SyncBarrier::new())
+            .unwrap();
+        let hier = Session::new(&c, &engine)
+            .unwrap()
+            .run_with(&mut HierSyncBarrier::new())
+            .unwrap();
+        assert_eq!(flat.trace, hier.trace);
+        assert_eq!(flat.final_metric, hier.final_metric);
+        assert_eq!(flat.total_updates, hier.total_updates);
+        assert_eq!(flat.tau_histogram, hier.tau_histogram);
+    }
+
+    #[test]
+    fn hier_barrier_trains_across_regions() {
+        let engine = NativeEngine::default();
+        let r = Session::new(&cfg(StrategySpec::ol4el_sync(), "tree:2"), &engine)
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(r.total_updates > 0);
+        let first = r.trace.first().unwrap().metric;
+        assert!(r.final_metric > first, "no learning: {first} -> {}", r.final_metric);
+    }
+
+    #[test]
+    fn hier_async_trains_and_retires_the_fleet() {
+        let engine = NativeEngine::default();
+        let r = Session::new(&cfg(StrategySpec::ol4el_async(), "tree:2:fanout=2"), &engine)
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(r.total_updates > 0);
+        assert_eq!(r.retired_edges, 4, "async edges all exhaust their budget");
+        let first = r.trace.first().unwrap().metric;
+        assert!(r.final_metric > first, "no learning: {first} -> {}", r.final_metric);
+    }
+
+    #[test]
+    fn hier_async_is_deterministic_for_fixed_seed() {
+        let engine = NativeEngine::default();
+        let c = cfg(StrategySpec::ol4el_async(), "tree:2");
+        let run = |c: &RunConfig| Session::new(c, &engine).unwrap().run().unwrap();
+        let (a, b) = (run(&c), run(&c));
+        assert_eq!(a.trace, b.trace);
+        assert_eq!(a.final_metric, b.final_metric);
+        assert_eq!(a.tau_histogram, b.tau_histogram);
+    }
+}

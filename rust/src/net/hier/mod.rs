@@ -1,0 +1,243 @@
+//! Hierarchical aggregation: the `--topology` spec and the tree-backed
+//! collaboration manners.
+//!
+//! OL4EL's budget-limited bandit formulation is agnostic to *where*
+//! aggregation happens: a single cloud aggregating every edge (the flat
+//! manners) is both the simulator's scalability ceiling and unrealistic
+//! for fleets beyond a few thousand edges. This module adds one level of
+//! regional aggregators between the edges and the cloud:
+//!
+//! ```text
+//!   edges ──► regional aggregators (R of them) ──► cloud
+//! ```
+//!
+//! - [`Topology`] is the spec type (grammar `flat` | `tree:R[:fanout=N]`),
+//!   parsed, validated and JSON-round-tripped exactly like
+//!   [`NetworkSpec`](crate::net::NetworkSpec).
+//! - [`HierSyncBarrier`] / [`HierAsyncMerge`] are the tree-backed
+//!   [`CollaborationMode`](crate::coordinator::CollaborationMode)s: regional
+//!   aggregators pre-combine edge updates via the existing
+//!   [`Learner::aggregate`](crate::model::Learner::aggregate) (shard
+//!   weighted), and the cloud merges R regional summaries instead of n edge
+//!   reports.
+//! - The sharded fleet simulator maps shards onto regions and models the
+//!   regional→cloud uplinks (`net::fleet::hier`).
+//!
+//! `tree:1` — a single region — IS the flat topology: one aggregator
+//! combining every edge is exactly today's cloud, so the session router
+//! ([`mode_for`](crate::coordinator::mode_for)) and the fleet simulator
+//! both send `tree:1` down the existing flat code paths, making `tree:1`
+//! runs bit-identical to `flat` runs by construction (asserted by
+//! `tests/sharding.rs` and the manner unit tests). The hierarchical code
+//! engages only at R >= 2.
+
+mod manners;
+
+pub use manners::{HierAsyncMerge, HierSyncBarrier};
+
+use anyhow::{bail, Result};
+
+/// Where aggregation happens: straight at the cloud, or through a level of
+/// regional aggregators.
+///
+/// The spec grammar is `flat` | `tree:R[:fanout=N]` (see
+/// `util::cli::TOPOLOGY_GRAMMAR`): R regional aggregators, each uplinking
+/// one combined summary to the cloud every N regional merges (default 1).
+/// [`parse`](Topology::parse) accepts the syntax; degenerate trees (R=0,
+/// R > n_edges, fanout<1) are rejected by [`check`](Topology::check),
+/// surfaced as typed `RunConfig::validate` errors.
+///
+/// ```
+/// use ol4el::net::Topology;
+/// let t = Topology::parse("tree:8:fanout=4").unwrap();
+/// assert_eq!(t.regions(), 8);
+/// assert_eq!(t.fanout(), 4);
+/// assert_eq!(Topology::parse(&t.spec()), Some(t)); // canonical round trip
+/// assert_eq!(Topology::parse("flat"), Some(Topology::Flat));
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// Every edge reports straight to the cloud (today's flat manners).
+    Flat,
+    /// `regions` regional aggregators between the edges and the cloud.
+    Tree {
+        /// Number of regional aggregators (R in `tree:R`).
+        regions: usize,
+        /// A region uplinks one combined summary to the cloud every
+        /// `fanout` regional merges (async batching; 1 = every merge).
+        fanout: usize,
+    },
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Topology::Flat
+    }
+}
+
+impl Topology {
+    /// Parse a topology spec: `flat` | `tree:R[:fanout=N]`. Syntax only —
+    /// semantic degeneracies (R=0, fanout=0) pass here and are rejected by
+    /// [`check`](Topology::check), so `RunConfig::validate` owns the typed
+    /// error message.
+    pub fn parse(s: &str) -> Option<Topology> {
+        let s = s.trim().to_ascii_lowercase();
+        if s == "flat" {
+            return Some(Topology::Flat);
+        }
+        let rest = s.strip_prefix("tree:")?;
+        let mut parts = rest.split(':');
+        let regions: usize = parts.next()?.trim().parse().ok()?;
+        let mut fanout = 1usize;
+        for knob in parts {
+            let v = knob.strip_prefix("fanout=")?;
+            fanout = v.trim().parse().ok()?;
+        }
+        Some(Topology::Tree { regions, fanout })
+    }
+
+    /// The canonical spec string (default knobs omitted):
+    /// `parse(spec()) == self`.
+    pub fn spec(&self) -> String {
+        match *self {
+            Topology::Flat => "flat".to_string(),
+            Topology::Tree { regions, fanout } => {
+                if fanout == 1 {
+                    format!("tree:{regions}")
+                } else {
+                    format!("tree:{regions}:fanout={fanout}")
+                }
+            }
+        }
+    }
+
+    /// Reject degenerate trees for a fleet of `n_edges`: zero regions,
+    /// more regions than edges, or a fanout below 1.
+    pub fn check(&self, n_edges: usize) -> Result<()> {
+        if let Topology::Tree { regions, fanout } = *self {
+            if regions == 0 {
+                bail!("tree topology needs at least one region (got tree:0)");
+            }
+            if regions > n_edges {
+                bail!(
+                    "tree topology has more regions ({regions}) than edges ({n_edges})"
+                );
+            }
+            if fanout < 1 {
+                bail!("tree fanout must be >= 1 (got fanout={fanout})");
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of aggregation regions: 1 for `flat` (the cloud is the only
+    /// aggregator), R for `tree:R`. Hierarchical code paths engage when
+    /// this exceeds 1.
+    pub fn regions(&self) -> usize {
+        match *self {
+            Topology::Flat => 1,
+            Topology::Tree { regions, .. } => regions,
+        }
+    }
+
+    /// Regional uplink batching: a region forwards one summary to the
+    /// cloud every `fanout()` merges (1 for `flat`).
+    pub fn fanout(&self) -> usize {
+        match *self {
+            Topology::Flat => 1,
+            Topology::Tree { fanout, .. } => fanout,
+        }
+    }
+
+    /// Does this topology route through the hierarchical (R >= 2) code
+    /// paths? `flat` and `tree:1` both answer no — a single region IS the
+    /// cloud, so they share the flat manners bit for bit.
+    pub fn hierarchical(&self) -> bool {
+        self.regions() > 1
+    }
+}
+
+impl std::fmt::Display for Topology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.spec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_parses_flat_and_trees() {
+        assert_eq!(Topology::parse("flat"), Some(Topology::Flat));
+        assert_eq!(
+            Topology::parse("tree:8"),
+            Some(Topology::Tree {
+                regions: 8,
+                fanout: 1
+            })
+        );
+        assert_eq!(
+            Topology::parse("tree:32:fanout=4"),
+            Some(Topology::Tree {
+                regions: 32,
+                fanout: 4
+            })
+        );
+        assert_eq!(Topology::parse(" TREE:2 "), {
+            Some(Topology::Tree {
+                regions: 2,
+                fanout: 1,
+            })
+        });
+    }
+
+    #[test]
+    fn grammar_rejects_nonsense() {
+        for bad in [
+            "", "tre:4", "tree", "tree:", "tree:x", "tree:4:fanout", "tree:4:fanout=x",
+            "tree:4:depth=2", "tree:4:fanout=-1", "star:3", "flat:2",
+        ] {
+            assert!(Topology::parse(bad).is_none(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn spec_roundtrips_canonically() {
+        for s in ["flat", "tree:1", "tree:8", "tree:32:fanout=4"] {
+            let t = Topology::parse(s).unwrap();
+            assert_eq!(t.spec(), s, "canonical spec drifted");
+            assert_eq!(Topology::parse(&t.spec()), Some(t));
+        }
+        // Default knobs collapse out of the canonical spelling.
+        assert_eq!(Topology::parse("tree:8:fanout=1").unwrap().spec(), "tree:8");
+    }
+
+    #[test]
+    fn check_rejects_degenerate_trees() {
+        let err = Topology::parse("tree:0").unwrap().check(10).unwrap_err();
+        assert!(err.to_string().contains("at least one region"), "{err}");
+        let err = Topology::parse("tree:11").unwrap().check(10).unwrap_err();
+        assert!(
+            err.to_string().contains("more regions (11) than edges (10)"),
+            "{err}"
+        );
+        let err = Topology::parse("tree:2:fanout=0")
+            .unwrap()
+            .check(10)
+            .unwrap_err();
+        assert!(err.to_string().contains("fanout must be >= 1"), "{err}");
+        // Healthy trees and flat pass.
+        assert!(Topology::parse("tree:10").unwrap().check(10).is_ok());
+        assert!(Topology::Flat.check(1).is_ok());
+    }
+
+    #[test]
+    fn regions_and_fanout_expose_flat_defaults() {
+        assert_eq!(Topology::Flat.regions(), 1);
+        assert_eq!(Topology::Flat.fanout(), 1);
+        assert!(!Topology::Flat.hierarchical());
+        assert!(!Topology::parse("tree:1").unwrap().hierarchical());
+        assert!(Topology::parse("tree:2").unwrap().hierarchical());
+    }
+}

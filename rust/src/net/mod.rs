@@ -36,6 +36,13 @@
 //!   [`RunEvent`] vocabulary. Sharded across worker threads with
 //!   conservative time-window synchronization: results are bit-for-bit
 //!   identical at any shard count (see `docs/ARCHITECTURE.md`).
+//! * [`hier`] — hierarchical aggregation: the [`Topology`] spec
+//!   (`flat` | `tree:R[:fanout=N]`) and the tree-backed manners
+//!   [`HierSyncBarrier`] / [`HierAsyncMerge`], where regional aggregators
+//!   pre-combine edge updates and the cloud merges R regional summaries
+//!   instead of n edge reports. The fleet simulator maps shards onto
+//!   regions (`fleet::hier`) so a million-edge `tree:32` run collapses
+//!   cross-shard traffic to the regional→cloud uplinks.
 //!
 //! [`Session`]: crate::coordinator::Session
 //! [`RunEvent`]: crate::coordinator::RunEvent
@@ -43,6 +50,7 @@
 
 pub mod churn;
 pub mod fleet;
+pub mod hier;
 pub mod message;
 pub mod model;
 pub mod modes;
@@ -51,6 +59,7 @@ pub mod wire;
 
 pub use churn::ChurnSpec;
 pub use fleet::{FleetReport, FleetSim};
+pub use hier::{HierAsyncMerge, HierSyncBarrier, Topology};
 pub use message::{Delivery, Message, NetEvent, Node, Occurrence, Payload};
 pub use model::{LatencyModel, NetworkSpec};
 pub use modes::{NetAsyncMerge, NetSyncBarrier};

@@ -77,6 +77,23 @@ pub struct RoundObservation {
     pub lr: f64,
 }
 
+/// Region-local signals from a hierarchical (`tree:R`) aggregation round:
+/// what one regional aggregator saw between uplinks to the cloud. Handed
+/// to [`Strategy::observe_region`] by the tree-backed manners and the
+/// fleet simulator's hierarchical sync driver.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RegionSignal {
+    /// Which regional aggregator this signal describes.
+    pub region: usize,
+    /// How many edge reports the region combined into its last summary.
+    pub fanin: usize,
+    /// Mean per-report resource cost observed in the region.
+    pub mean_cost: f64,
+    /// The region→cloud uplink latency (virtual ms) of the last summary;
+    /// 0 where no transport is modeled (the session-level manners).
+    pub uplink_ms: f64,
+}
+
 /// A policy choosing each edge's global update interval τ ∈ 1..=tau_max.
 ///
 /// Object-safe and `Send` (per-edge instances ride the fleet simulator's
@@ -105,6 +122,12 @@ pub trait Strategy: Send {
 
     /// System-state observation hook (AC-sync uses it; bandits ignore it).
     fn observe_round(&mut self, _obs: &RoundObservation) {}
+
+    /// Hierarchical-topology observation hook: one regional aggregator's
+    /// local cost/latency signals ([`RegionSignal`]). Same determinism
+    /// obligations as [`observe_round`](Strategy::observe_round) — a pure
+    /// state update, no RNG. Default: ignore (flat runs never call it).
+    fn observe_region(&mut self, _signal: &RegionSignal) {}
 
     /// Churn hook: edge `edge` joined mid-run with the given nominal arm
     /// costs. Per-edge strategies allocate state here; shared/static

@@ -46,6 +46,17 @@ pub const WIRE_GRAMMAR: &str =
      join := 'edge join' addr ['--slowdown' S>=1] ['--leave-after' N] \
      ['--rejoin' ID] ['--drop-round' N]";
 
+/// The aggregation-topology grammar one-liner shared by every
+/// `--topology` flag help and error message (the full productions live in
+/// `docs/GRAMMAR.md`, embedded in `ol4el --help` via [`SPEC_GRAMMAR`]).
+/// Single-sourced here so the helps, the error messages and the docs
+/// cannot drift — `tests/cli_help.rs` asserts the productions appear in
+/// `train --help` and `fleet --help`.
+pub const TOPOLOGY_GRAMMAR: &str =
+    "flat | tree:R[:fanout=N]; R >= 1 regional aggregators (edge region = \
+     id mod R), each uplinking one summary to the cloud every N regional \
+     merges (default 1); tree:1 is bit-identical to flat";
+
 /// The checkpoint/resume grammar one-liner shared by `ol4el coordinator
 /// --help` and the checkpoint flag helps (the full productions live in
 /// `docs/GRAMMAR.md`, embedded in `ol4el --help` via [`SPEC_GRAMMAR`]).

@@ -42,6 +42,9 @@ const PRODUCTIONS: &[&str] = &[
     "join:RATE",
     "restart:MS",
     "straggle:P:FACTOR",
+    // topology (hierarchical aggregation)
+    "topology := 'flat' | 'tree:R' [ ':fanout=N' ]",
+    "region = id mod R",
     // real deployment (net::wire)
     "addr     := HOST ':' PORT",
     "'coordinator serve' '--addr' addr",
@@ -121,7 +124,7 @@ fn spec_grammar_parses_its_own_examples() {
     use ol4el::bandit::BanditSpec;
     use ol4el::config::PartitionKind;
     use ol4el::model::TaskSpec;
-    use ol4el::net::{ChurnSpec, NetworkSpec};
+    use ol4el::net::{ChurnSpec, NetworkSpec, Topology};
     use ol4el::sim::cost::CostMode;
     use ol4el::strategy::StrategySpec;
     assert!(TaskSpec::parse("kmeans:k=5").is_ok());
@@ -136,6 +139,12 @@ fn spec_grammar_parses_its_own_examples() {
     assert!(NetworkSpec::parse("fixed:20,part:1000-2500").is_some());
     assert!(ChurnSpec::parse("poisson:0.01,join:0.05").is_some());
     assert!(ChurnSpec::parse("poisson:0.2,restart:500,straggle:0.1:4").is_some());
+    assert!(Topology::parse("flat").is_some());
+    assert!(Topology::parse("tree:32").is_some());
+    assert!(Topology::parse("tree:8:fanout=4").is_some());
+    // Degenerate trees parse syntactically but fail validation.
+    assert!(Topology::parse("tree:0").unwrap().check(10).is_err());
+    assert!(Topology::parse("tree:4:fanout=0").unwrap().check(10).is_err());
     assert!(BanditSpec::parse("kube:0.2").is_some());
     assert!(PartitionKind::parse("label-skew:0.3").is_some());
     assert!(CostMode::parse("variable:0.35").is_some());
@@ -225,6 +234,24 @@ fn train_help_documents_the_task_spec_grammar() {
     let help = subcommand_help("train");
     for needle in ["--task", "logreg", "gmm", "kmeans:k=5"] {
         assert!(help.contains(needle), "train --help lost {needle:?}");
+    }
+}
+
+#[test]
+fn train_and_fleet_help_document_the_topology_grammar() {
+    // Satellite: the aggregation-topology grammar is single-sourced in
+    // `util::cli::TOPOLOGY_GRAMMAR` and must show up wherever a
+    // --topology flag exists — train AND fleet.
+    for sub in ["train", "fleet"] {
+        let help = subcommand_help(sub);
+        assert!(
+            help.contains("--topology"),
+            "{sub} --help lost the --topology flag"
+        );
+        assert!(
+            help.contains(ol4el::util::cli::TOPOLOGY_GRAMMAR),
+            "{sub} --help lost the single-sourced topology grammar"
+        );
     }
 }
 

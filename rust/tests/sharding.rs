@@ -10,7 +10,7 @@ use std::rc::Rc;
 use ol4el::config::RunConfig;
 use ol4el::coordinator::observer::from_fn;
 use ol4el::coordinator::RunEvent;
-use ol4el::net::{ChurnSpec, FleetReport, FleetSim, NetworkSpec};
+use ol4el::net::{ChurnSpec, FleetReport, FleetSim, NetworkSpec, Topology};
 use ol4el::strategy::StrategySpec;
 
 /// Run a fleet at `shards`, capturing the complete event stream.
@@ -164,4 +164,67 @@ fn zero_latency_ideal_network_still_exact() {
     let (events, report) = run_captured(cfg, 4);
     assert_eq!(events, ref_events, "ideal-network stream diverged");
     assert_reports_equal(&ref_report, &report, "ideal network");
+}
+
+#[test]
+fn tree_one_event_stream_identical_to_flat() {
+    // A single-region tree IS the flat protocol (the runner routes
+    // tree:1 through the flat drivers), so the FULL event stream — every
+    // payload f64 — must be bit-identical, for both manners, at any
+    // shard count.
+    for (strategy, seed) in [
+        (StrategySpec::ol4el_async(), 11),
+        (StrategySpec::ol4el_sync(), 23),
+    ] {
+        let flat_cfg = equivalence_cfg(strategy.clone(), seed);
+        let mut tree_cfg = flat_cfg.clone();
+        tree_cfg.topology = Topology::parse("tree:1").unwrap();
+        for shards in [1, 4] {
+            let (flat_events, flat_report) = run_captured(flat_cfg.clone(), shards);
+            let (tree_events, tree_report) = run_captured(tree_cfg.clone(), shards);
+            assert!(flat_report.updates > 0, "{strategy}: no updates");
+            assert_eq!(
+                tree_events, flat_events,
+                "{strategy} tree:1 stream diverged from flat at {shards} shards"
+            );
+            assert_reports_equal(
+                &flat_report,
+                &tree_report,
+                &format!("{strategy} tree:1 vs flat, {shards} shards"),
+            );
+        }
+    }
+}
+
+#[test]
+fn hier_tree_event_stream_identical_across_shard_counts() {
+    // The determinism contract extends to real trees: a tree:4 run under
+    // the adversarial zero-lookahead config (lognormal latency + Poisson
+    // churn with restarts and stragglers) must produce the identical
+    // RunEvent stream at shards ∈ {1, 2, 4}.
+    for (strategy, seed) in [
+        (StrategySpec::ol4el_async(), 31),
+        (StrategySpec::ol4el_sync(), 47),
+    ] {
+        let mut cfg = equivalence_cfg(strategy.clone(), seed);
+        cfg.topology = Topology::parse("tree:4").unwrap();
+        let (ref_events, ref_report) = run_captured(cfg.clone(), 1);
+        assert!(ref_report.updates > 0, "{strategy}: hier run made no updates");
+        assert!(
+            ref_events.iter().any(|e| matches!(e, RunEvent::Finished { .. })),
+            "hier stream must close with Finished"
+        );
+        for shards in [2, 4] {
+            let (events, report) = run_captured(cfg.clone(), shards);
+            assert_eq!(
+                events, ref_events,
+                "{strategy} tree:4 {shards}-shard stream diverged"
+            );
+            assert_reports_equal(
+                &ref_report,
+                &report,
+                &format!("{strategy} tree:4, {shards} shards"),
+            );
+        }
+    }
 }
