@@ -286,6 +286,36 @@ impl<'e> Session<'e> {
         edges[edge].local_round(tau, learner.as_ref(), self.engine, &self.cfg.cost, hyper)
     }
 
+    /// Run `tau` lockstep local iterations on EVERY edge (the sync
+    /// barrier's whole cohort) through one batch-of-edges stepping path
+    /// ([`edge::local_round_batch`](crate::edge::local_round_batch)):
+    /// each iteration advances all edges with a single
+    /// `Learner::local_step_batch` engine dispatch. Bit-identical to
+    /// calling [`local_round`](Session::local_round) on each edge in
+    /// index order. Remote-backed sessions keep the per-edge path (each
+    /// round ships to its own edge process).
+    pub fn local_round_cohort(&mut self, tau: usize, hyper: &Hyper) -> Result<Vec<LocalRound>> {
+        let n = self.world.edges.len();
+        if self.remote.is_some() {
+            return (0..n).map(|i| self.local_round(i, tau, hyper)).collect();
+        }
+        // Counter semantics match the per-edge path: one round per edge.
+        for _ in 0..n {
+            self.tele_rounds.inc();
+        }
+        let _span = crate::telemetry::span_with(&self.tele_round_us, "session.local_round_us");
+        let world = &mut self.world;
+        let (learner, edges) = (&world.learner, &mut world.edges);
+        crate::edge::local_round_batch(
+            edges,
+            tau,
+            learner.as_ref(),
+            self.engine,
+            &self.cfg.cost,
+            hyper,
+        )
+    }
+
     /// The remote branch of [`local_round`](Session::local_round): ship
     /// the round out, mirror the returned parameters, and translate the
     /// connection lifecycle into the fleet lifecycle (`EdgeJoined` per

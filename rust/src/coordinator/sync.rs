@@ -67,16 +67,18 @@ impl CollaborationMode for SyncBarrier {
             wall_ms,
         });
 
-        // Local rounds on every edge; the straggler defines the barrier.
+        // Local rounds on every edge via the batch-of-edges stepping path
+        // (one engine dispatch per lockstep iteration, bit-identical to
+        // the per-edge loop); the straggler defines the barrier.
         let hyper = s.cfg().hyper.at_version(s.world.version);
         let cost = s.cfg().cost;
         let n = s.world.edges.len();
         let mut reports = Vec::with_capacity(n);
         let mut barrier_comp = 0.0f64;
         let mut comp_sum = 0.0f64;
-        for i in 0..n {
+        let rounds = s.local_round_cohort(tau, &hyper)?;
+        for (i, r) in rounds.iter().enumerate() {
             let base_version = s.world.edges[i].base_version;
-            let r = s.local_round(i, tau, &hyper)?;
             let charged = r.comp_cost * self.overhead;
             barrier_comp = barrier_comp.max(charged);
             comp_sum += charged;

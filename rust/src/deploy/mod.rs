@@ -27,14 +27,17 @@ use crate::model::{Learner as _, ModelState};
 /// Leader -> edge commands.
 enum Command {
     /// Run `tau` local iterations from the supplied global model (version
-    /// tagged for staleness accounting), then report back.
+    /// tagged for staleness accounting), then report back. `edge` routes
+    /// the round inside a grouped worker owning several edges.
     Round {
+        edge: usize,
         tau: usize,
         global: ModelState,
         version: u64,
         lr: f32,
     },
-    /// Budget exhausted: stop the thread.
+    /// Budget exhausted: one owned edge stops (a grouped worker exits
+    /// once every edge it owns has retired).
     Retire,
 }
 
@@ -71,6 +74,22 @@ pub struct DeployResult {
 /// evaluation; each edge thread builds its own `NativeEngine` (the PJRT
 /// client is not Send — documented in engine/mod.rs).
 pub fn run_threaded(cfg: &RunConfig, leader_engine: &dyn ComputeEngine) -> Result<DeployResult> {
+    run_threaded_batched(cfg, leader_engine, 1)
+}
+
+/// [`run_threaded`] with worker granularity: edges are partitioned into
+/// contiguous groups of `edge_batch`, one OS thread per group. A 1-edge
+/// group runs the exact legacy per-edge loop (sleep-imposed slowdown);
+/// a larger group drains its mailbox, batches same-(τ, lr) rounds for
+/// distinct edges through [`Learner::local_step_batch`], and charges each
+/// edge its share of the measured wall-clock scaled by its slowdown
+/// (sleeping inside a shared worker would stall co-resident edges, so
+/// heterogeneity moves from imposed delay to scaled accounting).
+pub fn run_threaded_batched(
+    cfg: &RunConfig,
+    leader_engine: &dyn ComputeEngine,
+    edge_batch: usize,
+) -> Result<DeployResult> {
     let t_start = Instant::now();
     let mut world = World::build(cfg, leader_engine)?;
     let mut strategy = strategy::build(cfg, &world.slowdowns)?;
@@ -79,74 +98,195 @@ pub fn run_threaded(cfg: &RunConfig, leader_engine: &dyn ComputeEngine) -> Resul
 
     let (report_tx, report_rx) = mpsc::channel::<Report>();
     let mut cmd_txs: Vec<mpsc::Sender<Command>> = Vec::with_capacity(n);
-    let mut handles = Vec::with_capacity(n);
+    let mut handles = Vec::new();
 
-    // Spawn edge threads. Each owns its shard (moved out of the World),
-    // materializes its own learner from the task spec, and charges
-    // measured, slowdown-scaled wall-clock per round.
-    for (i, edge) in world.edges.iter_mut().enumerate() {
+    // Spawn worker threads. Each owns a contiguous group of shards (moved
+    // out of the World), materializes its own learner from the task spec,
+    // and charges measured, slowdown-scaled wall-clock per round.
+    let ids: Vec<usize> = (0..n).collect();
+    for group in ids.chunks(edge_batch.max(1)) {
         let (cmd_tx, cmd_rx) = mpsc::channel::<Command>();
-        cmd_txs.push(cmd_tx);
-        let mut shard = edge.shard.clone();
-        let slowdown = edge.slowdown;
+        for _ in group {
+            cmd_txs.push(cmd_tx.clone());
+        }
+        drop(cmd_tx);
+        let shards: Vec<_> = group.iter().map(|&i| world.edges[i].shard.clone()).collect();
+        let slowdowns: Vec<f64> = group.iter().map(|&i| world.edges[i].slowdown).collect();
+        let first_edge = group[0];
+        let group_len = group.len();
         let task = cfg.task.clone();
         let reg = cfg.hyper.reg;
         let report_tx = report_tx.clone();
-        handles.push(thread::spawn(move || {
-            let learner = task.learner();
-            let engine = NativeEngine::default();
-            let batch = learner.batch();
-            let mut xbuf: Vec<f32> = Vec::new();
-            let mut ybuf: Vec<i32> = Vec::new();
-            while let Ok(cmd) = cmd_rx.recv() {
-                match cmd {
-                    Command::Retire => break,
-                    Command::Round {
-                        tau,
-                        mut global,
-                        version,
-                        lr,
-                    } => {
-                        let t0 = Instant::now();
-                        let mut signal = 0.0f64;
-                        let hyper = crate::edge::Hyper {
-                            lr,
-                            reg,
-                            lr_decay: 0.0, // the leader decays lr per dispatch
-                        };
-                        for _ in 0..tau {
-                            shard.next_batch(batch, &mut xbuf, &mut ybuf);
-                            if let Ok(out) = learner.local_step(
-                                &engine,
-                                &mut global.params,
-                                &xbuf,
-                                &ybuf,
-                                &hyper,
-                            ) {
-                                signal += out.signal;
-                            }
-                        }
-                        // Impose heterogeneity: a slowdown-s edge really
-                        // takes s x the compute time (busy wait would burn
-                        // host CPU; sleeping models an underclocked core).
-                        let compute = t0.elapsed();
-                        if slowdown > 1.0 {
-                            let extra = compute.mul_f64(slowdown - 1.0);
-                            thread::sleep(extra.min(Duration::from_millis(50)));
-                        }
-                        let cost_ms = t0.elapsed().as_secs_f64() * 1e3;
-                        let _ = report_tx.send(Report {
-                            edge: i,
+        if group_len == 1 {
+            let mut shard = shards.into_iter().next().expect("one shard per 1-edge group");
+            let slowdown = slowdowns[0];
+            handles.push(thread::spawn(move || {
+                let learner = task.learner();
+                let engine = NativeEngine::default();
+                let batch = learner.batch();
+                let mut xbuf: Vec<f32> = Vec::new();
+                let mut ybuf: Vec<i32> = Vec::new();
+                while let Ok(cmd) = cmd_rx.recv() {
+                    match cmd {
+                        Command::Retire => break,
+                        Command::Round {
                             tau,
-                            model: global,
-                            based_on_version: version,
-                            cost_ms,
-                            train_signal: signal / tau.max(1) as f64,
-                        });
+                            mut global,
+                            version,
+                            lr,
+                            ..
+                        } => {
+                            let t0 = Instant::now();
+                            let mut signal = 0.0f64;
+                            let hyper = crate::edge::Hyper {
+                                lr,
+                                reg,
+                                lr_decay: 0.0, // the leader decays lr per dispatch
+                            };
+                            for _ in 0..tau {
+                                shard.next_batch(batch, &mut xbuf, &mut ybuf);
+                                if let Ok(out) = learner.local_step(
+                                    &engine,
+                                    &mut global.params,
+                                    &xbuf,
+                                    &ybuf,
+                                    &hyper,
+                                ) {
+                                    signal += out.signal;
+                                }
+                            }
+                            // Impose heterogeneity: a slowdown-s edge really
+                            // takes s x the compute time (busy wait would burn
+                            // host CPU; sleeping models an underclocked core).
+                            let compute = t0.elapsed();
+                            if slowdown > 1.0 {
+                                let extra = compute.mul_f64(slowdown - 1.0);
+                                thread::sleep(extra.min(Duration::from_millis(50)));
+                            }
+                            let cost_ms = t0.elapsed().as_secs_f64() * 1e3;
+                            let _ = report_tx.send(Report {
+                                edge: first_edge,
+                                tau,
+                                model: global,
+                                based_on_version: version,
+                                cost_ms,
+                                train_signal: signal / tau.max(1) as f64,
+                            });
+                        }
                     }
                 }
-            }
-        }));
+            }));
+        } else {
+            handles.push(thread::spawn(move || {
+                let learner = task.learner();
+                let engine = NativeEngine::default();
+                let batch = learner.batch();
+                let mut shards = shards;
+                let mut xbufs: Vec<Vec<f32>> = vec![Vec::new(); group_len];
+                let mut ybufs: Vec<Vec<i32>> = vec![Vec::new(); group_len];
+                let mut xall: Vec<f32> = Vec::new();
+                let mut yall: Vec<i32> = Vec::new();
+                let mut alive = group_len;
+                // (edge, tau, model, based_on_version, lr)
+                let mut pending: Vec<(usize, usize, ModelState, u64, f32)> = Vec::new();
+                while alive > 0 {
+                    let Ok(first) = cmd_rx.recv() else { break };
+                    let mut cmds = vec![first];
+                    while let Ok(c) = cmd_rx.try_recv() {
+                        cmds.push(c);
+                    }
+                    for c in cmds {
+                        match c {
+                            // The leader re-retires every edge at shutdown,
+                            // so a mid-run retiree may see a second Retire.
+                            Command::Retire => alive = alive.saturating_sub(1),
+                            Command::Round {
+                                edge,
+                                tau,
+                                global,
+                                version,
+                                lr,
+                            } => pending.push((edge, tau, global, version, lr)),
+                        }
+                    }
+                    // Batch rounds sharing (τ, lr) across distinct edges;
+                    // anything else waits for the next sweep of the queue.
+                    while !pending.is_empty() {
+                        let (tau0, lr0) = (pending[0].1, pending[0].4);
+                        let mut taken = vec![false; group_len];
+                        let mut batch_cmds: Vec<(usize, usize, ModelState, u64, f32)> =
+                            Vec::new();
+                        let mut i = 0;
+                        while i < pending.len() {
+                            let slot = pending[i].0 - first_edge;
+                            if pending[i].1 == tau0
+                                && pending[i].4.to_bits() == lr0.to_bits()
+                                && !taken[slot]
+                            {
+                                taken[slot] = true;
+                                batch_cmds.push(pending.remove(i));
+                            } else {
+                                i += 1;
+                            }
+                        }
+                        let m = batch_cmds.len();
+                        let t0 = Instant::now();
+                        let hyper = crate::edge::Hyper {
+                            lr: lr0,
+                            reg,
+                            lr_decay: 0.0,
+                        };
+                        let mut signals = vec![0.0f64; m];
+                        for _ in 0..tau0 {
+                            xall.clear();
+                            yall.clear();
+                            for cmd in batch_cmds.iter() {
+                                let slot = cmd.0 - first_edge;
+                                shards[slot].next_batch(
+                                    batch,
+                                    &mut xbufs[slot],
+                                    &mut ybufs[slot],
+                                );
+                                xall.extend_from_slice(&xbufs[slot]);
+                                yall.extend_from_slice(&ybufs[slot]);
+                            }
+                            let mut params: Vec<&mut [f32]> = batch_cmds
+                                .iter_mut()
+                                .map(|c| c.2.params.as_mut_slice())
+                                .collect();
+                            if let Ok(outs) = learner.local_step_batch(
+                                &engine,
+                                &mut params,
+                                &xall,
+                                &yall,
+                                &hyper,
+                            ) {
+                                for (j, o) in outs.iter().enumerate() {
+                                    signals[j] += o.signal;
+                                }
+                            }
+                        }
+                        // Share-scaled accounting: each edge is charged its
+                        // 1/m share of the batch wall-clock, scaled by its
+                        // slowdown (the analogue of the sleep-imposed delay).
+                        let elapsed_ms = t0.elapsed().as_secs_f64() * 1e3;
+                        for (j, (edge, tau, model, version, _lr)) in
+                            batch_cmds.into_iter().enumerate()
+                        {
+                            let cost_ms = elapsed_ms / m as f64 * slowdowns[edge - first_edge];
+                            let _ = report_tx.send(Report {
+                                edge,
+                                tau,
+                                model,
+                                based_on_version: version,
+                                cost_ms,
+                                train_signal: signals[j] / tau.max(1) as f64,
+                            });
+                        }
+                    }
+                }
+            }));
+        }
     }
     drop(report_tx);
 
@@ -223,6 +363,7 @@ fn dispatch(
             let hyper = cfg.hyper.at_version(world.version / world.edges.len() as u64);
             cmd_txs[i]
                 .send(Command::Round {
+                    edge: i,
                     tau,
                     global: world.global.clone(),
                     version: world.version,
@@ -283,6 +424,22 @@ mod tests {
         let r = run_threaded(&cfg(), &engine).unwrap();
         // Every edge participated at least once before retiring.
         assert!(r.per_edge_rounds.iter().all(|&n| n > 0), "{:?}", r.per_edge_rounds);
+    }
+
+    #[test]
+    fn threaded_deploy_batched_groups_run() {
+        let engine = NativeEngine::default();
+        // One worker owning all three edges: rounds flow through the
+        // grouped mailbox + local_step_batch path with share-scaled costs.
+        let r = run_threaded_batched(&cfg(), &engine, 3).unwrap();
+        assert!(r.total_updates > 0, "no updates");
+        assert!(
+            r.per_edge_rounds.iter().all(|&n| n > 0),
+            "{:?}",
+            r.per_edge_rounds
+        );
+        assert!(r.per_edge_spent.iter().all(|&s| s > 0.0));
+        assert!(r.final_metric > 0.2, "metric {}", r.final_metric);
     }
 
     #[test]

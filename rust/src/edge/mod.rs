@@ -206,6 +206,73 @@ impl EdgeServer {
     }
 }
 
+/// Run τ lockstep local iterations for a whole cohort: per iteration,
+/// every edge draws its own batch (private shard cursor), the stacked
+/// batches advance through ONE [`Learner::local_step_batch`] dispatch,
+/// and each edge charges its own cost draw — amortizing per-edge
+/// dispatch across the cohort.
+///
+/// Bit-identical to calling [`EdgeServer::local_round`] on each edge in
+/// order, for the deterministic cost modes: each edge's shard cursor and
+/// RNG stream see exactly the same draws in the same order (`Fixed`
+/// draws nothing, `Variable` draws once per edge per iteration), and
+/// `local_step_batch`'s contract makes the parameter trajectories
+/// bit-equal. `Measured` mode is wall-clock (inherently run-to-run
+/// noisy); the cohort's elapsed time is split evenly across the edges
+/// before each edge's slowdown scales its share.
+pub fn local_round_batch(
+    edges: &mut [EdgeServer],
+    tau: usize,
+    learner: &dyn Learner,
+    engine: &dyn ComputeEngine,
+    cost: &CostModel,
+    hyper: &Hyper,
+) -> Result<Vec<LocalRound>> {
+    assert!(tau >= 1, "tau must be >= 1");
+    let e = edges.len();
+    if e <= 1 {
+        return edges
+            .iter_mut()
+            .map(|ed| ed.local_round(tau, learner, engine, cost, hyper))
+            .collect();
+    }
+    let batch = learner.batch();
+    let mut signals = vec![0f64; e];
+    let mut costs = vec![0f64; e];
+    let mut xall: Vec<f32> = Vec::new();
+    let mut yall: Vec<i32> = Vec::new();
+    for _ in 0..tau {
+        let t0 = std::time::Instant::now();
+        xall.clear();
+        yall.clear();
+        for ed in edges.iter_mut() {
+            ed.shard.next_batch(batch, &mut ed.xbuf, &mut ed.ybuf);
+            xall.extend_from_slice(&ed.xbuf);
+            yall.extend_from_slice(&ed.ybuf);
+        }
+        let mut params: Vec<&mut [f32]> = edges
+            .iter_mut()
+            .map(|ed| ed.model.params.as_mut_slice())
+            .collect();
+        let outs = learner.local_step_batch(engine, &mut params, &xall, &yall, hyper)?;
+        let measured_ms = t0.elapsed().as_secs_f64() * 1e3 / e as f64;
+        for (i, ed) in edges.iter_mut().enumerate() {
+            signals[i] += outs[i].signal;
+            costs[i] += cost.sample_comp(ed.slowdown, measured_ms, &mut ed.rng);
+        }
+    }
+    for ed in edges.iter_mut() {
+        ed.iters_done += tau as u64;
+    }
+    Ok((0..e)
+        .map(|i| LocalRound {
+            comp_cost: costs[i],
+            train_signal: signals[i] / tau as f64,
+            iterations: tau,
+        })
+        .collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -295,6 +362,53 @@ mod tests {
         assert_eq!(a.comp_cost, b.comp_cost, "cost RNG stream must replay");
         assert_eq!(a.train_signal, b.train_signal, "shard cursor must replay");
         assert_eq!(live.model.params, rebuilt.model.params);
+    }
+
+    #[test]
+    fn local_round_batch_matches_sequential_rounds() {
+        // The cohort path must be a pure perf optimization: same shard
+        // draws, same RNG streams, bit-equal params and costs — for every
+        // registered task, under the Variable cost mode (whose per-edge
+        // draws are the hard part to keep aligned).
+        use crate::sim::cost::CostMode;
+        let cost = CostModel {
+            mode: CostMode::Variable { cv: 0.3 },
+            ..CostModel::default()
+        };
+        let hyper = Hyper::default();
+        for name in ["svm", "kmeans", "logreg", "gmm"] {
+            let spec = TaskSpec::parse(name).unwrap();
+            let mk_fleet = || {
+                let mut rng = Rng::new(0);
+                let learner = spec.learner();
+                let ds = Arc::new(learner.synth(2000, 3.0, &mut rng));
+                let model = ModelState::new(learner.init_params(&ds, &mut rng));
+                let edges: Vec<EdgeServer> = partition::iid(&ds, 3, &mut rng)
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, sh)| {
+                        EdgeServer::new(i, sh, model.clone(), 1.0 + i as f64, 1000.0, rng.split())
+                    })
+                    .collect();
+                (edges, learner)
+            };
+            let (mut seq, learner) = mk_fleet();
+            let (mut bat, _) = mk_fleet();
+            let eng = NativeEngine::default();
+            let a: Vec<LocalRound> = seq
+                .iter_mut()
+                .map(|ed| {
+                    ed.local_round(4, learner.as_ref(), &eng, &cost, &hyper)
+                        .unwrap()
+                })
+                .collect();
+            let b = local_round_batch(&mut bat, 4, learner.as_ref(), &eng, &cost, &hyper).unwrap();
+            for i in 0..3 {
+                assert_eq!(seq[i].model.params, bat[i].model.params, "{name} params");
+                assert_eq!(a[i].train_signal, b[i].train_signal, "{name} signal");
+                assert_eq!(a[i].comp_cost, b[i].comp_cost, "{name} cost");
+            }
+        }
     }
 
     #[test]

@@ -22,6 +22,7 @@
 
 pub mod native;
 pub mod pjrt;
+pub mod pool;
 
 use anyhow::{anyhow, Result};
 
@@ -197,6 +198,16 @@ impl KernelOut {
 /// learners compose their math from. Implemented once ([`CpuOps`]) and
 /// shared by every backend; the f32 accumulation orders are part of the
 /// numeric contract (they match the AOT kernels' reference semantics).
+///
+/// The `*_groups` methods are the batch-of-edges surface: one call runs
+/// `groups` independent instances of the primitive over stacked
+/// per-group buffers, letting [`Learner::local_step_batch`] advance many
+/// edges in one engine dispatch. Defaults loop the single-group op;
+/// [`CpuOps`] overrides them with the blocked multithreaded kernels
+/// (bit-identical to the loops — the parallel unit is a whole group, so
+/// every within-group accumulation order is unchanged).
+///
+/// [`Learner::local_step_batch`]: crate::model::Learner::local_step_batch
 pub trait EngineOps {
     /// Dense scores: `out[i*c + j] = x_i · w[:, j] + b[j]` for `n` rows of
     /// `d` features against a row-major `[d, c]` weight matrix.
@@ -225,10 +236,342 @@ pub trait EngineOps {
 
     /// Sum-reduce a buffer in f64 (order-stable left fold).
     fn reduce_sum(&self, v: &[f32]) -> f64;
+
+    /// `groups` independent [`gemm_bias`](EngineOps::gemm_bias) calls in
+    /// one dispatch: `x` stacks `groups` equal row blocks, `w`/`b`/`out`
+    /// stack `groups` equal `[d, c]` / `[c]` / score blocks. Bit-identical
+    /// to looping `gemm_bias` per group.
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_bias_groups(
+        &self,
+        x: &[f32],
+        w: &[f32],
+        b: &[f32],
+        d: usize,
+        c: usize,
+        groups: usize,
+        out: &mut [f32],
+    ) {
+        assert!(groups > 0, "gemm_bias_groups needs groups >= 1");
+        assert_eq!(x.len() % groups, 0, "gemm_bias_groups x length");
+        assert_eq!(w.len(), groups * d * c, "gemm_bias_groups w length");
+        assert_eq!(b.len(), groups * c, "gemm_bias_groups b length");
+        assert_eq!(out.len() % groups, 0, "gemm_bias_groups out length");
+        let (px, po) = (x.len() / groups, out.len() / groups);
+        for (((xg, wg), bg), og) in x
+            .chunks(px)
+            .zip(w.chunks(d * c))
+            .zip(b.chunks(c))
+            .zip(out.chunks_mut(po))
+        {
+            self.gemm_bias(xg, wg, bg, d, c, og);
+        }
+    }
+
+    /// `groups` independent [`argmin_dist`](EngineOps::argmin_dist) calls
+    /// in one dispatch: `x` stacks `groups` equal row blocks, `centers`
+    /// stacks `groups` `[k, d]` blocks; fills `assign` (resized to the
+    /// total row count, group-local ids in `0..k`) and one inertia per
+    /// group. Bit-identical to looping `argmin_dist` per group.
+    #[allow(clippy::too_many_arguments)]
+    fn argmin_dist_groups(
+        &self,
+        x: &[f32],
+        centers: &[f32],
+        d: usize,
+        k: usize,
+        groups: usize,
+        assign: &mut Vec<i32>,
+        inertia: &mut [f32],
+    ) {
+        assert!(groups > 0, "argmin_dist_groups needs groups >= 1");
+        assert_eq!(x.len() % groups, 0, "argmin_dist_groups x length");
+        assert_eq!(centers.len(), groups * k * d, "argmin_dist_groups centers length");
+        assert_eq!(inertia.len(), groups, "argmin_dist_groups inertia length");
+        let px = x.len() / groups;
+        assign.clear();
+        assign.reserve(x.len() / d);
+        let mut scratch = Vec::new();
+        for ((xg, cg), ig) in x
+            .chunks(px)
+            .zip(centers.chunks(k * d))
+            .zip(inertia.iter_mut())
+        {
+            *ig = self.argmin_dist(xg, cg, d, k, &mut scratch);
+            assign.extend_from_slice(&scratch);
+        }
+    }
+
+    /// `groups` independent [`scatter_add`](EngineOps::scatter_add) calls
+    /// in one dispatch: `x`/`assign` stack `groups` equal row blocks
+    /// (group-local ids in `0..k`), `sums`/`counts` stack `groups`
+    /// `[k, d]` / `[k]` accumulators. Bit-identical to looping
+    /// `scatter_add` per group.
+    #[allow(clippy::too_many_arguments)]
+    fn scatter_add_groups(
+        &self,
+        x: &[f32],
+        assign: &[i32],
+        d: usize,
+        k: usize,
+        groups: usize,
+        sums: &mut [f32],
+        counts: &mut [f32],
+    ) {
+        assert!(groups > 0, "scatter_add_groups needs groups >= 1");
+        assert_eq!(x.len() % groups, 0, "scatter_add_groups x length");
+        assert_eq!(assign.len() * d, x.len(), "scatter_add_groups row count");
+        assert_eq!(sums.len(), groups * k * d, "scatter_add_groups sums length");
+        assert_eq!(counts.len(), groups * k, "scatter_add_groups counts length");
+        let px = x.len() / groups;
+        for (((xg, ag), sg), cg) in x
+            .chunks(px)
+            .zip(assign.chunks(px / d))
+            .zip(sums.chunks_mut(k * d))
+            .zip(counts.chunks_mut(k))
+        {
+            self.scatter_add(xg, ag, d, k, sg, cg);
+        }
+    }
+}
+
+/// Blocked, multithreaded `gemm_bias` with an explicit thread count.
+///
+/// Parallelizes across rows: each worker runs the sequential reference
+/// kernel ([`svm::scores_into`]) on a disjoint row block, so every
+/// within-row f32 accumulation order is unchanged and the output is
+/// bit-identical to the scalar path at any `threads`. Inputs with fewer
+/// than [`pool::PAR_CUTOVER_ROWS`] rows (or `threads <= 1`) take the
+/// sequential path outright.
+///
+/// [`svm::scores_into`]: crate::model::svm
+pub fn gemm_bias_threads(
+    threads: usize,
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    d: usize,
+    c: usize,
+    out: &mut [f32],
+) {
+    let n = x.len() / d;
+    if threads <= 1 || n < pool::PAR_CUTOVER_ROWS {
+        crate::model::svm::scores_into(x, w, b, d, c, out);
+        return;
+    }
+    let block = n.div_ceil(threads.min(n));
+    std::thread::scope(|s| {
+        for (xb, ob) in x.chunks(block * d).zip(out.chunks_mut(block * c)) {
+            s.spawn(move || crate::model::svm::scores_into(xb, w, b, d, c, ob));
+        }
+    });
+}
+
+/// Blocked, multithreaded `argmin_dist` with an explicit thread count.
+///
+/// Parallelizes across rows; each worker writes its block's assignments
+/// and per-row best squared distances ([`kmeans::assign_block`]), then
+/// the inertia is folded sequentially over all rows in row order — the
+/// exact f64 left fold of the scalar path — so both the assignments and
+/// the returned inertia are bit-identical at any `threads`. Small
+/// inputs take the sequential [`kmeans::assign_into`] path.
+///
+/// [`kmeans::assign_block`]: crate::model::kmeans::assign_block
+/// [`kmeans::assign_into`]: crate::model::kmeans::assign_into
+pub fn argmin_dist_threads(
+    threads: usize,
+    x: &[f32],
+    centers: &[f32],
+    d: usize,
+    k: usize,
+    assign: &mut Vec<i32>,
+) -> f32 {
+    let n = x.len() / d;
+    let spec = crate::model::kmeans::KmeansSpec { k, d };
+    if threads <= 1 || n < pool::PAR_CUTOVER_ROWS {
+        return crate::model::kmeans::assign_into(centers, x, &spec, assign);
+    }
+    assign.clear();
+    assign.resize(n, 0);
+    let mut d2 = vec![0f32; n];
+    let block = n.div_ceil(threads.min(n));
+    std::thread::scope(|s| {
+        for ((xb, ab), db) in x
+            .chunks(block * d)
+            .zip(assign.chunks_mut(block))
+            .zip(d2.chunks_mut(block))
+        {
+            s.spawn(move || crate::model::kmeans::assign_block(centers, xb, d, k, ab, db));
+        }
+    });
+    let mut inertia = 0f64;
+    for &v in &d2 {
+        inertia += v as f64;
+    }
+    inertia as f32
+}
+
+/// Multithreaded grouped gemm with an explicit thread count: whole
+/// groups are the parallel unit (each runs the sequential kernel
+/// intact), so the output is bit-identical to the per-group loop.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bias_groups_threads(
+    threads: usize,
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    d: usize,
+    c: usize,
+    groups: usize,
+    out: &mut [f32],
+) {
+    assert!(groups > 0, "gemm_bias_groups needs groups >= 1");
+    assert_eq!(x.len() % groups, 0, "gemm_bias_groups x length");
+    assert_eq!(w.len(), groups * d * c, "gemm_bias_groups w length");
+    assert_eq!(b.len(), groups * c, "gemm_bias_groups b length");
+    assert_eq!(out.len() % groups, 0, "gemm_bias_groups out length");
+    if groups == 1 {
+        return gemm_bias_threads(threads, x, w, b, d, c, out);
+    }
+    let (px, po) = (x.len() / groups, out.len() / groups);
+    let seq = |x: &[f32], w: &[f32], b: &[f32], out: &mut [f32]| {
+        for (((xg, wg), bg), og) in x
+            .chunks(px)
+            .zip(w.chunks(d * c))
+            .zip(b.chunks(c))
+            .zip(out.chunks_mut(po))
+        {
+            crate::model::svm::scores_into(xg, wg, bg, d, c, og);
+        }
+    };
+    if threads <= 1 || x.len() / d < pool::PAR_CUTOVER_ROWS {
+        seq(x, w, b, out);
+        return;
+    }
+    let gchunk = groups.div_ceil(threads.min(groups));
+    std::thread::scope(|s| {
+        for (((xc, wc), bc), oc) in x
+            .chunks(gchunk * px)
+            .zip(w.chunks(gchunk * d * c))
+            .zip(b.chunks(gchunk * c))
+            .zip(out.chunks_mut(gchunk * po))
+        {
+            s.spawn(move || seq(xc, wc, bc, oc));
+        }
+    });
+}
+
+/// Multithreaded grouped argmin with an explicit thread count: whole
+/// groups are the parallel unit and each group's inertia is folded
+/// inline by the sequential kernel ([`kmeans::assign_slice`]), so both
+/// outputs are bit-identical to the per-group loop.
+///
+/// [`kmeans::assign_slice`]: crate::model::kmeans::assign_slice
+#[allow(clippy::too_many_arguments)]
+pub fn argmin_dist_groups_threads(
+    threads: usize,
+    x: &[f32],
+    centers: &[f32],
+    d: usize,
+    k: usize,
+    groups: usize,
+    assign: &mut Vec<i32>,
+    inertia: &mut [f32],
+) {
+    assert!(groups > 0, "argmin_dist_groups needs groups >= 1");
+    assert_eq!(x.len() % groups, 0, "argmin_dist_groups x length");
+    assert_eq!(centers.len(), groups * k * d, "argmin_dist_groups centers length");
+    assert_eq!(inertia.len(), groups, "argmin_dist_groups inertia length");
+    if groups == 1 {
+        inertia[0] = argmin_dist_threads(threads, x, centers, d, k, assign);
+        return;
+    }
+    let px = x.len() / groups;
+    let pn = px / d;
+    let n = x.len() / d;
+    assign.clear();
+    assign.resize(n, 0);
+    let seq = |x: &[f32], centers: &[f32], assign: &mut [i32], inertia: &mut [f32]| {
+        for (((xg, cg), ag), ig) in x
+            .chunks(px)
+            .zip(centers.chunks(k * d))
+            .zip(assign.chunks_mut(pn))
+            .zip(inertia.iter_mut())
+        {
+            *ig = crate::model::kmeans::assign_slice(cg, xg, d, k, ag);
+        }
+    };
+    if threads <= 1 || n < pool::PAR_CUTOVER_ROWS {
+        seq(x, centers, assign, inertia);
+        return;
+    }
+    let gchunk = groups.div_ceil(threads.min(groups));
+    std::thread::scope(|s| {
+        for (((xc, cc), ac), ic) in x
+            .chunks(gchunk * px)
+            .zip(centers.chunks(gchunk * k * d))
+            .zip(assign.chunks_mut(gchunk * pn))
+            .zip(inertia.chunks_mut(gchunk))
+        {
+            s.spawn(move || seq(xc, cc, ac, ic));
+        }
+    });
+}
+
+/// Multithreaded grouped scatter with an explicit thread count: whole
+/// groups are the parallel unit (each group's rows accumulate in row
+/// order into its own `[k, d]` / `[k]` block), so the accumulators are
+/// bit-identical to the per-group loop.
+#[allow(clippy::too_many_arguments)]
+pub fn scatter_add_groups_threads(
+    threads: usize,
+    x: &[f32],
+    assign: &[i32],
+    d: usize,
+    k: usize,
+    groups: usize,
+    sums: &mut [f32],
+    counts: &mut [f32],
+) {
+    assert!(groups > 0, "scatter_add_groups needs groups >= 1");
+    assert_eq!(x.len() % groups, 0, "scatter_add_groups x length");
+    assert_eq!(assign.len() * d, x.len(), "scatter_add_groups row count");
+    assert_eq!(sums.len(), groups * k * d, "scatter_add_groups sums length");
+    assert_eq!(counts.len(), groups * k, "scatter_add_groups counts length");
+    let px = x.len() / groups;
+    let pn = px / d;
+    let seq = |x: &[f32], assign: &[i32], sums: &mut [f32], counts: &mut [f32]| {
+        for (((xg, ag), sg), cg) in x
+            .chunks(px)
+            .zip(assign.chunks(pn))
+            .zip(sums.chunks_mut(k * d))
+            .zip(counts.chunks_mut(k))
+        {
+            CPU_OPS.scatter_add(xg, ag, d, k, sg, cg);
+        }
+    };
+    if threads <= 1 || groups == 1 || x.len() / d < pool::PAR_CUTOVER_ROWS {
+        seq(x, assign, sums, counts);
+        return;
+    }
+    let gchunk = groups.div_ceil(threads.min(groups));
+    std::thread::scope(|s| {
+        for (((xc, ac), sc), cc) in x
+            .chunks(gchunk * px)
+            .zip(assign.chunks(gchunk * pn))
+            .zip(sums.chunks_mut(gchunk * k * d))
+            .zip(counts.chunks_mut(gchunk * k))
+        {
+            s.spawn(move || seq(xc, ac, sc, cc));
+        }
+    });
 }
 
 /// The shared CPU implementation of [`EngineOps`] (the only one: backends
-/// differ in fused kernels, not primitives).
+/// differ in fused kernels, not primitives). Its row-heavy primitives
+/// (`gemm_bias`, `argmin_dist`) and the grouped batch surface fan out
+/// across [`pool::threads`] worker threads above a row-count cutover,
+/// bit-identically to the sequential path.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CpuOps;
 
@@ -238,7 +581,7 @@ pub static CPU_OPS: CpuOps = CpuOps;
 
 impl EngineOps for CpuOps {
     fn gemm_bias(&self, x: &[f32], w: &[f32], b: &[f32], d: usize, c: usize, out: &mut [f32]) {
-        crate::model::svm::scores_into(x, w, b, d, c, out);
+        gemm_bias_threads(pool::threads(), x, w, b, d, c, out);
     }
 
     fn axpy(&self, a: f32, x: &[f32], y: &mut [f32]) {
@@ -256,10 +599,46 @@ impl EngineOps for CpuOps {
         k: usize,
         assign: &mut Vec<i32>,
     ) -> f32 {
-        let spec = crate::model::kmeans::KmeansSpec { k, d };
-        let (a, inertia) = crate::model::kmeans::assign(centers, x, &spec);
-        *assign = a;
-        inertia
+        argmin_dist_threads(pool::threads(), x, centers, d, k, assign)
+    }
+
+    fn gemm_bias_groups(
+        &self,
+        x: &[f32],
+        w: &[f32],
+        b: &[f32],
+        d: usize,
+        c: usize,
+        groups: usize,
+        out: &mut [f32],
+    ) {
+        gemm_bias_groups_threads(pool::threads(), x, w, b, d, c, groups, out);
+    }
+
+    fn argmin_dist_groups(
+        &self,
+        x: &[f32],
+        centers: &[f32],
+        d: usize,
+        k: usize,
+        groups: usize,
+        assign: &mut Vec<i32>,
+        inertia: &mut [f32],
+    ) {
+        argmin_dist_groups_threads(pool::threads(), x, centers, d, k, groups, assign, inertia);
+    }
+
+    fn scatter_add_groups(
+        &self,
+        x: &[f32],
+        assign: &[i32],
+        d: usize,
+        k: usize,
+        groups: usize,
+        sums: &mut [f32],
+        counts: &mut [f32],
+    ) {
+        scatter_add_groups_threads(pool::threads(), x, assign, d, k, groups, sums, counts);
     }
 
     fn scatter_add(

@@ -1,0 +1,63 @@
+//! Process-wide thread knob for the data-parallel [`CpuOps`] kernels.
+//!
+//! The blocked kernels ([`gemm_bias_threads`], [`argmin_dist_threads`]
+//! and the grouped variants in [`super`]) parallelize across **rows**
+//! (or whole per-edge groups) with `std::thread::scope`, keeping every
+//! within-row f32 accumulation order unchanged — so the threaded output
+//! is bit-identical to the scalar path at any thread count. That makes
+//! a process-global knob safe: changing it can never change a result,
+//! only its wall-clock.
+//!
+//! The default is 1 (sequential): single-edge sessions see zero
+//! regression, and determinism-sensitive suites need no opt-out. Bench
+//! and deploy entry points raise it via [`set_threads`] (`--threads`).
+//!
+//! [`CpuOps`]: super::CpuOps
+//! [`gemm_bias_threads`]: super::gemm_bias_threads
+//! [`argmin_dist_threads`]: super::argmin_dist_threads
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Row-count cutover below which the threaded kernels take the plain
+/// sequential path. Spawn cost for a scoped pool is a few microseconds;
+/// the default local-iteration batch (64 rows) sits well under this, so
+/// per-step latency is untouched, while eval batches (512) and stacked
+/// edge-batches clear it and fan out.
+pub const PAR_CUTOVER_ROWS: usize = 256;
+
+static THREADS: AtomicUsize = AtomicUsize::new(1);
+
+/// Set the process-wide kernel thread count and return the resolved
+/// value. `0` means "all available parallelism". Values are clamped to
+/// at least 1.
+pub fn set_threads(n: usize) -> usize {
+    let resolved = if n == 0 {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+    } else {
+        n
+    }
+    .max(1);
+    THREADS.store(resolved, Ordering::Relaxed);
+    resolved
+}
+
+/// Current process-wide kernel thread count (>= 1; default 1).
+pub fn threads() -> usize {
+    THREADS.load(Ordering::Relaxed).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_resolves_to_available_parallelism() {
+        // Other tests may race on the global; only assert invariants.
+        let resolved = set_threads(0);
+        assert!(resolved >= 1);
+        assert!(threads() >= 1);
+        set_threads(1);
+    }
+}

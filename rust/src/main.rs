@@ -458,23 +458,52 @@ fn report_run(a: &Args, cfg: &RunConfig, r: &RunResult, dt: f64) -> Result<()> {
     Ok(())
 }
 
+fn deploy_cli() -> Cli {
+    // The threaded testbed reuses the train flag set plus the two
+    // data-parallelism knobs.
+    train_cli()
+        .opt(
+            "threads",
+            "1",
+            "engine kernel threads ('max' or 0 = all host cores)",
+        )
+        .opt(
+            "edge-batch",
+            "1",
+            "edges per worker thread (1 = one OS thread per edge; larger \
+             groups batch same-interval rounds through local_step_batch)",
+        )
+}
+
+/// Parse a `--threads` value: a number, or `max`/`0` for all host cores.
+fn parse_threads(s: &str) -> Result<usize> {
+    if s == "max" {
+        return Ok(0);
+    }
+    s.parse()
+        .map_err(|_| anyhow!("bad --threads '{s}' (expected a number or 'max')"))
+}
+
 fn cmd_deploy(argv: &[String]) -> Result<()> {
-    // The threaded testbed reuses the train flag set; budgets are measured
-    // milliseconds of real (slowdown-scaled) wall-clock.
-    let Some(a) = train_cli().parse(argv).map_err(|e| anyhow!(e))? else {
+    // Budgets are measured milliseconds of real (slowdown-scaled)
+    // wall-clock.
+    let Some(a) = deploy_cli().parse(argv).map_err(|e| anyhow!(e))? else {
         return Ok(());
     };
     let mut cfg = builder_from_args(&a)?.build()?.into_config();
     cfg.cost.mode = CostMode::Measured;
+    let threads = ol4el::engine::pool::set_threads(parse_threads(&a.str("threads"))?);
+    let edge_batch = a.usize("edge-batch").map_err(|e| anyhow!(e))?.max(1);
     let engine = harness::build_engine(
         EngineKind::parse(&a.str("engine")).ok_or_else(|| anyhow!("bad --engine"))?,
         &a.str("artifacts"),
     )?;
     eprintln!(
-        "[ol4el] threaded deploy: {} edges, H={}, budget {} ms (measured)",
+        "[ol4el] threaded deploy: {} edges, H={}, budget {} ms (measured), \
+         {threads} engine threads, edge-batch {edge_batch}",
         cfg.n_edges, cfg.hetero, cfg.budget
     );
-    let r = ol4el::deploy::run_threaded(&cfg, engine.as_ref())?;
+    let r = ol4el::deploy::run_threaded_batched(&cfg, engine.as_ref(), edge_batch)?;
     println!(
         "final metric {:.4}  updates={}  host={:.2}s",
         r.final_metric, r.total_updates, r.host_seconds
@@ -1167,6 +1196,14 @@ fn cmd_fleet_smoke(a: &Args) -> Result<()> {
             "peak_queue_depth",
             Json::num(r_async.peak_queue_depth.max(r_sync.peak_queue_depth) as f64),
         ),
+        // Data-parallelism provenance: the engine thread pool this run saw
+        // and the edge-batch granularity (the fleet simulator steps edges
+        // one at a time, so its batch is always 1).
+        (
+            "engine_threads",
+            Json::num(ol4el::engine::pool::threads() as f64),
+        ),
+        ("edge_batch", Json::num(1.0)),
         ("async", fleet_report_json(&r_async)),
         ("sync", fleet_report_json(&r_sync)),
         ("async_1shard", fleet_report_json(&base_async)),
@@ -1247,6 +1284,16 @@ fn bench_tasks_cli() -> Cli {
         "fleet size of the per-task event-rate probe",
     )
     .opt("budget", "1000", "per-edge budget (ms) of the fleet probe")
+    .opt(
+        "threads",
+        "1",
+        "engine kernel threads for the batched measurement ('max' or 0 = all cores)",
+    )
+    .opt(
+        "edge-batch",
+        "1",
+        "edges stepped per engine dispatch in the batched measurement",
+    )
     .opt("seed", "42", "PRNG seed")
     .opt("out", "BENCH_tasks.json", "output JSON path")
 }
@@ -1263,14 +1310,17 @@ fn cmd_bench_tasks(argv: &[String]) -> Result<()> {
     let steps = a.usize("steps").map_err(|e| anyhow!(e))?.max(1);
     let edges = a.usize("fleet-edges").map_err(|e| anyhow!(e))?.max(1);
     let budget = a.f64("budget").map_err(|e| anyhow!(e))?;
+    let threads = parse_threads(&a.str("threads"))?;
+    let edge_batch = a.usize("edge-batch").map_err(|e| anyhow!(e))?.max(1);
     let seed = a.u64("seed").map_err(|e| anyhow!(e))?;
     let engine = ol4el::engine::native::NativeEngine::default();
 
     let mut t = Table::new(
         "per-task throughput (native local steps + engine-free fleet)",
-        &["task", "steps/sec", "events/sec"],
+        &["task", "steps/sec", "scalar", "speedup", "events/sec"],
     );
     let mut rows = Vec::new();
+    let mut resolved_threads = 1usize;
     for (name, _about) in ol4el::model::registered_tasks() {
         let spec = TaskSpec::parse(name)?;
         let learner = spec.learner();
@@ -1281,6 +1331,9 @@ fn cmd_bench_tasks(argv: &[String]) -> Result<()> {
         let mut shard = ol4el::data::partition::iid(&ds, 1, &mut rng).remove(0);
         let hyper = ol4el::edge::Hyper::default();
         let (mut xbuf, mut ybuf) = (Vec::new(), Vec::new());
+        // Scalar reference: one edge, sequential kernels — the number the
+        // batched measurement's speedup is reported against.
+        ol4el::engine::pool::set_threads(1);
         // Warmup outside the clock.
         for _ in 0..steps.min(32) {
             shard.next_batch(learner.batch(), &mut xbuf, &mut ybuf);
@@ -1292,7 +1345,42 @@ fn cmd_bench_tasks(argv: &[String]) -> Result<()> {
             learner.local_step(&engine, &mut params, &xbuf, &ybuf, &hyper)?;
         }
         let step_secs = t0.elapsed().as_secs_f64();
-        let steps_per_sec = steps as f64 / step_secs.max(1e-9);
+        let steps_per_sec_scalar = steps as f64 / step_secs.max(1e-9);
+
+        // Batched measurement: --edge-batch model replicas stepped per
+        // engine dispatch with --threads kernel threads. At the default
+        // 1/1 this equals the scalar path (same code, same numbers).
+        resolved_threads = ol4el::engine::pool::set_threads(threads);
+        let eb = edge_batch;
+        let mut params_all: Vec<Vec<f32>> = (0..eb)
+            .map(|_| learner.init_params(&ds, &mut rng))
+            .collect();
+        let iters = steps.div_ceil(eb).max(1);
+        let (mut xall, mut yall) = (Vec::new(), Vec::new());
+        let mut run_batch = |params_all: &mut Vec<Vec<f32>>,
+                             shard: &mut ol4el::data::Shard,
+                             iters: usize|
+         -> Result<f64> {
+            let t0 = std::time::Instant::now();
+            for _ in 0..iters {
+                xall.clear();
+                yall.clear();
+                for _ in 0..eb {
+                    shard.next_batch(learner.batch(), &mut xbuf, &mut ybuf);
+                    xall.extend_from_slice(&xbuf);
+                    yall.extend_from_slice(&ybuf);
+                }
+                let mut refs: Vec<&mut [f32]> =
+                    params_all.iter_mut().map(|p| p.as_mut_slice()).collect();
+                learner.local_step_batch(&engine, &mut refs, &xall, &yall, &hyper)?;
+            }
+            Ok(t0.elapsed().as_secs_f64())
+        };
+        run_batch(&mut params_all, &mut shard, iters.min(32))?; // warmup
+        let batch_secs = run_batch(&mut params_all, &mut shard, iters)?;
+        ol4el::engine::pool::set_threads(1);
+        let steps_per_sec = (iters * eb) as f64 / batch_secs.max(1e-9);
+        let speedup = steps_per_sec / steps_per_sec_scalar.max(1e-9);
 
         let fleet_cfg = RunConfig {
             task: spec.clone(),
@@ -1312,11 +1400,15 @@ fn cmd_bench_tasks(argv: &[String]) -> Result<()> {
         t.row(vec![
             name.to_string(),
             f(steps_per_sec, 0),
+            f(steps_per_sec_scalar, 0),
+            f(speedup, 2),
             f(events_per_sec, 0),
         ]);
         rows.push(Json::obj(vec![
             ("task", Json::str(name)),
             ("steps_per_sec", Json::num(steps_per_sec)),
+            ("steps_per_sec_scalar", Json::num(steps_per_sec_scalar)),
+            ("speedup_vs_scalar", Json::num(speedup)),
             ("events_per_sec", Json::num(events_per_sec)),
             ("steps_timed", Json::num(steps as f64)),
             ("fleet_edges", Json::num(edges as f64)),
@@ -1325,6 +1417,8 @@ fn cmd_bench_tasks(argv: &[String]) -> Result<()> {
     print!("{}", t.render());
     let j = Json::obj(vec![
         ("seed", Json::num(seed as f64)),
+        ("threads", Json::num(resolved_threads as f64)),
+        ("edge_batch", Json::num(edge_batch as f64)),
         ("tasks", Json::arr(rows.into_iter())),
     ]);
     let path = a.str("out");
@@ -1342,6 +1436,12 @@ fn bench_strategies_cli() -> Cli {
     .opt("iters", "200000", "select and feedback calls timed per strategy")
     .opt("edges", "64", "fleet size the strategy instance is built for")
     .opt("tau-max", "10", "arm count of the decision problem")
+    .opt(
+        "threads",
+        "1",
+        "engine kernel threads, recorded as run metadata ('max' or 0 = all \
+         cores; the decision loop itself has no engine compute)",
+    )
     .opt("seed", "42", "PRNG seed of the selection stream")
     .opt("out", "BENCH_strategies.json", "output JSON path")
 }
@@ -1359,6 +1459,7 @@ fn cmd_bench_strategies(argv: &[String]) -> Result<()> {
     let iters = a.usize("iters").map_err(|e| anyhow!(e))?.max(1);
     let edges = a.usize("edges").map_err(|e| anyhow!(e))?.max(1);
     let tau_max = a.usize("tau-max").map_err(|e| anyhow!(e))?.max(1);
+    let threads = ol4el::engine::pool::set_threads(parse_threads(&a.str("threads"))?);
     let seed = a.u64("seed").map_err(|e| anyhow!(e))?;
 
     let mut t = Table::new(
@@ -1433,6 +1534,7 @@ fn cmd_bench_strategies(argv: &[String]) -> Result<()> {
     print!("{}", t.render());
     let j = Json::obj(vec![
         ("seed", Json::num(seed as f64)),
+        ("threads", Json::num(threads as f64)),
         ("strategies", Json::arr(rows.into_iter())),
     ]);
     let path = a.str("out");

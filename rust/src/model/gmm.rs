@@ -128,6 +128,38 @@ impl GmmLearner {
         }
         nll / n as f64
     }
+
+    /// Damped M-step tail from accumulated per-component statistics —
+    /// shared verbatim by `local_step` and `local_step_batch` so both
+    /// paths are bit-identical. Empty components keep their parameters
+    /// (standard empty-cluster handling).
+    fn damped_update(
+        &self,
+        params: &mut [f32],
+        sums: &[f32],
+        counts: &[f32],
+        sq: &[f64],
+        hyper: &Hyper,
+    ) {
+        let (k, d) = (self.k, self.d);
+        let eta = (hyper.lr as f64 * 0.75).clamp(0.0, 1.0) as f32;
+        let (means, logvar) = params.split_at_mut(self.means_len());
+        for j in 0..k {
+            if counts[j] <= 0.0 {
+                continue;
+            }
+            let inv = 1.0 / counts[j];
+            let mj = &mut means[j * d..(j + 1) * d];
+            for t in 0..d {
+                let target = sums[j * d + t] * inv;
+                mj[t] += eta * (target - mj[t]);
+            }
+            // Batch variance estimate against the pre-update mean.
+            let vhat = (sq[j] / (counts[j] as f64 * d as f64)).max(1e-6);
+            let target = (vhat.ln() as f32).clamp(LOGVAR_RANGE.0, LOGVAR_RANGE.1);
+            logvar[j] += eta * (target - logvar[j]);
+        }
+    }
 }
 
 impl Learner for GmmLearner {
@@ -230,26 +262,64 @@ impl Learner for GmmLearner {
             sq[assign[i] as usize] += d2_best[i] as f64;
         }
 
-        // Damped updates (the K-means learner's eta): empty components
-        // keep their parameters — standard empty-cluster handling.
-        let eta = (hyper.lr as f64 * 0.75).clamp(0.0, 1.0) as f32;
-        let (means, logvar) = params.split_at_mut(self.means_len());
-        for j in 0..k {
-            if counts[j] <= 0.0 {
-                continue;
-            }
-            let inv = 1.0 / counts[j];
-            let mj = &mut means[j * d..(j + 1) * d];
-            for t in 0..d {
-                let target = sums[j * d + t] * inv;
-                mj[t] += eta * (target - mj[t]);
-            }
-            // Batch variance estimate against the pre-update mean.
-            let vhat = (sq[j] / (counts[j] as f64 * d as f64)).max(1e-6);
-            let target = (vhat.ln() as f32).clamp(LOGVAR_RANGE.0, LOGVAR_RANGE.1);
-            logvar[j] += eta * (target - logvar[j]);
-        }
+        // Damped updates (the K-means learner's eta).
+        self.damped_update(params, &sums, &counts, &sq, hyper);
         Ok(StepOut { signal: nll })
+    }
+
+    /// Batched stepping: per-edge hard E-steps fill one stacked
+    /// assignment buffer, a single grouped scatter accumulates every
+    /// edge's M-step statistics, then each edge runs the exact damped
+    /// update tail — bit-equal to `E` sequential `local_step` calls.
+    fn local_step_batch(
+        &self,
+        engine: &dyn ComputeEngine,
+        params: &mut [&mut [f32]],
+        x: &[f32],
+        y: &[i32],
+        hyper: &Hyper,
+    ) -> Result<Vec<StepOut>> {
+        let _ = y; // unsupervised: labels never reach the learner
+        let e = params.len();
+        if e == 0 {
+            return Ok(Vec::new());
+        }
+        let (k, d) = (self.k, self.d);
+        let px = x.len() / e;
+        let pn = px / d;
+        if e == 1 {
+            let out = self.local_step(engine, &mut *params[0], x, y, hyper)?;
+            return Ok(vec![out]);
+        }
+        let mut assign_all = Vec::with_capacity(e * pn);
+        let mut nlls = vec![0f64; e];
+        let mut sq_all = vec![0f64; e * k];
+        let mut assign = Vec::new();
+        let mut d2_best = Vec::new();
+        for (g, p) in params.iter().enumerate() {
+            nlls[g] = self.hard_assign(p, &x[g * px..(g + 1) * px], &mut assign, &mut d2_best);
+            for i in 0..pn {
+                sq_all[g * k + assign[i] as usize] += d2_best[i] as f64;
+            }
+            assign_all.extend_from_slice(&assign);
+        }
+        let mut sums = vec![0f32; e * k * d];
+        let mut counts = vec![0f32; e * k];
+        engine
+            .ops()
+            .scatter_add_groups(x, &assign_all, d, k, e, &mut sums, &mut counts);
+        let mut outs = Vec::with_capacity(e);
+        for (g, p) in params.iter_mut().enumerate() {
+            self.damped_update(
+                p,
+                &sums[g * k * d..(g + 1) * k * d],
+                &counts[g * k..(g + 1) * k],
+                &sq_all[g * k..(g + 1) * k],
+                hyper,
+            );
+            outs.push(StepOut { signal: nlls[g] });
+        }
+        Ok(outs)
     }
 
     fn evaluate(

@@ -88,12 +88,36 @@ pub fn stats(centers: &[f32], x: &[f32], spec: &KmeansSpec) -> (Vec<f32>, Vec<f3
     (sums, counts, inertia as f32)
 }
 
-/// Assignment pass for eval: (assignments, inertia).
+/// Assignment pass for eval: (assignments, inertia). Allocates a fresh
+/// output; hot paths reuse a caller buffer via [`assign_into`].
 pub fn assign(centers: &[f32], x: &[f32], spec: &KmeansSpec) -> (Vec<i32>, f32) {
+    let mut out = Vec::new();
+    let inertia = assign_into(centers, x, spec, &mut out);
+    (out, inertia)
+}
+
+/// Assignment pass into a caller-owned buffer: fills `out` (resized to
+/// `n`, reusing its capacity) and returns the inertia. Same numerics as
+/// [`assign`] — this is what [`CpuOps::argmin_dist`] runs, honouring the
+/// "resized to `n`" contract without a per-call allocation.
+///
+/// [`CpuOps::argmin_dist`]: crate::engine::CpuOps
+pub fn assign_into(centers: &[f32], x: &[f32], spec: &KmeansSpec, out: &mut Vec<i32>) -> f32 {
     let (k, d) = (spec.k, spec.d);
+    let n = x.len() / d;
+    out.clear();
+    out.resize(n, 0);
+    assign_slice(centers, x, d, k, out)
+}
+
+/// Core assignment kernel over a pre-sized slice: fills `out` (length
+/// `n`) and returns the inertia as the f64 left fold of the per-row f32
+/// best squared distances, in row order — the numeric contract shared by
+/// every assignment entry point.
+pub(crate) fn assign_slice(centers: &[f32], x: &[f32], d: usize, k: usize, out: &mut [i32]) -> f32 {
     assert_eq!(centers.len(), k * d, "bad centers length");
     let n = x.len() / d;
-    let mut out = Vec::with_capacity(n);
+    assert_eq!(out.len(), n, "bad assignment buffer length");
     let mut inertia = 0f64;
     let cc: Vec<f32> = (0..k)
         .map(|j| {
@@ -120,10 +144,57 @@ pub fn assign(centers: &[f32], x: &[f32], spec: &KmeansSpec) -> (Vec<i32>, f32) 
                 best = j;
             }
         }
-        out.push(best as i32);
+        out[i] = best as i32;
         inertia += best_d2 as f64;
     }
-    (out, inertia as f32)
+    inertia as f32
+}
+
+/// Row-block assignment kernel for the threaded `argmin_dist`: fills the
+/// block's assignments and per-row f32 best squared distances (`d2`),
+/// WITHOUT folding the inertia — the caller folds all rows sequentially
+/// in row order so the threaded total is bit-identical to the scalar
+/// path's f64 left fold.
+pub(crate) fn assign_block(
+    centers: &[f32],
+    x: &[f32],
+    d: usize,
+    k: usize,
+    assign: &mut [i32],
+    d2_out: &mut [f32],
+) {
+    let n = x.len() / d;
+    assert_eq!(assign.len(), n, "bad assignment block length");
+    assert_eq!(d2_out.len(), n, "bad d2 block length");
+    assert_eq!(centers.len(), k * d, "bad centers length");
+    let cc: Vec<f32> = (0..k)
+        .map(|j| {
+            centers[j * d..(j + 1) * d]
+                .iter()
+                .map(|v| v * v)
+                .sum::<f32>()
+        })
+        .collect();
+    for i in 0..n {
+        let xi = &x[i * d..(i + 1) * d];
+        let xx: f32 = xi.iter().map(|v| v * v).sum();
+        let mut best = 0usize;
+        let mut best_d2 = f32::INFINITY;
+        for j in 0..k {
+            let cj = &centers[j * d..(j + 1) * d];
+            let mut cross = 0f32;
+            for t in 0..d {
+                cross += xi[t] * cj[t];
+            }
+            let d2 = xx - 2.0 * cross + cc[j];
+            if d2 < best_d2 {
+                best_d2 = d2;
+                best = j;
+            }
+        }
+        assign[i] = best as i32;
+        d2_out[i] = best_d2;
+    }
 }
 
 /// M-step: centers from accumulated (sums, counts); clusters with zero
@@ -140,6 +211,18 @@ pub fn mstep(centers: &mut [f32], sums: &[f32], counts: &[f32], spec: &KmeansSpe
                 centers[j * d + t] = sums[j * d + t] * inv;
             }
         }
+    }
+}
+
+/// Damped mini-batch M-step update shared by `local_step` and
+/// `local_step_batch`: centers move `eta` of the way toward the batch
+/// means (empty clusters stay put).
+fn damped_mstep(params: &mut [f32], sums: &[f32], counts: &[f32], spec: &KmeansSpec, hyper: &Hyper) {
+    let eta = (hyper.lr as f64 * 0.75).clamp(0.0, 1.0) as f32;
+    let mut target = params.to_vec();
+    mstep(&mut target, sums, counts, spec);
+    for (c, t) in params.iter_mut().zip(&target) {
+        *c += eta * (*t - *c);
     }
 }
 
@@ -315,15 +398,74 @@ impl Learner for KmeansLearner {
         } else {
             stats(params, x, &spec)
         };
-        let eta = (hyper.lr as f64 * 0.75).clamp(0.0, 1.0) as f32;
-        let mut target = params.to_vec();
-        mstep(&mut target, &sums, &counts, &spec);
-        for (c, t) in params.iter_mut().zip(&target) {
-            *c += eta * (*t - *c);
-        }
+        damped_mstep(params, &sums, &counts, &spec, hyper);
         Ok(StepOut {
             signal: inertia as f64,
         })
+    }
+
+    /// Batched stepping: one grouped assign + one grouped scatter advance
+    /// all `E` edges, then each edge runs its damped M-step — bit-equal
+    /// to `E` sequential `local_step` calls (the grouped ops preserve
+    /// every within-group accumulation order, and `stats` is exactly
+    /// assign followed by scatter). Falls back to the per-edge loop when
+    /// the backend ships the fused single-edge kernel.
+    fn local_step_batch(
+        &self,
+        engine: &dyn ComputeEngine,
+        params: &mut [&mut [f32]],
+        x: &[f32],
+        y: &[i32],
+        hyper: &Hyper,
+    ) -> Result<Vec<StepOut>> {
+        let e = params.len();
+        if e == 0 {
+            return Ok(Vec::new());
+        }
+        if e == 1 || engine.has_kernel("kmeans_step") {
+            let (px, py) = (x.len() / e, y.len() / e);
+            let mut outs = Vec::with_capacity(e);
+            for (g, p) in params.iter_mut().enumerate() {
+                outs.push(self.local_step(
+                    engine,
+                    p,
+                    &x[g * px..(g + 1) * px],
+                    &y[g * py..(g + 1) * py],
+                    hyper,
+                )?);
+            }
+            return Ok(outs);
+        }
+        let spec = self.kspec();
+        let (k, d) = (self.k, self.d);
+        let mut centers_all = Vec::with_capacity(e * k * d);
+        for p in params.iter() {
+            centers_all.extend_from_slice(p);
+        }
+        let mut assign = Vec::new();
+        let mut inertia = vec![0f32; e];
+        engine
+            .ops()
+            .argmin_dist_groups(x, &centers_all, d, k, e, &mut assign, &mut inertia);
+        let mut sums = vec![0f32; e * k * d];
+        let mut counts = vec![0f32; e * k];
+        engine
+            .ops()
+            .scatter_add_groups(x, &assign, d, k, e, &mut sums, &mut counts);
+        let mut outs = Vec::with_capacity(e);
+        for (g, p) in params.iter_mut().enumerate() {
+            damped_mstep(
+                p,
+                &sums[g * k * d..(g + 1) * k * d],
+                &counts[g * k..(g + 1) * k],
+                &spec,
+                hyper,
+            );
+            outs.push(StepOut {
+                signal: inertia[g] as f64,
+            });
+        }
+        Ok(outs)
     }
 
     fn evaluate(

@@ -111,6 +111,46 @@ pub trait Learner {
         hyper: &Hyper,
     ) -> Result<StepOut>;
 
+    /// One local iteration for each of `params.len()` edges in a single
+    /// call — the batch-of-edges door that lets one engine dispatch
+    /// advance a whole cohort. `x`/`y` stack the edges' batches in edge
+    /// order (equal-size chunks, `params.len()` of each); entry `g` of
+    /// the result is edge `g`'s [`StepOut`].
+    ///
+    /// The determinism contract: the result — every updated `params[g]`
+    /// and every signal — must be bit-identical to `params.len()`
+    /// sequential [`local_step`](Learner::local_step) calls on the same
+    /// per-edge chunks. The default is exactly that loop; overrides
+    /// (svm/logreg stack a tall grouped gemm, kmeans/gmm fuse grouped
+    /// assign + scatter) keep the contract by preserving every
+    /// within-edge accumulation order, and are asserted bit-equal in
+    /// rust/tests/batch_parity.rs.
+    fn local_step_batch(
+        &self,
+        engine: &dyn ComputeEngine,
+        params: &mut [&mut [f32]],
+        x: &[f32],
+        y: &[i32],
+        hyper: &Hyper,
+    ) -> Result<Vec<StepOut>> {
+        let e = params.len();
+        if e == 0 {
+            return Ok(Vec::new());
+        }
+        let (px, py) = (x.len() / e, y.len() / e);
+        let mut outs = Vec::with_capacity(e);
+        for (g, p) in params.iter_mut().enumerate() {
+            outs.push(self.local_step(
+                engine,
+                p,
+                &x[g * px..(g + 1) * px],
+                &y[g * py..(g + 1) * py],
+                hyper,
+            )?);
+        }
+        Ok(outs)
+    }
+
     /// Headline test metric of `params` on an eval buffer, in `[0, 1]`.
     fn evaluate(
         &self,

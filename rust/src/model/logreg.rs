@@ -78,6 +78,15 @@ impl LogRegLearner {
         scores.clear();
         scores.resize(n * c, 0.0);
         engine.ops().gemm_bias(x, w, b, d, c, scores);
+        self.softmax_in_place(scores, y)
+    }
+
+    /// In-place softmax over precomputed scores (the post-gemm half of
+    /// [`softmax_scores`](Self::softmax_scores)); returns the mean NLL.
+    /// The batched path runs one grouped gemm and then this per edge.
+    fn softmax_in_place(&self, scores: &mut [f32], y: &[i32]) -> f64 {
+        let c = self.c;
+        let n = scores.len() / c;
         let mut nll = 0f64;
         for i in 0..n {
             let row = &mut scores[i * c..(i + 1) * c];
@@ -100,6 +109,53 @@ impl LogRegLearner {
             nll += -(row[yi].max(1e-12) as f64).ln();
         }
         nll / n as f64
+    }
+
+    /// Gradient accumulation + SGD update from per-row probabilities
+    /// (consumed in place); returns the pre-update squared weight norm
+    /// for the regularized signal. Shared verbatim by `local_step` and
+    /// `local_step_batch` so both paths are bit-identical.
+    fn update_from_probs(
+        &self,
+        params: &mut [f32],
+        x: &[f32],
+        y: &[i32],
+        probs: &mut [f32],
+        hyper: &Hyper,
+    ) -> f64 {
+        let (d, c) = (self.d, self.c);
+        let n = x.len() / d;
+        // Gradient: g[i, k] = p[i, k] - 1{k == y_i}; dw = x^T g / n + reg*w.
+        let mut dw = vec![0f32; d * c];
+        let mut db = vec![0f32; c];
+        for i in 0..n {
+            let gi = &mut probs[i * c..(i + 1) * c];
+            gi[y[i] as usize] -= 1.0;
+            let xi = &x[i * d..(i + 1) * d];
+            for (j, &xij) in xi.iter().enumerate() {
+                let dwj = &mut dw[j * c..(j + 1) * c];
+                for k in 0..c {
+                    dwj[k] += xij * gi[k];
+                }
+            }
+            for k in 0..c {
+                db[k] += gi[k];
+            }
+        }
+
+        let (w, b) = params.split_at_mut(d * c);
+        let inv_n = 1.0 / n as f32;
+        let mut w_sq = 0f64;
+        for v in w.iter() {
+            w_sq += (*v as f64) * (*v as f64);
+        }
+        for (wv, g) in w.iter_mut().zip(&dw) {
+            *wv -= hyper.lr * (g * inv_n + hyper.reg * *wv);
+        }
+        for (bv, g) in b.iter_mut().zip(&db) {
+            *bv -= hyper.lr * g * inv_n;
+        }
+        w_sq
     }
 }
 
@@ -155,44 +211,58 @@ impl Learner for LogRegLearner {
         y: &[i32],
         hyper: &Hyper,
     ) -> Result<StepOut> {
-        let (d, c) = (self.d, self.c);
-        let n = x.len() / d;
         let mut probs = Vec::new();
         let nll = self.softmax_scores(engine, params, x, y, &mut probs);
-
-        // Gradient: g[i, k] = p[i, k] - 1{k == y_i}; dw = x^T g / n + reg*w.
-        let mut dw = vec![0f32; d * c];
-        let mut db = vec![0f32; c];
-        for i in 0..n {
-            let gi = &mut probs[i * c..(i + 1) * c];
-            gi[y[i] as usize] -= 1.0;
-            let xi = &x[i * d..(i + 1) * d];
-            for (j, &xij) in xi.iter().enumerate() {
-                let dwj = &mut dw[j * c..(j + 1) * c];
-                for k in 0..c {
-                    dwj[k] += xij * gi[k];
-                }
-            }
-            for k in 0..c {
-                db[k] += gi[k];
-            }
-        }
-
-        let (w, b) = params.split_at_mut(d * c);
-        let inv_n = 1.0 / n as f32;
-        let mut w_sq = 0f64;
-        for v in w.iter() {
-            w_sq += (*v as f64) * (*v as f64);
-        }
-        for (wv, g) in w.iter_mut().zip(&dw) {
-            *wv -= hyper.lr * (g * inv_n + hyper.reg * *wv);
-        }
-        for (bv, g) in b.iter_mut().zip(&db) {
-            *bv -= hyper.lr * g * inv_n;
-        }
+        let w_sq = self.update_from_probs(params, x, y, &mut probs, hyper);
         Ok(StepOut {
             signal: nll + 0.5 * hyper.reg as f64 * w_sq,
         })
+    }
+
+    /// Batched stepping: one grouped gemm scores every edge's batch, then
+    /// each edge runs the exact softmax + gradient/update tail — bit-equal
+    /// to `E` sequential `local_step` calls.
+    fn local_step_batch(
+        &self,
+        engine: &dyn ComputeEngine,
+        params: &mut [&mut [f32]],
+        x: &[f32],
+        y: &[i32],
+        hyper: &Hyper,
+    ) -> Result<Vec<StepOut>> {
+        let e = params.len();
+        if e == 0 {
+            return Ok(Vec::new());
+        }
+        let (d, c) = (self.d, self.c);
+        let (px, py) = (x.len() / e, y.len() / e);
+        if e == 1 {
+            let out = self.local_step(engine, &mut *params[0], x, y, hyper)?;
+            return Ok(vec![out]);
+        }
+        let mut w_all = Vec::with_capacity(e * d * c);
+        let mut b_all = Vec::with_capacity(e * c);
+        for p in params.iter() {
+            let (w, b) = p.split_at(d * c);
+            w_all.extend_from_slice(w);
+            b_all.extend_from_slice(b);
+        }
+        let mut scores = vec![0f32; (px / d) * c * e];
+        engine
+            .ops()
+            .gemm_bias_groups(x, &w_all, &b_all, d, c, e, &mut scores);
+        let ps = scores.len() / e;
+        let mut outs = Vec::with_capacity(e);
+        for (g, p) in params.iter_mut().enumerate() {
+            let (xg, yg) = (&x[g * px..(g + 1) * px], &y[g * py..(g + 1) * py]);
+            let probs = &mut scores[g * ps..(g + 1) * ps];
+            let nll = self.softmax_in_place(probs, yg);
+            let w_sq = self.update_from_probs(p, xg, yg, probs, hyper);
+            outs.push(StepOut {
+                signal: nll + 0.5 * hyper.reg as f64 * w_sq,
+            });
+        }
+        Ok(outs)
     }
 
     fn evaluate(

@@ -119,12 +119,29 @@ fn rank1_acc<const C: usize>(dw: &mut [f32], xi: &[f32], gi: &[f32]) {
 pub fn step(params: &mut [f32], x: &[f32], y: &[i32], spec: &SvmSpec) -> f32 {
     let (d, c) = (spec.d, spec.c);
     let n = x.len() / d;
-    assert_eq!(y.len(), n);
     let mut scores = vec![0f32; n * c];
     {
         let (w, b) = split_params(params, d, c);
         scores_into(x, w, b, d, c, &mut scores);
     }
+    step_from_scores(params, x, y, &scores, spec)
+}
+
+/// The post-gemm tail of [`step`]: hinge gradients + SGD update from
+/// precomputed scores. Split out so the batched path can run one grouped
+/// gemm for all edges and then this exact tail per edge — same
+/// accumulation orders, bit-identical results.
+pub(crate) fn step_from_scores(
+    params: &mut [f32],
+    x: &[f32],
+    y: &[i32],
+    scores: &[f32],
+    spec: &SvmSpec,
+) -> f32 {
+    let (d, c) = (spec.d, spec.c);
+    let n = x.len() / d;
+    assert_eq!(y.len(), n);
+    assert_eq!(scores.len(), n * c);
 
     // Gradient accumulation: g[i, k] per sample, then dw = x^T g / n + reg*w.
     let mut dw = vec![0f32; d * c];
@@ -372,6 +389,68 @@ impl Learner for SvmLearner {
         Ok(StepOut {
             signal: loss as f64,
         })
+    }
+
+    /// Batched stepping: stack every edge's weights/biases and batches
+    /// into one grouped gemm dispatch, then run the exact per-edge
+    /// gradient/update tail — bit-equal to `E` sequential `local_step`
+    /// calls. Falls back to the per-edge loop when the backend ships the
+    /// fused single-edge kernel.
+    fn local_step_batch(
+        &self,
+        engine: &dyn ComputeEngine,
+        params: &mut [&mut [f32]],
+        x: &[f32],
+        y: &[i32],
+        hyper: &Hyper,
+    ) -> Result<Vec<StepOut>> {
+        let e = params.len();
+        if e == 0 {
+            return Ok(Vec::new());
+        }
+        let (d, c) = (self.d, self.c);
+        if e == 1 || engine.has_kernel("svm_step") {
+            let (px, py) = (x.len() / e, y.len() / e);
+            let mut outs = Vec::with_capacity(e);
+            for (g, p) in params.iter_mut().enumerate() {
+                outs.push(self.local_step(
+                    engine,
+                    p,
+                    &x[g * px..(g + 1) * px],
+                    &y[g * py..(g + 1) * py],
+                    hyper,
+                )?);
+            }
+            return Ok(outs);
+        }
+        let spec = self.spec_of(hyper);
+        let mut w_all = Vec::with_capacity(e * d * c);
+        let mut b_all = Vec::with_capacity(e * c);
+        for p in params.iter() {
+            let (w, b) = split_params(p, d, c);
+            w_all.extend_from_slice(w);
+            b_all.extend_from_slice(b);
+        }
+        let (px, py) = (x.len() / e, y.len() / e);
+        let mut scores = vec![0f32; (px / d) * c * e];
+        engine
+            .ops()
+            .gemm_bias_groups(x, &w_all, &b_all, d, c, e, &mut scores);
+        let ps = scores.len() / e;
+        let mut outs = Vec::with_capacity(e);
+        for (g, p) in params.iter_mut().enumerate() {
+            let loss = step_from_scores(
+                p,
+                &x[g * px..(g + 1) * px],
+                &y[g * py..(g + 1) * py],
+                &scores[g * ps..(g + 1) * ps],
+                &spec,
+            );
+            outs.push(StepOut {
+                signal: loss as f64,
+            });
+        }
+        Ok(outs)
     }
 
     fn evaluate(

@@ -1,0 +1,262 @@
+//! The determinism contract of the data-parallel surface, end to end:
+//! the blocked multithreaded kernels must be bit-identical to the scalar
+//! path at any thread count, and every learner's `local_step_batch` over
+//! E edges must be bit-identical to E sequential `local_step` calls.
+//! Perf may move; numbers may not.
+
+use std::sync::Arc;
+
+use ol4el::data::partition;
+use ol4el::edge::Hyper;
+use ol4el::engine::native::NativeEngine;
+use ol4el::engine::{
+    argmin_dist_groups_threads, argmin_dist_threads, gemm_bias_groups_threads,
+    gemm_bias_threads, pool, scatter_add_groups_threads, CPU_OPS, EngineOps as _,
+};
+use ol4el::model::{registered_tasks, Learner as _, TaskSpec};
+use ol4el::util::rng::Rng;
+
+/// Thread counts exercised against the sequential reference: an even
+/// split, and a prime that never divides the row counts evenly.
+const THREADS: [usize; 2] = [2, 7];
+
+/// Row counts straddling the parallel cutover: just below (sequential),
+/// exactly at (first parallel size), and a count no block size divides.
+fn row_cases() -> [usize; 3] {
+    let cut = pool::PAR_CUTOVER_ROWS;
+    [cut - 1, cut, cut + 101]
+}
+
+fn randn(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect()
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn threaded_gemm_bias_bit_identical_to_scalar() {
+    let (d, c) = (17, 8);
+    for n in row_cases() {
+        let mut rng = Rng::new(42);
+        let x = randn(&mut rng, n * d);
+        let w = randn(&mut rng, d * c);
+        let b = randn(&mut rng, c);
+        let mut base = vec![0f32; n * c];
+        gemm_bias_threads(1, &x, &w, &b, d, c, &mut base);
+        for t in THREADS {
+            let mut out = vec![0f32; n * c];
+            gemm_bias_threads(t, &x, &w, &b, d, c, &mut out);
+            assert_bits_eq(&base, &out, &format!("gemm_bias n={n} threads={t}"));
+        }
+    }
+}
+
+#[test]
+fn threaded_argmin_dist_bit_identical_to_scalar() {
+    let (d, k) = (11, 6);
+    for n in row_cases() {
+        let mut rng = Rng::new(7);
+        let x = randn(&mut rng, n * d);
+        let centers = randn(&mut rng, k * d);
+        let mut base_assign = Vec::new();
+        let base_inertia = argmin_dist_threads(1, &x, &centers, d, k, &mut base_assign);
+        for t in THREADS {
+            let mut assign = Vec::new();
+            let inertia = argmin_dist_threads(t, &x, &centers, d, k, &mut assign);
+            assert_eq!(base_assign, assign, "argmin assign n={n} threads={t}");
+            assert_eq!(
+                base_inertia.to_bits(),
+                inertia.to_bits(),
+                "argmin inertia n={n} threads={t}: {base_inertia} vs {inertia}"
+            );
+        }
+    }
+}
+
+#[test]
+fn grouped_kernels_bit_identical_to_per_group_loop() {
+    let (d, c, k, groups, pn) = (9, 5, 4, 5, 70);
+    let n = groups * pn; // 350 rows: past the cutover, so threads engage
+    let mut rng = Rng::new(13);
+    let x = randn(&mut rng, n * d);
+    let w = randn(&mut rng, groups * d * c);
+    let b = randn(&mut rng, groups * c);
+    let centers = randn(&mut rng, groups * k * d);
+
+    // Sequential per-group references.
+    let mut gemm_ref = vec![0f32; n * c];
+    for g in 0..groups {
+        let mut out = vec![0f32; pn * c];
+        gemm_bias_threads(
+            1,
+            &x[g * pn * d..(g + 1) * pn * d],
+            &w[g * d * c..(g + 1) * d * c],
+            &b[g * c..(g + 1) * c],
+            d,
+            c,
+            &mut out,
+        );
+        gemm_ref[g * pn * c..(g + 1) * pn * c].copy_from_slice(&out);
+    }
+    let mut assign_ref: Vec<i32> = Vec::new();
+    let mut inertia_ref = vec![0f32; groups];
+    for g in 0..groups {
+        let mut a = Vec::new();
+        inertia_ref[g] = argmin_dist_threads(
+            1,
+            &x[g * pn * d..(g + 1) * pn * d],
+            &centers[g * k * d..(g + 1) * k * d],
+            d,
+            k,
+            &mut a,
+        );
+        assign_ref.extend_from_slice(&a);
+    }
+    let mut sums_ref = vec![0f32; groups * k * d];
+    let mut counts_ref = vec![0f32; groups * k];
+    for g in 0..groups {
+        CPU_OPS.scatter_add(
+            &x[g * pn * d..(g + 1) * pn * d],
+            &assign_ref[g * pn..(g + 1) * pn],
+            d,
+            k,
+            &mut sums_ref[g * k * d..(g + 1) * k * d],
+            &mut counts_ref[g * k..(g + 1) * k],
+        );
+    }
+
+    for t in [1, 2, 7] {
+        let mut gemm_out = vec![0f32; n * c];
+        gemm_bias_groups_threads(t, &x, &w, &b, d, c, groups, &mut gemm_out);
+        assert_bits_eq(&gemm_ref, &gemm_out, &format!("grouped gemm threads={t}"));
+
+        let mut assign = Vec::new();
+        let mut inertia = vec![0f32; groups];
+        argmin_dist_groups_threads(t, &x, &centers, d, k, groups, &mut assign, &mut inertia);
+        assert_eq!(assign_ref, assign, "grouped argmin assign threads={t}");
+        assert_bits_eq(&inertia_ref, &inertia, &format!("grouped inertia threads={t}"));
+
+        let mut sums = vec![0f32; groups * k * d];
+        let mut counts = vec![0f32; groups * k];
+        scatter_add_groups_threads(t, &x, &assign, d, k, groups, &mut sums, &mut counts);
+        assert_bits_eq(&sums_ref, &sums, &format!("grouped sums threads={t}"));
+        assert_bits_eq(&counts_ref, &counts, &format!("grouped counts threads={t}"));
+    }
+}
+
+/// Every registered learner: `local_step_batch` over E edges with
+/// distinct models must be bit-identical to E sequential `local_step`
+/// calls on the per-edge slices — params AND signals, compounded over
+/// several iterations so any drift would amplify.
+#[test]
+fn local_step_batch_matches_sequential_steps_per_task() {
+    let engine = NativeEngine::default();
+    let e = 5usize;
+    for (name, _about) in registered_tasks() {
+        let spec = TaskSpec::parse(name).unwrap();
+        let learner = spec.learner();
+        let mut rng = Rng::new(9);
+        let ds = Arc::new(learner.synth(2048, 2.5, &mut rng));
+        let mut shard = partition::iid(&ds, 1, &mut rng).remove(0);
+        let hyper = Hyper::default();
+        let mut params_seq: Vec<Vec<f32>> =
+            (0..e).map(|_| learner.init_params(&ds, &mut rng)).collect();
+        let mut params_batch = params_seq.clone();
+        let (mut xbuf, mut ybuf) = (Vec::new(), Vec::new());
+        let (mut xall, mut yall) = (Vec::new(), Vec::new());
+        for iter in 0..3 {
+            xall.clear();
+            yall.clear();
+            for _ in 0..e {
+                shard.next_batch(learner.batch(), &mut xbuf, &mut ybuf);
+                xall.extend_from_slice(&xbuf);
+                yall.extend_from_slice(&ybuf);
+            }
+            assert_eq!(xall.len() % e, 0, "{name}: uneven x draw");
+            assert_eq!(yall.len() % e, 0, "{name}: uneven y draw");
+            let (px, py) = (xall.len() / e, yall.len() / e);
+
+            let mut seq_signals = Vec::with_capacity(e);
+            for g in 0..e {
+                let out = learner
+                    .local_step(
+                        &engine,
+                        &mut params_seq[g],
+                        &xall[g * px..(g + 1) * px],
+                        &yall[g * py..(g + 1) * py],
+                        &hyper,
+                    )
+                    .unwrap();
+                seq_signals.push(out.signal);
+            }
+
+            let mut refs: Vec<&mut [f32]> =
+                params_batch.iter_mut().map(|p| p.as_mut_slice()).collect();
+            let outs = learner
+                .local_step_batch(&engine, &mut refs, &xall, &yall, &hyper)
+                .unwrap();
+            assert_eq!(outs.len(), e, "{name}: batch output count");
+            for g in 0..e {
+                assert_eq!(
+                    seq_signals[g].to_bits(),
+                    outs[g].signal.to_bits(),
+                    "{name}: signal diverged, edge {g} iter {iter}"
+                );
+            }
+        }
+        for g in 0..e {
+            assert_bits_eq(
+                &params_seq[g],
+                &params_batch[g],
+                &format!("{name}: params edge {g}"),
+            );
+        }
+    }
+}
+
+/// The batch path must stay bit-identical when the kernel pool fans out.
+#[test]
+fn local_step_batch_bit_identical_under_threads() {
+    let engine = NativeEngine::default();
+    let e = 6usize;
+    for (name, _about) in registered_tasks() {
+        let learner = TaskSpec::parse(name).unwrap().learner();
+        let mut rng = Rng::new(21);
+        let ds = Arc::new(learner.synth(2048, 2.5, &mut rng));
+        let mut shard = partition::iid(&ds, 1, &mut rng).remove(0);
+        let hyper = Hyper::default();
+        let base: Vec<Vec<f32>> = (0..e).map(|_| learner.init_params(&ds, &mut rng)).collect();
+        let (mut xbuf, mut ybuf) = (Vec::new(), Vec::new());
+        let (mut xall, mut yall) = (Vec::new(), Vec::new());
+        for _ in 0..e {
+            shard.next_batch(learner.batch(), &mut xbuf, &mut ybuf);
+            xall.extend_from_slice(&xbuf);
+            yall.extend_from_slice(&ybuf);
+        }
+        let run = |threads: usize| {
+            pool::set_threads(threads);
+            let mut params = base.clone();
+            let mut refs: Vec<&mut [f32]> =
+                params.iter_mut().map(|p| p.as_mut_slice()).collect();
+            let outs = learner
+                .local_step_batch(&engine, &mut refs, &xall, &yall, &hyper)
+                .unwrap();
+            pool::set_threads(1);
+            let signals: Vec<u64> = outs.iter().map(|o| o.signal.to_bits()).collect();
+            (params, signals)
+        };
+        let (p1, s1) = run(1);
+        for t in THREADS {
+            let (pt, st) = run(t);
+            assert_eq!(s1, st, "{name}: signals diverged at threads={t}");
+            for g in 0..e {
+                assert_bits_eq(&p1[g], &pt[g], &format!("{name}: params t={t} edge {g}"));
+            }
+        }
+    }
+}

@@ -62,6 +62,9 @@ const PRODUCTIONS: &[&str] = &[
     "checkpoint := '--checkpoint-every' N",
     "['--checkpoint-to' FILE]",
     "resume   := '--resume' FILE",
+    // data-parallel engine knobs (the batched stepping surface)
+    "threads  := '--threads' ( N | 'max' )",
+    "edge-batch := '--edge-batch' N",
     // bandit (the legacy form; also the bandit= values of ol4el)
     "auto",
     "kube[:EPS]",
@@ -225,6 +228,24 @@ fn checkpoint_flags_document_everywhere_they_exist() {
     assert!(
         subcommand_help("coordinator").contains(ol4el::util::cli::CHECKPOINT_GRAMMAR),
         "coordinator --help lost the single-sourced checkpoint grammar"
+    );
+}
+
+#[test]
+fn bench_flags_document_everywhere_they_exist() {
+    // Satellite: the data-parallelism knobs are uniform — deploy and
+    // bench-tasks take both --threads and --edge-batch; bench-strategies
+    // takes --threads (its decision loop has no engine compute, the flag
+    // is recorded as run metadata).
+    for sub in ["deploy", "bench-tasks"] {
+        let help = subcommand_help(sub);
+        for needle in ["--threads", "--edge-batch"] {
+            assert!(help.contains(needle), "{sub} --help lost {needle:?}");
+        }
+    }
+    assert!(
+        subcommand_help("bench-strategies").contains("--threads"),
+        "bench-strategies --help lost --threads"
     );
 }
 
